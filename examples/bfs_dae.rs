@@ -1,0 +1,69 @@
+//! The paper's §III experiment end to end: BFS over the synthetic trees
+//! (B=4, D=7 and D=9), DAE vs non-DAE, on the HardCilk simulator — plus
+//! the Fig. 6 resource table.
+//!
+//! ```sh
+//! cargo run --release --example bfs_dae
+//! ```
+
+use anyhow::Result;
+
+use bombyx::coordinator::run_bfs_comparison;
+use bombyx::hls::{estimate, CostModel};
+use bombyx::lower::{compile, CompileOptions};
+use bombyx::sim::SimConfig;
+use bombyx::util::table::{commas, Table};
+use bombyx::workloads::{bfs, graphgen};
+
+fn main() -> Result<()> {
+    let cfg = SimConfig::paper();
+
+    println!("== Paper §III: DAE vs non-DAE runtime (HardCilk sim, 1 PE/type) ==");
+    let mut table = Table::new(["graph", "nodes", "non-DAE cycles", "DAE cycles", "reduction"]);
+    let mut reductions = Vec::new();
+    for (label, depth) in [("B=4 D=7", 7u32), ("B=4 D=9", 9u32)] {
+        let graph = graphgen::tree(4, depth);
+        let cmp = run_bfs_comparison(&graph, &cfg)?;
+        reductions.push(cmp.reduction());
+        table.row([
+            label.to_string(),
+            commas(graph.nodes() as u64),
+            commas(cmp.plain_cycles),
+            commas(cmp.dae_cycles),
+            format!("{:.1}%", cmp.reduction() * 100.0),
+        ]);
+    }
+    print!("{}", table.render());
+    let overall = reductions.iter().sum::<f64>() / reductions.len() as f64;
+    println!("overall reduction: {:.1}%   (paper reports 26.5%)\n", overall * 100.0);
+
+    println!("== Paper Fig. 6: synthesis results for the DAE PEs (estimated) ==");
+    let model = CostModel::default();
+    let non_dae = compile("bfs", bfs::BFS_SRC, &CompileOptions::no_dae())?;
+    let dae = compile("bfs", bfs::BFS_DAE_SRC, &CompileOptions::standard())?;
+    let est = |m: &bombyx::ir::Module, name: &str| {
+        let f = &m.funcs[m.func_by_name(name).unwrap()];
+        estimate(&model, m, f)
+    };
+    let rows = [
+        ("Non-DAE", est(&non_dae.explicit, "visit"), (2657, 2305, 2)),
+        ("Spawner", est(&dae.explicit, "visit"), (133, 387, 0)),
+        ("Executor", est(&dae.explicit, "visit__k1"), (1999, 1913, 2)),
+        ("Access", est(&dae.explicit, "adj_off_access"), (1764, 1164, 2)),
+    ];
+    let mut fig6 = Table::new(["PE", "LUT (est)", "LUT (paper)", "FF (est)", "FF (paper)", "BRAM (est)", "BRAM (paper)"]);
+    for (name, e, (pl, pf, pb)) in rows {
+        fig6.row([
+            name.to_string(),
+            e.lut.to_string(),
+            pl.to_string(),
+            e.ff.to_string(),
+            pf.to_string(),
+            e.bram.to_string(),
+            pb.to_string(),
+        ]);
+    }
+    print!("{}", fig6.render());
+    println!("\nbfs_dae OK");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! End-to-end three-layer run: the graph-relaxation workload whose numeric
+//! PE datapath is the AOT-compiled Pallas/XLA executable, driven from the
+//! Rust coordinator (Python never runs here — build artifacts first with
+//! `make artifacts`).
+//!
+//! Also validates the batched XLA path against the scalar reference
+//! datapath end to end.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example graph_relax_xla
+//! ```
+
+use anyhow::Result;
+
+use bombyx::coordinator::driver::{run_relax_scalar, run_relax_sim};
+use bombyx::runtime::XlaRuntime;
+use bombyx::sim::SimConfig;
+use bombyx::util::table::commas;
+use bombyx::workloads::graphgen;
+
+fn main() -> Result<()> {
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let runtime = XlaRuntime::load_dir(artifacts)?;
+    println!("loaded AOT executables: {:?}", runtime.names());
+
+    let graph = graphgen::tree(4, 7); // 5,461 nodes — the paper's small set
+    let seed = 42;
+    let cfg = SimConfig::default();
+
+    let xla = run_relax_sim(runtime, &graph, seed, &cfg)?;
+    println!(
+        "XLA datapath:    {} nodes expanded, {} cycles, {} XLA batches",
+        commas(xla.nodes_expanded),
+        commas(xla.cycles),
+        xla.xla_batches
+    );
+
+    let scalar = run_relax_scalar(&graph, seed, &cfg)?;
+    println!(
+        "scalar datapath: {} nodes expanded, {} cycles",
+        commas(scalar.nodes_expanded),
+        commas(scalar.cycles)
+    );
+
+    assert_eq!(
+        xla.nodes_expanded, scalar.nodes_expanded,
+        "traversal shape must match between XLA and scalar datapaths"
+    );
+    let rel = (xla.feat_checksum - scalar.feat_checksum).abs()
+        / scalar.feat_checksum.abs().max(1e-9);
+    println!(
+        "feature checksum: xla={:.4} scalar={:.4} (rel diff {:.2e})",
+        xla.feat_checksum, scalar.feat_checksum, rel
+    );
+    assert!(rel < 1e-3, "feature images diverged");
+    println!("\ngraph_relax_xla OK");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Quickstart: compile the paper's fib (Fig. 1) through the whole Bombyx
+//! pipeline and run it on every execution engine.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use bombyx::backend::hardcilk;
+use bombyx::interp::{explicit_exec::ExplicitExec, oracle::run_oracle, Memory, NoXla};
+use bombyx::ir::expr::Value;
+use bombyx::ir::print::print_cilk1;
+use bombyx::lower::{compile, CompileOptions};
+use bombyx::sim::{simulate, NoSimXla, SimConfig};
+use bombyx::ws::{self, SharedMemory, WsConfig};
+
+fn main() -> Result<()> {
+    let source = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/examples/cilk/fib.cilk"
+    ))?;
+    let n = 20i64;
+
+    // 1. Compile: OpenCilk-style source -> implicit IR -> explicit IR.
+    let result = compile("fib.cilk", &source, &CompileOptions::standard())?;
+    println!("== Cilk-1 view of the explicit tasks (paper Fig. 2) ==");
+    for (_, f) in result.explicit.funcs.iter() {
+        if f.task.is_some() && f.body.is_some() {
+            print!("{}", print_cilk1(&result.explicit, f));
+        }
+    }
+
+    // 2. Sequential oracle (the C elision).
+    let (v_oracle, _) =
+        run_oracle(&result.implicit, Memory::new(&result.implicit), "fib", &[Value::I64(n)])?;
+
+    // 3. Explicit-IR abstract machine.
+    let mut exec = ExplicitExec::new(&result.explicit, Memory::new(&result.explicit), NoXla);
+    let v_explicit = exec.run("fib", &[Value::I64(n)])?;
+
+    // 4. Multithreaded work-stealing runtime (the Cilk-1 emulation layer).
+    let (v_ws, _, ws_stats) = ws::run(
+        &result.explicit,
+        SharedMemory::new(&result.explicit),
+        "fib",
+        &[Value::I64(n)],
+        &WsConfig::default(),
+        Box::new(ws::NoXlaSink),
+    )?;
+
+    // 5. HardCilk cycle simulator.
+    let cfg = SimConfig::default();
+    let (v_sim, _, sim_stats) = simulate(
+        &result.explicit,
+        Memory::new(&result.explicit),
+        "fib",
+        &[Value::I64(n)],
+        &cfg,
+        &mut NoSimXla,
+    )?;
+
+    println!("\nfib({n}):");
+    println!("  oracle   = {v_oracle}");
+    println!("  explicit = {v_explicit}");
+    println!("  ws       = {v_ws}   ({} tasks, {} steals)", ws_stats.tasks_run, ws_stats.steals);
+    println!(
+        "  sim      = {v_sim}   ({} cycles = {:.1} us @ {} MHz)",
+        sim_stats.cycles,
+        cfg.cycles_to_us(sim_stats.cycles),
+        cfg.freq_mhz
+    );
+    assert_eq!(v_oracle, v_explicit);
+    assert_eq!(v_oracle, v_ws);
+    assert_eq!(v_oracle, v_sim);
+
+    // 6. HardCilk codegen.
+    let system = hardcilk::generate(&result.explicit, "fib_system")?;
+    println!(
+        "\nHardCilk backend: {} PE kernels, {} lines of HLS C++, descriptor with {} tasks",
+        system.pes.len(),
+        system.total_loc(),
+        system.descriptor.get("tasks").and_then(|t| t.as_array()).map(|a| a.len()).unwrap_or(0)
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

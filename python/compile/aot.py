@@ -1,0 +1,64 @@
+"""AOT lowering: jax → HLO *text* → artifacts/ for the Rust runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run from `python/`:  python -m compile.aot --out-dir ../artifacts
+Artifacts are pure build outputs — Python never runs on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.ref import F
+from .model import relax_step
+
+# Batch-size variants compiled ahead of time; the Rust batcher picks the
+# smallest variant that fits and pads.
+BATCHES = (64, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(batch: int) -> str:
+    x = jax.ShapeDtypeStruct((batch, F), jnp.float32)
+    w = jax.ShapeDtypeStruct((F, F), jnp.float32)
+    b = jax.ShapeDtypeStruct((F,), jnp.float32)
+    return to_hlo_text(jax.jit(relax_step).lower(x, w, b))
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"kernel": "relax", "feature_width": F, "variants": []}
+    for batch in BATCHES:
+        text = lower_variant(batch)
+        name = f"relax_b{batch}_f{F}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["variants"].append({"batch": batch, "file": name})
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""L1 — the Pallas kernel for the relax PE datapath.
+
+Batched closure evaluation: a tile of B ready `relax` tasks is evaluated
+at once — `y = relu(x @ W + b)`, plus the frontier score per row. On TPU
+the BlockSpec below maps row tiles of the closure batch into VMEM while
+the weight tile stays resident, feeding the MXU (see DESIGN.md
+§Hardware-Adaptation — this is the DAE write-buffer idea restated as an
+HBM→VMEM schedule). `interpret=True` everywhere: the CPU PJRT plugin
+cannot run Mosaic custom-calls; real-TPU numbers are estimated
+structurally in DESIGN.md.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of the batch processed per grid step (VMEM tile height).
+ROW_TILE = 32
+
+
+def _relax_kernel(x_ref, w_ref, b_ref, y_ref, score_ref):
+    """One grid step: a [ROW_TILE, F] tile through the datapath."""
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jnp.maximum(jnp.dot(x, w) + b[None, :], 0.0)
+    y_ref[...] = y
+    score_ref[...] = jnp.sum(y, axis=-1)
+
+
+def relax_pallas(x, w, b):
+    """Apply the datapath to a [B, F] batch (B % ROW_TILE == 0)."""
+    batch, feat = x.shape
+    assert batch % ROW_TILE == 0, f"batch {batch} not a multiple of {ROW_TILE}"
+    grid = (batch // ROW_TILE,)
+    return pl.pallas_call(
+        _relax_kernel,
+        grid=grid,
+        in_specs=[
+            # Row tiles stream through VMEM...
+            pl.BlockSpec((ROW_TILE, feat), lambda i: (i, 0)),
+            # ...while weights and bias stay resident across the grid.
+            pl.BlockSpec((feat, feat), lambda i: (0, 0)),
+            pl.BlockSpec((feat,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROW_TILE, feat), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, feat), jnp.float32),
+            jax.ShapeDtypeStruct((batch,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for the relax PE datapath, plus the deterministic
+weight generator shared bit-for-bit with the Rust side.
+
+The Rust coordinator (`rust/src/workloads/relax.rs`) generates the same
+weights from the same xorshift64*/splitmix64 PRNG; `tests/test_kernel.py`
+pins a golden vector so cross-language drift is caught immediately.
+"""
+
+import numpy as np
+
+M64 = (1 << 64) - 1
+
+
+def _splitmix64(state: int) -> tuple[int, int]:
+    state = (state + 0x9E3779B97F4A7C15) & M64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return state, z ^ (z >> 31)
+
+
+class Rng:
+    """Port of bombyx::util::rng::Rng (xorshift64*)."""
+
+    def __init__(self, seed: int):
+        _, v = _splitmix64(seed & M64)
+        self.state = v | 1
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & M64
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & M64
+
+    def unit_f32(self) -> np.float32:
+        # Matches Rust: (next_u64() >> 11) as f64 * 2^-53, then `as f32`.
+        return np.float32((self.next_u64() >> 11) * (1.0 / (1 << 53)))
+
+
+F = 16  # feature width; must match rust/src/workloads/relax.rs::F
+
+
+def weights(seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """W[F,F] and b[F], float32, identical to the Rust `weights(seed)`."""
+    rng = Rng(seed)
+    half = np.float32(0.5)
+    w = np.empty(F * F, dtype=np.float32)
+    for i in range(F * F):
+        w[i] = (rng.unit_f32() - half) * np.float32(0.25)
+    b = np.empty(F, dtype=np.float32)
+    for i in range(F):
+        b[i] = (rng.unit_f32() - half) * np.float32(0.1)
+    return w.reshape(F, F), b
+
+
+def relax_ref(x: np.ndarray, w: np.ndarray, b: np.ndarray):
+    """Reference datapath: y = relu(x @ w + b); score = sum(y, axis=-1).
+
+    Implemented in float64-free numpy float32 to mirror both the Pallas
+    kernel and the Rust scalar path.
+    """
+    x = np.asarray(x, dtype=np.float32)
+    y = np.maximum(x @ w + b, np.float32(0.0)).astype(np.float32)
+    score = y.sum(axis=-1, dtype=np.float32)
+    return y, score

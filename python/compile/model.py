@@ -1,0 +1,20 @@
+"""L2 — the JAX compute graph around the Pallas kernel.
+
+`relax_step` is what gets AOT-lowered: it evaluates the batched PE
+datapath and additionally emits the integer frontier scores the Cilk-1
+continuation protocol carries (`send_argument(k, score)` — scores are
+fixed-point ×1000 int32 on the wire, saturating, exactly like the Rust
+scalar path)."""
+
+import jax.numpy as jnp
+
+from .kernels.pe_datapath import relax_pallas
+
+
+def relax_step(x, w, b):
+    """x: [B, F] float32; returns (y [B,F] f32, score_milli [B] i32)."""
+    y, score = relax_pallas(x, w, b)
+    score_milli = jnp.clip(
+        score * 1000.0, jnp.float32(-2**31), jnp.float32(2**31 - 256)
+    ).astype(jnp.int32)
+    return y, score_milli

@@ -1,0 +1,31 @@
+//! A-compile ablation: compiler throughput per stage for every example
+//! program.
+
+use bombyx::frontend;
+use bombyx::lower::{compile, CompileOptions};
+use bombyx::util::bench::{banner, bench};
+use bombyx::workloads::{bfs, fib, nqueens, qsort, relax};
+
+fn main() {
+    banner("compile_time", "Compiler stage timings on the example programs.");
+    let programs: &[(&str, &str)] = &[
+        ("fib", fib::FIB_SRC),
+        ("bfs", bfs::BFS_SRC),
+        ("bfs_dae", bfs::BFS_DAE_SRC),
+        ("nqueens", nqueens::NQUEENS_SRC),
+        ("qsort", qsort::QSORT_SRC),
+        ("relax", relax::RELAX_SRC),
+    ];
+    for (name, src) in programs {
+        bench(&format!("parse+sema {name}"), 50, || {
+            frontend::parse_and_check(name, src).unwrap()
+        });
+        bench(&format!("full pipeline {name}"), 50, || {
+            compile(name, src, &CompileOptions::standard()).unwrap()
+        });
+        bench(&format!("hardcilk codegen {name}"), 50, || {
+            let r = compile(name, src, &CompileOptions::standard()).unwrap();
+            bombyx::backend::hardcilk::generate(&r.explicit, name).unwrap()
+        });
+    }
+}

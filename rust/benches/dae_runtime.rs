@@ -1,0 +1,41 @@
+//! E-runtime: the paper's §III headline — DAE vs non-DAE runtime on
+//! synthetic trees B=4, D∈{7,9}, one PE per task type. Paper: 26.5 %
+//! overall reduction.
+
+use bombyx::coordinator::run_bfs_comparison;
+use bombyx::sim::SimConfig;
+use bombyx::util::bench::banner;
+use bombyx::util::table::{commas, Table};
+use bombyx::workloads::graphgen;
+
+fn main() {
+    banner(
+        "dae_runtime",
+        "Paper §III headline: execution time to traverse the whole graph, DAE vs non-DAE\n\
+         (HardCilk simulator, 1 PE per task type, 300 MHz).",
+    );
+    let cfg = SimConfig::paper();
+    let mut table =
+        Table::new(["graph", "nodes", "non-DAE cycles", "DAE cycles", "reduction", "paper"]);
+    let mut reductions = Vec::new();
+    for depth in [7u32, 9] {
+        let graph = graphgen::tree(4, depth);
+        let cmp = run_bfs_comparison(&graph, &cfg).expect("simulation");
+        reductions.push(cmp.reduction());
+        table.row([
+            format!("tree B=4 D={depth}"),
+            commas(graph.nodes() as u64),
+            commas(cmp.plain_cycles),
+            commas(cmp.dae_cycles),
+            format!("{:.1}%", cmp.reduction() * 100.0),
+            "26.5% overall".to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    let overall = reductions.iter().sum::<f64>() / reductions.len() as f64;
+    println!("\noverall runtime reduction: {:.1}% (paper: 26.5%)", overall * 100.0);
+    assert!(
+        (0.15..0.40).contains(&overall),
+        "reproduction drifted out of band: {overall}"
+    );
+}

@@ -1,0 +1,61 @@
+//! E-fig6: regenerate the paper's Fig. 6 synthesis table (LUT/FF/BRAM for
+//! the DAE-optimization PEs), via the calibrated HLS resource estimator
+//! (Vivado 2024.1 / xcu55c @ 300 MHz in the paper).
+
+use bombyx::hls::{estimate, CostModel};
+use bombyx::lower::{compile, CompileOptions};
+use bombyx::util::bench::banner;
+use bombyx::util::table::{pct_delta, Table};
+use bombyx::workloads::bfs;
+
+fn main() {
+    banner("fig6_synthesis", "Paper Fig. 6: synthesis results for DAE optimization PEs.");
+    let model = CostModel::default();
+    let non_dae = compile("bfs", bfs::BFS_SRC, &CompileOptions::no_dae()).unwrap();
+    let dae = compile("bfs", bfs::BFS_DAE_SRC, &CompileOptions::standard()).unwrap();
+    let est = |m: &bombyx::ir::Module, name: &str| {
+        let f = &m.funcs[m.func_by_name(name).unwrap()];
+        estimate(&model, m, f)
+    };
+
+    let non = est(&non_dae.explicit, "visit");
+    let spawner = est(&dae.explicit, "visit");
+    let executor = est(&dae.explicit, "visit__k1");
+    let access = est(&dae.explicit, "adj_off_access");
+    let dae_total = spawner + executor + access;
+
+    let paper = [
+        ("Non-DAE", (2657u32, 2305u32, 2u32)),
+        ("Spawner", (133, 387, 0)),
+        ("Executor", (1999, 1913, 2)),
+        ("Access", (1764, 1164, 2)),
+        ("DAE (total)", (3896, 3464, 4)),
+    ];
+    let ours = [non, spawner, executor, access, dae_total];
+
+    let mut table = Table::new([
+        "PE", "LUT est", "LUT paper", "LUT err", "FF est", "FF paper", "FF err", "BRAM est",
+        "BRAM paper",
+    ]);
+    for ((name, (pl, pf, pb)), e) in paper.iter().zip(ours) {
+        let lut_err = (e.lut as f64 - *pl as f64) / *pl as f64 * 100.0;
+        let ff_err = (e.ff as f64 - *pf as f64) / *pf as f64 * 100.0;
+        table.row([
+            name.to_string(),
+            e.lut.to_string(),
+            pl.to_string(),
+            format!("{lut_err:+.1}%"),
+            e.ff.to_string(),
+            pf.to_string(),
+            format!("{ff_err:+.1}%"),
+            e.bram.to_string(),
+            pb.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\nDAE overhead: LUT {}, FF {} (paper: +47% LUT, +50% FF)",
+        pct_delta(dae_total.lut as f64 / non.lut as f64),
+        pct_delta(dae_total.ff as f64 / non.ff as f64),
+    );
+}

@@ -1,0 +1,32 @@
+//! E-fig1/2/4/5: regenerate the paper's listings and IR figures as golden
+//! artifacts — Fig. 1 (OpenCilk fib), Fig. 2 (Cilk-1 fib), Fig. 4(b)/(c)
+//! (implicit & explicit CFGs), Fig. 5 (BFS listing).
+
+use bombyx::ir::print::{print_cilk1, print_module};
+use bombyx::lower::{compile, CompileOptions};
+use bombyx::util::bench::banner;
+use bombyx::workloads::{bfs, fib};
+
+fn main() {
+    banner("figures", "Regenerates paper Figs. 1, 2, 4(b), 4(c), 5 from the compiler.");
+
+    println!("==== Fig. 1: OpenCilk fib (Cilk-C source) ====\n{}", fib::FIB_SRC);
+
+    let r = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    println!("==== Fig. 4(b): implicit IR (CFG with sync terminator) ====");
+    let f = &r.implicit.funcs[r.implicit.func_by_name("fib").unwrap()];
+    println!("{}", bombyx::ir::print::print_func(&r.implicit, f));
+
+    println!("==== Fig. 4(c): explicit IR (paths -> terminating tasks) ====");
+    print!("{}", print_module(&r.explicit));
+
+    println!("==== Fig. 2: Cilk-1 concrete syntax ====");
+    for (_, f) in r.explicit.funcs.iter() {
+        if f.task.is_some() && f.body.is_some() {
+            println!("{}", print_cilk1(&r.explicit, f));
+        }
+    }
+
+    println!("==== Fig. 5: parallel BFS (Cilk-C source) ====\n{}", bfs::BFS_SRC);
+    println!("==== Fig. 5 + DAE pragma (paper §III) ====\n{}", bfs::BFS_DAE_SRC);
+}

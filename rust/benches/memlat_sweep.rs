@@ -1,0 +1,39 @@
+//! A-mem ablation: memory-latency sweep — DAE's benefit as a function of
+//! HBM service latency (the §II-C mechanism made quantitative).
+
+use bombyx::coordinator::run_bfs_comparison;
+use bombyx::sim::SimConfig;
+use bombyx::util::bench::banner;
+use bombyx::util::table::{commas, Table};
+use bombyx::workloads::graphgen;
+
+fn main() {
+    banner(
+        "memlat_sweep",
+        "Ablation: memory latency 10..320 cycles on the B=4 D=7 tree, 1 PE/type.",
+    );
+    let graph = graphgen::tree(4, 7);
+    let mut table = Table::new(["mem latency", "non-DAE cycles", "DAE cycles", "reduction"]);
+    let mut last_reduction = -1.0f64;
+    let mut monotone = true;
+    for lat in [10u32, 20, 40, 80, 160, 320] {
+        let mut cfg = SimConfig::paper();
+        cfg.mem_latency = lat;
+        let cmp = run_bfs_comparison(&graph, &cfg).expect("simulation");
+        if cmp.reduction() < last_reduction {
+            monotone = false;
+        }
+        last_reduction = cmp.reduction();
+        table.row([
+            lat.to_string(),
+            commas(cmp.plain_cycles),
+            commas(cmp.dae_cycles),
+            format!("{:.1}%", cmp.reduction() * 100.0),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\nDAE benefit grows with memory latency: {}",
+        if monotone { "confirmed (monotone)" } else { "NOT monotone — investigate" }
+    );
+}

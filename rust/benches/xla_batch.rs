@@ -1,0 +1,50 @@
+//! A-xla ablation: batched XLA PE-datapath throughput vs batch size — the
+//! batching amortization that plays the DAE role in the three-layer stack
+//! (DESIGN.md §Hardware-Adaptation). Requires `make artifacts`.
+
+use bombyx::ir::Value;
+use bombyx::lower::{compile, CompileOptions};
+use bombyx::runtime::{RelaxXla, XlaRuntime};
+use bombyx::sim::SimXla;
+use bombyx::util::bench::{banner, bench, throughput};
+use bombyx::workloads::relax;
+
+fn main() {
+    banner(
+        "xla_batch",
+        "Batched relax datapath (AOT Pallas/XLA) throughput vs batch size.",
+    );
+    let artifacts = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let runtime = match XlaRuntime::load_dir(artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIPPED: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let r = compile("relax", relax::RELAX_SRC, &CompileOptions::no_dae()).unwrap();
+    let m = &r.explicit;
+    let mut xla = RelaxXla::new(runtime, m, 1).unwrap();
+
+    let n_rows = 4096usize;
+    for batch_size in [1usize, 8, 32, 64, 128, 256] {
+        let mut mem = bombyx::interp::Memory::new(m);
+        let feats: Vec<f32> = (0..n_rows * relax::F).map(|i| (i % 13) as f32 * 0.07).collect();
+        mem.fill_f32(m.global_by_name("feat").unwrap(), &feats);
+        let stats = bench(&format!("relax batch={batch_size}"), 5, || {
+            let mut done = 0usize;
+            while done < n_rows {
+                let take = batch_size.min(n_rows - done);
+                let batch: Vec<Vec<Value>> =
+                    (done..done + take).map(|n| vec![Value::I64(n as i64)]).collect();
+                SimXla::exec_batch(&mut xla, "relax", &batch, &mut mem).unwrap();
+                done += take;
+            }
+            done
+        });
+        throughput(&format!("relax batch={batch_size}"), &stats, n_rows as u64, "rows");
+    }
+    println!(
+        "\n(Amortization story: per-dispatch overhead dominates at batch=1; the AOT\n executable reaches its roofline once batches fill the compiled tile.)"
+    );
+}

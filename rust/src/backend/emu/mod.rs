@@ -1,0 +1,200 @@
+//! Cilk-1 emulation backend (paper §II-B's second target).
+//!
+//! The paper lowers the explicit IR back onto the OpenCilk runtime by
+//! implementing `spawn` / `spawn_next` / `send_argument` as library calls,
+//! "to verify the equivalence of the original program in software once
+//! compiled". Our equivalent: package the explicit module together with
+//! entry metadata for the from-scratch work-stealing runtime
+//! ([`crate::ws`]), and provide the one-call differential check used
+//! throughout the test suite: oracle (implicit, sequential) vs emulation
+//! (explicit, parallel).
+
+use anyhow::{anyhow, Result};
+
+use crate::interp::{oracle, Memory};
+use crate::ir::cfg::{FuncKind, Module};
+use crate::ir::expr::Value;
+use crate::lower::CompileResult;
+use crate::ws::{self, SharedMemory, WsConfig, XlaSink};
+
+/// An executable emulation program: the explicit module plus its entry
+/// points (every original task function is invocable).
+#[derive(Clone, Debug)]
+pub struct EmuProgram {
+    pub module: Module,
+    pub entries: Vec<String>,
+}
+
+/// Build the emulation program from a compile result.
+pub fn package(result: &CompileResult) -> EmuProgram {
+    let entries = result
+        .explicit
+        .funcs
+        .values()
+        .filter(|f| {
+            f.task
+                .as_ref()
+                .map(|t| t.role == crate::ir::TaskRole::Entry || t.role == crate::ir::TaskRole::Access)
+                .unwrap_or(false)
+                || f.kind == FuncKind::Leaf
+        })
+        .map(|f| f.name.clone())
+        .collect();
+    EmuProgram { module: result.explicit.clone(), entries }
+}
+
+impl EmuProgram {
+    /// Run on the WS runtime.
+    pub fn run(
+        &self,
+        memory: SharedMemory,
+        entry: &str,
+        args: &[Value],
+        config: &WsConfig,
+        sink: Box<dyn XlaSink>,
+    ) -> Result<(Value, SharedMemory, ws::WsStats)> {
+        if !self.entries.iter().any(|e| e == entry) {
+            return Err(anyhow!(
+                "`{entry}` is not an entry task (available: {:?})",
+                self.entries
+            ));
+        }
+        ws::run(&self.module, memory, entry, args, config, sink)
+    }
+}
+
+/// Differential check: run `entry(args)` through the sequential oracle on
+/// the implicit IR and through the WS runtime on the explicit IR; verify
+/// result and final memory agree. Returns (value, oracle memory).
+///
+/// `init` seeds both memories identically.
+pub fn check_equivalence(
+    result: &CompileResult,
+    entry: &str,
+    args: &[Value],
+    init: impl Fn(&Module, &mut Memory) -> Result<()>,
+    workers: usize,
+) -> Result<(Value, Memory)> {
+    // Oracle on the pre-DAE implicit IR (the original program).
+    let mut mem_o = Memory::new(&result.implicit);
+    init(&result.implicit, &mut mem_o)?;
+    let (v_oracle, mem_o) = oracle::run_oracle(&result.implicit, mem_o, entry, args)?;
+
+    // Emulation on the explicit IR.
+    let emu = package(result);
+    let mut mem_seed = Memory::new(&emu.module);
+    init(&emu.module, &mut mem_seed)?;
+    let shared = shared_from(&emu.module, &mem_seed);
+    let cfg = WsConfig { workers, steal_tries: 4 };
+    let (v_emu, mem_e, _) =
+        emu.run(shared, entry, args, &cfg, Box::new(ws::NoXlaSink))?;
+
+    if v_oracle != v_emu && !(v_oracle == Value::Unit && v_emu == Value::Unit) {
+        return Err(anyhow!("result mismatch: oracle={v_oracle:?} emu={v_emu:?}"));
+    }
+    // Compare memory images global-by-global.
+    for (gid, g) in result.implicit.globals.iter() {
+        let a = mem_o.dump_i64(gid);
+        let egid = emu
+            .module
+            .global_by_name(&g.name)
+            .ok_or_else(|| anyhow!("global `{}` lost in explicitization", g.name))?;
+        let b = mem_e.dump_i64(egid);
+        if a != b {
+            return Err(anyhow!(
+                "memory mismatch in `{}`: oracle {:?} vs emu {:?}",
+                g.name,
+                &a[..a.len().min(16)],
+                &b[..b.len().min(16)]
+            ));
+        }
+    }
+    Ok((v_oracle, mem_o))
+}
+
+/// Copy a sequential memory image into a fresh SharedMemory.
+pub fn shared_from(module: &Module, mem: &Memory) -> SharedMemory {
+    let mut values = Vec::new();
+    for (gid, g) in module.globals.iter() {
+        let _ = g;
+        let vals: Vec<Value> = match module.globals[gid].elem {
+            crate::frontend::ast::Type::Float => {
+                mem.dump_f32(gid).into_iter().map(Value::F32).collect()
+            }
+            _ => mem.dump_i64(gid).into_iter().map(Value::I64).collect(),
+        };
+        values.push(vals);
+    }
+    SharedMemory::from_values(module, values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::{compile, CompileOptions};
+
+    #[test]
+    fn fib_equivalence_oracle_vs_ws() {
+        let r = compile(
+            "t",
+            "int fib(int n) {
+                if (n < 2) return n;
+                int x = cilk_spawn fib(n - 1);
+                int y = cilk_spawn fib(n - 2);
+                cilk_sync;
+                return x + y;
+            }",
+            &CompileOptions::no_dae(),
+        )
+        .unwrap();
+        let (v, _) = check_equivalence(&r, "fib", &[Value::I64(14)], |_, _| Ok(()), 4).unwrap();
+        assert_eq!(v, Value::I64(377));
+    }
+
+    #[test]
+    fn bfs_equivalence_with_and_without_dae() {
+        let src = "global int adj_off[];
+            global int adj_edges[];
+            global int visited[];
+            void visit(int n) {
+                #pragma bombyx dae
+                int off = adj_off[n];
+                #pragma bombyx dae
+                int end = adj_off[n + 1];
+                visited[n] = 1;
+                for (int i = off; i < end; i = i + 1) {
+                    cilk_spawn visit(adj_edges[i]);
+                }
+                cilk_sync;
+            }";
+        for opts in [CompileOptions::no_dae(), CompileOptions::standard()] {
+            let r = compile("t", src, &opts).unwrap();
+            check_equivalence(
+                &r,
+                "visit",
+                &[Value::I64(0)],
+                |m, mem| {
+                    mem.fill_i64(m.global_by_name("adj_off").unwrap(), &[0, 2, 4, 6, 6, 6, 6, 6]);
+                    mem.fill_i64(m.global_by_name("adj_edges").unwrap(), &[1, 2, 3, 4, 5, 6]);
+                    mem.resize(m.global_by_name("visited").unwrap(), 7);
+                    Ok(())
+                },
+                4,
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn entry_check_rejects_continuations() {
+        let r = compile(
+            "t",
+            "int f(int n) { int x = cilk_spawn f(n); cilk_sync; return x; }",
+            &CompileOptions::no_dae(),
+        )
+        .unwrap();
+        let emu = package(&r);
+        assert!(emu.entries.contains(&"f".to_string()));
+        assert!(!emu.entries.contains(&"f__k1".to_string()));
+    }
+}

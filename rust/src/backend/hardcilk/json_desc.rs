@@ -1,0 +1,157 @@
+//! HardCilk JSON system descriptor (paper §II-B).
+//!
+//! "HardCilk requires a JSON configuration file serving as a descriptor for
+//! the relations among tasks in the system. The JSON contains the size of
+//! closures in the system, a list of which tasks a given task may spawn,
+//! spawn_next, or send_argument to, and others." Bombyx derives all of it
+//! by static analysis of the explicit IR.
+
+use crate::ir::cfg::{FuncKind, Module};
+use crate::ir::explicit::{closure_layout, explicit_tasks, task_relations};
+use crate::util::json::Json;
+
+/// Build the system descriptor for an explicit module.
+pub fn system_descriptor(module: &Module, system_name: &str) -> Json {
+    let mut doc = Json::object();
+    doc.set("system", system_name);
+    doc.set("generator", "bombyx");
+    doc.set("closure_align_bits", crate::ir::explicit::MIN_CLOSURE_BITS as i64);
+
+    let mut tasks = Vec::new();
+    for fid in explicit_tasks(module) {
+        let f = &module.funcs[fid];
+        let meta = f.task.as_ref().unwrap();
+        let layout = closure_layout(f);
+        let rel = task_relations(module, fid);
+        let mut t = Json::object();
+        t.set("name", f.name.as_str());
+        t.set("role", meta.role.name());
+        t.set("source_function", meta.source.as_str());
+        t.set("closure_bits", layout.padded_bits as i64);
+        t.set("closure_payload_bits", layout.payload_bits as i64);
+        t.set("is_xla_blackbox", f.kind == FuncKind::Xla);
+        let params: Vec<Json> = layout
+            .fields
+            .iter()
+            .map(|fld| {
+                let mut p = Json::object();
+                p.set("name", fld.name.as_str());
+                p.set("type", fld.ty.name());
+                p.set("offset_bits", fld.offset_bits as i64);
+                p.set("width_bits", fld.width_bits as i64);
+                p.clone()
+            })
+            .collect();
+        t.set("params", params);
+        t.set("cont_offset_bits", layout.cont_offset_bits as i64);
+        t.set("join_counter_offset_bits", layout.counter_offset_bits as i64);
+        let names = |ids: &[crate::ir::FuncId]| -> Vec<Json> {
+            ids.iter().map(|&i| Json::from(module.funcs[i].name.as_str())).collect()
+        };
+        t.set("spawns", names(&rel.spawns));
+        t.set("spawn_nexts", names(&rel.spawn_nexts));
+        t.set("send_argument_to", names(&rel.sends_to));
+        // Write-buffer side-band info (paper: "the write buffer requires
+        // the HLS code to include extra information about the
+        // argument/task being written").
+        let mut wb = Json::object();
+        wb.set("closure_bytes", (layout.padded_bits / 8) as i64);
+        wb.set("max_spawn_args", f.params.min(8));
+        t.set("write_buffer", wb.clone());
+        tasks.push(t);
+    }
+    doc.set("tasks", tasks);
+
+    let globals: Vec<Json> = module
+        .globals
+        .values()
+        .map(|g| {
+            let mut j = Json::object();
+            j.set("name", g.name.as_str());
+            j.set("elem", g.elem.name());
+            match g.size {
+                Some(s) => j.set("elems", s as i64),
+                None => j.set("elems", Json::Null),
+            };
+            j.clone()
+        })
+        .collect();
+    doc.set("memory", globals);
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::{compile, CompileOptions};
+    use crate::util::json;
+
+    const FIB: &str = "int fib(int n) {
+        if (n < 2) return n;
+        int x = cilk_spawn fib(n - 1);
+        int y = cilk_spawn fib(n - 2);
+        cilk_sync;
+        return x + y;
+    }";
+
+    #[test]
+    fn fib_descriptor_contents() {
+        let r = compile("t", FIB, &CompileOptions::no_dae()).unwrap();
+        let doc = system_descriptor(&r.explicit, "fib_system");
+        let text = doc.pretty();
+        // Round-trips through our parser.
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back, doc);
+
+        let tasks = doc.get("tasks").unwrap().as_array().unwrap();
+        assert_eq!(tasks.len(), 2);
+        let fib = &tasks[0];
+        assert_eq!(fib.get("name").unwrap().as_str(), Some("fib"));
+        assert_eq!(fib.get("role").unwrap().as_str(), Some("entry"));
+        // fib spawns itself; spawn_nexts its continuation.
+        let spawns = fib.get("spawns").unwrap().as_array().unwrap();
+        assert!(spawns.iter().any(|s| s.as_str() == Some("fib")));
+        let nexts = fib.get("spawn_nexts").unwrap().as_array().unwrap();
+        assert!(nexts.iter().any(|s| s.as_str() == Some("fib__k1")));
+        // Continuation closure is 256 bits.
+        let cont = &tasks[1];
+        assert_eq!(cont.get("closure_bits").unwrap().as_i64(), Some(256));
+        // The child fib sends into the continuation's closure.
+        let sends = fib.get("send_argument_to").unwrap().as_array().unwrap();
+        assert!(sends.iter().any(|s| s.as_str() == Some("fib__k1")), "{text}");
+    }
+
+    #[test]
+    fn dae_descriptor_has_access_role() {
+        let src = "global int a[];
+            void g(int v) { atomic_add(a, 0, v); }
+            void f(int i) {
+                #pragma bombyx dae
+                int x = a[i];
+                cilk_spawn g(x);
+                cilk_sync;
+            }";
+        let r = compile("t", src, &CompileOptions::standard()).unwrap();
+        let doc = system_descriptor(&r.explicit, "dae_system");
+        let tasks = doc.get("tasks").unwrap().as_array().unwrap();
+        let roles: Vec<&str> =
+            tasks.iter().filter_map(|t| t.get("role").unwrap().as_str()).collect();
+        assert!(roles.contains(&"access"), "{roles:?}");
+        assert!(roles.contains(&"entry"));
+        assert!(roles.contains(&"continuation"));
+    }
+
+    #[test]
+    fn memory_section_lists_globals() {
+        let src = "global int a[64];
+            global float w[];
+            void g(int v) { atomic_add(a, 0, v); }
+            void f(int i) { cilk_spawn g(i); cilk_sync; }";
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let doc = system_descriptor(&r.explicit, "s");
+        let mem = doc.get("memory").unwrap().as_array().unwrap();
+        assert_eq!(mem.len(), 2);
+        assert_eq!(mem[0].get("elems").unwrap().as_i64(), Some(64));
+        assert_eq!(mem[1].get("elems"), Some(&Json::Null));
+    }
+}

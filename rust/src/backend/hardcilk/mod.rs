@@ -1,0 +1,110 @@
+//! HardCilk backend: explicit IR → synthesizable HLS C++ PEs + the JSON
+//! system descriptor HardCilk's architecture generator consumes
+//! (paper §II-B).
+
+pub mod cpp_gen;
+pub mod json_desc;
+pub mod structurize;
+
+use anyhow::Result;
+
+use crate::ir::cfg::Module;
+use crate::ir::explicit::explicit_tasks;
+use crate::util::json::Json;
+
+/// The full generated system.
+#[derive(Clone, Debug)]
+pub struct HardCilkSystem {
+    pub name: String,
+    /// Shared header (`bombyx_system.h`).
+    pub header: String,
+    /// One C++ source per PE: (task name, file name, contents).
+    pub pes: Vec<(String, String, String)>,
+    /// System descriptor.
+    pub descriptor: Json,
+}
+
+/// Generate the complete HardCilk system from an explicit module.
+pub fn generate(module: &Module, system_name: &str) -> Result<HardCilkSystem> {
+    let header = cpp_gen::gen_header(module)?;
+    let mut pes = Vec::new();
+    for fid in explicit_tasks(module) {
+        let name = module.funcs[fid].name.clone();
+        let source = cpp_gen::gen_pe(module, fid)?;
+        let file = format!("pe_{}.cpp", name.replace("__", "_k_"));
+        pes.push((name, file, source));
+    }
+    Ok(HardCilkSystem {
+        name: system_name.to_string(),
+        header,
+        pes,
+        descriptor: json_desc::system_descriptor(module, system_name),
+    })
+}
+
+impl HardCilkSystem {
+    /// Write all files into a directory.
+    pub fn write_to(&self, dir: &std::path::Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("bombyx_system.h"), &self.header)?;
+        for (_, file, src) in &self.pes {
+            std::fs::write(dir.join(file), src)?;
+        }
+        std::fs::write(dir.join(format!("{}.json", self.name)), self.descriptor.pretty())?;
+        Ok(())
+    }
+
+    pub fn total_loc(&self) -> usize {
+        self.header.lines().count()
+            + self.pes.iter().map(|(_, _, s)| s.lines().count()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::{compile, CompileOptions};
+
+    #[test]
+    fn generate_full_fib_system() {
+        let r = compile(
+            "t",
+            "int fib(int n) {
+                if (n < 2) return n;
+                int x = cilk_spawn fib(n - 1);
+                int y = cilk_spawn fib(n - 2);
+                cilk_sync;
+                return x + y;
+            }",
+            &CompileOptions::no_dae(),
+        )
+        .unwrap();
+        let sys = generate(&r.explicit, "fib_system").unwrap();
+        assert_eq!(sys.pes.len(), 2);
+        assert!(sys.header.contains("closure_fib"));
+        assert!(sys.total_loc() > 50);
+        let names: Vec<&str> = sys.pes.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["fib", "fib__k1"]);
+    }
+
+    #[test]
+    fn write_to_disk() {
+        let r = compile(
+            "t",
+            "int f(int n) {
+                int x = cilk_spawn f(n - 1);
+                cilk_sync;
+                return x;
+            }",
+            &CompileOptions::no_dae(),
+        )
+        .unwrap();
+        let sys = generate(&r.explicit, "sys").unwrap();
+        let dir = std::env::temp_dir().join(format!("bombyx_test_{}", std::process::id()));
+        sys.write_to(&dir).unwrap();
+        assert!(dir.join("bombyx_system.h").exists());
+        assert!(dir.join("sys.json").exists());
+        assert!(dir.join("pe_f.cpp").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

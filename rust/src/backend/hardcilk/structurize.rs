@@ -1,0 +1,314 @@
+//! Structural control-flow reconstruction for HLS C++ emission.
+//!
+//! Vitis HLS rejects `goto`, so PE bodies must be emitted as structured
+//! C++. Our CFGs originate from structured Cilk-C (plus fission, which
+//! preserves reducibility), so a simple pattern-driven structurizer
+//! suffices: linear chains, if/else with a post-dominator join, and natural
+//! `while` loops (header-branch, single back edge). Anything that doesn't
+//! match (should not happen, but the fallback keeps codegen total) is
+//! emitted as a synthesizable `switch`-FSM.
+
+use std::collections::HashSet;
+
+use crate::ir::cfg::{BlockId, Cfg, Term};
+use crate::ir::expr::Expr;
+use crate::lower::analysis::{dominators, natural_loops};
+
+/// Structured program tree over CFG blocks.
+#[derive(Clone, Debug)]
+pub enum SNode {
+    /// Straight-line ops of a block (terminator handled by the parent).
+    Ops(BlockId),
+    /// Terminal ops of a block (Halt/Return terminator).
+    Tail(BlockId),
+    Seq(Vec<SNode>),
+    If { cond_block: BlockId, cond: Expr, then_: Box<SNode>, else_: Box<SNode> },
+    While { header: BlockId, cond: Expr, body: Box<SNode> },
+    /// Fallback: blocks to emit as a switch FSM.
+    Fsm(Vec<BlockId>),
+}
+
+/// Reconstruct structured control flow for a (small) task CFG.
+pub fn structurize(cfg: &Cfg) -> SNode {
+    let idom = dominators(cfg);
+    let loops = natural_loops(cfg, &idom);
+    let headers: HashSet<BlockId> = loops.iter().map(|(h, _)| *h).collect();
+    let ipdom = postdominators(cfg);
+    let mut cx = Cx { cfg, loops: &loops, headers: &headers, ipdom: &ipdom, fuel: 10_000 };
+    match cx.region(Some(cfg.entry), None) {
+        Some(node) => node,
+        None => SNode::Fsm(cfg.reachable_ids()),
+    }
+}
+
+struct Cx<'a> {
+    cfg: &'a Cfg,
+    loops: &'a [(BlockId, HashSet<BlockId>)],
+    headers: &'a HashSet<BlockId>,
+    ipdom: &'a [Option<BlockId>],
+    fuel: u32,
+}
+
+impl<'a> Cx<'a> {
+    /// Emit the region starting at `b`, stopping when reaching `stop`
+    /// (exclusive). Returns None if the shape is unsupported.
+    fn region(&mut self, mut b: Option<BlockId>, stop: Option<BlockId>) -> Option<SNode> {
+        let mut seq = Vec::new();
+        loop {
+            self.fuel = self.fuel.checked_sub(1)?;
+            let Some(cur) = b else { break };
+            if Some(cur) == stop {
+                break;
+            }
+            // Loop header?
+            if self.headers.contains(&cur) {
+                let (_, body_set) = self.loops.iter().find(|(h, _)| *h == cur)?;
+                let Term::Branch { cond, then_, else_ } = &self.cfg.blocks[cur].term else {
+                    return None; // non-while loop shape -> FSM
+                };
+                let (body_entry, exit, cond_expr) = if body_set.contains(then_) {
+                    (*then_, *else_, cond.clone())
+                } else if body_set.contains(else_) {
+                    // while (!cond)
+                    (
+                        *else_,
+                        *then_,
+                        Expr::Unary(crate::frontend::ast::UnOp::Not, Box::new(cond.clone())),
+                    )
+                } else {
+                    return None;
+                };
+                // Header must carry no side ops for a clean while — if it
+                // does, they belong to both iteration and entry; our
+                // lowering puts the condition alone in the header, but ops
+                // can appear after merging. Fall back if present.
+                let body = self.region(Some(body_entry), Some(cur))?;
+                if !self.cfg.blocks[cur].ops.is_empty() {
+                    return None;
+                }
+                seq.push(SNode::While { header: cur, cond: cond_expr, body: Box::new(body) });
+                b = Some(exit);
+                continue;
+            }
+            match &self.cfg.blocks[cur].term {
+                Term::Jump(t) => {
+                    seq.push(SNode::Ops(cur));
+                    b = Some(*t);
+                }
+                Term::Return(_) | Term::Halt | Term::Sync { .. } => {
+                    seq.push(SNode::Tail(cur));
+                    break;
+                }
+                Term::Branch { cond, then_, else_ } => {
+                    // If/else with join at the immediate postdominator.
+                    let join = self.ipdom[cur.index()];
+                    seq.push(SNode::Ops(cur));
+                    let t = self.region(Some(*then_), join)?;
+                    let e = self.region(Some(*else_), join)?;
+                    seq.push(SNode::If {
+                        cond_block: cur,
+                        cond: cond.clone(),
+                        then_: Box::new(t),
+                        else_: Box::new(e),
+                    });
+                    b = join;
+                }
+            }
+        }
+        Some(match seq.len() {
+            1 => seq.pop().unwrap(),
+            _ => SNode::Seq(seq),
+        })
+    }
+}
+
+/// Immediate postdominators via dominators of the reversed CFG with a
+/// virtual exit. Blocks that cannot reach an exit get `None`.
+pub fn postdominators(cfg: &Cfg) -> Vec<Option<BlockId>> {
+    let n = cfg.blocks.len();
+    // Build reverse adjacency with virtual exit node index n.
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n + 1]; // preds in reverse graph = succs in original
+    let mut rsuccs: Vec<Vec<usize>> = vec![Vec::new(); n + 1];
+    for (bid, block) in cfg.blocks.iter() {
+        let succs = block.term.successors();
+        if succs.is_empty() {
+            // edge exit -> bid in reverse graph
+            rsuccs[n].push(bid.index());
+            preds[bid.index()].push(n);
+        }
+        for s in succs {
+            rsuccs[s.index()].push(bid.index());
+            preds[bid.index()].push(s.index());
+        }
+    }
+    // RPO of reverse graph from virtual exit.
+    let mut visited = vec![false; n + 1];
+    let mut order = Vec::new();
+    let mut stack = vec![(n, false)];
+    while let Some((b, post)) = stack.pop() {
+        if post {
+            order.push(b);
+            continue;
+        }
+        if visited[b] {
+            continue;
+        }
+        visited[b] = true;
+        stack.push((b, true));
+        for &s in &rsuccs[b] {
+            if !visited[s] {
+                stack.push((s, false));
+            }
+        }
+    }
+    order.reverse();
+    let mut rpo_index = vec![usize::MAX; n + 1];
+    for (i, &b) in order.iter().enumerate() {
+        rpo_index[b] = i;
+    }
+    let mut idom: Vec<Option<usize>> = vec![None; n + 1];
+    idom[n] = Some(n);
+    let intersect = |idom: &[Option<usize>], rpo_index: &[usize], mut a: usize, mut b: usize| {
+        while a != b {
+            while rpo_index[a] > rpo_index[b] {
+                a = idom[a].unwrap();
+            }
+            while rpo_index[b] > rpo_index[a] {
+                b = idom[b].unwrap();
+            }
+        }
+        a
+    };
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &b in order.iter().skip(1) {
+            let mut new: Option<usize> = None;
+            for &p in &preds[b] {
+                if idom[p].is_none() {
+                    continue;
+                }
+                new = Some(match new {
+                    None => p,
+                    Some(cur) => intersect(&idom, &rpo_index, cur, p),
+                });
+            }
+            if let Some(ni) = new {
+                if idom[b] != Some(ni) {
+                    idom[b] = Some(ni);
+                    changed = true;
+                }
+            }
+        }
+    }
+    (0..n)
+        .map(|b| match idom[b] {
+            Some(d) if d < n => Some(BlockId::new(d)),
+            _ => None,
+        })
+        .collect()
+}
+
+impl Cfg {
+    /// Reachable block ids, ascending (helper for the FSM fallback).
+    pub fn reachable_ids(&self) -> Vec<BlockId> {
+        let r = self.reachable();
+        self.blocks.ids().filter(|b| r[b.index()]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_check;
+    use crate::lower::ast_to_cfg::lower_program;
+    use crate::lower::simplify::simplify_module;
+
+    fn cfg_of(src: &str, name: &str) -> Cfg {
+        let (p, _) = parse_and_check("t", src).unwrap();
+        let mut m = lower_program(&p).unwrap();
+        simplify_module(&mut m);
+        m.funcs[m.func_by_name(name).unwrap()].cfg().clone()
+    }
+
+    fn count_fsm(n: &SNode) -> usize {
+        match n {
+            SNode::Fsm(_) => 1,
+            SNode::Seq(items) => items.iter().map(count_fsm).sum(),
+            SNode::If { then_, else_, .. } => count_fsm(then_) + count_fsm(else_),
+            SNode::While { body, .. } => count_fsm(body),
+            _ => 0,
+        }
+    }
+
+    #[test]
+    fn linear_function_is_seq() {
+        let cfg = cfg_of("int f(int n) { int x = n + 1; return x * 2; }", "f");
+        let s = structurize(&cfg);
+        assert_eq!(count_fsm(&s), 0);
+        assert!(matches!(s, SNode::Tail(_) | SNode::Seq(_)));
+    }
+
+    #[test]
+    fn if_else_structure() {
+        let cfg = cfg_of("int f(int n) { if (n < 0) { return -n; } else { return n; } }", "f");
+        let s = structurize(&cfg);
+        assert_eq!(count_fsm(&s), 0);
+        fn has_if(n: &SNode) -> bool {
+            match n {
+                SNode::If { .. } => true,
+                SNode::Seq(items) => items.iter().any(has_if),
+                _ => false,
+            }
+        }
+        assert!(has_if(&s), "{s:?}");
+    }
+
+    #[test]
+    fn while_loop_structure() {
+        let cfg = cfg_of(
+            "int f(int n) { int acc = 0; int i = 0; while (i < n) { acc = acc + i; i = i + 1; } return acc; }",
+            "f",
+        );
+        let s = structurize(&cfg);
+        assert_eq!(count_fsm(&s), 0);
+        fn has_while(n: &SNode) -> bool {
+            match n {
+                SNode::While { .. } => true,
+                SNode::Seq(items) => items.iter().any(has_while),
+                SNode::If { then_, else_, .. } => has_while(then_) || has_while(else_),
+                _ => false,
+            }
+        }
+        assert!(has_while(&s), "{s:?}");
+    }
+
+    #[test]
+    fn nested_loops_and_ifs() {
+        let cfg = cfg_of(
+            "int f(int n) {
+                int acc = 0;
+                for (int i = 0; i < n; i = i + 1) {
+                    if (i % 2 == 0) {
+                        for (int j = 0; j < i; j = j + 1) { acc = acc + j; }
+                    } else {
+                        acc = acc - 1;
+                    }
+                }
+                return acc;
+            }",
+            "f",
+        );
+        let s = structurize(&cfg);
+        assert_eq!(count_fsm(&s), 0, "{s:?}");
+    }
+
+    #[test]
+    fn postdominators_diamond() {
+        let cfg = cfg_of("int f(int n) { int x = 0; if (n > 0) { x = 1; } else { x = 2; } return x; }", "f");
+        let ipdom = postdominators(&cfg);
+        // The entry's ipdom is the join block (which returns).
+        let join = ipdom[cfg.entry.index()].expect("entry has a postdominator");
+        assert!(matches!(cfg.blocks[join].term, Term::Return(_)));
+    }
+}

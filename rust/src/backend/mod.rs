@@ -1,0 +1,10 @@
+//! Compilation targets for the explicit IR.
+//!
+//! - [`hardcilk`]: synthesizable HLS C++ PEs + JSON system descriptor (the
+//!   paper's primary backend, §II-B);
+//! - [`emu`]: the Cilk-1 emulation backend — packages an explicit module
+//!   for execution on the software work-stealing runtime ([`crate::ws`]),
+//!   used to verify semantic equivalence with the original program.
+
+pub mod emu;
+pub mod hardcilk;

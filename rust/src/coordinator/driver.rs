@@ -1,0 +1,150 @@
+//! End-to-end drivers for the paper's experiments and the relax workload.
+
+use anyhow::{anyhow, Result};
+
+use crate::interp::Memory;
+use crate::ir::expr::Value;
+use crate::lower::{compile, CompileOptions};
+use crate::runtime::{RelaxXla, XlaRuntime};
+use crate::sim::{simulate, NoSimXla, SimConfig, SimStats};
+use crate::workloads::{bfs, graphgen::CsrGraph, relax};
+
+/// Result of the paper's §III experiment on one graph.
+#[derive(Clone, Debug)]
+pub struct BfsComparison {
+    pub nodes: usize,
+    pub plain_cycles: u64,
+    pub dae_cycles: u64,
+    pub plain_stats: SimStats,
+    pub dae_stats: SimStats,
+}
+
+impl BfsComparison {
+    pub fn reduction(&self) -> f64 {
+        1.0 - self.dae_cycles as f64 / self.plain_cycles as f64
+    }
+}
+
+/// Run the DAE-vs-non-DAE HardCilk comparison (paper §III) on a graph.
+pub fn run_bfs_comparison(graph: &CsrGraph, config: &SimConfig) -> Result<BfsComparison> {
+    let mut cycles = Vec::new();
+    let mut stats = Vec::new();
+    for (src, opts) in [
+        (bfs::BFS_SRC, CompileOptions::no_dae()),
+        (bfs::BFS_DAE_SRC, CompileOptions::standard()),
+    ] {
+        let r = compile("bfs", src, &opts)?;
+        let m = &r.explicit;
+        let mut mem = Memory::new(m);
+        bfs::init_memory(m, &mut mem, graph)?;
+        let (_, mem, s) = simulate(m, mem, "visit", &[Value::I64(0)], config, &mut NoSimXla)?;
+        bfs::check_all_visited(m, &mem, graph)?;
+        cycles.push(s.cycles);
+        stats.push(s);
+    }
+    let dae_stats = stats.pop().unwrap();
+    let plain_stats = stats.pop().unwrap();
+    Ok(BfsComparison {
+        nodes: graph.nodes(),
+        plain_cycles: cycles[0],
+        dae_cycles: cycles[1],
+        plain_stats,
+        dae_stats,
+    })
+}
+
+/// Result of a relax end-to-end run on the simulator with the XLA PE.
+#[derive(Clone, Debug)]
+pub struct RelaxRun {
+    pub nodes_expanded: u64,
+    pub cycles: u64,
+    pub xla_batches: u64,
+    /// Sum of final feature values (fingerprint for equivalence checks).
+    pub feat_checksum: f64,
+}
+
+/// Compile + simulate the relax workload with the AOT XLA datapath.
+/// `runtime` must have the relax artifacts loaded (`make artifacts`).
+pub fn run_relax_sim(
+    runtime: XlaRuntime,
+    graph: &CsrGraph,
+    seed: u64,
+    config: &SimConfig,
+) -> Result<RelaxRun> {
+    let r = compile("relax", relax::RELAX_SRC, &CompileOptions::no_dae())?;
+    let m = &r.explicit;
+    let mut mem = Memory::new(m);
+    relax::init_memory(m, &mut mem, graph, seed)?;
+    let mut xla = RelaxXla::new(runtime, m, seed)?;
+    let (_, mem, stats) = simulate(m, mem, "expand", &[Value::I64(0)], config, &mut xla)?;
+    let work = mem.dump_i64(
+        m.global_by_name("work_done")
+            .ok_or_else(|| anyhow!("no work_done global"))?,
+    )[0] as u64;
+    let feat = mem.dump_f32(m.global_by_name("feat").unwrap());
+    Ok(RelaxRun {
+        nodes_expanded: work,
+        cycles: stats.cycles,
+        xla_batches: stats.xla_batches,
+        feat_checksum: feat.iter().map(|&v| v as f64).sum(),
+    })
+}
+
+/// The same relax run with the scalar reference datapath (no XLA) — used
+/// to verify the batched path end to end.
+pub fn run_relax_scalar(
+    graph: &CsrGraph,
+    seed: u64,
+    config: &SimConfig,
+) -> Result<RelaxRun> {
+    let r = compile("relax", relax::RELAX_SRC, &CompileOptions::no_dae())?;
+    let m = &r.explicit;
+    let mut mem = Memory::new(m);
+    relax::init_memory(m, &mut mem, graph, seed)?;
+
+    /// Scalar datapath over simulator memory (reference mode).
+    struct InlineScalar {
+        w: Vec<f32>,
+        b: Vec<f32>,
+        feat: crate::ir::GlobalId,
+    }
+    impl crate::sim::SimXla for InlineScalar {
+        fn exec_batch(
+            &mut self,
+            _name: &str,
+            batch: &[Vec<Value>],
+            memory: &mut Memory,
+        ) -> Result<Vec<Value>> {
+            let f = relax::F;
+            batch
+                .iter()
+                .map(|args| {
+                    let n = args[0].as_i64() as usize;
+                    let x: Vec<f32> = (0..f)
+                        .map(|j| memory.load(self.feat, (n * f + j) as i64).map(|v| v.as_f32()))
+                        .collect::<Result<_>>()?;
+                    let (y, score) = relax::relax_ref(&x, &self.w, &self.b);
+                    for (j, &v) in y.iter().enumerate() {
+                        memory.store(self.feat, (n * f + j) as i64, Value::F32(v))?;
+                    }
+                    Ok(Value::I64((score * 1000.0) as i64))
+                })
+                .collect()
+        }
+    }
+    let (w, b) = relax::weights(seed);
+    let mut xla = InlineScalar {
+        w,
+        b,
+        feat: m.global_by_name("feat").unwrap(),
+    };
+    let (_, mem, stats) = simulate(m, mem, "expand", &[Value::I64(0)], config, &mut xla)?;
+    let work = mem.dump_i64(m.global_by_name("work_done").unwrap())[0] as u64;
+    let feat = mem.dump_f32(m.global_by_name("feat").unwrap());
+    Ok(RelaxRun {
+        nodes_expanded: work,
+        cycles: stats.cycles,
+        xla_batches: stats.xla_batches,
+        feat_checksum: feat.iter().map(|&v| v as f64).sum(),
+    })
+}

@@ -1,0 +1,7 @@
+//! The coordinator: end-to-end drivers gluing compiler, runtimes,
+//! simulator, backends and the XLA batcher together. This is what the CLI
+//! (`rust/src/main.rs`), the examples and the benches call.
+
+pub mod driver;
+
+pub use driver::{run_bfs_comparison, BfsComparison, RelaxRun};

@@ -1,0 +1,229 @@
+//! Abstract syntax tree for Cilk-C (mirrors what Bombyx consumes from the
+//! OpenCilk Clang AST — paper Fig. 3, stage 1).
+
+use super::diag::Span;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Type {
+    Int,
+    Float,
+    Bool,
+    Void,
+}
+
+impl Type {
+    pub fn name(self) -> &'static str {
+        match self {
+            Type::Int => "int",
+            Type::Float => "float",
+            Type::Bool => "bool",
+            Type::Void => "void",
+        }
+    }
+
+    /// Width in bits when stored in a closure field / memory word.
+    pub fn bits(self) -> u32 {
+        match self {
+            Type::Int => 64,
+            Type::Float => 32,
+            Type::Bool => 8,
+            Type::Void => 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub globals: Vec<GlobalDecl>,
+    pub externs: Vec<ExternDecl>,
+    pub funcs: Vec<FuncDef>,
+}
+
+/// `global int adj[1024];` — a shared memory array (models HBM on FPGA).
+#[derive(Clone, Debug)]
+pub struct GlobalDecl {
+    pub name: String,
+    pub ty: Type,
+    /// Declared element count. `global int a[];` leaves it to the driver.
+    pub size: Option<u64>,
+    pub span: Span,
+}
+
+/// `extern xla int relax(int n);` — a task type executed by the AOT-compiled
+/// XLA PE datapath instead of a scalar PE (DESIGN.md §Hardware-Adaptation).
+#[derive(Clone, Debug)]
+pub struct ExternDecl {
+    pub name: String,
+    pub ret: Type,
+    pub params: Vec<Param>,
+    pub span: Span,
+}
+
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub ty: Type,
+    pub span: Span,
+}
+
+#[derive(Clone, Debug)]
+pub struct FuncDef {
+    pub name: String,
+    pub ret: Type,
+    pub params: Vec<Param>,
+    pub body: Block,
+    pub span: Span,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Block {
+    pub stmts: Vec<Stmt>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Stmt {
+    pub kind: StmtKind,
+    /// `#pragma bombyx dae` attached to this statement.
+    pub dae: bool,
+    pub span: Span,
+}
+
+#[derive(Clone, Debug)]
+pub enum StmtKind {
+    /// `int x = <init>;` (init optional → zero-initialized)
+    Decl { ty: Type, name: String, init: Option<Initializer> },
+    /// `x = <init>;`
+    Assign { name: String, value: Initializer },
+    /// `arr[idx] = value;` — store to a global array.
+    Store { arr: String, index: Expr, value: Expr },
+    /// `cilk_spawn f(args);` — child result (if any) is discarded, but the
+    /// spawn still participates in the enclosing sync.
+    VoidSpawn(Call),
+    /// `cilk_sync;`
+    Sync,
+    If { cond: Expr, then: Box<Stmt>, els: Option<Box<Stmt>> },
+    While { cond: Expr, body: Box<Stmt> },
+    For {
+        init: Option<Box<Stmt>>,
+        cond: Option<Expr>,
+        step: Option<Box<Stmt>>,
+        body: Box<Stmt>,
+    },
+    Return(Option<Expr>),
+    /// `f(args);` — statement-level call (leaf function or builtin such as
+    /// `atomic_add`).
+    ExprCall(Call),
+    Block(Block),
+}
+
+/// RHS of a declaration or assignment.
+#[derive(Clone, Debug)]
+pub enum Initializer {
+    Expr(Expr),
+    /// `cilk_spawn f(args)` — value-producing spawn.
+    Spawn(Call),
+    /// Direct (sequential) call to a leaf function: `x = helper(a, b);`
+    Call(Call),
+}
+
+#[derive(Clone, Debug)]
+pub struct Call {
+    pub name: String,
+    pub args: Vec<Expr>,
+    pub span: Span,
+}
+
+#[derive(Clone, Debug)]
+pub struct Expr {
+    pub kind: ExprKind,
+    pub span: Span,
+}
+
+#[derive(Clone, Debug)]
+pub enum ExprKind {
+    IntLit(i64),
+    FloatLit(f32),
+    BoolLit(bool),
+    Var(String),
+    /// `arr[idx]` — load from a global array. This is *the* memory-access
+    /// primitive the DAE optimization targets.
+    Load { arr: String, index: Box<Expr> },
+    /// Pure builtin call inside an expression (`min`, `max`, `abs`).
+    Builtin { name: String, args: Vec<Expr> },
+    Binary { op: BinOp, lhs: Box<Expr>, rhs: Box<Expr> },
+    Unary { op: UnOp, operand: Box<Expr> },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Shl,
+    Shr,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    And, // logical &&
+    Or,  // logical ||
+    BitAnd,
+    BitOr,
+    BitXor,
+}
+
+impl BinOp {
+    pub fn symbol(self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Rem => "%",
+            BinOp::Shl => "<<",
+            BinOp::Shr => ">>",
+            BinOp::Lt => "<",
+            BinOp::Le => "<=",
+            BinOp::Gt => ">",
+            BinOp::Ge => ">=",
+            BinOp::Eq => "==",
+            BinOp::Ne => "!=",
+            BinOp::And => "&&",
+            BinOp::Or => "||",
+            BinOp::BitAnd => "&",
+            BinOp::BitOr => "|",
+            BinOp::BitXor => "^",
+        }
+    }
+
+    pub fn is_comparison(self) -> bool {
+        matches!(self, BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge | BinOp::Eq | BinOp::Ne)
+    }
+
+    pub fn is_logical(self) -> bool {
+        matches!(self, BinOp::And | BinOp::Or)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+/// Names of expression-level builtins.
+pub const EXPR_BUILTINS: &[&str] = &["min", "max", "abs"];
+/// Names of statement-level builtins.
+pub const STMT_BUILTINS: &[&str] = &["atomic_add"];
+
+pub fn is_expr_builtin(name: &str) -> bool {
+    EXPR_BUILTINS.contains(&name)
+}
+
+pub fn is_stmt_builtin(name: &str) -> bool {
+    STMT_BUILTINS.contains(&name)
+}

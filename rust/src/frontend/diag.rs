@@ -1,0 +1,135 @@
+//! Source management and diagnostics with byte-span → line/column rendering.
+
+/// A byte range into the source text.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct Span {
+    pub start: u32,
+    pub end: u32,
+}
+
+impl Span {
+    pub fn new(start: usize, end: usize) -> Span {
+        Span { start: start as u32, end: end as u32 }
+    }
+
+    pub fn join(self, other: Span) -> Span {
+        Span { start: self.start.min(other.start), end: self.end.max(other.end) }
+    }
+}
+
+/// A named source file with precomputed line starts.
+#[derive(Clone, Debug)]
+pub struct Source {
+    pub name: String,
+    pub text: String,
+    line_starts: Vec<u32>,
+}
+
+impl Source {
+    pub fn new(name: &str, text: &str) -> Source {
+        let mut line_starts = vec![0u32];
+        for (i, b) in text.bytes().enumerate() {
+            if b == b'\n' {
+                line_starts.push(i as u32 + 1);
+            }
+        }
+        Source { name: name.to_string(), text: text.to_string(), line_starts }
+    }
+
+    /// 1-based (line, column) of a byte offset.
+    pub fn line_col(&self, offset: u32) -> (usize, usize) {
+        let line = match self.line_starts.binary_search(&offset) {
+            Ok(idx) => idx,
+            Err(idx) => idx - 1,
+        };
+        let col = offset - self.line_starts[line];
+        (line + 1, col as usize + 1)
+    }
+
+    /// The text of a 1-based line, without trailing newline.
+    pub fn line_text(&self, line: usize) -> &str {
+        let start = self.line_starts[line - 1] as usize;
+        let end = self
+            .line_starts
+            .get(line)
+            .map(|&e| e as usize)
+            .unwrap_or(self.text.len());
+        self.text[start..end].trim_end_matches('\n')
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+/// A compiler diagnostic tied to a span.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    pub message: String,
+    pub span: Span,
+}
+
+impl Diagnostic {
+    pub fn error(message: impl Into<String>, span: Span) -> Diagnostic {
+        Diagnostic { severity: Severity::Error, message: message.into(), span }
+    }
+
+    pub fn warning(message: impl Into<String>, span: Span) -> Diagnostic {
+        Diagnostic { severity: Severity::Warning, message: message.into(), span }
+    }
+
+    /// Render with a source snippet and caret underline.
+    pub fn render(&self, source: &Source) -> String {
+        let (line, col) = source.line_col(self.span.start);
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        let line_text = source.line_text(line);
+        let width = ((self.span.end.saturating_sub(self.span.start)) as usize).max(1);
+        let caret_width = width.min(line_text.len().saturating_sub(col - 1).max(1));
+        format!(
+            "{sev}: {msg}\n  --> {name}:{line}:{col}\n   |\n   | {line_text}\n   | {pad}{carets}",
+            msg = self.message,
+            name = source.name,
+            pad = " ".repeat(col - 1),
+            carets = "^".repeat(caret_width),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_col_mapping() {
+        let s = Source::new("t.cilk", "abc\ndef\n\nx");
+        assert_eq!(s.line_col(0), (1, 1));
+        assert_eq!(s.line_col(2), (1, 3));
+        assert_eq!(s.line_col(4), (2, 1));
+        assert_eq!(s.line_col(8), (3, 1)); // the empty line
+        assert_eq!(s.line_col(9), (4, 1));
+    }
+
+    #[test]
+    fn line_text_extraction() {
+        let s = Source::new("t", "first\nsecond\nthird");
+        assert_eq!(s.line_text(1), "first");
+        assert_eq!(s.line_text(2), "second");
+        assert_eq!(s.line_text(3), "third");
+    }
+
+    #[test]
+    fn render_has_caret() {
+        let s = Source::new("t.cilk", "int x = $;");
+        let d = Diagnostic::error("unexpected character", Span::new(8, 9));
+        let r = d.render(&s);
+        assert!(r.contains("t.cilk:1:9"));
+        assert!(r.contains("int x = $;"));
+        assert!(r.lines().last().unwrap().trim_end().ends_with('^'));
+    }
+}

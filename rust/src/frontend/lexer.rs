@@ -1,0 +1,359 @@
+//! Hand-written lexer for Cilk-C.
+
+use super::diag::{Diagnostic, Span};
+use super::token::{Tok, Token};
+
+pub fn lex(text: &str) -> Result<Vec<Token>, Diagnostic> {
+    Lexer { bytes: text.as_bytes(), pos: 0 }.run()
+}
+
+struct Lexer<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Lexer<'a> {
+    fn run(mut self) -> Result<Vec<Token>, Diagnostic> {
+        let mut out = Vec::new();
+        loop {
+            self.skip_trivia()?;
+            let start = self.pos;
+            let Some(b) = self.peek() else {
+                out.push(Token { tok: Tok::Eof, span: Span::new(start, start) });
+                return Ok(out);
+            };
+            let tok = match b {
+                b'#' => self.lex_pragma()?,
+                b'0'..=b'9' => self.lex_number()?,
+                b'a'..=b'z' | b'A'..=b'Z' | b'_' => self.lex_word(),
+                _ => self.lex_punct()?,
+            };
+            out.push(Token { tok, span: Span::new(start, self.pos) });
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn peek2(&self) -> Option<u8> {
+        self.bytes.get(self.pos + 1).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_trivia(&mut self) -> Result<(), Diagnostic> {
+        loop {
+            match self.peek() {
+                Some(b' ' | b'\t' | b'\r' | b'\n') => {
+                    self.pos += 1;
+                }
+                Some(b'/') if self.peek2() == Some(b'/') => {
+                    while let Some(b) = self.peek() {
+                        if b == b'\n' {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                }
+                Some(b'/') if self.peek2() == Some(b'*') => {
+                    let start = self.pos;
+                    self.pos += 2;
+                    loop {
+                        match (self.peek(), self.peek2()) {
+                            (Some(b'*'), Some(b'/')) => {
+                                self.pos += 2;
+                                break;
+                            }
+                            (Some(_), _) => self.pos += 1,
+                            (None, _) => {
+                                return Err(Diagnostic::error(
+                                    "unterminated block comment",
+                                    Span::new(start, self.pos),
+                                ))
+                            }
+                        }
+                    }
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+
+    /// `#pragma bombyx dae` — whole directive becomes one token. Unknown
+    /// pragmas are an error (silently ignoring optimization pragmas is how
+    /// performance bugs hide).
+    fn lex_pragma(&mut self) -> Result<Tok, Diagnostic> {
+        let start = self.pos;
+        let line_end = self.bytes[self.pos..]
+            .iter()
+            .position(|&b| b == b'\n')
+            .map(|i| self.pos + i)
+            .unwrap_or(self.bytes.len());
+        let line = std::str::from_utf8(&self.bytes[self.pos..line_end]).unwrap_or("");
+        let words: Vec<&str> = line.split_whitespace().collect();
+        let ok = (words.first() == Some(&"#pragma")
+            && words.get(1) == Some(&"bombyx")
+            && words.get(2) == Some(&"dae")
+            && words.len() == 3)
+            || (words.first() == Some(&"#PRAGMA")
+                && words.get(1) == Some(&"BOMBYX")
+                && words.get(2) == Some(&"DAE")
+                && words.len() == 3);
+        if !ok {
+            return Err(Diagnostic::error(
+                format!("unknown pragma `{line}` (expected `#pragma bombyx dae`)"),
+                Span::new(start, line_end),
+            ));
+        }
+        self.pos = line_end;
+        Ok(Tok::PragmaDae)
+    }
+
+    fn lex_number(&mut self) -> Result<Tok, Diagnostic> {
+        let start = self.pos;
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        let mut is_float = false;
+        if self.peek() == Some(b'.') && matches!(self.peek2(), Some(b'0'..=b'9')) {
+            is_float = true;
+            self.pos += 1;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            is_float = true;
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+        }
+        if self.peek() == Some(b'f') {
+            is_float = true;
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .unwrap()
+            .trim_end_matches('f');
+        if is_float {
+            text.parse::<f32>()
+                .map(Tok::Float)
+                .map_err(|e| Diagnostic::error(format!("bad float literal: {e}"), Span::new(start, self.pos)))
+        } else {
+            text.parse::<i64>()
+                .map(Tok::Int)
+                .map_err(|e| Diagnostic::error(format!("bad integer literal: {e}"), Span::new(start, self.pos)))
+        }
+    }
+
+    fn lex_word(&mut self) -> Tok {
+        let start = self.pos;
+        while matches!(self.peek(), Some(b'a'..=b'z' | b'A'..=b'Z' | b'0'..=b'9' | b'_')) {
+            self.pos += 1;
+        }
+        let word = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        match word {
+            "int" => Tok::KwInt,
+            "float" => Tok::KwFloat,
+            "bool" => Tok::KwBool,
+            "void" => Tok::KwVoid,
+            "global" => Tok::KwGlobal,
+            "extern" => Tok::KwExtern,
+            "xla" => Tok::KwXla,
+            "if" => Tok::KwIf,
+            "else" => Tok::KwElse,
+            "while" => Tok::KwWhile,
+            "for" => Tok::KwFor,
+            "return" => Tok::KwReturn,
+            "true" => Tok::KwTrue,
+            "false" => Tok::KwFalse,
+            "cilk_spawn" => Tok::KwSpawn,
+            "cilk_sync" => Tok::KwSync,
+            _ => Tok::Ident(word.to_string()),
+        }
+    }
+
+    fn lex_punct(&mut self) -> Result<Tok, Diagnostic> {
+        let start = self.pos;
+        let b = self.bump().unwrap();
+        let tok = match b {
+            b'(' => Tok::LParen,
+            b')' => Tok::RParen,
+            b'{' => Tok::LBrace,
+            b'}' => Tok::RBrace,
+            b'[' => Tok::LBracket,
+            b']' => Tok::RBracket,
+            b';' => Tok::Semi,
+            b',' => Tok::Comma,
+            b'+' => Tok::Plus,
+            b'-' => Tok::Minus,
+            b'*' => Tok::Star,
+            b'/' => Tok::Slash,
+            b'%' => Tok::Percent,
+            b'^' => Tok::Caret,
+            b'=' => {
+                if self.peek() == Some(b'=') {
+                    self.pos += 1;
+                    Tok::EqEq
+                } else {
+                    Tok::Assign
+                }
+            }
+            b'!' => {
+                if self.peek() == Some(b'=') {
+                    self.pos += 1;
+                    Tok::NotEq
+                } else {
+                    Tok::Not
+                }
+            }
+            b'<' => match self.peek() {
+                Some(b'=') => {
+                    self.pos += 1;
+                    Tok::Le
+                }
+                Some(b'<') => {
+                    self.pos += 1;
+                    Tok::Shl
+                }
+                _ => Tok::Lt,
+            },
+            b'>' => match self.peek() {
+                Some(b'=') => {
+                    self.pos += 1;
+                    Tok::Ge
+                }
+                Some(b'>') => {
+                    self.pos += 1;
+                    Tok::Shr
+                }
+                _ => Tok::Gt,
+            },
+            b'&' => {
+                if self.peek() == Some(b'&') {
+                    self.pos += 1;
+                    Tok::AndAnd
+                } else {
+                    Tok::Amp
+                }
+            }
+            b'|' => {
+                if self.peek() == Some(b'|') {
+                    self.pos += 1;
+                    Tok::OrOr
+                } else {
+                    Tok::Pipe
+                }
+            }
+            _ => {
+                return Err(Diagnostic::error(
+                    format!("unexpected character `{}`", b as char),
+                    Span::new(start, self.pos),
+                ))
+            }
+        };
+        Ok(tok)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(text: &str) -> Vec<Tok> {
+        lex(text).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn keywords_and_idents() {
+        assert_eq!(
+            toks("int fib cilk_spawn cilk_sync xfib"),
+            vec![
+                Tok::KwInt,
+                Tok::Ident("fib".into()),
+                Tok::KwSpawn,
+                Tok::KwSync,
+                Tok::Ident("xfib".into()),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(
+            toks("42 3.5 1e3 2.5f"),
+            vec![Tok::Int(42), Tok::Float(3.5), Tok::Float(1000.0), Tok::Float(2.5), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn two_char_operators() {
+        assert_eq!(
+            toks("<= >= == != && || << >> < >"),
+            vec![
+                Tok::Le,
+                Tok::Ge,
+                Tok::EqEq,
+                Tok::NotEq,
+                Tok::AndAnd,
+                Tok::OrOr,
+                Tok::Shl,
+                Tok::Shr,
+                Tok::Lt,
+                Tok::Gt,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_skipped() {
+        assert_eq!(
+            toks("a // line\n /* block\n spans */ b"),
+            vec![Tok::Ident("a".into()), Tok::Ident("b".into()), Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn pragma_dae() {
+        assert_eq!(toks("#pragma bombyx dae\nx"), vec![Tok::PragmaDae, Tok::Ident("x".into()), Tok::Eof]);
+        // Paper's spelling from §III.
+        assert_eq!(toks("#PRAGMA BOMBYX DAE\n"), vec![Tok::PragmaDae, Tok::Eof]);
+    }
+
+    #[test]
+    fn unknown_pragma_rejected() {
+        assert!(lex("#pragma unroll 4\n").is_err());
+    }
+
+    #[test]
+    fn unexpected_char_rejected() {
+        let err = lex("int $x;").unwrap_err();
+        assert!(err.message.contains("unexpected character"));
+    }
+
+    #[test]
+    fn spans_cover_tokens() {
+        let tokens = lex("ab + cd").unwrap();
+        assert_eq!(tokens[0].span, Span::new(0, 2));
+        assert_eq!(tokens[1].span, Span::new(3, 4));
+        assert_eq!(tokens[2].span, Span::new(5, 7));
+    }
+
+    #[test]
+    fn unterminated_block_comment() {
+        assert!(lex("/* never ends").is_err());
+    }
+}

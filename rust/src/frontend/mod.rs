@@ -1,0 +1,50 @@
+//! Cilk-C frontend.
+//!
+//! The paper consumes OpenCilk C/C++ through the OpenCilk Clang AST. That
+//! frontend is a multi-megaline dependency we cannot (and need not) vendor;
+//! what Bombyx actually requires is an AST for the task-parallel kernel
+//! functions. **Cilk-C** is a C subset with exactly the constructs the
+//! paper's examples use:
+//!
+//! - scalar types `int` (i64), `float` (f32), `bool`, `void`
+//! - `global <ty> name[size];` — shared memory arrays (the FPGA's HBM)
+//! - functions, `if`/`else`, `while`, `for`, `return`, blocks
+//! - `cilk_spawn f(args)` (value or void), `cilk_sync`
+//! - `extern xla <ty> f(params);` — a task type whose body is the AOT
+//!   XLA-compiled numeric PE datapath (see DESIGN.md §Hardware-Adaptation)
+//! - `#pragma bombyx dae` — the paper's decoupled access-execute pragma
+//! - statement-level builtins: `atomic_add(arr, idx, val)`,
+//!   expression builtins: `min`, `max`, `abs`
+//!
+//! Pipeline: [`lexer`] → [`parser`] → [`sema`] → `crate::lower::ast_to_cfg`.
+
+pub mod ast;
+pub mod diag;
+pub mod lexer;
+pub mod parser;
+pub mod sema;
+pub mod token;
+
+pub use ast::Program;
+pub use diag::{Diagnostic, Source};
+
+use anyhow::{bail, Result};
+
+/// Parse and semantically check a Cilk-C compilation unit.
+pub fn parse_and_check(name: &str, text: &str) -> Result<(Program, Source)> {
+    let source = Source::new(name, text);
+    let tokens = match lexer::lex(text) {
+        Ok(t) => t,
+        Err(d) => bail!("{}", d.render(&source)),
+    };
+    let program = match parser::parse(tokens) {
+        Ok(p) => p,
+        Err(d) => bail!("{}", d.render(&source)),
+    };
+    let diags = sema::check(&program);
+    if !diags.is_empty() {
+        let rendered: Vec<String> = diags.iter().map(|d| d.render(&source)).collect();
+        bail!("{}", rendered.join("\n"));
+    }
+    Ok((program, source))
+}

@@ -1,0 +1,646 @@
+//! Recursive-descent parser for Cilk-C.
+
+use super::ast::*;
+use super::diag::{Diagnostic, Span};
+use super::token::{Tok, Token};
+
+pub fn parse(tokens: Vec<Token>) -> Result<Program, Diagnostic> {
+    Parser { tokens, pos: 0 }.program()
+}
+
+struct Parser {
+    tokens: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.tokens[self.pos].tok
+    }
+
+    fn peek_at(&self, offset: usize) -> &Tok {
+        let idx = (self.pos + offset).min(self.tokens.len() - 1);
+        &self.tokens[idx].tok
+    }
+
+    fn span(&self) -> Span {
+        self.tokens[self.pos].span
+    }
+
+    fn prev_span(&self) -> Span {
+        self.tokens[self.pos.saturating_sub(1)].span
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.tokens[self.pos].tok.clone();
+        if self.pos + 1 < self.tokens.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat(&mut self, expected: &Tok) -> Result<(), Diagnostic> {
+        if self.peek() == expected {
+            self.bump();
+            Ok(())
+        } else {
+            Err(Diagnostic::error(
+                format!("expected {}, found {}", expected.describe(), self.peek().describe()),
+                self.span(),
+            ))
+        }
+    }
+
+    fn eat_ident(&mut self) -> Result<(String, Span), Diagnostic> {
+        let span = self.span();
+        match self.bump() {
+            Tok::Ident(name) => Ok((name, span)),
+            other => Err(Diagnostic::error(
+                format!("expected identifier, found {}", other.describe()),
+                span,
+            )),
+        }
+    }
+
+    fn try_type(&mut self) -> Option<Type> {
+        let ty = match self.peek() {
+            Tok::KwInt => Type::Int,
+            Tok::KwFloat => Type::Float,
+            Tok::KwBool => Type::Bool,
+            Tok::KwVoid => Type::Void,
+            _ => return None,
+        };
+        self.bump();
+        Some(ty)
+    }
+
+    fn eat_type(&mut self) -> Result<Type, Diagnostic> {
+        let span = self.span();
+        let found = self.peek().describe();
+        self.try_type()
+            .ok_or_else(|| Diagnostic::error(format!("expected a type, found {found}"), span))
+    }
+
+    // ---- items -----------------------------------------------------------
+
+    fn program(&mut self) -> Result<Program, Diagnostic> {
+        let mut program = Program { globals: Vec::new(), externs: Vec::new(), funcs: Vec::new() };
+        while *self.peek() != Tok::Eof {
+            match self.peek() {
+                Tok::KwGlobal => program.globals.push(self.global_decl()?),
+                Tok::KwExtern => program.externs.push(self.extern_decl()?),
+                _ => program.funcs.push(self.func_def()?),
+            }
+        }
+        Ok(program)
+    }
+
+    fn global_decl(&mut self) -> Result<GlobalDecl, Diagnostic> {
+        let start = self.span();
+        self.eat(&Tok::KwGlobal)?;
+        let ty = self.eat_type()?;
+        let (name, _) = self.eat_ident()?;
+        self.eat(&Tok::LBracket)?;
+        let size = match self.peek() {
+            Tok::Int(v) => {
+                let v = *v;
+                if v < 0 {
+                    return Err(Diagnostic::error("global array size must be non-negative", self.span()));
+                }
+                self.bump();
+                Some(v as u64)
+            }
+            _ => None,
+        };
+        self.eat(&Tok::RBracket)?;
+        self.eat(&Tok::Semi)?;
+        Ok(GlobalDecl { name, ty, size, span: start.join(self.prev_span()) })
+    }
+
+    fn extern_decl(&mut self) -> Result<ExternDecl, Diagnostic> {
+        let start = self.span();
+        self.eat(&Tok::KwExtern)?;
+        self.eat(&Tok::KwXla)?;
+        let ret = self.eat_type()?;
+        let (name, _) = self.eat_ident()?;
+        let params = self.param_list()?;
+        self.eat(&Tok::Semi)?;
+        Ok(ExternDecl { name, ret, params, span: start.join(self.prev_span()) })
+    }
+
+    fn func_def(&mut self) -> Result<FuncDef, Diagnostic> {
+        let start = self.span();
+        let ret = self.eat_type().map_err(|_| {
+            Diagnostic::error(
+                format!(
+                    "expected `global`, `extern`, or a function definition; found {}",
+                    self.peek().describe()
+                ),
+                self.span(),
+            )
+        })?;
+        let (name, _) = self.eat_ident()?;
+        let params = self.param_list()?;
+        let body = self.block()?;
+        Ok(FuncDef { name, ret, params, body, span: start.join(self.prev_span()) })
+    }
+
+    fn param_list(&mut self) -> Result<Vec<Param>, Diagnostic> {
+        self.eat(&Tok::LParen)?;
+        let mut params = Vec::new();
+        if *self.peek() != Tok::RParen {
+            loop {
+                let start = self.span();
+                let ty = self.eat_type()?;
+                let (name, _) = self.eat_ident()?;
+                params.push(Param { name, ty, span: start.join(self.prev_span()) });
+                if *self.peek() == Tok::Comma {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.eat(&Tok::RParen)?;
+        Ok(params)
+    }
+
+    // ---- statements ------------------------------------------------------
+
+    fn block(&mut self) -> Result<Block, Diagnostic> {
+        self.eat(&Tok::LBrace)?;
+        let mut stmts = Vec::new();
+        while *self.peek() != Tok::RBrace {
+            if *self.peek() == Tok::Eof {
+                return Err(Diagnostic::error("unterminated block (missing `}`)", self.span()));
+            }
+            stmts.push(self.stmt()?);
+        }
+        self.eat(&Tok::RBrace)?;
+        Ok(Block { stmts })
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, Diagnostic> {
+        let mut dae = false;
+        let start = self.span();
+        while *self.peek() == Tok::PragmaDae {
+            dae = true;
+            self.bump();
+        }
+        let mut stmt = self.base_stmt()?;
+        stmt.dae = dae;
+        stmt.span = start.join(stmt.span);
+        Ok(stmt)
+    }
+
+    fn base_stmt(&mut self) -> Result<Stmt, Diagnostic> {
+        let start = self.span();
+        let kind = match self.peek().clone() {
+            Tok::LBrace => StmtKind::Block(self.block()?),
+            Tok::KwSync => {
+                self.bump();
+                self.eat(&Tok::Semi)?;
+                StmtKind::Sync
+            }
+            Tok::KwReturn => {
+                self.bump();
+                let value = if *self.peek() == Tok::Semi { None } else { Some(self.expr()?) };
+                self.eat(&Tok::Semi)?;
+                StmtKind::Return(value)
+            }
+            Tok::KwIf => {
+                self.bump();
+                self.eat(&Tok::LParen)?;
+                let cond = self.expr()?;
+                self.eat(&Tok::RParen)?;
+                let then = Box::new(self.stmt()?);
+                let els = if *self.peek() == Tok::KwElse {
+                    self.bump();
+                    Some(Box::new(self.stmt()?))
+                } else {
+                    None
+                };
+                StmtKind::If { cond, then, els }
+            }
+            Tok::KwWhile => {
+                self.bump();
+                self.eat(&Tok::LParen)?;
+                let cond = self.expr()?;
+                self.eat(&Tok::RParen)?;
+                let body = Box::new(self.stmt()?);
+                StmtKind::While { cond, body }
+            }
+            Tok::KwFor => {
+                self.bump();
+                self.eat(&Tok::LParen)?;
+                let init = if *self.peek() == Tok::Semi {
+                    self.bump();
+                    None
+                } else {
+                    Some(Box::new(self.simple_stmt()?))
+                };
+                let cond = if *self.peek() == Tok::Semi { None } else { Some(self.expr()?) };
+                self.eat(&Tok::Semi)?;
+                let step = if *self.peek() == Tok::RParen {
+                    None
+                } else {
+                    Some(Box::new(self.simple_stmt_no_semi()?))
+                };
+                self.eat(&Tok::RParen)?;
+                let body = Box::new(self.stmt()?);
+                StmtKind::For { init, cond, step, body }
+            }
+            Tok::KwSpawn => {
+                self.bump();
+                let call = self.call_after_name()?;
+                self.eat(&Tok::Semi)?;
+                StmtKind::VoidSpawn(call)
+            }
+            Tok::KwInt | Tok::KwFloat | Tok::KwBool => {
+                let ty = self.try_type().unwrap();
+                let (name, _) = self.eat_ident()?;
+                let init = if *self.peek() == Tok::Assign {
+                    self.bump();
+                    Some(self.initializer()?)
+                } else {
+                    None
+                };
+                self.eat(&Tok::Semi)?;
+                StmtKind::Decl { ty, name, init }
+            }
+            Tok::Ident(_) => {
+                let kind = self.assign_or_call()?;
+                self.eat(&Tok::Semi)?;
+                kind
+            }
+            other => {
+                return Err(Diagnostic::error(
+                    format!("expected a statement, found {}", other.describe()),
+                    start,
+                ))
+            }
+        };
+        Ok(Stmt { kind, dae: false, span: start.join(self.prev_span()) })
+    }
+
+    /// A statement allowed in `for` init position (declaration or
+    /// assignment), consuming the trailing `;`.
+    fn simple_stmt(&mut self) -> Result<Stmt, Diagnostic> {
+        let start = self.span();
+        let kind = match self.peek() {
+            Tok::KwInt | Tok::KwFloat | Tok::KwBool => {
+                let ty = self.try_type().unwrap();
+                let (name, _) = self.eat_ident()?;
+                self.eat(&Tok::Assign)?;
+                let init = Some(self.initializer()?);
+                StmtKind::Decl { ty, name, init }
+            }
+            _ => self.assign_or_call()?,
+        };
+        self.eat(&Tok::Semi)?;
+        Ok(Stmt { kind, dae: false, span: start.join(self.prev_span()) })
+    }
+
+    /// `for` step position: assignment or call without `;`.
+    fn simple_stmt_no_semi(&mut self) -> Result<Stmt, Diagnostic> {
+        let start = self.span();
+        let kind = self.assign_or_call()?;
+        Ok(Stmt { kind, dae: false, span: start.join(self.prev_span()) })
+    }
+
+    /// Disambiguate `x = ...`, `arr[i] = ...`, `f(...)` after seeing an
+    /// identifier.
+    fn assign_or_call(&mut self) -> Result<StmtKind, Diagnostic> {
+        let (name, name_span) = self.eat_ident()?;
+        match self.peek() {
+            Tok::Assign => {
+                self.bump();
+                let value = self.initializer()?;
+                Ok(StmtKind::Assign { name, value })
+            }
+            Tok::LBracket => {
+                self.bump();
+                let index = self.expr()?;
+                self.eat(&Tok::RBracket)?;
+                self.eat(&Tok::Assign)?;
+                let value = self.expr()?;
+                Ok(StmtKind::Store { arr: name, index, value })
+            }
+            Tok::LParen => {
+                let args = self.arg_list()?;
+                Ok(StmtKind::ExprCall(Call {
+                    name,
+                    args,
+                    span: name_span.join(self.prev_span()),
+                }))
+            }
+            other => Err(Diagnostic::error(
+                format!("expected `=`, `[`, or `(` after identifier, found {}", other.describe()),
+                self.span(),
+            )),
+        }
+    }
+
+    fn initializer(&mut self) -> Result<Initializer, Diagnostic> {
+        if *self.peek() == Tok::KwSpawn {
+            self.bump();
+            let call = self.call_after_name()?;
+            return Ok(Initializer::Spawn(call));
+        }
+        // `x = f(a, b);` where f is a user function → Initializer::Call;
+        // builtins stay in the expression grammar.
+        if let Tok::Ident(name) = self.peek().clone() {
+            if *self.peek_at(1) == Tok::LParen && !is_expr_builtin(&name) {
+                let (name, name_span) = self.eat_ident()?;
+                let args = self.arg_list()?;
+                let call_span = name_span.join(self.prev_span());
+                if self.peek_binop().is_some() {
+                    return Err(Diagnostic::error(
+                        format!(
+                            "function call `{name}(...)` is not allowed inside an expression; \
+                             only builtins {EXPR_BUILTINS:?} are. Assign it to a variable \
+                             first (`int t = {name}(...);`)"
+                        ),
+                        call_span,
+                    ));
+                }
+                return Ok(Initializer::Call(Call { name, args, span: call_span }));
+            }
+        }
+        Ok(Initializer::Expr(self.expr()?))
+    }
+
+    fn call_after_name(&mut self) -> Result<Call, Diagnostic> {
+        let (name, name_span) = self.eat_ident()?;
+        let args = self.arg_list()?;
+        Ok(Call { name, args, span: name_span.join(self.prev_span()) })
+    }
+
+    fn arg_list(&mut self) -> Result<Vec<Expr>, Diagnostic> {
+        self.eat(&Tok::LParen)?;
+        let mut args = Vec::new();
+        if *self.peek() != Tok::RParen {
+            loop {
+                args.push(self.expr()?);
+                if *self.peek() == Tok::Comma {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.eat(&Tok::RParen)?;
+        Ok(args)
+    }
+
+    // ---- expressions (precedence climbing) --------------------------------
+
+    fn expr(&mut self) -> Result<Expr, Diagnostic> {
+        self.binary_expr(0)
+    }
+
+    fn binary_expr(&mut self, min_prec: u8) -> Result<Expr, Diagnostic> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let Some((op, prec)) = self.peek_binop() else { break };
+            if prec < min_prec {
+                break;
+            }
+            self.bump();
+            let rhs = self.binary_expr(prec + 1)?;
+            let span = lhs.span.join(rhs.span);
+            lhs = Expr {
+                kind: ExprKind::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) },
+                span,
+            };
+        }
+        Ok(lhs)
+    }
+
+    fn peek_binop(&self) -> Option<(BinOp, u8)> {
+        let (op, prec) = match self.peek() {
+            Tok::OrOr => (BinOp::Or, 1),
+            Tok::AndAnd => (BinOp::And, 2),
+            Tok::Pipe => (BinOp::BitOr, 3),
+            Tok::Caret => (BinOp::BitXor, 4),
+            Tok::Amp => (BinOp::BitAnd, 5),
+            Tok::EqEq => (BinOp::Eq, 6),
+            Tok::NotEq => (BinOp::Ne, 6),
+            Tok::Lt => (BinOp::Lt, 7),
+            Tok::Le => (BinOp::Le, 7),
+            Tok::Gt => (BinOp::Gt, 7),
+            Tok::Ge => (BinOp::Ge, 7),
+            Tok::Shl => (BinOp::Shl, 8),
+            Tok::Shr => (BinOp::Shr, 8),
+            Tok::Plus => (BinOp::Add, 9),
+            Tok::Minus => (BinOp::Sub, 9),
+            Tok::Star => (BinOp::Mul, 10),
+            Tok::Slash => (BinOp::Div, 10),
+            Tok::Percent => (BinOp::Rem, 10),
+            _ => return None,
+        };
+        Some((op, prec))
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr, Diagnostic> {
+        let start = self.span();
+        match self.peek() {
+            Tok::Minus => {
+                self.bump();
+                let operand = self.unary_expr()?;
+                let span = start.join(operand.span);
+                Ok(Expr { kind: ExprKind::Unary { op: UnOp::Neg, operand: Box::new(operand) }, span })
+            }
+            Tok::Not => {
+                self.bump();
+                let operand = self.unary_expr()?;
+                let span = start.join(operand.span);
+                Ok(Expr { kind: ExprKind::Unary { op: UnOp::Not, operand: Box::new(operand) }, span })
+            }
+            _ => self.primary_expr(),
+        }
+    }
+
+    fn primary_expr(&mut self) -> Result<Expr, Diagnostic> {
+        let start = self.span();
+        let kind = match self.bump() {
+            Tok::Int(v) => ExprKind::IntLit(v),
+            Tok::Float(v) => ExprKind::FloatLit(v),
+            Tok::KwTrue => ExprKind::BoolLit(true),
+            Tok::KwFalse => ExprKind::BoolLit(false),
+            Tok::LParen => {
+                let inner = self.expr()?;
+                self.eat(&Tok::RParen)?;
+                return Ok(Expr { kind: inner.kind, span: start.join(self.prev_span()) });
+            }
+            Tok::Ident(name) => match self.peek() {
+                Tok::LBracket => {
+                    self.bump();
+                    let index = self.expr()?;
+                    self.eat(&Tok::RBracket)?;
+                    ExprKind::Load { arr: name, index: Box::new(index) }
+                }
+                Tok::LParen => {
+                    if !is_expr_builtin(&name) {
+                        return Err(Diagnostic::error(
+                            format!(
+                                "function call `{name}(...)` is not allowed inside an \
+                                 expression; only builtins {EXPR_BUILTINS:?} are. Assign it \
+                                 to a variable first (`int t = {name}(...);`)"
+                            ),
+                            start,
+                        ));
+                    }
+                    let args = self.arg_list()?;
+                    ExprKind::Builtin { name, args }
+                }
+                _ => ExprKind::Var(name),
+            },
+            other => {
+                return Err(Diagnostic::error(
+                    format!("expected an expression, found {}", other.describe()),
+                    start,
+                ))
+            }
+        };
+        Ok(Expr { kind, span: start.join(self.prev_span()) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn parse_ok(text: &str) -> Program {
+        parse(lex(text).unwrap()).unwrap_or_else(|d| panic!("{}", d.message))
+    }
+
+    fn parse_err(text: &str) -> Diagnostic {
+        parse(lex(text).unwrap()).unwrap_err()
+    }
+
+    const FIB: &str = "
+        int fib(int n) {
+            if (n < 2)
+                return n;
+            int x = cilk_spawn fib(n - 1);
+            int y = cilk_spawn fib(n - 2);
+            cilk_sync;
+            return x + y;
+        }
+    ";
+
+    #[test]
+    fn parses_paper_fig1_fib() {
+        let p = parse_ok(FIB);
+        assert_eq!(p.funcs.len(), 1);
+        let f = &p.funcs[0];
+        assert_eq!(f.name, "fib");
+        assert_eq!(f.ret, Type::Int);
+        assert_eq!(f.params.len(), 1);
+        assert_eq!(f.body.stmts.len(), 5);
+        assert!(matches!(f.body.stmts[0].kind, StmtKind::If { .. }));
+        assert!(matches!(
+            f.body.stmts[1].kind,
+            StmtKind::Decl { init: Some(Initializer::Spawn(_)), .. }
+        ));
+        assert!(matches!(f.body.stmts[2].kind, StmtKind::Decl { .. }));
+        assert!(matches!(f.body.stmts[3].kind, StmtKind::Sync));
+        assert!(matches!(f.body.stmts[4].kind, StmtKind::Return(Some(_))));
+    }
+
+    #[test]
+    fn parses_globals_and_externs() {
+        let p = parse_ok(
+            "global int adj[1024];
+             global float feat[];
+             extern xla int relax(int n);
+             void f(int n) { return; }",
+        );
+        assert_eq!(p.globals.len(), 2);
+        assert_eq!(p.globals[0].size, Some(1024));
+        assert_eq!(p.globals[1].size, None);
+        assert_eq!(p.externs.len(), 1);
+        assert_eq!(p.externs[0].name, "relax");
+    }
+
+    #[test]
+    fn parses_bfs_shape_with_pragma() {
+        let p = parse_ok(
+            "global int adj_off[];
+             global int adj_edges[];
+             global int visited[];
+             void visit(int n) {
+                 #pragma bombyx dae
+                 int off = adj_off[n];
+                 int end = adj_off[n + 1];
+                 visited[n] = 1;
+                 for (int i = off; i < end; i = i + 1) {
+                     cilk_spawn visit(adj_edges[i]);
+                 }
+                 cilk_sync;
+             }",
+        );
+        let f = &p.funcs[0];
+        assert!(f.body.stmts[0].dae, "pragma attaches to following stmt");
+        assert!(!f.body.stmts[1].dae);
+        assert!(matches!(f.body.stmts[2].kind, StmtKind::Store { .. }));
+        assert!(matches!(f.body.stmts[3].kind, StmtKind::For { .. }));
+    }
+
+    #[test]
+    fn precedence() {
+        let p = parse_ok("int f(int a, int b) { int x = a + b * 2 < 10 && a != 0; return x; }");
+        let StmtKind::Decl { init: Some(Initializer::Expr(e)), .. } = &p.funcs[0].body.stmts[0].kind
+        else {
+            panic!()
+        };
+        // Top-level should be `&&`.
+        let ExprKind::Binary { op, .. } = &e.kind else { panic!() };
+        assert_eq!(*op, BinOp::And);
+    }
+
+    #[test]
+    fn void_spawn_and_stmt_call() {
+        let p = parse_ok(
+            "void g(int n) { return; }
+             void f(int n) { cilk_spawn g(n); atomic_add(counts, 0, 1); cilk_sync; }",
+        );
+        assert!(matches!(p.funcs[1].body.stmts[0].kind, StmtKind::VoidSpawn(_)));
+        assert!(matches!(p.funcs[1].body.stmts[1].kind, StmtKind::ExprCall(_)));
+    }
+
+    #[test]
+    fn user_call_in_expr_rejected() {
+        let d = parse_err("int f(int n) { int x = g(n) + 1; return x; }");
+        assert!(d.message.contains("not allowed inside an expression"));
+    }
+
+    #[test]
+    fn leaf_call_initializer_allowed() {
+        let p = parse_ok("int f(int n) { int x = helper(n); return x; }");
+        assert!(matches!(
+            p.funcs[0].body.stmts[0].kind,
+            StmtKind::Decl { init: Some(Initializer::Call(_)), .. }
+        ));
+    }
+
+    #[test]
+    fn for_loop_forms() {
+        parse_ok("void f(int n) { for (;;) { return; } }");
+        parse_ok("void f(int n) { for (int i = 0; i < n; i = i + 1) { } }");
+        parse_ok("void f(int n) { int i = 0; for (; i < n;) { i = i + 1; } }");
+    }
+
+    #[test]
+    fn missing_semi_is_error() {
+        let d = parse_err("int f(int n) { return n }");
+        assert!(d.message.contains("expected `;`"), "{}", d.message);
+    }
+
+    #[test]
+    fn min_max_builtins_parse() {
+        parse_ok("int f(int a, int b) { int m = min(a, max(b, 0)); return m; }");
+    }
+}

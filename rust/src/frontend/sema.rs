@@ -1,0 +1,743 @@
+//! Semantic analysis for Cilk-C.
+//!
+//! Beyond ordinary name/type checking, sema enforces the restrictions that
+//! keep the implicit→explicit conversion well-defined (DESIGN.md §6.3):
+//!
+//! 1. A value-producing `cilk_spawn` assigns to a scalar local and must not
+//!    sit inside a loop (its closure slot must be static). Void spawns may be
+//!    spawned in loops (dynamic join counters handle the arity).
+//! 2. Sequential calls (`x = f(...)` / `f(...);`) may only target *leaf*
+//!    functions — functions with no spawn/sync anywhere (HLS inlines them).
+//! 3. `extern xla` tasks can only be spawned, never called sequentially.
+//! 4. The DAE pragma must annotate a declaration/assignment whose RHS reads
+//!    global memory (the access to decouple), inside a task function.
+//! 5. Reading a spawn-assigned variable before `cilk_sync` is rejected
+//!    (checked later on the CFG where flow is explicit; sema does the purely
+//!    syntactic half: the variable exists, types match).
+
+use std::collections::{HashMap, HashSet};
+
+use super::ast::*;
+use super::diag::{Diagnostic, Span};
+
+/// Check the program; returns all diagnostics (empty = OK).
+pub fn check(program: &Program) -> Vec<Diagnostic> {
+    let mut cx = Checker::new(program);
+    cx.check_program(program);
+    cx.diags
+}
+
+struct FuncSig {
+    ret: Type,
+    params: Vec<Type>,
+    is_xla: bool,
+}
+
+struct Checker {
+    globals: HashMap<String, Type>,
+    funcs: HashMap<String, FuncSig>,
+    /// Functions containing spawn or sync (directly): not callable
+    /// sequentially.
+    spawning: HashSet<String>,
+    diags: Vec<Diagnostic>,
+}
+
+impl Checker {
+    fn new(program: &Program) -> Checker {
+        let mut cx = Checker {
+            globals: HashMap::new(),
+            funcs: HashMap::new(),
+            spawning: HashSet::new(),
+            diags: Vec::new(),
+        };
+        for g in &program.globals {
+            if g.ty == Type::Void {
+                cx.error("global arrays cannot have element type `void`", g.span);
+            }
+            if cx.globals.insert(g.name.clone(), g.ty).is_some() {
+                cx.error(format!("duplicate global `{}`", g.name), g.span);
+            }
+        }
+        for e in &program.externs {
+            let sig = FuncSig { ret: e.ret, params: e.params.iter().map(|p| p.ty).collect(), is_xla: true };
+            if cx.funcs.insert(e.name.clone(), sig).is_some() {
+                cx.error(format!("duplicate function `{}`", e.name), e.span);
+            }
+        }
+        for f in &program.funcs {
+            let sig = FuncSig { ret: f.ret, params: f.params.iter().map(|p| p.ty).collect(), is_xla: false };
+            if cx.funcs.insert(f.name.clone(), sig).is_some() {
+                cx.error(format!("duplicate function `{}`", f.name), f.span);
+            }
+            if func_spawns(&f.body) {
+                cx.spawning.insert(f.name.clone());
+            }
+        }
+        cx
+    }
+
+    fn error(&mut self, msg: impl Into<String>, span: Span) {
+        self.diags.push(Diagnostic::error(msg, span));
+    }
+
+    fn check_program(&mut self, program: &Program) {
+        for f in &program.funcs {
+            self.check_func(f);
+        }
+    }
+
+    fn check_func(&mut self, f: &FuncDef) {
+        let mut scope = Scope::new();
+        for p in &f.params {
+            if p.ty == Type::Void {
+                self.error(format!("parameter `{}` cannot be void", p.name), p.span);
+            }
+            if !scope.declare(&p.name, p.ty) {
+                self.error(format!("duplicate parameter `{}`", p.name), p.span);
+            }
+        }
+        let mut fx = FuncCx { ret: f.ret, in_loop: 0, func_name: f.name.clone() };
+        self.check_block(&f.body, &mut scope, &mut fx);
+    }
+
+    fn check_block(&mut self, block: &Block, scope: &mut Scope, fx: &mut FuncCx) {
+        scope.push();
+        for stmt in &block.stmts {
+            self.check_stmt(stmt, scope, fx);
+        }
+        scope.pop();
+    }
+
+    fn check_stmt(&mut self, stmt: &Stmt, scope: &mut Scope, fx: &mut FuncCx) {
+        if stmt.dae {
+            self.check_dae_target(stmt);
+        }
+        match &stmt.kind {
+            StmtKind::Decl { ty, name, init } => {
+                if *ty == Type::Void {
+                    self.error(format!("variable `{name}` cannot be void"), stmt.span);
+                }
+                if let Some(init) = init {
+                    self.check_initializer(init, *ty, stmt.span, scope, fx);
+                }
+                if !scope.declare(name, *ty) {
+                    self.error(format!("`{name}` is already declared in this scope"), stmt.span);
+                }
+            }
+            StmtKind::Assign { name, value } => {
+                let Some(ty) = scope.lookup(name) else {
+                    self.error(format!("assignment to undeclared variable `{name}`"), stmt.span);
+                    return;
+                };
+                self.check_initializer(value, ty, stmt.span, scope, fx);
+            }
+            StmtKind::Store { arr, index, value } => {
+                let elem = self.check_global(arr, stmt.span);
+                self.expect_expr(index, Type::Int, scope, fx);
+                if let Some(elem) = elem {
+                    self.expect_expr(value, elem, scope, fx);
+                }
+            }
+            StmtKind::VoidSpawn(call) => {
+                self.check_spawn_call(call, scope, fx);
+            }
+            StmtKind::Sync => {
+                if fx.in_loop > 0 {
+                    // Allowed (sync-in-loop is a re-entrant continuation);
+                    // nothing special here — explicitization handles it.
+                }
+            }
+            StmtKind::If { cond, then, els } => {
+                self.expect_expr(cond, Type::Bool, scope, fx);
+                scope.push();
+                self.check_stmt(then, scope, fx);
+                scope.pop();
+                if let Some(els) = els {
+                    scope.push();
+                    self.check_stmt(els, scope, fx);
+                    scope.pop();
+                }
+            }
+            StmtKind::While { cond, body } => {
+                self.expect_expr(cond, Type::Bool, scope, fx);
+                fx.in_loop += 1;
+                scope.push();
+                self.check_stmt(body, scope, fx);
+                scope.pop();
+                fx.in_loop -= 1;
+            }
+            StmtKind::For { init, cond, step, body } => {
+                scope.push();
+                if let Some(init) = init {
+                    self.check_stmt(init, scope, fx);
+                }
+                if let Some(cond) = cond {
+                    self.expect_expr(cond, Type::Bool, scope, fx);
+                }
+                fx.in_loop += 1;
+                self.check_stmt(body, scope, fx);
+                if let Some(step) = step {
+                    self.check_stmt(step, scope, fx);
+                }
+                fx.in_loop -= 1;
+                scope.pop();
+            }
+            StmtKind::Return(value) => match (fx.ret, value) {
+                (Type::Void, None) => {}
+                (Type::Void, Some(_)) => {
+                    self.error(
+                        format!("function `{}` returns void but `return` has a value", fx.func_name),
+                        stmt.span,
+                    );
+                }
+                (ret, None) => {
+                    self.error(
+                        format!("function `{}` must return a {}", fx.func_name, ret.name()),
+                        stmt.span,
+                    );
+                }
+                (ret, Some(e)) => self.expect_expr(e, ret, scope, fx),
+            },
+            StmtKind::ExprCall(call) => {
+                if is_stmt_builtin(&call.name) {
+                    self.check_stmt_builtin(call, scope, fx);
+                } else {
+                    self.check_seq_call(call, scope, fx);
+                }
+            }
+            StmtKind::Block(block) => self.check_block(block, scope, fx),
+        }
+    }
+
+    fn check_dae_target(&mut self, stmt: &Stmt) {
+        let reads_memory = match &stmt.kind {
+            StmtKind::Decl { init: Some(Initializer::Expr(e)), .. } => expr_reads_global(e),
+            StmtKind::Assign { value: Initializer::Expr(e), .. } => expr_reads_global(e),
+            StmtKind::Block(b) => b.stmts.iter().any(|s| match &s.kind {
+                StmtKind::Decl { init: Some(Initializer::Expr(e)), .. } => expr_reads_global(e),
+                StmtKind::Assign { value: Initializer::Expr(e), .. } => expr_reads_global(e),
+                _ => false,
+            }),
+            _ => false,
+        };
+        if !reads_memory {
+            self.error(
+                "`#pragma bombyx dae` must annotate a declaration/assignment (or block of \
+                 them) that reads global memory — there is no access to decouple here",
+                stmt.span,
+            );
+        }
+    }
+
+    fn check_initializer(&mut self, init: &Initializer, expect: Type, span: Span, scope: &mut Scope, fx: &mut FuncCx) {
+        match init {
+            Initializer::Expr(e) => self.expect_expr(e, expect, scope, fx),
+            Initializer::Spawn(call) => {
+                if fx.in_loop > 0 {
+                    self.error(
+                        "a value-producing `cilk_spawn` may not appear inside a loop: its \
+                         continuation closure slot must be static (void spawns are allowed \
+                         in loops). Accumulate through memory with `atomic_add` instead",
+                        span,
+                    );
+                }
+                let ret = self.check_spawn_call(call, scope, fx);
+                if let Some(ret) = ret {
+                    if ret == Type::Void {
+                        self.error(
+                            format!("cannot assign result of void task `{}`", call.name),
+                            call.span,
+                        );
+                    } else if !assignable(ret, expect) {
+                        self.error(
+                            format!(
+                                "spawned task `{}` returns {} but target expects {}",
+                                call.name,
+                                ret.name(),
+                                expect.name()
+                            ),
+                            call.span,
+                        );
+                    }
+                }
+            }
+            Initializer::Call(call) => {
+                let ret = self.check_seq_call(call, scope, fx);
+                if let Some(ret) = ret {
+                    if !assignable(ret, expect) {
+                        self.error(
+                            format!(
+                                "call to `{}` returns {} but target expects {}",
+                                call.name,
+                                ret.name(),
+                                expect.name()
+                            ),
+                            call.span,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Check a spawned call; returns its return type if the callee resolves.
+    fn check_spawn_call(&mut self, call: &Call, scope: &mut Scope, fx: &mut FuncCx) -> Option<Type> {
+        let Some(sig_params) = self.func_params(&call.name) else {
+            self.error(format!("spawn of unknown function `{}`", call.name), call.span);
+            return None;
+        };
+        self.check_args(call, &sig_params, scope, fx);
+        Some(self.funcs[&call.name].ret)
+    }
+
+    /// Check a sequential call; enforces leaf-ness and non-xla.
+    fn check_seq_call(&mut self, call: &Call, scope: &mut Scope, fx: &mut FuncCx) -> Option<Type> {
+        let Some(sig_params) = self.func_params(&call.name) else {
+            self.error(format!("call to unknown function `{}`", call.name), call.span);
+            return None;
+        };
+        if self.funcs[&call.name].is_xla {
+            self.error(
+                format!(
+                    "`{}` is an `extern xla` task and can only be spawned (it runs on the \
+                     batched XLA PE, not inline)",
+                    call.name
+                ),
+                call.span,
+            );
+        }
+        if self.spawning.contains(&call.name) {
+            self.error(
+                format!(
+                    "`{}` contains cilk_spawn/cilk_sync and cannot be called sequentially; \
+                     use `cilk_spawn {}(...)`",
+                    call.name, call.name
+                ),
+                call.span,
+            );
+        }
+        self.check_args(call, &sig_params, scope, fx);
+        Some(self.funcs[&call.name].ret)
+    }
+
+    fn func_params(&self, name: &str) -> Option<Vec<Type>> {
+        self.funcs.get(name).map(|s| s.params.clone())
+    }
+
+    fn check_args(&mut self, call: &Call, params: &[Type], scope: &mut Scope, fx: &mut FuncCx) {
+        if call.args.len() != params.len() {
+            self.error(
+                format!(
+                    "`{}` expects {} argument(s), got {}",
+                    call.name,
+                    params.len(),
+                    call.args.len()
+                ),
+                call.span,
+            );
+            return;
+        }
+        for (arg, &ty) in call.args.iter().zip(params) {
+            self.expect_expr(arg, ty, scope, fx);
+        }
+    }
+
+    fn check_stmt_builtin(&mut self, call: &Call, scope: &mut Scope, fx: &mut FuncCx) {
+        match call.name.as_str() {
+            "atomic_add" => {
+                if call.args.len() != 3 {
+                    self.error("`atomic_add(arr, idx, val)` expects 3 arguments", call.span);
+                    return;
+                }
+                let ExprKind::Var(arr) = &call.args[0].kind else {
+                    self.error("first argument of `atomic_add` must name a global array", call.args[0].span);
+                    return;
+                };
+                let elem = self.check_global(arr, call.args[0].span);
+                self.expect_expr(&call.args[1], Type::Int, scope, fx);
+                if let Some(elem) = elem {
+                    self.expect_expr(&call.args[2], elem, scope, fx);
+                }
+            }
+            other => self.error(format!("unknown builtin `{other}`"), call.span),
+        }
+    }
+
+    fn check_global(&mut self, name: &str, span: Span) -> Option<Type> {
+        match self.globals.get(name) {
+            Some(&ty) => Some(ty),
+            None => {
+                self.error(format!("unknown global array `{name}`"), span);
+                None
+            }
+        }
+    }
+
+    // ---- expression typing -------------------------------------------------
+
+    fn expect_expr(&mut self, e: &Expr, expect: Type, scope: &mut Scope, fx: &mut FuncCx) {
+        if let Some(actual) = self.type_expr(e, scope, fx) {
+            if !assignable(actual, expect) {
+                self.error(
+                    format!("expected {}, found {}", expect.name(), actual.name()),
+                    e.span,
+                );
+            }
+        }
+    }
+
+    fn type_expr(&mut self, e: &Expr, scope: &mut Scope, fx: &mut FuncCx) -> Option<Type> {
+        match &e.kind {
+            ExprKind::IntLit(_) => Some(Type::Int),
+            ExprKind::FloatLit(_) => Some(Type::Float),
+            ExprKind::BoolLit(_) => Some(Type::Bool),
+            ExprKind::Var(name) => {
+                let ty = scope.lookup(name);
+                if ty.is_none() {
+                    self.error(format!("unknown variable `{name}`"), e.span);
+                }
+                ty
+            }
+            ExprKind::Load { arr, index } => {
+                self.expect_expr(index, Type::Int, scope, fx);
+                self.check_global(arr, e.span)
+            }
+            ExprKind::Builtin { name, args } => match name.as_str() {
+                "min" | "max" => {
+                    if args.len() != 2 {
+                        self.error(format!("`{name}` expects 2 arguments"), e.span);
+                        return None;
+                    }
+                    let a = self.type_expr(&args[0], scope, fx)?;
+                    self.expect_expr(&args[1], a, scope, fx);
+                    Some(a)
+                }
+                "abs" => {
+                    if args.len() != 1 {
+                        self.error("`abs` expects 1 argument", e.span);
+                        return None;
+                    }
+                    self.type_expr(&args[0], scope, fx)
+                }
+                _ => unreachable!("parser only admits known builtins"),
+            },
+            ExprKind::Binary { op, lhs, rhs } => {
+                let lt = self.type_expr(lhs, scope, fx)?;
+                let rt = self.type_expr(rhs, scope, fx)?;
+                if op.is_logical() {
+                    if lt != Type::Bool || rt != Type::Bool {
+                        self.error(
+                            format!("`{}` requires bool operands, got {} and {}", op.symbol(), lt.name(), rt.name()),
+                            e.span,
+                        );
+                    }
+                    return Some(Type::Bool);
+                }
+                let unified = unify_arith(lt, rt);
+                if unified.is_none() {
+                    self.error(
+                        format!(
+                            "operands of `{}` have incompatible types {} and {}",
+                            op.symbol(),
+                            lt.name(),
+                            rt.name()
+                        ),
+                        e.span,
+                    );
+                }
+                if op.is_comparison() {
+                    Some(Type::Bool)
+                } else {
+                    if matches!(op, BinOp::Shl | BinOp::Shr | BinOp::BitAnd | BinOp::BitOr | BinOp::BitXor | BinOp::Rem)
+                        && unified == Some(Type::Float)
+                    {
+                        self.error(
+                            format!("`{}` is not defined on float operands", op.symbol()),
+                            e.span,
+                        );
+                    }
+                    unified
+                }
+            }
+            ExprKind::Unary { op, operand } => {
+                let t = self.type_expr(operand, scope, fx)?;
+                match op {
+                    UnOp::Neg => {
+                        if t == Type::Bool {
+                            self.error("cannot negate a bool", e.span);
+                        }
+                        Some(t)
+                    }
+                    UnOp::Not => {
+                        if t != Type::Bool {
+                            self.error("`!` requires a bool operand", e.span);
+                        }
+                        Some(Type::Bool)
+                    }
+                }
+            }
+        }
+    }
+}
+
+struct FuncCx {
+    ret: Type,
+    in_loop: u32,
+    func_name: String,
+}
+
+/// Lexical scope stack.
+struct Scope {
+    frames: Vec<HashMap<String, Type>>,
+}
+
+impl Scope {
+    fn new() -> Scope {
+        Scope { frames: vec![HashMap::new()] }
+    }
+
+    fn push(&mut self) {
+        self.frames.push(HashMap::new());
+    }
+
+    fn pop(&mut self) {
+        self.frames.pop();
+    }
+
+    /// Returns false if already declared in the *current* frame.
+    fn declare(&mut self, name: &str, ty: Type) -> bool {
+        self.frames.last_mut().unwrap().insert(name.to_string(), ty).is_none()
+    }
+
+    fn lookup(&self, name: &str) -> Option<Type> {
+        self.frames.iter().rev().find_map(|f| f.get(name).copied())
+    }
+}
+
+/// Implicit conversions: int literals/values widen to float.
+fn assignable(actual: Type, expect: Type) -> bool {
+    actual == expect || (actual == Type::Int && expect == Type::Float)
+}
+
+fn unify_arith(a: Type, b: Type) -> Option<Type> {
+    match (a, b) {
+        (Type::Int, Type::Int) => Some(Type::Int),
+        (Type::Float, Type::Float) | (Type::Int, Type::Float) | (Type::Float, Type::Int) => {
+            Some(Type::Float)
+        }
+        (Type::Bool, Type::Bool) => Some(Type::Bool), // for == / !=
+        _ => None,
+    }
+}
+
+/// Does this function body contain spawn or sync (directly)?
+pub fn func_spawns(block: &Block) -> bool {
+    fn stmt_spawns(s: &Stmt) -> bool {
+        match &s.kind {
+            StmtKind::VoidSpawn(_) | StmtKind::Sync => true,
+            StmtKind::Decl { init: Some(Initializer::Spawn(_)), .. } => true,
+            StmtKind::Assign { value: Initializer::Spawn(_), .. } => true,
+            StmtKind::If { then, els, .. } => {
+                stmt_spawns(then) || els.as_deref().map(stmt_spawns).unwrap_or(false)
+            }
+            StmtKind::While { body, .. } => stmt_spawns(body),
+            StmtKind::For { init, step, body, .. } => {
+                stmt_spawns(body)
+                    || init.as_deref().map(stmt_spawns).unwrap_or(false)
+                    || step.as_deref().map(stmt_spawns).unwrap_or(false)
+            }
+            StmtKind::Block(b) => b.stmts.iter().any(stmt_spawns),
+            _ => false,
+        }
+    }
+    block.stmts.iter().any(stmt_spawns)
+}
+
+/// Does an expression read any global array?
+pub fn expr_reads_global(e: &Expr) -> bool {
+    match &e.kind {
+        ExprKind::Load { .. } => true,
+        ExprKind::Binary { lhs, rhs, .. } => expr_reads_global(lhs) || expr_reads_global(rhs),
+        ExprKind::Unary { operand, .. } => expr_reads_global(operand),
+        ExprKind::Builtin { args, .. } => args.iter().any(expr_reads_global),
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::super::parser::parse;
+    use super::*;
+
+    fn check_src(text: &str) -> Vec<Diagnostic> {
+        check(&parse(lex(text).unwrap()).unwrap())
+    }
+
+    fn ok(text: &str) {
+        let diags = check_src(text);
+        assert!(diags.is_empty(), "unexpected diagnostics: {:?}", diags.iter().map(|d| &d.message).collect::<Vec<_>>());
+    }
+
+    fn err_containing(text: &str, needle: &str) {
+        let diags = check_src(text);
+        assert!(
+            diags.iter().any(|d| d.message.contains(needle)),
+            "expected a diagnostic containing {needle:?}, got {:?}",
+            diags.iter().map(|d| &d.message).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fib_checks() {
+        ok("int fib(int n) {
+              if (n < 2) return n;
+              int x = cilk_spawn fib(n - 1);
+              int y = cilk_spawn fib(n - 2);
+              cilk_sync;
+              return x + y;
+            }");
+    }
+
+    #[test]
+    fn bfs_checks() {
+        ok("global int adj_off[];
+            global int adj_edges[];
+            global int visited[];
+            void visit(int n) {
+                #pragma bombyx dae
+                int off = adj_off[n];
+                int end = adj_off[n + 1];
+                visited[n] = 1;
+                for (int i = off; i < end; i = i + 1) {
+                    cilk_spawn visit(adj_edges[i]);
+                }
+                cilk_sync;
+            }");
+    }
+
+    #[test]
+    fn unknown_variable() {
+        err_containing("int f(int n) { return m; }", "unknown variable `m`");
+    }
+
+    #[test]
+    fn unknown_global() {
+        err_containing("int f(int n) { return a[n]; }", "unknown global array `a`");
+    }
+
+    #[test]
+    fn spawn_in_loop_with_value_rejected() {
+        err_containing(
+            "int g(int n) { return n; }
+             int f(int n) {
+                 int acc = 0;
+                 for (int i = 0; i < n; i = i + 1) {
+                     acc = cilk_spawn g(i);
+                 }
+                 cilk_sync;
+                 return acc;
+             }",
+            "may not appear inside a loop",
+        );
+    }
+
+    #[test]
+    fn void_spawn_in_loop_ok() {
+        ok("void g(int n) { return; }
+            void f(int n) {
+                for (int i = 0; i < n; i = i + 1) {
+                    cilk_spawn g(i);
+                }
+                cilk_sync;
+            }");
+    }
+
+    #[test]
+    fn seq_call_of_spawning_function_rejected() {
+        err_containing(
+            "int fib(int n) {
+                 if (n < 2) return n;
+                 int x = cilk_spawn fib(n - 1);
+                 cilk_sync;
+                 return x;
+             }
+             int main(int n) { int r = fib(n); return r; }",
+            "cannot be called sequentially",
+        );
+    }
+
+    #[test]
+    fn xla_seq_call_rejected() {
+        err_containing(
+            "extern xla int relax(int n);
+             int f(int n) { int r = relax(n); return r; }",
+            "can only be spawned",
+        );
+    }
+
+    #[test]
+    fn xla_spawn_ok() {
+        ok("extern xla int relax(int n);
+            int f(int n) {
+                int r = cilk_spawn relax(n);
+                cilk_sync;
+                return r;
+            }");
+    }
+
+    #[test]
+    fn dae_on_non_memory_stmt_rejected() {
+        err_containing(
+            "global int a[];
+             int f(int n) {
+                 #pragma bombyx dae
+                 int x = n + 1;
+                 return x + a[0];
+             }",
+            "no access to decouple",
+        );
+    }
+
+    #[test]
+    fn type_mismatch() {
+        err_containing("int f(int n) { bool b = n; return 0; }", "expected bool, found int");
+        err_containing("int f(float x) { return x; }", "expected int, found float");
+        // int widens to float.
+        ok("float f(int n) { return n; }");
+    }
+
+    #[test]
+    fn logical_ops_need_bools() {
+        err_containing("int f(int n) { if (n && true) return 1; return 0; }", "requires bool operands");
+    }
+
+    #[test]
+    fn float_modulo_rejected() {
+        err_containing("float f(float x) { return x % 2.0; }", "not defined on float");
+    }
+
+    #[test]
+    fn return_type_enforced() {
+        err_containing("int f(int n) { return; }", "must return a int");
+        err_containing("void f(int n) { return n; }", "returns void");
+    }
+
+    #[test]
+    fn atomic_add_checked() {
+        ok("global int counts[16];
+            void f(int n) { atomic_add(counts, n, 1); }");
+        err_containing("void f(int n) { atomic_add(nope, n, 1); }", "unknown global array");
+    }
+
+    #[test]
+    fn duplicate_declarations() {
+        err_containing("int f(int n) { int x = 0; int x = 1; return x; }", "already declared");
+        err_containing("int f(int n, int n) { return n; }", "duplicate parameter");
+    }
+
+    #[test]
+    fn shadowing_in_nested_scope_ok() {
+        ok("int f(int n) { int x = 1; { int x = 2; n = x; } return x; }");
+    }
+}

@@ -1,0 +1,129 @@
+//! Token definitions for Cilk-C.
+
+use super::diag::Span;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    // Literals and identifiers
+    Int(i64),
+    Float(f32),
+    Ident(String),
+
+    // Keywords
+    KwInt,
+    KwFloat,
+    KwBool,
+    KwVoid,
+    KwGlobal,
+    KwExtern,
+    KwXla,
+    KwIf,
+    KwElse,
+    KwWhile,
+    KwFor,
+    KwReturn,
+    KwTrue,
+    KwFalse,
+    KwSpawn, // cilk_spawn
+    KwSync,  // cilk_sync
+
+    // `#pragma bombyx dae` (lexed as one token)
+    PragmaDae,
+
+    // Punctuation
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Semi,
+    Comma,
+    Assign,
+
+    // Operators
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    Shl,
+    Shr,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    EqEq,
+    NotEq,
+    AndAnd,
+    OrOr,
+    Amp,
+    Pipe,
+    Caret,
+    Not,
+
+    Eof,
+}
+
+impl Tok {
+    /// Human-readable name for diagnostics.
+    pub fn describe(&self) -> String {
+        match self {
+            Tok::Int(v) => format!("integer literal `{v}`"),
+            Tok::Float(v) => format!("float literal `{v}`"),
+            Tok::Ident(s) => format!("identifier `{s}`"),
+            Tok::KwInt => "`int`".into(),
+            Tok::KwFloat => "`float`".into(),
+            Tok::KwBool => "`bool`".into(),
+            Tok::KwVoid => "`void`".into(),
+            Tok::KwGlobal => "`global`".into(),
+            Tok::KwExtern => "`extern`".into(),
+            Tok::KwXla => "`xla`".into(),
+            Tok::KwIf => "`if`".into(),
+            Tok::KwElse => "`else`".into(),
+            Tok::KwWhile => "`while`".into(),
+            Tok::KwFor => "`for`".into(),
+            Tok::KwReturn => "`return`".into(),
+            Tok::KwTrue => "`true`".into(),
+            Tok::KwFalse => "`false`".into(),
+            Tok::KwSpawn => "`cilk_spawn`".into(),
+            Tok::KwSync => "`cilk_sync`".into(),
+            Tok::PragmaDae => "`#pragma bombyx dae`".into(),
+            Tok::LParen => "`(`".into(),
+            Tok::RParen => "`)`".into(),
+            Tok::LBrace => "`{`".into(),
+            Tok::RBrace => "`}`".into(),
+            Tok::LBracket => "`[`".into(),
+            Tok::RBracket => "`]`".into(),
+            Tok::Semi => "`;`".into(),
+            Tok::Comma => "`,`".into(),
+            Tok::Assign => "`=`".into(),
+            Tok::Plus => "`+`".into(),
+            Tok::Minus => "`-`".into(),
+            Tok::Star => "`*`".into(),
+            Tok::Slash => "`/`".into(),
+            Tok::Percent => "`%`".into(),
+            Tok::Shl => "`<<`".into(),
+            Tok::Shr => "`>>`".into(),
+            Tok::Lt => "`<`".into(),
+            Tok::Le => "`<=`".into(),
+            Tok::Gt => "`>`".into(),
+            Tok::Ge => "`>=`".into(),
+            Tok::EqEq => "`==`".into(),
+            Tok::NotEq => "`!=`".into(),
+            Tok::AndAnd => "`&&`".into(),
+            Tok::OrOr => "`||`".into(),
+            Tok::Amp => "`&`".into(),
+            Tok::Pipe => "`|`".into(),
+            Tok::Caret => "`^`".into(),
+            Tok::Not => "`!`".into(),
+            Tok::Eof => "end of file".into(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub span: Span,
+}

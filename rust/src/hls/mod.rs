@@ -1,0 +1,18 @@
+//! HLS models: what Vitis would do with the generated PEs.
+//!
+//! Two models, both consuming the explicit IR (the same code the HLS
+//! backend emits):
+//!
+//! - [`schedule`]: a statically-scheduled latency model. Its key property
+//!   is the paper's §II-C limitation: a PE whose body mixes memory loads
+//!   with data-dependent control flow cannot be task-pipelined (the tool
+//!   cannot overlap stages whose latency it cannot bound), while a
+//!   DAE-extracted access PE (straight-line load) pipelines at II≈1.
+//! - [`resource`]: a LUT/FF/BRAM estimator calibrated against the paper's
+//!   Fig. 6 synthesis results (Vivado 2024.1, xcu55c @ 300 MHz).
+
+pub mod resource;
+pub mod schedule;
+
+pub use resource::{estimate, CostModel, ResourceEstimate};
+pub use schedule::{classify, op_cycles, PeClass, ScheduleModel};

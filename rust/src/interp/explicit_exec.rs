@@ -1,0 +1,564 @@
+//! Single-threaded executor for the explicit IR — the Cilk-1 abstract
+//! machine: a closure heap with join counters plus a ready queue.
+//!
+//! This is the semantic core shared (by construction, not by code-sharing
+//! accident) with the multithreaded WS runtime ([`crate::ws`]) and the
+//! HardCilk cycle simulator ([`crate::sim`]): all three implement the same
+//! transition rules; this one is the simplest and is used for differential
+//! testing.
+
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::ir::cfg::{FuncId, FuncKind, Module, Op, RetTarget, Term};
+use crate::ir::expr::{self, Value, VarId};
+
+use super::{Memory, XlaHandler};
+
+/// Where a task delivers its `send_argument`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cont {
+    /// The external caller (result of the root task).
+    Root,
+    /// Fill `slot` of closure `clos`, decrement its counter.
+    Slot { clos: usize, slot: u32 },
+    /// Only decrement the counter of `clos`.
+    Counter { clos: usize },
+}
+
+/// A pending continuation closure (paper §II: ready arguments, hole
+/// placeholders, return pointer, join counter).
+#[derive(Clone, Debug)]
+pub struct Closure {
+    pub task: FuncId,
+    pub slots: Vec<Value>,
+    pub cont: Cont,
+    pub counter: u32,
+    pub freed: bool,
+}
+
+/// A runnable task instance.
+#[derive(Clone, Debug)]
+pub struct TaskInst {
+    pub task: FuncId,
+    pub args: Vec<Value>,
+    pub cont: Cont,
+}
+
+/// Queue discipline for the ready queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Order {
+    /// Depth-first-ish (stack). Bounds closure liveness like Cilk's
+    /// work-first policy; the default.
+    #[default]
+    Lifo,
+    /// Breadth-first (queue) — maximal exposed parallelism, worst-case
+    /// closure footprint. Useful for stress tests.
+    Fifo,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub tasks_run: u64,
+    pub closures_made: u64,
+    pub sends: u64,
+    pub max_ready: usize,
+    pub max_live_closures: usize,
+    /// Tasks run per role name (entry/continuation/join/access/xla).
+    pub per_role: std::collections::BTreeMap<&'static str, u64>,
+}
+
+pub struct ExplicitExec<'m, X: XlaHandler> {
+    pub module: &'m Module,
+    pub memory: Memory,
+    pub xla: X,
+    pub order: Order,
+    pub stats: ExecStats,
+    closures: Vec<Closure>,
+    free_closures: Vec<usize>,
+    ready: VecDeque<TaskInst>,
+    result: Option<Value>,
+    live_closures: usize,
+}
+
+impl<'m, X: XlaHandler> ExplicitExec<'m, X> {
+    pub fn new(module: &'m Module, memory: Memory, xla: X) -> Self {
+        ExplicitExec {
+            module,
+            memory,
+            xla,
+            order: Order::default(),
+            stats: ExecStats::default(),
+            closures: Vec::new(),
+            free_closures: Vec::new(),
+            ready: VecDeque::new(),
+            result: None,
+            live_closures: 0,
+        }
+    }
+
+    /// Run task `name` to completion (drain the whole task graph) and
+    /// return the value it sends to the root continuation (Unit for void).
+    pub fn run(&mut self, name: &str, args: &[Value]) -> Result<Value> {
+        let fid = self
+            .module
+            .func_by_name(name)
+            .ok_or_else(|| anyhow!("no task named `{name}`"))?;
+        self.ready.push_back(TaskInst { task: fid, args: args.to_vec(), cont: Cont::Root });
+        self.drain()?;
+        self.result.take().ok_or_else(|| {
+            anyhow!("task graph drained but no send_argument reached the root continuation")
+        })
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        let mut steps: u64 = 0;
+        while let Some(inst) = match self.order {
+            Order::Lifo => self.ready.pop_back(),
+            Order::Fifo => self.ready.pop_front(),
+        } {
+            steps += 1;
+            if steps > 500_000_000 {
+                bail!("explicit executor exceeded task budget");
+            }
+            self.run_task(inst)?;
+            self.stats.max_ready = self.stats.max_ready.max(self.ready.len());
+        }
+        Ok(())
+    }
+
+    fn alloc_closure(&mut self, c: Closure) -> usize {
+        self.stats.closures_made += 1;
+        self.live_closures += 1;
+        self.stats.max_live_closures = self.stats.max_live_closures.max(self.live_closures);
+        match self.free_closures.pop() {
+            Some(idx) => {
+                self.closures[idx] = c;
+                idx
+            }
+            None => {
+                self.closures.push(c);
+                self.closures.len() - 1
+            }
+        }
+    }
+
+    fn fire_if_ready(&mut self, clos: usize) {
+        let c = &mut self.closures[clos];
+        debug_assert!(!c.freed, "decrement on freed closure");
+        if c.counter == 0 {
+            let inst = TaskInst { task: c.task, args: c.slots.clone(), cont: c.cont };
+            c.freed = true;
+            self.live_closures -= 1;
+            self.free_closures.push(clos);
+            self.ready.push_back(inst);
+        }
+    }
+
+    fn deliver(&mut self, cont: Cont, value: Value) -> Result<()> {
+        self.stats.sends += 1;
+        match cont {
+            Cont::Root => {
+                if self.result.is_some() {
+                    bail!("root continuation received two results");
+                }
+                self.result = Some(value);
+            }
+            Cont::Slot { clos, slot } => {
+                let c = &mut self.closures[clos];
+                if c.freed {
+                    bail!("send_argument into freed closure (join-counter bug)");
+                }
+                let ty = self.module.funcs[c.task].vars[VarId::new(slot as usize)].ty;
+                c.slots[slot as usize] = value.coerce(ty);
+                c.counter -= 1;
+                self.fire_if_ready(clos);
+            }
+            Cont::Counter { clos } => {
+                let c = &mut self.closures[clos];
+                if c.freed {
+                    bail!("counter decrement on freed closure (join-counter bug)");
+                }
+                c.counter -= 1;
+                self.fire_if_ready(clos);
+            }
+        }
+        Ok(())
+    }
+
+    fn run_task(&mut self, inst: TaskInst) -> Result<()> {
+        self.stats.tasks_run += 1;
+        let func = &self.module.funcs[inst.task];
+        let role = func.task.as_ref().map(|t| t.role.name()).unwrap_or("leaf");
+        *self.stats.per_role.entry(role).or_insert(0) += 1;
+
+        // XLA tasks have no body: the scalar handler computes the datapath
+        // and the result goes straight to the continuation.
+        if func.kind == FuncKind::Xla {
+            let name = func.name.clone();
+            let out = self.xla.call(&name, &inst.args, &mut self.memory)?;
+            return self.deliver(inst.cont, out);
+        }
+        // A spawned *leaf* function (no spawns/syncs of its own) is a task
+        // whose whole body is sequential: evaluate and send the result.
+        if func.kind == FuncKind::Leaf {
+            let out = self.eval_leaf(inst.task, &inst.args)?;
+            return self.deliver(inst.cont, out);
+        }
+
+        let cfg = func.cfg();
+        if inst.args.len() != func.params {
+            bail!(
+                "task `{}` expects {} args, got {} (closure layout bug)",
+                func.name,
+                func.params,
+                inst.args.len()
+            );
+        }
+        let mut env: Vec<Value> = func.vars.values().map(|v| Value::zero_of(v.ty)).collect();
+        for (i, a) in inst.args.iter().enumerate() {
+            env[i] = a.coerce(func.vars[VarId::new(i)].ty);
+        }
+        // Closure handles created by this task (indices into self.closures
+        // are stored as I64 handles in env).
+        let mut block = cfg.entry;
+        let mut steps: u64 = 0;
+        loop {
+            steps += 1;
+            if steps > 100_000_000 {
+                bail!("task `{}` exceeded step limit", func.name);
+            }
+            let b = &cfg.blocks[block];
+            for op in &b.ops {
+                match op {
+                    Op::Assign { dst, src } => {
+                        let v = expr::eval(src, &|v| env[v.index()]);
+                        env[dst.index()] = v.coerce(func.vars[*dst].ty);
+                    }
+                    Op::Load { dst, arr, index, .. } => {
+                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                        env[dst.index()] = self.memory.load(*arr, idx)?;
+                    }
+                    Op::Store { arr, index, value } => {
+                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                        let val = expr::eval(value, &|v| env[v.index()]);
+                        self.memory.store(*arr, idx, val)?;
+                    }
+                    Op::AtomicAdd { arr, index, value } => {
+                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                        let val = expr::eval(value, &|v| env[v.index()]);
+                        self.memory.atomic_add(*arr, idx, val)?;
+                    }
+                    Op::Call { dst, callee, args } => {
+                        let vals: Vec<Value> =
+                            args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
+                        let r = self.eval_leaf(*callee, &vals)?;
+                        if let Some(d) = dst {
+                            env[d.index()] = r.coerce(func.vars[*d].ty);
+                        }
+                    }
+                    Op::MakeClosure { dst, task } => {
+                        let t = &self.module.funcs[*task];
+                        let c = Closure {
+                            task: *task,
+                            slots: t
+                                .param_ids()
+                                .map(|p| Value::zero_of(t.vars[p].ty))
+                                .collect(),
+                            cont: inst.cont,
+                            counter: 1, // creator hold
+                            freed: false,
+                        };
+                        let handle = self.alloc_closure(c);
+                        env[dst.index()] = Value::I64(handle as i64);
+                    }
+                    Op::ClosureStore { clos, field, value } => {
+                        let h = env[clos.index()].as_i64() as usize;
+                        let val = expr::eval(value, &|v| env[v.index()]);
+                        let c = &mut self.closures[h];
+                        let ty = self.module.funcs[c.task].vars[VarId::new(*field as usize)].ty;
+                        c.slots[*field as usize] = val.coerce(ty);
+                    }
+                    Op::SpawnChild { callee, args, ret } => {
+                        let vals: Vec<Value> =
+                            args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
+                        let cont = match ret {
+                            RetTarget::Slot { clos, field } => {
+                                let h = env[clos.index()].as_i64() as usize;
+                                self.closures[h].counter += 1;
+                                Cont::Slot { clos: h, slot: *field }
+                            }
+                            RetTarget::Counter { clos } => {
+                                let h = env[clos.index()].as_i64() as usize;
+                                self.closures[h].counter += 1;
+                                Cont::Counter { clos: h }
+                            }
+                            RetTarget::Forward => inst.cont,
+                        };
+                        self.ready.push_back(TaskInst { task: *callee, args: vals, cont });
+                    }
+                    Op::CloseSpawns { clos } => {
+                        let h = env[clos.index()].as_i64() as usize;
+                        let c = &mut self.closures[h];
+                        if c.freed {
+                            bail!("close_spawns on freed closure");
+                        }
+                        c.counter -= 1;
+                        self.fire_if_ready(h);
+                    }
+                    Op::SendArgument { value } => {
+                        let v = match value {
+                            Some(e) => expr::eval(e, &|v| env[v.index()]).coerce(func.ret),
+                            None => Value::Unit,
+                        };
+                        self.deliver(inst.cont, v)?;
+                    }
+                    Op::Spawn { .. } => bail!("implicit Spawn in explicit IR"),
+                }
+            }
+            match &b.term {
+                Term::Jump(next) => block = *next,
+                Term::Branch { cond, then_, else_ } => {
+                    let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
+                    block = if c { *then_ } else { *else_ };
+                }
+                Term::Halt => return Ok(()),
+                other => bail!("non-explicit terminator {other:?} in task `{}`", func.name),
+            }
+        }
+    }
+
+    /// Sequential leaf-function evaluation (HLS would inline these).
+    fn eval_leaf(&mut self, fid: FuncId, args: &[Value]) -> Result<Value> {
+        let func = &self.module.funcs[fid];
+        if func.kind != FuncKind::Leaf {
+            bail!("sequential call to non-leaf `{}`", func.name);
+        }
+        let cfg = func.cfg();
+        let mut env: Vec<Value> = func.vars.values().map(|v| Value::zero_of(v.ty)).collect();
+        for (i, a) in args.iter().enumerate() {
+            env[i] = a.coerce(func.vars[VarId::new(i)].ty);
+        }
+        let mut block = cfg.entry;
+        let mut steps = 0u64;
+        loop {
+            steps += 1;
+            if steps > 100_000_000 {
+                bail!("leaf `{}` exceeded step limit", func.name);
+            }
+            let b = &cfg.blocks[block];
+            for op in &b.ops {
+                match op {
+                    Op::Assign { dst, src } => {
+                        let v = expr::eval(src, &|v| env[v.index()]);
+                        env[dst.index()] = v.coerce(func.vars[*dst].ty);
+                    }
+                    Op::Load { dst, arr, index, .. } => {
+                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                        env[dst.index()] = self.memory.load(*arr, idx)?;
+                    }
+                    Op::Store { arr, index, value } => {
+                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                        let val = expr::eval(value, &|v| env[v.index()]);
+                        self.memory.store(*arr, idx, val)?;
+                    }
+                    Op::AtomicAdd { arr, index, value } => {
+                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                        let val = expr::eval(value, &|v| env[v.index()]);
+                        self.memory.atomic_add(*arr, idx, val)?;
+                    }
+                    Op::Call { dst, callee, args } => {
+                        let vals: Vec<Value> =
+                            args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
+                        let r = self.eval_leaf(*callee, &vals)?;
+                        if let Some(d) = dst {
+                            env[d.index()] = r.coerce(func.vars[*d].ty);
+                        }
+                    }
+                    other => bail!("op {other:?} not allowed in leaf `{}`", func.name),
+                }
+            }
+            match &b.term {
+                Term::Jump(next) => block = *next,
+                Term::Branch { cond, then_, else_ } => {
+                    let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
+                    block = if c { *then_ } else { *else_ };
+                }
+                Term::Return(value) => {
+                    return Ok(match value {
+                        Some(e) => expr::eval(e, &|v| env[v.index()]).coerce(func.ret),
+                        None => Value::Unit,
+                    })
+                }
+                other => bail!("terminator {other:?} not allowed in leaf `{}`", func.name),
+            }
+        }
+    }
+
+    /// Live (unfreed) closures — must be zero after a clean drain.
+    pub fn live_closures(&self) -> usize {
+        self.live_closures
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::NoXla;
+    use crate::lower::{compile, CompileOptions};
+
+    fn run_both_orders(src: &str, name: &str, args: &[i64]) -> (i64, ExecStats) {
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let vals: Vec<Value> = args.iter().map(|&a| Value::I64(a)).collect();
+        let mut results = Vec::new();
+        let mut stats = None;
+        for order in [Order::Lifo, Order::Fifo] {
+            let mem = Memory::new(&r.explicit);
+            let mut ex = ExplicitExec::new(&r.explicit, mem, NoXla);
+            ex.order = order;
+            let v = ex.run(name, &vals).unwrap();
+            assert_eq!(ex.live_closures(), 0, "no leaked closures ({order:?})");
+            results.push(v.as_i64());
+            stats = Some(ex.stats.clone());
+        }
+        assert_eq!(results[0], results[1], "order-independent result");
+        (results[0], stats.unwrap())
+    }
+
+    const FIB: &str = "int fib(int n) {
+        if (n < 2) return n;
+        int x = cilk_spawn fib(n - 1);
+        int y = cilk_spawn fib(n - 2);
+        cilk_sync;
+        return x + y;
+    }";
+
+    #[test]
+    fn fib_explicit_matches_reference() {
+        for (n, expect) in [(0, 0), (1, 1), (5, 5), (10, 55), (15, 610)] {
+            let (v, _) = run_both_orders(FIB, "fib", &[n]);
+            assert_eq!(v, expect, "fib({n})");
+        }
+    }
+
+    #[test]
+    fn fib_task_counts() {
+        let (_, stats) = run_both_orders(FIB, "fib", &[10]);
+        // fib(10): 177 calls total; each non-leaf call runs entry +
+        // continuation, each leaf (n<2) runs entry only.
+        assert_eq!(stats.per_role["entry"], 177);
+        assert_eq!(stats.per_role["continuation"], 88);
+        assert_eq!(stats.closures_made, 88);
+    }
+
+    #[test]
+    fn bfs_tree_explicit() {
+        let src = "global int adj_off[6];
+            global int adj_edges[4];
+            global int visited[5];
+            void visit(int n) {
+                int off = adj_off[n];
+                int end = adj_off[n + 1];
+                visited[n] = 1;
+                for (int i = off; i < end; i = i + 1) {
+                    cilk_spawn visit(adj_edges[i]);
+                }
+                cilk_sync;
+            }";
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let m = &r.explicit;
+        let mut mem = Memory::new(m);
+        mem.fill_i64(m.global_by_name("adj_off").unwrap(), &[0, 2, 4, 4, 4, 4]);
+        mem.fill_i64(m.global_by_name("adj_edges").unwrap(), &[1, 2, 3, 4]);
+        let mut ex = ExplicitExec::new(m, mem, NoXla);
+        let v = ex.run("visit", &[Value::I64(0)]).unwrap();
+        assert_eq!(v, Value::Unit);
+        assert_eq!(
+            ex.memory.dump_i64(m.global_by_name("visited").unwrap()),
+            vec![1, 1, 1, 1, 1]
+        );
+        assert_eq!(ex.live_closures(), 0);
+    }
+
+    #[test]
+    fn bfs_dae_same_result_more_tasks() {
+        let src = "global int adj_off[6];
+            global int adj_edges[4];
+            global int visited[5];
+            void visit(int n) {
+                #pragma bombyx dae
+                int off = adj_off[n];
+                #pragma bombyx dae
+                int end = adj_off[n + 1];
+                visited[n] = 1;
+                for (int i = off; i < end; i = i + 1) {
+                    cilk_spawn visit(adj_edges[i]);
+                }
+                cilk_sync;
+            }";
+        let run_with = |dae: bool| {
+            let opts = if dae { CompileOptions::standard() } else { CompileOptions::no_dae() };
+            let r = compile("t", src, &opts).unwrap();
+            let m = &r.explicit;
+            let mut mem = Memory::new(m);
+            mem.fill_i64(m.global_by_name("adj_off").unwrap(), &[0, 2, 4, 4, 4, 4]);
+            mem.fill_i64(m.global_by_name("adj_edges").unwrap(), &[1, 2, 3, 4]);
+            let mut ex = ExplicitExec::new(m, mem, NoXla);
+            ex.run("visit", &[Value::I64(0)]).unwrap();
+            assert_eq!(ex.live_closures(), 0);
+            (
+                ex.memory.dump_i64(m.global_by_name("visited").unwrap()),
+                ex.stats.clone(),
+            )
+        };
+        let (vis_plain, stats_plain) = run_with(false);
+        let (vis_dae, stats_dae) = run_with(true);
+        assert_eq!(vis_plain, vis_dae);
+        // DAE adds access tasks.
+        assert!(stats_dae.per_role.contains_key("access"), "{:?}", stats_dae.per_role);
+        assert!(stats_dae.tasks_run > stats_plain.tasks_run);
+    }
+
+    #[test]
+    fn sync_in_loop_iterates() {
+        let src = "global int acc[1];
+            void work(int n) { atomic_add(acc, 0, n); }
+            void f(int n) {
+                for (int i = 0; i < n; i = i + 1) {
+                    cilk_spawn work(i);
+                    cilk_sync;
+                }
+            }";
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let m = &r.explicit;
+        let mem = Memory::new(m);
+        let mut ex = ExplicitExec::new(m, mem, NoXla);
+        ex.run("f", &[Value::I64(5)]).unwrap();
+        assert_eq!(ex.memory.dump_i64(m.global_by_name("acc").unwrap()), vec![0 + 1 + 2 + 3 + 4]);
+        assert_eq!(ex.live_closures(), 0);
+    }
+
+    #[test]
+    fn nested_spawning_functions() {
+        let src = "
+            int leafv(int n) { return n * n; }
+            int pair(int a, int b) {
+                int x = cilk_spawn leaf2(a);
+                int y = cilk_spawn leaf2(b);
+                cilk_sync;
+                return x + y;
+            }
+            int leaf2(int n) { return n + 1; }
+            int top(int n) {
+                int p = cilk_spawn pair(n, n * 2);
+                int q = cilk_spawn pair(n + 1, 0);
+                cilk_sync;
+                int l = leafv(p);
+                return l + q;
+            }";
+        let (v, _) = run_both_orders(src, "top", &[3]);
+        // pair(3,6) = 4+7 = 11; pair(4,0) = 5+1 = 6; leafv(11)=121; 121+6.
+        assert_eq!(v, 127);
+    }
+}

@@ -1,0 +1,230 @@
+//! Interpreters over both IRs.
+//!
+//! - [`oracle`]: sequential depth-first execution of the *implicit* IR —
+//!   the semantic reference every other execution engine (explicit
+//!   executor, work-stealing runtime, HardCilk simulator) is tested
+//!   against.
+//! - [`explicit_exec`]: a single-threaded scheduler for the *explicit* IR
+//!   (closures, join counters, send_argument) — the Cilk-1 abstract
+//!   machine, and the functional core reused by the cycle simulator.
+
+pub mod explicit_exec;
+pub mod oracle;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::frontend::ast::Type;
+use crate::ir::cfg::{GlobalId, Module};
+use crate::ir::expr::Value;
+
+/// Simulated shared memory: one array per `global` declaration (the FPGA's
+/// HBM in the paper's setting).
+#[derive(Clone, Debug)]
+pub struct Memory {
+    arrays: Vec<Vec<Value>>,
+    elems: Vec<Type>,
+}
+
+impl Memory {
+    /// Allocate per the module's declared sizes (unsized globals start
+    /// empty; use [`Memory::resize`] before running).
+    pub fn new(module: &Module) -> Memory {
+        let mut arrays = Vec::new();
+        let mut elems = Vec::new();
+        for (_, g) in module.globals.iter() {
+            let len = g.size.unwrap_or(0) as usize;
+            arrays.push(vec![Value::zero_of(g.elem); len]);
+            elems.push(g.elem);
+        }
+        Memory { arrays, elems }
+    }
+
+    pub fn resize(&mut self, id: GlobalId, len: usize) {
+        let z = Value::zero_of(self.elems[id.index()]);
+        self.arrays[id.index()].resize(len, z);
+    }
+
+    pub fn resize_by_name(&mut self, module: &Module, name: &str, len: usize) -> Result<()> {
+        let id = module
+            .global_by_name(name)
+            .ok_or_else(|| anyhow!("no global named `{name}`"))?;
+        self.resize(id, len);
+        Ok(())
+    }
+
+    pub fn len(&self, id: GlobalId) -> usize {
+        self.arrays[id.index()].len()
+    }
+
+    pub fn is_empty(&self, id: GlobalId) -> bool {
+        self.arrays[id.index()].is_empty()
+    }
+
+    #[inline]
+    pub fn load(&self, id: GlobalId, index: i64) -> Result<Value> {
+        self.arrays[id.index()]
+            .get(index as usize)
+            .copied()
+            .ok_or_else(|| {
+                anyhow!(
+                    "out-of-bounds load: global #{} index {} (len {})",
+                    id.index(),
+                    index,
+                    self.arrays[id.index()].len()
+                )
+            })
+    }
+
+    #[inline]
+    pub fn store(&mut self, id: GlobalId, index: i64, value: Value) -> Result<()> {
+        let elem = self.elems[id.index()];
+        let arr = &mut self.arrays[id.index()];
+        let len = arr.len();
+        let slot = arr.get_mut(index as usize).ok_or_else(|| {
+            anyhow!("out-of-bounds store: global #{} index {} (len {})", id.index(), index, len)
+        })?;
+        *slot = value.coerce(elem);
+        Ok(())
+    }
+
+    #[inline]
+    pub fn atomic_add(&mut self, id: GlobalId, index: i64, value: Value) -> Result<()> {
+        let old = self.load(id, index)?;
+        let elem = self.elems[id.index()];
+        let new = match elem {
+            Type::Float => Value::F32(old.as_f32() + value.as_f32()),
+            _ => Value::I64(old.as_i64().wrapping_add(value.as_i64())),
+        };
+        self.store(id, index, new)
+    }
+
+    /// Snapshot an array as i64 (test helper).
+    pub fn dump_i64(&self, id: GlobalId) -> Vec<i64> {
+        self.arrays[id.index()].iter().map(|v| v.as_i64()).collect()
+    }
+
+    pub fn dump_f32(&self, id: GlobalId) -> Vec<f32> {
+        self.arrays[id.index()].iter().map(|v| v.as_f32()).collect()
+    }
+
+    /// Fill an array from i64 values (coerced to the element type).
+    pub fn fill_i64(&mut self, id: GlobalId, values: &[i64]) {
+        let elem = self.elems[id.index()];
+        self.arrays[id.index()] =
+            values.iter().map(|&v| Value::I64(v).coerce(elem)).collect();
+    }
+
+    pub fn fill_f32(&mut self, id: GlobalId, values: &[f32]) {
+        let elem = self.elems[id.index()];
+        self.arrays[id.index()] =
+            values.iter().map(|&v| Value::F32(v).coerce(elem)).collect();
+    }
+}
+
+/// Handler for `extern xla` tasks in scalar execution contexts (the oracle,
+/// the explicit executor, the WS runtime's reference mode). The production
+/// path batches these through the AOT XLA executable instead
+/// (`coordinator::batcher`); equivalence between the two is tested.
+pub trait XlaHandler {
+    fn call(&mut self, name: &str, args: &[Value], memory: &mut Memory) -> Result<Value>;
+}
+
+/// Rejects any xla call — for programs that don't use `extern xla`.
+pub struct NoXla;
+
+impl XlaHandler for NoXla {
+    fn call(&mut self, name: &str, _args: &[Value], _memory: &mut Memory) -> Result<Value> {
+        Err(anyhow!("program spawned `extern xla` task `{name}` but no XLA handler is installed"))
+    }
+}
+
+/// Scalar handler built from a plain function map (used by workloads to
+/// provide the reference datapath).
+#[derive(Default)]
+pub struct FnXla {
+    #[allow(clippy::type_complexity)]
+    pub fns: HashMap<String, Box<dyn FnMut(&[Value], &mut Memory) -> Result<Value>>>,
+}
+
+impl FnXla {
+    pub fn register(
+        &mut self,
+        name: &str,
+        f: impl FnMut(&[Value], &mut Memory) -> Result<Value> + 'static,
+    ) {
+        self.fns.insert(name.to_string(), Box::new(f));
+    }
+}
+
+impl XlaHandler for FnXla {
+    fn call(&mut self, name: &str, args: &[Value], memory: &mut Memory) -> Result<Value> {
+        let f = self
+            .fns
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("no scalar implementation registered for xla task `{name}`"))?;
+        f(args, memory)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::cfg::Global;
+
+    fn memory_with(elem: Type, size: u64) -> (Module, Memory) {
+        let mut m = Module::default();
+        m.globals.push(Global { name: "a".into(), elem, size: Some(size) });
+        let mem = Memory::new(&m);
+        (m, mem)
+    }
+
+    #[test]
+    fn load_store_roundtrip() {
+        let (_m, mut mem) = memory_with(Type::Int, 4);
+        let g = GlobalId::new(0);
+        mem.store(g, 2, Value::I64(42)).unwrap();
+        assert_eq!(mem.load(g, 2).unwrap(), Value::I64(42));
+        assert_eq!(mem.load(g, 0).unwrap(), Value::I64(0));
+    }
+
+    #[test]
+    fn oob_is_error_not_panic() {
+        let (_m, mut mem) = memory_with(Type::Int, 4);
+        let g = GlobalId::new(0);
+        assert!(mem.load(g, 4).is_err());
+        assert!(mem.load(g, -1).is_err());
+        assert!(mem.store(g, 100, Value::I64(1)).is_err());
+    }
+
+    #[test]
+    fn atomic_add_accumulates() {
+        let (_m, mut mem) = memory_with(Type::Int, 1);
+        let g = GlobalId::new(0);
+        for _ in 0..5 {
+            mem.atomic_add(g, 0, Value::I64(3)).unwrap();
+        }
+        assert_eq!(mem.load(g, 0).unwrap(), Value::I64(15));
+    }
+
+    #[test]
+    fn float_memory_coerces() {
+        let (_m, mut mem) = memory_with(Type::Float, 2);
+        let g = GlobalId::new(0);
+        mem.store(g, 0, Value::I64(3)).unwrap();
+        assert_eq!(mem.load(g, 0).unwrap(), Value::F32(3.0));
+        mem.atomic_add(g, 0, Value::F32(0.5)).unwrap();
+        assert_eq!(mem.load(g, 0).unwrap(), Value::F32(3.5));
+    }
+
+    #[test]
+    fn resize_zero_fills() {
+        let (_m, mut mem) = memory_with(Type::Int, 0);
+        let g = GlobalId::new(0);
+        assert!(mem.is_empty(g));
+        mem.resize(g, 8);
+        assert_eq!(mem.len(g), 8);
+        assert_eq!(mem.load(g, 7).unwrap(), Value::I64(0));
+    }
+}

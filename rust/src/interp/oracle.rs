@@ -1,0 +1,271 @@
+//! Sequential oracle: depth-first execution of the implicit IR.
+//!
+//! `cilk_spawn` runs the child immediately (serial elision — the C elision
+//! of a Cilk program is a valid execution), `cilk_sync` is a no-op. This is
+//! the ground truth for all parallel engines; any deterministic Cilk-C
+//! program must produce identical results on every engine.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::ir::cfg::{Func, FuncId, FuncKind, Module, Op, Term};
+use crate::ir::expr::{self, Value, VarId};
+
+use super::{Memory, XlaHandler};
+
+/// Execution statistics (used by tests and compile-time benches).
+#[derive(Clone, Debug, Default)]
+pub struct OracleStats {
+    pub calls: u64,
+    pub spawns: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub max_depth: u64,
+}
+
+pub struct Oracle<'m, X: XlaHandler> {
+    pub module: &'m Module,
+    pub memory: Memory,
+    pub xla: X,
+    pub stats: OracleStats,
+    depth: u64,
+    /// Recursion guard (the oracle is recursive; runaway programs should
+    /// error, not blow the stack).
+    pub max_depth_limit: u64,
+}
+
+impl<'m, X: XlaHandler> Oracle<'m, X> {
+    pub fn new(module: &'m Module, memory: Memory, xla: X) -> Self {
+        Oracle { module, memory, xla, stats: OracleStats::default(), depth: 0, max_depth_limit: 1_000_000 }
+    }
+
+    /// Run a function by name with the given arguments.
+    pub fn run(&mut self, name: &str, args: &[Value]) -> Result<Value> {
+        let fid = self
+            .module
+            .func_by_name(name)
+            .ok_or_else(|| anyhow!("no function named `{name}`"))?;
+        self.call(fid, args)
+    }
+
+    pub fn call(&mut self, fid: FuncId, args: &[Value]) -> Result<Value> {
+        self.depth += 1;
+        self.stats.max_depth = self.stats.max_depth.max(self.depth);
+        if self.depth > self.max_depth_limit {
+            bail!("oracle recursion limit exceeded ({})", self.max_depth_limit);
+        }
+        let result = self.call_inner(fid, args);
+        self.depth -= 1;
+        result
+    }
+
+    fn call_inner(&mut self, fid: FuncId, args: &[Value]) -> Result<Value> {
+        self.stats.calls += 1;
+        let func: &Func = &self.module.funcs[fid];
+        if func.kind == FuncKind::Xla {
+            let name = func.name.clone();
+            return self.xla.call(&name, args, &mut self.memory);
+        }
+        let cfg = func.cfg();
+        if args.len() != func.params {
+            bail!("`{}` expects {} args, got {}", func.name, func.params, args.len());
+        }
+        let mut env: Vec<Value> = func
+            .vars
+            .values()
+            .map(|v| Value::zero_of(v.ty))
+            .collect();
+        for (i, &a) in args.iter().enumerate() {
+            env[i] = a.coerce(func.vars[VarId::new(i)].ty);
+        }
+
+        let mut block = cfg.entry;
+        let mut steps: u64 = 0;
+        loop {
+            steps += 1;
+            if steps > 100_000_000 {
+                bail!("`{}` exceeded step limit (infinite loop?)", func.name);
+            }
+            let b = &cfg.blocks[block];
+            for op in &b.ops {
+                match op {
+                    Op::Assign { dst, src } => {
+                        let v = expr::eval(src, &|v| env[v.index()]);
+                        env[dst.index()] = v.coerce(func.vars[*dst].ty);
+                    }
+                    Op::Load { dst, arr, index, .. } => {
+                        self.stats.loads += 1;
+                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                        env[dst.index()] = self.memory.load(*arr, idx)?;
+                    }
+                    Op::Store { arr, index, value } => {
+                        self.stats.stores += 1;
+                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                        let val = expr::eval(value, &|v| env[v.index()]);
+                        self.memory.store(*arr, idx, val)?;
+                    }
+                    Op::AtomicAdd { arr, index, value } => {
+                        self.stats.stores += 1;
+                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                        let val = expr::eval(value, &|v| env[v.index()]);
+                        self.memory.atomic_add(*arr, idx, val)?;
+                    }
+                    Op::Call { dst, callee, args } => {
+                        let vals: Vec<Value> =
+                            args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
+                        let r = self.call(*callee, &vals)?;
+                        if let Some(d) = dst {
+                            env[d.index()] = r.coerce(func.vars[*d].ty);
+                        }
+                    }
+                    Op::Spawn { dst, callee, args } => {
+                        self.stats.spawns += 1;
+                        let vals: Vec<Value> =
+                            args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
+                        let r = self.call(*callee, &vals)?;
+                        if let Some(d) = dst {
+                            env[d.index()] = r.coerce(func.vars[*d].ty);
+                        }
+                    }
+                    other => bail!("oracle runs implicit IR only, found {other:?}"),
+                }
+            }
+            match &b.term {
+                Term::Jump(next) => block = *next,
+                Term::Sync { next } => block = *next, // children already ran
+                Term::Branch { cond, then_, else_ } => {
+                    let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
+                    block = if c { *then_ } else { *else_ };
+                }
+                Term::Return(value) => {
+                    return Ok(match value {
+                        Some(e) => {
+                            expr::eval(e, &|v| env[v.index()]).coerce(func.ret)
+                        }
+                        None => Value::Unit,
+                    });
+                }
+                Term::Halt => bail!("oracle runs implicit IR only (Halt found)"),
+            }
+        }
+    }
+}
+
+/// Convenience: compile nothing, just run an implicit module function.
+pub fn run_oracle(
+    module: &Module,
+    memory: Memory,
+    name: &str,
+    args: &[Value],
+) -> Result<(Value, Memory)> {
+    let mut o = Oracle::new(module, memory, super::NoXla);
+    let v = o.run(name, args)?;
+    Ok((v, o.memory))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::{compile, CompileOptions};
+
+    fn run(src: &str, name: &str, args: &[i64]) -> i64 {
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let mem = Memory::new(&r.implicit);
+        let vals: Vec<Value> = args.iter().map(|&a| Value::I64(a)).collect();
+        let (v, _) = run_oracle(&r.implicit, mem, name, &vals).unwrap();
+        v.as_i64()
+    }
+
+    #[test]
+    fn fib_reference_values() {
+        let src = "int fib(int n) {
+            if (n < 2) return n;
+            int x = cilk_spawn fib(n - 1);
+            int y = cilk_spawn fib(n - 2);
+            cilk_sync;
+            return x + y;
+        }";
+        for (n, expect) in [(0, 0), (1, 1), (2, 1), (5, 5), (10, 55), (15, 610), (20, 6765)] {
+            assert_eq!(run(src, "fib", &[n]), expect, "fib({n})");
+        }
+    }
+
+    #[test]
+    fn loops_and_arithmetic() {
+        let src = "int sumsq(int n) {
+            int acc = 0;
+            for (int i = 1; i <= n; i = i + 1) { acc = acc + i * i; }
+            return acc;
+        }";
+        assert_eq!(run(src, "sumsq", &[5]), 55);
+        assert_eq!(run(src, "sumsq", &[0]), 0);
+    }
+
+    #[test]
+    fn leaf_calls() {
+        let src = "int double_(int a) { return a * 2; }
+                   int f(int n) { int d = double_(n); return d + 1; }";
+        assert_eq!(run(src, "f", &[10]), 21);
+    }
+
+    #[test]
+    fn memory_program() {
+        let src = "global int a[8];
+            void fill(int n) {
+                for (int i = 0; i < n; i = i + 1) { a[i] = i * 3; }
+            }
+            int sum(int n) {
+                int acc = 0;
+                for (int i = 0; i < n; i = i + 1) { acc = acc + a[i]; }
+                return acc;
+            }
+            int go(int n) { fill(n); int s = sum(n); return s; }";
+        assert_eq!(run(src, "go", &[8]), 3 * (0 + 1 + 2 + 3 + 4 + 5 + 6 + 7));
+    }
+
+    #[test]
+    fn bfs_tree_marks_all_nodes() {
+        // Tiny tree: 0 -> 1,2 ; 1 -> 3,4 ; adjacency in CSR form.
+        let src = "global int adj_off[6];
+            global int adj_edges[4];
+            global int visited[5];
+            void visit(int n) {
+                int off = adj_off[n];
+                int end = adj_off[n + 1];
+                visited[n] = 1;
+                for (int i = off; i < end; i = i + 1) {
+                    cilk_spawn visit(adj_edges[i]);
+                }
+                cilk_sync;
+            }";
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let m = &r.implicit;
+        let mut mem = Memory::new(m);
+        mem.fill_i64(m.global_by_name("adj_off").unwrap(), &[0, 2, 4, 4, 4, 4]);
+        mem.fill_i64(m.global_by_name("adj_edges").unwrap(), &[1, 2, 3, 4]);
+        let (_, mem) = run_oracle(m, mem, "visit", &[Value::I64(0)]).unwrap();
+        assert_eq!(mem.dump_i64(m.global_by_name("visited").unwrap()), vec![1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn float_arithmetic() {
+        let src = "float scale(float x, int n) {
+            float acc = x;
+            for (int i = 0; i < n; i = i + 1) { acc = acc * 1.5; }
+            return acc;
+        }";
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let mem = Memory::new(&r.implicit);
+        let (v, _) =
+            run_oracle(&r.implicit, mem, "scale", &[Value::F32(2.0), Value::I64(3)]).unwrap();
+        assert_eq!(v, Value::F32(6.75));
+    }
+
+    #[test]
+    fn infinite_loop_errors() {
+        let src = "int f(int n) { while (true) { n = n + 1; } return n; }";
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let mem = Memory::new(&r.implicit);
+        let err = run_oracle(&r.implicit, mem, "f", &[Value::I64(0)]).unwrap_err();
+        assert!(err.to_string().contains("step limit"));
+    }
+}

@@ -1,0 +1,439 @@
+//! The implicit IR: per-function control-flow graphs with `sync` as a
+//! block terminator (paper Fig. 4(b)).
+
+use crate::frontend::ast::Type;
+use crate::util::idvec::{Id, IdVec};
+
+use super::expr::{Expr, Var, VarId};
+
+/// A shared-memory array (models device HBM; the FPGA's off-chip memory).
+#[derive(Clone, Debug)]
+pub struct Global {
+    pub name: String,
+    pub elem: Type,
+    /// Declared element count (`None` = sized by the driver at load time).
+    pub size: Option<u64>,
+}
+
+pub type GlobalId = Id<Global>;
+
+/// A compilation unit after AST lowering.
+#[derive(Clone, Debug, Default)]
+pub struct Module {
+    pub globals: IdVec<Global>,
+    pub funcs: IdVec<Func>,
+}
+
+impl Module {
+    pub fn func_by_name(&self, name: &str) -> Option<FuncId> {
+        self.funcs.iter().find(|(_, f)| f.name == name).map(|(id, _)| id)
+    }
+
+    pub fn global_by_name(&self, name: &str) -> Option<GlobalId> {
+        self.globals.iter().find(|(_, g)| g.name == name).map(|(id, _)| id)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FuncKind {
+    /// Ordinary Cilk-C function (may spawn).
+    Task,
+    /// Spawn-free function callable sequentially (HLS would inline it).
+    Leaf,
+    /// `extern xla` — body is the AOT-compiled XLA PE datapath.
+    Xla,
+}
+
+/// Role of an explicit task within its source function (paper §III's PE
+/// taxonomy: spawner / executor / access).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskRole {
+    /// The path starting at the source function's entry.
+    Entry,
+    /// A continuation task (entered through `spawn_next` at a sync).
+    Continuation,
+    /// A re-entered join block (loop header crossing task boundaries).
+    Join,
+    /// A DAE-extracted memory access task.
+    Access,
+    /// An `extern xla` task (batched XLA PE datapath).
+    Xla,
+}
+
+impl TaskRole {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskRole::Entry => "entry",
+            TaskRole::Continuation => "continuation",
+            TaskRole::Join => "join",
+            TaskRole::Access => "access",
+            TaskRole::Xla => "xla",
+        }
+    }
+}
+
+/// Metadata attached to a function once it has been explicitized into a
+/// Cilk-1 task.
+#[derive(Clone, Debug)]
+pub struct TaskMeta {
+    pub role: TaskRole,
+    /// Type of the value this task eventually `send_argument`s to its
+    /// continuation (`Void` = pure completion notification).
+    pub cont_ty: Type,
+    /// Name of the originating Cilk-C function.
+    pub source: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Func {
+    pub name: String,
+    pub ret: Type,
+    /// The first `params` entries of `vars` are the parameters, in order.
+    pub params: usize,
+    pub vars: IdVec<Var>,
+    /// `None` for `extern xla` declarations.
+    pub body: Option<Cfg>,
+    pub kind: FuncKind,
+    /// `Some` once this function is an explicit Cilk-1 task.
+    pub task: Option<TaskMeta>,
+}
+
+pub type FuncId = Id<Func>;
+
+impl Func {
+    pub fn param_ids(&self) -> impl Iterator<Item = VarId> + '_ {
+        (0..self.params).map(VarId::new)
+    }
+
+    pub fn cfg(&self) -> &Cfg {
+        self.body.as_ref().expect("function has no body")
+    }
+
+    pub fn cfg_mut(&mut self) -> &mut Cfg {
+        self.body.as_mut().expect("function has no body")
+    }
+
+    /// Does any block contain a spawn?
+    pub fn has_spawns(&self) -> bool {
+        self.body
+            .as_ref()
+            .map(|cfg| {
+                cfg.blocks
+                    .values()
+                    .any(|b| b.ops.iter().any(|op| matches!(op, Op::Spawn { .. })))
+            })
+            .unwrap_or(false)
+    }
+
+    /// Does any block end in a sync?
+    pub fn has_syncs(&self) -> bool {
+        self.body
+            .as_ref()
+            .map(|cfg| cfg.blocks.values().any(|b| matches!(b.term, Term::Sync { .. })))
+            .unwrap_or(false)
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Cfg {
+    pub blocks: IdVec<Block>,
+    pub entry: BlockId,
+}
+
+pub type BlockId = Id<Block>;
+
+#[derive(Clone, Debug, Default)]
+pub struct Block {
+    pub ops: Vec<Op>,
+    pub term: Term,
+}
+
+pub type FieldIdx = u32;
+
+/// Where a spawned child delivers its result (explicit IR only).
+#[derive(Clone, Debug, PartialEq)]
+pub enum RetTarget {
+    /// Fill field `field` of the closure held in `clos`, then decrement its
+    /// join counter. (`send_argument` into a hole.)
+    Slot { clos: VarId, field: FieldIdx },
+    /// Void child: only decrement the closure's join counter.
+    Counter { clos: VarId },
+    /// Tail transition: the child inherits this task's own continuation.
+    Forward,
+}
+
+/// Straight-line operations. The first group exists in both IRs; the
+/// `--- explicit IR only ---` group is introduced by explicitization
+/// (Cilk-1's `spawn_next` / `send_argument`, paper Fig. 2).
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// `dst = expr`
+    Assign { dst: VarId, src: Expr },
+    /// `dst = arr[index]` — the memory-access primitive. `dae` marks it as
+    /// annotated by `#pragma bombyx dae`.
+    Load { dst: VarId, arr: GlobalId, index: Expr, dae: bool },
+    /// `arr[index] = value`
+    Store { arr: GlobalId, index: Expr, value: Expr },
+    /// `atomic_add(arr, index, value)`
+    AtomicAdd { arr: GlobalId, index: Expr, value: Expr },
+    /// Sequential call to a leaf function.
+    Call { dst: Option<VarId>, callee: FuncId, args: Vec<Expr> },
+    /// `cilk_spawn` — `dst` is `None` for void spawns. (Implicit IR only.)
+    Spawn { dst: Option<VarId>, callee: FuncId, args: Vec<Expr> },
+
+    // --- explicit IR only -------------------------------------------------
+    /// `spawn_next`: allocate a closure for continuation task `task` with
+    /// join counter 1 (the creator's hold — see DESIGN.md §6.2) and bind the
+    /// handle to `dst`. The current task's continuation is forwarded into
+    /// the closure's cont slot.
+    MakeClosure { dst: VarId, task: FuncId },
+    /// Write a ready argument into closure param slot `field`.
+    ClosureStore { clos: VarId, field: FieldIdx, value: Expr },
+    /// `spawn`: enqueue child task. Increments the target closure's join
+    /// counter *before* the child becomes runnable (race-free dynamic join).
+    SpawnChild { callee: FuncId, args: Vec<Expr>, ret: RetTarget },
+    /// Drop the creator's hold on the closure; it fires when the counter
+    /// reaches zero.
+    CloseSpawns { clos: VarId },
+    /// `send_argument(k, value)`: deliver to this task's continuation.
+    SendArgument { value: Option<Expr> },
+}
+
+impl Op {
+    /// Variable defined by this op, if any.
+    pub fn def(&self) -> Option<VarId> {
+        match self {
+            Op::Assign { dst, .. } | Op::Load { dst, .. } | Op::MakeClosure { dst, .. } => {
+                Some(*dst)
+            }
+            Op::Call { dst, .. } | Op::Spawn { dst, .. } => *dst,
+            Op::Store { .. }
+            | Op::AtomicAdd { .. }
+            | Op::ClosureStore { .. }
+            | Op::SpawnChild { .. }
+            | Op::CloseSpawns { .. }
+            | Op::SendArgument { .. } => None,
+        }
+    }
+
+    /// Visit every variable *used* by this op.
+    pub fn for_each_use(&self, f: &mut impl FnMut(VarId)) {
+        match self {
+            Op::Assign { src, .. } => src.for_each_var(f),
+            Op::Load { index, .. } => index.for_each_var(f),
+            Op::Store { index, value, .. } | Op::AtomicAdd { index, value, .. } => {
+                index.for_each_var(f);
+                value.for_each_var(f);
+            }
+            Op::Call { args, .. } | Op::Spawn { args, .. } => {
+                args.iter().for_each(|a| a.for_each_var(f))
+            }
+            Op::MakeClosure { .. } => {}
+            Op::ClosureStore { clos, value, .. } => {
+                f(*clos);
+                value.for_each_var(f);
+            }
+            Op::SpawnChild { args, ret, .. } => {
+                args.iter().for_each(|a| a.for_each_var(f));
+                match ret {
+                    RetTarget::Slot { clos, .. } | RetTarget::Counter { clos } => f(*clos),
+                    RetTarget::Forward => {}
+                }
+            }
+            Op::CloseSpawns { clos } => f(*clos),
+            Op::SendArgument { value } => {
+                if let Some(v) = value {
+                    v.for_each_var(f)
+                }
+            }
+        }
+    }
+
+    /// Is this op only valid in the explicit IR?
+    pub fn is_explicit_only(&self) -> bool {
+        matches!(
+            self,
+            Op::MakeClosure { .. }
+                | Op::ClosureStore { .. }
+                | Op::SpawnChild { .. }
+                | Op::CloseSpawns { .. }
+                | Op::SendArgument { .. }
+        )
+    }
+}
+
+/// Block terminators. `Sync` is a terminator by design — see module docs.
+#[derive(Clone, Debug)]
+pub enum Term {
+    Jump(BlockId),
+    Branch { cond: Expr, then_: BlockId, else_: BlockId },
+    /// Implicit IR only: return from the function.
+    Return(Option<Expr>),
+    /// `cilk_sync;` — wait for all children spawned so far, then continue at
+    /// `next`. Explicitization cuts the function here. (Implicit IR only.)
+    Sync { next: BlockId },
+    /// Explicit IR only: the task terminates (it has already delivered its
+    /// effects via SendArgument / CloseSpawns / SpawnChild).
+    Halt,
+}
+
+impl Default for Term {
+    fn default() -> Term {
+        Term::Return(None)
+    }
+}
+
+impl Term {
+    pub fn successors(&self) -> Vec<BlockId> {
+        match self {
+            Term::Jump(b) => vec![*b],
+            Term::Branch { then_, else_, .. } => vec![*then_, *else_],
+            Term::Sync { next } => vec![*next],
+            Term::Return(_) | Term::Halt => vec![],
+        }
+    }
+
+    pub fn for_each_use(&self, f: &mut impl FnMut(VarId)) {
+        match self {
+            Term::Branch { cond, .. } => cond.for_each_var(f),
+            Term::Return(Some(e)) => e.for_each_var(f),
+            _ => {}
+        }
+    }
+
+    /// Rewrite successor block ids through `map`.
+    pub fn map_blocks(&self, map: &impl Fn(BlockId) -> BlockId) -> Term {
+        match self {
+            Term::Jump(b) => Term::Jump(map(*b)),
+            Term::Branch { cond, then_, else_ } => {
+                Term::Branch { cond: cond.clone(), then_: map(*then_), else_: map(*else_) }
+            }
+            Term::Sync { next } => Term::Sync { next: map(*next) },
+            Term::Return(e) => Term::Return(e.clone()),
+            Term::Halt => Term::Halt,
+        }
+    }
+}
+
+impl Cfg {
+    /// Predecessor lists, indexed by block.
+    pub fn predecessors(&self) -> Vec<Vec<BlockId>> {
+        let mut preds = vec![Vec::new(); self.blocks.len()];
+        for (id, block) in self.blocks.iter() {
+            for succ in block.term.successors() {
+                preds[succ.index()].push(id);
+            }
+        }
+        preds
+    }
+
+    /// Blocks reachable from entry, in reverse post-order.
+    pub fn reverse_postorder(&self) -> Vec<BlockId> {
+        let mut visited = vec![false; self.blocks.len()];
+        let mut order = Vec::new();
+        // Iterative DFS with an explicit "post" marker stack.
+        let mut stack = vec![(self.entry, false)];
+        while let Some((b, post)) = stack.pop() {
+            if post {
+                order.push(b);
+                continue;
+            }
+            if visited[b.index()] {
+                continue;
+            }
+            visited[b.index()] = true;
+            stack.push((b, true));
+            for succ in self.blocks[b].term.successors() {
+                if !visited[succ.index()] {
+                    stack.push((succ, false));
+                }
+            }
+        }
+        order.reverse();
+        order
+    }
+
+    /// Set of blocks reachable from entry.
+    pub fn reachable(&self) -> Vec<bool> {
+        let mut seen = vec![false; self.blocks.len()];
+        let mut stack = vec![self.entry];
+        while let Some(b) = stack.pop() {
+            if std::mem::replace(&mut seen[b.index()], true) {
+                continue;
+            }
+            for succ in self.blocks[b].term.successors() {
+                if !seen[succ.index()] {
+                    stack.push(succ);
+                }
+            }
+        }
+        seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ast::BinOp;
+
+    fn var(name: &str) -> Var {
+        Var { name: name.into(), ty: Type::Int, is_param: false, is_temp: false }
+    }
+
+    /// Build the fib-like diamond: entry -> (ret | spawn-block -> sync -> join)
+    fn diamond() -> Cfg {
+        let mut cfg = Cfg::default();
+        let entry = cfg.blocks.push(Block::default());
+        let ret_n = cfg.blocks.push(Block { ops: vec![], term: Term::Return(Some(Expr::ConstI(1))) });
+        let spawns = cfg.blocks.push(Block::default());
+        let join = cfg.blocks.push(Block { ops: vec![], term: Term::Return(Some(Expr::ConstI(2))) });
+        cfg.blocks[entry].term = Term::Branch {
+            cond: Expr::Binary(BinOp::Lt, Box::new(Expr::ConstI(0)), Box::new(Expr::ConstI(2))),
+            then_: ret_n,
+            else_: spawns,
+        };
+        cfg.blocks[spawns].term = Term::Sync { next: join };
+        cfg.entry = entry;
+        cfg
+    }
+
+    #[test]
+    fn predecessors_and_rpo() {
+        let cfg = diamond();
+        let preds = cfg.predecessors();
+        assert_eq!(preds[0], vec![]);
+        assert_eq!(preds[1].len(), 1);
+        assert_eq!(preds[3].len(), 1);
+        let rpo = cfg.reverse_postorder();
+        assert_eq!(rpo.len(), 4);
+        assert_eq!(rpo[0], cfg.entry);
+        // entry precedes all its successors in RPO.
+        let pos = |b: BlockId| rpo.iter().position(|x| *x == b).unwrap();
+        assert!(pos(BlockId::new(0)) < pos(BlockId::new(2)));
+        assert!(pos(BlockId::new(2)) < pos(BlockId::new(3)));
+    }
+
+    #[test]
+    fn reachable_excludes_orphans() {
+        let mut cfg = diamond();
+        let orphan = cfg.blocks.push(Block::default());
+        let seen = cfg.reachable();
+        assert!(seen[0] && seen[1] && seen[2] && seen[3]);
+        assert!(!seen[orphan.index()]);
+    }
+
+    #[test]
+    fn op_def_use() {
+        let mut vars: IdVec<Var> = IdVec::new();
+        let a = vars.push(var("a"));
+        let b = vars.push(var("b"));
+        let op = Op::Assign {
+            dst: a,
+            src: Expr::Binary(BinOp::Add, Box::new(Expr::Var(b)), Box::new(Expr::ConstI(1))),
+        };
+        assert_eq!(op.def(), Some(a));
+        let mut uses = Vec::new();
+        op.for_each_use(&mut |v| uses.push(v));
+        assert_eq!(uses, vec![b]);
+    }
+}

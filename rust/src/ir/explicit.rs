@@ -1,0 +1,241 @@
+//! Explicit-IR-level metadata: closure layouts and task-graph queries.
+//!
+//! A *closure* (paper §II, Fig. 2) is the in-memory record created by
+//! `spawn_next`: ready arguments, placeholders ("holes") for anticipated
+//! dependencies, a return continuation, and a join counter. HardCilk
+//! requires each closure padded to a hardware-friendly power-of-two width
+//! (§II-B); this module computes those layouts from task signatures.
+
+use crate::frontend::ast::Type;
+use crate::util::align::{pow2_bucket, round_up};
+
+use super::cfg::{Func, FuncId, FuncKind, Module, Op, RetTarget};
+
+/// Field offsets/widths of one task's closure.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClosureLayout {
+    pub task_name: String,
+    /// (param name, type, bit offset, bit width) per data parameter, in
+    /// parameter order.
+    pub fields: Vec<ClosureField>,
+    /// Continuation slot offset (every closure carries one: closure address
+    /// + slot index of the parent, 64 bits).
+    pub cont_offset_bits: u32,
+    /// Join-counter offset (32 bits).
+    pub counter_offset_bits: u32,
+    /// Sum of field widths + cont + counter, before padding.
+    pub payload_bits: u32,
+    /// Power-of-two padded width (what the queues/memory interface see).
+    pub padded_bits: u32,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClosureField {
+    pub name: String,
+    pub ty: Type,
+    pub offset_bits: u32,
+    pub width_bits: u32,
+}
+
+/// HardCilk closure width rules (paper §II-B mentions 128/256-bit
+/// alignment; HardCilk's generator uses power-of-two buckets).
+pub const MIN_CLOSURE_BITS: u32 = 128;
+pub const MAX_CLOSURE_BITS: u32 = 1024;
+/// Each field is aligned to this boundary so the write buffer can update a
+/// hole with a single beat.
+pub const FIELD_ALIGN_BITS: u32 = 32;
+pub const CONT_SLOT_BITS: u32 = 64;
+pub const COUNTER_BITS: u32 = 32;
+
+/// Compute the closure layout for a task function.
+pub fn closure_layout(func: &Func) -> ClosureLayout {
+    let mut offset = 0u32;
+    let mut fields = Vec::new();
+    for vid in func.param_ids() {
+        let var = &func.vars[vid];
+        let width = round_up(var.ty.bits().max(1), FIELD_ALIGN_BITS);
+        fields.push(ClosureField {
+            name: var.name.clone(),
+            ty: var.ty,
+            offset_bits: offset,
+            width_bits: width,
+        });
+        offset += width;
+    }
+    let cont_offset_bits = round_up(offset, CONT_SLOT_BITS);
+    offset = cont_offset_bits + CONT_SLOT_BITS;
+    let counter_offset_bits = offset;
+    offset += COUNTER_BITS;
+    ClosureLayout {
+        task_name: func.name.clone(),
+        fields,
+        cont_offset_bits,
+        counter_offset_bits,
+        payload_bits: offset,
+        padded_bits: pow2_bucket(offset, MIN_CLOSURE_BITS, MAX_CLOSURE_BITS),
+    }
+}
+
+impl ClosureLayout {
+    /// Padding overhead the paper's §II-B says users add by hand.
+    pub fn padding_bits(&self) -> u32 {
+        self.padded_bits - self.payload_bits
+    }
+
+    pub fn padded_bytes(&self) -> u32 {
+        self.padded_bits / 8
+    }
+}
+
+/// Task-graph edges for the HardCilk JSON descriptor: which tasks a task may
+/// `spawn`, `spawn_next`, or `send_argument` to (paper §II-B).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TaskRelations {
+    pub spawns: Vec<FuncId>,
+    pub spawn_nexts: Vec<FuncId>,
+    /// Tasks whose closures this task fills via child-return or tail
+    /// forwarding (conservatively: every continuation it may target).
+    pub sends_to: Vec<FuncId>,
+}
+
+/// Compute relations for every explicit task in the module.
+pub fn task_relations(module: &Module, func: FuncId) -> TaskRelations {
+    let mut rel = TaskRelations::default();
+    let f = &module.funcs[func];
+    let Some(cfg) = f.body.as_ref() else {
+        return rel;
+    };
+    let push_unique = |list: &mut Vec<FuncId>, id: FuncId| {
+        if !list.contains(&id) {
+            list.push(id);
+        }
+    };
+    for block in cfg.blocks.values() {
+        for op in &block.ops {
+            match op {
+                Op::MakeClosure { task, .. } => push_unique(&mut rel.spawn_nexts, *task),
+                Op::SpawnChild { callee, ret, .. } => {
+                    push_unique(&mut rel.spawns, *callee);
+                    if let RetTarget::Slot { .. } | RetTarget::Counter { .. } = ret {
+                        // The child sends into a closure this task created;
+                        // recorded on the child's side below.
+                    }
+                }
+                Op::SendArgument { .. } => {
+                    // Recorded at module level (see `send_targets`).
+                }
+                _ => {}
+            }
+        }
+    }
+    rel.sends_to = send_targets(module, func);
+    rel
+}
+
+/// Conservative send-targets: any task that creates a closure whose children
+/// include `func` may receive a send_argument from it; plus tail-forward
+/// chains. For the descriptor we report the continuation tasks `func`'s
+/// sends can land in: every task T such that some task makes a closure for T
+/// and spawns `func` against it.
+fn send_targets(module: &Module, func: FuncId) -> Vec<FuncId> {
+    let mut out = Vec::new();
+    for (_, creator) in module.funcs.iter() {
+        let Some(cfg) = creator.body.as_ref() else { continue };
+        for block in cfg.blocks.values() {
+            // Map closure var -> continuation task within this block scan.
+            let mut clos_task: Vec<(super::VarId, FuncId)> = Vec::new();
+            for op in &block.ops {
+                match op {
+                    Op::MakeClosure { dst, task } => clos_task.push((*dst, *task)),
+                    Op::SpawnChild { callee, ret, .. } if *callee == func => {
+                        if let RetTarget::Slot { clos, .. } | RetTarget::Counter { clos } = ret {
+                            if let Some((_, t)) =
+                                clos_task.iter().find(|(c, _)| c == clos).copied().map(|x| (x.0, x.1)).map(Some).unwrap_or(None)
+                            {
+                                if !out.contains(&t) {
+                                    out.push(t);
+                                }
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    out
+}
+
+/// All explicit tasks of a module (functions carrying task metadata).
+pub fn explicit_tasks(module: &Module) -> Vec<FuncId> {
+    module
+        .funcs
+        .iter()
+        .filter(|(_, f)| f.task.is_some() && f.kind != FuncKind::Leaf)
+        .map(|(id, _)| id)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Var;
+    use crate::util::idvec::IdVec;
+
+    fn mk_func(name: &str, param_tys: &[Type]) -> Func {
+        let mut vars = IdVec::new();
+        for (i, &ty) in param_tys.iter().enumerate() {
+            vars.push(Var { name: format!("p{i}"), ty, is_param: true, is_temp: false });
+        }
+        Func {
+            name: name.into(),
+            ret: Type::Int,
+            params: param_tys.len(),
+            vars,
+            body: None,
+            kind: FuncKind::Task,
+            task: None,
+        }
+    }
+
+    #[test]
+    fn fib_closure_is_256_bits() {
+        // fib continuation: (x: int, y: int) + cont(64) + counter(32)
+        // = 64 + 64 + 64 + 32 = 224 -> padded 256. Matches HardCilk's
+        // "closures aligned to 128/256 bits".
+        let f = mk_func("fib_sync0", &[Type::Int, Type::Int]);
+        let layout = closure_layout(&f);
+        assert_eq!(layout.payload_bits, 224);
+        assert_eq!(layout.padded_bits, 256);
+        assert_eq!(layout.padding_bits(), 32);
+        assert_eq!(layout.fields.len(), 2);
+        assert_eq!(layout.fields[1].offset_bits, 64);
+    }
+
+    #[test]
+    fn empty_closure_is_min_width() {
+        let f = mk_func("t", &[]);
+        let layout = closure_layout(&f);
+        assert_eq!(layout.payload_bits, CONT_SLOT_BITS + COUNTER_BITS);
+        assert_eq!(layout.padded_bits, MIN_CLOSURE_BITS);
+    }
+
+    #[test]
+    fn float_fields_align_to_32() {
+        let f = mk_func("t", &[Type::Float, Type::Bool, Type::Int]);
+        let layout = closure_layout(&f);
+        assert_eq!(layout.fields[0].width_bits, 32);
+        assert_eq!(layout.fields[1].width_bits, 32); // bool padded to a beat
+        assert_eq!(layout.fields[2].offset_bits, 64);
+        // 32+32+64 = 128 data; cont at 128; counter at 192 -> 224 -> 256.
+        assert_eq!(layout.padded_bits, 256);
+    }
+
+    #[test]
+    fn wide_closures_bucket_up() {
+        let f = mk_func("t", &[Type::Int; 8]);
+        let layout = closure_layout(&f);
+        // 8*64 = 512 data + 64 + 32 = 608 -> 1024.
+        assert_eq!(layout.padded_bits, 1024);
+    }
+}

@@ -1,0 +1,408 @@
+//! Side-effect-free IR expressions and runtime values.
+//!
+//! Memory reads are *not* expressions — `ast_to_cfg` hoists every global
+//! array read into an [`crate::ir::cfg::Op::Load`], so expressions evaluate
+//! purely over local variables. This is what makes liveness, the DAE
+//! transform and the HLS latency model straightforward.
+
+use crate::frontend::ast::{BinOp, Type, UnOp};
+use crate::util::idvec::Id;
+
+/// A function-local variable (parameter or local/temp).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Var {
+    pub name: String,
+    pub ty: Type,
+    pub is_param: bool,
+    /// True for compiler-introduced temporaries (hoisted loads etc.).
+    pub is_temp: bool,
+}
+
+pub type VarId = Id<Var>;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Builtin {
+    Min,
+    Max,
+    Abs,
+}
+
+impl Builtin {
+    pub fn name(self) -> &'static str {
+        match self {
+            Builtin::Min => "min",
+            Builtin::Max => "max",
+            Builtin::Abs => "abs",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Builtin> {
+        match name {
+            "min" => Some(Builtin::Min),
+            "max" => Some(Builtin::Max),
+            "abs" => Some(Builtin::Abs),
+            _ => None,
+        }
+    }
+}
+
+/// Pure expression tree over local variables.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    ConstI(i64),
+    ConstF(f32),
+    ConstB(bool),
+    Var(VarId),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    Unary(UnOp, Box<Expr>),
+    Builtin(Builtin, Vec<Expr>),
+    /// Implicit int → float widening inserted during lowering.
+    IntToFloat(Box<Expr>),
+}
+
+impl Expr {
+    pub fn var(id: VarId) -> Expr {
+        Expr::Var(id)
+    }
+
+    /// Visit every variable referenced by this expression.
+    pub fn for_each_var(&self, f: &mut impl FnMut(VarId)) {
+        match self {
+            Expr::Var(v) => f(*v),
+            Expr::Binary(_, a, b) => {
+                a.for_each_var(f);
+                b.for_each_var(f);
+            }
+            Expr::Unary(_, e) | Expr::IntToFloat(e) => e.for_each_var(f),
+            Expr::Builtin(_, args) => args.iter().for_each(|a| a.for_each_var(f)),
+            Expr::ConstI(_) | Expr::ConstF(_) | Expr::ConstB(_) => {}
+        }
+    }
+
+    /// Rewrite every variable reference through `map` (used when splicing
+    /// code into a new function with a fresh variable table).
+    pub fn map_vars(&self, map: &impl Fn(VarId) -> VarId) -> Expr {
+        match self {
+            Expr::Var(v) => Expr::Var(map(*v)),
+            Expr::Binary(op, a, b) => {
+                Expr::Binary(*op, Box::new(a.map_vars(map)), Box::new(b.map_vars(map)))
+            }
+            Expr::Unary(op, e) => Expr::Unary(*op, Box::new(e.map_vars(map))),
+            Expr::IntToFloat(e) => Expr::IntToFloat(Box::new(e.map_vars(map))),
+            Expr::Builtin(b, args) => {
+                Expr::Builtin(*b, args.iter().map(|a| a.map_vars(map)).collect())
+            }
+            Expr::ConstI(v) => Expr::ConstI(*v),
+            Expr::ConstF(v) => Expr::ConstF(*v),
+            Expr::ConstB(v) => Expr::ConstB(*v),
+        }
+    }
+
+    /// Number of nodes — used by the HLS resource/latency models as the
+    /// datapath operator count.
+    pub fn size(&self) -> usize {
+        match self {
+            Expr::Binary(_, a, b) => 1 + a.size() + b.size(),
+            Expr::Unary(_, e) | Expr::IntToFloat(e) => 1 + e.size(),
+            Expr::Builtin(_, args) => 1 + args.iter().map(Expr::size).sum::<usize>(),
+            _ => 1,
+        }
+    }
+
+    /// Count binary/unary/builtin operator nodes by a classifier (see
+    /// `hls::resource`).
+    pub fn for_each_node(&self, f: &mut impl FnMut(&Expr)) {
+        f(self);
+        match self {
+            Expr::Binary(_, a, b) => {
+                a.for_each_node(f);
+                b.for_each_node(f);
+            }
+            Expr::Unary(_, e) | Expr::IntToFloat(e) => e.for_each_node(f),
+            Expr::Builtin(_, args) => args.iter().for_each(|a| a.for_each_node(f)),
+            _ => {}
+        }
+    }
+}
+
+/// A runtime value (shared by the oracle interpreter, the explicit-IR
+/// executor, the work-stealing runtime and the simulator).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Value {
+    I64(i64),
+    F32(f32),
+    Bool(bool),
+    /// The value of an untaken conditional spawn's slot / an uninitialized
+    /// local. Reading it through arithmetic is defined as zero of the
+    /// context type (locals are zero-initialized, matching hardware
+    /// registers reset to 0).
+    Unit,
+}
+
+impl Value {
+    pub fn zero_of(ty: Type) -> Value {
+        match ty {
+            Type::Int => Value::I64(0),
+            Type::Float => Value::F32(0.0),
+            Type::Bool => Value::Bool(false),
+            Type::Void => Value::Unit,
+        }
+    }
+
+    pub fn as_i64(self) -> i64 {
+        match self {
+            Value::I64(v) => v,
+            Value::Bool(b) => b as i64,
+            Value::F32(v) => v as i64,
+            Value::Unit => 0,
+        }
+    }
+
+    pub fn as_f32(self) -> f32 {
+        match self {
+            Value::F32(v) => v,
+            Value::I64(v) => v as f32,
+            Value::Bool(b) => b as i64 as f32,
+            Value::Unit => 0.0,
+        }
+    }
+
+    pub fn as_bool(self) -> bool {
+        match self {
+            Value::Bool(b) => b,
+            Value::I64(v) => v != 0,
+            Value::F32(v) => v != 0.0,
+            Value::Unit => false,
+        }
+    }
+
+    /// Coerce to the representation of `ty` (used when writing closure
+    /// slots / memory of a known element type).
+    pub fn coerce(self, ty: Type) -> Value {
+        match ty {
+            Type::Int => Value::I64(self.as_i64()),
+            Type::Float => Value::F32(self.as_f32()),
+            Type::Bool => Value::Bool(self.as_bool()),
+            Type::Void => Value::Unit,
+        }
+    }
+
+    /// Bit pattern for closure packing (64-bit field max).
+    pub fn to_bits(self) -> u64 {
+        match self {
+            Value::I64(v) => v as u64,
+            Value::F32(v) => v.to_bits() as u64,
+            Value::Bool(b) => b as u64,
+            Value::Unit => 0,
+        }
+    }
+
+    pub fn from_bits(ty: Type, bits: u64) -> Value {
+        match ty {
+            Type::Int => Value::I64(bits as i64),
+            Type::Float => Value::F32(f32::from_bits(bits as u32)),
+            Type::Bool => Value::Bool(bits != 0),
+            Type::Void => Value::Unit,
+        }
+    }
+}
+
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Value::I64(v) => write!(f, "{v}"),
+            Value::F32(v) => write!(f, "{v}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Unit => write!(f, "unit"),
+        }
+    }
+}
+
+/// Evaluate a pure expression against an environment of local values.
+/// Generic over the environment lookup so the hot interpreters
+/// monomorphize and inline it (perf: see EXPERIMENTS.md §Perf).
+pub fn eval<F: Fn(VarId) -> Value>(expr: &Expr, env: &F) -> Value {
+    match expr {
+        Expr::ConstI(v) => Value::I64(*v),
+        Expr::ConstF(v) => Value::F32(*v),
+        Expr::ConstB(v) => Value::Bool(*v),
+        Expr::Var(v) => env(*v),
+        Expr::IntToFloat(e) => Value::F32(eval(e, env).as_f32()),
+        Expr::Unary(op, e) => {
+            let v = eval(e, env);
+            match op {
+                UnOp::Neg => match v {
+                    Value::F32(f) => Value::F32(-f),
+                    other => Value::I64(-other.as_i64()),
+                },
+                UnOp::Not => Value::Bool(!v.as_bool()),
+            }
+        }
+        Expr::Builtin(b, args) => {
+            let vals: Vec<Value> = args.iter().map(|a| eval(a, env)).collect();
+            let float = vals.iter().any(|v| matches!(v, Value::F32(_)));
+            match (b, float) {
+                (Builtin::Min, false) => Value::I64(vals[0].as_i64().min(vals[1].as_i64())),
+                (Builtin::Max, false) => Value::I64(vals[0].as_i64().max(vals[1].as_i64())),
+                (Builtin::Abs, false) => Value::I64(vals[0].as_i64().abs()),
+                (Builtin::Min, true) => Value::F32(vals[0].as_f32().min(vals[1].as_f32())),
+                (Builtin::Max, true) => Value::F32(vals[0].as_f32().max(vals[1].as_f32())),
+                (Builtin::Abs, true) => Value::F32(vals[0].as_f32().abs()),
+            }
+        }
+        Expr::Binary(op, a, b) => {
+            let va = eval(a, env);
+            let vb = eval(b, env);
+            let float = matches!(va, Value::F32(_)) || matches!(vb, Value::F32(_));
+            use BinOp::*;
+            match op {
+                Add | Sub | Mul | Div if float => {
+                    let (x, y) = (va.as_f32(), vb.as_f32());
+                    Value::F32(match op {
+                        Add => x + y,
+                        Sub => x - y,
+                        Mul => x * y,
+                        Div => x / y,
+                        _ => unreachable!(),
+                    })
+                }
+                Add => Value::I64(va.as_i64().wrapping_add(vb.as_i64())),
+                Sub => Value::I64(va.as_i64().wrapping_sub(vb.as_i64())),
+                Mul => Value::I64(va.as_i64().wrapping_mul(vb.as_i64())),
+                Div => {
+                    let d = vb.as_i64();
+                    Value::I64(if d == 0 { 0 } else { va.as_i64().wrapping_div(d) })
+                }
+                Rem => {
+                    let d = vb.as_i64();
+                    Value::I64(if d == 0 { 0 } else { va.as_i64().wrapping_rem(d) })
+                }
+                Shl => Value::I64(va.as_i64().wrapping_shl(vb.as_i64() as u32 & 63)),
+                Shr => Value::I64(va.as_i64().wrapping_shr(vb.as_i64() as u32 & 63)),
+                BitAnd => Value::I64(va.as_i64() & vb.as_i64()),
+                BitOr => Value::I64(va.as_i64() | vb.as_i64()),
+                BitXor => Value::I64(va.as_i64() ^ vb.as_i64()),
+                And => Value::Bool(va.as_bool() && vb.as_bool()),
+                Or => Value::Bool(va.as_bool() || vb.as_bool()),
+                Lt | Le | Gt | Ge | Eq | Ne => {
+                    let r = if float {
+                        let (x, y) = (va.as_f32(), vb.as_f32());
+                        match op {
+                            Lt => x < y,
+                            Le => x <= y,
+                            Gt => x > y,
+                            Ge => x >= y,
+                            Eq => x == y,
+                            Ne => x != y,
+                            _ => unreachable!(),
+                        }
+                    } else {
+                        let (x, y) = (va.as_i64(), vb.as_i64());
+                        match op {
+                            Lt => x < y,
+                            Le => x <= y,
+                            Gt => x > y,
+                            Ge => x >= y,
+                            Eq => x == y,
+                            Ne => x != y,
+                            _ => unreachable!(),
+                        }
+                    };
+                    Value::Bool(r)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(vals: Vec<Value>) -> impl Fn(VarId) -> Value {
+        move |v: VarId| vals[v.index()]
+    }
+
+    #[test]
+    fn arithmetic() {
+        let e = Expr::Binary(
+            BinOp::Add,
+            Box::new(Expr::Var(VarId::new(0))),
+            Box::new(Expr::Binary(
+                BinOp::Mul,
+                Box::new(Expr::ConstI(3)),
+                Box::new(Expr::Var(VarId::new(1))),
+            )),
+        );
+        let v = eval(&e, &env(vec![Value::I64(1), Value::I64(4)]));
+        assert_eq!(v, Value::I64(13));
+    }
+
+    #[test]
+    fn float_promotion() {
+        let e = Expr::Binary(
+            BinOp::Add,
+            Box::new(Expr::ConstF(1.5)),
+            Box::new(Expr::ConstI(2)),
+        );
+        assert_eq!(eval(&e, &env(vec![])), Value::F32(3.5));
+    }
+
+    #[test]
+    fn division_by_zero_is_zero() {
+        // Matches the hardware datapath convention (no trap lines on PEs).
+        let e = Expr::Binary(BinOp::Div, Box::new(Expr::ConstI(7)), Box::new(Expr::ConstI(0)));
+        assert_eq!(eval(&e, &env(vec![])), Value::I64(0));
+    }
+
+    #[test]
+    fn comparisons_and_logic() {
+        let e = Expr::Binary(
+            BinOp::And,
+            Box::new(Expr::Binary(BinOp::Lt, Box::new(Expr::ConstI(1)), Box::new(Expr::ConstI(2)))),
+            Box::new(Expr::Binary(BinOp::Ne, Box::new(Expr::ConstI(3)), Box::new(Expr::ConstI(3)))),
+        );
+        assert_eq!(eval(&e, &env(vec![])), Value::Bool(false));
+    }
+
+    #[test]
+    fn builtins() {
+        let m = Expr::Builtin(Builtin::Min, vec![Expr::ConstI(3), Expr::ConstI(-2)]);
+        assert_eq!(eval(&m, &env(vec![])), Value::I64(-2));
+        let a = Expr::Builtin(Builtin::Abs, vec![Expr::ConstF(-2.5)]);
+        assert_eq!(eval(&a, &env(vec![])), Value::F32(2.5));
+    }
+
+    #[test]
+    fn value_bits_roundtrip() {
+        use crate::frontend::ast::Type;
+        for v in [Value::I64(-7), Value::F32(3.25), Value::Bool(true)] {
+            let ty = match v {
+                Value::I64(_) => Type::Int,
+                Value::F32(_) => Type::Float,
+                Value::Bool(_) => Type::Bool,
+                Value::Unit => Type::Void,
+            };
+            assert_eq!(Value::from_bits(ty, v.to_bits()), v);
+        }
+    }
+
+    #[test]
+    fn for_each_var_collects() {
+        let e = Expr::Binary(
+            BinOp::Add,
+            Box::new(Expr::Var(VarId::new(2))),
+            Box::new(Expr::Unary(UnOp::Neg, Box::new(Expr::Var(VarId::new(5))))),
+        );
+        let mut vars = Vec::new();
+        e.for_each_var(&mut |v| vars.push(v.index()));
+        assert_eq!(vars, vec![2, 5]);
+    }
+
+    #[test]
+    fn map_vars_rewrites() {
+        let e = Expr::Var(VarId::new(3));
+        let m = e.map_vars(&|v| VarId::new(v.index() + 10));
+        assert_eq!(m, Expr::Var(VarId::new(13)));
+    }
+}

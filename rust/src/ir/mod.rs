@@ -1,0 +1,28 @@
+//! Bombyx intermediate representations.
+//!
+//! Two IRs, exactly as the paper describes (Fig. 3 / Fig. 4):
+//!
+//! - the **implicit IR** ([`cfg`]): a control-flow graph of basic blocks per
+//!   function, with `cilk_sync` kept as a *terminator* (it affects control
+//!   flow — it ends the terminating function that will be carved out by
+//!   explicitization). Memory reads are hoisted into explicit [`cfg::Op::Load`]
+//!   ops so every memory access is visible to the DAE transform, the HLS
+//!   latency model, and the simulator.
+//! - the **explicit IR** ([`explicit`]): Cilk-1-style terminating tasks using
+//!   `spawn`, `spawn_next` (closure creation) and `send_argument`.
+//!
+//! Both IRs share [`expr::Expr`] (side-effect-free expressions over
+//! function-local variables) and are printable ([`print`]) and verifiable
+//! ([`verify`]).
+
+pub mod cfg;
+pub mod explicit;
+pub mod expr;
+pub mod print;
+pub mod verify;
+
+pub use cfg::{
+    Block, BlockId, Cfg, FieldIdx, Func, FuncId, FuncKind, Global, GlobalId, Module, Op,
+    RetTarget, TaskMeta, TaskRole, Term,
+};
+pub use expr::{Builtin, Expr, Value, Var, VarId};

@@ -1,0 +1,307 @@
+//! Text printers for both IRs.
+//!
+//! Two formats:
+//! - [`print_func`] / [`print_module`]: block-structured CFG dump (the
+//!   Fig. 4(b)/(c) view), stable for golden tests.
+//! - [`print_cilk1`]: Cilk-1 concrete syntax for explicit tasks (the Fig. 2
+//!   view: `task f(cont int k, ...)`, `spawn_next`, `send_argument`).
+
+use std::fmt::Write as _;
+
+use crate::frontend::ast::Type;
+
+use super::cfg::{Func, FuncKind, Module, Op, RetTarget, Term};
+use super::expr::{Expr, VarId};
+
+pub fn print_module(module: &Module) -> String {
+    let mut out = String::new();
+    for (_, g) in module.globals.iter() {
+        let size = g.size.map(|s| s.to_string()).unwrap_or_default();
+        let _ = writeln!(out, "global {} {}[{}]", g.elem.name(), g.name, size);
+    }
+    if !module.globals.is_empty() {
+        out.push('\n');
+    }
+    for (_, f) in module.funcs.iter() {
+        out.push_str(&print_func(module, f));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn print_func(module: &Module, func: &Func) -> String {
+    let mut out = String::new();
+    let kind = match func.kind {
+        FuncKind::Task => "func",
+        FuncKind::Leaf => "leaf",
+        FuncKind::Xla => "xla",
+    };
+    let params: Vec<String> = func
+        .param_ids()
+        .map(|v| format!("{}: {}", func.vars[v].name, func.vars[v].ty.name()))
+        .collect();
+    let role = func
+        .task
+        .as_ref()
+        .map(|t| format!(" [{} of {}]", t.role.name(), t.source))
+        .unwrap_or_default();
+    let _ = writeln!(
+        out,
+        "{kind} {}({}) -> {}{role} {{",
+        func.name,
+        params.join(", "),
+        func.ret.name()
+    );
+    if let Some(cfg) = func.body.as_ref() {
+        for (id, block) in cfg.blocks.iter() {
+            let marker = if id == cfg.entry { " (entry)" } else { "" };
+            let _ = writeln!(out, "bb{}{marker}:", id.index());
+            for op in &block.ops {
+                let _ = writeln!(out, "  {}", fmt_op(module, func, op));
+            }
+            let _ = writeln!(out, "  {}", fmt_term(func, &block.term));
+        }
+    } else {
+        let _ = writeln!(out, "  <extern>");
+    }
+    out.push_str("}\n");
+    out
+}
+
+pub fn fmt_op(module: &Module, func: &Func, op: &Op) -> String {
+    let v = |id: VarId| func.vars[id].name.clone();
+    let e = |expr: &Expr| fmt_expr(func, expr);
+    match op {
+        Op::Assign { dst, src } => format!("{} = {}", v(*dst), e(src)),
+        Op::Load { dst, arr, index, dae } => format!(
+            "{} = load {}[{}]{}",
+            v(*dst),
+            module.globals[*arr].name,
+            e(index),
+            if *dae { "  ; #pragma bombyx dae" } else { "" }
+        ),
+        Op::Store { arr, index, value } => {
+            format!("store {}[{}] = {}", module.globals[*arr].name, e(index), e(value))
+        }
+        Op::AtomicAdd { arr, index, value } => {
+            format!("atomic_add {}[{}], {}", module.globals[*arr].name, e(index), e(value))
+        }
+        Op::Call { dst, callee, args } => {
+            let args: Vec<String> = args.iter().map(|a| e(a)).collect();
+            let call = format!("call {}({})", module.funcs[*callee].name, args.join(", "));
+            match dst {
+                Some(d) => format!("{} = {}", v(*d), call),
+                None => call,
+            }
+        }
+        Op::Spawn { dst, callee, args } => {
+            let args: Vec<String> = args.iter().map(|a| e(a)).collect();
+            let call = format!("spawn {}({})", module.funcs[*callee].name, args.join(", "));
+            match dst {
+                Some(d) => format!("{} = {}", v(*d), call),
+                None => call,
+            }
+        }
+        Op::MakeClosure { dst, task } => {
+            format!("{} = spawn_next {}", v(*dst), module.funcs[*task].name)
+        }
+        Op::ClosureStore { clos, field, value } => {
+            format!("{}.arg{} = {}", v(*clos), field, e(value))
+        }
+        Op::SpawnChild { callee, args, ret } => {
+            let args: Vec<String> = args.iter().map(|a| e(a)).collect();
+            let ret = match ret {
+                RetTarget::Slot { clos, field } => format!(" -> {}.arg{}", v(*clos), field),
+                RetTarget::Counter { clos } => format!(" -> {}.count", v(*clos)),
+                RetTarget::Forward => " -> k".to_string(),
+            };
+            format!("spawn {}({}){}", module.funcs[*callee].name, args.join(", "), ret)
+        }
+        Op::CloseSpawns { clos } => format!("close {}", v(*clos)),
+        Op::SendArgument { value } => match value {
+            Some(value) => format!("send_argument(k, {})", e(value)),
+            None => "send_argument(k)".to_string(),
+        },
+    }
+}
+
+pub fn fmt_term(func: &Func, term: &Term) -> String {
+    let e = |expr: &Expr| fmt_expr(func, expr);
+    match term {
+        Term::Jump(b) => format!("jump bb{}", b.index()),
+        Term::Branch { cond, then_, else_ } => {
+            format!("br {}, bb{}, bb{}", e(cond), then_.index(), else_.index())
+        }
+        Term::Return(Some(v)) => format!("T: return {}", e(v)),
+        Term::Return(None) => "T: return".to_string(),
+        Term::Sync { next } => format!("T: sync -> bb{}", next.index()),
+        Term::Halt => "halt".to_string(),
+    }
+}
+
+pub fn fmt_expr(func: &Func, expr: &Expr) -> String {
+    fmt_expr_prec(func, expr, 0)
+}
+
+fn fmt_expr_prec(func: &Func, expr: &Expr, parent_prec: u8) -> String {
+    match expr {
+        Expr::ConstI(v) => v.to_string(),
+        Expr::ConstF(v) => {
+            if v.fract() == 0.0 {
+                format!("{v:.1}")
+            } else {
+                v.to_string()
+            }
+        }
+        Expr::ConstB(v) => v.to_string(),
+        Expr::Var(v) => func.vars[*v].name.clone(),
+        Expr::IntToFloat(e) => format!("(float){}", fmt_expr_prec(func, e, 11)),
+        Expr::Unary(op, e) => {
+            let sym = match op {
+                crate::frontend::ast::UnOp::Neg => "-",
+                crate::frontend::ast::UnOp::Not => "!",
+            };
+            format!("{sym}{}", fmt_expr_prec(func, e, 11))
+        }
+        Expr::Builtin(b, args) => {
+            let args: Vec<String> = args.iter().map(|a| fmt_expr_prec(func, a, 0)).collect();
+            format!("{}({})", b.name(), args.join(", "))
+        }
+        Expr::Binary(op, a, b) => {
+            let prec = binop_prec(*op);
+            let s = format!(
+                "{} {} {}",
+                fmt_expr_prec(func, a, prec),
+                op.symbol(),
+                fmt_expr_prec(func, b, prec + 1)
+            );
+            if prec < parent_prec {
+                format!("({s})")
+            } else {
+                s
+            }
+        }
+    }
+}
+
+fn binop_prec(op: crate::frontend::ast::BinOp) -> u8 {
+    use crate::frontend::ast::BinOp::*;
+    match op {
+        Or => 1,
+        And => 2,
+        BitOr => 3,
+        BitXor => 4,
+        BitAnd => 5,
+        Eq | Ne => 6,
+        Lt | Le | Gt | Ge => 7,
+        Shl | Shr => 8,
+        Add | Sub => 9,
+        Mul | Div | Rem => 10,
+    }
+}
+
+/// Render an explicit task in Cilk-1 concrete syntax (paper Fig. 2 style).
+/// Control flow is rendered as labeled blocks with gotos (tasks are small;
+/// the HLS backend does proper structural reconstruction).
+pub fn print_cilk1(module: &Module, func: &Func) -> String {
+    let mut out = String::new();
+    let cont = match func.task.as_ref() {
+        Some(meta) if meta.cont_ty != Type::Void => format!("cont {} k", meta.cont_ty.name()),
+        _ => "cont void k".to_string(),
+    };
+    let mut params = vec![cont];
+    params.extend(
+        func.param_ids()
+            .map(|v| format!("{} {}", func.vars[v].ty.name(), func.vars[v].name)),
+    );
+    let _ = writeln!(out, "task {} ({}) {{", func.name, params.join(", "));
+    if let Some(cfg) = func.body.as_ref() {
+        let multi = cfg.blocks.len() > 1;
+        for (id, block) in cfg.blocks.iter() {
+            if multi {
+                let _ = writeln!(out, "L{}:", id.index());
+            }
+            for op in &block.ops {
+                let _ = writeln!(out, "  {};", fmt_cilk1_op(module, func, op));
+            }
+            match &block.term {
+                Term::Jump(b) => {
+                    let _ = writeln!(out, "  goto L{};", b.index());
+                }
+                Term::Branch { cond, then_, else_ } => {
+                    let _ = writeln!(
+                        out,
+                        "  if ({}) goto L{}; else goto L{};",
+                        fmt_expr(func, cond),
+                        then_.index(),
+                        else_.index()
+                    );
+                }
+                Term::Halt => {
+                    if multi {
+                        let _ = writeln!(out, "  return;");
+                    }
+                }
+                other => {
+                    let _ = writeln!(out, "  /* non-explicit terminator: {} */", fmt_term(func, other));
+                }
+            }
+        }
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn fmt_cilk1_op(module: &Module, func: &Func, op: &Op) -> String {
+    let v = |id: VarId| func.vars[id].name.clone();
+    match op {
+        Op::MakeClosure { dst, task } => {
+            let t = &module.funcs[*task];
+            let holes: Vec<String> = t.param_ids().map(|p| format!("?{}", t.vars[p].name)).collect();
+            format!("cont {} = spawn_next {}(k{}{})", v(*dst), t.name, if holes.is_empty() { "" } else { ", " }, holes.join(", "))
+        }
+        Op::ClosureStore { clos, field, value } => {
+            format!("{}.{} = {}", v(*clos), field_name(module, func, *clos, *field).unwrap_or(format!("arg{field}")), fmt_expr(func, value))
+        }
+        Op::SpawnChild { callee, args, ret } => {
+            let t = &module.funcs[*callee];
+            let args: Vec<String> = args.iter().map(|a| fmt_expr(func, a)).collect();
+            let k = match ret {
+                RetTarget::Slot { clos, field } => format!(
+                    "{}.{}",
+                    v(*clos),
+                    field_name(module, func, *clos, *field).unwrap_or(format!("arg{field}"))
+                ),
+                RetTarget::Counter { clos } => format!("{}.join", v(*clos)),
+                RetTarget::Forward => "k".to_string(),
+            };
+            format!("spawn {}({k}{}{})", t.name, if args.is_empty() { "" } else { ", " }, args.join(", "))
+        }
+        Op::CloseSpawns { clos } => format!("close_spawns({})", v(*clos)),
+        Op::SendArgument { value } => match value {
+            Some(value) => format!("send_argument(k, {})", fmt_expr(func, value)),
+            None => "send_argument(k)".to_string(),
+        },
+        other => fmt_op(module, func, other),
+    }
+}
+
+/// Resolve a closure field index to the continuation task's parameter name,
+/// by finding which task this closure var was created for.
+fn field_name(module: &Module, func: &Func, clos: VarId, field: u32) -> Option<String> {
+    let cfg = func.body.as_ref()?;
+    for block in cfg.blocks.values() {
+        for op in &block.ops {
+            if let Op::MakeClosure { dst, task } = op {
+                if *dst == clos {
+                    let t = &module.funcs[*task];
+                    let vid = VarId::new(field as usize);
+                    if (field as usize) < t.params {
+                        return Some(t.vars[vid].name.clone());
+                    }
+                }
+            }
+        }
+    }
+    None
+}

@@ -1,0 +1,256 @@
+//! IR verifiers. Run after every lowering stage; a verifier failure is a
+//! compiler bug, reported with the offending function and block.
+
+use std::collections::HashSet;
+
+use super::cfg::{Func, FuncKind, Module, Op, Term};
+use super::expr::VarId;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    Implicit,
+    Explicit,
+}
+
+/// Verify every function of a module for the given stage. Returns the list
+/// of violations (empty = OK).
+pub fn verify_module(module: &Module, stage: Stage) -> Vec<String> {
+    let mut errors = Vec::new();
+    for (id, func) in module.funcs.iter() {
+        if func.kind == FuncKind::Xla {
+            if func.body.is_some() {
+                errors.push(format!("xla task `{}` must not have a body", func.name));
+            }
+            continue;
+        }
+        let Some(cfg) = func.body.as_ref() else {
+            errors.push(format!("function `{}` (#{}) has no body", func.name, id.index()));
+            continue;
+        };
+        let fname = &func.name;
+
+        // Structural checks.
+        if cfg.blocks.is_empty() {
+            errors.push(format!("`{fname}`: empty CFG"));
+            continue;
+        }
+        if cfg.entry.index() >= cfg.blocks.len() {
+            errors.push(format!("`{fname}`: entry block out of range"));
+            continue;
+        }
+        let preds = cfg.predecessors();
+        if !preds[cfg.entry.index()].is_empty() {
+            errors.push(format!(
+                "`{fname}`: entry block bb{} has {} predecessor(s); paper requires the \
+                 entry block to have no incoming edges",
+                cfg.entry.index(),
+                preds[cfg.entry.index()].len()
+            ));
+        }
+        let reachable = cfg.reachable();
+        let mut has_exit = false;
+
+        for (bid, block) in cfg.blocks.iter() {
+            if !reachable[bid.index()] {
+                continue;
+            }
+            for succ in block.term.successors() {
+                if succ.index() >= cfg.blocks.len() {
+                    errors.push(format!(
+                        "`{fname}` bb{}: terminator targets nonexistent bb{}",
+                        bid.index(),
+                        succ.index()
+                    ));
+                }
+            }
+            if block.term.successors().is_empty() {
+                has_exit = true;
+            }
+
+            // Variable sanity: every referenced var exists.
+            let check_var = |v: VarId, errors: &mut Vec<String>, what: &str| {
+                if v.index() >= func.vars.len() {
+                    errors.push(format!(
+                        "`{fname}` bb{}: {what} references out-of-range var #{}",
+                        bid.index(),
+                        v.index()
+                    ));
+                }
+            };
+            for op in &block.ops {
+                if let Some(d) = op.def() {
+                    check_var(d, &mut errors, "op def");
+                }
+                op.for_each_use(&mut |v| check_var(v, &mut errors, "op use"));
+                for (gid, what) in op_global_refs(op) {
+                    if gid >= module.globals.len() {
+                        errors.push(format!(
+                            "`{fname}` bb{}: {what} references out-of-range global #{gid}",
+                            bid.index()
+                        ));
+                    }
+                }
+                for (fid, what) in op_func_refs(op) {
+                    if fid >= module.funcs.len() {
+                        errors.push(format!(
+                            "`{fname}` bb{}: {what} references out-of-range function #{fid}",
+                            bid.index()
+                        ));
+                    }
+                }
+            }
+            block.term.for_each_use(&mut |v| check_var(v, &mut errors, "terminator use"));
+
+            // Stage-specific op/term restrictions.
+            match stage {
+                Stage::Implicit => {
+                    for op in &block.ops {
+                        if op.is_explicit_only() {
+                            errors.push(format!(
+                                "`{fname}` bb{}: explicit-only op in implicit IR: {op:?}",
+                                bid.index()
+                            ));
+                        }
+                    }
+                    if matches!(block.term, Term::Halt) {
+                        errors.push(format!(
+                            "`{fname}` bb{}: Halt terminator in implicit IR",
+                            bid.index()
+                        ));
+                    }
+                }
+                Stage::Explicit => {
+                    for op in &block.ops {
+                        if let Op::Spawn { .. } = op {
+                            errors.push(format!(
+                                "`{fname}` bb{}: implicit Spawn survives in explicit IR",
+                                bid.index()
+                            ));
+                        }
+                    }
+                    match block.term {
+                        Term::Sync { .. } => errors.push(format!(
+                            "`{fname}` bb{}: sync terminator survives in explicit IR",
+                            bid.index()
+                        )),
+                        Term::Return(_) if func.kind != FuncKind::Leaf => errors.push(format!(
+                            "`{fname}` bb{}: Return in explicit task (must be SendArgument + \
+                             Halt)",
+                            bid.index()
+                        )),
+                        _ => {}
+                    }
+                }
+            }
+
+            // Leaf functions never spawn or sync.
+            if func.kind == FuncKind::Leaf {
+                for op in &block.ops {
+                    if matches!(op, Op::Spawn { .. } | Op::SpawnChild { .. }) {
+                        errors.push(format!("leaf `{fname}` bb{}: contains a spawn", bid.index()));
+                    }
+                }
+                if matches!(block.term, Term::Sync { .. }) {
+                    errors.push(format!("leaf `{fname}` bb{}: contains a sync", bid.index()));
+                }
+            }
+        }
+        if !has_exit {
+            errors.push(format!("`{fname}`: no exit block (return/halt) is reachable"));
+        }
+
+        // Implicit stage: every spawn-reaching return must be preceded by a
+        // sync (the "implicit sync" OpenCilk semantics). Verified via the
+        // pending-spawn dataflow.
+        if stage == Stage::Implicit && func.kind == FuncKind::Task {
+            errors.extend(check_no_pending_spawn_at_return(func).into_iter().map(|b| {
+                format!(
+                    "`{fname}` bb{b}: return with pending spawns (missing implicit sync \
+                     insertion)"
+                )
+            }));
+        }
+    }
+    errors
+}
+
+/// Blocks whose Return terminator may execute with children outstanding.
+fn check_no_pending_spawn_at_return(func: &Func) -> Vec<usize> {
+    let cfg = func.cfg();
+    let n = cfg.blocks.len();
+    // pending[b] = may there be un-synced spawns at entry of b?
+    let mut pending_in = vec![false; n];
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for (bid, block) in cfg.blocks.iter() {
+            let mut pending = pending_in[bid.index()];
+            for op in &block.ops {
+                if matches!(op, Op::Spawn { .. }) {
+                    pending = true;
+                }
+            }
+            let out = match block.term {
+                Term::Sync { .. } => false,
+                _ => pending,
+            };
+            for succ in block.term.successors() {
+                if out && !pending_in[succ.index()] {
+                    pending_in[succ.index()] = true;
+                    changed = true;
+                }
+            }
+        }
+    }
+    let mut bad = Vec::new();
+    let reachable = cfg.reachable();
+    for (bid, block) in cfg.blocks.iter() {
+        if !reachable[bid.index()] {
+            continue;
+        }
+        if let Term::Return(_) = block.term {
+            let mut pending = pending_in[bid.index()];
+            for op in &block.ops {
+                if matches!(op, Op::Spawn { .. }) {
+                    pending = true;
+                }
+            }
+            if pending {
+                bad.push(bid.index());
+            }
+        }
+    }
+    bad
+}
+
+fn op_global_refs(op: &Op) -> Vec<(usize, &'static str)> {
+    match op {
+        Op::Load { arr, .. } => vec![(arr.index(), "load")],
+        Op::Store { arr, .. } => vec![(arr.index(), "store")],
+        Op::AtomicAdd { arr, .. } => vec![(arr.index(), "atomic_add")],
+        _ => vec![],
+    }
+}
+
+fn op_func_refs(op: &Op) -> Vec<(usize, &'static str)> {
+    match op {
+        Op::Call { callee, .. } => vec![(callee.index(), "call")],
+        Op::Spawn { callee, .. } => vec![(callee.index(), "spawn")],
+        Op::SpawnChild { callee, .. } => vec![(callee.index(), "spawn_child")],
+        Op::MakeClosure { task, .. } => vec![(task.index(), "make_closure")],
+        _ => vec![],
+    }
+}
+
+/// Check that variable names within a function are unique enough for the
+/// printers (duplicates get a numeric suffix during lowering; this guards
+/// against regressions that would make goldens ambiguous).
+pub fn check_unique_var_names(func: &Func) -> Result<(), String> {
+    let mut seen = HashSet::new();
+    for (_, var) in func.vars.iter() {
+        if !seen.insert(var.name.clone()) {
+            return Err(format!("duplicate variable name `{}` in `{}`", var.name, func.name));
+        }
+    }
+    Ok(())
+}

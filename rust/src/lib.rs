@@ -1,0 +1,36 @@
+//! # Bombyx
+//!
+//! A production-grade reproduction of *Bombyx: OpenCilk Compilation for FPGA
+//! Hardware Acceleration* (Shahawy, de Castelnau, Ienne — CS.AR 2025).
+//!
+//! Bombyx lowers fork–join (implicit) task-parallel programs into a
+//! Cilk-1-style *explicit continuation-passing* IR and generates, from one
+//! source program:
+//!
+//! - **HardCilk PEs**: synthesizable HLS C++ processing elements plus the
+//!   JSON system descriptor HardCilk's architecture generator consumes
+//!   ([`backend::hardcilk`]);
+//! - **an emulation program** executed by a software work-stealing runtime
+//!   for verification ([`backend::emu`], [`ws`]);
+//! - inputs to a **cycle-level HardCilk system simulator** ([`sim`]) and an
+//!   **HLS resource estimator** ([`hls`]) that together regenerate the
+//!   paper's evaluation (the 26.5 % DAE runtime reduction and the Fig. 6
+//!   synthesis table).
+//!
+//! The numeric PE datapath (graph-relaxation workload) is AOT-compiled from
+//! JAX/Pallas to an XLA executable loaded by [`runtime`]; Python never runs
+//! on the request path. See DESIGN.md for the full system inventory and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod backend;
+pub mod coordinator;
+pub mod frontend;
+pub mod hls;
+pub mod interp;
+pub mod ir;
+pub mod lower;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+pub mod ws;

@@ -1,0 +1,503 @@
+//! CFG analyses used by DAE and explicitization: liveness, dominators,
+//! pending-spawn mapping, and path (task) partitioning.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{bail, Result};
+
+use crate::ir::cfg::{BlockId, Cfg, Func, Op, Term};
+use crate::ir::expr::VarId;
+
+/// Per-block liveness sets (bitsets over variables, packed in u64 words).
+#[derive(Clone, Debug)]
+pub struct Liveness {
+    pub live_in: Vec<Vec<u64>>,
+    pub live_out: Vec<Vec<u64>>,
+}
+
+impl Liveness {
+    pub fn live_in_vars(&self, block: BlockId) -> Vec<VarId> {
+        bits_to_vars(&self.live_in[block.index()])
+    }
+
+    pub fn live_out_vars(&self, block: BlockId) -> Vec<VarId> {
+        bits_to_vars(&self.live_out[block.index()])
+    }
+
+    pub fn is_live_in(&self, block: BlockId, var: VarId) -> bool {
+        let (w, b) = (var.index() / 64, var.index() % 64);
+        self.live_in[block.index()][w] & (1u64 << b) != 0
+    }
+}
+
+fn bits_to_vars(bits: &[u64]) -> Vec<VarId> {
+    let mut out = Vec::new();
+    for (w, &word) in bits.iter().enumerate() {
+        let mut word = word;
+        while word != 0 {
+            let b = word.trailing_zeros() as usize;
+            out.push(VarId::new(w * 64 + b));
+            word &= word - 1;
+        }
+    }
+    out
+}
+
+/// Classic backward iterative liveness on the block level.
+pub fn liveness(func: &Func) -> Liveness {
+    let cfg = func.cfg();
+    let nvars = func.vars.len();
+    let words = nvars.div_ceil(64);
+    let nblocks = cfg.blocks.len();
+
+    // use/def per block.
+    let mut use_bits = vec![vec![0u64; words]; nblocks];
+    let mut def_bits = vec![vec![0u64; words]; nblocks];
+    for (bid, block) in cfg.blocks.iter() {
+        let bi = bid.index();
+        let mut defined = vec![0u64; words];
+        let add_use = |v: VarId, defined: &[u64], use_bits: &mut Vec<Vec<u64>>| {
+            let (w, b) = (v.index() / 64, v.index() % 64);
+            if defined[w] & (1 << b) == 0 {
+                use_bits[bi][w] |= 1 << b;
+            }
+        };
+        for op in &block.ops {
+            op.for_each_use(&mut |v| add_use(v, &defined, &mut use_bits));
+            if let Some(d) = op.def() {
+                let (w, b) = (d.index() / 64, d.index() % 64);
+                defined[w] |= 1 << b;
+                def_bits[bi][w] |= 1 << b;
+            }
+        }
+        block.term.for_each_use(&mut |v| add_use(v, &defined, &mut use_bits));
+    }
+
+    let mut live_in = vec![vec![0u64; words]; nblocks];
+    let mut live_out = vec![vec![0u64; words]; nblocks];
+    let mut changed = true;
+    while changed {
+        changed = false;
+        // Reverse iteration converges faster on reducible CFGs.
+        for bi in (0..nblocks).rev() {
+            let block = &cfg.blocks[BlockId::new(bi)];
+            let mut out = vec![0u64; words];
+            for succ in block.term.successors() {
+                for w in 0..words {
+                    out[w] |= live_in[succ.index()][w];
+                }
+            }
+            let mut inp = vec![0u64; words];
+            for w in 0..words {
+                inp[w] = use_bits[bi][w] | (out[w] & !def_bits[bi][w]);
+            }
+            if inp != live_in[bi] || out != live_out[bi] {
+                live_in[bi] = inp;
+                live_out[bi] = out;
+                changed = true;
+            }
+        }
+    }
+    Liveness { live_in, live_out }
+}
+
+/// Immediate dominators (Cooper–Harvey–Kennedy iterative algorithm).
+/// `idom[entry] == entry`; unreachable blocks get `None`.
+pub fn dominators(cfg: &Cfg) -> Vec<Option<BlockId>> {
+    let rpo = cfg.reverse_postorder();
+    let mut rpo_index = vec![usize::MAX; cfg.blocks.len()];
+    for (i, b) in rpo.iter().enumerate() {
+        rpo_index[b.index()] = i;
+    }
+    let preds = cfg.predecessors();
+    let mut idom: Vec<Option<BlockId>> = vec![None; cfg.blocks.len()];
+    idom[cfg.entry.index()] = Some(cfg.entry);
+
+    let intersect = |idom: &[Option<BlockId>], rpo_index: &[usize], mut a: BlockId, mut b: BlockId| {
+        while a != b {
+            while rpo_index[a.index()] > rpo_index[b.index()] {
+                a = idom[a.index()].unwrap();
+            }
+            while rpo_index[b.index()] > rpo_index[a.index()] {
+                b = idom[b.index()].unwrap();
+            }
+        }
+        a
+    };
+
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &b in rpo.iter().skip(1) {
+            let mut new_idom: Option<BlockId> = None;
+            for &p in &preds[b.index()] {
+                if idom[p.index()].is_none() {
+                    continue;
+                }
+                new_idom = Some(match new_idom {
+                    None => p,
+                    Some(cur) => intersect(&idom, &rpo_index, cur, p),
+                });
+            }
+            if let Some(ni) = new_idom {
+                if idom[b.index()] != Some(ni) {
+                    idom[b.index()] = Some(ni);
+                    changed = true;
+                }
+            }
+        }
+    }
+    idom
+}
+
+/// Nearest common dominator of a non-empty set of blocks.
+pub fn common_dominator(cfg: &Cfg, idom: &[Option<BlockId>], blocks: &[BlockId]) -> BlockId {
+    let rpo = cfg.reverse_postorder();
+    let mut rpo_index = vec![usize::MAX; cfg.blocks.len()];
+    for (i, b) in rpo.iter().enumerate() {
+        rpo_index[b.index()] = i;
+    }
+    let mut cur = blocks[0];
+    for &b in &blocks[1..] {
+        let mut a = cur;
+        let mut c = b;
+        while a != c {
+            while rpo_index[a.index()] > rpo_index[c.index()] {
+                a = idom[a.index()].unwrap();
+            }
+            while rpo_index[c.index()] > rpo_index[a.index()] {
+                c = idom[c.index()].unwrap();
+            }
+        }
+        cur = a;
+    }
+    cur
+}
+
+/// Does `a` dominate `b`? (walks the idom chain; CFGs here are small)
+pub fn dominates(idom: &[Option<BlockId>], a: BlockId, b: BlockId) -> bool {
+    let mut cur = b;
+    loop {
+        if cur == a {
+            return true;
+        }
+        match idom[cur.index()] {
+            Some(d) if d != cur => cur = d,
+            _ => return false,
+        }
+    }
+}
+
+/// Natural loops: for each back edge `u -> v` (where `v` dominates `u`),
+/// the loop body is `v` plus everything that reaches `u` without passing
+/// through `v`. Returns `(header, body)` pairs; nested loops appear
+/// separately.
+pub fn natural_loops(cfg: &Cfg, idom: &[Option<BlockId>]) -> Vec<(BlockId, HashSet<BlockId>)> {
+    let mut loops: Vec<(BlockId, HashSet<BlockId>)> = Vec::new();
+    let preds = cfg.predecessors();
+    for (u, block) in cfg.blocks.iter() {
+        for v in block.term.successors() {
+            if idom[u.index()].is_some() && dominates(idom, v, u) {
+                // Back edge u -> v.
+                let mut body: HashSet<BlockId> = HashSet::new();
+                body.insert(v);
+                let mut stack = vec![u];
+                while let Some(b) = stack.pop() {
+                    if !body.insert(b) {
+                        continue;
+                    }
+                    for &p in &preds[b.index()] {
+                        if !body.contains(&p) {
+                            stack.push(p);
+                        }
+                    }
+                }
+                // Merge with an existing loop sharing the header.
+                if let Some(existing) = loops.iter_mut().find(|(h, _)| *h == v) {
+                    existing.1.extend(body);
+                } else {
+                    loops.push((v, body));
+                }
+            }
+        }
+    }
+    loops
+}
+
+/// Partition of a function CFG into *paths* (paper §II-A): maximal subgraphs
+/// entered only at their entry block. Entries are the function entry, every
+/// sync successor, and any block reachable from two or more entries (joins
+/// get promoted to entries until fixpoint).
+#[derive(Clone, Debug)]
+pub struct Paths {
+    /// Entry block of each path, in discovery order (function entry first).
+    pub entries: Vec<BlockId>,
+    /// For each block: which path owns it (index into `entries`);
+    /// unreachable blocks map to `usize::MAX`.
+    pub owner: Vec<usize>,
+}
+
+impl Paths {
+    pub fn path_of(&self, block: BlockId) -> usize {
+        self.owner[block.index()]
+    }
+
+    pub fn entry_of_path(&self, path: usize) -> BlockId {
+        self.entries[path]
+    }
+
+    /// Blocks owned by a path, ascending.
+    pub fn blocks_of(&self, path: usize, cfg: &Cfg) -> Vec<BlockId> {
+        cfg.blocks
+            .ids()
+            .filter(|b| self.owner[b.index()] == path)
+            .collect()
+    }
+}
+
+pub fn partition_paths(cfg: &Cfg) -> Paths {
+    let nblocks = cfg.blocks.len();
+    let mut entries: Vec<BlockId> = vec![cfg.entry];
+    let mut entry_set: HashSet<BlockId> = entries.iter().copied().collect();
+    for (bid, block) in cfg.blocks.iter() {
+        let _ = bid;
+        if let Term::Sync { next } = block.term {
+            if entry_set.insert(next) {
+                entries.push(next);
+            }
+        }
+    }
+    // Fixpoint: a block reachable (without passing through an entry) from
+    // more than one entry becomes an entry itself.
+    loop {
+        let mut owner = vec![usize::MAX; nblocks];
+        let mut conflict: Option<BlockId> = None;
+        'outer: for (pi, &entry) in entries.iter().enumerate() {
+            let mut stack = vec![entry];
+            let mut seen = HashSet::new();
+            while let Some(b) = stack.pop() {
+                if !seen.insert(b) {
+                    continue;
+                }
+                if owner[b.index()] != usize::MAX && owner[b.index()] != pi {
+                    conflict = Some(b);
+                    break 'outer;
+                }
+                owner[b.index()] = pi;
+                for succ in cfg.blocks[b].term.successors() {
+                    if !entry_set.contains(&succ) {
+                        stack.push(succ);
+                    }
+                }
+            }
+        }
+        match conflict {
+            Some(b) => {
+                entry_set.insert(b);
+                entries.push(b);
+            }
+            None => {
+                return Paths { entries, owner };
+            }
+        }
+    }
+}
+
+/// Map each `Spawn` op to the sync block it joins at, or an error if a spawn
+/// can reach two different syncs / no sync (the restriction of DESIGN.md
+/// §6.1 that keeps closures static).
+///
+/// Returned as: for each sync block, the list of (block, op index) spawn
+/// sites joining there.
+pub fn spawn_sync_map(func: &Func) -> Result<HashMap<BlockId, Vec<(BlockId, usize)>>> {
+    let cfg = func.cfg();
+    let mut result: HashMap<BlockId, Vec<(BlockId, usize)>> = HashMap::new();
+
+    // For each spawn site, forward-walk to find reachable syncs without
+    // crossing another sync.
+    for (bid, block) in cfg.blocks.iter() {
+        for (oi, op) in block.ops.iter().enumerate() {
+            if !matches!(op, Op::Spawn { .. }) {
+                continue;
+            }
+            let mut syncs = HashSet::new();
+            // Walk from this point: remainder of this block then successors.
+            let mut stack: Vec<BlockId> = Vec::new();
+            let mut seen = HashSet::new();
+            match block.term {
+                Term::Sync { .. } => {
+                    syncs.insert(bid);
+                }
+                _ => {
+                    for s in block.term.successors() {
+                        stack.push(s);
+                    }
+                }
+            }
+            while let Some(b) = stack.pop() {
+                if !seen.insert(b) {
+                    continue;
+                }
+                let blk = &cfg.blocks[b];
+                match blk.term {
+                    Term::Sync { .. } => {
+                        syncs.insert(b);
+                    }
+                    _ => {
+                        for s in blk.term.successors() {
+                            stack.push(s);
+                        }
+                    }
+                }
+            }
+            if syncs.is_empty() {
+                bail!(
+                    "function `{}`: spawn in bb{} never reaches a cilk_sync (and is not \
+                     followed by an implicit one) — unsupported",
+                    func.name,
+                    bid.index()
+                );
+            }
+            if syncs.len() > 1 {
+                let mut list: Vec<usize> = syncs.iter().map(|b| b.index()).collect();
+                list.sort();
+                bail!(
+                    "function `{}`: spawn in bb{} may join at multiple syncs ({:?}); Bombyx \
+                     requires each spawn region to be post-dominated by a single sync",
+                    func.name,
+                    bid.index(),
+                    list
+                );
+            }
+            let sync = syncs.into_iter().next().unwrap();
+            result.entry(sync).or_default().push((bid, oi));
+        }
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_check;
+    use crate::lower::ast_to_cfg::lower_program;
+    use crate::ir::Module;
+
+    fn lower(src: &str) -> Module {
+        let (p, _) = parse_and_check("t", src).unwrap();
+        lower_program(&p).unwrap()
+    }
+
+    const FIB: &str = "int fib(int n) {
+        if (n < 2) return n;
+        int x = cilk_spawn fib(n - 1);
+        int y = cilk_spawn fib(n - 2);
+        cilk_sync;
+        return x + y;
+    }";
+
+    #[test]
+    fn fib_liveness_at_join() {
+        let m = lower(FIB);
+        let f = &m.funcs[m.func_by_name("fib").unwrap()];
+        let live = liveness(f);
+        // The sync successor (join block) must have x and y live-in.
+        let cfg = f.cfg();
+        let sync_next = cfg
+            .blocks
+            .values()
+            .find_map(|b| match b.term {
+                Term::Sync { next } => Some(next),
+                _ => None,
+            })
+            .unwrap();
+        let names: Vec<String> = live
+            .live_in_vars(sync_next)
+            .into_iter()
+            .map(|v| f.vars[v].name.clone())
+            .collect();
+        assert!(names.contains(&"x".to_string()) && names.contains(&"y".to_string()), "{names:?}");
+        assert!(!names.contains(&"n".to_string()), "n dead after spawns: {names:?}");
+    }
+
+    #[test]
+    fn dominators_entry_dominates_all() {
+        let m = lower(FIB);
+        let f = &m.funcs[m.func_by_name("fib").unwrap()];
+        let cfg = f.cfg();
+        let idom = dominators(cfg);
+        let reachable = cfg.reachable();
+        for (bid, _) in cfg.blocks.iter() {
+            if reachable[bid.index()] && bid != cfg.entry {
+                // Walking idoms reaches entry.
+                let mut cur = bid;
+                let mut steps = 0;
+                while cur != cfg.entry {
+                    cur = idom[cur.index()].expect("reachable block has idom");
+                    steps += 1;
+                    assert!(steps < 100);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fib_partitions_into_two_paths() {
+        let m = lower(FIB);
+        let f = &m.funcs[m.func_by_name("fib").unwrap()];
+        let paths = partition_paths(f.cfg());
+        // Path 0: entry/branch/spawns; path 1: after sync. (Unreachable
+        // dead blocks don't create paths.)
+        assert_eq!(paths.entries.len(), 2, "expected 2 paths, got {:?}", paths.entries);
+    }
+
+    #[test]
+    fn loop_with_sync_promotes_header() {
+        let m = lower(
+            "global int acc[1];
+             void work(int n) { atomic_add(acc, 0, n); }
+             void f(int n) {
+                for (int i = 0; i < n; i = i + 1) {
+                    cilk_spawn work(i);
+                    cilk_sync;
+                }
+             }",
+        );
+        let f = &m.funcs[m.func_by_name("f").unwrap()];
+        let paths = partition_paths(f.cfg());
+        // entry, sync-successor, and the loop header join → ≥3 paths.
+        assert!(paths.entries.len() >= 3, "paths: {:?}", paths.entries);
+    }
+
+    #[test]
+    fn spawn_sync_map_fib() {
+        let m = lower(FIB);
+        let f = &m.funcs[m.func_by_name("fib").unwrap()];
+        let map = spawn_sync_map(f).unwrap();
+        assert_eq!(map.len(), 1);
+        let sites = map.values().next().unwrap();
+        assert_eq!(sites.len(), 2);
+    }
+
+    #[test]
+    fn bfs_loop_spawns_map_to_following_sync() {
+        let m = lower(
+            "global int adj_off[];
+             global int adj_edges[];
+             global int visited[];
+             void visit(int n) {
+                 int off = adj_off[n];
+                 int end = adj_off[n + 1];
+                 visited[n] = 1;
+                 for (int i = off; i < end; i = i + 1) {
+                     cilk_spawn visit(adj_edges[i]);
+                 }
+                 cilk_sync;
+             }",
+        );
+        let f = &m.funcs[m.func_by_name("visit").unwrap()];
+        let map = spawn_sync_map(f).unwrap();
+        assert_eq!(map.len(), 1);
+        assert_eq!(map.values().next().unwrap().len(), 1);
+    }
+}

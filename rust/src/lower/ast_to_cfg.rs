@@ -1,0 +1,678 @@
+//! AST → implicit IR (CFG) lowering.
+//!
+//! Responsibilities beyond plain CFG construction:
+//! - hoist every global-array read into an [`Op::Load`] temp (memory
+//!   accesses must be first-class for DAE / HLS modelling);
+//! - desugar `for` into `while`-shaped blocks;
+//! - propagate `#pragma bombyx dae` onto the hoisted loads;
+//! - insert OpenCilk's *implicit sync*: a `sync` before every `return` that
+//!   may execute with outstanding children;
+//! - uniquify variable names (scope-aware) so printers stay unambiguous.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::frontend::ast::{self, Type};
+use crate::ir::cfg::{Block, BlockId, Cfg, Func, FuncId, FuncKind, Global, Module, Op, Term};
+use crate::ir::expr::{Builtin, Expr, Var, VarId};
+
+/// Lower a checked program to the implicit IR.
+pub fn lower_program(program: &ast::Program) -> Result<Module> {
+    let mut module = Module::default();
+    let mut global_ids = HashMap::new();
+    for g in &program.globals {
+        let id = module.globals.push(Global { name: g.name.clone(), elem: g.ty, size: g.size });
+        global_ids.insert(g.name.clone(), id);
+    }
+
+    // Pre-register all functions so bodies can reference each other.
+    let mut func_ids = HashMap::new();
+    for f in &program.funcs {
+        let kind = if crate::frontend::sema::func_spawns(&f.body) {
+            FuncKind::Task
+        } else {
+            FuncKind::Leaf
+        };
+        let mut vars = crate::util::idvec::IdVec::new();
+        for p in &f.params {
+            vars.push(Var { name: p.name.clone(), ty: p.ty, is_param: true, is_temp: false });
+        }
+        let id = module.funcs.push(Func {
+            name: f.name.clone(),
+            ret: f.ret,
+            params: f.params.len(),
+            vars,
+            body: None,
+            kind,
+            task: None,
+        });
+        func_ids.insert(f.name.clone(), id);
+    }
+    for e in &program.externs {
+        let mut vars = crate::util::idvec::IdVec::new();
+        for p in &e.params {
+            vars.push(Var { name: p.name.clone(), ty: p.ty, is_param: true, is_temp: false });
+        }
+        let id = module.funcs.push(Func {
+            name: e.name.clone(),
+            ret: e.ret,
+            params: e.params.len(),
+            vars,
+            body: None,
+            kind: FuncKind::Xla,
+            task: None,
+        });
+        func_ids.insert(e.name.clone(), id);
+    }
+
+    // Lower bodies.
+    for f in &program.funcs {
+        let fid = func_ids[&f.name];
+        let (cfg, vars) = FuncLowerer::new(&module, &global_ids, &func_ids, f).lower()?;
+        let func = &mut module.funcs[fid];
+        func.vars = vars;
+        func.body = Some(cfg);
+    }
+
+    // Insert implicit syncs before spawn-pending returns.
+    for (_, func) in module.funcs.iter_mut() {
+        if func.kind == FuncKind::Task && func.body.is_some() {
+            insert_implicit_syncs(func);
+        }
+    }
+    Ok(module)
+}
+
+struct FuncLowerer<'a> {
+    module: &'a Module,
+    globals: &'a HashMap<String, crate::ir::GlobalId>,
+    funcs: &'a HashMap<String, FuncId>,
+    src: &'a ast::FuncDef,
+    vars: crate::util::idvec::IdVec<Var>,
+    /// Scope stack: name → var.
+    scopes: Vec<HashMap<String, VarId>>,
+    /// Per-name occurrence counter for uniquified printing names.
+    name_counts: HashMap<String, u32>,
+    cfg: Cfg,
+    cur: BlockId,
+    /// Blocks whose terminator has been set (an op emitted into a
+    /// terminated block would be lost; `emit` guards on this).
+    terminated: HashSet<BlockId>,
+    temp_count: u32,
+}
+
+impl<'a> FuncLowerer<'a> {
+    fn new(
+        module: &'a Module,
+        globals: &'a HashMap<String, crate::ir::GlobalId>,
+        funcs: &'a HashMap<String, FuncId>,
+        src: &'a ast::FuncDef,
+    ) -> Self {
+        let mut cfg = Cfg::default();
+        let entry = cfg.blocks.push(Block::default());
+        cfg.entry = entry;
+        let mut this = FuncLowerer {
+            module,
+            globals,
+            funcs,
+            src,
+            vars: crate::util::idvec::IdVec::new(),
+            scopes: vec![HashMap::new()],
+            name_counts: HashMap::new(),
+            cfg,
+            cur: entry,
+            terminated: HashSet::new(),
+            temp_count: 0,
+        };
+        for p in &src.params {
+            let id = this.vars.push(Var {
+                name: p.name.clone(),
+                ty: p.ty,
+                is_param: true,
+                is_temp: false,
+            });
+            this.name_counts.insert(p.name.clone(), 1);
+            this.scopes[0].insert(p.name.clone(), id);
+        }
+        this
+    }
+
+    fn lower(mut self) -> Result<(Cfg, crate::util::idvec::IdVec<Var>)> {
+        self.lower_block_stmts(&self.src.body.clone())?;
+        // Fall-through exit.
+        if !self.block_terminated() {
+            self.set_term(Term::Return(None));
+        }
+        Ok((self.cfg, self.vars))
+    }
+
+    // ---- var/scope helpers -------------------------------------------------
+
+    fn declare(&mut self, name: &str, ty: Type) -> VarId {
+        let count = self.name_counts.entry(name.to_string()).or_insert(0);
+        *count += 1;
+        let unique = if *count == 1 { name.to_string() } else { format!("{name}_{count}") };
+        let id = self.vars.push(Var { name: unique, ty, is_param: false, is_temp: false });
+        self.scopes.last_mut().unwrap().insert(name.to_string(), id);
+        id
+    }
+
+    fn fresh_temp(&mut self, ty: Type) -> VarId {
+        let id = self.vars.push(Var {
+            name: format!("t{}", self.temp_count),
+            ty,
+            is_param: false,
+            is_temp: true,
+        });
+        self.temp_count += 1;
+        id
+    }
+
+    fn lookup(&self, name: &str) -> Result<VarId> {
+        self.scopes
+            .iter()
+            .rev()
+            .find_map(|s| s.get(name).copied())
+            .ok_or_else(|| anyhow!("unknown variable `{name}` (sema should have caught this)"))
+    }
+
+    fn global(&self, name: &str) -> Result<crate::ir::GlobalId> {
+        self.globals
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("unknown global `{name}`"))
+    }
+
+    fn func(&self, name: &str) -> Result<FuncId> {
+        self.funcs
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("unknown function `{name}`"))
+    }
+
+    // ---- block helpers -----------------------------------------------------
+
+    fn new_block(&mut self) -> BlockId {
+        self.cfg.blocks.push(Block::default())
+    }
+
+    fn block_terminated(&self) -> bool {
+        self.terminated.contains(&self.cur)
+    }
+
+    fn emit(&mut self, op: Op) {
+        if !self.block_terminated() {
+            self.cfg.blocks[self.cur].ops.push(op);
+        }
+    }
+
+    fn set_term(&mut self, term: Term) {
+        if !self.block_terminated() {
+            self.cfg.blocks[self.cur].term = term;
+            self.terminated.insert(self.cur);
+        }
+    }
+
+    fn switch_to(&mut self, block: BlockId) {
+        self.cur = block;
+    }
+
+    // ---- statements --------------------------------------------------------
+
+    fn lower_block_stmts(&mut self, block: &ast::Block) -> Result<()> {
+        self.scopes.push(HashMap::new());
+        for stmt in &block.stmts {
+            self.lower_stmt(stmt)?;
+        }
+        self.scopes.pop();
+        Ok(())
+    }
+
+    fn lower_stmt(&mut self, stmt: &ast::Stmt) -> Result<()> {
+        match &stmt.kind {
+            ast::StmtKind::Decl { ty, name, init } => {
+                // Evaluate the initializer *before* declaring (C scoping:
+                // `int x = x;` refers to the outer x).
+                let rhs = match init {
+                    Some(init) => Some(self.lower_initializer(init, *ty, stmt.dae)?),
+                    None => None,
+                };
+                let dst = self.declare(name, *ty);
+                match rhs {
+                    Some(Rhs::Expr(e)) => self.emit(Op::Assign { dst, src: e }),
+                    Some(Rhs::Spawn { callee, args }) => {
+                        self.emit(Op::Spawn { dst: Some(dst), callee, args })
+                    }
+                    Some(Rhs::Call { callee, args }) => {
+                        self.emit(Op::Call { dst: Some(dst), callee, args })
+                    }
+                    None => self.emit(Op::Assign {
+                        dst,
+                        src: match ty {
+                            Type::Float => Expr::ConstF(0.0),
+                            Type::Bool => Expr::ConstB(false),
+                            _ => Expr::ConstI(0),
+                        },
+                    }),
+                }
+            }
+            ast::StmtKind::Assign { name, value } => {
+                let dst = self.lookup(name)?;
+                let ty = self.vars[dst].ty;
+                match self.lower_initializer(value, ty, stmt.dae)? {
+                    Rhs::Expr(e) => self.emit(Op::Assign { dst, src: e }),
+                    Rhs::Spawn { callee, args } => {
+                        self.emit(Op::Spawn { dst: Some(dst), callee, args })
+                    }
+                    Rhs::Call { callee, args } => {
+                        self.emit(Op::Call { dst: Some(dst), callee, args })
+                    }
+                }
+            }
+            ast::StmtKind::Store { arr, index, value } => {
+                let arr = self.global(arr)?;
+                let index = self.lower_expr(index, false)?;
+                let value = self.lower_expr(value, false)?;
+                self.emit(Op::Store { arr, index, value });
+            }
+            ast::StmtKind::VoidSpawn(call) => {
+                let callee = self.func(&call.name)?;
+                let args = self.lower_args(&call.args)?;
+                self.emit(Op::Spawn { dst: None, callee, args });
+            }
+            ast::StmtKind::Sync => {
+                let next = self.new_block();
+                self.set_term(Term::Sync { next });
+                self.switch_to(next);
+            }
+            ast::StmtKind::If { cond, then, els } => {
+                let cond = self.lower_expr(cond, false)?;
+                let then_bb = self.new_block();
+                let join_bb = self.new_block();
+                let else_bb = if els.is_some() { self.new_block() } else { join_bb };
+                self.set_term(Term::Branch { cond, then_: then_bb, else_: else_bb });
+
+                self.switch_to(then_bb);
+                self.scopes.push(HashMap::new());
+                self.lower_stmt(then)?;
+                self.scopes.pop();
+                self.set_term(Term::Jump(join_bb));
+
+                if let Some(els) = els {
+                    self.switch_to(else_bb);
+                    self.scopes.push(HashMap::new());
+                    self.lower_stmt(els)?;
+                    self.scopes.pop();
+                    self.set_term(Term::Jump(join_bb));
+                }
+                self.switch_to(join_bb);
+            }
+            ast::StmtKind::While { cond, body } => {
+                let header = self.new_block();
+                let body_bb = self.new_block();
+                let exit_bb = self.new_block();
+                self.set_term(Term::Jump(header));
+
+                self.switch_to(header);
+                let cond = self.lower_expr(cond, false)?;
+                self.set_term(Term::Branch { cond, then_: body_bb, else_: exit_bb });
+
+                self.switch_to(body_bb);
+                self.scopes.push(HashMap::new());
+                self.lower_stmt(body)?;
+                self.scopes.pop();
+                self.set_term(Term::Jump(header));
+
+                self.switch_to(exit_bb);
+            }
+            ast::StmtKind::For { init, cond, step, body } => {
+                self.scopes.push(HashMap::new());
+                if let Some(init) = init {
+                    self.lower_stmt(init)?;
+                }
+                let header = self.new_block();
+                let body_bb = self.new_block();
+                let exit_bb = self.new_block();
+                self.set_term(Term::Jump(header));
+
+                self.switch_to(header);
+                let cond = match cond {
+                    Some(c) => self.lower_expr(c, false)?,
+                    None => Expr::ConstB(true),
+                };
+                self.set_term(Term::Branch { cond, then_: body_bb, else_: exit_bb });
+
+                self.switch_to(body_bb);
+                self.scopes.push(HashMap::new());
+                self.lower_stmt(body)?;
+                self.scopes.pop();
+                if let Some(step) = step {
+                    self.lower_stmt(step)?;
+                }
+                self.set_term(Term::Jump(header));
+
+                self.scopes.pop();
+                self.switch_to(exit_bb);
+            }
+            ast::StmtKind::Return(value) => {
+                let value = match value {
+                    Some(v) => Some(self.lower_expr(v, false)?),
+                    None => None,
+                };
+                self.set_term(Term::Return(value));
+                // Subsequent statements in this block are dead; give them a
+                // fresh unreachable block.
+                let dead = self.new_block();
+                self.switch_to(dead);
+            }
+            ast::StmtKind::ExprCall(call) => {
+                if ast::is_stmt_builtin(&call.name) {
+                    match call.name.as_str() {
+                        "atomic_add" => {
+                            let ast::ExprKind::Var(arr) = &call.args[0].kind else {
+                                bail!("atomic_add first arg must be a global name");
+                            };
+                            let arr = self.global(arr)?;
+                            let index = self.lower_expr(&call.args[1], false)?;
+                            let value = self.lower_expr(&call.args[2], false)?;
+                            self.emit(Op::AtomicAdd { arr, index, value });
+                        }
+                        other => bail!("unknown builtin `{other}`"),
+                    }
+                } else {
+                    let callee = self.func(&call.name)?;
+                    let args = self.lower_args(&call.args)?;
+                    self.emit(Op::Call { dst: None, callee, args });
+                }
+            }
+            ast::StmtKind::Block(block) => self.lower_block_stmts(block)?,
+        }
+        Ok(())
+    }
+
+    // ---- initializers / expressions ---------------------------------------
+
+    fn lower_initializer(
+        &mut self,
+        init: &ast::Initializer,
+        _target_ty: Type,
+        dae: bool,
+    ) -> Result<Rhs> {
+        match init {
+            ast::Initializer::Expr(e) => Ok(Rhs::Expr(self.lower_expr(e, dae)?)),
+            ast::Initializer::Spawn(call) => {
+                let callee = self.func(&call.name)?;
+                let args = self.lower_args(&call.args)?;
+                Ok(Rhs::Spawn { callee, args })
+            }
+            ast::Initializer::Call(call) => {
+                let callee = self.func(&call.name)?;
+                let args = self.lower_args(&call.args)?;
+                Ok(Rhs::Call { callee, args })
+            }
+        }
+    }
+
+    fn lower_args(&mut self, args: &[ast::Expr]) -> Result<Vec<Expr>> {
+        args.iter().map(|a| self.lower_expr(a, false)).collect()
+    }
+
+    /// Lower an expression, hoisting global loads into temps. `dae` marks
+    /// hoisted loads as DAE-annotated.
+    fn lower_expr(&mut self, e: &ast::Expr, dae: bool) -> Result<Expr> {
+        Ok(match &e.kind {
+            ast::ExprKind::IntLit(v) => Expr::ConstI(*v),
+            ast::ExprKind::FloatLit(v) => Expr::ConstF(*v),
+            ast::ExprKind::BoolLit(v) => Expr::ConstB(*v),
+            ast::ExprKind::Var(name) => Expr::Var(self.lookup(name)?),
+            ast::ExprKind::Load { arr, index } => {
+                let gid = self.global(arr)?;
+                let index = self.lower_expr(index, dae)?;
+                let elem = self.module.globals[gid].elem;
+                let dst = self.fresh_temp(elem);
+                self.emit(Op::Load { dst, arr: gid, index, dae });
+                Expr::Var(dst)
+            }
+            ast::ExprKind::Builtin { name, args } => {
+                let b = Builtin::from_name(name)
+                    .ok_or_else(|| anyhow!("unknown expression builtin `{name}`"))?;
+                let args = args
+                    .iter()
+                    .map(|a| self.lower_expr(a, dae))
+                    .collect::<Result<Vec<_>>>()?;
+                Expr::Builtin(b, args)
+            }
+            ast::ExprKind::Binary { op, lhs, rhs } => {
+                let l = self.lower_expr(lhs, dae)?;
+                let r = self.lower_expr(rhs, dae)?;
+                Expr::Binary(*op, Box::new(l), Box::new(r))
+            }
+            ast::ExprKind::Unary { op, operand } => {
+                let inner = self.lower_expr(operand, dae)?;
+                Expr::Unary(*op, Box::new(inner))
+            }
+        })
+    }
+}
+
+enum Rhs {
+    Expr(Expr),
+    Spawn { callee: FuncId, args: Vec<Expr> },
+    Call { callee: FuncId, args: Vec<Expr> },
+}
+
+/// OpenCilk's implicit sync: rewrite every reachable `return` that may have
+/// outstanding children into `sync; return`.
+fn insert_implicit_syncs(func: &mut Func) {
+    let cfg = func.cfg();
+    let n = cfg.blocks.len();
+    let mut pending_in = vec![false; n];
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for (bid, block) in cfg.blocks.iter() {
+            let mut pending = pending_in[bid.index()];
+            for op in &block.ops {
+                if matches!(op, Op::Spawn { .. }) {
+                    pending = true;
+                }
+            }
+            let out = !matches!(block.term, Term::Sync { .. }) && pending;
+            for succ in block.term.successors() {
+                if out && !pending_in[succ.index()] {
+                    pending_in[succ.index()] = true;
+                    changed = true;
+                }
+            }
+        }
+    }
+    let reachable = cfg.reachable();
+    let mut to_split = Vec::new();
+    for (bid, block) in cfg.blocks.iter() {
+        if !reachable[bid.index()] {
+            continue;
+        }
+        if let Term::Return(v) = &block.term {
+            let mut pending = pending_in[bid.index()];
+            for op in &block.ops {
+                if matches!(op, Op::Spawn { .. }) {
+                    pending = true;
+                }
+            }
+            if pending {
+                to_split.push((bid, v.clone()));
+            }
+        }
+    }
+    let cfg = func.cfg_mut();
+    for (bid, ret) in to_split {
+        let ret_block = cfg.blocks.push(Block { ops: vec![], term: Term::Return(ret) });
+        cfg.blocks[bid].term = Term::Sync { next: ret_block };
+    }
+}
+
+use std::collections::HashSet;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_check;
+    use crate::ir::print::print_func;
+    use crate::ir::verify::{verify_module, Stage};
+
+    fn lower(src: &str) -> Module {
+        let (program, _) = parse_and_check("test.cilk", src).unwrap();
+        let module = lower_program(&program).unwrap();
+        let errors = verify_module(&module, Stage::Implicit);
+        assert!(errors.is_empty(), "verifier: {errors:?}");
+        module
+    }
+
+    #[test]
+    fn fib_cfg_shape() {
+        let module = lower(
+            "int fib(int n) {
+                if (n < 2) return n;
+                int x = cilk_spawn fib(n - 1);
+                int y = cilk_spawn fib(n - 2);
+                cilk_sync;
+                return x + y;
+            }",
+        );
+        let fib = &module.funcs[module.func_by_name("fib").unwrap()];
+        let cfg = fib.cfg();
+        // One sync terminator, two spawns.
+        let syncs = cfg.blocks.values().filter(|b| matches!(b.term, Term::Sync { .. })).count();
+        assert_eq!(syncs, 1);
+        let spawns: usize = cfg
+            .blocks
+            .values()
+            .map(|b| b.ops.iter().filter(|o| matches!(o, Op::Spawn { .. })).count())
+            .sum();
+        assert_eq!(spawns, 2);
+        assert_eq!(fib.kind, FuncKind::Task);
+    }
+
+    #[test]
+    fn loads_are_hoisted() {
+        let module = lower(
+            "global int a[16];
+             int f(int i) { return a[i] + a[i + 1]; }",
+        );
+        let f = &module.funcs[module.func_by_name("f").unwrap()];
+        let loads: usize = f
+            .cfg()
+            .blocks
+            .values()
+            .map(|b| b.ops.iter().filter(|o| matches!(o, Op::Load { .. })).count())
+            .sum();
+        assert_eq!(loads, 2);
+        assert_eq!(f.kind, FuncKind::Leaf);
+    }
+
+    #[test]
+    fn dae_pragma_marks_loads() {
+        let module = lower(
+            "global int a[16];
+             void f(int i) {
+                #pragma bombyx dae
+                int x = a[i];
+                int y = a[i + 1];
+                atomic_add(a, 0, x + y);
+             }",
+        );
+        let f = &module.funcs[module.func_by_name("f").unwrap()];
+        let flags: Vec<bool> = f
+            .cfg()
+            .blocks
+            .values()
+            .flat_map(|b| b.ops.iter())
+            .filter_map(|o| match o {
+                Op::Load { dae, .. } => Some(*dae),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(flags, vec![true, false]);
+    }
+
+    #[test]
+    fn implicit_sync_inserted_before_pending_return() {
+        // `return 0` after a spawn without a sync — OpenCilk syncs
+        // implicitly at function exit.
+        let module = lower(
+            "void g(int n) { }
+             int f(int n) {
+                cilk_spawn g(n);
+                return 0;
+             }",
+        );
+        let f = &module.funcs[module.func_by_name("f").unwrap()];
+        assert!(f.has_syncs(), "implicit sync must be inserted:\n{}", print_func(&module, f));
+    }
+
+    #[test]
+    fn no_spurious_sync_on_pre_spawn_return() {
+        let module = lower(
+            "void g(int n) { }
+             int f(int n) {
+                if (n < 2) return n;
+                cilk_spawn g(n);
+                cilk_sync;
+                return 0;
+             }",
+        );
+        let f = &module.funcs[module.func_by_name("f").unwrap()];
+        let syncs = f
+            .cfg()
+            .blocks
+            .values()
+            .filter(|b| matches!(b.term, Term::Sync { .. }))
+            .count();
+        assert_eq!(syncs, 1, "{}", print_func(&module, f));
+    }
+
+    #[test]
+    fn while_loop_shape() {
+        let module = lower(
+            "int f(int n) {
+                int i = 0;
+                while (i < n) { i = i + 1; }
+                return i;
+             }",
+        );
+        let f = &module.funcs[module.func_by_name("f").unwrap()];
+        // entry, header, body, exit (+possibly dead) — header has 2 preds.
+        let cfg = f.cfg();
+        let preds = cfg.predecessors();
+        assert!(preds.iter().any(|p| p.len() == 2), "loop header with 2 preds expected");
+    }
+
+    #[test]
+    fn shadowed_names_are_uniquified() {
+        let module = lower("int f(int n) { int x = 1; { int x = 2; n = x; } return x; }");
+        let f = &module.funcs[module.func_by_name("f").unwrap()];
+        crate::ir::verify::check_unique_var_names(f).unwrap();
+        let names: Vec<&str> = f.vars.values().map(|v| v.name.as_str()).collect();
+        assert!(names.contains(&"x") && names.contains(&"x_2"), "{names:?}");
+    }
+
+    #[test]
+    fn entry_block_has_no_preds_even_with_leading_loop() {
+        let module = lower("int f(int n) { while (n > 0) { n = n - 1; } return n; }");
+        let f = &module.funcs[module.func_by_name("f").unwrap()];
+        let preds = f.cfg().predecessors();
+        assert!(preds[f.cfg().entry.index()].is_empty());
+    }
+
+    #[test]
+    fn xla_extern_registered() {
+        let module = lower(
+            "extern xla int relax(int n);
+             int f(int n) { int r = cilk_spawn relax(n); cilk_sync; return r; }",
+        );
+        let relax = &module.funcs[module.func_by_name("relax").unwrap()];
+        assert_eq!(relax.kind, FuncKind::Xla);
+        assert!(relax.body.is_none());
+    }
+}

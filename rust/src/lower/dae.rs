@@ -1,0 +1,299 @@
+//! Decoupled access–execute transform (paper §II-C).
+//!
+//! For each `#pragma bombyx dae`-marked [`Op::Load`], Bombyx:
+//!
+//! 1. creates (or reuses) an *access function* `<global>_access(idx)` whose
+//!    whole body is `return <global>[idx];`;
+//! 2. replaces the load with `dst = cilk_spawn <global>_access(index)`;
+//! 3. inserts a `cilk_sync` immediately after the (consecutive run of)
+//!    converted loads, splitting the containing block — "the compiler will
+//!    split that operation and the code after it into separate tasks".
+//!
+//! After explicitization this yields exactly the paper's PE trio: the
+//! original task becomes the *spawner*, the access function becomes the
+//! *access* PE, and the post-sync continuation becomes the *executor* PE.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::frontend::ast::Type;
+use crate::ir::cfg::{Block, Cfg, Func, FuncKind, GlobalId, Module, Op, Term};
+use crate::ir::expr::{Expr, Var};
+use crate::util::idvec::IdVec;
+
+/// Apply the DAE transform to every annotated load in the module.
+/// Returns the number of loads converted.
+pub fn apply_dae(module: &mut Module) -> Result<usize> {
+    // First collect the set of globals needing access functions, then
+    // create them (stable ids), then rewrite bodies.
+    let mut needed: Vec<GlobalId> = Vec::new();
+    for (_, func) in module.funcs.iter() {
+        let Some(cfg) = func.body.as_ref() else { continue };
+        for block in cfg.blocks.values() {
+            for op in &block.ops {
+                if let Op::Load { dae: true, arr, .. } = op {
+                    if func.kind != FuncKind::Task {
+                        bail!(
+                            "`#pragma bombyx dae` in leaf function `{}`: DAE requires a task \
+                             context (the access becomes a spawned task)",
+                            func.name
+                        );
+                    }
+                    if !needed.contains(arr) {
+                        needed.push(*arr);
+                    }
+                }
+            }
+        }
+    }
+    if needed.is_empty() {
+        return Ok(0);
+    }
+
+    let mut access_funcs: HashMap<GlobalId, crate::ir::FuncId> = HashMap::new();
+    for arr in needed {
+        let g = &module.globals[arr];
+        let fid = module.funcs.push(make_access_func(&g.name, g.elem, arr));
+        access_funcs.insert(arr, fid);
+    }
+
+    let mut converted = 0;
+    for (_, func) in module.funcs.iter_mut() {
+        if func.kind != FuncKind::Task || func.body.is_none() {
+            continue;
+        }
+        converted += rewrite_func(func, &access_funcs)?;
+    }
+    Ok(converted)
+}
+
+/// `int <name>_access(int idx) { return <name>[idx]; }` — a *task* (it is
+/// spawned; in hardware it becomes the access PE).
+fn make_access_func(global_name: &str, elem: Type, arr: GlobalId) -> Func {
+    let mut vars = IdVec::new();
+    let idx = vars.push(Var { name: "idx".into(), ty: Type::Int, is_param: true, is_temp: false });
+    let tmp = vars.push(Var { name: "t0".into(), ty: elem, is_param: false, is_temp: true });
+    let mut cfg = Cfg::default();
+    let entry = cfg.blocks.push(Block {
+        ops: vec![Op::Load { dst: tmp, arr, index: Expr::Var(idx), dae: false }],
+        term: Term::Return(Some(Expr::Var(tmp))),
+    });
+    cfg.entry = entry;
+    Func {
+        name: format!("{global_name}_access"),
+        ret: elem,
+        params: 1,
+        vars,
+        body: Some(cfg),
+        kind: FuncKind::Task,
+        task: None,
+    }
+}
+
+/// Rewrite one function; returns number of converted loads.
+fn rewrite_func(
+    func: &mut Func,
+    access_funcs: &HashMap<GlobalId, crate::ir::FuncId>,
+) -> Result<usize> {
+    let mut converted = 0;
+    let cfg = func.cfg_mut();
+    // Iterate blocks by index; rewriting appends new blocks.
+    let mut bi = 0;
+    while bi < cfg.blocks.len() {
+        let bid = crate::ir::BlockId::new(bi);
+        // Find the first DAE load in this block.
+        let pos = cfg.blocks[bid]
+            .ops
+            .iter()
+            .position(|op| matches!(op, Op::Load { dae: true, .. }));
+        let Some(pos) = pos else {
+            bi += 1;
+            continue;
+        };
+        // Everything from `pos` on is partitioned into the spawn group
+        // (DAE loads whose indices only use values defined before `pos`)
+        // and the continuation tail (everything else — including the
+        // assigns that consume the loaded values, which may only run after
+        // the sync anyway). A DAE load depending on a tail-defined value
+        // keeps its flag and is converted when its (new) block is visited,
+        // yielding a chained access→sync→access pipeline.
+        let rest: Vec<Op> = cfg.blocks[bid].ops.split_off(pos);
+        let old_term = std::mem::take(&mut cfg.blocks[bid].term);
+
+        let mut tail_ops: Vec<Op> = Vec::new();
+        let mut tail_defs: Vec<crate::ir::VarId> = Vec::new();
+        for op in rest {
+            let convertible = match &op {
+                Op::Load { dae: true, index, .. } => {
+                    let mut independent = true;
+                    index.for_each_var(&mut |v| {
+                        if tail_defs.contains(&v) {
+                            independent = false;
+                        }
+                    });
+                    independent
+                }
+                _ => false,
+            };
+            if convertible {
+                let Op::Load { dst, arr, index, .. } = op else { unreachable!() };
+                let callee = access_funcs[&arr];
+                cfg.blocks[bid].ops.push(Op::Spawn {
+                    dst: Some(dst),
+                    callee,
+                    args: vec![index],
+                });
+                converted += 1;
+            } else {
+                if let Some(d) = op.def() {
+                    tail_defs.push(d);
+                }
+                tail_ops.push(op);
+            }
+        }
+        let cont = cfg.blocks.push(Block { ops: tail_ops, term: old_term });
+        cfg.blocks[bid].term = Term::Sync { next: cont };
+        bi += 1;
+    }
+    Ok(converted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_check;
+    use crate::ir::print::print_module;
+    use crate::ir::verify::{verify_module, Stage};
+    use crate::lower::ast_to_cfg::lower_program;
+
+    fn lower_with_dae(src: &str) -> (Module, usize) {
+        let (p, _) = parse_and_check("t", src).unwrap();
+        let mut m = lower_program(&p).unwrap();
+        let n = apply_dae(&mut m).unwrap();
+        let errors = verify_module(&m, Stage::Implicit);
+        assert!(errors.is_empty(), "verify: {errors:?}\n{}", print_module(&m));
+        (m, n)
+    }
+
+    const BFS_DAE_FLAT: &str = "
+        global int adj_off[];
+        global int adj_edges[];
+        global int visited[];
+        void visit(int n) {
+            #pragma bombyx dae
+            int off = adj_off[n];
+            #pragma bombyx dae
+            int end = adj_off[n + 1];
+            visited[n] = 1;
+            for (int i = off; i < end; i = i + 1) {
+                cilk_spawn visit(adj_edges[i]);
+            }
+            cilk_sync;
+        }";
+
+    #[test]
+    fn bfs_dae_creates_access_task_and_sync() {
+        let (m, n) = lower_with_dae(BFS_DAE_FLAT);
+        assert_eq!(n, 2, "two annotated loads converted");
+        let access = m.func_by_name("adj_off_access").expect("access function created");
+        assert_eq!(m.funcs[access].kind, FuncKind::Task);
+        let visit = &m.funcs[m.func_by_name("visit").unwrap()];
+        // Consecutive DAE loads share one inserted sync; the loop sync is
+        // the second.
+        let syncs = visit
+            .cfg()
+            .blocks
+            .values()
+            .filter(|b| matches!(b.term, Term::Sync { .. }))
+            .count();
+        assert_eq!(syncs, 2, "{}", print_module(&m));
+        let spawns_of_access: usize = visit
+            .cfg()
+            .blocks
+            .values()
+            .flat_map(|b| b.ops.iter())
+            .filter(|op| matches!(op, Op::Spawn { callee, .. } if *callee == access))
+            .count();
+        assert_eq!(spawns_of_access, 2);
+    }
+
+    #[test]
+    fn single_dae_with_user_sync() {
+        let (m, n) = lower_with_dae(
+            "global int a[];
+             void g(int v) { atomic_add(a, 0, v); }
+             void f(int i) {
+                #pragma bombyx dae
+                int x = a[i];
+                cilk_spawn g(x);
+                cilk_sync;
+             }",
+        );
+        assert_eq!(n, 1);
+        let f = &m.funcs[m.func_by_name("f").unwrap()];
+        let syncs = f
+            .cfg()
+            .blocks
+            .values()
+            .filter(|b| matches!(b.term, Term::Sync { .. }))
+            .count();
+        assert_eq!(syncs, 2, "DAE sync + user sync:\n{}", print_module(&m));
+    }
+
+    #[test]
+    fn no_pragma_no_change() {
+        let (p, _) = parse_and_check(
+            "t",
+            "global int a[];
+             void g(int v) { atomic_add(a, 0, v); }
+             void f(int i) { int x = a[i]; cilk_spawn g(x); cilk_sync; }",
+        )
+        .unwrap();
+        let mut m = lower_program(&p).unwrap();
+        let before = print_module(&m);
+        let n = apply_dae(&mut m).unwrap();
+        assert_eq!(n, 0);
+        assert_eq!(print_module(&m), before);
+    }
+
+    #[test]
+    fn access_task_reused_across_functions() {
+        let (m, n) = lower_with_dae(
+            "global int a[];
+             void h(int v) { atomic_add(a, 0, v); }
+             void f(int i) {
+                #pragma bombyx dae
+                int x = a[i];
+                cilk_spawn h(x);
+                cilk_sync;
+             }
+             void g(int i) {
+                #pragma bombyx dae
+                int y = a[i + 1];
+                cilk_spawn h(y);
+                cilk_sync;
+             }",
+        );
+        assert_eq!(n, 2);
+        let count = m.funcs.values().filter(|f| f.name == "a_access").count();
+        assert_eq!(count, 1, "one access task per global");
+    }
+
+    #[test]
+    fn dae_in_leaf_rejected() {
+        let (p, _) = parse_and_check(
+            "t",
+            "global int a[];
+             int f(int i) {
+                #pragma bombyx dae
+                int x = a[i];
+                return x;
+             }",
+        )
+        .unwrap();
+        let mut m = lower_program(&p).unwrap();
+        let err = apply_dae(&mut m).unwrap_err();
+        assert!(err.to_string().contains("leaf function"), "{err}");
+    }
+}

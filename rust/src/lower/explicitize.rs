@@ -1,0 +1,758 @@
+//! Implicit → explicit IR conversion (paper §II-A, Fig. 4(b) → Fig. 4(c)).
+//!
+//! The CFG of every task function is partitioned into *paths* — each path a
+//! self-contained terminating function. Conversion steps per function:
+//!
+//! 1. **Partition** ([`analysis::partition_paths`]): entries are the
+//!    function entry, every sync successor, and join blocks promoted to
+//!    entries (fixpoint).
+//! 2. **Closure construction**: for each sync block `s` with continuation
+//!    entry `t`, the continuation task's parameters are `live-in(t)`;
+//!    parameters assigned by spawns joining at `s` become *holes*, the rest
+//!    are *ready arguments*. A `spawn_next` ([`Op::MakeClosure`]) is placed
+//!    at the nearest common dominator of the spawn sites and `s`, hoisted
+//!    out of any loop not containing `s` (a loop-carried closure handle is
+//!    just a value that flows through the loop task's parameters — this is
+//!    how the BFS executor of the paper keeps one closure alive across its
+//!    spawn loop).
+//! 3. **Spawn conversion**: `x = cilk_spawn f(...)` becomes
+//!    `spawn f_entry(...) -> c.arg<i>` ([`Op::SpawnChild`] with a
+//!    [`RetTarget::Slot`]), void spawns decrement only the join counter
+//!    ([`RetTarget::Counter`]).
+//! 4. **Split**: each path becomes a task; `sync` becomes
+//!    `close_spawns + halt`, `return` becomes `send_argument(k) + halt`,
+//!    and inter-path control edges become tail spawns with
+//!    [`RetTarget::Forward`].
+//!
+//! Join counters are dynamic (created at 1 = creator hold, incremented per
+//! spawn, hold dropped by `close_spawns`) which supports data-dependent
+//! spawn counts with no races — see DESIGN.md §6.2.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::ir::cfg::{
+    Block, BlockId, Cfg, Func, FuncId, FuncKind, Module, Op, RetTarget, TaskMeta, TaskRole, Term,
+};
+use crate::ir::expr::{Expr, Var, VarId};
+use crate::util::idvec::IdVec;
+
+use super::analysis::{
+    common_dominator, dominators, liveness, natural_loops, partition_paths, spawn_sync_map, Paths,
+};
+
+/// Explicitize every task function of a module. Leaf functions are copied;
+/// `extern xla` declarations become XLA tasks.
+pub fn explicitize_module(module: &Module) -> Result<Module> {
+    let mut out = Module { globals: module.globals.clone(), funcs: IdVec::new() };
+
+    // ---- pass 1: reserve ids ------------------------------------------------
+    // old FuncId -> new entry FuncId (for leaf/xla: the copy).
+    let mut entry_map: HashMap<FuncId, FuncId> = HashMap::new();
+    // (old FuncId, path index) -> new FuncId.
+    let mut path_map: HashMap<(FuncId, usize), FuncId> = HashMap::new();
+    // Pre-computed partitions per task function.
+    let mut partitions: HashMap<FuncId, Paths> = HashMap::new();
+
+    for (fid, func) in module.funcs.iter() {
+        match func.kind {
+            FuncKind::Leaf => {
+                let new_id = out.funcs.push(func.clone());
+                entry_map.insert(fid, new_id);
+            }
+            FuncKind::Xla => {
+                let mut f = func.clone();
+                f.task = Some(TaskMeta {
+                    role: TaskRole::Xla,
+                    cont_ty: f.ret,
+                    source: f.name.clone(),
+                });
+                let new_id = out.funcs.push(f);
+                entry_map.insert(fid, new_id);
+            }
+            FuncKind::Task => {
+                let paths = partition_paths(func.cfg());
+                let cfg = func.cfg();
+                let mut cont_n = 0;
+                let mut join_n = 0;
+                for (pi, &entry) in paths.entries.iter().enumerate() {
+                    let is_sync_target = cfg.blocks.values().any(
+                        |b| matches!(b.term, Term::Sync { next } if next == entry),
+                    );
+                    let (name, role) = if pi == 0 {
+                        let role = if func.name.ends_with("_access") {
+                            TaskRole::Access
+                        } else {
+                            TaskRole::Entry
+                        };
+                        (func.name.clone(), role)
+                    } else if is_sync_target {
+                        cont_n += 1;
+                        (format!("{}__k{}", func.name, cont_n), TaskRole::Continuation)
+                    } else {
+                        join_n += 1;
+                        (format!("{}__j{}", func.name, join_n), TaskRole::Join)
+                    };
+                    let new_id = out.funcs.push(Func {
+                        name,
+                        ret: func.ret,
+                        params: 0,
+                        vars: IdVec::new(),
+                        body: None,
+                        kind: FuncKind::Task,
+                        task: Some(TaskMeta {
+                            role,
+                            cont_ty: func.ret,
+                            source: func.name.clone(),
+                        }),
+                    });
+                    path_map.insert((fid, pi), new_id);
+                    if pi == 0 {
+                        entry_map.insert(fid, new_id);
+                    }
+                }
+                partitions.insert(fid, paths);
+            }
+        }
+    }
+
+    // Rewrite leaf Call targets inside copied leaf functions.
+    for (_, func) in out.funcs.iter_mut() {
+        if func.kind == FuncKind::Leaf {
+            if let Some(cfg) = func.body.as_mut() {
+                for (_, block) in cfg.blocks.iter_mut() {
+                    for op in &mut block.ops {
+                        if let Op::Call { callee, .. } = op {
+                            *callee = entry_map[callee];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- pass 2: convert each task function ---------------------------------
+    for (fid, func) in module.funcs.iter() {
+        if func.kind != FuncKind::Task {
+            continue;
+        }
+        convert_task_func(module, &mut out, fid, func, &partitions[&fid], &entry_map, &path_map)?;
+    }
+    Ok(out)
+}
+
+fn convert_task_func(
+    module: &Module,
+    out: &mut Module,
+    fid: FuncId,
+    func: &Func,
+    paths: &Paths,
+    entry_map: &HashMap<FuncId, FuncId>,
+    path_map: &HashMap<(FuncId, usize), FuncId>,
+) -> Result<()> {
+    // ---- phase A: analyses on the original CFG -----------------------------
+    let orig_live = liveness(func);
+    let cfg0 = func.cfg();
+    let idom = dominators(cfg0);
+    let loops = natural_loops(cfg0, &idom);
+    let sync_spawns = spawn_sync_map(func)?;
+
+    // Continuation parameter lists (sorted live-in of each sync target),
+    // shared between closure construction here and task construction below.
+    // Keyed by path entry block.
+    let mut path_params: HashMap<BlockId, Vec<VarId>> = HashMap::new();
+    for (pi, &entry) in paths.entries.iter().enumerate() {
+        if pi == 0 {
+            path_params.insert(entry, func.param_ids().collect());
+        } else {
+            let mut vars = orig_live.live_in_vars(entry);
+            vars.sort();
+            path_params.insert(entry, vars);
+        }
+    }
+
+    // ---- phase B: instrument a working copy ---------------------------------
+    let mut work = func.clone();
+    let sync_blocks: Vec<(BlockId, BlockId)> = cfg0
+        .blocks
+        .iter()
+        .filter_map(|(bid, b)| match b.term {
+            Term::Sync { next } => Some((bid, next)),
+            _ => None,
+        })
+        .collect();
+
+    // Allocate one closure var per sync and plan every mutation before
+    // touching the CFG (op indices stay valid only while nothing shifts).
+    struct SyncPlan {
+        s: BlockId,
+        clos: VarId,
+        cont_task: FuncId,
+        cont_params: Vec<VarId>,
+        insert_at: BlockId,
+        spawn_sites: Vec<(BlockId, usize)>,
+    }
+    let mut plans: Vec<SyncPlan> = Vec::new();
+    for (s, target) in &sync_blocks {
+        let (s, target) = (*s, *target);
+        let clos = work.vars.push(Var {
+            name: format!("c{}", s.index()),
+            ty: crate::frontend::ast::Type::Int,
+            is_param: false,
+            is_temp: true,
+        });
+        // Where to create the closure: NCD of spawn sites and the sync,
+        // hoisted out of loops that don't contain the sync.
+        let spawn_sites = sync_spawns.get(&s).cloned().unwrap_or_default();
+        let mut ncd_blocks: Vec<BlockId> = spawn_sites.iter().map(|(b, _)| *b).collect();
+        ncd_blocks.push(s);
+        let mut insert_at = common_dominator(cfg0, &idom, &ncd_blocks);
+        loop {
+            let Some((header, _)) = loops
+                .iter()
+                .find(|(_, body)| body.contains(&insert_at) && !body.contains(&s))
+            else {
+                break;
+            };
+            let Some(up) = idom[header.index()] else { break };
+            if up == *header {
+                bail!("cannot hoist spawn_next out of irreducible loop in `{}`", func.name);
+            }
+            insert_at = up;
+        }
+        plans.push(SyncPlan {
+            s,
+            clos,
+            cont_task: path_map[&(fid, paths.path_of(target))],
+            cont_params: path_params[&target].clone(),
+            insert_at,
+            spawn_sites,
+        });
+    }
+
+    // Step 1: convert every spawn in place (indices untouched).
+    for plan in &plans {
+        let work_cfg = work.cfg_mut();
+        for (bid, oi) in &plan.spawn_sites {
+            let op = &mut work_cfg.blocks[*bid].ops[*oi];
+            let Op::Spawn { dst, callee, args } = op.clone() else {
+                bail!("spawn site moved during instrumentation (compiler bug)");
+            };
+            let ret = match dst {
+                Some(d) => match plan.cont_params.iter().position(|&p| p == d) {
+                    Some(field) => RetTarget::Slot { clos: plan.clos, field: field as u32 },
+                    None => RetTarget::Counter { clos: plan.clos }, // result dead after sync
+                },
+                None => RetTarget::Counter { clos: plan.clos },
+            };
+            *op = Op::SpawnChild { callee: entry_map[&callee], args, ret };
+        }
+    }
+
+    // Step 2: ready-argument stores + close at each sync block (appends —
+    // no index shifts for other plans' spawn sites, which precede syncs).
+    for plan in &plans {
+        let holes: Vec<VarId> = plan
+            .spawn_sites
+            .iter()
+            .filter_map(|(b, oi)| match &work.cfg().blocks[*b].ops[*oi] {
+                Op::SpawnChild { ret: RetTarget::Slot { field, .. }, .. } => {
+                    Some(plan.cont_params[*field as usize])
+                }
+                _ => None,
+            })
+            .collect();
+        let work_cfg = work.cfg_mut();
+        for (field, &p) in plan.cont_params.iter().enumerate() {
+            if !holes.contains(&p) {
+                work_cfg.blocks[plan.s].ops.push(Op::ClosureStore {
+                    clos: plan.clos,
+                    field: field as u32,
+                    value: Expr::Var(p),
+                });
+            }
+        }
+        work_cfg.blocks[plan.s].ops.push(Op::CloseSpawns { clos: plan.clos });
+    }
+
+    // Step 3: MakeClosure insertions at block starts (done last — they
+    // shift op indices, which no later step consults).
+    for plan in &plans {
+        let work_cfg = work.cfg_mut();
+        work_cfg.blocks[plan.insert_at]
+            .ops
+            .insert(0, Op::MakeClosure { dst: plan.clos, task: plan.cont_task });
+    }
+
+    // Rewrite spawn callee ids for any spawns NOT attached to a sync —
+    // there are none (spawn_sync_map guarantees), but Call targets must be
+    // remapped to the new module's leaf ids.
+    let work_cfg = work.cfg_mut();
+    for (_, block) in work_cfg.blocks.iter_mut() {
+        for op in &mut block.ops {
+            if let Op::Call { callee, .. } = op {
+                *callee = entry_map[callee];
+            }
+        }
+    }
+
+    // ---- phase C: recompute liveness, split into tasks ----------------------
+    let live = liveness(&work);
+    // Updated parameter lists including threaded closure handles.
+    let mut final_params: HashMap<BlockId, Vec<VarId>> = HashMap::new();
+    for (pi, &entry) in paths.entries.iter().enumerate() {
+        if pi == 0 {
+            final_params.insert(entry, func.param_ids().collect());
+        } else {
+            let mut vars = live.live_in_vars(entry);
+            vars.sort();
+            // Closure fields must match phase-B hole indices: the original
+            // params prefix must be exactly path_params (hole fields were
+            // indexed against it). Threaded extras (closure handles) go
+            // after.
+            let base = &path_params[&entry];
+            let extras: Vec<VarId> = vars.iter().copied().filter(|v| !base.contains(v)).collect();
+            let mut ordered = base.clone();
+            ordered.extend(extras);
+            final_params.insert(entry, ordered);
+        }
+    }
+
+    for (pi, &entry) in paths.entries.iter().enumerate() {
+        let new_fid = path_map[&(fid, pi)];
+        let task = build_task(
+            module,
+            &work,
+            paths,
+            pi,
+            entry,
+            &final_params,
+            fid,
+            path_map,
+        )?;
+        let name = out.funcs[new_fid].name.clone();
+        let meta = out.funcs[new_fid].task.clone();
+        out.funcs[new_fid] = task;
+        out.funcs[new_fid].name = name;
+        out.funcs[new_fid].task = meta;
+    }
+    Ok(())
+}
+
+/// Construct one explicit task from a path of the instrumented CFG.
+#[allow(clippy::too_many_arguments)]
+fn build_task(
+    _module: &Module,
+    work: &Func,
+    paths: &Paths,
+    path_index: usize,
+    entry: BlockId,
+    final_params: &HashMap<BlockId, Vec<VarId>>,
+    fid: FuncId,
+    path_map: &HashMap<(FuncId, usize), FuncId>,
+) -> Result<Func> {
+    let work_cfg = work.cfg();
+    let params = &final_params[&entry];
+    let owned: Vec<BlockId> = paths.blocks_of(path_index, work_cfg);
+
+    // Pre-collect every variable the path touches: params first (fixed
+    // order — closure field indices depend on it), then defs/uses in block
+    // order.
+    let mut vars: IdVec<Var> = IdVec::new();
+    let mut var_map: HashMap<VarId, VarId> = HashMap::new();
+    for &p in params {
+        let mut v = work.vars[p].clone();
+        v.is_param = true;
+        var_map.insert(p, vars.push(v));
+    }
+    {
+        let mut add = |v: VarId| {
+            if !var_map.contains_key(&v) {
+                let mut nv = work.vars[v].clone();
+                nv.is_param = false;
+                var_map.insert(v, vars.push(nv));
+            }
+        };
+        for &b in &owned {
+            let src = &work_cfg.blocks[b];
+            for op in &src.ops {
+                if let Some(d) = op.def() {
+                    add(d);
+                }
+                op.for_each_use(&mut add);
+            }
+            src.term.for_each_use(&mut add);
+            // Tail-spawn args use the target's params.
+            for t in src.term.successors() {
+                if paths.path_of(t) != path_index {
+                    for &p in &final_params[&t] {
+                        add(p);
+                    }
+                }
+            }
+        }
+    }
+    let mv = |v: VarId| -> VarId {
+        *var_map.get(&v).unwrap_or_else(|| {
+            panic!(
+                "variable `{}` used but not collected in path (liveness bug)",
+                work.vars[v].name
+            )
+        })
+    };
+
+    let mut block_map: HashMap<BlockId, BlockId> = HashMap::new();
+    let mut blocks: IdVec<Block> = IdVec::new();
+    for &b in &owned {
+        block_map.insert(b, blocks.push(Block::default()));
+    }
+
+    // Tail-spawn trampolines per target entry, created lazily.
+    let mut trampolines: HashMap<BlockId, BlockId> = HashMap::new();
+    let mut resolve_target = |t: BlockId, blocks: &mut IdVec<Block>| -> BlockId {
+        if paths.path_of(t) == path_index {
+            block_map[&t]
+        } else {
+            *trampolines.entry(t).or_insert_with(|| {
+                let callee = path_map[&(fid, paths.path_of(t))];
+                let args: Vec<Expr> =
+                    final_params[&t].iter().map(|&p| Expr::Var(mv(p))).collect();
+                blocks.push(Block {
+                    ops: vec![Op::SpawnChild { callee, args, ret: RetTarget::Forward }],
+                    term: Term::Halt,
+                })
+            })
+        }
+    };
+
+    let mut out_blocks: Vec<(BlockId, Vec<Op>, Term)> = Vec::new();
+    for &b in &owned {
+        let src = &work_cfg.blocks[b];
+        let mut ops: Vec<Op> = src.ops.iter().map(|op| remap_op(op, &mv)).collect();
+        let term = match &src.term {
+            Term::Sync { .. } => Term::Halt,
+            Term::Return(v) => {
+                let value = v.as_ref().map(|e| e.map_vars(&mv));
+                ops.push(Op::SendArgument { value });
+                Term::Halt
+            }
+            Term::Jump(t) => Term::Jump(resolve_target(*t, &mut blocks)),
+            Term::Branch { cond, then_, else_ } => Term::Branch {
+                cond: cond.map_vars(&mv),
+                then_: resolve_target(*then_, &mut blocks),
+                else_: resolve_target(*else_, &mut blocks),
+            },
+            Term::Halt => Term::Halt,
+        };
+        out_blocks.push((block_map[&b], ops, term));
+    }
+    for (nb, ops, term) in out_blocks {
+        blocks[nb].ops = ops;
+        blocks[nb].term = term;
+    }
+
+    Ok(Func {
+        name: String::new(), // caller preserves the reserved name
+        ret: work.ret,
+        params: params.len(),
+        vars,
+        body: Some(Cfg { blocks, entry: block_map[&entry] }),
+        kind: FuncKind::Task,
+        task: None, // caller preserves meta
+    })
+}
+
+fn remap_op(op: &Op, mv: &impl Fn(VarId) -> VarId) -> Op {
+    match op {
+        Op::Assign { dst, src } => Op::Assign { dst: mv(*dst), src: src.map_vars(mv) },
+        Op::Load { dst, arr, index, dae } => {
+            Op::Load { dst: mv(*dst), arr: *arr, index: index.map_vars(mv), dae: *dae }
+        }
+        Op::Store { arr, index, value } => {
+            Op::Store { arr: *arr, index: index.map_vars(mv), value: value.map_vars(mv) }
+        }
+        Op::AtomicAdd { arr, index, value } => {
+            Op::AtomicAdd { arr: *arr, index: index.map_vars(mv), value: value.map_vars(mv) }
+        }
+        Op::Call { dst, callee, args } => Op::Call {
+            dst: dst.map(&mv),
+            callee: *callee,
+            args: args.iter().map(|a| a.map_vars(mv)).collect(),
+        },
+        Op::Spawn { .. } => {
+            unreachable!("bare Spawn must have been converted to SpawnChild")
+        }
+        Op::MakeClosure { dst, task } => Op::MakeClosure { dst: mv(*dst), task: *task },
+        Op::ClosureStore { clos, field, value } => {
+            Op::ClosureStore { clos: mv(*clos), field: *field, value: value.map_vars(mv) }
+        }
+        Op::SpawnChild { callee, args, ret } => Op::SpawnChild {
+            callee: *callee,
+            args: args.iter().map(|a| a.map_vars(mv)).collect(),
+            ret: match ret {
+                RetTarget::Slot { clos, field } => {
+                    RetTarget::Slot { clos: mv(*clos), field: *field }
+                }
+                RetTarget::Counter { clos } => RetTarget::Counter { clos: mv(*clos) },
+                RetTarget::Forward => RetTarget::Forward,
+            },
+        },
+        Op::CloseSpawns { clos } => Op::CloseSpawns { clos: mv(*clos) },
+        Op::SendArgument { value } => {
+            Op::SendArgument { value: value.as_ref().map(|e| e.map_vars(mv)) }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_check;
+    use crate::ir::print::{print_cilk1, print_module};
+    use crate::ir::verify::{verify_module, Stage};
+    use crate::lower::ast_to_cfg::lower_program;
+    use crate::lower::simplify::simplify_module;
+
+    fn explicitize(src: &str) -> Module {
+        let (p, _) = parse_and_check("t", src).unwrap();
+        let mut m = lower_program(&p).unwrap();
+        simplify_module(&mut m);
+        let e = explicitize_module(&m).unwrap();
+        let errors = verify_module(&e, Stage::Explicit);
+        assert!(errors.is_empty(), "verify: {errors:?}\n{}", print_module(&e));
+        e
+    }
+
+    const FIB: &str = "int fib(int n) {
+        if (n < 2) return n;
+        int x = cilk_spawn fib(n - 1);
+        int y = cilk_spawn fib(n - 2);
+        cilk_sync;
+        return x + y;
+    }";
+
+    #[test]
+    fn fib_becomes_two_tasks() {
+        let e = explicitize(FIB);
+        let names: Vec<&str> = e.funcs.values().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["fib", "fib__k1"], "{names:?}");
+        let fib = &e.funcs[e.func_by_name("fib").unwrap()];
+        let cont = &e.funcs[e.func_by_name("fib__k1").unwrap()];
+        assert_eq!(cont.params, 2, "continuation takes x, y");
+        assert_eq!(cont.task.as_ref().unwrap().role, TaskRole::Continuation);
+        assert_eq!(fib.task.as_ref().unwrap().role, TaskRole::Entry);
+
+        // fib: a MakeClosure, two SpawnChild with Slot targets, one Close,
+        // one SendArgument (base case).
+        let ops: Vec<&Op> = fib.cfg().blocks.values().flat_map(|b| b.ops.iter()).collect();
+        assert_eq!(ops.iter().filter(|o| matches!(o, Op::MakeClosure { .. })).count(), 1);
+        assert_eq!(
+            ops.iter()
+                .filter(|o| matches!(o, Op::SpawnChild { ret: RetTarget::Slot { .. }, .. }))
+                .count(),
+            2
+        );
+        assert_eq!(ops.iter().filter(|o| matches!(o, Op::CloseSpawns { .. })).count(), 1);
+        assert_eq!(ops.iter().filter(|o| matches!(o, Op::SendArgument { .. })).count(), 1);
+
+        // Continuation: just send_argument(k, x + y).
+        let cont_ops: Vec<&Op> = cont.cfg().blocks.values().flat_map(|b| b.ops.iter()).collect();
+        assert_eq!(cont_ops.len(), 1);
+        assert!(matches!(cont_ops[0], Op::SendArgument { value: Some(_) }));
+    }
+
+    #[test]
+    fn fib_cilk1_rendering_matches_paper_shape() {
+        let e = explicitize(FIB);
+        let fib = &e.funcs[e.func_by_name("fib").unwrap()];
+        let text = print_cilk1(&e, fib);
+        assert!(text.contains("task fib (cont int k, int n)"), "{text}");
+        assert!(text.contains("spawn_next fib__k1(k, ?x, ?y)"), "{text}");
+        assert!(text.contains("send_argument(k, n)"), "{text}");
+        let cont = &e.funcs[e.func_by_name("fib__k1").unwrap()];
+        let ct = print_cilk1(&e, cont);
+        assert!(ct.contains("send_argument(k, x + y)"), "{ct}");
+    }
+
+    #[test]
+    fn bfs_loop_keeps_single_closure() {
+        let e = explicitize(
+            "global int adj_off[];
+             global int adj_edges[];
+             global int visited[];
+             void visit(int n) {
+                 int off = adj_off[n];
+                 int end = adj_off[n + 1];
+                 visited[n] = 1;
+                 for (int i = off; i < end; i = i + 1) {
+                     cilk_spawn visit(adj_edges[i]);
+                 }
+                 cilk_sync;
+             }",
+        );
+        // The whole spawn loop stays inside the `visit` entry task (the
+        // paper's executor PE contains the loop — that is exactly why Vitis
+        // cannot pipeline it, §II-C), with ONE closure created at task
+        // entry (hoisted out of the loop) and closed at the loop exit.
+        let visit = &e.funcs[e.func_by_name("visit").unwrap()];
+        let ops: Vec<&Op> = visit.cfg().blocks.values().flat_map(|b| b.ops.iter()).collect();
+        assert_eq!(
+            ops.iter().filter(|o| matches!(o, Op::MakeClosure { .. })).count(),
+            1,
+            "{}",
+            print_module(&e)
+        );
+        // The MakeClosure is in the entry block (outside the loop).
+        let entry_ops = &visit.cfg().blocks[visit.cfg().entry].ops;
+        assert!(
+            entry_ops.iter().any(|o| matches!(o, Op::MakeClosure { .. })),
+            "closure hoisted to entry block:\n{}",
+            print_module(&e)
+        );
+        // Dynamic joins: the recursive child spawns use Counter targets.
+        assert!(ops
+            .iter()
+            .any(|o| matches!(o, Op::SpawnChild { ret: RetTarget::Counter { .. }, .. })));
+        // Continuation task is a trivial completion notifier.
+        let cont = &e.funcs[e.func_by_name("visit__k1").unwrap()];
+        let cont_ops: Vec<&Op> = cont.cfg().blocks.values().flat_map(|b| b.ops.iter()).collect();
+        assert!(matches!(cont_ops.last(), Some(Op::SendArgument { value: None })));
+    }
+
+    #[test]
+    fn sync_inside_loop_promotes_header_to_join_task() {
+        let e = explicitize(
+            "global int acc[1];
+             void work(int n) { atomic_add(acc, 0, n); }
+             void f(int n) {
+                for (int i = 0; i < n; i = i + 1) {
+                    cilk_spawn work(i);
+                    cilk_sync;
+                }
+             }",
+        );
+        // The loop header is re-entered from the post-sync continuation →
+        // it becomes its own Join task; each iteration creates a fresh
+        // closure (per-iteration sync semantics).
+        let join = e
+            .funcs
+            .values()
+            .find(|f| f.task.as_ref().map(|t| t.role == TaskRole::Join).unwrap_or(false))
+            .unwrap_or_else(|| panic!("join task expected:\n{}", print_module(&e)));
+        let join_ops: Vec<&Op> = join.cfg().blocks.values().flat_map(|b| b.ops.iter()).collect();
+        assert!(
+            join_ops.iter().any(|o| matches!(o, Op::MakeClosure { .. })),
+            "per-iteration closure in join task:\n{}",
+            print_module(&e)
+        );
+        // The continuation tail-spawns back to the join task.
+        let cont = e
+            .funcs
+            .values()
+            .find(|f| {
+                f.task.as_ref().map(|t| t.role == TaskRole::Continuation).unwrap_or(false)
+                    && f.task.as_ref().unwrap().source == "f"
+            })
+            .unwrap();
+        let cont_ops: Vec<&Op> = cont.cfg().blocks.values().flat_map(|b| b.ops.iter()).collect();
+        assert!(
+            cont_ops
+                .iter()
+                .any(|o| matches!(o, Op::SpawnChild { ret: RetTarget::Forward, .. })),
+            "tail re-entry expected:\n{}",
+            print_module(&e)
+        );
+    }
+
+    #[test]
+    fn void_spawns_use_counter_target() {
+        let e = explicitize(
+            "void g(int n) { }
+             void f(int n) {
+                cilk_spawn g(n);
+                cilk_spawn g(n + 1);
+                cilk_sync;
+             }",
+        );
+        let f = &e.funcs[e.func_by_name("f").unwrap()];
+        let counters = f
+            .cfg()
+            .blocks
+            .values()
+            .flat_map(|b| b.ops.iter())
+            .filter(|o| matches!(o, Op::SpawnChild { ret: RetTarget::Counter { .. }, .. }))
+            .count();
+        assert_eq!(counters, 2);
+    }
+
+    #[test]
+    fn dead_spawn_result_becomes_counter() {
+        let e = explicitize(
+            "int g(int n) { return n; }
+             void f(int n) {
+                int x = cilk_spawn g(n);
+                cilk_sync;
+             }",
+        );
+        let f = &e.funcs[e.func_by_name("f").unwrap()];
+        let ops: Vec<&Op> = f.cfg().blocks.values().flat_map(|b| b.ops.iter()).collect();
+        assert!(
+            ops.iter()
+                .any(|o| matches!(o, Op::SpawnChild { ret: RetTarget::Counter { .. }, .. })),
+            "unused spawn result needs no slot: {ops:?}"
+        );
+    }
+
+    #[test]
+    fn sequential_syncs_chain_continuations() {
+        let e = explicitize(
+            "int g(int n) { return n; }
+             int f(int n) {
+                int a = cilk_spawn g(n);
+                cilk_sync;
+                int b = cilk_spawn g(a + 1);
+                cilk_sync;
+                return b;
+             }",
+        );
+        let names: Vec<&str> = e.funcs.values().map(|f| f.name.as_str()).collect();
+        assert!(names.contains(&"f") && names.contains(&"f__k1") && names.contains(&"f__k2"), "{names:?}");
+        // k1 spawns g and spawn_nexts k2.
+        let k1 = &e.funcs[e.func_by_name("f__k1").unwrap()];
+        let ops: Vec<&Op> = k1.cfg().blocks.values().flat_map(|b| b.ops.iter()).collect();
+        assert!(ops.iter().any(|o| matches!(o, Op::MakeClosure { .. })));
+        assert!(ops.iter().any(|o| matches!(o, Op::SpawnChild { .. })));
+    }
+
+    #[test]
+    fn leaf_functions_copied_verbatim() {
+        let e = explicitize(
+            "int helper(int a) { return a * 2; }
+             int f(int n) {
+                int h = helper(n);
+                int x = cilk_spawn f(h);
+                cilk_sync;
+                return x;
+             }",
+        );
+        let h = &e.funcs[e.func_by_name("helper").unwrap()];
+        assert_eq!(h.kind, FuncKind::Leaf);
+        assert!(h.cfg().blocks.values().any(|b| matches!(b.term, Term::Return(_))));
+    }
+
+    #[test]
+    fn xla_decl_becomes_xla_task() {
+        let e = explicitize(
+            "extern xla int relax(int n);
+             int f(int n) {
+                int r = cilk_spawn relax(n);
+                cilk_sync;
+                return r;
+             }",
+        );
+        let relax = &e.funcs[e.func_by_name("relax").unwrap()];
+        assert_eq!(relax.kind, FuncKind::Xla);
+        assert_eq!(relax.task.as_ref().unwrap().role, TaskRole::Xla);
+    }
+}

@@ -1,0 +1,91 @@
+//! Lowering pipeline: AST → implicit IR → (DAE) → explicit IR.
+//!
+//! Mirrors paper Fig. 3: the AST from the frontend becomes the implicit IR
+//! ([`ast_to_cfg`]); the DAE optimization rewrites annotated memory accesses
+//! into access tasks ([`dae`]); explicitization partitions each function
+//! into *paths* and emits Cilk-1 tasks ([`explicitize`]).
+
+pub mod analysis;
+pub mod ast_to_cfg;
+pub mod dae;
+pub mod explicitize;
+pub mod simplify;
+
+use anyhow::{bail, Result};
+
+use crate::frontend;
+use crate::ir::verify::{verify_module, Stage};
+use crate::ir::Module;
+
+/// Options controlling the pipeline.
+#[derive(Clone, Debug, Default)]
+pub struct CompileOptions {
+    /// Apply `#pragma bombyx dae` transformations (when false, pragmas are
+    /// ignored — the paper's non-DAE baseline).
+    pub dae: bool,
+    /// Run CFG simplification between stages.
+    pub simplify: bool,
+}
+
+impl CompileOptions {
+    pub fn standard() -> Self {
+        CompileOptions { dae: true, simplify: true }
+    }
+
+    pub fn no_dae() -> Self {
+        CompileOptions { dae: false, simplify: true }
+    }
+}
+
+/// Stage-by-stage artifacts of one compilation, for `--trace-stages`,
+/// goldens and the figure benches.
+#[derive(Clone, Debug)]
+pub struct CompileResult {
+    /// The implicit IR before DAE.
+    pub implicit: Module,
+    /// The implicit IR after DAE (equal to `implicit` when DAE is off or no
+    /// pragmas are present).
+    pub implicit_dae: Module,
+    /// The explicit (Cilk-1) IR.
+    pub explicit: Module,
+}
+
+/// Full pipeline from source text.
+pub fn compile(name: &str, source: &str, opts: &CompileOptions) -> Result<CompileResult> {
+    let (program, _src) = frontend::parse_and_check(name, source)?;
+    compile_ast(&program, opts)
+}
+
+/// Pipeline from a checked AST.
+pub fn compile_ast(
+    program: &frontend::ast::Program,
+    opts: &CompileOptions,
+) -> Result<CompileResult> {
+    let mut implicit = ast_to_cfg::lower_program(program)?;
+    if opts.simplify {
+        simplify::simplify_module(&mut implicit);
+    }
+    let errors = verify_module(&implicit, Stage::Implicit);
+    if !errors.is_empty() {
+        bail!("implicit IR verification failed:\n  {}", errors.join("\n  "));
+    }
+
+    let mut implicit_dae = implicit.clone();
+    if opts.dae {
+        dae::apply_dae(&mut implicit_dae)?;
+        if opts.simplify {
+            simplify::simplify_module(&mut implicit_dae);
+        }
+        let errors = verify_module(&implicit_dae, Stage::Implicit);
+        if !errors.is_empty() {
+            bail!("post-DAE IR verification failed:\n  {}", errors.join("\n  "));
+        }
+    }
+
+    let explicit = explicitize::explicitize_module(&implicit_dae)?;
+    let errors = verify_module(&explicit, Stage::Explicit);
+    if !errors.is_empty() {
+        bail!("explicit IR verification failed:\n  {}", errors.join("\n  "));
+    }
+    Ok(CompileResult { implicit, implicit_dae, explicit })
+}

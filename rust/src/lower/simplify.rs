@@ -1,0 +1,208 @@
+//! CFG cleanup passes: unreachable-block elimination, jump threading
+//! through empty blocks, and straight-line block merging. Keeps both the
+//! printers' output and the generated HLS code close to what a human would
+//! write (the paper's stated reason for avoiding TAPIR, Fig. 4(a)).
+
+use std::collections::HashMap;
+
+use crate::ir::cfg::{BlockId, Cfg, Module, Term};
+
+pub fn simplify_module(module: &mut Module) {
+    for (_, func) in module.funcs.iter_mut() {
+        if let Some(cfg) = func.body.as_mut() {
+            simplify_cfg(cfg);
+        }
+    }
+}
+
+pub fn simplify_cfg(cfg: &mut Cfg) {
+    loop {
+        let mut changed = false;
+        changed |= thread_jumps(cfg);
+        changed |= merge_straightline(cfg);
+        changed |= remove_unreachable(cfg);
+        if !changed {
+            break;
+        }
+    }
+}
+
+/// Retarget edges that point at an empty block whose only content is
+/// `jump next`. Sync targets are threaded as well (a sync continuing into an
+/// empty forwarding block continues at its target).
+fn thread_jumps(cfg: &mut Cfg) -> bool {
+    // Resolve forwarding chains with path compression. The entry block is
+    // never forwarded: retargeting the entry into a loop header would give
+    // the entry block predecessors, which the paper's IR forbids (and the
+    // verifier checks). `merge_straightline` handles entry→single-pred
+    // chains instead.
+    let mut forward: HashMap<BlockId, BlockId> = HashMap::new();
+    for (bid, block) in cfg.blocks.iter() {
+        if block.ops.is_empty() && bid != cfg.entry {
+            if let Term::Jump(next) = block.term {
+                if next != bid {
+                    forward.insert(bid, next);
+                }
+            }
+        }
+    }
+    if forward.is_empty() {
+        return false;
+    }
+    let resolve = |mut b: BlockId| {
+        let mut hops = 0;
+        while let Some(&next) = forward.get(&b) {
+            b = next;
+            hops += 1;
+            if hops > forward.len() {
+                break; // cycle of empty blocks (infinite loop in source)
+            }
+        }
+        b
+    };
+    let mut changed = false;
+    let ids: Vec<BlockId> = cfg.blocks.ids().collect();
+    for bid in ids {
+        let term = cfg.blocks[bid].term.clone();
+        let new_term = term.map_blocks(&|b| resolve(b));
+        if !same_targets(&term, &new_term) {
+            cfg.blocks[bid].term = new_term;
+            changed = true;
+        }
+    }
+    let new_entry = resolve(cfg.entry);
+    if new_entry != cfg.entry {
+        cfg.entry = new_entry;
+        changed = true;
+    }
+    changed
+}
+
+fn same_targets(a: &Term, b: &Term) -> bool {
+    a.successors() == b.successors()
+}
+
+/// Merge `a -> jump b` when `b` has exactly one predecessor and `a`'s
+/// terminator is the jump. Sync edges are never merged (the cut point is
+/// semantic).
+fn merge_straightline(cfg: &mut Cfg) -> bool {
+    let preds = cfg.predecessors();
+    for a in cfg.blocks.ids().collect::<Vec<_>>() {
+        let Term::Jump(b) = cfg.blocks[a].term else { continue };
+        if b == a || b == cfg.entry {
+            continue;
+        }
+        if preds[b.index()].len() != 1 {
+            continue;
+        }
+        // Move b's contents into a.
+        let b_block = std::mem::take(&mut cfg.blocks[b]);
+        let a_block = &mut cfg.blocks[a];
+        a_block.ops.extend(b_block.ops);
+        a_block.term = b_block.term;
+        // b becomes an empty unreachable stub (removed below).
+        cfg.blocks[b].term = Term::Halt;
+        // Only one merge per iteration round to keep preds fresh.
+        return true;
+    }
+    false
+}
+
+/// Drop unreachable blocks by compacting the block list.
+fn remove_unreachable(cfg: &mut Cfg) -> bool {
+    let reachable = cfg.reachable();
+    if reachable.iter().all(|&r| r) {
+        return false;
+    }
+    let mut remap: Vec<Option<BlockId>> = vec![None; cfg.blocks.len()];
+    let mut new_blocks = crate::util::idvec::IdVec::new();
+    for (bid, block) in cfg.blocks.iter() {
+        if reachable[bid.index()] {
+            remap[bid.index()] = Some(new_blocks.push(block.clone()));
+        }
+    }
+    for slot in new_blocks.iter_mut() {
+        let (_, block) = slot;
+        block.term = block.term.map_blocks(&|b| remap[b.index()].expect("edge to unreachable"));
+    }
+    cfg.entry = remap[cfg.entry.index()].expect("entry always reachable");
+    cfg.blocks = new_blocks;
+    true
+}
+
+/// Count reachable blocks (test/bench helper).
+pub fn block_count(cfg: &Cfg) -> usize {
+    cfg.reachable().iter().filter(|&&r| r).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::cfg::{Block, Op};
+    use crate::ir::expr::Expr;
+
+    fn jump_block(to: BlockId) -> Block {
+        Block { ops: vec![], term: Term::Jump(to) }
+    }
+
+    #[test]
+    fn threads_empty_chain() {
+        let mut cfg = Cfg::default();
+        let a = cfg.blocks.push(Block::default());
+        let b = cfg.blocks.push(Block::default());
+        let c = cfg.blocks.push(Block::default());
+        let d = cfg.blocks.push(Block { ops: vec![], term: Term::Return(None) });
+        cfg.blocks[a].term = Term::Jump(b);
+        cfg.blocks[b].term = Term::Jump(c);
+        cfg.blocks[c].term = Term::Jump(d);
+        cfg.entry = a;
+        simplify_cfg(&mut cfg);
+        assert_eq!(cfg.blocks.len(), 1);
+        assert!(matches!(cfg.blocks[cfg.entry].term, Term::Return(None)));
+    }
+
+    #[test]
+    fn keeps_sync_blocks_separate() {
+        let mut cfg = Cfg::default();
+        let a = cfg.blocks.push(Block::default());
+        let b = cfg.blocks.push(Block {
+            ops: vec![Op::Assign { dst: crate::ir::VarId::new(0), src: Expr::ConstI(1) }],
+            term: Term::Return(None),
+        });
+        cfg.blocks[a].term = Term::Sync { next: b };
+        cfg.entry = a;
+        simplify_cfg(&mut cfg);
+        // Sync edge must survive: 2 blocks.
+        assert_eq!(cfg.blocks.len(), 2);
+        assert!(matches!(cfg.blocks[cfg.entry].term, Term::Sync { .. }));
+    }
+
+    #[test]
+    fn removes_unreachable() {
+        let mut cfg = Cfg::default();
+        let a = cfg.blocks.push(Block { ops: vec![], term: Term::Return(None) });
+        let _orphan = cfg.blocks.push(jump_block(a));
+        cfg.entry = a;
+        simplify_cfg(&mut cfg);
+        assert_eq!(cfg.blocks.len(), 1);
+    }
+
+    #[test]
+    fn merges_single_pred_chain_with_ops() {
+        let mut cfg = Cfg::default();
+        let v = crate::ir::VarId::new(0);
+        let a = cfg.blocks.push(Block {
+            ops: vec![Op::Assign { dst: v, src: Expr::ConstI(1) }],
+            term: Term::Return(None),
+        });
+        let b = cfg.blocks.push(Block {
+            ops: vec![Op::Assign { dst: v, src: Expr::ConstI(2) }],
+            term: Term::Return(None),
+        });
+        cfg.blocks[a].term = Term::Jump(b);
+        cfg.entry = a;
+        simplify_cfg(&mut cfg);
+        assert_eq!(cfg.blocks.len(), 1);
+        assert_eq!(cfg.blocks[cfg.entry].ops.len(), 2);
+    }
+}

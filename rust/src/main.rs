@@ -1,0 +1,305 @@
+//! `bombyx` — the command-line driver.
+//!
+//! ```text
+//! bombyx compile  <file.cilk> [--dae] [--dump implicit|explicit|cilk1] [--trace-stages]
+//! bombyx codegen  <file.cilk> [--dae] --out <dir> [--system <name>]
+//! bombyx estimate <file.cilk> [--dae]
+//! bombyx run      <file.cilk> <entry> [args...] [--dae] [--workers N]
+//! bombyx sim      <file.cilk> <entry> [args...] [--dae] [--pes N] [--mem-latency N]
+//! bombyx bfs      [--depth D] [--branch B] [--pes N]     # paper §III experiment
+//! ```
+//!
+//! (Argument parsing is hand-rolled: clap is not in the offline vendor
+//! set — see DESIGN.md §6.6.)
+
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use bombyx::hls::{estimate, CostModel};
+use bombyx::interp::Memory;
+use bombyx::ir::expr::Value;
+use bombyx::ir::print::{print_cilk1, print_module};
+use bombyx::lower::{compile, CompileOptions};
+use bombyx::sim::{simulate, NoSimXla, SimConfig};
+use bombyx::util::table::{commas, Table};
+use bombyx::workloads::graphgen;
+use bombyx::ws::{self, SharedMemory, WsConfig};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+struct Flags {
+    positional: Vec<String>,
+    options: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+fn parse_flags(args: &[String], value_opts: &[&str]) -> Result<Flags> {
+    let mut flags = Flags {
+        positional: Vec::new(),
+        options: std::collections::HashMap::new(),
+        switches: std::collections::HashSet::new(),
+    };
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if value_opts.contains(&name) {
+                let value = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--{name} requires a value"))?;
+                flags.options.insert(name.to_string(), value.clone());
+                i += 2;
+            } else {
+                flags.switches.insert(name.to_string());
+                i += 1;
+            }
+        } else {
+            flags.positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Ok(flags)
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "compile" => cmd_compile(rest),
+        "codegen" => cmd_codegen(rest),
+        "estimate" => cmd_estimate(rest),
+        "run" => cmd_run(rest),
+        "sim" => cmd_sim(rest),
+        "bfs" => cmd_bfs(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `bombyx help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "bombyx — OpenCilk-style task parallelism compiled for FPGA TLP systems\n\n\
+         USAGE:\n  \
+         bombyx compile  <file.cilk> [--dae] [--dump implicit|explicit|cilk1] [--trace-stages]\n  \
+         bombyx codegen  <file.cilk> [--dae] --out <dir> [--system <name>]\n  \
+         bombyx estimate <file.cilk> [--dae]\n  \
+         bombyx run      <file.cilk> <entry> [int args...] [--dae] [--workers N]\n  \
+         bombyx sim      <file.cilk> <entry> [int args...] [--dae] [--pes N] [--mem-latency N]\n  \
+         bombyx bfs      [--depth D] [--branch B] [--pes N]"
+    );
+}
+
+fn load_and_compile(flags: &Flags) -> Result<bombyx::lower::CompileResult> {
+    let path = flags
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("expected a .cilk source file"))?;
+    let source = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let opts = if flags.switches.contains("dae") {
+        CompileOptions::standard()
+    } else {
+        CompileOptions::no_dae()
+    };
+    compile(path, &source, &opts)
+}
+
+fn cmd_compile(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &["dump"])?;
+    let result = load_and_compile(&flags)?;
+    if flags.switches.contains("trace-stages") {
+        println!("=== stage 1: implicit IR ===\n{}", print_module(&result.implicit));
+        println!("=== stage 2: implicit IR after DAE ===\n{}", print_module(&result.implicit_dae));
+        println!("=== stage 3: explicit IR ===\n{}", print_module(&result.explicit));
+        return Ok(());
+    }
+    match flags.options.get("dump").map(String::as_str) {
+        Some("implicit") => print!("{}", print_module(&result.implicit_dae)),
+        Some("cilk1") => {
+            for (_, f) in result.explicit.funcs.iter() {
+                if f.task.is_some() && f.body.is_some() {
+                    println!("{}", print_cilk1(&result.explicit, f));
+                }
+            }
+        }
+        _ => print!("{}", print_module(&result.explicit)),
+    }
+    Ok(())
+}
+
+fn cmd_codegen(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &["out", "system"])?;
+    let result = load_and_compile(&flags)?;
+    let name = flags.options.get("system").map(String::as_str).unwrap_or("bombyx_system");
+    let system = bombyx::backend::hardcilk::generate(&result.explicit, name)?;
+    match flags.options.get("out") {
+        Some(dir) => {
+            system.write_to(std::path::Path::new(dir))?;
+            println!(
+                "wrote {} PE kernels + header + {}.json to {dir} ({} LoC)",
+                system.pes.len(),
+                name,
+                system.total_loc()
+            );
+        }
+        None => {
+            println!("{}", system.header);
+            for (_, file, src) in &system.pes {
+                println!("// ==== {file} ====\n{src}");
+            }
+            println!("// ==== {name}.json ====\n{}", system.descriptor.pretty());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_estimate(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &[])?;
+    let result = load_and_compile(&flags)?;
+    let model = CostModel::default();
+    let mut table = Table::new(["task", "role", "LUT", "FF", "BRAM", "DSP"]);
+    let mut total = bombyx::hls::ResourceEstimate::default();
+    for fid in bombyx::ir::explicit::explicit_tasks(&result.explicit) {
+        let f = &result.explicit.funcs[fid];
+        let est = estimate(&model, &result.explicit, f);
+        total = total + est;
+        table.row([
+            f.name.clone(),
+            f.task.as_ref().unwrap().role.name().to_string(),
+            est.lut.to_string(),
+            est.ff.to_string(),
+            est.bram.to_string(),
+            est.dsp.to_string(),
+        ]);
+    }
+    table.row([
+        "TOTAL".to_string(),
+        String::new(),
+        total.lut.to_string(),
+        total.ff.to_string(),
+        total.bram.to_string(),
+        total.dsp.to_string(),
+    ]);
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn parse_task_args(flags: &Flags) -> Result<(String, Vec<Value>)> {
+    let entry = flags
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("expected an entry task name"))?
+        .clone();
+    let args: Vec<Value> = flags.positional[2..]
+        .iter()
+        .map(|a| a.parse::<i64>().map(Value::I64).map_err(|e| anyhow!("bad int arg `{a}`: {e}")))
+        .collect::<Result<_>>()?;
+    Ok((entry, args))
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &["workers"])?;
+    let result = load_and_compile(&flags)?;
+    let (entry, task_args) = parse_task_args(&flags)?;
+    let workers = flags
+        .options
+        .get("workers")
+        .map(|w| w.parse::<usize>())
+        .transpose()?
+        .unwrap_or_else(|| WsConfig::default().workers);
+    let mem = SharedMemory::new(&result.explicit);
+    let cfg = WsConfig { workers, steal_tries: 4 };
+    let (value, _, stats) = ws::run(
+        &result.explicit,
+        mem,
+        &entry,
+        &task_args,
+        &cfg,
+        Box::new(ws::NoXlaSink),
+    )?;
+    println!("result: {value}");
+    println!(
+        "tasks: {}  steals: {}  closures: {}  workers: {workers}",
+        commas(stats.tasks_run),
+        commas(stats.steals),
+        commas(stats.closures_made)
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &["pes", "mem-latency"])?;
+    let result = load_and_compile(&flags)?;
+    let (entry, task_args) = parse_task_args(&flags)?;
+    let mut cfg = SimConfig::default();
+    if let Some(p) = flags.options.get("pes") {
+        cfg.default_pes = p.parse()?;
+    }
+    if let Some(l) = flags.options.get("mem-latency") {
+        cfg.mem_latency = l.parse()?;
+    }
+    let mem = Memory::new(&result.explicit);
+    let (value, _, stats) = simulate(&result.explicit, mem, &entry, &task_args, &cfg, &mut NoSimXla)?;
+    println!("result: {value}");
+    println!(
+        "cycles: {} ({:.1} us @ {} MHz)   tasks: {}",
+        commas(stats.cycles),
+        cfg.cycles_to_us(stats.cycles),
+        cfg.freq_mhz,
+        commas(stats.tasks_run)
+    );
+    let mut table = Table::new(["task", "executed", "PEs", "utilization"]);
+    for (name, t) in &stats.per_task {
+        table.row([
+            name.clone(),
+            commas(t.executed),
+            t.pes.to_string(),
+            format!("{:.1}%", t.utilization * 100.0),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_bfs(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &["depth", "branch", "pes"])?;
+    let depth: u32 = flags.options.get("depth").map(|v| v.parse()).transpose()?.unwrap_or(7);
+    let branch: u64 = flags.options.get("branch").map(|v| v.parse()).transpose()?.unwrap_or(4);
+    let mut cfg = SimConfig::paper();
+    if let Some(p) = flags.options.get("pes") {
+        cfg.default_pes = p.parse()?;
+    }
+    let graph = graphgen::tree(branch, depth);
+    println!(
+        "graph: B={branch} D={depth} -> {} nodes (paper III: B=4, D in {{7,9}})",
+        commas(graph.nodes() as u64)
+    );
+    let cmp = bombyx::coordinator::run_bfs_comparison(&graph, &cfg)?;
+    println!(
+        "non-DAE: {} cycles ({:.1} us)",
+        commas(cmp.plain_cycles),
+        cfg.cycles_to_us(cmp.plain_cycles)
+    );
+    println!(
+        "DAE:     {} cycles ({:.1} us)",
+        commas(cmp.dae_cycles),
+        cfg.cycles_to_us(cmp.dae_cycles)
+    );
+    println!("runtime reduction: {:.1}% (paper: 26.5%)", cmp.reduction() * 100.0);
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! PJRT CPU client wrapper: HLO text → compiled executable, executed with
+//! concrete literals.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): jax ≥ 0.5 serialized protos use 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids. Lowering uses `return_tuple=True`, so results unwrap as
+//! tuples on this side.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A loaded set of AOT executables, keyed by artifact stem
+/// (e.g. `relax_b256_f16`).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and eagerly compile every `*.hlo.txt` in
+    /// `dir`.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let mut rt = XlaRuntime { client, executables: HashMap::new(), dir: dir.clone() };
+        let entries = std::fs::read_dir(&dir)
+            .with_context(|| format!("artifacts directory {dir:?} (run `make artifacts`)"))?;
+        for entry in entries {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("txt") {
+                continue;
+            }
+            let stem = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or_default()
+                .trim_end_matches(".hlo.txt")
+                .to_string();
+            rt.load_file(&stem, &path)?;
+        }
+        if rt.executables.is_empty() {
+            anyhow::bail!("no *.hlo.txt artifacts found in {dir:?} (run `make artifacts`)");
+        }
+        Ok(rt)
+    }
+
+    fn load_file(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Execute by name; inputs are literals; returns the elements of the
+    /// result tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable `{name}` (have: {:?})", self.names()))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute `{name}`: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of `{name}`: {e:?}"))?;
+        out.to_tuple().map_err(|e| anyhow!("untuple result of `{name}`: {e:?}"))
+    }
+}
+
+/// Build an f32 literal of the given 2-D shape.
+pub fn literal_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), rows * cols);
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+pub fn literal_f32_1d(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<XlaRuntime> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        XlaRuntime::load_dir(dir).ok()
+    }
+
+    #[test]
+    fn loads_and_runs_relax_artifact() {
+        let Some(rt) = artifacts() else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        };
+        assert!(rt.has("relax_b64_f16"), "{:?}", rt.names());
+        let f = crate::workloads::relax::F;
+        let (w, b) = crate::workloads::relax::weights(1);
+        let x = vec![0.5f32; 64 * f];
+        let inputs = vec![
+            literal_f32_2d(&x, 64, f).unwrap(),
+            literal_f32_2d(&w, f, f).unwrap(),
+            literal_f32_1d(&b),
+        ];
+        let out = rt.execute("relax_b64_f16", &inputs).unwrap();
+        assert_eq!(out.len(), 2);
+        let y = out[0].to_vec::<f32>().unwrap();
+        let scores = out[1].to_vec::<i32>().unwrap();
+        assert_eq!(y.len(), 64 * f);
+        assert_eq!(scores.len(), 64);
+        // Cross-check row 0 against the scalar reference.
+        let (y_ref, score_ref) = crate::workloads::relax::relax_ref(&x[..f], &w, &b);
+        for (a, e) in y[..f].iter().zip(&y_ref) {
+            assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+        }
+        assert!((scores[0] - (score_ref * 1000.0) as i32).abs() <= 2, "{} vs {}", scores[0], score_ref * 1000.0);
+    }
+
+    #[test]
+    fn missing_executable_is_reported() {
+        let Some(rt) = artifacts() else { return };
+        match rt.execute("nope", &[]) {
+            Err(err) => assert!(err.to_string().contains("no executable")),
+            Ok(_) => panic!("expected an error for unknown executable"),
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them from the Rust hot path. Python is build-time only — after
+//! `make artifacts` the binary is self-contained.
+
+pub mod client;
+pub mod relax;
+
+pub use client::XlaRuntime;
+pub use relax::{RelaxService, RelaxXla};

@@ -1,0 +1,390 @@
+//! The batched XLA "PE": executes `extern xla int relax(int n)` task
+//! batches through the AOT-compiled Pallas datapath.
+//!
+//! The batcher plays the DAE *access* role (DESIGN.md
+//! §Hardware-Adaptation): it gathers the feature rows of all ready tasks
+//! into a contiguous `[B, F]` tile (padding partial batches with zero
+//! rows), runs the executable once, scatters updated rows back to global
+//! memory, and delivers each task's frontier score to its continuation.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::interp::Memory;
+use crate::ir::cfg::{GlobalId, Module};
+use crate::ir::expr::Value;
+use crate::sim::SimXla;
+use crate::workloads::relax::F;
+use crate::ws::{SharedMemory, XlaSink};
+
+use super::client::{literal_f32_1d, literal_f32_2d, XlaRuntime};
+
+/// Batch variants compiled by `python/compile/aot.py`, ascending.
+const VARIANTS: &[(usize, &str)] = &[(64, "relax_b64_f16"), (256, "relax_b256_f16")];
+
+pub struct RelaxXla {
+    runtime: XlaRuntime,
+    w: Vec<f32>,
+    b: Vec<f32>,
+    feat_global: GlobalId,
+    /// Calls recorded (batch sizes), for tests/benches.
+    pub batches: Mutex<Vec<usize>>,
+}
+
+impl RelaxXla {
+    pub fn new(runtime: XlaRuntime, module: &Module, weight_seed: u64) -> Result<RelaxXla> {
+        for (_, name) in VARIANTS {
+            if !runtime.has(name) {
+                bail!("artifact `{name}` missing — run `make artifacts`");
+            }
+        }
+        let (w, b) = crate::workloads::relax::weights(weight_seed);
+        let feat_global = module
+            .global_by_name("feat")
+            .ok_or_else(|| anyhow!("relax workload needs a `feat` global"))?;
+        Ok(RelaxXla { runtime, w, b, feat_global, batches: Mutex::new(Vec::new()) })
+    }
+
+    /// Pick the smallest variant that fits `n` rows.
+    fn variant(n: usize) -> (usize, &'static str) {
+        for &(cap, name) in VARIANTS {
+            if n <= cap {
+                return (cap, name);
+            }
+        }
+        *VARIANTS.last().unwrap()
+    }
+
+    /// Core: gather rows → execute → scatter rows; returns milli-scores.
+    fn run_batch(
+        &self,
+        node_ids: &[i64],
+        load_row: &mut dyn FnMut(usize) -> Result<Vec<f32>>,
+        store_row: &mut dyn FnMut(usize, &[f32]) -> Result<()>,
+    ) -> Result<Vec<i64>> {
+        let mut out = Vec::with_capacity(node_ids.len());
+        let mut offset = 0;
+        while offset < node_ids.len() {
+            let chunk_len = (node_ids.len() - offset).min(VARIANTS.last().unwrap().0);
+            let chunk = &node_ids[offset..offset + chunk_len];
+            let (cap, name) = Self::variant(chunk.len());
+            let mut x = vec![0f32; cap * F];
+            for (i, &n) in chunk.iter().enumerate() {
+                let row = load_row(n as usize)?;
+                x[i * F..(i + 1) * F].copy_from_slice(&row);
+            }
+            let inputs = vec![
+                literal_f32_2d(&x, cap, F)?,
+                literal_f32_2d(&self.w, F, F)?,
+                literal_f32_1d(&self.b),
+            ];
+            let result = self.runtime.execute(name, &inputs)?;
+            let y = result[0]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("fetch y: {e:?}"))?;
+            let scores = result[1]
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("fetch scores: {e:?}"))?;
+            for (i, &n) in chunk.iter().enumerate() {
+                store_row(n as usize, &y[i * F..(i + 1) * F])?;
+                out.push(scores[i] as i64);
+            }
+            self.batches.lock().unwrap().push(chunk.len());
+            offset += chunk_len;
+        }
+        Ok(out)
+    }
+
+    fn node_ids(batch: &[Vec<Value>]) -> Result<Vec<i64>> {
+        batch
+            .iter()
+            .map(|args| {
+                args.first()
+                    .map(|v| v.as_i64())
+                    .ok_or_else(|| anyhow!("relax task takes a node id"))
+            })
+            .collect()
+    }
+}
+
+/// WS-runtime sink: the PJRT client is `!Send`, so a dedicated service
+/// thread owns the [`XlaRuntime`]; workers gather/scatter feature rows on
+/// their side and exchange dense tiles over channels. (This mirrors the
+/// hardware: PEs talk to the blackbox systolic datapath over streams.)
+pub struct RelaxService {
+    req_tx: Mutex<std::sync::mpsc::Sender<TileReq>>,
+    feat_global: GlobalId,
+    pub batches: Mutex<Vec<usize>>,
+}
+
+struct TileReq {
+    /// Dense [rows, F] gather of the batch's feature rows.
+    x: Vec<f32>,
+    rows: usize,
+    resp: std::sync::mpsc::Sender<Result<(Vec<f32>, Vec<i32>)>>,
+}
+
+impl RelaxService {
+    /// Spawn the service thread (loads artifacts inside the thread since
+    /// the client is thread-bound). Blocks until the runtime is ready.
+    pub fn start(
+        artifacts_dir: std::path::PathBuf,
+        module: &Module,
+        weight_seed: u64,
+    ) -> Result<RelaxService> {
+        let feat_global = module
+            .global_by_name("feat")
+            .ok_or_else(|| anyhow!("relax workload needs a `feat` global"))?;
+        let (req_tx, req_rx) = std::sync::mpsc::channel::<TileReq>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("relax-xla".into())
+            .spawn(move || {
+                let setup = (|| -> Result<(XlaRuntime, Vec<f32>, Vec<f32>)> {
+                    let rt = XlaRuntime::load_dir(&artifacts_dir)?;
+                    for (_, name) in VARIANTS {
+                        if !rt.has(name) {
+                            bail!("artifact `{name}` missing — run `make artifacts`");
+                        }
+                    }
+                    let (w, b) = crate::workloads::relax::weights(weight_seed);
+                    Ok((rt, w.to_vec(), b.to_vec()))
+                })();
+                let (rt, w, b) = match setup {
+                    Ok(v) => {
+                        let _ = ready_tx.send(Ok(()));
+                        v
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = req_rx.recv() {
+                    let result = exec_tile(&rt, &w, &b, &req.x, req.rows);
+                    let _ = req.resp.send(result);
+                }
+            })
+            .map_err(|e| anyhow!("spawn relax-xla thread: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("relax-xla thread died during startup"))??;
+        Ok(RelaxService {
+            req_tx: Mutex::new(req_tx),
+            feat_global,
+            batches: Mutex::new(Vec::new()),
+        })
+    }
+
+    fn call(&self, x: Vec<f32>, rows: usize) -> Result<(Vec<f32>, Vec<i32>)> {
+        let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+        self.req_tx
+            .lock()
+            .unwrap()
+            .send(TileReq { x, rows, resp: resp_tx })
+            .map_err(|_| anyhow!("relax-xla service stopped"))?;
+        resp_rx.recv().map_err(|_| anyhow!("relax-xla service dropped a request"))?
+    }
+}
+
+/// Execute one dense tile (pads to the best variant).
+fn exec_tile(
+    rt: &XlaRuntime,
+    w: &[f32],
+    b: &[f32],
+    x: &[f32],
+    rows: usize,
+) -> Result<(Vec<f32>, Vec<i32>)> {
+    assert_eq!(x.len(), rows * F);
+    let mut y_all = Vec::with_capacity(rows * F);
+    let mut s_all = Vec::with_capacity(rows);
+    let mut offset = 0;
+    while offset < rows {
+        let chunk = (rows - offset).min(VARIANTS.last().unwrap().0);
+        let (cap, name) = RelaxXla::variant(chunk);
+        let mut tile = vec![0f32; cap * F];
+        tile[..chunk * F].copy_from_slice(&x[offset * F..(offset + chunk) * F]);
+        let inputs = vec![
+            literal_f32_2d(&tile, cap, F)?,
+            literal_f32_2d(w, F, F)?,
+            literal_f32_1d(b),
+        ];
+        let result = rt.execute(name, &inputs)?;
+        let y = result[0].to_vec::<f32>().map_err(|e| anyhow!("fetch y: {e:?}"))?;
+        let s = result[1].to_vec::<i32>().map_err(|e| anyhow!("fetch scores: {e:?}"))?;
+        y_all.extend_from_slice(&y[..chunk * F]);
+        s_all.extend_from_slice(&s[..chunk]);
+        offset += chunk;
+    }
+    Ok((y_all, s_all))
+}
+
+impl XlaSink for RelaxService {
+    fn exec_batch(
+        &self,
+        name: &str,
+        batch: &[Vec<Value>],
+        mem: &SharedMemory,
+    ) -> Result<Vec<Value>> {
+        if name != "relax" {
+            bail!("RelaxService only implements `relax`, got `{name}`");
+        }
+        let ids = RelaxXla::node_ids(batch)?;
+        let g = self.feat_global;
+        // Gather.
+        let mut x = vec![0f32; ids.len() * F];
+        for (i, &n) in ids.iter().enumerate() {
+            for j in 0..F {
+                x[i * F + j] = mem.load(g, n * F as i64 + j as i64)?.as_f32();
+            }
+        }
+        let (y, scores) = self.call(x, ids.len())?;
+        // Scatter.
+        for (i, &n) in ids.iter().enumerate() {
+            for j in 0..F {
+                mem.store(g, n * F as i64 + j as i64, Value::F32(y[i * F + j]))?;
+            }
+        }
+        self.batches.lock().unwrap().push(ids.len());
+        Ok(scores.into_iter().map(|s| Value::I64(s as i64)).collect())
+    }
+
+    fn preferred_batch(&self) -> usize {
+        VARIANTS.last().unwrap().0
+    }
+}
+
+/// Simulator datapath (sequential Memory).
+impl SimXla for RelaxXla {
+    fn exec_batch(
+        &mut self,
+        name: &str,
+        batch: &[Vec<Value>],
+        memory: &mut Memory,
+    ) -> Result<Vec<Value>> {
+        if name != "relax" {
+            bail!("RelaxXla only implements `relax`, got `{name}`");
+        }
+        let ids = Self::node_ids(batch)?;
+        let g = self.feat_global;
+        // Split borrows: copy rows in/out through locals.
+        let mut rows_in: Vec<Vec<f32>> = Vec::with_capacity(ids.len());
+        for &n in &ids {
+            let mut row = Vec::with_capacity(F);
+            for j in 0..F {
+                row.push(memory.load(g, n * F as i64 + j as i64)?.as_f32());
+            }
+            rows_in.push(row);
+        }
+        let mut idx = std::collections::HashMap::new();
+        for (i, &n) in ids.iter().enumerate() {
+            idx.insert(n as usize, i);
+        }
+        let scores = self.run_batch(
+            &ids,
+            &mut |n| Ok(rows_in[idx[&n]].clone()),
+            &mut |n, row| {
+                for (j, &v) in row.iter().enumerate() {
+                    memory.store(g, (n * F + j) as i64, Value::F32(v))?;
+                }
+                Ok(())
+            },
+        )?;
+        Ok(scores.into_iter().map(Value::I64).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::{compile, CompileOptions};
+    use crate::workloads::relax;
+
+    fn runtime() -> Option<XlaRuntime> {
+        XlaRuntime::load_dir(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok()
+    }
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    #[test]
+    fn service_matches_scalar_reference() {
+        if runtime().is_none() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let r = compile("relax", relax::RELAX_SRC, &CompileOptions::no_dae()).unwrap();
+        let m = &r.explicit;
+        let svc = RelaxService::start(artifacts_dir(), m, 1).unwrap();
+
+        // Scalar path.
+        let (w, b) = relax::weights(1);
+        let mut feat: Vec<f32> = (0..5 * F).map(|i| (i as f32 * 0.13).sin().abs()).collect();
+        let mut scalar_scores = Vec::new();
+        for n in 0..5i64 {
+            let v = relax::scalar_relax(&[Value::I64(n)], &mut feat, &w, &b).unwrap();
+            scalar_scores.push(v.as_i64());
+        }
+
+        // Batched path on a SharedMemory image.
+        let mut mem = SharedMemory::new(m);
+        let init: Vec<f32> = (0..5 * F).map(|i| (i as f32 * 0.13).sin().abs()).collect();
+        mem.fill_f32(m.global_by_name("feat").unwrap(), &init);
+        let batch: Vec<Vec<Value>> = (0..5i64).map(|n| vec![Value::I64(n)]).collect();
+        let scores = XlaSink::exec_batch(&svc, "relax", &batch, &mem).unwrap();
+
+        for (s, r) in scores.iter().zip(&scalar_scores) {
+            assert!(
+                (s.as_i64() - r).abs() <= 2,
+                "score mismatch: xla={} scalar={r}",
+                s.as_i64()
+            );
+        }
+        let feat_xla = mem.dump_f32(m.global_by_name("feat").unwrap());
+        for (a, e) in feat_xla.iter().zip(&feat) {
+            assert!((a - e).abs() < 1e-4, "feature mismatch: {a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn oversized_batches_are_chunked() {
+        if runtime().is_none() {
+            return;
+        }
+        let r = compile("relax", relax::RELAX_SRC, &CompileOptions::no_dae()).unwrap();
+        let m = &r.explicit;
+        let svc = RelaxService::start(artifacts_dir(), m, 1).unwrap();
+        let n = 300usize;
+        let mut mem = SharedMemory::new(m);
+        mem.fill_f32(m.global_by_name("feat").unwrap(), &vec![0.25f32; n * F]);
+        let batch: Vec<Vec<Value>> = (0..n as i64).map(|i| vec![Value::I64(i)]).collect();
+        let scores = XlaSink::exec_batch(&svc, "relax", &batch, &mem).unwrap();
+        assert_eq!(scores.len(), n);
+        // All rows identical → all scores identical.
+        assert!(scores.windows(2).all(|w| w[0] == w[1]));
+        let batches = svc.batches.lock().unwrap().clone();
+        assert_eq!(batches.iter().sum::<usize>(), n);
+    }
+
+    #[test]
+    fn sim_datapath_matches_scalar() {
+        let Some(rt) = runtime() else { return };
+        let r = compile("relax", relax::RELAX_SRC, &CompileOptions::no_dae()).unwrap();
+        let m = &r.explicit;
+        let mut xla = RelaxXla::new(rt, m, 1).unwrap();
+        let mut mem = crate::interp::Memory::new(m);
+        let init: Vec<f32> = (0..4 * F).map(|i| 0.1 + (i % 7) as f32 * 0.05).collect();
+        mem.fill_f32(m.global_by_name("feat").unwrap(), &init);
+        let batch: Vec<Vec<Value>> = (0..4i64).map(|n| vec![Value::I64(n)]).collect();
+        let scores = crate::sim::SimXla::exec_batch(&mut xla, "relax", &batch, &mut mem).unwrap();
+
+        let (w, b) = relax::weights(1);
+        let mut feat = init.clone();
+        for (n, s) in scores.iter().enumerate() {
+            let r = relax::scalar_relax(&[Value::I64(n as i64)], &mut feat, &w, &b).unwrap();
+            assert!((s.as_i64() - r.as_i64()).abs() <= 2);
+        }
+    }
+}

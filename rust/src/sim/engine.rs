@@ -1,0 +1,414 @@
+//! The discrete-event simulation engine.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::hls::{classify, PeClass};
+use crate::interp::Memory;
+use crate::ir::cfg::{FuncId, FuncKind, Module};
+use crate::ir::expr::Value;
+
+use super::channel::MemChannel;
+use super::exec::{self, Effect, FnState, SCont, STask, Seg};
+use super::{SimConfig, SimStats, SimXla, TaskStats};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Ev {
+    /// Try to dispatch queued tasks of this type.
+    Dispatch(FuncId),
+    /// Continue a running sequential task.
+    Step(usize),
+    /// Apply the deferred effects of a pipelined task instance.
+    Apply(usize),
+    /// Flush the XLA batch buffer (deadline-triggered).
+    XlaFlush,
+}
+
+struct PeGroup {
+    class: PeClass,
+    /// busy-until per PE.
+    busy: Vec<u64>,
+    stats: TaskStats,
+}
+
+struct Running {
+    task: FuncId,
+    pe: usize,
+    start: u64,
+    trace: Vec<Seg>,
+    idx: usize,
+    done: bool,
+}
+
+pub struct Engine<'m, 'x> {
+    module: &'m Module,
+    config: &'m SimConfig,
+    xla: &'x mut dyn SimXla,
+    state: FnState,
+    channel: MemChannel,
+    queues: HashMap<FuncId, VecDeque<STask>>,
+    groups: HashMap<FuncId, PeGroup>,
+    events: BinaryHeap<Reverse<(u64, u64, usize)>>,
+    event_payload: Vec<Ev>,
+    seq: u64,
+    running: Vec<Running>,
+    pending: u64,
+    result: Option<Value>,
+    now: u64,
+    max_queue_depth: usize,
+    // XLA batching.
+    xla_buffer: Vec<STask>,
+    xla_busy_until: u64,
+    xla_flush_armed: bool,
+    xla_batches: u64,
+}
+
+impl<'m, 'x> Engine<'m, 'x> {
+    pub fn new(
+        module: &'m Module,
+        memory: Memory,
+        config: &'m SimConfig,
+        xla: &'x mut dyn SimXla,
+    ) -> Result<Engine<'m, 'x>> {
+        let mut queues = HashMap::new();
+        let mut groups = HashMap::new();
+        for (fid, f) in module.funcs.iter() {
+            if f.task.is_none() {
+                continue;
+            }
+            queues.insert(fid, VecDeque::new());
+            let n = config.pes_for(&f.name);
+            groups.insert(
+                fid,
+                PeGroup {
+                    class: classify(f),
+                    busy: vec![0; n as usize],
+                    stats: TaskStats { pes: n, ..Default::default() },
+                },
+            );
+        }
+        Ok(Engine {
+            module,
+            config,
+            xla,
+            state: FnState { memory, closures: Vec::new(), live_closures: 0, closures_made: 0 },
+            channel: MemChannel::new(
+                config.mem_latency,
+                config.mem_outstanding,
+                config.mem_issue_interval,
+            ),
+            queues,
+            groups,
+            events: BinaryHeap::new(),
+            event_payload: Vec::new(),
+            seq: 0,
+            running: Vec::new(),
+            pending: 0,
+            result: None,
+            now: 0,
+            max_queue_depth: 0,
+            xla_buffer: Vec::new(),
+            xla_busy_until: 0,
+            xla_flush_armed: false,
+            xla_batches: 0,
+        })
+    }
+
+    fn schedule(&mut self, time: u64, ev: Ev) {
+        let idx = self.event_payload.len();
+        self.event_payload.push(ev);
+        self.events.push(Reverse((time, self.seq, idx)));
+        self.seq += 1;
+    }
+
+    fn enqueue(&mut self, t: u64, task: STask) {
+        self.pending += 1;
+        let fid = task.task;
+        if self.module.funcs[fid].kind == FuncKind::Xla {
+            self.xla_buffer.push(task);
+            if self.xla_buffer.len() >= self.config.xla_batch as usize {
+                self.schedule(t.max(self.xla_busy_until), Ev::XlaFlush);
+            } else if !self.xla_flush_armed {
+                self.xla_flush_armed = true;
+                // Flush deadline: don't let a partial batch starve.
+                self.schedule(t + 4 * self.config.mem_latency as u64, Ev::XlaFlush);
+            }
+            return;
+        }
+        let q = self.queues.get_mut(&fid).expect("queue for task type");
+        q.push_back(task);
+        self.max_queue_depth = self.max_queue_depth.max(q.len());
+        self.schedule(t + self.config.dispatch_latency as u64, Ev::Dispatch(fid));
+    }
+
+    pub fn run(mut self, entry: &str, args: &[Value]) -> Result<(Value, Memory, SimStats)> {
+        let fid = self
+            .module
+            .func_by_name(entry)
+            .ok_or_else(|| anyhow!("no task named `{entry}`"))?;
+        self.enqueue(0, STask { task: fid, args: args.to_vec(), cont: SCont::Root });
+
+        while let Some(Reverse((t, _, payload))) = self.events.pop() {
+            self.now = t.max(self.now);
+            if self.now > self.config.max_cycles {
+                bail!("simulation exceeded max_cycles={}", self.config.max_cycles);
+            }
+            let ev = self.event_payload[payload].clone();
+            match ev {
+                Ev::Dispatch(fid) => self.dispatch(t, fid)?,
+                Ev::Step(run) => self.step(t, run)?,
+                Ev::Apply(run) => self.apply_all(t, run)?,
+                Ev::XlaFlush => self.xla_flush(t)?,
+            }
+        }
+
+        if self.pending != 0 {
+            bail!("simulation drained with {} tasks pending (deadlock?)", self.pending);
+        }
+        let result = self
+            .result
+            .take()
+            .ok_or_else(|| anyhow!("no result delivered to the root continuation"))?;
+        let mut per_task: Vec<(String, TaskStats)> = Vec::new();
+        for (fid, group) in &self.groups {
+            let mut s = group.stats.clone();
+            s.utilization = if self.now > 0 {
+                s.busy_cycles as f64 / (self.now as f64 * s.pes as f64)
+            } else {
+                0.0
+            };
+            per_task.push((self.module.funcs[*fid].name.clone(), s));
+        }
+        per_task.sort_by(|a, b| a.0.cmp(&b.0));
+        let stats = SimStats {
+            cycles: self.now,
+            tasks_run: per_task.iter().map(|(_, s)| s.executed).sum(),
+            per_task,
+            mem: self.channel.stats.clone(),
+            closures_made: self.state.closures_made,
+            max_queue_depth: self.max_queue_depth,
+            xla_batches: self.xla_batches,
+        };
+        Ok((result, self.state.memory, stats))
+    }
+
+    fn dispatch(&mut self, t: u64, fid: FuncId) -> Result<()> {
+        loop {
+            let group = self.groups.get_mut(&fid).expect("group");
+            // Find a free PE.
+            let Some(pe) = group.busy.iter().position(|&b| b <= t) else { return Ok(()) };
+            let Some(task) = self.queues.get_mut(&fid).and_then(|q| q.pop_front()) else {
+                return Ok(());
+            };
+            let class = group.class;
+            match class {
+                PeClass::Sequential => {
+                    let trace =
+                        exec::trace_task(self.module, &self.config.schedule, &mut self.state, &task)?;
+                    let group = self.groups.get_mut(&fid).expect("group");
+                    group.busy[pe] = u64::MAX; // released at completion
+                    group.stats.executed += 1;
+                    let run = self.running.len();
+                    self.running.push(Running {
+                        task: fid,
+                        pe,
+                        start: t,
+                        trace,
+                        idx: 0,
+                        done: false,
+                    });
+                    self.schedule(t, Ev::Step(run));
+                    // Sequential PE taken; try to place more tasks on other
+                    // PEs in this iteration.
+                }
+                PeClass::Pipelined { ii } => {
+                    let trace =
+                        exec::trace_task(self.module, &self.config.schedule, &mut self.state, &task)?;
+                    let group = self.groups.get_mut(&fid).expect("group");
+                    group.busy[pe] = t + ii as u64;
+                    group.stats.executed += 1;
+                    group.stats.busy_cycles += ii as u64;
+                    // Issue all loads now; apply effects when compute and
+                    // all responses have landed (decoupled: the PE itself
+                    // is already free after II).
+                    let mut done_at = t;
+                    let mut compute = 0u64;
+                    for seg in &trace {
+                        match seg {
+                            Seg::Compute(c) => compute += *c as u64,
+                            Seg::Load => {
+                                let resp = self.channel.request(t + compute);
+                                done_at = done_at.max(resp);
+                            }
+                            Seg::Effect(_) => {}
+                        }
+                    }
+                    done_at = done_at.max(t + compute);
+                    let run = self.running.len();
+                    self.running.push(Running {
+                        task: fid,
+                        pe,
+                        start: t,
+                        trace,
+                        idx: 0,
+                        done: false,
+                    });
+                    self.schedule(done_at, Ev::Apply(run));
+                    // Re-arm dispatch when the PE frees.
+                    self.schedule(t + ii as u64, Ev::Dispatch(fid));
+                }
+            }
+        }
+    }
+
+    /// Advance a sequential task through its trace.
+    fn step(&mut self, t: u64, run: usize) -> Result<()> {
+        let mut t = t;
+        loop {
+            let r = &mut self.running[run];
+            if r.done {
+                return Ok(());
+            }
+            let Some(seg) = r.trace.get(r.idx) else {
+                // Task complete: free the PE.
+                r.done = true;
+                let (task, pe, start) = (r.task, r.pe, r.start);
+                let group = self.groups.get_mut(&task).expect("group");
+                group.busy[pe] = t;
+                group.stats.busy_cycles += t - start;
+                self.task_finished();
+                self.schedule(t, Ev::Dispatch(task));
+                return Ok(());
+            };
+            let seg = seg.clone();
+            r.idx += 1;
+            match seg {
+                Seg::Compute(c) => {
+                    t += c as u64;
+                }
+                Seg::Load => {
+                    // Blocking load: resume at the response.
+                    let resp = self.channel.request(t);
+                    self.schedule(resp, Ev::Step(run));
+                    return Ok(());
+                }
+                Seg::Effect(e) => self.apply_effect(t, e)?,
+            }
+        }
+    }
+
+    /// Apply all effects of a pipelined task at once.
+    fn apply_all(&mut self, t: u64, run: usize) -> Result<()> {
+        let trace = std::mem::take(&mut self.running[run].trace);
+        for seg in &trace {
+            if let Seg::Effect(e) = seg {
+                self.apply_effect(t, e.clone())?;
+            }
+        }
+        self.running[run].done = true;
+        self.task_finished();
+        Ok(())
+    }
+
+    fn task_finished(&mut self) {
+        debug_assert!(self.pending > 0);
+        self.pending -= 1;
+    }
+
+    fn apply_effect(&mut self, t: u64, e: Effect) -> Result<()> {
+        match e {
+            Effect::Spawn(task) => self.enqueue(t, task),
+            Effect::ClosureStore { clos, slot, value } => {
+                let c = &mut self.state.closures[clos];
+                if c.freed {
+                    bail!("closure store after fire");
+                }
+                let ty = self.module.funcs[c.task].vars[crate::ir::VarId::new(slot as usize)].ty;
+                c.slots[slot as usize] = value.coerce(ty);
+            }
+            Effect::FillDecrement { clos, slot, value } => {
+                {
+                    let c = &mut self.state.closures[clos];
+                    if c.freed {
+                        bail!("send_argument into freed closure");
+                    }
+                    let ty =
+                        self.module.funcs[c.task].vars[crate::ir::VarId::new(slot as usize)].ty;
+                    c.slots[slot as usize] = value.coerce(ty);
+                }
+                self.decrement(t, clos)?;
+            }
+            Effect::Decrement { clos } => self.decrement(t, clos)?,
+            Effect::RootResult(v) => {
+                if self.result.is_some() {
+                    bail!("root continuation received two results");
+                }
+                self.result = Some(v);
+            }
+        }
+        Ok(())
+    }
+
+    fn decrement(&mut self, t: u64, clos: usize) -> Result<()> {
+        let c = &mut self.state.closures[clos];
+        if c.freed {
+            bail!("decrement on freed closure");
+        }
+        if c.counter == 0 {
+            bail!("join counter underflow");
+        }
+        c.counter -= 1;
+        if c.counter == 0 {
+            c.freed = true;
+            self.state.live_closures -= 1;
+            let task = STask { task: c.task, args: c.slots.clone(), cont: c.cont };
+            self.enqueue(t, task);
+        }
+        Ok(())
+    }
+
+    /// Flush the XLA batch buffer.
+    fn xla_flush(&mut self, t: u64) -> Result<()> {
+        self.xla_flush_armed = false;
+        if self.xla_buffer.is_empty() {
+            return Ok(());
+        }
+        let t = t.max(self.xla_busy_until);
+        let batch: Vec<STask> = self
+            .xla_buffer
+            .drain(..self.xla_buffer.len().min(self.config.xla_batch as usize))
+            .collect();
+        // Group by task type.
+        let mut groups: Vec<(FuncId, Vec<usize>)> = Vec::new();
+        for (i, item) in batch.iter().enumerate() {
+            match groups.iter_mut().find(|(g, _)| *g == item.task) {
+                Some((_, v)) => v.push(i),
+                None => groups.push((item.task, vec![i])),
+            }
+        }
+        let latency = self.config.xla_overhead as u64
+            + self.config.xla_per_row as u64 * batch.len() as u64;
+        let done = t + latency;
+        self.xla_busy_until = done;
+        self.xla_batches += 1;
+        for (fid, idxs) in groups {
+            let name = self.module.funcs[fid].name.clone();
+            let args: Vec<Vec<Value>> = idxs.iter().map(|&i| batch[i].args.clone()).collect();
+            let results = self.xla.exec_batch(&name, &args, &mut self.state.memory)?;
+            if results.len() != idxs.len() {
+                bail!("xla datapath returned {} results for {} rows", results.len(), idxs.len());
+            }
+            for (&i, value) in idxs.iter().zip(results) {
+                self.apply_effect(done, exec::deliver_effect(batch[i].cont, value))?;
+                self.task_finished();
+            }
+        }
+        if !self.xla_buffer.is_empty() {
+            self.schedule(done, Ev::XlaFlush);
+            self.xla_flush_armed = true;
+        }
+        Ok(())
+    }
+}

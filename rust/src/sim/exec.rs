@@ -1,0 +1,335 @@
+//! Functional task execution → timed trace.
+//!
+//! At dispatch the simulator runs the task body functionally (same
+//! transition rules as the explicit executor) and records a *trace*:
+//! compute segments (cycles), memory loads (timed by the channel), and
+//! effects (spawns, sends, closure ops) at their program positions. The
+//! engine then replays the trace against the timing model.
+
+use anyhow::{bail, Result};
+
+use crate::hls::{op_cycles, ScheduleModel};
+use crate::interp::Memory;
+use crate::ir::cfg::{FuncId, FuncKind, Module, Op, RetTarget, Term};
+use crate::ir::expr::{self, Value, VarId};
+
+/// Continuation reference (closure handles index the engine's heap).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SCont {
+    Root,
+    Slot { clos: usize, slot: u32 },
+    Counter { clos: usize },
+}
+
+/// A simulated closure.
+#[derive(Clone, Debug)]
+pub struct SClosure {
+    pub task: FuncId,
+    pub slots: Vec<Value>,
+    pub cont: SCont,
+    pub counter: u32,
+    pub freed: bool,
+}
+
+/// A runnable task instance.
+#[derive(Clone, Debug)]
+pub struct STask {
+    pub task: FuncId,
+    pub args: Vec<Value>,
+    pub cont: SCont,
+}
+
+/// One trace element.
+#[derive(Clone, Debug)]
+pub enum Seg {
+    /// Busy datapath cycles.
+    Compute(u32),
+    /// A memory load (blocking for sequential PEs).
+    Load,
+    /// Timed effect.
+    Effect(Effect),
+}
+
+#[derive(Clone, Debug)]
+pub enum Effect {
+    /// Enqueue a child task.
+    Spawn(STask),
+    /// Store a ready argument into a closure slot (no counter change).
+    ClosureStore { clos: usize, slot: u32, value: Value },
+    /// Decrement a closure's counter (close_spawns or void-child return).
+    Decrement { clos: usize },
+    /// Fill a slot and decrement.
+    FillDecrement { clos: usize, slot: u32, value: Value },
+    /// Deliver to the root continuation.
+    RootResult(Value),
+}
+
+/// Mutable functional state shared across the simulation.
+pub struct FnState {
+    pub memory: Memory,
+    pub closures: Vec<SClosure>,
+    pub live_closures: usize,
+    pub closures_made: u64,
+}
+
+impl FnState {
+    pub fn alloc_closure(&mut self, c: SClosure) -> usize {
+        self.closures_made += 1;
+        self.live_closures += 1;
+        self.closures.push(c);
+        self.closures.len() - 1
+    }
+}
+
+/// Execute `inst` functionally, emitting the trace. Spawned children are
+/// created as `STask`s inside `Effect::Spawn`; counters change only when
+/// the engine applies effects (timed), keeping join order physical.
+pub fn trace_task(
+    module: &Module,
+    model: &ScheduleModel,
+    state: &mut FnState,
+    inst: &STask,
+) -> Result<Vec<Seg>> {
+    let func = &module.funcs[inst.task];
+    let mut trace = Vec::new();
+    trace.push(Seg::Compute(model.task_read));
+    match func.kind {
+        FuncKind::Xla => bail!("xla task `{}` must go to the XLA PE", func.name),
+        FuncKind::Leaf => {
+            // A spawned leaf: its body is sequential; loads are timed.
+            let value = eval_body(module, model, state, inst.task, &inst.args, &mut trace)?;
+            trace.push(Seg::Effect(deliver_effect(inst.cont, value)));
+            return Ok(trace);
+        }
+        FuncKind::Task => {}
+    }
+    let cfg = func.cfg();
+    if inst.args.len() != func.params {
+        bail!("task `{}` arity mismatch", func.name);
+    }
+    let mut env: Vec<Value> = func.vars.values().map(|v| Value::zero_of(v.ty)).collect();
+    for (i, a) in inst.args.iter().enumerate() {
+        env[i] = a.coerce(func.vars[VarId::new(i)].ty);
+    }
+    let mut block = cfg.entry;
+    let mut steps = 0u64;
+    loop {
+        steps += 1;
+        if steps > 50_000_000 {
+            bail!("task `{}` exceeded step limit", func.name);
+        }
+        let b = &cfg.blocks[block];
+        for op in &b.ops {
+            let cycles = op_cycles(model, op);
+            match op {
+                Op::Assign { dst, src } => {
+                    let v = expr::eval(src, &|v| env[v.index()]);
+                    env[dst.index()] = v.coerce(func.vars[*dst].ty);
+                    push_compute(&mut trace, cycles);
+                }
+                Op::Load { dst, arr, index, .. } => {
+                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                    env[dst.index()] = state.memory.load(*arr, idx)?;
+                    push_compute(&mut trace, cycles);
+                    trace.push(Seg::Load);
+                }
+                Op::Store { arr, index, value } => {
+                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                    let val = expr::eval(value, &|v| env[v.index()]);
+                    state.memory.store(*arr, idx, val)?;
+                    push_compute(&mut trace, cycles);
+                }
+                Op::AtomicAdd { arr, index, value } => {
+                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                    let val = expr::eval(value, &|v| env[v.index()]);
+                    state.memory.atomic_add(*arr, idx, val)?;
+                    push_compute(&mut trace, cycles);
+                }
+                Op::Call { dst, callee, args } => {
+                    let vals: Vec<Value> =
+                        args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
+                    // Inlined leaf body: timed inline (its loads block us).
+                    let r = eval_body(module, model, state, *callee, &vals, &mut trace)?;
+                    if let Some(d) = dst {
+                        env[d.index()] = r.coerce(func.vars[*d].ty);
+                    }
+                }
+                Op::MakeClosure { dst, task } => {
+                    let t = &module.funcs[*task];
+                    let handle = state.alloc_closure(SClosure {
+                        task: *task,
+                        slots: t.param_ids().map(|p| Value::zero_of(t.vars[p].ty)).collect(),
+                        cont: inst.cont,
+                        counter: 1,
+                        freed: false,
+                    });
+                    env[dst.index()] = Value::I64(handle as i64);
+                    push_compute(&mut trace, cycles);
+                }
+                Op::ClosureStore { clos, field, value } => {
+                    let h = env[clos.index()].as_i64() as usize;
+                    let val = expr::eval(value, &|v| env[v.index()]);
+                    push_compute(&mut trace, cycles);
+                    trace.push(Seg::Effect(Effect::ClosureStore {
+                        clos: h,
+                        slot: *field,
+                        value: val,
+                    }));
+                }
+                Op::SpawnChild { callee, args, ret } => {
+                    let vals: Vec<Value> =
+                        args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
+                    let cont = match ret {
+                        RetTarget::Slot { clos, field } => {
+                            let h = env[clos.index()].as_i64() as usize;
+                            // Counter increments NOW (functionally) — the
+                            // spawner's increment happens-before the child
+                            // exists, exactly as in the WS runtime.
+                            state.closures[h].counter += 1;
+                            SCont::Slot { clos: h, slot: *field }
+                        }
+                        RetTarget::Counter { clos } => {
+                            let h = env[clos.index()].as_i64() as usize;
+                            state.closures[h].counter += 1;
+                            SCont::Counter { clos: h }
+                        }
+                        RetTarget::Forward => inst.cont,
+                    };
+                    push_compute(&mut trace, cycles);
+                    trace.push(Seg::Effect(Effect::Spawn(STask {
+                        task: *callee,
+                        args: vals,
+                        cont,
+                    })));
+                }
+                Op::CloseSpawns { clos } => {
+                    let h = env[clos.index()].as_i64() as usize;
+                    push_compute(&mut trace, cycles);
+                    trace.push(Seg::Effect(Effect::Decrement { clos: h }));
+                }
+                Op::SendArgument { value } => {
+                    let v = match value {
+                        Some(e) => expr::eval(e, &|v| env[v.index()]).coerce(func.ret),
+                        None => Value::Unit,
+                    };
+                    push_compute(&mut trace, cycles);
+                    trace.push(Seg::Effect(deliver_effect(inst.cont, v)));
+                }
+                Op::Spawn { .. } => bail!("implicit Spawn in explicit IR"),
+            }
+        }
+        match &b.term {
+            Term::Jump(next) => {
+                push_compute(&mut trace, model.branch);
+                block = *next;
+            }
+            Term::Branch { cond, then_, else_ } => {
+                push_compute(&mut trace, model.branch);
+                let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
+                block = if c { *then_ } else { *else_ };
+            }
+            Term::Halt => return Ok(trace),
+            other => bail!("terminator {other:?} in explicit task `{}`", func.name),
+        }
+    }
+}
+
+pub fn deliver_effect(cont: SCont, value: Value) -> Effect {
+    match cont {
+        SCont::Root => Effect::RootResult(value),
+        SCont::Slot { clos, slot } => Effect::FillDecrement { clos, slot, value },
+        SCont::Counter { clos } => Effect::Decrement { clos },
+    }
+}
+
+fn push_compute(trace: &mut Vec<Seg>, cycles: u32) {
+    if cycles == 0 {
+        return;
+    }
+    if let Some(Seg::Compute(c)) = trace.last_mut() {
+        *c += cycles;
+    } else {
+        trace.push(Seg::Compute(cycles));
+    }
+}
+
+/// Sequentially evaluate a leaf body, timing its ops into `trace`.
+fn eval_body(
+    module: &Module,
+    model: &ScheduleModel,
+    state: &mut FnState,
+    fid: FuncId,
+    args: &[Value],
+    trace: &mut Vec<Seg>,
+) -> Result<Value> {
+    let func = &module.funcs[fid];
+    if func.kind != FuncKind::Leaf {
+        bail!("sequential call to non-leaf `{}`", func.name);
+    }
+    let cfg = func.cfg();
+    let mut env: Vec<Value> = func.vars.values().map(|v| Value::zero_of(v.ty)).collect();
+    for (i, a) in args.iter().enumerate() {
+        env[i] = a.coerce(func.vars[VarId::new(i)].ty);
+    }
+    let mut block = cfg.entry;
+    let mut steps = 0u64;
+    loop {
+        steps += 1;
+        if steps > 50_000_000 {
+            bail!("leaf `{}` exceeded step limit", func.name);
+        }
+        let b = &cfg.blocks[block];
+        for op in &b.ops {
+            let cycles = op_cycles(model, op);
+            match op {
+                Op::Assign { dst, src } => {
+                    let v = expr::eval(src, &|v| env[v.index()]);
+                    env[dst.index()] = v.coerce(func.vars[*dst].ty);
+                    push_compute(trace, cycles);
+                }
+                Op::Load { dst, arr, index, .. } => {
+                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                    env[dst.index()] = state.memory.load(*arr, idx)?;
+                    push_compute(trace, cycles);
+                    trace.push(Seg::Load);
+                }
+                Op::Store { arr, index, value } => {
+                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                    let val = expr::eval(value, &|v| env[v.index()]);
+                    state.memory.store(*arr, idx, val)?;
+                    push_compute(trace, cycles);
+                }
+                Op::AtomicAdd { arr, index, value } => {
+                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                    let val = expr::eval(value, &|v| env[v.index()]);
+                    state.memory.atomic_add(*arr, idx, val)?;
+                    push_compute(trace, cycles);
+                }
+                Op::Call { dst, callee, args } => {
+                    let vals: Vec<Value> =
+                        args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
+                    let r = eval_body(module, model, state, *callee, &vals, trace)?;
+                    if let Some(d) = dst {
+                        env[d.index()] = r.coerce(func.vars[*d].ty);
+                    }
+                }
+                other => bail!("op {other:?} in leaf `{}`", func.name),
+            }
+        }
+        match &b.term {
+            Term::Jump(next) => block = *next,
+            Term::Branch { cond, then_, else_ } => {
+                push_compute(trace, model.branch);
+                let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
+                block = if c { *then_ } else { *else_ };
+            }
+            Term::Return(value) => {
+                return Ok(match value {
+                    Some(e) => expr::eval(e, &|v| env[v.index()]).coerce(func.ret),
+                    None => Value::Unit,
+                })
+            }
+            other => bail!("terminator {other:?} in leaf `{}`", func.name),
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Bit/byte alignment helpers used by closure layout (paper §II-B: closures
+//! must be padded to hardware-friendly power-of-two widths, 128/256-bit...).
+
+/// Round `value` up to the next multiple of `align`. `align` must be > 0.
+#[inline]
+pub fn round_up(value: u32, align: u32) -> u32 {
+    assert!(align > 0);
+    value.div_ceil(align) * align
+}
+
+/// Round `bits` up to the next power-of-two bucket that is at least
+/// `min_bits`, capped at `max_bits`. This is the HardCilk closure-width rule:
+/// a closure occupies a power-of-two number of bits (128, 256, 512, ...)
+/// so the on-chip queues and the memory interface can address it trivially.
+pub fn pow2_bucket(bits: u32, min_bits: u32, max_bits: u32) -> u32 {
+    assert!(min_bits.is_power_of_two() && max_bits.is_power_of_two());
+    let mut bucket = min_bits;
+    while bucket < bits {
+        bucket *= 2;
+        assert!(
+            bucket <= max_bits,
+            "closure of {bits} bits exceeds maximum supported width {max_bits}"
+        );
+    }
+    bucket
+}
+
+/// True if `value` is a multiple of `align`.
+#[inline]
+pub fn is_aligned(value: u32, align: u32) -> bool {
+    value % align == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn pow2_buckets() {
+        assert_eq!(pow2_bucket(0, 128, 1024), 128);
+        assert_eq!(pow2_bucket(128, 128, 1024), 128);
+        assert_eq!(pow2_bucket(129, 128, 1024), 256);
+        assert_eq!(pow2_bucket(300, 128, 1024), 512);
+        assert_eq!(pow2_bucket(1024, 128, 1024), 1024);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pow2_bucket_overflow_panics() {
+        pow2_bucket(2048, 128, 1024);
+    }
+}

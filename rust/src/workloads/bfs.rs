@@ -1,0 +1,113 @@
+//! The paper's flagship benchmark (§III): parallel breadth-first graph
+//! traversal, with and without the DAE pragma (Fig. 5).
+
+use anyhow::Result;
+
+use crate::interp::Memory;
+use crate::ir::cfg::Module;
+
+use super::graphgen::CsrGraph;
+
+/// Fig. 5 workload, CSR form. `visit` loads the node's adjacency range
+/// (the "structure representing the adjacency list"), marks the node
+/// visited, then recursively visits children in parallel.
+pub const BFS_SRC: &str = "\
+global int adj_off[];
+global int adj_edges[];
+global int visited[];
+
+void visit(int n) {
+    int off = adj_off[n];
+    int end = adj_off[n + 1];
+    visited[n] = 1;
+    for (int i = off; i < end; i = i + 1) {
+        cilk_spawn visit(adj_edges[i]);
+    }
+    cilk_sync;
+}
+";
+
+/// Same program with `#pragma bombyx dae` on the adjacency loads (the
+/// paper inserts the pragma \"on line 2 to separate the memory access for
+/// the adjacency list into its own access task\").
+pub const BFS_DAE_SRC: &str = "\
+global int adj_off[];
+global int adj_edges[];
+global int visited[];
+
+void visit(int n) {
+    #pragma bombyx dae
+    int off = adj_off[n];
+    #pragma bombyx dae
+    int end = adj_off[n + 1];
+    visited[n] = 1;
+    for (int i = off; i < end; i = i + 1) {
+        cilk_spawn visit(adj_edges[i]);
+    }
+    cilk_sync;
+}
+";
+
+/// Seed a memory image with the graph.
+pub fn init_memory(module: &Module, memory: &mut Memory, graph: &CsrGraph) -> Result<()> {
+    memory.fill_i64(
+        module
+            .global_by_name("adj_off")
+            .ok_or_else(|| anyhow::anyhow!("no adj_off"))?,
+        &graph.adj_off,
+    );
+    memory.fill_i64(
+        module
+            .global_by_name("adj_edges")
+            .ok_or_else(|| anyhow::anyhow!("no adj_edges"))?,
+        &graph.adj_edges,
+    );
+    memory.resize_by_name(module, "visited", graph.nodes())?;
+    Ok(())
+}
+
+/// All nodes reachable from 0 must be marked (for our generators: all).
+pub fn check_all_visited(module: &Module, memory: &Memory, graph: &CsrGraph) -> Result<()> {
+    let visited =
+        memory.dump_i64(module.global_by_name("visited").ok_or_else(|| anyhow::anyhow!("no visited"))?);
+    let unvisited = visited.iter().filter(|&&v| v == 0).count();
+    if unvisited != 0 {
+        anyhow::bail!("{unvisited}/{} nodes unvisited", graph.nodes());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interp::oracle::run_oracle;
+    use crate::ir::expr::Value;
+    use crate::lower::{compile, CompileOptions};
+    use crate::workloads::graphgen;
+
+    #[test]
+    fn oracle_visits_whole_paper_tree_small() {
+        let r = compile("bfs", BFS_SRC, &CompileOptions::no_dae()).unwrap();
+        let g = graphgen::paper_tree_small();
+        let mut mem = Memory::new(&r.implicit);
+        init_memory(&r.implicit, &mut mem, &g).unwrap();
+        let (_, mem) = run_oracle(&r.implicit, mem, "visit", &[Value::I64(0)]).unwrap();
+        check_all_visited(&r.implicit, &mem, &g).unwrap();
+    }
+
+    #[test]
+    fn dae_and_plain_agree_on_random_dag() {
+        let g = graphgen::random_dag(500, 2.5, 11);
+        let mut images = Vec::new();
+        for (src, opts) in
+            [(BFS_SRC, CompileOptions::no_dae()), (BFS_DAE_SRC, CompileOptions::standard())]
+        {
+            let r = compile("bfs", src, &opts).unwrap();
+            let mut mem = Memory::new(&r.implicit);
+            init_memory(&r.implicit, &mut mem, &g).unwrap();
+            let (_, mem) = run_oracle(&r.implicit, mem, "visit", &[Value::I64(0)]).unwrap();
+            images.push(mem.dump_i64(r.implicit.global_by_name("visited").unwrap()));
+        }
+        assert_eq!(images[0], images[1]);
+    }
+}

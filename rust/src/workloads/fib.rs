@@ -1,0 +1,38 @@
+//! Fibonacci — the paper's running example (Fig. 1 / Fig. 2).
+
+/// Fig. 1, verbatim modulo Cilk-C surface syntax.
+pub const FIB_SRC: &str = "\
+int fib(int n) {
+    if (n < 2)
+        return n;
+    int x = cilk_spawn fib(n - 1);
+    int y = cilk_spawn fib(n - 2);
+    cilk_sync;
+    return x + y;
+}
+";
+
+/// Reference values.
+pub fn fib_ref(n: u64) -> u64 {
+    let (mut a, mut b) = (0u64, 1u64);
+    for _ in 0..n {
+        let c = a + b;
+        a = b;
+        b = c;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_series() {
+        let expect = [0, 1, 1, 2, 3, 5, 8, 13, 21, 34, 55];
+        for (n, &e) in expect.iter().enumerate() {
+            assert_eq!(fib_ref(n as u64), e);
+        }
+        assert_eq!(fib_ref(30), 832_040);
+    }
+}

@@ -1,0 +1,159 @@
+//! Graph generators in CSR form.
+//!
+//! The paper's evaluation dataset: "two graphs, each synthetically
+//! generated as a tree with depths D=7 and 9, and branch factor B=4 for
+//! each node. In total, the graphs are of size (B^D - 1)/(B - 1) = 5,461
+//! and 87,381."
+
+use crate::util::rng::Rng;
+
+/// A graph in CSR form: `adj_off[n]..adj_off[n+1]` indexes `adj_edges`.
+#[derive(Clone, Debug)]
+pub struct CsrGraph {
+    pub adj_off: Vec<i64>,
+    pub adj_edges: Vec<i64>,
+}
+
+impl CsrGraph {
+    pub fn nodes(&self) -> usize {
+        self.adj_off.len() - 1
+    }
+
+    pub fn edges(&self) -> usize {
+        self.adj_edges.len()
+    }
+
+    pub fn degree(&self, n: usize) -> usize {
+        (self.adj_off[n + 1] - self.adj_off[n]) as usize
+    }
+}
+
+/// Complete B-ary tree of the given depth (depth 1 = a single root).
+/// Node ids are level-order, so node `n`'s children are `n*B+1 ..= n*B+B`
+/// when in range — but we materialize explicit CSR as the paper's flow
+/// (and ours) consumes adjacency from memory.
+pub fn tree(branch: u64, depth: u32) -> CsrGraph {
+    assert!(branch >= 1 && depth >= 1);
+    let n_nodes: u64 = if branch == 1 {
+        depth as u64
+    } else {
+        (branch.pow(depth) - 1) / (branch - 1)
+    };
+    // Internal nodes: all but the last level.
+    let n_internal: u64 = if branch == 1 {
+        (depth as u64).saturating_sub(1)
+    } else if depth >= 1 {
+        (branch.pow(depth - 1) - 1) / (branch - 1)
+    } else {
+        0
+    };
+    let mut adj_off = Vec::with_capacity(n_nodes as usize + 1);
+    let mut adj_edges = Vec::with_capacity((n_nodes - 1) as usize);
+    adj_off.push(0i64);
+    for node in 0..n_nodes {
+        if node < n_internal {
+            for c in 0..branch {
+                adj_edges.push((node * branch + 1 + c) as i64);
+            }
+        }
+        adj_off.push(adj_edges.len() as i64);
+    }
+    CsrGraph { adj_off, adj_edges }
+}
+
+/// The paper's two datasets.
+pub fn paper_tree_small() -> CsrGraph {
+    tree(4, 7)
+}
+
+pub fn paper_tree_large() -> CsrGraph {
+    tree(4, 9)
+}
+
+/// Random DAG (edges only from lower to higher ids — keeps parallel BFS
+/// revisit-free like a tree, while stressing irregular degrees).
+pub fn random_dag(nodes: usize, avg_degree: f64, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let mut adj_off = Vec::with_capacity(nodes + 1);
+    let mut adj_edges = Vec::new();
+    adj_off.push(0i64);
+    for n in 0..nodes {
+        let remaining = nodes - n - 1;
+        if remaining > 0 {
+            // Poisson-ish via repeated Bernoulli on a capped degree.
+            let max_deg = remaining.min((avg_degree * 3.0) as usize + 1);
+            for _ in 0..max_deg {
+                if rng.chance(avg_degree / max_deg as f64) {
+                    let target = n + 1 + rng.below(remaining as u64) as usize;
+                    adj_edges.push(target as i64);
+                }
+            }
+        }
+        adj_off.push(adj_edges.len() as i64);
+    }
+    CsrGraph { adj_off, adj_edges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_tree_sizes_match_formula() {
+        // (4^7 - 1)/3 = 5461 and (4^9 - 1)/3 = 87381 — the paper's sizes.
+        assert_eq!(paper_tree_small().nodes(), 5_461);
+        assert_eq!(paper_tree_large().nodes(), 87_381);
+        assert_eq!(paper_tree_small().edges(), 5_460);
+        assert_eq!(paper_tree_large().edges(), 87_380);
+    }
+
+    #[test]
+    fn tree_structure_is_consistent() {
+        let g = tree(3, 4); // 1 + 3 + 9 + 27 = 40 nodes
+        assert_eq!(g.nodes(), 40);
+        assert_eq!(g.degree(0), 3);
+        // Leaves have no children.
+        for n in 13..40 {
+            assert_eq!(g.degree(n), 0, "node {n}");
+        }
+        // Every non-root node appears exactly once as a child.
+        let mut seen = vec![0u32; g.nodes()];
+        for &e in &g.adj_edges {
+            seen[e as usize] += 1;
+        }
+        assert_eq!(seen[0], 0);
+        assert!(seen[1..].iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn unary_tree_is_a_chain() {
+        let g = tree(1, 5);
+        assert_eq!(g.nodes(), 5);
+        assert_eq!(g.edges(), 4);
+        for n in 0..4 {
+            assert_eq!(g.degree(n), 1);
+        }
+    }
+
+    #[test]
+    fn random_dag_is_forward_only() {
+        let g = random_dag(200, 3.0, 42);
+        assert_eq!(g.nodes(), 200);
+        for n in 0..g.nodes() {
+            for i in g.adj_off[n]..g.adj_off[n + 1] {
+                let t = g.adj_edges[i as usize];
+                assert!(t as usize > n, "edge {n}->{t} not forward");
+                assert!((t as usize) < g.nodes());
+            }
+        }
+    }
+
+    #[test]
+    fn random_dag_deterministic_by_seed() {
+        let a = random_dag(100, 2.0, 7);
+        let b = random_dag(100, 2.0, 7);
+        assert_eq!(a.adj_edges, b.adj_edges);
+        let c = random_dag(100, 2.0, 8);
+        assert_ne!(a.adj_edges, c.adj_edges);
+    }
+}

@@ -1,0 +1,10 @@
+//! Benchmark workloads: Cilk-C sources, input generators and reference
+//! results. These are the programs the paper's evaluation (and our
+//! extended suite) compiles and runs.
+
+pub mod bfs;
+pub mod fib;
+pub mod graphgen;
+pub mod nqueens;
+pub mod qsort;
+pub mod relax;

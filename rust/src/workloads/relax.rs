@@ -1,0 +1,164 @@
+//! Graph-relaxation workload — the numeric PE datapath that exercises the
+//! three-layer stack (DESIGN.md §Hardware-Adaptation).
+//!
+//! Each visited node carries an F-dimensional feature vector in global
+//! memory. The execute task applies `y = relu(x·W + b)`, writes `y` back,
+//! and returns a frontier score `sum(y)` used to decide whether children
+//! are expanded. The datapath is an `extern xla` task: Bombyx's scalar
+//! reference lives here; the production path batches through the AOT
+//! Pallas/XLA executable (`runtime::relax`), and the two are asserted
+//! equal in tests.
+
+use anyhow::{anyhow, Result};
+
+use crate::interp::Memory;
+use crate::ir::cfg::Module;
+use crate::ir::expr::Value;
+use crate::util::rng::Rng;
+
+/// Feature width (fixed — matches the AOT-compiled kernel variants).
+pub const F: usize = 16;
+
+/// Cilk-C source: relax-and-expand traversal. The xla task `relax`
+/// consumes a node id, transforms its feature row in `feat`, and returns
+/// the frontier score scaled by 1000 (int); children expand while the
+/// score stays positive.
+pub const RELAX_SRC: &str = "\
+global int adj_off[];
+global int adj_edges[];
+global int visited[];
+global float feat[];
+global int work_done[1];
+
+extern xla int relax(int n);
+
+void expand(int n) {
+    visited[n] = 1;
+    int score = cilk_spawn relax(n);
+    cilk_sync;
+    atomic_add(work_done, 0, 1);
+    if (score > 0) {
+        int off = adj_off[n];
+        int end = adj_off[n + 1];
+        for (int i = off; i < end; i = i + 1) {
+            int child = adj_edges[i];
+            if (visited[child] == 0) {
+                cilk_spawn expand(child);
+            }
+        }
+        cilk_sync;
+    }
+}
+";
+
+/// The relaxation weights: a fixed, well-conditioned deterministic matrix
+/// (shared bit-for-bit with python/compile/kernels/ref.py — see
+/// `weights()` docs there).
+pub fn weights(seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let w: Vec<f32> = (0..F * F)
+        .map(|_| (rng.unit_f32() - 0.5) * 0.25)
+        .collect();
+    let b: Vec<f32> = (0..F).map(|_| (rng.unit_f32() - 0.5) * 0.1).collect();
+    (w, b)
+}
+
+/// Scalar reference datapath: y = relu(x W + b); returns (y, score).
+pub fn relax_ref(x: &[f32], w: &[f32], b: &[f32]) -> (Vec<f32>, f32) {
+    assert_eq!(x.len(), F);
+    let mut y = vec![0f32; F];
+    for j in 0..F {
+        let mut acc = b[j];
+        for i in 0..F {
+            acc += x[i] * w[i * F + j];
+        }
+        y[j] = acc.max(0.0);
+    }
+    let score = y.iter().sum();
+    (y, score)
+}
+
+/// Initialize memory: graph + random features (score-positive near the
+/// root so traversals do real work).
+pub fn init_memory(
+    module: &Module,
+    memory: &mut Memory,
+    graph: &crate::workloads::graphgen::CsrGraph,
+    seed: u64,
+) -> Result<()> {
+    crate::workloads::bfs::init_memory(module, memory, graph)?;
+    let mut rng = Rng::new(seed ^ 0xFEA7);
+    let feats: Vec<f32> = (0..graph.nodes() * F).map(|_| rng.unit_f32()).collect();
+    let fid = module.global_by_name("feat").ok_or_else(|| anyhow!("no feat"))?;
+    memory.fill_f32(fid, &feats);
+    Ok(())
+}
+
+/// The scalar `XlaHandler`/sink body shared by oracle and WS reference
+/// modes: load row n of `feat`, apply the datapath, write back, return
+/// the score ×1000 as int.
+pub fn scalar_relax(
+    args: &[Value],
+    feat: &mut [f32],
+    w: &[f32],
+    b: &[f32],
+) -> Result<Value> {
+    let n = args
+        .first()
+        .ok_or_else(|| anyhow!("relax expects node id"))?
+        .as_i64() as usize;
+    let row = n * F..(n + 1) * F;
+    if row.end > feat.len() {
+        return Err(anyhow!("relax: node {n} out of feature range"));
+    }
+    let x: Vec<f32> = feat[row.clone()].to_vec();
+    let (y, score) = relax_ref(&x, w, b);
+    feat[row].copy_from_slice(&y);
+    Ok(Value::I64((score * 1000.0) as i64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relax_ref_is_deterministic_and_nonneg() {
+        let (w, b) = weights(1);
+        let x: Vec<f32> = (0..F).map(|i| i as f32 / F as f32).collect();
+        let (y1, s1) = relax_ref(&x, &w, &b);
+        let (y2, s2) = relax_ref(&x, &w, &b);
+        assert_eq!(y1, y2);
+        assert_eq!(s1, s2);
+        assert!(y1.iter().all(|&v| v >= 0.0), "relu output");
+        assert!((s1 - y1.iter().sum::<f32>()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weights_are_seed_stable() {
+        let (w1, _) = weights(7);
+        let (w2, _) = weights(7);
+        assert_eq!(w1, w2);
+        let (w3, _) = weights(8);
+        assert_ne!(w1, w3);
+    }
+
+    #[test]
+    fn scalar_relax_updates_row_in_place() {
+        let (w, b) = weights(1);
+        let mut feat = vec![0.5f32; 3 * F];
+        let before = feat.clone();
+        let v = scalar_relax(&[Value::I64(1)], &mut feat, &w, &b).unwrap();
+        // Row 1 changed; rows 0 and 2 untouched.
+        assert_eq!(&feat[..F], &before[..F]);
+        assert_eq!(&feat[2 * F..], &before[2 * F..]);
+        assert_ne!(&feat[F..2 * F], &before[F..2 * F]);
+        assert!(matches!(v, Value::I64(_)));
+    }
+
+    #[test]
+    fn oob_node_errors() {
+        let (w, b) = weights(1);
+        let mut feat = vec![0.5f32; F];
+        assert!(scalar_relax(&[Value::I64(5)], &mut feat, &w, &b).is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! Concurrent closure registry for the work-stealing runtime.
+//!
+//! A closure's lifecycle: created with join counter 1 (the creator's hold),
+//! incremented once per child spawn targeting it, decremented by each
+//! `send_argument` / counter notification and by `close_spawns`. The thread
+//! that takes the counter to zero *fires* the closure (turns it into a
+//! runnable task).
+//!
+//! Slots are `AtomicU64` bit patterns; each hole is written by exactly one
+//! child (the task graph guarantees it), and the release-ordering on the
+//! final decrement makes those writes visible to the firing thread.
+
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::frontend::ast::Type;
+use crate::ir::cfg::FuncId;
+use crate::ir::expr::Value;
+
+/// Continuation reference carried by every task instance.
+#[derive(Clone, Debug)]
+pub enum Cont {
+    /// Deliver to the external caller.
+    Root,
+    /// Fill `slot`, then decrement.
+    Slot { clos: Arc<SharedClosure>, slot: u32 },
+    /// Decrement only (void child).
+    Counter { clos: Arc<SharedClosure> },
+}
+
+#[derive(Debug)]
+pub struct SharedClosure {
+    pub task: FuncId,
+    pub slots: Vec<AtomicU64>,
+    pub slot_tys: Vec<Type>,
+    /// The continuation of the task that created this closure (where the
+    /// continuation task will eventually send *its* result).
+    pub cont: Mutex<Option<Cont>>,
+    pub counter: AtomicU32,
+    /// Registry handle (set right after insertion; -1 until then). Used to
+    /// drop the registry reference when the closure fires.
+    pub handle: AtomicI64,
+}
+
+impl SharedClosure {
+    pub fn new(task: FuncId, slot_tys: Vec<Type>, cont: Cont) -> SharedClosure {
+        SharedClosure {
+            task,
+            slots: slot_tys
+                .iter()
+                .map(|&t| AtomicU64::new(Value::zero_of(t).to_bits()))
+                .collect(),
+            slot_tys,
+            cont: Mutex::new(Some(cont)),
+            counter: AtomicU32::new(1),
+            handle: AtomicI64::new(-1),
+        }
+    }
+
+    /// Add one expected child (called by the spawner *before* the child can
+    /// possibly run — the increment happens-before the push to any deque).
+    #[inline]
+    pub fn hold(&self) {
+        self.counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fill a hole slot. Each hole has exactly one writer.
+    #[inline]
+    pub fn fill(&self, slot: u32, value: Value) {
+        let ty = self.slot_tys[slot as usize];
+        self.slots[slot as usize].store(value.coerce(ty).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Decrement the join counter; returns `true` if this call took it to
+    /// zero (the caller must then fire the closure). Release/Acquire pairs
+    /// make all slot writes visible to the firing thread.
+    #[inline]
+    pub fn release(&self) -> bool {
+        let prev = self.counter.fetch_sub(1, Ordering::Release);
+        debug_assert!(prev > 0, "join counter underflow");
+        if prev == 1 {
+            std::sync::atomic::fence(Ordering::Acquire);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Snapshot the argument values (call only after `release()` returned
+    /// true).
+    pub fn take_args(&self) -> Vec<Value> {
+        self.slots
+            .iter()
+            .zip(&self.slot_tys)
+            .map(|(s, &t)| Value::from_bits(t, s.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    pub fn take_cont(&self) -> Cont {
+        self.cont
+            .lock()
+            .unwrap()
+            .take()
+            .expect("closure fired twice (join-counter bug)")
+    }
+}
+
+/// Per-task-local closure handle table: `MakeClosure` handles are local
+/// integer values; the registry resolves them when they cross task
+/// boundaries as parameters (a closure handle is an ordinary i64 in the
+/// IR).
+///
+/// Handles are indices into a global append-only sharded table, so they
+/// remain valid when passed between tasks/threads. Entries are dropped when
+/// fired (the Arc keeps in-flight references alive).
+pub struct Registry {
+    shards: Vec<Mutex<Vec<Option<Arc<SharedClosure>>>>>,
+    shard_bits: u32,
+}
+
+impl Registry {
+    pub fn new(shards: usize) -> Registry {
+        let shards = shards.next_power_of_two();
+        Registry {
+            shards: (0..shards).map(|_| Mutex::new(Vec::new())).collect(),
+            shard_bits: shards.trailing_zeros(),
+        }
+    }
+
+    /// Register a closure; returns its global handle.
+    pub fn insert(&self, clos: Arc<SharedClosure>, shard_hint: usize) -> i64 {
+        let shard = shard_hint & (self.shards.len() - 1);
+        let mut v = self.shards[shard].lock().unwrap();
+        let idx = v.len();
+        v.push(Some(clos));
+        ((idx as i64) << self.shard_bits) | shard as i64
+    }
+
+    /// Resolve a handle to its closure.
+    pub fn get(&self, handle: i64) -> Arc<SharedClosure> {
+        let shard = (handle as usize) & (self.shards.len() - 1);
+        let idx = (handle >> self.shard_bits) as usize;
+        self.shards[shard].lock().unwrap()[idx]
+            .as_ref()
+            .expect("closure handle resolved after firing")
+            .clone()
+    }
+
+    /// Drop the registry's reference once fired (handle becomes invalid).
+    pub fn remove(&self, handle: i64) {
+        let shard = (handle as usize) & (self.shards.len() - 1);
+        let idx = (handle >> self.shard_bits) as usize;
+        self.shards[shard].lock().unwrap()[idx] = None;
+    }
+
+    /// Number of live (unfired) closures — leak detector for tests.
+    pub fn live(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().iter().filter(|e| e.is_some()).count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_protocol() {
+        let c = SharedClosure::new(FuncId::new(0), vec![Type::Int, Type::Int], Cont::Root);
+        c.hold(); // child 1
+        c.hold(); // child 2
+        assert!(!c.release(), "child 1 completes");
+        c.fill(0, Value::I64(7));
+        assert!(!c.release(), "child 2 completes");
+        c.fill(1, Value::I64(8));
+        assert!(c.release(), "creator drops hold -> fires");
+        assert_eq!(c.take_args(), vec![Value::I64(7), Value::I64(8)]);
+    }
+
+    #[test]
+    fn concurrent_releases_fire_exactly_once() {
+        for _ in 0..50 {
+            let c = Arc::new(SharedClosure::new(FuncId::new(0), vec![], Cont::Root));
+            let n = 8;
+            for _ in 0..n {
+                c.hold();
+            }
+            let fired = std::sync::atomic::AtomicU32::new(0);
+            std::thread::scope(|s| {
+                for _ in 0..n {
+                    let c = &c;
+                    let fired = &fired;
+                    s.spawn(move || {
+                        if c.release() {
+                            fired.fetch_add(1, Ordering::SeqCst);
+                        }
+                    });
+                }
+                if c.release() {
+                    fired.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert_eq!(fired.load(Ordering::SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn registry_roundtrip_and_remove() {
+        let r = Registry::new(8);
+        let c = Arc::new(SharedClosure::new(FuncId::new(3), vec![Type::Int], Cont::Root));
+        let h = r.insert(c.clone(), 5);
+        assert_eq!(r.get(h).task, FuncId::new(3));
+        assert_eq!(r.live(), 1);
+        r.remove(h);
+        assert_eq!(r.live(), 0);
+        // The Arc we hold keeps the closure alive regardless.
+        assert_eq!(c.task, FuncId::new(3));
+    }
+
+    #[test]
+    fn handles_distinct_across_shards() {
+        let r = Registry::new(4);
+        let mut handles = std::collections::HashSet::new();
+        for i in 0..100 {
+            let c = Arc::new(SharedClosure::new(FuncId::new(0), vec![], Cont::Root));
+            assert!(handles.insert(r.insert(c, i)));
+        }
+    }
+}

@@ -1,0 +1,337 @@
+//! Multithreaded continuation-passing work-stealing runtime — the Cilk-1
+//! "emulation layer" backend of the paper (§II-B), built from scratch.
+//!
+//! This is what the paper's second compilation target runs on: the explicit
+//! IR executed in software to verify the rewrite preserves the original
+//! program's semantics. Architecture:
+//!
+//! - one worker thread per core (configurable), each with its own deque
+//!   (owner pushes/pops the hot end, thieves steal the cold end);
+//! - closures live in a sharded registry ([`closure`]); join counters are
+//!   atomics — a closure fires on the thread that decrements it to zero;
+//! - shared memory ([`shared_mem`]) is word-atomic, matching the FPGA HBM
+//!   model (benign races like BFS's visited flags behave as in hardware);
+//! - `extern xla` tasks are routed to a batch sink (scalar reference
+//!   implementation in tests; the AOT XLA executable in production —
+//!   `coordinator::batcher`).
+
+pub mod closure;
+pub mod shared_mem;
+pub mod worker;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::ir::cfg::Module;
+use crate::ir::expr::Value;
+
+pub use closure::{Cont, Registry};
+pub use shared_mem::SharedMemory;
+
+/// Batch execution sink for `extern xla` tasks.
+pub trait XlaSink: Send + Sync {
+    /// Execute a batch of task instances of task `name`; one result per
+    /// instance, in order.
+    fn exec_batch(
+        &self,
+        name: &str,
+        batch: &[Vec<Value>],
+        mem: &SharedMemory,
+    ) -> Result<Vec<Value>>;
+
+    /// Preferred batch size (the runtime flushes at this size or when idle).
+    fn preferred_batch(&self) -> usize {
+        64
+    }
+}
+
+/// Rejects xla tasks (programs without `extern xla`).
+pub struct NoXlaSink;
+
+impl XlaSink for NoXlaSink {
+    fn exec_batch(&self, name: &str, _b: &[Vec<Value>], _m: &SharedMemory) -> Result<Vec<Value>> {
+        Err(anyhow!("xla task `{name}` spawned but no XLA sink configured"))
+    }
+}
+
+/// Scalar per-instance sink adapter (reference mode).
+pub struct ScalarSink<F>(pub F)
+where
+    F: Fn(&str, &[Value], &SharedMemory) -> Result<Value> + Send + Sync;
+
+impl<F> XlaSink for ScalarSink<F>
+where
+    F: Fn(&str, &[Value], &SharedMemory) -> Result<Value> + Send + Sync,
+{
+    fn exec_batch(&self, name: &str, batch: &[Vec<Value>], mem: &SharedMemory) -> Result<Vec<Value>> {
+        batch.iter().map(|args| (self.0)(name, args, mem)).collect()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct WsConfig {
+    pub workers: usize,
+    /// Steal attempts before a worker backs off.
+    pub steal_tries: usize,
+}
+
+impl Default for WsConfig {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16);
+        WsConfig { workers, steal_tries: 4 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct WsStats {
+    pub tasks_run: u64,
+    pub steals: u64,
+    pub closures_made: u64,
+    pub xla_batches: u64,
+    pub xla_tasks: u64,
+}
+
+/// Shared coordination state across workers.
+pub(crate) struct Shared<'m> {
+    pub module: &'m Module,
+    pub memory: SharedMemory,
+    pub registry: Registry,
+    /// Tasks created but not yet finished (termination detection).
+    pub pending: AtomicU64,
+    pub result: Mutex<Option<Value>>,
+    pub error: Mutex<Option<anyhow::Error>>,
+    pub failed: AtomicBool,
+    pub done: AtomicBool,
+    /// Per-worker deques (Mutex-based; stealing is rare on the fast path).
+    pub deques: Vec<Mutex<std::collections::VecDeque<worker::WsTask>>>,
+    /// Queue of xla task instances awaiting batch execution.
+    pub xla_queue: Mutex<Vec<(crate::ir::FuncId, Vec<Value>, Cont)>>,
+    pub xla_sink: Box<dyn XlaSink>,
+    /// Parked-worker wakeup.
+    pub idle_lock: Mutex<()>,
+    pub idle_cv: Condvar,
+    /// Number of workers currently parked (gates notify syscalls).
+    pub idle_workers: AtomicU64,
+}
+
+/// Run a task program on the WS runtime; returns the root result, final
+/// memory and stats.
+pub fn run(
+    module: &Module,
+    memory: SharedMemory,
+    name: &str,
+    args: &[Value],
+    config: &WsConfig,
+    xla_sink: Box<dyn XlaSink>,
+) -> Result<(Value, SharedMemory, WsStats)> {
+    let fid = module
+        .func_by_name(name)
+        .ok_or_else(|| anyhow!("no task named `{name}`"))?;
+    let workers = config.workers.max(1);
+    let shared = Shared {
+        module,
+        memory,
+        registry: Registry::new(64),
+        pending: AtomicU64::new(1),
+        result: Mutex::new(None),
+        error: Mutex::new(None),
+        failed: AtomicBool::new(false),
+        done: AtomicBool::new(false),
+        deques: (0..workers)
+            .map(|_| Mutex::new(std::collections::VecDeque::new()))
+            .collect(),
+        xla_queue: Mutex::new(Vec::new()),
+        xla_sink,
+        idle_lock: Mutex::new(()),
+        idle_cv: Condvar::new(),
+        idle_workers: AtomicU64::new(0),
+    };
+    shared.deques[0].lock().unwrap().push_back(worker::WsTask {
+        task: fid,
+        args: args.to_vec(),
+        cont: Cont::Root,
+    });
+
+    let stats: Vec<Mutex<WsStats>> = (0..workers).map(|_| Mutex::new(WsStats::default())).collect();
+    std::thread::scope(|scope| {
+        for wid in 0..workers {
+            let shared = &shared;
+            let stats = &stats;
+            scope.spawn(move || {
+                worker::worker_loop(wid, shared, config, &mut stats[wid].lock().unwrap());
+            });
+        }
+    });
+
+    if let Some(err) = shared.error.into_inner().unwrap() {
+        bail!(err);
+    }
+    let result = shared
+        .result
+        .into_inner()
+        .unwrap()
+        .ok_or_else(|| anyhow!("task graph drained without a root result"))?;
+    let mut total = WsStats::default();
+    for s in stats {
+        let s = s.into_inner().unwrap();
+        total.tasks_run += s.tasks_run;
+        total.steals += s.steals;
+        total.closures_made += s.closures_made;
+        total.xla_batches += s.xla_batches;
+        total.xla_tasks += s.xla_tasks;
+    }
+    Ok((result, shared.memory, total))
+}
+
+impl<'m> Shared<'m> {
+    pub(crate) fn fail(&self, err: anyhow::Error) {
+        let mut slot = self.error.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(err);
+        }
+        self.failed.store(true, Ordering::SeqCst);
+        self.done.store(true, Ordering::SeqCst);
+        self.idle_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::{compile, CompileOptions};
+
+    fn ws_run(src: &str, name: &str, args: &[i64], workers: usize) -> (i64, WsStats) {
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let mem = SharedMemory::new(&r.explicit);
+        let vals: Vec<Value> = args.iter().map(|&a| Value::I64(a)).collect();
+        let cfg = WsConfig { workers, steal_tries: 4 };
+        let (v, _, stats) = run(&r.explicit, mem, name, &vals, &cfg, Box::new(NoXlaSink)).unwrap();
+        (v.as_i64(), stats)
+    }
+
+    const FIB: &str = "int fib(int n) {
+        if (n < 2) return n;
+        int x = cilk_spawn fib(n - 1);
+        int y = cilk_spawn fib(n - 2);
+        cilk_sync;
+        return x + y;
+    }";
+
+    #[test]
+    fn fib_single_worker() {
+        assert_eq!(ws_run(FIB, "fib", &[15], 1).0, 610);
+    }
+
+    #[test]
+    fn fib_parallel_matches() {
+        for workers in [2, 4, 8] {
+            let (v, stats) = ws_run(FIB, "fib", &[18], workers);
+            assert_eq!(v, 2584, "workers={workers}");
+            assert!(stats.tasks_run > 1000);
+        }
+    }
+
+    #[test]
+    fn parallel_is_deterministic_for_deterministic_programs() {
+        for _ in 0..5 {
+            let (v, _) = ws_run(FIB, "fib", &[16], 8);
+            assert_eq!(v, 987);
+        }
+    }
+
+    #[test]
+    fn bfs_parallel_visits_everything() {
+        let src = "global int adj_off[];
+            global int adj_edges[];
+            global int visited[];
+            void visit(int n) {
+                int off = adj_off[n];
+                int end = adj_off[n + 1];
+                visited[n] = 1;
+                for (int i = off; i < end; i = i + 1) {
+                    cilk_spawn visit(adj_edges[i]);
+                }
+                cilk_sync;
+            }";
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let m = &r.explicit;
+        // Full binary tree with 7 nodes in CSR.
+        let mut mem = SharedMemory::new(m);
+        mem.fill_i64(m.global_by_name("adj_off").unwrap(), &[0, 2, 4, 6, 6, 6, 6, 6]);
+        mem.fill_i64(m.global_by_name("adj_edges").unwrap(), &[1, 2, 3, 4, 5, 6]);
+        mem.resize(m.global_by_name("visited").unwrap(), 7);
+        let cfg = WsConfig { workers: 4, steal_tries: 4 };
+        let (v, mem, _) =
+            run(m, mem, "visit", &[Value::I64(0)], &cfg, Box::new(NoXlaSink)).unwrap();
+        assert_eq!(v, Value::Unit);
+        assert_eq!(mem.dump_i64(m.global_by_name("visited").unwrap()), vec![1; 7]);
+    }
+
+    #[test]
+    fn atomic_add_under_contention() {
+        let src = "global int acc[1];
+            void bump(int n) { atomic_add(acc, 0, 1); }
+            void f(int n) {
+                for (int i = 0; i < n; i = i + 1) {
+                    cilk_spawn bump(i);
+                }
+                cilk_sync;
+            }";
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let m = &r.explicit;
+        let mem = SharedMemory::new(m);
+        let cfg = WsConfig { workers: 8, steal_tries: 4 };
+        let (_, mem, _) = run(m, mem, "f", &[Value::I64(5000)], &cfg, Box::new(NoXlaSink)).unwrap();
+        assert_eq!(mem.dump_i64(m.global_by_name("acc").unwrap()), vec![5000]);
+    }
+
+    #[test]
+    fn error_in_task_propagates() {
+        // Out-of-bounds store must surface as Err, not deadlock.
+        let src = "global int a[2];
+            void f(int n) { a[100] = 1; }";
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let m = &r.explicit;
+        let mem = SharedMemory::new(m);
+        let cfg = WsConfig { workers: 4, steal_tries: 4 };
+        let err = run(m, mem, "f", &[Value::I64(0)], &cfg, Box::new(NoXlaSink)).unwrap_err();
+        assert!(err.to_string().contains("out-of-bounds"), "{err}");
+    }
+
+    #[test]
+    fn xla_tasks_are_batched() {
+        let src = "extern xla int double_(int n);
+            global int out[];
+            void f(int n) {
+                for (int i = 0; i < n; i = i + 1) {
+                    cilk_spawn put(i);
+                }
+                cilk_sync;
+            }
+            void put(int i) {
+                int d = cilk_spawn double_(i);
+                cilk_sync;
+                out[i] = d;
+            }";
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let m = &r.explicit;
+        let mut mem = SharedMemory::new(m);
+        mem.resize(m.global_by_name("out").unwrap(), 100);
+        let sink = ScalarSink(|_name: &str, args: &[Value], _mem: &SharedMemory| {
+            Ok(Value::I64(args[0].as_i64() * 2))
+        });
+        let cfg = WsConfig { workers: 4, steal_tries: 4 };
+        let (_, mem, stats) =
+            run(m, mem, "f", &[Value::I64(100)], &cfg, Box::new(sink)).unwrap();
+        let out = mem.dump_i64(m.global_by_name("out").unwrap());
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<i64>>());
+        assert_eq!(stats.xla_tasks, 100);
+        assert!(
+            stats.xla_batches <= 100,
+            "batches bounded by tasks: {} batches",
+            stats.xla_batches
+        );
+    }
+}

@@ -1,0 +1,217 @@
+//! Word-atomic shared memory for the multithreaded runtime.
+//!
+//! Values are stored as 64-bit patterns in `AtomicU64` cells. Plain loads
+//! and stores are `Relaxed` single-word atomics — the same guarantee an
+//! HBM channel gives concurrent PEs on the FPGA (no tearing, no ordering).
+//! `atomic_add` is a CAS loop (int: fetch-add semantics; float: CAS on the
+//! bit pattern).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, Result};
+
+use crate::frontend::ast::Type;
+use crate::ir::cfg::{GlobalId, Module};
+use crate::ir::expr::Value;
+
+pub struct SharedMemory {
+    arrays: Vec<Vec<AtomicU64>>,
+    elems: Vec<Type>,
+}
+
+impl std::fmt::Debug for SharedMemory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SharedMemory({} arrays)", self.arrays.len())
+    }
+}
+
+impl SharedMemory {
+    pub fn new(module: &Module) -> SharedMemory {
+        let mut arrays = Vec::new();
+        let mut elems = Vec::new();
+        for (_, g) in module.globals.iter() {
+            let len = g.size.unwrap_or(0) as usize;
+            arrays.push((0..len).map(|_| AtomicU64::new(zero_bits(g.elem))).collect());
+            elems.push(g.elem);
+        }
+        SharedMemory { arrays, elems }
+    }
+
+    /// Build from a sequential [`crate::interp::Memory`]-style snapshot.
+    pub fn from_values(module: &Module, values: Vec<Vec<Value>>) -> SharedMemory {
+        let mut mem = SharedMemory::new(module);
+        for (gi, col) in values.into_iter().enumerate() {
+            mem.arrays[gi] = col.into_iter().map(|v| AtomicU64::new(v.to_bits())).collect();
+        }
+        mem
+    }
+
+    pub fn resize(&mut self, id: GlobalId, len: usize) {
+        let z = zero_bits(self.elems[id.index()]);
+        let arr = &mut self.arrays[id.index()];
+        while arr.len() < len {
+            arr.push(AtomicU64::new(z));
+        }
+        arr.truncate(len);
+    }
+
+    pub fn len(&self, id: GlobalId) -> usize {
+        self.arrays[id.index()].len()
+    }
+
+    pub fn is_empty(&self, id: GlobalId) -> bool {
+        self.arrays[id.index()].is_empty()
+    }
+
+    pub fn elem(&self, id: GlobalId) -> Type {
+        self.elems[id.index()]
+    }
+
+    #[inline]
+    pub fn load(&self, id: GlobalId, index: i64) -> Result<Value> {
+        let cell = self.arrays[id.index()].get(index as usize).ok_or_else(|| {
+            anyhow!(
+                "out-of-bounds load: global #{} index {} (len {})",
+                id.index(),
+                index,
+                self.arrays[id.index()].len()
+            )
+        })?;
+        Ok(Value::from_bits(self.elems[id.index()], cell.load(Ordering::Relaxed)))
+    }
+
+    #[inline]
+    pub fn store(&self, id: GlobalId, index: i64, value: Value) -> Result<()> {
+        let elem = self.elems[id.index()];
+        let len = self.arrays[id.index()].len();
+        let cell = self.arrays[id.index()].get(index as usize).ok_or_else(|| {
+            anyhow!("out-of-bounds store: global #{} index {} (len {})", id.index(), index, len)
+        })?;
+        cell.store(value.coerce(elem).to_bits(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    #[inline]
+    pub fn atomic_add(&self, id: GlobalId, index: i64, value: Value) -> Result<()> {
+        let elem = self.elems[id.index()];
+        let len = self.arrays[id.index()].len();
+        let cell = self.arrays[id.index()].get(index as usize).ok_or_else(|| {
+            anyhow!(
+                "out-of-bounds atomic_add: global #{} index {} (len {})",
+                id.index(),
+                index,
+                len
+            )
+        })?;
+        match elem {
+            Type::Float => {
+                let add = value.as_f32();
+                let mut cur = cell.load(Ordering::Relaxed);
+                loop {
+                    let new = Value::F32(f32::from_bits(cur as u32) + add).to_bits();
+                    match cell.compare_exchange_weak(
+                        cur,
+                        new,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => break,
+                        Err(actual) => cur = actual,
+                    }
+                }
+            }
+            _ => {
+                cell.fetch_add(value.as_i64() as u64, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn fill_i64(&mut self, id: GlobalId, values: &[i64]) {
+        let elem = self.elems[id.index()];
+        self.arrays[id.index()] = values
+            .iter()
+            .map(|&v| AtomicU64::new(Value::I64(v).coerce(elem).to_bits()))
+            .collect();
+    }
+
+    pub fn fill_f32(&mut self, id: GlobalId, values: &[f32]) {
+        let elem = self.elems[id.index()];
+        self.arrays[id.index()] = values
+            .iter()
+            .map(|&v| AtomicU64::new(Value::F32(v).coerce(elem).to_bits()))
+            .collect();
+    }
+
+    pub fn dump_i64(&self, id: GlobalId) -> Vec<i64> {
+        let elem = self.elems[id.index()];
+        self.arrays[id.index()]
+            .iter()
+            .map(|c| Value::from_bits(elem, c.load(Ordering::Relaxed)).as_i64())
+            .collect()
+    }
+
+    pub fn dump_f32(&self, id: GlobalId) -> Vec<f32> {
+        let elem = self.elems[id.index()];
+        self.arrays[id.index()]
+            .iter()
+            .map(|c| Value::from_bits(elem, c.load(Ordering::Relaxed)).as_f32())
+            .collect()
+    }
+}
+
+fn zero_bits(ty: Type) -> u64 {
+    Value::zero_of(ty).to_bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::cfg::Global;
+
+    fn mem(elem: Type, size: u64) -> SharedMemory {
+        let mut m = Module::default();
+        m.globals.push(Global { name: "a".into(), elem, size: Some(size) });
+        SharedMemory::new(&m)
+    }
+
+    #[test]
+    fn atomic_add_is_atomic_across_threads() {
+        let m = mem(Type::Int, 1);
+        let g = GlobalId::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..10_000 {
+                        m.atomic_add(g, 0, Value::I64(1)).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(m.dump_i64(g), vec![80_000]);
+    }
+
+    #[test]
+    fn float_atomic_add() {
+        let m = mem(Type::Float, 1);
+        let g = GlobalId::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        m.atomic_add(g, 0, Value::F32(1.0)).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(m.dump_f32(g), vec![4000.0]);
+    }
+
+    #[test]
+    fn oob_reports_error() {
+        let m = mem(Type::Int, 2);
+        let g = GlobalId::new(0);
+        assert!(m.load(g, 5).is_err());
+        assert!(m.store(g, -1, Value::I64(0)).is_err());
+    }
+}

@@ -1,0 +1,397 @@
+//! Worker loop and task interpretation for the WS runtime.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::ir::cfg::{FuncId, FuncKind, Op, RetTarget, Term};
+use crate::ir::expr::{self, Value, VarId};
+
+use super::closure::{Cont, SharedClosure};
+use super::{Shared, WsConfig, WsStats};
+
+/// A runnable task instance.
+#[derive(Clone, Debug)]
+pub struct WsTask {
+    pub task: FuncId,
+    pub args: Vec<Value>,
+    pub cont: Cont,
+}
+
+pub(crate) fn worker_loop(wid: usize, shared: &Shared<'_>, config: &WsConfig, stats: &mut WsStats) {
+    let nworkers = shared.deques.len();
+    let mut rng = crate::util::rng::Rng::new(0x5EED ^ wid as u64);
+    // Per-worker environment scratch, reused across tasks (perf: saves one
+    // allocation per task on the hot path — see EXPERIMENTS.md §Perf).
+    let mut env_scratch: Vec<Value> = Vec::with_capacity(64);
+    loop {
+        if shared.done.load(Ordering::SeqCst) {
+            return;
+        }
+        // 1. Own deque (LIFO hot end).
+        let task = shared.deques[wid].lock().unwrap().pop_back();
+        if let Some(task) = task {
+            execute(wid, shared, task, stats, &mut env_scratch);
+            continue;
+        }
+        // 2. Steal (FIFO cold end of a random victim).
+        let mut stolen = None;
+        for _ in 0..config.steal_tries.max(1) {
+            let victim = rng.below(nworkers as u64) as usize;
+            if victim == wid {
+                continue;
+            }
+            if let Some(t) = shared.deques[victim].lock().unwrap().pop_front() {
+                stolen = Some(t);
+                break;
+            }
+        }
+        if let Some(task) = stolen {
+            stats.steals += 1;
+            execute(wid, shared, task, stats, &mut env_scratch);
+            continue;
+        }
+        // 3. Flush pending xla batch work.
+        if flush_xla(wid, shared, stats) {
+            continue;
+        }
+        // 4. Park briefly; pushers notify (gated on the idle counter so
+        // the hot path skips the futex syscall when nobody sleeps).
+        shared.idle_workers.fetch_add(1, Ordering::SeqCst);
+        let guard = shared.idle_lock.lock().unwrap();
+        let _ = shared
+            .idle_cv
+            .wait_timeout(guard, Duration::from_micros(200))
+            .unwrap();
+        shared.idle_workers.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Drain the xla queue through the batch sink. Returns true if any work was
+/// done.
+fn flush_xla(wid: usize, shared: &Shared<'_>, stats: &mut WsStats) -> bool {
+    let batch: Vec<(FuncId, Vec<Value>, Cont)> = {
+        let mut q = shared.xla_queue.lock().unwrap();
+        if q.is_empty() {
+            return false;
+        }
+        let take = q.len().min(shared.xla_sink.preferred_batch());
+        q.drain(..take).collect()
+    };
+    // Group by task id, preserving order within each group.
+    let mut groups: Vec<(FuncId, Vec<usize>)> = Vec::new();
+    for (i, (fid, _, _)) in batch.iter().enumerate() {
+        match groups.iter_mut().find(|(g, _)| g == fid) {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((*fid, vec![i])),
+        }
+    }
+    for (fid, idxs) in groups {
+        let name = shared.module.funcs[fid].name.clone();
+        let args: Vec<Vec<Value>> = idxs.iter().map(|&i| batch[i].1.clone()).collect();
+        stats.xla_batches += 1;
+        stats.xla_tasks += idxs.len() as u64;
+        match shared.xla_sink.exec_batch(&name, &args, &shared.memory) {
+            Ok(results) => {
+                if results.len() != idxs.len() {
+                    shared.fail(anyhow!(
+                        "xla sink returned {} results for {} instances of `{name}`",
+                        results.len(),
+                        idxs.len()
+                    ));
+                    return true;
+                }
+                for (&i, value) in idxs.iter().zip(results) {
+                    let cont = batch[i].2.clone();
+                    if let Err(e) = deliver(wid, shared, cont, value) {
+                        shared.fail(e);
+                        return true;
+                    }
+                    finish_one(shared);
+                }
+            }
+            Err(e) => {
+                shared.fail(e);
+                return true;
+            }
+        }
+    }
+    true
+}
+
+fn execute(
+    wid: usize,
+    shared: &Shared<'_>,
+    task: WsTask,
+    stats: &mut WsStats,
+    env_scratch: &mut Vec<Value>,
+) {
+    stats.tasks_run += 1;
+    if let Err(e) = run_task(wid, shared, task, stats, env_scratch) {
+        shared.fail(e);
+        return;
+    }
+    finish_one(shared);
+}
+
+/// Decrement pending; on zero, signal completion.
+fn finish_one(shared: &Shared<'_>) {
+    if shared.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+        shared.done.store(true, Ordering::SeqCst);
+        shared.idle_cv.notify_all();
+    }
+}
+
+/// Push a new runnable task (pending already incremented by caller).
+fn push_task(wid: usize, shared: &Shared<'_>, task: WsTask) {
+    shared.deques[wid].lock().unwrap().push_back(task);
+    if shared.idle_workers.load(Ordering::Relaxed) > 0 {
+        shared.idle_cv.notify_one();
+    }
+}
+
+fn deliver(wid: usize, shared: &Shared<'_>, cont: Cont, value: Value) -> Result<()> {
+    match cont {
+        Cont::Root => {
+            let mut slot = shared.result.lock().unwrap();
+            if slot.is_some() {
+                bail!("root continuation received two results");
+            }
+            *slot = Some(value);
+        }
+        Cont::Slot { clos, slot } => {
+            clos.fill(slot, value);
+            if clos.release() {
+                fire(wid, shared, &clos);
+            }
+        }
+        Cont::Counter { clos } => {
+            if clos.release() {
+                fire(wid, shared, &clos);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn fire(wid: usize, shared: &Shared<'_>, clos: &Arc<SharedClosure>) {
+    let handle = clos.handle.load(Ordering::Relaxed);
+    if handle >= 0 {
+        shared.registry.remove(handle);
+    }
+    let task = WsTask { task: clos.task, args: clos.take_args(), cont: clos.take_cont() };
+    shared.pending.fetch_add(1, Ordering::AcqRel);
+    push_task(wid, shared, task);
+}
+
+fn run_task(
+    wid: usize,
+    shared: &Shared<'_>,
+    inst: WsTask,
+    stats: &mut WsStats,
+    env_scratch: &mut Vec<Value>,
+) -> Result<()> {
+    let module = shared.module;
+    let func = &module.funcs[inst.task];
+
+    if func.kind == FuncKind::Xla {
+        // Shouldn't reach a deque (spawns route xla tasks to the batch
+        // queue) — but a root xla task arrives here; run it as a batch of 1.
+        let out = shared
+            .xla_sink
+            .exec_batch(&func.name, &[inst.args.clone()], &shared.memory)?
+            .pop()
+            .ok_or_else(|| anyhow!("empty xla result"))?;
+        return deliver(wid, shared, inst.cont, out);
+    }
+    if func.kind == FuncKind::Leaf {
+        let out = eval_leaf(shared, inst.task, &inst.args)?;
+        return deliver(wid, shared, inst.cont, out);
+    }
+
+    let cfg = func.cfg();
+    if inst.args.len() != func.params {
+        bail!(
+            "task `{}` expects {} args, got {} (closure layout bug)",
+            func.name,
+            func.params,
+            inst.args.len()
+        );
+    }
+    env_scratch.clear();
+    env_scratch.extend(func.vars.values().map(|v| Value::zero_of(v.ty)));
+    let env = env_scratch;
+    for (i, a) in inst.args.iter().enumerate() {
+        env[i] = a.coerce(func.vars[VarId::new(i)].ty);
+    }
+
+    let mut block = cfg.entry;
+    let mut steps = 0u64;
+    loop {
+        steps += 1;
+        if steps > 100_000_000 {
+            bail!("task `{}` exceeded step limit", func.name);
+        }
+        let b = &cfg.blocks[block];
+        for op in &b.ops {
+            match op {
+                Op::Assign { dst, src } => {
+                    let v = expr::eval(src, &|v| env[v.index()]);
+                    env[dst.index()] = v.coerce(func.vars[*dst].ty);
+                }
+                Op::Load { dst, arr, index, .. } => {
+                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                    env[dst.index()] = shared.memory.load(*arr, idx)?;
+                }
+                Op::Store { arr, index, value } => {
+                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                    let val = expr::eval(value, &|v| env[v.index()]);
+                    shared.memory.store(*arr, idx, val)?;
+                }
+                Op::AtomicAdd { arr, index, value } => {
+                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                    let val = expr::eval(value, &|v| env[v.index()]);
+                    shared.memory.atomic_add(*arr, idx, val)?;
+                }
+                Op::Call { dst, callee, args } => {
+                    let vals: Vec<Value> =
+                        args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
+                    let r = eval_leaf(shared, *callee, &vals)?;
+                    if let Some(d) = dst {
+                        env[d.index()] = r.coerce(func.vars[*d].ty);
+                    }
+                }
+                Op::MakeClosure { dst, task } => {
+                    stats.closures_made += 1;
+                    let t = &module.funcs[*task];
+                    let slot_tys: Vec<_> = t.param_ids().map(|p| t.vars[p].ty).collect();
+                    let clos =
+                        Arc::new(SharedClosure::new(*task, slot_tys, inst.cont.clone()));
+                    let handle = shared.registry.insert(clos.clone(), wid);
+                    clos.handle.store(handle, Ordering::Relaxed);
+                    env[dst.index()] = Value::I64(handle);
+                }
+                Op::ClosureStore { clos, field, value } => {
+                    let h = env[clos.index()].as_i64();
+                    let val = expr::eval(value, &|v| env[v.index()]);
+                    shared.registry.get(h).fill(*field, val);
+                }
+                Op::SpawnChild { callee, args, ret } => {
+                    let vals: Vec<Value> =
+                        args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
+                    let cont = match ret {
+                        RetTarget::Slot { clos, field } => {
+                            let c = shared.registry.get(env[clos.index()].as_i64());
+                            c.hold();
+                            Cont::Slot { clos: c, slot: *field }
+                        }
+                        RetTarget::Counter { clos } => {
+                            let c = shared.registry.get(env[clos.index()].as_i64());
+                            c.hold();
+                            Cont::Counter { clos: c }
+                        }
+                        RetTarget::Forward => inst.cont.clone(),
+                    };
+                    shared.pending.fetch_add(1, Ordering::AcqRel);
+                    if module.funcs[*callee].kind == FuncKind::Xla {
+                        shared.xla_queue.lock().unwrap().push((*callee, vals, cont));
+                        shared.idle_cv.notify_one();
+                    } else {
+                        push_task(wid, shared, WsTask { task: *callee, args: vals, cont });
+                    }
+                }
+                Op::CloseSpawns { clos } => {
+                    let c = shared.registry.get(env[clos.index()].as_i64());
+                    if c.release() {
+                        fire(wid, shared, &c);
+                    }
+                }
+                Op::SendArgument { value } => {
+                    let v = match value {
+                        Some(e) => expr::eval(e, &|v| env[v.index()]).coerce(func.ret),
+                        None => Value::Unit,
+                    };
+                    deliver(wid, shared, inst.cont.clone(), v)?;
+                }
+                Op::Spawn { .. } => bail!("implicit Spawn in explicit IR"),
+            }
+        }
+        match &b.term {
+            Term::Jump(next) => block = *next,
+            Term::Branch { cond, then_, else_ } => {
+                let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
+                block = if c { *then_ } else { *else_ };
+            }
+            Term::Halt => return Ok(()),
+            other => bail!("non-explicit terminator {other:?} in task `{}`", func.name),
+        }
+    }
+}
+
+fn eval_leaf(shared: &Shared<'_>, fid: FuncId, args: &[Value]) -> Result<Value> {
+    let func = &shared.module.funcs[fid];
+    if func.kind != FuncKind::Leaf {
+        bail!("sequential call to non-leaf `{}`", func.name);
+    }
+    let cfg = func.cfg();
+    let mut env: Vec<Value> = func.vars.values().map(|v| Value::zero_of(v.ty)).collect();
+    for (i, a) in args.iter().enumerate() {
+        env[i] = a.coerce(func.vars[VarId::new(i)].ty);
+    }
+    let mut block = cfg.entry;
+    let mut steps = 0u64;
+    loop {
+        steps += 1;
+        if steps > 100_000_000 {
+            bail!("leaf `{}` exceeded step limit", func.name);
+        }
+        let b = &cfg.blocks[block];
+        for op in &b.ops {
+            match op {
+                Op::Assign { dst, src } => {
+                    let v = expr::eval(src, &|v| env[v.index()]);
+                    env[dst.index()] = v.coerce(func.vars[*dst].ty);
+                }
+                Op::Load { dst, arr, index, .. } => {
+                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                    env[dst.index()] = shared.memory.load(*arr, idx)?;
+                }
+                Op::Store { arr, index, value } => {
+                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                    let val = expr::eval(value, &|v| env[v.index()]);
+                    shared.memory.store(*arr, idx, val)?;
+                }
+                Op::AtomicAdd { arr, index, value } => {
+                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                    let val = expr::eval(value, &|v| env[v.index()]);
+                    shared.memory.atomic_add(*arr, idx, val)?;
+                }
+                Op::Call { dst, callee, args } => {
+                    let vals: Vec<Value> =
+                        args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
+                    let r = eval_leaf(shared, *callee, &vals)?;
+                    if let Some(d) = dst {
+                        env[d.index()] = r.coerce(func.vars[*d].ty);
+                    }
+                }
+                other => bail!("op {other:?} not allowed in leaf `{}`", func.name),
+            }
+        }
+        match &b.term {
+            Term::Jump(next) => block = *next,
+            Term::Branch { cond, then_, else_ } => {
+                let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
+                block = if c { *then_ } else { *else_ };
+            }
+            Term::Return(value) => {
+                return Ok(match value {
+                    Some(e) => expr::eval(e, &|v| env[v.index()]).coerce(func.ret),
+                    None => Value::Unit,
+                })
+            }
+            other => bail!("terminator {other:?} not allowed in leaf `{}`", func.name),
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Integration tests for the HardCilk backend: generated C++ sanity and
+//! descriptor consistency across all workloads.
+
+use bombyx::backend::hardcilk;
+use bombyx::lower::{compile, CompileOptions};
+use bombyx::util::json;
+use bombyx::workloads::{bfs, fib, nqueens, qsort, relax};
+
+const ALL: &[(&str, &str)] = &[
+    ("fib", fib::FIB_SRC),
+    ("bfs", bfs::BFS_SRC),
+    ("bfs_dae", bfs::BFS_DAE_SRC),
+    ("nqueens", nqueens::NQUEENS_SRC),
+    ("qsort", qsort::QSORT_SRC),
+    ("relax", relax::RELAX_SRC),
+];
+
+#[test]
+fn all_workloads_generate_hardcilk_systems() {
+    for (name, src) in ALL {
+        let r = compile(name, src, &CompileOptions::standard()).unwrap();
+        let sys = hardcilk::generate(&r.explicit, name).unwrap();
+        assert!(!sys.pes.is_empty(), "{name}");
+        // Every PE file mentions its stream protocol and no gotos.
+        for (task, file, cpp) in &sys.pes {
+            assert!(!cpp.contains("goto "), "{name}/{file}: Vitis rejects goto\n{cpp}");
+            assert!(
+                cpp.contains("task_in") || cpp.contains("BLACKBOX"),
+                "{name}/{task}"
+            );
+        }
+        // Descriptor parses back and task count matches PE count.
+        let text = sys.descriptor.pretty();
+        let parsed = json::parse(&text).unwrap();
+        let tasks = parsed.get("tasks").unwrap().as_array().unwrap();
+        assert_eq!(tasks.len(), sys.pes.len(), "{name}");
+    }
+}
+
+#[test]
+fn descriptor_spawn_edges_reference_existing_tasks() {
+    for (name, src) in ALL {
+        let r = compile(name, src, &CompileOptions::standard()).unwrap();
+        let sys = hardcilk::generate(&r.explicit, name).unwrap();
+        let tasks = sys.descriptor.get("tasks").unwrap().as_array().unwrap().to_vec();
+        let names: Vec<&str> =
+            tasks.iter().filter_map(|t| t.get("name").unwrap().as_str()).collect();
+        for t in &tasks {
+            for list in ["spawns", "spawn_nexts", "send_argument_to"] {
+                for target in t.get(list).unwrap().as_array().unwrap() {
+                    let target = target.as_str().unwrap();
+                    assert!(
+                        names.contains(&target),
+                        "{name}: `{}` {list} unknown task `{target}`",
+                        t.get("name").unwrap().as_str().unwrap()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn closure_bits_in_descriptor_are_pow2() {
+    for (name, src) in ALL {
+        let r = compile(name, src, &CompileOptions::standard()).unwrap();
+        let sys = hardcilk::generate(&r.explicit, name).unwrap();
+        for t in sys.descriptor.get("tasks").unwrap().as_array().unwrap() {
+            let bits = t.get("closure_bits").unwrap().as_i64().unwrap();
+            assert!((bits as u64).is_power_of_two(), "{name}: {bits}");
+            let payload = t.get("closure_payload_bits").unwrap().as_i64().unwrap();
+            assert!(payload <= bits, "{name}");
+        }
+    }
+}
+
+#[test]
+fn generated_header_is_self_consistent() {
+    let r = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let sys = hardcilk::generate(&r.explicit, "fib").unwrap();
+    // Every closure struct referenced through a stream port exists in the
+    // header.
+    for (_, file, cpp) in &sys.pes {
+        for line in cpp.lines() {
+            if let Some(start) = line.find("hls::stream<closure_") {
+                let rest = &line[start + "hls::stream<".len()..];
+                let name: String = rest
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                assert!(
+                    sys.header.contains(&format!("struct {name}")),
+                    "{file}: missing struct {name}"
+                );
+            }
+        }
+    }
+}

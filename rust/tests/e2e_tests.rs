@@ -1,0 +1,87 @@
+//! End-to-end tests over the full three-layer stack: compiled Cilk-C with
+//! an `extern xla` datapath, executed with the AOT Pallas/XLA artifact on
+//! the simulator and the WS runtime. Skipped (with a notice) when
+//! artifacts are not built.
+
+use bombyx::coordinator::driver::{run_relax_scalar, run_relax_sim};
+use bombyx::ir::Value;
+use bombyx::lower::{compile, CompileOptions};
+use bombyx::runtime::{RelaxService, XlaRuntime};
+use bombyx::sim::SimConfig;
+use bombyx::workloads::{graphgen, relax};
+use bombyx::ws::{self, WsConfig, XlaSink};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+fn have_artifacts() -> bool {
+    XlaRuntime::load_dir(artifacts_dir()).is_ok()
+}
+
+#[test]
+fn relax_sim_xla_matches_scalar_end_to_end() {
+    if !have_artifacts() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let graph = graphgen::tree(3, 5); // 121 nodes
+    let cfg = SimConfig::default();
+    let runtime = XlaRuntime::load_dir(artifacts_dir()).unwrap();
+    let xla = run_relax_sim(runtime, &graph, 7, &cfg).unwrap();
+    let scalar = run_relax_scalar(&graph, 7, &cfg).unwrap();
+    assert_eq!(xla.nodes_expanded, scalar.nodes_expanded);
+    let rel = (xla.feat_checksum - scalar.feat_checksum).abs()
+        / scalar.feat_checksum.abs().max(1e-9);
+    assert!(rel < 1e-3, "checksum drift {rel}");
+    assert!(xla.xla_batches >= 1);
+}
+
+#[test]
+fn relax_ws_runtime_with_service_thread() {
+    if !have_artifacts() {
+        return;
+    }
+    let r = compile("relax", relax::RELAX_SRC, &CompileOptions::no_dae()).unwrap();
+    let m = &r.explicit;
+    let graph = graphgen::tree(4, 4); // 85 nodes
+    let mut seq = bombyx::interp::Memory::new(m);
+    relax::init_memory(m, &mut seq, &graph, 5).unwrap();
+    let mem = bombyx::backend::emu::shared_from(m, &seq);
+    let svc = RelaxService::start(artifacts_dir(), m, 5).unwrap();
+    let cfg = WsConfig { workers: 4, steal_tries: 4 };
+    let (v, mem, stats) =
+        ws::run(m, mem, "expand", &[Value::I64(0)], &cfg, Box::new(svc)).unwrap();
+    assert_eq!(v, Value::Unit);
+    assert!(stats.xla_tasks >= 1, "xla tasks batched: {stats:?}");
+    let work = mem.dump_i64(m.global_by_name("work_done").unwrap())[0];
+    assert!(work >= 1, "at least the root must be expanded");
+    // Every visited node did exactly one relax.
+    let visited: i64 = mem.dump_i64(m.global_by_name("visited").unwrap()).iter().sum();
+    assert_eq!(work, visited);
+}
+
+#[test]
+fn relax_service_rejects_unknown_task() {
+    if !have_artifacts() {
+        return;
+    }
+    let r = compile("relax", relax::RELAX_SRC, &CompileOptions::no_dae()).unwrap();
+    let svc = RelaxService::start(artifacts_dir(), &r.explicit, 1).unwrap();
+    let mem = ws::SharedMemory::new(&r.explicit);
+    let err = svc.exec_batch("other", &[vec![Value::I64(0)]], &mem).unwrap_err();
+    assert!(err.to_string().contains("only implements"));
+}
+
+#[test]
+fn headline_quickstart_binary_paths_compile() {
+    // Compile the on-disk example programs end to end (covers the repo's
+    // examples/cilk/*.cilk against the library API the examples use).
+    for file in ["fib.cilk", "bfs.cilk", "bfs_dae.cilk", "nqueens.cilk", "relax.cilk"] {
+        let path =
+            std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/examples/cilk")).join(file);
+        let src = std::fs::read_to_string(&path).unwrap();
+        compile(file, &src, &CompileOptions::standard())
+            .unwrap_or_else(|e| panic!("{file}: {e:#}"));
+    }
+}

@@ -1,0 +1,58 @@
+//! Integration tests: frontend behaviour over whole example files.
+
+use bombyx::frontend::parse_and_check;
+use bombyx::workloads::{bfs, fib, nqueens, qsort, relax};
+
+#[test]
+fn all_bundled_workloads_parse_and_check() {
+    for (name, src) in [
+        ("fib", fib::FIB_SRC),
+        ("bfs", bfs::BFS_SRC),
+        ("bfs_dae", bfs::BFS_DAE_SRC),
+        ("nqueens", nqueens::NQUEENS_SRC),
+        ("qsort", qsort::QSORT_SRC),
+        ("relax", relax::RELAX_SRC),
+    ] {
+        parse_and_check(name, src).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+    }
+}
+
+#[test]
+fn example_cilk_files_parse() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/cilk");
+    let mut count = 0;
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) == Some("cilk") {
+            let src = std::fs::read_to_string(&path).unwrap();
+            parse_and_check(path.to_str().unwrap(), &src)
+                .unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+            count += 1;
+        }
+    }
+    assert!(count >= 5, "expected at least 5 example programs, found {count}");
+}
+
+#[test]
+fn diagnostics_carry_location() {
+    let err = parse_and_check("t.cilk", "int f(int n) {\n  return m;\n}").unwrap_err();
+    let text = format!("{err:#}");
+    assert!(text.contains("t.cilk:2"), "{text}");
+    assert!(text.contains("unknown variable"), "{text}");
+}
+
+#[test]
+fn error_recovery_is_not_required_first_error_reported() {
+    let err = parse_and_check("t", "int f(int n) { return n + ; }").unwrap_err();
+    assert!(format!("{err:#}").contains("expected an expression"));
+}
+
+#[test]
+fn deeply_nested_expressions_do_not_overflow() {
+    let mut expr = String::from("n");
+    for _ in 0..200 {
+        expr = format!("({expr} + 1)");
+    }
+    let src = format!("int f(int n) {{ return {expr}; }}");
+    parse_and_check("deep", &src).unwrap();
+}

@@ -1,0 +1,93 @@
+//! Integration tests: the compile pipeline on the full workloads —
+//! verifier cleanliness, task/path structure, closure layout rules.
+
+use bombyx::ir::explicit::{closure_layout, explicit_tasks, MIN_CLOSURE_BITS};
+use bombyx::ir::verify::{verify_module, Stage};
+use bombyx::ir::TaskRole;
+use bombyx::lower::{compile, CompileOptions};
+use bombyx::workloads::{bfs, fib, nqueens, qsort, relax};
+
+const ALL: &[(&str, &str)] = &[
+    ("fib", fib::FIB_SRC),
+    ("bfs", bfs::BFS_SRC),
+    ("bfs_dae", bfs::BFS_DAE_SRC),
+    ("nqueens", nqueens::NQUEENS_SRC),
+    ("qsort", qsort::QSORT_SRC),
+    ("relax", relax::RELAX_SRC),
+];
+
+#[test]
+fn every_workload_compiles_clean_through_both_stages() {
+    for (name, src) in ALL {
+        for opts in [CompileOptions::no_dae(), CompileOptions::standard()] {
+            let r = compile(name, src, &opts).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert!(verify_module(&r.implicit, Stage::Implicit).is_empty(), "{name}");
+            assert!(verify_module(&r.implicit_dae, Stage::Implicit).is_empty(), "{name}");
+            assert!(verify_module(&r.explicit, Stage::Explicit).is_empty(), "{name}");
+        }
+    }
+}
+
+#[test]
+fn closure_layouts_respect_hardware_rules() {
+    for (name, src) in ALL {
+        let r = compile(name, src, &CompileOptions::standard()).unwrap();
+        for fid in explicit_tasks(&r.explicit) {
+            let f = &r.explicit.funcs[fid];
+            let l = closure_layout(f);
+            assert!(l.padded_bits.is_power_of_two(), "{name}/{}", f.name);
+            assert!(l.padded_bits >= MIN_CLOSURE_BITS, "{name}/{}", f.name);
+            assert!(l.payload_bits <= l.padded_bits, "{name}/{}", f.name);
+            // Fields are in-bounds, non-overlapping, 32-bit aligned.
+            let mut last_end = 0;
+            for field in &l.fields {
+                assert_eq!(field.offset_bits % 32, 0, "{name}/{}", f.name);
+                assert!(field.offset_bits >= last_end, "{name}/{}", f.name);
+                last_end = field.offset_bits + field.width_bits;
+            }
+            assert!(last_end <= l.cont_offset_bits, "{name}/{}", f.name);
+        }
+    }
+}
+
+#[test]
+fn dae_produces_the_paper_pe_trio() {
+    let r = compile("bfs", bfs::BFS_DAE_SRC, &CompileOptions::standard()).unwrap();
+    let roles: Vec<(String, TaskRole)> = explicit_tasks(&r.explicit)
+        .into_iter()
+        .map(|fid| {
+            let f = &r.explicit.funcs[fid];
+            (f.name.clone(), f.task.as_ref().unwrap().role)
+        })
+        .collect();
+    let count = |role: TaskRole| roles.iter().filter(|(_, r)| *r == role).count();
+    assert_eq!(count(TaskRole::Entry), 1, "{roles:?}"); // spawner
+    assert_eq!(count(TaskRole::Access), 1, "{roles:?}"); // access PE
+    assert!(count(TaskRole::Continuation) >= 2, "{roles:?}"); // executor + notifier
+}
+
+#[test]
+fn non_dae_compilation_ignores_pragma() {
+    let with = compile("bfs", bfs::BFS_DAE_SRC, &CompileOptions::no_dae()).unwrap();
+    let without = compile("bfs", bfs::BFS_SRC, &CompileOptions::no_dae()).unwrap();
+    assert_eq!(
+        explicit_tasks(&with.explicit).len(),
+        explicit_tasks(&without.explicit).len(),
+        "pragma must be inert when DAE is off"
+    );
+}
+
+#[test]
+fn task_names_are_unique_and_stable() {
+    let r = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let names: Vec<String> =
+        r.explicit.funcs.values().map(|f| f.name.clone()).collect();
+    let mut dedup = names.clone();
+    dedup.sort();
+    dedup.dedup();
+    assert_eq!(dedup.len(), names.len(), "{names:?}");
+    // Recompiling yields the same names in the same order.
+    let r2 = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let names2: Vec<String> = r2.explicit.funcs.values().map(|f| f.name.clone()).collect();
+    assert_eq!(names, names2);
+}

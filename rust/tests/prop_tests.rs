@@ -1,0 +1,191 @@
+//! Property-based tests (mini harness from `util::prop`): random workloads
+//! and parameters through the full stack, checking the invariants DESIGN.md
+//! §6 calls out.
+
+use bombyx::interp::explicit_exec::{ExplicitExec, Order};
+use bombyx::interp::{oracle, Memory, NoXla};
+use bombyx::ir::explicit::closure_layout;
+use bombyx::ir::{Module, Value};
+use bombyx::lower::{compile, CompileOptions};
+use bombyx::prop_assert;
+use bombyx::sim::{simulate, NoSimXla, SimConfig};
+use bombyx::util::prop::prop_check;
+use bombyx::workloads::{bfs, graphgen, qsort};
+
+#[test]
+fn prop_random_dags_bfs_all_engines_agree() {
+    let plain = compile("bfs", bfs::BFS_SRC, &CompileOptions::no_dae()).unwrap();
+    let dae = compile("bfs", bfs::BFS_DAE_SRC, &CompileOptions::standard()).unwrap();
+    prop_check("bfs dag equivalence", 25, |g| {
+        let nodes = g.usize_in(2, 120);
+        let seed = g.u64_below(1 << 40);
+        // Trees only: sim functional reads are dispatch-time (DESIGN.md),
+        // so shared children could legally be visited twice under racy
+        // schedules. Trees are the paper's dataset and race-free.
+        let depth = g.usize_in(1, 5) as u32;
+        let branch = g.usize_in(1, 4) as u64;
+        let _ = nodes;
+        let graph = graphgen::tree(branch, depth);
+        let _ = seed;
+
+        let mut visiteds = Vec::new();
+        for r in [&plain, &dae] {
+            let m = &r.explicit;
+            let mut mem = Memory::new(m);
+            bfs::init_memory(m, &mut mem, &graph).map_err(|e| e.to_string())?;
+            let (_, mem, _) = simulate(
+                m,
+                mem,
+                "visit",
+                &[Value::I64(0)],
+                &SimConfig::default(),
+                &mut NoSimXla,
+            )
+            .map_err(|e| e.to_string())?;
+            visiteds.push(mem.dump_i64(m.global_by_name("visited").unwrap()));
+        }
+        prop_assert!(
+            visiteds[0] == visiteds[1],
+            "DAE changed traversal on tree B={branch} D={depth}"
+        );
+        prop_assert!(
+            visiteds[0].iter().all(|&v| v == 1),
+            "unvisited nodes on tree B={branch} D={depth}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qsort_random_arrays_explicit_machine() {
+    let r = compile("qs", qsort::QSORT_SRC, &CompileOptions::no_dae()).unwrap();
+    prop_check("qsort sorts", 40, |g| {
+        let len = g.usize_in(1, 200);
+        let input: Vec<i64> = (0..len).map(|_| g.i64_in(-1000, 1000)).collect();
+        let mut mem = Memory::new(&r.explicit);
+        mem.fill_i64(r.explicit.global_by_name("data").unwrap(), &input);
+        let mut ex = ExplicitExec::new(&r.explicit, mem, NoXla);
+        ex.order = if g.bool() { Order::Lifo } else { Order::Fifo };
+        ex.run("qsort_", &[Value::I64(0), Value::I64(len as i64 - 1)])
+            .map_err(|e| e.to_string())?;
+        let mut expect = input.clone();
+        expect.sort();
+        let got = ex.memory.dump_i64(r.explicit.global_by_name("data").unwrap());
+        prop_assert!(got == expect, "len {len}: {got:?} != {expect:?}");
+        prop_assert!(ex.live_closures() == 0, "closure leak");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_fib_like_programs_compile_and_agree() {
+    // Generate tiny random spawn/sync programs with a parametric shape:
+    // f(n) spawns g(n-1) a..b times (void) and accumulates via memory.
+    prop_check("random spawn programs", 30, |g| {
+        let spawns = g.usize_in(1, 3);
+        let depth_bound = g.usize_in(1, 6);
+        let weight = g.i64_in(1, 5);
+        let spawn_lines: String = (0..spawns)
+            .map(|_| "    cilk_spawn f(n - 1);\n".to_string())
+            .collect();
+        let src = format!(
+            "global int acc[1];
+             void f(int n) {{
+                 if (n <= 0) {{
+                     atomic_add(acc, 0, {weight});
+                     return;
+                 }}
+                 {spawn_lines}
+                 cilk_sync;
+             }}"
+        );
+        let r = compile("gen", &src, &CompileOptions::no_dae()).map_err(|e| e.to_string())?;
+
+        let run_oracle_val = |m: &Module| -> Result<i64, String> {
+            let (_, mem) = oracle::run_oracle(
+                &r.implicit,
+                Memory::new(m),
+                "f",
+                &[Value::I64(depth_bound as i64)],
+            )
+            .map_err(|e| e.to_string())?;
+            Ok(mem.dump_i64(m.global_by_name("acc").unwrap())[0])
+        };
+        let expected = run_oracle_val(&r.implicit)?;
+        // leaves = spawns^depth, each adds `weight`.
+        let leaves = (spawns as i64).pow(depth_bound as u32);
+        prop_assert!(
+            expected == leaves * weight,
+            "oracle {expected} != closed form {}",
+            leaves * weight
+        );
+
+        let mut ex = ExplicitExec::new(&r.explicit, Memory::new(&r.explicit), NoXla);
+        ex.run("f", &[Value::I64(depth_bound as i64)]).map_err(|e| e.to_string())?;
+        let got = ex.memory.dump_i64(r.explicit.global_by_name("acc").unwrap())[0];
+        prop_assert!(got == expected, "explicit {got} != oracle {expected}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_closure_layouts_always_legal() {
+    // Random signatures → layout invariants (alignment, bounds, pow2).
+    use bombyx::frontend::ast::Type;
+    use bombyx::ir::cfg::{Func, FuncKind};
+    use bombyx::ir::expr::Var;
+    use bombyx::util::idvec::IdVec;
+    prop_check("closure layout legal", 200, |g| {
+        let nparams = g.usize_in(0, 12);
+        let mut vars = IdVec::new();
+        for i in 0..nparams {
+            let ty = *g.pick(&[Type::Int, Type::Float, Type::Bool]);
+            vars.push(Var { name: format!("p{i}"), ty, is_param: true, is_temp: false });
+        }
+        let f = Func {
+            name: "t".into(),
+            ret: Type::Int,
+            params: nparams,
+            vars,
+            body: None,
+            kind: FuncKind::Task,
+            task: None,
+        };
+        let l = closure_layout(&f);
+        prop_assert!(l.padded_bits.is_power_of_two(), "pow2: {}", l.padded_bits);
+        prop_assert!(l.payload_bits <= l.padded_bits, "payload fits");
+        prop_assert!(l.cont_offset_bits % 64 == 0, "cont aligned");
+        for w in l.fields.windows(2) {
+            prop_assert!(
+                w[0].offset_bits + w[0].width_bits <= w[1].offset_bits,
+                "fields overlap"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_cycles_deterministic_across_configs() {
+    let r = compile("bfs", bfs::BFS_SRC, &CompileOptions::no_dae()).unwrap();
+    prop_check("sim determinism", 10, |g| {
+        let depth = g.usize_in(2, 5) as u32;
+        let graph = graphgen::tree(3, depth);
+        let mut cfg = SimConfig::default();
+        cfg.mem_latency = g.usize_in(5, 200) as u32;
+        cfg.default_pes = g.usize_in(1, 8) as u32;
+        let run = || -> Result<u64, String> {
+            let m = &r.explicit;
+            let mut mem = Memory::new(m);
+            bfs::init_memory(m, &mut mem, &graph).map_err(|e| e.to_string())?;
+            Ok(simulate(m, mem, "visit", &[Value::I64(0)], &cfg, &mut NoSimXla)
+                .map_err(|e| e.to_string())?
+                .2
+                .cycles)
+        };
+        let a = run()?;
+        let b = run()?;
+        prop_assert!(a == b, "nondeterministic: {a} vs {b}");
+        Ok(())
+    });
+}

@@ -1,0 +1,136 @@
+//! Differential semantics: every workload must produce identical results
+//! on (1) the sequential oracle over the implicit IR, (2) the explicit-IR
+//! abstract machine, (3) the multithreaded WS runtime, and (4) the cycle
+//! simulator — with and without DAE.
+
+use bombyx::backend::emu;
+use bombyx::interp::explicit_exec::{ExplicitExec, Order};
+use bombyx::interp::{oracle, Memory, NoXla};
+use bombyx::ir::{Module, Value};
+use bombyx::lower::{compile, CompileOptions, CompileResult};
+use bombyx::sim::{simulate, NoSimXla, SimConfig};
+use bombyx::workloads::{bfs, fib, graphgen, nqueens, qsort};
+
+/// Run one program on all four engines and check agreement of the result
+/// value and of every global array image.
+fn check_all_engines(
+    r: &CompileResult,
+    entry: &str,
+    args: &[Value],
+    init: impl Fn(&Module, &mut Memory),
+) -> Value {
+    // 1. Oracle.
+    let mut mem = Memory::new(&r.implicit);
+    init(&r.implicit, &mut mem);
+    let (v_oracle, mem_oracle) =
+        oracle::run_oracle(&r.implicit, mem, entry, args).expect("oracle");
+
+    // 2. Explicit machine (both queue orders).
+    for order in [Order::Lifo, Order::Fifo] {
+        let mut mem = Memory::new(&r.explicit);
+        init(&r.explicit, &mut mem);
+        let mut ex = ExplicitExec::new(&r.explicit, mem, NoXla);
+        ex.order = order;
+        let v = ex.run(entry, args).expect("explicit");
+        assert_eq!(norm(v), norm(v_oracle), "explicit {order:?}");
+        assert_eq!(ex.live_closures(), 0, "closure leak ({order:?})");
+        compare_memory(&r.implicit, &mem_oracle, &r.explicit, &ex.memory);
+    }
+
+    // 3. WS runtime.
+    emu::check_equivalence(
+        r,
+        entry,
+        args,
+        |m, mem| {
+            init(m, mem);
+            Ok(())
+        },
+        4,
+    )
+    .expect("ws equivalence");
+
+    // 4. Simulator.
+    let mut mem = Memory::new(&r.explicit);
+    init(&r.explicit, &mut mem);
+    let (v_sim, mem_sim, _) =
+        simulate(&r.explicit, mem, entry, args, &SimConfig::default(), &mut NoSimXla)
+            .expect("sim");
+    assert_eq!(norm(v_sim), norm(v_oracle), "sim");
+    compare_memory(&r.implicit, &mem_oracle, &r.explicit, &mem_sim);
+
+    v_oracle
+}
+
+fn norm(v: Value) -> i64 {
+    v.as_i64()
+}
+
+fn compare_memory(ma: &Module, a: &Memory, mb: &Module, b: &Memory) {
+    for (gid, g) in ma.globals.iter() {
+        let other = mb.global_by_name(&g.name).expect("global preserved");
+        assert_eq!(a.dump_i64(gid), b.dump_i64(other), "global `{}`", g.name);
+    }
+}
+
+#[test]
+fn fib_all_engines() {
+    let r = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let v = check_all_engines(&r, "fib", &[Value::I64(16)], |_, _| {});
+    assert_eq!(v.as_i64(), fib::fib_ref(16) as i64);
+}
+
+#[test]
+fn bfs_all_engines_with_and_without_dae() {
+    let g = graphgen::tree(3, 5);
+    for (src, opts) in [
+        (bfs::BFS_SRC, CompileOptions::no_dae()),
+        (bfs::BFS_DAE_SRC, CompileOptions::standard()),
+    ] {
+        let r = compile("bfs", src, &opts).unwrap();
+        check_all_engines(&r, "visit", &[Value::I64(0)], |m, mem| {
+            bfs::init_memory(m, mem, &g).unwrap();
+        });
+    }
+}
+
+#[test]
+fn nqueens_all_engines() {
+    let r = compile("nq", nqueens::NQUEENS_SRC, &CompileOptions::no_dae()).unwrap();
+    let args: Vec<Value> = [6i64, 0, 0, 0, 0].iter().map(|&v| Value::I64(v)).collect();
+    check_all_engines(&r, "place", &args, |_, _| {});
+}
+
+#[test]
+fn qsort_all_engines() {
+    let r = compile("qs", qsort::QSORT_SRC, &CompileOptions::no_dae()).unwrap();
+    let input: Vec<i64> = (0..64).map(|i| ((i * 37 + 11) % 100) - 50).collect();
+    check_all_engines(
+        &r,
+        "qsort_",
+        &[Value::I64(0), Value::I64(63)],
+        |m, mem| {
+            mem.fill_i64(m.global_by_name("data").unwrap(), &input);
+        },
+    );
+}
+
+#[test]
+fn paper_tree_small_visits_everything_on_sim() {
+    let g = graphgen::paper_tree_small();
+    let r = compile("bfs", bfs::BFS_DAE_SRC, &CompileOptions::standard()).unwrap();
+    let mut mem = Memory::new(&r.explicit);
+    bfs::init_memory(&r.explicit, &mut mem, &g).unwrap();
+    let (_, mem, stats) = simulate(
+        &r.explicit,
+        mem,
+        "visit",
+        &[Value::I64(0)],
+        &SimConfig::paper(),
+        &mut NoSimXla,
+    )
+    .unwrap();
+    bfs::check_all_visited(&r.explicit, &mem, &g).unwrap();
+    // 5,461 nodes → 5,461 visit tasks.
+    assert_eq!(stats.task("visit").unwrap().executed, 5_461);
+}

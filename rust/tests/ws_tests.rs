@@ -1,0 +1,101 @@
+//! WS-runtime integration: stress, scaling sanity, and failure injection.
+
+use bombyx::ir::Value;
+use bombyx::lower::{compile, CompileOptions};
+use bombyx::workloads::{fib, nqueens};
+use bombyx::ws::{self, NoXlaSink, ScalarSink, SharedMemory, WsConfig, XlaSink};
+
+#[test]
+fn stress_fib22_across_worker_counts() {
+    let r = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    for workers in [1, 3, 8, 16] {
+        let cfg = WsConfig { workers, steal_tries: 2 };
+        let mem = SharedMemory::new(&r.explicit);
+        let (v, _, stats) =
+            ws::run(&r.explicit, mem, "fib", &[Value::I64(22)], &cfg, Box::new(NoXlaSink))
+                .unwrap();
+        assert_eq!(v.as_i64(), fib::fib_ref(22) as i64, "workers={workers}");
+        assert!(stats.tasks_run > 50_000);
+    }
+}
+
+#[test]
+fn nqueens_8_parallel() {
+    let r = compile("nq", nqueens::NQUEENS_SRC, &CompileOptions::no_dae()).unwrap();
+    let args: Vec<Value> = [8i64, 0, 0, 0, 0].iter().map(|&v| Value::I64(v)).collect();
+    let cfg = WsConfig { workers: 8, steal_tries: 4 };
+    let mem = SharedMemory::new(&r.explicit);
+    let (_, mem, _) = ws::run(&r.explicit, mem, "place", &args, &cfg, Box::new(NoXlaSink)).unwrap();
+    assert_eq!(
+        mem.dump_i64(r.explicit.global_by_name("solutions").unwrap())[0] as u64,
+        nqueens::nqueens_ref(8)
+    );
+}
+
+#[test]
+fn repeated_runs_are_stable() {
+    // 20 consecutive runs shake out races in the closure protocol.
+    let r = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let cfg = WsConfig { workers: 8, steal_tries: 4 };
+    for i in 0..20 {
+        let mem = SharedMemory::new(&r.explicit);
+        let (v, _, _) =
+            ws::run(&r.explicit, mem, "fib", &[Value::I64(15)], &cfg, Box::new(NoXlaSink))
+                .unwrap();
+        assert_eq!(v.as_i64(), 610, "iteration {i}");
+    }
+}
+
+#[test]
+fn failure_injection_xla_sink_error_propagates() {
+    let src = "extern xla int relax(int n);
+        int f(int n) { int r = cilk_spawn relax(n); cilk_sync; return r; }";
+    let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+    let sink = ScalarSink(|_: &str, _: &[Value], _: &SharedMemory| {
+        anyhow::bail!("injected datapath failure")
+    });
+    let cfg = WsConfig { workers: 4, steal_tries: 4 };
+    let mem = SharedMemory::new(&r.explicit);
+    let err =
+        ws::run(&r.explicit, mem, "f", &[Value::I64(1)], &cfg, Box::new(sink)).unwrap_err();
+    assert!(err.to_string().contains("injected"), "{err}");
+}
+
+#[test]
+fn failure_injection_wrong_result_arity() {
+    struct BadSink;
+    impl XlaSink for BadSink {
+        fn exec_batch(
+            &self,
+            _n: &str,
+            _b: &[Vec<Value>],
+            _m: &SharedMemory,
+        ) -> anyhow::Result<Vec<Value>> {
+            Ok(vec![]) // wrong arity
+        }
+    }
+    let src = "extern xla int relax(int n);
+        int f(int n) { int r = cilk_spawn relax(n); cilk_sync; return r; }";
+    let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+    let cfg = WsConfig { workers: 2, steal_tries: 4 };
+    let mem = SharedMemory::new(&r.explicit);
+    let err =
+        ws::run(&r.explicit, mem, "f", &[Value::I64(1)], &cfg, Box::new(BadSink)).unwrap_err();
+    assert!(err.to_string().contains("results"), "{err}");
+}
+
+#[test]
+fn unknown_entry_task_is_an_error() {
+    let r = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let mem = SharedMemory::new(&r.explicit);
+    let err = ws::run(
+        &r.explicit,
+        mem,
+        "nonexistent",
+        &[],
+        &WsConfig { workers: 2, steal_tries: 2 },
+        Box::new(NoXlaSink),
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("no task named"));
+}
