@@ -1,6 +1,8 @@
 //! The paper's §III experiment end to end: BFS over the synthetic trees
 //! (B=4, D=7 and D=9), DAE vs non-DAE, on the HardCilk simulator — plus
-//! the Fig. 6 resource table.
+//! the Fig. 6 resource table. Both program variants are compiled exactly
+//! once (`BfsExperiment` holds one `CompileSession` each); the runtime
+//! comparison and the resource estimator share those cached modules.
 //!
 //! ```sh
 //! cargo run --release --example bfs_dae
@@ -8,22 +10,22 @@
 
 use anyhow::Result;
 
-use bombyx::coordinator::run_bfs_comparison;
+use bombyx::coordinator::BfsExperiment;
 use bombyx::hls::{estimate, CostModel};
-use bombyx::lower::{compile, CompileOptions};
 use bombyx::sim::SimConfig;
 use bombyx::util::table::{commas, Table};
-use bombyx::workloads::{bfs, graphgen};
+use bombyx::workloads::graphgen;
 
 fn main() -> Result<()> {
     let cfg = SimConfig::paper();
+    let exp = BfsExperiment::new()?;
 
     println!("== Paper §III: DAE vs non-DAE runtime (HardCilk sim, 1 PE/type) ==");
     let mut table = Table::new(["graph", "nodes", "non-DAE cycles", "DAE cycles", "reduction"]);
     let mut reductions = Vec::new();
     for (label, depth) in [("B=4 D=7", 7u32), ("B=4 D=9", 9u32)] {
         let graph = graphgen::tree(4, depth);
-        let cmp = run_bfs_comparison(&graph, &cfg)?;
+        let cmp = exp.run(&graph, &cfg)?;
         reductions.push(cmp.reduction());
         table.row([
             label.to_string(),
@@ -39,19 +41,25 @@ fn main() -> Result<()> {
 
     println!("== Paper Fig. 6: synthesis results for the DAE PEs (estimated) ==");
     let model = CostModel::default();
-    let non_dae = compile("bfs", bfs::BFS_SRC, &CompileOptions::no_dae())?;
-    let dae = compile("bfs", bfs::BFS_DAE_SRC, &CompileOptions::standard())?;
     let est = |m: &bombyx::ir::Module, name: &str| {
         let f = &m.funcs[m.func_by_name(name).unwrap()];
         estimate(&model, m, f)
     };
     let rows = [
-        ("Non-DAE", est(&non_dae.explicit, "visit"), (2657, 2305, 2)),
-        ("Spawner", est(&dae.explicit, "visit"), (133, 387, 0)),
-        ("Executor", est(&dae.explicit, "visit__k1"), (1999, 1913, 2)),
-        ("Access", est(&dae.explicit, "adj_off_access"), (1764, 1164, 2)),
+        ("Non-DAE", est(exp.plain.explicit(), "visit"), (2657, 2305, 2)),
+        ("Spawner", est(exp.dae.explicit(), "visit"), (133, 387, 0)),
+        ("Executor", est(exp.dae.explicit(), "visit__k1"), (1999, 1913, 2)),
+        ("Access", est(exp.dae.explicit(), "adj_off_access"), (1764, 1164, 2)),
     ];
-    let mut fig6 = Table::new(["PE", "LUT (est)", "LUT (paper)", "FF (est)", "FF (paper)", "BRAM (est)", "BRAM (paper)"]);
+    let mut fig6 = Table::new([
+        "PE",
+        "LUT (est)",
+        "LUT (paper)",
+        "FF (est)",
+        "FF (paper)",
+        "BRAM (est)",
+        "BRAM (paper)",
+    ]);
     for (name, e, (pl, pf, pb)) in rows {
         fig6.row([
             name.to_string(),

@@ -9,9 +9,8 @@
 
 use anyhow::Result;
 
-use bombyx::backend::hardcilk;
 use bombyx::ir::explicit::closure_layout;
-use bombyx::lower::{compile, CompileOptions};
+use bombyx::lower::{CompileOptions, CompileSession};
 use bombyx::util::table::Table;
 
 fn main() -> Result<()> {
@@ -19,12 +18,11 @@ fn main() -> Result<()> {
         env!("CARGO_MANIFEST_DIR"),
         "/examples/cilk/fib.cilk"
     ))?;
-    let result = compile("fib.cilk", &source, &CompileOptions::standard())?;
-    let system = hardcilk::generate(&result.explicit, "fib_system")?;
+    let mut session = CompileSession::new("fib.cilk", &source, &CompileOptions::standard())?;
 
     println!("== Closure layouts (padded to power-of-two widths) ==");
     let mut table = Table::new(["task", "payload bits", "padded bits", "padding"]);
-    for (_, f) in result.explicit.funcs.iter() {
+    for (_, f) in session.explicit().funcs.iter() {
         if f.task.is_some() {
             let l = closure_layout(f);
             table.row([
@@ -36,6 +34,9 @@ fn main() -> Result<()> {
         }
     }
     print!("{}", table.render());
+
+    // Generated once and memoized on the session.
+    let system = session.hardcilk_system("fib_system")?;
 
     println!("\n== Generated PE kernel: pe_fib.cpp ==");
     println!("{}", system.pes[0].2);

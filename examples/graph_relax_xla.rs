@@ -3,8 +3,9 @@
 //! Rust coordinator (Python never runs here — build artifacts first with
 //! `make artifacts`).
 //!
-//! Also validates the batched XLA path against the scalar reference
-//! datapath end to end.
+//! The workload is compiled once (`RelaxExperiment`); the batched XLA path
+//! and the scalar reference datapath both run against the same cached
+//! explicit module and are validated against each other.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example graph_relax_xla
@@ -12,7 +13,7 @@
 
 use anyhow::Result;
 
-use bombyx::coordinator::driver::{run_relax_scalar, run_relax_sim};
+use bombyx::coordinator::RelaxExperiment;
 use bombyx::runtime::XlaRuntime;
 use bombyx::sim::SimConfig;
 use bombyx::util::table::commas;
@@ -26,8 +27,9 @@ fn main() -> Result<()> {
     let graph = graphgen::tree(4, 7); // 5,461 nodes — the paper's small set
     let seed = 42;
     let cfg = SimConfig::default();
+    let exp = RelaxExperiment::new()?;
 
-    let xla = run_relax_sim(runtime, &graph, seed, &cfg)?;
+    let xla = exp.run_sim(runtime, &graph, seed, &cfg)?;
     println!(
         "XLA datapath:    {} nodes expanded, {} cycles, {} XLA batches",
         commas(xla.nodes_expanded),
@@ -35,7 +37,7 @@ fn main() -> Result<()> {
         xla.xla_batches
     );
 
-    let scalar = run_relax_scalar(&graph, seed, &cfg)?;
+    let scalar = exp.run_scalar(&graph, seed, &cfg)?;
     println!(
         "scalar datapath: {} nodes expanded, {} cycles",
         commas(scalar.nodes_expanded),

@@ -1,5 +1,6 @@
-//! Quickstart: compile the paper's fib (Fig. 1) through the whole Bombyx
-//! pipeline and run it on every execution engine.
+//! Quickstart: compile the paper's fib (Fig. 1) once into a
+//! `CompileSession` and run the cached explicit module on every execution
+//! engine.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -7,13 +8,12 @@
 
 use anyhow::Result;
 
-use bombyx::backend::hardcilk;
-use bombyx::interp::{explicit_exec::ExplicitExec, oracle::run_oracle, Memory, NoXla};
 use bombyx::ir::expr::Value;
 use bombyx::ir::print::print_cilk1;
-use bombyx::lower::{compile, CompileOptions};
-use bombyx::sim::{simulate, NoSimXla, SimConfig};
-use bombyx::ws::{self, SharedMemory, WsConfig};
+use bombyx::lower::{CompileOptions, CompileSession};
+use bombyx::sim::{NoSimXla, SimConfig};
+use bombyx::util::bench::timing_table;
+use bombyx::ws::{self, WsConfig};
 
 fn main() -> Result<()> {
     let source = std::fs::read_to_string(concat!(
@@ -22,27 +22,28 @@ fn main() -> Result<()> {
     ))?;
     let n = 20i64;
 
-    // 1. Compile: OpenCilk-style source -> implicit IR -> explicit IR.
-    let result = compile("fib.cilk", &source, &CompileOptions::standard())?;
+    // 1. Compile once: OpenCilk-style source -> implicit IR -> explicit IR.
+    //    Every engine below consumes the session's cached module.
+    let mut session = CompileSession::new("fib.cilk", &source, &CompileOptions::standard())?;
     println!("== Cilk-1 view of the explicit tasks (paper Fig. 2) ==");
-    for (_, f) in result.explicit.funcs.iter() {
+    for (_, f) in session.explicit().funcs.iter() {
         if f.task.is_some() && f.body.is_some() {
-            print!("{}", print_cilk1(&result.explicit, f));
+            print!("{}", print_cilk1(session.explicit(), f));
         }
     }
+    println!("\n== Pass timings (one-time lowering) ==");
+    print!("{}", timing_table(session.timings()));
 
     // 2. Sequential oracle (the C elision).
     let (v_oracle, _) =
-        run_oracle(&result.implicit, Memory::new(&result.implicit), "fib", &[Value::I64(n)])?;
+        session.run_oracle(session.implicit_memory(), "fib", &[Value::I64(n)])?;
 
     // 3. Explicit-IR abstract machine.
-    let mut exec = ExplicitExec::new(&result.explicit, Memory::new(&result.explicit), NoXla);
-    let v_explicit = exec.run("fib", &[Value::I64(n)])?;
+    let (v_explicit, _) = session.run_explicit(session.memory(), "fib", &[Value::I64(n)])?;
 
     // 4. Multithreaded work-stealing runtime (the Cilk-1 emulation layer).
-    let (v_ws, _, ws_stats) = ws::run(
-        &result.explicit,
-        SharedMemory::new(&result.explicit),
+    let (v_ws, _, ws_stats) = session.run_ws(
+        session.shared_memory(),
         "fib",
         &[Value::I64(n)],
         &WsConfig::default(),
@@ -51,14 +52,8 @@ fn main() -> Result<()> {
 
     // 5. HardCilk cycle simulator.
     let cfg = SimConfig::default();
-    let (v_sim, _, sim_stats) = simulate(
-        &result.explicit,
-        Memory::new(&result.explicit),
-        "fib",
-        &[Value::I64(n)],
-        &cfg,
-        &mut NoSimXla,
-    )?;
+    let (v_sim, _, sim_stats) =
+        session.simulate(session.memory(), "fib", &[Value::I64(n)], &cfg, &mut NoSimXla)?;
 
     println!("\nfib({n}):");
     println!("  oracle   = {v_oracle}");
@@ -74,8 +69,8 @@ fn main() -> Result<()> {
     assert_eq!(v_oracle, v_ws);
     assert_eq!(v_oracle, v_sim);
 
-    // 6. HardCilk codegen.
-    let system = hardcilk::generate(&result.explicit, "fib_system")?;
+    // 6. HardCilk codegen — memoized on the session.
+    let system = session.hardcilk_system("fib_system")?;
     println!(
         "\nHardCilk backend: {} PE kernels, {} lines of HLS C++, descriptor with {} tasks",
         system.pes.len(),

@@ -1,9 +1,11 @@
 //! A-compile ablation: compiler throughput per stage for every example
-//! program.
+//! program, via the pass manager's per-pass timing counters.
+
+use std::time::Duration;
 
 use bombyx::frontend;
-use bombyx::lower::{compile, CompileOptions};
-use bombyx::util::bench::{banner, bench};
+use bombyx::lower::{CompileOptions, CompileSession};
+use bombyx::util::bench::{banner, bench, timing_table};
 use bombyx::workloads::{bfs, fib, nqueens, qsort, relax};
 
 fn main() {
@@ -20,12 +22,45 @@ fn main() {
         bench(&format!("parse+sema {name}"), 50, || {
             frontend::parse_and_check(name, src).unwrap()
         });
-        bench(&format!("full pipeline {name}"), 50, || {
-            compile(name, src, &CompileOptions::standard()).unwrap()
+        bench(&format!("compile session {name}"), 50, || {
+            CompileSession::new(name, src, &CompileOptions::standard()).unwrap()
         });
+
+        // Per-pass breakdown: median of the PassManager's own timing
+        // counters over repeated compiles.
+        let mut per_pass: Vec<(&'static str, Vec<Duration>, bool)> = Vec::new();
+        for _ in 0..20 {
+            let session = CompileSession::new(name, src, &CompileOptions::standard()).unwrap();
+            for t in session.timings() {
+                match per_pass.iter_mut().find(|(n, _, _)| *n == t.pass) {
+                    Some((_, samples, _)) => samples.push(t.duration),
+                    None => per_pass.push((t.pass, vec![t.duration], t.ran)),
+                }
+            }
+        }
+        let rows: Vec<bombyx::lower::PassTiming> = per_pass
+            .iter()
+            .map(|(pass, samples, ran)| {
+                let mut sorted = samples.clone();
+                sorted.sort();
+                bombyx::lower::PassTiming {
+                    pass: *pass,
+                    duration: sorted[sorted.len() / 2],
+                    ran: *ran,
+                }
+            })
+            .collect();
+        println!("per-pass medians for {name}:");
+        println!("{}", timing_table(&rows));
+
+        // Codegen on the session's cached explicit module: the compiler
+        // runs once, only the backend is timed per iteration.
+        let mut session = CompileSession::new(name, src, &CompileOptions::standard()).unwrap();
         bench(&format!("hardcilk codegen {name}"), 50, || {
-            let r = compile(name, src, &CompileOptions::standard()).unwrap();
-            bombyx::backend::hardcilk::generate(&r.explicit, name).unwrap()
+            bombyx::backend::hardcilk::generate(session.explicit(), name).unwrap()
         });
+        // Memoized target artifact: repeated requests are free.
+        let _ = session.hardcilk_system(name).unwrap();
+        let _ = session.hardcilk_system(name).unwrap();
     }
 }

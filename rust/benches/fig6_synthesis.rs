@@ -1,9 +1,11 @@
 //! E-fig6: regenerate the paper's Fig. 6 synthesis table (LUT/FF/BRAM for
 //! the DAE-optimization PEs), via the calibrated HLS resource estimator
-//! (Vivado 2024.1 / xcu55c @ 300 MHz in the paper).
+//! (Vivado 2024.1 / xcu55c @ 300 MHz in the paper). Each program variant
+//! is compiled once into a `CompileSession`; the estimator reads the
+//! cached explicit modules.
 
 use bombyx::hls::{estimate, CostModel};
-use bombyx::lower::{compile, CompileOptions};
+use bombyx::lower::{CompileOptions, CompileSession};
 use bombyx::util::bench::banner;
 use bombyx::util::table::{pct_delta, Table};
 use bombyx::workloads::bfs;
@@ -11,17 +13,19 @@ use bombyx::workloads::bfs;
 fn main() {
     banner("fig6_synthesis", "Paper Fig. 6: synthesis results for DAE optimization PEs.");
     let model = CostModel::default();
-    let non_dae = compile("bfs", bfs::BFS_SRC, &CompileOptions::no_dae()).unwrap();
-    let dae = compile("bfs", bfs::BFS_DAE_SRC, &CompileOptions::standard()).unwrap();
+    let non_dae =
+        CompileSession::new("bfs", bfs::BFS_SRC, &CompileOptions::no_dae()).unwrap();
+    let dae =
+        CompileSession::new("bfs_dae", bfs::BFS_DAE_SRC, &CompileOptions::standard()).unwrap();
     let est = |m: &bombyx::ir::Module, name: &str| {
         let f = &m.funcs[m.func_by_name(name).unwrap()];
         estimate(&model, m, f)
     };
 
-    let non = est(&non_dae.explicit, "visit");
-    let spawner = est(&dae.explicit, "visit");
-    let executor = est(&dae.explicit, "visit__k1");
-    let access = est(&dae.explicit, "adj_off_access");
+    let non = est(non_dae.explicit(), "visit");
+    let spawner = est(dae.explicit(), "visit");
+    let executor = est(dae.explicit(), "visit__k1");
+    let access = est(dae.explicit(), "adj_off_access");
     let dae_total = spawner + executor + access;
 
     let paper = [

@@ -3,7 +3,7 @@
 //! (implicit & explicit CFGs), Fig. 5 (BFS listing).
 
 use bombyx::ir::print::{print_cilk1, print_module};
-use bombyx::lower::{compile, CompileOptions};
+use bombyx::lower::{CompileOptions, CompileSession};
 use bombyx::util::bench::banner;
 use bombyx::workloads::{bfs, fib};
 
@@ -12,18 +12,19 @@ fn main() {
 
     println!("==== Fig. 1: OpenCilk fib (Cilk-C source) ====\n{}", fib::FIB_SRC);
 
-    let r = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let session = CompileSession::new("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
     println!("==== Fig. 4(b): implicit IR (CFG with sync terminator) ====");
-    let f = &r.implicit.funcs[r.implicit.func_by_name("fib").unwrap()];
-    println!("{}", bombyx::ir::print::print_func(&r.implicit, f));
+    let implicit = session.implicit();
+    let f = &implicit.funcs[implicit.func_by_name("fib").unwrap()];
+    println!("{}", bombyx::ir::print::print_func(implicit, f));
 
     println!("==== Fig. 4(c): explicit IR (paths -> terminating tasks) ====");
-    print!("{}", print_module(&r.explicit));
+    print!("{}", print_module(session.explicit()));
 
     println!("==== Fig. 2: Cilk-1 concrete syntax ====");
-    for (_, f) in r.explicit.funcs.iter() {
+    for (_, f) in session.explicit().funcs.iter() {
         if f.task.is_some() && f.body.is_some() {
-            println!("{}", print_cilk1(&r.explicit, f));
+            println!("{}", print_cilk1(session.explicit(), f));
         }
     }
 

@@ -1,7 +1,8 @@
 //! A-mem ablation: memory-latency sweep — DAE's benefit as a function of
-//! HBM service latency (the §II-C mechanism made quantitative).
+//! HBM service latency (the §II-C mechanism made quantitative). One
+//! `BfsExperiment` serves every latency point.
 
-use bombyx::coordinator::run_bfs_comparison;
+use bombyx::coordinator::BfsExperiment;
 use bombyx::sim::SimConfig;
 use bombyx::util::bench::banner;
 use bombyx::util::table::{commas, Table};
@@ -12,6 +13,7 @@ fn main() {
         "memlat_sweep",
         "Ablation: memory latency 10..320 cycles on the B=4 D=7 tree, 1 PE/type.",
     );
+    let exp = BfsExperiment::new().expect("compile bfs sessions");
     let graph = graphgen::tree(4, 7);
     let mut table = Table::new(["mem latency", "non-DAE cycles", "DAE cycles", "reduction"]);
     let mut last_reduction = -1.0f64;
@@ -19,7 +21,7 @@ fn main() {
     for lat in [10u32, 20, 40, 80, 160, 320] {
         let mut cfg = SimConfig::paper();
         cfg.mem_latency = lat;
-        let cmp = run_bfs_comparison(&graph, &cfg).expect("simulation");
+        let cmp = exp.run(&graph, &cfg).expect("simulation");
         if cmp.reduction() < last_reduction {
             monotone = false;
         }

@@ -1,7 +1,9 @@
 //! A-pes ablation: PE-count sweep — how the DAE advantage evolves as the
 //! system scales from the paper's 1-PE configuration to 16 PEs per type.
+//! One `BfsExperiment` (two compile sessions) serves the whole sweep; only
+//! the simulator runs per configuration.
 
-use bombyx::coordinator::run_bfs_comparison;
+use bombyx::coordinator::BfsExperiment;
 use bombyx::sim::SimConfig;
 use bombyx::util::bench::banner;
 use bombyx::util::table::{commas, Table};
@@ -12,13 +14,20 @@ fn main() {
         "pe_sweep",
         "Ablation: PEs per task type 1..16 on the B=4 D=7 tree (DAE vs non-DAE).",
     );
+    let exp = BfsExperiment::new().expect("compile bfs sessions");
     let graph = graphgen::tree(4, 7);
-    let mut table = Table::new(["PEs/type", "non-DAE cycles", "DAE cycles", "reduction", "DAE speedup vs 1 PE"]);
+    let mut table = Table::new([
+        "PEs/type",
+        "non-DAE cycles",
+        "DAE cycles",
+        "reduction",
+        "DAE speedup vs 1 PE",
+    ]);
     let mut base_dae = 0u64;
     for pes in [1u32, 2, 4, 8, 16] {
         let mut cfg = SimConfig::paper();
         cfg.default_pes = pes;
-        let cmp = run_bfs_comparison(&graph, &cfg).expect("simulation");
+        let cmp = exp.run(&graph, &cfg).expect("simulation");
         if pes == 1 {
             base_dae = cmp.dae_cycles;
         }

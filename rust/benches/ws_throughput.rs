@@ -1,10 +1,12 @@
 //! A-ws ablation: software work-stealing runtime (the Cilk-1 emulation
-//! backend) — throughput and scaling on fib / BFS / N-Queens.
+//! backend) — throughput and scaling on fib / BFS / N-Queens. Each program
+//! is one `CompileSession`; every worker-count configuration reuses its
+//! cached explicit module.
 
-use bombyx::lower::{compile, CompileOptions};
+use bombyx::lower::{CompileOptions, CompileSession};
 use bombyx::util::bench::{banner, bench, throughput};
 use bombyx::workloads::{bfs, fib, graphgen, nqueens};
-use bombyx::ws::{self, SharedMemory, WsConfig};
+use bombyx::ws::{self, WsConfig};
 
 fn main() {
     banner(
@@ -13,21 +15,20 @@ fn main() {
     );
 
     // fib(25): ~485k tasks.
-    let r = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let session = CompileSession::new("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
     let mut tasks_run = 0u64;
     for workers in [1usize, 2, 4, 8] {
         let cfg = WsConfig { workers, steal_tries: 4 };
         let stats = bench(&format!("ws fib(25) workers={workers}"), 5, || {
-            let mem = SharedMemory::new(&r.explicit);
-            let (v, _, s) = ws::run(
-                &r.explicit,
-                mem,
-                "fib",
-                &[bombyx::ir::Value::I64(25)],
-                &cfg,
-                Box::new(ws::NoXlaSink),
-            )
-            .unwrap();
+            let (v, _, s) = session
+                .run_ws(
+                    session.shared_memory(),
+                    "fib",
+                    &[bombyx::ir::Value::I64(25)],
+                    &cfg,
+                    Box::new(ws::NoXlaSink),
+                )
+                .unwrap();
             assert_eq!(v.as_i64(), 75_025);
             tasks_run = s.tasks_run;
             s.tasks_run
@@ -36,37 +37,30 @@ fn main() {
     }
 
     // BFS D=7 tree.
-    let rb = compile("bfs", bfs::BFS_SRC, &CompileOptions::no_dae()).unwrap();
+    let sb = CompileSession::new("bfs", bfs::BFS_SRC, &CompileOptions::no_dae()).unwrap();
     let g = graphgen::paper_tree_small();
     let cfg = WsConfig { workers: 8, steal_tries: 4 };
     let stats = bench("ws bfs(B=4,D=7) workers=8", 5, || {
-        let mut mem = SharedMemory::new(&rb.explicit);
-        mem.fill_i64(rb.explicit.global_by_name("adj_off").unwrap(), &g.adj_off);
-        mem.fill_i64(rb.explicit.global_by_name("adj_edges").unwrap(), &g.adj_edges);
-        mem.resize(rb.explicit.global_by_name("visited").unwrap(), g.nodes());
-        ws::run(
-            &rb.explicit,
-            mem,
-            "visit",
-            &[bombyx::ir::Value::I64(0)],
-            &cfg,
-            Box::new(ws::NoXlaSink),
-        )
-        .unwrap()
-        .2
-        .tasks_run
+        let mut mem = sb.shared_memory();
+        mem.fill_i64(sb.explicit().global_by_name("adj_off").unwrap(), &g.adj_off);
+        mem.fill_i64(sb.explicit().global_by_name("adj_edges").unwrap(), &g.adj_edges);
+        mem.resize(sb.explicit().global_by_name("visited").unwrap(), g.nodes());
+        sb.run_ws(mem, "visit", &[bombyx::ir::Value::I64(0)], &cfg, Box::new(ws::NoXlaSink))
+            .unwrap()
+            .2
+            .tasks_run
     });
     throughput("ws bfs(B=4,D=7)", &stats, 2 * g.nodes() as u64, "tasks");
 
     // N-Queens 8.
-    let rq = compile("nq", nqueens::NQUEENS_SRC, &CompileOptions::no_dae()).unwrap();
+    let sq = CompileSession::new("nq", nqueens::NQUEENS_SRC, &CompileOptions::no_dae()).unwrap();
     let stats = bench("ws nqueens(8) workers=8", 5, || {
-        let mem = SharedMemory::new(&rq.explicit);
         let args: Vec<bombyx::ir::Value> =
             [8i64, 0, 0, 0, 0].iter().map(|&v| bombyx::ir::Value::I64(v)).collect();
-        let (_, mem, s) =
-            ws::run(&rq.explicit, mem, "place", &args, &cfg, Box::new(ws::NoXlaSink)).unwrap();
-        let sols = mem.dump_i64(rq.explicit.global_by_name("solutions").unwrap())[0];
+        let (_, mem, s) = sq
+            .run_ws(sq.shared_memory(), "place", &args, &cfg, Box::new(ws::NoXlaSink))
+            .unwrap();
+        let sols = mem.dump_i64(sq.explicit().global_by_name("solutions").unwrap())[0];
         assert_eq!(sols, 92);
         s.tasks_run
     });

@@ -3,7 +3,7 @@
 //! (DESIGN.md §Hardware-Adaptation). Requires `make artifacts`.
 
 use bombyx::ir::Value;
-use bombyx::lower::{compile, CompileOptions};
+use bombyx::lower::{CompileOptions, CompileSession};
 use bombyx::runtime::{RelaxXla, XlaRuntime};
 use bombyx::sim::SimXla;
 use bombyx::util::bench::{banner, bench, throughput};
@@ -22,13 +22,14 @@ fn main() {
             return;
         }
     };
-    let r = compile("relax", relax::RELAX_SRC, &CompileOptions::no_dae()).unwrap();
-    let m = &r.explicit;
+    let session =
+        CompileSession::new("relax", relax::RELAX_SRC, &CompileOptions::no_dae()).unwrap();
+    let m = session.explicit();
     let mut xla = RelaxXla::new(runtime, m, 1).unwrap();
 
     let n_rows = 4096usize;
     for batch_size in [1usize, 8, 32, 64, 128, 256] {
-        let mut mem = bombyx::interp::Memory::new(m);
+        let mut mem = session.memory();
         let feats: Vec<f32> = (0..n_rows * relax::F).map(|i| (i % 13) as f32 * 0.07).collect();
         mem.fill_f32(m.global_by_name("feat").unwrap(), &feats);
         let stats = bench(&format!("relax batch={batch_size}"), 5, || {

@@ -1,12 +1,18 @@
 //! End-to-end drivers for the paper's experiments and the relax workload.
+//!
+//! Both experiment drivers are built on [`CompileSession`]: the workload is
+//! lowered once per session and every simulated configuration (PE counts,
+//! memory latencies, graphs) reuses the cached explicit module — which is
+//! what makes the sweep benches scale without re-running the compiler per
+//! data point.
 
 use anyhow::{anyhow, Result};
 
 use crate::interp::Memory;
 use crate::ir::expr::Value;
-use crate::lower::{compile, CompileOptions};
+use crate::lower::{CompileOptions, CompileSession};
 use crate::runtime::{RelaxXla, XlaRuntime};
-use crate::sim::{simulate, NoSimXla, SimConfig, SimStats};
+use crate::sim::{NoSimXla, SimConfig, SimStats};
 use crate::workloads::{bfs, graphgen::CsrGraph, relax};
 
 /// Result of the paper's §III experiment on one graph.
@@ -25,32 +31,47 @@ impl BfsComparison {
     }
 }
 
-/// Run the DAE-vs-non-DAE HardCilk comparison (paper §III) on a graph.
-pub fn run_bfs_comparison(graph: &CsrGraph, config: &SimConfig) -> Result<BfsComparison> {
-    let mut cycles = Vec::new();
-    let mut stats = Vec::new();
-    for (src, opts) in [
-        (bfs::BFS_SRC, CompileOptions::no_dae()),
-        (bfs::BFS_DAE_SRC, CompileOptions::standard()),
-    ] {
-        let r = compile("bfs", src, &opts)?;
-        let m = &r.explicit;
-        let mut mem = Memory::new(m);
-        bfs::init_memory(m, &mut mem, graph)?;
-        let (_, mem, s) = simulate(m, mem, "visit", &[Value::I64(0)], config, &mut NoSimXla)?;
-        bfs::check_all_visited(m, &mem, graph)?;
-        cycles.push(s.cycles);
-        stats.push(s);
+/// The paper's §III experiment pair, compiled once: the plain BFS and the
+/// DAE-annotated BFS as two [`CompileSession`]s. Call [`BfsExperiment::run`]
+/// per graph/config without re-lowering anything.
+pub struct BfsExperiment {
+    pub plain: CompileSession,
+    pub dae: CompileSession,
+}
+
+impl BfsExperiment {
+    pub fn new() -> Result<BfsExperiment> {
+        Ok(BfsExperiment {
+            plain: CompileSession::new("bfs", bfs::BFS_SRC, &CompileOptions::no_dae())?,
+            dae: CompileSession::new("bfs_dae", bfs::BFS_DAE_SRC, &CompileOptions::standard())?,
+        })
     }
-    let dae_stats = stats.pop().unwrap();
-    let plain_stats = stats.pop().unwrap();
-    Ok(BfsComparison {
-        nodes: graph.nodes(),
-        plain_cycles: cycles[0],
-        dae_cycles: cycles[1],
-        plain_stats,
-        dae_stats,
-    })
+
+    /// Run the DAE-vs-non-DAE HardCilk comparison on a graph.
+    pub fn run(&self, graph: &CsrGraph, config: &SimConfig) -> Result<BfsComparison> {
+        let run_one = |session: &CompileSession| -> Result<SimStats> {
+            let mut mem = session.memory();
+            bfs::init_memory(session.explicit(), &mut mem, graph)?;
+            let (_, mem, stats) =
+                session.simulate(mem, "visit", &[Value::I64(0)], config, &mut NoSimXla)?;
+            bfs::check_all_visited(session.explicit(), &mem, graph)?;
+            Ok(stats)
+        };
+        let plain_stats = run_one(&self.plain)?;
+        let dae_stats = run_one(&self.dae)?;
+        Ok(BfsComparison {
+            nodes: graph.nodes(),
+            plain_cycles: plain_stats.cycles,
+            dae_cycles: dae_stats.cycles,
+            plain_stats,
+            dae_stats,
+        })
+    }
+}
+
+/// One-shot convenience wrapper (compiles both variants, runs one graph).
+pub fn run_bfs_comparison(graph: &CsrGraph, config: &SimConfig) -> Result<BfsComparison> {
+    BfsExperiment::new()?.run(graph, config)
 }
 
 /// Result of a relax end-to-end run on the simulator with the XLA PE.
@@ -63,88 +84,121 @@ pub struct RelaxRun {
     pub feat_checksum: f64,
 }
 
+/// The relax workload compiled once; both the batched-XLA and the scalar
+/// reference datapaths run against the same cached explicit module.
+pub struct RelaxExperiment {
+    session: CompileSession,
+}
+
+impl RelaxExperiment {
+    pub fn new() -> Result<RelaxExperiment> {
+        Ok(RelaxExperiment {
+            session: CompileSession::new("relax", relax::RELAX_SRC, &CompileOptions::no_dae())?,
+        })
+    }
+
+    pub fn session(&self) -> &CompileSession {
+        &self.session
+    }
+
+    /// Simulate with the AOT XLA datapath. `runtime` must have the relax
+    /// artifacts loaded (`make artifacts`).
+    pub fn run_sim(
+        &self,
+        runtime: XlaRuntime,
+        graph: &CsrGraph,
+        seed: u64,
+        config: &SimConfig,
+    ) -> Result<RelaxRun> {
+        let m = self.session.explicit();
+        let mut mem = self.session.memory();
+        relax::init_memory(m, &mut mem, graph, seed)?;
+        let mut xla = RelaxXla::new(runtime, m, seed)?;
+        let (_, mem, stats) =
+            self.session.simulate(mem, "expand", &[Value::I64(0)], config, &mut xla)?;
+        let work = mem.dump_i64(
+            m.global_by_name("work_done")
+                .ok_or_else(|| anyhow!("no work_done global"))?,
+        )[0] as u64;
+        let feat = mem.dump_f32(m.global_by_name("feat").unwrap());
+        Ok(RelaxRun {
+            nodes_expanded: work,
+            cycles: stats.cycles,
+            xla_batches: stats.xla_batches,
+            feat_checksum: feat.iter().map(|&v| v as f64).sum(),
+        })
+    }
+
+    /// The same run with the scalar reference datapath (no XLA) — used to
+    /// verify the batched path end to end.
+    pub fn run_scalar(
+        &self,
+        graph: &CsrGraph,
+        seed: u64,
+        config: &SimConfig,
+    ) -> Result<RelaxRun> {
+        let m = self.session.explicit();
+        let mut mem = self.session.memory();
+        relax::init_memory(m, &mut mem, graph, seed)?;
+
+        /// Scalar datapath over simulator memory (reference mode).
+        struct InlineScalar {
+            w: Vec<f32>,
+            b: Vec<f32>,
+            feat: crate::ir::GlobalId,
+        }
+        impl crate::sim::SimXla for InlineScalar {
+            fn exec_batch(
+                &mut self,
+                _name: &str,
+                batch: &[Vec<Value>],
+                memory: &mut Memory,
+            ) -> Result<Vec<Value>> {
+                let f = relax::F;
+                batch
+                    .iter()
+                    .map(|args| {
+                        let n = args[0].as_i64() as usize;
+                        let x: Vec<f32> = (0..f)
+                            .map(|j| {
+                                memory.load(self.feat, (n * f + j) as i64).map(|v| v.as_f32())
+                            })
+                            .collect::<Result<_>>()?;
+                        let (y, score) = relax::relax_ref(&x, &self.w, &self.b);
+                        for (j, &v) in y.iter().enumerate() {
+                            memory.store(self.feat, (n * f + j) as i64, Value::F32(v))?;
+                        }
+                        Ok(Value::I64((score * 1000.0) as i64))
+                    })
+                    .collect()
+            }
+        }
+        let (w, b) = relax::weights(seed);
+        let mut xla = InlineScalar { w, b, feat: m.global_by_name("feat").unwrap() };
+        let (_, mem, stats) =
+            self.session.simulate(mem, "expand", &[Value::I64(0)], config, &mut xla)?;
+        let work = mem.dump_i64(m.global_by_name("work_done").unwrap())[0] as u64;
+        let feat = mem.dump_f32(m.global_by_name("feat").unwrap());
+        Ok(RelaxRun {
+            nodes_expanded: work,
+            cycles: stats.cycles,
+            xla_batches: stats.xla_batches,
+            feat_checksum: feat.iter().map(|&v| v as f64).sum(),
+        })
+    }
+}
+
 /// Compile + simulate the relax workload with the AOT XLA datapath.
-/// `runtime` must have the relax artifacts loaded (`make artifacts`).
 pub fn run_relax_sim(
     runtime: XlaRuntime,
     graph: &CsrGraph,
     seed: u64,
     config: &SimConfig,
 ) -> Result<RelaxRun> {
-    let r = compile("relax", relax::RELAX_SRC, &CompileOptions::no_dae())?;
-    let m = &r.explicit;
-    let mut mem = Memory::new(m);
-    relax::init_memory(m, &mut mem, graph, seed)?;
-    let mut xla = RelaxXla::new(runtime, m, seed)?;
-    let (_, mem, stats) = simulate(m, mem, "expand", &[Value::I64(0)], config, &mut xla)?;
-    let work = mem.dump_i64(
-        m.global_by_name("work_done")
-            .ok_or_else(|| anyhow!("no work_done global"))?,
-    )[0] as u64;
-    let feat = mem.dump_f32(m.global_by_name("feat").unwrap());
-    Ok(RelaxRun {
-        nodes_expanded: work,
-        cycles: stats.cycles,
-        xla_batches: stats.xla_batches,
-        feat_checksum: feat.iter().map(|&v| v as f64).sum(),
-    })
+    RelaxExperiment::new()?.run_sim(runtime, graph, seed, config)
 }
 
-/// The same relax run with the scalar reference datapath (no XLA) — used
-/// to verify the batched path end to end.
-pub fn run_relax_scalar(
-    graph: &CsrGraph,
-    seed: u64,
-    config: &SimConfig,
-) -> Result<RelaxRun> {
-    let r = compile("relax", relax::RELAX_SRC, &CompileOptions::no_dae())?;
-    let m = &r.explicit;
-    let mut mem = Memory::new(m);
-    relax::init_memory(m, &mut mem, graph, seed)?;
-
-    /// Scalar datapath over simulator memory (reference mode).
-    struct InlineScalar {
-        w: Vec<f32>,
-        b: Vec<f32>,
-        feat: crate::ir::GlobalId,
-    }
-    impl crate::sim::SimXla for InlineScalar {
-        fn exec_batch(
-            &mut self,
-            _name: &str,
-            batch: &[Vec<Value>],
-            memory: &mut Memory,
-        ) -> Result<Vec<Value>> {
-            let f = relax::F;
-            batch
-                .iter()
-                .map(|args| {
-                    let n = args[0].as_i64() as usize;
-                    let x: Vec<f32> = (0..f)
-                        .map(|j| memory.load(self.feat, (n * f + j) as i64).map(|v| v.as_f32()))
-                        .collect::<Result<_>>()?;
-                    let (y, score) = relax::relax_ref(&x, &self.w, &self.b);
-                    for (j, &v) in y.iter().enumerate() {
-                        memory.store(self.feat, (n * f + j) as i64, Value::F32(v))?;
-                    }
-                    Ok(Value::I64((score * 1000.0) as i64))
-                })
-                .collect()
-        }
-    }
-    let (w, b) = relax::weights(seed);
-    let mut xla = InlineScalar {
-        w,
-        b,
-        feat: m.global_by_name("feat").unwrap(),
-    };
-    let (_, mem, stats) = simulate(m, mem, "expand", &[Value::I64(0)], config, &mut xla)?;
-    let work = mem.dump_i64(m.global_by_name("work_done").unwrap())[0] as u64;
-    let feat = mem.dump_f32(m.global_by_name("feat").unwrap());
-    Ok(RelaxRun {
-        nodes_expanded: work,
-        cycles: stats.cycles,
-        xla_batches: stats.xla_batches,
-        feat_checksum: feat.iter().map(|&v| v as f64).sum(),
-    })
+/// Compile + simulate the relax workload with the scalar reference datapath.
+pub fn run_relax_scalar(graph: &CsrGraph, seed: u64, config: &SimConfig) -> Result<RelaxRun> {
+    RelaxExperiment::new()?.run_scalar(graph, seed, config)
 }

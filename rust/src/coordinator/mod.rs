@@ -4,4 +4,7 @@
 
 pub mod driver;
 
-pub use driver::{run_bfs_comparison, BfsComparison, RelaxRun};
+pub use driver::{
+    run_bfs_comparison, run_relax_scalar, run_relax_sim, BfsComparison, BfsExperiment,
+    RelaxExperiment, RelaxRun,
+};

@@ -594,10 +594,16 @@ mod tests {
         let p = parse_ok("int f(int a, int b) { int x = a + b * 2 < 10 && a != 0; return x; }");
         let StmtKind::Decl { init: Some(Initializer::Expr(e)), .. } = &p.funcs[0].body.stmts[0].kind
         else {
-            panic!()
+            panic!(
+                "expected first statement to be a declaration with an expression initializer, \
+                 got {:?}",
+                p.funcs[0].body.stmts[0].kind
+            )
         };
         // Top-level should be `&&`.
-        let ExprKind::Binary { op, .. } = &e.kind else { panic!() };
+        let ExprKind::Binary { op, .. } = &e.kind else {
+            panic!("expected a binary expression at the top level, got {:?}", e.kind)
+        };
         assert_eq!(*op, BinOp::And);
     }
 

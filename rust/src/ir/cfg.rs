@@ -316,12 +316,16 @@ impl Term {
 }
 
 impl Cfg {
-    /// Predecessor lists, indexed by block.
+    /// Predecessor lists, indexed by block. Out-of-range successor ids
+    /// (a malformed CFG — the verifier reports them) are skipped rather
+    /// than panicking.
     pub fn predecessors(&self) -> Vec<Vec<BlockId>> {
         let mut preds = vec![Vec::new(); self.blocks.len()];
         for (id, block) in self.blocks.iter() {
             for succ in block.term.successors() {
-                preds[succ.index()].push(id);
+                if succ.index() < self.blocks.len() {
+                    preds[succ.index()].push(id);
+                }
             }
         }
         preds
@@ -344,7 +348,7 @@ impl Cfg {
             visited[b.index()] = true;
             stack.push((b, true));
             for succ in self.blocks[b].term.successors() {
-                if !visited[succ.index()] {
+                if succ.index() < self.blocks.len() && !visited[succ.index()] {
                     stack.push((succ, false));
                 }
             }
@@ -362,7 +366,7 @@ impl Cfg {
                 continue;
             }
             for succ in self.blocks[b].term.successors() {
-                if !seen[succ.index()] {
+                if succ.index() < self.blocks.len() && !seen[succ.index()] {
                     stack.push(succ);
                 }
             }

@@ -195,6 +195,9 @@ fn check_no_pending_spawn_at_return(func: &Func) -> Vec<usize> {
                 _ => pending,
             };
             for succ in block.term.successors() {
+                if succ.index() >= n {
+                    continue; // malformed edge; reported by the structural checks
+                }
                 if out && !pending_in[succ.index()] {
                     pending_in[succ.index()] = true;
                     changed = true;

@@ -123,12 +123,18 @@ fn rewrite_func(
 
         let mut tail_ops: Vec<Op> = Vec::new();
         let mut tail_defs: Vec<crate::ir::VarId> = Vec::new();
+        // Results of loads already converted in this block's spawn group:
+        // a later DAE load whose index reads one of them must wait for the
+        // inserted sync, i.e. it belongs to the continuation (where it is
+        // converted in a later iteration — a chained access→sync→access
+        // pipeline).
+        let mut group_defs: Vec<crate::ir::VarId> = Vec::new();
         for op in rest {
             let convertible = match &op {
                 Op::Load { dae: true, index, .. } => {
                     let mut independent = true;
                     index.for_each_var(&mut |v| {
-                        if tail_defs.contains(&v) {
+                        if tail_defs.contains(&v) || group_defs.contains(&v) {
                             independent = false;
                         }
                     });
@@ -144,6 +150,7 @@ fn rewrite_func(
                     callee,
                     args: vec![index],
                 });
+                group_defs.push(dst);
                 converted += 1;
             } else {
                 if let Some(d) = op.def() {
@@ -152,8 +159,17 @@ fn rewrite_func(
                 tail_ops.push(op);
             }
         }
-        let cont = cfg.blocks.push(Block { ops: tail_ops, term: old_term });
-        cfg.blocks[bid].term = Term::Sync { next: cont };
+        if tail_ops.is_empty() && matches!(old_term, Term::Sync { .. }) {
+            // Empty continuation: nothing runs between the converted loads
+            // and the user's own sync, so the spawned accesses join there
+            // directly — splitting would only create an empty block and a
+            // redundant back-to-back sync (and, after explicitization, an
+            // empty continuation task).
+            cfg.blocks[bid].term = old_term;
+        } else {
+            let cont = cfg.blocks.push(Block { ops: tail_ops, term: old_term });
+            cfg.blocks[bid].term = Term::Sync { next: cont };
+        }
         bi += 1;
     }
     Ok(converted)
@@ -278,6 +294,69 @@ mod tests {
         assert_eq!(n, 2);
         let count = m.funcs.values().filter(|f| f.name == "a_access").count();
         assert_eq!(count, 1, "one access task per global");
+    }
+
+    #[test]
+    fn dae_load_with_empty_continuation_does_not_split() {
+        // The annotated load is the last op before the user's own sync and
+        // its result is never read afterwards: the rewrite must let the
+        // access task join at that sync instead of splitting off an empty
+        // continuation block behind a second, back-to-back sync.
+        let (m, n) = lower_with_dae(
+            "global int a[];
+             void g(int v) { atomic_add(a, 0, v); }
+             void f(int i) {
+                cilk_spawn g(i);
+                #pragma bombyx dae
+                int x = a[i];
+                cilk_sync;
+             }",
+        );
+        assert_eq!(n, 1);
+        let f = &m.funcs[m.func_by_name("f").unwrap()];
+        let syncs = f
+            .cfg()
+            .blocks
+            .values()
+            .filter(|b| matches!(b.term, Term::Sync { .. }))
+            .count();
+        assert_eq!(syncs, 1, "no extra sync for an empty continuation:\n{}", print_module(&m));
+        let empty_sync_blocks = f
+            .cfg()
+            .blocks
+            .values()
+            .filter(|b| b.ops.is_empty() && matches!(b.term, Term::Sync { .. }))
+            .count();
+        assert_eq!(empty_sync_blocks, 0, "{}", print_module(&m));
+    }
+
+    #[test]
+    fn chained_dependent_dae_loads_get_separate_syncs() {
+        // y's index reads x, itself the result of a converted access: y
+        // must not join x's spawn group (its index would be evaluated
+        // before x arrives). It lands in the continuation and is converted
+        // there — two access/sync rounds plus the user's sync.
+        let (m, n) = lower_with_dae(
+            "global int a[];
+             void g(int v) { atomic_add(a, 0, v); }
+             void f(int i) {
+                #pragma bombyx dae
+                int x = a[i];
+                #pragma bombyx dae
+                int y = a[x];
+                cilk_spawn g(y);
+                cilk_sync;
+             }",
+        );
+        assert_eq!(n, 2, "both loads eventually converted");
+        let f = &m.funcs[m.func_by_name("f").unwrap()];
+        let syncs = f
+            .cfg()
+            .blocks
+            .values()
+            .filter(|b| matches!(b.term, Term::Sync { .. }))
+            .count();
+        assert_eq!(syncs, 3, "access(x) | access(y) | user sync:\n{}", print_module(&m));
     }
 
     #[test]

@@ -1,21 +1,52 @@
-//! Lowering pipeline: AST → implicit IR → (DAE) → explicit IR.
+//! Lowering pipeline: AST → implicit IR → (DAE) → explicit Cilk-1 IR.
 //!
 //! Mirrors paper Fig. 3: the AST from the frontend becomes the implicit IR
-//! ([`ast_to_cfg`]); the DAE optimization rewrites annotated memory accesses
-//! into access tasks ([`dae`]); explicitization partitions each function
-//! into *paths* and emits Cilk-1 tasks ([`explicitize`]).
+//! ([`ast_to_cfg`]); the DAE optimization rewrites annotated memory
+//! accesses into access tasks ([`dae`]); explicitization partitions each
+//! function into *paths* and emits Cilk-1 tasks ([`explicitize`]).
+//!
+//! # Pass manager
+//!
+//! The stages are not hardcoded: they are [`pass::Pass`]es run by a
+//! [`pass::PassManager`] (see [`PassManager::standard`] for the Fig. 3
+//! order). The manager enforces stage ordering, checks [`verify_module`]
+//! invariants before and after every pass, records per-pass wall-clock
+//! timings ([`PassTiming`], surfaced on [`CompileResult::timings`] and the
+//! `compile_time` bench), and exposes a snapshot hook that can dump the IR
+//! after any pass.
+//!
+//! # Compile sessions
+//!
+//! [`CompileSession`] lowers a source **once** and memoizes per-target
+//! artifacts, so the emu runtime ([`crate::backend::emu`]), HardCilk
+//! codegen ([`crate::backend::hardcilk`]), the cycle simulator
+//! ([`crate::sim`]) and the interpreters ([`crate::interp`]) all consume
+//! the same cached explicit module instead of each re-running the
+//! pipeline:
+//!
+//! ```ignore
+//! let mut session = CompileSession::new("fib", FIB_SRC, &CompileOptions::standard())?;
+//! let (v, _, _) = session.simulate(session.memory(), "fib", &args, &cfg, &mut NoSimXla)?;
+//! let system = session.hardcilk_system("fib_system")?; // cached per name
+//! let emu = session.emu_program();                     // compiled once
+//! ```
 
 pub mod analysis;
 pub mod ast_to_cfg;
 pub mod dae;
 pub mod explicitize;
+pub mod pass;
 pub mod simplify;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::frontend;
-use crate::ir::verify::{verify_module, Stage};
+use crate::interp::explicit_exec::ExplicitExec;
+use crate::interp::{Memory, NoXla};
+use crate::ir::expr::Value;
 use crate::ir::Module;
+
+pub use pass::{Artifact, Pass, PassManager, PassReport, PassTiming, PipelineStage};
 
 /// Options controlling the pipeline.
 #[derive(Clone, Debug, Default)]
@@ -48,6 +79,9 @@ pub struct CompileResult {
     pub implicit_dae: Module,
     /// The explicit (Cilk-1) IR.
     pub explicit: Module,
+    /// Per-pass wall-clock timings of the pipeline run that produced this
+    /// result (skipped passes appear with `ran == false`).
+    pub timings: Vec<PassTiming>,
 }
 
 /// Full pipeline from source text.
@@ -56,36 +90,182 @@ pub fn compile(name: &str, source: &str, opts: &CompileOptions) -> Result<Compil
     compile_ast(&program, opts)
 }
 
-/// Pipeline from a checked AST.
+/// Pipeline from a checked AST, via the standard pass manager. The
+/// per-stage modules of [`CompileResult`] are captured through the
+/// manager's snapshot hook.
 pub fn compile_ast(
     program: &frontend::ast::Program,
     opts: &CompileOptions,
 ) -> Result<CompileResult> {
-    let mut implicit = ast_to_cfg::lower_program(program)?;
-    if opts.simplify {
-        simplify::simplify_module(&mut implicit);
-    }
-    let errors = verify_module(&implicit, Stage::Implicit);
-    if !errors.is_empty() {
-        bail!("implicit IR verification failed:\n  {}", errors.join("\n  "));
+    let manager = PassManager::standard();
+    // Which pass produces each snapshot we keep is decidable up front, so
+    // the hook clones exactly the modules that end up in the result.
+    let implicit_pass = if opts.simplify { "simplify" } else { "ast_to_cfg" };
+    let implicit_dae_pass = match (opts.dae, opts.simplify) {
+        (true, true) => "simplify_post_dae",
+        (true, false) => "dae",
+        (false, _) => "",
+    };
+    let mut implicit: Option<Module> = None;
+    let mut implicit_dae: Option<Module> = None;
+    let (artifact, report) =
+        manager.run(Artifact::Ast(program.clone()), opts, |pass, artifact| {
+            let Some(module) = artifact.as_module() else { return };
+            if pass == implicit_pass {
+                implicit = Some(module.clone());
+            } else if pass == implicit_dae_pass {
+                implicit_dae = Some(module.clone());
+            }
+        })?;
+    let explicit = artifact.into_module()?;
+    let implicit = implicit.expect("the standard pipeline always lowers the AST");
+    let implicit_dae = implicit_dae.unwrap_or_else(|| implicit.clone());
+    Ok(CompileResult { implicit, implicit_dae, explicit, timings: report.timings })
+}
+
+/// One compilation, many targets: lowers the source once and hands the
+/// cached modules to every backend/runtime (see module docs).
+#[derive(Debug)]
+pub struct CompileSession {
+    name: String,
+    options: CompileOptions,
+    result: CompileResult,
+    emu: Option<crate::backend::emu::EmuProgram>,
+    hardcilk: Vec<(String, crate::backend::hardcilk::HardCilkSystem)>,
+}
+
+impl CompileSession {
+    /// Parse, check and lower `source` through the standard pass manager.
+    pub fn new(name: &str, source: &str, opts: &CompileOptions) -> Result<CompileSession> {
+        let result = compile(name, source, opts)?;
+        Ok(CompileSession::from_result(name, opts.clone(), result))
     }
 
-    let mut implicit_dae = implicit.clone();
-    if opts.dae {
-        dae::apply_dae(&mut implicit_dae)?;
-        if opts.simplify {
-            simplify::simplify_module(&mut implicit_dae);
-        }
-        let errors = verify_module(&implicit_dae, Stage::Implicit);
-        if !errors.is_empty() {
-            bail!("post-DAE IR verification failed:\n  {}", errors.join("\n  "));
+    /// Wrap an existing compilation (e.g. from [`compile_ast`]).
+    pub fn from_result(
+        name: &str,
+        options: CompileOptions,
+        result: CompileResult,
+    ) -> CompileSession {
+        CompileSession {
+            name: name.to_string(),
+            options,
+            result,
+            emu: None,
+            hardcilk: Vec::new(),
         }
     }
 
-    let explicit = explicitize::explicitize_module(&implicit_dae)?;
-    let errors = verify_module(&explicit, Stage::Explicit);
-    if !errors.is_empty() {
-        bail!("explicit IR verification failed:\n  {}", errors.join("\n  "));
+    pub fn name(&self) -> &str {
+        &self.name
     }
-    Ok(CompileResult { implicit, implicit_dae, explicit })
+
+    pub fn options(&self) -> &CompileOptions {
+        &self.options
+    }
+
+    pub fn result(&self) -> &CompileResult {
+        &self.result
+    }
+
+    /// The implicit IR before DAE (what the sequential oracle runs).
+    pub fn implicit(&self) -> &Module {
+        &self.result.implicit
+    }
+
+    pub fn implicit_dae(&self) -> &Module {
+        &self.result.implicit_dae
+    }
+
+    /// The shared explicit module every target consumes.
+    pub fn explicit(&self) -> &Module {
+        &self.result.explicit
+    }
+
+    /// Per-pass timings of the one-time lowering.
+    pub fn timings(&self) -> &[PassTiming] {
+        &self.result.timings
+    }
+
+    /// A fresh memory image over the cached explicit module.
+    pub fn memory(&self) -> Memory {
+        Memory::new(&self.result.explicit)
+    }
+
+    /// A fresh memory image over the implicit module (for the oracle).
+    pub fn implicit_memory(&self) -> Memory {
+        Memory::new(&self.result.implicit)
+    }
+
+    /// A fresh shared (word-atomic) memory image for the WS runtime.
+    pub fn shared_memory(&self) -> crate::ws::SharedMemory {
+        crate::ws::SharedMemory::new(&self.result.explicit)
+    }
+
+    /// The emulation-backend packaging of this compilation, built once.
+    pub fn emu_program(&mut self) -> &crate::backend::emu::EmuProgram {
+        if self.emu.is_none() {
+            self.emu = Some(crate::backend::emu::package(&self.result));
+        }
+        self.emu.as_ref().expect("emu program just populated")
+    }
+
+    /// The generated HardCilk system, memoized per system name.
+    pub fn hardcilk_system(
+        &mut self,
+        system_name: &str,
+    ) -> Result<&crate::backend::hardcilk::HardCilkSystem> {
+        if let Some(i) = self.hardcilk.iter().position(|(n, _)| n == system_name) {
+            return Ok(&self.hardcilk[i].1);
+        }
+        let system = crate::backend::hardcilk::generate(&self.result.explicit, system_name)?;
+        self.hardcilk.push((system_name.to_string(), system));
+        Ok(&self.hardcilk.last().expect("system just pushed").1)
+    }
+
+    /// Sequential oracle over the cached implicit module.
+    pub fn run_oracle(
+        &self,
+        memory: Memory,
+        entry: &str,
+        args: &[Value],
+    ) -> Result<(Value, Memory)> {
+        crate::interp::oracle::run_oracle(&self.result.implicit, memory, entry, args)
+    }
+
+    /// Single-threaded explicit-IR machine over the cached explicit module.
+    pub fn run_explicit(
+        &self,
+        memory: Memory,
+        entry: &str,
+        args: &[Value],
+    ) -> Result<(Value, Memory)> {
+        let mut exec = ExplicitExec::new(&self.result.explicit, memory, NoXla);
+        let value = exec.run(entry, args)?;
+        Ok((value, exec.memory))
+    }
+
+    /// Cycle simulation over the cached explicit module.
+    pub fn simulate(
+        &self,
+        memory: Memory,
+        entry: &str,
+        args: &[Value],
+        config: &crate::sim::SimConfig,
+        xla: &mut dyn crate::sim::SimXla,
+    ) -> Result<(Value, Memory, crate::sim::SimStats)> {
+        crate::sim::simulate(&self.result.explicit, memory, entry, args, config, xla)
+    }
+
+    /// Multithreaded WS run over the cached explicit module.
+    pub fn run_ws(
+        &self,
+        memory: crate::ws::SharedMemory,
+        entry: &str,
+        args: &[Value],
+        config: &crate::ws::WsConfig,
+        sink: Box<dyn crate::ws::XlaSink>,
+    ) -> Result<(Value, crate::ws::SharedMemory, crate::ws::WsStats)> {
+        crate::ws::run(&self.result.explicit, memory, entry, args, config, sink)
+    }
 }

@@ -1,0 +1,432 @@
+//! The lowering pass manager.
+//!
+//! The paper's Fig. 3 pipeline (AST → implicit IR → DAE → explicit Cilk-1
+//! IR) is expressed as a sequence of named [`Pass`]es over an [`Artifact`]
+//! (the AST, then the module at a known [`PipelineStage`]). The
+//! [`PassManager`]:
+//!
+//! - **enforces ordering**: each pass declares the stage it consumes and
+//!   the stage it produces; feeding a pass the wrong stage (e.g.
+//!   explicitize on an un-lowered AST) is an error, not a crash later;
+//! - **verifies invariants between passes**: before and after every
+//!   executed pass the module is checked with [`verify_module`] against the
+//!   declared stage, so a pass that corrupts the CFG is caught at the pass
+//!   boundary with its name in the error;
+//! - **times every pass**: the returned [`PassReport`] carries wall-clock
+//!   durations per pass (rendered by `util::bench::timing_table`, consumed
+//!   by the `compile_time` bench and `bombyx compile --timings`);
+//! - **snapshots**: a hook is invoked after every executed pass with the
+//!   pass name and the produced artifact, which is how `CompileResult`
+//!   captures its per-stage modules and how `--trace-stages`-style dumps
+//!   are implemented without hardcoding the stage list.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::frontend::ast::Program;
+use crate::ir::verify::{verify_module, Stage};
+use crate::ir::Module;
+
+use super::{ast_to_cfg, dae, explicitize, simplify, CompileOptions};
+
+/// Stage of the artifact flowing through the pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineStage {
+    /// Checked AST, not yet lowered.
+    Ast,
+    /// Implicit IR (CFG with `sync` terminators, paper Fig. 4(b)).
+    Implicit,
+    /// Explicit Cilk-1 IR (terminating tasks, paper Fig. 4(c)).
+    Explicit,
+}
+
+impl PipelineStage {
+    pub fn name(self) -> &'static str {
+        match self {
+            PipelineStage::Ast => "ast",
+            PipelineStage::Implicit => "implicit IR",
+            PipelineStage::Explicit => "explicit IR",
+        }
+    }
+
+    /// The `ir::verify` stage used for inter-pass checks (`None` for AST,
+    /// which has no module-level verifier).
+    pub fn verify_stage(self) -> Option<Stage> {
+        match self {
+            PipelineStage::Ast => None,
+            PipelineStage::Implicit => Some(Stage::Implicit),
+            PipelineStage::Explicit => Some(Stage::Explicit),
+        }
+    }
+}
+
+/// The value a pass consumes and produces.
+#[derive(Clone, Debug)]
+pub enum Artifact {
+    Ast(Program),
+    Module(Module),
+}
+
+impl Artifact {
+    pub fn as_module(&self) -> Option<&Module> {
+        match self {
+            Artifact::Module(m) => Some(m),
+            Artifact::Ast(_) => None,
+        }
+    }
+
+    pub fn into_module(self) -> Result<Module> {
+        match self {
+            Artifact::Module(m) => Ok(m),
+            Artifact::Ast(_) => bail!("pipeline ended before AST lowering produced a module"),
+        }
+    }
+}
+
+fn require_module(pass: &str, artifact: Artifact) -> Result<Module> {
+    match artifact {
+        Artifact::Module(m) => Ok(m),
+        Artifact::Ast(_) => {
+            bail!("pass `{pass}` requires lowered (implicit IR) input, got an unlowered AST")
+        }
+    }
+}
+
+/// One named stage of the lowering pipeline.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    /// Stage this pass consumes; checked by the manager before `run`.
+    fn input_stage(&self) -> PipelineStage;
+    /// Stage this pass produces; verified by the manager after `run`.
+    fn output_stage(&self) -> PipelineStage;
+    /// Disabled passes are skipped (recorded in the report with
+    /// `ran == false`); only stage-preserving passes may be disabled.
+    fn enabled(&self, _opts: &CompileOptions) -> bool {
+        true
+    }
+    fn run(&self, artifact: Artifact, opts: &CompileOptions) -> Result<Artifact>;
+}
+
+/// AST → implicit IR (`lower::ast_to_cfg`).
+pub struct AstToCfg;
+
+impl Pass for AstToCfg {
+    fn name(&self) -> &'static str {
+        "ast_to_cfg"
+    }
+
+    fn input_stage(&self) -> PipelineStage {
+        PipelineStage::Ast
+    }
+
+    fn output_stage(&self) -> PipelineStage {
+        PipelineStage::Implicit
+    }
+
+    fn run(&self, artifact: Artifact, _opts: &CompileOptions) -> Result<Artifact> {
+        match artifact {
+            Artifact::Ast(program) => {
+                Ok(Artifact::Module(ast_to_cfg::lower_program(&program)?))
+            }
+            Artifact::Module(_) => {
+                bail!("pass `ast_to_cfg` expects an AST input, got an already-lowered module")
+            }
+        }
+    }
+}
+
+/// CFG cleanup (`lower::simplify`). Appears twice in the standard pipeline
+/// under distinct names; the post-DAE instance only runs when DAE ran.
+pub struct Simplify {
+    pub name: &'static str,
+    pub requires_dae: bool,
+}
+
+impl Pass for Simplify {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn input_stage(&self) -> PipelineStage {
+        PipelineStage::Implicit
+    }
+
+    fn output_stage(&self) -> PipelineStage {
+        PipelineStage::Implicit
+    }
+
+    fn enabled(&self, opts: &CompileOptions) -> bool {
+        opts.simplify && (!self.requires_dae || opts.dae)
+    }
+
+    fn run(&self, artifact: Artifact, _opts: &CompileOptions) -> Result<Artifact> {
+        let mut module = require_module(self.name, artifact)?;
+        simplify::simplify_module(&mut module);
+        Ok(Artifact::Module(module))
+    }
+}
+
+/// Decoupled access–execute rewrite (`lower::dae`).
+pub struct Dae;
+
+impl Pass for Dae {
+    fn name(&self) -> &'static str {
+        "dae"
+    }
+
+    fn input_stage(&self) -> PipelineStage {
+        PipelineStage::Implicit
+    }
+
+    fn output_stage(&self) -> PipelineStage {
+        PipelineStage::Implicit
+    }
+
+    fn enabled(&self, opts: &CompileOptions) -> bool {
+        opts.dae
+    }
+
+    fn run(&self, artifact: Artifact, _opts: &CompileOptions) -> Result<Artifact> {
+        let mut module = require_module("dae", artifact)?;
+        dae::apply_dae(&mut module)?;
+        Ok(Artifact::Module(module))
+    }
+}
+
+/// Implicit → explicit conversion (`lower::explicitize`).
+pub struct Explicitize;
+
+impl Pass for Explicitize {
+    fn name(&self) -> &'static str {
+        "explicitize"
+    }
+
+    fn input_stage(&self) -> PipelineStage {
+        PipelineStage::Implicit
+    }
+
+    fn output_stage(&self) -> PipelineStage {
+        PipelineStage::Explicit
+    }
+
+    fn run(&self, artifact: Artifact, _opts: &CompileOptions) -> Result<Artifact> {
+        let module = require_module("explicitize", artifact)?;
+        Ok(Artifact::Module(explicitize::explicitize_module(&module)?))
+    }
+}
+
+/// Wall-clock record of one pipeline pass.
+#[derive(Clone, Debug)]
+pub struct PassTiming {
+    pub pass: &'static str,
+    pub duration: Duration,
+    /// False when the pass was disabled by the compile options.
+    pub ran: bool,
+}
+
+/// What one `PassManager::run` did.
+#[derive(Clone, Debug, Default)]
+pub struct PassReport {
+    pub timings: Vec<PassTiming>,
+}
+
+impl PassReport {
+    /// Total time spent in executed passes.
+    pub fn total(&self) -> Duration {
+        self.timings.iter().map(|t| t.duration).sum()
+    }
+}
+
+/// Ordered, verified, instrumented pipeline of lowering passes.
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+    verify: bool,
+}
+
+impl Default for PassManager {
+    fn default() -> Self {
+        PassManager::new()
+    }
+}
+
+impl PassManager {
+    pub fn new() -> PassManager {
+        PassManager { passes: Vec::new(), verify: true }
+    }
+
+    /// Append a pass (builder style).
+    pub fn add(mut self, pass: impl Pass + 'static) -> PassManager {
+        self.passes.push(Box::new(pass));
+        self
+    }
+
+    /// Disable the inter-pass `verify_module` checks (bench-only escape
+    /// hatch; the standard pipeline keeps them on).
+    pub fn without_verify(mut self) -> PassManager {
+        self.verify = false;
+        self
+    }
+
+    /// The standard Fig. 3 pipeline:
+    /// `ast_to_cfg → simplify → dae → simplify_post_dae → explicitize`.
+    pub fn standard() -> PassManager {
+        PassManager::new()
+            .add(AstToCfg)
+            .add(Simplify { name: "simplify", requires_dae: false })
+            .add(Dae)
+            .add(Simplify { name: "simplify_post_dae", requires_dae: true })
+            .add(Explicitize)
+    }
+
+    /// Names of the registered passes, in order.
+    pub fn pass_names(&self) -> Vec<&'static str> {
+        self.passes.iter().map(|p| p.name()).collect()
+    }
+
+    /// Run the pipeline over `artifact`. `snapshot` is invoked after every
+    /// *executed* pass with the pass name and the artifact it produced —
+    /// this is the hook `CompileResult` capture and IR dumps are built on.
+    ///
+    /// The initial stage is inferred: an AST is [`PipelineStage::Ast`], a
+    /// module is assumed implicit. Use [`PassManager::run_from`] to feed an
+    /// explicit-IR module to a pipeline of explicit-stage passes.
+    pub fn run(
+        &self,
+        artifact: Artifact,
+        opts: &CompileOptions,
+        snapshot: impl FnMut(&'static str, &Artifact),
+    ) -> Result<(Artifact, PassReport)> {
+        let stage = match &artifact {
+            Artifact::Ast(_) => PipelineStage::Ast,
+            Artifact::Module(_) => PipelineStage::Implicit,
+        };
+        self.run_from(artifact, stage, opts, snapshot)
+    }
+
+    /// [`PassManager::run`] with an explicitly declared input stage.
+    pub fn run_from(
+        &self,
+        mut artifact: Artifact,
+        mut stage: PipelineStage,
+        opts: &CompileOptions,
+        mut snapshot: impl FnMut(&'static str, &Artifact),
+    ) -> Result<(Artifact, PassReport)> {
+        let mut report = PassReport::default();
+        // Verification of the artifact entering each pass: the caller's
+        // input is checked once up front; after that, each executed pass's
+        // post-check doubles as the next pass's pre-check (nothing mutates
+        // the artifact between passes).
+        let mut verified = false;
+        for pass in &self.passes {
+            if pass.input_stage() != stage {
+                bail!(
+                    "pass ordering violation: `{}` expects {} input but the pipeline is at {} \
+                     (did you skip a lowering stage?)",
+                    pass.name(),
+                    pass.input_stage().name(),
+                    stage.name()
+                );
+            }
+            if !pass.enabled(opts) {
+                if pass.output_stage() != pass.input_stage() {
+                    bail!(
+                        "pass `{}` cannot be disabled: it advances the pipeline stage",
+                        pass.name()
+                    );
+                }
+                report.timings.push(PassTiming {
+                    pass: pass.name(),
+                    duration: Duration::ZERO,
+                    ran: false,
+                });
+                continue;
+            }
+            if self.verify && !verified {
+                verify_artifact(pass.name(), "pre", &artifact, stage)?;
+            }
+            let t0 = Instant::now();
+            artifact = pass.run(artifact, opts)?;
+            let duration = t0.elapsed();
+            stage = pass.output_stage();
+            if self.verify {
+                verify_artifact(pass.name(), "post", &artifact, stage)?;
+                verified = true;
+            }
+            report.timings.push(PassTiming { pass: pass.name(), duration, ran: true });
+            snapshot(pass.name(), &artifact);
+        }
+        Ok((artifact, report))
+    }
+}
+
+fn verify_artifact(
+    pass: &str,
+    when: &str,
+    artifact: &Artifact,
+    stage: PipelineStage,
+) -> Result<()> {
+    let (Some(module), Some(vstage)) = (artifact.as_module(), stage.verify_stage()) else {
+        return Ok(());
+    };
+    let errors = verify_module(module, vstage);
+    if !errors.is_empty() {
+        bail!(
+            "pass `{pass}`: {when}-verification against the {} invariants failed:\n  {}",
+            stage.name(),
+            errors.join("\n  ")
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_check;
+
+    const FIB: &str = "int fib(int n) {
+        if (n < 2) return n;
+        int x = cilk_spawn fib(n - 1);
+        int y = cilk_spawn fib(n - 2);
+        cilk_sync;
+        return x + y;
+    }";
+
+    fn fib_ast() -> Program {
+        parse_and_check("t", FIB).unwrap().0
+    }
+
+    // (Ordering enforcement, skip reporting and corruption detection are
+    // covered by rust/tests/pass_manager_tests.rs; the tests here exercise
+    // only what the integration suite cannot see from outside.)
+
+    #[test]
+    fn snapshot_hook_sees_each_executed_pass() {
+        let pm = PassManager::standard();
+        let opts = CompileOptions::standard();
+        let mut seen = Vec::new();
+        pm.run(Artifact::Ast(fib_ast()), &opts, |pass, artifact| {
+            seen.push((pass, artifact.as_module().is_some()));
+        })
+        .unwrap();
+        assert_eq!(seen.len(), 5);
+        assert!(seen.iter().all(|(_, is_module)| *is_module));
+    }
+
+    #[test]
+    fn run_from_accepts_an_explicit_stage_module() {
+        // An explicit-IR module fed to an empty manager round-trips; the
+        // inferred-stage entry point would have misclassified it.
+        let pm = PassManager::standard();
+        let opts = CompileOptions::no_dae();
+        let (artifact, _) = pm.run(Artifact::Ast(fib_ast()), &opts, |_, _| {}).unwrap();
+        let module = artifact.into_module().unwrap();
+        let empty = PassManager::new();
+        let (out, report) = empty
+            .run_from(Artifact::Module(module), PipelineStage::Explicit, &opts, |_, _| {})
+            .unwrap();
+        assert!(matches!(out, Artifact::Module(_)));
+        assert!(report.timings.is_empty());
+    }
+}

@@ -17,14 +17,14 @@ use std::process::ExitCode;
 use anyhow::{anyhow, bail, Context, Result};
 
 use bombyx::hls::{estimate, CostModel};
-use bombyx::interp::Memory;
 use bombyx::ir::expr::Value;
 use bombyx::ir::print::{print_cilk1, print_module};
-use bombyx::lower::{compile, CompileOptions};
-use bombyx::sim::{simulate, NoSimXla, SimConfig};
+use bombyx::lower::{CompileOptions, CompileSession};
+use bombyx::sim::{NoSimXla, SimConfig};
+use bombyx::util::bench::timing_table;
 use bombyx::util::table::{commas, Table};
 use bombyx::workloads::graphgen;
-use bombyx::ws::{self, SharedMemory, WsConfig};
+use bombyx::ws::{self, WsConfig};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -96,7 +96,7 @@ fn print_usage() {
     println!(
         "bombyx — OpenCilk-style task parallelism compiled for FPGA TLP systems\n\n\
          USAGE:\n  \
-         bombyx compile  <file.cilk> [--dae] [--dump implicit|explicit|cilk1] [--trace-stages]\n  \
+         bombyx compile  <file.cilk> [--dae] [--dump implicit|explicit|cilk1] [--trace-stages] [--timings]\n  \
          bombyx codegen  <file.cilk> [--dae] --out <dir> [--system <name>]\n  \
          bombyx estimate <file.cilk> [--dae]\n  \
          bombyx run      <file.cilk> <entry> [int args...] [--dae] [--workers N]\n  \
@@ -105,7 +105,9 @@ fn print_usage() {
     );
 }
 
-fn load_and_compile(flags: &Flags) -> Result<bombyx::lower::CompileResult> {
+/// Build a compile session (one lowering, shared by every target the
+/// command touches).
+fn load_session(flags: &Flags) -> Result<CompileSession> {
     let path = flags
         .positional
         .first()
@@ -116,12 +118,16 @@ fn load_and_compile(flags: &Flags) -> Result<bombyx::lower::CompileResult> {
     } else {
         CompileOptions::no_dae()
     };
-    compile(path, &source, &opts)
+    CompileSession::new(path, &source, &opts)
 }
 
 fn cmd_compile(args: &[String]) -> Result<()> {
     let flags = parse_flags(args, &["dump"])?;
-    let result = load_and_compile(&flags)?;
+    let session = load_session(&flags)?;
+    let result = session.result();
+    if flags.switches.contains("timings") {
+        println!("{}", timing_table(session.timings()));
+    }
     if flags.switches.contains("trace-stages") {
         println!("=== stage 1: implicit IR ===\n{}", print_module(&result.implicit));
         println!("=== stage 2: implicit IR after DAE ===\n{}", print_module(&result.implicit_dae));
@@ -144,9 +150,9 @@ fn cmd_compile(args: &[String]) -> Result<()> {
 
 fn cmd_codegen(args: &[String]) -> Result<()> {
     let flags = parse_flags(args, &["out", "system"])?;
-    let result = load_and_compile(&flags)?;
+    let mut session = load_session(&flags)?;
     let name = flags.options.get("system").map(String::as_str).unwrap_or("bombyx_system");
-    let system = bombyx::backend::hardcilk::generate(&result.explicit, name)?;
+    let system = session.hardcilk_system(name)?;
     match flags.options.get("out") {
         Some(dir) => {
             system.write_to(std::path::Path::new(dir))?;
@@ -170,13 +176,14 @@ fn cmd_codegen(args: &[String]) -> Result<()> {
 
 fn cmd_estimate(args: &[String]) -> Result<()> {
     let flags = parse_flags(args, &[])?;
-    let result = load_and_compile(&flags)?;
+    let session = load_session(&flags)?;
+    let explicit = session.explicit();
     let model = CostModel::default();
     let mut table = Table::new(["task", "role", "LUT", "FF", "BRAM", "DSP"]);
     let mut total = bombyx::hls::ResourceEstimate::default();
-    for fid in bombyx::ir::explicit::explicit_tasks(&result.explicit) {
-        let f = &result.explicit.funcs[fid];
-        let est = estimate(&model, &result.explicit, f);
+    for fid in bombyx::ir::explicit::explicit_tasks(explicit) {
+        let f = &explicit.funcs[fid];
+        let est = estimate(&model, explicit, f);
         total = total + est;
         table.row([
             f.name.clone(),
@@ -214,7 +221,7 @@ fn parse_task_args(flags: &Flags) -> Result<(String, Vec<Value>)> {
 
 fn cmd_run(args: &[String]) -> Result<()> {
     let flags = parse_flags(args, &["workers"])?;
-    let result = load_and_compile(&flags)?;
+    let session = load_session(&flags)?;
     let (entry, task_args) = parse_task_args(&flags)?;
     let workers = flags
         .options
@@ -222,11 +229,9 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .map(|w| w.parse::<usize>())
         .transpose()?
         .unwrap_or_else(|| WsConfig::default().workers);
-    let mem = SharedMemory::new(&result.explicit);
     let cfg = WsConfig { workers, steal_tries: 4 };
-    let (value, _, stats) = ws::run(
-        &result.explicit,
-        mem,
+    let (value, _, stats) = session.run_ws(
+        session.shared_memory(),
         &entry,
         &task_args,
         &cfg,
@@ -244,7 +249,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
 
 fn cmd_sim(args: &[String]) -> Result<()> {
     let flags = parse_flags(args, &["pes", "mem-latency"])?;
-    let result = load_and_compile(&flags)?;
+    let session = load_session(&flags)?;
     let (entry, task_args) = parse_task_args(&flags)?;
     let mut cfg = SimConfig::default();
     if let Some(p) = flags.options.get("pes") {
@@ -253,8 +258,8 @@ fn cmd_sim(args: &[String]) -> Result<()> {
     if let Some(l) = flags.options.get("mem-latency") {
         cfg.mem_latency = l.parse()?;
     }
-    let mem = Memory::new(&result.explicit);
-    let (value, _, stats) = simulate(&result.explicit, mem, &entry, &task_args, &cfg, &mut NoSimXla)?;
+    let (value, _, stats) =
+        session.simulate(session.memory(), &entry, &task_args, &cfg, &mut NoSimXla)?;
     println!("result: {value}");
     println!(
         "cycles: {} ({:.1} us @ {} MHz)   tasks: {}",

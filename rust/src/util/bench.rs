@@ -103,6 +103,20 @@ pub fn throughput(name: &str, stats: &Stats, items: u64, unit: &str) {
     println!("bench {name:<42} throughput {formatted} ({items} {unit} / median run)");
 }
 
+/// Render the pass manager's per-pass timings as a markdown-pipe table.
+/// Used by the `compile_time` bench and `bombyx compile --timings`.
+pub fn timing_table(timings: &[crate::lower::PassTiming]) -> String {
+    let mut table = super::table::Table::new(["pass", "time", "status"]);
+    for t in timings {
+        table.row([
+            t.pass.to_string(),
+            if t.ran { fmt_duration(t.duration) } else { "-".to_string() },
+            if t.ran { "ran".to_string() } else { "skipped".to_string() },
+        ]);
+    }
+    table.render()
+}
+
 /// Standard header for a bench binary; prints build mode so logs are
 /// self-describing.
 pub fn banner(bench_name: &str, what: &str) {
@@ -136,6 +150,19 @@ mod tests {
         assert_eq!(fmt_duration(Duration::from_micros(5)), "5.00 us");
         assert_eq!(fmt_duration(Duration::from_millis(5)), "5.00 ms");
         assert_eq!(fmt_duration(Duration::from_secs(5)), "5.000 s");
+    }
+
+    #[test]
+    fn timing_table_renders_skips() {
+        use crate::lower::PassTiming;
+        let rows = [
+            PassTiming { pass: "ast_to_cfg", duration: Duration::from_micros(12), ran: true },
+            PassTiming { pass: "dae", duration: Duration::ZERO, ran: false },
+        ];
+        let t = timing_table(&rows);
+        assert!(t.contains("ast_to_cfg"), "{t}");
+        assert!(t.contains("12.00 us"), "{t}");
+        assert!(t.contains("skipped"), "{t}");
     }
 
     #[test]

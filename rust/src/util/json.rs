@@ -29,7 +29,11 @@ impl Json {
         if let Json::Object(map) = self {
             map.insert(key.to_string(), value.into());
         } else {
-            panic!("Json::set on non-object");
+            panic!(
+                "Json::set(\"{key}\") called on a non-object value: {} — build the node with \
+                 Json::object() first",
+                self.pretty()
+            );
         }
         self
     }

@@ -3,7 +3,7 @@
 //! the simulator and the WS runtime. Skipped (with a notice) when
 //! artifacts are not built.
 
-use bombyx::coordinator::driver::{run_relax_scalar, run_relax_sim};
+use bombyx::coordinator::RelaxExperiment;
 use bombyx::ir::Value;
 use bombyx::lower::{compile, CompileOptions};
 use bombyx::runtime::{RelaxService, XlaRuntime};
@@ -28,8 +28,10 @@ fn relax_sim_xla_matches_scalar_end_to_end() {
     let graph = graphgen::tree(3, 5); // 121 nodes
     let cfg = SimConfig::default();
     let runtime = XlaRuntime::load_dir(artifacts_dir()).unwrap();
-    let xla = run_relax_sim(runtime, &graph, 7, &cfg).unwrap();
-    let scalar = run_relax_scalar(&graph, 7, &cfg).unwrap();
+    // One compile session serves both datapaths.
+    let exp = RelaxExperiment::new().unwrap();
+    let xla = exp.run_sim(runtime, &graph, 7, &cfg).unwrap();
+    let scalar = exp.run_scalar(&graph, 7, &cfg).unwrap();
     assert_eq!(xla.nodes_expanded, scalar.nodes_expanded);
     let rel = (xla.feat_checksum - scalar.feat_checksum).abs()
         / scalar.feat_checksum.abs().max(1e-9);

@@ -1,0 +1,142 @@
+//! Integration tests for the lowering pass manager and the multi-target
+//! compile session: ordering enforcement, inter-pass verification, timing
+//! counters, and per-target artifact memoization.
+
+use bombyx::frontend::parse_and_check;
+use bombyx::interp::Memory;
+use bombyx::ir::cfg::Term;
+use bombyx::ir::print::print_module;
+use bombyx::ir::{BlockId, Value};
+use bombyx::lower::pass::{Artifact, Explicitize, Pass, PassManager, PipelineStage};
+use bombyx::lower::{compile, CompileOptions, CompileSession};
+use bombyx::sim::{NoSimXla, SimConfig};
+use bombyx::ws::{NoXlaSink, WsConfig};
+
+const FIB: &str = "int fib(int n) {
+    if (n < 2) return n;
+    int x = cilk_spawn fib(n - 1);
+    int y = cilk_spawn fib(n - 2);
+    cilk_sync;
+    return x + y;
+}";
+
+#[test]
+fn standard_pipeline_reports_per_pass_timings() {
+    let r = compile("fib", FIB, &CompileOptions::standard()).unwrap();
+    let names: Vec<&str> = r.timings.iter().map(|t| t.pass).collect();
+    assert_eq!(
+        names,
+        vec!["ast_to_cfg", "simplify", "dae", "simplify_post_dae", "explicitize"]
+    );
+    assert!(r.timings.iter().all(|t| t.ran), "{:?}", r.timings);
+}
+
+#[test]
+fn disabled_passes_are_reported_as_skipped() {
+    let r = compile("fib", FIB, &CompileOptions::no_dae()).unwrap();
+    let dae = r.timings.iter().find(|t| t.pass == "dae").unwrap();
+    assert!(!dae.ran, "dae must be skipped under no_dae options");
+}
+
+#[test]
+fn pass_ordering_is_enforced() {
+    // Explicitize fed an un-lowered AST: the manager rejects it before the
+    // pass runs.
+    let (program, _) = parse_and_check("t", FIB).unwrap();
+    let manager = PassManager::new().add(Explicitize);
+    let err = manager
+        .run(Artifact::Ast(program), &CompileOptions::standard(), |_, _| {})
+        .unwrap_err();
+    assert!(err.to_string().contains("pass ordering violation"), "{err}");
+}
+
+#[test]
+fn explicitize_rejects_unlowered_input() {
+    let (program, _) = parse_and_check("t", FIB).unwrap();
+    let err = Explicitize
+        .run(Artifact::Ast(program), &CompileOptions::standard())
+        .unwrap_err();
+    assert!(err.to_string().contains("unlowered AST"), "{err}");
+}
+
+#[test]
+fn interpass_verification_catches_a_corrupted_cfg() {
+    struct CorruptTerminator;
+    impl Pass for CorruptTerminator {
+        fn name(&self) -> &'static str {
+            "corrupt_terminator"
+        }
+        fn input_stage(&self) -> PipelineStage {
+            PipelineStage::Implicit
+        }
+        fn output_stage(&self) -> PipelineStage {
+            PipelineStage::Implicit
+        }
+        fn run(
+            &self,
+            artifact: Artifact,
+            _opts: &CompileOptions,
+        ) -> anyhow::Result<Artifact> {
+            let mut module = artifact.into_module()?;
+            let (_, func) = module.funcs.iter_mut().next().expect("one function");
+            let entry = func.cfg().entry;
+            func.cfg_mut().blocks[entry].term = Term::Jump(BlockId::new(9_999));
+            Ok(Artifact::Module(module))
+        }
+    }
+    let r = compile("fib", FIB, &CompileOptions::no_dae()).unwrap();
+    let manager = PassManager::new().add(CorruptTerminator);
+    let err = manager
+        .run(Artifact::Module(r.implicit.clone()), &CompileOptions::no_dae(), |_, _| {})
+        .unwrap_err();
+    let text = err.to_string();
+    assert!(text.contains("corrupt_terminator"), "{text}");
+    assert!(text.contains("post-verification"), "{text}");
+    assert!(text.contains("nonexistent"), "{text}");
+}
+
+#[test]
+fn compile_session_memoizes_target_artifacts() {
+    let mut session = CompileSession::new("fib", FIB, &CompileOptions::no_dae()).unwrap();
+    let explicit_before = print_module(session.explicit());
+
+    let emu1: *const bombyx::backend::emu::EmuProgram = session.emu_program();
+    let emu2: *const bombyx::backend::emu::EmuProgram = session.emu_program();
+    assert_eq!(emu1, emu2, "emu program must be packaged once and cached");
+
+    let sys1: *const bombyx::backend::hardcilk::HardCilkSystem =
+        session.hardcilk_system("sys").unwrap();
+    let sys2: *const bombyx::backend::hardcilk::HardCilkSystem =
+        session.hardcilk_system("sys").unwrap();
+    assert_eq!(sys1, sys2, "hardcilk system must be generated once per name");
+
+    // Repeated target requests never re-lower: the shared explicit module
+    // is bit-identical, and the emu packaging wraps that same module.
+    assert_eq!(print_module(session.explicit()), explicit_before);
+    assert_eq!(print_module(&session.emu_program().module), explicit_before);
+}
+
+#[test]
+fn session_targets_agree_on_the_cached_module() {
+    let session = CompileSession::new("fib", FIB, &CompileOptions::no_dae()).unwrap();
+    let args = [Value::I64(10)];
+    let (v_oracle, _) =
+        session.run_oracle(Memory::new(session.implicit()), "fib", &args).unwrap();
+    let (v_explicit, _) = session.run_explicit(session.memory(), "fib", &args).unwrap();
+    let (v_sim, _, _) = session
+        .simulate(session.memory(), "fib", &args, &SimConfig::default(), &mut NoSimXla)
+        .unwrap();
+    let (v_ws, _, _) = session
+        .run_ws(
+            session.shared_memory(),
+            "fib",
+            &args,
+            &WsConfig { workers: 2, steal_tries: 2 },
+            Box::new(NoXlaSink),
+        )
+        .unwrap();
+    assert_eq!(v_oracle.as_i64(), 55);
+    assert_eq!(v_explicit.as_i64(), 55);
+    assert_eq!(v_sim.as_i64(), 55);
+    assert_eq!(v_ws.as_i64(), 55);
+}

@@ -1,0 +1,123 @@
+//! Compile-only stub of the `xla` PJRT binding.
+//!
+//! The real binding wraps the PJRT CPU client and is only exercised by the
+//! artifact-gated paths (`bombyx::runtime`, `make artifacts`); every test,
+//! bench and example that needs it probes `XlaRuntime::load_dir` first and
+//! skips when it fails. This stub keeps those paths *compiling* in an
+//! offline environment: every runtime entry point returns an error, so the
+//! probes fail cleanly and the gated code is never reached.
+//!
+//! The API surface (and only that surface) matches what
+//! `bombyx::runtime::{client, relax}` uses. Swap this crate for the real
+//! binding in `Cargo.toml` to enable the XLA datapath.
+
+use std::fmt;
+
+/// Stub error: every fallible entry point returns this.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+fn unavailable() -> Error {
+    Error("XLA PJRT runtime is not available in this build (vendor/xla stub)".to_string())
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a `Literal` can hold / be read back as.
+pub trait ArrayElement {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+impl ArrayElement for i32 {}
+impl ArrayElement for i64 {}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: ArrayElement>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{err:?}").contains("stub"));
+    }
+}
