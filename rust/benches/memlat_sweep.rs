@@ -1,6 +1,7 @@
 //! A-mem ablation: memory-latency sweep — DAE's benefit as a function of
 //! HBM service latency (the §II-C mechanism made quantitative). One
-//! `BfsExperiment` serves every latency point.
+//! `BfsExperiment` serves every latency point; the grid is sharded across
+//! OS threads (`BfsExperiment::run_grid`).
 
 use bombyx::coordinator::BfsExperiment;
 use bombyx::sim::SimConfig;
@@ -15,13 +16,16 @@ fn main() {
     );
     let exp = BfsExperiment::new().expect("compile bfs sessions");
     let graph = graphgen::tree(4, 7);
+    let latencies = [10u32, 20, 40, 80, 160, 320];
+    let configs: Vec<SimConfig> = latencies
+        .iter()
+        .map(|&lat| SimConfig { mem_latency: lat, ..SimConfig::paper() })
+        .collect();
+    let results = exp.run_grid(&graph, &configs).expect("simulation");
     let mut table = Table::new(["mem latency", "non-DAE cycles", "DAE cycles", "reduction"]);
     let mut last_reduction = -1.0f64;
     let mut monotone = true;
-    for lat in [10u32, 20, 40, 80, 160, 320] {
-        let mut cfg = SimConfig::paper();
-        cfg.mem_latency = lat;
-        let cmp = exp.run(&graph, &cfg).expect("simulation");
+    for (lat, cmp) in latencies.iter().zip(&results) {
         if cmp.reduction() < last_reduction {
             monotone = false;
         }

@@ -1,7 +1,9 @@
 //! A-pes ablation: PE-count sweep — how the DAE advantage evolves as the
 //! system scales from the paper's 1-PE configuration to 16 PEs per type.
-//! One `BfsExperiment` (two compile sessions) serves the whole sweep; only
-//! the simulator runs per configuration.
+//! One `BfsExperiment` (two compile sessions) serves the whole sweep; the
+//! grid points are sharded across OS threads (`BfsExperiment::run_grid`),
+//! so the bench scales with cores — only the simulator runs per
+//! configuration.
 
 use bombyx::coordinator::BfsExperiment;
 use bombyx::sim::SimConfig;
@@ -16,6 +18,14 @@ fn main() {
     );
     let exp = BfsExperiment::new().expect("compile bfs sessions");
     let graph = graphgen::tree(4, 7);
+    let pe_counts = [1u32, 2, 4, 8, 16];
+    let configs: Vec<SimConfig> = pe_counts
+        .iter()
+        .map(|&pes| SimConfig { default_pes: pes, ..SimConfig::paper() })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let results = exp.run_grid(&graph, &configs).expect("simulation");
+    let elapsed = t0.elapsed();
     let mut table = Table::new([
         "PEs/type",
         "non-DAE cycles",
@@ -23,14 +33,8 @@ fn main() {
         "reduction",
         "DAE speedup vs 1 PE",
     ]);
-    let mut base_dae = 0u64;
-    for pes in [1u32, 2, 4, 8, 16] {
-        let mut cfg = SimConfig::paper();
-        cfg.default_pes = pes;
-        let cmp = exp.run(&graph, &cfg).expect("simulation");
-        if pes == 1 {
-            base_dae = cmp.dae_cycles;
-        }
+    let base_dae = results[0].dae_cycles;
+    for (pes, cmp) in pe_counts.iter().zip(&results) {
         table.row([
             pes.to_string(),
             commas(cmp.plain_cycles),
@@ -40,5 +44,11 @@ fn main() {
         ]);
     }
     print!("{}", table.render());
-    println!("\n(The paper evaluates only the 1-PE configurations; the sweep probes the\n design point where the memory channel rather than the PE count saturates.)");
+    println!(
+        "\n({} grid points simulated in {:.2}s across {} worker threads.)",
+        configs.len(),
+        elapsed.as_secs_f64(),
+        BfsExperiment::grid_workers(configs.len())
+    );
+    println!("(The paper evaluates only the 1-PE configurations; the sweep probes the\n design point where the memory channel rather than the PE count saturates.)");
 }

@@ -2,9 +2,13 @@
 //!
 //! - [`hardcilk`]: synthesizable HLS C++ PEs + JSON system descriptor (the
 //!   paper's primary backend, §II-B);
+//! - [`rtl`]: direct synthesizable Verilog — FSM+datapath PEs, pipelined
+//!   DAE access PEs at II=1, task queues and a dispatch stub, with no HLS
+//!   tool in the loop;
 //! - [`emu`]: the Cilk-1 emulation backend — packages an explicit module
 //!   for execution on the software work-stealing runtime ([`crate::ws`]),
 //!   used to verify semantic equivalence with the original program.
 
 pub mod emu;
 pub mod hardcilk;
+pub mod rtl;

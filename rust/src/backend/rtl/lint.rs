@@ -1,0 +1,663 @@
+//! Structural lint for the emitted Verilog.
+//!
+//! Not a simulator and not a full parser — a token-level checker for the
+//! invariants a structurally-sane netlist must satisfy, tuned to (and
+//! enforced against) the emitter's own output style:
+//!
+//! - balanced `module`/`endmodule`, no nested modules;
+//! - every identifier used inside a module is declared **before** use
+//!   (ports, `wire`, `reg`, `parameter`/`localparam`, instance names);
+//! - one driver per `reg` (a reg is assigned from at most one `always`
+//!   block and never by a continuous `assign`), at most one `assign` per
+//!   wire, and no assignment to input ports;
+//! - instantiated module names resolve within the linted file set.
+//!
+//! The lint runs as the pass-manager's post-verification for the `rtl`
+//! stage (see `lower::pass`), so a codegen regression that emits an
+//! undeclared wire or a doubly-driven register fails the pipeline at the
+//! pass boundary, with the module and line in the error.
+
+use std::collections::{HashMap, HashSet};
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Ident,
+    Number,
+    Sym,
+}
+
+struct Tok {
+    kind: Kind,
+    text: String,
+    line: usize,
+}
+
+const KEYWORDS: &[&str] = &[
+    "module", "endmodule", "input", "output", "inout", "wire", "reg", "signed", "assign",
+    "always", "posedge", "negedge", "if", "else", "begin", "end", "case", "endcase", "default",
+    "localparam", "parameter", "integer", "genvar", "generate", "endgenerate",
+];
+
+fn is_keyword(s: &str) -> bool {
+    KEYWORDS.contains(&s)
+}
+
+fn lex(source: &str) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    let bytes: Vec<char> = source.chars().collect();
+    let mut i = 0;
+    let mut line = 1;
+    while i < bytes.len() {
+        let c = bytes[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if c == '/' && i + 1 < bytes.len() && bytes[i + 1] == '/' {
+            while i < bytes.len() && bytes[i] != '\n' {
+                i += 1;
+            }
+        } else if c == '/' && i + 1 < bytes.len() && bytes[i + 1] == '*' {
+            i += 2;
+            while i + 1 < bytes.len() && !(bytes[i] == '*' && bytes[i + 1] == '/') {
+                if bytes[i] == '\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            i = (i + 2).min(bytes.len());
+        } else if c.is_alphabetic() || c == '_' || c == '$' {
+            let start = i;
+            while i < bytes.len()
+                && (bytes[i].is_alphanumeric() || bytes[i] == '_' || bytes[i] == '$')
+            {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Ident,
+                text: bytes[start..i].iter().collect(),
+                line,
+            });
+        } else if c.is_ascii_digit() {
+            let start = i;
+            while i < bytes.len() && (bytes[i].is_ascii_digit() || bytes[i] == '_') {
+                i += 1;
+            }
+            // Sized literal: 16'd42, 1'b0, 64'sd7, 64'hFF...
+            if i < bytes.len() && bytes[i] == '\'' {
+                i += 1;
+                if i < bytes.len() && (bytes[i] == 's' || bytes[i] == 'S') {
+                    i += 1;
+                }
+                if i < bytes.len() && "bdhoBDHO".contains(bytes[i]) {
+                    i += 1;
+                }
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_hexdigit()
+                        || bytes[i] == '_'
+                        || bytes[i] == 'x'
+                        || bytes[i] == 'X'
+                        || bytes[i] == 'z'
+                        || bytes[i] == 'Z')
+                {
+                    i += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: Kind::Number,
+                text: bytes[start..i].iter().collect(),
+                line,
+            });
+        } else if c == '<' && i + 1 < bytes.len() && bytes[i + 1] == '=' {
+            toks.push(Tok { kind: Kind::Sym, text: "<=".to_string(), line });
+            i += 2;
+        } else {
+            toks.push(Tok { kind: Kind::Sym, text: c.to_string(), line });
+            i += 1;
+        }
+    }
+    toks
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Decl {
+    PortIn,
+    PortOut,
+    Wire,
+    Reg,
+    Param,
+    Instance,
+}
+
+/// Lint a self-contained Verilog text (all instantiated modules must be
+/// defined in `source` itself).
+pub fn lint(source: &str) -> Vec<String> {
+    let known = collect_module_names(source);
+    lint_with_modules(source, &known)
+}
+
+/// Module names defined in a text (for multi-file lint runs).
+pub fn collect_module_names(source: &str) -> HashSet<String> {
+    let toks = lex(source);
+    let mut names = HashSet::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].kind == Kind::Ident && toks[i].text == "module" {
+            if let Some(t) = toks.get(i + 1) {
+                if t.kind == Kind::Ident {
+                    names.insert(t.text.clone());
+                }
+            }
+        }
+        i += 1;
+    }
+    names
+}
+
+/// Lint one file against a set of externally-known module names.
+pub fn lint_with_modules(source: &str, known_modules: &HashSet<String>) -> Vec<String> {
+    let toks = lex(source);
+    let mut errors = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].kind == Kind::Ident && toks[i].text == "module" {
+            i = lint_module(&toks, i, known_modules, &mut errors);
+        } else if toks[i].kind == Kind::Ident && toks[i].text == "endmodule" {
+            errors.push(format!(
+                "line {}: `endmodule` without a matching `module`",
+                toks[i].line
+            ));
+            i += 1;
+        } else {
+            i += 1;
+        }
+    }
+    errors
+}
+
+struct ModCx {
+    name: String,
+    declared: HashMap<String, (usize, Decl)>, // name -> (token idx, kind)
+    skip_use: HashSet<usize>,                 // token idxs excluded from use-checking
+    assign_drivers: HashMap<String, usize>,   // name -> count of `assign` statements
+    reg_drivers: HashMap<String, HashSet<usize>>, // name -> always-block ids
+    always_count: usize,
+}
+
+impl ModCx {
+    fn declare(&mut self, toks: &[Tok], idx: usize, kind: Decl, errors: &mut Vec<String>) {
+        let name = toks[idx].text.clone();
+        self.skip_use.insert(idx);
+        if let Some((_, prev)) = self.declared.get(&name) {
+            errors.push(format!(
+                "line {}: module `{}`: `{}` redeclared (first as {:?})",
+                toks[idx].line, self.name, name, prev
+            ));
+        } else {
+            self.declared.insert(name, (idx, kind));
+        }
+    }
+}
+
+/// Skip a balanced `open...close` group starting at `i` (which must point
+/// at `open`); returns the index just past the matching close.
+fn skip_balanced(toks: &[Tok], mut i: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0;
+    while i < toks.len() {
+        if toks[i].kind == Kind::Sym && toks[i].text == open {
+            depth += 1;
+        } else if toks[i].kind == Kind::Sym && toks[i].text == close {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    i
+}
+
+fn is_sym(toks: &[Tok], i: usize, s: &str) -> bool {
+    toks.get(i).map(|t| t.kind == Kind::Sym && t.text == s).unwrap_or(false)
+}
+
+fn is_kw(toks: &[Tok], i: usize, s: &str) -> bool {
+    toks.get(i).map(|t| t.kind == Kind::Ident && t.text == s).unwrap_or(false)
+}
+
+/// Parse one module starting at the `module` keyword; returns the index
+/// just past `endmodule`.
+fn lint_module(
+    toks: &[Tok],
+    start: usize,
+    known_modules: &HashSet<String>,
+    errors: &mut Vec<String>,
+) -> usize {
+    let mut i = start + 1;
+    let mut cx = ModCx {
+        name: String::new(),
+        declared: HashMap::new(),
+        skip_use: HashSet::new(),
+        assign_drivers: HashMap::new(),
+        reg_drivers: HashMap::new(),
+        always_count: 0,
+    };
+    if toks.get(i).map(|t| t.kind) == Some(Kind::Ident) {
+        cx.name = toks[i].text.clone();
+        cx.skip_use.insert(i);
+        i += 1;
+    } else {
+        errors.push(format!("line {}: `module` without a name", toks[start].line));
+    }
+    // Parameter header: #( parameter X = ..., ... )
+    if is_sym(toks, i, "#") {
+        let close = skip_balanced(toks, i + 1, "(", ")");
+        let mut j = i + 2;
+        while j + 1 < close {
+            if is_kw(toks, j, "parameter") {
+                j += 1;
+                while is_sym(toks, j, "[") {
+                    j = skip_balanced(toks, j, "[", "]");
+                }
+                if toks.get(j).map(|t| t.kind) == Some(Kind::Ident) {
+                    cx.declare(toks, j, Decl::Param, errors);
+                }
+            }
+            j += 1;
+        }
+        i = close;
+    }
+    // Port list.
+    if is_sym(toks, i, "(") {
+        let close = skip_balanced(toks, i, "(", ")");
+        let mut j = i + 1;
+        while j + 1 < close {
+            if is_kw(toks, j, "input") || is_kw(toks, j, "output") || is_kw(toks, j, "inout") {
+                let kind = if toks[j].text == "input" { Decl::PortIn } else { Decl::PortOut };
+                j += 1;
+                while is_kw(toks, j, "wire") || is_kw(toks, j, "reg") || is_kw(toks, j, "signed")
+                {
+                    j += 1;
+                }
+                while is_sym(toks, j, "[") {
+                    j = skip_balanced(toks, j, "[", "]");
+                }
+                if toks.get(j).map(|t| t.kind) == Some(Kind::Ident) {
+                    cx.declare(toks, j, kind, errors);
+                }
+            }
+            j += 1;
+        }
+        i = close;
+    }
+    if is_sym(toks, i, ";") {
+        i += 1;
+    }
+    // Body.
+    let body_start = i;
+    let mut body_end = None;
+    while i < toks.len() {
+        if toks[i].kind == Kind::Ident {
+            match toks[i].text.as_str() {
+                "endmodule" => {
+                    body_end = Some(i);
+                    break;
+                }
+                "module" => {
+                    errors.push(format!(
+                        "line {}: module `{}`: nested `module` before `endmodule`",
+                        toks[i].line, cx.name
+                    ));
+                    body_end = Some(i);
+                    break;
+                }
+                "wire" | "reg" | "integer" | "genvar" => {
+                    let kind = if toks[i].text == "reg" { Decl::Reg } else { Decl::Wire };
+                    i = parse_decl(toks, i + 1, kind, &mut cx, errors);
+                }
+                "localparam" | "parameter" => {
+                    i = parse_decl(toks, i + 1, Decl::Param, &mut cx, errors);
+                }
+                "assign" => {
+                    i = parse_assign(toks, i + 1, &mut cx, errors);
+                }
+                "always" => {
+                    i = parse_always(toks, i + 1, &mut cx);
+                }
+                _ => {
+                    i = parse_instantiation(toks, i, &mut cx, known_modules, errors);
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    let Some(end) = body_end else {
+        errors.push(format!(
+            "line {}: module `{}` is missing its `endmodule`",
+            toks[start].line, cx.name
+        ));
+        return toks.len();
+    };
+
+    // Use-before-declaration check over the whole module span.
+    for idx in start..end {
+        let t = &toks[idx];
+        if t.kind != Kind::Ident || is_keyword(&t.text) || t.text.starts_with('$') {
+            continue;
+        }
+        if cx.skip_use.contains(&idx) {
+            continue;
+        }
+        // `.port` connection names are not module-scope identifiers.
+        if idx > 0 && toks[idx - 1].kind == Kind::Sym && toks[idx - 1].text == "." {
+            continue;
+        }
+        match cx.declared.get(&t.text) {
+            None => errors.push(format!(
+                "line {}: module `{}`: `{}` used but never declared",
+                t.line, cx.name, t.text
+            )),
+            Some((decl_idx, _)) if *decl_idx > idx => errors.push(format!(
+                "line {}: module `{}`: `{}` used before its declaration",
+                t.line, cx.name, t.text
+            )),
+            _ => {}
+        }
+    }
+
+    // Driver checks.
+    for (name, blocks) in &cx.reg_drivers {
+        match cx.declared.get(name) {
+            Some((_, Decl::Reg)) => {
+                if blocks.len() > 1 {
+                    errors.push(format!(
+                        "module `{}`: reg `{}` is driven from {} always blocks",
+                        cx.name,
+                        name,
+                        blocks.len()
+                    ));
+                }
+                if cx.assign_drivers.contains_key(name) {
+                    errors.push(format!(
+                        "module `{}`: reg `{}` has both procedural and continuous drivers",
+                        cx.name, name
+                    ));
+                }
+            }
+            Some((_, kind)) => errors.push(format!(
+                "module `{}`: non-blocking assignment to `{}` which is {:?}, not a reg",
+                cx.name, name, kind
+            )),
+            None => {} // already reported as undeclared
+        }
+    }
+    for (name, count) in &cx.assign_drivers {
+        if *count > 1 {
+            errors.push(format!(
+                "module `{}`: `{}` has {count} continuous `assign` drivers",
+                cx.name, name
+            ));
+        }
+        if let Some((_, Decl::PortIn)) = cx.declared.get(name) {
+            errors.push(format!(
+                "module `{}`: `assign` drives input port `{}`",
+                cx.name, name
+            ));
+        }
+    }
+    let _ = body_start;
+    end + 1
+}
+
+fn parse_decl(
+    toks: &[Tok],
+    mut i: usize,
+    kind: Decl,
+    cx: &mut ModCx,
+    errors: &mut Vec<String>,
+) -> usize {
+    while is_kw(toks, i, "signed") {
+        i += 1;
+    }
+    while is_sym(toks, i, "[") {
+        i = skip_balanced(toks, i, "[", "]");
+    }
+    loop {
+        if toks.get(i).map(|t| t.kind) == Some(Kind::Ident) {
+            cx.declare(toks, i, kind, errors);
+            i += 1;
+        } else {
+            break;
+        }
+        while is_sym(toks, i, "[") {
+            i = skip_balanced(toks, i, "[", "]"); // array bounds
+        }
+        if is_sym(toks, i, "=") {
+            i += 1;
+            while i < toks.len() && !is_sym(toks, i, ",") && !is_sym(toks, i, ";") {
+                if is_sym(toks, i, "(") {
+                    i = skip_balanced(toks, i, "(", ")");
+                } else if is_sym(toks, i, "{") {
+                    i = skip_balanced(toks, i, "{", "}");
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        if is_sym(toks, i, ",") {
+            i += 1;
+            continue;
+        }
+        break;
+    }
+    if is_sym(toks, i, ";") {
+        i += 1;
+    }
+    i
+}
+
+fn parse_assign(toks: &[Tok], mut i: usize, cx: &mut ModCx, errors: &mut Vec<String>) -> usize {
+    if toks.get(i).map(|t| t.kind) == Some(Kind::Ident) {
+        let name = toks[i].text.clone();
+        if !cx.declared.contains_key(&name) {
+            errors.push(format!(
+                "line {}: module `{}`: `assign` drives undeclared `{}`",
+                toks[i].line, cx.name, name
+            ));
+        }
+        cx.skip_use.insert(i);
+        *cx.assign_drivers.entry(name).or_insert(0) += 1;
+        i += 1;
+    }
+    while is_sym(toks, i, "[") {
+        i = skip_balanced(toks, i, "[", "]");
+    }
+    while i < toks.len() && !is_sym(toks, i, ";") {
+        i += 1;
+    }
+    i + 1
+}
+
+fn parse_always(toks: &[Tok], mut i: usize, cx: &mut ModCx) -> usize {
+    let always_id = cx.always_count;
+    cx.always_count += 1;
+    if is_sym(toks, i, "@") {
+        i += 1;
+        if is_sym(toks, i, "(") {
+            i = skip_balanced(toks, i, "(", ")");
+        }
+    }
+    if !is_kw(toks, i, "begin") {
+        // Single-statement always (not emitted by the generator); scan to `;`.
+        while i < toks.len() && !is_sym(toks, i, ";") {
+            i += 1;
+        }
+        return i + 1;
+    }
+    let body_start = i;
+    let mut depth = 0;
+    let mut end = i;
+    while end < toks.len() {
+        if is_kw(toks, end, "begin") {
+            depth += 1;
+        } else if is_kw(toks, end, "end") {
+            depth -= 1;
+            if depth == 0 {
+                break;
+            }
+        }
+        end += 1;
+    }
+    // Non-blocking driver scan.
+    let mut at_stmt_start = true;
+    let mut j = body_start;
+    while j <= end && j < toks.len() {
+        let t = &toks[j];
+        if t.kind == Kind::Ident && !is_keyword(&t.text) && !t.text.starts_with('$') {
+            if at_stmt_start {
+                let mut k = j + 1;
+                while is_sym(toks, k, "[") {
+                    k = skip_balanced(toks, k, "[", "]");
+                }
+                if is_sym(toks, k, "<=") {
+                    cx.reg_drivers.entry(t.text.clone()).or_default().insert(always_id);
+                }
+            }
+            at_stmt_start = false;
+        } else if t.kind == Kind::Ident {
+            at_stmt_start = matches!(t.text.as_str(), "begin" | "end" | "else" | "default");
+        } else if t.kind == Kind::Sym {
+            at_stmt_start = matches!(t.text.as_str(), ";" | ":" | ")");
+        } else {
+            at_stmt_start = false;
+        }
+        j += 1;
+    }
+    end + 1
+}
+
+fn parse_instantiation(
+    toks: &[Tok],
+    mut i: usize,
+    cx: &mut ModCx,
+    known_modules: &HashSet<String>,
+    errors: &mut Vec<String>,
+) -> usize {
+    let mod_ref = toks[i].text.clone();
+    let mod_line = toks[i].line;
+    cx.skip_use.insert(i);
+    if !known_modules.contains(&mod_ref) {
+        errors.push(format!(
+            "line {mod_line}: module `{}`: instantiated module `{mod_ref}` is not defined",
+            cx.name
+        ));
+    }
+    i += 1;
+    if is_sym(toks, i, "#") {
+        i += 1;
+        if is_sym(toks, i, "(") {
+            i = skip_balanced(toks, i, "(", ")");
+        }
+    }
+    if toks.get(i).map(|t| t.kind) == Some(Kind::Ident) {
+        cx.declare(toks, i, Decl::Instance, errors);
+        i += 1;
+    } else {
+        errors.push(format!(
+            "line {mod_line}: module `{}`: instantiation of `{mod_ref}` has no instance name",
+            cx.name
+        ));
+    }
+    if is_sym(toks, i, "(") {
+        i = skip_balanced(toks, i, "(", ")");
+    }
+    if is_sym(toks, i, ";") {
+        i += 1;
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "\
+module adder (
+  input  wire clk,
+  input  wire rst_n,
+  input  wire signed [63:0] a,
+  input  wire signed [63:0] b,
+  output wire signed [63:0] sum
+);
+  reg signed [63:0] acc;
+  assign sum = acc;
+  always @(posedge clk) begin
+    if (!rst_n) begin
+      acc <= 64'sd0;
+    end else begin
+      acc <= (a + b);
+    end
+  end
+endmodule
+";
+
+    #[test]
+    fn clean_module_lints_clean() {
+        assert_eq!(lint(GOOD), Vec::<String>::new());
+    }
+
+    #[test]
+    fn unbalanced_endmodule_reported() {
+        let errs = lint("module m (\n  input wire clk\n);\n"); // no endmodule
+        assert!(errs.iter().any(|e| e.contains("missing its `endmodule`")), "{errs:?}");
+        let errs = lint("endmodule\n");
+        assert!(errs.iter().any(|e| e.contains("without a matching")), "{errs:?}");
+    }
+
+    #[test]
+    fn undeclared_wire_reported() {
+        let src = "module m (\n  input wire clk,\n  output wire y\n);\n\
+                   assign y = mystery;\nendmodule\n";
+        let errs = lint(src);
+        assert!(
+            errs.iter().any(|e| e.contains("`mystery` used but never declared")),
+            "{errs:?}"
+        );
+    }
+
+    #[test]
+    fn use_before_declaration_reported() {
+        let src = "module m (\n  input wire clk,\n  output wire y\n);\n\
+                   assign y = late;\n  wire late;\nendmodule\n";
+        let errs = lint(src);
+        assert!(errs.iter().any(|e| e.contains("used before its declaration")), "{errs:?}");
+    }
+
+    #[test]
+    fn double_driven_reg_reported() {
+        let src = "module m (\n  input wire clk\n);\n  reg r;\n\
+                   always @(posedge clk) begin\n    r <= 1'b0;\n  end\n\
+                   always @(posedge clk) begin\n    r <= 1'b1;\n  end\n\
+                   endmodule\n";
+        let errs = lint(src);
+        assert!(errs.iter().any(|e| e.contains("driven from 2 always blocks")), "{errs:?}");
+    }
+
+    #[test]
+    fn double_assign_reported() {
+        let src = "module m (\n  input wire a,\n  output wire y\n);\n\
+                   assign y = a;\n  assign y = !a;\nendmodule\n";
+        let errs = lint(src);
+        assert!(errs.iter().any(|e| e.contains("2 continuous `assign` drivers")), "{errs:?}");
+    }
+
+    #[test]
+    fn unknown_instantiated_module_reported() {
+        let src = "module m (\n  input wire clk\n);\n\
+                   ghost u_g (\n    .clk(clk)\n  );\nendmodule\n";
+        let errs = lint(src);
+        assert!(errs.iter().any(|e| e.contains("`ghost` is not defined")), "{errs:?}");
+    }
+}

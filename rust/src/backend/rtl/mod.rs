@@ -1,0 +1,282 @@
+//! RTL backend: explicit Cilk-1 IR → synthesizable Verilog PEs + system
+//! wrapper — the HLS-free compilation target.
+//!
+//! Where [`crate::backend::hardcilk`] emits HLS C++ and leaves scheduling
+//! to Vitis, this backend lowers each task directly to an FSM+datapath
+//! module ([`pe_gen`]), pipelines DAE access tasks at II=1 without an HLS
+//! tool in the loop, and wraps the PEs with task queues and a dispatch
+//! stub ([`system`]). Emitted files are checked by a structural linter
+//! ([`lint`]) which doubles as the pass-manager's verification for the
+//! `rtl` pipeline stage.
+//!
+//! The backend rides the compile session: `CompileSession::rtl_system`
+//! memoizes one [`RtlSystem`] per system name, generated through the
+//! [`RtlEmit`] pass so emission shows up in the per-pass timing counters
+//! next to `ast_to_cfg`/`explicitize`.
+
+pub mod lint;
+pub mod pe_gen;
+pub mod system;
+pub mod verilog;
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
+
+use crate::hls::resource::{estimate, CostModel, ResourceEstimate};
+use crate::ir::cfg::{Module, Op};
+use crate::ir::explicit::explicit_tasks;
+use crate::ir::FuncId;
+use crate::lower::{Artifact, CompileOptions, Pass, PipelineStage};
+use crate::util::table::Table;
+
+use self::verilog::vname;
+
+/// Hardware implementation style of one generated PE.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeStyle {
+    /// Task-pipelined datapath accepting a new task every `ii` cycles.
+    Pipelined { ii: u32 },
+    /// One task at a time through the state machine.
+    Fsm,
+    /// Interface shell for an `extern xla` datapath.
+    Blackbox,
+}
+
+impl PeStyle {
+    pub fn name(self) -> &'static str {
+        match self {
+            PeStyle::Pipelined { .. } => "pipelined",
+            PeStyle::Fsm => "fsm",
+            PeStyle::Blackbox => "blackbox",
+        }
+    }
+}
+
+/// One PE of the generated system.
+#[derive(Clone, Debug)]
+pub struct RtlPe {
+    pub task: String,
+    pub role: &'static str,
+    pub file: String,
+    pub style: PeStyle,
+    /// FSM state count (0 for pipelined/blackbox PEs).
+    pub states: u32,
+    /// Linear-model estimate from [`crate::hls::resource`].
+    pub resources: ResourceEstimate,
+    pub source: String,
+}
+
+/// The full generated RTL system.
+#[derive(Clone, Debug)]
+pub struct RtlSystem {
+    pub name: String,
+    /// `bx_rtl_pkg.v`: the FIFO primitive + leaf-function modules.
+    pub package: String,
+    pub pes: Vec<RtlPe>,
+    /// `<name>_top.v`: dispatch stub + top wrapper.
+    pub top: String,
+}
+
+/// Generate the complete RTL system from an explicit module.
+pub fn generate(module: &Module, system_name: &str) -> Result<RtlSystem> {
+    let model = CostModel::default();
+    let mut generated: Vec<(String, pe_gen::GeneratedPe)> = Vec::new();
+    let mut leaves: Vec<FuncId> = Vec::new();
+    for fid in explicit_tasks(module) {
+        let func = &module.funcs[fid];
+        let pe = pe_gen::gen_pe(module, fid)?;
+        if let Some(cfg) = func.body.as_ref() {
+            for block in cfg.blocks.values() {
+                for op in &block.ops {
+                    if let Op::Call { callee, .. } = op {
+                        if !leaves.contains(callee) {
+                            leaves.push(*callee);
+                        }
+                    }
+                }
+            }
+        }
+        generated.push((func.name.clone(), pe));
+    }
+    let mut package = system::gen_package();
+    for &lf in &leaves {
+        package.push('\n');
+        package.push_str(&pe_gen::gen_leaf(module, lf)?);
+    }
+    let top = system::gen_top(module, system_name, &generated);
+    let pes = generated
+        .into_iter()
+        .map(|(task, pe)| {
+            let fid = module.func_by_name(&task).expect("task name from this module");
+            let func = &module.funcs[fid];
+            let resources = estimate(&model, module, func);
+            let header = format!("// est. resources: {resources}\n");
+            RtlPe {
+                file: format!("pe_{}.v", vname(&task)),
+                role: func.task.as_ref().map(|t| t.role.name()).unwrap_or("task"),
+                style: pe.style,
+                states: pe.states,
+                resources,
+                source: format!("{header}{}", pe.source),
+                task,
+            }
+        })
+        .collect();
+    Ok(RtlSystem { name: system_name.to_string(), package, pes, top })
+}
+
+impl RtlSystem {
+    /// All files of the system as (file name, contents), emission order.
+    pub fn files(&self) -> Vec<(String, &str)> {
+        let mut out = vec![("bx_rtl_pkg.v".to_string(), self.package.as_str())];
+        for pe in &self.pes {
+            out.push((pe.file.clone(), pe.source.as_str()));
+        }
+        out.push((format!("{}_top.v", vname(&self.name)), self.top.as_str()));
+        out
+    }
+
+    /// The whole system as one concatenated text (goldens, linting).
+    pub fn concatenated(&self) -> String {
+        let mut out = String::new();
+        for (file, text) in self.files() {
+            out.push_str(&format!("// ==== {file} ====\n"));
+            out.push_str(text);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Run the structural lint over every file of the system.
+    pub fn lint(&self) -> Vec<String> {
+        let mut known: HashSet<String> = HashSet::new();
+        for (_, text) in self.files() {
+            known.extend(lint::collect_module_names(text));
+        }
+        let mut errors = Vec::new();
+        for (file, text) in self.files() {
+            for e in lint::lint_with_modules(text, &known) {
+                errors.push(format!("{file}: {e}"));
+            }
+        }
+        errors
+    }
+
+    /// Write all files into a directory.
+    pub fn write_to(&self, dir: &std::path::Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for (file, text) in self.files() {
+            std::fs::write(dir.join(file), text)?;
+        }
+        Ok(())
+    }
+
+    pub fn total_loc(&self) -> usize {
+        self.files().iter().map(|(_, text)| text.lines().count()).sum()
+    }
+
+    /// Human-readable per-PE report: style, II, FSM size, resources.
+    pub fn report(&self) -> String {
+        let mut table = Table::new(["task", "role", "impl", "II", "states", "LUT", "FF", "BRAM"]);
+        for pe in &self.pes {
+            let ii = match pe.style {
+                PeStyle::Pipelined { ii } => ii.to_string(),
+                _ => "-".to_string(),
+            };
+            table.row([
+                pe.task.clone(),
+                pe.role.to_string(),
+                pe.style.name().to_string(),
+                ii,
+                pe.states.to_string(),
+                pe.resources.lut.to_string(),
+                pe.resources.ff.to_string(),
+                pe.resources.bram.to_string(),
+            ]);
+        }
+        let mut out = table.render();
+        for pe in &self.pes {
+            if let PeStyle::Pipelined { ii } = pe.style {
+                out.push_str(&format!(
+                    "{}: task-pipelined at II={ii} (a new task enters every {ii} cycle(s))\n",
+                    pe.task
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// The `rtl_emit` pass: explicit IR → [`RtlSystem`], run through the
+/// [`crate::lower::PassManager`] so emission is timed and the produced
+/// artifact is lint-verified at the pass boundary.
+pub struct RtlEmit {
+    pub system_name: String,
+}
+
+impl Pass for RtlEmit {
+    fn name(&self) -> &'static str {
+        "rtl_emit"
+    }
+
+    fn input_stage(&self) -> PipelineStage {
+        PipelineStage::Explicit
+    }
+
+    fn output_stage(&self) -> PipelineStage {
+        PipelineStage::Rtl
+    }
+
+    fn run(&self, artifact: Artifact, _opts: &CompileOptions) -> Result<Artifact> {
+        match artifact {
+            Artifact::Module(m) => Ok(Artifact::Rtl(generate(&m, &self.system_name)?)),
+            _ => bail!("pass `rtl_emit` requires explicit-IR input"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::{compile, CompileOptions};
+
+    const FIB: &str = "int fib(int n) {
+        if (n < 2) return n;
+        int x = cilk_spawn fib(n - 1);
+        int y = cilk_spawn fib(n - 2);
+        cilk_sync;
+        return x + y;
+    }";
+
+    #[test]
+    fn fib_system_generates_and_lints() {
+        let r = compile("t", FIB, &CompileOptions::no_dae()).unwrap();
+        let sys = generate(&r.explicit, "fib_system").unwrap();
+        assert_eq!(sys.pes.len(), 2);
+        assert!(sys.pes[0].source.contains("module pe_fib ("), "{}", sys.pes[0].source);
+        assert!(sys.top.contains("module fib_system_top ("), "{}", sys.top);
+        let errors = sys.lint();
+        assert!(errors.is_empty(), "{errors:#?}\n{}", sys.concatenated());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let r = compile("t", FIB, &CompileOptions::no_dae()).unwrap();
+        let a = generate(&r.explicit, "s").unwrap();
+        let b = generate(&r.explicit, "s").unwrap();
+        assert_eq!(a.concatenated(), b.concatenated());
+    }
+
+    #[test]
+    fn write_to_disk() {
+        let r = compile("t", FIB, &CompileOptions::no_dae()).unwrap();
+        let sys = generate(&r.explicit, "sys").unwrap();
+        let dir = std::env::temp_dir().join(format!("bombyx_rtl_test_{}", std::process::id()));
+        sys.write_to(&dir).unwrap();
+        assert!(dir.join("bx_rtl_pkg.v").exists());
+        assert!(dir.join("pe_fib.v").exists());
+        assert!(dir.join("sys_top.v").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

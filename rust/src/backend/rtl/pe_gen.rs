@@ -1,0 +1,1083 @@
+//! Per-task processing-element generation: explicit IR → synthesizable
+//! Verilog FSM + datapath modules.
+//!
+//! Every explicit task becomes one `pe_<task>` module:
+//!
+//! - **FSM style** (the general case): one state per straight-line op
+//!   (plus a wait state for split-phase ops: loads, `spawn_next` closure
+//!   allocation, leaf calls), a branch-decision state per conditional
+//!   terminator, and a latency counter on datapath states driven by
+//!   [`crate::hls::schedule::op_cycles`] — the RTL schedule matches the
+//!   cycle model the simulator charges.
+//! - **Pipelined style** (DAE access tasks): a task whose body is
+//!   `loads → send_argument` needs no FSM at all. The index datapath is
+//!   combinational from the incoming closure, the memory request issues
+//!   the same cycle the task is accepted, and the continuation rides a
+//!   small in-flight FIFO until the response returns — one new task enters
+//!   per cycle (II = 1), which is the §II-C property the HLS flow can only
+//!   approximate through `#pragma HLS PIPELINE`.
+//!
+//! Stream interfaces are ready/valid with the same payload layout the
+//! HardCilk JSON descriptor documents (closure bits from
+//! [`closure_layout`], spawn/send/spawn_next message fields mirroring
+//! `bx_spawn_req` / `bx_send_req` / `bx_spawn_next_req` in the HLS
+//! header). Memory is a per-global request/response port pair; the AXI
+//! adapter behind it serializes atomics per bank, exactly as the HLS
+//! backend assumes.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use anyhow::{bail, Result};
+
+use crate::frontend::ast::Type;
+use crate::ir::cfg::{BlockId, Cfg, Func, FuncId, FuncKind, Module, Op, RetTarget, TaskRole, Term};
+use crate::ir::explicit::{closure_layout, explicit_tasks};
+use crate::ir::expr::{Expr, VarId};
+use crate::ir::GlobalId;
+use crate::hls::schedule::{op_cycles, rtl_initiation_interval, ScheduleModel};
+
+use super::verilog::{part_select, vcond, vexpr, vname};
+use super::PeStyle;
+
+/// Stream payload widths (bits). Layouts are documented inline where the
+/// words are packed; they mirror the HLS structs in `bombyx_system.h`.
+pub const SEND_BITS: u32 = 130; // {target[64], bits[64], kind[2]}
+pub const SPAWN_BITS: u32 = 632; // {task[32], ret[64], nargs[8], bytes[16], arg0..7[64]}
+pub const SPAWN_NEXT_BITS: u32 = 112; // {task[32], cont[64], bytes[16]}
+pub const MAX_SPAWN_ARGS: usize = 8;
+
+/// One generated PE module.
+#[derive(Clone, Debug)]
+pub struct GeneratedPe {
+    pub source: String,
+    pub style: PeStyle,
+    /// FSM state count (0 for pipelined / blackbox PEs).
+    pub states: u32,
+    /// Interface summary consumed by the system wrapper.
+    pub iface: PeInterface,
+}
+
+/// What ports a PE module exposes (beyond clk/rst_n/task_in).
+#[derive(Clone, Debug, Default)]
+pub struct PeInterface {
+    pub has_spawn: bool,
+    pub has_spawn_next: bool,
+    pub has_send: bool,
+    /// Globals with a direct memory port on this PE, in first-use order.
+    pub globals: Vec<GlobalId>,
+    /// Pass-through memory ports of leaf-call instances:
+    /// (port prefix, global).
+    pub leaf_mems: Vec<(String, GlobalId)>,
+    pub closure_bits: u32,
+}
+
+/// Stable task id for stream messages: position in [`explicit_tasks`].
+pub fn task_stream_id(module: &Module, fid: FuncId) -> u32 {
+    explicit_tasks(module)
+        .iter()
+        .position(|&f| f == fid)
+        .map(|p| p as u32)
+        .unwrap_or(u32::MAX)
+}
+
+fn used_globals(func: &Func) -> Vec<GlobalId> {
+    let mut out = Vec::new();
+    let Some(cfg) = func.body.as_ref() else { return out };
+    for b in cfg.reachable_ids() {
+        for op in &cfg.blocks[b].ops {
+            let g = match op {
+                Op::Load { arr, .. } | Op::Store { arr, .. } | Op::AtomicAdd { arr, .. } => {
+                    Some(*arr)
+                }
+                _ => None,
+            };
+            if let Some(g) = g {
+                if !out.contains(&g) {
+                    out.push(g);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-variable register names, collision-free and deterministic.
+fn var_names(func: &Func) -> Vec<String> {
+    let mut seen: HashMap<String, u32> = HashMap::new();
+    let mut out = Vec::with_capacity(func.vars.len());
+    for (_, v) in func.vars.iter() {
+        let base = format!("v_{}", vname(&v.name));
+        let n = seen.entry(base.clone()).or_insert(0);
+        let name = if *n == 0 { base.clone() } else { format!("{base}_{n}") };
+        *n += 1;
+        out.push(name);
+    }
+    out
+}
+
+/// Generate the PE module for an explicit task.
+pub fn gen_pe(module: &Module, fid: FuncId) -> Result<GeneratedPe> {
+    let func = &module.funcs[fid];
+    let Some(meta) = func.task.as_ref() else {
+        bail!("`{}` is not an explicit task", func.name);
+    };
+    if func.kind == FuncKind::Xla {
+        return gen_xla_blackbox(module, fid);
+    }
+    if meta.role == TaskRole::Access {
+        if let Some(pattern) = match_access_pipeline(func) {
+            return gen_access_pipelined(module, fid, &pattern);
+        }
+    }
+    gen_fsm_module(module, fid, FsmKind::Task)
+}
+
+/// Generate the FSM module for a leaf function (instantiated by PEs).
+pub fn gen_leaf(module: &Module, fid: FuncId) -> Result<String> {
+    Ok(gen_fsm_module(module, fid, FsmKind::Leaf)?.source)
+}
+
+// ---------------------------------------------------------------------------
+// Pipelined access PE
+// ---------------------------------------------------------------------------
+
+/// The recognized access-task shape: pure assigns, one load, send the
+/// loaded value.
+struct AccessPattern {
+    pre_assigns: Vec<(VarId, Expr)>,
+    arr: GlobalId,
+    index: Expr,
+}
+
+fn match_access_pipeline(func: &Func) -> Option<AccessPattern> {
+    if rtl_initiation_interval(func).is_none() {
+        return None;
+    }
+    let cfg = func.body.as_ref()?;
+    let reachable = cfg.reachable_ids();
+    if reachable.len() != 1 || reachable[0] != cfg.entry {
+        return None;
+    }
+    let block = &cfg.blocks[cfg.entry];
+    if !matches!(block.term, Term::Halt) {
+        return None;
+    }
+    let mut pre_assigns = Vec::new();
+    let mut load: Option<(VarId, GlobalId, Expr)> = None;
+    let mut sent = false;
+    for op in &block.ops {
+        match op {
+            Op::Assign { dst, src } if load.is_none() => {
+                pre_assigns.push((*dst, src.clone()));
+            }
+            Op::Load { dst, arr, index, .. } if load.is_none() => {
+                load = Some((*dst, *arr, index.clone()));
+            }
+            Op::SendArgument { value: Some(Expr::Var(v)) } if !sent => {
+                let (dst, _, _) = load.as_ref()?;
+                if v != dst {
+                    return None;
+                }
+                sent = true;
+            }
+            _ => return None,
+        }
+    }
+    let (_, arr, index) = load?;
+    if !sent {
+        return None;
+    }
+    Some(AccessPattern { pre_assigns, arr, index })
+}
+
+fn gen_access_pipelined(
+    module: &Module,
+    fid: FuncId,
+    pattern: &AccessPattern,
+) -> Result<GeneratedPe> {
+    let func = &module.funcs[fid];
+    let name = vname(&func.name);
+    let layout = closure_layout(func);
+    let gname = vname(&module.globals[pattern.arr].name);
+    let ii = rtl_initiation_interval(func).unwrap_or(1);
+
+    // Combinational field wires: params from the closure word, then the
+    // pre-assign datapath on top of them.
+    let names = var_names(func);
+    let wire_of = |v: VarId| format!("f_{}", &names[v.index()][2..]);
+    let mut field_wires = String::new();
+    for (i, p) in func.param_ids().enumerate() {
+        let fld = &layout.fields[i];
+        if fld.ty == Type::Float {
+            bail!("access task `{}`: float fields have no RTL datapath", func.name);
+        }
+        let sel = part_select("task_in_data", fld.offset_bits, fld.width_bits);
+        let rhs = if fld.width_bits == 64 {
+            format!("$signed({sel})")
+        } else {
+            format!("$signed({{32'd0, {sel}}})")
+        };
+        let _ = writeln!(field_wires, "  wire signed [63:0] {};", wire_of(p));
+        let _ = writeln!(field_wires, "  assign {} = {rhs};", wire_of(p));
+    }
+    for (dst, src) in &pattern.pre_assigns {
+        let rhs = vexpr(src, &|v| wire_of(v))?;
+        let _ = writeln!(field_wires, "  wire signed [63:0] {};", wire_of(*dst));
+        let _ = writeln!(field_wires, "  assign {} = {rhs};", wire_of(*dst));
+    }
+    let addr = vexpr(&pattern.index, &|v| wire_of(v))?;
+    let cont_sel = part_select("task_in_data", layout.cont_offset_bits, 64);
+
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "// PE for access task `{}` (source fn: {}) — PIPELINED, II={ii}.\n\
+         // A new task is accepted every cycle: the address datapath is\n\
+         // combinational from the closure and the continuation rides the\n\
+         // in-flight FIFO until the memory response returns (paper §II-C).",
+        func.name, func.task.as_ref().unwrap().source
+    );
+    let _ = writeln!(out, "module pe_{name} (");
+    let _ = writeln!(out, "  input  wire clk,");
+    let _ = writeln!(out, "  input  wire rst_n,");
+    let _ = writeln!(out, "  input  wire task_in_valid,");
+    let _ = writeln!(out, "  output wire task_in_ready,");
+    let _ = writeln!(out, "  input  wire [{}:0] task_in_data,", layout.padded_bits - 1);
+    let _ = writeln!(out, "  output wire send_out_valid,");
+    let _ = writeln!(out, "  input  wire send_out_ready,");
+    let _ = writeln!(out, "  output wire [{}:0] send_out_data,", SEND_BITS - 1);
+    let _ = writeln!(out, "  output wire mem_{gname}_req_valid,");
+    let _ = writeln!(out, "  input  wire mem_{gname}_req_ready,");
+    let _ = writeln!(out, "  output wire mem_{gname}_req_write,");
+    let _ = writeln!(out, "  output wire mem_{gname}_req_atomic,");
+    let _ = writeln!(out, "  output wire [63:0] mem_{gname}_req_addr,");
+    let _ = writeln!(out, "  output wire [63:0] mem_{gname}_req_wdata,");
+    let _ = writeln!(out, "  input  wire mem_{gname}_resp_valid,");
+    let _ = writeln!(out, "  output wire mem_{gname}_resp_ready,");
+    let _ = writeln!(out, "  input  wire [63:0] mem_{gname}_resp_data");
+    let _ = writeln!(out, ");");
+    out.push_str(&field_wires);
+    let _ = writeln!(out, "  wire [63:0] k_in;");
+    let _ = writeln!(out, "  assign k_in = {cont_sel};");
+    let _ = writeln!(out, "  wire inflight_in_ready;");
+    let _ = writeln!(out, "  wire inflight_out_valid;");
+    let _ = writeln!(out, "  wire [63:0] k_head;");
+    let _ = writeln!(out, "  // Accept when both the memory channel and the FIFO have room.");
+    let _ = writeln!(
+        out,
+        "  assign task_in_ready = mem_{gname}_req_ready && inflight_in_ready;"
+    );
+    let _ = writeln!(
+        out,
+        "  assign mem_{gname}_req_valid = task_in_valid && inflight_in_ready;"
+    );
+    let _ = writeln!(out, "  assign mem_{gname}_req_write = 1'b0;");
+    let _ = writeln!(out, "  assign mem_{gname}_req_atomic = 1'b0;");
+    let _ = writeln!(out, "  assign mem_{gname}_req_addr = {addr};");
+    let _ = writeln!(out, "  assign mem_{gname}_req_wdata = 64'd0;");
+    let _ = writeln!(
+        out,
+        "  bx_fifo #(.WIDTH(64), .DEPTH_LOG2(3)) inflight (\n    \
+         .clk(clk), .rst_n(rst_n),\n    \
+         .in_valid(task_in_valid && mem_{gname}_req_ready), .in_ready(inflight_in_ready), .in_data(k_in),\n    \
+         .out_valid(inflight_out_valid), .out_ready(send_out_valid && send_out_ready), .out_data(k_head)\n  );"
+    );
+    let _ = writeln!(out, "  assign send_out_valid = mem_{gname}_resp_valid && inflight_out_valid;");
+    let _ = writeln!(out, "  assign mem_{gname}_resp_ready = send_out_ready && inflight_out_valid;");
+    let _ = writeln!(
+        out,
+        "  // {{target[129:66], bits[65:2], kind[1:0]}} — kind 1 = BX_DEC.\n  \
+         assign send_out_data = {{k_head, mem_{gname}_resp_data, 2'd1}};"
+    );
+    let _ = writeln!(out, "endmodule");
+
+    Ok(GeneratedPe {
+        source: out,
+        style: PeStyle::Pipelined { ii },
+        states: 0,
+        iface: PeInterface {
+            has_send: true,
+            globals: vec![pattern.arr],
+            closure_bits: layout.padded_bits,
+            ..Default::default()
+        },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// XLA blackbox PE
+// ---------------------------------------------------------------------------
+
+fn gen_xla_blackbox(module: &Module, fid: FuncId) -> Result<GeneratedPe> {
+    let func = &module.funcs[fid];
+    let name = vname(&func.name);
+    let layout = closure_layout(func);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "// PE for `extern xla` task `{}` — BLACKBOX.\n\
+         // The real datapath is the AOT-compiled XLA/Pallas executable\n\
+         // (python/compile/); on silicon this shell fronts an RTL\n\
+         // systolic-array macro. Outputs are tied off in the stub.",
+        func.name
+    );
+    let _ = writeln!(out, "module pe_{name} (");
+    let _ = writeln!(out, "  input  wire clk,");
+    let _ = writeln!(out, "  input  wire rst_n,");
+    let _ = writeln!(out, "  input  wire task_in_valid,");
+    let _ = writeln!(out, "  output wire task_in_ready,");
+    let _ = writeln!(out, "  input  wire [{}:0] task_in_data,", layout.padded_bits - 1);
+    let _ = writeln!(out, "  output wire send_out_valid,");
+    let _ = writeln!(out, "  input  wire send_out_ready,");
+    let _ = writeln!(out, "  output wire [{}:0] send_out_data", SEND_BITS - 1);
+    let _ = writeln!(out, ");");
+    let _ = writeln!(out, "  assign task_in_ready = 1'b0;");
+    let _ = writeln!(out, "  assign send_out_valid = 1'b0;");
+    let _ = writeln!(out, "  assign send_out_data = {}'d0;", SEND_BITS);
+    let _ = writeln!(out, "endmodule");
+    Ok(GeneratedPe {
+        source: out,
+        style: PeStyle::Blackbox,
+        states: 0,
+        iface: PeInterface {
+            has_send: true,
+            closure_bits: layout.padded_bits,
+            ..Default::default()
+        },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// FSM modules (general tasks and leaf functions)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum FsmKind {
+    Task,
+    Leaf,
+}
+
+/// State allocation: numbered, named states per (block, op, phase).
+/// `S_IDLE` is always state 0; ops get `S_B<b>_O<i>` (+ `_W` wait phases
+/// for split-phase ops), blocks with value-reading terminators get
+/// `S_B<b>_T`, and leaf modules end with `S_DONE`.
+struct States {
+    names: Vec<String>,
+    op_state: HashMap<(usize, usize), usize>,
+    wait_state: HashMap<(usize, usize), usize>,
+    term_state: HashMap<usize, usize>,
+    block_entry: HashMap<usize, usize>,
+    done: Option<usize>,
+}
+
+impl States {
+    fn name(&self, i: usize) -> &str {
+        &self.names[i]
+    }
+}
+
+fn op_has_wait(op: &Op) -> bool {
+    matches!(op, Op::Load { .. } | Op::MakeClosure { .. } | Op::Call { .. })
+}
+
+/// Does the block need a dedicated terminator state? Branch conditions and
+/// return values may read the *last* op's destination, which is only
+/// visible one cycle after its state latches it (non-blocking semantics).
+fn needs_term_state(block_ops: usize, term: &Term) -> bool {
+    match term {
+        Term::Branch { .. } | Term::Return(Some(_)) => true,
+        _ => block_ops == 0,
+    }
+}
+
+fn alloc_states(cfg: &Cfg, kind: FsmKind) -> States {
+    let mut st = States {
+        names: Vec::new(),
+        op_state: HashMap::new(),
+        wait_state: HashMap::new(),
+        term_state: HashMap::new(),
+        block_entry: HashMap::new(),
+        done: None,
+    };
+    st.names.push("S_IDLE".to_string());
+    for b in cfg.reachable_ids() {
+        let block = &cfg.blocks[b];
+        let bi = b.index();
+        let mut first: Option<usize> = None;
+        for (i, op) in block.ops.iter().enumerate() {
+            let s = st.names.len();
+            st.names.push(format!("S_B{bi}_O{i}"));
+            st.op_state.insert((bi, i), s);
+            first.get_or_insert(s);
+            if op_has_wait(op) {
+                let w = st.names.len();
+                st.names.push(format!("S_B{bi}_O{i}_W"));
+                st.wait_state.insert((bi, i), w);
+            }
+        }
+        if needs_term_state(block.ops.len(), &block.term) {
+            let t = st.names.len();
+            st.names.push(format!("S_B{bi}_T"));
+            st.term_state.insert(bi, t);
+            first.get_or_insert(t);
+        }
+        st.block_entry.insert(bi, first.expect("every block yields at least one state"));
+    }
+    if kind == FsmKind::Leaf {
+        let d = st.names.len();
+        st.names.push("S_DONE".to_string());
+        st.done = Some(d);
+    }
+    st
+}
+
+/// Stream/memory side-band data collected during emission, rendered as
+/// combinational muxes keyed on the state register.
+#[derive(Default)]
+struct Muxes {
+    spawn: Vec<(String, String)>,      // (state, packed word)
+    spawn_next: Vec<(String, String)>, // (state, packed word)
+    send: Vec<(String, String)>,       // (state, packed word)
+    /// global -> (issue states with full request info)
+    mem_issue: HashMap<usize, Vec<MemIssue>>,
+    /// global -> wait states (response side)
+    mem_wait: HashMap<usize, Vec<String>>,
+}
+
+struct MemIssue {
+    state: String,
+    write: bool,
+    atomic: bool,
+    addr: String,
+    wdata: String,
+}
+
+struct LeafCall {
+    prefix: String,
+    callee: FuncId,
+    call_state: String,
+    wait_state: String,
+    args: Vec<String>,
+}
+
+fn gen_fsm_module(module: &Module, fid: FuncId, kind: FsmKind) -> Result<GeneratedPe> {
+    let func = &module.funcs[fid];
+    let Some(cfg) = func.body.as_ref() else {
+        bail!("`{}` has no body to lower to RTL", func.name);
+    };
+    let model = ScheduleModel::default();
+    let names = var_names(func);
+    let var = |v: VarId| names[v.index()].clone();
+    let st = alloc_states(cfg, kind);
+    let layout = closure_layout(func);
+    let globals = used_globals(func);
+    let name = vname(&func.name);
+
+    // Interface discovery.
+    let mut has_spawn = false;
+    let mut has_next = false;
+    let mut has_send = false;
+    let mut call_sites: Vec<(BlockId, usize, FuncId, Option<VarId>, Vec<Expr>)> = Vec::new();
+    for b in cfg.reachable_ids() {
+        for (i, op) in cfg.blocks[b].ops.iter().enumerate() {
+            match op {
+                Op::SpawnChild { .. } => has_spawn = true,
+                Op::MakeClosure { .. } => has_next = true,
+                Op::ClosureStore { .. } | Op::CloseSpawns { .. } | Op::SendArgument { .. } => {
+                    has_send = true
+                }
+                Op::Call { dst, callee, args } => {
+                    if kind == FsmKind::Leaf {
+                        bail!(
+                            "leaf `{}` calls `{}`: nested leaf calls are not supported by the \
+                             RTL backend yet",
+                            func.name,
+                            module.funcs[*callee].name
+                        );
+                    }
+                    call_sites.push((b, i, *callee, *dst, args.clone()));
+                }
+                Op::Spawn { .. } => {
+                    bail!("implicit `spawn` reached RTL codegen in `{}`", func.name)
+                }
+                _ => {}
+            }
+        }
+    }
+    if kind == FsmKind::Leaf && (has_spawn || has_next || has_send) {
+        bail!("leaf `{}` contains task ops", func.name);
+    }
+
+    // Leaf-call instances: index by (block, op).
+    let mut leaf_of: HashMap<(usize, usize), usize> = HashMap::new();
+    let mut leaf_calls: Vec<LeafCall> = Vec::new();
+    for (b, i, callee, _dst, args) in &call_sites {
+        let k = leaf_calls.len();
+        leaf_of.insert((b.index(), *i), k);
+        let call_state = st.name(st.op_state[&(b.index(), *i)]).to_string();
+        let wait_state = st.name(st.wait_state[&(b.index(), *i)]).to_string();
+        let rendered: Vec<String> =
+            args.iter().map(|a| vexpr(a, &|v| var(v))).collect::<Result<_>>()?;
+        leaf_calls.push(LeafCall {
+            prefix: format!("l{k}"),
+            callee: *callee,
+            call_state,
+            wait_state,
+            args: rendered,
+        });
+    }
+
+    // ---- ports -----------------------------------------------------------
+    let mut ports: Vec<String> = vec![
+        "  input  wire clk".to_string(),
+        "  input  wire rst_n".to_string(),
+    ];
+    match kind {
+        FsmKind::Task => {
+            ports.push("  input  wire task_in_valid".to_string());
+            ports.push("  output wire task_in_ready".to_string());
+            ports.push(format!("  input  wire [{}:0] task_in_data", layout.padded_bits - 1));
+            if has_spawn {
+                ports.push("  output wire spawn_out_valid".to_string());
+                ports.push("  input  wire spawn_out_ready".to_string());
+                ports.push(format!("  output wire [{}:0] spawn_out_data", SPAWN_BITS - 1));
+            }
+            if has_next {
+                ports.push("  output wire spawn_next_out_valid".to_string());
+                ports.push("  input  wire spawn_next_out_ready".to_string());
+                ports.push(format!(
+                    "  output wire [{}:0] spawn_next_out_data",
+                    SPAWN_NEXT_BITS - 1
+                ));
+                ports.push("  input  wire addr_in_valid".to_string());
+                ports.push("  output wire addr_in_ready".to_string());
+                ports.push("  input  wire [63:0] addr_in_data".to_string());
+            }
+            if has_send {
+                ports.push("  output wire send_out_valid".to_string());
+                ports.push("  input  wire send_out_ready".to_string());
+                ports.push(format!("  output wire [{}:0] send_out_data", SEND_BITS - 1));
+            }
+        }
+        FsmKind::Leaf => {
+            ports.push("  input  wire start_valid".to_string());
+            ports.push("  output wire start_ready".to_string());
+            for p in func.param_ids() {
+                ports.push(format!("  input  wire signed [63:0] a_{}", vname(&func.vars[p].name)));
+            }
+            ports.push("  output wire done_valid".to_string());
+            ports.push("  input  wire done_ready".to_string());
+            ports.push("  output wire signed [63:0] result".to_string());
+        }
+    }
+    let mut leaf_mems: Vec<(String, GlobalId)> = Vec::new();
+    for lc in &leaf_calls {
+        for g in used_globals(&module.funcs[lc.callee]) {
+            leaf_mems.push((lc.prefix.clone(), g));
+        }
+    }
+    let mem_port = |prefix: &str, gname: &str, ports: &mut Vec<String>| {
+        ports.push(format!("  output wire {prefix}mem_{gname}_req_valid"));
+        ports.push(format!("  input  wire {prefix}mem_{gname}_req_ready"));
+        ports.push(format!("  output wire {prefix}mem_{gname}_req_write"));
+        ports.push(format!("  output wire {prefix}mem_{gname}_req_atomic"));
+        ports.push(format!("  output wire [63:0] {prefix}mem_{gname}_req_addr"));
+        ports.push(format!("  output wire [63:0] {prefix}mem_{gname}_req_wdata"));
+        ports.push(format!("  input  wire {prefix}mem_{gname}_resp_valid"));
+        ports.push(format!("  output wire {prefix}mem_{gname}_resp_ready"));
+        ports.push(format!("  input  wire [63:0] {prefix}mem_{gname}_resp_data"));
+    };
+    for &g in &globals {
+        mem_port("", &vname(&module.globals[g].name), &mut ports);
+    }
+    for (prefix, g) in &leaf_mems {
+        mem_port(&format!("{prefix}_"), &vname(&module.globals[*g].name), &mut ports);
+    }
+
+    // ---- walk ops: build always-block arms + muxes -----------------------
+    let mut muxes = Muxes::default();
+    let mut arms: Vec<(String, String)> = Vec::new(); // (state name, body lines)
+
+    // IDLE arm.
+    {
+        let mut body = String::new();
+        let _ = writeln!(body, "          lat <= 16'd0;");
+        let accept = match kind {
+            FsmKind::Task => "task_in_valid",
+            FsmKind::Leaf => "start_valid",
+        };
+        let _ = writeln!(body, "          if ({accept}) begin");
+        match kind {
+            FsmKind::Task => {
+                for (i, p) in func.param_ids().enumerate() {
+                    let fld = &layout.fields[i];
+                    if fld.ty == Type::Float {
+                        bail!("task `{}`: float closure fields have no RTL datapath", func.name);
+                    }
+                    let sel = part_select("task_in_data", fld.offset_bits, fld.width_bits);
+                    let rhs = if fld.width_bits == 64 {
+                        format!("$signed({sel})")
+                    } else {
+                        format!("$signed({{32'd0, {sel}}})")
+                    };
+                    let _ = writeln!(body, "            {} <= {rhs};", var(p));
+                }
+                let cont = part_select("task_in_data", layout.cont_offset_bits, 64);
+                let _ = writeln!(body, "            k_r <= {cont};");
+            }
+            FsmKind::Leaf => {
+                for p in func.param_ids() {
+                    let _ = writeln!(
+                        body,
+                        "            {} <= a_{};",
+                        var(p),
+                        vname(&func.vars[p].name)
+                    );
+                }
+            }
+        }
+        for (vid, v) in func.vars.iter() {
+            if vid.index() >= func.params {
+                if v.ty == Type::Float {
+                    bail!("`{}`: float locals have no RTL datapath", func.name);
+                }
+                let _ = writeln!(body, "            {} <= 64'sd0;", var(vid));
+            }
+        }
+        let entry = st.name(st.block_entry[&cfg.entry.index()]);
+        let _ = writeln!(body, "            state <= {entry};");
+        let _ = writeln!(body, "          end");
+        arms.push(("S_IDLE".to_string(), body));
+    }
+
+    // Next-state target after op i of block b completes.
+    let next_after = |b: BlockId, i: usize| -> Result<String> {
+        let bi = b.index();
+        let block = &cfg.blocks[b];
+        if i + 1 < block.ops.len() {
+            return Ok(st.name(st.op_state[&(bi, i + 1)]).to_string());
+        }
+        if let Some(&t) = st.term_state.get(&bi) {
+            return Ok(st.name(t).to_string());
+        }
+        static_succ(&st, &block.term, kind)
+    };
+
+    for b in cfg.reachable_ids() {
+        let bi = b.index();
+        let block = &cfg.blocks[b];
+        for (i, op) in block.ops.iter().enumerate() {
+            let s_name = st.name(st.op_state[&(bi, i)]).to_string();
+            let next = next_after(b, i)?;
+            let mut body = String::new();
+            match op {
+                Op::Assign { dst, src } => {
+                    let lat = op_cycles(&model, op).max(1) - 1;
+                    let rhs = vexpr(src, &|v| var(v))?;
+                    let _ = writeln!(body, "          if (lat >= 16'd{lat}) begin");
+                    let _ = writeln!(body, "            lat <= 16'd0;");
+                    let _ = writeln!(body, "            {} <= {rhs};", var(*dst));
+                    let _ = writeln!(body, "            state <= {next};");
+                    let _ = writeln!(body, "          end else begin");
+                    let _ = writeln!(body, "            lat <= lat + 16'd1;");
+                    let _ = writeln!(body, "          end");
+                }
+                Op::Load { dst, arr, index, .. } => {
+                    let gname = vname(&module.globals[*arr].name);
+                    let addr = vexpr(index, &|v| var(v))?;
+                    muxes.mem_issue.entry(arr.index()).or_default().push(MemIssue {
+                        state: s_name.clone(),
+                        write: false,
+                        atomic: false,
+                        addr,
+                        wdata: "64'd0".to_string(),
+                    });
+                    let w_name = st.name(st.wait_state[&(bi, i)]).to_string();
+                    let _ = writeln!(body, "          if (mem_{gname}_req_ready) begin");
+                    let _ = writeln!(body, "            state <= {w_name};");
+                    let _ = writeln!(body, "          end");
+                    muxes.mem_wait.entry(arr.index()).or_default().push(w_name.clone());
+                    let mut wbody = String::new();
+                    let _ = writeln!(wbody, "          if (mem_{gname}_resp_valid) begin");
+                    let _ = writeln!(
+                        wbody,
+                        "            {} <= $signed(mem_{gname}_resp_data);",
+                        var(*dst)
+                    );
+                    let _ = writeln!(wbody, "            state <= {next};");
+                    let _ = writeln!(wbody, "          end");
+                    arms.push((s_name, body));
+                    arms.push((w_name, wbody));
+                    continue;
+                }
+                Op::Store { arr, index, value } | Op::AtomicAdd { arr, index, value } => {
+                    let gname = vname(&module.globals[*arr].name);
+                    let addr = vexpr(index, &|v| var(v))?;
+                    let wdata = vexpr(value, &|v| var(v))?;
+                    muxes.mem_issue.entry(arr.index()).or_default().push(MemIssue {
+                        state: s_name.clone(),
+                        write: true,
+                        atomic: matches!(op, Op::AtomicAdd { .. }),
+                        addr,
+                        wdata,
+                    });
+                    let _ = writeln!(body, "          if (mem_{gname}_req_ready) begin");
+                    let _ = writeln!(body, "            state <= {next};");
+                    let _ = writeln!(body, "          end");
+                }
+                Op::Call { dst, .. } => {
+                    let k = leaf_of[&(bi, i)];
+                    let prefix = leaf_calls[k].prefix.clone();
+                    let w_name = st.name(st.wait_state[&(bi, i)]).to_string();
+                    let _ = writeln!(body, "          if ({prefix}_start_ready) begin");
+                    let _ = writeln!(body, "            state <= {w_name};");
+                    let _ = writeln!(body, "          end");
+                    let mut wbody = String::new();
+                    let _ = writeln!(wbody, "          if ({prefix}_done_valid) begin");
+                    if let Some(d) = dst {
+                        let _ = writeln!(wbody, "            {} <= {prefix}_result;", var(*d));
+                    }
+                    let _ = writeln!(wbody, "            state <= {next};");
+                    let _ = writeln!(wbody, "          end");
+                    arms.push((s_name, body));
+                    arms.push((w_name, wbody));
+                    continue;
+                }
+                Op::MakeClosure { dst, task } => {
+                    let tid = task_stream_id(module, *task);
+                    let bytes = closure_layout(&module.funcs[*task]).padded_bits / 8;
+                    // {task[111:80], cont[79:16], bytes[15:0]}
+                    muxes.spawn_next.push((
+                        s_name.clone(),
+                        format!("{{32'd{tid}, k_r, 16'd{bytes}}}"),
+                    ));
+                    let w_name = st.name(st.wait_state[&(bi, i)]).to_string();
+                    let _ = writeln!(body, "          if (spawn_next_out_ready) begin");
+                    let _ = writeln!(body, "            state <= {w_name};");
+                    let _ = writeln!(body, "          end");
+                    let mut wbody = String::new();
+                    let _ = writeln!(wbody, "          if (addr_in_valid) begin");
+                    let _ = writeln!(wbody, "            {} <= $signed(addr_in_data);", var(*dst));
+                    let _ = writeln!(wbody, "            state <= {next};");
+                    let _ = writeln!(wbody, "          end");
+                    arms.push((s_name, body));
+                    arms.push((w_name, wbody));
+                    continue;
+                }
+                Op::SpawnChild { callee, args, ret } => {
+                    if args.len() > MAX_SPAWN_ARGS {
+                        bail!(
+                            "task `{}` spawned with >{MAX_SPAWN_ARGS} args (widen the spawn word)",
+                            module.funcs[*callee].name
+                        );
+                    }
+                    let tid = task_stream_id(module, *callee);
+                    let bytes = closure_layout(&module.funcs[*callee]).padded_bits / 8;
+                    let ret_s = match ret {
+                        RetTarget::Slot { clos, field } => {
+                            format!("(({} << 16) | 64'd{field})", var(*clos))
+                        }
+                        RetTarget::Counter { clos } => {
+                            format!("(({} << 16) | 64'd32768)", var(*clos))
+                        }
+                        RetTarget::Forward => "k_r".to_string(),
+                    };
+                    let mut words: Vec<String> = vec![
+                        format!("32'd{tid}"),
+                        ret_s,
+                        format!("8'd{}", args.len()),
+                        format!("16'd{bytes}"),
+                    ];
+                    for a in args {
+                        words.push(vexpr(a, &|v| var(v))?);
+                    }
+                    for _ in args.len()..MAX_SPAWN_ARGS {
+                        words.push("64'd0".to_string());
+                    }
+                    // {task[631:600], ret[599:536], nargs[535:528],
+                    //  bytes[527:512], arg0..arg7 (arg0 at [511:448])}
+                    muxes.spawn.push((s_name.clone(), format!("{{{}}}", words.join(", "))));
+                    let _ = writeln!(body, "          if (spawn_out_ready) begin");
+                    let _ = writeln!(body, "            state <= {next};");
+                    let _ = writeln!(body, "          end");
+                }
+                Op::ClosureStore { clos, field, value } => {
+                    let bits = vexpr(value, &|v| var(v))?;
+                    let target = format!("(({} << 16) | 64'd{field})", var(*clos));
+                    // kind 0 = BX_READY
+                    muxes.send.push((s_name.clone(), format!("{{{target}, {bits}, 2'd0}}")));
+                    let _ = writeln!(body, "          if (send_out_ready) begin");
+                    let _ = writeln!(body, "            state <= {next};");
+                    let _ = writeln!(body, "          end");
+                }
+                Op::CloseSpawns { clos } => {
+                    let target = format!("(({} << 16) | 64'd32768)", var(*clos));
+                    // kind 2 = BX_CLOSE
+                    muxes.send.push((s_name.clone(), format!("{{{target}, 64'd0, 2'd2}}")));
+                    let _ = writeln!(body, "          if (send_out_ready) begin");
+                    let _ = writeln!(body, "            state <= {next};");
+                    let _ = writeln!(body, "          end");
+                }
+                Op::SendArgument { value } => {
+                    let bits = match value {
+                        Some(v) => vexpr(v, &|vv| var(vv))?,
+                        None => "64'd0".to_string(),
+                    };
+                    // kind 1 = BX_DEC
+                    muxes.send.push((s_name.clone(), format!("{{k_r, {bits}, 2'd1}}")));
+                    let _ = writeln!(body, "          if (send_out_ready) begin");
+                    let _ = writeln!(body, "            state <= {next};");
+                    let _ = writeln!(body, "          end");
+                }
+                Op::Spawn { .. } => unreachable!("rejected above"),
+            }
+            arms.push((s_name, body));
+        }
+        // Terminator state (branch decision / return value / empty block).
+        if let Some(&t) = st.term_state.get(&bi) {
+            let mut body = String::new();
+            match &block.term {
+                Term::Branch { cond, then_, else_ } => {
+                    let c = vcond(cond, &|v| var(v))?;
+                    let t_s = st.name(st.block_entry[&then_.index()]);
+                    let e_s = st.name(st.block_entry[&else_.index()]);
+                    let _ = writeln!(body, "          state <= {c} ? {t_s} : {e_s};");
+                }
+                Term::Return(Some(e)) => {
+                    if kind != FsmKind::Leaf {
+                        bail!("task `{}` ends in `return` after explicitization", func.name);
+                    }
+                    let rhs = vexpr(e, &|v| var(v))?;
+                    let _ = writeln!(body, "          res_r <= {rhs};");
+                    let done = st.name(st.done.expect("leaf has a done state"));
+                    let _ = writeln!(body, "          state <= {done};");
+                }
+                term => {
+                    let target = static_succ(&st, term, kind)?;
+                    let _ = writeln!(body, "          state <= {target};");
+                }
+            }
+            arms.push((st.name(t).to_string(), body));
+        }
+    }
+    if let Some(d) = st.done {
+        let mut body = String::new();
+        let _ = writeln!(body, "          if (done_ready) begin");
+        let _ = writeln!(body, "            state <= S_IDLE;");
+        let _ = writeln!(body, "          end");
+        arms.push((st.name(d).to_string(), body));
+    }
+
+    // ---- assemble the module --------------------------------------------
+    let mut out = String::new();
+    let role = func.task.as_ref().map(|t| t.role.name()).unwrap_or("leaf");
+    let module_name = match kind {
+        FsmKind::Task => format!("pe_{name}"),
+        FsmKind::Leaf => format!("leaf_{name}"),
+    };
+    let _ = writeln!(
+        out,
+        "// {} `{}` (role: {role}) — FSM+datapath, {} states.",
+        if kind == FsmKind::Task { "PE for task" } else { "Leaf function" },
+        func.name,
+        st.names.len()
+    );
+    let _ = writeln!(out, "module {module_name} (");
+    let _ = writeln!(out, "{}", ports.join(",\n"));
+    let _ = writeln!(out, ");");
+
+    for (i, n) in st.names.iter().enumerate() {
+        let _ = writeln!(out, "  localparam [15:0] {n} = 16'd{i};");
+    }
+    let _ = writeln!(out, "  reg [15:0] state;");
+    let _ = writeln!(out, "  reg [15:0] lat;");
+    if kind == FsmKind::Task {
+        let _ = writeln!(out, "  reg [63:0] k_r;");
+    } else {
+        let _ = writeln!(out, "  reg signed [63:0] res_r;");
+    }
+    for (vid, _) in func.vars.iter() {
+        let _ = writeln!(out, "  reg signed [63:0] {};", var(vid));
+    }
+    for lc in &leaf_calls {
+        let p = &lc.prefix;
+        let _ = writeln!(out, "  wire {p}_start_ready;");
+        let _ = writeln!(out, "  wire {p}_done_valid;");
+        let _ = writeln!(out, "  wire signed [63:0] {p}_result;");
+        for (j, _) in lc.args.iter().enumerate() {
+            let _ = writeln!(out, "  wire signed [63:0] {p}_arg{j};");
+        }
+    }
+
+    // Handshake outputs.
+    match kind {
+        FsmKind::Task => {
+            let _ = writeln!(out, "  assign task_in_ready = (state == S_IDLE);");
+        }
+        FsmKind::Leaf => {
+            let _ = writeln!(out, "  assign start_ready = (state == S_IDLE);");
+            let done = st.name(st.done.expect("leaf has a done state"));
+            let _ = writeln!(out, "  assign done_valid = (state == {done});");
+            let _ = writeln!(out, "  assign result = res_r;");
+        }
+    }
+    let or_states = |list: &[String]| -> String {
+        if list.is_empty() {
+            "1'b0".to_string()
+        } else {
+            list.iter()
+                .map(|s| format!("(state == {s})"))
+                .collect::<Vec<_>>()
+                .join(" || ")
+        }
+    };
+    let mux = |items: &[(String, String)], width: u32| -> String {
+        let mut s = String::new();
+        for (state, word) in items {
+            s.push_str(&format!("(state == {state}) ? {word} :\n      "));
+        }
+        s.push_str(&format!("{width}'d0"));
+        s
+    };
+    if has_spawn {
+        let states: Vec<String> = muxes.spawn.iter().map(|(s, _)| s.clone()).collect();
+        let _ = writeln!(out, "  assign spawn_out_valid = {};", or_states(&states));
+        let _ = writeln!(out, "  assign spawn_out_data =\n      {};", mux(&muxes.spawn, SPAWN_BITS));
+    }
+    if has_next {
+        let states: Vec<String> = muxes.spawn_next.iter().map(|(s, _)| s.clone()).collect();
+        let _ = writeln!(out, "  assign spawn_next_out_valid = {};", or_states(&states));
+        let _ = writeln!(
+            out,
+            "  assign spawn_next_out_data =\n      {};",
+            mux(&muxes.spawn_next, SPAWN_NEXT_BITS)
+        );
+        let mut waits: Vec<String> = Vec::new();
+        for b in cfg.reachable_ids() {
+            for (i, op) in cfg.blocks[b].ops.iter().enumerate() {
+                if matches!(op, Op::MakeClosure { .. }) {
+                    waits.push(st.name(st.wait_state[&(b.index(), i)]).to_string());
+                }
+            }
+        }
+        let _ = writeln!(out, "  assign addr_in_ready = {};", or_states(&waits));
+    }
+    if has_send {
+        let states: Vec<String> = muxes.send.iter().map(|(s, _)| s.clone()).collect();
+        let _ = writeln!(out, "  assign send_out_valid = {};", or_states(&states));
+        let _ = writeln!(out, "  assign send_out_data =\n      {};", mux(&muxes.send, SEND_BITS));
+    }
+    for &g in &globals {
+        let gname = vname(&module.globals[g].name);
+        let issues = muxes.mem_issue.get(&g.index()).map(Vec::as_slice).unwrap_or(&[]);
+        let all: Vec<String> = issues.iter().map(|m| m.state.clone()).collect();
+        let writes: Vec<String> =
+            issues.iter().filter(|m| m.write).map(|m| m.state.clone()).collect();
+        let atomics: Vec<String> =
+            issues.iter().filter(|m| m.atomic).map(|m| m.state.clone()).collect();
+        let _ = writeln!(out, "  assign mem_{gname}_req_valid = {};", or_states(&all));
+        let _ = writeln!(out, "  assign mem_{gname}_req_write = {};", or_states(&writes));
+        let _ = writeln!(out, "  assign mem_{gname}_req_atomic = {};", or_states(&atomics));
+        let addr_items: Vec<(String, String)> =
+            issues.iter().map(|m| (m.state.clone(), m.addr.clone())).collect();
+        let _ = writeln!(out, "  assign mem_{gname}_req_addr =\n      {};", mux(&addr_items, 64));
+        let wdata_items: Vec<(String, String)> = issues
+            .iter()
+            .filter(|m| m.write)
+            .map(|m| (m.state.clone(), m.wdata.clone()))
+            .collect();
+        let _ = writeln!(out, "  assign mem_{gname}_req_wdata =\n      {};", mux(&wdata_items, 64));
+        let waits = muxes.mem_wait.get(&g.index()).cloned().unwrap_or_default();
+        let _ = writeln!(out, "  assign mem_{gname}_resp_ready = {};", or_states(&waits));
+    }
+
+    // Leaf instances.
+    for (k, lc) in leaf_calls.iter().enumerate() {
+        let p = &lc.prefix;
+        let leaf = &module.funcs[lc.callee];
+        let leaf_name = vname(&leaf.name);
+        for (j, a) in lc.args.iter().enumerate() {
+            let _ = writeln!(out, "  assign {p}_arg{j} = {a};");
+        }
+        let mut conns: Vec<String> = vec![
+            "    .clk(clk)".to_string(),
+            "    .rst_n(rst_n)".to_string(),
+            format!("    .start_valid(state == {})", lc.call_state),
+            format!("    .start_ready({p}_start_ready)"),
+        ];
+        for (j, pid) in leaf.param_ids().enumerate() {
+            conns.push(format!("    .a_{}({p}_arg{j})", vname(&leaf.vars[pid].name)));
+        }
+        conns.push(format!("    .done_valid({p}_done_valid)"));
+        conns.push(format!("    .done_ready(state == {})", lc.wait_state));
+        conns.push(format!("    .result({p}_result)"));
+        for g in used_globals(leaf) {
+            let gname = vname(&module.globals[g].name);
+            for suffix in [
+                "req_valid",
+                "req_ready",
+                "req_write",
+                "req_atomic",
+                "req_addr",
+                "req_wdata",
+                "resp_valid",
+                "resp_ready",
+                "resp_data",
+            ] {
+                conns.push(format!(
+                    "    .mem_{gname}_{suffix}({p}_mem_{gname}_{suffix})"
+                ));
+            }
+        }
+        let _ = writeln!(out, "  leaf_{leaf_name} u_leaf{k} (\n{}\n  );", conns.join(",\n"));
+    }
+
+    // The FSM.
+    let _ = writeln!(out, "  always @(posedge clk) begin");
+    let _ = writeln!(out, "    if (!rst_n) begin");
+    let _ = writeln!(out, "      state <= S_IDLE;");
+    let _ = writeln!(out, "      lat <= 16'd0;");
+    let _ = writeln!(out, "    end else begin");
+    let _ = writeln!(out, "      case (state)");
+    for (s_name, body) in &arms {
+        let _ = writeln!(out, "        {s_name}: begin");
+        out.push_str(body);
+        let _ = writeln!(out, "        end");
+    }
+    let _ = writeln!(out, "        default: state <= S_IDLE;");
+    let _ = writeln!(out, "      endcase");
+    let _ = writeln!(out, "    end");
+    let _ = writeln!(out, "  end");
+    let _ = writeln!(out, "endmodule");
+
+    Ok(GeneratedPe {
+        source: out,
+        style: PeStyle::Fsm,
+        states: st.names.len() as u32,
+        iface: PeInterface {
+            has_spawn,
+            has_spawn_next: has_next,
+            has_send,
+            globals,
+            leaf_mems,
+            closure_bits: layout.padded_bits,
+        },
+    })
+}
+
+/// Static successor state for terminators that read no values.
+fn static_succ(st: &States, term: &Term, kind: FsmKind) -> Result<String> {
+    match term {
+        Term::Jump(t) => Ok(st.name(st.block_entry[&t.index()]).to_string()),
+        Term::Halt => Ok("S_IDLE".to_string()),
+        Term::Return(None) => match kind {
+            FsmKind::Leaf => Ok(st.name(st.done.expect("leaf has a done state")).to_string()),
+            FsmKind::Task => bail!("task ends in `return` after explicitization"),
+        },
+        Term::Return(Some(_)) | Term::Branch { .. } => {
+            unreachable!("value-reading terminators get a dedicated state")
+        }
+        Term::Sync { .. } => bail!("`sync` terminator reached RTL codegen"),
+    }
+}

@@ -1,0 +1,306 @@
+//! System-level Verilog: the support package, the per-system dispatch
+//! stub and the top wrapper instantiating PEs and task queues.
+//!
+//! The wrapper mirrors HardCilk's architecture (paper §II-B): every task
+//! type gets a closure queue feeding its PE; PE spawn/send/spawn_next
+//! streams flow into a dispatch component that owns closure allocation,
+//! argument routing and the virtual steal network. Here the dispatch is an
+//! interface-complete **stub** (inputs always ready, outputs idle) — the
+//! real scheduler is HardCilk's; Bombyx's contribution is the PEs and
+//! their contracts. Memory request/response ports are exported per PE at
+//! the top level, one AXI adapter per port, as in the HLS flow.
+
+use std::fmt::Write as _;
+
+use crate::ir::cfg::Module;
+
+use super::pe_gen::{GeneratedPe, SEND_BITS, SPAWN_BITS, SPAWN_NEXT_BITS};
+use super::verilog::vname;
+
+/// The shared support package: one synthesizable ready/valid FIFO used for
+/// task queues and in-flight tracking.
+pub fn gen_package() -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "// Bombyx RTL support package — generated, do not edit.\n\
+         // bx_fifo: power-of-two ready/valid FIFO (task queues, in-flight\n\
+         // continuation tracking in pipelined access PEs)."
+    );
+    out.push_str(
+        "module bx_fifo #(\n\
+         \x20 parameter WIDTH = 64,\n\
+         \x20 parameter DEPTH_LOG2 = 4\n\
+         ) (\n\
+         \x20 input  wire clk,\n\
+         \x20 input  wire rst_n,\n\
+         \x20 input  wire in_valid,\n\
+         \x20 output wire in_ready,\n\
+         \x20 input  wire [WIDTH-1:0] in_data,\n\
+         \x20 output wire out_valid,\n\
+         \x20 input  wire out_ready,\n\
+         \x20 output wire [WIDTH-1:0] out_data\n\
+         );\n\
+         \x20 reg [WIDTH-1:0] store [0:(1 << DEPTH_LOG2) - 1];\n\
+         \x20 reg [DEPTH_LOG2:0] rd_ptr;\n\
+         \x20 reg [DEPTH_LOG2:0] wr_ptr;\n\
+         \x20 wire [DEPTH_LOG2:0] count;\n\
+         \x20 assign count = wr_ptr - rd_ptr;\n\
+         \x20 assign in_ready = (count != (1 << DEPTH_LOG2));\n\
+         \x20 assign out_valid = (count != 0);\n\
+         \x20 assign out_data = store[rd_ptr[DEPTH_LOG2-1:0]];\n\
+         \x20 always @(posedge clk) begin\n\
+         \x20   if (!rst_n) begin\n\
+         \x20     rd_ptr <= 0;\n\
+         \x20     wr_ptr <= 0;\n\
+         \x20   end else begin\n\
+         \x20     if (in_valid && in_ready) begin\n\
+         \x20       store[wr_ptr[DEPTH_LOG2-1:0]] <= in_data;\n\
+         \x20       wr_ptr <= wr_ptr + 1'b1;\n\
+         \x20     end\n\
+         \x20     if (out_valid && out_ready) begin\n\
+         \x20       rd_ptr <= rd_ptr + 1'b1;\n\
+         \x20     end\n\
+         \x20   end\n\
+         \x20 end\n\
+         endmodule\n",
+    );
+    out
+}
+
+/// The dispatch/steal-network stub plus the top-level wrapper.
+pub fn gen_top(module: &Module, system_name: &str, pes: &[(String, GeneratedPe)]) -> String {
+    let sys = vname(system_name);
+    let mut out = String::new();
+
+    // ---- dispatch stub ---------------------------------------------------
+    let _ = writeln!(
+        out,
+        "// Dispatch STUB for `{system_name}`: interface-complete placeholder\n\
+         // for HardCilk's scheduler (closure allocation, send_argument\n\
+         // routing, task dispatch, virtual steal network). Inputs are\n\
+         // always ready, outputs idle — replace with the real scheduler\n\
+         // to close the system."
+    );
+    let mut ports: Vec<String> = vec![
+        "  input  wire clk".to_string(),
+        "  input  wire rst_n".to_string(),
+        "  input  wire host_spawn_valid".to_string(),
+        "  output wire host_spawn_ready".to_string(),
+        format!("  input  wire [{}:0] host_spawn_data", SPAWN_BITS - 1),
+    ];
+    let mut stub_body: Vec<String> = vec!["  assign host_spawn_ready = 1'b1;".to_string()];
+    for (task, pe) in pes {
+        let t = vname(task);
+        if pe.iface.has_spawn {
+            ports.push(format!("  input  wire {t}_spawn_valid"));
+            ports.push(format!("  output wire {t}_spawn_ready"));
+            ports.push(format!("  input  wire [{}:0] {t}_spawn_data", SPAWN_BITS - 1));
+            stub_body.push(format!("  assign {t}_spawn_ready = 1'b1;"));
+        }
+        if pe.iface.has_spawn_next {
+            ports.push(format!("  input  wire {t}_spawn_next_valid"));
+            ports.push(format!("  output wire {t}_spawn_next_ready"));
+            ports.push(format!(
+                "  input  wire [{}:0] {t}_spawn_next_data",
+                SPAWN_NEXT_BITS - 1
+            ));
+            ports.push(format!("  output wire {t}_addr_valid"));
+            ports.push(format!("  input  wire {t}_addr_ready"));
+            ports.push(format!("  output wire [63:0] {t}_addr_data"));
+            stub_body.push(format!("  assign {t}_spawn_next_ready = 1'b1;"));
+            stub_body.push(format!("  assign {t}_addr_valid = 1'b0;"));
+            stub_body.push(format!("  assign {t}_addr_data = 64'd0;"));
+        }
+        if pe.iface.has_send {
+            ports.push(format!("  input  wire {t}_send_valid"));
+            ports.push(format!("  output wire {t}_send_ready"));
+            ports.push(format!("  input  wire [{}:0] {t}_send_data", SEND_BITS - 1));
+            stub_body.push(format!("  assign {t}_send_ready = 1'b1;"));
+        }
+        let w = pe.iface.closure_bits;
+        ports.push(format!("  output wire {t}_q_valid"));
+        ports.push(format!("  input  wire {t}_q_ready"));
+        ports.push(format!("  output wire [{}:0] {t}_q_data", w - 1));
+        stub_body.push(format!("  assign {t}_q_valid = 1'b0;"));
+        stub_body.push(format!("  assign {t}_q_data = {w}'d0;"));
+    }
+    let _ = writeln!(out, "module {sys}_dispatch (");
+    let _ = writeln!(out, "{}", ports.join(",\n"));
+    let _ = writeln!(out, ");");
+    for line in &stub_body {
+        let _ = writeln!(out, "{line}");
+    }
+    let _ = writeln!(out, "endmodule");
+    out.push('\n');
+
+    // ---- top wrapper -----------------------------------------------------
+    let _ = writeln!(
+        out,
+        "// Top-level wrapper for `{system_name}`: task queues + PEs +\n\
+         // dispatch stub. Memory ports are exported per PE (one AXI\n\
+         // adapter per port)."
+    );
+    let mut tports: Vec<String> = vec![
+        "  input  wire clk".to_string(),
+        "  input  wire rst_n".to_string(),
+        "  input  wire host_spawn_valid".to_string(),
+        "  output wire host_spawn_ready".to_string(),
+        format!("  input  wire [{}:0] host_spawn_data", SPAWN_BITS - 1),
+    ];
+    let mem_port_names = [
+        ("output wire ", "req_valid"),
+        ("input  wire ", "req_ready"),
+        ("output wire ", "req_write"),
+        ("output wire ", "req_atomic"),
+        ("output wire [63:0] ", "req_addr"),
+        ("output wire [63:0] ", "req_wdata"),
+        ("input  wire ", "resp_valid"),
+        ("output wire ", "resp_ready"),
+        ("input  wire [63:0] ", "resp_data"),
+    ];
+    for (task, pe) in pes {
+        let t = vname(task);
+        for &g in &pe.iface.globals {
+            let gname = vname(&module.globals[g].name);
+            for (dir, suffix) in mem_port_names {
+                tports.push(format!("  {dir}{t}_mem_{gname}_{suffix}"));
+            }
+        }
+        for (prefix, g) in &pe.iface.leaf_mems {
+            let gname = vname(&module.globals[*g].name);
+            for (dir, suffix) in mem_port_names {
+                tports.push(format!("  {dir}{t}_{prefix}_mem_{gname}_{suffix}"));
+            }
+        }
+    }
+    let _ = writeln!(out, "module {sys}_top (");
+    let _ = writeln!(out, "{}", tports.join(",\n"));
+    let _ = writeln!(out, ");");
+
+    // Inter-component wires.
+    for (task, pe) in pes {
+        let t = vname(task);
+        let w = pe.iface.closure_bits;
+        let _ = writeln!(out, "  wire {t}_disp_q_valid;");
+        let _ = writeln!(out, "  wire {t}_disp_q_ready;");
+        let _ = writeln!(out, "  wire [{}:0] {t}_disp_q_data;", w - 1);
+        let _ = writeln!(out, "  wire {t}_task_valid;");
+        let _ = writeln!(out, "  wire {t}_task_ready;");
+        let _ = writeln!(out, "  wire [{}:0] {t}_task_data;", w - 1);
+        if pe.iface.has_spawn {
+            let _ = writeln!(out, "  wire {t}_spawn_valid;");
+            let _ = writeln!(out, "  wire {t}_spawn_ready;");
+            let _ = writeln!(out, "  wire [{}:0] {t}_spawn_data;", SPAWN_BITS - 1);
+        }
+        if pe.iface.has_spawn_next {
+            let _ = writeln!(out, "  wire {t}_spawn_next_valid;");
+            let _ = writeln!(out, "  wire {t}_spawn_next_ready;");
+            let _ = writeln!(out, "  wire [{}:0] {t}_spawn_next_data;", SPAWN_NEXT_BITS - 1);
+            let _ = writeln!(out, "  wire {t}_addr_valid;");
+            let _ = writeln!(out, "  wire {t}_addr_ready;");
+            let _ = writeln!(out, "  wire [63:0] {t}_addr_data;");
+        }
+        if pe.iface.has_send {
+            let _ = writeln!(out, "  wire {t}_send_valid;");
+            let _ = writeln!(out, "  wire {t}_send_ready;");
+            let _ = writeln!(out, "  wire [{}:0] {t}_send_data;", SEND_BITS - 1);
+        }
+    }
+
+    // Task queues.
+    for (task, pe) in pes {
+        let t = vname(task);
+        let _ = writeln!(
+            out,
+            "  bx_fifo #(.WIDTH({w}), .DEPTH_LOG2(4)) q_{t} (\n    \
+             .clk(clk), .rst_n(rst_n),\n    \
+             .in_valid({t}_disp_q_valid), .in_ready({t}_disp_q_ready), .in_data({t}_disp_q_data),\n    \
+             .out_valid({t}_task_valid), .out_ready({t}_task_ready), .out_data({t}_task_data)\n  );",
+            w = pe.iface.closure_bits
+        );
+    }
+
+    // PE instances.
+    for (task, pe) in pes {
+        let t = vname(task);
+        let mut conns: Vec<String> = vec![
+            "    .clk(clk)".to_string(),
+            "    .rst_n(rst_n)".to_string(),
+            format!("    .task_in_valid({t}_task_valid)"),
+            format!("    .task_in_ready({t}_task_ready)"),
+            format!("    .task_in_data({t}_task_data)"),
+        ];
+        if pe.iface.has_spawn {
+            conns.push(format!("    .spawn_out_valid({t}_spawn_valid)"));
+            conns.push(format!("    .spawn_out_ready({t}_spawn_ready)"));
+            conns.push(format!("    .spawn_out_data({t}_spawn_data)"));
+        }
+        if pe.iface.has_spawn_next {
+            conns.push(format!("    .spawn_next_out_valid({t}_spawn_next_valid)"));
+            conns.push(format!("    .spawn_next_out_ready({t}_spawn_next_ready)"));
+            conns.push(format!("    .spawn_next_out_data({t}_spawn_next_data)"));
+            conns.push(format!("    .addr_in_valid({t}_addr_valid)"));
+            conns.push(format!("    .addr_in_ready({t}_addr_ready)"));
+            conns.push(format!("    .addr_in_data({t}_addr_data)"));
+        }
+        if pe.iface.has_send {
+            conns.push(format!("    .send_out_valid({t}_send_valid)"));
+            conns.push(format!("    .send_out_ready({t}_send_ready)"));
+            conns.push(format!("    .send_out_data({t}_send_data)"));
+        }
+        for &g in &pe.iface.globals {
+            let gname = vname(&module.globals[g].name);
+            for (_, suffix) in mem_port_names {
+                conns.push(format!(
+                    "    .mem_{gname}_{suffix}({t}_mem_{gname}_{suffix})"
+                ));
+            }
+        }
+        for (prefix, g) in &pe.iface.leaf_mems {
+            let gname = vname(&module.globals[*g].name);
+            for (_, suffix) in mem_port_names {
+                conns.push(format!(
+                    "    .{prefix}_mem_{gname}_{suffix}({t}_{prefix}_mem_{gname}_{suffix})"
+                ));
+            }
+        }
+        let _ = writeln!(out, "  pe_{t} u_{t} (\n{}\n  );", conns.join(",\n"));
+    }
+
+    // Dispatch stub instance.
+    let mut conns: Vec<String> = vec![
+        "    .clk(clk)".to_string(),
+        "    .rst_n(rst_n)".to_string(),
+        "    .host_spawn_valid(host_spawn_valid)".to_string(),
+        "    .host_spawn_ready(host_spawn_ready)".to_string(),
+        "    .host_spawn_data(host_spawn_data)".to_string(),
+    ];
+    for (task, pe) in pes {
+        let t = vname(task);
+        if pe.iface.has_spawn {
+            conns.push(format!("    .{t}_spawn_valid({t}_spawn_valid)"));
+            conns.push(format!("    .{t}_spawn_ready({t}_spawn_ready)"));
+            conns.push(format!("    .{t}_spawn_data({t}_spawn_data)"));
+        }
+        if pe.iface.has_spawn_next {
+            conns.push(format!("    .{t}_spawn_next_valid({t}_spawn_next_valid)"));
+            conns.push(format!("    .{t}_spawn_next_ready({t}_spawn_next_ready)"));
+            conns.push(format!("    .{t}_spawn_next_data({t}_spawn_next_data)"));
+            conns.push(format!("    .{t}_addr_valid({t}_addr_valid)"));
+            conns.push(format!("    .{t}_addr_ready({t}_addr_ready)"));
+            conns.push(format!("    .{t}_addr_data({t}_addr_data)"));
+        }
+        if pe.iface.has_send {
+            conns.push(format!("    .{t}_send_valid({t}_send_valid)"));
+            conns.push(format!("    .{t}_send_ready({t}_send_ready)"));
+            conns.push(format!("    .{t}_send_data({t}_send_data)"));
+        }
+        conns.push(format!("    .{t}_q_valid({t}_disp_q_valid)"));
+        conns.push(format!("    .{t}_q_ready({t}_disp_q_ready)"));
+        conns.push(format!("    .{t}_q_data({t}_disp_q_data)"));
+    }
+    let _ = writeln!(out, "  {sys}_dispatch u_dispatch (\n{}\n  );", conns.join(",\n"));
+    let _ = writeln!(out, "endmodule");
+    out
+}

@@ -1,0 +1,147 @@
+//! Low-level Verilog rendering: identifiers, literals and expressions.
+//!
+//! Everything the RTL backend emits is Verilog-2001. The datapath is a
+//! uniform 64-bit signed world (matching the IR's `int` semantics):
+//! comparisons and logical operators produce `64'sd0/64'sd1` via the
+//! conditional operator, `>>` renders as the arithmetic `>>>`, and every
+//! sub-expression is parenthesized so operator precedence can never bite.
+//! Floats have no RTL datapath — float expressions are rejected with a
+//! descriptive error (the float path in Bombyx is the XLA blackbox PE).
+
+use anyhow::{bail, Result};
+
+use crate::frontend::ast::{BinOp, UnOp};
+use crate::ir::expr::{Builtin, Expr, VarId};
+
+/// Sanitize a task/function name into a Verilog identifier (mirrors the
+/// HLS backend's `cname` so file and module names line up across targets).
+pub fn vname(name: &str) -> String {
+    name.replace("__", "_k_").replace(|c: char| !c.is_alphanumeric() && c != '_', "_")
+}
+
+/// A 64-bit signed literal for any `i64`, including `i64::MIN`.
+pub fn vlit(v: i64) -> String {
+    if v >= 0 {
+        format!("64'sd{v}")
+    } else if v == i64::MIN {
+        "$signed(64'h8000000000000000)".to_string()
+    } else {
+        format!("(-64'sd{})", -v)
+    }
+}
+
+/// Render an expression as a 64-bit signed Verilog expression. `var` maps
+/// a variable to the register/wire name carrying its value.
+pub fn vexpr(e: &Expr, var: &dyn Fn(VarId) -> String) -> Result<String> {
+    Ok(match e {
+        Expr::ConstI(v) => vlit(*v),
+        Expr::ConstB(b) => vlit(i64::from(*b)),
+        Expr::ConstF(_) | Expr::IntToFloat(_) => {
+            bail!("float expressions have no RTL datapath (floats run on the XLA blackbox PE)")
+        }
+        Expr::Var(v) => var(*v),
+        Expr::Unary(op, inner) => {
+            let a = vexpr(inner, var)?;
+            match op {
+                UnOp::Neg => format!("(-{a})"),
+                UnOp::Not => format!("(({a} == 64'sd0) ? 64'sd1 : 64'sd0)"),
+            }
+        }
+        Expr::Builtin(b, args) => {
+            let rendered: Vec<String> =
+                args.iter().map(|a| vexpr(a, var)).collect::<Result<_>>()?;
+            match b {
+                Builtin::Min => {
+                    format!(
+                        "(({a} < {b}) ? {a} : {b})",
+                        a = rendered[0],
+                        b = rendered[1]
+                    )
+                }
+                Builtin::Max => {
+                    format!(
+                        "(({a} > {b}) ? {a} : {b})",
+                        a = rendered[0],
+                        b = rendered[1]
+                    )
+                }
+                Builtin::Abs => {
+                    format!("(({a} < 64'sd0) ? (-{a}) : {a})", a = rendered[0])
+                }
+            }
+        }
+        Expr::Binary(op, lhs, rhs) => {
+            let a = vexpr(lhs, var)?;
+            let b = vexpr(rhs, var)?;
+            match op {
+                BinOp::Add => format!("({a} + {b})"),
+                BinOp::Sub => format!("({a} - {b})"),
+                BinOp::Mul => format!("({a} * {b})"),
+                BinOp::Div => format!("({a} / {b})"),
+                BinOp::Rem => format!("({a} % {b})"),
+                BinOp::Shl => format!("({a} << {b})"),
+                // Arithmetic shift: the operands are signed, `>>>` keeps
+                // the IR's i64 semantics.
+                BinOp::Shr => format!("({a} >>> {b})"),
+                BinOp::BitAnd => format!("({a} & {b})"),
+                BinOp::BitOr => format!("({a} | {b})"),
+                BinOp::BitXor => format!("({a} ^ {b})"),
+                BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge | BinOp::Eq | BinOp::Ne => {
+                    format!("(({a} {} {b}) ? 64'sd1 : 64'sd0)", op.symbol())
+                }
+                BinOp::And => {
+                    format!("((({a} != 64'sd0) && ({b} != 64'sd0)) ? 64'sd1 : 64'sd0)")
+                }
+                BinOp::Or => {
+                    format!("((({a} != 64'sd0) || ({b} != 64'sd0)) ? 64'sd1 : 64'sd0)")
+                }
+            }
+        }
+    })
+}
+
+/// Render an expression as a 1-bit condition.
+pub fn vcond(e: &Expr, var: &dyn Fn(VarId) -> String) -> Result<String> {
+    Ok(format!("({} != 64'sd0)", vexpr(e, var)?))
+}
+
+/// A `data[msb:lsb]` part-select for a closure field.
+pub fn part_select(signal: &str, offset_bits: u32, width_bits: u32) -> String {
+    format!("{signal}[{}:{}]", offset_bits + width_bits - 1, offset_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_cover_the_i64_range() {
+        assert_eq!(vlit(0), "64'sd0");
+        assert_eq!(vlit(42), "64'sd42");
+        assert_eq!(vlit(-7), "(-64'sd7)");
+        assert_eq!(vlit(i64::MIN), "$signed(64'h8000000000000000)");
+    }
+
+    #[test]
+    fn names_match_the_hls_backend() {
+        assert_eq!(vname("fib__k1"), "fib_k_k1");
+        assert_eq!(vname("adj_off_access"), "adj_off_access");
+    }
+
+    #[test]
+    fn comparisons_produce_select_form() {
+        let e = Expr::Binary(
+            BinOp::Lt,
+            Box::new(Expr::ConstI(1)),
+            Box::new(Expr::ConstI(2)),
+        );
+        let s = vexpr(&e, &|_| unreachable!()).unwrap();
+        assert_eq!(s, "((64'sd1 < 64'sd2) ? 64'sd1 : 64'sd0)");
+    }
+
+    #[test]
+    fn floats_are_rejected() {
+        let e = Expr::ConstF(1.0);
+        assert!(vexpr(&e, &|_| unreachable!()).is_err());
+    }
+}

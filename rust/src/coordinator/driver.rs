@@ -69,6 +69,47 @@ impl BfsExperiment {
     }
 }
 
+impl BfsExperiment {
+    /// Worker threads [`BfsExperiment::run_grid`] uses for a grid of `n`
+    /// configurations (exposed so benches can report the real fan-out).
+    pub fn grid_workers(n: usize) -> usize {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n.max(1))
+    }
+
+    /// Run a whole grid of simulator configurations, sharded across OS
+    /// threads with `std::thread::scope`. The two compile sessions are
+    /// only read (each configuration builds its own memory image), so
+    /// every worker shares `&self`; results come back in `configs` order.
+    /// This is what lets the `pe_sweep`/`memlat_sweep` benches scale with
+    /// cores instead of walking the grid serially.
+    pub fn run_grid(
+        &self,
+        graph: &CsrGraph,
+        configs: &[SimConfig],
+    ) -> Result<Vec<BfsComparison>> {
+        if configs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let workers = BfsExperiment::grid_workers(configs.len());
+        let chunk = configs.len().div_ceil(workers);
+        let mut slots: Vec<Option<Result<BfsComparison>>> = Vec::new();
+        slots.resize_with(configs.len(), || None);
+        std::thread::scope(|scope| {
+            for (cfgs, outs) in configs.chunks(chunk).zip(slots.chunks_mut(chunk)) {
+                scope.spawn(move || {
+                    for (cfg, out) in cfgs.iter().zip(outs.iter_mut()) {
+                        *out = Some(self.run(graph, cfg));
+                    }
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| slot.expect("every grid slot is filled by its worker"))
+            .collect()
+    }
+}
+
 /// One-shot convenience wrapper (compiles both variants, runs one graph).
 pub fn run_bfs_comparison(graph: &CsrGraph, config: &SimConfig) -> Result<BfsComparison> {
     BfsExperiment::new()?.run(graph, config)
@@ -201,4 +242,33 @@ pub fn run_relax_sim(
 /// Compile + simulate the relax workload with the scalar reference datapath.
 pub fn run_relax_scalar(graph: &CsrGraph, seed: u64, config: &SimConfig) -> Result<RelaxRun> {
     RelaxExperiment::new()?.run_scalar(graph, seed, config)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::graphgen;
+
+    #[test]
+    fn run_grid_matches_serial_runs() {
+        let exp = BfsExperiment::new().unwrap();
+        let graph = graphgen::tree(2, 3);
+        let a = SimConfig { default_pes: 1, ..SimConfig::default() };
+        let b = SimConfig { default_pes: 2, ..SimConfig::default() };
+        let grid = exp.run_grid(&graph, &[a.clone(), b.clone()]).unwrap();
+        assert_eq!(grid.len(), 2);
+        let sa = exp.run(&graph, &a).unwrap();
+        let sb = exp.run(&graph, &b).unwrap();
+        assert_eq!(grid[0].plain_cycles, sa.plain_cycles);
+        assert_eq!(grid[0].dae_cycles, sa.dae_cycles);
+        assert_eq!(grid[1].plain_cycles, sb.plain_cycles);
+        assert_eq!(grid[1].dae_cycles, sb.dae_cycles);
+    }
+
+    #[test]
+    fn run_grid_on_empty_grid_is_empty() {
+        let exp = BfsExperiment::new().unwrap();
+        let graph = graphgen::tree(2, 2);
+        assert!(exp.run_grid(&graph, &[]).unwrap().is_empty());
+    }
 }

@@ -15,4 +15,4 @@ pub mod resource;
 pub mod schedule;
 
 pub use resource::{estimate, CostModel, ResourceEstimate};
-pub use schedule::{classify, op_cycles, PeClass, ScheduleModel};
+pub use schedule::{classify, op_cycles, rtl_initiation_interval, PeClass, ScheduleModel};

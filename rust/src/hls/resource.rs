@@ -31,6 +31,16 @@ pub struct ResourceEstimate {
     pub dsp: u32,
 }
 
+impl std::fmt::Display for ResourceEstimate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "LUT={} FF={} BRAM={} DSP={}",
+            self.lut, self.ff, self.bram, self.dsp
+        )
+    }
+}
+
 impl std::ops::Add for ResourceEstimate {
     type Output = ResourceEstimate;
     fn add(self, o: ResourceEstimate) -> ResourceEstimate {

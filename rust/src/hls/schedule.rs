@@ -98,6 +98,35 @@ pub fn classify(func: &Func) -> PeClass {
     PeClass::Pipelined { ii }
 }
 
+/// Initiation interval a *direct-RTL* pipelined datapath achieves for a
+/// [`PeClass::Pipelined`] task, or `None` for sequential tasks.
+///
+/// The HLS model's II ([`classify`]) charges every stream write a full
+/// write-buffer beat (`stream_write` = 8 cycles), because Vitis schedules
+/// the buffer handshake into the task loop. The RTL backend enqueues
+/// stream messages in a single cycle through ready/valid FIFOs, so its II
+/// is bounded by the load issue rate alone — a one-load DAE access task
+/// pipelines at II=1 (paper §II-C made concrete in hardware).
+pub fn rtl_initiation_interval(func: &Func) -> Option<u32> {
+    match classify(func) {
+        PeClass::Sequential => None,
+        PeClass::Pipelined { .. } => {
+            let model = ScheduleModel::default();
+            let mut loads = 0u32;
+            if let Some(cfg) = func.body.as_ref() {
+                for block in cfg.blocks.values() {
+                    for op in &block.ops {
+                        if matches!(op, Op::Load { .. }) {
+                            loads += 1;
+                        }
+                    }
+                }
+            }
+            Some((loads * model.load_issue).max(1))
+        }
+    }
+}
+
 /// Cycles a sequential PE spends executing one op, *excluding* memory wait
 /// (the simulator adds channel latency for loads).
 pub fn op_cycles(model: &ScheduleModel, op: &Op) -> u32 {
@@ -210,6 +239,17 @@ mod tests {
         let m = &r.explicit;
         let visit = &m.funcs[m.func_by_name("visit").unwrap()];
         assert_eq!(classify(visit), PeClass::Sequential, "§II-C: loop prevents pipelining");
+    }
+
+    #[test]
+    fn rtl_ii_is_one_for_single_load_access_pe() {
+        let r = compile("t", BFS_DAE, &CompileOptions::standard()).unwrap();
+        let m = &r.explicit;
+        let access = &m.funcs[m.func_by_name("adj_off_access").unwrap()];
+        assert_eq!(rtl_initiation_interval(access), Some(1));
+        // Sequential tasks have no pipelined II at all.
+        let exec = &m.funcs[m.func_by_name("visit__k1").unwrap()];
+        assert_eq!(rtl_initiation_interval(exec), None);
     }
 
     #[test]

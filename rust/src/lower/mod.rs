@@ -132,6 +132,7 @@ pub struct CompileSession {
     result: CompileResult,
     emu: Option<crate::backend::emu::EmuProgram>,
     hardcilk: Vec<(String, crate::backend::hardcilk::HardCilkSystem)>,
+    rtl: Vec<(String, crate::backend::rtl::RtlSystem)>,
 }
 
 impl CompileSession {
@@ -153,6 +154,7 @@ impl CompileSession {
             result,
             emu: None,
             hardcilk: Vec::new(),
+            rtl: Vec::new(),
         }
     }
 
@@ -221,6 +223,33 @@ impl CompileSession {
         let system = crate::backend::hardcilk::generate(&self.result.explicit, system_name)?;
         self.hardcilk.push((system_name.to_string(), system));
         Ok(&self.hardcilk.last().expect("system just pushed").1)
+    }
+
+    /// The generated Verilog system, memoized per system name. Emission
+    /// runs through a one-pass [`PassManager`] so the `rtl_emit` pass is
+    /// timed (appended to [`CompileSession::timings`]) and the produced
+    /// system is verified by the structural lint at the pass boundary.
+    /// A second request for the same name returns the cached system
+    /// without re-lowering or re-emitting.
+    pub fn rtl_system(
+        &mut self,
+        system_name: &str,
+    ) -> Result<&crate::backend::rtl::RtlSystem> {
+        if let Some(i) = self.rtl.iter().position(|(n, _)| n == system_name) {
+            return Ok(&self.rtl[i].1);
+        }
+        let manager = PassManager::new()
+            .add(crate::backend::rtl::RtlEmit { system_name: system_name.to_string() });
+        let (artifact, report) = manager.run_from(
+            Artifact::Module(self.result.explicit.clone()),
+            PipelineStage::Explicit,
+            &self.options,
+            |_, _| {},
+        )?;
+        self.result.timings.extend(report.timings);
+        let system = artifact.into_rtl()?;
+        self.rtl.push((system_name.to_string(), system));
+        Ok(&self.rtl.last().expect("system just pushed").1)
     }
 
     /// Sequential oracle over the cached implicit module.

@@ -39,6 +39,8 @@ pub enum PipelineStage {
     Implicit,
     /// Explicit Cilk-1 IR (terminating tasks, paper Fig. 4(c)).
     Explicit,
+    /// Emitted Verilog system ([`crate::backend::rtl`]).
+    Rtl,
 }
 
 impl PipelineStage {
@@ -47,14 +49,16 @@ impl PipelineStage {
             PipelineStage::Ast => "ast",
             PipelineStage::Implicit => "implicit IR",
             PipelineStage::Explicit => "explicit IR",
+            PipelineStage::Rtl => "rtl",
         }
     }
 
     /// The `ir::verify` stage used for inter-pass checks (`None` for AST,
-    /// which has no module-level verifier).
+    /// which has no module-level verifier; the `rtl` stage is verified by
+    /// the structural Verilog lint instead).
     pub fn verify_stage(self) -> Option<Stage> {
         match self {
-            PipelineStage::Ast => None,
+            PipelineStage::Ast | PipelineStage::Rtl => None,
             PipelineStage::Implicit => Some(Stage::Implicit),
             PipelineStage::Explicit => Some(Stage::Explicit),
         }
@@ -66,13 +70,14 @@ impl PipelineStage {
 pub enum Artifact {
     Ast(Program),
     Module(Module),
+    Rtl(crate::backend::rtl::RtlSystem),
 }
 
 impl Artifact {
     pub fn as_module(&self) -> Option<&Module> {
         match self {
             Artifact::Module(m) => Some(m),
-            Artifact::Ast(_) => None,
+            Artifact::Ast(_) | Artifact::Rtl(_) => None,
         }
     }
 
@@ -80,6 +85,16 @@ impl Artifact {
         match self {
             Artifact::Module(m) => Ok(m),
             Artifact::Ast(_) => bail!("pipeline ended before AST lowering produced a module"),
+            Artifact::Rtl(_) => bail!("pipeline ended at the rtl stage, not a module"),
+        }
+    }
+
+    pub fn into_rtl(self) -> Result<crate::backend::rtl::RtlSystem> {
+        match self {
+            Artifact::Rtl(system) => Ok(system),
+            Artifact::Ast(_) | Artifact::Module(_) => {
+                bail!("pipeline did not end with an rtl emission pass")
+            }
         }
     }
 }
@@ -89,6 +104,9 @@ fn require_module(pass: &str, artifact: Artifact) -> Result<Module> {
         Artifact::Module(m) => Ok(m),
         Artifact::Ast(_) => {
             bail!("pass `{pass}` requires lowered (implicit IR) input, got an unlowered AST")
+        }
+        Artifact::Rtl(_) => {
+            bail!("pass `{pass}` requires an IR module, got an emitted rtl system")
         }
     }
 }
@@ -300,6 +318,7 @@ impl PassManager {
         let stage = match &artifact {
             Artifact::Ast(_) => PipelineStage::Ast,
             Artifact::Module(_) => PipelineStage::Implicit,
+            Artifact::Rtl(_) => PipelineStage::Rtl,
         };
         self.run_from(artifact, stage, opts, snapshot)
     }
@@ -366,6 +385,18 @@ fn verify_artifact(
     artifact: &Artifact,
     stage: PipelineStage,
 ) -> Result<()> {
+    // The rtl stage has no IR verifier; its invariant check is the
+    // structural Verilog lint.
+    if let Artifact::Rtl(system) = artifact {
+        let errors = system.lint();
+        if !errors.is_empty() {
+            bail!(
+                "pass `{pass}`: {when}-verification (structural Verilog lint) failed:\n  {}",
+                errors.join("\n  ")
+            );
+        }
+        return Ok(());
+    }
     let (Some(module), Some(vstage)) = (artifact.as_module(), stage.verify_stage()) else {
         return Ok(());
     };

@@ -96,34 +96,74 @@ fn print_usage() {
     println!(
         "bombyx — OpenCilk-style task parallelism compiled for FPGA TLP systems\n\n\
          USAGE:\n  \
-         bombyx compile  <file.cilk> [--dae] [--dump implicit|explicit|cilk1] [--trace-stages] [--timings]\n  \
-         bombyx codegen  <file.cilk> [--dae] --out <dir> [--system <name>]\n  \
-         bombyx estimate <file.cilk> [--dae]\n  \
-         bombyx run      <file.cilk> <entry> [int args...] [--dae] [--workers N]\n  \
-         bombyx sim      <file.cilk> <entry> [int args...] [--dae] [--pes N] [--mem-latency N]\n  \
-         bombyx bfs      [--depth D] [--branch B] [--pes N]"
+         bombyx compile  <file.cilk> [--target rtl|hardcilk] [--dae|--no-dae] [--dump implicit|explicit|cilk1] [--trace-stages] [--timings]\n  \
+         bombyx codegen  <file.cilk> [--target rtl|hardcilk] [--dae|--no-dae] --out <dir> [--system <name>]\n  \
+         bombyx estimate <file.cilk> [--dae|--no-dae]\n  \
+         bombyx run      <file.cilk> <entry> [int args...] [--dae|--no-dae] [--workers N]\n  \
+         bombyx sim      <file.cilk> <entry> [int args...] [--dae|--no-dae] [--pes N] [--mem-latency N]\n  \
+         bombyx bfs      [--depth D] [--branch B] [--pes N]\n\n\
+         Sources containing `#pragma bombyx dae` compile with DAE enabled\n\
+         automatically; `--no-dae` forces the non-DAE baseline."
     );
 }
 
 /// Build a compile session (one lowering, shared by every target the
-/// command touches).
+/// command touches). DAE is enabled by `--dae` or by the presence of
+/// `#pragma bombyx dae` in the source (the pragma states intent);
+/// `--no-dae` wins over both.
 fn load_session(flags: &Flags) -> Result<CompileSession> {
     let path = flags
         .positional
         .first()
         .ok_or_else(|| anyhow!("expected a .cilk source file"))?;
     let source = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-    let opts = if flags.switches.contains("dae") {
-        CompileOptions::standard()
-    } else {
-        CompileOptions::no_dae()
-    };
+    // Comment-stripped pragma scan: `// #pragma bombyx dae` must not flip
+    // the mode (the parser ignores it too).
+    let has_pragma = source
+        .lines()
+        .any(|l| l.split("//").next().unwrap_or("").contains("#pragma bombyx dae"));
+    let dae = !flags.switches.contains("no-dae")
+        && (flags.switches.contains("dae") || has_pragma);
+    let opts = if dae { CompileOptions::standard() } else { CompileOptions::no_dae() };
     CompileSession::new(path, &source, &opts)
 }
 
 fn cmd_compile(args: &[String]) -> Result<()> {
-    let flags = parse_flags(args, &["dump"])?;
-    let session = load_session(&flags)?;
+    let flags = parse_flags(args, &["dump", "target"])?;
+    let mut session = load_session(&flags)?;
+    let target = flags.options.get("target").map(String::as_str);
+    if !matches!(target, None | Some("explicit"))
+        && (flags.options.contains_key("dump") || flags.switches.contains("trace-stages"))
+    {
+        bail!("--dump/--trace-stages only apply to the default IR target");
+    }
+    match target {
+        None | Some("explicit") => {}
+        Some("rtl") => {
+            let system = session.rtl_system("bombyx_system")?;
+            print!("{}", system.report());
+            print!("{}", system.concatenated());
+            if flags.switches.contains("timings") {
+                println!("{}", timing_table(session.timings()));
+            }
+            return Ok(());
+        }
+        Some("hardcilk") => {
+            let system = session.hardcilk_system("bombyx_system")?;
+            println!("{}", system.header);
+            for (_, file, src) in &system.pes {
+                println!("// ==== {file} ====\n{src}");
+            }
+            println!("// ==== bombyx_system.json ====\n{}", system.descriptor.pretty());
+            if flags.switches.contains("timings") {
+                println!("{}", timing_table(session.timings()));
+            }
+            return Ok(());
+        }
+        Some(other) => {
+            bail!("unknown --target `{other}` (expected `rtl`, `hardcilk` or `explicit`)")
+        }
+    }
     let result = session.result();
     if flags.switches.contains("timings") {
         println!("{}", timing_table(session.timings()));
@@ -149,10 +189,27 @@ fn cmd_compile(args: &[String]) -> Result<()> {
 }
 
 fn cmd_codegen(args: &[String]) -> Result<()> {
-    let flags = parse_flags(args, &["out", "system"])?;
+    let flags = parse_flags(args, &["out", "system", "target"])?;
     let mut session = load_session(&flags)?;
-    let name = flags.options.get("system").map(String::as_str).unwrap_or("bombyx_system");
-    let system = session.hardcilk_system(name)?;
+    let name =
+        flags.options.get("system").map(String::as_str).unwrap_or("bombyx_system").to_string();
+    if flags.options.get("target").map(String::as_str) == Some("rtl") {
+        let system = session.rtl_system(&name)?;
+        match flags.options.get("out") {
+            Some(dir) => {
+                system.write_to(std::path::Path::new(dir))?;
+                println!(
+                    "wrote {} PE modules + package + {}_top.v to {dir} ({} LoC)",
+                    system.pes.len(),
+                    name,
+                    system.total_loc()
+                );
+            }
+            None => print!("{}", system.concatenated()),
+        }
+        return Ok(());
+    }
+    let system = session.hardcilk_system(&name)?;
     match flags.options.get("out") {
         Some(dir) => {
             system.write_to(std::path::Path::new(dir))?;

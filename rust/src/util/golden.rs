@@ -1,0 +1,118 @@
+//! Golden-file comparison for test harnesses.
+//!
+//! Policy (snapshot-on-write with an opt-in strict mode):
+//!
+//! - missing golden, or `BOMBYX_UPDATE_GOLDENS=1` → the golden is
+//!   (re)written from the actual output and the check passes ("blessed");
+//!   in strict mode a *missing* golden is a failure instead — otherwise a
+//!   fresh checkout would self-bless and the strict run would be vacuous;
+//! - golden present and equal → pass;
+//! - golden present and different → the actual output is written next to
+//!   the golden as `<name>.new` with a diff preview on stderr; the check
+//!   **fails** only when `BOMBYX_STRICT_GOLDENS=1` is set (CI sets it),
+//!   so a stale golden never breaks a plain local `cargo test` — the
+//!   `.new` file and the warning are the signal to re-bless.
+//!
+//! Goldens live under the crate root; paths are relative to
+//! `CARGO_MANIFEST_DIR` so the harness works from any working directory.
+
+use std::path::PathBuf;
+
+/// Outcome of one golden comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GoldenStatus {
+    Matched,
+    Blessed,
+    Mismatched,
+}
+
+fn manifest_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+/// Compare `actual` against the golden at `rel_path` (relative to the
+/// crate root) under the policy above. Panics on mismatch in strict mode.
+pub fn check_golden(rel_path: &str, actual: &str) -> GoldenStatus {
+    let path = manifest_path(rel_path);
+    let update = std::env::var_os("BOMBYX_UPDATE_GOLDENS").is_some();
+    let strict = std::env::var_os("BOMBYX_STRICT_GOLDENS").is_some();
+    let existing = std::fs::read_to_string(&path).ok();
+    match existing {
+        Some(golden) if golden == actual && !update => GoldenStatus::Matched,
+        Some(golden) if !update => {
+            let new_path = path.with_extension(format!(
+                "{}.new",
+                path.extension().and_then(|e| e.to_str()).unwrap_or("txt")
+            ));
+            let _ = std::fs::write(&new_path, actual);
+            let diff = first_diff(&golden, actual);
+            let msg = format!(
+                "golden mismatch: {rel_path}\n  {diff}\n  actual written to {}\n  \
+                 re-bless with BOMBYX_UPDATE_GOLDENS=1",
+                new_path.display()
+            );
+            if strict {
+                panic!("{msg}");
+            }
+            eprintln!("WARNING: {msg}");
+            GoldenStatus::Mismatched
+        }
+        _ => {
+            if strict && !update {
+                panic!(
+                    "golden missing in strict mode: {rel_path}\n  \
+                     bless it locally (plain `cargo test` or BOMBYX_UPDATE_GOLDENS=1) \
+                     and commit the file"
+                );
+            }
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent).expect("create golden directory");
+            }
+            std::fs::write(&path, actual)
+                .unwrap_or_else(|e| panic!("writing golden {rel_path}: {e}"));
+            eprintln!("blessed golden: {rel_path}");
+            GoldenStatus::Blessed
+        }
+    }
+}
+
+fn first_diff(golden: &str, actual: &str) -> String {
+    for (i, (g, a)) in golden.lines().zip(actual.lines()).enumerate() {
+        if g != a {
+            return format!("first difference at line {}:\n  - {g}\n  + {a}", i + 1);
+        }
+    }
+    format!(
+        "line counts differ: golden {} vs actual {}",
+        golden.lines().count(),
+        actual.lines().count()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bless_then_match_roundtrip() {
+        if std::env::var_os("BOMBYX_STRICT_GOLDENS").is_some() {
+            // Strict mode fails on missing goldens by design; the bless
+            // flow is a non-strict workflow.
+            return;
+        }
+        let rel = format!("target/golden_test_{}.txt", std::process::id());
+        let _ = std::fs::remove_file(manifest_path(&rel));
+        assert_eq!(check_golden(&rel, "hello\n"), GoldenStatus::Blessed);
+        assert_eq!(check_golden(&rel, "hello\n"), GoldenStatus::Matched);
+        // Default (non-strict) mode reports but does not panic.
+        assert_eq!(check_golden(&rel, "changed\n"), GoldenStatus::Mismatched);
+        let _ = std::fs::remove_file(manifest_path(&rel).with_extension("txt.new"));
+        let _ = std::fs::remove_file(manifest_path(&rel));
+    }
+
+    #[test]
+    fn first_diff_pinpoints_line() {
+        let d = first_diff("a\nb\nc\n", "a\nX\nc\n");
+        assert!(d.contains("line 2"), "{d}");
+    }
+}

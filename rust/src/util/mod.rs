@@ -7,6 +7,7 @@
 
 pub mod align;
 pub mod bench;
+pub mod golden;
 pub mod idvec;
 pub mod json;
 pub mod prop;

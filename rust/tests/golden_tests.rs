@@ -1,8 +1,10 @@
 //! Golden tests: the paper's figures as stable text artifacts, plus
-//! cross-language parity pins.
+//! cross-language parity pins and the per-pass IR snapshot harness built
+//! on the `PassManager` snapshot hook.
 
-use bombyx::ir::print::{print_cilk1, print_func};
-use bombyx::lower::{compile, CompileOptions};
+use bombyx::ir::print::{print_cilk1, print_func, print_module};
+use bombyx::lower::{compile, Artifact, CompileOptions, PassManager};
+use bombyx::util::golden::check_golden;
 use bombyx::workloads::fib;
 
 #[test]
@@ -64,6 +66,44 @@ fn weight_parity_with_python_golden() {
     let (w, _) = bombyx::workloads::relax::weights(1);
     let golden: [f32; 4] = [-0.051488318, 0.085822836, -0.032146744, -0.06721322];
     assert_eq!(&w[..4], &golden);
+}
+
+/// Satellite of the RTL PR: the `PassManager` snapshot hook wired into a
+/// golden harness. The IR after **every** executed pass of the standard
+/// pipeline on `examples/cilk/fib.cilk` is diffed against a checked-in
+/// golden, so any pass-ordering or lowering drift shows up as a per-pass
+/// diff rather than only at the final explicit dump. Goldens self-bless
+/// when missing; `BOMBYX_STRICT_GOLDENS=1` (set in CI) turns a mismatch
+/// into a failure, and `BOMBYX_UPDATE_GOLDENS=1` re-blesses.
+#[test]
+fn per_pass_ir_snapshots_match_goldens() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/cilk/fib.cilk");
+    let src = std::fs::read_to_string(path).unwrap();
+    let (program, _) = bombyx::frontend::parse_and_check("fib", &src).unwrap();
+    let manager = PassManager::standard();
+    let opts = CompileOptions::standard();
+    let mut snaps: Vec<(&'static str, String)> = Vec::new();
+    manager
+        .run(Artifact::Ast(program), &opts, |pass, artifact| {
+            if let Some(m) = artifact.as_module() {
+                snaps.push((pass, print_module(m)));
+            }
+        })
+        .unwrap();
+    assert_eq!(snaps.len(), 5, "standard pipeline runs five passes on fib");
+    for (i, (pass, text)) in snaps.iter().enumerate() {
+        let rel = format!("rust/tests/goldens/passes/fib/{i:02}_{pass}.golden");
+        check_golden(&rel, text);
+    }
+}
+
+#[test]
+fn per_pass_snapshots_are_deterministic() {
+    let run_once = || {
+        let r = compile("fib", fib::FIB_SRC, &CompileOptions::standard()).unwrap();
+        print_module(&r.explicit)
+    };
+    assert_eq!(run_once(), run_once());
 }
 
 #[test]
