@@ -1,15 +1,55 @@
 //! A-compile ablation: compiler throughput per stage for every example
-//! program, via the pass manager's per-pass timing counters.
+//! program, plus the two throughput layers on top of the pass manager —
+//! parallel batch compilation (serial vs. `--jobs 4` over the six-program
+//! corpus) and incremental per-function recompilation (one-function edit
+//! vs. cold compile, in both wall time and pass work).
+//!
+//! Emits `BENCH_compile.json` (machine-readable) next to the text report
+//! so the perf trajectory has a committed datapoint per run.
+//!
+//! `BOMBYX_BENCH_SMOKE=1` switches to a reduced-iteration mode used by CI
+//! to catch bench bit-rot without paying full measurement cost.
 
 use std::time::Duration;
 
 use bombyx::frontend;
-use bombyx::lower::{CompileOptions, CompileSession};
+use bombyx::lower::{compile_batch, pass_work, CompileOptions, CompileSession, RecompileMode};
 use bombyx::util::bench::{banner, bench, timing_table};
+use bombyx::util::json::Json;
 use bombyx::workloads::{bfs, fib, nqueens, qsort, relax};
 
+/// Four functions so a one-function edit leaves three untouched: the
+/// incremental section needs clean functions to skip.
+const INCR_SRC: &str = "\
+global int acc[4];
+int leaf_a(int a) { return a * 3 + 1; }
+int leaf_b(int a) { return a - 2; }
+int work(int n) {
+    if (n < 2) { int t = leaf_a(n); return t; }
+    int x = cilk_spawn work(n - 1);
+    int y = cilk_spawn work(n - 2);
+    cilk_sync;
+    int r = leaf_b(x + y);
+    return r;
+}
+void top(int n) {
+    int r = cilk_spawn work(n);
+    cilk_sync;
+    atomic_add(acc, 0, r);
+}
+";
+
 fn main() {
-    banner("compile_time", "Compiler stage timings on the example programs.");
+    let smoke = std::env::var("BOMBYX_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let samples = if smoke { 3 } else { 50 };
+    let pass_iters = if smoke { 3 } else { 20 };
+    banner(
+        "compile_time",
+        "Compiler stage timings, batch throughput and incremental recompilation.",
+    );
+    if smoke {
+        println!("(smoke mode: reduced iterations)");
+    }
     let programs: &[(&str, &str)] = &[
         ("fib", fib::FIB_SRC),
         ("bfs", bfs::BFS_SRC),
@@ -18,35 +58,38 @@ fn main() {
         ("qsort", qsort::QSORT_SRC),
         ("relax", relax::RELAX_SRC),
     ];
+
+    // ---- section 1: per-program stage timings ------------------------------
     for (name, src) in programs {
-        bench(&format!("parse+sema {name}"), 50, || {
+        bench(&format!("parse+sema {name}"), samples, || {
             frontend::parse_and_check(name, src).unwrap()
         });
-        bench(&format!("compile session {name}"), 50, || {
+        bench(&format!("compile session {name}"), samples, || {
             CompileSession::new(name, src, &CompileOptions::standard()).unwrap()
         });
 
         // Per-pass breakdown: median of the PassManager's own timing
         // counters over repeated compiles.
-        let mut per_pass: Vec<(&'static str, Vec<Duration>, bool)> = Vec::new();
-        for _ in 0..20 {
+        let mut per_pass: Vec<(&'static str, Vec<Duration>, bool, usize)> = Vec::new();
+        for _ in 0..pass_iters {
             let session = CompileSession::new(name, src, &CompileOptions::standard()).unwrap();
             for t in session.timings() {
-                match per_pass.iter_mut().find(|(n, _, _)| *n == t.pass) {
-                    Some((_, samples, _)) => samples.push(t.duration),
-                    None => per_pass.push((t.pass, vec![t.duration], t.ran)),
+                match per_pass.iter_mut().find(|(n, _, _, _)| *n == t.pass) {
+                    Some((_, samples, _, _)) => samples.push(t.duration),
+                    None => per_pass.push((t.pass, vec![t.duration], t.ran, t.funcs)),
                 }
             }
         }
         let rows: Vec<bombyx::lower::PassTiming> = per_pass
             .iter()
-            .map(|(pass, samples, ran)| {
+            .map(|(pass, samples, ran, funcs)| {
                 let mut sorted = samples.clone();
                 sorted.sort();
                 bombyx::lower::PassTiming {
                     pass: *pass,
                     duration: sorted[sorted.len() / 2],
                     ran: *ran,
+                    funcs: *funcs,
                 }
             })
             .collect();
@@ -56,11 +99,111 @@ fn main() {
         // Codegen on the session's cached explicit module: the compiler
         // runs once, only the backend is timed per iteration.
         let mut session = CompileSession::new(name, src, &CompileOptions::standard()).unwrap();
-        bench(&format!("hardcilk codegen {name}"), 50, || {
+        bench(&format!("hardcilk codegen {name}"), samples, || {
             bombyx::backend::hardcilk::generate(session.explicit(), name).unwrap()
         });
         // Memoized target artifact: repeated requests are free.
         let _ = session.hardcilk_system(name).unwrap();
         let _ = session.hardcilk_system(name).unwrap();
     }
+
+    // ---- section 2: batch compilation, serial vs parallel ------------------
+    println!("== batch: {} programs, serial vs --jobs 4 ==", programs.len());
+    let serial = bench("batch compile (jobs=1)", samples, || {
+        let b = compile_batch(programs, &CompileOptions::standard(), 1);
+        assert!(b.errors().is_empty(), "corpus must compile: {:?}", b.errors());
+        b
+    });
+    let par4 = bench("batch compile (jobs=4)", samples, || {
+        let b = compile_batch(programs, &CompileOptions::standard(), 4);
+        assert!(b.errors().is_empty(), "corpus must compile in parallel: {:?}", b.errors());
+        b
+    });
+    let speedup = serial.median.as_secs_f64() / par4.median.as_secs_f64().max(1e-12);
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!(
+        "batch speedup (serial / jobs=4): {speedup:.2}x on {cores} available core(s)"
+    );
+
+    // ---- section 3: incremental recompilation ------------------------------
+    println!("== incremental: one-function edit vs cold compile ==");
+    let edited = INCR_SRC.replace("a * 3 + 1", "a * 7 + 1");
+    let opts = CompileOptions::standard();
+    let cold_session = CompileSession::new("incr", INCR_SRC, &opts).unwrap();
+    let cold_work = pass_work(cold_session.timings());
+
+    let cold = bench("cold compile (4 funcs)", samples, || {
+        CompileSession::new("incr", &edited, &opts).unwrap()
+    });
+    // Alternate between the two sources: every call is exactly a
+    // one-function edit against the session's cached state.
+    let mut session = CompileSession::new("incr", INCR_SRC, &opts).unwrap();
+    let mut flip = false;
+    let mut incr_work = 0usize;
+    let incr = bench("incremental recompile (1 dirty func)", samples, || {
+        flip = !flip;
+        let src: &str = if flip { &edited } else { INCR_SRC };
+        let outcome = session.recompile(src).unwrap();
+        assert_eq!(
+            outcome.mode,
+            RecompileMode::Incremental,
+            "a body edit must recompile incrementally"
+        );
+        incr_work = incr_work.max(pass_work(&outcome.timings));
+        outcome.mode
+    });
+    let work_ratio = incr_work as f64 / cold_work.max(1) as f64;
+    let wall_ratio = incr.median.as_secs_f64() / cold.median.as_secs_f64().max(1e-12);
+    println!(
+        "incremental pass work: {incr_work} vs cold {cold_work} ({:.0}% of cold); wall {:.0}% of cold",
+        work_ratio * 100.0,
+        wall_ratio * 100.0
+    );
+    assert!(
+        work_ratio < 0.5,
+        "one-function recompile must run < 50% of cold pass work ({incr_work}/{cold_work})"
+    );
+
+    // ---- section 4: rtl emission memoization -------------------------------
+    let mut session = CompileSession::new("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let _ = session.rtl_system("fib_system").unwrap();
+    let passes_after_first = session.timings().len();
+    let _ = session.rtl_system("fib_system").unwrap();
+    let passes_after_second = session.timings().len();
+    assert_eq!(
+        passes_after_first, passes_after_second,
+        "a second rtl_system call must do zero lowering/emission work"
+    );
+    println!("rtl memoization: second emission ran {} extra passes (expected 0)", passes_after_second - passes_after_first);
+
+    // ---- machine-readable output -------------------------------------------
+    let mut batch_json = Json::object();
+    batch_json
+        .set("programs", programs.len())
+        .set("serial_ms", serial.median.as_secs_f64() * 1e3)
+        .set("jobs4_ms", par4.median.as_secs_f64() * 1e3)
+        .set("speedup", speedup)
+        .set("available_cores", cores);
+    let mut incr_json = Json::object();
+    incr_json
+        .set("cold_ms", cold.median.as_secs_f64() * 1e3)
+        .set("incremental_ms", incr.median.as_secs_f64() * 1e3)
+        .set("wall_ratio", wall_ratio)
+        .set("cold_pass_work", cold_work)
+        .set("incremental_pass_work", incr_work)
+        .set("work_ratio", work_ratio)
+        .set("dirty_funcs", 1usize)
+        .set("total_funcs", 4usize);
+    let mut rtl_json = Json::object();
+    rtl_json.set("second_emission_extra_passes", passes_after_second - passes_after_first);
+    let mut root = Json::object();
+    root.set("bench", "compile_time")
+        .set("mode", if cfg!(debug_assertions) { "debug" } else { "release" })
+        .set("smoke", smoke)
+        .set("batch", batch_json)
+        .set("incremental", incr_json)
+        .set("rtl_memoization", rtl_json);
+    let path = "BENCH_compile.json";
+    std::fs::write(path, root.pretty() + "\n").expect("write BENCH_compile.json");
+    println!("wrote {path}");
 }

@@ -9,6 +9,8 @@
 //! throughout the test suite: oracle (implicit, sequential) vs emulation
 //! (explicit, parallel).
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
 use crate::interp::{oracle, Memory};
@@ -18,10 +20,12 @@ use crate::lower::CompileResult;
 use crate::ws::{self, SharedMemory, WsConfig, XlaSink};
 
 /// An executable emulation program: the explicit module plus its entry
-/// points (every original task function is invocable).
+/// points (every original task function is invocable). The module is a
+/// shared handle into the compile session's cached explicit IR —
+/// packaging never copies the module.
 #[derive(Clone, Debug)]
 pub struct EmuProgram {
-    pub module: Module,
+    pub module: Arc<Module>,
     pub entries: Vec<String>,
 }
 
@@ -40,7 +44,7 @@ pub fn package(result: &CompileResult) -> EmuProgram {
         })
         .map(|f| f.name.clone())
         .collect();
-    EmuProgram { module: result.explicit.clone(), entries }
+    EmuProgram { module: Arc::clone(&result.explicit), entries }
 }
 
 impl EmuProgram {

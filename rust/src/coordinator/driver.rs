@@ -73,39 +73,25 @@ impl BfsExperiment {
     /// Worker threads [`BfsExperiment::run_grid`] uses for a grid of `n`
     /// configurations (exposed so benches can report the real fan-out).
     pub fn grid_workers(n: usize) -> usize {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n.max(1))
+        crate::util::parallel::default_workers(n)
     }
 
     /// Run a whole grid of simulator configurations, sharded across OS
-    /// threads with `std::thread::scope`. The two compile sessions are
-    /// only read (each configuration builds its own memory image), so
-    /// every worker shares `&self`; results come back in `configs` order.
-    /// This is what lets the `pe_sweep`/`memlat_sweep` benches scale with
-    /// cores instead of walking the grid serially.
+    /// threads via [`crate::util::parallel::shard_map`] (the same idiom
+    /// `lower::compile_batch` uses for the compiler side). The two
+    /// compile sessions are only read (each configuration builds its own
+    /// memory image), so every worker shares `&self`; results come back
+    /// in `configs` order. This is what lets the `pe_sweep` /
+    /// `memlat_sweep` benches scale with cores instead of walking the
+    /// grid serially.
     pub fn run_grid(
         &self,
         graph: &CsrGraph,
         configs: &[SimConfig],
     ) -> Result<Vec<BfsComparison>> {
-        if configs.is_empty() {
-            return Ok(Vec::new());
-        }
         let workers = BfsExperiment::grid_workers(configs.len());
-        let chunk = configs.len().div_ceil(workers);
-        let mut slots: Vec<Option<Result<BfsComparison>>> = Vec::new();
-        slots.resize_with(configs.len(), || None);
-        std::thread::scope(|scope| {
-            for (cfgs, outs) in configs.chunks(chunk).zip(slots.chunks_mut(chunk)) {
-                scope.spawn(move || {
-                    for (cfg, out) in cfgs.iter().zip(outs.iter_mut()) {
-                        *out = Some(self.run(graph, cfg));
-                    }
-                });
-            }
-        });
-        slots
+        crate::util::parallel::shard_map(configs, workers, |cfg| self.run(graph, cfg))
             .into_iter()
-            .map(|slot| slot.expect("every grid slot is filled by its worker"))
             .collect()
     }
 }

@@ -84,6 +84,46 @@ pub fn lower_program(program: &ast::Program) -> Result<Module> {
     Ok(module)
 }
 
+/// Re-lower a single function of an already-lowered module from its
+/// (edited) AST definition, in place: every other function and all ids
+/// stay untouched. Mirrors `lower_program`'s per-function steps — kind
+/// classification, body lowering, implicit-sync insertion — so splicing
+/// the result produces the same module a cold lowering of the edited
+/// source would. (Function-at-a-time support for incremental
+/// recompilation; see `lower::pass::Pass::run_on_function`.)
+pub fn relower_function(module: &mut Module, def: &ast::FuncDef, fid: FuncId) -> Result<()> {
+    let global_ids: HashMap<String, crate::ir::GlobalId> = module
+        .globals
+        .iter()
+        .map(|(id, g)| (g.name.clone(), id))
+        .collect();
+    let func_ids: HashMap<String, FuncId> = module
+        .funcs
+        .iter()
+        .map(|(id, f)| (f.name.clone(), id))
+        .collect();
+    let kind = if crate::frontend::sema::func_spawns(&def.body) {
+        FuncKind::Task
+    } else {
+        FuncKind::Leaf
+    };
+    {
+        let func = &mut module.funcs[fid];
+        func.kind = kind;
+        func.ret = def.ret;
+        func.params = def.params.len();
+    }
+    let (cfg, vars) = FuncLowerer::new(module, &global_ids, &func_ids, def).lower()?;
+    let func = &mut module.funcs[fid];
+    func.vars = vars;
+    func.body = Some(cfg);
+    func.task = None;
+    if func.kind == FuncKind::Task {
+        insert_implicit_syncs(func);
+    }
+    Ok(())
+}
+
 struct FuncLowerer<'a> {
     module: &'a Module,
     globals: &'a HashMap<String, crate::ir::GlobalId>,

@@ -1,0 +1,707 @@
+//! Batch + incremental compilation on top of the pass manager.
+//!
+//! Two throughput layers over the per-module pipeline (ROADMAP's first
+//! scaling follow-ups to the session/pass foundation):
+//!
+//! - [`compile_batch`]: lower many sources across a scoped thread pool
+//!   ([`crate::util::parallel::shard_map`] — the same sharding idiom the
+//!   sweep benches use). Per-source errors are aggregated instead of
+//!   failing the whole batch; sessions come back in input order with
+//!   merged per-pass timing totals.
+//! - the **incremental recompilation engine** behind
+//!   [`super::CompileSession::recompile`]: every source function is
+//!   fingerprinted (a span-insensitive hash of its checked AST subtree),
+//!   and an edit re-runs the pipeline only for functions whose
+//!   fingerprint changed — each pass executed function-at-a-time
+//!   ([`super::pass::Pass::run_on_function`]) and spliced into the cached per-stage
+//!   modules. Structural edits (changed signatures, globals, the DAE
+//!   access-function set, or a shifted explicit-task layout) fall back to
+//!   a full pipeline run, so the result is byte-for-byte the module a
+//!   cold compile of the edited source produces — which the test suite
+//!   asserts via printed IR.
+//!
+//! Both are possible because the Fig. 3 pipeline is per-function at every
+//! stage: batching parallelizes across modules, incrementality memoizes
+//! within one.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::frontend::ast::{
+    self, Block, Call, Expr, ExprKind, FuncDef, Initializer, Program, Stmt, StmtKind,
+};
+use crate::ir::cfg::FuncKind;
+use crate::ir::verify::{verify_module, Stage};
+use crate::ir::{FuncId, GlobalId, Module};
+use crate::util::parallel;
+
+use super::analysis::{partition_paths, Paths};
+use super::pass::{FuncCtx, PassManager, PassTiming, PipelineStage};
+use super::{compile_ast, dae, explicitize, CompileOptions, CompileResult, CompileSession};
+
+// ---------------------------------------------------------------------------
+// Parallel batch compilation
+// ---------------------------------------------------------------------------
+
+/// Outcome of [`compile_batch`]: per-source sessions (or errors) in input
+/// order plus merged pass-timing totals across the successful ones.
+#[derive(Debug)]
+pub struct BatchResult {
+    /// One entry per input source, in input order.
+    pub outcomes: Vec<(String, Result<CompileSession>)>,
+    /// Per-pass totals summed over every successful session (durations
+    /// and function counts add; `ran` is true if the pass ran anywhere).
+    pub timings: Vec<PassTiming>,
+    /// Worker threads actually used.
+    pub workers: usize,
+}
+
+impl BatchResult {
+    /// The successfully compiled sessions, in input order.
+    pub fn sessions(&self) -> Vec<&CompileSession> {
+        self.outcomes.iter().filter_map(|(_, r)| r.as_ref().ok()).collect()
+    }
+
+    /// `(source name, rendered error)` for every failed source.
+    pub fn errors(&self) -> Vec<(&str, String)> {
+        self.outcomes
+            .iter()
+            .filter_map(|(n, r)| r.as_ref().err().map(|e| (n.as_str(), format!("{e:#}"))))
+            .collect()
+    }
+
+    /// Unwrap into owned sessions, or the aggregated error report if any
+    /// source failed.
+    pub fn into_sessions(self) -> Result<Vec<CompileSession>> {
+        let n_err = self.outcomes.iter().filter(|(_, r)| r.is_err()).count();
+        if n_err > 0 {
+            let rendered: Vec<String> = self
+                .errors()
+                .iter()
+                .map(|(n, e)| format!("{n}: {e}"))
+                .collect();
+            bail!("{n_err} of {} sources failed to compile:\n{}", self.outcomes.len(), rendered.join("\n"));
+        }
+        Ok(self.outcomes.into_iter().map(|(_, r)| r.expect("no errors")).collect())
+    }
+}
+
+/// Parse and lower many sources across `jobs` OS threads (`0` = one per
+/// available core). Each source becomes its own [`CompileSession`];
+/// per-source failures are captured, not propagated, so one bad file
+/// cannot sink the batch. Results preserve input order regardless of the
+/// thread count, and the merged [`BatchResult::timings`] give the
+/// batch-wide per-pass cost.
+pub fn compile_batch<N, S>(
+    sources: &[(N, S)],
+    opts: &CompileOptions,
+    jobs: usize,
+) -> BatchResult
+where
+    N: AsRef<str> + Sync,
+    S: AsRef<str> + Sync,
+{
+    let workers = if jobs == 0 {
+        parallel::default_workers(sources.len())
+    } else {
+        jobs.min(sources.len().max(1))
+    };
+    let results = parallel::shard_map(sources, workers, |(name, src)| {
+        CompileSession::new(name.as_ref(), src.as_ref(), opts)
+    });
+    let mut timings: Vec<PassTiming> = Vec::new();
+    let mut outcomes = Vec::with_capacity(results.len());
+    for ((name, _), result) in sources.iter().zip(results) {
+        if let Ok(session) = &result {
+            merge_timings(&mut timings, session.timings());
+        }
+        outcomes.push((name.as_ref().to_string(), result));
+    }
+    BatchResult { outcomes, timings, workers }
+}
+
+/// Accumulate `add` into `acc` by pass name (durations and function
+/// counts sum; a pass that ran anywhere counts as ran).
+pub fn merge_timings(acc: &mut Vec<PassTiming>, add: &[PassTiming]) {
+    for t in add {
+        match acc.iter_mut().find(|a| a.pass == t.pass) {
+            Some(a) => {
+                a.duration += t.duration;
+                a.funcs += t.funcs;
+                a.ran |= t.ran;
+            }
+            None => acc.push(t.clone()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AST fingerprints (span-insensitive)
+// ---------------------------------------------------------------------------
+
+/// FNV-1a over a structural walk of the AST. Spans are deliberately
+/// excluded: editing one function must not dirty the functions below it
+/// just because their source positions shifted.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.byte(b);
+        }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+}
+
+fn hash_type(h: &mut Fnv, ty: ast::Type) {
+    h.byte(match ty {
+        ast::Type::Int => 0,
+        ast::Type::Float => 1,
+        ast::Type::Bool => 2,
+        ast::Type::Void => 3,
+    });
+}
+
+fn hash_params(h: &mut Fnv, params: &[ast::Param]) {
+    h.u64(params.len() as u64);
+    for p in params {
+        h.str(&p.name);
+        hash_type(h, p.ty);
+    }
+}
+
+fn hash_expr(h: &mut Fnv, e: &Expr) {
+    match &e.kind {
+        ExprKind::IntLit(v) => {
+            h.byte(0);
+            h.u64(*v as u64);
+        }
+        ExprKind::FloatLit(v) => {
+            h.byte(1);
+            h.u64(v.to_bits() as u64);
+        }
+        ExprKind::BoolLit(v) => {
+            h.byte(2);
+            h.byte(*v as u8);
+        }
+        ExprKind::Var(name) => {
+            h.byte(3);
+            h.str(name);
+        }
+        ExprKind::Load { arr, index } => {
+            h.byte(4);
+            h.str(arr);
+            hash_expr(h, index);
+        }
+        ExprKind::Builtin { name, args } => {
+            h.byte(5);
+            h.str(name);
+            h.u64(args.len() as u64);
+            for a in args {
+                hash_expr(h, a);
+            }
+        }
+        ExprKind::Binary { op, lhs, rhs } => {
+            h.byte(6);
+            h.byte(*op as u8);
+            hash_expr(h, lhs);
+            hash_expr(h, rhs);
+        }
+        ExprKind::Unary { op, operand } => {
+            h.byte(7);
+            h.byte(*op as u8);
+            hash_expr(h, operand);
+        }
+    }
+}
+
+fn hash_call(h: &mut Fnv, c: &Call) {
+    h.str(&c.name);
+    h.u64(c.args.len() as u64);
+    for a in &c.args {
+        hash_expr(h, a);
+    }
+}
+
+fn hash_initializer(h: &mut Fnv, init: &Initializer) {
+    match init {
+        Initializer::Expr(e) => {
+            h.byte(0);
+            hash_expr(h, e);
+        }
+        Initializer::Spawn(c) => {
+            h.byte(1);
+            hash_call(h, c);
+        }
+        Initializer::Call(c) => {
+            h.byte(2);
+            hash_call(h, c);
+        }
+    }
+}
+
+fn hash_block(h: &mut Fnv, b: &Block) {
+    h.u64(b.stmts.len() as u64);
+    for s in &b.stmts {
+        hash_stmt(h, s);
+    }
+}
+
+fn hash_stmt(h: &mut Fnv, s: &Stmt) {
+    h.byte(s.dae as u8);
+    match &s.kind {
+        StmtKind::Decl { ty, name, init } => {
+            h.byte(0);
+            hash_type(h, *ty);
+            h.str(name);
+            h.byte(init.is_some() as u8);
+            if let Some(init) = init {
+                hash_initializer(h, init);
+            }
+        }
+        StmtKind::Assign { name, value } => {
+            h.byte(1);
+            h.str(name);
+            hash_initializer(h, value);
+        }
+        StmtKind::Store { arr, index, value } => {
+            h.byte(2);
+            h.str(arr);
+            hash_expr(h, index);
+            hash_expr(h, value);
+        }
+        StmtKind::VoidSpawn(c) => {
+            h.byte(3);
+            hash_call(h, c);
+        }
+        StmtKind::Sync => h.byte(4),
+        StmtKind::If { cond, then, els } => {
+            h.byte(5);
+            hash_expr(h, cond);
+            hash_stmt(h, then);
+            h.byte(els.is_some() as u8);
+            if let Some(els) = els {
+                hash_stmt(h, els);
+            }
+        }
+        StmtKind::While { cond, body } => {
+            h.byte(6);
+            hash_expr(h, cond);
+            hash_stmt(h, body);
+        }
+        StmtKind::For { init, cond, step, body } => {
+            h.byte(7);
+            h.byte(init.is_some() as u8);
+            if let Some(init) = init {
+                hash_stmt(h, init);
+            }
+            h.byte(cond.is_some() as u8);
+            if let Some(cond) = cond {
+                hash_expr(h, cond);
+            }
+            h.byte(step.is_some() as u8);
+            if let Some(step) = step {
+                hash_stmt(h, step);
+            }
+            hash_stmt(h, body);
+        }
+        StmtKind::Return(value) => {
+            h.byte(8);
+            h.byte(value.is_some() as u8);
+            if let Some(v) = value {
+                hash_expr(h, v);
+            }
+        }
+        StmtKind::ExprCall(c) => {
+            h.byte(9);
+            hash_call(h, c);
+        }
+        StmtKind::Block(b) => {
+            h.byte(10);
+            hash_block(h, b);
+        }
+    }
+}
+
+/// Fingerprint of one function definition (signature + body, no spans).
+pub fn func_fingerprint(def: &FuncDef) -> u64 {
+    let mut h = Fnv::new();
+    h.str(&def.name);
+    hash_type(&mut h, def.ret);
+    hash_params(&mut h, &def.params);
+    hash_block(&mut h, &def.body);
+    h.0
+}
+
+/// Fingerprint of everything *around* function bodies: globals, externs
+/// and every function signature, in declaration order. If this changes,
+/// `FuncId` assignments (or cross-function lowering inputs) may shift and
+/// incremental splicing is unsound — the driver recompiles from scratch.
+pub fn structure_fingerprint(program: &Program) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(program.globals.len() as u64);
+    for g in &program.globals {
+        h.str(&g.name);
+        hash_type(&mut h, g.ty);
+        h.byte(g.size.is_some() as u8);
+        h.u64(g.size.unwrap_or(0));
+    }
+    h.u64(program.externs.len() as u64);
+    for e in &program.externs {
+        h.str(&e.name);
+        hash_type(&mut h, e.ret);
+        hash_params(&mut h, &e.params);
+    }
+    h.u64(program.funcs.len() as u64);
+    for f in &program.funcs {
+        h.str(&f.name);
+        hash_type(&mut h, f.ret);
+        hash_params(&mut h, &f.params);
+    }
+    h.0
+}
+
+// ---------------------------------------------------------------------------
+// Incremental recompilation
+// ---------------------------------------------------------------------------
+
+/// Cached per-function compilation identity of a session, against which
+/// the next `recompile` diffs.
+#[derive(Clone, Debug)]
+pub(crate) struct IncrState {
+    structure_fp: u64,
+    /// Fingerprint per `program.funcs` entry, in order (and ids: source
+    /// function `i` is `FuncId(i)` in the implicit modules).
+    body_fps: Vec<u64>,
+    /// Program funcs + externs: ids below this are source functions, ids
+    /// at or above are DAE-generated access functions.
+    n_source: usize,
+    /// Cached path partitions over the post-DAE implicit module. `None`
+    /// until the first recompile computes them — cold compiles never pay
+    /// a second partition analysis on top of the one explicitize ran.
+    partitions: Option<HashMap<FuncId, Paths>>,
+}
+
+pub(crate) fn build_incr_state(program: &Program, _result: &CompileResult) -> IncrState {
+    IncrState {
+        structure_fp: structure_fingerprint(program),
+        body_fps: program.funcs.iter().map(func_fingerprint).collect(),
+        n_source: program.funcs.len() + program.externs.len(),
+        partitions: None,
+    }
+}
+
+/// What `recompile` decided to do.
+pub(crate) enum Recompiled {
+    /// No fingerprint changed: the cached result (and every memoized
+    /// backend artifact) stays valid. Zero pass work.
+    Unchanged,
+    /// Only the named functions were re-lowered; everything else was
+    /// spliced from the cached stage modules.
+    Incremental { result: CompileResult, state: IncrState, dirty: Vec<String> },
+    /// A structural change forced a full pipeline run.
+    Full { result: CompileResult, state: IncrState },
+}
+
+fn full_recompile(program: &Program, opts: &CompileOptions) -> Result<Recompiled> {
+    let result = compile_ast(program, opts)?;
+    let state = build_incr_state(program, &result);
+    Ok(Recompiled::Full { result, state })
+}
+
+/// Diff `program` against the cached compilation and re-run the pipeline
+/// for changed functions only (see module docs for the fallback rules).
+pub(crate) fn recompile(
+    program: &Program,
+    opts: &CompileOptions,
+    cached: &CompileResult,
+    state: &IncrState,
+) -> Result<Recompiled> {
+    // The structure fingerprint hashes the function count and every
+    // signature, so a fingerprint match guarantees `body_fps` lines up
+    // index-for-index with `program.funcs`.
+    if structure_fingerprint(program) != state.structure_fp {
+        return full_recompile(program, opts);
+    }
+    let dirty_ids: Vec<FuncId> = program
+        .funcs
+        .iter()
+        .enumerate()
+        .filter(|&(i, f)| func_fingerprint(f) != state.body_fps[i])
+        .map(|(i, _)| FuncId::new(i))
+        .collect();
+    if dirty_ids.is_empty() {
+        return Ok(Recompiled::Unchanged);
+    }
+
+    // ---- stage A: ast_to_cfg + simplify, dirty functions only -------------
+    let mut module_a = (*cached.implicit).clone();
+    let mut report = {
+        let mut ctx = FuncCtx { program, module: &mut module_a };
+        PassManager::incremental_frontend().run_on_functions(
+            &mut ctx,
+            &dirty_ids,
+            PipelineStage::Implicit,
+            opts,
+        )?
+    };
+
+    // ---- stage B: dae + simplify_post_dae, dirty functions only -----------
+    let implicit_dae: Arc<Module>;
+    let implicit: Arc<Module>;
+    if opts.dae {
+        // Splicing is only id-compatible if the edited module needs
+        // exactly the access functions the cached module already has, in
+        // the same creation order.
+        let mut cached_access: Vec<GlobalId> = Vec::new();
+        let mut recognizable = true;
+        for (id, f) in cached.implicit_dae.funcs.iter() {
+            if id.index() < state.n_source {
+                continue;
+            }
+            match dae::access_func_target(f) {
+                Some(arr) => cached_access.push(arr),
+                None => {
+                    recognizable = false;
+                    break;
+                }
+            }
+        }
+        let new_needed = dae::module_dae_globals(&module_a);
+        if !recognizable || cached_access != new_needed {
+            return full_recompile(program, opts);
+        }
+        implicit = Arc::new(module_a);
+        if new_needed.is_empty() {
+            // No annotated loads anywhere (the common no-pragma source
+            // under standard options): the post-DAE module IS the pre-DAE
+            // module — cold compiles share one Arc here, and so do we,
+            // instead of deep-copying the cached module for a guaranteed
+            // no-op segment. The report still mirrors the cold shape.
+            implicit_dae = Arc::clone(&implicit);
+            report.timings.push(PassTiming {
+                pass: "dae",
+                duration: Duration::ZERO,
+                ran: true,
+                funcs: dirty_ids.len(),
+            });
+            let spd_ran = opts.simplify;
+            report.timings.push(PassTiming {
+                pass: "simplify_post_dae",
+                duration: Duration::ZERO,
+                ran: spd_ran,
+                funcs: if spd_ran { dirty_ids.len() } else { 0 },
+            });
+        } else {
+            let mut module_b = (*cached.implicit_dae).clone();
+            for &fid in &dirty_ids {
+                module_b.funcs[fid] = implicit.funcs[fid].clone();
+            }
+            let mut ctx = FuncCtx { program, module: &mut module_b };
+            let dae_report = PassManager::incremental_dae().run_on_functions(
+                &mut ctx,
+                &dirty_ids,
+                PipelineStage::Implicit,
+                opts,
+            )?;
+            report.timings.extend(dae_report.timings);
+            implicit_dae = Arc::new(module_b);
+        }
+    } else {
+        implicit = Arc::new(module_a);
+        implicit_dae = Arc::clone(&implicit);
+        // Mirror the cold pipeline's report shape: both DAE-segment
+        // passes are disabled under these options.
+        for pass in ["dae", "simplify_post_dae"] {
+            report.timings.push(PassTiming {
+                pass,
+                duration: Duration::ZERO,
+                ran: false,
+                funcs: 0,
+            });
+        }
+    }
+
+    // ---- stage C: explicitize, spliced where the task layout allows -------
+    let mut partitions = match &state.partitions {
+        Some(p) => p.clone(),
+        // First recompile of this session: derive the clean functions'
+        // partitions from the cached post-DAE module (their CFGs are
+        // unchanged); later recompiles reuse the cache built here.
+        None => explicitize::compute_partitions(&cached.implicit_dae),
+    };
+    for &fid in &dirty_ids {
+        let f = &implicit_dae.funcs[fid];
+        if f.kind == FuncKind::Task && f.body.is_some() {
+            partitions.insert(fid, partition_paths(f.cfg()));
+        } else {
+            partitions.remove(&fid);
+        }
+    }
+    let t0 = Instant::now();
+    let reservation = explicitize::reserve(&implicit_dae, &partitions);
+    let (explicit, converted) = if explicitize::layout_of(&reservation.out)
+        == explicitize::layout_of(&cached.explicit)
+    {
+        let mut out = (*cached.explicit).clone();
+        for &fid in &dirty_ids {
+            let func = &implicit_dae.funcs[fid];
+            match func.kind {
+                FuncKind::Leaf | FuncKind::Xla => {
+                    let nid = reservation.entry_map[&fid];
+                    out.funcs[nid] = reservation.out.funcs[nid].clone();
+                }
+                FuncKind::Task => {
+                    let paths = &partitions[&fid];
+                    for pi in 0..paths.entries.len() {
+                        let nid = reservation.path_map[&(fid, pi)];
+                        out.funcs[nid] = reservation.out.funcs[nid].clone();
+                    }
+                    explicitize::convert_task_func(
+                        &implicit_dae,
+                        &mut out,
+                        fid,
+                        func,
+                        paths,
+                        &reservation.entry_map,
+                        &reservation.path_map,
+                    )?;
+                }
+            }
+        }
+        (out, dirty_ids.len())
+    } else {
+        // Path structure shifted: explicit ids moved, so every function
+        // is re-converted (the per-function work of stages A/B is still
+        // saved for the clean functions).
+        (explicitize::explicitize_with(&implicit_dae, &partitions)?, implicit_dae.funcs.len())
+    };
+    let errors = verify_module(&explicit, Stage::Explicit);
+    if !errors.is_empty() {
+        bail!(
+            "incremental explicitize splice broke the explicit IR invariants:\n  {}",
+            errors.join("\n  ")
+        );
+    }
+    report.timings.push(PassTiming {
+        pass: "explicitize",
+        duration: t0.elapsed(),
+        ran: true,
+        funcs: converted,
+    });
+
+    let dirty_names: Vec<String> =
+        dirty_ids.iter().map(|&fid| implicit.funcs[fid].name.clone()).collect();
+    let result = CompileResult {
+        implicit,
+        implicit_dae,
+        explicit: Arc::new(explicit),
+        timings: report.timings.clone(),
+    };
+    let new_state = IncrState {
+        structure_fp: state.structure_fp,
+        body_fps: program.funcs.iter().map(func_fingerprint).collect(),
+        n_source: state.n_source,
+        partitions: Some(partitions),
+    };
+    Ok(Recompiled::Incremental { result, state: new_state, dirty: dirty_names })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_and_check;
+
+    const TWO: &str = "int leaf(int a) { return a + 1; }
+        int top(int n) {
+            if (n < 2) return n;
+            int x = cilk_spawn top(n - 1);
+            cilk_sync;
+            int r = leaf(x);
+            return r;
+        }";
+
+    #[test]
+    fn fingerprints_ignore_spans() {
+        let (a, _) = parse_and_check("t", TWO).unwrap();
+        // Same program with extra leading whitespace/newlines: every span
+        // shifts, no fingerprint may change.
+        let shifted = format!("\n\n   \n{TWO}");
+        let (b, _) = parse_and_check("t", &shifted).unwrap();
+        assert_eq!(structure_fingerprint(&a), structure_fingerprint(&b));
+        for (fa, fb) in a.funcs.iter().zip(&b.funcs) {
+            assert_eq!(func_fingerprint(fa), func_fingerprint(fb), "{}", fa.name);
+        }
+    }
+
+    #[test]
+    fn body_edit_changes_only_that_fingerprint() {
+        let (a, _) = parse_and_check("t", TWO).unwrap();
+        let edited = TWO.replace("a + 1", "a + 2");
+        let (b, _) = parse_and_check("t", &edited).unwrap();
+        assert_eq!(structure_fingerprint(&a), structure_fingerprint(&b));
+        assert_ne!(func_fingerprint(&a.funcs[0]), func_fingerprint(&b.funcs[0]));
+        assert_eq!(func_fingerprint(&a.funcs[1]), func_fingerprint(&b.funcs[1]));
+    }
+
+    #[test]
+    fn signature_edit_changes_structure() {
+        let (a, _) = parse_and_check("t", TWO).unwrap();
+        let edited = TWO.replace("int leaf(int a)", "int leaf(int b)").replace("a + 1", "b + 1");
+        let (b, _) = parse_and_check("t", &edited).unwrap();
+        assert_ne!(structure_fingerprint(&a), structure_fingerprint(&b));
+    }
+
+    #[test]
+    fn batch_preserves_order_and_captures_errors() {
+        let sources = [
+            ("ok1", TWO),
+            ("bad", "int broken( {"),
+            ("ok2", "int f(int n) { return n; }"),
+        ];
+        let batch = compile_batch(&sources, &CompileOptions::standard(), 2);
+        assert_eq!(batch.outcomes.len(), 3);
+        assert_eq!(batch.outcomes[0].0, "ok1");
+        assert!(batch.outcomes[0].1.is_ok());
+        assert!(batch.outcomes[1].1.is_err());
+        assert!(batch.outcomes[2].1.is_ok());
+        assert_eq!(batch.errors().len(), 1);
+        assert_eq!(batch.sessions().len(), 2);
+        assert!(batch.into_sessions().is_err());
+    }
+
+    #[test]
+    fn merge_timings_sums_by_pass() {
+        let mut acc = Vec::new();
+        let rows = [
+            PassTiming { pass: "ast_to_cfg", duration: Duration::from_micros(5), ran: true, funcs: 2 },
+            PassTiming { pass: "dae", duration: Duration::ZERO, ran: false, funcs: 0 },
+        ];
+        merge_timings(&mut acc, &rows);
+        merge_timings(&mut acc, &rows);
+        assert_eq!(acc.len(), 2);
+        assert_eq!(acc[0].funcs, 4);
+        assert_eq!(acc[0].duration, Duration::from_micros(10));
+        assert!(!acc[1].ran);
+    }
+}

@@ -22,6 +22,65 @@ use crate::ir::cfg::{Block, Cfg, Func, FuncKind, GlobalId, Module, Op, Term};
 use crate::ir::expr::{Expr, Var};
 use crate::util::idvec::IdVec;
 
+/// Does any function of the module carry an annotated load? A cheap
+/// read-only scan the pass manager uses to keep the no-pragma path
+/// copy-free (no `Arc::make_mut` when nothing would change).
+pub fn module_has_dae_loads(module: &Module) -> bool {
+    module.funcs.values().any(|f| !func_dae_globals(f).is_empty())
+}
+
+/// Globals a single function's annotated loads target, in first-use order
+/// (block id order, then op order) — the per-function slice of the
+/// access-function creation order.
+pub fn func_dae_globals(func: &crate::ir::cfg::Func) -> Vec<GlobalId> {
+    let mut needed = Vec::new();
+    let Some(cfg) = func.body.as_ref() else { return needed };
+    for block in cfg.blocks.values() {
+        for op in &block.ops {
+            if let Op::Load { dae: true, arr, .. } = op {
+                if !needed.contains(arr) {
+                    needed.push(*arr);
+                }
+            }
+        }
+    }
+    needed
+}
+
+/// Globals needing access functions, in the order a cold [`apply_dae`]
+/// creates them (function id order, first use wins). The incremental
+/// driver compares this against the cached module's access functions to
+/// decide whether per-function splicing stays id-compatible.
+pub fn module_dae_globals(module: &Module) -> Vec<GlobalId> {
+    let mut needed: Vec<GlobalId> = Vec::new();
+    for (_, func) in module.funcs.iter() {
+        for arr in func_dae_globals(func) {
+            if !needed.contains(&arr) {
+                needed.push(arr);
+            }
+        }
+    }
+    needed
+}
+
+/// If `func` is a generated access function, the global it serves.
+/// Recognized by shape: the single-block `load idx; return` body created
+/// by [`make_access_func`] (plus the `_access` name suffix).
+pub fn access_func_target(func: &crate::ir::cfg::Func) -> Option<GlobalId> {
+    if func.kind != FuncKind::Task || func.params != 1 || !func.name.ends_with("_access") {
+        return None;
+    }
+    let cfg = func.body.as_ref()?;
+    if cfg.blocks.len() != 1 {
+        return None;
+    }
+    let block = &cfg.blocks[cfg.entry];
+    match (block.ops.as_slice(), &block.term) {
+        ([Op::Load { arr, .. }], Term::Return(Some(_))) => Some(*arr),
+        _ => None,
+    }
+}
+
 /// Apply the DAE transform to every annotated load in the module.
 /// Returns the number of loads converted.
 pub fn apply_dae(module: &mut Module) -> Result<usize> {
@@ -29,21 +88,17 @@ pub fn apply_dae(module: &mut Module) -> Result<usize> {
     // create them (stable ids), then rewrite bodies.
     let mut needed: Vec<GlobalId> = Vec::new();
     for (_, func) in module.funcs.iter() {
-        let Some(cfg) = func.body.as_ref() else { continue };
-        for block in cfg.blocks.values() {
-            for op in &block.ops {
-                if let Op::Load { dae: true, arr, .. } = op {
-                    if func.kind != FuncKind::Task {
-                        bail!(
-                            "`#pragma bombyx dae` in leaf function `{}`: DAE requires a task \
-                             context (the access becomes a spawned task)",
-                            func.name
-                        );
-                    }
-                    if !needed.contains(arr) {
-                        needed.push(*arr);
-                    }
-                }
+        let globals = func_dae_globals(func);
+        if !globals.is_empty() && func.kind != FuncKind::Task {
+            bail!(
+                "`#pragma bombyx dae` in leaf function `{}`: DAE requires a task \
+                 context (the access becomes a spawned task)",
+                func.name
+            );
+        }
+        for arr in globals {
+            if !needed.contains(&arr) {
+                needed.push(arr);
             }
         }
     }
@@ -66,6 +121,43 @@ pub fn apply_dae(module: &mut Module) -> Result<usize> {
         converted += rewrite_func(func, &access_funcs)?;
     }
     Ok(converted)
+}
+
+/// Function-at-a-time DAE (incremental recompilation): rewrite only
+/// `fid`'s annotated loads against the module's *existing* access
+/// functions. The incremental driver guarantees up front that the
+/// access-function set already matches what a cold [`apply_dae`] of the
+/// edited module would create (falling back to a full compile otherwise);
+/// a missing access function here is therefore an internal error, not a
+/// fallback signal.
+pub fn apply_dae_func(module: &mut Module, fid: crate::ir::FuncId) -> Result<usize> {
+    let needed = func_dae_globals(&module.funcs[fid]);
+    if needed.is_empty() {
+        return Ok(0);
+    }
+    if module.funcs[fid].kind != FuncKind::Task {
+        bail!(
+            "`#pragma bombyx dae` in leaf function `{}`: DAE requires a task \
+             context (the access becomes a spawned task)",
+            module.funcs[fid].name
+        );
+    }
+    let mut access_funcs: HashMap<GlobalId, crate::ir::FuncId> = HashMap::new();
+    for (id, f) in module.funcs.iter() {
+        if let Some(arr) = access_func_target(f) {
+            access_funcs.insert(arr, id);
+        }
+    }
+    for arr in &needed {
+        if !access_funcs.contains_key(arr) {
+            bail!(
+                "incremental DAE: no access function for global `{}` in the cached module \
+                 (structure changed — the driver should have fallen back to a full compile)",
+                module.globals[*arr].name
+            );
+        }
+    }
+    rewrite_func(&mut module.funcs[fid], &access_funcs)
 }
 
 /// `int <name>_access(int idx) { return <name>[idx]; }` — a *task* (it is

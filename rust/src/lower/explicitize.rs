@@ -42,18 +42,35 @@ use super::analysis::{
     common_dominator, dominators, liveness, natural_loops, partition_paths, spawn_sync_map, Paths,
 };
 
-/// Explicitize every task function of a module. Leaf functions are copied;
-/// `extern xla` declarations become XLA tasks.
-pub fn explicitize_module(module: &Module) -> Result<Module> {
-    let mut out = Module { globals: module.globals.clone(), funcs: IdVec::new() };
+/// Path partitions of every task function, keyed by source `FuncId`.
+/// A pure per-function analysis — the incremental driver caches entries
+/// for unchanged functions and recomputes only dirty ones.
+pub fn compute_partitions(module: &Module) -> HashMap<FuncId, Paths> {
+    module
+        .funcs
+        .iter()
+        .filter(|(_, f)| f.kind == FuncKind::Task && f.body.is_some())
+        .map(|(fid, f)| (fid, partition_paths(f.cfg())))
+        .collect()
+}
 
-    // ---- pass 1: reserve ids ------------------------------------------------
-    // old FuncId -> new entry FuncId (for leaf/xla: the copy).
+/// The reservation (pass 1) result: the skeleton output module with every
+/// explicit `FuncId` assigned, leaf/xla functions copied (call targets
+/// remapped), and task slots reserved with their names and metadata. The
+/// id assignment is a pure function of each source function's kind, name
+/// and partition shape — which is what makes incremental splicing sound.
+pub(crate) struct Reservation {
+    pub out: Module,
+    /// old FuncId -> new entry FuncId (for leaf/xla: the copy).
+    pub entry_map: HashMap<FuncId, FuncId>,
+    /// (old FuncId, path index) -> new FuncId.
+    pub path_map: HashMap<(FuncId, usize), FuncId>,
+}
+
+pub(crate) fn reserve(module: &Module, partitions: &HashMap<FuncId, Paths>) -> Reservation {
+    let mut out = Module { globals: module.globals.clone(), funcs: IdVec::new() };
     let mut entry_map: HashMap<FuncId, FuncId> = HashMap::new();
-    // (old FuncId, path index) -> new FuncId.
     let mut path_map: HashMap<(FuncId, usize), FuncId> = HashMap::new();
-    // Pre-computed partitions per task function.
-    let mut partitions: HashMap<FuncId, Paths> = HashMap::new();
 
     for (fid, func) in module.funcs.iter() {
         match func.kind {
@@ -72,7 +89,7 @@ pub fn explicitize_module(module: &Module) -> Result<Module> {
                 entry_map.insert(fid, new_id);
             }
             FuncKind::Task => {
-                let paths = partition_paths(func.cfg());
+                let paths = &partitions[&fid];
                 let cfg = func.cfg();
                 let mut cont_n = 0;
                 let mut join_n = 0;
@@ -112,7 +129,6 @@ pub fn explicitize_module(module: &Module) -> Result<Module> {
                         entry_map.insert(fid, new_id);
                     }
                 }
-                partitions.insert(fid, paths);
             }
         }
     }
@@ -132,7 +148,34 @@ pub fn explicitize_module(module: &Module) -> Result<Module> {
         }
     }
 
-    // ---- pass 2: convert each task function ---------------------------------
+    Reservation { out, entry_map, path_map }
+}
+
+/// The identity of an explicit module's function table: per function, its
+/// name, kind and task role. Two source modules whose reservations have
+/// equal layouts assign identical explicit `FuncId`s, so functions
+/// converted against one layout splice soundly into the other.
+pub(crate) fn layout_of(module: &Module) -> Vec<(String, FuncKind, Option<TaskRole>)> {
+    module
+        .funcs
+        .values()
+        .map(|f| (f.name.clone(), f.kind, f.task.as_ref().map(|t| t.role)))
+        .collect()
+}
+
+/// Explicitize every task function of a module. Leaf functions are copied;
+/// `extern xla` declarations become XLA tasks.
+pub fn explicitize_module(module: &Module) -> Result<Module> {
+    explicitize_with(module, &compute_partitions(module))
+}
+
+/// [`explicitize_module`] over pre-computed partitions (the incremental
+/// driver reuses cached partitions for unchanged functions).
+pub(crate) fn explicitize_with(
+    module: &Module,
+    partitions: &HashMap<FuncId, Paths>,
+) -> Result<Module> {
+    let Reservation { mut out, entry_map, path_map } = reserve(module, partitions);
     for (fid, func) in module.funcs.iter() {
         if func.kind != FuncKind::Task {
             continue;
@@ -142,7 +185,7 @@ pub fn explicitize_module(module: &Module) -> Result<Module> {
     Ok(out)
 }
 
-fn convert_task_func(
+pub(crate) fn convert_task_func(
     module: &Module,
     out: &mut Module,
     fid: FuncId,

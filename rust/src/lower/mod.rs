@@ -15,6 +15,8 @@
 //! `compile_time` bench), and exposes a snapshot hook that can dump the IR
 //! after any pass.
 //!
+//! [`verify_module`]: crate::ir::verify::verify_module
+//!
 //! # Compile sessions
 //!
 //! [`CompileSession`] lowers a source **once** and memoizes per-target
@@ -22,7 +24,9 @@
 //! codegen ([`crate::backend::hardcilk`]), the cycle simulator
 //! ([`crate::sim`]) and the interpreters ([`crate::interp`]) all consume
 //! the same cached explicit module instead of each re-running the
-//! pipeline:
+//! pipeline. The per-stage modules live behind [`std::sync::Arc`], so
+//! snapshots, goldens and backend emission *share* the modules instead of
+//! deep-copying them (a pass that mutates takes a copy-on-write handle).
 //!
 //! ```ignore
 //! let mut session = CompileSession::new("fib", FIB_SRC, &CompileOptions::standard())?;
@@ -30,13 +34,24 @@
 //! let system = session.hardcilk_system("fib_system")?; // cached per name
 //! let emu = session.emu_program();                     // compiled once
 //! ```
+//!
+//! # Batch + incremental compilation
+//!
+//! [`batch::compile_batch`] lowers many sources across a scoped thread
+//! pool; [`CompileSession::recompile`] diffs an edited source against
+//! per-function AST fingerprints and re-runs the pipeline only for the
+//! functions that changed, splicing everything else from the cached stage
+//! modules (see [`batch`]).
 
 pub mod analysis;
 pub mod ast_to_cfg;
+pub mod batch;
 pub mod dae;
 pub mod explicitize;
 pub mod pass;
 pub mod simplify;
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -46,7 +61,10 @@ use crate::interp::{Memory, NoXla};
 use crate::ir::expr::Value;
 use crate::ir::Module;
 
-pub use pass::{Artifact, Pass, PassManager, PassReport, PassTiming, PipelineStage};
+pub use batch::{compile_batch, BatchResult};
+pub use pass::{
+    pass_work, Artifact, Pass, PassManager, PassReport, PassTiming, PipelineStage,
+};
 
 /// Options controlling the pipeline.
 #[derive(Clone, Debug, Default)]
@@ -69,16 +87,18 @@ impl CompileOptions {
 }
 
 /// Stage-by-stage artifacts of one compilation, for `--trace-stages`,
-/// goldens and the figure benches.
+/// goldens and the figure benches. The modules are shared handles into
+/// the pipeline's artifacts — cloning a `CompileResult` bumps refcounts,
+/// it does not copy IR.
 #[derive(Clone, Debug)]
 pub struct CompileResult {
     /// The implicit IR before DAE.
-    pub implicit: Module,
-    /// The implicit IR after DAE (equal to `implicit` when DAE is off or no
-    /// pragmas are present).
-    pub implicit_dae: Module,
+    pub implicit: Arc<Module>,
+    /// The implicit IR after DAE (the same module as `implicit` when DAE
+    /// is off — shared, not copied).
+    pub implicit_dae: Arc<Module>,
     /// The explicit (Cilk-1) IR.
-    pub explicit: Module,
+    pub explicit: Arc<Module>,
     /// Per-pass wall-clock timings of the pipeline run that produced this
     /// result (skipped passes appear with `ran == false`).
     pub timings: Vec<PassTiming>,
@@ -92,35 +112,62 @@ pub fn compile(name: &str, source: &str, opts: &CompileOptions) -> Result<Compil
 
 /// Pipeline from a checked AST, via the standard pass manager. The
 /// per-stage modules of [`CompileResult`] are captured through the
-/// manager's snapshot hook.
+/// manager's snapshot hook — a refcount bump per kept stage, with the one
+/// unavoidable copy happening inside the first pass that mutates a
+/// snapshotted module (copy-on-write via `Arc::make_mut`).
 pub fn compile_ast(
     program: &frontend::ast::Program,
     opts: &CompileOptions,
 ) -> Result<CompileResult> {
     let manager = PassManager::standard();
     // Which pass produces each snapshot we keep is decidable up front, so
-    // the hook clones exactly the modules that end up in the result.
+    // the hook retains exactly the modules that end up in the result.
     let implicit_pass = if opts.simplify { "simplify" } else { "ast_to_cfg" };
     let implicit_dae_pass = match (opts.dae, opts.simplify) {
         (true, true) => "simplify_post_dae",
         (true, false) => "dae",
         (false, _) => "",
     };
-    let mut implicit: Option<Module> = None;
-    let mut implicit_dae: Option<Module> = None;
+    let mut implicit: Option<Arc<Module>> = None;
+    let mut implicit_dae: Option<Arc<Module>> = None;
     let (artifact, report) =
         manager.run(Artifact::Ast(program.clone()), opts, |pass, artifact| {
-            let Some(module) = artifact.as_module() else { return };
+            let Some(module) = artifact.as_module_arc() else { return };
             if pass == implicit_pass {
-                implicit = Some(module.clone());
+                implicit = Some(Arc::clone(module));
             } else if pass == implicit_dae_pass {
-                implicit_dae = Some(module.clone());
+                implicit_dae = Some(Arc::clone(module));
             }
         })?;
     let explicit = artifact.into_module()?;
     let implicit = implicit.expect("the standard pipeline always lowers the AST");
-    let implicit_dae = implicit_dae.unwrap_or_else(|| implicit.clone());
+    let implicit_dae = implicit_dae.unwrap_or_else(|| Arc::clone(&implicit));
     Ok(CompileResult { implicit, implicit_dae, explicit, timings: report.timings })
+}
+
+/// How [`CompileSession::recompile`] handled an edited source.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecompileMode {
+    /// No function fingerprint changed; the cached result and every
+    /// memoized backend artifact remain valid. Zero pass work.
+    Unchanged,
+    /// Only the dirty functions were re-lowered (function-at-a-time
+    /// passes + splice).
+    Incremental,
+    /// A structural change (signatures, globals, DAE access set, task
+    /// layout) forced a full pipeline run.
+    Full,
+}
+
+/// Report of one [`CompileSession::recompile`] call.
+#[derive(Clone, Debug)]
+pub struct RecompileOutcome {
+    pub mode: RecompileMode,
+    /// Names of the re-lowered source functions (empty for `Unchanged`).
+    pub dirty: Vec<String>,
+    /// Per-pass timings of this recompile, with `funcs` counting only the
+    /// functions each pass actually processed.
+    pub timings: Vec<PassTiming>,
 }
 
 /// One compilation, many targets: lowers the source once and hands the
@@ -133,13 +180,21 @@ pub struct CompileSession {
     emu: Option<crate::backend::emu::EmuProgram>,
     hardcilk: Vec<(String, crate::backend::hardcilk::HardCilkSystem)>,
     rtl: Vec<(String, crate::backend::rtl::RtlSystem)>,
+    /// Per-function fingerprints + cached analyses for incremental
+    /// recompilation (`None` for sessions wrapped around a bare
+    /// `CompileResult`, which then always recompile fully).
+    incr: Option<batch::IncrState>,
 }
 
 impl CompileSession {
     /// Parse, check and lower `source` through the standard pass manager.
     pub fn new(name: &str, source: &str, opts: &CompileOptions) -> Result<CompileSession> {
-        let result = compile(name, source, opts)?;
-        Ok(CompileSession::from_result(name, opts.clone(), result))
+        let (program, _src) = frontend::parse_and_check(name, source)?;
+        let result = compile_ast(&program, opts)?;
+        let incr = batch::build_incr_state(&program, &result);
+        let mut session = CompileSession::from_result(name, opts.clone(), result);
+        session.incr = Some(incr);
+        Ok(session)
     }
 
     /// Wrap an existing compilation (e.g. from [`compile_ast`]).
@@ -155,6 +210,7 @@ impl CompileSession {
             emu: None,
             hardcilk: Vec::new(),
             rtl: Vec::new(),
+            incr: None,
         }
     }
 
@@ -184,9 +240,77 @@ impl CompileSession {
         &self.result.explicit
     }
 
-    /// Per-pass timings of the one-time lowering.
+    /// Per-pass timings of the most recent lowering (initial compile or
+    /// last [`CompileSession::recompile`]), plus any timed backend
+    /// emission passes appended since.
     pub fn timings(&self) -> &[PassTiming] {
         &self.result.timings
+    }
+
+    /// Recompile the session against an edited `source`.
+    ///
+    /// Every source function is fingerprinted (span-insensitive hash of
+    /// its checked AST subtree); only functions whose fingerprint changed
+    /// are re-lowered, function-at-a-time, and spliced into the cached
+    /// per-stage modules. Structural edits fall back to a full pipeline
+    /// run. Memoized backend artifacts (emu / hardcilk / rtl) are
+    /// invalidated only when the compilation actually changed — an
+    /// untouched source keeps them all.
+    ///
+    /// The produced modules are byte-for-byte identical to a cold
+    /// [`CompileSession::new`] of the edited source (asserted by the
+    /// integration tests via printed IR).
+    pub fn recompile(&mut self, source: &str) -> Result<RecompileOutcome> {
+        let (program, _src) = frontend::parse_and_check(&self.name, source)?;
+        let Some(state) = self.incr.as_ref() else {
+            // No fingerprints to diff against: full run.
+            let result = compile_ast(&program, &self.options)?;
+            let state = batch::build_incr_state(&program, &result);
+            let timings = result.timings.clone();
+            let dirty = program.funcs.iter().map(|f| f.name.clone()).collect();
+            self.install(result, state);
+            return Ok(RecompileOutcome { mode: RecompileMode::Full, dirty, timings });
+        };
+        match batch::recompile(&program, &self.options, &self.result, state)? {
+            batch::Recompiled::Unchanged => {
+                let timings: Vec<PassTiming> = PassManager::standard()
+                    .pass_names()
+                    .into_iter()
+                    .map(|pass| PassTiming {
+                        pass,
+                        duration: std::time::Duration::ZERO,
+                        ran: false,
+                        funcs: 0,
+                    })
+                    .collect();
+                Ok(RecompileOutcome {
+                    mode: RecompileMode::Unchanged,
+                    dirty: Vec::new(),
+                    timings,
+                })
+            }
+            batch::Recompiled::Incremental { result, state, dirty } => {
+                let timings = result.timings.clone();
+                self.install(result, state);
+                Ok(RecompileOutcome { mode: RecompileMode::Incremental, dirty, timings })
+            }
+            batch::Recompiled::Full { result, state } => {
+                let timings = result.timings.clone();
+                let dirty = program.funcs.iter().map(|f| f.name.clone()).collect();
+                self.install(result, state);
+                Ok(RecompileOutcome { mode: RecompileMode::Full, dirty, timings })
+            }
+        }
+    }
+
+    /// Swap in a new compilation and drop every memoized artifact that
+    /// depended on the old explicit module.
+    fn install(&mut self, result: CompileResult, state: batch::IncrState) {
+        self.result = result;
+        self.incr = Some(state);
+        self.emu = None;
+        self.hardcilk.clear();
+        self.rtl.clear();
     }
 
     /// A fresh memory image over the cached explicit module.
@@ -205,6 +329,8 @@ impl CompileSession {
     }
 
     /// The emulation-backend packaging of this compilation, built once.
+    /// The packaged program shares the session's explicit module (an
+    /// `Arc` handle, not a copy).
     pub fn emu_program(&mut self) -> &crate::backend::emu::EmuProgram {
         if self.emu.is_none() {
             self.emu = Some(crate::backend::emu::package(&self.result));
@@ -229,8 +355,10 @@ impl CompileSession {
     /// runs through a one-pass [`PassManager`] so the `rtl_emit` pass is
     /// timed (appended to [`CompileSession::timings`]) and the produced
     /// system is verified by the structural lint at the pass boundary.
-    /// A second request for the same name returns the cached system
-    /// without re-lowering or re-emitting.
+    /// The emission pass *borrows* the session's explicit module (a
+    /// shared `Arc` handle — no per-emission module clone), and a second
+    /// request for the same name returns the cached system without
+    /// re-lowering or re-emitting.
     pub fn rtl_system(
         &mut self,
         system_name: &str,
@@ -241,7 +369,7 @@ impl CompileSession {
         let manager = PassManager::new()
             .add(crate::backend::rtl::RtlEmit { system_name: system_name.to_string() });
         let (artifact, report) = manager.run_from(
-            Artifact::Module(self.result.explicit.clone()),
+            Artifact::Module(Arc::clone(&self.result.explicit)),
             PipelineStage::Explicit,
             &self.options,
             |_, _| {},

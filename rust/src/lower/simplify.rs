@@ -15,6 +15,68 @@ pub fn simplify_module(module: &mut Module) {
     }
 }
 
+/// Would [`simplify_cfg`] leave this CFG untouched? A read-only mirror of
+/// one fixpoint round (`thread_jumps` / `merge_straightline` /
+/// `remove_unreachable` change conditions), used by the pass manager to
+/// skip the copy-on-write module clone when a shared module is already
+/// fully simplified — e.g. `simplify_post_dae` after a no-op DAE pass.
+pub fn cfg_at_fixpoint(cfg: &Cfg) -> bool {
+    // thread_jumps would change: some terminator (or the entry) retargets
+    // through an empty forwarding block.
+    let mut forward: HashMap<BlockId, BlockId> = HashMap::new();
+    for (bid, block) in cfg.blocks.iter() {
+        if block.ops.is_empty() && bid != cfg.entry {
+            if let Term::Jump(next) = block.term {
+                if next != bid {
+                    forward.insert(bid, next);
+                }
+            }
+        }
+    }
+    if !forward.is_empty() {
+        let resolve = |mut b: BlockId| {
+            let mut hops = 0;
+            while let Some(&next) = forward.get(&b) {
+                b = next;
+                hops += 1;
+                if hops > forward.len() {
+                    break; // cycle of empty blocks (infinite loop in source)
+                }
+            }
+            b
+        };
+        for (_, block) in cfg.blocks.iter() {
+            let new_term = block.term.map_blocks(&resolve);
+            if !same_targets(&block.term, &new_term) {
+                return false;
+            }
+        }
+        if resolve(cfg.entry) != cfg.entry {
+            return false;
+        }
+    }
+    // merge_straightline would change: a `jump`-terminated block feeds a
+    // non-entry block with exactly one predecessor.
+    let preds = cfg.predecessors();
+    for (a, block) in cfg.blocks.iter() {
+        if let Term::Jump(b) = block.term {
+            if b != a && b != cfg.entry && preds[b.index()].len() == 1 {
+                return false;
+            }
+        }
+    }
+    // remove_unreachable would change: any block is unreachable.
+    cfg.reachable().iter().all(|&r| r)
+}
+
+/// [`cfg_at_fixpoint`] over every function body of a module.
+pub fn module_at_fixpoint(module: &Module) -> bool {
+    module
+        .funcs
+        .values()
+        .all(|f| f.body.as_ref().map(cfg_at_fixpoint).unwrap_or(true))
+}
+
 pub fn simplify_cfg(cfg: &mut Cfg) {
     loop {
         let mut changed = false;
@@ -185,6 +247,42 @@ mod tests {
         cfg.entry = a;
         simplify_cfg(&mut cfg);
         assert_eq!(cfg.blocks.len(), 1);
+    }
+
+    #[test]
+    fn fixpoint_probe_agrees_with_simplify() {
+        // Each sub-pass's trigger flips the probe; a simplified CFG is
+        // always reported at fixpoint (the pass manager relies on this
+        // equivalence to skip copy-on-write clones).
+        let mut chain = Cfg::default();
+        let a = chain.blocks.push(Block::default());
+        let b = chain.blocks.push(Block::default());
+        let c = chain.blocks.push(Block { ops: vec![], term: Term::Return(None) });
+        chain.blocks[a].term = Term::Jump(b);
+        chain.blocks[b].term = Term::Jump(c);
+        chain.entry = a;
+        assert!(!cfg_at_fixpoint(&chain));
+        simplify_cfg(&mut chain);
+        assert!(cfg_at_fixpoint(&chain));
+
+        let mut orphaned = Cfg::default();
+        let e = orphaned.blocks.push(Block { ops: vec![], term: Term::Return(None) });
+        let _orphan = orphaned.blocks.push(jump_block(e));
+        orphaned.entry = e;
+        assert!(!cfg_at_fixpoint(&orphaned));
+        simplify_cfg(&mut orphaned);
+        assert!(cfg_at_fixpoint(&orphaned));
+
+        // A semantic sync cut stays split and is already at fixpoint.
+        let mut sync = Cfg::default();
+        let s = sync.blocks.push(Block::default());
+        let k = sync.blocks.push(Block {
+            ops: vec![Op::Assign { dst: crate::ir::VarId::new(0), src: Expr::ConstI(1) }],
+            term: Term::Return(None),
+        });
+        sync.blocks[s].term = Term::Sync { next: k };
+        sync.entry = s;
+        assert!(cfg_at_fixpoint(&sync));
     }
 
     #[test]

@@ -79,6 +79,7 @@ fn run(args: Vec<String>) -> Result<()> {
     let rest = &args[1..];
     match cmd.as_str() {
         "compile" => cmd_compile(rest),
+        "compile-batch" => cmd_compile_batch(rest),
         "codegen" => cmd_codegen(rest),
         "estimate" => cmd_estimate(rest),
         "run" => cmd_run(rest),
@@ -97,6 +98,7 @@ fn print_usage() {
         "bombyx — OpenCilk-style task parallelism compiled for FPGA TLP systems\n\n\
          USAGE:\n  \
          bombyx compile  <file.cilk> [--target rtl|hardcilk] [--dae|--no-dae] [--dump implicit|explicit|cilk1] [--trace-stages] [--timings]\n  \
+         bombyx compile-batch [files|dirs...] [--jobs N] [--no-dae] [--timings]   # default corpus: examples/cilk\n  \
          bombyx codegen  <file.cilk> [--target rtl|hardcilk] [--dae|--no-dae] --out <dir> [--system <name>]\n  \
          bombyx estimate <file.cilk> [--dae|--no-dae]\n  \
          bombyx run      <file.cilk> <entry> [int args...] [--dae|--no-dae] [--workers N]\n  \
@@ -184,6 +186,106 @@ fn cmd_compile(args: &[String]) -> Result<()> {
             }
         }
         _ => print!("{}", print_module(&result.explicit)),
+    }
+    Ok(())
+}
+
+/// Compile many sources across a thread pool (`lower::compile_batch`).
+/// Inputs are `.cilk` files and/or directories (every `*.cilk` inside,
+/// sorted); with no inputs the `examples/cilk` corpus is used. Per-source
+/// errors are reported individually and the batch continues — the exit
+/// status reflects whether everything compiled.
+fn cmd_compile_batch(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &["jobs"])?;
+    let jobs = flags
+        .options
+        .get("jobs")
+        .map(|v| v.parse::<usize>())
+        .transpose()
+        .map_err(|e| anyhow!("bad --jobs value: {e}"))?
+        .unwrap_or(0);
+    let inputs: Vec<String> = if flags.positional.is_empty() {
+        vec!["examples/cilk".to_string()]
+    } else {
+        flags.positional.clone()
+    };
+    let mut paths: Vec<std::path::PathBuf> = Vec::new();
+    for input in &inputs {
+        let p = std::path::Path::new(input);
+        if p.is_dir() {
+            let mut entries: Vec<std::path::PathBuf> = std::fs::read_dir(p)
+                .with_context(|| format!("reading directory {input}"))?
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("cilk"))
+                .collect();
+            entries.sort();
+            paths.extend(entries);
+        } else {
+            paths.push(p.to_path_buf());
+        }
+    }
+    if paths.is_empty() {
+        bail!("no .cilk sources found under {inputs:?}");
+    }
+    // Read failures are aggregated like compile failures — one unreadable
+    // file must not sink the rest of the batch.
+    let mut sources: Vec<(String, String)> = Vec::new();
+    let mut read_errors: Vec<(String, String)> = Vec::new();
+    for p in &paths {
+        let name = p.display().to_string();
+        match std::fs::read_to_string(p) {
+            Ok(text) => sources.push((name, text)),
+            Err(e) => read_errors.push((name, format!("reading {}: {e}", p.display()))),
+        }
+    }
+    let opts = if flags.switches.contains("no-dae") {
+        CompileOptions::no_dae()
+    } else {
+        // Sources without `#pragma bombyx dae` compile identically under
+        // the standard options (the DAE pass converts nothing), so one
+        // option set serves a mixed corpus.
+        CompileOptions::standard()
+    };
+    let t0 = std::time::Instant::now();
+    let batch = bombyx::lower::compile_batch(&sources, &opts, jobs);
+    let wall = t0.elapsed();
+    let mut table = Table::new(["source", "status", "tasks", "lowering"]);
+    for (name, err) in &read_errors {
+        table.row([name.clone(), "ERROR".to_string(), "-".to_string(), "-".to_string()]);
+        eprintln!("error: {name}: {err}");
+    }
+    for (name, outcome) in &batch.outcomes {
+        match outcome {
+            Ok(session) => {
+                let tasks = bombyx::ir::explicit::explicit_tasks(session.explicit()).len();
+                let total: std::time::Duration =
+                    session.timings().iter().map(|t| t.duration).sum();
+                table.row([
+                    name.clone(),
+                    "ok".to_string(),
+                    tasks.to_string(),
+                    bombyx::util::bench::fmt_duration(total),
+                ]);
+            }
+            Err(e) => {
+                table.row([name.clone(), "ERROR".to_string(), "-".to_string(), "-".to_string()]);
+                eprintln!("error: {name}: {e:#}");
+            }
+        }
+    }
+    print!("{}", table.render());
+    println!(
+        "{} sources on {} worker thread(s), wall {}",
+        paths.len(),
+        batch.workers,
+        bombyx::util::bench::fmt_duration(wall)
+    );
+    if flags.switches.contains("timings") {
+        println!("{}", timing_table(&batch.timings));
+    }
+    let n_err = batch.errors().len() + read_errors.len();
+    if n_err > 0 {
+        bail!("{n_err} of {} sources failed to compile", paths.len());
     }
     Ok(())
 }

@@ -1,7 +1,7 @@
 //! The discrete-event simulation engine.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, VecDeque};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -48,8 +48,12 @@ pub struct Engine<'m, 'x> {
     xla: &'x mut dyn SimXla,
     state: FnState,
     channel: MemChannel,
-    queues: HashMap<FuncId, VecDeque<STask>>,
-    groups: HashMap<FuncId, PeGroup>,
+    /// Task queues and PE groups, indexed by `FuncId` (dense tables —
+    /// `None`/unused entries for non-task functions). The `SimConfig`'s
+    /// name-keyed PE counts are resolved once here at construction, so
+    /// the per-event dispatch path never touches a string or a hash map.
+    queues: Vec<VecDeque<STask>>,
+    groups: Vec<Option<PeGroup>>,
     events: BinaryHeap<Reverse<(u64, u64, usize)>>,
     event_payload: Vec<Ev>,
     seq: u64,
@@ -72,22 +76,20 @@ impl<'m, 'x> Engine<'m, 'x> {
         config: &'m SimConfig,
         xla: &'x mut dyn SimXla,
     ) -> Result<Engine<'m, 'x>> {
-        let mut queues = HashMap::new();
-        let mut groups = HashMap::new();
+        let mut queues = Vec::with_capacity(module.funcs.len());
+        queues.resize_with(module.funcs.len(), VecDeque::new);
+        let mut groups: Vec<Option<PeGroup>> = Vec::with_capacity(module.funcs.len());
+        groups.resize_with(module.funcs.len(), || None);
         for (fid, f) in module.funcs.iter() {
             if f.task.is_none() {
                 continue;
             }
-            queues.insert(fid, VecDeque::new());
             let n = config.pes_for(&f.name);
-            groups.insert(
-                fid,
-                PeGroup {
-                    class: classify(f),
-                    busy: vec![0; n as usize],
-                    stats: TaskStats { pes: n, ..Default::default() },
-                },
-            );
+            groups[fid.index()] = Some(PeGroup {
+                class: classify(f),
+                busy: vec![0; n as usize],
+                stats: TaskStats { pes: n, ..Default::default() },
+            });
         }
         Ok(Engine {
             module,
@@ -137,7 +139,7 @@ impl<'m, 'x> Engine<'m, 'x> {
             }
             return;
         }
-        let q = self.queues.get_mut(&fid).expect("queue for task type");
+        let q = &mut self.queues[fid.index()];
         q.push_back(task);
         self.max_queue_depth = self.max_queue_depth.max(q.len());
         self.schedule(t + self.config.dispatch_latency as u64, Ev::Dispatch(fid));
@@ -172,14 +174,15 @@ impl<'m, 'x> Engine<'m, 'x> {
             .take()
             .ok_or_else(|| anyhow!("no result delivered to the root continuation"))?;
         let mut per_task: Vec<(String, TaskStats)> = Vec::new();
-        for (fid, group) in &self.groups {
+        for (i, group) in self.groups.iter().enumerate() {
+            let Some(group) = group else { continue };
             let mut s = group.stats.clone();
             s.utilization = if self.now > 0 {
                 s.busy_cycles as f64 / (self.now as f64 * s.pes as f64)
             } else {
                 0.0
             };
-            per_task.push((self.module.funcs[*fid].name.clone(), s));
+            per_task.push((self.module.funcs[FuncId::new(i)].name.clone(), s));
         }
         per_task.sort_by(|a, b| a.0.cmp(&b.0));
         let stats = SimStats {
@@ -196,10 +199,10 @@ impl<'m, 'x> Engine<'m, 'x> {
 
     fn dispatch(&mut self, t: u64, fid: FuncId) -> Result<()> {
         loop {
-            let group = self.groups.get_mut(&fid).expect("group");
+            let group = self.groups[fid.index()].as_mut().expect("PE group for task type");
             // Find a free PE.
             let Some(pe) = group.busy.iter().position(|&b| b <= t) else { return Ok(()) };
-            let Some(task) = self.queues.get_mut(&fid).and_then(|q| q.pop_front()) else {
+            let Some(task) = self.queues[fid.index()].pop_front() else {
                 return Ok(());
             };
             let class = group.class;
@@ -207,7 +210,7 @@ impl<'m, 'x> Engine<'m, 'x> {
                 PeClass::Sequential => {
                     let trace =
                         exec::trace_task(self.module, &self.config.schedule, &mut self.state, &task)?;
-                    let group = self.groups.get_mut(&fid).expect("group");
+                    let group = self.groups[fid.index()].as_mut().expect("PE group for task type");
                     group.busy[pe] = u64::MAX; // released at completion
                     group.stats.executed += 1;
                     let run = self.running.len();
@@ -226,7 +229,7 @@ impl<'m, 'x> Engine<'m, 'x> {
                 PeClass::Pipelined { ii } => {
                     let trace =
                         exec::trace_task(self.module, &self.config.schedule, &mut self.state, &task)?;
-                    let group = self.groups.get_mut(&fid).expect("group");
+                    let group = self.groups[fid.index()].as_mut().expect("PE group for task type");
                     group.busy[pe] = t + ii as u64;
                     group.stats.executed += 1;
                     group.stats.busy_cycles += ii as u64;
@@ -275,7 +278,7 @@ impl<'m, 'x> Engine<'m, 'x> {
                 // Task complete: free the PE.
                 r.done = true;
                 let (task, pe, start) = (r.task, r.pe, r.start);
-                let group = self.groups.get_mut(&task).expect("group");
+                let group = self.groups[task.index()].as_mut().expect("PE group for task type");
                 group.busy[pe] = t;
                 group.stats.busy_cycles += t - start;
                 self.task_finished();

@@ -213,6 +213,28 @@ mod tests {
     }
 
     #[test]
+    fn name_keyed_pe_config_resolves_through_funcid_table() {
+        // `SimConfig::pes` is keyed by task name, but the engine resolves
+        // it once at construction into a FuncId-indexed table; the
+        // name-keyed override must still land on exactly its task type.
+        let r = compile("t", FIB, &CompileOptions::no_dae()).unwrap();
+        let m = &r.explicit;
+        let base = {
+            let mem = Memory::new(m);
+            simulate(m, mem, "fib", &[Value::I64(12)], &SimConfig::default(), &mut NoSimXla)
+                .unwrap()
+                .2
+        };
+        let cfg = SimConfig::default().with_pes("fib", 4);
+        let mem = Memory::new(m);
+        let (v, _, stats) = simulate(m, mem, "fib", &[Value::I64(12)], &cfg, &mut NoSimXla).unwrap();
+        assert_eq!(v, Value::I64(144));
+        assert_eq!(stats.task("fib").unwrap().pes, 4);
+        assert_eq!(stats.task("fib__k1").unwrap().pes, 1, "override must not leak to other tasks");
+        assert!(stats.cycles < base.cycles, "4 fib PEs must beat 1: {} vs {}", stats.cycles, base.cycles);
+    }
+
+    #[test]
     fn sim_is_deterministic() {
         let r = compile("t", FIB, &CompileOptions::no_dae()).unwrap();
         let m = &r.explicit;

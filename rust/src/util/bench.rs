@@ -106,11 +106,12 @@ pub fn throughput(name: &str, stats: &Stats, items: u64, unit: &str) {
 /// Render the pass manager's per-pass timings as a markdown-pipe table.
 /// Used by the `compile_time` bench and `bombyx compile --timings`.
 pub fn timing_table(timings: &[crate::lower::PassTiming]) -> String {
-    let mut table = super::table::Table::new(["pass", "time", "status"]);
+    let mut table = super::table::Table::new(["pass", "time", "funcs", "status"]);
     for t in timings {
         table.row([
             t.pass.to_string(),
             if t.ran { fmt_duration(t.duration) } else { "-".to_string() },
+            if t.ran { t.funcs.to_string() } else { "-".to_string() },
             if t.ran { "ran".to_string() } else { "skipped".to_string() },
         ]);
     }
@@ -156,8 +157,13 @@ mod tests {
     fn timing_table_renders_skips() {
         use crate::lower::PassTiming;
         let rows = [
-            PassTiming { pass: "ast_to_cfg", duration: Duration::from_micros(12), ran: true },
-            PassTiming { pass: "dae", duration: Duration::ZERO, ran: false },
+            PassTiming {
+                pass: "ast_to_cfg",
+                duration: Duration::from_micros(12),
+                ran: true,
+                funcs: 3,
+            },
+            PassTiming { pass: "dae", duration: Duration::ZERO, ran: false, funcs: 0 },
         ];
         let t = timing_table(&rows);
         assert!(t.contains("ast_to_cfg"), "{t}");

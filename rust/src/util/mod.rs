@@ -10,6 +10,7 @@ pub mod bench;
 pub mod golden;
 pub mod idvec;
 pub mod json;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod table;

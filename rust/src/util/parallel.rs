@@ -1,0 +1,97 @@
+//! Scoped-thread sharding: the one parallelism idiom the codebase uses.
+//!
+//! Extracted from `coordinator::driver::BfsExperiment::run_grid` (PR 2's
+//! sweep sharding) so the batch compiler, the sweep benches and any future
+//! fan-out share a single, tested implementation instead of re-deriving
+//! the chunking arithmetic. No work-stealing, no channels: contiguous
+//! chunks over `std::thread::scope`, results returned in input order.
+
+/// Number of workers to use for `n` independent items: one per available
+/// core, capped at the item count, at least 1.
+pub fn default_workers(n: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n.max(1))
+}
+
+/// Apply `f` to every item, sharded across `workers` OS threads with
+/// `std::thread::scope`. Results come back in `items` order. `workers`
+/// is clamped to `[1, items.len()]` and exactly that many threads are
+/// spawned, over balanced contiguous chunks whose sizes differ by at
+/// most one (naive `div_ceil` chunking can leave workers idle — 6 items
+/// on 4 workers must split 2/2/1/1, not 2/2/2). With one worker the
+/// items run on the calling thread (no spawn overhead for the serial
+/// case).
+pub fn shard_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(items.len());
+    if workers == 1 {
+        return items.iter().map(&f).collect();
+    }
+    let base = items.len() / workers;
+    let extra = items.len() % workers;
+    let mut slots: Vec<Option<R>> = Vec::new();
+    slots.resize_with(items.len(), || None);
+    let f = &f;
+    std::thread::scope(|scope| {
+        let mut items_rest: &[T] = items;
+        let mut slots_rest: &mut [Option<R>] = &mut slots;
+        for w in 0..workers {
+            let take = base + usize::from(w < extra);
+            let (chunk_items, next_items) = items_rest.split_at(take);
+            let rest_now = std::mem::take(&mut slots_rest);
+            let (outs, next_slots) = rest_now.split_at_mut(take);
+            items_rest = next_items;
+            slots_rest = next_slots;
+            scope.spawn(move || {
+                for (item, out) in chunk_items.iter().zip(outs.iter_mut()) {
+                    *out = Some(f(item));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.expect("every shard slot is filled by its worker"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..23).collect();
+        for workers in [1, 2, 4, 23, 64] {
+            let out = shard_map(&items, workers, |&i| i * 2);
+            assert_eq!(out, items.iter().map(|i| i * 2).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn empty_input_is_empty_output() {
+        let out: Vec<u32> = shard_map(&[] as &[u32], 4, |&i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn workers_clamped_to_item_count() {
+        let out = shard_map(&[1, 2], 16, |&i| i + 1);
+        assert_eq!(out, vec![2, 3]);
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers(0) >= 1);
+        assert!(default_workers(100) >= 1);
+    }
+}

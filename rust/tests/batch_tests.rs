@@ -1,0 +1,272 @@
+//! Integration tests for parallel batch compilation and incremental
+//! per-function recompilation: determinism across thread counts,
+//! byte-for-byte equality of spliced vs. cold-compiled modules, pass-work
+//! accounting, and artifact invalidation.
+
+use bombyx::ir::print::print_module;
+use bombyx::lower::{
+    compile_batch, pass_work, CompileOptions, CompileSession, RecompileMode,
+};
+use bombyx::workloads::{bfs, fib, nqueens, qsort, relax};
+
+fn corpus() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("fib", fib::FIB_SRC),
+        ("bfs", bfs::BFS_SRC),
+        ("bfs_dae", bfs::BFS_DAE_SRC),
+        ("nqueens", nqueens::NQUEENS_SRC),
+        ("qsort", qsort::QSORT_SRC),
+        ("relax", relax::RELAX_SRC),
+    ]
+}
+
+/// Four functions so a one-function edit leaves three clean.
+const FOUR_FUNCS: &str = "\
+global int acc[4];
+int leaf_a(int a) { return a * 3 + 1; }
+int leaf_b(int a) { return a - 2; }
+int work(int n) {
+    if (n < 2) { int t = leaf_a(n); return t; }
+    int x = cilk_spawn work(n - 1);
+    int y = cilk_spawn work(n - 2);
+    cilk_sync;
+    int r = leaf_b(x + y);
+    return r;
+}
+void top(int n) {
+    int r = cilk_spawn work(n);
+    cilk_sync;
+    atomic_add(acc, 0, r);
+}
+";
+
+// ---------------------------------------------------------------------------
+// Batch determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parallel_and_serial_batch_produce_identical_explicit_modules() {
+    let corpus = corpus();
+    let opts = CompileOptions::standard();
+    let serial = compile_batch(&corpus, &opts, 1);
+    let par = compile_batch(&corpus, &opts, 4);
+    assert!(serial.errors().is_empty(), "{:?}", serial.errors());
+    assert!(par.errors().is_empty(), "{:?}", par.errors());
+    assert_eq!(serial.outcomes.len(), corpus.len());
+    assert_eq!(par.outcomes.len(), corpus.len());
+    for (i, (name, _)) in corpus.iter().enumerate() {
+        // Input order is preserved regardless of sharding.
+        assert_eq!(serial.outcomes[i].0, *name);
+        assert_eq!(par.outcomes[i].0, *name);
+        let s = serial.outcomes[i].1.as_ref().unwrap();
+        let p = par.outcomes[i].1.as_ref().unwrap();
+        assert_eq!(
+            print_module(s.explicit()),
+            print_module(p.explicit()),
+            "explicit IR of `{name}` differs between jobs=1 and jobs=4"
+        );
+    }
+}
+
+#[test]
+fn batch_merged_timings_cover_the_standard_pipeline() {
+    let corpus = corpus();
+    let batch = compile_batch(&corpus, &CompileOptions::standard(), 2);
+    let names: Vec<&str> = batch.timings.iter().map(|t| t.pass).collect();
+    for pass in ["ast_to_cfg", "simplify", "dae", "simplify_post_dae", "explicitize"] {
+        assert!(names.contains(&pass), "merged timings missing `{pass}`: {names:?}");
+    }
+    // Function counts aggregate across the whole corpus.
+    let ast = batch.timings.iter().find(|t| t.pass == "ast_to_cfg").unwrap();
+    assert!(ast.funcs >= corpus.len(), "{:?}", batch.timings);
+}
+
+#[test]
+fn batch_captures_per_source_errors_without_sinking_the_batch() {
+    let sources = [
+        ("good", fib::FIB_SRC),
+        ("bad", "int nope("),
+        ("also_good", qsort::QSORT_SRC),
+    ];
+    let batch = compile_batch(&sources, &CompileOptions::standard(), 3);
+    assert_eq!(batch.sessions().len(), 2);
+    let errors = batch.errors();
+    assert_eq!(errors.len(), 1);
+    assert_eq!(errors[0].0, "bad");
+}
+
+// ---------------------------------------------------------------------------
+// Incremental recompilation
+// ---------------------------------------------------------------------------
+
+fn assert_matches_cold(session: &CompileSession, name: &str, edited: &str, opts: &CompileOptions) {
+    let cold = CompileSession::new(name, edited, opts).unwrap();
+    assert_eq!(
+        print_module(session.implicit()),
+        print_module(cold.implicit()),
+        "implicit IR diverged from cold compile"
+    );
+    assert_eq!(
+        print_module(session.implicit_dae()),
+        print_module(cold.implicit_dae()),
+        "post-DAE implicit IR diverged from cold compile"
+    );
+    assert_eq!(
+        print_module(session.explicit()),
+        print_module(cold.explicit()),
+        "explicit IR diverged from cold compile"
+    );
+}
+
+#[test]
+fn one_function_edit_reruns_only_that_functions_passes() {
+    let opts = CompileOptions::standard();
+    let mut session = CompileSession::new("incr", FOUR_FUNCS, &opts).unwrap();
+    let cold_work = pass_work(session.timings());
+    let edited = FOUR_FUNCS.replace("a * 3 + 1", "a * 9 + 1");
+    let outcome = session.recompile(&edited).unwrap();
+    assert_eq!(outcome.mode, RecompileMode::Incremental);
+    assert_eq!(outcome.dirty, vec!["leaf_a".to_string()]);
+    for t in &outcome.timings {
+        if t.ran {
+            assert_eq!(
+                t.funcs, 1,
+                "pass `{}` processed {} functions for a one-function edit",
+                t.pass, t.funcs
+            );
+        }
+    }
+    let incr_work = pass_work(&outcome.timings);
+    assert!(
+        incr_work * 2 < cold_work,
+        "incremental work {incr_work} must be < 50% of cold work {cold_work}"
+    );
+    assert_matches_cold(&session, "incr", &edited, &opts);
+}
+
+#[test]
+fn incremental_splice_matches_cold_compile_for_dae_program() {
+    let opts = CompileOptions::standard();
+    let mut session = CompileSession::new("bfs_dae", bfs::BFS_DAE_SRC, &opts).unwrap();
+    let edited = bfs::BFS_DAE_SRC.replace("visited[n] = 1", "visited[n] = 2");
+    let outcome = session.recompile(&edited).unwrap();
+    assert_eq!(outcome.mode, RecompileMode::Incremental);
+    assert_eq!(outcome.dirty, vec!["visit".to_string()]);
+    assert_matches_cold(&session, "bfs_dae", &edited, &opts);
+}
+
+#[test]
+fn task_structure_edit_still_matches_cold_compile() {
+    // Adding a sync changes `work`'s path partition (more continuation
+    // tasks), which shifts explicit FuncIds — the splicer must detect the
+    // layout change and re-convert, still producing the cold-compile
+    // module exactly.
+    let opts = CompileOptions::standard();
+    let mut session = CompileSession::new("incr", FOUR_FUNCS, &opts).unwrap();
+    let edited = FOUR_FUNCS.replace(
+        "int y = cilk_spawn work(n - 2);\n    cilk_sync;",
+        "cilk_sync;\n    int y = cilk_spawn work(n - 2);\n    cilk_sync;",
+    );
+    assert_ne!(edited, FOUR_FUNCS, "test edit must apply");
+    let outcome = session.recompile(&edited).unwrap();
+    assert_eq!(outcome.mode, RecompileMode::Incremental);
+    assert_eq!(outcome.dirty, vec!["work".to_string()]);
+    assert_matches_cold(&session, "incr", &edited, &opts);
+}
+
+#[test]
+fn structural_edit_falls_back_to_full_recompile_and_matches_cold() {
+    let opts = CompileOptions::standard();
+    let mut session = CompileSession::new("incr", FOUR_FUNCS, &opts).unwrap();
+    // A new function changes the signature structure: incremental
+    // splicing is unsound, the driver must run the full pipeline.
+    let edited = format!("{FOUR_FUNCS}\nint extra(int q) {{ return q + 40; }}\n");
+    let outcome = session.recompile(&edited).unwrap();
+    assert_eq!(outcome.mode, RecompileMode::Full);
+    assert_matches_cold(&session, "incr", &edited, &opts);
+}
+
+#[test]
+fn whitespace_only_edit_is_unchanged_and_keeps_artifacts() {
+    let opts = CompileOptions::no_dae();
+    let mut session = CompileSession::new("fib", fib::FIB_SRC, &opts).unwrap();
+    let emu_before: *const bombyx::backend::emu::EmuProgram = session.emu_program();
+    let _ = session.rtl_system("fib_system").unwrap();
+    let timings_before = session.timings().len();
+
+    // Shift every span; no fingerprint may change.
+    let shifted = format!("\n\n  {}", fib::FIB_SRC);
+    let outcome = session.recompile(&shifted).unwrap();
+    assert_eq!(outcome.mode, RecompileMode::Unchanged);
+    assert!(outcome.dirty.is_empty());
+    assert_eq!(pass_work(&outcome.timings), 0, "unchanged source must do zero pass work");
+
+    // Memoized artifacts survive: same emu allocation, cached rtl system
+    // returned with no new emission pass recorded.
+    let emu_after: *const bombyx::backend::emu::EmuProgram = session.emu_program();
+    assert_eq!(emu_before, emu_after);
+    let _ = session.rtl_system("fib_system").unwrap();
+    assert_eq!(session.timings().len(), timings_before, "rtl must come from the cache");
+}
+
+#[test]
+fn real_edit_invalidates_dependent_artifacts() {
+    let opts = CompileOptions::standard();
+    let mut session = CompileSession::new("incr", FOUR_FUNCS, &opts).unwrap();
+    let _ = session.rtl_system("sys").unwrap();
+    let _ = session.hardcilk_system("sys").unwrap();
+    let with_rtl = session.timings().len();
+    assert!(with_rtl > 5, "rtl emission must be a timed pass");
+
+    let edited = FOUR_FUNCS.replace("a - 2", "a - 7");
+    let outcome = session.recompile(&edited).unwrap();
+    assert_eq!(outcome.mode, RecompileMode::Incremental);
+    // The timings now describe the recompile only (no stale rtl row)...
+    assert_eq!(session.timings().len(), 5);
+    // ...and requesting the system again re-emits against the new module.
+    let _ = session.rtl_system("sys").unwrap();
+    assert_eq!(session.timings().len(), 6);
+}
+
+#[test]
+fn second_rtl_emission_does_zero_lowering_work() {
+    let mut session =
+        CompileSession::new("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let sys1: *const bombyx::backend::rtl::RtlSystem = session.rtl_system("fib_system").unwrap();
+    let after_first = session.timings().len();
+    let sys2: *const bombyx::backend::rtl::RtlSystem = session.rtl_system("fib_system").unwrap();
+    assert_eq!(sys1, sys2, "second request must return the cached system");
+    assert_eq!(
+        session.timings().len(),
+        after_first,
+        "second rtl_system call must record no new pass (zero lowering/emission work)"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: all four compile routes agree on every corpus program
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cold_batch_serial_batch_parallel_and_incremental_agree_on_corpus() {
+    let corpus = corpus();
+    let opts = CompileOptions::standard();
+    let serial = compile_batch(&corpus, &opts, 1);
+    let par = compile_batch(&corpus, &opts, 4);
+    for (i, (name, src)) in corpus.iter().enumerate() {
+        let cold = CompileSession::new(name, src, &opts).unwrap();
+        let want = print_module(cold.explicit());
+
+        let s = serial.outcomes[i].1.as_ref().unwrap();
+        assert_eq!(print_module(s.explicit()), want, "serial batch differs on `{name}`");
+        let p = par.outcomes[i].1.as_ref().unwrap();
+        assert_eq!(print_module(p.explicit()), want, "parallel batch differs on `{name}`");
+
+        // Incremental route: start from a whitespace-shifted variant
+        // (same fingerprints), then recompile to the original text.
+        let mut incr = CompileSession::new(name, &format!("\n{src}"), &opts).unwrap();
+        let outcome = incr.recompile(src).unwrap();
+        assert_eq!(outcome.mode, RecompileMode::Unchanged, "{name}");
+        assert_eq!(print_module(incr.explicit()), want, "incremental differs on `{name}`");
+    }
+}

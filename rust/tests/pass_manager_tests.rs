@@ -78,7 +78,8 @@ fn interpass_verification_catches_a_corrupted_cfg() {
             _opts: &CompileOptions,
         ) -> anyhow::Result<Artifact> {
             let mut module = artifact.into_module()?;
-            let (_, func) = module.funcs.iter_mut().next().expect("one function");
+            let m = std::sync::Arc::make_mut(&mut module);
+            let (_, func) = m.funcs.iter_mut().next().expect("one function");
             let entry = func.cfg().entry;
             func.cfg_mut().blocks[entry].term = Term::Jump(BlockId::new(9_999));
             Ok(Artifact::Module(module))
