@@ -1,68 +1,445 @@
-//! A-ws ablation: software work-stealing runtime (the Cilk-1 emulation
-//! backend) — throughput and scaling on fib / BFS / N-Queens. Each program
-//! is one `CompileSession`; every worker-count configuration reuses its
-//! cached explicit module.
+//! A-ws ablation: the software execution stack after the kernel rework.
+//!
+//! Three sections, emitted to `BENCH_ws.json` (machine-readable, same
+//! convention as `BENCH_compile.json` — the committed file is pinned by
+//! one run in a toolchain environment):
+//!
+//! 1. **kernel-vs-tree**: single-worker explicit execution on the
+//!    compiled register bytecode vs a frozen copy of the pre-kernel
+//!    tree-walking executor (kept below), on fib and N-Queens — the
+//!    headline speedup of the kernel layer.
+//! 2. **ws scaling**: work-stealing throughput and efficiency at 1/2/4
+//!    workers on fib (lock-free deques + backoff).
+//! 3. **footprint**: steal counts and live-closure peaks.
+//!
+//! `BOMBYX_BENCH_SMOKE=1` switches to reduced iterations/sizes (the CI
+//! bench-smoke step).
 
+use std::collections::VecDeque;
+
+use bombyx::interp::explicit_exec::ExplicitExec;
+use bombyx::interp::{Memory, NoXla};
+use bombyx::ir::cfg::{FuncId, FuncKind, Module, Op, RetTarget, Term};
+use bombyx::ir::expr::{self, Value, VarId};
 use bombyx::lower::{CompileOptions, CompileSession};
 use bombyx::util::bench::{banner, bench, throughput};
-use bombyx::workloads::{bfs, fib, graphgen, nqueens};
+use bombyx::util::json::Json;
+use bombyx::workloads::{fib, nqueens};
 use bombyx::ws::{self, WsConfig};
 
+/// Frozen pre-kernel baseline: the tree-walking single-threaded explicit
+/// machine as it existed before the `exec` layer (re-walks `Expr` trees
+/// via `expr::eval` on every op, allocates arg vectors per spawn). Kept
+/// here, not in src/, purely as the differential baseline.
+mod tree_baseline {
+    use super::*;
+
+    #[derive(Clone, Copy)]
+    pub enum TCont {
+        Root,
+        Slot { clos: usize, slot: u32 },
+        Counter { clos: usize },
+    }
+
+    pub struct TClosure {
+        task: FuncId,
+        slots: Vec<Value>,
+        cont: TCont,
+        counter: u32,
+        freed: bool,
+    }
+
+    pub struct TreeExec<'m> {
+        pub module: &'m Module,
+        pub memory: Memory,
+        pub tasks_run: u64,
+        closures: Vec<TClosure>,
+        ready: VecDeque<(FuncId, Vec<Value>, TCont)>,
+        result: Option<Value>,
+    }
+
+    impl<'m> TreeExec<'m> {
+        pub fn new(module: &'m Module, memory: Memory) -> Self {
+            TreeExec {
+                module,
+                memory,
+                tasks_run: 0,
+                closures: Vec::new(),
+                ready: VecDeque::new(),
+                result: None,
+            }
+        }
+
+        pub fn run(&mut self, name: &str, args: &[Value]) -> Value {
+            let fid = self.module.func_by_name(name).expect("entry task");
+            self.ready.push_back((fid, args.to_vec(), TCont::Root));
+            while let Some((task, args, cont)) = self.ready.pop_back() {
+                self.run_task(task, args, cont);
+            }
+            self.result.take().expect("root result")
+        }
+
+        fn deliver(&mut self, cont: TCont, value: Value) {
+            match cont {
+                TCont::Root => self.result = Some(value),
+                TCont::Slot { clos, slot } => {
+                    let c = &mut self.closures[clos];
+                    let ty = self.module.funcs[c.task].vars[VarId::new(slot as usize)].ty;
+                    c.slots[slot as usize] = value.coerce(ty);
+                    c.counter -= 1;
+                    self.fire_if_ready(clos);
+                }
+                TCont::Counter { clos } => {
+                    self.closures[clos].counter -= 1;
+                    self.fire_if_ready(clos);
+                }
+            }
+        }
+
+        fn fire_if_ready(&mut self, clos: usize) {
+            let c = &mut self.closures[clos];
+            if c.counter == 0 && !c.freed {
+                c.freed = true;
+                let inst = (c.task, c.slots.clone(), c.cont);
+                self.ready.push_back(inst);
+            }
+        }
+
+        fn run_task(&mut self, task: FuncId, args: Vec<Value>, cont: TCont) {
+            self.tasks_run += 1;
+            let func = &self.module.funcs[task];
+            if func.kind == FuncKind::Leaf {
+                let out = self.eval_leaf(task, &args);
+                self.deliver(cont, out);
+                return;
+            }
+            assert!(func.kind == FuncKind::Task, "baseline has no xla support");
+            let cfg = func.cfg();
+            let mut env: Vec<Value> =
+                func.vars.values().map(|v| Value::zero_of(v.ty)).collect();
+            for (i, a) in args.iter().enumerate() {
+                env[i] = a.coerce(func.vars[VarId::new(i)].ty);
+            }
+            let mut block = cfg.entry;
+            loop {
+                let b = &cfg.blocks[block];
+                for op in &b.ops {
+                    match op {
+                        Op::Assign { dst, src } => {
+                            let v = expr::eval(src, &|v| env[v.index()]);
+                            env[dst.index()] = v.coerce(func.vars[*dst].ty);
+                        }
+                        Op::Load { dst, arr, index, .. } => {
+                            let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                            env[dst.index()] = self.memory.load(*arr, idx).unwrap();
+                        }
+                        Op::Store { arr, index, value } => {
+                            let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                            let val = expr::eval(value, &|v| env[v.index()]);
+                            self.memory.store(*arr, idx, val).unwrap();
+                        }
+                        Op::AtomicAdd { arr, index, value } => {
+                            let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                            let val = expr::eval(value, &|v| env[v.index()]);
+                            self.memory.atomic_add(*arr, idx, val).unwrap();
+                        }
+                        Op::Call { dst, callee, args } => {
+                            let vals: Vec<Value> = args
+                                .iter()
+                                .map(|a| expr::eval(a, &|v| env[v.index()]))
+                                .collect();
+                            let r = self.eval_leaf(*callee, &vals);
+                            if let Some(d) = dst {
+                                env[d.index()] = r.coerce(func.vars[*d].ty);
+                            }
+                        }
+                        Op::MakeClosure { dst, task } => {
+                            let t = &self.module.funcs[*task];
+                            let c = TClosure {
+                                task: *task,
+                                slots: t
+                                    .param_ids()
+                                    .map(|p| Value::zero_of(t.vars[p].ty))
+                                    .collect(),
+                                cont,
+                                counter: 1,
+                                freed: false,
+                            };
+                            self.closures.push(c);
+                            env[dst.index()] = Value::I64(self.closures.len() as i64 - 1);
+                        }
+                        Op::ClosureStore { clos, field, value } => {
+                            let h = env[clos.index()].as_i64() as usize;
+                            let val = expr::eval(value, &|v| env[v.index()]);
+                            let c = &mut self.closures[h];
+                            let ty = self.module.funcs[c.task].vars
+                                [VarId::new(*field as usize)]
+                            .ty;
+                            c.slots[*field as usize] = val.coerce(ty);
+                        }
+                        Op::SpawnChild { callee, args, ret } => {
+                            let vals: Vec<Value> = args
+                                .iter()
+                                .map(|a| expr::eval(a, &|v| env[v.index()]))
+                                .collect();
+                            let child_cont = match ret {
+                                RetTarget::Slot { clos, field } => {
+                                    let h = env[clos.index()].as_i64() as usize;
+                                    self.closures[h].counter += 1;
+                                    TCont::Slot { clos: h, slot: *field }
+                                }
+                                RetTarget::Counter { clos } => {
+                                    let h = env[clos.index()].as_i64() as usize;
+                                    self.closures[h].counter += 1;
+                                    TCont::Counter { clos: h }
+                                }
+                                RetTarget::Forward => cont,
+                            };
+                            self.ready.push_back((*callee, vals, child_cont));
+                        }
+                        Op::CloseSpawns { clos } => {
+                            let h = env[clos.index()].as_i64() as usize;
+                            self.closures[h].counter -= 1;
+                            self.fire_if_ready(h);
+                        }
+                        Op::SendArgument { value } => {
+                            let v = match value {
+                                Some(e) => {
+                                    expr::eval(e, &|v| env[v.index()]).coerce(func.ret)
+                                }
+                                None => Value::Unit,
+                            };
+                            self.deliver(cont, v);
+                        }
+                        other => panic!("baseline: unexpected op {other:?}"),
+                    }
+                }
+                match &b.term {
+                    Term::Jump(next) => block = *next,
+                    Term::Branch { cond, then_, else_ } => {
+                        let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
+                        block = if c { *then_ } else { *else_ };
+                    }
+                    Term::Halt => return,
+                    other => panic!("baseline: terminator {other:?}"),
+                }
+            }
+        }
+
+        fn eval_leaf(&mut self, fid: FuncId, args: &[Value]) -> Value {
+            let func = &self.module.funcs[fid];
+            let cfg = func.cfg();
+            let mut env: Vec<Value> =
+                func.vars.values().map(|v| Value::zero_of(v.ty)).collect();
+            for (i, a) in args.iter().enumerate() {
+                env[i] = a.coerce(func.vars[VarId::new(i)].ty);
+            }
+            let mut block = cfg.entry;
+            loop {
+                let b = &cfg.blocks[block];
+                for op in &b.ops {
+                    match op {
+                        Op::Assign { dst, src } => {
+                            let v = expr::eval(src, &|v| env[v.index()]);
+                            env[dst.index()] = v.coerce(func.vars[*dst].ty);
+                        }
+                        Op::Load { dst, arr, index, .. } => {
+                            let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                            env[dst.index()] = self.memory.load(*arr, idx).unwrap();
+                        }
+                        Op::Store { arr, index, value } => {
+                            let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                            let val = expr::eval(value, &|v| env[v.index()]);
+                            self.memory.store(*arr, idx, val).unwrap();
+                        }
+                        Op::AtomicAdd { arr, index, value } => {
+                            let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
+                            let val = expr::eval(value, &|v| env[v.index()]);
+                            self.memory.atomic_add(*arr, idx, val).unwrap();
+                        }
+                        Op::Call { dst, callee, args } => {
+                            let vals: Vec<Value> = args
+                                .iter()
+                                .map(|a| expr::eval(a, &|v| env[v.index()]))
+                                .collect();
+                            let r = self.eval_leaf(*callee, &vals);
+                            if let Some(d) = dst {
+                                env[d.index()] = r.coerce(func.vars[*d].ty);
+                            }
+                        }
+                        other => panic!("baseline leaf: op {other:?}"),
+                    }
+                }
+                match &b.term {
+                    Term::Jump(next) => block = *next,
+                    Term::Branch { cond, then_, else_ } => {
+                        let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
+                        block = if c { *then_ } else { *else_ };
+                    }
+                    Term::Return(value) => {
+                        return match value {
+                            Some(e) => {
+                                expr::eval(e, &|v| env[v.index()]).coerce(func.ret)
+                            }
+                            None => Value::Unit,
+                        };
+                    }
+                    other => panic!("baseline leaf: terminator {other:?}"),
+                }
+            }
+        }
+    }
+}
+
 fn main() {
+    let smoke = std::env::var("BOMBYX_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let samples = if smoke { 2 } else { 5 };
     banner(
         "ws_throughput",
-        "Cilk-1 emulation layer: task throughput on the multithreaded WS runtime.",
+        "Execution stack: kernel-vs-tree single-worker speedup, WS scaling, footprint.",
     );
+    if smoke {
+        println!("(smoke mode: reduced iterations and sizes)");
+    }
 
-    // fib(25): ~485k tasks.
-    let session = CompileSession::new("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
-    let mut tasks_run = 0u64;
-    for workers in [1usize, 2, 4, 8] {
+    // ---- section 1: kernel vs tree, single-threaded ------------------------
+    let fib_n: i64 = if smoke { 18 } else { 22 };
+    let fib_expect = fib::fib_ref(fib_n as u64) as i64;
+    let nq_n: i64 = if smoke { 6 } else { 7 };
+    let nq_expect = nqueens::nqueens_ref(nq_n as usize) as i64;
+
+    let sf = CompileSession::new("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let sq = CompileSession::new("nq", nqueens::NQUEENS_SRC, &CompileOptions::no_dae()).unwrap();
+    let fib_kernels = sf.explicit_kernels().unwrap();
+    let nq_kernels = sq.explicit_kernels().unwrap();
+    let nq_args: Vec<Value> =
+        [nq_n, 0, 0, 0, 0].iter().map(|&v| Value::I64(v)).collect();
+
+    let mut tree_tasks = 0u64;
+    let tree_fib = bench(&format!("tree  fib({fib_n}) 1-thread"), samples, || {
+        let mut ex = tree_baseline::TreeExec::new(sf.explicit(), sf.memory());
+        let v = ex.run("fib", &[Value::I64(fib_n)]);
+        assert_eq!(v.as_i64(), fib_expect);
+        tree_tasks = ex.tasks_run;
+        ex.tasks_run
+    });
+    let mut kernel_tasks = 0u64;
+    let kernel_fib = bench(&format!("kernel fib({fib_n}) 1-thread"), samples, || {
+        let mut ex = ExplicitExec::with_kernels(
+            sf.explicit(),
+            sf.memory(),
+            NoXla,
+            std::sync::Arc::clone(&fib_kernels),
+        );
+        let v = ex.run("fib", &[Value::I64(fib_n)]).unwrap();
+        assert_eq!(v.as_i64(), fib_expect);
+        kernel_tasks = ex.stats.tasks_run;
+        ex.stats.tasks_run
+    });
+    assert_eq!(tree_tasks, kernel_tasks, "same task graph on both executors");
+    throughput(&format!("kernel fib({fib_n})"), &kernel_fib, kernel_tasks, "tasks");
+    let fib_speedup =
+        tree_fib.median.as_secs_f64() / kernel_fib.median.as_secs_f64().max(1e-12);
+    println!("kernel-vs-tree speedup on fib({fib_n}): {fib_speedup:.2}x");
+
+    let tree_nq = bench(&format!("tree  nqueens({nq_n}) 1-thread"), samples, || {
+        let mut ex = tree_baseline::TreeExec::new(sq.explicit(), sq.memory());
+        ex.run("place", &nq_args);
+        let sols = ex.memory.dump_i64(sq.explicit().global_by_name("solutions").unwrap())[0];
+        assert_eq!(sols, nq_expect);
+        ex.tasks_run
+    });
+    let kernel_nq = bench(&format!("kernel nqueens({nq_n}) 1-thread"), samples, || {
+        let mut ex = ExplicitExec::with_kernels(
+            sq.explicit(),
+            sq.memory(),
+            NoXla,
+            std::sync::Arc::clone(&nq_kernels),
+        );
+        ex.run("place", &nq_args).unwrap();
+        let sols = ex.memory.dump_i64(sq.explicit().global_by_name("solutions").unwrap())[0];
+        assert_eq!(sols, nq_expect);
+        ex.stats.tasks_run
+    });
+    let nq_speedup = tree_nq.median.as_secs_f64() / kernel_nq.median.as_secs_f64().max(1e-12);
+    println!("kernel-vs-tree speedup on nqueens({nq_n}): {nq_speedup:.2}x");
+
+    // ---- section 2: ws scaling at 1/2/4 workers ----------------------------
+    let ws_n: i64 = if smoke { 19 } else { 23 };
+    let ws_expect = fib::fib_ref(ws_n as u64) as i64;
+    let mut scaling = Vec::new(); // (workers, median_s, tasks, steals, peak)
+    for workers in [1usize, 2, 4] {
         let cfg = WsConfig { workers, steal_tries: 4 };
-        let stats = bench(&format!("ws fib(25) workers={workers}"), 5, || {
-            let (v, _, s) = session
+        let mut tasks = 0u64;
+        let mut steals = 0u64;
+        let mut peak = 0u64;
+        let stats = bench(&format!("ws fib({ws_n}) workers={workers}"), samples, || {
+            let (v, _, s) = sf
                 .run_ws(
-                    session.shared_memory(),
+                    sf.shared_memory(),
                     "fib",
-                    &[bombyx::ir::Value::I64(25)],
+                    &[Value::I64(ws_n)],
                     &cfg,
                     Box::new(ws::NoXlaSink),
                 )
                 .unwrap();
-            assert_eq!(v.as_i64(), 75_025);
-            tasks_run = s.tasks_run;
+            assert_eq!(v.as_i64(), ws_expect);
+            tasks = s.tasks_run;
+            steals = s.steals;
+            peak = s.max_live_closures;
             s.tasks_run
         });
-        throughput(&format!("ws fib(25) workers={workers}"), &stats, tasks_run, "tasks");
+        throughput(&format!("ws fib({ws_n}) workers={workers}"), &stats, tasks, "tasks");
+        scaling.push((workers, stats.median.as_secs_f64(), tasks, steals, peak));
+    }
+    let t1 = scaling[0].1;
+    for &(workers, tn, _, _, _) in &scaling {
+        let eff = t1 / (workers as f64 * tn.max(1e-12));
+        println!("ws scaling efficiency at {workers} worker(s): {:.0}%", eff * 100.0);
     }
 
-    // BFS D=7 tree.
-    let sb = CompileSession::new("bfs", bfs::BFS_SRC, &CompileOptions::no_dae()).unwrap();
-    let g = graphgen::paper_tree_small();
-    let cfg = WsConfig { workers: 8, steal_tries: 4 };
-    let stats = bench("ws bfs(B=4,D=7) workers=8", 5, || {
-        let mut mem = sb.shared_memory();
-        mem.fill_i64(sb.explicit().global_by_name("adj_off").unwrap(), &g.adj_off);
-        mem.fill_i64(sb.explicit().global_by_name("adj_edges").unwrap(), &g.adj_edges);
-        mem.resize(sb.explicit().global_by_name("visited").unwrap(), g.nodes());
-        sb.run_ws(mem, "visit", &[bombyx::ir::Value::I64(0)], &cfg, Box::new(ws::NoXlaSink))
-            .unwrap()
-            .2
-            .tasks_run
-    });
-    throughput("ws bfs(B=4,D=7)", &stats, 2 * g.nodes() as u64, "tasks");
+    // ---- machine-readable output -------------------------------------------
+    let mut kvt = Json::object();
+    let mut kvt_fib = Json::object();
+    kvt_fib
+        .set("n", fib_n)
+        .set("tree_ms", tree_fib.median.as_secs_f64() * 1e3)
+        .set("kernel_ms", kernel_fib.median.as_secs_f64() * 1e3)
+        .set("speedup", fib_speedup)
+        .set("tasks", kernel_tasks as i64);
+    let mut kvt_nq = Json::object();
+    kvt_nq
+        .set("n", nq_n)
+        .set("tree_ms", tree_nq.median.as_secs_f64() * 1e3)
+        .set("kernel_ms", kernel_nq.median.as_secs_f64() * 1e3)
+        .set("speedup", nq_speedup);
+    kvt.set("fib", kvt_fib).set("nqueens", kvt_nq);
 
-    // N-Queens 8.
-    let sq = CompileSession::new("nq", nqueens::NQUEENS_SRC, &CompileOptions::no_dae()).unwrap();
-    let stats = bench("ws nqueens(8) workers=8", 5, || {
-        let args: Vec<bombyx::ir::Value> =
-            [8i64, 0, 0, 0, 0].iter().map(|&v| bombyx::ir::Value::I64(v)).collect();
-        let (_, mem, s) = sq
-            .run_ws(sq.shared_memory(), "place", &args, &cfg, Box::new(ws::NoXlaSink))
-            .unwrap();
-        let sols = mem.dump_i64(sq.explicit().global_by_name("solutions").unwrap())[0];
-        assert_eq!(sols, 92);
-        s.tasks_run
-    });
-    throughput("ws nqueens(8)", &stats, 4000, "tasks");
+    let mut scale_json = Json::object();
+    scale_json.set("fib_n", ws_n);
+    let rows: Vec<Json> = scaling
+        .iter()
+        .map(|&(workers, secs, tasks, steals, peak)| {
+            let mut row = Json::object();
+            row.set("workers", workers)
+                .set("median_ms", secs * 1e3)
+                .set("tasks", tasks as i64)
+                .set("tasks_per_s", tasks as f64 / secs.max(1e-12))
+                .set("efficiency", t1 / (workers as f64 * secs.max(1e-12)))
+                .set("steals", steals as i64)
+                .set("max_live_closures", peak as i64);
+            row
+        })
+        .collect();
+    scale_json.set("workers", Json::Array(rows));
+
+    let mut root = Json::object();
+    root.set("bench", "ws_throughput")
+        .set("mode", if cfg!(debug_assertions) { "debug" } else { "release" })
+        .set("smoke", smoke)
+        .set("kernel_vs_tree", kvt)
+        .set("ws_scaling", scale_json);
+    let path = "BENCH_ws.json";
+    std::fs::write(path, root.pretty() + "\n").expect("write BENCH_ws.json");
+    println!("wrote {path}");
 }

@@ -22,11 +22,14 @@ use crate::ws::{self, SharedMemory, WsConfig, XlaSink};
 /// An executable emulation program: the explicit module plus its entry
 /// points (every original task function is invocable). The module is a
 /// shared handle into the compile session's cached explicit IR —
-/// packaging never copies the module.
+/// packaging never copies the module, and the execution kernels compile
+/// once per program (lazily, shared across runs).
 #[derive(Clone, Debug)]
 pub struct EmuProgram {
     pub module: Arc<Module>,
     pub entries: Vec<String>,
+    /// Kernel program for the WS runtime, compiled on first run.
+    kernels: std::sync::OnceLock<Arc<crate::exec::KernelProgram>>,
 }
 
 /// Build the emulation program from a compile result.
@@ -44,11 +47,23 @@ pub fn package(result: &CompileResult) -> EmuProgram {
         })
         .map(|f| f.name.clone())
         .collect();
-    EmuProgram { module: Arc::clone(&result.explicit), entries }
+    EmuProgram {
+        module: Arc::clone(&result.explicit),
+        entries,
+        kernels: std::sync::OnceLock::new(),
+    }
 }
 
 impl EmuProgram {
-    /// Run on the WS runtime.
+    /// The program's compiled execution kernels, built on first request
+    /// and shared across runs.
+    pub fn kernels(&self) -> Result<Arc<crate::exec::KernelProgram>> {
+        crate::exec::memo_kernels(&self.kernels, || {
+            crate::exec::compile_module(&self.module, crate::exec::KernelMode::Explicit)
+        })
+    }
+
+    /// Run on the WS runtime (kernels compiled once per program).
     pub fn run(
         &self,
         memory: SharedMemory,
@@ -63,7 +78,7 @@ impl EmuProgram {
                 self.entries
             ));
         }
-        ws::run(&self.module, memory, entry, args, config, sink)
+        ws::run_with_kernels(self.kernels()?, memory, entry, args, config, sink)
     }
 }
 

@@ -1,0 +1,635 @@
+//! CFG → kernel bytecode compiler.
+//!
+//! Each function's CFG is flattened once, in reverse post-order:
+//!
+//! - expressions become register instructions over a frame of slots
+//!   (declared variables first, then per-op temporaries — temporaries
+//!   are recycled between ops, so frames stay small);
+//! - constant subexpressions are folded into immediates here, via the
+//!   tree-walking `expr::eval` (its one remaining compile-time use);
+//! - call/spawn arguments are staged into consecutive slots so dispatch
+//!   passes a slice instead of building a `Vec`;
+//! - branch targets resolve to instruction offsets;
+//! - every source IR op attaches a [`KCost`] mirroring `hls::op_cycles`
+//!   (operator counts measured on the *pre-fold* trees, so simulated
+//!   cycle counts are unchanged by folding).
+//!
+//! Left-to-right evaluation order is preserved everywhere, and argument
+//! staging slots are allocated before their value computations' own
+//! temporaries, so monotonically growing per-op temp allocation can
+//! never clobber a staged value.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::frontend::ast::Type;
+use crate::ir::cfg::{BlockId, Func, FuncKind, Module, Op, RetTarget, Term};
+use crate::ir::expr::{self, Expr, Value};
+
+use super::kernel::{
+    FuncKernel, KBase, KCost, KInstr, KOp, KRet, KernelMode, KernelProgram, Operand, NO_COST,
+};
+
+/// Compile every function of `module` into bytecode kernels. The result
+/// passes [`KernelProgram::validate`] (checked here; a failure is a
+/// compiler bug, reported like a pass post-verification failure).
+pub fn compile_module(module: &Module, mode: KernelMode) -> Result<KernelProgram> {
+    let prog = compile_module_unvalidated(module, mode)?;
+    let errors = prog.validate();
+    if !errors.is_empty() {
+        bail!(
+            "kernel compilation produced invalid bytecode:\n  {}",
+            errors.join("\n  ")
+        );
+    }
+    Ok(prog)
+}
+
+/// [`compile_module`] without the built-in validation — for callers whose
+/// own boundary runs the validator (the `kernel_compile` pass, whose
+/// post-verification IS [`KernelProgram::validate`]); avoids walking
+/// every instruction twice on that path.
+pub(crate) fn compile_module_unvalidated(
+    module: &Module,
+    mode: KernelMode,
+) -> Result<KernelProgram> {
+    let mut funcs = Vec::with_capacity(module.funcs.len());
+    for (_, f) in module.funcs.iter() {
+        funcs.push(compile_func(module, f, mode)?);
+    }
+    Ok(KernelProgram { mode, funcs })
+}
+
+fn role_of(f: &Func) -> &'static str {
+    f.task.as_ref().map(|t| t.role.name()).unwrap_or(match f.kind {
+        FuncKind::Leaf => "leaf",
+        FuncKind::Xla => "xla",
+        FuncKind::Task => "task",
+    })
+}
+
+fn compile_func(module: &Module, f: &Func, mode: KernelMode) -> Result<FuncKernel> {
+    let param_tys: Arc<[Type]> =
+        f.param_ids().map(|p| f.vars[p].ty).collect::<Vec<_>>().into();
+    if f.kind == FuncKind::Xla {
+        return Ok(FuncKernel {
+            name: f.name.clone(),
+            kind: f.kind,
+            role: role_of(f),
+            params: f.params,
+            param_tys,
+            ret: f.ret,
+            frame: Vec::new(),
+            code: Vec::new(),
+            costs: Vec::new(),
+        });
+    }
+    let Some(cfg) = f.body.as_ref() else {
+        bail!("function `{}` has no body", f.name);
+    };
+    let n_vars = f.vars.len() as u32;
+    let mut c = FnCompiler {
+        func: f,
+        mode,
+        leaf: f.kind == FuncKind::Leaf,
+        code: Vec::new(),
+        costs: Vec::new(),
+        n_vars,
+        next_temp: n_vars,
+        max_slots: n_vars,
+    };
+    if mode == KernelMode::Explicit {
+        // Sequential calls target leaf (or xla) callees only; catching a
+        // task callee here turns the old runtime bail into a compile error.
+        for block in cfg.blocks.values() {
+            for op in &block.ops {
+                if let Op::Call { callee, .. } = op {
+                    let ck = &module.funcs[*callee];
+                    if ck.kind == FuncKind::Task {
+                        bail!("sequential call to non-leaf `{}` in `{}`", ck.name, f.name);
+                    }
+                }
+            }
+        }
+    }
+    let rpo = cfg.reverse_postorder();
+    let mut offsets = vec![u32::MAX; cfg.blocks.len()];
+    let mut fixups: Vec<(usize, u8, BlockId)> = Vec::new();
+    for &bid in &rpo {
+        offsets[bid.index()] = c.code.len() as u32;
+        let block = &cfg.blocks[bid];
+        for op in &block.ops {
+            c.reset_temps();
+            c.emit_op(op)?;
+        }
+        c.reset_temps();
+        c.emit_term(&block.term, &mut fixups)?;
+    }
+    for (idx, field, target) in fixups {
+        let off = offsets[target.index()];
+        if off == u32::MAX {
+            bail!("`{}`: terminator targets unreachable bb{}", f.name, target.index());
+        }
+        match (&mut c.code[idx].op, field) {
+            (KOp::Jump { target }, 0) => *target = off,
+            (KOp::Branch { then_, .. }, 1) => *then_ = off,
+            (KOp::Branch { else_, .. }, 2) => *else_ = off,
+            (other, _) => bail!("`{}`: fixup mismatch at pc {idx}: {other:?}", f.name),
+        }
+    }
+    let mut frame: Vec<Value> = f.vars.values().map(|v| Value::zero_of(v.ty)).collect();
+    frame.resize(c.max_slots as usize, Value::Unit);
+    Ok(FuncKernel {
+        name: f.name.clone(),
+        kind: f.kind,
+        role: role_of(f),
+        params: f.params,
+        param_tys,
+        ret: f.ret,
+        frame,
+        code: c.code,
+        costs: c.costs,
+    })
+}
+
+/// Operator count of an expression — the figure `hls::expr_cycles`
+/// divides by `ops_per_cycle` (Binary/Unary/Builtin nodes).
+fn ops_in(e: &Expr) -> u32 {
+    let mut n = 0u32;
+    e.for_each_node(&mut |x| {
+        if matches!(x, Expr::Binary(..) | Expr::Unary(..) | Expr::Builtin(..)) {
+            n += 1;
+        }
+    });
+    n
+}
+
+/// Fold a variable-free subexpression to its value (the retained use of
+/// the tree evaluator: compile-time constant folding).
+fn const_fold(e: &Expr) -> Option<Value> {
+    let mut has_var = false;
+    e.for_each_var(&mut |_| has_var = true);
+    if has_var {
+        None
+    } else {
+        Some(expr::eval(e, &|_| Value::Unit))
+    }
+}
+
+struct FnCompiler<'m> {
+    func: &'m Func,
+    mode: KernelMode,
+    leaf: bool,
+    code: Vec<KInstr>,
+    costs: Vec<KCost>,
+    n_vars: u32,
+    next_temp: u32,
+    max_slots: u32,
+}
+
+impl<'m> FnCompiler<'m> {
+    fn reset_temps(&mut self) {
+        self.next_temp = self.n_vars;
+    }
+
+    fn alloc_temp(&mut self) -> u32 {
+        let t = self.next_temp;
+        self.next_temp += 1;
+        self.max_slots = self.max_slots.max(self.next_temp);
+        t
+    }
+
+    fn alloc_range(&mut self, n: u32) -> u32 {
+        let a0 = self.next_temp;
+        self.next_temp += n;
+        self.max_slots = self.max_slots.max(self.next_temp);
+        a0
+    }
+
+    fn push(&mut self, op: KOp) {
+        self.code.push(KInstr { op, cost: NO_COST });
+    }
+
+    fn push_costed(&mut self, op: KOp, cost: KCost) {
+        let id = self.costs.len() as u32;
+        self.costs.push(cost);
+        self.code.push(KInstr { op, cost: id });
+    }
+
+    /// Attach a cost to the most recently emitted instruction (the
+    /// anchor of a multi-instruction op like `Assign`).
+    fn set_last_cost(&mut self, cost: KCost) {
+        let id = self.costs.len() as u32;
+        self.costs.push(cost);
+        self.code.last_mut().expect("instruction just emitted").cost = id;
+    }
+
+    fn emit_expr(&mut self, e: &Expr) -> Result<Operand> {
+        if let Some(v) = const_fold(e) {
+            return Ok(Operand::Imm(v));
+        }
+        if let Expr::Var(v) = e {
+            return Ok(Operand::Slot(v.index() as u32));
+        }
+        let t = self.alloc_temp();
+        self.emit_expr_to(t, None, e)?;
+        Ok(Operand::Slot(t))
+    }
+
+    fn emit_expr_to(&mut self, dst: u32, ty: Option<Type>, e: &Expr) -> Result<()> {
+        if let Some(v) = const_fold(e) {
+            self.push(KOp::Mov { dst, src: Operand::Imm(v), ty });
+            return Ok(());
+        }
+        match e {
+            Expr::ConstI(v) => {
+                self.push(KOp::Mov { dst, src: Operand::Imm(Value::I64(*v)), ty })
+            }
+            Expr::ConstF(v) => {
+                self.push(KOp::Mov { dst, src: Operand::Imm(Value::F32(*v)), ty })
+            }
+            Expr::ConstB(v) => {
+                self.push(KOp::Mov { dst, src: Operand::Imm(Value::Bool(*v)), ty })
+            }
+            Expr::Var(v) => {
+                self.push(KOp::Mov { dst, src: Operand::Slot(v.index() as u32), ty })
+            }
+            Expr::Binary(op, a, b) => {
+                let lhs = self.emit_expr(a)?;
+                let rhs = self.emit_expr(b)?;
+                self.push(KOp::Bin { op: *op, dst, lhs, rhs, ty });
+            }
+            Expr::Unary(op, a) => {
+                let src = self.emit_expr(a)?;
+                self.push(KOp::Un { op: *op, dst, src, ty });
+            }
+            Expr::IntToFloat(a) => {
+                let src = self.emit_expr(a)?;
+                self.push(KOp::IntToFloat { dst, src, ty });
+            }
+            Expr::Builtin(b, args) => match args.len() {
+                1 => {
+                    let src = self.emit_expr(&args[0])?;
+                    self.push(KOp::Builtin1 { b: *b, dst, src, ty });
+                }
+                2 => {
+                    let lhs = self.emit_expr(&args[0])?;
+                    let rhs = self.emit_expr(&args[1])?;
+                    self.push(KOp::Builtin2 { b: *b, dst, lhs, rhs, ty });
+                }
+                n => bail!("builtin `{}` with unsupported arity {n}", b.name()),
+            },
+        }
+        Ok(())
+    }
+
+    /// Evaluate `args` left-to-right into consecutive slots; returns
+    /// (first slot, count).
+    fn stage_args(&mut self, args: &[Expr]) -> Result<(u32, u32)> {
+        let n = args.len() as u32;
+        let a0 = self.alloc_range(n);
+        for (i, a) in args.iter().enumerate() {
+            self.emit_expr_to(a0 + i as u32, None, a)?;
+        }
+        Ok((a0, n))
+    }
+
+    fn emit_op(&mut self, op: &Op) -> Result<()> {
+        if self.leaf
+            && !matches!(
+                op,
+                Op::Assign { .. }
+                    | Op::Load { .. }
+                    | Op::Store { .. }
+                    | Op::AtomicAdd { .. }
+                    | Op::Call { .. }
+            )
+        {
+            bail!("op {op:?} not allowed in leaf `{}`", self.func.name);
+        }
+        if self.mode == KernelMode::Implicit && op.is_explicit_only() {
+            bail!("explicit-only op {op:?} in implicit IR function `{}`", self.func.name);
+        }
+        match op {
+            Op::Assign { dst, src } => {
+                let ty = self.func.vars[*dst].ty;
+                self.emit_expr_to(dst.index() as u32, Some(ty), src)?;
+                self.set_last_cost(KCost { base: KBase::Zero, exprs: vec![ops_in(src)] });
+            }
+            Op::Load { dst, arr, index, .. } => {
+                let idx = self.emit_expr(index)?;
+                self.push_costed(
+                    KOp::Load { dst: dst.index() as u32, arr: *arr, index: idx },
+                    KCost { base: KBase::LoadIssue, exprs: vec![ops_in(index)] },
+                );
+            }
+            Op::Store { arr, index, value } => {
+                let idx = self.emit_expr(index)?;
+                let val = self.emit_expr(value)?;
+                self.push_costed(
+                    KOp::Store { arr: *arr, index: idx, value: val },
+                    KCost { base: KBase::StoreIssue, exprs: vec![ops_in(index), ops_in(value)] },
+                );
+            }
+            Op::AtomicAdd { arr, index, value } => {
+                let idx = self.emit_expr(index)?;
+                let val = self.emit_expr(value)?;
+                self.push_costed(
+                    KOp::AtomicAdd { arr: *arr, index: idx, value: val },
+                    KCost { base: KBase::StoreIssue, exprs: vec![ops_in(index), ops_in(value)] },
+                );
+            }
+            Op::Call { dst, callee, args } => {
+                let (a0, n) = self.stage_args(args)?;
+                let d = dst.map(|d| (d.index() as u32, self.func.vars[d].ty));
+                // No cost: the HLS model charges the (inlined) callee's
+                // own ops, which the callee kernel carries.
+                self.push(KOp::Call { dst: d, callee: *callee, args_at: a0, nargs: n });
+            }
+            Op::Spawn { dst, callee, args } => {
+                if self.mode == KernelMode::Explicit {
+                    bail!("implicit Spawn in explicit IR (`{}`)", self.func.name);
+                }
+                let (a0, n) = self.stage_args(args)?;
+                let d = dst.map(|d| (d.index() as u32, self.func.vars[d].ty));
+                self.push_costed(
+                    KOp::SpawnSeq { dst: d, callee: *callee, args_at: a0, nargs: n },
+                    KCost { base: KBase::StreamWrite, exprs: vec![] },
+                );
+            }
+            Op::MakeClosure { dst, task } => {
+                self.push_costed(
+                    KOp::MakeClosure { dst: dst.index() as u32, task: *task },
+                    KCost { base: KBase::SpawnNextRtt, exprs: vec![] },
+                );
+            }
+            Op::ClosureStore { clos, field, value } => {
+                let val = self.emit_expr(value)?;
+                self.push_costed(
+                    KOp::ClosureStore { clos: clos.index() as u32, field: *field, value: val },
+                    KCost { base: KBase::StreamWrite, exprs: vec![ops_in(value)] },
+                );
+            }
+            Op::SpawnChild { callee, args, ret } => {
+                let (a0, n) = self.stage_args(args)?;
+                let kret = match ret {
+                    RetTarget::Slot { clos, field } => {
+                        KRet::Slot { clos: clos.index() as u32, field: *field }
+                    }
+                    RetTarget::Counter { clos } => KRet::Counter { clos: clos.index() as u32 },
+                    RetTarget::Forward => KRet::Forward,
+                };
+                let exprs: Vec<u32> = args.iter().map(ops_in).collect();
+                self.push_costed(
+                    KOp::SpawnChild { callee: *callee, args_at: a0, nargs: n, ret: kret },
+                    KCost { base: KBase::StreamWrite, exprs },
+                );
+            }
+            Op::CloseSpawns { clos } => {
+                self.push_costed(
+                    KOp::CloseSpawns { clos: clos.index() as u32 },
+                    KCost { base: KBase::StreamWrite, exprs: vec![] },
+                );
+            }
+            Op::SendArgument { value } => {
+                let val = match value {
+                    Some(e) => Some(self.emit_expr(e)?),
+                    None => None,
+                };
+                let exprs = value.as_ref().map(|e| vec![ops_in(e)]).unwrap_or_default();
+                self.push_costed(
+                    KOp::SendArgument { value: val },
+                    KCost { base: KBase::StreamWrite, exprs },
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn emit_term(&mut self, term: &Term, fixups: &mut Vec<(usize, u8, BlockId)>) -> Result<()> {
+        match term {
+            Term::Jump(b) => {
+                let pc = self.code.len();
+                if self.leaf {
+                    // Leaf bodies never charged branch latency on plain
+                    // jumps (they are inlined straight-line code in HLS).
+                    self.push(KOp::Jump { target: u32::MAX });
+                } else {
+                    self.push_costed(
+                        KOp::Jump { target: u32::MAX },
+                        KCost { base: KBase::Branch, exprs: vec![] },
+                    );
+                }
+                fixups.push((pc, 0, *b));
+            }
+            Term::Sync { next } => {
+                if self.mode == KernelMode::Explicit {
+                    bail!("Sync terminator in explicit IR (`{}`)", self.func.name);
+                }
+                // Serial elision: children already ran; fall through.
+                let pc = self.code.len();
+                self.push(KOp::Jump { target: u32::MAX });
+                fixups.push((pc, 0, *next));
+            }
+            Term::Branch { cond, then_, else_ } => {
+                let c = self.emit_expr(cond)?;
+                let pc = self.code.len();
+                self.push_costed(
+                    KOp::Branch { cond: c, then_: u32::MAX, else_: u32::MAX },
+                    KCost { base: KBase::Branch, exprs: vec![] },
+                );
+                fixups.push((pc, 1, *then_));
+                fixups.push((pc, 2, *else_));
+            }
+            Term::Return(value) => {
+                if self.mode == KernelMode::Explicit && !self.leaf {
+                    bail!("non-explicit terminator Return in task `{}`", self.func.name);
+                }
+                let val = match value {
+                    Some(e) => Some(self.emit_expr(e)?),
+                    None => None,
+                };
+                self.push(KOp::Return { value: val });
+            }
+            Term::Halt => {
+                if self.mode == KernelMode::Implicit {
+                    bail!("Halt terminator in implicit IR (`{}`)", self.func.name);
+                }
+                if self.leaf {
+                    bail!("Halt terminator in leaf `{}`", self.func.name);
+                }
+                self.push(KOp::Halt);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::kernel::{run_kernel, KStack, Machine};
+    use crate::interp::Memory;
+    use crate::ir::cfg::GlobalId;
+    use crate::lower::{compile, CompileOptions};
+    use crate::workloads::{bfs, fib, nqueens, qsort, relax};
+
+    /// Minimal machine for implicit kernels: real memory, no tasks.
+    struct SerialMachine {
+        mem: Memory,
+    }
+
+    impl Machine for SerialMachine {
+        fn load(&mut self, arr: GlobalId, index: i64) -> Result<Value> {
+            self.mem.load(arr, index)
+        }
+        fn store(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()> {
+            self.mem.store(arr, index, value)
+        }
+        fn atomic_add(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()> {
+            self.mem.atomic_add(arr, index, value)
+        }
+    }
+
+    fn run_implicit(src: &str, entry: &str, args: &[Value]) -> (Value, SerialMachine) {
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let prog = compile_module(&r.implicit, KernelMode::Implicit).unwrap();
+        let fid = prog.func_by_name(entry).unwrap();
+        let mut m = SerialMachine { mem: Memory::new(&r.implicit) };
+        let mut stack = KStack::new();
+        let v = run_kernel(&prog, fid, args, &mut stack, &mut m, 100_000_000).unwrap();
+        (v, m)
+    }
+
+    #[test]
+    fn fib_runs_on_implicit_kernels() {
+        for (n, expect) in [(0, 0), (1, 1), (10, 55), (15, 610)] {
+            let (v, _) = run_implicit(fib::FIB_SRC, "fib", &[Value::I64(n)]);
+            assert_eq!(v, Value::I64(expect), "fib({n})");
+        }
+    }
+
+    #[test]
+    fn loops_memory_and_leaf_calls() {
+        let src = "global int a[8];
+            int put(int i, int v) { a[i] = v; return v; }
+            int go(int n) {
+                int acc = 0;
+                for (int i = 0; i < n; i = i + 1) {
+                    int w = put(i, i * 3);
+                    acc = acc + w;
+                }
+                return acc;
+            }";
+        let (v, m) = run_implicit(src, "go", &[Value::I64(8)]);
+        assert_eq!(v, Value::I64(3 * (0 + 1 + 2 + 3 + 4 + 5 + 6 + 7)));
+        let g = GlobalId::new(0);
+        assert_eq!(m.mem.dump_i64(g), vec![0, 3, 6, 9, 12, 15, 18, 21]);
+    }
+
+    #[test]
+    fn float_promotion_matches_tree_semantics() {
+        let src = "float scale(float x, int n) {
+            float acc = x;
+            for (int i = 0; i < n; i = i + 1) { acc = acc * 1.5; }
+            return acc;
+        }";
+        let (v, _) = run_implicit(src, "scale", &[Value::F32(2.0), Value::I64(3)]);
+        assert_eq!(v, Value::F32(6.75));
+    }
+
+    #[test]
+    fn infinite_loop_hits_fuel() {
+        let src = "int f(int n) { while (true) { n = n + 1; } return n; }";
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let prog = compile_module(&r.implicit, KernelMode::Implicit).unwrap();
+        let fid = prog.func_by_name("f").unwrap();
+        let mut m = SerialMachine { mem: Memory::new(&r.implicit) };
+        let mut stack = KStack::new();
+        let err =
+            run_kernel(&prog, fid, &[Value::I64(0)], &mut stack, &mut m, 10_000).unwrap_err();
+        assert!(err.to_string().contains("step limit"), "{err}");
+    }
+
+    #[test]
+    fn constants_fold_into_immediates() {
+        let src = "int f(int n) { return n + 2 * 3; }";
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let prog = compile_module(&r.implicit, KernelMode::Implicit).unwrap();
+        let disasm = prog.disasm();
+        assert!(disasm.contains("imm(6)"), "folded constant missing:\n{disasm}");
+        // And the folded program still computes correctly.
+        let (v, _) = run_implicit(src, "f", &[Value::I64(4)]);
+        assert_eq!(v, Value::I64(10));
+    }
+
+    #[test]
+    fn all_corpus_workloads_compile_in_both_modes() {
+        let programs: &[(&str, CompileOptions)] = &[
+            (fib::FIB_SRC, CompileOptions::no_dae()),
+            (bfs::BFS_SRC, CompileOptions::no_dae()),
+            (bfs::BFS_DAE_SRC, CompileOptions::standard()),
+            (nqueens::NQUEENS_SRC, CompileOptions::no_dae()),
+            (qsort::QSORT_SRC, CompileOptions::no_dae()),
+            (relax::RELAX_SRC, CompileOptions::standard()),
+        ];
+        for (i, (src, opts)) in programs.iter().enumerate() {
+            let r = compile("t", src, opts).unwrap();
+            let imp = compile_module(&r.implicit, KernelMode::Implicit).unwrap();
+            assert!(imp.validate().is_empty(), "program {i} implicit");
+            assert!(imp.instr_count() > 0);
+            let exp = compile_module(&r.explicit, KernelMode::Explicit).unwrap();
+            assert!(exp.validate().is_empty(), "program {i} explicit");
+            // Explicit kernels never contain the serial-elision spawn.
+            for k in &exp.funcs {
+                for instr in &k.code {
+                    assert!(
+                        !matches!(instr.op, KOp::SpawnSeq { .. }),
+                        "SpawnSeq leaked into explicit kernel `{}`",
+                        k.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn costs_mirror_hls_op_cycles() {
+        use crate::hls::{op_cycles, ScheduleModel};
+        // Explicit fib: for every costed instruction whose source op is
+        // unambiguous, total cost cycles equal the HLS figure. Spot-check
+        // the aggregate per kernel instead of per-op bookkeeping.
+        let r = compile("t", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+        let prog = compile_module(&r.explicit, KernelMode::Explicit).unwrap();
+        let model = ScheduleModel::default();
+        for (fid, f) in r.explicit.funcs.iter() {
+            let Some(cfg) = f.body.as_ref() else { continue };
+            if f.kind == FuncKind::Xla {
+                continue;
+            }
+            // HLS total over ops (terminator branch costs excluded — the
+            // kernel charges those per *executed* terminator, as the
+            // simulator always did).
+            let mut hls_total = 0u32;
+            for block in cfg.blocks.values() {
+                for op in &block.ops {
+                    if matches!(op, Op::Call { .. }) {
+                        continue; // never charged at the call site
+                    }
+                    hls_total += op_cycles(&model, op);
+                }
+            }
+            let k = prog.kernel(fid);
+            let mut kernel_total = 0u32;
+            for instr in &k.code {
+                if instr.cost != NO_COST
+                    && !matches!(instr.op, KOp::Jump { .. } | KOp::Branch { .. })
+                {
+                    kernel_total += k.costs[instr.cost as usize].cycles(&model);
+                }
+            }
+            assert_eq!(kernel_total, hls_total, "kernel `{}`", k.name);
+        }
+    }
+}

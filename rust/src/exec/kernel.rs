@@ -1,0 +1,1049 @@
+//! Register-based linear bytecode and the shared interpreter loop.
+//!
+//! A [`KernelProgram`] is the compiled form of one IR module: per function
+//! a flat instruction array over a frame of value slots (parameters,
+//! locals, then expression temporaries). The interpreter
+//! ([`run_kernel`]) is generic over a [`Machine`] that realizes side
+//! effects — memory, closures, spawns, sends — and meters whatever the
+//! engine cares about (the simulator charges [`KCost`] cycles through
+//! [`Machine::charge`]; the software engines leave it a no-op that
+//! monomorphizes away).
+//!
+//! Semantics are bit-for-bit those of the old tree-walking executors:
+//! the arithmetic helpers ([`bin_value`] & co.) replicate
+//! `ir::expr::eval`'s dynamic float-promotion rules, writes to named
+//! variables coerce to the variable's declared type exactly where the
+//! tree walkers did, and the compiler ([`super::compile`]) preserves
+//! left-to-right evaluation order.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::frontend::ast::{BinOp, Type, UnOp};
+use crate::hls::ScheduleModel;
+use crate::ir::cfg::{FuncId, FuncKind, GlobalId};
+use crate::ir::expr::{Builtin, Value};
+
+/// Sentinel for "this instruction carries no cycle-cost metadata".
+pub const NO_COST: u32 = u32::MAX;
+
+/// Which IR a program was compiled from. Implicit kernels keep
+/// `cilk_spawn` as a sequential call ([`KOp::SpawnSeq`], the serial
+/// elision the oracle runs); explicit kernels carry the Cilk-1 ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    Implicit,
+    Explicit,
+}
+
+/// An instruction operand: a frame slot or a folded immediate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Operand {
+    Slot(u32),
+    Imm(Value),
+}
+
+/// Where a spawned child delivers its result (pre-resolved
+/// [`crate::ir::cfg::RetTarget`]; `clos` fields are frame slots holding
+/// closure handles).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KRet {
+    Slot { clos: u32, field: u32 },
+    Counter { clos: u32 },
+    Forward,
+}
+
+/// A resolved continuation target handed to [`Machine::spawn_child`]:
+/// closure-handle *values* read out of the frame.
+#[derive(Clone, Copy, Debug)]
+pub enum KontRef {
+    Slot { clos: Value, field: u32 },
+    Counter { clos: Value },
+    Forward,
+}
+
+/// One bytecode instruction: the operation plus an optional index into
+/// the kernel's [`KCost`] table (attached to the anchor instruction of
+/// each source IR op; [`NO_COST`] on expression-temporary instructions,
+/// whose cycles are folded into their anchor's cost — exactly how the
+/// HLS model charged whole ops).
+#[derive(Clone, Debug)]
+pub struct KInstr {
+    pub op: KOp,
+    pub cost: u32,
+}
+
+#[derive(Clone, Debug)]
+pub enum KOp {
+    /// `dst = src` (with optional coercion to a declared variable type).
+    Mov { dst: u32, src: Operand, ty: Option<Type> },
+    Bin { op: BinOp, dst: u32, lhs: Operand, rhs: Operand, ty: Option<Type> },
+    Un { op: UnOp, dst: u32, src: Operand, ty: Option<Type> },
+    /// Two-argument builtin (min/max) — arity fixed at compile time.
+    Builtin2 { b: Builtin, dst: u32, lhs: Operand, rhs: Operand, ty: Option<Type> },
+    /// One-argument builtin (abs).
+    Builtin1 { b: Builtin, dst: u32, src: Operand, ty: Option<Type> },
+    IntToFloat { dst: u32, src: Operand, ty: Option<Type> },
+    Load { dst: u32, arr: GlobalId, index: Operand },
+    Store { arr: GlobalId, index: Operand, value: Operand },
+    AtomicAdd { arr: GlobalId, index: Operand, value: Operand },
+    /// Sequential call; args staged in `nargs` consecutive frame slots
+    /// starting at `args_at`. `dst` carries the destination slot and its
+    /// coercion type.
+    Call { dst: Option<(u32, Type)>, callee: FuncId, args_at: u32, nargs: u32 },
+    /// `cilk_spawn` under serial elision (implicit kernels only).
+    SpawnSeq { dst: Option<(u32, Type)>, callee: FuncId, args_at: u32, nargs: u32 },
+    MakeClosure { dst: u32, task: FuncId },
+    ClosureStore { clos: u32, field: u32, value: Operand },
+    SpawnChild { callee: FuncId, args_at: u32, nargs: u32, ret: KRet },
+    CloseSpawns { clos: u32 },
+    SendArgument { value: Option<Operand> },
+    Jump { target: u32 },
+    Branch { cond: Operand, then_: u32, else_: u32 },
+    Return { value: Option<Operand> },
+    Halt,
+}
+
+/// Cycle-cost metadata for one source IR op, resolved against a
+/// [`ScheduleModel`] at simulation time. Mirrors `hls::op_cycles`: a
+/// base latency plus one independently-rounded datapath figure per
+/// operand expression (operator counts measured on the *original* tree,
+/// so constant folding never changes simulated timing).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KCost {
+    pub base: KBase,
+    /// Operator counts of the op's operand expressions, each charged
+    /// `ceil(n / ops_per_cycle)` like `hls::expr_cycles`.
+    pub exprs: Vec<u32>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KBase {
+    Zero,
+    LoadIssue,
+    StoreIssue,
+    StreamWrite,
+    SpawnNextRtt,
+    Branch,
+}
+
+impl KCost {
+    pub fn cycles(&self, model: &ScheduleModel) -> u32 {
+        let base = match self.base {
+            KBase::Zero => 0,
+            KBase::LoadIssue => model.load_issue,
+            KBase::StoreIssue => model.store_issue,
+            KBase::StreamWrite => model.stream_write,
+            KBase::SpawnNextRtt => model.spawn_next_rtt,
+            KBase::Branch => model.branch,
+        };
+        base + self
+            .exprs
+            .iter()
+            .map(|&n| n.div_ceil(model.ops_per_cycle))
+            .sum::<u32>()
+    }
+}
+
+/// One function's compiled kernel.
+#[derive(Clone, Debug)]
+pub struct FuncKernel {
+    pub name: String,
+    pub kind: FuncKind,
+    /// Task role name (`entry`/`continuation`/`join`/`access`/`xla`) or
+    /// `"leaf"` for spawned leaf functions — the per-role stats key.
+    pub role: &'static str,
+    pub params: usize,
+    /// Parameter types, shared (`Arc`) into every closure created for
+    /// this task so closure allocation never clones a type vector.
+    pub param_tys: Arc<[Type]>,
+    pub ret: Type,
+    /// Zero-initialized frame prototype: one `zero_of(ty)` per declared
+    /// variable, then `Unit` for expression temporaries.
+    pub frame: Vec<Value>,
+    /// Empty for `extern xla` declarations (no body).
+    pub code: Vec<KInstr>,
+    pub costs: Vec<KCost>,
+}
+
+/// A compiled module: kernels indexed by [`FuncId`].
+#[derive(Clone, Debug)]
+pub struct KernelProgram {
+    pub mode: KernelMode,
+    pub funcs: Vec<FuncKernel>,
+}
+
+impl KernelProgram {
+    #[inline]
+    pub fn kernel(&self, fid: FuncId) -> &FuncKernel {
+        &self.funcs[fid.index()]
+    }
+
+    pub fn func_by_name(&self, name: &str) -> Option<FuncId> {
+        self.funcs
+            .iter()
+            .position(|k| k.name == name)
+            .map(FuncId::new)
+    }
+
+    pub fn instr_count(&self) -> usize {
+        self.funcs.iter().map(|k| k.code.len()).sum()
+    }
+
+    /// Structural validation — the post-pass lint of the `kernel_compile`
+    /// pass. Returns the list of violations (empty = OK).
+    pub fn validate(&self) -> Vec<String> {
+        let mut errors = Vec::new();
+        for (i, k) in self.funcs.iter().enumerate() {
+            let ctx = |msg: String| format!("kernel `{}` (#{i}): {msg}", k.name);
+            if k.kind == FuncKind::Xla {
+                if !k.code.is_empty() {
+                    errors.push(ctx("xla kernel must have no code".into()));
+                }
+                continue;
+            }
+            if k.code.is_empty() {
+                errors.push(ctx("empty code".into()));
+                continue;
+            }
+            if !matches!(
+                k.code[k.code.len() - 1].op,
+                KOp::Jump { .. } | KOp::Branch { .. } | KOp::Return { .. } | KOp::Halt
+            ) {
+                errors.push(ctx("code does not end with a block terminator".into()));
+            }
+            if k.params > k.frame.len() {
+                errors.push(ctx("more params than frame slots".into()));
+            }
+            let nslots = k.frame.len() as u32;
+            let ncode = k.code.len() as u32;
+            let nfuncs = self.funcs.len();
+            let slot_ok = |s: u32| s < nslots;
+            let opnd_ok = |o: &Operand| match o {
+                Operand::Slot(s) => *s < nslots,
+                Operand::Imm(_) => true,
+            };
+            for (pc, instr) in k.code.iter().enumerate() {
+                if instr.cost != NO_COST && instr.cost as usize >= k.costs.len() {
+                    errors.push(ctx(format!("pc {pc}: cost index out of range")));
+                }
+                let mut bad = false;
+                match &instr.op {
+                    KOp::Mov { dst, src, .. }
+                    | KOp::Un { dst, src, .. }
+                    | KOp::Builtin1 { dst, src, .. }
+                    | KOp::IntToFloat { dst, src, .. } => {
+                        bad = !slot_ok(*dst) || !opnd_ok(src);
+                    }
+                    KOp::Bin { dst, lhs, rhs, .. } | KOp::Builtin2 { dst, lhs, rhs, .. } => {
+                        bad = !slot_ok(*dst) || !opnd_ok(lhs) || !opnd_ok(rhs);
+                    }
+                    KOp::Load { dst, index, .. } => bad = !slot_ok(*dst) || !opnd_ok(index),
+                    KOp::Store { index, value, .. } | KOp::AtomicAdd { index, value, .. } => {
+                        bad = !opnd_ok(index) || !opnd_ok(value);
+                    }
+                    KOp::Call { dst, callee, args_at, nargs }
+                    | KOp::SpawnSeq { dst, callee, args_at, nargs } => {
+                        bad = args_at + nargs > nslots
+                            || callee.index() >= nfuncs
+                            || dst.map(|(d, _)| !slot_ok(d)).unwrap_or(false);
+                        if matches!(instr.op, KOp::SpawnSeq { .. })
+                            && self.mode == KernelMode::Explicit
+                        {
+                            errors.push(ctx(format!("pc {pc}: SpawnSeq in explicit kernel")));
+                        }
+                    }
+                    KOp::MakeClosure { dst, task } => {
+                        bad = !slot_ok(*dst) || task.index() >= nfuncs;
+                    }
+                    KOp::ClosureStore { clos, value, .. } => {
+                        bad = !slot_ok(*clos) || !opnd_ok(value);
+                    }
+                    KOp::SpawnChild { callee, args_at, nargs, ret } => {
+                        bad = args_at + nargs > nslots || callee.index() >= nfuncs;
+                        match ret {
+                            KRet::Slot { clos, .. } | KRet::Counter { clos } => {
+                                bad = bad || !slot_ok(*clos);
+                            }
+                            KRet::Forward => {}
+                        }
+                    }
+                    KOp::CloseSpawns { clos } => bad = !slot_ok(*clos),
+                    KOp::SendArgument { value } => {
+                        bad = value.as_ref().map(|v| !opnd_ok(v)).unwrap_or(false);
+                    }
+                    KOp::Jump { target } => bad = *target >= ncode,
+                    KOp::Branch { cond, then_, else_ } => {
+                        bad = !opnd_ok(cond) || *then_ >= ncode || *else_ >= ncode;
+                    }
+                    KOp::Return { value } => {
+                        bad = value.as_ref().map(|v| !opnd_ok(v)).unwrap_or(false);
+                    }
+                    KOp::Halt => {
+                        if self.mode == KernelMode::Implicit {
+                            errors.push(ctx(format!("pc {pc}: Halt in implicit kernel")));
+                        }
+                    }
+                }
+                if self.mode == KernelMode::Implicit
+                    && matches!(
+                        instr.op,
+                        KOp::MakeClosure { .. }
+                            | KOp::ClosureStore { .. }
+                            | KOp::SpawnChild { .. }
+                            | KOp::CloseSpawns { .. }
+                            | KOp::SendArgument { .. }
+                    )
+                {
+                    errors.push(ctx(format!("pc {pc}: explicit-only op in implicit kernel")));
+                }
+                if bad {
+                    errors.push(ctx(format!("pc {pc}: operand out of range: {:?}", instr.op)));
+                }
+            }
+        }
+        errors
+    }
+
+    /// Human-readable listing (stable — used by the disassembly golden).
+    pub fn disasm(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mode = match self.mode {
+            KernelMode::Implicit => "implicit",
+            KernelMode::Explicit => "explicit",
+        };
+        let _ = writeln!(out, "; kernel program ({mode} IR, {} kernels)", self.funcs.len());
+        for (i, k) in self.funcs.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "\nkernel `{}` #{i} ({:?}, role={}, params={}, frame={}, ret={:?}):",
+                k.name,
+                k.kind,
+                k.role,
+                k.params,
+                k.frame.len(),
+                k.ret
+            );
+            if k.code.is_empty() {
+                let _ = writeln!(out, "  <extern>");
+                continue;
+            }
+            for (pc, instr) in k.code.iter().enumerate() {
+                let mut line = format!("  {pc:>3}: {}", fmt_op(&instr.op, self));
+                if instr.cost != NO_COST {
+                    let c = &k.costs[instr.cost as usize];
+                    let _ = write!(line, "    ; cost {:?}{:?}", c.base, c.exprs);
+                }
+                let _ = writeln!(out, "{line}");
+            }
+        }
+        out
+    }
+}
+
+fn fmt_operand(o: &Operand) -> String {
+    match o {
+        Operand::Slot(s) => format!("r{s}"),
+        Operand::Imm(v) => format!("imm({v})"),
+    }
+}
+
+fn fmt_dst(dst: u32, ty: &Option<Type>) -> String {
+    match ty {
+        Some(t) => format!("r{dst}:{t:?}"),
+        None => format!("r{dst}"),
+    }
+}
+
+fn fmt_op(op: &KOp, prog: &KernelProgram) -> String {
+    let fname = |f: &FuncId| prog.funcs[f.index()].name.clone();
+    match op {
+        KOp::Mov { dst, src, ty } => format!("{} = {}", fmt_dst(*dst, ty), fmt_operand(src)),
+        KOp::Bin { op, dst, lhs, rhs, ty } => format!(
+            "{} = {:?} {}, {}",
+            fmt_dst(*dst, ty),
+            op,
+            fmt_operand(lhs),
+            fmt_operand(rhs)
+        ),
+        KOp::Un { op, dst, src, ty } => {
+            format!("{} = {:?} {}", fmt_dst(*dst, ty), op, fmt_operand(src))
+        }
+        KOp::Builtin2 { b, dst, lhs, rhs, ty } => format!(
+            "{} = {} {}, {}",
+            fmt_dst(*dst, ty),
+            b.name(),
+            fmt_operand(lhs),
+            fmt_operand(rhs)
+        ),
+        KOp::Builtin1 { b, dst, src, ty } => {
+            format!("{} = {} {}", fmt_dst(*dst, ty), b.name(), fmt_operand(src))
+        }
+        KOp::IntToFloat { dst, src, ty } => {
+            format!("{} = i2f {}", fmt_dst(*dst, ty), fmt_operand(src))
+        }
+        KOp::Load { dst, arr, index } => {
+            format!("r{dst} = load g{}[{}]", arr.index(), fmt_operand(index))
+        }
+        KOp::Store { arr, index, value } => format!(
+            "store g{}[{}] = {}",
+            arr.index(),
+            fmt_operand(index),
+            fmt_operand(value)
+        ),
+        KOp::AtomicAdd { arr, index, value } => format!(
+            "atomic_add g{}[{}], {}",
+            arr.index(),
+            fmt_operand(index),
+            fmt_operand(value)
+        ),
+        KOp::Call { dst, callee, args_at, nargs } => format!(
+            "{}call `{}` args r{}..r{}",
+            dst.map(|(d, t)| format!("r{d}:{t:?} = ")).unwrap_or_default(),
+            fname(callee),
+            args_at,
+            args_at + nargs
+        ),
+        KOp::SpawnSeq { dst, callee, args_at, nargs } => format!(
+            "{}spawn_seq `{}` args r{}..r{}",
+            dst.map(|(d, t)| format!("r{d}:{t:?} = ")).unwrap_or_default(),
+            fname(callee),
+            args_at,
+            args_at + nargs
+        ),
+        KOp::MakeClosure { dst, task } => format!("r{dst} = spawn_next `{}`", fname(task)),
+        KOp::ClosureStore { clos, field, value } => {
+            format!("closure r{clos}[{field}] = {}", fmt_operand(value))
+        }
+        KOp::SpawnChild { callee, args_at, nargs, ret } => format!(
+            "spawn `{}` args r{}..r{} ret {:?}",
+            fname(callee),
+            args_at,
+            args_at + nargs,
+            ret
+        ),
+        KOp::CloseSpawns { clos } => format!("close_spawns r{clos}"),
+        KOp::SendArgument { value } => format!(
+            "send_argument {}",
+            value.as_ref().map(|v| fmt_operand(v)).unwrap_or_else(|| "-".into())
+        ),
+        KOp::Jump { target } => format!("jump @{target}"),
+        KOp::Branch { cond, then_, else_ } => {
+            format!("branch {} ? @{then_} : @{else_}", fmt_operand(cond))
+        }
+        KOp::Return { value } => format!(
+            "return {}",
+            value.as_ref().map(|v| fmt_operand(v)).unwrap_or_else(|| "-".into())
+        ),
+        KOp::Halt => "halt".to_string(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Argument lists
+
+/// Number of argument values stored inline (no heap) in an [`ArgList`].
+pub const ARG_INLINE: usize = 6;
+
+/// A small-size-optimized argument vector: task instances with up to
+/// [`ARG_INLINE`] arguments (every corpus workload) carry them inline, so
+/// spawning a task allocates nothing.
+#[derive(Clone, Debug)]
+pub enum ArgList {
+    Inline { len: u8, buf: [Value; ARG_INLINE] },
+    Heap(Vec<Value>),
+}
+
+impl ArgList {
+    pub fn new() -> ArgList {
+        ArgList::Inline { len: 0, buf: [Value::Unit; ARG_INLINE] }
+    }
+
+    pub fn from_slice(vals: &[Value]) -> ArgList {
+        if vals.len() <= ARG_INLINE {
+            let mut buf = [Value::Unit; ARG_INLINE];
+            buf[..vals.len()].copy_from_slice(vals);
+            ArgList::Inline { len: vals.len() as u8, buf }
+        } else {
+            ArgList::Heap(vals.to_vec())
+        }
+    }
+
+    /// Build from an element generator (used to snapshot closure slots
+    /// without an intermediate `Vec`).
+    pub fn from_fn(len: usize, mut f: impl FnMut(usize) -> Value) -> ArgList {
+        if len <= ARG_INLINE {
+            let mut buf = [Value::Unit; ARG_INLINE];
+            for (i, slot) in buf.iter_mut().enumerate().take(len) {
+                *slot = f(i);
+            }
+            ArgList::Inline { len: len as u8, buf }
+        } else {
+            ArgList::Heap((0..len).map(f).collect())
+        }
+    }
+
+    pub fn as_slice(&self) -> &[Value] {
+        match self {
+            ArgList::Inline { len, buf } => &buf[..*len as usize],
+            ArgList::Heap(v) => v,
+        }
+    }
+
+    pub fn into_vec(self) -> Vec<Value> {
+        match self {
+            ArgList::Inline { len, buf } => buf[..len as usize].to_vec(),
+            ArgList::Heap(v) => v,
+        }
+    }
+}
+
+impl Default for ArgList {
+    fn default() -> ArgList {
+        ArgList::new()
+    }
+}
+
+impl std::ops::Deref for ArgList {
+    type Target = [Value];
+    fn deref(&self) -> &[Value] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<Value>> for ArgList {
+    fn from(v: Vec<Value>) -> ArgList {
+        if v.len() <= ARG_INLINE {
+            ArgList::from_slice(&v)
+        } else {
+            ArgList::Heap(v)
+        }
+    }
+}
+
+impl From<&[Value]> for ArgList {
+    fn from(v: &[Value]) -> ArgList {
+        ArgList::from_slice(v)
+    }
+}
+
+impl PartialEq for ArgList {
+    fn eq(&self, other: &ArgList) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Arithmetic (bit-for-bit `ir::expr::eval` semantics)
+
+#[inline]
+pub fn un_value(op: UnOp, v: Value) -> Value {
+    match op {
+        UnOp::Neg => match v {
+            Value::F32(f) => Value::F32(-f),
+            other => Value::I64(-other.as_i64()),
+        },
+        UnOp::Not => Value::Bool(!v.as_bool()),
+    }
+}
+
+#[inline]
+pub fn builtin1_value(b: Builtin, v: Value) -> Value {
+    let float = matches!(v, Value::F32(_));
+    match (b, float) {
+        (Builtin::Abs, false) => Value::I64(v.as_i64().abs()),
+        (Builtin::Abs, true) => Value::F32(v.as_f32().abs()),
+        // min/max never compile to Builtin1 (arity 2 checked by sema and
+        // the kernel compiler); keep eval-compatible fallbacks anyway.
+        (Builtin::Min, false) | (Builtin::Max, false) => Value::I64(v.as_i64()),
+        (Builtin::Min, true) | (Builtin::Max, true) => Value::F32(v.as_f32()),
+    }
+}
+
+#[inline]
+pub fn builtin2_value(b: Builtin, va: Value, vb: Value) -> Value {
+    let float = matches!(va, Value::F32(_)) || matches!(vb, Value::F32(_));
+    match (b, float) {
+        (Builtin::Min, false) => Value::I64(va.as_i64().min(vb.as_i64())),
+        (Builtin::Max, false) => Value::I64(va.as_i64().max(vb.as_i64())),
+        (Builtin::Abs, false) => Value::I64(va.as_i64().abs()),
+        (Builtin::Min, true) => Value::F32(va.as_f32().min(vb.as_f32())),
+        (Builtin::Max, true) => Value::F32(va.as_f32().max(vb.as_f32())),
+        (Builtin::Abs, true) => Value::F32(va.as_f32().abs()),
+    }
+}
+
+#[inline]
+pub fn bin_value(op: BinOp, va: Value, vb: Value) -> Value {
+    let float = matches!(va, Value::F32(_)) || matches!(vb, Value::F32(_));
+    use BinOp::*;
+    match op {
+        Add | Sub | Mul | Div if float => {
+            let (x, y) = (va.as_f32(), vb.as_f32());
+            Value::F32(match op {
+                Add => x + y,
+                Sub => x - y,
+                Mul => x * y,
+                Div => x / y,
+                _ => unreachable!(),
+            })
+        }
+        Add => Value::I64(va.as_i64().wrapping_add(vb.as_i64())),
+        Sub => Value::I64(va.as_i64().wrapping_sub(vb.as_i64())),
+        Mul => Value::I64(va.as_i64().wrapping_mul(vb.as_i64())),
+        Div => {
+            let d = vb.as_i64();
+            Value::I64(if d == 0 { 0 } else { va.as_i64().wrapping_div(d) })
+        }
+        Rem => {
+            let d = vb.as_i64();
+            Value::I64(if d == 0 { 0 } else { va.as_i64().wrapping_rem(d) })
+        }
+        Shl => Value::I64(va.as_i64().wrapping_shl(vb.as_i64() as u32 & 63)),
+        Shr => Value::I64(va.as_i64().wrapping_shr(vb.as_i64() as u32 & 63)),
+        BitAnd => Value::I64(va.as_i64() & vb.as_i64()),
+        BitOr => Value::I64(va.as_i64() | vb.as_i64()),
+        BitXor => Value::I64(va.as_i64() ^ vb.as_i64()),
+        And => Value::Bool(va.as_bool() && vb.as_bool()),
+        Or => Value::Bool(va.as_bool() || vb.as_bool()),
+        Lt | Le | Gt | Ge | Eq | Ne => {
+            let r = if float {
+                let (x, y) = (va.as_f32(), vb.as_f32());
+                match op {
+                    Lt => x < y,
+                    Le => x <= y,
+                    Gt => x > y,
+                    Ge => x >= y,
+                    Eq => x == y,
+                    Ne => x != y,
+                    _ => unreachable!(),
+                }
+            } else {
+                let (x, y) = (va.as_i64(), vb.as_i64());
+                match op {
+                    Lt => x < y,
+                    Le => x <= y,
+                    Gt => x > y,
+                    Ge => x >= y,
+                    Eq => x == y,
+                    Ne => x != y,
+                    _ => unreachable!(),
+                }
+            };
+            Value::Bool(r)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Machine trait + interpreter
+
+/// Engine-specific side of kernel execution. The interpreter handles all
+/// pure computation and control flow; a machine realizes memory, task
+/// and closure effects, and meters what its engine cares about. Methods
+/// an engine's kernels can never reach keep the bailing defaults.
+pub trait Machine {
+    /// Cycle metering (simulator only); default no-op.
+    #[inline]
+    fn charge(&mut self, _cost: &KCost) {}
+
+    /// Invoked at every frame entry (top-level and nested calls) with
+    /// the nesting depth (0 = top). The oracle uses it for call counting
+    /// and recursion limiting.
+    #[inline]
+    fn on_dispatch(&mut self, _fid: FuncId, _depth: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// Invoked before each `SpawnSeq` dispatch (oracle spawn counter).
+    #[inline]
+    fn on_spawn_seq(&mut self) {}
+
+    fn load(&mut self, arr: GlobalId, index: i64) -> Result<Value>;
+    fn store(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()>;
+    fn atomic_add(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()>;
+
+    /// Sequential dispatch of an `extern xla` callee.
+    fn xla_call(&mut self, _fid: FuncId, _args: &[Value]) -> Result<Value> {
+        Err(anyhow!("xla call not supported by this machine"))
+    }
+
+    fn make_closure(&mut self, _task: FuncId) -> Result<Value> {
+        Err(anyhow!("explicit-IR op MakeClosure reached a non-explicit machine"))
+    }
+
+    fn closure_store(&mut self, _clos: Value, _field: u32, _value: Value) -> Result<()> {
+        Err(anyhow!("explicit-IR op ClosureStore reached a non-explicit machine"))
+    }
+
+    fn spawn_child(&mut self, _callee: FuncId, _args: &[Value], _ret: KontRef) -> Result<()> {
+        Err(anyhow!("explicit-IR op SpawnChild reached a non-explicit machine"))
+    }
+
+    fn close_spawns(&mut self, _clos: Value) -> Result<()> {
+        Err(anyhow!("explicit-IR op CloseSpawns reached a non-explicit machine"))
+    }
+
+    fn send_argument(&mut self, _value: Value) -> Result<()> {
+        Err(anyhow!("explicit-IR op SendArgument reached a non-explicit machine"))
+    }
+}
+
+/// Get-or-compile memoization over a shared kernel-program cell — the
+/// one caching idiom used by every holder of a cached `KernelProgram`
+/// (compile sessions, emu programs).
+pub fn memo_kernels(
+    cell: &std::sync::OnceLock<Arc<KernelProgram>>,
+    build: impl FnOnce() -> Result<KernelProgram>,
+) -> Result<Arc<KernelProgram>> {
+    if let Some(k) = cell.get() {
+        return Ok(Arc::clone(k));
+    }
+    let k = Arc::new(build()?);
+    Ok(Arc::clone(cell.get_or_init(|| k)))
+}
+
+/// Reusable execution stack: frames are carved out of one `Vec`, so task
+/// dispatch allocates nothing after warmup.
+#[derive(Debug)]
+pub struct KStack {
+    slots: Vec<Value>,
+    depth: usize,
+    /// Per-frame-activation step budget (see [`run_kernel`]).
+    limit: u64,
+}
+
+impl Default for KStack {
+    fn default() -> KStack {
+        KStack::new()
+    }
+}
+
+impl KStack {
+    pub fn new() -> KStack {
+        KStack { slots: Vec::with_capacity(256), depth: 0, limit: 0 }
+    }
+}
+
+/// Hard recursion backstop (the oracle applies its configurable limit
+/// first via [`Machine::on_dispatch`]).
+const MAX_DEPTH: usize = 1_000_000;
+
+#[inline]
+fn rd(slots: &[Value], base: usize, op: Operand) -> Value {
+    match op {
+        Operand::Slot(s) => slots[base + s as usize],
+        Operand::Imm(v) => v,
+    }
+}
+
+/// Run one task/function kernel to completion. `step_limit` bounds the
+/// branches/jumps executed *per frame activation* (≈ basic-block
+/// executions, exactly the unit and scope the tree walkers limited —
+/// each nested sequential call gets its own budget, so large terminating
+/// programs never trip it). Returns the `Return` value (or `Unit` after
+/// `Halt`).
+pub fn run_kernel<M: Machine>(
+    prog: &KernelProgram,
+    fid: FuncId,
+    args: &[Value],
+    stack: &mut KStack,
+    machine: &mut M,
+    step_limit: u64,
+) -> Result<Value> {
+    stack.slots.clear();
+    stack.limit = step_limit;
+    stack.depth = 0;
+    let kernel = prog.kernel(fid);
+    if kernel.kind == FuncKind::Xla {
+        bail!("xla task `{}` has no kernel body (dispatch it to the XLA handler)", kernel.name);
+    }
+    if args.len() != kernel.params {
+        bail!(
+            "task `{}` expects {} args, got {} (closure layout bug)",
+            kernel.name,
+            kernel.params,
+            args.len()
+        );
+    }
+    stack.slots.extend_from_slice(&kernel.frame);
+    for (i, a) in args.iter().enumerate() {
+        stack.slots[i] = a.coerce(kernel.param_tys[i]);
+    }
+    exec_frame(prog, fid, 0, stack, machine)
+}
+
+/// Push a nested frame whose arguments live in the caller's frame at
+/// absolute slots `args_at_abs..args_at_abs+nargs`, run it, pop it.
+fn call_nested<M: Machine>(
+    prog: &KernelProgram,
+    callee: FuncId,
+    args_at_abs: usize,
+    nargs: usize,
+    stack: &mut KStack,
+    machine: &mut M,
+) -> Result<Value> {
+    let kernel = prog.kernel(callee);
+    if nargs != kernel.params {
+        bail!("`{}` expects {} args, got {}", kernel.name, kernel.params, nargs);
+    }
+    stack.depth += 1;
+    if stack.depth > MAX_DEPTH {
+        bail!("kernel recursion limit exceeded in `{}`", kernel.name);
+    }
+    let base = stack.slots.len();
+    stack.slots.extend_from_slice(&kernel.frame);
+    for i in 0..nargs {
+        let v = stack.slots[args_at_abs + i];
+        stack.slots[base + i] = v.coerce(kernel.param_tys[i]);
+    }
+    let r = exec_frame(prog, callee, base, stack, machine);
+    stack.slots.truncate(base);
+    stack.depth -= 1;
+    r
+}
+
+/// Sequential dispatch of a `Call` / serial-elision `SpawnSeq`: stage-slot
+/// arguments, xla-or-nested-kernel execution, optional coerced dst write.
+#[inline]
+fn seq_call<M: Machine>(
+    prog: &KernelProgram,
+    callee: FuncId,
+    base: usize,
+    args_at: u32,
+    nargs: u32,
+    dst: Option<(u32, Type)>,
+    stack: &mut KStack,
+    machine: &mut M,
+) -> Result<()> {
+    let a0 = base + args_at as usize;
+    let n = nargs as usize;
+    let v = if prog.kernel(callee).kind == FuncKind::Xla {
+        let args = &stack.slots[a0..a0 + n];
+        machine.xla_call(callee, args)?
+    } else {
+        call_nested(prog, callee, a0, n, stack, machine)?
+    };
+    if let Some((d, t)) = dst {
+        stack.slots[base + d as usize] = v.coerce(t);
+    }
+    Ok(())
+}
+
+fn exec_frame<M: Machine>(
+    prog: &KernelProgram,
+    fid: FuncId,
+    base: usize,
+    stack: &mut KStack,
+    machine: &mut M,
+) -> Result<Value> {
+    machine.on_dispatch(fid, stack.depth)?;
+    let kernel = prog.kernel(fid);
+    let code = &kernel.code;
+    let mut pc = 0usize;
+    // Per-activation step budget (branches/jumps), matching the old
+    // per-function-call limits of the tree-walking executors.
+    let mut steps: u64 = 0;
+    loop {
+        let instr = &code[pc];
+        pc += 1;
+        if instr.cost != NO_COST {
+            machine.charge(&kernel.costs[instr.cost as usize]);
+        }
+        match &instr.op {
+            KOp::Mov { dst, src, ty } => {
+                let mut v = rd(&stack.slots, base, *src);
+                if let Some(t) = ty {
+                    v = v.coerce(*t);
+                }
+                stack.slots[base + *dst as usize] = v;
+            }
+            KOp::Bin { op, dst, lhs, rhs, ty } => {
+                let va = rd(&stack.slots, base, *lhs);
+                let vb = rd(&stack.slots, base, *rhs);
+                let mut v = bin_value(*op, va, vb);
+                if let Some(t) = ty {
+                    v = v.coerce(*t);
+                }
+                stack.slots[base + *dst as usize] = v;
+            }
+            KOp::Un { op, dst, src, ty } => {
+                let mut v = un_value(*op, rd(&stack.slots, base, *src));
+                if let Some(t) = ty {
+                    v = v.coerce(*t);
+                }
+                stack.slots[base + *dst as usize] = v;
+            }
+            KOp::Builtin2 { b, dst, lhs, rhs, ty } => {
+                let va = rd(&stack.slots, base, *lhs);
+                let vb = rd(&stack.slots, base, *rhs);
+                let mut v = builtin2_value(*b, va, vb);
+                if let Some(t) = ty {
+                    v = v.coerce(*t);
+                }
+                stack.slots[base + *dst as usize] = v;
+            }
+            KOp::Builtin1 { b, dst, src, ty } => {
+                let mut v = builtin1_value(*b, rd(&stack.slots, base, *src));
+                if let Some(t) = ty {
+                    v = v.coerce(*t);
+                }
+                stack.slots[base + *dst as usize] = v;
+            }
+            KOp::IntToFloat { dst, src, ty } => {
+                let mut v = Value::F32(rd(&stack.slots, base, *src).as_f32());
+                if let Some(t) = ty {
+                    v = v.coerce(*t);
+                }
+                stack.slots[base + *dst as usize] = v;
+            }
+            KOp::Load { dst, arr, index } => {
+                let idx = rd(&stack.slots, base, *index).as_i64();
+                let v = machine.load(*arr, idx)?;
+                stack.slots[base + *dst as usize] = v;
+            }
+            KOp::Store { arr, index, value } => {
+                let idx = rd(&stack.slots, base, *index).as_i64();
+                let v = rd(&stack.slots, base, *value);
+                machine.store(*arr, idx, v)?;
+            }
+            KOp::AtomicAdd { arr, index, value } => {
+                let idx = rd(&stack.slots, base, *index).as_i64();
+                let v = rd(&stack.slots, base, *value);
+                machine.atomic_add(*arr, idx, v)?;
+            }
+            KOp::Call { dst, callee, args_at, nargs } => {
+                seq_call(prog, *callee, base, *args_at, *nargs, *dst, stack, machine)?;
+            }
+            KOp::SpawnSeq { dst, callee, args_at, nargs } => {
+                machine.on_spawn_seq();
+                seq_call(prog, *callee, base, *args_at, *nargs, *dst, stack, machine)?;
+            }
+            KOp::MakeClosure { dst, task } => {
+                let handle = machine.make_closure(*task)?;
+                stack.slots[base + *dst as usize] = handle;
+            }
+            KOp::ClosureStore { clos, field, value } => {
+                let h = stack.slots[base + *clos as usize];
+                let v = rd(&stack.slots, base, *value);
+                machine.closure_store(h, *field, v)?;
+            }
+            KOp::SpawnChild { callee, args_at, nargs, ret } => {
+                let kont = match ret {
+                    KRet::Slot { clos, field } => KontRef::Slot {
+                        clos: stack.slots[base + *clos as usize],
+                        field: *field,
+                    },
+                    KRet::Counter { clos } => {
+                        KontRef::Counter { clos: stack.slots[base + *clos as usize] }
+                    }
+                    KRet::Forward => KontRef::Forward,
+                };
+                let a0 = base + *args_at as usize;
+                let args = &stack.slots[a0..a0 + *nargs as usize];
+                machine.spawn_child(*callee, args, kont)?;
+            }
+            KOp::CloseSpawns { clos } => {
+                let h = stack.slots[base + *clos as usize];
+                machine.close_spawns(h)?;
+            }
+            KOp::SendArgument { value } => {
+                let v = match value {
+                    Some(op) => rd(&stack.slots, base, *op).coerce(kernel.ret),
+                    None => Value::Unit,
+                };
+                machine.send_argument(v)?;
+            }
+            KOp::Jump { target } => {
+                steps += 1;
+                if steps > stack.limit {
+                    bail!("`{}` exceeded step limit (infinite loop?)", kernel.name);
+                }
+                pc = *target as usize;
+            }
+            KOp::Branch { cond, then_, else_ } => {
+                steps += 1;
+                if steps > stack.limit {
+                    bail!("`{}` exceeded step limit (infinite loop?)", kernel.name);
+                }
+                let c = rd(&stack.slots, base, *cond).as_bool();
+                pc = if c { *then_ as usize } else { *else_ as usize };
+            }
+            KOp::Return { value } => {
+                return Ok(match value {
+                    Some(op) => rd(&stack.slots, base, *op).coerce(kernel.ret),
+                    None => Value::Unit,
+                });
+            }
+            KOp::Halt => return Ok(Value::Unit),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arglist_inline_and_heap() {
+        let short = ArgList::from_slice(&[Value::I64(1), Value::I64(2)]);
+        assert!(matches!(short, ArgList::Inline { .. }));
+        assert_eq!(&short[..], &[Value::I64(1), Value::I64(2)]);
+        assert_eq!(short.len(), 2);
+        let long: Vec<Value> = (0..10).map(Value::I64).collect();
+        let heap = ArgList::from_slice(&long);
+        assert!(matches!(heap, ArgList::Heap(_)));
+        assert_eq!(heap.as_slice(), &long[..]);
+        assert_eq!(heap.clone().into_vec(), long);
+        let built = ArgList::from_fn(3, |i| Value::I64(i as i64));
+        assert_eq!(&built[..], &[Value::I64(0), Value::I64(1), Value::I64(2)]);
+    }
+
+    #[test]
+    fn kcost_cycles_match_hls_model() {
+        let model = ScheduleModel::default();
+        // Store with a 1-op index and a 5-op value:
+        // store_issue + ceil(1/4) + ceil(5/4) = 3 + 1 + 2 = 6.
+        let c = KCost { base: KBase::StoreIssue, exprs: vec![1, 5] };
+        assert_eq!(c.cycles(&model), 6);
+        let b = KCost { base: KBase::Branch, exprs: vec![] };
+        assert_eq!(b.cycles(&model), model.branch);
+        let z = KCost { base: KBase::Zero, exprs: vec![0] };
+        assert_eq!(z.cycles(&model), 0);
+    }
+
+    #[test]
+    fn bin_value_matches_tree_eval() {
+        use crate::frontend::ast::BinOp;
+        use crate::ir::expr::{eval, Expr};
+        let cases = [
+            (BinOp::Add, Value::I64(3), Value::I64(4)),
+            (BinOp::Add, Value::F32(1.5), Value::I64(2)),
+            (BinOp::Div, Value::I64(7), Value::I64(0)),
+            (BinOp::Rem, Value::I64(7), Value::I64(0)),
+            (BinOp::Lt, Value::I64(1), Value::F32(2.0)),
+            (BinOp::And, Value::Bool(true), Value::I64(0)),
+            (BinOp::Shl, Value::I64(1), Value::I64(65)),
+        ];
+        for (op, a, b) in cases {
+            let tree = Expr::Binary(
+                op,
+                Box::new(imm_expr(a)),
+                Box::new(imm_expr(b)),
+            );
+            assert_eq!(bin_value(op, a, b), eval(&tree, &|_| Value::Unit), "{op:?}");
+        }
+    }
+
+    fn imm_expr(v: Value) -> crate::ir::expr::Expr {
+        use crate::ir::expr::Expr;
+        match v {
+            Value::I64(x) => Expr::ConstI(x),
+            Value::F32(x) => Expr::ConstF(x),
+            Value::Bool(x) => Expr::ConstB(x),
+            Value::Unit => Expr::ConstI(0),
+        }
+    }
+}

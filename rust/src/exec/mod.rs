@@ -1,0 +1,38 @@
+//! The shared execution-kernel layer.
+//!
+//! Every execution engine in the repo — the sequential oracle
+//! ([`crate::interp::oracle`]), the single-threaded explicit machine
+//! ([`crate::interp::explicit_exec`]), the multithreaded work-stealing
+//! runtime ([`crate::ws`]) and the cycle simulator ([`crate::sim`]) —
+//! used to re-walk `ir::expr::Expr` trees through the recursive
+//! `expr::eval` on every op of every task dispatch. This module compiles
+//! each function's CFG **once** into a flat, register-based linear
+//! bytecode ([`kernel::KernelProgram`]):
+//!
+//! - operand variable ids pre-resolved to frame slots;
+//! - constant subexpressions folded into immediates at compile time (the
+//!   one remaining use of the tree-walking `expr::eval`);
+//! - builtin calls with their arity fixed (no per-call `Vec`);
+//! - branch targets resolved to instruction offsets;
+//! - per-instruction cycle-cost / load / effect metadata pre-attached
+//!   ([`kernel::KCost`]) so the simulator builds its timed trace from the
+//!   same kernel instead of re-tracing trees.
+//!
+//! The engines differ only in how they realize side effects (memory,
+//! closures, spawns, sends) and in what they meter; each implements the
+//! [`kernel::Machine`] trait and shares the one interpreter loop
+//! ([`kernel::run_kernel`]), which is generic over the machine and
+//! monomorphizes per engine.
+//!
+//! Compiled programs are cached per `CompileSession`
+//! ([`crate::lower::CompileSession::explicit_kernels`]) behind `Arc`, the
+//! same memoized-artifact pattern as `rtl_system`.
+
+pub mod compile;
+pub mod kernel;
+
+pub use compile::compile_module;
+pub use kernel::{
+    memo_kernels, run_kernel, ArgList, FuncKernel, KBase, KCost, KInstr, KOp, KRet, KStack,
+    KernelMode, KernelProgram, KontRef, Machine, Operand, NO_COST,
+};

@@ -1,18 +1,23 @@
 //! Single-threaded executor for the explicit IR — the Cilk-1 abstract
 //! machine: a closure heap with join counters plus a ready queue.
 //!
-//! This is the semantic core shared (by construction, not by code-sharing
-//! accident) with the multithreaded WS runtime ([`crate::ws`]) and the
-//! HardCilk cycle simulator ([`crate::sim`]): all three implement the same
-//! transition rules; this one is the simplest and is used for differential
-//! testing.
+//! This is the semantic core shared with the multithreaded WS runtime
+//! ([`crate::ws`]) and the HardCilk cycle simulator ([`crate::sim`]):
+//! since the kernel rework, shared *by construction and by code* — all
+//! three run the same compiled bytecode ([`crate::exec`]) through the
+//! same interpreter loop, differing only in their [`Machine`] side
+//! (this one: a local closure heap and a LIFO/FIFO ready queue).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::ir::cfg::{FuncId, FuncKind, Module, Op, RetTarget, Term};
-use crate::ir::expr::{self, Value, VarId};
+use crate::exec::{
+    self, run_kernel, ArgList, KStack, KernelMode, KernelProgram, KontRef, Machine,
+};
+use crate::ir::cfg::{FuncId, FuncKind, GlobalId, Module};
+use crate::ir::expr::Value;
 
 use super::{Memory, XlaHandler};
 
@@ -42,7 +47,7 @@ pub struct Closure {
 #[derive(Clone, Debug)]
 pub struct TaskInst {
     pub task: FuncId,
-    pub args: Vec<Value>,
+    pub args: ArgList,
     pub cont: Cont,
 }
 
@@ -75,11 +80,16 @@ pub struct ExplicitExec<'m, X: XlaHandler> {
     pub xla: X,
     pub order: Order,
     pub stats: ExecStats,
+    kernels: Option<Arc<KernelProgram>>,
     closures: Vec<Closure>,
     free_closures: Vec<usize>,
     ready: VecDeque<TaskInst>,
     result: Option<Value>,
     live_closures: usize,
+    stack: KStack,
+    /// Continuation of the task instance currently executing (what
+    /// `send_argument` / forwarded spawns target).
+    cur_cont: Cont,
 }
 
 impl<'m, X: XlaHandler> ExplicitExec<'m, X> {
@@ -90,12 +100,36 @@ impl<'m, X: XlaHandler> ExplicitExec<'m, X> {
             xla,
             order: Order::default(),
             stats: ExecStats::default(),
+            kernels: None,
             closures: Vec::new(),
             free_closures: Vec::new(),
             ready: VecDeque::new(),
             result: None,
             live_closures: 0,
+            stack: KStack::new(),
+            cur_cont: Cont::Root,
         }
+    }
+
+    /// Reuse a session-cached kernel program instead of compiling on the
+    /// first `run`.
+    pub fn with_kernels(
+        module: &'m Module,
+        memory: Memory,
+        xla: X,
+        kernels: Arc<KernelProgram>,
+    ) -> Self {
+        let mut ex = ExplicitExec::new(module, memory, xla);
+        ex.kernels = Some(kernels);
+        ex
+    }
+
+    fn ensure_kernels(&mut self) -> Result<()> {
+        if self.kernels.is_none() {
+            self.kernels =
+                Some(Arc::new(exec::compile_module(self.module, KernelMode::Explicit)?));
+        }
+        Ok(())
     }
 
     /// Run task `name` to completion (drain the whole task graph) and
@@ -105,7 +139,12 @@ impl<'m, X: XlaHandler> ExplicitExec<'m, X> {
             .module
             .func_by_name(name)
             .ok_or_else(|| anyhow!("no task named `{name}`"))?;
-        self.ready.push_back(TaskInst { task: fid, args: args.to_vec(), cont: Cont::Root });
+        self.ensure_kernels()?;
+        self.ready.push_back(TaskInst {
+            task: fid,
+            args: ArgList::from_slice(args),
+            cont: Cont::Root,
+        });
         self.drain()?;
         self.result.take().ok_or_else(|| {
             anyhow!("task graph drained but no send_argument reached the root continuation")
@@ -148,7 +187,8 @@ impl<'m, X: XlaHandler> ExplicitExec<'m, X> {
         let c = &mut self.closures[clos];
         debug_assert!(!c.freed, "decrement on freed closure");
         if c.counter == 0 {
-            let inst = TaskInst { task: c.task, args: c.slots.clone(), cont: c.cont };
+            let args = ArgList::from(std::mem::take(&mut c.slots));
+            let inst = TaskInst { task: c.task, args, cont: c.cont };
             c.freed = true;
             self.live_closures -= 1;
             self.free_closures.push(clos);
@@ -166,21 +206,34 @@ impl<'m, X: XlaHandler> ExplicitExec<'m, X> {
                 self.result = Some(value);
             }
             Cont::Slot { clos, slot } => {
-                let c = &mut self.closures[clos];
-                if c.freed {
+                let (task, freed) = {
+                    let c = &self.closures[clos];
+                    (c.task, c.freed)
+                };
+                if freed {
                     bail!("send_argument into freed closure (join-counter bug)");
                 }
-                let ty = self.module.funcs[c.task].vars[VarId::new(slot as usize)].ty;
-                c.slots[slot as usize] = value.coerce(ty);
-                c.counter -= 1;
+                let ty = self
+                    .kernels
+                    .as_ref()
+                    .expect("kernels compiled before execution")
+                    .kernel(task)
+                    .param_tys[slot as usize];
+                {
+                    let c = &mut self.closures[clos];
+                    c.slots[slot as usize] = value.coerce(ty);
+                    c.counter -= 1;
+                }
                 self.fire_if_ready(clos);
             }
             Cont::Counter { clos } => {
-                let c = &mut self.closures[clos];
-                if c.freed {
-                    bail!("counter decrement on freed closure (join-counter bug)");
+                {
+                    let c = &mut self.closures[clos];
+                    if c.freed {
+                        bail!("counter decrement on freed closure (join-counter bug)");
+                    }
+                    c.counter -= 1;
                 }
-                c.counter -= 1;
                 self.fire_if_ready(clos);
             }
         }
@@ -189,216 +242,122 @@ impl<'m, X: XlaHandler> ExplicitExec<'m, X> {
 
     fn run_task(&mut self, inst: TaskInst) -> Result<()> {
         self.stats.tasks_run += 1;
-        let func = &self.module.funcs[inst.task];
-        let role = func.task.as_ref().map(|t| t.role.name()).unwrap_or("leaf");
-        *self.stats.per_role.entry(role).or_insert(0) += 1;
+        let prog = Arc::clone(self.kernels.as_ref().expect("kernels compiled in run()"));
+        let kernel = prog.kernel(inst.task);
+        *self.stats.per_role.entry(kernel.role).or_insert(0) += 1;
 
         // XLA tasks have no body: the scalar handler computes the datapath
         // and the result goes straight to the continuation.
-        if func.kind == FuncKind::Xla {
-            let name = func.name.clone();
-            let out = self.xla.call(&name, &inst.args, &mut self.memory)?;
+        if kernel.kind == FuncKind::Xla {
+            let out = self.xla.call(&kernel.name, inst.args.as_slice(), &mut self.memory)?;
             return self.deliver(inst.cont, out);
         }
+
+        self.cur_cont = inst.cont;
+        let mut stack = std::mem::take(&mut self.stack);
+        let result =
+            run_kernel(&prog, inst.task, inst.args.as_slice(), &mut stack, self, 100_000_000);
+        self.stack = stack;
+        let value = result?;
+
         // A spawned *leaf* function (no spawns/syncs of its own) is a task
-        // whose whole body is sequential: evaluate and send the result.
-        if func.kind == FuncKind::Leaf {
-            let out = self.eval_leaf(inst.task, &inst.args)?;
-            return self.deliver(inst.cont, out);
+        // whose whole body is sequential: its return value is the send.
+        if kernel.kind == FuncKind::Leaf {
+            return self.deliver(inst.cont, value);
         }
-
-        let cfg = func.cfg();
-        if inst.args.len() != func.params {
-            bail!(
-                "task `{}` expects {} args, got {} (closure layout bug)",
-                func.name,
-                func.params,
-                inst.args.len()
-            );
-        }
-        let mut env: Vec<Value> = func.vars.values().map(|v| Value::zero_of(v.ty)).collect();
-        for (i, a) in inst.args.iter().enumerate() {
-            env[i] = a.coerce(func.vars[VarId::new(i)].ty);
-        }
-        // Closure handles created by this task (indices into self.closures
-        // are stored as I64 handles in env).
-        let mut block = cfg.entry;
-        let mut steps: u64 = 0;
-        loop {
-            steps += 1;
-            if steps > 100_000_000 {
-                bail!("task `{}` exceeded step limit", func.name);
-            }
-            let b = &cfg.blocks[block];
-            for op in &b.ops {
-                match op {
-                    Op::Assign { dst, src } => {
-                        let v = expr::eval(src, &|v| env[v.index()]);
-                        env[dst.index()] = v.coerce(func.vars[*dst].ty);
-                    }
-                    Op::Load { dst, arr, index, .. } => {
-                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                        env[dst.index()] = self.memory.load(*arr, idx)?;
-                    }
-                    Op::Store { arr, index, value } => {
-                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                        let val = expr::eval(value, &|v| env[v.index()]);
-                        self.memory.store(*arr, idx, val)?;
-                    }
-                    Op::AtomicAdd { arr, index, value } => {
-                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                        let val = expr::eval(value, &|v| env[v.index()]);
-                        self.memory.atomic_add(*arr, idx, val)?;
-                    }
-                    Op::Call { dst, callee, args } => {
-                        let vals: Vec<Value> =
-                            args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
-                        let r = self.eval_leaf(*callee, &vals)?;
-                        if let Some(d) = dst {
-                            env[d.index()] = r.coerce(func.vars[*d].ty);
-                        }
-                    }
-                    Op::MakeClosure { dst, task } => {
-                        let t = &self.module.funcs[*task];
-                        let c = Closure {
-                            task: *task,
-                            slots: t
-                                .param_ids()
-                                .map(|p| Value::zero_of(t.vars[p].ty))
-                                .collect(),
-                            cont: inst.cont,
-                            counter: 1, // creator hold
-                            freed: false,
-                        };
-                        let handle = self.alloc_closure(c);
-                        env[dst.index()] = Value::I64(handle as i64);
-                    }
-                    Op::ClosureStore { clos, field, value } => {
-                        let h = env[clos.index()].as_i64() as usize;
-                        let val = expr::eval(value, &|v| env[v.index()]);
-                        let c = &mut self.closures[h];
-                        let ty = self.module.funcs[c.task].vars[VarId::new(*field as usize)].ty;
-                        c.slots[*field as usize] = val.coerce(ty);
-                    }
-                    Op::SpawnChild { callee, args, ret } => {
-                        let vals: Vec<Value> =
-                            args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
-                        let cont = match ret {
-                            RetTarget::Slot { clos, field } => {
-                                let h = env[clos.index()].as_i64() as usize;
-                                self.closures[h].counter += 1;
-                                Cont::Slot { clos: h, slot: *field }
-                            }
-                            RetTarget::Counter { clos } => {
-                                let h = env[clos.index()].as_i64() as usize;
-                                self.closures[h].counter += 1;
-                                Cont::Counter { clos: h }
-                            }
-                            RetTarget::Forward => inst.cont,
-                        };
-                        self.ready.push_back(TaskInst { task: *callee, args: vals, cont });
-                    }
-                    Op::CloseSpawns { clos } => {
-                        let h = env[clos.index()].as_i64() as usize;
-                        let c = &mut self.closures[h];
-                        if c.freed {
-                            bail!("close_spawns on freed closure");
-                        }
-                        c.counter -= 1;
-                        self.fire_if_ready(h);
-                    }
-                    Op::SendArgument { value } => {
-                        let v = match value {
-                            Some(e) => expr::eval(e, &|v| env[v.index()]).coerce(func.ret),
-                            None => Value::Unit,
-                        };
-                        self.deliver(inst.cont, v)?;
-                    }
-                    Op::Spawn { .. } => bail!("implicit Spawn in explicit IR"),
-                }
-            }
-            match &b.term {
-                Term::Jump(next) => block = *next,
-                Term::Branch { cond, then_, else_ } => {
-                    let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
-                    block = if c { *then_ } else { *else_ };
-                }
-                Term::Halt => return Ok(()),
-                other => bail!("non-explicit terminator {other:?} in task `{}`", func.name),
-            }
-        }
-    }
-
-    /// Sequential leaf-function evaluation (HLS would inline these).
-    fn eval_leaf(&mut self, fid: FuncId, args: &[Value]) -> Result<Value> {
-        let func = &self.module.funcs[fid];
-        if func.kind != FuncKind::Leaf {
-            bail!("sequential call to non-leaf `{}`", func.name);
-        }
-        let cfg = func.cfg();
-        let mut env: Vec<Value> = func.vars.values().map(|v| Value::zero_of(v.ty)).collect();
-        for (i, a) in args.iter().enumerate() {
-            env[i] = a.coerce(func.vars[VarId::new(i)].ty);
-        }
-        let mut block = cfg.entry;
-        let mut steps = 0u64;
-        loop {
-            steps += 1;
-            if steps > 100_000_000 {
-                bail!("leaf `{}` exceeded step limit", func.name);
-            }
-            let b = &cfg.blocks[block];
-            for op in &b.ops {
-                match op {
-                    Op::Assign { dst, src } => {
-                        let v = expr::eval(src, &|v| env[v.index()]);
-                        env[dst.index()] = v.coerce(func.vars[*dst].ty);
-                    }
-                    Op::Load { dst, arr, index, .. } => {
-                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                        env[dst.index()] = self.memory.load(*arr, idx)?;
-                    }
-                    Op::Store { arr, index, value } => {
-                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                        let val = expr::eval(value, &|v| env[v.index()]);
-                        self.memory.store(*arr, idx, val)?;
-                    }
-                    Op::AtomicAdd { arr, index, value } => {
-                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                        let val = expr::eval(value, &|v| env[v.index()]);
-                        self.memory.atomic_add(*arr, idx, val)?;
-                    }
-                    Op::Call { dst, callee, args } => {
-                        let vals: Vec<Value> =
-                            args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
-                        let r = self.eval_leaf(*callee, &vals)?;
-                        if let Some(d) = dst {
-                            env[d.index()] = r.coerce(func.vars[*d].ty);
-                        }
-                    }
-                    other => bail!("op {other:?} not allowed in leaf `{}`", func.name),
-                }
-            }
-            match &b.term {
-                Term::Jump(next) => block = *next,
-                Term::Branch { cond, then_, else_ } => {
-                    let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
-                    block = if c { *then_ } else { *else_ };
-                }
-                Term::Return(value) => {
-                    return Ok(match value {
-                        Some(e) => expr::eval(e, &|v| env[v.index()]).coerce(func.ret),
-                        None => Value::Unit,
-                    })
-                }
-                other => bail!("terminator {other:?} not allowed in leaf `{}`", func.name),
-            }
-        }
+        Ok(())
     }
 
     /// Live (unfreed) closures — must be zero after a clean drain.
     pub fn live_closures(&self) -> usize {
         self.live_closures
+    }
+}
+
+impl<'m, X: XlaHandler> Machine for ExplicitExec<'m, X> {
+    fn load(&mut self, arr: GlobalId, index: i64) -> Result<Value> {
+        self.memory.load(arr, index)
+    }
+
+    fn store(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()> {
+        self.memory.store(arr, index, value)
+    }
+
+    fn atomic_add(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()> {
+        self.memory.atomic_add(arr, index, value)
+    }
+
+    fn xla_call(&mut self, fid: FuncId, args: &[Value]) -> Result<Value> {
+        let prog = Arc::clone(self.kernels.as_ref().expect("kernels"));
+        self.xla.call(&prog.kernel(fid).name, args, &mut self.memory)
+    }
+
+    fn make_closure(&mut self, task: FuncId) -> Result<Value> {
+        let slots: Vec<Value> = {
+            let prog = self.kernels.as_ref().expect("kernels");
+            prog.kernel(task).param_tys.iter().map(|&t| Value::zero_of(t)).collect()
+        };
+        let c = Closure {
+            task,
+            slots,
+            cont: self.cur_cont,
+            counter: 1, // creator hold
+            freed: false,
+        };
+        let handle = self.alloc_closure(c);
+        Ok(Value::I64(handle as i64))
+    }
+
+    fn closure_store(&mut self, clos: Value, field: u32, value: Value) -> Result<()> {
+        let h = clos.as_i64() as usize;
+        let task = self.closures[h].task;
+        let ty = self
+            .kernels
+            .as_ref()
+            .expect("kernels")
+            .kernel(task)
+            .param_tys[field as usize];
+        self.closures[h].slots[field as usize] = value.coerce(ty);
+        Ok(())
+    }
+
+    fn spawn_child(&mut self, callee: FuncId, args: &[Value], ret: KontRef) -> Result<()> {
+        let cont = match ret {
+            KontRef::Slot { clos, field } => {
+                let h = clos.as_i64() as usize;
+                self.closures[h].counter += 1;
+                Cont::Slot { clos: h, slot: field }
+            }
+            KontRef::Counter { clos } => {
+                let h = clos.as_i64() as usize;
+                self.closures[h].counter += 1;
+                Cont::Counter { clos: h }
+            }
+            KontRef::Forward => self.cur_cont,
+        };
+        self.ready.push_back(TaskInst {
+            task: callee,
+            args: ArgList::from_slice(args),
+            cont,
+        });
+        Ok(())
+    }
+
+    fn close_spawns(&mut self, clos: Value) -> Result<()> {
+        let h = clos.as_i64() as usize;
+        {
+            let c = &mut self.closures[h];
+            if c.freed {
+                bail!("close_spawns on freed closure");
+            }
+            c.counter -= 1;
+        }
+        self.fire_if_ready(h);
+        Ok(())
+    }
+
+    fn send_argument(&mut self, value: Value) -> Result<()> {
+        self.deliver(self.cur_cont, value)
     }
 }
 

@@ -4,11 +4,20 @@
 //! of a Cilk program is a valid execution), `cilk_sync` is a no-op. This is
 //! the ground truth for all parallel engines; any deterministic Cilk-C
 //! program must produce identical results on every engine.
+//!
+//! Execution runs on the shared kernel layer ([`crate::exec`]): the
+//! implicit module is compiled once into register bytecode (spawns become
+//! sequential [`crate::exec::KOp::SpawnSeq`] calls) and the oracle is just
+//! the [`Machine`] that supplies memory, the scalar XLA handler and the
+//! call/spawn/load counters.
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::ir::cfg::{Func, FuncId, FuncKind, Module, Op, Term};
-use crate::ir::expr::{self, Value, VarId};
+use crate::exec::{self, run_kernel, KStack, KernelMode, KernelProgram, Machine};
+use crate::ir::cfg::{FuncId, GlobalId, Module};
+use crate::ir::expr::Value;
 
 use super::{Memory, XlaHandler};
 
@@ -27,15 +36,45 @@ pub struct Oracle<'m, X: XlaHandler> {
     pub memory: Memory,
     pub xla: X,
     pub stats: OracleStats,
-    depth: u64,
-    /// Recursion guard (the oracle is recursive; runaway programs should
-    /// error, not blow the stack).
+    /// Recursion guard (serial elision is recursive; runaway programs
+    /// should error, not blow the stack).
     pub max_depth_limit: u64,
+    kernels: Option<Arc<KernelProgram>>,
+    stack: KStack,
 }
 
 impl<'m, X: XlaHandler> Oracle<'m, X> {
     pub fn new(module: &'m Module, memory: Memory, xla: X) -> Self {
-        Oracle { module, memory, xla, stats: OracleStats::default(), depth: 0, max_depth_limit: 1_000_000 }
+        Oracle {
+            module,
+            memory,
+            xla,
+            stats: OracleStats::default(),
+            max_depth_limit: 1_000_000,
+            kernels: None,
+            stack: KStack::new(),
+        }
+    }
+
+    /// Reuse an already-compiled kernel program (the session-cached
+    /// artifact) instead of compiling on first run.
+    pub fn with_kernels(
+        module: &'m Module,
+        memory: Memory,
+        xla: X,
+        kernels: Arc<KernelProgram>,
+    ) -> Self {
+        let mut o = Oracle::new(module, memory, xla);
+        o.kernels = Some(kernels);
+        o
+    }
+
+    fn ensure_kernels(&mut self) -> Result<Arc<KernelProgram>> {
+        if self.kernels.is_none() {
+            self.kernels =
+                Some(Arc::new(exec::compile_module(self.module, KernelMode::Implicit)?));
+        }
+        Ok(Arc::clone(self.kernels.as_ref().expect("kernels just compiled")))
     }
 
     /// Run a function by name with the given arguments.
@@ -48,109 +87,58 @@ impl<'m, X: XlaHandler> Oracle<'m, X> {
     }
 
     pub fn call(&mut self, fid: FuncId, args: &[Value]) -> Result<Value> {
-        self.depth += 1;
-        self.stats.max_depth = self.stats.max_depth.max(self.depth);
-        if self.depth > self.max_depth_limit {
-            bail!("oracle recursion limit exceeded ({})", self.max_depth_limit);
+        let prog = self.ensure_kernels()?;
+        if prog.kernel(fid).kind == crate::ir::FuncKind::Xla {
+            return self.xla_call(fid, args);
         }
-        let result = self.call_inner(fid, args);
-        self.depth -= 1;
+        let mut stack = std::mem::take(&mut self.stack);
+        let result = run_kernel(&prog, fid, args, &mut stack, self, 100_000_000);
+        self.stack = stack;
         result
-    }
-
-    fn call_inner(&mut self, fid: FuncId, args: &[Value]) -> Result<Value> {
-        self.stats.calls += 1;
-        let func: &Func = &self.module.funcs[fid];
-        if func.kind == FuncKind::Xla {
-            let name = func.name.clone();
-            return self.xla.call(&name, args, &mut self.memory);
-        }
-        let cfg = func.cfg();
-        if args.len() != func.params {
-            bail!("`{}` expects {} args, got {}", func.name, func.params, args.len());
-        }
-        let mut env: Vec<Value> = func
-            .vars
-            .values()
-            .map(|v| Value::zero_of(v.ty))
-            .collect();
-        for (i, &a) in args.iter().enumerate() {
-            env[i] = a.coerce(func.vars[VarId::new(i)].ty);
-        }
-
-        let mut block = cfg.entry;
-        let mut steps: u64 = 0;
-        loop {
-            steps += 1;
-            if steps > 100_000_000 {
-                bail!("`{}` exceeded step limit (infinite loop?)", func.name);
-            }
-            let b = &cfg.blocks[block];
-            for op in &b.ops {
-                match op {
-                    Op::Assign { dst, src } => {
-                        let v = expr::eval(src, &|v| env[v.index()]);
-                        env[dst.index()] = v.coerce(func.vars[*dst].ty);
-                    }
-                    Op::Load { dst, arr, index, .. } => {
-                        self.stats.loads += 1;
-                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                        env[dst.index()] = self.memory.load(*arr, idx)?;
-                    }
-                    Op::Store { arr, index, value } => {
-                        self.stats.stores += 1;
-                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                        let val = expr::eval(value, &|v| env[v.index()]);
-                        self.memory.store(*arr, idx, val)?;
-                    }
-                    Op::AtomicAdd { arr, index, value } => {
-                        self.stats.stores += 1;
-                        let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                        let val = expr::eval(value, &|v| env[v.index()]);
-                        self.memory.atomic_add(*arr, idx, val)?;
-                    }
-                    Op::Call { dst, callee, args } => {
-                        let vals: Vec<Value> =
-                            args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
-                        let r = self.call(*callee, &vals)?;
-                        if let Some(d) = dst {
-                            env[d.index()] = r.coerce(func.vars[*d].ty);
-                        }
-                    }
-                    Op::Spawn { dst, callee, args } => {
-                        self.stats.spawns += 1;
-                        let vals: Vec<Value> =
-                            args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
-                        let r = self.call(*callee, &vals)?;
-                        if let Some(d) = dst {
-                            env[d.index()] = r.coerce(func.vars[*d].ty);
-                        }
-                    }
-                    other => bail!("oracle runs implicit IR only, found {other:?}"),
-                }
-            }
-            match &b.term {
-                Term::Jump(next) => block = *next,
-                Term::Sync { next } => block = *next, // children already ran
-                Term::Branch { cond, then_, else_ } => {
-                    let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
-                    block = if c { *then_ } else { *else_ };
-                }
-                Term::Return(value) => {
-                    return Ok(match value {
-                        Some(e) => {
-                            expr::eval(e, &|v| env[v.index()]).coerce(func.ret)
-                        }
-                        None => Value::Unit,
-                    });
-                }
-                Term::Halt => bail!("oracle runs implicit IR only (Halt found)"),
-            }
-        }
     }
 }
 
-/// Convenience: compile nothing, just run an implicit module function.
+impl<'m, X: XlaHandler> Machine for Oracle<'m, X> {
+    fn on_dispatch(&mut self, _fid: FuncId, depth: usize) -> Result<()> {
+        self.stats.calls += 1;
+        let d = depth as u64 + 1;
+        self.stats.max_depth = self.stats.max_depth.max(d);
+        if d > self.max_depth_limit {
+            bail!("oracle recursion limit exceeded ({})", self.max_depth_limit);
+        }
+        Ok(())
+    }
+
+    fn on_spawn_seq(&mut self) {
+        self.stats.spawns += 1;
+    }
+
+    fn load(&mut self, arr: GlobalId, index: i64) -> Result<Value> {
+        self.stats.loads += 1;
+        self.memory.load(arr, index)
+    }
+
+    fn store(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()> {
+        self.stats.stores += 1;
+        self.memory.store(arr, index, value)
+    }
+
+    fn atomic_add(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()> {
+        self.stats.stores += 1;
+        self.memory.atomic_add(arr, index, value)
+    }
+
+    fn xla_call(&mut self, fid: FuncId, args: &[Value]) -> Result<Value> {
+        self.stats.calls += 1;
+        let module = self.module;
+        self.xla.call(&module.funcs[fid].name, args, &mut self.memory)
+    }
+}
+
+/// Convenience: run an implicit module function once. Note this compiles
+/// the module's kernel program per call — repeated runs over one module
+/// should go through [`crate::lower::CompileSession::run_oracle`] (cached
+/// kernels) or hold an [`Oracle`] / use [`Oracle::with_kernels`].
 pub fn run_oracle(
     module: &Module,
     memory: Memory,
@@ -267,5 +255,26 @@ mod tests {
         let mem = Memory::new(&r.implicit);
         let err = run_oracle(&r.implicit, mem, "f", &[Value::I64(0)]).unwrap_err();
         assert!(err.to_string().contains("step limit"));
+    }
+
+    #[test]
+    fn stats_count_calls_spawns_and_memory_ops() {
+        let src = "global int acc[1];
+            int fib(int n) {
+                if (n < 2) return n;
+                int x = cilk_spawn fib(n - 1);
+                int y = cilk_spawn fib(n - 2);
+                cilk_sync;
+                atomic_add(acc, 0, 1);
+                return x + y;
+            }";
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let mut o = Oracle::new(&r.implicit, Memory::new(&r.implicit), crate::interp::NoXla);
+        o.run("fib", &[Value::I64(10)]).unwrap();
+        // fib(10): 177 calls, 176 spawns, 88 interior nodes do an atomic.
+        assert_eq!(o.stats.calls, 177);
+        assert_eq!(o.stats.spawns, 176);
+        assert_eq!(o.stats.stores, 88);
+        assert!(o.stats.max_depth >= 10);
     }
 }

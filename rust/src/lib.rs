@@ -24,6 +24,7 @@
 
 pub mod backend;
 pub mod coordinator;
+pub mod exec;
 pub mod frontend;
 pub mod hls;
 pub mod interp;

@@ -51,10 +51,11 @@ pub mod explicitize;
 pub mod pass;
 pub mod simplify;
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::Result;
 
+use crate::exec::{KernelMode, KernelProgram};
 use crate::frontend;
 use crate::interp::explicit_exec::ExplicitExec;
 use crate::interp::{Memory, NoXla};
@@ -63,7 +64,8 @@ use crate::ir::Module;
 
 pub use batch::{compile_batch, BatchResult};
 pub use pass::{
-    pass_work, Artifact, Pass, PassManager, PassReport, PassTiming, PipelineStage,
+    pass_work, Artifact, KernelCompile, Pass, PassManager, PassReport, PassTiming,
+    PipelineStage,
 };
 
 /// Options controlling the pipeline.
@@ -180,6 +182,11 @@ pub struct CompileSession {
     emu: Option<crate::backend::emu::EmuProgram>,
     hardcilk: Vec<(String, crate::backend::hardcilk::HardCilkSystem)>,
     rtl: Vec<(String, crate::backend::rtl::RtlSystem)>,
+    /// Memoized execution-kernel programs (the bytecode all four
+    /// executors run): compiled at most once per module, shared by
+    /// `Arc`, invalidated on recompile like every other artifact.
+    kernels_explicit: OnceLock<Arc<KernelProgram>>,
+    kernels_implicit: OnceLock<Arc<KernelProgram>>,
     /// Per-function fingerprints + cached analyses for incremental
     /// recompilation (`None` for sessions wrapped around a bare
     /// `CompileResult`, which then always recompile fully).
@@ -210,6 +217,8 @@ impl CompileSession {
             emu: None,
             hardcilk: Vec::new(),
             rtl: Vec::new(),
+            kernels_explicit: OnceLock::new(),
+            kernels_implicit: OnceLock::new(),
             incr: None,
         }
     }
@@ -311,6 +320,8 @@ impl CompileSession {
         self.emu = None;
         self.hardcilk.clear();
         self.rtl.clear();
+        self.kernels_explicit = OnceLock::new();
+        self.kernels_implicit = OnceLock::new();
     }
 
     /// A fresh memory image over the cached explicit module.
@@ -380,29 +391,83 @@ impl CompileSession {
         Ok(&self.rtl.last().expect("system just pushed").1)
     }
 
-    /// Sequential oracle over the cached implicit module.
+    /// The compiled execution kernels of the explicit module — the
+    /// bytecode the explicit machine, WS runtime and simulator all run.
+    /// Compiled on first request, then shared (`Arc`) until the next
+    /// recompile invalidates it.
+    pub fn explicit_kernels(&self) -> Result<Arc<KernelProgram>> {
+        crate::exec::memo_kernels(&self.kernels_explicit, || {
+            crate::exec::compile_module(&self.result.explicit, KernelMode::Explicit)
+        })
+    }
+
+    /// The compiled kernels of the (pre-DAE) implicit module — what the
+    /// sequential oracle runs.
+    pub fn implicit_kernels(&self) -> Result<Arc<KernelProgram>> {
+        crate::exec::memo_kernels(&self.kernels_implicit, || {
+            crate::exec::compile_module(&self.result.implicit, KernelMode::Implicit)
+        })
+    }
+
+    /// [`CompileSession::explicit_kernels`] through a one-pass
+    /// [`PassManager`] run, so `kernel_compile` is timed (appended to
+    /// [`CompileSession::timings`]) and verified by the bytecode
+    /// validator at the pass boundary — the same pattern as
+    /// [`CompileSession::rtl_system`]. A second call returns the cached
+    /// program with zero pass work.
+    pub fn kernels_timed(&mut self) -> Result<Arc<KernelProgram>> {
+        if let Some(k) = self.kernels_explicit.get() {
+            return Ok(Arc::clone(k));
+        }
+        let manager =
+            PassManager::new().add(pass::KernelCompile { mode: KernelMode::Explicit });
+        let (artifact, report) = manager.run_from(
+            Artifact::Module(Arc::clone(&self.result.explicit)),
+            PipelineStage::Explicit,
+            &self.options,
+            |_, _| {},
+        )?;
+        self.result.timings.extend(report.timings);
+        let k = artifact.into_kernels()?;
+        Ok(Arc::clone(self.kernels_explicit.get_or_init(|| k)))
+    }
+
+    /// Sequential oracle over the cached implicit module (and its cached
+    /// kernel program).
     pub fn run_oracle(
         &self,
         memory: Memory,
         entry: &str,
         args: &[Value],
     ) -> Result<(Value, Memory)> {
-        crate::interp::oracle::run_oracle(&self.result.implicit, memory, entry, args)
+        let kernels = self.implicit_kernels()?;
+        let mut o = crate::interp::oracle::Oracle::with_kernels(
+            &self.result.implicit,
+            memory,
+            NoXla,
+            kernels,
+        );
+        let v = o.run(entry, args)?;
+        Ok((v, o.memory))
     }
 
-    /// Single-threaded explicit-IR machine over the cached explicit module.
+    /// Single-threaded explicit-IR machine over the cached explicit
+    /// module (and its cached kernel program).
     pub fn run_explicit(
         &self,
         memory: Memory,
         entry: &str,
         args: &[Value],
     ) -> Result<(Value, Memory)> {
-        let mut exec = ExplicitExec::new(&self.result.explicit, memory, NoXla);
+        let kernels = self.explicit_kernels()?;
+        let mut exec =
+            ExplicitExec::with_kernels(&self.result.explicit, memory, NoXla, kernels);
         let value = exec.run(entry, args)?;
         Ok((value, exec.memory))
     }
 
-    /// Cycle simulation over the cached explicit module.
+    /// Cycle simulation over the cached explicit module (and its cached
+    /// kernel program).
     pub fn simulate(
         &self,
         memory: Memory,
@@ -411,10 +476,20 @@ impl CompileSession {
         config: &crate::sim::SimConfig,
         xla: &mut dyn crate::sim::SimXla,
     ) -> Result<(Value, Memory, crate::sim::SimStats)> {
-        crate::sim::simulate(&self.result.explicit, memory, entry, args, config, xla)
+        let kernels = self.explicit_kernels()?;
+        crate::sim::simulate_with_kernels(
+            &self.result.explicit,
+            kernels,
+            memory,
+            entry,
+            args,
+            config,
+            xla,
+        )
     }
 
-    /// Multithreaded WS run over the cached explicit module.
+    /// Multithreaded WS run over the cached explicit module (and its
+    /// cached kernel program).
     pub fn run_ws(
         &self,
         memory: crate::ws::SharedMemory,
@@ -423,6 +498,7 @@ impl CompileSession {
         config: &crate::ws::WsConfig,
         sink: Box<dyn crate::ws::XlaSink>,
     ) -> Result<(Value, crate::ws::SharedMemory, crate::ws::WsStats)> {
-        crate::ws::run(&self.result.explicit, memory, entry, args, config, sink)
+        let kernels = self.explicit_kernels()?;
+        crate::ws::run_with_kernels(kernels, memory, entry, args, config, sink)
     }
 }

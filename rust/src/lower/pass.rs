@@ -61,6 +61,8 @@ pub enum PipelineStage {
     Explicit,
     /// Emitted Verilog system ([`crate::backend::rtl`]).
     Rtl,
+    /// Compiled execution kernels ([`crate::exec`]).
+    Kernels,
 }
 
 impl PipelineStage {
@@ -70,15 +72,16 @@ impl PipelineStage {
             PipelineStage::Implicit => "implicit IR",
             PipelineStage::Explicit => "explicit IR",
             PipelineStage::Rtl => "rtl",
+            PipelineStage::Kernels => "kernels",
         }
     }
 
     /// The `ir::verify` stage used for inter-pass checks (`None` for AST,
-    /// which has no module-level verifier; the `rtl` stage is verified by
-    /// the structural Verilog lint instead).
+    /// which has no module-level verifier; the `rtl` and `kernels` stages
+    /// are verified by their own structural validators instead).
     pub fn verify_stage(self) -> Option<Stage> {
         match self {
-            PipelineStage::Ast | PipelineStage::Rtl => None,
+            PipelineStage::Ast | PipelineStage::Rtl | PipelineStage::Kernels => None,
             PipelineStage::Implicit => Some(Stage::Implicit),
             PipelineStage::Explicit => Some(Stage::Explicit),
         }
@@ -93,13 +96,14 @@ pub enum Artifact {
     Ast(Program),
     Module(Arc<Module>),
     Rtl(crate::backend::rtl::RtlSystem),
+    Kernels(Arc<crate::exec::KernelProgram>),
 }
 
 impl Artifact {
     pub fn as_module(&self) -> Option<&Module> {
         match self {
             Artifact::Module(m) => Some(m),
-            Artifact::Ast(_) | Artifact::Rtl(_) => None,
+            Artifact::Ast(_) | Artifact::Rtl(_) | Artifact::Kernels(_) => None,
         }
     }
 
@@ -108,7 +112,7 @@ impl Artifact {
     pub fn as_module_arc(&self) -> Option<&Arc<Module>> {
         match self {
             Artifact::Module(m) => Some(m),
-            Artifact::Ast(_) | Artifact::Rtl(_) => None,
+            Artifact::Ast(_) | Artifact::Rtl(_) | Artifact::Kernels(_) => None,
         }
     }
 
@@ -117,14 +121,24 @@ impl Artifact {
             Artifact::Module(m) => Ok(m),
             Artifact::Ast(_) => bail!("pipeline ended before AST lowering produced a module"),
             Artifact::Rtl(_) => bail!("pipeline ended at the rtl stage, not a module"),
+            Artifact::Kernels(_) => bail!("pipeline ended at the kernels stage, not a module"),
         }
     }
 
     pub fn into_rtl(self) -> Result<crate::backend::rtl::RtlSystem> {
         match self {
             Artifact::Rtl(system) => Ok(system),
-            Artifact::Ast(_) | Artifact::Module(_) => {
+            Artifact::Ast(_) | Artifact::Module(_) | Artifact::Kernels(_) => {
                 bail!("pipeline did not end with an rtl emission pass")
+            }
+        }
+    }
+
+    pub fn into_kernels(self) -> Result<Arc<crate::exec::KernelProgram>> {
+        match self {
+            Artifact::Kernels(k) => Ok(k),
+            Artifact::Ast(_) | Artifact::Module(_) | Artifact::Rtl(_) => {
+                bail!("pipeline did not end with a kernel compilation pass")
             }
         }
     }
@@ -138,6 +152,9 @@ fn require_module(pass: &str, artifact: Artifact) -> Result<Arc<Module>> {
         }
         Artifact::Rtl(_) => {
             bail!("pass `{pass}` requires an IR module, got an emitted rtl system")
+        }
+        Artifact::Kernels(_) => {
+            bail!("pass `{pass}` requires an IR module, got compiled kernels")
         }
     }
 }
@@ -340,6 +357,43 @@ impl Pass for Explicitize {
     }
 }
 
+/// Explicit/implicit IR → execution-kernel bytecode
+/// (`exec::compile_module`). Post-verification is the kernel program's
+/// structural validator, run like the RTL lint at the pass boundary.
+pub struct KernelCompile {
+    pub mode: crate::exec::KernelMode,
+}
+
+impl Pass for KernelCompile {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            crate::exec::KernelMode::Implicit => "kernel_compile_implicit",
+            crate::exec::KernelMode::Explicit => "kernel_compile",
+        }
+    }
+
+    fn input_stage(&self) -> PipelineStage {
+        match self.mode {
+            crate::exec::KernelMode::Implicit => PipelineStage::Implicit,
+            crate::exec::KernelMode::Explicit => PipelineStage::Explicit,
+        }
+    }
+
+    fn output_stage(&self) -> PipelineStage {
+        PipelineStage::Kernels
+    }
+
+    fn run(&self, artifact: Artifact, _opts: &CompileOptions) -> Result<Artifact> {
+        let module = require_module(self.name(), artifact)?;
+        // Unvalidated entry point: the manager's post-verification runs
+        // `KernelProgram::validate` at the pass boundary, so validating
+        // here too would walk every instruction twice.
+        Ok(Artifact::Kernels(Arc::new(crate::exec::compile::compile_module_unvalidated(
+            &module, self.mode,
+        )?)))
+    }
+}
+
 /// Wall-clock record of one pipeline pass.
 #[derive(Clone, Debug)]
 pub struct PassTiming {
@@ -463,6 +517,7 @@ impl PassManager {
             Artifact::Ast(_) => PipelineStage::Ast,
             Artifact::Module(_) => PipelineStage::Implicit,
             Artifact::Rtl(_) => PipelineStage::Rtl,
+            Artifact::Kernels(_) => PipelineStage::Kernels,
         };
         self.run_from(artifact, stage, opts, snapshot)
     }
@@ -515,7 +570,7 @@ impl PassManager {
             let funcs = match &artifact {
                 Artifact::Ast(p) => p.funcs.len() + p.externs.len(),
                 Artifact::Module(m) => m.funcs.len(),
-                Artifact::Rtl(_) => 0,
+                Artifact::Rtl(_) | Artifact::Kernels(_) => 0,
             };
             let t0 = Instant::now();
             artifact = pass.run(artifact, opts)?;
@@ -594,6 +649,18 @@ fn verify_artifact(
         if !errors.is_empty() {
             bail!(
                 "pass `{pass}`: {when}-verification (structural Verilog lint) failed:\n  {}",
+                errors.join("\n  ")
+            );
+        }
+        return Ok(());
+    }
+    // Likewise the kernels stage: its invariant check is the bytecode
+    // validator (slot/target/cost ranges, mode-legal ops).
+    if let Artifact::Kernels(prog) = artifact {
+        let errors = prog.validate();
+        if !errors.is_empty() {
+            bail!(
+                "pass `{pass}`: {when}-verification (kernel bytecode validator) failed:\n  {}",
                 errors.join("\n  ")
             );
         }

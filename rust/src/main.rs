@@ -4,7 +4,7 @@
 //! bombyx compile  <file.cilk> [--dae] [--dump implicit|explicit|cilk1] [--trace-stages]
 //! bombyx codegen  <file.cilk> [--dae] --out <dir> [--system <name>]
 //! bombyx estimate <file.cilk> [--dae]
-//! bombyx run      <file.cilk> <entry> [args...] [--dae] [--workers N]
+//! bombyx run      <file.cilk> <entry> [args...] [--dae] [--engine E] [--workers N] [--stats]
 //! bombyx sim      <file.cilk> <entry> [args...] [--dae] [--pes N] [--mem-latency N]
 //! bombyx bfs      [--depth D] [--branch B] [--pes N]     # paper §III experiment
 //! ```
@@ -101,7 +101,7 @@ fn print_usage() {
          bombyx compile-batch [files|dirs...] [--jobs N] [--no-dae] [--timings]   # default corpus: examples/cilk\n  \
          bombyx codegen  <file.cilk> [--target rtl|hardcilk] [--dae|--no-dae] --out <dir> [--system <name>]\n  \
          bombyx estimate <file.cilk> [--dae|--no-dae]\n  \
-         bombyx run      <file.cilk> <entry> [int args...] [--dae|--no-dae] [--workers N]\n  \
+         bombyx run      <file.cilk> <entry> [int args...] [--engine oracle|explicit|ws|sim] [--dae|--no-dae] [--workers N] [--stats]\n  \
          bombyx sim      <file.cilk> <entry> [int args...] [--dae|--no-dae] [--pes N] [--mem-latency N]\n  \
          bombyx bfs      [--depth D] [--branch B] [--pes N]\n\n\
          Sources containing `#pragma bombyx dae` compile with DAE enabled\n\
@@ -378,31 +378,136 @@ fn parse_task_args(flags: &Flags) -> Result<(String, Vec<Value>)> {
     Ok((entry, args))
 }
 
+/// `bombyx run <file> <entry> [args...] [--engine oracle|explicit|ws|sim]
+/// [--workers N] [--stats]` — one entry point over all four execution
+/// engines, all running the session's cached kernel program.
 fn cmd_run(args: &[String]) -> Result<()> {
-    let flags = parse_flags(args, &["workers"])?;
-    let session = load_session(&flags)?;
+    let flags = parse_flags(args, &["workers", "engine"])?;
+    let mut session = load_session(&flags)?;
     let (entry, task_args) = parse_task_args(&flags)?;
+    let engine = flags
+        .options
+        .get("engine")
+        .map(String::as_str)
+        .unwrap_or("ws")
+        .to_string();
+    let want_stats = flags.switches.contains("stats");
     let workers = flags
         .options
         .get("workers")
         .map(|w| w.parse::<usize>())
         .transpose()?
         .unwrap_or_else(|| WsConfig::default().workers);
-    let cfg = WsConfig { workers, steal_tries: 4 };
-    let (value, _, stats) = session.run_ws(
-        session.shared_memory(),
-        &entry,
-        &task_args,
-        &cfg,
-        Box::new(ws::NoXlaSink),
-    )?;
+
+    // Kernel compilation, session-cached: the oracle runs implicit-IR
+    // kernels, every other engine shares the explicit ones (timed via
+    // the `kernel_compile` pass).
+    let t0 = std::time::Instant::now();
+    if engine == "oracle" {
+        session.implicit_kernels()?;
+    } else {
+        session.kernels_timed()?;
+    }
+    let kernel_time = t0.elapsed();
+
+    let wall = std::time::Instant::now();
+    let (value, tasks) = match engine.as_str() {
+        "oracle" => {
+            let kernels = session.implicit_kernels()?;
+            let mut o = bombyx::interp::oracle::Oracle::with_kernels(
+                session.implicit(),
+                session.implicit_memory(),
+                bombyx::interp::NoXla,
+                kernels,
+            );
+            let value = o.run(&entry, &task_args)?;
+            if want_stats {
+                println!(
+                    "oracle: calls {}  spawns {}  loads {}  stores {}  max depth {}",
+                    commas(o.stats.calls),
+                    commas(o.stats.spawns),
+                    commas(o.stats.loads),
+                    commas(o.stats.stores),
+                    o.stats.max_depth
+                );
+            }
+            (value, o.stats.calls)
+        }
+        "explicit" => {
+            let kernels = session.explicit_kernels()?;
+            let mut ex = bombyx::interp::explicit_exec::ExplicitExec::with_kernels(
+                session.explicit(),
+                session.memory(),
+                bombyx::interp::NoXla,
+                kernels,
+            );
+            let value = ex.run(&entry, &task_args)?;
+            if want_stats {
+                println!(
+                    "explicit: tasks {}  closures {}  sends {}  max ready {}  max live closures {}",
+                    commas(ex.stats.tasks_run),
+                    commas(ex.stats.closures_made),
+                    commas(ex.stats.sends),
+                    ex.stats.max_ready,
+                    ex.stats.max_live_closures
+                );
+            }
+            (value, ex.stats.tasks_run)
+        }
+        "ws" => {
+            let cfg = WsConfig { workers, steal_tries: 4 };
+            let (value, _, stats) = session.run_ws(
+                session.shared_memory(),
+                &entry,
+                &task_args,
+                &cfg,
+                Box::new(ws::NoXlaSink),
+            )?;
+            println!(
+                "tasks: {}  steals: {}  closures: {}  workers: {workers}",
+                commas(stats.tasks_run),
+                commas(stats.steals),
+                commas(stats.closures_made)
+            );
+            if want_stats {
+                println!(
+                    "ws: max live closures {}  xla batches {}",
+                    commas(stats.max_live_closures),
+                    commas(stats.xla_batches)
+                );
+            }
+            (value, stats.tasks_run)
+        }
+        "sim" => {
+            let cfg = SimConfig::default();
+            let (value, _, stats) =
+                session.simulate(session.memory(), &entry, &task_args, &cfg, &mut NoSimXla)?;
+            println!(
+                "cycles: {} ({:.1} us @ {} MHz)   tasks: {}",
+                commas(stats.cycles),
+                cfg.cycles_to_us(stats.cycles),
+                cfg.freq_mhz,
+                commas(stats.tasks_run)
+            );
+            (value, stats.tasks_run)
+        }
+        other => bail!("unknown --engine `{other}` (expected oracle, explicit, ws or sim)"),
+    };
+    let wall = wall.elapsed();
     println!("result: {value}");
-    println!(
-        "tasks: {}  steals: {}  closures: {}  workers: {workers}",
-        commas(stats.tasks_run),
-        commas(stats.steals),
-        commas(stats.closures_made)
-    );
+    if want_stats {
+        let per_sec = if wall.as_secs_f64() > 0.0 {
+            tasks as f64 / wall.as_secs_f64()
+        } else {
+            0.0
+        };
+        println!(
+            "engine {engine}: wall {}  throughput {:.0} tasks/s  kernel compile {} (cached in session)",
+            bombyx::util::bench::fmt_duration(wall),
+            per_sec,
+            bombyx::util::bench::fmt_duration(kernel_time)
+        );
+    }
     Ok(())
 }
 

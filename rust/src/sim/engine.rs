@@ -2,9 +2,11 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::exec::{ArgList, KStack, KernelMode, KernelProgram};
 use crate::hls::{classify, PeClass};
 use crate::interp::Memory;
 use crate::ir::cfg::{FuncId, FuncKind, Module};
@@ -46,6 +48,9 @@ pub struct Engine<'m, 'x> {
     module: &'m Module,
     config: &'m SimConfig,
     xla: &'x mut dyn SimXla,
+    /// Compiled kernels shared with every other engine (session-cached
+    /// or compiled at construction).
+    kernels: Arc<KernelProgram>,
     state: FnState,
     channel: MemChannel,
     /// Task queues and PE groups, indexed by `FuncId` (dense tables —
@@ -62,6 +67,12 @@ pub struct Engine<'m, 'x> {
     result: Option<Value>,
     now: u64,
     max_queue_depth: usize,
+    /// Reused kernel frame stack (functional execution at dispatch).
+    stack: KStack,
+    /// Recycled per-dispatch trace buffers: a completed task's `Vec<Seg>`
+    /// returns here instead of being dropped, so steady-state dispatch
+    /// allocates no trace storage.
+    trace_pool: Vec<Vec<Seg>>,
     // XLA batching.
     xla_buffer: Vec<STask>,
     xla_busy_until: u64,
@@ -72,6 +83,17 @@ pub struct Engine<'m, 'x> {
 impl<'m, 'x> Engine<'m, 'x> {
     pub fn new(
         module: &'m Module,
+        memory: Memory,
+        config: &'m SimConfig,
+        xla: &'x mut dyn SimXla,
+    ) -> Result<Engine<'m, 'x>> {
+        let kernels = Arc::new(crate::exec::compile_module(module, KernelMode::Explicit)?);
+        Engine::new_with_kernels(module, kernels, memory, config, xla)
+    }
+
+    pub fn new_with_kernels(
+        module: &'m Module,
+        kernels: Arc<KernelProgram>,
         memory: Memory,
         config: &'m SimConfig,
         xla: &'x mut dyn SimXla,
@@ -95,6 +117,7 @@ impl<'m, 'x> Engine<'m, 'x> {
             module,
             config,
             xla,
+            kernels,
             state: FnState { memory, closures: Vec::new(), live_closures: 0, closures_made: 0 },
             channel: MemChannel::new(
                 config.mem_latency,
@@ -111,6 +134,8 @@ impl<'m, 'x> Engine<'m, 'x> {
             result: None,
             now: 0,
             max_queue_depth: 0,
+            stack: KStack::new(),
+            trace_pool: Vec::new(),
             xla_buffer: Vec::new(),
             xla_busy_until: 0,
             xla_flush_armed: false,
@@ -150,7 +175,7 @@ impl<'m, 'x> Engine<'m, 'x> {
             .module
             .func_by_name(entry)
             .ok_or_else(|| anyhow!("no task named `{entry}`"))?;
-        self.enqueue(0, STask { task: fid, args: args.to_vec(), cont: SCont::Root });
+        self.enqueue(0, STask { task: fid, args: ArgList::from_slice(args), cont: SCont::Root });
 
         while let Some(Reverse((t, _, payload))) = self.events.pop() {
             self.now = t.max(self.now);
@@ -197,6 +222,22 @@ impl<'m, 'x> Engine<'m, 'x> {
         Ok((result, self.state.memory, stats))
     }
 
+    /// Run a task functionally into a (pooled) trace buffer.
+    fn trace_into(&mut self, task: &STask) -> Result<Vec<Seg>> {
+        let mut trace = self.trace_pool.pop().unwrap_or_default();
+        trace.clear();
+        let kernels = Arc::clone(&self.kernels);
+        exec::trace_task(
+            &kernels,
+            &self.config.schedule,
+            &mut self.state,
+            task,
+            &mut self.stack,
+            &mut trace,
+        )?;
+        Ok(trace)
+    }
+
     fn dispatch(&mut self, t: u64, fid: FuncId) -> Result<()> {
         loop {
             let group = self.groups[fid.index()].as_mut().expect("PE group for task type");
@@ -208,8 +249,7 @@ impl<'m, 'x> Engine<'m, 'x> {
             let class = group.class;
             match class {
                 PeClass::Sequential => {
-                    let trace =
-                        exec::trace_task(self.module, &self.config.schedule, &mut self.state, &task)?;
+                    let trace = self.trace_into(&task)?;
                     let group = self.groups[fid.index()].as_mut().expect("PE group for task type");
                     group.busy[pe] = u64::MAX; // released at completion
                     group.stats.executed += 1;
@@ -227,8 +267,7 @@ impl<'m, 'x> Engine<'m, 'x> {
                     // PEs in this iteration.
                 }
                 PeClass::Pipelined { ii } => {
-                    let trace =
-                        exec::trace_task(self.module, &self.config.schedule, &mut self.state, &task)?;
+                    let trace = self.trace_into(&task)?;
                     let group = self.groups[fid.index()].as_mut().expect("PE group for task type");
                     group.busy[pe] = t + ii as u64;
                     group.stats.executed += 1;
@@ -275,9 +314,11 @@ impl<'m, 'x> Engine<'m, 'x> {
                 return Ok(());
             }
             let Some(seg) = r.trace.get(r.idx) else {
-                // Task complete: free the PE.
+                // Task complete: free the PE, recycle the trace buffer.
                 r.done = true;
                 let (task, pe, start) = (r.task, r.pe, r.start);
+                let trace = std::mem::take(&mut r.trace);
+                self.trace_pool.push(trace);
                 let group = self.groups[task.index()].as_mut().expect("PE group for task type");
                 group.busy[pe] = t;
                 group.stats.busy_cycles += t - start;
@@ -310,6 +351,7 @@ impl<'m, 'x> Engine<'m, 'x> {
                 self.apply_effect(t, e.clone())?;
             }
         }
+        self.trace_pool.push(trace);
         self.running[run].done = true;
         self.task_finished();
         Ok(())
@@ -324,23 +366,26 @@ impl<'m, 'x> Engine<'m, 'x> {
         match e {
             Effect::Spawn(task) => self.enqueue(t, task),
             Effect::ClosureStore { clos, slot, value } => {
-                let c = &mut self.state.closures[clos];
-                if c.freed {
-                    bail!("closure store after fire");
-                }
-                let ty = self.module.funcs[c.task].vars[crate::ir::VarId::new(slot as usize)].ty;
-                c.slots[slot as usize] = value.coerce(ty);
+                let task = {
+                    let c = &self.state.closures[clos];
+                    if c.freed {
+                        bail!("closure store after fire");
+                    }
+                    c.task
+                };
+                let ty = self.kernels.kernel(task).param_tys[slot as usize];
+                self.state.closures[clos].slots[slot as usize] = value.coerce(ty);
             }
             Effect::FillDecrement { clos, slot, value } => {
-                {
-                    let c = &mut self.state.closures[clos];
+                let task = {
+                    let c = &self.state.closures[clos];
                     if c.freed {
                         bail!("send_argument into freed closure");
                     }
-                    let ty =
-                        self.module.funcs[c.task].vars[crate::ir::VarId::new(slot as usize)].ty;
-                    c.slots[slot as usize] = value.coerce(ty);
-                }
+                    c.task
+                };
+                let ty = self.kernels.kernel(task).param_tys[slot as usize];
+                self.state.closures[clos].slots[slot as usize] = value.coerce(ty);
                 self.decrement(t, clos)?;
             }
             Effect::Decrement { clos } => self.decrement(t, clos)?,
@@ -366,7 +411,11 @@ impl<'m, 'x> Engine<'m, 'x> {
         if c.counter == 0 {
             c.freed = true;
             self.state.live_closures -= 1;
-            let task = STask { task: c.task, args: c.slots.clone(), cont: c.cont };
+            let task = STask {
+                task: c.task,
+                args: ArgList::from_slice(&c.slots),
+                cont: c.cont,
+            };
             self.enqueue(t, task);
         }
         Ok(())
@@ -379,7 +428,7 @@ impl<'m, 'x> Engine<'m, 'x> {
             return Ok(());
         }
         let t = t.max(self.xla_busy_until);
-        let batch: Vec<STask> = self
+        let mut batch: Vec<STask> = self
             .xla_buffer
             .drain(..self.xla_buffer.len().min(self.config.xla_batch as usize))
             .collect();
@@ -396,10 +445,16 @@ impl<'m, 'x> Engine<'m, 'x> {
         let done = t + latency;
         self.xla_busy_until = done;
         self.xla_batches += 1;
+        let kernels = Arc::clone(&self.kernels);
         for (fid, idxs) in groups {
-            let name = self.module.funcs[fid].name.clone();
-            let args: Vec<Vec<Value>> = idxs.iter().map(|&i| batch[i].args.clone()).collect();
-            let results = self.xla.exec_batch(&name, &args, &mut self.state.memory)?;
+            let name = &kernels.kernel(fid).name;
+            // Each index belongs to exactly one group: move the args out
+            // (same clone-free idiom as the ws runtime's flush).
+            let args: Vec<Vec<Value>> = idxs
+                .iter()
+                .map(|&i| std::mem::take(&mut batch[i].args).into_vec())
+                .collect();
+            let results = self.xla.exec_batch(name, &args, &mut self.state.memory)?;
             if results.len() != idxs.len() {
                 bail!("xla datapath returned {} results for {} rows", results.len(), idxs.len());
             }

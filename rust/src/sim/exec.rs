@@ -1,17 +1,24 @@
-//! Functional task execution → timed trace.
+//! Functional task execution → timed trace, driven by compiled kernels.
 //!
-//! At dispatch the simulator runs the task body functionally (same
-//! transition rules as the explicit executor) and records a *trace*:
-//! compute segments (cycles), memory loads (timed by the channel), and
-//! effects (spawns, sends, closure ops) at their program positions. The
-//! engine then replays the trace against the timing model.
+//! At dispatch the simulator runs the task body functionally (the same
+//! kernel bytecode every other engine executes — [`crate::exec`]) and
+//! records a *trace*: compute segments (cycles), memory loads (timed by
+//! the channel), and effects (spawns, sends, closure ops) at their
+//! program positions. The engine then replays the trace against the
+//! timing model.
+//!
+//! Cycle charging comes from the per-instruction [`crate::exec::KCost`]
+//! metadata attached at kernel-compile time (mirroring
+//! `hls::op_cycles`), resolved against the run's [`ScheduleModel`] —
+//! no expression trees are walked during simulation.
 
 use anyhow::{bail, Result};
 
-use crate::hls::{op_cycles, ScheduleModel};
+use crate::exec::{run_kernel, ArgList, KCost, KStack, KernelProgram, KontRef, Machine};
+use crate::hls::ScheduleModel;
 use crate::interp::Memory;
-use crate::ir::cfg::{FuncId, FuncKind, Module, Op, RetTarget, Term};
-use crate::ir::expr::{self, Value, VarId};
+use crate::ir::cfg::{FuncId, FuncKind, GlobalId};
+use crate::ir::expr::Value;
 
 /// Continuation reference (closure handles index the engine's heap).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,7 +42,7 @@ pub struct SClosure {
 #[derive(Clone, Debug)]
 pub struct STask {
     pub task: FuncId,
-    pub args: Vec<Value>,
+    pub args: ArgList,
     pub cont: SCont,
 }
 
@@ -81,157 +88,138 @@ impl FnState {
     }
 }
 
-/// Execute `inst` functionally, emitting the trace. Spawned children are
-/// created as `STask`s inside `Effect::Spawn`; counters change only when
-/// the engine applies effects (timed), keeping join order physical.
+/// The simulator's [`Machine`]: functional memory reads happen at trace
+/// time; task/closure effects are *recorded* (applied later by the
+/// engine at their simulated times — counters excepted: the spawner's
+/// increment happens-before the child exists, exactly as in the WS
+/// runtime).
+struct SimMachine<'a> {
+    prog: &'a KernelProgram,
+    model: &'a ScheduleModel,
+    state: &'a mut FnState,
+    trace: &'a mut Vec<Seg>,
+    cont: SCont,
+}
+
+impl<'a> Machine for SimMachine<'a> {
+    #[inline]
+    fn charge(&mut self, cost: &KCost) {
+        push_compute(self.trace, cost.cycles(self.model));
+    }
+
+    fn load(&mut self, arr: GlobalId, index: i64) -> Result<Value> {
+        let v = self.state.memory.load(arr, index)?;
+        self.trace.push(Seg::Load);
+        Ok(v)
+    }
+
+    fn store(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()> {
+        self.state.memory.store(arr, index, value)
+    }
+
+    fn atomic_add(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()> {
+        self.state.memory.atomic_add(arr, index, value)
+    }
+
+    fn make_closure(&mut self, task: FuncId) -> Result<Value> {
+        let slots: Vec<Value> = self
+            .prog
+            .kernel(task)
+            .param_tys
+            .iter()
+            .map(|&t| Value::zero_of(t))
+            .collect();
+        let handle = self.state.alloc_closure(SClosure {
+            task,
+            slots,
+            cont: self.cont,
+            counter: 1,
+            freed: false,
+        });
+        Ok(Value::I64(handle as i64))
+    }
+
+    fn closure_store(&mut self, clos: Value, field: u32, value: Value) -> Result<()> {
+        self.trace.push(Seg::Effect(Effect::ClosureStore {
+            clos: clos.as_i64() as usize,
+            slot: field,
+            value,
+        }));
+        Ok(())
+    }
+
+    fn spawn_child(&mut self, callee: FuncId, args: &[Value], ret: KontRef) -> Result<()> {
+        let cont = match ret {
+            KontRef::Slot { clos, field } => {
+                let h = clos.as_i64() as usize;
+                self.state.closures[h].counter += 1;
+                SCont::Slot { clos: h, slot: field }
+            }
+            KontRef::Counter { clos } => {
+                let h = clos.as_i64() as usize;
+                self.state.closures[h].counter += 1;
+                SCont::Counter { clos: h }
+            }
+            KontRef::Forward => self.cont,
+        };
+        self.trace.push(Seg::Effect(Effect::Spawn(STask {
+            task: callee,
+            args: ArgList::from_slice(args),
+            cont,
+        })));
+        Ok(())
+    }
+
+    fn close_spawns(&mut self, clos: Value) -> Result<()> {
+        self.trace
+            .push(Seg::Effect(Effect::Decrement { clos: clos.as_i64() as usize }));
+        Ok(())
+    }
+
+    fn send_argument(&mut self, value: Value) -> Result<()> {
+        self.trace.push(Seg::Effect(deliver_effect(self.cont, value)));
+        Ok(())
+    }
+}
+
+/// Execute `inst` functionally, appending its trace to `trace` (a
+/// caller-owned scratch buffer, recycled across dispatches by the
+/// engine's trace pool).
 pub fn trace_task(
-    module: &Module,
+    prog: &KernelProgram,
     model: &ScheduleModel,
     state: &mut FnState,
     inst: &STask,
-) -> Result<Vec<Seg>> {
-    let func = &module.funcs[inst.task];
-    let mut trace = Vec::new();
+    stack: &mut KStack,
+    trace: &mut Vec<Seg>,
+) -> Result<()> {
+    let kind = prog.kernel(inst.task).kind;
     trace.push(Seg::Compute(model.task_read));
-    match func.kind {
-        FuncKind::Xla => bail!("xla task `{}` must go to the XLA PE", func.name),
+    match kind {
+        FuncKind::Xla => {
+            bail!("xla task `{}` must go to the XLA PE", prog.kernel(inst.task).name)
+        }
         FuncKind::Leaf => {
             // A spawned leaf: its body is sequential; loads are timed.
-            let value = eval_body(module, model, state, inst.task, &inst.args, &mut trace)?;
-            trace.push(Seg::Effect(deliver_effect(inst.cont, value)));
-            return Ok(trace);
+            let cont = inst.cont;
+            let mut machine =
+                SimMachine { prog, model, state: &mut *state, trace: &mut *trace, cont };
+            let value =
+                run_kernel(prog, inst.task, inst.args.as_slice(), stack, &mut machine, 50_000_000)?;
+            trace.push(Seg::Effect(deliver_effect(cont, value)));
         }
-        FuncKind::Task => {}
-    }
-    let cfg = func.cfg();
-    if inst.args.len() != func.params {
-        bail!("task `{}` arity mismatch", func.name);
-    }
-    let mut env: Vec<Value> = func.vars.values().map(|v| Value::zero_of(v.ty)).collect();
-    for (i, a) in inst.args.iter().enumerate() {
-        env[i] = a.coerce(func.vars[VarId::new(i)].ty);
-    }
-    let mut block = cfg.entry;
-    let mut steps = 0u64;
-    loop {
-        steps += 1;
-        if steps > 50_000_000 {
-            bail!("task `{}` exceeded step limit", func.name);
-        }
-        let b = &cfg.blocks[block];
-        for op in &b.ops {
-            let cycles = op_cycles(model, op);
-            match op {
-                Op::Assign { dst, src } => {
-                    let v = expr::eval(src, &|v| env[v.index()]);
-                    env[dst.index()] = v.coerce(func.vars[*dst].ty);
-                    push_compute(&mut trace, cycles);
-                }
-                Op::Load { dst, arr, index, .. } => {
-                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                    env[dst.index()] = state.memory.load(*arr, idx)?;
-                    push_compute(&mut trace, cycles);
-                    trace.push(Seg::Load);
-                }
-                Op::Store { arr, index, value } => {
-                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                    let val = expr::eval(value, &|v| env[v.index()]);
-                    state.memory.store(*arr, idx, val)?;
-                    push_compute(&mut trace, cycles);
-                }
-                Op::AtomicAdd { arr, index, value } => {
-                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                    let val = expr::eval(value, &|v| env[v.index()]);
-                    state.memory.atomic_add(*arr, idx, val)?;
-                    push_compute(&mut trace, cycles);
-                }
-                Op::Call { dst, callee, args } => {
-                    let vals: Vec<Value> =
-                        args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
-                    // Inlined leaf body: timed inline (its loads block us).
-                    let r = eval_body(module, model, state, *callee, &vals, &mut trace)?;
-                    if let Some(d) = dst {
-                        env[d.index()] = r.coerce(func.vars[*d].ty);
-                    }
-                }
-                Op::MakeClosure { dst, task } => {
-                    let t = &module.funcs[*task];
-                    let handle = state.alloc_closure(SClosure {
-                        task: *task,
-                        slots: t.param_ids().map(|p| Value::zero_of(t.vars[p].ty)).collect(),
-                        cont: inst.cont,
-                        counter: 1,
-                        freed: false,
-                    });
-                    env[dst.index()] = Value::I64(handle as i64);
-                    push_compute(&mut trace, cycles);
-                }
-                Op::ClosureStore { clos, field, value } => {
-                    let h = env[clos.index()].as_i64() as usize;
-                    let val = expr::eval(value, &|v| env[v.index()]);
-                    push_compute(&mut trace, cycles);
-                    trace.push(Seg::Effect(Effect::ClosureStore {
-                        clos: h,
-                        slot: *field,
-                        value: val,
-                    }));
-                }
-                Op::SpawnChild { callee, args, ret } => {
-                    let vals: Vec<Value> =
-                        args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
-                    let cont = match ret {
-                        RetTarget::Slot { clos, field } => {
-                            let h = env[clos.index()].as_i64() as usize;
-                            // Counter increments NOW (functionally) — the
-                            // spawner's increment happens-before the child
-                            // exists, exactly as in the WS runtime.
-                            state.closures[h].counter += 1;
-                            SCont::Slot { clos: h, slot: *field }
-                        }
-                        RetTarget::Counter { clos } => {
-                            let h = env[clos.index()].as_i64() as usize;
-                            state.closures[h].counter += 1;
-                            SCont::Counter { clos: h }
-                        }
-                        RetTarget::Forward => inst.cont,
-                    };
-                    push_compute(&mut trace, cycles);
-                    trace.push(Seg::Effect(Effect::Spawn(STask {
-                        task: *callee,
-                        args: vals,
-                        cont,
-                    })));
-                }
-                Op::CloseSpawns { clos } => {
-                    let h = env[clos.index()].as_i64() as usize;
-                    push_compute(&mut trace, cycles);
-                    trace.push(Seg::Effect(Effect::Decrement { clos: h }));
-                }
-                Op::SendArgument { value } => {
-                    let v = match value {
-                        Some(e) => expr::eval(e, &|v| env[v.index()]).coerce(func.ret),
-                        None => Value::Unit,
-                    };
-                    push_compute(&mut trace, cycles);
-                    trace.push(Seg::Effect(deliver_effect(inst.cont, v)));
-                }
-                Op::Spawn { .. } => bail!("implicit Spawn in explicit IR"),
-            }
-        }
-        match &b.term {
-            Term::Jump(next) => {
-                push_compute(&mut trace, model.branch);
-                block = *next;
-            }
-            Term::Branch { cond, then_, else_ } => {
-                push_compute(&mut trace, model.branch);
-                let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
-                block = if c { *then_ } else { *else_ };
-            }
-            Term::Halt => return Ok(trace),
-            other => bail!("terminator {other:?} in explicit task `{}`", func.name),
+        FuncKind::Task => {
+            let mut machine = SimMachine {
+                prog,
+                model,
+                state: &mut *state,
+                trace: &mut *trace,
+                cont: inst.cont,
+            };
+            run_kernel(prog, inst.task, inst.args.as_slice(), stack, &mut machine, 50_000_000)?;
         }
     }
+    Ok(())
 }
 
 pub fn deliver_effect(cont: SCont, value: Value) -> Effect {
@@ -242,7 +230,7 @@ pub fn deliver_effect(cont: SCont, value: Value) -> Effect {
     }
 }
 
-fn push_compute(trace: &mut Vec<Seg>, cycles: u32) {
+pub fn push_compute(trace: &mut Vec<Seg>, cycles: u32) {
     if cycles == 0 {
         return;
     }
@@ -250,86 +238,5 @@ fn push_compute(trace: &mut Vec<Seg>, cycles: u32) {
         *c += cycles;
     } else {
         trace.push(Seg::Compute(cycles));
-    }
-}
-
-/// Sequentially evaluate a leaf body, timing its ops into `trace`.
-fn eval_body(
-    module: &Module,
-    model: &ScheduleModel,
-    state: &mut FnState,
-    fid: FuncId,
-    args: &[Value],
-    trace: &mut Vec<Seg>,
-) -> Result<Value> {
-    let func = &module.funcs[fid];
-    if func.kind != FuncKind::Leaf {
-        bail!("sequential call to non-leaf `{}`", func.name);
-    }
-    let cfg = func.cfg();
-    let mut env: Vec<Value> = func.vars.values().map(|v| Value::zero_of(v.ty)).collect();
-    for (i, a) in args.iter().enumerate() {
-        env[i] = a.coerce(func.vars[VarId::new(i)].ty);
-    }
-    let mut block = cfg.entry;
-    let mut steps = 0u64;
-    loop {
-        steps += 1;
-        if steps > 50_000_000 {
-            bail!("leaf `{}` exceeded step limit", func.name);
-        }
-        let b = &cfg.blocks[block];
-        for op in &b.ops {
-            let cycles = op_cycles(model, op);
-            match op {
-                Op::Assign { dst, src } => {
-                    let v = expr::eval(src, &|v| env[v.index()]);
-                    env[dst.index()] = v.coerce(func.vars[*dst].ty);
-                    push_compute(trace, cycles);
-                }
-                Op::Load { dst, arr, index, .. } => {
-                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                    env[dst.index()] = state.memory.load(*arr, idx)?;
-                    push_compute(trace, cycles);
-                    trace.push(Seg::Load);
-                }
-                Op::Store { arr, index, value } => {
-                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                    let val = expr::eval(value, &|v| env[v.index()]);
-                    state.memory.store(*arr, idx, val)?;
-                    push_compute(trace, cycles);
-                }
-                Op::AtomicAdd { arr, index, value } => {
-                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                    let val = expr::eval(value, &|v| env[v.index()]);
-                    state.memory.atomic_add(*arr, idx, val)?;
-                    push_compute(trace, cycles);
-                }
-                Op::Call { dst, callee, args } => {
-                    let vals: Vec<Value> =
-                        args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
-                    let r = eval_body(module, model, state, *callee, &vals, trace)?;
-                    if let Some(d) = dst {
-                        env[d.index()] = r.coerce(func.vars[*d].ty);
-                    }
-                }
-                other => bail!("op {other:?} in leaf `{}`", func.name),
-            }
-        }
-        match &b.term {
-            Term::Jump(next) => block = *next,
-            Term::Branch { cond, then_, else_ } => {
-                push_compute(trace, model.branch);
-                let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
-                block = if c { *then_ } else { *else_ };
-            }
-            Term::Return(value) => {
-                return Ok(match value {
-                    Some(e) => expr::eval(e, &|v| env[v.index()]).coerce(func.ret),
-                    None => Value::Unit,
-                })
-            }
-            other => bail!("terminator {other:?} in leaf `{}`", func.name),
-        }
     }
 }

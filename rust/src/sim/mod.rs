@@ -153,6 +153,9 @@ impl SimXla for NoSimXla {
 }
 
 /// Run the simulator: returns the root result, final memory and stats.
+/// Compiles the module's execution kernels on entry — use
+/// [`simulate_with_kernels`] (or the session API) to reuse a cached
+/// [`crate::exec::KernelProgram`].
 pub fn simulate(
     module: &Module,
     memory: Memory,
@@ -162,6 +165,19 @@ pub fn simulate(
     xla: &mut dyn SimXla,
 ) -> Result<(Value, Memory, SimStats)> {
     engine::Engine::new(module, memory, config, xla)?.run(entry, args)
+}
+
+/// [`simulate`] over an already-compiled kernel program.
+pub fn simulate_with_kernels(
+    module: &Module,
+    kernels: std::sync::Arc<crate::exec::KernelProgram>,
+    memory: Memory,
+    entry: &str,
+    args: &[Value],
+    config: &SimConfig,
+    xla: &mut dyn SimXla,
+) -> Result<(Value, Memory, SimStats)> {
+    engine::Engine::new_with_kernels(module, kernels, memory, config, xla)?.run(entry, args)
 }
 
 #[cfg(test)]

@@ -9,10 +9,17 @@
 //! Slots are `AtomicU64` bit patterns; each hole is written by exactly one
 //! child (the task graph guarantees it), and the release-ordering on the
 //! final decrement makes those writes visible to the firing thread.
+//!
+//! The registry is a set of per-worker *arenas*: each worker inserts into
+//! its own shard (shard hint = worker id), and every shard keeps a free
+//! list so fired slots are recycled instead of growing the table without
+//! bound. Global live/peak counters feed the runtime's closure-footprint
+//! stats without scanning.
 
-use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::exec::ArgList;
 use crate::frontend::ast::Type;
 use crate::ir::cfg::FuncId;
 use crate::ir::expr::Value;
@@ -32,7 +39,9 @@ pub enum Cont {
 pub struct SharedClosure {
     pub task: FuncId,
     pub slots: Vec<AtomicU64>,
-    pub slot_tys: Vec<Type>,
+    /// Shared with the task's compiled kernel — no per-closure type
+    /// vector allocation.
+    pub slot_tys: Arc<[Type]>,
     /// The continuation of the task that created this closure (where the
     /// continuation task will eventually send *its* result).
     pub cont: Mutex<Option<Cont>>,
@@ -43,7 +52,7 @@ pub struct SharedClosure {
 }
 
 impl SharedClosure {
-    pub fn new(task: FuncId, slot_tys: Vec<Type>, cont: Cont) -> SharedClosure {
+    pub fn new(task: FuncId, slot_tys: Arc<[Type]>, cont: Cont) -> SharedClosure {
         SharedClosure {
             task,
             slots: slot_tys
@@ -87,13 +96,11 @@ impl SharedClosure {
     }
 
     /// Snapshot the argument values (call only after `release()` returned
-    /// true).
-    pub fn take_args(&self) -> Vec<Value> {
-        self.slots
-            .iter()
-            .zip(&self.slot_tys)
-            .map(|(s, &t)| Value::from_bits(t, s.load(Ordering::Relaxed)))
-            .collect()
+    /// true). Inline for small arities — no allocation on the fire path.
+    pub fn take_args(&self) -> ArgList {
+        ArgList::from_fn(self.slots.len(), |i| {
+            Value::from_bits(self.slot_tys[i], self.slots[i].load(Ordering::Relaxed))
+        })
     }
 
     pub fn take_cont(&self) -> Cont {
@@ -105,60 +112,129 @@ impl SharedClosure {
     }
 }
 
+struct Shard {
+    /// (generation, closure). The generation bumps on every reuse of an
+    /// entry, and is packed into the handle — so a stale handle from a
+    /// fired closure still fails loudly instead of silently resolving to
+    /// whatever closure recycled the slot.
+    entries: Vec<(u32, Option<Arc<SharedClosure>>)>,
+    /// Recycled entry indices (the per-arena free list).
+    free: Vec<usize>,
+}
+
 /// Per-task-local closure handle table: `MakeClosure` handles are local
 /// integer values; the registry resolves them when they cross task
 /// boundaries as parameters (a closure handle is an ordinary i64 in the
 /// IR).
 ///
-/// Handles are indices into a global append-only sharded table, so they
-/// remain valid when passed between tasks/threads. Entries are dropped when
-/// fired (the Arc keeps in-flight references alive).
+/// Handles are `(generation << 32) | (index << shard_bits) | shard` into
+/// per-worker sharded arenas; entries are dropped when fired (the `Arc`
+/// keeps in-flight references alive) and their indices recycled through
+/// the shard's free list, with the generation guarding against stale
+/// handles hitting a recycled slot.
 pub struct Registry {
-    shards: Vec<Mutex<Vec<Option<Arc<SharedClosure>>>>>,
+    shards: Vec<Mutex<Shard>>,
     shard_bits: u32,
+    live: AtomicUsize,
+    peak: AtomicUsize,
 }
+
+/// Bits of a handle below the generation tag.
+const GEN_SHIFT: u32 = 32;
 
 impl Registry {
     pub fn new(shards: usize) -> Registry {
         let shards = shards.next_power_of_two();
         Registry {
-            shards: (0..shards).map(|_| Mutex::new(Vec::new())).collect(),
+            shards: (0..shards)
+                .map(|_| Mutex::new(Shard { entries: Vec::new(), free: Vec::new() }))
+                .collect(),
             shard_bits: shards.trailing_zeros(),
+            live: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
         }
     }
 
-    /// Register a closure; returns its global handle.
-    pub fn insert(&self, clos: Arc<SharedClosure>, shard_hint: usize) -> i64 {
-        let shard = shard_hint & (self.shards.len() - 1);
-        let mut v = self.shards[shard].lock().unwrap();
-        let idx = v.len();
-        v.push(Some(clos));
-        ((idx as i64) << self.shard_bits) | shard as i64
+    #[inline]
+    fn decode(&self, handle: i64) -> (usize, usize, u32) {
+        let low = (handle as u64 & 0xFFFF_FFFF) as usize;
+        let shard = low & (self.shards.len() - 1);
+        let idx = low >> self.shard_bits;
+        let gen = (handle as u64 >> GEN_SHIFT) as u32;
+        (shard, idx, gen)
     }
 
-    /// Resolve a handle to its closure.
+    /// Register a closure; returns its global handle. `shard_hint` is the
+    /// inserting worker's id, so each worker allocates from its own arena.
+    pub fn insert(&self, clos: Arc<SharedClosure>, shard_hint: usize) -> i64 {
+        let shard = shard_hint & (self.shards.len() - 1);
+        let (idx, gen) = {
+            let mut s = self.shards[shard].lock().unwrap();
+            match s.free.pop() {
+                Some(idx) => {
+                    // Reuse bumps the generation so stale handles to the
+                    // fired previous occupant stay detectable.
+                    let gen = s.entries[idx].0.wrapping_add(1) & 0x7FFF_FFFF;
+                    s.entries[idx] = (gen, Some(clos));
+                    (idx, gen)
+                }
+                None => {
+                    s.entries.push((0, Some(clos)));
+                    (s.entries.len() - 1, 0)
+                }
+            }
+        };
+        // The handle packs the index into 32 - shard_bits bits; blowing
+        // that budget must fail loudly, not bleed into the generation.
+        assert!(
+            idx < 1usize << (GEN_SHIFT - self.shard_bits),
+            "closure arena shard overflow ({idx} live entries)"
+        );
+        let live = self.live.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak.fetch_max(live, Ordering::Relaxed);
+        ((gen as i64) << GEN_SHIFT) | ((idx as i64) << self.shard_bits) | shard as i64
+    }
+
+    /// Resolve a handle to its closure. Panics on a stale handle (the
+    /// slot was fired — and possibly recycled — since): that is a
+    /// join-counter or lowering bug, and must fail loudly.
     pub fn get(&self, handle: i64) -> Arc<SharedClosure> {
-        let shard = (handle as usize) & (self.shards.len() - 1);
-        let idx = (handle >> self.shard_bits) as usize;
-        self.shards[shard].lock().unwrap()[idx]
+        let (shard, idx, gen) = self.decode(handle);
+        let s = self.shards[shard].lock().unwrap();
+        let (cur_gen, entry) = &s.entries[idx];
+        assert_eq!(*cur_gen, gen, "closure handle resolved after firing (slot recycled)");
+        entry
             .as_ref()
             .expect("closure handle resolved after firing")
             .clone()
     }
 
-    /// Drop the registry's reference once fired (handle becomes invalid).
+    /// Drop the registry's reference once fired; the entry index returns
+    /// to the arena's free list. A stale handle (double fire) must panic
+    /// even in release — silently evicting the slot's new occupant and
+    /// double-pushing the free index would corrupt unrelated joins.
     pub fn remove(&self, handle: i64) {
-        let shard = (handle as usize) & (self.shards.len() - 1);
-        let idx = (handle >> self.shard_bits) as usize;
-        self.shards[shard].lock().unwrap()[idx] = None;
+        let (shard, idx, gen) = self.decode(handle);
+        {
+            let mut s = self.shards[shard].lock().unwrap();
+            assert_eq!(
+                s.entries[idx].0, gen,
+                "closure removed with a stale handle (fired twice?)"
+            );
+            s.entries[idx].1 = None;
+            s.free.push(idx);
+        }
+        self.live.fetch_sub(1, Ordering::Relaxed);
     }
 
     /// Number of live (unfired) closures — leak detector for tests.
     pub fn live(&self) -> usize {
-        self.shards
-            .iter()
-            .map(|s| s.lock().unwrap().iter().filter(|e| e.is_some()).count())
-            .sum()
+        self.live.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of live closures over the registry's lifetime.
+    pub fn live_peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
     }
 }
 
@@ -166,9 +242,13 @@ impl Registry {
 mod tests {
     use super::*;
 
+    fn tys(list: &[Type]) -> Arc<[Type]> {
+        list.to_vec().into()
+    }
+
     #[test]
     fn counter_protocol() {
-        let c = SharedClosure::new(FuncId::new(0), vec![Type::Int, Type::Int], Cont::Root);
+        let c = SharedClosure::new(FuncId::new(0), tys(&[Type::Int, Type::Int]), Cont::Root);
         c.hold(); // child 1
         c.hold(); // child 2
         assert!(!c.release(), "child 1 completes");
@@ -176,13 +256,13 @@ mod tests {
         assert!(!c.release(), "child 2 completes");
         c.fill(1, Value::I64(8));
         assert!(c.release(), "creator drops hold -> fires");
-        assert_eq!(c.take_args(), vec![Value::I64(7), Value::I64(8)]);
+        assert_eq!(&c.take_args()[..], &[Value::I64(7), Value::I64(8)]);
     }
 
     #[test]
     fn concurrent_releases_fire_exactly_once() {
         for _ in 0..50 {
-            let c = Arc::new(SharedClosure::new(FuncId::new(0), vec![], Cont::Root));
+            let c = Arc::new(SharedClosure::new(FuncId::new(0), tys(&[]), Cont::Root));
             let n = 8;
             for _ in 0..n {
                 c.hold();
@@ -209,12 +289,14 @@ mod tests {
     #[test]
     fn registry_roundtrip_and_remove() {
         let r = Registry::new(8);
-        let c = Arc::new(SharedClosure::new(FuncId::new(3), vec![Type::Int], Cont::Root));
+        let c = Arc::new(SharedClosure::new(FuncId::new(3), tys(&[Type::Int]), Cont::Root));
         let h = r.insert(c.clone(), 5);
         assert_eq!(r.get(h).task, FuncId::new(3));
         assert_eq!(r.live(), 1);
+        assert_eq!(r.live_peak(), 1);
         r.remove(h);
         assert_eq!(r.live(), 0);
+        assert_eq!(r.live_peak(), 1, "peak sticks");
         // The Arc we hold keeps the closure alive regardless.
         assert_eq!(c.task, FuncId::new(3));
     }
@@ -224,8 +306,35 @@ mod tests {
         let r = Registry::new(4);
         let mut handles = std::collections::HashSet::new();
         for i in 0..100 {
-            let c = Arc::new(SharedClosure::new(FuncId::new(0), vec![], Cont::Root));
+            let c = Arc::new(SharedClosure::new(FuncId::new(0), tys(&[]), Cont::Root));
             assert!(handles.insert(r.insert(c, i)));
         }
+    }
+
+    #[test]
+    fn free_list_recycles_slots_with_fresh_generation() {
+        let r = Registry::new(2);
+        let mk = || Arc::new(SharedClosure::new(FuncId::new(0), tys(&[]), Cont::Root));
+        let h1 = r.insert(mk(), 0);
+        r.remove(h1);
+        let h2 = r.insert(mk(), 0);
+        // Same slot (low bits), new generation (high bits).
+        assert_ne!(h1, h2, "recycled slot must carry a new generation");
+        assert_eq!(h1 as u32, h2 as u32, "same arena slot is reused");
+        let h3 = r.insert(mk(), 0);
+        assert_ne!(h2, h3);
+        assert_eq!(r.live(), 2);
+        assert_eq!(r.live_peak(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "closure handle resolved after firing")]
+    fn stale_handle_into_recycled_slot_fails_loudly() {
+        let r = Registry::new(2);
+        let mk = || Arc::new(SharedClosure::new(FuncId::new(0), tys(&[]), Cont::Root));
+        let h1 = r.insert(mk(), 0);
+        r.remove(h1);
+        let _h2 = r.insert(mk(), 0); // recycles h1's slot
+        let _ = r.get(h1); // stale: must panic, not alias _h2's closure
     }
 }

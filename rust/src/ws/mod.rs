@@ -5,25 +5,35 @@
 //! IR executed in software to verify the rewrite preserves the original
 //! program's semantics. Architecture:
 //!
-//! - one worker thread per core (configurable), each with its own deque
-//!   (owner pushes/pops the hot end, thieves steal the cold end);
-//! - closures live in a sharded registry ([`closure`]); join counters are
-//!   atomics — a closure fires on the thread that decrements it to zero;
+//! - one worker thread per core (configurable), each with its own
+//!   lock-free Chase–Lev deque ([`deque`]): the owner pushes/pops the hot
+//!   end with no synchronization beyond a fence, thieves CAS the cold
+//!   end — no mutex anywhere on the task path;
+//! - task bodies are precompiled register bytecode ([`crate::exec`]),
+//!   shared with every other engine; a worker's dispatch allocates
+//!   nothing (reused frame stack, inline argument lists);
+//! - closures live in per-worker arenas with free lists ([`closure`]);
+//!   join counters are atomics — a closure fires on the thread that
+//!   decrements it to zero;
 //! - shared memory ([`shared_mem`]) is word-atomic, matching the FPGA HBM
 //!   model (benign races like BFS's visited flags behave as in hardware);
+//! - idle thieves back off exponentially (spin, then park with a growing
+//!   timeout) instead of hammering victims;
 //! - `extern xla` tasks are routed to a batch sink (scalar reference
 //!   implementation in tests; the AOT XLA executable in production —
 //!   `coordinator::batcher`).
 
 pub mod closure;
+pub mod deque;
 pub mod shared_mem;
 pub mod worker;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::exec::{ArgList, KernelMode, KernelProgram};
 use crate::ir::cfg::Module;
 use crate::ir::expr::Value;
 
@@ -89,13 +99,19 @@ pub struct WsStats {
     pub tasks_run: u64,
     pub steals: u64,
     pub closures_made: u64,
+    /// High-water mark of simultaneously live closures (registry peak).
+    pub max_live_closures: u64,
     pub xla_batches: u64,
     pub xla_tasks: u64,
 }
 
-/// Shared coordination state across workers.
-pub(crate) struct Shared<'m> {
-    pub module: &'m Module,
+/// Shared coordination state across workers. The compiled kernel program
+/// is the single source of truth for task metadata (names, kinds,
+/// parameter types) — the module it was compiled from is only consulted
+/// before construction, for the entry-point lookup.
+pub(crate) struct Shared {
+    /// Compiled task kernels (session-cached or compiled at entry).
+    pub kernels: Arc<KernelProgram>,
     pub memory: SharedMemory,
     pub registry: Registry,
     /// Tasks created but not yet finished (termination detection).
@@ -104,10 +120,10 @@ pub(crate) struct Shared<'m> {
     pub error: Mutex<Option<anyhow::Error>>,
     pub failed: AtomicBool,
     pub done: AtomicBool,
-    /// Per-worker deques (Mutex-based; stealing is rare on the fast path).
-    pub deques: Vec<Mutex<std::collections::VecDeque<worker::WsTask>>>,
+    /// Per-worker lock-free deques (owner hot end, thief cold end).
+    pub deques: Vec<deque::Deque<worker::WsTask>>,
     /// Queue of xla task instances awaiting batch execution.
-    pub xla_queue: Mutex<Vec<(crate::ir::FuncId, Vec<Value>, Cont)>>,
+    pub xla_queue: Mutex<Vec<(crate::ir::FuncId, ArgList, Cont)>>,
     pub xla_sink: Box<dyn XlaSink>,
     /// Parked-worker wakeup.
     pub idle_lock: Mutex<()>,
@@ -117,7 +133,8 @@ pub(crate) struct Shared<'m> {
 }
 
 /// Run a task program on the WS runtime; returns the root result, final
-/// memory and stats.
+/// memory and stats. Compiles the kernel program on entry — use
+/// [`run_with_kernels`] (or the session API) to reuse a cached one.
 pub fn run(
     module: &Module,
     memory: SharedMemory,
@@ -126,12 +143,26 @@ pub fn run(
     config: &WsConfig,
     xla_sink: Box<dyn XlaSink>,
 ) -> Result<(Value, SharedMemory, WsStats)> {
-    let fid = module
+    let kernels = Arc::new(crate::exec::compile_module(module, KernelMode::Explicit)?);
+    run_with_kernels(kernels, memory, name, args, config, xla_sink)
+}
+
+/// [`run`] over an already-compiled kernel program (the single source of
+/// truth for task metadata — no module handle to drift out of sync).
+pub fn run_with_kernels(
+    kernels: Arc<KernelProgram>,
+    memory: SharedMemory,
+    name: &str,
+    args: &[Value],
+    config: &WsConfig,
+    xla_sink: Box<dyn XlaSink>,
+) -> Result<(Value, SharedMemory, WsStats)> {
+    let fid = kernels
         .func_by_name(name)
         .ok_or_else(|| anyhow!("no task named `{name}`"))?;
     let workers = config.workers.max(1);
     let shared = Shared {
-        module,
+        kernels,
         memory,
         registry: Registry::new(64),
         pending: AtomicU64::new(1),
@@ -139,18 +170,18 @@ pub fn run(
         error: Mutex::new(None),
         failed: AtomicBool::new(false),
         done: AtomicBool::new(false),
-        deques: (0..workers)
-            .map(|_| Mutex::new(std::collections::VecDeque::new()))
-            .collect(),
+        deques: (0..workers).map(|_| deque::Deque::new()).collect(),
         xla_queue: Mutex::new(Vec::new()),
         xla_sink,
         idle_lock: Mutex::new(()),
         idle_cv: Condvar::new(),
         idle_workers: AtomicU64::new(0),
     };
-    shared.deques[0].lock().unwrap().push_back(worker::WsTask {
+    // Root push happens before any worker exists — the owner-only push
+    // restriction concerns concurrent use.
+    shared.deques[0].push(worker::WsTask {
         task: fid,
-        args: args.to_vec(),
+        args: ArgList::from_slice(args),
         cont: Cont::Root,
     });
 
@@ -165,6 +196,7 @@ pub fn run(
         }
     });
 
+    let max_live = shared.registry.live_peak() as u64;
     if let Some(err) = shared.error.into_inner().unwrap() {
         bail!(err);
     }
@@ -182,10 +214,11 @@ pub fn run(
         total.xla_batches += s.xla_batches;
         total.xla_tasks += s.xla_tasks;
     }
+    total.max_live_closures = max_live;
     Ok((result, shared.memory, total))
 }
 
-impl<'m> Shared<'m> {
+impl Shared {
     pub(crate) fn fail(&self, err: anyhow::Error) {
         let mut slot = self.error.lock().unwrap();
         if slot.is_none() {
@@ -230,6 +263,7 @@ mod tests {
             let (v, stats) = ws_run(FIB, "fib", &[18], workers);
             assert_eq!(v, 2584, "workers={workers}");
             assert!(stats.tasks_run > 1000);
+            assert!(stats.max_live_closures > 0);
         }
     }
 

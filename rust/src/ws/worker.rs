@@ -1,4 +1,13 @@
-//! Worker loop and task interpretation for the WS runtime.
+//! Worker loop and kernel-machine task execution for the WS runtime.
+//!
+//! Each worker owns a lock-free Chase–Lev deque ([`super::deque`]): its
+//! own pushes/pops touch no lock, thieves CAS the cold end. Task bodies
+//! run on the shared compiled kernels ([`crate::exec`]) through
+//! [`WsMachine`], whose side effects are the concurrent closure registry
+//! and the word-atomic shared memory. Idle thieves back off
+//! exponentially (spin first, then park on the idle condvar with a
+//! growing timeout) so contended steals never spin hot and the push
+//! path pays a futex only when somebody actually sleeps.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -6,8 +15,9 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::ir::cfg::{FuncId, FuncKind, Op, RetTarget, Term};
-use crate::ir::expr::{self, Value, VarId};
+use crate::exec::{run_kernel, ArgList, KStack, KontRef, Machine};
+use crate::ir::cfg::{FuncId, FuncKind, GlobalId};
+use crate::ir::expr::Value;
 
 use super::closure::{Cont, SharedClosure};
 use super::{Shared, WsConfig, WsStats};
@@ -16,63 +26,86 @@ use super::{Shared, WsConfig, WsStats};
 #[derive(Clone, Debug)]
 pub struct WsTask {
     pub task: FuncId,
-    pub args: Vec<Value>,
+    pub args: ArgList,
     pub cont: Cont,
 }
 
-pub(crate) fn worker_loop(wid: usize, shared: &Shared<'_>, config: &WsConfig, stats: &mut WsStats) {
+/// Spin rounds before a thief starts parking.
+const SPIN_ROUNDS: u32 = 6;
+/// Cap on the parking-backoff exponent (50us << 2 = 200us max — the
+/// notify race between a push's `idle_workers` check and a parker's
+/// increment is bounded by the timeout, so the cap keeps the worst-case
+/// lost-wakeup latency at the pre-rework 200us bound).
+const MAX_PARK_SHIFT: u32 = 2;
+
+pub(crate) fn worker_loop(wid: usize, shared: &Shared, config: &WsConfig, stats: &mut WsStats) {
     let nworkers = shared.deques.len();
     let mut rng = crate::util::rng::Rng::new(0x5EED ^ wid as u64);
-    // Per-worker environment scratch, reused across tasks (perf: saves one
-    // allocation per task on the hot path — see EXPERIMENTS.md §Perf).
-    let mut env_scratch: Vec<Value> = Vec::with_capacity(64);
+    // Per-worker kernel frame stack, reused across tasks: task dispatch
+    // allocates nothing on the hot path.
+    let mut stack = KStack::new();
+    let mut backoff: u32 = 0;
     loop {
         if shared.done.load(Ordering::SeqCst) {
             return;
         }
-        // 1. Own deque (LIFO hot end).
-        let task = shared.deques[wid].lock().unwrap().pop_back();
-        if let Some(task) = task {
-            execute(wid, shared, task, stats, &mut env_scratch);
+        // 1. Own deque (LIFO hot end, lock-free owner path).
+        if let Some(task) = shared.deques[wid].pop() {
+            backoff = 0;
+            execute(wid, shared, task, stats, &mut stack);
             continue;
         }
-        // 2. Steal (FIFO cold end of a random victim).
+        // 2. Steal (FIFO cold end of random victims, CAS only).
         let mut stolen = None;
         for _ in 0..config.steal_tries.max(1) {
             let victim = rng.below(nworkers as u64) as usize;
             if victim == wid {
                 continue;
             }
-            if let Some(t) = shared.deques[victim].lock().unwrap().pop_front() {
+            if let Some(t) = shared.deques[victim].steal() {
                 stolen = Some(t);
                 break;
             }
         }
         if let Some(task) = stolen {
+            backoff = 0;
             stats.steals += 1;
-            execute(wid, shared, task, stats, &mut env_scratch);
+            execute(wid, shared, task, stats, &mut stack);
             continue;
         }
         // 3. Flush pending xla batch work.
         if flush_xla(wid, shared, stats) {
+            backoff = 0;
             continue;
         }
-        // 4. Park briefly; pushers notify (gated on the idle counter so
-        // the hot path skips the futex syscall when nobody sleeps).
+        // 4. Exponential backoff: spin a few rounds, then park with a
+        // growing timeout (pushers notify; the idle counter gates the
+        // futex syscall on the push path).
+        if backoff < SPIN_ROUNDS {
+            for _ in 0..(8u32 << backoff) {
+                std::hint::spin_loop();
+            }
+            backoff += 1;
+            continue;
+        }
+        let park_us = 50u64 << (backoff - SPIN_ROUNDS).min(MAX_PARK_SHIFT);
+        backoff = backoff.saturating_add(1);
         shared.idle_workers.fetch_add(1, Ordering::SeqCst);
         let guard = shared.idle_lock.lock().unwrap();
         let _ = shared
             .idle_cv
-            .wait_timeout(guard, Duration::from_micros(200))
+            .wait_timeout(guard, Duration::from_micros(park_us))
             .unwrap();
         shared.idle_workers.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
-/// Drain the xla queue through the batch sink. Returns true if any work was
-/// done.
-fn flush_xla(wid: usize, shared: &Shared<'_>, stats: &mut WsStats) -> bool {
-    let batch: Vec<(FuncId, Vec<Value>, Cont)> = {
+/// Drain the xla queue through the batch sink. Returns true if any work
+/// was done. Arguments and continuations are *moved* out of the queued
+/// instances (no per-batch clones); task names are borrowed from the
+/// kernels.
+fn flush_xla(wid: usize, shared: &Shared, stats: &mut WsStats) -> bool {
+    let mut batch: Vec<(FuncId, ArgList, Cont)> = {
         let mut q = shared.xla_queue.lock().unwrap();
         if q.is_empty() {
             return false;
@@ -89,11 +122,14 @@ fn flush_xla(wid: usize, shared: &Shared<'_>, stats: &mut WsStats) -> bool {
         }
     }
     for (fid, idxs) in groups {
-        let name = shared.module.funcs[fid].name.clone();
-        let args: Vec<Vec<Value>> = idxs.iter().map(|&i| batch[i].1.clone()).collect();
+        let name = &shared.kernels.kernel(fid).name;
+        let args: Vec<Vec<Value>> = idxs
+            .iter()
+            .map(|&i| std::mem::take(&mut batch[i].1).into_vec())
+            .collect();
         stats.xla_batches += 1;
         stats.xla_tasks += idxs.len() as u64;
-        match shared.xla_sink.exec_batch(&name, &args, &shared.memory) {
+        match shared.xla_sink.exec_batch(name, &args, &shared.memory) {
             Ok(results) => {
                 if results.len() != idxs.len() {
                     shared.fail(anyhow!(
@@ -104,7 +140,7 @@ fn flush_xla(wid: usize, shared: &Shared<'_>, stats: &mut WsStats) -> bool {
                     return true;
                 }
                 for (&i, value) in idxs.iter().zip(results) {
-                    let cont = batch[i].2.clone();
+                    let cont = std::mem::replace(&mut batch[i].2, Cont::Root);
                     if let Err(e) = deliver(wid, shared, cont, value) {
                         shared.fail(e);
                         return true;
@@ -123,13 +159,13 @@ fn flush_xla(wid: usize, shared: &Shared<'_>, stats: &mut WsStats) -> bool {
 
 fn execute(
     wid: usize,
-    shared: &Shared<'_>,
+    shared: &Shared,
     task: WsTask,
     stats: &mut WsStats,
-    env_scratch: &mut Vec<Value>,
+    stack: &mut KStack,
 ) {
     stats.tasks_run += 1;
-    if let Err(e) = run_task(wid, shared, task, stats, env_scratch) {
+    if let Err(e) = run_task(wid, shared, task, stats, stack) {
         shared.fail(e);
         return;
     }
@@ -137,22 +173,23 @@ fn execute(
 }
 
 /// Decrement pending; on zero, signal completion.
-fn finish_one(shared: &Shared<'_>) {
+fn finish_one(shared: &Shared) {
     if shared.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
         shared.done.store(true, Ordering::SeqCst);
         shared.idle_cv.notify_all();
     }
 }
 
-/// Push a new runnable task (pending already incremented by caller).
-fn push_task(wid: usize, shared: &Shared<'_>, task: WsTask) {
-    shared.deques[wid].lock().unwrap().push_back(task);
+/// Push a new runnable task onto this worker's own deque (pending already
+/// incremented by caller).
+fn push_task(wid: usize, shared: &Shared, task: WsTask) {
+    shared.deques[wid].push(task);
     if shared.idle_workers.load(Ordering::Relaxed) > 0 {
         shared.idle_cv.notify_one();
     }
 }
 
-fn deliver(wid: usize, shared: &Shared<'_>, cont: Cont, value: Value) -> Result<()> {
+fn deliver(wid: usize, shared: &Shared, cont: Cont, value: Value) -> Result<()> {
     match cont {
         Cont::Root => {
             let mut slot = shared.result.lock().unwrap();
@@ -176,7 +213,7 @@ fn deliver(wid: usize, shared: &Shared<'_>, cont: Cont, value: Value) -> Result<
     Ok(())
 }
 
-fn fire(wid: usize, shared: &Shared<'_>, clos: &Arc<SharedClosure>) {
+fn fire(wid: usize, shared: &Shared, clos: &Arc<SharedClosure>) {
     let handle = clos.handle.load(Ordering::Relaxed);
     if handle >= 0 {
         shared.registry.remove(handle);
@@ -186,212 +223,123 @@ fn fire(wid: usize, shared: &Shared<'_>, clos: &Arc<SharedClosure>) {
     push_task(wid, shared, task);
 }
 
+/// The worker's [`Machine`]: closure registry + shared memory effects.
+struct WsMachine<'a> {
+    wid: usize,
+    shared: &'a Shared,
+    stats: &'a mut WsStats,
+    cont: Cont,
+}
+
 fn run_task(
     wid: usize,
-    shared: &Shared<'_>,
+    shared: &Shared,
     inst: WsTask,
     stats: &mut WsStats,
-    env_scratch: &mut Vec<Value>,
+    stack: &mut KStack,
 ) -> Result<()> {
-    let module = shared.module;
-    let func = &module.funcs[inst.task];
+    let kernel = shared.kernels.kernel(inst.task);
 
-    if func.kind == FuncKind::Xla {
+    if kernel.kind == FuncKind::Xla {
         // Shouldn't reach a deque (spawns route xla tasks to the batch
         // queue) — but a root xla task arrives here; run it as a batch of 1.
         let out = shared
             .xla_sink
-            .exec_batch(&func.name, &[inst.args.clone()], &shared.memory)?
+            .exec_batch(&kernel.name, &[inst.args.into_vec()], &shared.memory)?
             .pop()
             .ok_or_else(|| anyhow!("empty xla result"))?;
         return deliver(wid, shared, inst.cont, out);
     }
-    if func.kind == FuncKind::Leaf {
-        let out = eval_leaf(shared, inst.task, &inst.args)?;
-        return deliver(wid, shared, inst.cont, out);
-    }
 
-    let cfg = func.cfg();
-    if inst.args.len() != func.params {
-        bail!(
-            "task `{}` expects {} args, got {} (closure layout bug)",
-            func.name,
-            func.params,
-            inst.args.len()
-        );
+    let mut machine = WsMachine { wid, shared, stats, cont: inst.cont };
+    let value = run_kernel(
+        &shared.kernels,
+        inst.task,
+        inst.args.as_slice(),
+        stack,
+        &mut machine,
+        100_000_000,
+    )?;
+    if kernel.kind == FuncKind::Leaf {
+        // A spawned leaf: its sequential return value is the send.
+        let cont = machine.cont;
+        return deliver(wid, shared, cont, value);
     }
-    env_scratch.clear();
-    env_scratch.extend(func.vars.values().map(|v| Value::zero_of(v.ty)));
-    let env = env_scratch;
-    for (i, a) in inst.args.iter().enumerate() {
-        env[i] = a.coerce(func.vars[VarId::new(i)].ty);
-    }
-
-    let mut block = cfg.entry;
-    let mut steps = 0u64;
-    loop {
-        steps += 1;
-        if steps > 100_000_000 {
-            bail!("task `{}` exceeded step limit", func.name);
-        }
-        let b = &cfg.blocks[block];
-        for op in &b.ops {
-            match op {
-                Op::Assign { dst, src } => {
-                    let v = expr::eval(src, &|v| env[v.index()]);
-                    env[dst.index()] = v.coerce(func.vars[*dst].ty);
-                }
-                Op::Load { dst, arr, index, .. } => {
-                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                    env[dst.index()] = shared.memory.load(*arr, idx)?;
-                }
-                Op::Store { arr, index, value } => {
-                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                    let val = expr::eval(value, &|v| env[v.index()]);
-                    shared.memory.store(*arr, idx, val)?;
-                }
-                Op::AtomicAdd { arr, index, value } => {
-                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                    let val = expr::eval(value, &|v| env[v.index()]);
-                    shared.memory.atomic_add(*arr, idx, val)?;
-                }
-                Op::Call { dst, callee, args } => {
-                    let vals: Vec<Value> =
-                        args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
-                    let r = eval_leaf(shared, *callee, &vals)?;
-                    if let Some(d) = dst {
-                        env[d.index()] = r.coerce(func.vars[*d].ty);
-                    }
-                }
-                Op::MakeClosure { dst, task } => {
-                    stats.closures_made += 1;
-                    let t = &module.funcs[*task];
-                    let slot_tys: Vec<_> = t.param_ids().map(|p| t.vars[p].ty).collect();
-                    let clos =
-                        Arc::new(SharedClosure::new(*task, slot_tys, inst.cont.clone()));
-                    let handle = shared.registry.insert(clos.clone(), wid);
-                    clos.handle.store(handle, Ordering::Relaxed);
-                    env[dst.index()] = Value::I64(handle);
-                }
-                Op::ClosureStore { clos, field, value } => {
-                    let h = env[clos.index()].as_i64();
-                    let val = expr::eval(value, &|v| env[v.index()]);
-                    shared.registry.get(h).fill(*field, val);
-                }
-                Op::SpawnChild { callee, args, ret } => {
-                    let vals: Vec<Value> =
-                        args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
-                    let cont = match ret {
-                        RetTarget::Slot { clos, field } => {
-                            let c = shared.registry.get(env[clos.index()].as_i64());
-                            c.hold();
-                            Cont::Slot { clos: c, slot: *field }
-                        }
-                        RetTarget::Counter { clos } => {
-                            let c = shared.registry.get(env[clos.index()].as_i64());
-                            c.hold();
-                            Cont::Counter { clos: c }
-                        }
-                        RetTarget::Forward => inst.cont.clone(),
-                    };
-                    shared.pending.fetch_add(1, Ordering::AcqRel);
-                    if module.funcs[*callee].kind == FuncKind::Xla {
-                        shared.xla_queue.lock().unwrap().push((*callee, vals, cont));
-                        shared.idle_cv.notify_one();
-                    } else {
-                        push_task(wid, shared, WsTask { task: *callee, args: vals, cont });
-                    }
-                }
-                Op::CloseSpawns { clos } => {
-                    let c = shared.registry.get(env[clos.index()].as_i64());
-                    if c.release() {
-                        fire(wid, shared, &c);
-                    }
-                }
-                Op::SendArgument { value } => {
-                    let v = match value {
-                        Some(e) => expr::eval(e, &|v| env[v.index()]).coerce(func.ret),
-                        None => Value::Unit,
-                    };
-                    deliver(wid, shared, inst.cont.clone(), v)?;
-                }
-                Op::Spawn { .. } => bail!("implicit Spawn in explicit IR"),
-            }
-        }
-        match &b.term {
-            Term::Jump(next) => block = *next,
-            Term::Branch { cond, then_, else_ } => {
-                let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
-                block = if c { *then_ } else { *else_ };
-            }
-            Term::Halt => return Ok(()),
-            other => bail!("non-explicit terminator {other:?} in task `{}`", func.name),
-        }
-    }
+    Ok(())
 }
 
-fn eval_leaf(shared: &Shared<'_>, fid: FuncId, args: &[Value]) -> Result<Value> {
-    let func = &shared.module.funcs[fid];
-    if func.kind != FuncKind::Leaf {
-        bail!("sequential call to non-leaf `{}`", func.name);
+impl<'a> Machine for WsMachine<'a> {
+    fn load(&mut self, arr: GlobalId, index: i64) -> Result<Value> {
+        self.shared.memory.load(arr, index)
     }
-    let cfg = func.cfg();
-    let mut env: Vec<Value> = func.vars.values().map(|v| Value::zero_of(v.ty)).collect();
-    for (i, a) in args.iter().enumerate() {
-        env[i] = a.coerce(func.vars[VarId::new(i)].ty);
+
+    fn store(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()> {
+        self.shared.memory.store(arr, index, value)
     }
-    let mut block = cfg.entry;
-    let mut steps = 0u64;
-    loop {
-        steps += 1;
-        if steps > 100_000_000 {
-            bail!("leaf `{}` exceeded step limit", func.name);
-        }
-        let b = &cfg.blocks[block];
-        for op in &b.ops {
-            match op {
-                Op::Assign { dst, src } => {
-                    let v = expr::eval(src, &|v| env[v.index()]);
-                    env[dst.index()] = v.coerce(func.vars[*dst].ty);
-                }
-                Op::Load { dst, arr, index, .. } => {
-                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                    env[dst.index()] = shared.memory.load(*arr, idx)?;
-                }
-                Op::Store { arr, index, value } => {
-                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                    let val = expr::eval(value, &|v| env[v.index()]);
-                    shared.memory.store(*arr, idx, val)?;
-                }
-                Op::AtomicAdd { arr, index, value } => {
-                    let idx = expr::eval(index, &|v| env[v.index()]).as_i64();
-                    let val = expr::eval(value, &|v| env[v.index()]);
-                    shared.memory.atomic_add(*arr, idx, val)?;
-                }
-                Op::Call { dst, callee, args } => {
-                    let vals: Vec<Value> =
-                        args.iter().map(|a| expr::eval(a, &|v| env[v.index()])).collect();
-                    let r = eval_leaf(shared, *callee, &vals)?;
-                    if let Some(d) = dst {
-                        env[d.index()] = r.coerce(func.vars[*d].ty);
-                    }
-                }
-                other => bail!("op {other:?} not allowed in leaf `{}`", func.name),
+
+    fn atomic_add(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()> {
+        self.shared.memory.atomic_add(arr, index, value)
+    }
+
+    fn make_closure(&mut self, task: FuncId) -> Result<Value> {
+        self.stats.closures_made += 1;
+        let slot_tys = Arc::clone(&self.shared.kernels.kernel(task).param_tys);
+        let clos = Arc::new(SharedClosure::new(task, slot_tys, self.cont.clone()));
+        let handle = self.shared.registry.insert(clos.clone(), self.wid);
+        clos.handle.store(handle, Ordering::Relaxed);
+        Ok(Value::I64(handle))
+    }
+
+    fn closure_store(&mut self, clos: Value, field: u32, value: Value) -> Result<()> {
+        self.shared.registry.get(clos.as_i64()).fill(field, value);
+        Ok(())
+    }
+
+    fn spawn_child(&mut self, callee: FuncId, args: &[Value], ret: KontRef) -> Result<()> {
+        let cont = match ret {
+            KontRef::Slot { clos, field } => {
+                let c = self.shared.registry.get(clos.as_i64());
+                c.hold();
+                Cont::Slot { clos: c, slot: field }
             }
-        }
-        match &b.term {
-            Term::Jump(next) => block = *next,
-            Term::Branch { cond, then_, else_ } => {
-                let c = expr::eval(cond, &|v| env[v.index()]).as_bool();
-                block = if c { *then_ } else { *else_ };
+            KontRef::Counter { clos } => {
+                let c = self.shared.registry.get(clos.as_i64());
+                c.hold();
+                Cont::Counter { clos: c }
             }
-            Term::Return(value) => {
-                return Ok(match value {
-                    Some(e) => expr::eval(e, &|v| env[v.index()]).coerce(func.ret),
-                    None => Value::Unit,
-                })
+            KontRef::Forward => self.cont.clone(),
+        };
+        self.shared.pending.fetch_add(1, Ordering::AcqRel);
+        if self.shared.kernels.kernel(callee).kind == FuncKind::Xla {
+            self.shared
+                .xla_queue
+                .lock()
+                .unwrap()
+                .push((callee, ArgList::from_slice(args), cont));
+            // Same idle gate as push_task: pay the futex only when a
+            // worker actually sleeps.
+            if self.shared.idle_workers.load(Ordering::Relaxed) > 0 {
+                self.shared.idle_cv.notify_one();
             }
-            other => bail!("terminator {other:?} not allowed in leaf `{}`", func.name),
+        } else {
+            push_task(
+                self.wid,
+                self.shared,
+                WsTask { task: callee, args: ArgList::from_slice(args), cont },
+            );
         }
+        Ok(())
+    }
+
+    fn close_spawns(&mut self, clos: Value) -> Result<()> {
+        let c = self.shared.registry.get(clos.as_i64());
+        if c.release() {
+            fire(self.wid, self.shared, &c);
+        }
+        Ok(())
+    }
+
+    fn send_argument(&mut self, value: Value) -> Result<()> {
+        deliver(self.wid, self.shared, self.cont.clone(), value)
     }
 }

@@ -1,0 +1,515 @@
+//! Differential tests for the shared execution-kernel layer.
+//!
+//! Every engine in the repo now runs the same compiled register bytecode
+//! (`bombyx::exec`). The independent baseline here is a *tree-walking*
+//! reference oracle kept inside this test (recursive serial elision over
+//! the implicit IR via `ir::expr::eval` — the pre-kernel executor
+//! semantics, frozen). For all six corpus workloads, under both DAE
+//! variants, every kernel engine must produce the reference's result and
+//! memory image, and the deterministic task/closure counters must agree
+//! across the explicit machine, the WS runtime (1 and 4 workers) and the
+//! simulator.
+
+use anyhow::Result;
+use bombyx::backend::emu;
+use bombyx::exec::{compile_module, KernelMode};
+use bombyx::interp::explicit_exec::ExplicitExec;
+use bombyx::interp::{FnXla, Memory, NoXla};
+use bombyx::ir::cfg::{FuncKind, Module, Op, Term};
+use bombyx::ir::expr::{eval, Value, VarId};
+use bombyx::ir::{FuncId, GlobalId};
+use bombyx::lower::{compile, CompileOptions, CompileResult};
+use bombyx::sim::{simulate, NoSimXla, SimConfig, SimXla};
+use bombyx::util::golden::check_golden;
+use bombyx::workloads::{bfs, fib, graphgen, nqueens, qsort, relax};
+use bombyx::ws::{self, NoXlaSink, ScalarSink, SharedMemory, WsConfig};
+
+// ---------------------------------------------------------------------------
+// Frozen tree-walking reference (pre-kernel oracle semantics)
+
+type TreeXla<'a> = &'a mut dyn FnMut(&[Value], &mut Memory) -> Result<Value>;
+
+fn tree_call(
+    m: &Module,
+    fid: FuncId,
+    args: &[Value],
+    mem: &mut Memory,
+    xla: TreeXla<'_>,
+) -> Result<Value> {
+    let func = &m.funcs[fid];
+    if func.kind == FuncKind::Xla {
+        return xla(args, mem);
+    }
+    let cfg = func.body.as_ref().expect("implicit function has a body");
+    let mut env: Vec<Value> = func.vars.values().map(|v| Value::zero_of(v.ty)).collect();
+    for (i, a) in args.iter().enumerate() {
+        env[i] = a.coerce(func.vars[VarId::new(i)].ty);
+    }
+    let mut block = cfg.entry;
+    loop {
+        let b = &cfg.blocks[block];
+        for op in &b.ops {
+            match op {
+                Op::Assign { dst, src } => {
+                    let v = eval(src, &|v| env[v.index()]);
+                    env[dst.index()] = v.coerce(func.vars[*dst].ty);
+                }
+                Op::Load { dst, arr, index, .. } => {
+                    let idx = eval(index, &|v| env[v.index()]).as_i64();
+                    env[dst.index()] = mem.load(*arr, idx)?;
+                }
+                Op::Store { arr, index, value } => {
+                    let idx = eval(index, &|v| env[v.index()]).as_i64();
+                    let val = eval(value, &|v| env[v.index()]);
+                    mem.store(*arr, idx, val)?;
+                }
+                Op::AtomicAdd { arr, index, value } => {
+                    let idx = eval(index, &|v| env[v.index()]).as_i64();
+                    let val = eval(value, &|v| env[v.index()]);
+                    mem.atomic_add(*arr, idx, val)?;
+                }
+                Op::Call { dst, callee, args } | Op::Spawn { dst, callee, args } => {
+                    let vals: Vec<Value> =
+                        args.iter().map(|a| eval(a, &|v| env[v.index()])).collect();
+                    let r = tree_call(m, *callee, &vals, mem, xla)?;
+                    if let Some(d) = dst {
+                        env[d.index()] = r.coerce(func.vars[*d].ty);
+                    }
+                }
+                other => anyhow::bail!("tree reference: unexpected implicit op {other:?}"),
+            }
+        }
+        match &b.term {
+            Term::Jump(n) | Term::Sync { next: n } => block = *n,
+            Term::Branch { cond, then_, else_ } => {
+                block = if eval(cond, &|v| env[v.index()]).as_bool() { *then_ } else { *else_ };
+            }
+            Term::Return(v) => {
+                return Ok(match v {
+                    Some(e) => eval(e, &|v| env[v.index()]).coerce(func.ret),
+                    None => Value::Unit,
+                });
+            }
+            Term::Halt => anyhow::bail!("tree reference runs implicit IR only"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Relax scalar datapath adapters (one per engine interface)
+
+fn relax_row(
+    n: usize,
+    read: &mut dyn FnMut(i64) -> Result<Value>,
+    write: &mut dyn FnMut(i64, Value) -> Result<()>,
+    w: &[f32],
+    b: &[f32],
+) -> Result<Value> {
+    let f = relax::F;
+    let x: Vec<f32> = (0..f)
+        .map(|j| read((n * f + j) as i64).map(|v| v.as_f32()))
+        .collect::<Result<_>>()?;
+    let (y, score) = relax::relax_ref(&x, w, b);
+    for (j, &v) in y.iter().enumerate() {
+        write((n * f + j) as i64, Value::F32(v))?;
+    }
+    Ok(Value::I64((score * 1000.0) as i64))
+}
+
+struct SimScalarRelax {
+    w: Vec<f32>,
+    b: Vec<f32>,
+    feat: GlobalId,
+}
+
+impl SimXla for SimScalarRelax {
+    fn exec_batch(
+        &mut self,
+        _name: &str,
+        batch: &[Vec<Value>],
+        memory: &mut Memory,
+    ) -> Result<Vec<Value>> {
+        let feat = self.feat;
+        batch
+            .iter()
+            .map(|args| {
+                let n = args[0].as_i64() as usize;
+                relax_row(
+                    n,
+                    &mut |i| memory.load(feat, i),
+                    &mut |i, v| memory.store(feat, i, v),
+                    &self.w,
+                    &self.b,
+                )
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The harness
+
+const RELAX_SEED: u64 = 5;
+
+/// Deterministic per-engine counters compared across engines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Counters {
+    tasks: u64,
+    closures: u64,
+}
+
+struct Workload {
+    name: &'static str,
+    src: &'static str,
+    entry: &'static str,
+    args: Vec<Value>,
+    init: Box<dyn Fn(&Module, &mut Memory)>,
+    uses_xla: bool,
+}
+
+fn corpus() -> Vec<Workload> {
+    let bfs_graph = graphgen::tree(3, 4); // 121 nodes
+    let bfs_graph2 = graphgen::tree(3, 4);
+    let relax_graph = graphgen::tree(3, 3); // 40 nodes
+    let qsort_input: Vec<i64> = (0..48).map(|i| ((i * 37 + 11) % 100) - 50).collect();
+    vec![
+        Workload {
+            name: "fib",
+            src: fib::FIB_SRC,
+            entry: "fib",
+            args: vec![Value::I64(12)],
+            init: Box::new(|_, _| {}),
+            uses_xla: false,
+        },
+        Workload {
+            name: "bfs",
+            src: bfs::BFS_SRC,
+            entry: "visit",
+            args: vec![Value::I64(0)],
+            init: Box::new(move |m, mem| bfs::init_memory(m, mem, &bfs_graph).unwrap()),
+            uses_xla: false,
+        },
+        Workload {
+            name: "bfs_dae",
+            src: bfs::BFS_DAE_SRC,
+            entry: "visit",
+            args: vec![Value::I64(0)],
+            init: Box::new(move |m, mem| bfs::init_memory(m, mem, &bfs_graph2).unwrap()),
+            uses_xla: false,
+        },
+        Workload {
+            name: "nqueens",
+            src: nqueens::NQUEENS_SRC,
+            entry: "place",
+            args: [6i64, 0, 0, 0, 0].iter().map(|&v| Value::I64(v)).collect(),
+            init: Box::new(|_, _| {}),
+            uses_xla: false,
+        },
+        Workload {
+            name: "qsort",
+            src: qsort::QSORT_SRC,
+            entry: "qsort_",
+            args: vec![Value::I64(0), Value::I64(47)],
+            init: Box::new(move |m, mem| {
+                mem.fill_i64(m.global_by_name("data").unwrap(), &qsort_input);
+            }),
+            uses_xla: false,
+        },
+        Workload {
+            name: "relax",
+            src: relax::RELAX_SRC,
+            entry: "expand",
+            args: vec![Value::I64(0)],
+            init: Box::new(move |m, mem| {
+                relax::init_memory(m, mem, &relax_graph, RELAX_SEED).unwrap()
+            }),
+            uses_xla: true,
+        },
+    ]
+}
+
+/// Dump every global of `module` (floats exactly, ints exactly), keyed by
+/// name so images compare across the implicit/explicit modules.
+fn memory_image(module: &Module, mem: &Memory) -> Vec<(String, Vec<i64>, Vec<u32>)> {
+    module
+        .globals
+        .iter()
+        .map(|(gid, g)| {
+            let ints = mem.dump_i64(gid);
+            let floats = mem.dump_f32(gid).iter().map(|f| f.to_bits()).collect();
+            (g.name.clone(), ints, floats)
+        })
+        .collect()
+}
+
+fn shared_memory_image(module: &Module, mem: &SharedMemory) -> Vec<(String, Vec<i64>, Vec<u32>)> {
+    module
+        .globals
+        .iter()
+        .map(|(gid, g)| {
+            let ints = mem.dump_i64(gid);
+            let floats = mem.dump_f32(gid).iter().map(|f| f.to_bits()).collect();
+            (g.name.clone(), ints, floats)
+        })
+        .collect()
+}
+
+fn fn_xla_for(module: &Module) -> FnXla {
+    let mut handler = FnXla::default();
+    let feat = module.global_by_name("feat").expect("relax module has feat");
+    let (w, b) = relax::weights(RELAX_SEED);
+    handler.register("relax", move |args: &[Value], mem: &mut Memory| {
+        let n = args[0].as_i64() as usize;
+        relax_row(n, &mut |i| mem.load(feat, i), &mut |i, v| mem.store(feat, i, v), &w, &b)
+    });
+    handler
+}
+
+fn check_workload(w: &Workload, opts: &CompileOptions, r: &CompileResult) {
+    let label = format!("{} ({:?})", w.name, opts.dae);
+
+    // 1. Frozen tree-walking reference on the implicit IR.
+    let (ref_val, ref_image) = {
+        let m = &r.implicit;
+        let mut mem = Memory::new(m);
+        (w.init)(m, &mut mem);
+        let fid = m.func_by_name(w.entry).unwrap();
+        let (w2, b2) = relax::weights(RELAX_SEED);
+        let feat = m.global_by_name("feat");
+        let mut xla = move |args: &[Value], mem: &mut Memory| {
+            let n = args[0].as_i64() as usize;
+            let feat = feat.expect("xla workload has feat");
+            relax_row(n, &mut |i| mem.load(feat, i), &mut |i, v| mem.store(feat, i, v), &w2, &b2)
+        };
+        let v = tree_call(m, fid, &w.args, &mut mem, &mut xla).expect("tree reference");
+        (v.as_i64(), memory_image(m, &mem))
+    };
+
+    // 2. Kernel oracle on the implicit IR.
+    {
+        let m = &r.implicit;
+        let mut mem = Memory::new(m);
+        (w.init)(m, &mut mem);
+        let xla = if w.uses_xla { fn_xla_for(m) } else { FnXla::default() };
+        let mut o = bombyx::interp::oracle::Oracle::new(m, mem, xla);
+        let v = o.run(w.entry, &w.args).expect("kernel oracle");
+        assert_eq!(v.as_i64(), ref_val, "{label}: oracle value");
+        assert_eq!(memory_image(m, &o.memory), ref_image, "{label}: oracle memory");
+    }
+
+    // 3. Explicit machine on the explicit IR.
+    let explicit_counters = {
+        let m = &r.explicit;
+        let mut mem = Memory::new(m);
+        (w.init)(m, &mut mem);
+        let xla = if w.uses_xla { fn_xla_for(m) } else { FnXla::default() };
+        let mut ex = ExplicitExec::new(m, mem, xla);
+        let v = ex.run(w.entry, &w.args).expect("explicit machine");
+        assert_eq!(v.as_i64(), ref_val, "{label}: explicit value");
+        assert_eq!(ex.live_closures(), 0, "{label}: explicit closure leak");
+        assert_eq!(memory_image(m, &ex.memory), ref_image, "{label}: explicit memory");
+        Counters { tasks: ex.stats.tasks_run, closures: ex.stats.closures_made }
+    };
+
+    // 4. WS runtime, 1 and 4 workers.
+    let mut ws_counters = Vec::new();
+    let mut ws_xla_tasks = 0;
+    for workers in [1usize, 4] {
+        let m = &r.explicit;
+        let mut seed = Memory::new(m);
+        (w.init)(m, &mut seed);
+        let mem = emu::shared_from(m, &seed);
+        let cfg = WsConfig { workers, steal_tries: 4 };
+        let (w2, b2) = relax::weights(RELAX_SEED);
+        let feat = m.global_by_name("feat");
+        let (v, mem, stats) = if w.uses_xla {
+            let sink = ScalarSink(move |_n: &str, args: &[Value], mem: &SharedMemory| {
+                let n = args[0].as_i64() as usize;
+                let feat = feat.expect("feat");
+                relax_row(
+                    n,
+                    &mut |i| mem.load(feat, i),
+                    &mut |i, v| mem.store(feat, i, v),
+                    &w2,
+                    &b2,
+                )
+            });
+            ws::run(m, mem, w.entry, &w.args, &cfg, Box::new(sink)).expect("ws run")
+        } else {
+            ws::run(m, mem, w.entry, &w.args, &cfg, Box::new(NoXlaSink)).expect("ws run")
+        };
+        assert_eq!(v.as_i64(), ref_val, "{label}: ws value (workers={workers})");
+        assert_eq!(
+            shared_memory_image(m, &mem),
+            ref_image,
+            "{label}: ws memory (workers={workers})"
+        );
+        if workers == 1 {
+            assert_eq!(stats.steals, 0, "{label}: single worker cannot steal");
+        }
+        ws_xla_tasks = stats.xla_tasks;
+        ws_counters.push(Counters { tasks: stats.tasks_run, closures: stats.closures_made });
+    }
+
+    // 5. Simulator.
+    let sim_counters = {
+        let m = &r.explicit;
+        let mut mem = Memory::new(m);
+        (w.init)(m, &mut mem);
+        let cfg = SimConfig::default();
+        let (v, mem, stats) = if w.uses_xla {
+            let (w2, b2) = relax::weights(RELAX_SEED);
+            let mut xla = SimScalarRelax {
+                w: w2,
+                b: b2,
+                feat: m.global_by_name("feat").unwrap(),
+            };
+            simulate(m, mem, w.entry, &w.args, &cfg, &mut xla).expect("sim")
+        } else {
+            simulate(m, mem, w.entry, &w.args, &cfg, &mut NoSimXla).expect("sim")
+        };
+        assert_eq!(v.as_i64(), ref_val, "{label}: sim value");
+        assert_eq!(memory_image(m, &mem), ref_image, "{label}: sim memory");
+        Counters { tasks: stats.tasks_run, closures: stats.closures_made }
+    };
+
+    // 6. Deterministic counters agree across engines. The explicit
+    // machine counts xla instances in tasks_run; the WS runtime and the
+    // simulator account for them separately (batch paths).
+    assert_eq!(
+        ws_counters[0], ws_counters[1],
+        "{label}: ws counters deterministic across worker counts"
+    );
+    if w.uses_xla {
+        assert_eq!(
+            explicit_counters.tasks,
+            ws_counters[0].tasks + ws_xla_tasks,
+            "{label}: explicit vs ws task accounting"
+        );
+        assert_eq!(
+            explicit_counters.tasks,
+            sim_counters.tasks + ws_xla_tasks,
+            "{label}: explicit vs sim task accounting"
+        );
+    } else {
+        assert_eq!(explicit_counters.tasks, ws_counters[0].tasks, "{label}: tasks explicit/ws");
+        assert_eq!(explicit_counters.tasks, sim_counters.tasks, "{label}: tasks explicit/sim");
+    }
+    assert_eq!(
+        explicit_counters.closures, ws_counters[0].closures,
+        "{label}: closures explicit/ws"
+    );
+    assert_eq!(
+        explicit_counters.closures, sim_counters.closures,
+        "{label}: closures explicit/sim"
+    );
+}
+
+#[test]
+fn all_corpus_workloads_agree_across_engines_no_dae() {
+    let opts = CompileOptions::no_dae();
+    for w in corpus() {
+        let r = compile(w.name, w.src, &opts).unwrap();
+        check_workload(&w, &opts, &r);
+    }
+}
+
+#[test]
+fn all_corpus_workloads_agree_across_engines_dae() {
+    let opts = CompileOptions::standard();
+    for w in corpus() {
+        let r = compile(w.name, w.src, &opts).unwrap();
+        check_workload(&w, &opts, &r);
+    }
+}
+
+#[test]
+fn fib_counters_match_pre_kernel_oracle_pins() {
+    // Pinned against the tree-walking engines before the kernel rework:
+    // fib(10) = 177 entry tasks + 88 continuations = 265 task instances
+    // and 88 closures, on every engine.
+    let r = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let m = &r.explicit;
+
+    let mut ex = ExplicitExec::new(m, Memory::new(m), NoXla);
+    let v = ex.run("fib", &[Value::I64(10)]).unwrap();
+    assert_eq!(v.as_i64(), 55);
+    assert_eq!(ex.stats.tasks_run, 265);
+    assert_eq!(ex.stats.closures_made, 88);
+
+    let cfg = WsConfig { workers: 2, steal_tries: 4 };
+    let (v, _, stats) = ws::run(
+        m,
+        SharedMemory::new(m),
+        "fib",
+        &[Value::I64(10)],
+        &cfg,
+        Box::new(NoXlaSink),
+    )
+    .unwrap();
+    assert_eq!(v.as_i64(), 55);
+    assert_eq!(stats.tasks_run, 265);
+    assert_eq!(stats.closures_made, 88);
+    assert!(stats.max_live_closures >= 1 && stats.max_live_closures <= 88);
+
+    let (v, _, stats) = simulate(
+        m,
+        Memory::new(m),
+        "fib",
+        &[Value::I64(10)],
+        &SimConfig::default(),
+        &mut NoSimXla,
+    )
+    .unwrap();
+    assert_eq!(v.as_i64(), 55);
+    assert_eq!(stats.tasks_run, 265);
+    assert_eq!(stats.closures_made, 88);
+}
+
+#[test]
+fn fib_kernel_disassembly_golden() {
+    // The compiled explicit-mode bytecode for fib, pinned as a golden:
+    // operand slots, folded immediates, resolved branch targets and
+    // per-op cost annotations are all visible in the listing.
+    let r = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let prog = compile_module(&r.explicit, KernelMode::Explicit).unwrap();
+    check_golden("rust/tests/goldens/kernels/fib_explicit.disasm", &prog.disasm());
+}
+
+#[test]
+fn session_caches_one_kernel_program_for_all_engines() {
+    use bombyx::lower::CompileSession;
+    let session =
+        CompileSession::new("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let k1 = session.explicit_kernels().unwrap();
+    let k2 = session.explicit_kernels().unwrap();
+    assert!(std::sync::Arc::ptr_eq(&k1, &k2), "kernel program memoized");
+    // All engine entry points run on it.
+    let (v, _) = session.run_explicit(session.memory(), "fib", &[Value::I64(10)]).unwrap();
+    assert_eq!(v.as_i64(), 55);
+    let (v, _) = session.run_oracle(session.implicit_memory(), "fib", &[Value::I64(10)]).unwrap();
+    assert_eq!(v.as_i64(), 55);
+    let cfg = WsConfig { workers: 2, steal_tries: 2 };
+    let (v, _, _) = session
+        .run_ws(session.shared_memory(), "fib", &[Value::I64(10)], &cfg, Box::new(NoXlaSink))
+        .unwrap();
+    assert_eq!(v.as_i64(), 55);
+    let (v, _, _) = session
+        .simulate(session.memory(), "fib", &[Value::I64(10)], &SimConfig::default(), &mut NoSimXla)
+        .unwrap();
+    assert_eq!(v.as_i64(), 55);
+}
+
+#[test]
+fn kernels_timed_appends_pass_timing_once() {
+    use bombyx::lower::CompileSession;
+    let mut session =
+        CompileSession::new("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let before = session.timings().len();
+    session.kernels_timed().unwrap();
+    let after_first = session.timings().len();
+    assert_eq!(after_first, before + 1, "kernel_compile timing appended");
+    assert!(session.timings().iter().any(|t| t.pass == "kernel_compile" && t.ran));
+    session.kernels_timed().unwrap();
+    assert_eq!(session.timings().len(), after_first, "second request is cached");
+}
