@@ -1,6 +1,6 @@
 //! A-ws ablation: the software execution stack after the kernel rework.
 //!
-//! Three sections, emitted to `BENCH_ws.json` (machine-readable, same
+//! Four sections, emitted to `BENCH_ws.json` (machine-readable, same
 //! convention as `BENCH_compile.json` — the committed file is pinned by
 //! one run in a toolchain environment):
 //!
@@ -9,14 +9,20 @@
 //!    tree-walking executor (kept below), on fib and N-Queens — the
 //!    headline speedup of the kernel layer.
 //! 2. **ws scaling**: work-stealing throughput and efficiency at 1/2/4
-//!    workers on fib (lock-free deques + backoff).
-//! 3. **footprint**: steal counts and live-closure peaks.
+//!    workers on fib (lock-free deques + backoff); steal counts and
+//!    live-closure peaks.
+//! 3. **fused dispatch**: superinstruction fusion on vs off over the
+//!    same direct-threaded loop — dispatches retired, static
+//!    fused_ratio, single-worker fib speedup. Asserts `fused_ratio > 0`
+//!    on fib (the CI bench-smoke fusion gate).
 //!
 //! `BOMBYX_BENCH_SMOKE=1` switches to reduced iterations/sizes (the CI
 //! bench-smoke step).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
+use bombyx::exec::{compile_module_with, KernelMode};
 use bombyx::interp::explicit_exec::ExplicitExec;
 use bombyx::interp::{Memory, NoXla};
 use bombyx::ir::cfg::{FuncId, FuncKind, Module, Op, RetTarget, Term};
@@ -398,6 +404,60 @@ fn main() {
         println!("ws scaling efficiency at {workers} worker(s): {:.0}%", eff * 100.0);
     }
 
+    // ---- section 3: fused vs unfused dispatch ------------------------------
+    // Same direct-threaded loop, same task graph; only the
+    // superinstruction fusion stage differs. `fused_ratio > 0` on fib is
+    // the CI bench-smoke gate that fusion actually fires.
+    let fd_n: i64 = if smoke { 18 } else { 22 };
+    let fd_expect = fib::fib_ref(fd_n as u64) as i64;
+    let fused_prog =
+        Arc::new(compile_module_with(sf.explicit(), KernelMode::Explicit, true).unwrap());
+    let unfused_prog =
+        Arc::new(compile_module_with(sf.explicit(), KernelMode::Explicit, false).unwrap());
+    let fused_ratio = fused_prog.fused_ratio();
+    assert!(fused_ratio > 0.0, "superinstruction fusion must fire on fib");
+    let (pairs, before) = fused_prog.fusion();
+    println!(
+        "fib kernels: {} fused pairs over {} instrs (fused_ratio {fused_ratio:.3})",
+        pairs, before
+    );
+    let mut fused_retired = 0u64;
+    let fused_run = bench(&format!("fused   fib({fd_n}) 1-thread"), samples, || {
+        let mut ex = ExplicitExec::with_kernels(
+            sf.explicit(),
+            sf.memory(),
+            NoXla,
+            Arc::clone(&fused_prog),
+        );
+        let v = ex.run("fib", &[Value::I64(fd_n)]).unwrap();
+        assert_eq!(v.as_i64(), fd_expect);
+        fused_retired = ex.stats.instrs;
+        ex.stats.instrs
+    });
+    let mut unfused_retired = 0u64;
+    let unfused_run = bench(&format!("unfused fib({fd_n}) 1-thread"), samples, || {
+        let mut ex = ExplicitExec::with_kernels(
+            sf.explicit(),
+            sf.memory(),
+            NoXla,
+            Arc::clone(&unfused_prog),
+        );
+        let v = ex.run("fib", &[Value::I64(fd_n)]).unwrap();
+        assert_eq!(v.as_i64(), fd_expect);
+        unfused_retired = ex.stats.instrs;
+        ex.stats.instrs
+    });
+    assert!(
+        fused_retired < unfused_retired,
+        "fusion must shrink retired dispatches: {fused_retired} vs {unfused_retired}"
+    );
+    let dispatch_speedup =
+        unfused_run.median.as_secs_f64() / fused_run.median.as_secs_f64().max(1e-12);
+    println!(
+        "fused-vs-unfused on fib({fd_n}): {dispatch_speedup:.2}x, retired {} vs {}",
+        fused_retired, unfused_retired
+    );
+
     // ---- machine-readable output -------------------------------------------
     let mut kvt = Json::object();
     let mut kvt_fib = Json::object();
@@ -433,12 +493,23 @@ fn main() {
         .collect();
     scale_json.set("workers", Json::Array(rows));
 
+    let mut fd = Json::object();
+    fd.set("fib_n", fd_n)
+        .set("fused_ratio", fused_ratio)
+        .set("fused_pairs", pairs as i64)
+        .set("dispatches_retired_fused", fused_retired as i64)
+        .set("dispatches_retired_unfused", unfused_retired as i64)
+        .set("fused_ms", fused_run.median.as_secs_f64() * 1e3)
+        .set("unfused_ms", unfused_run.median.as_secs_f64() * 1e3)
+        .set("speedup", dispatch_speedup);
+
     let mut root = Json::object();
     root.set("bench", "ws_throughput")
         .set("mode", if cfg!(debug_assertions) { "debug" } else { "release" })
         .set("smoke", smoke)
         .set("kernel_vs_tree", kvt)
-        .set("ws_scaling", scale_json);
+        .set("ws_scaling", scale_json)
+        .set("fused_dispatch", fd);
     let path = "BENCH_ws.json";
     std::fs::write(path, root.pretty() + "\n").expect("write BENCH_ws.json");
     println!("wrote {path}");

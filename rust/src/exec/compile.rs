@@ -18,6 +18,33 @@
 //! staging slots are allocated before their value computations' own
 //! temporaries, so monotonically growing per-op temp allocation can
 //! never clobber a staged value.
+//!
+//! # Superinstruction fusion
+//!
+//! After straight-line emission (and branch-target fixup) a peephole
+//! stage ([`fuse_code`]) collapses hot adjacent pairs into one fused
+//! dispatch: compare+branch on the just-written slot
+//! ([`KOp::CmpBranch`]), load/bin feeding a plain `Mov` of the same slot
+//! ([`KOp::LoadMov`]/[`KOp::BinMov`]), a bin whose result is the next
+//! `Store`'s value ([`KOp::StoreBin`]) and bin+return
+//! ([`KOp::ReturnBin`]). Fused handlers replay both component ops
+//! verbatim (every frame write included), and [`KCost`] entries merge
+//! only under rules that keep the simulator's timed traces
+//! byte-for-byte unchanged:
+//!
+//! - pure-compute pairs concatenate their expr counts (the unfused
+//!   charges were adjacent `Compute` segments the trace merged anyway);
+//! - a pair whose first op emits a trace element between the charges
+//!   (`LoadMov`'s `Seg::Load`) fuses only when the second op's cost is
+//!   provably zero for every schedule model;
+//! - a branch target landing on the *second* instruction of a pair
+//!   suppresses fusion (defensive — the block emitter always puts a
+//!   terminator before a block start, but hand-built or future bytecode
+//!   may not).
+//!
+//! Fusion is on by default and gated by `BOMBYX_KERNEL_FUSE=0`
+//! (escape hatch for bisection); [`compile_module_with`] selects it
+//! programmatically.
 
 use std::sync::Arc;
 
@@ -28,14 +55,37 @@ use crate::ir::cfg::{BlockId, Func, FuncKind, Module, Op, RetTarget, Term};
 use crate::ir::expr::{self, Expr, Value};
 
 use super::kernel::{
-    FuncKernel, KBase, KCost, KInstr, KOp, KRet, KernelMode, KernelProgram, Operand, NO_COST,
+    is_cmp_op, FuncKernel, KBase, KCost, KInstr, KOp, KRet, KernelMode, KernelProgram, Operand,
+    NO_COST,
 };
 
-/// Compile every function of `module` into bytecode kernels. The result
-/// passes [`KernelProgram::validate`] (checked here; a failure is a
-/// compiler bug, reported like a pass post-verification failure).
+/// Is superinstruction fusion enabled for this process? On by default;
+/// `BOMBYX_KERNEL_FUSE=0` is the escape hatch.
+pub fn fuse_enabled() -> bool {
+    fuse_from(std::env::var("BOMBYX_KERNEL_FUSE").ok().as_deref())
+}
+
+fn fuse_from(v: Option<&str>) -> bool {
+    !matches!(v, Some("0"))
+}
+
+/// Compile every function of `module` into bytecode kernels (fusion per
+/// the `BOMBYX_KERNEL_FUSE` gate). The result passes
+/// [`KernelProgram::validate`] (checked here; a failure is a compiler
+/// bug, reported like a pass post-verification failure).
 pub fn compile_module(module: &Module, mode: KernelMode) -> Result<KernelProgram> {
-    let prog = compile_module_unvalidated(module, mode)?;
+    compile_module_with(module, mode, fuse_enabled())
+}
+
+/// [`compile_module`] with fusion selected programmatically (the
+/// fusion-on-vs-off differential suite and the dispatch bench drive
+/// this directly, independent of the process environment).
+pub fn compile_module_with(
+    module: &Module,
+    mode: KernelMode,
+    fuse: bool,
+) -> Result<KernelProgram> {
+    let prog = compile_module_unvalidated_with(module, mode, fuse)?;
     let errors = prog.validate();
     if !errors.is_empty() {
         bail!(
@@ -54,9 +104,22 @@ pub(crate) fn compile_module_unvalidated(
     module: &Module,
     mode: KernelMode,
 ) -> Result<KernelProgram> {
+    compile_module_unvalidated_with(module, mode, fuse_enabled())
+}
+
+fn compile_module_unvalidated_with(
+    module: &Module,
+    mode: KernelMode,
+    fuse: bool,
+) -> Result<KernelProgram> {
     let mut funcs = Vec::with_capacity(module.funcs.len());
     for (_, f) in module.funcs.iter() {
-        funcs.push(compile_func(module, f, mode)?);
+        let mut k = compile_func(module, f, mode)?;
+        k.unfused_len = k.code.len() as u32;
+        if fuse {
+            k.fused = fuse_code(&mut k.code, &mut k.costs);
+        }
+        funcs.push(k);
     }
     Ok(KernelProgram { mode, funcs })
 }
@@ -83,6 +146,8 @@ fn compile_func(module: &Module, f: &Func, mode: KernelMode) -> Result<FuncKerne
             frame: Vec::new(),
             code: Vec::new(),
             costs: Vec::new(),
+            fused: 0,
+            unfused_len: 0,
         });
     }
     let Some(cfg) = f.body.as_ref() else {
@@ -150,7 +215,202 @@ fn compile_func(module: &Module, f: &Func, mode: KernelMode) -> Result<FuncKerne
         frame,
         code: c.code,
         costs: c.costs,
+        fused: 0,
+        unfused_len: 0,
     })
+}
+
+// ---------------------------------------------------------------------------
+// Superinstruction fusion (see module docs)
+
+/// Peephole-fuse hot adjacent pairs of `code` in place, remapping branch
+/// targets over the removed instructions. Returns the number of pairs
+/// fused. `costs` gains merged entries where both components carried one
+/// (stale entries of consumed instructions stay — the table is
+/// index-addressed, never iterated for timing).
+fn fuse_code(code: &mut Vec<KInstr>, costs: &mut Vec<KCost>) -> u32 {
+    let n = code.len();
+    if n < 2 {
+        return 0;
+    }
+    // A branch target landing on the second instruction of a pair must
+    // suppress fusion: the fused instruction replays the first component
+    // too, which a jump to the second must skip.
+    let mut is_target = vec![false; n + 1];
+    for instr in code.iter() {
+        match &instr.op {
+            KOp::Jump { target } => is_target[*target as usize] = true,
+            KOp::Branch { then_, else_, .. } => {
+                is_target[*then_ as usize] = true;
+                is_target[*else_ as usize] = true;
+            }
+            _ => {}
+        }
+    }
+    let old = std::mem::take(code);
+    let mut new_pc = vec![0u32; n + 1];
+    let mut fused = 0u32;
+    let mut i = 0usize;
+    while i < n {
+        new_pc[i] = code.len() as u32;
+        let pair = if i + 1 < n && !is_target[i + 1] {
+            try_fuse(&old[i], &old[i + 1], costs)
+        } else {
+            None
+        };
+        match pair {
+            Some(instr) => {
+                // The consumed slot maps to the fused instruction; nothing
+                // targets it (suppressed above), the mapping just keeps
+                // the table total.
+                new_pc[i + 1] = code.len() as u32;
+                code.push(instr);
+                fused += 1;
+                i += 2;
+            }
+            None => {
+                code.push(old[i].clone());
+                i += 1;
+            }
+        }
+    }
+    new_pc[n] = code.len() as u32;
+    for instr in code.iter_mut() {
+        match &mut instr.op {
+            KOp::Jump { target } => *target = new_pc[*target as usize],
+            KOp::Branch { then_, else_, .. } | KOp::CmpBranch { then_, else_, .. } => {
+                *then_ = new_pc[*then_ as usize];
+                *else_ = new_pc[*else_ as usize];
+            }
+            _ => {}
+        }
+    }
+    fused
+}
+
+/// Is this cost zero cycles under *every* schedule model? (`Zero` base
+/// and all-zero operator counts — `ceil(0/ops_per_cycle)` is 0 for any
+/// divisor.)
+fn zero_cycle(cost: u32, costs: &[KCost]) -> bool {
+    cost == NO_COST || {
+        let c = &costs[cost as usize];
+        c.base == KBase::Zero && c.exprs.iter().all(|&e| e == 0)
+    }
+}
+
+/// Merge the costs of two *pure-compute* ops (neither emits a trace
+/// element, so their unfused charges were adjacent `Compute` pushes that
+/// the trace collapsed into one segment — concatenating expr counts
+/// yields the byte-identical segment). Returns `None` when both carry a
+/// non-`Zero` base (no single base can represent the pair).
+fn merge_compute_costs(a: u32, b: u32, costs: &mut Vec<KCost>) -> Option<u32> {
+    match (a == NO_COST, b == NO_COST) {
+        (true, true) => Some(NO_COST),
+        (false, true) => Some(a),
+        (true, false) => Some(b),
+        (false, false) => {
+            let (ca, cb) = (&costs[a as usize], &costs[b as usize]);
+            let base = match (ca.base, cb.base) {
+                (KBase::Zero, other) | (other, KBase::Zero) => other,
+                _ => return None,
+            };
+            let mut exprs = ca.exprs.clone();
+            exprs.extend_from_slice(&cb.exprs);
+            let id = costs.len() as u32;
+            costs.push(KCost { base, exprs });
+            Some(id)
+        }
+    }
+}
+
+/// Try to fuse the adjacent pair `(a, b)` into one superinstruction.
+fn try_fuse(a: &KInstr, b: &KInstr, costs: &mut Vec<KCost>) -> Option<KInstr> {
+    match (&a.op, &b.op) {
+        // Compare feeding the branch on its just-written slot. Restricted
+        // to cost-free compares (branch-condition temporaries): the
+        // merged charge is then exactly the branch's, trivially
+        // trace-identical, and `costs_mirror_hls_op_cycles`-style
+        // terminator accounting stays clean.
+        (
+            KOp::Bin { op, dst, lhs, rhs, ty },
+            KOp::Branch { cond: Operand::Slot(c), then_, else_ },
+        ) if is_cmp_op(*op) && *c == *dst && a.cost == NO_COST => Some(KInstr::new(
+            KOp::CmpBranch {
+                op: *op,
+                dst: *dst,
+                lhs: *lhs,
+                rhs: *rhs,
+                ty: *ty,
+                then_: *then_,
+                else_: *else_,
+            },
+            b.cost,
+        )),
+        // Load feeding a plain Mov of the loaded slot. A `Seg::Load` sits
+        // between the two unfused charges, so the Mov's cost must be
+        // zero-cycle under every model for the single up-front charge to
+        // leave the trace untouched.
+        (KOp::Load { dst, arr, index }, KOp::Mov { dst: mdst, src: Operand::Slot(s), ty })
+            if *s == *dst && zero_cycle(b.cost, costs) =>
+        {
+            let cost = if a.cost != NO_COST { a.cost } else { b.cost };
+            Some(KInstr::new(
+                KOp::LoadMov { ldst: *dst, arr: *arr, index: *index, dst: *mdst, ty: *ty },
+                cost,
+            ))
+        }
+        // Bin feeding a plain Mov of its just-written slot.
+        (
+            KOp::Bin { op, dst, lhs, rhs, ty: bty },
+            KOp::Mov { dst: mdst, src: Operand::Slot(s), ty },
+        ) if *s == *dst => {
+            let cost = merge_compute_costs(a.cost, b.cost, costs)?;
+            Some(KInstr::new(
+                KOp::BinMov {
+                    op: *op,
+                    bdst: *dst,
+                    lhs: *lhs,
+                    rhs: *rhs,
+                    bty: *bty,
+                    dst: *mdst,
+                    ty: *ty,
+                },
+                cost,
+            ))
+        }
+        // Bin feeding the following store's value operand. (Stores emit
+        // no trace element, so cost merging follows the compute rule.)
+        (
+            KOp::Bin { op, dst, lhs, rhs, ty: bty },
+            KOp::Store { arr, index, value: Operand::Slot(s) },
+        ) if *s == *dst => {
+            let cost = merge_compute_costs(a.cost, b.cost, costs)?;
+            Some(KInstr::new(
+                KOp::StoreBin {
+                    op: *op,
+                    bdst: *dst,
+                    lhs: *lhs,
+                    rhs: *rhs,
+                    bty: *bty,
+                    arr: *arr,
+                    index: *index,
+                },
+                cost,
+            ))
+        }
+        // Bin feeding the return value.
+        (
+            KOp::Bin { op, dst, lhs, rhs, ty: bty },
+            KOp::Return { value: Some(Operand::Slot(s)) },
+        ) if *s == *dst => {
+            let cost = merge_compute_costs(a.cost, b.cost, costs)?;
+            Some(KInstr::new(
+                KOp::ReturnBin { op: *op, bdst: *dst, lhs: *lhs, rhs: *rhs, bty: *bty },
+                cost,
+            ))
+        }
+        _ => None,
+    }
 }
 
 /// Operator count of an expression — the figure `hls::expr_cycles`
@@ -208,13 +468,13 @@ impl<'m> FnCompiler<'m> {
     }
 
     fn push(&mut self, op: KOp) {
-        self.code.push(KInstr { op, cost: NO_COST });
+        self.code.push(KInstr::new(op, NO_COST));
     }
 
     fn push_costed(&mut self, op: KOp, cost: KCost) {
         let id = self.costs.len() as u32;
         self.costs.push(cost);
-        self.code.push(KInstr { op, cost: id });
+        self.code.push(KInstr::new(op, id));
     }
 
     /// Attach a cost to the most recently emitted instruction (the
@@ -623,13 +883,136 @@ mod tests {
             let k = prog.kernel(fid);
             let mut kernel_total = 0u32;
             for instr in &k.code {
+                // Terminator costs stay excluded; a fused CmpBranch
+                // carries exactly the branch terminator's cost (the
+                // compare half is restricted to cost-free temporaries).
                 if instr.cost != NO_COST
-                    && !matches!(instr.op, KOp::Jump { .. } | KOp::Branch { .. })
+                    && !matches!(
+                        instr.op,
+                        KOp::Jump { .. } | KOp::Branch { .. } | KOp::CmpBranch { .. }
+                    )
                 {
                     kernel_total += k.costs[instr.cost as usize].cycles(&model);
                 }
             }
             assert_eq!(kernel_total, hls_total, "kernel `{}`", k.name);
         }
+    }
+
+    fn has_fused(prog: &KernelProgram) -> bool {
+        prog.funcs.iter().any(|k| {
+            k.code.iter().any(|i| {
+                matches!(
+                    i.op,
+                    KOp::CmpBranch { .. }
+                        | KOp::LoadMov { .. }
+                        | KOp::BinMov { .. }
+                        | KOp::StoreBin { .. }
+                        | KOp::ReturnBin { .. }
+                )
+            })
+        })
+    }
+
+    #[test]
+    fn fusion_fires_on_fib_and_gate_disables_it() {
+        let r = compile("t", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+        for (module, mode) in [
+            (&r.implicit, KernelMode::Implicit),
+            (&r.explicit, KernelMode::Explicit),
+        ] {
+            let fused = compile_module_with(module, mode, true).unwrap();
+            assert!(has_fused(&fused), "no fused ops in fib ({mode:?})");
+            assert!(
+                fused
+                    .funcs
+                    .iter()
+                    .any(|k| k.code.iter().any(|i| matches!(i.op, KOp::CmpBranch { .. }))),
+                "fib's `n < 2` must fuse to CmpBranch"
+            );
+            assert!(fused.fused_ratio() > 0.0);
+            assert!(fused.validate().is_empty(), "{:?}", fused.validate());
+            let unfused = compile_module_with(module, mode, false).unwrap();
+            assert!(!has_fused(&unfused));
+            assert_eq!(unfused.fused_ratio(), 0.0);
+            assert!(fused.instr_count() < unfused.instr_count());
+        }
+    }
+
+    #[test]
+    fn fused_kernels_compute_the_same_values() {
+        let src = "global int a[8];
+            int f(int n) {
+                int acc = 0;
+                for (int i = 0; i < n; i = i + 1) {
+                    a[i] = i * 2 + 1;
+                    int w = a[i];
+                    acc = acc + w;
+                }
+                return acc + n;
+            }";
+        let r = compile("t", src, &CompileOptions::no_dae()).unwrap();
+        let mut results = Vec::new();
+        for fuse in [true, false] {
+            let prog = compile_module_with(&r.implicit, KernelMode::Implicit, fuse).unwrap();
+            let fid = prog.func_by_name("f").unwrap();
+            let mut m = SerialMachine { mem: Memory::new(&r.implicit) };
+            let mut stack = KStack::new();
+            let v =
+                run_kernel(&prog, fid, &[Value::I64(8)], &mut stack, &mut m, 1_000_000).unwrap();
+            results.push((v, m.mem.dump_i64(GlobalId::new(0))));
+        }
+        assert_eq!(results[0], results[1], "fusion changed observable behavior");
+    }
+
+    #[test]
+    fn branch_target_into_pair_second_suppresses_fusion() {
+        use crate::frontend::ast::BinOp;
+        // [0] cmp, [1] branch on it, [2] jump back *into* the branch,
+        // [3] return. Fusing 0+1 would make pc 1 unreachable as a target.
+        let cmp = KOp::Bin {
+            op: BinOp::Lt,
+            dst: 1,
+            lhs: Operand::Slot(0),
+            rhs: Operand::Imm(Value::I64(2)),
+            ty: None,
+        };
+        let branch = KOp::Branch { cond: Operand::Slot(1), then_: 3, else_: 2 };
+        let ret = KOp::Return { value: Some(Operand::Imm(Value::I64(0))) };
+        let mut costs = Vec::new();
+        let mut code = vec![
+            KInstr::new(cmp.clone(), NO_COST),
+            KInstr::new(branch.clone(), NO_COST),
+            KInstr::new(KOp::Jump { target: 1 }, NO_COST),
+            KInstr::new(ret.clone(), NO_COST),
+        ];
+        assert_eq!(fuse_code(&mut code, &mut costs), 0, "mid-pair target must suppress");
+        assert_eq!(code.len(), 4);
+        // Same shape, but the jump targets the *first* of the pair: fuses,
+        // and every target remaps across the removed slot.
+        let mut code = vec![
+            KInstr::new(cmp, NO_COST),
+            KInstr::new(branch, NO_COST),
+            KInstr::new(KOp::Jump { target: 0 }, NO_COST),
+            KInstr::new(ret, NO_COST),
+        ];
+        assert_eq!(fuse_code(&mut code, &mut costs), 1);
+        assert_eq!(code.len(), 3);
+        let KOp::CmpBranch { then_, else_, .. } = &code[0].op else {
+            panic!("expected CmpBranch, got {:?}", code[0].op);
+        };
+        assert_eq!((*then_, *else_), (2, 1), "targets remapped over the fused pair");
+        let KOp::Jump { target } = &code[1].op else {
+            panic!("expected Jump, got {:?}", code[1].op);
+        };
+        assert_eq!(*target, 0);
+    }
+
+    #[test]
+    fn fuse_gate_parses_env_values() {
+        assert!(fuse_from(None));
+        assert!(fuse_from(Some("1")));
+        assert!(fuse_from(Some("")));
+        assert!(!fuse_from(Some("0")));
     }
 }

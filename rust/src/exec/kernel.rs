@@ -15,6 +15,22 @@
 //! variables coerce to the variable's declared type exactly where the
 //! tree walkers did, and the compiler ([`super::compile`]) preserves
 //! left-to-right evaluation order.
+//!
+//! # Dispatch
+//!
+//! The interpreter is *direct-threaded*: every instruction carries a
+//! pre-resolved handler index ([`KInstr::h`], assigned at kernel-compile
+//! time from [`opcode_of`]), and the loop jumps through a per-[`Machine`]
+//! monomorphized table of `fn(&mut Ctx<M>, &KOp) -> Result<Step>`
+//! handlers instead of matching on the opcode per retired instruction.
+//! Hot adjacent pairs are additionally collapsed into fused
+//! superinstructions (`CmpBranch`, `LoadMov`, `BinMov`, `StoreBin`,
+//! `ReturnBin`) by the peephole stage in [`super::compile`], halving the
+//! dispatch count on comparison-driven control flow; each fused handler
+//! replays both component ops verbatim (including every frame-slot
+//! write), so fusion is observationally invisible — the
+//! `BOMBYX_KERNEL_FUSE=0` escape hatch exists for bisection, not
+//! correctness.
 
 use std::sync::Arc;
 
@@ -63,15 +79,26 @@ pub enum KontRef {
     Forward,
 }
 
-/// One bytecode instruction: the operation plus an optional index into
-/// the kernel's [`KCost`] table (attached to the anchor instruction of
-/// each source IR op; [`NO_COST`] on expression-temporary instructions,
-/// whose cycles are folded into their anchor's cost — exactly how the
-/// HLS model charged whole ops).
+/// One bytecode instruction: the operation, an optional index into the
+/// kernel's [`KCost`] table (attached to the anchor instruction of each
+/// source IR op; [`NO_COST`] on expression-temporary instructions, whose
+/// cycles are folded into their anchor's cost — exactly how the HLS
+/// model charged whole ops), and the pre-resolved dispatch-handler index
+/// (`h`, always `opcode_of(&op)` — enforced by the validator).
 #[derive(Clone, Debug)]
 pub struct KInstr {
     pub op: KOp,
     pub cost: u32,
+    /// Direct-threaded dispatch index into the per-machine handler table.
+    pub h: u8,
+}
+
+impl KInstr {
+    #[inline]
+    pub fn new(op: KOp, cost: u32) -> KInstr {
+        let h = opcode_of(&op);
+        KInstr { op, cost, h }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -103,6 +130,117 @@ pub enum KOp {
     Branch { cond: Operand, then_: u32, else_: u32 },
     Return { value: Option<Operand> },
     Halt,
+
+    // -- fused superinstructions (peephole stage in `super::compile`) --
+    // Each replays its component ops verbatim, including every frame
+    // write, so fusion never changes observable behavior; only the
+    // dispatch count shrinks. Costs are merged at fusion time under
+    // rules that keep the simulator's timed traces byte-identical.
+    /// `Bin{cmp} ; Branch` on the just-written slot.
+    CmpBranch {
+        op: BinOp,
+        dst: u32,
+        lhs: Operand,
+        rhs: Operand,
+        ty: Option<Type>,
+        then_: u32,
+        else_: u32,
+    },
+    /// `Load ; Mov` of the just-loaded slot.
+    LoadMov { ldst: u32, arr: GlobalId, index: Operand, dst: u32, ty: Option<Type> },
+    /// `Bin ; Mov` of the just-written slot.
+    BinMov {
+        op: BinOp,
+        bdst: u32,
+        lhs: Operand,
+        rhs: Operand,
+        bty: Option<Type>,
+        dst: u32,
+        ty: Option<Type>,
+    },
+    /// `Bin ; Store` whose value is the just-written slot.
+    StoreBin {
+        op: BinOp,
+        bdst: u32,
+        lhs: Operand,
+        rhs: Operand,
+        bty: Option<Type>,
+        arr: GlobalId,
+        index: Operand,
+    },
+    /// `Bin ; Return` of the just-written slot.
+    ReturnBin { op: BinOp, bdst: u32, lhs: Operand, rhs: Operand, bty: Option<Type> },
+}
+
+/// Dispatch-handler indices, one per [`KOp`] variant. The handler table
+/// ([`run_kernel`]'s direct-threaded loop) is indexed by these, so their
+/// order must match `HANDLERS` exactly.
+pub mod opcode {
+    pub const MOV: u8 = 0;
+    pub const BIN: u8 = 1;
+    pub const UN: u8 = 2;
+    pub const BUILTIN2: u8 = 3;
+    pub const BUILTIN1: u8 = 4;
+    pub const INT_TO_FLOAT: u8 = 5;
+    pub const LOAD: u8 = 6;
+    pub const STORE: u8 = 7;
+    pub const ATOMIC_ADD: u8 = 8;
+    pub const CALL: u8 = 9;
+    pub const SPAWN_SEQ: u8 = 10;
+    pub const MAKE_CLOSURE: u8 = 11;
+    pub const CLOSURE_STORE: u8 = 12;
+    pub const SPAWN_CHILD: u8 = 13;
+    pub const CLOSE_SPAWNS: u8 = 14;
+    pub const SEND_ARGUMENT: u8 = 15;
+    pub const JUMP: u8 = 16;
+    pub const BRANCH: u8 = 17;
+    pub const RETURN: u8 = 18;
+    pub const HALT: u8 = 19;
+    pub const CMP_BRANCH: u8 = 20;
+    pub const LOAD_MOV: u8 = 21;
+    pub const BIN_MOV: u8 = 22;
+    pub const STORE_BIN: u8 = 23;
+    pub const RETURN_BIN: u8 = 24;
+    /// Number of opcodes (handler-table length).
+    pub const N: usize = 25;
+}
+
+/// The dispatch-handler index of an op — resolved once at kernel-compile
+/// time ([`KInstr::new`]), never on the hot path.
+pub fn opcode_of(op: &KOp) -> u8 {
+    match op {
+        KOp::Mov { .. } => opcode::MOV,
+        KOp::Bin { .. } => opcode::BIN,
+        KOp::Un { .. } => opcode::UN,
+        KOp::Builtin2 { .. } => opcode::BUILTIN2,
+        KOp::Builtin1 { .. } => opcode::BUILTIN1,
+        KOp::IntToFloat { .. } => opcode::INT_TO_FLOAT,
+        KOp::Load { .. } => opcode::LOAD,
+        KOp::Store { .. } => opcode::STORE,
+        KOp::AtomicAdd { .. } => opcode::ATOMIC_ADD,
+        KOp::Call { .. } => opcode::CALL,
+        KOp::SpawnSeq { .. } => opcode::SPAWN_SEQ,
+        KOp::MakeClosure { .. } => opcode::MAKE_CLOSURE,
+        KOp::ClosureStore { .. } => opcode::CLOSURE_STORE,
+        KOp::SpawnChild { .. } => opcode::SPAWN_CHILD,
+        KOp::CloseSpawns { .. } => opcode::CLOSE_SPAWNS,
+        KOp::SendArgument { .. } => opcode::SEND_ARGUMENT,
+        KOp::Jump { .. } => opcode::JUMP,
+        KOp::Branch { .. } => opcode::BRANCH,
+        KOp::Return { .. } => opcode::RETURN,
+        KOp::Halt => opcode::HALT,
+        KOp::CmpBranch { .. } => opcode::CMP_BRANCH,
+        KOp::LoadMov { .. } => opcode::LOAD_MOV,
+        KOp::BinMov { .. } => opcode::BIN_MOV,
+        KOp::StoreBin { .. } => opcode::STORE_BIN,
+        KOp::ReturnBin { .. } => opcode::RETURN_BIN,
+    }
+}
+
+/// Is `op` one of the comparison operators eligible for `CmpBranch`
+/// fusion (and required by the validator on fused compare-branches)?
+pub fn is_cmp_op(op: BinOp) -> bool {
+    matches!(op, BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge | BinOp::Eq | BinOp::Ne)
 }
 
 /// Cycle-cost metadata for one source IR op, resolved against a
@@ -165,6 +303,12 @@ pub struct FuncKernel {
     /// Empty for `extern xla` declarations (no body).
     pub code: Vec<KInstr>,
     pub costs: Vec<KCost>,
+    /// Superinstruction pairs collapsed by the fusion stage (0 when
+    /// fusion is disabled).
+    pub fused: u32,
+    /// Instruction count before fusion (== `code.len()` when nothing
+    /// fused).
+    pub unfused_len: u32,
 }
 
 /// A compiled module: kernels indexed by [`FuncId`].
@@ -189,6 +333,24 @@ impl KernelProgram {
 
     pub fn instr_count(&self) -> usize {
         self.funcs.iter().map(|k| k.code.len()).sum()
+    }
+
+    /// Aggregate fusion stats: `(fused pairs, instructions before fusion)`.
+    pub fn fusion(&self) -> (u64, u64) {
+        let pairs = self.funcs.iter().map(|k| k.fused as u64).sum();
+        let before = self.funcs.iter().map(|k| k.unfused_len as u64).sum();
+        (pairs, before)
+    }
+
+    /// Fraction of pre-fusion instructions covered by fused pairs
+    /// (`2 * pairs / pre-fusion count`; 0.0 when fusion is off).
+    pub fn fused_ratio(&self) -> f64 {
+        let (pairs, before) = self.fusion();
+        if before == 0 {
+            0.0
+        } else {
+            2.0 * pairs as f64 / before as f64
+        }
     }
 
     /// Structural validation — the post-pass lint of the `kernel_compile`
@@ -227,6 +389,14 @@ impl KernelProgram {
             for (pc, instr) in k.code.iter().enumerate() {
                 if instr.cost != NO_COST && instr.cost as usize >= k.costs.len() {
                     errors.push(ctx(format!("pc {pc}: cost index out of range")));
+                }
+                if instr.h != opcode_of(&instr.op) {
+                    errors.push(ctx(format!(
+                        "pc {pc}: handler index {} does not match opcode {} of {:?}",
+                        instr.h,
+                        opcode_of(&instr.op),
+                        instr.op
+                    )));
                 }
                 let mut bad = false;
                 match &instr.op {
@@ -285,6 +455,30 @@ impl KernelProgram {
                             errors.push(ctx(format!("pc {pc}: Halt in implicit kernel")));
                         }
                     }
+                    KOp::CmpBranch { op, dst, lhs, rhs, then_, else_, .. } => {
+                        bad = !slot_ok(*dst)
+                            || !opnd_ok(lhs)
+                            || !opnd_ok(rhs)
+                            || *then_ >= ncode
+                            || *else_ >= ncode;
+                        if !is_cmp_op(*op) {
+                            errors.push(ctx(format!(
+                                "pc {pc}: CmpBranch fused over non-comparison {op:?}"
+                            )));
+                        }
+                    }
+                    KOp::LoadMov { ldst, index, dst, .. } => {
+                        bad = !slot_ok(*ldst) || !slot_ok(*dst) || !opnd_ok(index);
+                    }
+                    KOp::BinMov { bdst, lhs, rhs, dst, .. } => {
+                        bad = !slot_ok(*bdst) || !slot_ok(*dst) || !opnd_ok(lhs) || !opnd_ok(rhs);
+                    }
+                    KOp::StoreBin { bdst, lhs, rhs, index, .. } => {
+                        bad = !slot_ok(*bdst) || !opnd_ok(lhs) || !opnd_ok(rhs) || !opnd_ok(index);
+                    }
+                    KOp::ReturnBin { bdst, lhs, rhs, .. } => {
+                        bad = !slot_ok(*bdst) || !opnd_ok(lhs) || !opnd_ok(rhs);
+                    }
                 }
                 if self.mode == KernelMode::Implicit
                     && matches!(
@@ -316,15 +510,21 @@ impl KernelProgram {
         };
         let _ = writeln!(out, "; kernel program ({mode} IR, {} kernels)", self.funcs.len());
         for (i, k) in self.funcs.iter().enumerate() {
+            let fused = if k.fused > 0 {
+                format!(", fused={} of {}", k.fused, k.unfused_len)
+            } else {
+                String::new()
+            };
             let _ = writeln!(
                 out,
-                "\nkernel `{}` #{i} ({:?}, role={}, params={}, frame={}, ret={:?}):",
+                "\nkernel `{}` #{i} ({:?}, role={}, params={}, frame={}, ret={:?}{}):",
                 k.name,
                 k.kind,
                 k.role,
                 k.params,
                 k.frame.len(),
-                k.ret
+                k.ret,
+                fused
             );
             if k.code.is_empty() {
                 let _ = writeln!(out, "  <extern>");
@@ -438,6 +638,43 @@ fn fmt_op(op: &KOp, prog: &KernelProgram) -> String {
             value.as_ref().map(|v| fmt_operand(v)).unwrap_or_else(|| "-".into())
         ),
         KOp::Halt => "halt".to_string(),
+        KOp::CmpBranch { op, dst, lhs, rhs, ty, then_, else_ } => format!(
+            "{} = {:?} {}, {} ; branch r{dst} ? @{then_} : @{else_}",
+            fmt_dst(*dst, ty),
+            op,
+            fmt_operand(lhs),
+            fmt_operand(rhs)
+        ),
+        KOp::LoadMov { ldst, arr, index, dst, ty } => format!(
+            "r{ldst} = load g{}[{}] ; {} = r{ldst}",
+            arr.index(),
+            fmt_operand(index),
+            fmt_dst(*dst, ty)
+        ),
+        KOp::BinMov { op, bdst, lhs, rhs, bty, dst, ty } => format!(
+            "{} = {:?} {}, {} ; {} = r{bdst}",
+            fmt_dst(*bdst, bty),
+            op,
+            fmt_operand(lhs),
+            fmt_operand(rhs),
+            fmt_dst(*dst, ty)
+        ),
+        KOp::StoreBin { op, bdst, lhs, rhs, bty, arr, index } => format!(
+            "{} = {:?} {}, {} ; store g{}[{}] = r{bdst}",
+            fmt_dst(*bdst, bty),
+            op,
+            fmt_operand(lhs),
+            fmt_operand(rhs),
+            arr.index(),
+            fmt_operand(index)
+        ),
+        KOp::ReturnBin { op, bdst, lhs, rhs, bty } => format!(
+            "{} = {:?} {}, {} ; return r{bdst}",
+            fmt_dst(*bdst, bty),
+            op,
+            fmt_operand(lhs),
+            fmt_operand(rhs)
+        ),
     }
 }
 
@@ -713,6 +950,10 @@ pub struct KStack {
     depth: usize,
     /// Per-frame-activation step budget (see [`run_kernel`]).
     limit: u64,
+    /// Instructions retired over this stack's lifetime (cumulative across
+    /// runs — a fused pair retires as one dispatch). Engines surface this
+    /// through their stats for `bombyx run --stats`.
+    retired: u64,
 }
 
 impl Default for KStack {
@@ -723,7 +964,12 @@ impl Default for KStack {
 
 impl KStack {
     pub fn new() -> KStack {
-        KStack { slots: Vec::with_capacity(256), depth: 0, limit: 0 }
+        KStack { slots: Vec::with_capacity(256), depth: 0, limit: 0, retired: 0 }
+    }
+
+    /// Cumulative dispatches retired through this stack.
+    pub fn retired(&self) -> u64 {
+        self.retired
     }
 }
 
@@ -832,6 +1078,360 @@ fn seq_call<M: Machine>(
     Ok(())
 }
 
+/// Per-frame interpreter context handed to dispatch handlers.
+pub struct Ctx<'e, M: Machine> {
+    prog: &'e KernelProgram,
+    kernel: &'e FuncKernel,
+    base: usize,
+    pc: usize,
+    /// Per-activation step budget consumed (branches/jumps).
+    steps: u64,
+    stack: &'e mut KStack,
+    machine: &'e mut M,
+}
+
+/// Handler outcome: continue at `ctx.pc` (already advanced/redirected) or
+/// unwind the frame with a value.
+pub enum Step {
+    Next,
+    Return(Value),
+}
+
+/// One dispatch handler, monomorphized per machine. The `KOp` passed is
+/// always the variant the handler's opcode index names (validated at
+/// kernel compile); the `let .. else` destructure is a defensive check,
+/// not dispatch.
+type Handler<M> = for<'a, 'e, 'o> fn(&'a mut Ctx<'e, M>, &'o KOp) -> Result<Step>;
+
+#[cold]
+fn op_mismatch(op: &KOp) -> Result<Step> {
+    Err(anyhow!("dispatch-table corruption: handler received mismatched op {op:?}"))
+}
+
+#[inline]
+fn step_budget<M: Machine>(ctx: &mut Ctx<'_, M>) -> Result<()> {
+    ctx.steps += 1;
+    if ctx.steps > ctx.stack.limit {
+        bail!("`{}` exceeded step limit (infinite loop?)", ctx.kernel.name);
+    }
+    Ok(())
+}
+
+fn h_mov<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::Mov { dst, src, ty } = op else { return op_mismatch(op) };
+    let mut v = rd(&ctx.stack.slots, ctx.base, *src);
+    if let Some(t) = ty {
+        v = v.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *dst as usize] = v;
+    Ok(Step::Next)
+}
+
+fn h_bin<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::Bin { op, dst, lhs, rhs, ty } = op else { return op_mismatch(op) };
+    let va = rd(&ctx.stack.slots, ctx.base, *lhs);
+    let vb = rd(&ctx.stack.slots, ctx.base, *rhs);
+    let mut v = bin_value(*op, va, vb);
+    if let Some(t) = ty {
+        v = v.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *dst as usize] = v;
+    Ok(Step::Next)
+}
+
+fn h_un<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::Un { op, dst, src, ty } = op else { return op_mismatch(op) };
+    let mut v = un_value(*op, rd(&ctx.stack.slots, ctx.base, *src));
+    if let Some(t) = ty {
+        v = v.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *dst as usize] = v;
+    Ok(Step::Next)
+}
+
+fn h_builtin2<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::Builtin2 { b, dst, lhs, rhs, ty } = op else { return op_mismatch(op) };
+    let va = rd(&ctx.stack.slots, ctx.base, *lhs);
+    let vb = rd(&ctx.stack.slots, ctx.base, *rhs);
+    let mut v = builtin2_value(*b, va, vb);
+    if let Some(t) = ty {
+        v = v.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *dst as usize] = v;
+    Ok(Step::Next)
+}
+
+fn h_builtin1<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::Builtin1 { b, dst, src, ty } = op else { return op_mismatch(op) };
+    let mut v = builtin1_value(*b, rd(&ctx.stack.slots, ctx.base, *src));
+    if let Some(t) = ty {
+        v = v.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *dst as usize] = v;
+    Ok(Step::Next)
+}
+
+fn h_int_to_float<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::IntToFloat { dst, src, ty } = op else { return op_mismatch(op) };
+    let mut v = Value::F32(rd(&ctx.stack.slots, ctx.base, *src).as_f32());
+    if let Some(t) = ty {
+        v = v.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *dst as usize] = v;
+    Ok(Step::Next)
+}
+
+fn h_load<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::Load { dst, arr, index } = op else { return op_mismatch(op) };
+    let idx = rd(&ctx.stack.slots, ctx.base, *index).as_i64();
+    let v = ctx.machine.load(*arr, idx)?;
+    ctx.stack.slots[ctx.base + *dst as usize] = v;
+    Ok(Step::Next)
+}
+
+fn h_store<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::Store { arr, index, value } = op else { return op_mismatch(op) };
+    let idx = rd(&ctx.stack.slots, ctx.base, *index).as_i64();
+    let v = rd(&ctx.stack.slots, ctx.base, *value);
+    ctx.machine.store(*arr, idx, v)?;
+    Ok(Step::Next)
+}
+
+fn h_atomic_add<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::AtomicAdd { arr, index, value } = op else { return op_mismatch(op) };
+    let idx = rd(&ctx.stack.slots, ctx.base, *index).as_i64();
+    let v = rd(&ctx.stack.slots, ctx.base, *value);
+    ctx.machine.atomic_add(*arr, idx, v)?;
+    Ok(Step::Next)
+}
+
+fn h_call<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::Call { dst, callee, args_at, nargs } = op else { return op_mismatch(op) };
+    seq_call(
+        ctx.prog,
+        *callee,
+        ctx.base,
+        *args_at,
+        *nargs,
+        *dst,
+        &mut *ctx.stack,
+        &mut *ctx.machine,
+    )?;
+    Ok(Step::Next)
+}
+
+fn h_spawn_seq<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::SpawnSeq { dst, callee, args_at, nargs } = op else { return op_mismatch(op) };
+    ctx.machine.on_spawn_seq();
+    seq_call(
+        ctx.prog,
+        *callee,
+        ctx.base,
+        *args_at,
+        *nargs,
+        *dst,
+        &mut *ctx.stack,
+        &mut *ctx.machine,
+    )?;
+    Ok(Step::Next)
+}
+
+fn h_make_closure<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::MakeClosure { dst, task } = op else { return op_mismatch(op) };
+    let handle = ctx.machine.make_closure(*task)?;
+    ctx.stack.slots[ctx.base + *dst as usize] = handle;
+    Ok(Step::Next)
+}
+
+fn h_closure_store<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::ClosureStore { clos, field, value } = op else { return op_mismatch(op) };
+    let h = ctx.stack.slots[ctx.base + *clos as usize];
+    let v = rd(&ctx.stack.slots, ctx.base, *value);
+    ctx.machine.closure_store(h, *field, v)?;
+    Ok(Step::Next)
+}
+
+fn h_spawn_child<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::SpawnChild { callee, args_at, nargs, ret } = op else { return op_mismatch(op) };
+    let kont = match ret {
+        KRet::Slot { clos, field } => KontRef::Slot {
+            clos: ctx.stack.slots[ctx.base + *clos as usize],
+            field: *field,
+        },
+        KRet::Counter { clos } => {
+            KontRef::Counter { clos: ctx.stack.slots[ctx.base + *clos as usize] }
+        }
+        KRet::Forward => KontRef::Forward,
+    };
+    let a0 = ctx.base + *args_at as usize;
+    let args = &ctx.stack.slots[a0..a0 + *nargs as usize];
+    ctx.machine.spawn_child(*callee, args, kont)?;
+    Ok(Step::Next)
+}
+
+fn h_close_spawns<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::CloseSpawns { clos } = op else { return op_mismatch(op) };
+    let h = ctx.stack.slots[ctx.base + *clos as usize];
+    ctx.machine.close_spawns(h)?;
+    Ok(Step::Next)
+}
+
+fn h_send_argument<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::SendArgument { value } = op else { return op_mismatch(op) };
+    let v = match value {
+        Some(o) => rd(&ctx.stack.slots, ctx.base, *o).coerce(ctx.kernel.ret),
+        None => Value::Unit,
+    };
+    ctx.machine.send_argument(v)?;
+    Ok(Step::Next)
+}
+
+fn h_jump<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::Jump { target } = op else { return op_mismatch(op) };
+    step_budget(ctx)?;
+    ctx.pc = *target as usize;
+    Ok(Step::Next)
+}
+
+fn h_branch<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::Branch { cond, then_, else_ } = op else { return op_mismatch(op) };
+    step_budget(ctx)?;
+    let c = rd(&ctx.stack.slots, ctx.base, *cond).as_bool();
+    ctx.pc = if c { *then_ as usize } else { *else_ as usize };
+    Ok(Step::Next)
+}
+
+fn h_return<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::Return { value } = op else { return op_mismatch(op) };
+    Ok(Step::Return(match value {
+        Some(o) => rd(&ctx.stack.slots, ctx.base, *o).coerce(ctx.kernel.ret),
+        None => Value::Unit,
+    }))
+}
+
+fn h_halt<M: Machine>(_ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::Halt = op else { return op_mismatch(op) };
+    Ok(Step::Return(Value::Unit))
+}
+
+// -- fused-superinstruction handlers: each replays its component ops in
+// order, including every frame write, so behavior (and the sim trace,
+// given the fusion stage's cost-merge rules) is identical to the
+// unfused pair.
+
+fn h_cmp_branch<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::CmpBranch { op, dst, lhs, rhs, ty, then_, else_ } = op else {
+        return op_mismatch(op);
+    };
+    let va = rd(&ctx.stack.slots, ctx.base, *lhs);
+    let vb = rd(&ctx.stack.slots, ctx.base, *rhs);
+    let mut v = bin_value(*op, va, vb);
+    if let Some(t) = ty {
+        v = v.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *dst as usize] = v;
+    step_budget(ctx)?;
+    ctx.pc = if v.as_bool() { *then_ as usize } else { *else_ as usize };
+    Ok(Step::Next)
+}
+
+fn h_load_mov<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::LoadMov { ldst, arr, index, dst, ty } = op else { return op_mismatch(op) };
+    let idx = rd(&ctx.stack.slots, ctx.base, *index).as_i64();
+    let v = ctx.machine.load(*arr, idx)?;
+    ctx.stack.slots[ctx.base + *ldst as usize] = v;
+    let mut mv = v;
+    if let Some(t) = ty {
+        mv = mv.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *dst as usize] = mv;
+    Ok(Step::Next)
+}
+
+fn h_bin_mov<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::BinMov { op, bdst, lhs, rhs, bty, dst, ty } = op else { return op_mismatch(op) };
+    let va = rd(&ctx.stack.slots, ctx.base, *lhs);
+    let vb = rd(&ctx.stack.slots, ctx.base, *rhs);
+    let mut v = bin_value(*op, va, vb);
+    if let Some(t) = bty {
+        v = v.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *bdst as usize] = v;
+    let mut mv = v;
+    if let Some(t) = ty {
+        mv = mv.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *dst as usize] = mv;
+    Ok(Step::Next)
+}
+
+fn h_store_bin<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::StoreBin { op, bdst, lhs, rhs, bty, arr, index } = op else {
+        return op_mismatch(op);
+    };
+    let va = rd(&ctx.stack.slots, ctx.base, *lhs);
+    let vb = rd(&ctx.stack.slots, ctx.base, *rhs);
+    let mut v = bin_value(*op, va, vb);
+    if let Some(t) = bty {
+        v = v.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *bdst as usize] = v;
+    // Index is read after the value write, exactly like the unfused
+    // sequence (it may name the just-written slot).
+    let idx = rd(&ctx.stack.slots, ctx.base, *index).as_i64();
+    let val = ctx.stack.slots[ctx.base + *bdst as usize];
+    ctx.machine.store(*arr, idx, val)?;
+    Ok(Step::Next)
+}
+
+fn h_return_bin<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::ReturnBin { op, bdst, lhs, rhs, bty } = op else { return op_mismatch(op) };
+    let va = rd(&ctx.stack.slots, ctx.base, *lhs);
+    let vb = rd(&ctx.stack.slots, ctx.base, *rhs);
+    let mut v = bin_value(*op, va, vb);
+    if let Some(t) = bty {
+        v = v.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *bdst as usize] = v;
+    Ok(Step::Return(v.coerce(ctx.kernel.ret)))
+}
+
+/// The per-machine handler table. Order must match [`opcode`]'s indices
+/// (enforced by a unit test over every variant and by the validator's
+/// per-instruction `h == opcode_of(op)` check).
+#[allow(dead_code)] // only the associated const is used
+struct Handlers<M: Machine>(std::marker::PhantomData<M>);
+
+impl<M: Machine> Handlers<M> {
+    const TABLE: [Handler<M>; opcode::N] = [
+        h_mov::<M>,
+        h_bin::<M>,
+        h_un::<M>,
+        h_builtin2::<M>,
+        h_builtin1::<M>,
+        h_int_to_float::<M>,
+        h_load::<M>,
+        h_store::<M>,
+        h_atomic_add::<M>,
+        h_call::<M>,
+        h_spawn_seq::<M>,
+        h_make_closure::<M>,
+        h_closure_store::<M>,
+        h_spawn_child::<M>,
+        h_close_spawns::<M>,
+        h_send_argument::<M>,
+        h_jump::<M>,
+        h_branch::<M>,
+        h_return::<M>,
+        h_halt::<M>,
+        h_cmp_branch::<M>,
+        h_load_mov::<M>,
+        h_bin_mov::<M>,
+        h_store_bin::<M>,
+        h_return_bin::<M>,
+    ];
+}
+
 fn exec_frame<M: Machine>(
     prog: &KernelProgram,
     fid: FuncId,
@@ -841,143 +1441,20 @@ fn exec_frame<M: Machine>(
 ) -> Result<Value> {
     machine.on_dispatch(fid, stack.depth)?;
     let kernel = prog.kernel(fid);
-    let code = &kernel.code;
-    let mut pc = 0usize;
-    // Per-activation step budget (branches/jumps), matching the old
-    // per-function-call limits of the tree-walking executors.
-    let mut steps: u64 = 0;
+    let mut ctx = Ctx { prog, kernel, base, pc: 0, steps: 0, stack, machine };
+    let table: &[Handler<M>; opcode::N] = &Handlers::<M>::TABLE;
+    // Direct-threaded inner loop: fetch, charge, indirect-call the
+    // pre-resolved handler. No opcode match on the retired path.
     loop {
-        let instr = &code[pc];
-        pc += 1;
+        let instr = &kernel.code[ctx.pc];
+        ctx.pc += 1;
+        ctx.stack.retired += 1;
         if instr.cost != NO_COST {
-            machine.charge(&kernel.costs[instr.cost as usize]);
+            ctx.machine.charge(&kernel.costs[instr.cost as usize]);
         }
-        match &instr.op {
-            KOp::Mov { dst, src, ty } => {
-                let mut v = rd(&stack.slots, base, *src);
-                if let Some(t) = ty {
-                    v = v.coerce(*t);
-                }
-                stack.slots[base + *dst as usize] = v;
-            }
-            KOp::Bin { op, dst, lhs, rhs, ty } => {
-                let va = rd(&stack.slots, base, *lhs);
-                let vb = rd(&stack.slots, base, *rhs);
-                let mut v = bin_value(*op, va, vb);
-                if let Some(t) = ty {
-                    v = v.coerce(*t);
-                }
-                stack.slots[base + *dst as usize] = v;
-            }
-            KOp::Un { op, dst, src, ty } => {
-                let mut v = un_value(*op, rd(&stack.slots, base, *src));
-                if let Some(t) = ty {
-                    v = v.coerce(*t);
-                }
-                stack.slots[base + *dst as usize] = v;
-            }
-            KOp::Builtin2 { b, dst, lhs, rhs, ty } => {
-                let va = rd(&stack.slots, base, *lhs);
-                let vb = rd(&stack.slots, base, *rhs);
-                let mut v = builtin2_value(*b, va, vb);
-                if let Some(t) = ty {
-                    v = v.coerce(*t);
-                }
-                stack.slots[base + *dst as usize] = v;
-            }
-            KOp::Builtin1 { b, dst, src, ty } => {
-                let mut v = builtin1_value(*b, rd(&stack.slots, base, *src));
-                if let Some(t) = ty {
-                    v = v.coerce(*t);
-                }
-                stack.slots[base + *dst as usize] = v;
-            }
-            KOp::IntToFloat { dst, src, ty } => {
-                let mut v = Value::F32(rd(&stack.slots, base, *src).as_f32());
-                if let Some(t) = ty {
-                    v = v.coerce(*t);
-                }
-                stack.slots[base + *dst as usize] = v;
-            }
-            KOp::Load { dst, arr, index } => {
-                let idx = rd(&stack.slots, base, *index).as_i64();
-                let v = machine.load(*arr, idx)?;
-                stack.slots[base + *dst as usize] = v;
-            }
-            KOp::Store { arr, index, value } => {
-                let idx = rd(&stack.slots, base, *index).as_i64();
-                let v = rd(&stack.slots, base, *value);
-                machine.store(*arr, idx, v)?;
-            }
-            KOp::AtomicAdd { arr, index, value } => {
-                let idx = rd(&stack.slots, base, *index).as_i64();
-                let v = rd(&stack.slots, base, *value);
-                machine.atomic_add(*arr, idx, v)?;
-            }
-            KOp::Call { dst, callee, args_at, nargs } => {
-                seq_call(prog, *callee, base, *args_at, *nargs, *dst, stack, machine)?;
-            }
-            KOp::SpawnSeq { dst, callee, args_at, nargs } => {
-                machine.on_spawn_seq();
-                seq_call(prog, *callee, base, *args_at, *nargs, *dst, stack, machine)?;
-            }
-            KOp::MakeClosure { dst, task } => {
-                let handle = machine.make_closure(*task)?;
-                stack.slots[base + *dst as usize] = handle;
-            }
-            KOp::ClosureStore { clos, field, value } => {
-                let h = stack.slots[base + *clos as usize];
-                let v = rd(&stack.slots, base, *value);
-                machine.closure_store(h, *field, v)?;
-            }
-            KOp::SpawnChild { callee, args_at, nargs, ret } => {
-                let kont = match ret {
-                    KRet::Slot { clos, field } => KontRef::Slot {
-                        clos: stack.slots[base + *clos as usize],
-                        field: *field,
-                    },
-                    KRet::Counter { clos } => {
-                        KontRef::Counter { clos: stack.slots[base + *clos as usize] }
-                    }
-                    KRet::Forward => KontRef::Forward,
-                };
-                let a0 = base + *args_at as usize;
-                let args = &stack.slots[a0..a0 + *nargs as usize];
-                machine.spawn_child(*callee, args, kont)?;
-            }
-            KOp::CloseSpawns { clos } => {
-                let h = stack.slots[base + *clos as usize];
-                machine.close_spawns(h)?;
-            }
-            KOp::SendArgument { value } => {
-                let v = match value {
-                    Some(op) => rd(&stack.slots, base, *op).coerce(kernel.ret),
-                    None => Value::Unit,
-                };
-                machine.send_argument(v)?;
-            }
-            KOp::Jump { target } => {
-                steps += 1;
-                if steps > stack.limit {
-                    bail!("`{}` exceeded step limit (infinite loop?)", kernel.name);
-                }
-                pc = *target as usize;
-            }
-            KOp::Branch { cond, then_, else_ } => {
-                steps += 1;
-                if steps > stack.limit {
-                    bail!("`{}` exceeded step limit (infinite loop?)", kernel.name);
-                }
-                let c = rd(&stack.slots, base, *cond).as_bool();
-                pc = if c { *then_ as usize } else { *else_ as usize };
-            }
-            KOp::Return { value } => {
-                return Ok(match value {
-                    Some(op) => rd(&stack.slots, base, *op).coerce(kernel.ret),
-                    None => Value::Unit,
-                });
-            }
-            KOp::Halt => return Ok(Value::Unit),
+        match (table[instr.h as usize])(&mut ctx, &instr.op)? {
+            Step::Next => {}
+            Step::Return(v) => return Ok(v),
         }
     }
 }
@@ -999,6 +1476,106 @@ mod tests {
         assert_eq!(heap.clone().into_vec(), long);
         let built = ArgList::from_fn(3, |i| Value::I64(i as i64));
         assert_eq!(&built[..], &[Value::I64(0), Value::I64(1), Value::I64(2)]);
+    }
+
+    #[test]
+    fn opcode_indices_cover_every_variant_and_kinstr_pins_them() {
+        use crate::frontend::ast::BinOp;
+        // One sample per variant, in opcode order.
+        let samples: Vec<KOp> = vec![
+            KOp::Mov { dst: 0, src: Operand::Imm(Value::I64(1)), ty: None },
+            KOp::Bin {
+                op: BinOp::Add,
+                dst: 0,
+                lhs: Operand::Slot(0),
+                rhs: Operand::Slot(0),
+                ty: None,
+            },
+            KOp::Un { op: UnOp::Neg, dst: 0, src: Operand::Slot(0), ty: None },
+            KOp::Builtin2 {
+                b: Builtin::Min,
+                dst: 0,
+                lhs: Operand::Slot(0),
+                rhs: Operand::Slot(0),
+                ty: None,
+            },
+            KOp::Builtin1 { b: Builtin::Abs, dst: 0, src: Operand::Slot(0), ty: None },
+            KOp::IntToFloat { dst: 0, src: Operand::Slot(0), ty: None },
+            KOp::Load { dst: 0, arr: GlobalId::new(0), index: Operand::Slot(0) },
+            KOp::Store {
+                arr: GlobalId::new(0),
+                index: Operand::Slot(0),
+                value: Operand::Slot(0),
+            },
+            KOp::AtomicAdd {
+                arr: GlobalId::new(0),
+                index: Operand::Slot(0),
+                value: Operand::Slot(0),
+            },
+            KOp::Call { dst: None, callee: FuncId::new(0), args_at: 0, nargs: 0 },
+            KOp::SpawnSeq { dst: None, callee: FuncId::new(0), args_at: 0, nargs: 0 },
+            KOp::MakeClosure { dst: 0, task: FuncId::new(0) },
+            KOp::ClosureStore { clos: 0, field: 0, value: Operand::Slot(0) },
+            KOp::SpawnChild {
+                callee: FuncId::new(0),
+                args_at: 0,
+                nargs: 0,
+                ret: KRet::Forward,
+            },
+            KOp::CloseSpawns { clos: 0 },
+            KOp::SendArgument { value: None },
+            KOp::Jump { target: 0 },
+            KOp::Branch { cond: Operand::Slot(0), then_: 0, else_: 0 },
+            KOp::Return { value: None },
+            KOp::Halt,
+            KOp::CmpBranch {
+                op: BinOp::Lt,
+                dst: 0,
+                lhs: Operand::Slot(0),
+                rhs: Operand::Slot(0),
+                ty: None,
+                then_: 0,
+                else_: 0,
+            },
+            KOp::LoadMov {
+                ldst: 0,
+                arr: GlobalId::new(0),
+                index: Operand::Slot(0),
+                dst: 0,
+                ty: None,
+            },
+            KOp::BinMov {
+                op: BinOp::Add,
+                bdst: 0,
+                lhs: Operand::Slot(0),
+                rhs: Operand::Slot(0),
+                bty: None,
+                dst: 0,
+                ty: None,
+            },
+            KOp::StoreBin {
+                op: BinOp::Add,
+                bdst: 0,
+                lhs: Operand::Slot(0),
+                rhs: Operand::Slot(0),
+                bty: None,
+                arr: GlobalId::new(0),
+                index: Operand::Slot(0),
+            },
+            KOp::ReturnBin {
+                op: BinOp::Add,
+                bdst: 0,
+                lhs: Operand::Slot(0),
+                rhs: Operand::Slot(0),
+                bty: None,
+            },
+        ];
+        assert_eq!(samples.len(), opcode::N, "one sample per opcode");
+        for (i, op) in samples.into_iter().enumerate() {
+            assert_eq!(opcode_of(&op) as usize, i, "opcode order drifted at {op:?}");
+            let instr = KInstr::new(op, NO_COST);
+            assert_eq!(instr.h, i as u8, "KInstr::new must pin the handler index");
+        }
     }
 
     #[test]

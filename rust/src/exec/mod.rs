@@ -24,6 +24,19 @@
 //! ([`kernel::run_kernel`]), which is generic over the machine and
 //! monomorphizes per engine.
 //!
+//! Two further interpreter-level optimizations ride the same loop:
+//!
+//! - **superinstruction fusion** — a peephole stage after emission
+//!   collapses hot adjacent pairs (compare+branch, load/bin+mov,
+//!   bin+store, bin+return) into single fused dispatches, with cost
+//!   merging rules that keep the simulator's timed traces byte-for-byte
+//!   unchanged; gated by `BOMBYX_KERNEL_FUSE=0`
+//!   (see [`compile`]);
+//! - **direct-threaded dispatch** — every instruction carries a handler
+//!   index resolved at kernel-compile time, and the loop indirect-calls
+//!   through a per-machine monomorphized handler table instead of
+//!   matching on the opcode per retired instruction (see [`kernel`]).
+//!
 //! Compiled programs are cached per `CompileSession`
 //! ([`crate::lower::CompileSession::explicit_kernels`]) behind `Arc`, the
 //! same memoized-artifact pattern as `rtl_system`.
@@ -31,8 +44,8 @@
 pub mod compile;
 pub mod kernel;
 
-pub use compile::compile_module;
+pub use compile::{compile_module, compile_module_with, fuse_enabled};
 pub use kernel::{
-    memo_kernels, run_kernel, ArgList, FuncKernel, KBase, KCost, KInstr, KOp, KRet, KStack,
-    KernelMode, KernelProgram, KontRef, Machine, Operand, NO_COST,
+    is_cmp_op, memo_kernels, opcode_of, run_kernel, ArgList, FuncKernel, KBase, KCost, KInstr,
+    KOp, KRet, KStack, KernelMode, KernelProgram, KontRef, Machine, Operand, NO_COST,
 };

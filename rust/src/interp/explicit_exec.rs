@@ -70,6 +70,9 @@ pub struct ExecStats {
     pub sends: u64,
     pub max_ready: usize,
     pub max_live_closures: usize,
+    /// Kernel instructions retired (cumulative; a fused superinstruction
+    /// retires as one dispatch).
+    pub instrs: u64,
     /// Tasks run per role name (entry/continuation/join/access/xla).
     pub per_role: std::collections::BTreeMap<&'static str, u64>,
 }
@@ -258,6 +261,7 @@ impl<'m, X: XlaHandler> ExplicitExec<'m, X> {
         let result =
             run_kernel(&prog, inst.task, inst.args.as_slice(), &mut stack, self, 100_000_000);
         self.stack = stack;
+        self.stats.instrs = self.stack.retired();
         let value = result?;
 
         // A spawned *leaf* function (no spawns/syncs of its own) is a task

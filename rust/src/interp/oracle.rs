@@ -29,6 +29,9 @@ pub struct OracleStats {
     pub loads: u64,
     pub stores: u64,
     pub max_depth: u64,
+    /// Kernel instructions retired (cumulative over this oracle's runs; a
+    /// fused superinstruction retires as one dispatch).
+    pub instrs: u64,
 }
 
 pub struct Oracle<'m, X: XlaHandler> {
@@ -94,6 +97,7 @@ impl<'m, X: XlaHandler> Oracle<'m, X> {
         let mut stack = std::mem::take(&mut self.stack);
         let result = run_kernel(&prog, fid, args, &mut stack, self, 100_000_000);
         self.stack = stack;
+        self.stats.instrs = self.stack.retired();
         result
     }
 }

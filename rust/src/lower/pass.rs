@@ -225,6 +225,9 @@ impl Pass for AstToCfg {
             Artifact::Rtl(_) => {
                 bail!("pass `ast_to_cfg` expects an AST input, got an emitted rtl system")
             }
+            Artifact::Kernels(_) => {
+                bail!("pass `ast_to_cfg` expects an AST input, got compiled kernels")
+            }
         }
     }
 

@@ -4,6 +4,7 @@
 //! bombyx compile  <file.cilk> [--dae] [--dump implicit|explicit|cilk1] [--trace-stages]
 //! bombyx codegen  <file.cilk> [--dae] --out <dir> [--system <name>]
 //! bombyx estimate <file.cilk> [--dae]
+//! bombyx kernels  <file.cilk> [--mode implicit|explicit] [--dump]
 //! bombyx run      <file.cilk> <entry> [args...] [--dae] [--engine E] [--workers N] [--stats]
 //! bombyx sim      <file.cilk> <entry> [args...] [--dae] [--pes N] [--mem-latency N]
 //! bombyx bfs      [--depth D] [--branch B] [--pes N]     # paper §III experiment
@@ -82,6 +83,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "compile-batch" => cmd_compile_batch(rest),
         "codegen" => cmd_codegen(rest),
         "estimate" => cmd_estimate(rest),
+        "kernels" => cmd_kernels(rest),
         "run" => cmd_run(rest),
         "sim" => cmd_sim(rest),
         "bfs" => cmd_bfs(rest),
@@ -101,6 +103,7 @@ fn print_usage() {
          bombyx compile-batch [files|dirs...] [--jobs N] [--no-dae] [--timings]   # default corpus: examples/cilk\n  \
          bombyx codegen  <file.cilk> [--target rtl|hardcilk] [--dae|--no-dae] --out <dir> [--system <name>]\n  \
          bombyx estimate <file.cilk> [--dae|--no-dae]\n  \
+         bombyx kernels  <file.cilk> [--mode implicit|explicit] [--dae|--no-dae] [--dump]\n  \
          bombyx run      <file.cilk> <entry> [int args...] [--engine oracle|explicit|ws|sim] [--dae|--no-dae] [--workers N] [--stats]\n  \
          bombyx sim      <file.cilk> <entry> [int args...] [--dae|--no-dae] [--pes N] [--mem-latency N]\n  \
          bombyx bfs      [--depth D] [--branch B] [--pes N]\n\n\
@@ -365,6 +368,47 @@ fn cmd_estimate(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `bombyx kernels <file> [--mode implicit|explicit] [--dump]` — per-task
+/// summary of the compiled execution kernels (instruction counts, fused
+/// superinstruction pairs, frame sizes), plus the full disassembly with
+/// fused superinstructions and `KCost` annotations under `--dump`.
+fn cmd_kernels(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &["mode"])?;
+    let mut session = load_session(&flags)?;
+    let mode = flags.options.get("mode").map(String::as_str).unwrap_or("explicit");
+    let prog = match mode {
+        "explicit" => session.kernels_timed()?,
+        "implicit" => session.implicit_kernels()?,
+        other => bail!("unknown --mode `{other}` (expected implicit or explicit)"),
+    };
+    let mut table = Table::new(["kernel", "role", "instrs", "fused pairs", "frame", "params"]);
+    for k in &prog.funcs {
+        table.row([
+            k.name.clone(),
+            k.role.to_string(),
+            k.code.len().to_string(),
+            k.fused.to_string(),
+            k.frame.len().to_string(),
+            k.params.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    let (pairs, before) = prog.fusion();
+    println!(
+        "{} kernels ({mode} IR), {} instrs ({} before fusion), {} fused pairs, fused_ratio {:.3}{}",
+        prog.funcs.len(),
+        prog.instr_count(),
+        before,
+        pairs,
+        prog.fused_ratio(),
+        if bombyx::exec::fuse_enabled() { "" } else { "  [BOMBYX_KERNEL_FUSE=0]" }
+    );
+    if flags.switches.contains("dump") {
+        print!("{}", prog.disasm());
+    }
+    Ok(())
+}
+
 fn parse_task_args(flags: &Flags) -> Result<(String, Vec<Value>)> {
     let entry = flags
         .positional
@@ -411,7 +455,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let kernel_time = t0.elapsed();
 
     let wall = std::time::Instant::now();
-    let (value, tasks) = match engine.as_str() {
+    let (value, tasks, retired) = match engine.as_str() {
         "oracle" => {
             let kernels = session.implicit_kernels()?;
             let mut o = bombyx::interp::oracle::Oracle::with_kernels(
@@ -431,7 +475,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
                     o.stats.max_depth
                 );
             }
-            (value, o.stats.calls)
+            (value, o.stats.calls, o.stats.instrs)
         }
         "explicit" => {
             let kernels = session.explicit_kernels()?;
@@ -452,7 +496,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
                     ex.stats.max_live_closures
                 );
             }
-            (value, ex.stats.tasks_run)
+            (value, ex.stats.tasks_run, ex.stats.instrs)
         }
         "ws" => {
             let cfg = WsConfig { workers, steal_tries: 4 };
@@ -464,19 +508,19 @@ fn cmd_run(args: &[String]) -> Result<()> {
                 Box::new(ws::NoXlaSink),
             )?;
             println!(
-                "tasks: {}  steals: {}  closures: {}  workers: {workers}",
+                "tasks: {}  closures: {}  workers: {workers}",
                 commas(stats.tasks_run),
-                commas(stats.steals),
                 commas(stats.closures_made)
             );
             if want_stats {
                 println!(
-                    "ws: max live closures {}  xla batches {}",
+                    "ws: steals {}  peak live closures {}  xla batches {}",
+                    commas(stats.steals),
                     commas(stats.max_live_closures),
                     commas(stats.xla_batches)
                 );
             }
-            (value, stats.tasks_run)
+            (value, stats.tasks_run, stats.instrs)
         }
         "sim" => {
             let cfg = SimConfig::default();
@@ -489,7 +533,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
                 cfg.freq_mhz,
                 commas(stats.tasks_run)
             );
-            (value, stats.tasks_run)
+            (value, stats.tasks_run, stats.instrs)
         }
         other => bail!("unknown --engine `{other}` (expected oracle, explicit, ws or sim)"),
     };
@@ -506,6 +550,22 @@ fn cmd_run(args: &[String]) -> Result<()> {
             bombyx::util::bench::fmt_duration(wall),
             per_sec,
             bombyx::util::bench::fmt_duration(kernel_time)
+        );
+        // Fusion/dispatch stats: static program coverage + dynamic
+        // dispatch count (one retirement per fused pair).
+        let kernels = if engine == "oracle" {
+            session.implicit_kernels()?
+        } else {
+            session.explicit_kernels()?
+        };
+        let (pairs, before) = kernels.fusion();
+        println!(
+            "dispatch: retired {}  fused pairs {} / {} instrs (fused_ratio {:.3}){}",
+            commas(retired),
+            commas(pairs),
+            commas(before),
+            kernels.fused_ratio(),
+            if bombyx::exec::fuse_enabled() { "" } else { "  [BOMBYX_KERNEL_FUSE=0]" }
         );
     }
     Ok(())

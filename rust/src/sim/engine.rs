@@ -218,6 +218,7 @@ impl<'m, 'x> Engine<'m, 'x> {
             closures_made: self.state.closures_made,
             max_queue_depth: self.max_queue_depth,
             xla_batches: self.xla_batches,
+            instrs: self.stack.retired(),
         };
         Ok((result, self.state.memory, stats))
     }

@@ -116,6 +116,9 @@ pub struct SimStats {
     pub closures_made: u64,
     pub max_queue_depth: usize,
     pub xla_batches: u64,
+    /// Kernel instructions retired during functional tracing (a fused
+    /// superinstruction retires as one dispatch).
+    pub instrs: u64,
 }
 
 #[derive(Clone, Debug, Default)]

@@ -103,6 +103,9 @@ pub struct WsStats {
     pub max_live_closures: u64,
     pub xla_batches: u64,
     pub xla_tasks: u64,
+    /// Kernel instructions retired across all workers (a fused
+    /// superinstruction retires as one dispatch).
+    pub instrs: u64,
 }
 
 /// Shared coordination state across workers. The compiled kernel program
@@ -122,8 +125,11 @@ pub(crate) struct Shared {
     pub done: AtomicBool,
     /// Per-worker lock-free deques (owner hot end, thief cold end).
     pub deques: Vec<deque::Deque<worker::WsTask>>,
-    /// Queue of xla task instances awaiting batch execution.
-    pub xla_queue: Mutex<Vec<(crate::ir::FuncId, ArgList, Cont)>>,
+    /// Queue of xla task instances awaiting batch execution. Arguments
+    /// are staged straight from the spawner's kernel arg-staging slots
+    /// into the owned `Vec` the batch sink consumes, so the flush moves
+    /// them out without any per-instance `ArgList` conversion.
+    pub xla_queue: Mutex<Vec<(crate::ir::FuncId, Vec<Value>, Cont)>>,
     pub xla_sink: Box<dyn XlaSink>,
     /// Parked-worker wakeup.
     pub idle_lock: Mutex<()>,
@@ -213,6 +219,7 @@ pub fn run_with_kernels(
         total.closures_made += s.closures_made;
         total.xla_batches += s.xla_batches;
         total.xla_tasks += s.xla_tasks;
+        total.instrs += s.instrs;
     }
     total.max_live_closures = max_live;
     Ok((result, shared.memory, total))

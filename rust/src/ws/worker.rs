@@ -47,6 +47,7 @@ pub(crate) fn worker_loop(wid: usize, shared: &Shared, config: &WsConfig, stats:
     let mut backoff: u32 = 0;
     loop {
         if shared.done.load(Ordering::SeqCst) {
+            stats.instrs = stack.retired();
             return;
         }
         // 1. Own deque (LIFO hot end, lock-free owner path).
@@ -102,10 +103,12 @@ pub(crate) fn worker_loop(wid: usize, shared: &Shared, config: &WsConfig, stats:
 
 /// Drain the xla queue through the batch sink. Returns true if any work
 /// was done. Arguments and continuations are *moved* out of the queued
-/// instances (no per-batch clones); task names are borrowed from the
-/// kernels.
+/// instances — the queue already holds the owned `Vec<Value>` rows the
+/// sink consumes (staged at spawn from the kernel's arg-staging slots),
+/// so the flush performs no per-instance `ArgList` conversion; task
+/// names are borrowed from the kernels.
 fn flush_xla(wid: usize, shared: &Shared, stats: &mut WsStats) -> bool {
-    let mut batch: Vec<(FuncId, ArgList, Cont)> = {
+    let mut batch: Vec<(FuncId, Vec<Value>, Cont)> = {
         let mut q = shared.xla_queue.lock().unwrap();
         if q.is_empty() {
             return false;
@@ -125,7 +128,7 @@ fn flush_xla(wid: usize, shared: &Shared, stats: &mut WsStats) -> bool {
         let name = &shared.kernels.kernel(fid).name;
         let args: Vec<Vec<Value>> = idxs
             .iter()
-            .map(|&i| std::mem::take(&mut batch[i].1).into_vec())
+            .map(|&i| std::mem::take(&mut batch[i].1))
             .collect();
         stats.xla_batches += 1;
         stats.xla_tasks += idxs.len() as u64;
@@ -311,11 +314,13 @@ impl<'a> Machine for WsMachine<'a> {
         };
         self.shared.pending.fetch_add(1, Ordering::AcqRel);
         if self.shared.kernels.kernel(callee).kind == FuncKind::Xla {
-            self.shared
-                .xla_queue
-                .lock()
-                .unwrap()
-                .push((callee, ArgList::from_slice(args), cont));
+            // `args` is the spawner's kernel arg-staging slot slice: copy
+            // it straight into the owned row the batch sink will consume
+            // (no ArgList intermediary to convert at flush time). The row
+            // is built before taking the queue lock so the allocation
+            // never sits inside the shared critical section.
+            let row = args.to_vec();
+            self.shared.xla_queue.lock().unwrap().push((callee, row, cont));
             // Same idle gate as push_task: pay the futex only when a
             // worker actually sleeps.
             if self.shared.idle_workers.load(Ordering::Relaxed) > 0 {

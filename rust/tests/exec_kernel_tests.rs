@@ -10,16 +10,19 @@
 //! across the explicit machine, the WS runtime (1 and 4 workers) and the
 //! simulator.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 use bombyx::backend::emu;
-use bombyx::exec::{compile_module, KernelMode};
+use bombyx::exec::{compile_module, compile_module_with, ArgList, KStack, KernelMode, KernelProgram};
 use bombyx::interp::explicit_exec::ExplicitExec;
 use bombyx::interp::{FnXla, Memory, NoXla};
 use bombyx::ir::cfg::{FuncKind, Module, Op, Term};
 use bombyx::ir::expr::{eval, Value, VarId};
 use bombyx::ir::{FuncId, GlobalId};
 use bombyx::lower::{compile, CompileOptions, CompileResult};
-use bombyx::sim::{simulate, NoSimXla, SimConfig, SimXla};
+use bombyx::sim::exec::{trace_task, Effect, FnState, SCont, STask, Seg};
+use bombyx::sim::{simulate, simulate_with_kernels, NoSimXla, SimConfig, SimXla};
 use bombyx::util::golden::check_golden;
 use bombyx::workloads::{bfs, fib, graphgen, nqueens, qsort, relax};
 use bombyx::ws::{self, NoXlaSink, ScalarSink, SharedMemory, WsConfig};
@@ -498,6 +501,264 @@ fn session_caches_one_kernel_program_for_all_engines() {
         .simulate(session.memory(), "fib", &[Value::I64(10)], &SimConfig::default(), &mut NoSimXla)
         .unwrap();
     assert_eq!(v.as_i64(), 55);
+}
+
+// ---------------------------------------------------------------------------
+// Superinstruction fusion: on-vs-off differential across all engines
+
+fn kernels_pair(module: &Module, mode: KernelMode) -> (Arc<KernelProgram>, Arc<KernelProgram>) {
+    let fused = compile_module_with(module, mode, true).expect("fused compile");
+    let unfused = compile_module_with(module, mode, false).expect("unfused compile");
+    (Arc::new(fused), Arc::new(unfused))
+}
+
+/// Replay a program's task graph dispatch-by-dispatch through the
+/// simulator's functional tracer, returning each dispatch's timed trace
+/// as its (byte-exact) debug rendering. Non-xla workloads only.
+fn collect_traces(
+    prog: &Arc<KernelProgram>,
+    module: &Module,
+    w: &Workload,
+    limit: usize,
+) -> Vec<String> {
+    let model = bombyx::hls::ScheduleModel::default();
+    let mut mem = Memory::new(module);
+    (w.init)(module, &mut mem);
+    let mut state =
+        FnState { memory: mem, closures: Vec::new(), live_closures: 0, closures_made: 0 };
+    let fid = prog.func_by_name(w.entry).expect("entry kernel");
+    let mut stack = KStack::new();
+    let mut queue = std::collections::VecDeque::new();
+    queue.push_back(STask { task: fid, args: ArgList::from_slice(&w.args), cont: SCont::Root });
+
+    fn fire_on_zero(
+        state: &mut FnState,
+        queue: &mut std::collections::VecDeque<STask>,
+        clos: usize,
+    ) {
+        {
+            let c = &mut state.closures[clos];
+            c.counter -= 1;
+            if c.counter != 0 {
+                return;
+            }
+            c.freed = true;
+        }
+        state.live_closures -= 1;
+        let (task, args, cont) = {
+            let c = &state.closures[clos];
+            (c.task, ArgList::from_slice(&c.slots), c.cont)
+        };
+        queue.push_back(STask { task, args, cont });
+    }
+
+    let mut out = Vec::new();
+    while let Some(task) = queue.pop_front() {
+        if out.len() >= limit {
+            break;
+        }
+        let mut trace: Vec<Seg> = Vec::new();
+        trace_task(prog, &model, &mut state, &task, &mut stack, &mut trace).expect("trace_task");
+        out.push(format!("{trace:?}"));
+        for seg in trace {
+            let Seg::Effect(e) = seg else { continue };
+            match e {
+                Effect::Spawn(t) => queue.push_back(t),
+                Effect::ClosureStore { clos, slot, value } => {
+                    let ty = prog.kernel(state.closures[clos].task).param_tys[slot as usize];
+                    state.closures[clos].slots[slot as usize] = value.coerce(ty);
+                }
+                Effect::FillDecrement { clos, slot, value } => {
+                    let ty = prog.kernel(state.closures[clos].task).param_tys[slot as usize];
+                    state.closures[clos].slots[slot as usize] = value.coerce(ty);
+                    fire_on_zero(&mut state, &mut queue, clos);
+                }
+                Effect::Decrement { clos } => fire_on_zero(&mut state, &mut queue, clos),
+                Effect::RootResult(_) => {}
+            }
+        }
+    }
+    out
+}
+
+/// Run workload `w` on every engine twice — once on fused kernels, once
+/// on unfused — and require identical values, memory images,
+/// deterministic counters and (for the simulator) identical cycle
+/// figures plus byte-identical per-dispatch traces.
+fn check_fusion_differential(w: &Workload, r: &CompileResult, label: &str) {
+    // Oracle over implicit kernels.
+    let (ion, ioff) = kernels_pair(&r.implicit, KernelMode::Implicit);
+    assert_eq!(ioff.fused_ratio(), 0.0, "{label}: unfused program must report zero ratio");
+    let run_oracle = |prog: &Arc<KernelProgram>| {
+        let m = &r.implicit;
+        let mut mem = Memory::new(m);
+        (w.init)(m, &mut mem);
+        let xla = if w.uses_xla { fn_xla_for(m) } else { FnXla::default() };
+        let mut o =
+            bombyx::interp::oracle::Oracle::with_kernels(m, mem, xla, Arc::clone(prog));
+        let v = o.run(w.entry, &w.args).expect("oracle");
+        (
+            v.as_i64(),
+            memory_image(m, &o.memory),
+            o.stats.calls,
+            o.stats.spawns,
+            o.stats.loads,
+            o.stats.stores,
+        )
+    };
+    assert_eq!(run_oracle(&ion), run_oracle(&ioff), "{label}: oracle fused-vs-unfused");
+
+    let (eon, eoff) = kernels_pair(&r.explicit, KernelMode::Explicit);
+
+    // Explicit machine.
+    let run_explicit = |prog: &Arc<KernelProgram>| {
+        let m = &r.explicit;
+        let mut mem = Memory::new(m);
+        (w.init)(m, &mut mem);
+        let xla = if w.uses_xla { fn_xla_for(m) } else { FnXla::default() };
+        let mut ex = ExplicitExec::with_kernels(m, mem, xla, Arc::clone(prog));
+        let v = ex.run(w.entry, &w.args).expect("explicit");
+        assert_eq!(ex.live_closures(), 0);
+        (
+            v.as_i64(),
+            memory_image(m, &ex.memory),
+            ex.stats.tasks_run,
+            ex.stats.closures_made,
+            ex.stats.sends,
+        )
+    };
+    assert_eq!(run_explicit(&eon), run_explicit(&eoff), "{label}: explicit fused-vs-unfused");
+
+    // WS runtime, 4 workers.
+    let run_ws = |prog: &Arc<KernelProgram>| {
+        let m = &r.explicit;
+        let mut seed = Memory::new(m);
+        (w.init)(m, &mut seed);
+        let mem = emu::shared_from(m, &seed);
+        let cfg = WsConfig { workers: 4, steal_tries: 4 };
+        let (v, mem, stats) = if w.uses_xla {
+            let (w2, b2) = relax::weights(RELAX_SEED);
+            let feat = m.global_by_name("feat");
+            let sink = ScalarSink(move |_n: &str, args: &[Value], mem: &SharedMemory| {
+                let n = args[0].as_i64() as usize;
+                let feat = feat.expect("feat");
+                relax_row(
+                    n,
+                    &mut |i| mem.load(feat, i),
+                    &mut |i, v| mem.store(feat, i, v),
+                    &w2,
+                    &b2,
+                )
+            });
+            ws::run_with_kernels(Arc::clone(prog), mem, w.entry, &w.args, &cfg, Box::new(sink))
+                .expect("ws")
+        } else {
+            ws::run_with_kernels(
+                Arc::clone(prog),
+                mem,
+                w.entry,
+                &w.args,
+                &cfg,
+                Box::new(NoXlaSink),
+            )
+            .expect("ws")
+        };
+        (
+            v.as_i64(),
+            shared_memory_image(m, &mem),
+            stats.tasks_run,
+            stats.closures_made,
+        )
+    };
+    assert_eq!(run_ws(&eon), run_ws(&eoff), "{label}: ws fused-vs-unfused");
+
+    // Simulator: identical values, memory, cycle count and per-task
+    // stats — the timed traces feed all of these.
+    let run_sim = |prog: &Arc<KernelProgram>| {
+        let m = &r.explicit;
+        let mut mem = Memory::new(m);
+        (w.init)(m, &mut mem);
+        let cfg = SimConfig::default();
+        let (v, mem, stats) = if w.uses_xla {
+            let (w2, b2) = relax::weights(RELAX_SEED);
+            let mut xla =
+                SimScalarRelax { w: w2, b: b2, feat: m.global_by_name("feat").unwrap() };
+            simulate_with_kernels(m, Arc::clone(prog), mem, w.entry, &w.args, &cfg, &mut xla)
+                .expect("sim")
+        } else {
+            simulate_with_kernels(
+                m,
+                Arc::clone(prog),
+                mem,
+                w.entry,
+                &w.args,
+                &cfg,
+                &mut NoSimXla,
+            )
+            .expect("sim")
+        };
+        (
+            v.as_i64(),
+            memory_image(m, &mem),
+            stats.cycles,
+            stats.tasks_run,
+            stats.closures_made,
+            format!("{:?}", stats.per_task),
+        )
+    };
+    assert_eq!(run_sim(&eon), run_sim(&eoff), "{label}: sim fused-vs-unfused");
+
+    // Byte-for-byte timed traces, dispatch by dispatch (xla tasks have
+    // no kernel body to trace, so the relax workload is covered by the
+    // engine-level cycle equality above instead).
+    if !w.uses_xla {
+        let t_on = collect_traces(&eon, &r.explicit, w, 5000);
+        let t_off = collect_traces(&eoff, &r.explicit, w, 5000);
+        assert_eq!(t_on.len(), t_off.len(), "{label}: dispatch counts differ");
+        for (i, (a, b)) in t_on.iter().zip(&t_off).enumerate() {
+            assert_eq!(a, b, "{label}: sim trace of dispatch #{i} not byte-identical");
+        }
+    }
+}
+
+#[test]
+fn fusion_on_vs_off_differential_no_dae() {
+    let opts = CompileOptions::no_dae();
+    for w in corpus() {
+        let r = compile(w.name, w.src, &opts).unwrap();
+        check_fusion_differential(&w, &r, &format!("{} (dae=off)", w.name));
+    }
+}
+
+#[test]
+fn fusion_on_vs_off_differential_dae() {
+    let opts = CompileOptions::standard();
+    for w in corpus() {
+        let r = compile(w.name, w.src, &opts).unwrap();
+        check_fusion_differential(&w, &r, &format!("{} (dae=on)", w.name));
+    }
+}
+
+#[test]
+fn fused_programs_cut_dispatches_on_fib() {
+    // Same task graph, fewer retired dispatches: the dynamic counterpart
+    // of the static fused_ratio.
+    let r = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let (on, off) = kernels_pair(&r.explicit, KernelMode::Explicit);
+    assert!(on.fused_ratio() > 0.0, "fusion must fire on fib");
+    let retired = |prog: &Arc<KernelProgram>| {
+        let mut ex =
+            ExplicitExec::with_kernels(&r.explicit, Memory::new(&r.explicit), NoXla, Arc::clone(prog));
+        ex.run("fib", &[Value::I64(12)]).unwrap();
+        (ex.stats.tasks_run, ex.stats.instrs)
+    };
+    let (tasks_on, instrs_on) = retired(&on);
+    let (tasks_off, instrs_off) = retired(&off);
+    assert_eq!(tasks_on, tasks_off, "same task graph");
+    assert!(
+        instrs_on < instrs_off,
+        "fused dispatch count must shrink: {instrs_on} vs {instrs_off}"
+    );
 }
 
 #[test]
