@@ -15,6 +15,10 @@
 //!    same direct-threaded loop — dispatches retired, static
 //!    fused_ratio, single-worker fib speedup. Asserts `fused_ratio > 0`
 //!    on fib (the CI bench-smoke fusion gate).
+//! 4. **multi-job steady state**: interleaved mixed-corpus jobs flooded
+//!    through one resident executor (`coordinator::WsServeExperiment`) —
+//!    jobs/s throughput plus p50/p95/p99 submission-to-completion
+//!    latency, every job verified against its reference.
 //!
 //! `BOMBYX_BENCH_SMOKE=1` switches to reduced iterations/sizes (the CI
 //! bench-smoke step).
@@ -22,6 +26,7 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
+use bombyx::coordinator::WsServeExperiment;
 use bombyx::exec::{compile_module_with, KernelMode};
 use bombyx::interp::explicit_exec::ExplicitExec;
 use bombyx::interp::{Memory, NoXla};
@@ -458,6 +463,30 @@ fn main() {
         fused_retired, unfused_retired
     );
 
+    // ---- section 4: multi-job steady state ---------------------------------
+    // One resident executor serving interleaved mixed-corpus jobs: a
+    // warmup wave to fault in every session's kernels, then the measured
+    // flood. Every job's root result and final memory are verified.
+    let serve = WsServeExperiment::new().unwrap();
+    let flood_workers = 4usize;
+    let (flood_jobs, flood_repeat) = if smoke { (10usize, 1usize) } else { (64, 3) };
+    serve.flood(flood_workers, serve.corpus_len(), 1).unwrap(); // warmup
+    let flood = serve.flood(flood_workers, flood_jobs, flood_repeat).unwrap();
+    assert_eq!(flood.verified, flood.jobs, "every flooded job must verify");
+    println!(
+        "multi-job: {} jobs on {} workers, {:.1} jobs/s, corpus [{}]",
+        flood.jobs,
+        flood.workers,
+        flood.jobs_per_s,
+        serve.corpus_names().join(", ")
+    );
+    println!(
+        "multi-job latency: p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
+        flood.p50.as_secs_f64() * 1e3,
+        flood.p95.as_secs_f64() * 1e3,
+        flood.p99.as_secs_f64() * 1e3
+    );
+
     // ---- machine-readable output -------------------------------------------
     let mut kvt = Json::object();
     let mut kvt_fib = Json::object();
@@ -503,13 +532,29 @@ fn main() {
         .set("unfused_ms", unfused_run.median.as_secs_f64() * 1e3)
         .set("speedup", dispatch_speedup);
 
+    let mut mj = Json::object();
+    mj.set("workers", flood.workers)
+        .set("jobs", flood.jobs)
+        .set(
+            "corpus",
+            Json::Array(serve.corpus_names().iter().map(|&n| Json::from(n)).collect()),
+        )
+        .set("wall_ms", flood.wall.as_secs_f64() * 1e3)
+        .set("jobs_per_s", flood.jobs_per_s)
+        .set("p50_ms", flood.p50.as_secs_f64() * 1e3)
+        .set("p95_ms", flood.p95.as_secs_f64() * 1e3)
+        .set("p99_ms", flood.p99.as_secs_f64() * 1e3)
+        .set("tasks_run", flood.stats.tasks_run as i64)
+        .set("steals", flood.stats.steals as i64);
+
     let mut root = Json::object();
     root.set("bench", "ws_throughput")
         .set("mode", if cfg!(debug_assertions) { "debug" } else { "release" })
         .set("smoke", smoke)
         .set("kernel_vs_tree", kvt)
         .set("ws_scaling", scale_json)
-        .set("fused_dispatch", fd);
+        .set("fused_dispatch", fd)
+        .set("multi_job", mj);
     let path = "BENCH_ws.json";
     std::fs::write(path, root.pretty() + "\n").expect("write BENCH_ws.json");
     println!("wrote {path}");

@@ -1,19 +1,25 @@
 //! End-to-end drivers for the paper's experiments and the relax workload.
 //!
-//! Both experiment drivers are built on [`CompileSession`]: the workload is
+//! The experiment drivers are built on [`CompileSession`]: the workload is
 //! lowered once per session and every simulated configuration (PE counts,
 //! memory latencies, graphs) reuses the cached explicit module — which is
 //! what makes the sweep benches scale without re-running the compiler per
-//! data point.
+//! data point. [`WsServeExperiment`] is the runtime-side counterpart: a
+//! mixed corpus of compiled workloads flooded through the resident
+//! [`crate::ws::Executor`] to measure multi-job serving throughput and
+//! latency.
 
-use anyhow::{anyhow, Result};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
 
 use crate::interp::Memory;
 use crate::ir::expr::Value;
 use crate::lower::{CompileOptions, CompileSession};
 use crate::runtime::{RelaxXla, XlaRuntime};
 use crate::sim::{NoSimXla, SimConfig, SimStats};
-use crate::workloads::{bfs, graphgen::CsrGraph, relax};
+use crate::workloads::{bfs, fib, graphgen, graphgen::CsrGraph, nqueens, qsort, relax};
+use crate::ws;
 
 /// Result of the paper's §III experiment on one graph.
 #[derive(Clone, Debug)]
@@ -230,6 +236,271 @@ pub fn run_relax_scalar(graph: &CsrGraph, seed: u64, config: &SimConfig) -> Resu
     RelaxExperiment::new()?.run_scalar(graph, seed, config)
 }
 
+/// Expected final state of one corpus program (checked per job).
+enum Check {
+    /// Root result is this integer.
+    RootI64(i64),
+    /// One cell of a global equals this value.
+    CellI64 { global: &'static str, index: usize, expect: i64 },
+    /// A whole int global equals this image.
+    AllI64 { global: &'static str, expect: Vec<i64> },
+}
+
+/// One member of the mixed serving corpus: a compiled session plus how
+/// to seed a job's memory and verify its result.
+struct CorpusProgram {
+    name: &'static str,
+    session: CompileSession,
+    entry: &'static str,
+    args: Vec<Value>,
+    /// Globals filled with explicit values before submission.
+    seed: Vec<(&'static str, Vec<i64>)>,
+    /// Globals zero-resized before submission.
+    resize: Vec<(&'static str, usize)>,
+    checks: Vec<Check>,
+}
+
+/// Summary of one multi-job flood through the resident executor.
+#[derive(Clone, Debug)]
+pub struct FloodReport {
+    pub jobs: usize,
+    pub workers: usize,
+    pub wall: Duration,
+    pub jobs_per_s: f64,
+    /// Submission-to-completion latency percentiles across jobs.
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    /// Jobs whose results matched the per-program expectation.
+    pub verified: usize,
+    pub stats: ws::ExecutorStats,
+}
+
+/// The multi-job serving experiment: a heterogeneous corpus (fib at two
+/// sizes, nqueens, parallel quicksort, BFS over a CSR tree) compiled
+/// once, then streamed through a resident [`ws::Executor`] as
+/// interleaved jobs. Job `i` runs corpus program `i % corpus_len()`, so
+/// every flood mixes task-tree shapes — value-returning recursion, void
+/// atomics, data-dependent spawn trees, and memory-bound traversal.
+pub struct WsServeExperiment {
+    corpus: Vec<CorpusProgram>,
+}
+
+fn global_id(m: &crate::ir::cfg::Module, name: &str) -> Result<crate::ir::GlobalId> {
+    m.global_by_name(name).ok_or_else(|| anyhow!("no global `{name}`"))
+}
+
+fn percentile(sorted: &[Duration], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+impl WsServeExperiment {
+    pub fn new() -> Result<WsServeExperiment> {
+        let opts = CompileOptions::no_dae();
+        let fib_session = |name: &str| CompileSession::new(name, fib::FIB_SRC, &opts);
+        // Deterministically seeded unsorted array for the qsort member.
+        let mut rng = crate::util::rng::Rng::new(7);
+        let unsorted: Vec<i64> = (0..48).map(|_| rng.below(1000) as i64).collect();
+        let mut sorted = unsorted.clone();
+        sorted.sort();
+        // BFS member: a branch-3 depth-4 CSR tree, every node visited.
+        let graph = graphgen::tree(3, 4);
+        let nodes = graph.nodes();
+        let corpus = vec![
+            CorpusProgram {
+                name: "fib18",
+                session: fib_session("serve_fib18")?,
+                entry: "fib",
+                args: vec![Value::I64(18)],
+                seed: vec![],
+                resize: vec![],
+                checks: vec![Check::RootI64(fib::fib_ref(18) as i64)],
+            },
+            CorpusProgram {
+                name: "fib12",
+                session: fib_session("serve_fib12")?,
+                entry: "fib",
+                args: vec![Value::I64(12)],
+                seed: vec![],
+                resize: vec![],
+                checks: vec![Check::RootI64(fib::fib_ref(12) as i64)],
+            },
+            CorpusProgram {
+                name: "nqueens6",
+                session: CompileSession::new("serve_nqueens", nqueens::NQUEENS_SRC, &opts)?,
+                entry: "place",
+                args: vec![
+                    Value::I64(6),
+                    Value::I64(0),
+                    Value::I64(0),
+                    Value::I64(0),
+                    Value::I64(0),
+                ],
+                seed: vec![],
+                resize: vec![],
+                checks: vec![Check::CellI64 {
+                    global: "solutions",
+                    index: 0,
+                    expect: nqueens::nqueens_ref(6) as i64,
+                }],
+            },
+            CorpusProgram {
+                name: "qsort48",
+                session: CompileSession::new("serve_qsort", qsort::QSORT_SRC, &opts)?,
+                entry: "qsort_",
+                args: vec![Value::I64(0), Value::I64(47)],
+                seed: vec![("data", unsorted)],
+                resize: vec![],
+                checks: vec![Check::AllI64 { global: "data", expect: sorted }],
+            },
+            CorpusProgram {
+                name: "bfs_tree",
+                session: CompileSession::new("serve_bfs", bfs::BFS_SRC, &opts)?,
+                entry: "visit",
+                args: vec![Value::I64(0)],
+                seed: vec![
+                    ("adj_off", graph.adj_off.clone()),
+                    ("adj_edges", graph.adj_edges.clone()),
+                ],
+                resize: vec![("visited", nodes)],
+                checks: vec![Check::AllI64 { global: "visited", expect: vec![1; nodes] }],
+            },
+        ];
+        Ok(WsServeExperiment { corpus })
+    }
+
+    pub fn corpus_len(&self) -> usize {
+        self.corpus.len()
+    }
+
+    pub fn corpus_names(&self) -> Vec<&'static str> {
+        self.corpus.iter().map(|p| p.name).collect()
+    }
+
+    fn program(&self, i: usize) -> &CorpusProgram {
+        &self.corpus[i % self.corpus.len()]
+    }
+
+    /// Build job `i` (a fresh memory image over the session-cached
+    /// kernel program of corpus member `i % corpus_len()`).
+    pub fn job(&self, i: usize) -> Result<ws::Job> {
+        let p = self.program(i);
+        let m = p.session.explicit();
+        let mut job = p.session.ws_job(p.entry, &p.args)?;
+        for (name, values) in &p.seed {
+            job.memory.fill_i64(global_id(m, name)?, values);
+        }
+        for (name, len) in &p.resize {
+            job.memory.resize(global_id(m, name)?, *len);
+        }
+        Ok(job)
+    }
+
+    /// Check job `i`'s root result and final memory against the corpus
+    /// expectation.
+    pub fn verify(&self, i: usize, value: &Value, mem: &ws::SharedMemory) -> Result<()> {
+        let p = self.program(i);
+        let m = p.session.explicit();
+        for check in &p.checks {
+            match check {
+                Check::RootI64(expect) => {
+                    if value.as_i64() != *expect {
+                        bail!("{}: root result {value:?}, expected {expect}", p.name);
+                    }
+                }
+                Check::CellI64 { global, index, expect } => {
+                    let got = mem.dump_i64(global_id(m, global)?);
+                    if got.get(*index) != Some(expect) {
+                        bail!(
+                            "{}: {global}[{index}] = {:?}, expected {expect}",
+                            p.name,
+                            got.get(*index)
+                        );
+                    }
+                }
+                Check::AllI64 { global, expect } => {
+                    let got = mem.dump_i64(global_id(m, global)?);
+                    if &got != expect {
+                        bail!("{}: global `{global}` diverged from the reference image", p.name);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Full final-memory image of job `i` (every global as i64 words) —
+    /// the byte-level fingerprint determinism tests compare across
+    /// worker counts and against one-shot runs.
+    pub fn memory_image(&self, i: usize, mem: &ws::SharedMemory) -> Vec<Vec<i64>> {
+        let p = self.program(i);
+        p.session.explicit().globals.iter().map(|(id, _)| mem.dump_i64(id)).collect()
+    }
+
+    /// Reference run: job `i` through the one-shot [`ws::run_with_kernels`]
+    /// wrapper (its own pool, its own lifecycle).
+    pub fn one_shot(
+        &self,
+        i: usize,
+        workers: usize,
+    ) -> Result<(Value, ws::SharedMemory, ws::WsStats)> {
+        let p = self.program(i);
+        let job = self.job(i)?;
+        let config = ws::WsConfig { workers, steal_tries: 4 };
+        ws::run_with_kernels(job.kernels, job.memory, p.entry, &p.args, &config, job.xla_sink)
+    }
+
+    /// Flood a resident executor: submit `jobs` interleaved mixed-corpus
+    /// jobs per wave, `repeat` waves, verifying every result. Returns
+    /// throughput and per-job latency percentiles.
+    pub fn flood(&self, workers: usize, jobs: usize, repeat: usize) -> Result<FloodReport> {
+        let config = ws::ExecutorConfig {
+            ws: ws::WsConfig { workers: workers.max(1), steal_tries: 4 },
+            ..ws::ExecutorConfig::default()
+        };
+        let executor = ws::Executor::new(config)?;
+        let repeat = repeat.max(1);
+        let mut latencies: Vec<Duration> = Vec::with_capacity(jobs * repeat);
+        let mut verified = 0usize;
+        let start = Instant::now();
+        for _ in 0..repeat {
+            let mut handles = Vec::with_capacity(jobs);
+            for i in 0..jobs {
+                handles.push((i, executor.submit(self.job(i)?)?));
+            }
+            for (i, handle) in handles {
+                handle.wait();
+                if let Some(latency) = handle.latency() {
+                    latencies.push(latency);
+                }
+                let (value, mem, _stats) = handle.join()?;
+                self.verify(i, &value, &mem)?;
+                verified += 1;
+            }
+        }
+        let wall = start.elapsed();
+        let stats = executor.stats();
+        drop(executor);
+        latencies.sort();
+        let total = jobs * repeat;
+        Ok(FloodReport {
+            jobs: total,
+            workers: workers.max(1),
+            wall,
+            jobs_per_s: total as f64 / wall.as_secs_f64().max(1e-9),
+            p50: percentile(&latencies, 0.50),
+            p95: percentile(&latencies, 0.95),
+            p99: percentile(&latencies, 0.99),
+            verified,
+            stats,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,5 +527,27 @@ mod tests {
         let exp = BfsExperiment::new().unwrap();
         let graph = graphgen::tree(2, 2);
         assert!(exp.run_grid(&graph, &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn ws_serve_corpus_verifies_one_shot() {
+        let exp = WsServeExperiment::new().unwrap();
+        for i in 0..exp.corpus_len() {
+            let (value, mem, stats) = exp.one_shot(i, 1).unwrap();
+            exp.verify(i, &value, &mem).unwrap();
+            assert!(stats.tasks_run > 0);
+        }
+    }
+
+    #[test]
+    fn ws_serve_flood_smoke() {
+        let exp = WsServeExperiment::new().unwrap();
+        let report = exp.flood(2, exp.corpus_len(), 2).unwrap();
+        assert_eq!(report.jobs, exp.corpus_len() * 2);
+        assert_eq!(report.verified, report.jobs);
+        assert_eq!(report.stats.jobs_completed, report.jobs as u64);
+        assert_eq!(report.stats.jobs_failed, 0);
+        assert!(report.jobs_per_s > 0.0);
+        assert!(report.p50 <= report.p95 && report.p95 <= report.p99);
     }
 }

@@ -6,5 +6,5 @@ pub mod driver;
 
 pub use driver::{
     run_bfs_comparison, run_relax_scalar, run_relax_sim, BfsComparison, BfsExperiment,
-    RelaxExperiment, RelaxRun,
+    FloodReport, RelaxExperiment, RelaxRun, WsServeExperiment,
 };

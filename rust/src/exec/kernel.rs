@@ -353,6 +353,25 @@ impl KernelProgram {
         }
     }
 
+    /// Fusion stats broken down by task role: `(role, fused pairs,
+    /// instructions before fusion)` in first-appearance order. Shapes
+    /// that resist fusion (e.g. `join` continuations full of closure
+    /// traffic) show up as low per-role ratios that the global
+    /// [`KernelProgram::fused_ratio`] averages away.
+    pub fn fusion_by_role(&self) -> Vec<(&'static str, u64, u64)> {
+        let mut rows: Vec<(&'static str, u64, u64)> = Vec::new();
+        for k in &self.funcs {
+            match rows.iter_mut().find(|(role, _, _)| *role == k.role) {
+                Some((_, pairs, before)) => {
+                    *pairs += k.fused as u64;
+                    *before += k.unfused_len as u64;
+                }
+                None => rows.push((k.role, k.fused as u64, k.unfused_len as u64)),
+            }
+        }
+        rows
+    }
+
     /// Structural validation — the post-pass lint of the `kernel_compile`
     /// pass. Returns the list of violations (empty = OK).
     pub fn validate(&self) -> Vec<String> {
@@ -1462,6 +1481,33 @@ fn exec_frame<M: Machine>(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fusion_by_role_partitions_the_global_stats() {
+        let mk = |role: &'static str, fused: u32, unfused_len: u32| FuncKernel {
+            name: format!("{role}_fn"),
+            kind: FuncKind::Task,
+            role,
+            params: 0,
+            param_tys: Vec::<Type>::new().into(),
+            ret: Type::Void,
+            frame: Vec::new(),
+            code: Vec::new(),
+            costs: Vec::new(),
+            fused,
+            unfused_len,
+        };
+        let prog = KernelProgram {
+            mode: KernelMode::Explicit,
+            funcs: vec![mk("entry", 3, 10), mk("join", 0, 6), mk("entry", 1, 4)],
+        };
+        let rows = prog.fusion_by_role();
+        assert_eq!(rows, vec![("entry", 4, 14), ("join", 0, 6)]);
+        // Per-role rows must sum back to the global aggregate.
+        let (pairs, before) = prog.fusion();
+        assert_eq!(rows.iter().map(|(_, p, _)| p).sum::<u64>(), pairs);
+        assert_eq!(rows.iter().map(|(_, _, b)| b).sum::<u64>(), before);
+    }
 
     #[test]
     fn arglist_inline_and_heap() {

@@ -501,4 +501,17 @@ impl CompileSession {
         let kernels = self.explicit_kernels()?;
         crate::ws::run_with_kernels(kernels, memory, entry, args, config, sink)
     }
+
+    /// Package a resident-executor job over this session's cached kernel
+    /// program and a fresh shared-memory image. Callers seed globals
+    /// through the returned job's `memory` field (and may swap
+    /// `xla_sink`) before [`crate::ws::Executor::submit`]ting it.
+    pub fn ws_job(&self, entry: &str, args: &[Value]) -> Result<crate::ws::Job> {
+        Ok(crate::ws::Job::new(
+            self.explicit_kernels()?,
+            self.shared_memory(),
+            entry,
+            args,
+        ))
+    }
 }

@@ -6,6 +6,7 @@
 //! bombyx estimate <file.cilk> [--dae]
 //! bombyx kernels  <file.cilk> [--mode implicit|explicit] [--dump]
 //! bombyx run      <file.cilk> <entry> [args...] [--dae] [--engine E] [--workers N] [--stats]
+//! bombyx run      --engine ws --jobs N [--repeat K] [--workers N] [--stats]   # executor flood
 //! bombyx sim      <file.cilk> <entry> [args...] [--dae] [--pes N] [--mem-latency N]
 //! bombyx bfs      [--depth D] [--branch B] [--pes N]     # paper §III experiment
 //! ```
@@ -105,6 +106,7 @@ fn print_usage() {
          bombyx estimate <file.cilk> [--dae|--no-dae]\n  \
          bombyx kernels  <file.cilk> [--mode implicit|explicit] [--dae|--no-dae] [--dump]\n  \
          bombyx run      <file.cilk> <entry> [int args...] [--engine oracle|explicit|ws|sim] [--dae|--no-dae] [--workers N] [--stats]\n  \
+         bombyx run      --engine ws --jobs N [--repeat K] [--workers N] [--stats]   # flood the resident executor with mixed-corpus jobs\n  \
          bombyx sim      <file.cilk> <entry> [int args...] [--dae|--no-dae] [--pes N] [--mem-latency N]\n  \
          bombyx bfs      [--depth D] [--branch B] [--pes N]\n\n\
          Sources containing `#pragma bombyx dae` compile with DAE enabled\n\
@@ -403,8 +405,66 @@ fn cmd_kernels(args: &[String]) -> Result<()> {
         prog.fused_ratio(),
         if bombyx::exec::fuse_enabled() { "" } else { "  [BOMBYX_KERNEL_FUSE=0]" }
     );
+    print_role_fusion(&prog);
     if flags.switches.contains("dump") {
         print!("{}", prog.disasm());
+    }
+    Ok(())
+}
+
+/// One line per task role under the global fusion summary — fusion
+/// coverage varies sharply by kernel shape, and the global ratio
+/// averages that away.
+fn print_role_fusion(prog: &bombyx::exec::KernelProgram) {
+    for (role, pairs, before) in prog.fusion_by_role() {
+        let ratio = if before == 0 { 0.0 } else { 2.0 * pairs as f64 / before as f64 };
+        println!(
+            "  role {role:<12} fused pairs {:>6} / {:>8} instrs (fused_ratio {ratio:.3})",
+            commas(pairs),
+            commas(before)
+        );
+    }
+}
+
+/// `bombyx run --engine ws --jobs N [--repeat K]` — flood the resident
+/// executor with interleaved mixed-corpus jobs (every result verified
+/// against its reference) and report steady-state throughput plus
+/// per-job latency percentiles.
+fn run_flood(workers: usize, jobs: usize, repeat: usize, want_stats: bool) -> Result<()> {
+    use bombyx::util::bench::fmt_duration;
+    let exp = bombyx::coordinator::WsServeExperiment::new()?;
+    println!(
+        "flooding resident ws executor: {jobs} job(s) x {repeat} wave(s) on {workers} worker(s), corpus [{}]",
+        exp.corpus_names().join(", ")
+    );
+    let report = exp.flood(workers, jobs, repeat)?;
+    println!(
+        "jobs: {} completed, {} verified   wall {}   throughput {:.1} jobs/s",
+        report.jobs,
+        report.verified,
+        fmt_duration(report.wall),
+        report.jobs_per_s
+    );
+    println!(
+        "latency: p50 {}   p95 {}   p99 {}",
+        fmt_duration(report.p50),
+        fmt_duration(report.p95),
+        fmt_duration(report.p99)
+    );
+    if want_stats {
+        let s = &report.stats;
+        println!(
+            "executor: submitted {}  completed {}  failed {}  cancelled {}",
+            s.jobs_submitted, s.jobs_completed, s.jobs_failed, s.jobs_cancelled
+        );
+        println!(
+            "executor: tasks {}  steals {}  closures {}  xla batches {}  instrs {}",
+            commas(s.tasks_run),
+            commas(s.steals),
+            commas(s.closures_made),
+            commas(s.xla_batches),
+            commas(s.instrs)
+        );
     }
     Ok(())
 }
@@ -424,11 +484,11 @@ fn parse_task_args(flags: &Flags) -> Result<(String, Vec<Value>)> {
 
 /// `bombyx run <file> <entry> [args...] [--engine oracle|explicit|ws|sim]
 /// [--workers N] [--stats]` — one entry point over all four execution
-/// engines, all running the session's cached kernel program.
+/// engines, all running the session's cached kernel program. With
+/// `--jobs N` (ws engine only) no source file is read: the built-in
+/// mixed corpus floods the resident executor instead.
 fn cmd_run(args: &[String]) -> Result<()> {
-    let flags = parse_flags(args, &["workers", "engine"])?;
-    let mut session = load_session(&flags)?;
-    let (entry, task_args) = parse_task_args(&flags)?;
+    let flags = parse_flags(args, &["workers", "engine", "jobs", "repeat"])?;
     let engine = flags
         .options
         .get("engine")
@@ -436,6 +496,32 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .unwrap_or("ws")
         .to_string();
     let want_stats = flags.switches.contains("stats");
+    if flags.options.contains_key("jobs") || flags.options.contains_key("repeat") {
+        if engine != "ws" {
+            bail!("--jobs/--repeat need the resident executor (use --engine ws)");
+        }
+        let jobs = flags
+            .options
+            .get("jobs")
+            .ok_or_else(|| anyhow!("--repeat requires --jobs"))?
+            .parse::<usize>()
+            .map_err(|e| anyhow!("bad --jobs value: {e}"))?;
+        let repeat = flags
+            .options
+            .get("repeat")
+            .map(|v| v.parse::<usize>())
+            .transpose()
+            .map_err(|e| anyhow!("bad --repeat value: {e}"))?
+            .unwrap_or(1);
+        if jobs == 0 {
+            bail!("--jobs must be >= 1");
+        }
+        let workers =
+            flags.options.get("workers").map(|w| w.parse::<usize>()).transpose()?.unwrap_or(4);
+        return run_flood(workers, jobs, repeat, want_stats);
+    }
+    let mut session = load_session(&flags)?;
+    let (entry, task_args) = parse_task_args(&flags)?;
     let workers = flags
         .options
         .get("workers")
@@ -567,6 +653,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
             kernels.fused_ratio(),
             if bombyx::exec::fuse_enabled() { "" } else { "  [BOMBYX_KERNEL_FUSE=0]" }
         );
+        print_role_fusion(&kernels);
     }
     Ok(())
 }

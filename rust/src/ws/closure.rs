@@ -227,6 +227,29 @@ impl Registry {
         self.live.fetch_sub(1, Ordering::Relaxed);
     }
 
+    /// Drop every live closure — whole-arena reclamation when the owning
+    /// job completes or is cancelled. Entry generations survive, so a
+    /// stale handle that somehow outlives the sweep still fails loudly
+    /// on resolve instead of aliasing a recycled slot. Returns how many
+    /// closures were dropped.
+    pub fn clear(&self) -> usize {
+        let mut dropped = 0usize;
+        for shard in &self.shards {
+            let mut guard = shard.lock().unwrap();
+            let Shard { entries, free } = &mut *guard;
+            for (idx, (_gen, entry)) in entries.iter_mut().enumerate() {
+                // Occupied entries are not on the free list yet; emptied
+                // ones already are — push only what this sweep vacates.
+                if entry.take().is_some() {
+                    free.push(idx);
+                    dropped += 1;
+                }
+            }
+        }
+        self.live.fetch_sub(dropped, Ordering::Relaxed);
+        dropped
+    }
+
     /// Number of live (unfired) closures — leak detector for tests.
     pub fn live(&self) -> usize {
         self.live.load(Ordering::Relaxed)
@@ -325,6 +348,33 @@ mod tests {
         assert_ne!(h2, h3);
         assert_eq!(r.live(), 2);
         assert_eq!(r.live_peak(), 2);
+    }
+
+    #[test]
+    fn clear_sweeps_live_closures_and_recycles_slots() {
+        let r = Registry::new(4);
+        let mk = || Arc::new(SharedClosure::new(FuncId::new(0), tys(&[]), Cont::Root));
+        let handles: Vec<i64> = (0..10).map(|i| r.insert(mk(), i)).collect();
+        r.remove(handles[3]); // one already fired: its slot is on the free list
+        assert_eq!(r.live(), 9);
+        assert_eq!(r.clear(), 9, "sweep drops exactly the unfired closures");
+        assert_eq!(r.live(), 0);
+        assert_eq!(r.clear(), 0, "second sweep is a no-op");
+        // Slots recycle with fresh generations after the sweep.
+        let h = r.insert(mk(), 0);
+        assert_eq!(r.live(), 1);
+        r.remove(h);
+        assert_eq!(r.live(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "closure handle resolved after firing")]
+    fn cleared_handle_fails_loudly() {
+        let r = Registry::new(2);
+        let c = Arc::new(SharedClosure::new(FuncId::new(0), tys(&[]), Cont::Root));
+        let h = r.insert(c, 0);
+        r.clear();
+        let _ = r.get(h); // swept: must panic, not return a dangling entry
     }
 
     #[test]

@@ -161,6 +161,29 @@ impl<T> Deque<T> {
         (b - t).max(0) as usize
     }
 
+    /// Number of outgrown buffers awaiting reclamation (monitoring and
+    /// the executor's idle-reclaim path).
+    pub fn retired_len(&self) -> usize {
+        self.retired.lock().unwrap().len()
+    }
+
+    /// Free the retired buffers without waiting for drop.
+    ///
+    /// # Safety contract (checked by the caller, not the type system)
+    ///
+    /// Safe only when no thief can still hold a retired buffer pointer:
+    /// the executor calls this at full quiescence — every deque empty
+    /// and every worker's in-steal flag down. A thief that starts a
+    /// [`Deque::steal`] afterwards loads the *current* buffer pointer,
+    /// and only after observing `top < bottom`, so it can never touch a
+    /// buffer retired before the quiescent point (modulo the formal
+    /// stale-load caveat in the module docs, which this path shares).
+    pub fn free_retired(&self) {
+        for p in self.retired.lock().unwrap().drain(..) {
+            unsafe { drop(Box::from_raw(p)) };
+        }
+    }
+
     /// Owner-only: double the buffer, copying live entries bitwise. The
     /// old buffer is retired, not freed — thieves may hold its pointer.
     fn grow(&self, old: *mut Buf<T>, t: isize, b: isize) -> *mut Buf<T> {
@@ -224,6 +247,22 @@ mod tests {
         for i in (0..n).rev() {
             assert_eq!(d.pop(), Some(i));
         }
+        assert_eq!(d.pop(), None);
+    }
+
+    #[test]
+    fn free_retired_reclaims_outgrown_buffers() {
+        let d: Deque<Box<usize>> = Deque::new();
+        for i in 0..INITIAL_CAP * 8 {
+            d.push(Box::new(i));
+        }
+        assert!(d.retired_len() > 0, "growth must retire outgrown buffers");
+        while d.pop().is_some() {}
+        d.free_retired();
+        assert_eq!(d.retired_len(), 0);
+        // Still fully usable after reclamation (current buffer untouched).
+        d.push(Box::new(7));
+        assert_eq!(d.pop().as_deref(), Some(&7));
         assert_eq!(d.pop(), None);
     }
 

@@ -1,0 +1,828 @@
+//! Resident multi-job executor: the job-lifecycle layer over the WS
+//! worker pool.
+//!
+//! The one-shot [`super::run`] model spins a pool up, drains a single
+//! task graph, and tears everything down. This module keeps the pool
+//! *resident*: clients [`Executor::submit`] jobs — a compiled kernel
+//! program plus a root spawn — and get back a [`JobHandle`] to
+//! `join()`/`cancel()`. The paper's explicit continuation-passing model
+//! exists precisely so many independent task graphs can stream through a
+//! fixed set of processing elements; this is that heavy-traffic scenario
+//! for the software runtime.
+//!
+//! Lifecycle design:
+//!
+//! - **Per-job state.** Every task is tagged with an `Arc<JobState>`;
+//!   completion detection moves from pool quiescence to a per-job
+//!   outstanding-task counter (`pending`, seeded at 1 for the root).
+//!   Closure arenas are partitioned per job ([`Registry`] per
+//!   `JobState`), so cancelling a job reclaims *all* of its closures in
+//!   one sweep and a leaky job can never exhaust another job's arena.
+//! - **Fair admission.** At most `max_active_jobs` jobs run at once;
+//!   excess submissions park in a FIFO until a slot frees. Active jobs
+//!   feed roots (and spawn overflow past `max_inflight_per_job`) through
+//!   per-job *injection lanes* drained round-robin, and workers poll the
+//!   injector periodically even while their own deque is hot — so a
+//!   resident `fib(30)` cannot starve a freshly submitted small job.
+//! - **Cooperative cancellation.** [`JobHandle::cancel`] flips a flag
+//!   checked at every dispatch boundary through the kernel loop's
+//!   [`crate::exec::Machine::on_dispatch`] hook; queued tasks are
+//!   discarded at pop, the job's injector lane and xla queue are purged,
+//!   and the per-job registry sweep returns the live-closure count to
+//!   zero.
+//! - **Idle reclamation.** When the executor goes fully quiescent (no
+//!   active or queued jobs, empty deques, no thief mid-steal) the
+//!   retired Chase–Lev buffers outgrown by previous jobs are freed
+//!   instead of accruing until drop.
+//!
+//! [`super::run`] / [`super::run_with_kernels`] are now thin wrappers:
+//! construct an executor, submit one job, join it, tear down.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::exec::{ArgList, KernelProgram};
+use crate::ir::cfg::FuncId;
+use crate::ir::expr::Value;
+
+use super::closure::{Cont, Registry};
+use super::deque::Deque;
+use super::shared_mem::SharedMemory;
+use super::worker::{self, WsTask};
+use super::{WsConfig, WsStats, XlaSink};
+
+/// Executor-level configuration: the worker-pool knobs ([`WsConfig`])
+/// plus the job-lifecycle knobs layered on top.
+#[derive(Clone, Debug)]
+pub struct ExecutorConfig {
+    /// Worker pool shape (worker count, steal attempts).
+    pub ws: WsConfig,
+    /// Jobs allowed to run concurrently; excess submissions queue FIFO.
+    pub max_active_jobs: usize,
+    /// Spawn budget per job: once a job's outstanding-task count exceeds
+    /// this, its new spawns overflow into its round-robin injector lane
+    /// instead of the spawning worker's deque (fairness backpressure).
+    pub max_inflight_per_job: usize,
+    /// Shards in each job's closure arena (rounded up to a power of two).
+    pub arena_shards: usize,
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        ExecutorConfig {
+            ws: WsConfig::default(),
+            max_active_jobs: 64,
+            max_inflight_per_job: 4096,
+            arena_shards: 64,
+        }
+    }
+}
+
+/// Hard sanity bounds: construction fails loudly instead of letting a
+/// zero or absurd value panic deep inside worker spawn or arena setup.
+const MAX_WORKERS: usize = 1024;
+const MAX_ARENA_SHARDS: usize = 1 << 16;
+const MAX_INFLIGHT: usize = 1 << 30;
+
+impl ExecutorConfig {
+    /// Validate before any thread or arena is created.
+    pub fn validate(&self) -> Result<()> {
+        if self.ws.workers == 0 {
+            bail!("executor config: workers must be >= 1 (got 0)");
+        }
+        if self.ws.workers > MAX_WORKERS {
+            bail!(
+                "executor config: workers = {} exceeds the supported maximum of {MAX_WORKERS}",
+                self.ws.workers
+            );
+        }
+        if self.arena_shards == 0 {
+            bail!("executor config: arena_shards must be >= 1 (got 0)");
+        }
+        if self.arena_shards > MAX_ARENA_SHARDS {
+            bail!(
+                "executor config: arena_shards = {} exceeds the supported maximum of {MAX_ARENA_SHARDS}",
+                self.arena_shards
+            );
+        }
+        if self.max_active_jobs == 0 {
+            bail!("executor config: max_active_jobs must be >= 1 (got 0)");
+        }
+        if self.max_inflight_per_job == 0 {
+            bail!("executor config: max_inflight_per_job must be >= 1 (got 0)");
+        }
+        if self.max_inflight_per_job > MAX_INFLIGHT {
+            bail!(
+                "executor config: max_inflight_per_job = {} exceeds the supported maximum of {MAX_INFLIGHT}",
+                self.max_inflight_per_job
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Identity of a submitted job (monotonic per executor).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job#{}", self.0)
+    }
+}
+
+/// A unit of work for the executor: a compiled kernel program
+/// (session-cached `Arc` — many jobs can share one program), a memory
+/// image, and the root spawn.
+pub struct Job {
+    pub kernels: Arc<KernelProgram>,
+    pub memory: SharedMemory,
+    pub entry: String,
+    pub args: Vec<Value>,
+    pub xla_sink: Box<dyn XlaSink>,
+}
+
+impl Job {
+    /// A job with no xla sink (programs without `extern xla`).
+    pub fn new(
+        kernels: Arc<KernelProgram>,
+        memory: SharedMemory,
+        entry: &str,
+        args: &[Value],
+    ) -> Job {
+        Job {
+            kernels,
+            memory,
+            entry: entry.to_string(),
+            args: args.to_vec(),
+            xla_sink: Box::new(super::NoXlaSink),
+        }
+    }
+}
+
+/// Per-job atomic counters, rolled into a [`WsStats`] snapshot at
+/// completion (workers from every job update these concurrently).
+#[derive(Default)]
+pub(crate) struct JobCounters {
+    pub(crate) tasks_run: AtomicU64,
+    pub(crate) steals: AtomicU64,
+    pub(crate) closures_made: AtomicU64,
+    pub(crate) xla_batches: AtomicU64,
+    pub(crate) xla_tasks: AtomicU64,
+    pub(crate) instrs: AtomicU64,
+}
+
+/// Everything the workers need to run one job's tasks. Tasks carry an
+/// `Arc<JobState>`, so a stolen task brings its whole job context with
+/// it and stealing stays job-oblivious.
+pub(crate) struct JobState {
+    pub(crate) id: JobId,
+    pub(crate) kernels: Arc<KernelProgram>,
+    pub(crate) memory: Arc<SharedMemory>,
+    /// Per-job closure arena: cancellation sweeps it in one clear, and
+    /// one job's closure footprint is invisible to every other job.
+    pub(crate) registry: Registry,
+    /// Tasks created but not yet finished; seeded at 1 for the root.
+    /// Reaching zero completes the job (closures only count once fired).
+    pub(crate) pending: AtomicU64,
+    /// Cooperative-cancellation flag, checked at dispatch boundaries.
+    pub(crate) cancelled: AtomicBool,
+    /// Instances of this job's `extern xla` tasks awaiting batch flush.
+    pub(crate) xla_queue: Mutex<Vec<(FuncId, Vec<Value>, Cont)>>,
+    pub(crate) xla_sink: Box<dyn XlaSink>,
+    pub(crate) counters: JobCounters,
+    pub(crate) result: Mutex<Option<Value>>,
+    pub(crate) error: Mutex<Option<anyhow::Error>>,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+    submitted_at: Instant,
+    completed_at: Mutex<Option<Instant>>,
+}
+
+impl JobState {
+    #[inline]
+    pub(crate) fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+
+    /// Record the first error and abort the rest of the job (the
+    /// cancelled flag doubles as the abort signal; workers discard the
+    /// job's remaining tasks at dispatch boundaries).
+    pub(crate) fn fail(&self, err: anyhow::Error) {
+        let mut slot = self.error.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(err);
+        }
+        drop(slot);
+        self.cancelled.store(true, Ordering::SeqCst);
+    }
+
+    fn snapshot_stats(&self) -> WsStats {
+        let c = &self.counters;
+        WsStats {
+            tasks_run: c.tasks_run.load(Ordering::Relaxed),
+            steals: c.steals.load(Ordering::Relaxed),
+            closures_made: c.closures_made.load(Ordering::Relaxed),
+            max_live_closures: self.registry.live_peak() as u64,
+            xla_batches: c.xla_batches.load(Ordering::Relaxed),
+            xla_tasks: c.xla_tasks.load(Ordering::Relaxed),
+            instrs: c.instrs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Lifetime aggregates across the executor's jobs. Job-level counters
+/// (`tasks_run` …) roll in when a job reaches the end of its lifecycle,
+/// so a snapshot taken mid-flight undercounts by the in-flight jobs.
+#[derive(Clone, Debug, Default)]
+pub struct ExecutorStats {
+    pub jobs_submitted: u64,
+    /// Jobs that delivered a root result with no error.
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub jobs_cancelled: u64,
+    pub tasks_run: u64,
+    pub steals: u64,
+    pub closures_made: u64,
+    pub xla_batches: u64,
+    pub xla_tasks: u64,
+    pub instrs: u64,
+}
+
+#[derive(Default)]
+struct Totals {
+    jobs_submitted: AtomicU64,
+    jobs_completed: AtomicU64,
+    jobs_failed: AtomicU64,
+    jobs_cancelled: AtomicU64,
+    tasks_run: AtomicU64,
+    steals: AtomicU64,
+    closures_made: AtomicU64,
+    xla_batches: AtomicU64,
+    xla_tasks: AtomicU64,
+    instrs: AtomicU64,
+}
+
+/// Round-robin injection queues, one lane per job: a lane is created on
+/// first push and dropped when drained, and `pop` rotates across lanes
+/// so every active job's injected work makes progress regardless of how
+/// much any single job floods in.
+struct Injector {
+    lanes: VecDeque<(JobId, VecDeque<WsTask>)>,
+    total: usize,
+}
+
+impl Injector {
+    fn new() -> Injector {
+        Injector { lanes: VecDeque::new(), total: 0 }
+    }
+
+    fn push(&mut self, task: WsTask) {
+        let id = task.job.id;
+        match self.lanes.iter_mut().find(|(lid, _)| *lid == id) {
+            Some((_, lane)) => lane.push_back(task),
+            None => self.lanes.push_back((id, VecDeque::from([task]))),
+        }
+        self.total += 1;
+    }
+
+    /// Take one task, round-robin over lanes.
+    fn pop(&mut self) -> Option<WsTask> {
+        let (id, mut lane) = self.lanes.pop_front()?;
+        let task = lane.pop_front();
+        if !lane.is_empty() {
+            self.lanes.push_back((id, lane));
+        }
+        debug_assert!(task.is_some(), "injector lanes are never left empty");
+        if task.is_some() {
+            self.total -= 1;
+        }
+        task
+    }
+
+    /// Remove every task of one job (cancellation).
+    fn purge(&mut self, id: JobId) -> Vec<WsTask> {
+        let mut out = Vec::new();
+        let lanes = std::mem::take(&mut self.lanes);
+        for (lid, mut lane) in lanes {
+            if lid == id {
+                out.extend(lane.drain(..));
+            } else {
+                self.lanes.push_back((lid, lane));
+            }
+        }
+        self.total -= out.len();
+        out
+    }
+
+    fn drain_all(&mut self) -> Vec<WsTask> {
+        let mut out = Vec::new();
+        for (_, mut lane) in std::mem::take(&mut self.lanes) {
+            out.extend(lane.drain(..));
+        }
+        self.total = 0;
+        out
+    }
+}
+
+/// Admission control: the active set plus the FIFO of jobs waiting for a
+/// slot (each queued entry parks its un-injected root task).
+struct Admission {
+    active: Vec<Arc<JobState>>,
+    queued: VecDeque<(Arc<JobState>, WsTask)>,
+}
+
+/// State shared between the executor handle and its resident workers.
+pub(crate) struct ExecShared {
+    pub(crate) config: ExecutorConfig,
+    /// Per-worker lock-free deques (owner hot end, thief cold end).
+    pub(crate) deques: Vec<Deque<WsTask>>,
+    injector: Mutex<Injector>,
+    /// Mirror of the injector's total length, maintained under its lock:
+    /// lets the worker loop skip the mutex when nothing is injected.
+    injected: AtomicUsize,
+    admission: Mutex<Admission>,
+    pub(crate) shutdown: AtomicBool,
+    /// Total queued xla instances across jobs (gates the flush scan).
+    pub(crate) xla_pending: AtomicU64,
+    /// Parked-worker wakeup.
+    pub(crate) idle_lock: Mutex<()>,
+    pub(crate) idle_cv: Condvar,
+    /// Number of workers currently parked (gates notify syscalls).
+    pub(crate) idle_workers: AtomicU64,
+    /// Per-worker "inside a steal attempt" flags — a thief may hold a
+    /// stale buffer pointer only while its flag is up, which is what
+    /// makes quiescent retired-buffer reclamation safe.
+    pub(crate) in_steal: Vec<AtomicBool>,
+    totals: Totals,
+}
+
+impl ExecShared {
+    #[inline]
+    pub(crate) fn notify_if_idle(&self) {
+        if self.idle_workers.load(Ordering::Relaxed) > 0 {
+            self.idle_cv.notify_one();
+        }
+    }
+
+    /// Enqueue into the task's per-job injector lane.
+    pub(crate) fn inject(&self, task: WsTask) {
+        {
+            let mut inj = self.injector.lock().unwrap();
+            inj.push(task);
+            self.injected.store(inj.total, Ordering::SeqCst);
+        }
+        self.notify_if_idle();
+    }
+
+    /// Dequeue the next injected task, round-robin across job lanes.
+    pub(crate) fn pop_injected(&self) -> Option<WsTask> {
+        if self.injected.load(Ordering::SeqCst) == 0 {
+            return None;
+        }
+        let mut inj = self.injector.lock().unwrap();
+        let task = inj.pop();
+        self.injected.store(inj.total, Ordering::SeqCst);
+        task
+    }
+
+    /// Snapshot of the active set (xla flush iterates it).
+    pub(crate) fn active_jobs(&self) -> Vec<Arc<JobState>> {
+        self.admission.lock().unwrap().active.clone()
+    }
+
+    /// Free retired deque buffers if the executor is fully quiescent: no
+    /// job active or queued, nothing injected, every deque empty, and no
+    /// thief mid-steal. A thief entering `steal` *after* this check loads
+    /// the current buffer pointer (never a retired one) and bails on
+    /// `top >= bottom` before touching it, so only a thief already
+    /// inside a steal — excluded by the `in_steal` flags — could hold a
+    /// retired pointer. (Same formal-memory-model caveat as documented
+    /// in [`super::deque`]: these are Relaxed/Acquire observations, not
+    /// a proof against arbitrarily stale loads.)
+    pub(crate) fn try_reclaim(&self) {
+        let adm = self.admission.lock().unwrap();
+        if !adm.active.is_empty() || !adm.queued.is_empty() {
+            return;
+        }
+        if self.injected.load(Ordering::SeqCst) != 0 {
+            return;
+        }
+        if self.deques.iter().any(|d| d.len_hint() != 0) {
+            return;
+        }
+        if self.in_steal.iter().any(|f| f.load(Ordering::SeqCst)) {
+            return;
+        }
+        for d in &self.deques {
+            d.free_retired();
+        }
+        drop(adm);
+    }
+
+    fn stats(&self) -> ExecutorStats {
+        let t = &self.totals;
+        ExecutorStats {
+            jobs_submitted: t.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: t.jobs_completed.load(Ordering::Relaxed),
+            jobs_failed: t.jobs_failed.load(Ordering::Relaxed),
+            jobs_cancelled: t.jobs_cancelled.load(Ordering::Relaxed),
+            tasks_run: t.tasks_run.load(Ordering::Relaxed),
+            steals: t.steals.load(Ordering::Relaxed),
+            closures_made: t.closures_made.load(Ordering::Relaxed),
+            xla_batches: t.xla_batches.load(Ordering::Relaxed),
+            xla_tasks: t.xla_tasks.load(Ordering::Relaxed),
+            instrs: t.instrs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Decrement a job's outstanding-task count; the thread that takes it to
+/// zero completes the job. Every task accounted in `pending` must funnel
+/// through here exactly once — executed, discarded on cancellation,
+/// purged from the injector, or drained from the xla queue.
+pub(crate) fn finish_one(shared: &ExecShared, job: &Arc<JobState>) {
+    if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+        complete(shared, job);
+    }
+}
+
+/// End of a job's lifecycle: sweep its closure arena, roll its counters
+/// into the executor totals, free its admission slot (admitting the next
+/// queued job), wake joiners, and try idle reclamation.
+fn complete(shared: &ExecShared, job: &Arc<JobState>) {
+    // Reclaims every closure a cancelled job left unfired; a no-op for a
+    // cleanly drained graph. Runs strictly after the job's last task
+    // (pending just hit zero), so nothing can still resolve handles.
+    job.registry.clear();
+
+    let s = job.snapshot_stats();
+    let t = &shared.totals;
+    t.tasks_run.fetch_add(s.tasks_run, Ordering::Relaxed);
+    t.steals.fetch_add(s.steals, Ordering::Relaxed);
+    t.closures_made.fetch_add(s.closures_made, Ordering::Relaxed);
+    t.xla_batches.fetch_add(s.xla_batches, Ordering::Relaxed);
+    t.xla_tasks.fetch_add(s.xla_tasks, Ordering::Relaxed);
+    t.instrs.fetch_add(s.instrs, Ordering::Relaxed);
+    let failed = job.error.lock().unwrap().is_some();
+    let delivered = job.result.lock().unwrap().is_some();
+    if failed {
+        t.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    } else if !delivered && job.cancelled.load(Ordering::SeqCst) {
+        t.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
+    } else {
+        t.jobs_completed.fetch_add(1, Ordering::Relaxed);
+    }
+    *job.completed_at.lock().unwrap() = Some(Instant::now());
+
+    // Free the admission slot; admit the longest-waiting queued job.
+    let next_root = {
+        let mut adm = shared.admission.lock().unwrap();
+        adm.active.retain(|j| j.id != job.id);
+        if adm.active.len() < shared.config.max_active_jobs {
+            if let Some((next, root)) = adm.queued.pop_front() {
+                adm.active.push(next);
+                Some(root)
+            } else {
+                None
+            }
+        } else {
+            None
+        }
+    };
+    if let Some(root) = next_root {
+        shared.inject(root);
+    }
+
+    {
+        let mut done = job.done.lock().unwrap();
+        *done = true;
+    }
+    job.done_cv.notify_all();
+    shared.try_reclaim();
+}
+
+/// The resident executor: a fixed pool of worker threads draining tasks
+/// from every submitted job. Dropping it shuts the pool down (in-flight
+/// jobs are failed so joiners cannot hang).
+pub struct Executor {
+    shared: Arc<ExecShared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    next_job: AtomicU64,
+}
+
+impl Executor {
+    /// Validate the configuration and spawn the resident worker pool.
+    pub fn new(config: ExecutorConfig) -> Result<Executor> {
+        config.validate()?;
+        let workers = config.ws.workers;
+        let shared = Arc::new(ExecShared {
+            config,
+            deques: (0..workers).map(|_| Deque::new()).collect(),
+            injector: Mutex::new(Injector::new()),
+            injected: AtomicUsize::new(0),
+            admission: Mutex::new(Admission { active: Vec::new(), queued: VecDeque::new() }),
+            shutdown: AtomicBool::new(false),
+            xla_pending: AtomicU64::new(0),
+            idle_lock: Mutex::new(()),
+            idle_cv: Condvar::new(),
+            idle_workers: AtomicU64::new(0),
+            in_steal: (0..workers).map(|_| AtomicBool::new(false)).collect(),
+            totals: Totals::default(),
+        });
+        let mut threads = Vec::with_capacity(workers);
+        for wid in 0..workers {
+            let sh = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name(format!("bombyx-ws-{wid}"))
+                .spawn(move || worker::worker_loop(wid, &sh));
+            match spawned {
+                Ok(handle) => threads.push(handle),
+                Err(e) => {
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                    shared.idle_cv.notify_all();
+                    for t in threads {
+                        let _ = t.join();
+                    }
+                    bail!("spawning ws worker {wid}: {e}");
+                }
+            }
+        }
+        Ok(Executor { shared, threads, next_job: AtomicU64::new(0) })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shared.deques.len()
+    }
+
+    /// Submit a job. Fails fast (before consuming an admission slot) if
+    /// the entry task does not exist in the job's kernel program.
+    pub fn submit(&self, job: Job) -> Result<JobHandle> {
+        let Job { kernels, memory, entry, args, xla_sink } = job;
+        let fid = kernels
+            .func_by_name(&entry)
+            .ok_or_else(|| anyhow!("no task named `{entry}`"))?;
+        let id = JobId(self.next_job.fetch_add(1, Ordering::Relaxed));
+        let state = Arc::new(JobState {
+            id,
+            kernels,
+            memory: Arc::new(memory),
+            registry: Registry::new(self.shared.config.arena_shards),
+            pending: AtomicU64::new(1),
+            cancelled: AtomicBool::new(false),
+            xla_queue: Mutex::new(Vec::new()),
+            xla_sink,
+            counters: JobCounters::default(),
+            result: Mutex::new(None),
+            error: Mutex::new(None),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+            submitted_at: Instant::now(),
+            completed_at: Mutex::new(None),
+        });
+        let root = WsTask {
+            job: Arc::clone(&state),
+            task: fid,
+            args: ArgList::from_slice(&args),
+            cont: Cont::Root,
+        };
+        self.shared.totals.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        let mut admitted = Some(root);
+        {
+            let mut adm = self.shared.admission.lock().unwrap();
+            if adm.active.len() < self.shared.config.max_active_jobs {
+                adm.active.push(Arc::clone(&state));
+            } else {
+                adm.queued.push_back((Arc::clone(&state), admitted.take().unwrap()));
+            }
+        }
+        if let Some(root) = admitted {
+            self.shared.inject(root);
+        }
+        Ok(JobHandle { job: state, shared: Arc::clone(&self.shared) })
+    }
+
+    /// Lifetime aggregates (completed jobs; see [`ExecutorStats`]).
+    pub fn stats(&self) -> ExecutorStats {
+        self.shared.stats()
+    }
+
+    /// Retired (outgrown, not yet freed) deque buffers across workers —
+    /// observability for the idle-reclamation path.
+    pub fn retired_buffers(&self) -> usize {
+        self.shared.deques.iter().map(|d| d.retired_len()).sum()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.idle_cv.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        // Workers are gone; fail whatever is still in flight so late
+        // joiners see an error instead of hanging on the condvar.
+        let orphans = {
+            let mut inj = self.shared.injector.lock().unwrap();
+            let tasks = inj.drain_all();
+            self.shared.injected.store(0, Ordering::SeqCst);
+            tasks
+        };
+        drop(orphans);
+        let leftovers: Vec<Arc<JobState>> = {
+            let mut adm = self.shared.admission.lock().unwrap();
+            let mut jobs = std::mem::take(&mut adm.active);
+            jobs.extend(adm.queued.drain(..).map(|(j, _)| j));
+            jobs
+        };
+        for job in leftovers {
+            job.fail(anyhow!("executor shut down with {} in flight", job.id));
+            job.registry.clear();
+            {
+                let mut done = job.done.lock().unwrap();
+                *done = true;
+            }
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+/// Client-side handle to a submitted job.
+pub struct JobHandle {
+    job: Arc<JobState>,
+    shared: Arc<ExecShared>,
+}
+
+impl JobHandle {
+    pub fn id(&self) -> JobId {
+        self.job.id
+    }
+
+    pub fn is_finished(&self) -> bool {
+        *self.job.done.lock().unwrap()
+    }
+
+    /// Block until the job reaches the end of its lifecycle (result,
+    /// error, or cancellation drained).
+    pub fn wait(&self) {
+        let mut done = self.job.done.lock().unwrap();
+        while !*done {
+            done = self.job.done_cv.wait(done).unwrap();
+        }
+        drop(done);
+        self.shared.try_reclaim();
+    }
+
+    /// Wait and consume the handle: root result, final memory image, and
+    /// this job's stats. The memory is the `Arc` shared with any tasks
+    /// that ran it — sole ownership returns once the executor (or at
+    /// least this job's last task) is gone.
+    pub fn join(self) -> Result<(Value, Arc<SharedMemory>, WsStats)> {
+        self.wait();
+        let stats = self.job.snapshot_stats();
+        if let Some(err) = self.job.error.lock().unwrap().take() {
+            return Err(err);
+        }
+        let result = self.job.result.lock().unwrap().take();
+        match result {
+            Some(value) => Ok((value, Arc::clone(&self.job.memory), stats)),
+            None if self.job.is_cancelled() => Err(anyhow!("{} cancelled", self.job.id)),
+            None => Err(anyhow!("task graph drained without a root result")),
+        }
+    }
+
+    /// Cooperatively cancel the job. Queued-but-unstarted jobs complete
+    /// immediately; in-flight jobs stop at the next dispatch boundary of
+    /// each of their tasks, and the job's injector lane, xla queue, and
+    /// closure arena are reclaimed. A job may still complete normally if
+    /// its root result was already delivered.
+    pub fn cancel(&self) {
+        if self.job.cancelled.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Still parked in the admission queue? Its root never ran: drop
+        // the parked task and retire the job's only pending count.
+        let parked = {
+            let mut adm = self.shared.admission.lock().unwrap();
+            adm.queued
+                .iter()
+                .position(|(j, _)| j.id == self.job.id)
+                .and_then(|pos| adm.queued.remove(pos))
+        };
+        if let Some((job, root)) = parked {
+            drop(root);
+            finish_one(&self.shared, &job);
+            return;
+        }
+        // In flight: purge the injector lane and the xla queue — workers
+        // discard everything else at dispatch boundaries.
+        let purged = {
+            let mut inj = self.shared.injector.lock().unwrap();
+            let tasks = inj.purge(self.job.id);
+            self.shared.injected.store(inj.total, Ordering::SeqCst);
+            tasks
+        };
+        for task in purged {
+            let job = Arc::clone(&task.job);
+            drop(task);
+            finish_one(&self.shared, &job);
+        }
+        let drained: Vec<_> = {
+            let mut q = self.job.xla_queue.lock().unwrap();
+            q.drain(..).collect()
+        };
+        if !drained.is_empty() {
+            self.shared.xla_pending.fetch_sub(drained.len() as u64, Ordering::SeqCst);
+            let n = drained.len();
+            drop(drained);
+            for _ in 0..n {
+                finish_one(&self.shared, &self.job);
+            }
+        }
+        self.shared.idle_cv.notify_all();
+    }
+
+    /// Live closures in this job's arena (0 after completion or a
+    /// drained cancellation).
+    pub fn live_closures(&self) -> usize {
+        self.job.registry.live()
+    }
+
+    /// Stats snapshot (mid-flight snapshots are racy but monotonic).
+    pub fn stats(&self) -> WsStats {
+        self.job.snapshot_stats()
+    }
+
+    /// Submission-to-completion latency, once finished.
+    pub fn latency(&self) -> Option<Duration> {
+        self.job
+            .completed_at
+            .lock()
+            .unwrap()
+            .map(|t| t.duration_since(self.job.submitted_at))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_default_is_valid() {
+        assert!(ExecutorConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn injector_empty_bookkeeping() {
+        // Lane rotation under real tasks is covered by the fairness test
+        // in rust/tests/executor_tests.rs; the empty-state invariants are
+        // checkable without a job.
+        let mut inj = Injector::new();
+        assert!(inj.pop().is_none());
+        assert_eq!(inj.total, 0);
+        assert!(inj.drain_all().is_empty());
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_values() {
+        let cases: Vec<(ExecutorConfig, &str)> = vec![
+            (
+                ExecutorConfig {
+                    ws: WsConfig { workers: 0, steal_tries: 4 },
+                    ..ExecutorConfig::default()
+                },
+                "workers",
+            ),
+            (
+                ExecutorConfig {
+                    ws: WsConfig { workers: MAX_WORKERS + 1, steal_tries: 4 },
+                    ..ExecutorConfig::default()
+                },
+                "workers",
+            ),
+            (ExecutorConfig { arena_shards: 0, ..ExecutorConfig::default() }, "arena_shards"),
+            (
+                ExecutorConfig { arena_shards: MAX_ARENA_SHARDS * 2, ..ExecutorConfig::default() },
+                "arena_shards",
+            ),
+            (ExecutorConfig { max_active_jobs: 0, ..ExecutorConfig::default() }, "max_active_jobs"),
+            (
+                ExecutorConfig { max_inflight_per_job: 0, ..ExecutorConfig::default() },
+                "max_inflight_per_job",
+            ),
+        ];
+        for (cfg, needle) in cases {
+            let err = cfg.validate().expect_err("must be rejected");
+            assert!(err.to_string().contains(needle), "{err} should mention {needle}");
+            // The same error must surface from construction, before any
+            // thread is spawned.
+            let err = Executor::new(cfg).expect_err("construction must fail");
+            assert!(err.to_string().contains(needle), "{err}");
+        }
+    }
+}

@@ -21,23 +21,29 @@
 //!   timeout) instead of hammering victims;
 //! - `extern xla` tasks are routed to a batch sink (scalar reference
 //!   implementation in tests; the AOT XLA executable in production —
-//!   `coordinator::batcher`).
+//!   `coordinator::batcher`);
+//! - the pool is *resident* ([`executor`]): clients submit jobs — a
+//!   kernel program plus a root spawn — against a long-lived
+//!   [`Executor`] and join/cancel them through [`JobHandle`]s; the
+//!   one-shot [`run`] / [`run_with_kernels`] entry points below are thin
+//!   wrappers that submit a single job and tear the pool down.
 
 pub mod closure;
 pub mod deque;
+pub mod executor;
 pub mod shared_mem;
 pub mod worker;
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
 
-use crate::exec::{ArgList, KernelMode, KernelProgram};
+use crate::exec::{KernelMode, KernelProgram};
 use crate::ir::cfg::Module;
 use crate::ir::expr::Value;
 
 pub use closure::{Cont, Registry};
+pub use executor::{Executor, ExecutorConfig, ExecutorStats, Job, JobHandle, JobId};
 pub use shared_mem::SharedMemory;
 
 /// Batch execution sink for `extern xla` tasks.
@@ -108,36 +114,6 @@ pub struct WsStats {
     pub instrs: u64,
 }
 
-/// Shared coordination state across workers. The compiled kernel program
-/// is the single source of truth for task metadata (names, kinds,
-/// parameter types) — the module it was compiled from is only consulted
-/// before construction, for the entry-point lookup.
-pub(crate) struct Shared {
-    /// Compiled task kernels (session-cached or compiled at entry).
-    pub kernels: Arc<KernelProgram>,
-    pub memory: SharedMemory,
-    pub registry: Registry,
-    /// Tasks created but not yet finished (termination detection).
-    pub pending: AtomicU64,
-    pub result: Mutex<Option<Value>>,
-    pub error: Mutex<Option<anyhow::Error>>,
-    pub failed: AtomicBool,
-    pub done: AtomicBool,
-    /// Per-worker lock-free deques (owner hot end, thief cold end).
-    pub deques: Vec<deque::Deque<worker::WsTask>>,
-    /// Queue of xla task instances awaiting batch execution. Arguments
-    /// are staged straight from the spawner's kernel arg-staging slots
-    /// into the owned `Vec` the batch sink consumes, so the flush moves
-    /// them out without any per-instance `ArgList` conversion.
-    pub xla_queue: Mutex<Vec<(crate::ir::FuncId, Vec<Value>, Cont)>>,
-    pub xla_sink: Box<dyn XlaSink>,
-    /// Parked-worker wakeup.
-    pub idle_lock: Mutex<()>,
-    pub idle_cv: Condvar,
-    /// Number of workers currently parked (gates notify syscalls).
-    pub idle_workers: AtomicU64,
-}
-
 /// Run a task program on the WS runtime; returns the root result, final
 /// memory and stats. Compiles the kernel program on entry — use
 /// [`run_with_kernels`] (or the session API) to reuse a cached one.
@@ -155,6 +131,10 @@ pub fn run(
 
 /// [`run`] over an already-compiled kernel program (the single source of
 /// truth for task metadata — no module handle to drift out of sync).
+///
+/// Thin wrapper over the resident [`Executor`]: construct a pool of
+/// `config.workers`, submit the one job, join it, tear the pool down.
+/// Multi-job clients should hold an [`Executor`] directly.
 pub fn run_with_kernels(
     kernels: Arc<KernelProgram>,
     memory: SharedMemory,
@@ -163,78 +143,26 @@ pub fn run_with_kernels(
     config: &WsConfig,
     xla_sink: Box<dyn XlaSink>,
 ) -> Result<(Value, SharedMemory, WsStats)> {
-    let fid = kernels
-        .func_by_name(name)
-        .ok_or_else(|| anyhow!("no task named `{name}`"))?;
-    let workers = config.workers.max(1);
-    let shared = Shared {
+    let exec_config = ExecutorConfig {
+        ws: WsConfig { workers: config.workers.max(1), steal_tries: config.steal_tries },
+        ..ExecutorConfig::default()
+    };
+    let exec = Executor::new(exec_config)?;
+    let handle = exec.submit(Job {
         kernels,
         memory,
-        registry: Registry::new(64),
-        pending: AtomicU64::new(1),
-        result: Mutex::new(None),
-        error: Mutex::new(None),
-        failed: AtomicBool::new(false),
-        done: AtomicBool::new(false),
-        deques: (0..workers).map(|_| deque::Deque::new()).collect(),
-        xla_queue: Mutex::new(Vec::new()),
+        entry: name.to_string(),
+        args: args.to_vec(),
         xla_sink,
-        idle_lock: Mutex::new(()),
-        idle_cv: Condvar::new(),
-        idle_workers: AtomicU64::new(0),
-    };
-    // Root push happens before any worker exists — the owner-only push
-    // restriction concerns concurrent use.
-    shared.deques[0].push(worker::WsTask {
-        task: fid,
-        args: ArgList::from_slice(args),
-        cont: Cont::Root,
-    });
-
-    let stats: Vec<Mutex<WsStats>> = (0..workers).map(|_| Mutex::new(WsStats::default())).collect();
-    std::thread::scope(|scope| {
-        for wid in 0..workers {
-            let shared = &shared;
-            let stats = &stats;
-            scope.spawn(move || {
-                worker::worker_loop(wid, shared, config, &mut stats[wid].lock().unwrap());
-            });
-        }
-    });
-
-    let max_live = shared.registry.live_peak() as u64;
-    if let Some(err) = shared.error.into_inner().unwrap() {
-        bail!(err);
-    }
-    let result = shared
-        .result
-        .into_inner()
-        .unwrap()
-        .ok_or_else(|| anyhow!("task graph drained without a root result"))?;
-    let mut total = WsStats::default();
-    for s in stats {
-        let s = s.into_inner().unwrap();
-        total.tasks_run += s.tasks_run;
-        total.steals += s.steals;
-        total.closures_made += s.closures_made;
-        total.xla_batches += s.xla_batches;
-        total.xla_tasks += s.xla_tasks;
-        total.instrs += s.instrs;
-    }
-    total.max_live_closures = max_live;
-    Ok((result, shared.memory, total))
-}
-
-impl Shared {
-    pub(crate) fn fail(&self, err: anyhow::Error) {
-        let mut slot = self.error.lock().unwrap();
-        if slot.is_none() {
-            *slot = Some(err);
-        }
-        self.failed.store(true, Ordering::SeqCst);
-        self.done.store(true, Ordering::SeqCst);
-        self.idle_cv.notify_all();
-    }
+    })?;
+    let (value, memory, stats) = handle.join()?;
+    // Joining the workers releases every transient reference to the
+    // job's memory image, so unwrapping the Arc back to the by-value
+    // signature is deterministic.
+    drop(exec);
+    let memory = Arc::try_unwrap(memory)
+        .unwrap_or_else(|_| unreachable!("executor dropped, memory has a sole owner"));
+    Ok((value, memory, stats))
 }
 
 #[cfg(test)]

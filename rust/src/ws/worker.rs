@@ -3,11 +3,23 @@
 //! Each worker owns a lock-free Chase–Lev deque ([`super::deque`]): its
 //! own pushes/pops touch no lock, thieves CAS the cold end. Task bodies
 //! run on the shared compiled kernels ([`crate::exec`]) through
-//! [`WsMachine`], whose side effects are the concurrent closure registry
-//! and the word-atomic shared memory. Idle thieves back off
-//! exponentially (spin first, then park on the idle condvar with a
-//! growing timeout) so contended steals never spin hot and the push
-//! path pays a futex only when somebody actually sleeps.
+//! [`WsMachine`], whose side effects are the owning job's concurrent
+//! closure registry and word-atomic shared memory.
+//!
+//! Workers are *resident* ([`super::executor`]): they interleave tasks
+//! from every active job. A [`WsTask`] carries its `Arc<JobState>`, so a
+//! steal moves the whole job context with the task and the deques stay
+//! job-oblivious. The sourcing order is (1) a periodic poll of the
+//! round-robin injector — fairness: a hot local deque cannot starve a
+//! freshly admitted job's root — then (2) the own deque, (3) the
+//! injector, (4) stealing, (5) the xla batch queues, then exponential
+//! backoff (spin first, then park on the idle condvar with a growing
+//! timeout) so contended steals never spin hot and the push path pays a
+//! futex only when somebody actually sleeps.
+//!
+//! Cancellation is cooperative: a cancelled job's queued tasks are
+//! discarded at pop, and running tasks abort at the next dispatch
+//! boundary via the [`Machine::on_dispatch`] hook.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -20,14 +32,25 @@ use crate::ir::cfg::{FuncId, FuncKind, GlobalId};
 use crate::ir::expr::Value;
 
 use super::closure::{Cont, SharedClosure};
-use super::{Shared, WsConfig, WsStats};
+use super::executor::{finish_one, ExecShared, JobState};
 
-/// A runnable task instance.
-#[derive(Clone, Debug)]
+/// A runnable task instance, tagged with its owning job.
+#[derive(Clone)]
 pub struct WsTask {
+    pub(crate) job: Arc<JobState>,
     pub task: FuncId,
     pub args: ArgList,
     pub cont: Cont,
+}
+
+impl std::fmt::Debug for WsTask {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WsTask")
+            .field("job", &self.job.id)
+            .field("task", &self.task)
+            .field("cont", &self.cont)
+            .finish()
+    }
 }
 
 /// Spin rounds before a thief starts parking.
@@ -37,49 +60,80 @@ const SPIN_ROUNDS: u32 = 6;
 /// increment is bounded by the timeout, so the cap keeps the worst-case
 /// lost-wakeup latency at the pre-rework 200us bound).
 const MAX_PARK_SHIFT: u32 = 2;
+/// Local tasks executed between injector polls. Prime, so the poll
+/// cadence does not phase-lock with power-of-two task-tree shapes.
+const INJECT_PERIOD: u32 = 61;
 
-pub(crate) fn worker_loop(wid: usize, shared: &Shared, config: &WsConfig, stats: &mut WsStats) {
+pub(crate) fn worker_loop(wid: usize, shared: &ExecShared) {
     let nworkers = shared.deques.len();
+    let steal_tries = shared.config.ws.steal_tries.max(1);
     let mut rng = crate::util::rng::Rng::new(0x5EED ^ wid as u64);
-    // Per-worker kernel frame stack, reused across tasks: task dispatch
-    // allocates nothing on the hot path.
+    // Per-worker kernel frame stack, reused across tasks and jobs: task
+    // dispatch allocates nothing on the hot path.
     let mut stack = KStack::new();
     let mut backoff: u32 = 0;
+    let mut since_inject: u32 = 0;
     loop {
-        if shared.done.load(Ordering::SeqCst) {
-            stats.instrs = stack.retired();
+        if shared.shutdown.load(Ordering::SeqCst) {
             return;
+        }
+        // 0. Fairness: service the round-robin injector periodically even
+        // while the local deque is hot, so a resident job's task flood
+        // cannot starve a freshly admitted root or overflow lane.
+        if since_inject >= INJECT_PERIOD {
+            since_inject = 0;
+            if let Some(task) = shared.pop_injected() {
+                backoff = 0;
+                execute(wid, shared, task, &mut stack);
+                continue;
+            }
         }
         // 1. Own deque (LIFO hot end, lock-free owner path).
         if let Some(task) = shared.deques[wid].pop() {
             backoff = 0;
-            execute(wid, shared, task, stats, &mut stack);
+            since_inject += 1;
+            execute(wid, shared, task, &mut stack);
             continue;
         }
-        // 2. Steal (FIFO cold end of random victims, CAS only).
-        let mut stolen = None;
-        for _ in 0..config.steal_tries.max(1) {
-            let victim = rng.below(nworkers as u64) as usize;
-            if victim == wid {
+        // 2. Injector lanes (new job roots, per-job spawn overflow).
+        if let Some(task) = shared.pop_injected() {
+            backoff = 0;
+            since_inject = 0;
+            execute(wid, shared, task, &mut stack);
+            continue;
+        }
+        // 3. Steal (FIFO cold end of random victims, CAS only). The
+        // in_steal flag brackets the window in which this thief may hold
+        // a victim's buffer pointer — the executor's quiescent
+        // reclamation of retired buffers keys off it.
+        if nworkers > 1 {
+            shared.in_steal[wid].store(true, Ordering::SeqCst);
+            let mut stolen = None;
+            for _ in 0..steal_tries {
+                let victim = rng.below(nworkers as u64) as usize;
+                if victim == wid {
+                    continue;
+                }
+                if let Some(t) = shared.deques[victim].steal() {
+                    stolen = Some(t);
+                    break;
+                }
+            }
+            shared.in_steal[wid].store(false, Ordering::SeqCst);
+            if let Some(task) = stolen {
+                backoff = 0;
+                since_inject += 1;
+                task.job.counters.steals.fetch_add(1, Ordering::Relaxed);
+                execute(wid, shared, task, &mut stack);
                 continue;
             }
-            if let Some(t) = shared.deques[victim].steal() {
-                stolen = Some(t);
-                break;
-            }
         }
-        if let Some(task) = stolen {
-            backoff = 0;
-            stats.steals += 1;
-            execute(wid, shared, task, stats, &mut stack);
-            continue;
-        }
-        // 3. Flush pending xla batch work.
-        if flush_xla(wid, shared, stats) {
+        // 4. Flush pending xla batch work across active jobs.
+        if flush_xla(wid, shared) {
             backoff = 0;
             continue;
         }
-        // 4. Exponential backoff: spin a few rounds, then park with a
+        // 5. Exponential backoff: spin a few rounds, then park with a
         // growing timeout (pushers notify; the idle counter gates the
         // futex syscall on the push path).
         if backoff < SPIN_ROUNDS {
@@ -101,101 +155,136 @@ pub(crate) fn worker_loop(wid: usize, shared: &Shared, config: &WsConfig, stats:
     }
 }
 
-/// Drain the xla queue through the batch sink. Returns true if any work
-/// was done. Arguments and continuations are *moved* out of the queued
-/// instances — the queue already holds the owned `Vec<Value>` rows the
-/// sink consumes (staged at spawn from the kernel's arg-staging slots),
-/// so the flush performs no per-instance `ArgList` conversion; task
-/// names are borrowed from the kernels.
-fn flush_xla(wid: usize, shared: &Shared, stats: &mut WsStats) -> bool {
+/// Flush queued xla instances through each active job's batch sink.
+/// Returns true if any work was done.
+fn flush_xla(wid: usize, shared: &ExecShared) -> bool {
+    if shared.xla_pending.load(Ordering::SeqCst) == 0 {
+        return false;
+    }
+    let mut did = false;
+    for job in shared.active_jobs() {
+        did |= flush_job_xla(wid, shared, &job);
+    }
+    did
+}
+
+/// Drain one job's xla queue through its batch sink. Arguments and
+/// continuations are *moved* out of the queued instances — the queue
+/// already holds the owned `Vec<Value>` rows the sink consumes (staged
+/// at spawn from the kernel's arg-staging slots), so the flush performs
+/// no per-instance `ArgList` conversion; task names are borrowed from
+/// the kernels.
+///
+/// Accounting contract: every drained instance is `finish_one`d exactly
+/// once, whether it was delivered, skipped on cancellation, or orphaned
+/// by a sink error — per-job completion counters tolerate no leaks.
+fn flush_job_xla(wid: usize, shared: &ExecShared, job: &Arc<JobState>) -> bool {
     let mut batch: Vec<(FuncId, Vec<Value>, Cont)> = {
-        let mut q = shared.xla_queue.lock().unwrap();
+        let mut q = job.xla_queue.lock().unwrap();
         if q.is_empty() {
             return false;
         }
-        let take = q.len().min(shared.xla_sink.preferred_batch());
+        let take = q.len().min(job.xla_sink.preferred_batch());
         q.drain(..take).collect()
     };
-    // Group by task id, preserving order within each group.
-    let mut groups: Vec<(FuncId, Vec<usize>)> = Vec::new();
-    for (i, (fid, _, _)) in batch.iter().enumerate() {
-        match groups.iter_mut().find(|(g, _)| g == fid) {
-            Some((_, idxs)) => idxs.push(i),
-            None => groups.push((*fid, vec![i])),
+    let drained = batch.len();
+    shared.xla_pending.fetch_sub(drained as u64, Ordering::SeqCst);
+    if !job.is_cancelled() {
+        // Group by task id, preserving order within each group.
+        let mut groups: Vec<(FuncId, Vec<usize>)> = Vec::new();
+        for (i, (fid, _, _)) in batch.iter().enumerate() {
+            match groups.iter_mut().find(|(g, _)| g == fid) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((*fid, vec![i])),
+            }
+        }
+        'groups: for (fid, idxs) in groups {
+            let name = &job.kernels.kernel(fid).name;
+            let args: Vec<Vec<Value>> = idxs
+                .iter()
+                .map(|&i| std::mem::take(&mut batch[i].1))
+                .collect();
+            job.counters.xla_batches.fetch_add(1, Ordering::Relaxed);
+            job.counters.xla_tasks.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+            match job.xla_sink.exec_batch(name, &args, &job.memory) {
+                Ok(results) => {
+                    if results.len() != idxs.len() {
+                        job.fail(anyhow!(
+                            "xla sink returned {} results for {} instances of `{name}`",
+                            results.len(),
+                            idxs.len()
+                        ));
+                        break 'groups;
+                    }
+                    for (&i, value) in idxs.iter().zip(results) {
+                        let cont = std::mem::replace(&mut batch[i].2, Cont::Root);
+                        if let Err(e) = deliver(wid, shared, job, cont, value) {
+                            job.fail(e);
+                            break 'groups;
+                        }
+                    }
+                }
+                Err(e) => {
+                    job.fail(e);
+                    break 'groups;
+                }
+            }
         }
     }
-    for (fid, idxs) in groups {
-        let name = &shared.kernels.kernel(fid).name;
-        let args: Vec<Vec<Value>> = idxs
-            .iter()
-            .map(|&i| std::mem::take(&mut batch[i].1))
-            .collect();
-        stats.xla_batches += 1;
-        stats.xla_tasks += idxs.len() as u64;
-        match shared.xla_sink.exec_batch(name, &args, &shared.memory) {
-            Ok(results) => {
-                if results.len() != idxs.len() {
-                    shared.fail(anyhow!(
-                        "xla sink returned {} results for {} instances of `{name}`",
-                        results.len(),
-                        idxs.len()
-                    ));
-                    return true;
-                }
-                for (&i, value) in idxs.iter().zip(results) {
-                    let cont = std::mem::replace(&mut batch[i].2, Cont::Root);
-                    if let Err(e) = deliver(wid, shared, cont, value) {
-                        shared.fail(e);
-                        return true;
-                    }
-                    finish_one(shared);
-                }
-            }
-            Err(e) => {
-                shared.fail(e);
-                return true;
-            }
-        }
+    drop(batch);
+    for _ in 0..drained {
+        finish_one(shared, job);
     }
     true
 }
 
-fn execute(
-    wid: usize,
-    shared: &Shared,
-    task: WsTask,
-    stats: &mut WsStats,
-    stack: &mut KStack,
-) {
-    stats.tasks_run += 1;
-    if let Err(e) = run_task(wid, shared, task, stats, stack) {
-        shared.fail(e);
+fn execute(wid: usize, shared: &ExecShared, task: WsTask, stack: &mut KStack) {
+    let job = Arc::clone(&task.job);
+    if job.is_cancelled() {
+        // Discard without running; the task's continuation (and any
+        // closures it holds) drops here, the arena sweep at completion
+        // reclaims the rest.
+        drop(task);
+        finish_one(shared, &job);
         return;
     }
-    finish_one(shared);
-}
-
-/// Decrement pending; on zero, signal completion.
-fn finish_one(shared: &Shared) {
-    if shared.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
-        shared.done.store(true, Ordering::SeqCst);
-        shared.idle_cv.notify_all();
+    job.counters.tasks_run.fetch_add(1, Ordering::Relaxed);
+    let retired_before = stack.retired();
+    let outcome = run_task(wid, shared, &job, task, stack);
+    job.counters.instrs.fetch_add(stack.retired() - retired_before, Ordering::Relaxed);
+    if let Err(e) = outcome {
+        // A cancelled task's dispatch-boundary bail is expected noise;
+        // anything else is the job's first real error.
+        if !job.is_cancelled() {
+            job.fail(e);
+        }
     }
+    finish_one(shared, &job);
 }
 
-/// Push a new runnable task onto this worker's own deque (pending already
-/// incremented by caller).
-fn push_task(wid: usize, shared: &Shared, task: WsTask) {
+/// Push a new runnable task (pending already incremented by caller).
+/// Within budget it lands on this worker's own deque; a job past its
+/// in-flight budget overflows into its round-robin injector lane so it
+/// cannot monopolize the pool.
+fn push_task(wid: usize, shared: &ExecShared, task: WsTask) {
+    if task.job.pending.load(Ordering::Relaxed) > shared.config.max_inflight_per_job as u64 {
+        shared.inject(task);
+        return;
+    }
     shared.deques[wid].push(task);
-    if shared.idle_workers.load(Ordering::Relaxed) > 0 {
-        shared.idle_cv.notify_one();
-    }
+    shared.notify_if_idle();
 }
 
-fn deliver(wid: usize, shared: &Shared, cont: Cont, value: Value) -> Result<()> {
+fn deliver(
+    wid: usize,
+    shared: &ExecShared,
+    job: &Arc<JobState>,
+    cont: Cont,
+    value: Value,
+) -> Result<()> {
     match cont {
         Cont::Root => {
-            let mut slot = shared.result.lock().unwrap();
+            let mut slot = job.result.lock().unwrap();
             if slot.is_some() {
                 bail!("root continuation received two results");
             }
@@ -204,59 +293,65 @@ fn deliver(wid: usize, shared: &Shared, cont: Cont, value: Value) -> Result<()> 
         Cont::Slot { clos, slot } => {
             clos.fill(slot, value);
             if clos.release() {
-                fire(wid, shared, &clos);
+                fire(wid, shared, job, &clos);
             }
         }
         Cont::Counter { clos } => {
             if clos.release() {
-                fire(wid, shared, &clos);
+                fire(wid, shared, job, &clos);
             }
         }
     }
     Ok(())
 }
 
-fn fire(wid: usize, shared: &Shared, clos: &Arc<SharedClosure>) {
+fn fire(wid: usize, shared: &ExecShared, job: &Arc<JobState>, clos: &Arc<SharedClosure>) {
     let handle = clos.handle.load(Ordering::Relaxed);
     if handle >= 0 {
-        shared.registry.remove(handle);
+        job.registry.remove(handle);
     }
-    let task = WsTask { task: clos.task, args: clos.take_args(), cont: clos.take_cont() };
-    shared.pending.fetch_add(1, Ordering::AcqRel);
+    let task = WsTask {
+        job: Arc::clone(job),
+        task: clos.task,
+        args: clos.take_args(),
+        cont: clos.take_cont(),
+    };
+    job.pending.fetch_add(1, Ordering::AcqRel);
     push_task(wid, shared, task);
 }
 
-/// The worker's [`Machine`]: closure registry + shared memory effects.
+/// The worker's [`Machine`]: per-job closure registry + shared memory
+/// effects, plus the cooperative-cancellation dispatch check.
 struct WsMachine<'a> {
     wid: usize,
-    shared: &'a Shared,
-    stats: &'a mut WsStats,
+    shared: &'a ExecShared,
+    job: &'a Arc<JobState>,
     cont: Cont,
 }
 
 fn run_task(
     wid: usize,
-    shared: &Shared,
+    shared: &ExecShared,
+    job: &Arc<JobState>,
     inst: WsTask,
-    stats: &mut WsStats,
     stack: &mut KStack,
 ) -> Result<()> {
-    let kernel = shared.kernels.kernel(inst.task);
+    let kernel = job.kernels.kernel(inst.task);
 
     if kernel.kind == FuncKind::Xla {
         // Shouldn't reach a deque (spawns route xla tasks to the batch
         // queue) — but a root xla task arrives here; run it as a batch of 1.
-        let out = shared
+        let out = job
             .xla_sink
-            .exec_batch(&kernel.name, &[inst.args.into_vec()], &shared.memory)?
+            .exec_batch(&kernel.name, &[inst.args.into_vec()], &job.memory)?
             .pop()
             .ok_or_else(|| anyhow!("empty xla result"))?;
-        return deliver(wid, shared, inst.cont, out);
+        return deliver(wid, shared, job, inst.cont, out);
     }
 
-    let mut machine = WsMachine { wid, shared, stats, cont: inst.cont };
+    let mut machine = WsMachine { wid, shared, job, cont: inst.cont };
     let value = run_kernel(
-        &shared.kernels,
+        &job.kernels,
         inst.task,
         inst.args.as_slice(),
         stack,
@@ -266,85 +361,99 @@ fn run_task(
     if kernel.kind == FuncKind::Leaf {
         // A spawned leaf: its sequential return value is the send.
         let cont = machine.cont;
-        return deliver(wid, shared, cont, value);
+        return deliver(wid, shared, job, cont, value);
     }
     Ok(())
 }
 
 impl<'a> Machine for WsMachine<'a> {
     fn load(&mut self, arr: GlobalId, index: i64) -> Result<Value> {
-        self.shared.memory.load(arr, index)
+        self.job.memory.load(arr, index)
     }
 
     fn store(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()> {
-        self.shared.memory.store(arr, index, value)
+        self.job.memory.store(arr, index, value)
     }
 
     fn atomic_add(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()> {
-        self.shared.memory.atomic_add(arr, index, value)
+        self.job.memory.atomic_add(arr, index, value)
+    }
+
+    fn on_dispatch(&mut self, _fid: FuncId, _depth: usize) -> Result<()> {
+        // The cooperative-cancellation boundary: one relaxed load per
+        // frame entry, so a cancelled job's running tasks unwind at the
+        // next dispatch instead of draining their whole subtree.
+        if self.job.is_cancelled() {
+            bail!("{} cancelled at dispatch boundary", self.job.id);
+        }
+        Ok(())
     }
 
     fn make_closure(&mut self, task: FuncId) -> Result<Value> {
-        self.stats.closures_made += 1;
-        let slot_tys = Arc::clone(&self.shared.kernels.kernel(task).param_tys);
+        self.job.counters.closures_made.fetch_add(1, Ordering::Relaxed);
+        let slot_tys = Arc::clone(&self.job.kernels.kernel(task).param_tys);
         let clos = Arc::new(SharedClosure::new(task, slot_tys, self.cont.clone()));
-        let handle = self.shared.registry.insert(clos.clone(), self.wid);
+        let handle = self.job.registry.insert(clos.clone(), self.wid);
         clos.handle.store(handle, Ordering::Relaxed);
         Ok(Value::I64(handle))
     }
 
     fn closure_store(&mut self, clos: Value, field: u32, value: Value) -> Result<()> {
-        self.shared.registry.get(clos.as_i64()).fill(field, value);
+        self.job.registry.get(clos.as_i64()).fill(field, value);
         Ok(())
     }
 
     fn spawn_child(&mut self, callee: FuncId, args: &[Value], ret: KontRef) -> Result<()> {
         let cont = match ret {
             KontRef::Slot { clos, field } => {
-                let c = self.shared.registry.get(clos.as_i64());
+                let c = self.job.registry.get(clos.as_i64());
                 c.hold();
                 Cont::Slot { clos: c, slot: field }
             }
             KontRef::Counter { clos } => {
-                let c = self.shared.registry.get(clos.as_i64());
+                let c = self.job.registry.get(clos.as_i64());
                 c.hold();
                 Cont::Counter { clos: c }
             }
             KontRef::Forward => self.cont.clone(),
         };
-        self.shared.pending.fetch_add(1, Ordering::AcqRel);
-        if self.shared.kernels.kernel(callee).kind == FuncKind::Xla {
+        self.job.pending.fetch_add(1, Ordering::AcqRel);
+        if self.job.kernels.kernel(callee).kind == FuncKind::Xla {
             // `args` is the spawner's kernel arg-staging slot slice: copy
             // it straight into the owned row the batch sink will consume
             // (no ArgList intermediary to convert at flush time). The row
             // is built before taking the queue lock so the allocation
             // never sits inside the shared critical section.
             let row = args.to_vec();
-            self.shared.xla_queue.lock().unwrap().push((callee, row, cont));
+            self.job.xla_queue.lock().unwrap().push((callee, row, cont));
+            self.shared.xla_pending.fetch_add(1, Ordering::SeqCst);
             // Same idle gate as push_task: pay the futex only when a
             // worker actually sleeps.
-            if self.shared.idle_workers.load(Ordering::Relaxed) > 0 {
-                self.shared.idle_cv.notify_one();
-            }
+            self.shared.notify_if_idle();
         } else {
             push_task(
                 self.wid,
                 self.shared,
-                WsTask { task: callee, args: ArgList::from_slice(args), cont },
+                WsTask {
+                    job: Arc::clone(self.job),
+                    task: callee,
+                    args: ArgList::from_slice(args),
+                    cont,
+                },
             );
         }
         Ok(())
     }
 
     fn close_spawns(&mut self, clos: Value) -> Result<()> {
-        let c = self.shared.registry.get(clos.as_i64());
+        let c = self.job.registry.get(clos.as_i64());
         if c.release() {
-            fire(self.wid, self.shared, &c);
+            fire(self.wid, self.shared, self.job, &c);
         }
         Ok(())
     }
 
     fn send_argument(&mut self, value: Value) -> Result<()> {
-        deliver(self.wid, self.shared, self.cont.clone(), value)
+        deliver(self.wid, self.shared, self.job, self.cont.clone(), value)
     }
 }

@@ -1,0 +1,192 @@
+//! Integration tests for the resident multi-job executor: interleaved
+//! mixed-corpus determinism, cooperative cancellation, fair admission,
+//! stats parity with the one-shot wrapper, and idle buffer reclamation.
+
+use std::time::Duration;
+
+use bombyx::coordinator::WsServeExperiment;
+use bombyx::ir::Value;
+use bombyx::lower::{CompileOptions, CompileSession};
+use bombyx::workloads::{bfs, fib, graphgen};
+use bombyx::ws::{self, Executor, ExecutorConfig, WsConfig};
+
+fn fib_session() -> CompileSession {
+    CompileSession::new("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap()
+}
+
+#[test]
+fn flood_32_jobs_matches_one_shot_across_worker_counts() {
+    let exp = WsServeExperiment::new().unwrap();
+    const JOBS: usize = 32;
+    // Reference images from sequential one-shot single-worker runs.
+    let mut reference = Vec::with_capacity(JOBS);
+    for i in 0..JOBS {
+        let (value, mem, _) = exp.one_shot(i, 1).unwrap();
+        reference.push((value, exp.memory_image(i, &mem)));
+    }
+    for workers in [1usize, 4] {
+        let config = ExecutorConfig {
+            ws: WsConfig { workers, steal_tries: 4 },
+            ..ExecutorConfig::default()
+        };
+        let executor = Executor::new(config).unwrap();
+        let handles: Vec<_> =
+            (0..JOBS).map(|i| executor.submit(exp.job(i).unwrap()).unwrap()).collect();
+        for (i, handle) in handles.into_iter().enumerate() {
+            let (value, mem, _) = handle.join().unwrap();
+            assert_eq!(value, reference[i].0, "job {i} root result, workers={workers}");
+            assert_eq!(
+                exp.memory_image(i, &mem),
+                reference[i].1,
+                "job {i} final memory, workers={workers}"
+            );
+        }
+        assert_eq!(executor.stats().jobs_completed, JOBS as u64);
+        assert_eq!(executor.stats().jobs_failed, 0);
+    }
+}
+
+#[test]
+fn cancel_sweeps_live_closures_to_zero() {
+    let session = fib_session();
+    let config = ExecutorConfig {
+        ws: WsConfig { workers: 2, steal_tries: 4 },
+        ..ExecutorConfig::default()
+    };
+    let executor = Executor::new(config).unwrap();
+    let handle = executor.submit(session.ws_job("fib", &[Value::I64(30)]).unwrap()).unwrap();
+    // Let the job build up a live working set before cancelling.
+    while handle.stats().tasks_run < 1_000 && !handle.is_finished() {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    handle.cancel();
+    handle.wait();
+    assert_eq!(handle.live_closures(), 0, "cancellation must sweep the job's closure arena");
+    let err = handle.join().unwrap_err();
+    assert!(err.to_string().contains("cancelled"), "{err}");
+    assert_eq!(executor.stats().jobs_cancelled, 1);
+}
+
+#[test]
+fn small_jobs_progress_alongside_a_flooding_job() {
+    // Fairness smoke: joins of the small jobs must terminate while a
+    // much larger resident job keeps the pool saturated (round-robin
+    // injector lanes + the periodic injector poll prevent starvation —
+    // without them this test hangs until the big job drains).
+    let session = fib_session();
+    let config = ExecutorConfig {
+        ws: WsConfig { workers: 2, steal_tries: 4 },
+        ..ExecutorConfig::default()
+    };
+    let executor = Executor::new(config).unwrap();
+    let big = executor.submit(session.ws_job("fib", &[Value::I64(30)]).unwrap()).unwrap();
+    let smalls: Vec<_> = (0..8)
+        .map(|_| executor.submit(session.ws_job("fib", &[Value::I64(10)]).unwrap()).unwrap())
+        .collect();
+    for handle in smalls {
+        let (v, _, _) = handle.join().unwrap();
+        assert_eq!(v.as_i64(), fib::fib_ref(10) as i64);
+    }
+    // Don't pay for the rest of fib(30).
+    big.cancel();
+    big.wait();
+    assert_eq!(big.live_closures(), 0);
+}
+
+#[test]
+fn executor_stats_match_one_shot_run_at_one_worker() {
+    // At one worker execution order is deterministic, so every per-job
+    // stat of a submitted job must equal the one-shot wrapper's.
+    let session = fib_session();
+    let cfg = WsConfig { workers: 1, steal_tries: 4 };
+    let (v_ref, _, s_ref) = ws::run_with_kernels(
+        session.explicit_kernels().unwrap(),
+        session.shared_memory(),
+        "fib",
+        &[Value::I64(18)],
+        &cfg,
+        Box::new(ws::NoXlaSink),
+    )
+    .unwrap();
+    let executor =
+        Executor::new(ExecutorConfig { ws: cfg, ..ExecutorConfig::default() }).unwrap();
+    let handle = executor.submit(session.ws_job("fib", &[Value::I64(18)]).unwrap()).unwrap();
+    let (v, _, s) = handle.join().unwrap();
+    assert_eq!(v.as_i64(), v_ref.as_i64());
+    assert_eq!(s.tasks_run, s_ref.tasks_run);
+    assert_eq!((s.steals, s_ref.steals), (0, 0));
+    assert_eq!(s.closures_made, s_ref.closures_made);
+    assert_eq!(s.max_live_closures, s_ref.max_live_closures);
+    assert_eq!(s.instrs, s_ref.instrs);
+    assert_eq!(s.xla_batches, s_ref.xla_batches);
+    assert_eq!(s.xla_tasks, s_ref.xla_tasks);
+}
+
+#[test]
+fn retired_deque_buffers_are_freed_once_idle() {
+    // A 200-wide root fan-out pushes 200 tasks into the 64-slot initial
+    // deque buffer before the single worker pops any of them, forcing
+    // growth (and buffer retirement); once the job joins and the
+    // executor is quiescent, the retired buffers must be freed rather
+    // than accrue until drop.
+    let session = CompileSession::new("bfs", bfs::BFS_SRC, &CompileOptions::no_dae()).unwrap();
+    let m = session.explicit();
+    let graph = graphgen::tree(200, 2);
+    let mut job = session.ws_job("visit", &[Value::I64(0)]).unwrap();
+    job.memory.fill_i64(m.global_by_name("adj_off").unwrap(), &graph.adj_off);
+    job.memory.fill_i64(m.global_by_name("adj_edges").unwrap(), &graph.adj_edges);
+    job.memory.resize(m.global_by_name("visited").unwrap(), graph.nodes());
+    let executor = Executor::new(ExecutorConfig {
+        ws: WsConfig { workers: 1, steal_tries: 4 },
+        ..ExecutorConfig::default()
+    })
+    .unwrap();
+    let handle = executor.submit(job).unwrap();
+    let (_, mem, stats) = handle.join().unwrap();
+    assert_eq!(mem.dump_i64(m.global_by_name("visited").unwrap()), vec![1; graph.nodes()]);
+    assert!(stats.tasks_run as usize >= graph.nodes());
+    assert_eq!(executor.retired_buffers(), 0, "idle reclamation must free outgrown buffers");
+}
+
+#[test]
+fn admission_limits_active_jobs_and_drains_the_queue() {
+    let exp = WsServeExperiment::new().unwrap();
+    let config = ExecutorConfig {
+        ws: WsConfig { workers: 2, steal_tries: 4 },
+        max_active_jobs: 1,
+        ..ExecutorConfig::default()
+    };
+    let executor = Executor::new(config).unwrap();
+    let n = 2 * exp.corpus_len();
+    let handles: Vec<_> = (0..n).map(|i| executor.submit(exp.job(i).unwrap()).unwrap()).collect();
+    for (i, handle) in handles.into_iter().enumerate() {
+        let (value, mem, _) = handle.join().unwrap();
+        exp.verify(i, &value, &mem).unwrap();
+    }
+    let stats = executor.stats();
+    assert_eq!(stats.jobs_submitted, n as u64);
+    assert_eq!(stats.jobs_completed, n as u64);
+    assert_eq!(stats.jobs_failed, 0);
+}
+
+#[test]
+fn cancel_while_queued_completes_without_running() {
+    let session = fib_session();
+    let config = ExecutorConfig {
+        ws: WsConfig { workers: 1, steal_tries: 4 },
+        max_active_jobs: 1,
+        ..ExecutorConfig::default()
+    };
+    let executor = Executor::new(config).unwrap();
+    let big = executor.submit(session.ws_job("fib", &[Value::I64(28)]).unwrap()).unwrap();
+    let queued = executor.submit(session.ws_job("fib", &[Value::I64(20)]).unwrap()).unwrap();
+    queued.cancel();
+    queued.wait();
+    assert_eq!(queued.live_closures(), 0);
+    assert_eq!(queued.stats().tasks_run, 0, "a job cancelled in the admission queue never runs");
+    let err = queued.join().unwrap_err();
+    assert!(err.to_string().contains("cancelled"), "{err}");
+    big.cancel();
+    big.wait();
+    assert!(executor.stats().jobs_cancelled >= 1);
+}
