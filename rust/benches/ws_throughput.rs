@@ -21,7 +21,9 @@
 //!    latency, every job verified against its reference.
 //!
 //! `BOMBYX_BENCH_SMOKE=1` switches to reduced iterations/sizes (the CI
-//! bench-smoke step).
+//! bench-smoke step) and arms the telemetry layer for the measured
+//! flood, emitting `TRACE_smoke.json` / `METRICS_smoke.json` — the
+//! observability artifacts CI schema-validates via `obs_tests`.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -471,8 +473,27 @@ fn main() {
     let flood_workers = 4usize;
     let (flood_jobs, flood_repeat) = if smoke { (10usize, 1usize) } else { (64, 3) };
     serve.flood(flood_workers, serve.corpus_len(), 1).unwrap(); // warmup
+    // Smoke mode doubles as the CI observability gate: the measured
+    // flood runs with the telemetry layer armed and its trace + metrics
+    // exports land next to BENCH_ws.json for schema validation
+    // (`obs_tests`, `BOMBYX_OBS_ARTIFACTS`).
+    if smoke {
+        bombyx::obs::set_trace(true);
+        bombyx::obs::set_metrics(true);
+    }
     let flood = serve.flood(flood_workers, flood_jobs, flood_repeat).unwrap();
     assert_eq!(flood.verified, flood.jobs, "every flooded job must verify");
+    if smoke {
+        let events = bombyx::obs::trace::drain();
+        let trace_doc = bombyx::obs::trace::export_json(&events);
+        std::fs::write("TRACE_smoke.json", trace_doc.pretty() + "\n")
+            .expect("write TRACE_smoke.json");
+        std::fs::write("METRICS_smoke.json", bombyx::obs::metrics::export_json().pretty() + "\n")
+            .expect("write METRICS_smoke.json");
+        bombyx::obs::set_trace(false);
+        bombyx::obs::set_metrics(false);
+        println!("wrote TRACE_smoke.json ({} events) + METRICS_smoke.json", events.len());
+    }
     println!(
         "multi-job: {} jobs on {} workers, {:.1} jobs/s, corpus [{}]",
         flood.jobs,

@@ -290,12 +290,17 @@ fn global_id(m: &crate::ir::cfg::Module, name: &str) -> Result<crate::ir::Global
     m.global_by_name(name).ok_or_else(|| anyhow!("no global `{name}`"))
 }
 
+/// Clamped nearest-rank latency percentile, routed through the one
+/// percentile implementation in the tree
+/// ([`crate::obs::metrics::Histogram`]). Empty input → zero; one sample
+/// → that sample at every quantile; output is always finite — the old
+/// `((len-1)·q).round()` index under-reported tail quantiles on small
+/// floods (p99 of 10 samples picked the 10th-rank element only by
+/// rounding luck).
 fn percentile(sorted: &[Duration], q: f64) -> Duration {
-    if sorted.is_empty() {
-        return Duration::ZERO;
-    }
-    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    let ms: Vec<f64> = sorted.iter().map(|d| d.as_secs_f64() * 1e3).collect();
+    let h = crate::obs::metrics::Histogram::from_samples(&ms);
+    Duration::from_secs_f64(h.percentile(q) / 1e3)
 }
 
 impl WsServeExperiment {
@@ -483,9 +488,17 @@ impl WsServeExperiment {
             }
         }
         let wall = start.elapsed();
+        executor.publish_metrics();
         let stats = executor.stats();
         drop(executor);
         latencies.sort();
+        for latency in &latencies {
+            crate::obs::metrics::observe_ms("ws.flood.latency_ms", *latency);
+        }
+        crate::obs::metrics::gauge_set(
+            "ws.flood.jobs_per_s",
+            (jobs * repeat) as f64 / wall.as_secs_f64().max(1e-9),
+        );
         let total = jobs * repeat;
         Ok(FloodReport {
             jobs: total,

@@ -1464,6 +1464,11 @@ fn exec_frame<M: Machine>(
     let table: &[Handler<M>; opcode::N] = &Handlers::<M>::TABLE;
     // Direct-threaded inner loop: fetch, charge, indirect-call the
     // pre-resolved handler. No opcode match on the retired path.
+    //
+    // RETIRED_FAST_PATH_BEGIN: no telemetry may appear between these
+    // markers — tracing/metrics/profiling hook the once-per-frame
+    // `on_dispatch` seam above, never the per-instruction loop. Pinned
+    // by `obs_tests::retired_fast_path_has_no_telemetry`.
     loop {
         let instr = &kernel.code[ctx.pc];
         ctx.pc += 1;
@@ -1476,6 +1481,7 @@ fn exec_frame<M: Machine>(
             Step::Return(v) => return Ok(v),
         }
     }
+    // RETIRED_FAST_PATH_END
 }
 
 #[cfg(test)]

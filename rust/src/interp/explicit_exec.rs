@@ -279,6 +279,16 @@ impl<'m, X: XlaHandler> ExplicitExec<'m, X> {
 }
 
 impl<'m, X: XlaHandler> Machine for ExplicitExec<'m, X> {
+    fn on_dispatch(&mut self, fid: FuncId, _depth: usize) -> Result<()> {
+        // Hotness profile: once per frame entry, one relaxed load when off.
+        if crate::obs::profile_enabled() {
+            if let Some(k) = &self.kernels {
+                crate::obs::profile::hit(&k.kernel(fid).name);
+            }
+        }
+        Ok(())
+    }
+
     fn load(&mut self, arr: GlobalId, index: i64) -> Result<Value> {
         self.memory.load(arr, index)
     }

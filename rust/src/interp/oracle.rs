@@ -103,12 +103,18 @@ impl<'m, X: XlaHandler> Oracle<'m, X> {
 }
 
 impl<'m, X: XlaHandler> Machine for Oracle<'m, X> {
-    fn on_dispatch(&mut self, _fid: FuncId, depth: usize) -> Result<()> {
+    fn on_dispatch(&mut self, fid: FuncId, depth: usize) -> Result<()> {
         self.stats.calls += 1;
         let d = depth as u64 + 1;
         self.stats.max_depth = self.stats.max_depth.max(d);
         if d > self.max_depth_limit {
             bail!("oracle recursion limit exceeded ({})", self.max_depth_limit);
+        }
+        // Hotness profile: once per frame entry, one relaxed load when off.
+        if crate::obs::profile_enabled() {
+            if let Some(k) = &self.kernels {
+                crate::obs::profile::hit(&k.kernel(fid).name);
+            }
         }
         Ok(())
     }

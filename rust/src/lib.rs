@@ -30,6 +30,7 @@ pub mod hls;
 pub mod interp;
 pub mod ir;
 pub mod lower;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -109,6 +109,12 @@ where
     } else {
         jobs.min(sources.len().max(1))
     };
+    let _span = crate::obs::Span::enter(
+        format!("compile_batch x{}", sources.len()),
+        "session",
+    );
+    crate::obs::metrics::counter_add("compile.batches", 1);
+    crate::obs::metrics::counter_add("compile.batch_sources", sources.len() as u64);
     let results = parallel::shard_map(sources, workers, |(name, src)| {
         CompileSession::new(name.as_ref(), src.as_ref(), opts)
     });

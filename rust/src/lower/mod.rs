@@ -61,6 +61,7 @@ use crate::interp::explicit_exec::ExplicitExec;
 use crate::interp::{Memory, NoXla};
 use crate::ir::expr::Value;
 use crate::ir::Module;
+use crate::obs;
 
 pub use batch::{compile_batch, BatchResult};
 pub use pass::{
@@ -196,6 +197,8 @@ pub struct CompileSession {
 impl CompileSession {
     /// Parse, check and lower `source` through the standard pass manager.
     pub fn new(name: &str, source: &str, opts: &CompileOptions) -> Result<CompileSession> {
+        let _span = obs::Span::enter(format!("compile {name}"), "session");
+        obs::metrics::counter_add("compile.sessions", 1);
         let (program, _src) = frontend::parse_and_check(name, source)?;
         let result = compile_ast(&program, opts)?;
         let incr = batch::build_incr_state(&program, &result);
@@ -270,6 +273,8 @@ impl CompileSession {
     /// [`CompileSession::new`] of the edited source (asserted by the
     /// integration tests via printed IR).
     pub fn recompile(&mut self, source: &str) -> Result<RecompileOutcome> {
+        let _span = obs::Span::enter(format!("recompile {}", self.name), "session");
+        obs::metrics::counter_add("compile.recompiles", 1);
         let (program, _src) = frontend::parse_and_check(&self.name, source)?;
         let Some(state) = self.incr.as_ref() else {
             // No fingerprints to diff against: full run.

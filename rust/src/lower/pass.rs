@@ -40,11 +40,12 @@
 //! whose AST actually changed.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use crate::frontend::ast::Program;
+use crate::obs;
 use crate::ir::verify::{verify_module, Stage};
 use crate::ir::{FuncId, Module};
 
@@ -575,9 +576,14 @@ impl PassManager {
                 Artifact::Module(m) => m.funcs.len(),
                 Artifact::Rtl(_) | Artifact::Kernels(_) => 0,
             };
-            let t0 = Instant::now();
+            // The pass span is the timing: `PassTiming.duration` is read
+            // back from the same `obs::Span` that emits the trace events,
+            // so `--timings` tables and Perfetto pass tracks agree.
+            let span = obs::Span::enter(pass.name(), "pass");
             artifact = pass.run(artifact, opts)?;
-            let duration = t0.elapsed();
+            let duration = span.finish();
+            obs::metrics::counter_add("compile.passes_run", 1);
+            obs::metrics::observe_ms(&format!("compile.pass.{}_ms", pass.name()), duration);
             stage = pass.output_stage();
             if self.verify {
                 verify_artifact(pass.name(), "post", &artifact, stage)?;
@@ -612,13 +618,16 @@ impl PassManager {
                 });
                 continue;
             }
-            let t0 = Instant::now();
+            let span = obs::Span::enter(pass.name(), "pass");
             for &f in funcs {
                 pass.run_on_function(ctx, f, opts)?;
             }
+            let duration = span.finish();
+            obs::metrics::counter_add("compile.passes_run", 1);
+            obs::metrics::observe_ms(&format!("compile.pass.{}_ms", pass.name()), duration);
             report.timings.push(PassTiming {
                 pass: pass.name(),
-                duration: t0.elapsed(),
+                duration,
                 ran: true,
                 funcs: funcs.len(),
             });

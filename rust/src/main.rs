@@ -9,7 +9,13 @@
 //! bombyx run      --engine ws --jobs N [--repeat K] [--workers N] [--stats]   # executor flood
 //! bombyx sim      <file.cilk> <entry> [args...] [--dae] [--pes N] [--mem-latency N]
 //! bombyx bfs      [--depth D] [--branch B] [--pes N]     # paper §III experiment
+//! bombyx trace    summarize <trace.json> [--top N]       # aggregate a --trace file
 //! ```
+//!
+//! `run`, `compile` and `compile-batch` additionally accept
+//! `--trace <file>` (Chrome trace-event / Perfetto JSON) and
+//! `--metrics-json <file>` (the `bombyx-metrics-v1` document) — see
+//! `src/obs/README.md`.
 //!
 //! (Argument parsing is hand-rolled: clap is not in the offline vendor
 //! set — see DESIGN.md §6.6.)
@@ -73,6 +79,145 @@ fn parse_flags(args: &[String], value_opts: &[&str]) -> Result<Flags> {
     Ok(flags)
 }
 
+/// Telemetry lifecycle for one command: arm the `obs` layer from
+/// `--trace <file>` / `--metrics-json <file>` (and the hotness profiler
+/// for `run --stats`), run the command body, then write the export
+/// files. Everything stays disabled — one relaxed load per
+/// instrumentation point — when neither flag is given.
+struct Telemetry {
+    trace_path: Option<String>,
+    metrics_path: Option<String>,
+}
+
+impl Telemetry {
+    fn arm(flags: &Flags, profile: bool) -> Telemetry {
+        let trace_path = flags.options.get("trace").cloned();
+        let metrics_path = flags.options.get("metrics-json").cloned();
+        bombyx::obs::set_trace(trace_path.is_some());
+        bombyx::obs::set_metrics(metrics_path.is_some());
+        bombyx::obs::set_profile(profile);
+        if trace_path.is_some() {
+            bombyx::obs::trace::set_thread_name("main");
+        }
+        Telemetry { trace_path, metrics_path }
+    }
+
+    /// Write the export files (call once, after the command's work).
+    fn finish(&self) -> Result<()> {
+        if let Some(path) = &self.trace_path {
+            let events = bombyx::obs::trace::drain();
+            let doc = bombyx::obs::trace::export_json(&events);
+            std::fs::write(path, doc.pretty()).with_context(|| format!("writing {path}"))?;
+            let dropped = bombyx::obs::trace::dropped();
+            if dropped > 0 {
+                eprintln!("warning: trace ring overflow, {dropped} event(s) dropped");
+            }
+            println!("wrote {} trace event(s) to {path}", events.len());
+        }
+        if let Some(path) = &self.metrics_path {
+            let doc = bombyx::obs::metrics::export_json();
+            std::fs::write(path, doc.pretty()).with_context(|| format!("writing {path}"))?;
+            println!("wrote metrics to {path}");
+        }
+        Ok(())
+    }
+}
+
+/// Print the sampled per-kernel hotness profile (`run --stats`):
+/// dispatch counts from [`bombyx::obs::profile`], weighted by each
+/// kernel's static cycle estimate under the default schedule model when
+/// a kernel program is at hand. Also published as `profile.*` counters
+/// when metrics are armed.
+fn print_profile(kernels: Option<&bombyx::exec::KernelProgram>, top: usize) {
+    let counts = bombyx::obs::profile::snapshot();
+    if counts.is_empty() {
+        return;
+    }
+    let model = bombyx::hls::ScheduleModel::default();
+    let mut rows: Vec<(String, u64, u64)> = counts
+        .into_iter()
+        .map(|(name, n)| {
+            let static_cycles: u64 = kernels
+                .and_then(|p| p.funcs.iter().find(|k| k.name == name))
+                .map(|k| k.costs.iter().map(|c| c.cycles(&model) as u64).sum())
+                .unwrap_or(0);
+            (name, n, n * static_cycles)
+        })
+        .collect();
+    rows.sort_by(|a, b| b.2.cmp(&a.2).then(b.1.cmp(&a.1)));
+    for (name, n, cyc) in &rows {
+        bombyx::obs::metrics::counter_set(&format!("profile.dispatches.{name}"), *n);
+        bombyx::obs::metrics::counter_set(&format!("profile.cycles.{name}"), *cyc);
+    }
+    println!("hotness profile (top {} of {} kernels, by est. cycles):", top.min(rows.len()), rows.len());
+    let mut table = Table::new(["kernel", "dispatches", "est. cycles"]);
+    for (name, n, cyc) in rows.iter().take(top) {
+        table.row([name.clone(), commas(*n), commas(*cyc)]);
+    }
+    print!("{}", table.render());
+}
+
+/// `bombyx trace summarize <file> [--top N]` — aggregate a trace written
+/// by `--trace`: hottest span names by total time, plus per-job latency
+/// breakdowns with lifecycle milestones.
+fn cmd_trace(args: &[String]) -> Result<()> {
+    if args.first().map(String::as_str) != Some("summarize") {
+        bail!("usage: bombyx trace summarize <trace.json> [--top N]");
+    }
+    let flags = parse_flags(&args[1..], &["top"])?;
+    let path = flags
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("expected a trace file (written by --trace)"))?;
+    let top = flags.options.get("top").map(|v| v.parse::<usize>()).transpose()?.unwrap_or(10);
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = bombyx::util::json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+    let summary =
+        bombyx::obs::trace::summarize(&doc).map_err(|e| anyhow!("summarizing {path}: {e}"))?;
+    if !summary.spans.is_empty() {
+        println!("hot spans (top {} of {}, by total time):", top.min(summary.spans.len()), summary.spans.len());
+        let mut table = Table::new(["span", "count", "total ms", "max ms"]);
+        for (name, count, total_ms, max_ms) in summary.spans.iter().take(top) {
+            table.row([
+                name.clone(),
+                commas(*count),
+                format!("{total_ms:.3}"),
+                format!("{max_ms:.3}"),
+            ]);
+        }
+        print!("{}", table.render());
+    }
+    if !summary.jobs.is_empty() {
+        let mut jobs = summary.jobs.clone();
+        jobs.sort_by(|a, b| b.2.total_cmp(&a.2));
+        println!("jobs (top {} of {}, by latency):", top.min(jobs.len()), jobs.len());
+        let mut table = Table::new(["job", "id", "latency ms", "milestones"]);
+        for (name, id, latency_ms, marks) in jobs.iter().take(top) {
+            table.row([
+                name.clone(),
+                id.to_string(),
+                format!("{latency_ms:.3}"),
+                marks.join(" -> "),
+            ]);
+        }
+        print!("{}", table.render());
+        let lat: Vec<f64> = jobs.iter().map(|j| j.2).collect();
+        let h = bombyx::obs::metrics::Histogram::from_samples(&lat);
+        println!(
+            "job latency: n {}  p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  max {:.3} ms",
+            h.count(),
+            h.percentile(0.50),
+            h.percentile(0.95),
+            h.percentile(0.99),
+            h.max()
+        );
+    }
+    if summary.unbalanced > 0 {
+        eprintln!("warning: {} unbalanced begin/end event(s)", summary.unbalanced);
+    }
+    Ok(())
+}
+
 fn run(args: Vec<String>) -> Result<()> {
     let Some(cmd) = args.first() else {
         print_usage();
@@ -88,6 +233,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "run" => cmd_run(rest),
         "sim" => cmd_sim(rest),
         "bfs" => cmd_bfs(rest),
+        "trace" => cmd_trace(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -108,9 +254,14 @@ fn print_usage() {
          bombyx run      <file.cilk> <entry> [int args...] [--engine oracle|explicit|ws|sim] [--dae|--no-dae] [--workers N] [--stats]\n  \
          bombyx run      --engine ws --jobs N [--repeat K] [--workers N] [--stats]   # flood the resident executor with mixed-corpus jobs\n  \
          bombyx sim      <file.cilk> <entry> [int args...] [--dae|--no-dae] [--pes N] [--mem-latency N]\n  \
-         bombyx bfs      [--depth D] [--branch B] [--pes N]\n\n\
+         bombyx bfs      [--depth D] [--branch B] [--pes N]\n  \
+         bombyx trace    summarize <trace.json> [--top N]\n\n\
          Sources containing `#pragma bombyx dae` compile with DAE enabled\n\
-         automatically; `--no-dae` forces the non-DAE baseline."
+         automatically; `--no-dae` forces the non-DAE baseline.\n\n\
+         Observability (run / compile / compile-batch):\n  \
+         --trace <file>          write a Chrome trace-event / Perfetto JSON trace\n  \
+         --metrics-json <file>   write the bombyx-metrics-v1 counters/gauges/histograms\n\
+         `run --stats` also samples a per-kernel hotness profile (top-N dispatches)."
     );
 }
 
@@ -136,7 +287,8 @@ fn load_session(flags: &Flags) -> Result<CompileSession> {
 }
 
 fn cmd_compile(args: &[String]) -> Result<()> {
-    let flags = parse_flags(args, &["dump", "target"])?;
+    let flags = parse_flags(args, &["dump", "target", "trace", "metrics-json"])?;
+    let telemetry = Telemetry::arm(&flags, false);
     let mut session = load_session(&flags)?;
     let target = flags.options.get("target").map(String::as_str);
     if !matches!(target, None | Some("explicit"))
@@ -153,7 +305,7 @@ fn cmd_compile(args: &[String]) -> Result<()> {
             if flags.switches.contains("timings") {
                 println!("{}", timing_table(session.timings()));
             }
-            return Ok(());
+            return telemetry.finish();
         }
         Some("hardcilk") => {
             let system = session.hardcilk_system("bombyx_system")?;
@@ -165,7 +317,7 @@ fn cmd_compile(args: &[String]) -> Result<()> {
             if flags.switches.contains("timings") {
                 println!("{}", timing_table(session.timings()));
             }
-            return Ok(());
+            return telemetry.finish();
         }
         Some(other) => {
             bail!("unknown --target `{other}` (expected `rtl`, `hardcilk` or `explicit`)")
@@ -179,7 +331,7 @@ fn cmd_compile(args: &[String]) -> Result<()> {
         println!("=== stage 1: implicit IR ===\n{}", print_module(&result.implicit));
         println!("=== stage 2: implicit IR after DAE ===\n{}", print_module(&result.implicit_dae));
         println!("=== stage 3: explicit IR ===\n{}", print_module(&result.explicit));
-        return Ok(());
+        return telemetry.finish();
     }
     match flags.options.get("dump").map(String::as_str) {
         Some("implicit") => print!("{}", print_module(&result.implicit_dae)),
@@ -192,7 +344,7 @@ fn cmd_compile(args: &[String]) -> Result<()> {
         }
         _ => print!("{}", print_module(&result.explicit)),
     }
-    Ok(())
+    telemetry.finish()
 }
 
 /// Compile many sources across a thread pool (`lower::compile_batch`).
@@ -201,7 +353,8 @@ fn cmd_compile(args: &[String]) -> Result<()> {
 /// errors are reported individually and the batch continues — the exit
 /// status reflects whether everything compiled.
 fn cmd_compile_batch(args: &[String]) -> Result<()> {
-    let flags = parse_flags(args, &["jobs"])?;
+    let flags = parse_flags(args, &["jobs", "trace", "metrics-json"])?;
+    let telemetry = Telemetry::arm(&flags, false);
     let jobs = flags
         .options
         .get("jobs")
@@ -290,9 +443,10 @@ fn cmd_compile_batch(args: &[String]) -> Result<()> {
     }
     let n_err = batch.errors().len() + read_errors.len();
     if n_err > 0 {
+        telemetry.finish()?;
         bail!("{n_err} of {} sources failed to compile", paths.len());
     }
-    Ok(())
+    telemetry.finish()
 }
 
 fn cmd_codegen(args: &[String]) -> Result<()> {
@@ -488,7 +642,8 @@ fn parse_task_args(flags: &Flags) -> Result<(String, Vec<Value>)> {
 /// `--jobs N` (ws engine only) no source file is read: the built-in
 /// mixed corpus floods the resident executor instead.
 fn cmd_run(args: &[String]) -> Result<()> {
-    let flags = parse_flags(args, &["workers", "engine", "jobs", "repeat"])?;
+    let flags =
+        parse_flags(args, &["workers", "engine", "jobs", "repeat", "trace", "metrics-json"])?;
     let engine = flags
         .options
         .get("engine")
@@ -496,6 +651,9 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .unwrap_or("ws")
         .to_string();
     let want_stats = flags.switches.contains("stats");
+    // The hotness profiler rides on --stats (sampled at frame entry via
+    // `Machine::on_dispatch` — never the retired fast path).
+    let telemetry = Telemetry::arm(&flags, want_stats);
     if flags.options.contains_key("jobs") || flags.options.contains_key("repeat") {
         if engine != "ws" {
             bail!("--jobs/--repeat need the resident executor (use --engine ws)");
@@ -518,7 +676,11 @@ fn cmd_run(args: &[String]) -> Result<()> {
         }
         let workers =
             flags.options.get("workers").map(|w| w.parse::<usize>()).transpose()?.unwrap_or(4);
-        return run_flood(workers, jobs, repeat, want_stats);
+        run_flood(workers, jobs, repeat, want_stats)?;
+        if want_stats {
+            print_profile(None, 10);
+        }
+        return telemetry.finish();
     }
     let mut session = load_session(&flags)?;
     let (entry, task_args) = parse_task_args(&flags)?;
@@ -654,8 +816,9 @@ fn cmd_run(args: &[String]) -> Result<()> {
             if bombyx::exec::fuse_enabled() { "" } else { "  [BOMBYX_KERNEL_FUSE=0]" }
         );
         print_role_fusion(&kernels);
+        print_profile(Some(kernels.as_ref()), 10);
     }
-    Ok(())
+    telemetry.finish()
 }
 
 fn cmd_sim(args: &[String]) -> Result<()> {

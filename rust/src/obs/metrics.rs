@@ -1,0 +1,373 @@
+//! Metrics registry: named counters, gauges, and log2-bucketed
+//! histograms with a stable JSON schema (`bombyx-metrics-v1`).
+//!
+//! The registry is the machine-readable export layer over the runtime's
+//! hand-rolled aggregates: the WS executor's lifetime totals, the flood
+//! latency percentiles, sim queue/PE gauges and the kernel hotness
+//! profile all publish here, and `--metrics-json <file>` serializes the
+//! lot. Recording through the free functions is a no-op unless
+//! [`crate::obs::metrics_enabled`] — call sites pay one relaxed load.
+//!
+//! [`Histogram`] is also usable standalone (no global state): it is the
+//! one percentile implementation in the tree, with clamped nearest-rank
+//! math that is exact up to a bounded reservoir and never emits NaN/Inf
+//! (empty histogram → 0.0 everywhere).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Version tag stamped into every metrics export.
+pub const SCHEMA: &str = "bombyx-metrics-v1";
+
+/// Exact-percentile reservoir: histograms keep the first `RESERVOIR`
+/// raw samples; past that, percentiles fall back to log2-bucket upper
+/// bounds (clamped to the observed min/max).
+const RESERVOIR: usize = 4096;
+
+const BUCKETS: usize = 64;
+
+/// log2-bucketed histogram over non-negative finite samples.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    buckets: [u64; BUCKETS],
+    samples: Vec<f64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// Bucket 0 holds `v < 1`; bucket `b >= 1` holds `2^(b-1) <= v < 2^b`.
+fn bucket_of(v: f64) -> usize {
+    if v < 1.0 {
+        return 0;
+    }
+    let b = 64 - (v as u64).leading_zeros() as usize;
+    b.min(BUCKETS - 1)
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            count: 0,
+            sum: 0.0,
+            min: 0.0,
+            max: 0.0,
+            buckets: [0; BUCKETS],
+            samples: Vec::new(),
+        }
+    }
+
+    /// Build from a sample slice (the bench/flood percentile path).
+    pub fn from_samples(samples: &[f64]) -> Histogram {
+        let mut h = Histogram::new();
+        for &v in samples {
+            h.record(v);
+        }
+        h
+    }
+
+    /// Record one sample. Non-finite and negative values are dropped —
+    /// the histogram's exports are guaranteed finite.
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+        self.buckets[bucket_of(v)] += 1;
+        if self.samples.len() < RESERVOIR {
+            self.samples.push(v);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Arithmetic mean; 0.0 on an empty histogram.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Clamped nearest-rank percentile: `rank = ceil(q·n)` clamped to
+    /// `[1, n]`, so q=0.99 of a single sample returns that sample and an
+    /// empty histogram returns 0.0 — never an out-of-range index, never
+    /// NaN. Exact while the reservoir holds every sample; bucket upper
+    /// bounds (clamped to [min, max]) past that.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        if self.samples.len() as u64 == self.count {
+            let mut sorted = self.samples.clone();
+            sorted.sort_by(f64::total_cmp);
+            return sorted[(rank - 1) as usize];
+        }
+        let mut seen = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let hi = if b == 0 { 1.0 } else { (1u128 << b) as f64 };
+                return hi.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Stable JSON shape (all values finite):
+    /// `{count, sum, min, max, mean, p50, p95, p99}`.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("count", self.count as i64)
+            .set("sum", self.sum)
+            .set("min", self.min)
+            .set("max", self.max)
+            .set("mean", self.mean())
+            .set("p50", self.percentile(0.50))
+            .set("p95", self.percentile(0.95))
+            .set("p99", self.percentile(0.99));
+        o
+    }
+}
+
+/// Named counters, gauges, and histograms. Usable standalone; the
+/// process-wide instance behind the free functions is what
+/// `--metrics-json` exports.
+#[derive(Debug)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub const fn new() -> Registry {
+        Registry {
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            histograms: BTreeMap::new(),
+        }
+    }
+
+    pub fn counter_add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    pub fn counter_set(&mut self, name: &str, value: u64) {
+        self.counters.insert(name.to_string(), value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a gauge; non-finite values are dropped.
+    pub fn gauge_set(&mut self, name: &str, value: f64) {
+        if value.is_finite() {
+            self.gauges.insert(name.to_string(), value);
+        }
+    }
+
+    pub fn observe(&mut self, name: &str, value: f64) {
+        self.histograms.entry(name.to_string()).or_default().record(value);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn clear(&mut self) {
+        self.counters.clear();
+        self.gauges.clear();
+        self.histograms.clear();
+    }
+
+    /// The `bombyx-metrics-v1` document:
+    /// `{schema, counters: {name: int}, gauges: {name: float},
+    ///   histograms: {name: {count, sum, min, max, mean, p50, p95, p99}}}`.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::object();
+        for (k, v) in &self.counters {
+            counters.set(k, *v as i64);
+        }
+        let mut gauges = Json::object();
+        for (k, v) in &self.gauges {
+            gauges.set(k, *v);
+        }
+        let mut histograms = Json::object();
+        for (k, h) in &self.histograms {
+            histograms.set(k, h.to_json());
+        }
+        let mut doc = Json::object();
+        doc.set("schema", SCHEMA)
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", histograms);
+        doc
+    }
+}
+
+static GLOBAL: Mutex<Registry> = Mutex::new(Registry::new());
+
+/// Add to a process-wide counter (no-op when metrics are disabled).
+pub fn counter_add(name: &str, delta: u64) {
+    if !crate::obs::metrics_enabled() {
+        return;
+    }
+    GLOBAL.lock().unwrap().counter_add(name, delta);
+}
+
+/// Overwrite a process-wide counter (no-op when metrics are disabled).
+pub fn counter_set(name: &str, value: u64) {
+    if !crate::obs::metrics_enabled() {
+        return;
+    }
+    GLOBAL.lock().unwrap().counter_set(name, value);
+}
+
+/// Set a process-wide gauge (no-op when metrics are disabled).
+pub fn gauge_set(name: &str, value: f64) {
+    if !crate::obs::metrics_enabled() {
+        return;
+    }
+    GLOBAL.lock().unwrap().gauge_set(name, value);
+}
+
+/// Record into a process-wide histogram (no-op when disabled).
+pub fn observe(name: &str, value: f64) {
+    if !crate::obs::metrics_enabled() {
+        return;
+    }
+    GLOBAL.lock().unwrap().observe(name, value);
+}
+
+/// Record a duration in milliseconds.
+pub fn observe_ms(name: &str, d: Duration) {
+    observe(name, d.as_secs_f64() * 1e3);
+}
+
+/// Export the process-wide registry (the `--metrics-json` document).
+pub fn export_json() -> Json {
+    GLOBAL.lock().unwrap().to_json()
+}
+
+/// Read one process-wide counter (tests).
+pub fn counter(name: &str) -> u64 {
+    GLOBAL.lock().unwrap().counter(name)
+}
+
+/// Clear the process-wide registry (test isolation).
+pub fn reset() {
+    GLOBAL.lock().unwrap().clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_all_zero_and_finite() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(0.50), 0.0);
+        assert_eq!(h.percentile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        let doc = h.to_json();
+        let text = doc.pretty();
+        assert!(crate::util::json::parse(&text).is_ok(), "finite JSON: {text}");
+    }
+
+    #[test]
+    fn single_sample_percentiles_clamp_to_it() {
+        let h = Histogram::from_samples(&[7.5]);
+        assert_eq!(h.percentile(0.0), 7.5);
+        assert_eq!(h.percentile(0.50), 7.5);
+        assert_eq!(h.percentile(0.99), 7.5);
+        assert_eq!(h.percentile(1.0), 7.5);
+    }
+
+    #[test]
+    fn nearest_rank_matches_definition() {
+        // n=4: p50 → rank ceil(2)=2 → 2nd smallest; p99 → rank 4 → max.
+        let h = Histogram::from_samples(&[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(h.percentile(0.50), 2.0);
+        assert_eq!(h.percentile(0.75), 3.0);
+        assert_eq!(h.percentile(0.99), 4.0);
+    }
+
+    #[test]
+    fn non_finite_samples_are_dropped() {
+        let h = Histogram::from_samples(&[f64::NAN, f64::INFINITY, -1.0, 2.0]);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(0.50), 2.0);
+    }
+
+    #[test]
+    fn bucket_fallback_stays_in_range() {
+        let mut h = Histogram::new();
+        for i in 0..(RESERVOIR + 100) {
+            h.record((i % 1000) as f64);
+        }
+        let p99 = h.percentile(0.99);
+        assert!(p99.is_finite());
+        assert!(p99 >= h.min() && p99 <= h.max());
+    }
+
+    #[test]
+    fn registry_schema_shape() {
+        let mut r = Registry::new();
+        r.counter_add("a.b", 2);
+        r.gauge_set("g", 1.5);
+        r.gauge_set("bad", f64::NAN);
+        r.observe("h", 3.0);
+        let doc = r.to_json();
+        assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some(SCHEMA));
+        assert_eq!(
+            doc.get("counters").and_then(|c| c.get("a.b")).and_then(|v| v.as_i64()),
+            Some(2)
+        );
+        assert!(doc.get("gauges").and_then(|g| g.get("bad")).is_none());
+        let text = doc.pretty();
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+}

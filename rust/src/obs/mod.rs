@@ -1,0 +1,116 @@
+//! Unified telemetry: structured span tracing, a metrics registry, and a
+//! per-kernel hotness profile — dependency-free (serialized through
+//! [`crate::util::json`]), shared by the compiler pipeline and all four
+//! execution engines.
+//!
+//! Three independently-switchable facilities, all **off by default** and
+//! free when off (every recording entry point is gated on one relaxed
+//! atomic load; see `rust/src/obs/README.md` for the overhead contract):
+//!
+//! - [`trace`]: per-thread lock-free event rings drained into a Chrome
+//!   trace-event / Perfetto-compatible JSON file (`--trace <file>`);
+//! - [`metrics`]: named counters, gauges and log2-bucketed histograms
+//!   with the stable `bombyx-metrics-v1` schema (`--metrics-json <file>`);
+//! - [`profile`]: retired-dispatch counts per kernel, hooked through
+//!   `Machine::on_dispatch` — never inside the retired dispatch loop
+//!   (grep-pinned by `obs_tests`).
+
+pub mod metrics;
+pub mod profile;
+pub mod trace;
+
+use std::borrow::Cow;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static METRICS_ON: AtomicBool = AtomicBool::new(false);
+static PROFILE_ON: AtomicBool = AtomicBool::new(false);
+
+/// Is span tracing on? One relaxed load — safe on warm paths.
+#[inline(always)]
+pub fn trace_enabled() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Is the metrics registry recording? One relaxed load.
+#[inline(always)]
+pub fn metrics_enabled() -> bool {
+    METRICS_ON.load(Ordering::Relaxed)
+}
+
+/// Is the kernel hotness profile recording? One relaxed load.
+#[inline(always)]
+pub fn profile_enabled() -> bool {
+    PROFILE_ON.load(Ordering::Relaxed)
+}
+
+/// Switch span tracing; enabling pins the trace epoch.
+pub fn set_trace(on: bool) {
+    if on {
+        trace::init_epoch();
+    }
+    TRACE_ON.store(on, Ordering::SeqCst);
+}
+
+/// Switch the metrics registry.
+pub fn set_metrics(on: bool) {
+    METRICS_ON.store(on, Ordering::SeqCst);
+}
+
+/// Switch the per-kernel hotness profile.
+pub fn set_profile(on: bool) {
+    PROFILE_ON.store(on, Ordering::SeqCst);
+}
+
+/// Disable everything and drop all recorded state (test isolation).
+pub fn reset_all() {
+    set_trace(false);
+    set_metrics(false);
+    set_profile(false);
+    trace::reset();
+    metrics::reset();
+    profile::reset();
+}
+
+/// RAII duration span. Always captures its start [`Instant`] — so callers
+/// that need the wall-clock (e.g. `PassTiming`) read it from the span and
+/// the timing is *the same data* the trace records — but emits `B`/`E`
+/// events only while tracing is enabled.
+pub struct Span {
+    name: Cow<'static, str>,
+    cat: &'static str,
+    start: Instant,
+    emitted: bool,
+}
+
+impl Span {
+    pub fn enter(name: impl Into<Cow<'static, str>>, cat: &'static str) -> Span {
+        let name = name.into();
+        let emitted = trace_enabled();
+        if emitted {
+            trace::begin(name.clone(), cat);
+        }
+        Span { name, cat, start: Instant::now(), emitted }
+    }
+
+    /// Close the span and return its wall-clock duration.
+    pub fn finish(mut self) -> Duration {
+        let elapsed = self.start.elapsed();
+        self.close();
+        elapsed
+    }
+
+    fn close(&mut self) {
+        if self.emitted {
+            trace::end(self.name.clone(), self.cat);
+            self.emitted = false;
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        self.close();
+    }
+}

@@ -1,0 +1,71 @@
+//! Sampled per-kernel hotness profile: retired dispatch counts attributed
+//! per function name, recorded through the `Machine::on_dispatch` seam of
+//! all four engines.
+//!
+//! A dispatch hit is one thread-local hash-map bump (no locks, no
+//! allocation after a kernel's first hit on that thread); per-thread
+//! counts fold into the process-wide totals when a thread exits or when
+//! [`snapshot`] runs on it. Worker threads must be joined (the WS
+//! executor dropped) before a snapshot is complete.
+//!
+//! When profiling is disabled the engines skip the hit entirely behind
+//! one relaxed load ([`crate::obs::profile_enabled`]) — and the kernel
+//! core's retired dispatch loop never calls in here at all (that path is
+//! grep-pinned by `obs_tests::retired_fast_path_has_no_telemetry`).
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+static TOTALS: Mutex<BTreeMap<String, u64>> = Mutex::new(BTreeMap::new());
+
+struct LocalCounts {
+    counts: HashMap<String, u64>,
+}
+
+impl Drop for LocalCounts {
+    fn drop(&mut self) {
+        fold(&mut self.counts);
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalCounts> =
+        RefCell::new(LocalCounts { counts: HashMap::new() });
+}
+
+fn fold(counts: &mut HashMap<String, u64>) {
+    if counts.is_empty() {
+        return;
+    }
+    let mut totals = TOTALS.lock().unwrap();
+    for (name, n) in counts.drain() {
+        *totals.entry(name).or_insert(0) += n;
+    }
+}
+
+/// Record one retired dispatch of `name` on the calling thread.
+#[inline]
+pub fn hit(name: &str) {
+    LOCAL.with(|l| {
+        let mut local = l.borrow_mut();
+        if let Some(c) = local.counts.get_mut(name) {
+            *c += 1;
+        } else {
+            local.counts.insert(name.to_string(), 1);
+        }
+    });
+}
+
+/// Fold the calling thread's counts and clone the process totals.
+pub fn snapshot() -> BTreeMap<String, u64> {
+    LOCAL.with(|l| fold(&mut l.borrow_mut().counts));
+    TOTALS.lock().unwrap().clone()
+}
+
+/// Drop all counts (test isolation; other live threads' local counts are
+/// not reachable — join workers first).
+pub fn reset() {
+    LOCAL.with(|l| l.borrow_mut().counts.clear());
+    TOTALS.lock().unwrap().clear();
+}

@@ -1,0 +1,382 @@
+//! Span tracing: per-thread bounded event buffers drained into a Chrome
+//! trace-event / Perfetto-compatible JSON document.
+//!
+//! Recording is lock-free on the hot path: each thread appends into a
+//! thread-local `Vec` (the ring) and only takes the global sink lock when
+//! the ring fills or the thread exits (a `Drop` guard on the thread-local
+//! flushes the tail). Timestamps are nanoseconds since a process-wide
+//! epoch pinned when tracing is first enabled.
+//!
+//! Event phases follow the Chrome trace-event format:
+//! `B`/`E` duration spans and `i` instants on the recording thread's tid,
+//! `b`/`n`/`e` async spans keyed by `id` for lifecycles that migrate
+//! across threads (job submit→complete), and `M` metadata (thread names).
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Per-thread ring capacity: a full ring is flushed to the sink in one
+/// lock acquisition, so the lock rate is 1/RING_CAP of the event rate.
+const RING_CAP: usize = 4096;
+
+/// Global backstop: events past this cap are counted in [`dropped`]
+/// instead of buffered, so a runaway trace cannot exhaust memory.
+const MAX_EVENTS: usize = 1 << 20;
+
+/// One trace event. `ph` is the Chrome trace-event phase character.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub ph: &'static str,
+    pub name: Cow<'static, str>,
+    pub cat: &'static str,
+    /// Nanoseconds since the trace epoch.
+    pub ts_ns: u64,
+    /// Recording thread, assigned in first-touch order (1 = first thread
+    /// that recorded).
+    pub tid: u32,
+    /// Async-span correlation id (`b`/`n`/`e` phases only).
+    pub id: Option<u64>,
+    pub args: Vec<(&'static str, ArgVal)>,
+}
+
+/// Small typed argument payload attached to an event.
+#[derive(Clone, Debug)]
+pub enum ArgVal {
+    I64(i64),
+    F64(f64),
+    Str(String),
+}
+
+impl From<&ArgVal> for Json {
+    fn from(v: &ArgVal) -> Json {
+        match v {
+            ArgVal::I64(x) => Json::Int(*x),
+            ArgVal::F64(x) => Json::Float(*x),
+            ArgVal::Str(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static SINK: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_ASYNC_ID: AtomicU64 = AtomicU64::new(1);
+
+struct LocalRing {
+    tid: u32,
+    events: Vec<Event>,
+}
+
+impl LocalRing {
+    fn new() -> LocalRing {
+        LocalRing {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed) as u32,
+            events: Vec::new(),
+        }
+    }
+}
+
+impl Drop for LocalRing {
+    fn drop(&mut self) {
+        // Thread exit: flush the tail so worker events survive the join.
+        flush_into_sink(&mut self.events);
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalRing> = RefCell::new(LocalRing::new());
+}
+
+fn flush_into_sink(events: &mut Vec<Event>) {
+    if events.is_empty() {
+        return;
+    }
+    let mut sink = SINK.lock().unwrap();
+    let room = MAX_EVENTS.saturating_sub(sink.len());
+    if events.len() > room {
+        DROPPED.fetch_add((events.len() - room) as u64, Ordering::Relaxed);
+        events.truncate(room);
+    }
+    sink.append(events);
+}
+
+/// Pin the trace epoch (idempotent). Called by [`crate::obs::set_trace`].
+pub fn init_epoch() {
+    EPOCH.get_or_init(Instant::now);
+}
+
+/// Nanoseconds since the trace epoch.
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// A fresh process-unique id for an async (`b`/`n`/`e`) span.
+pub fn next_async_id() -> u64 {
+    NEXT_ASYNC_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Events discarded by the [`MAX_EVENTS`] backstop.
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Append one event to the calling thread's ring (stamping its tid),
+/// flushing to the global sink when the ring fills.
+pub fn record(mut ev: Event) {
+    LOCAL.with(|l| {
+        let mut ring = l.borrow_mut();
+        ev.tid = ring.tid;
+        ring.events.push(ev);
+        if ring.events.len() >= RING_CAP {
+            flush_into_sink(&mut ring.events);
+        }
+    });
+}
+
+fn event(ph: &'static str, name: Cow<'static, str>, cat: &'static str) -> Event {
+    Event { ph, name, cat, ts_ns: now_ns(), tid: 0, id: None, args: Vec::new() }
+}
+
+/// Open a duration span (`B`). Prefer [`crate::obs::Span`], which pairs
+/// the close automatically.
+pub fn begin(name: impl Into<Cow<'static, str>>, cat: &'static str) {
+    if !crate::obs::trace_enabled() {
+        return;
+    }
+    record(event("B", name.into(), cat));
+}
+
+/// Open a duration span (`B`) carrying a typed-arg payload.
+pub fn begin_args(
+    name: impl Into<Cow<'static, str>>,
+    cat: &'static str,
+    args: Vec<(&'static str, ArgVal)>,
+) {
+    if !crate::obs::trace_enabled() {
+        return;
+    }
+    let mut ev = event("B", name.into(), cat);
+    ev.args = args;
+    record(ev);
+}
+
+/// Close the innermost duration span with this name (`E`).
+pub fn end(name: impl Into<Cow<'static, str>>, cat: &'static str) {
+    if !crate::obs::trace_enabled() {
+        return;
+    }
+    record(event("E", name.into(), cat));
+}
+
+/// A zero-duration instant (`i`) on the calling thread.
+pub fn instant(
+    name: impl Into<Cow<'static, str>>,
+    cat: &'static str,
+    args: Vec<(&'static str, ArgVal)>,
+) {
+    if !crate::obs::trace_enabled() {
+        return;
+    }
+    let mut ev = event("i", name.into(), cat);
+    ev.args = args;
+    record(ev);
+}
+
+fn async_event(
+    ph: &'static str,
+    name: impl Into<Cow<'static, str>>,
+    cat: &'static str,
+    id: u64,
+    args: Vec<(&'static str, ArgVal)>,
+) {
+    if !crate::obs::trace_enabled() {
+        return;
+    }
+    let mut ev = event(ph, name.into(), cat);
+    ev.id = Some(id);
+    ev.args = args;
+    record(ev);
+}
+
+/// Open an async span (`b`): a lifecycle that may end on another thread.
+pub fn async_begin(
+    name: impl Into<Cow<'static, str>>,
+    cat: &'static str,
+    id: u64,
+    args: Vec<(&'static str, ArgVal)>,
+) {
+    async_event("b", name, cat, id, args);
+}
+
+/// A milestone (`n`) inside an async span.
+pub fn async_instant(
+    name: impl Into<Cow<'static, str>>,
+    cat: &'static str,
+    id: u64,
+    args: Vec<(&'static str, ArgVal)>,
+) {
+    async_event("n", name, cat, id, args);
+}
+
+/// Close an async span (`e`).
+pub fn async_end(
+    name: impl Into<Cow<'static, str>>,
+    cat: &'static str,
+    id: u64,
+    args: Vec<(&'static str, ArgVal)>,
+) {
+    async_event("e", name, cat, id, args);
+}
+
+/// Record the calling thread's display name (an `M` metadata event).
+pub fn set_thread_name(name: &str) {
+    if !crate::obs::trace_enabled() {
+        return;
+    }
+    let mut ev = event("M", Cow::Borrowed("thread_name"), "__metadata");
+    ev.args = vec![("name", ArgVal::Str(name.to_string()))];
+    record(ev);
+}
+
+/// Flush the calling thread's ring into the global sink.
+pub fn flush_thread() {
+    LOCAL.with(|l| flush_into_sink(&mut l.borrow_mut().events));
+}
+
+/// Flush the calling thread and take every buffered event, sorted by
+/// timestamp (stable, so per-thread order is preserved). Worker threads
+/// must be joined first — their tails flush via the thread-exit guard.
+pub fn drain() -> Vec<Event> {
+    flush_thread();
+    let mut events = std::mem::take(&mut *SINK.lock().unwrap());
+    events.sort_by_key(|e| e.ts_ns);
+    events
+}
+
+/// Drop all buffered events and the drop counter (test isolation; the
+/// epoch and tid counters are process-lifetime and stay).
+pub fn reset() {
+    LOCAL.with(|l| l.borrow_mut().events.clear());
+    SINK.lock().unwrap().clear();
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+/// Serialize events as a Chrome trace-event document:
+/// `{"traceEvents": [...], "displayTimeUnit": "ms"}` with `ts` in
+/// microseconds — directly loadable in Perfetto / `chrome://tracing`.
+pub fn export_json(events: &[Event]) -> Json {
+    let rows: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let mut row = Json::object();
+            row.set("name", e.name.as_ref())
+                .set("cat", e.cat)
+                .set("ph", e.ph)
+                .set("ts", e.ts_ns as f64 / 1000.0)
+                .set("pid", 1i64)
+                .set("tid", e.tid as i64);
+            if let Some(id) = e.id {
+                row.set("id", id as i64);
+            }
+            if !e.args.is_empty() {
+                let mut args = Json::object();
+                for (k, v) in &e.args {
+                    args.set(k, Json::from(v));
+                }
+                row.set("args", args);
+            }
+            row
+        })
+        .collect();
+    let mut doc = Json::object();
+    doc.set("traceEvents", Json::Array(rows)).set("displayTimeUnit", "ms");
+    doc
+}
+
+/// Drain and export in one step (the `--trace <file>` path).
+pub fn export_current() -> Json {
+    let events = drain();
+    export_json(&events)
+}
+
+/// Aggregates computed from a trace document by `bombyx trace summarize`.
+#[derive(Debug, Default)]
+pub struct TraceSummary {
+    /// Per span name: (count, total_ms, max_ms), hottest first.
+    pub spans: Vec<(String, u64, f64, f64)>,
+    /// Per async job span: (name, id, latency_ms, milestones in order).
+    pub jobs: Vec<(String, i64, f64, Vec<String>)>,
+    /// `B` events with no matching `E` (or vice versa) — 0 on a clean
+    /// trace.
+    pub unbalanced: u64,
+}
+
+/// Fold a parsed Chrome trace-event document into per-span and per-job
+/// aggregates. Duration spans are matched `B`/`E` per tid (LIFO); async
+/// spans are matched `b`/`e` per id.
+pub fn summarize(doc: &Json) -> Result<TraceSummary, String> {
+    use std::collections::BTreeMap;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_array())
+        .ok_or("missing traceEvents array")?;
+    // (tid -> stack of (name, ts)); span name -> (count, total, max).
+    let mut stacks: BTreeMap<i64, Vec<(String, f64)>> = BTreeMap::new();
+    let mut spans: BTreeMap<String, (u64, f64, f64)> = BTreeMap::new();
+    // async id -> (name, begin ts, milestones).
+    let mut open_jobs: BTreeMap<i64, (String, f64, Vec<String>)> = BTreeMap::new();
+    let mut jobs = Vec::new();
+    let mut unbalanced = 0u64;
+    for ev in events {
+        let ph = ev.get("ph").and_then(|v| v.as_str()).ok_or("event missing ph")?;
+        let name =
+            ev.get("name").and_then(|v| v.as_str()).ok_or("event missing name")?.to_string();
+        let ts = match ev.get("ts") {
+            Some(Json::Float(v)) => *v,
+            Some(Json::Int(v)) => *v as f64,
+            _ => return Err(format!("event `{name}` missing numeric ts")),
+        };
+        let tid = ev.get("tid").and_then(|v| v.as_i64()).unwrap_or(0);
+        let id = ev.get("id").and_then(|v| v.as_i64()).unwrap_or(0);
+        match ph {
+            "B" => stacks.entry(tid).or_default().push((name, ts)),
+            "E" => match stacks.entry(tid).or_default().pop() {
+                Some((open, t0)) if open == name => {
+                    let ms = (ts - t0) / 1000.0;
+                    let e = spans.entry(open).or_insert((0, 0.0, 0.0));
+                    e.0 += 1;
+                    e.1 += ms;
+                    e.2 = e.2.max(ms);
+                }
+                _ => unbalanced += 1,
+            },
+            "b" => {
+                open_jobs.insert(id, (name, ts, Vec::new()));
+            }
+            "n" => {
+                if let Some(j) = open_jobs.get_mut(&id) {
+                    j.2.push(name);
+                }
+            }
+            "e" => match open_jobs.remove(&id) {
+                Some((jname, t0, marks)) => {
+                    jobs.push((jname, id, (ts - t0) / 1000.0, marks));
+                }
+                None => unbalanced += 1,
+            },
+            _ => {}
+        }
+    }
+    unbalanced += stacks.values().map(|s| s.len() as u64).sum::<u64>();
+    unbalanced += open_jobs.len() as u64;
+    let mut spans: Vec<(String, u64, f64, f64)> =
+        spans.into_iter().map(|(n, (c, t, m))| (n, c, t, m)).collect();
+    spans.sort_by(|a, b| b.2.total_cmp(&a.2));
+    Ok(TraceSummary { spans, jobs, unbalanced })
+}

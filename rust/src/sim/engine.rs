@@ -167,6 +167,8 @@ impl<'m, 'x> Engine<'m, 'x> {
         let q = &mut self.queues[fid.index()];
         q.push_back(task);
         self.max_queue_depth = self.max_queue_depth.max(q.len());
+        // Queue-occupancy distribution (no-op unless --metrics-json).
+        crate::obs::metrics::observe("sim.queue_depth", q.len() as f64);
         self.schedule(t + self.config.dispatch_latency as u64, Ev::Dispatch(fid));
     }
 
@@ -220,6 +222,15 @@ impl<'m, 'x> Engine<'m, 'x> {
             xla_batches: self.xla_batches,
             instrs: self.stack.retired(),
         };
+        // End-of-run telemetry: PE utilization + headline counters
+        // (no-ops unless --metrics-json).
+        crate::obs::metrics::gauge_set("sim.cycles", stats.cycles as f64);
+        crate::obs::metrics::counter_set("sim.tasks_run", stats.tasks_run);
+        crate::obs::metrics::counter_set("sim.xla_batches", stats.xla_batches);
+        crate::obs::metrics::gauge_set("sim.max_queue_depth", stats.max_queue_depth as f64);
+        for (name, s) in &stats.per_task {
+            crate::obs::metrics::gauge_set(&format!("sim.pe.{name}.utilization"), s.utilization);
+        }
         Ok((result, self.state.memory, stats))
     }
 

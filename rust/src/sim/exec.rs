@@ -102,6 +102,14 @@ struct SimMachine<'a> {
 }
 
 impl<'a> Machine for SimMachine<'a> {
+    fn on_dispatch(&mut self, fid: FuncId, _depth: usize) -> Result<()> {
+        // Hotness profile: once per frame entry, one relaxed load when off.
+        if crate::obs::profile_enabled() {
+            crate::obs::profile::hit(&self.prog.kernel(fid).name);
+        }
+        Ok(())
+    }
+
     #[inline]
     fn charge(&mut self, cost: &KCost) {
         push_compute(self.trace, cost.cycles(self.model));

@@ -81,7 +81,11 @@ impl Json {
                 let _ = write!(out, "{v}");
             }
             Json::Float(v) => {
-                if v.fract() == 0.0 && v.is_finite() && v.abs() < 1e15 {
+                // JSON has no NaN/Infinity literals; a non-finite float
+                // must degrade to null or the document won't parse.
+                if !v.is_finite() {
+                    out.push_str("null");
+                } else if v.fract() == 0.0 && v.abs() < 1e15 {
                     let _ = write!(out, "{v:.1}");
                 } else {
                     let _ = write!(out, "{v}");
@@ -410,5 +414,16 @@ mod tests {
     fn negative_and_float_numbers() {
         assert_eq!(parse("-42").unwrap(), Json::Int(-42));
         assert_eq!(parse("-4.5").unwrap(), Json::Float(-4.5));
+    }
+
+    #[test]
+    fn non_finite_floats_emit_null() {
+        assert_eq!(Json::Float(f64::NAN).pretty(), "null");
+        assert_eq!(Json::Float(f64::INFINITY).pretty(), "null");
+        assert_eq!(Json::Float(f64::NEG_INFINITY).pretty(), "null");
+        // The emitted document must stay parseable.
+        let mut doc = Json::object();
+        doc.set("bad", f64::NAN);
+        assert!(parse(&doc.pretty()).is_ok());
     }
 }

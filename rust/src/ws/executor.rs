@@ -48,6 +48,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::exec::{ArgList, KernelProgram};
 use crate::ir::cfg::FuncId;
 use crate::ir::expr::Value;
+use crate::obs::{self, trace::ArgVal};
 
 use super::closure::{Cont, Registry};
 use super::deque::Deque;
@@ -181,6 +182,8 @@ pub(crate) struct JobCounters {
 /// it and stealing stays job-oblivious.
 pub(crate) struct JobState {
     pub(crate) id: JobId,
+    /// Root entry task name — the job's display name in traces/metrics.
+    pub(crate) entry: String,
     pub(crate) kernels: Arc<KernelProgram>,
     pub(crate) memory: Arc<SharedMemory>,
     /// Per-job closure arena: cancellation sweeps it in one clear, and
@@ -197,6 +200,19 @@ pub(crate) struct JobState {
     pub(crate) counters: JobCounters,
     pub(crate) result: Mutex<Option<Value>>,
     pub(crate) error: Mutex<Option<anyhow::Error>>,
+    /// One-shot claim on the terminal-state classification
+    /// (completed/failed/cancelled): the *first* of `fail_job`,
+    /// `JobHandle::cancel`, or `complete` to flip this counts the job,
+    /// so lifetime aggregates add up even when a job fails or is
+    /// cancelled long before its task graph drains (or never drains —
+    /// the executor-drop path).
+    classified: AtomicBool,
+    /// One-shot claim on rolling the per-job counters into the executor
+    /// totals (normally at `complete`, else at executor drop).
+    counters_rolled: AtomicBool,
+    /// Set by the worker that dispatches the job's first task (trace
+    /// milestone).
+    pub(crate) first_dispatched: AtomicBool,
     done: Mutex<bool>,
     done_cv: Condvar,
     submitted_at: Instant,
@@ -451,6 +467,47 @@ pub(crate) fn finish_one(shared: &ExecShared, job: &Arc<JobState>) {
     }
 }
 
+/// Terminal states a job is counted under, exactly once.
+#[derive(Clone, Copy)]
+enum Terminal {
+    Completed,
+    Failed,
+    Cancelled,
+}
+
+/// Bump the executor total (and its metrics-registry mirror) for one
+/// job's terminal state. Callers must hold the `classified` claim.
+fn record_terminal(shared: &ExecShared, t: Terminal) {
+    let (total, metric) = match t {
+        Terminal::Completed => (&shared.totals.jobs_completed, "ws.jobs_completed"),
+        Terminal::Failed => (&shared.totals.jobs_failed, "ws.jobs_failed"),
+        Terminal::Cancelled => (&shared.totals.jobs_cancelled, "ws.jobs_cancelled"),
+    };
+    total.fetch_add(1, Ordering::Relaxed);
+    obs::metrics::counter_add(metric, 1);
+}
+
+/// Record the job's first error, abort the rest of it, and count it as
+/// failed *now* — not when (or if) its task graph finishes draining —
+/// so lifetime aggregates include jobs the pool never completed.
+pub(crate) fn fail_job(shared: &ExecShared, job: &JobState, err: anyhow::Error) {
+    job.fail(err);
+    if !job.classified.swap(true, Ordering::SeqCst) {
+        record_terminal(shared, Terminal::Failed);
+    }
+}
+
+/// Roll one job's counters into the executor lifetime totals.
+fn roll_counters(shared: &ExecShared, s: &WsStats) {
+    let t = &shared.totals;
+    t.tasks_run.fetch_add(s.tasks_run, Ordering::Relaxed);
+    t.steals.fetch_add(s.steals, Ordering::Relaxed);
+    t.closures_made.fetch_add(s.closures_made, Ordering::Relaxed);
+    t.xla_batches.fetch_add(s.xla_batches, Ordering::Relaxed);
+    t.xla_tasks.fetch_add(s.xla_tasks, Ordering::Relaxed);
+    t.instrs.fetch_add(s.instrs, Ordering::Relaxed);
+}
+
 /// End of a job's lifecycle: sweep its closure arena, roll its counters
 /// into the executor totals, free its admission slot (admitting the next
 /// queued job), wake joiners, and try idle reclamation.
@@ -460,24 +517,37 @@ fn complete(shared: &ExecShared, job: &Arc<JobState>) {
     // (pending just hit zero), so nothing can still resolve handles.
     job.registry.clear();
 
-    let s = job.snapshot_stats();
-    let t = &shared.totals;
-    t.tasks_run.fetch_add(s.tasks_run, Ordering::Relaxed);
-    t.steals.fetch_add(s.steals, Ordering::Relaxed);
-    t.closures_made.fetch_add(s.closures_made, Ordering::Relaxed);
-    t.xla_batches.fetch_add(s.xla_batches, Ordering::Relaxed);
-    t.xla_tasks.fetch_add(s.xla_tasks, Ordering::Relaxed);
-    t.instrs.fetch_add(s.instrs, Ordering::Relaxed);
-    let failed = job.error.lock().unwrap().is_some();
-    let delivered = job.result.lock().unwrap().is_some();
-    if failed {
-        t.jobs_failed.fetch_add(1, Ordering::Relaxed);
-    } else if !delivered && job.cancelled.load(Ordering::SeqCst) {
-        t.jobs_cancelled.fetch_add(1, Ordering::Relaxed);
-    } else {
-        t.jobs_completed.fetch_add(1, Ordering::Relaxed);
+    if !job.counters_rolled.swap(true, Ordering::SeqCst) {
+        roll_counters(shared, &job.snapshot_stats());
     }
-    *job.completed_at.lock().unwrap() = Some(Instant::now());
+    // Failed and cancelled jobs were classified when `fail_job` /
+    // `JobHandle::cancel` ran; everything still unclaimed here finished
+    // cleanly (or was cancelled after delivering its result, which
+    // counts as completed).
+    if !job.classified.swap(true, Ordering::SeqCst) {
+        let failed = job.error.lock().unwrap().is_some();
+        let delivered = job.result.lock().unwrap().is_some();
+        let terminal = if failed {
+            Terminal::Failed
+        } else if !delivered && job.cancelled.load(Ordering::SeqCst) {
+            Terminal::Cancelled
+        } else {
+            Terminal::Completed
+        };
+        record_terminal(shared, terminal);
+    }
+    let now = Instant::now();
+    *job.completed_at.lock().unwrap() = Some(now);
+    let latency = now.duration_since(job.submitted_at);
+    obs::metrics::observe_ms("ws.job.latency_ms", latency);
+    if obs::trace_enabled() {
+        obs::trace::async_end(
+            job.entry.clone(),
+            "job",
+            job.id.0,
+            vec![("latency_ms", ArgVal::F64(latency.as_secs_f64() * 1e3))],
+        );
+    }
 
     // Free the admission slot; admit the longest-waiting queued job.
     let next_root = {
@@ -495,6 +565,9 @@ fn complete(shared: &ExecShared, job: &Arc<JobState>) {
         }
     };
     if let Some(root) = next_root {
+        if obs::trace_enabled() {
+            obs::trace::async_instant("admit", "job", root.job.id.0, Vec::new());
+        }
         shared.inject(root);
     }
 
@@ -569,6 +642,7 @@ impl Executor {
         let id = JobId(self.next_job.fetch_add(1, Ordering::Relaxed));
         let state = Arc::new(JobState {
             id,
+            entry,
             kernels,
             memory: Arc::new(memory),
             registry: Registry::new(self.shared.config.arena_shards),
@@ -579,6 +653,9 @@ impl Executor {
             counters: JobCounters::default(),
             result: Mutex::new(None),
             error: Mutex::new(None),
+            classified: AtomicBool::new(false),
+            counters_rolled: AtomicBool::new(false),
+            first_dispatched: AtomicBool::new(false),
             done: Mutex::new(false),
             done_cv: Condvar::new(),
             submitted_at: Instant::now(),
@@ -591,6 +668,17 @@ impl Executor {
             cont: Cont::Root,
         };
         self.shared.totals.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        obs::metrics::counter_add("ws.jobs_submitted", 1);
+        if obs::trace_enabled() {
+            // Async span: the job lifecycle migrates across threads, so
+            // submit→complete is a `b`/`e` pair keyed by the job id.
+            obs::trace::async_begin(
+                state.entry.clone(),
+                "job",
+                id.0,
+                vec![("job", ArgVal::I64(id.0 as i64))],
+            );
+        }
         let mut admitted = Some(root);
         {
             let mut adm = self.shared.admission.lock().unwrap();
@@ -600,8 +688,13 @@ impl Executor {
                 adm.queued.push_back((Arc::clone(&state), admitted.take().unwrap()));
             }
         }
+        let went_in = admitted.is_some();
         if let Some(root) = admitted {
             self.shared.inject(root);
+        }
+        if obs::trace_enabled() {
+            let mark = if went_in { "admit" } else { "queue" };
+            obs::trace::async_instant(mark, "job", id.0, Vec::new());
         }
         Ok(JobHandle { job: state, shared: Arc::clone(&self.shared) })
     }
@@ -615,6 +708,29 @@ impl Executor {
     /// observability for the idle-reclamation path.
     pub fn retired_buffers(&self) -> usize {
         self.shared.deques.iter().map(|d| d.retired_len()).sum()
+    }
+
+    /// Publish the lifetime aggregates into the metrics registry under
+    /// their canonical `ws.*` names (authoritative snapshot — overwrites
+    /// the incrementally-maintained job counts with the same values).
+    /// No-op while metrics are disabled.
+    pub fn publish_metrics(&self) {
+        if !obs::metrics_enabled() {
+            return;
+        }
+        let s = self.stats();
+        obs::metrics::counter_set("ws.jobs_submitted", s.jobs_submitted);
+        obs::metrics::counter_set("ws.jobs_completed", s.jobs_completed);
+        obs::metrics::counter_set("ws.jobs_failed", s.jobs_failed);
+        obs::metrics::counter_set("ws.jobs_cancelled", s.jobs_cancelled);
+        obs::metrics::counter_set("ws.tasks_run", s.tasks_run);
+        obs::metrics::counter_set("ws.steals", s.steals);
+        obs::metrics::counter_set("ws.closures_made", s.closures_made);
+        obs::metrics::counter_set("ws.xla_batches", s.xla_batches);
+        obs::metrics::counter_set("ws.xla_tasks", s.xla_tasks);
+        obs::metrics::counter_set("ws.instrs_retired", s.instrs);
+        obs::metrics::gauge_set("ws.workers", self.workers() as f64);
+        obs::metrics::gauge_set("ws.retired_buffers", self.retired_buffers() as f64);
     }
 }
 
@@ -641,8 +757,22 @@ impl Drop for Executor {
             jobs
         };
         for job in leftovers {
-            job.fail(anyhow!("executor shut down with {} in flight", job.id));
+            // `fail_job` (not a bare `fail`) so drop-orphaned jobs land
+            // in `jobs_failed`, and their counters roll in — lifetime
+            // aggregates must add up even for jobs complete() never saw.
+            fail_job(&self.shared, &job, anyhow!("executor shut down with {} in flight", job.id));
+            if !job.counters_rolled.swap(true, Ordering::SeqCst) {
+                roll_counters(&self.shared, &job.snapshot_stats());
+            }
             job.registry.clear();
+            if obs::trace_enabled() {
+                obs::trace::async_end(
+                    job.entry.clone(),
+                    "job",
+                    job.id.0,
+                    vec![("dropped", ArgVal::I64(1))],
+                );
+            }
             {
                 let mut done = job.done.lock().unwrap();
                 *done = true;
@@ -704,6 +834,17 @@ impl JobHandle {
     pub fn cancel(&self) {
         if self.job.cancelled.swap(true, Ordering::SeqCst) {
             return;
+        }
+        // Count the cancellation *now* (unless the root result was
+        // already delivered — that job still completes normally), so
+        // executor totals include jobs whose graphs take a while to
+        // drain, or never do.
+        let delivered = self.job.result.lock().unwrap().is_some();
+        if !delivered && !self.job.classified.swap(true, Ordering::SeqCst) {
+            record_terminal(&self.shared, Terminal::Cancelled);
+        }
+        if obs::trace_enabled() {
+            obs::trace::async_instant("cancel", "job", self.job.id.0, Vec::new());
         }
         // Still parked in the admission queue? Its root never ran: drop
         // the parked task and retire the job's only pending count.

@@ -31,8 +31,10 @@ use crate::exec::{run_kernel, ArgList, KStack, KontRef, Machine};
 use crate::ir::cfg::{FuncId, FuncKind, GlobalId};
 use crate::ir::expr::Value;
 
+use crate::obs::{self, trace::ArgVal};
+
 use super::closure::{Cont, SharedClosure};
-use super::executor::{finish_one, ExecShared, JobState};
+use super::executor::{fail_job, finish_one, ExecShared, JobState};
 
 /// A runnable task instance, tagged with its owning job.
 #[derive(Clone)]
@@ -65,6 +67,9 @@ const MAX_PARK_SHIFT: u32 = 2;
 const INJECT_PERIOD: u32 = 61;
 
 pub(crate) fn worker_loop(wid: usize, shared: &ExecShared) {
+    if obs::trace_enabled() {
+        obs::trace::set_thread_name(&format!("ws-worker-{wid}"));
+    }
     let nworkers = shared.deques.len();
     let steal_tries = shared.config.ws.steal_tries.max(1);
     let mut rng = crate::util::rng::Rng::new(0x5EED ^ wid as u64);
@@ -82,6 +87,10 @@ pub(crate) fn worker_loop(wid: usize, shared: &ExecShared) {
         // cannot starve a freshly admitted root or overflow lane.
         if since_inject >= INJECT_PERIOD {
             since_inject = 0;
+            obs::metrics::counter_add("ws.injector_polls", 1);
+            if obs::trace_enabled() {
+                obs::trace::instant("injector-poll", "ws", Vec::new());
+            }
             if let Some(task) = shared.pop_injected() {
                 backoff = 0;
                 execute(wid, shared, task, &mut stack);
@@ -124,6 +133,13 @@ pub(crate) fn worker_loop(wid: usize, shared: &ExecShared) {
                 backoff = 0;
                 since_inject += 1;
                 task.job.counters.steals.fetch_add(1, Ordering::Relaxed);
+                if obs::trace_enabled() {
+                    obs::trace::instant(
+                        "steal",
+                        "ws",
+                        vec![("job", ArgVal::I64(task.job.id.0 as i64))],
+                    );
+                }
                 execute(wid, shared, task, &mut stack);
                 continue;
             }
@@ -144,6 +160,10 @@ pub(crate) fn worker_loop(wid: usize, shared: &ExecShared) {
             continue;
         }
         let park_us = 50u64 << (backoff - SPIN_ROUNDS).min(MAX_PARK_SHIFT);
+        obs::metrics::counter_add("ws.parks", 1);
+        if obs::trace_enabled() {
+            obs::trace::instant("park", "ws", vec![("us", ArgVal::I64(park_us as i64))]);
+        }
         backoff = backoff.saturating_add(1);
         shared.idle_workers.fetch_add(1, Ordering::SeqCst);
         let guard = shared.idle_lock.lock().unwrap();
@@ -209,23 +229,27 @@ fn flush_job_xla(wid: usize, shared: &ExecShared, job: &Arc<JobState>) -> bool {
             match job.xla_sink.exec_batch(name, &args, &job.memory) {
                 Ok(results) => {
                     if results.len() != idxs.len() {
-                        job.fail(anyhow!(
-                            "xla sink returned {} results for {} instances of `{name}`",
-                            results.len(),
-                            idxs.len()
-                        ));
+                        fail_job(
+                            shared,
+                            job,
+                            anyhow!(
+                                "xla sink returned {} results for {} instances of `{name}`",
+                                results.len(),
+                                idxs.len()
+                            ),
+                        );
                         break 'groups;
                     }
                     for (&i, value) in idxs.iter().zip(results) {
                         let cont = std::mem::replace(&mut batch[i].2, Cont::Root);
                         if let Err(e) = deliver(wid, shared, job, cont, value) {
-                            job.fail(e);
+                            fail_job(shared, job, e);
                             break 'groups;
                         }
                     }
                 }
                 Err(e) => {
-                    job.fail(e);
+                    fail_job(shared, job, e);
                     break 'groups;
                 }
             }
@@ -244,19 +268,47 @@ fn execute(wid: usize, shared: &ExecShared, task: WsTask, stack: &mut KStack) {
         // Discard without running; the task's continuation (and any
         // closures it holds) drops here, the arena sweep at completion
         // reclaims the rest.
+        obs::metrics::counter_add("ws.cancel_sweeps", 1);
+        if obs::trace_enabled() {
+            obs::trace::instant(
+                "cancel-sweep",
+                "ws",
+                vec![("job", ArgVal::I64(job.id.0 as i64))],
+            );
+        }
         drop(task);
         finish_one(shared, &job);
         return;
     }
     job.counters.tasks_run.fetch_add(1, Ordering::Relaxed);
+    // The per-task dispatch span: a `B`/`E` pair on this worker's tid,
+    // tagged with the owning job so job async spans nest their children.
+    let span_name: Option<String> = if obs::trace_enabled() {
+        if !job.first_dispatched.swap(true, Ordering::Relaxed) {
+            obs::trace::async_instant("first-dispatch", "job", job.id.0, Vec::new());
+        }
+        let name = job.kernels.kernel(task.task).name.clone();
+        obs::trace::begin_args(
+            name.clone(),
+            "task",
+            vec![("job", ArgVal::I64(job.id.0 as i64))],
+        );
+        Some(name)
+    } else {
+        None
+    };
     let retired_before = stack.retired();
     let outcome = run_task(wid, shared, &job, task, stack);
     job.counters.instrs.fetch_add(stack.retired() - retired_before, Ordering::Relaxed);
+    if let Some(name) = span_name {
+        obs::trace::end(name, "task");
+    }
     if let Err(e) = outcome {
         // A cancelled task's dispatch-boundary bail is expected noise;
-        // anything else is the job's first real error.
+        // anything else is the job's first real error (counted failed at
+        // fail time, not at graph drain).
         if !job.is_cancelled() {
-            job.fail(e);
+            fail_job(shared, &job, e);
         }
     }
     finish_one(shared, &job);
@@ -379,12 +431,17 @@ impl<'a> Machine for WsMachine<'a> {
         self.job.memory.atomic_add(arr, index, value)
     }
 
-    fn on_dispatch(&mut self, _fid: FuncId, _depth: usize) -> Result<()> {
+    fn on_dispatch(&mut self, fid: FuncId, _depth: usize) -> Result<()> {
         // The cooperative-cancellation boundary: one relaxed load per
         // frame entry, so a cancelled job's running tasks unwind at the
         // next dispatch instead of draining their whole subtree.
         if self.job.is_cancelled() {
             bail!("{} cancelled at dispatch boundary", self.job.id);
+        }
+        // Hotness profile: once per frame entry (never per retired
+        // instruction), behind one relaxed load when disabled.
+        if obs::profile_enabled() {
+            obs::profile::hit(&self.job.kernels.kernel(fid).name);
         }
         Ok(())
     }

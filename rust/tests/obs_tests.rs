@@ -1,0 +1,338 @@
+//! Telemetry-layer integration tests: trace integrity (determinism,
+//! B/E balance, job→task nesting), metrics schema stability, executor
+//! total/metric parity, the retired-fast-path grep pin, and CI artifact
+//! validation (`BOMBYX_OBS_TRACE_FILE` / `BOMBYX_OBS_METRICS_FILE`).
+//!
+//! The obs layer is process-global state, so every test that arms it
+//! serializes on [`OBS_LOCK`] and starts/ends from `obs::reset_all()`.
+
+use std::sync::Mutex;
+
+use bombyx::coordinator::WsServeExperiment;
+use bombyx::ir::expr::Value;
+use bombyx::lower::{CompileOptions, CompileSession};
+use bombyx::obs;
+use bombyx::util::json::{self, Json};
+use bombyx::workloads::fib;
+use bombyx::ws::{self, WsConfig};
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn num(v: &Json) -> f64 {
+    match v {
+        Json::Int(i) => *i as f64,
+        Json::Float(f) => *f,
+        other => panic!("expected a number, got {other:?}"),
+    }
+}
+
+/// The direct-threaded retired dispatch loop must stay telemetry-free:
+/// tracing/metrics/profiling hook the once-per-frame `on_dispatch` seam,
+/// never the per-instruction path. This pins the marked region of
+/// `exec_frame` by text so an instrumented hot loop fails CI.
+#[test]
+fn retired_fast_path_has_no_telemetry() {
+    let src = concat!(env!("CARGO_MANIFEST_DIR"), "/src/exec/kernel.rs");
+    let text = std::fs::read_to_string(src).expect("read kernel.rs");
+    let begin = text
+        .find("RETIRED_FAST_PATH_BEGIN")
+        .expect("kernel.rs must keep the RETIRED_FAST_PATH_BEGIN marker");
+    let end = text
+        .find("RETIRED_FAST_PATH_END")
+        .expect("kernel.rs must keep the RETIRED_FAST_PATH_END marker");
+    assert!(begin < end, "markers out of order");
+    let region = &text[begin..end];
+    assert!(
+        region.contains("table[instr.h as usize]"),
+        "marked region must still contain the direct-threaded dispatch"
+    );
+    for banned in ["obs::", "profile::hit", "counter_add", "observe", "trace::", "gauge_set"] {
+        assert!(
+            !region.contains(banned),
+            "telemetry call `{banned}` found inside the retired dispatch loop"
+        );
+    }
+}
+
+fn single_worker_task_spans() -> Vec<(&'static str, String)> {
+    let session =
+        CompileSession::new("obs_fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    obs::set_trace(true);
+    let cfg = WsConfig { workers: 1, steal_tries: 4 };
+    let (v, _, _) = session
+        .run_ws(session.shared_memory(), "fib", &[Value::I64(10)], &cfg, Box::new(ws::NoXlaSink))
+        .unwrap();
+    assert_eq!(v.as_i64(), fib::fib_ref(10) as i64);
+    obs::set_trace(false);
+    let events = obs::trace::drain();
+    events
+        .iter()
+        .filter(|e| e.cat == "task" && (e.ph == "B" || e.ph == "E"))
+        .map(|e| (e.ph, e.name.to_string()))
+        .collect()
+}
+
+/// One worker ⇒ no steals ⇒ the task span tree is a pure function of the
+/// program: two runs must record the identical (ph, name) sequence.
+#[test]
+fn single_worker_trace_is_deterministic() {
+    let _g = lock();
+    obs::reset_all();
+    let a = single_worker_task_spans();
+    obs::reset_all();
+    let b = single_worker_task_spans();
+    obs::reset_all();
+    assert!(!a.is_empty(), "a 1-worker fib(10) run must record task spans");
+    assert_eq!(a, b, "1-worker task span tree must be deterministic");
+}
+
+/// 4-worker 32-job flood: the exported document round-trips through
+/// `util::json`, every `E` closes the matching `B` on its own tid, job
+/// async spans contain their task-dispatch children, and `summarize`
+/// sees a balanced trace with all 32 jobs.
+#[test]
+fn flood_trace_round_trips_and_nests() {
+    let _g = lock();
+    obs::reset_all();
+    let exp = WsServeExperiment::new().unwrap();
+    obs::set_trace(true);
+    let report = exp.flood(4, 32, 1).unwrap();
+    obs::set_trace(false);
+    assert_eq!(report.verified, 32);
+    let events = obs::trace::drain();
+    obs::reset_all();
+
+    let doc = obs::trace::export_json(&events);
+    let text = doc.pretty();
+    let parsed = json::parse(&text).expect("trace export must be valid JSON");
+    let rows = parsed
+        .get("traceEvents")
+        .and_then(|v| v.as_array())
+        .expect("traceEvents array");
+    assert_eq!(rows.len(), events.len());
+
+    // B/E balance: per-tid LIFO matching, nothing left open.
+    let mut stacks: std::collections::BTreeMap<i64, Vec<String>> = Default::default();
+    // Job windows (async spans, cat "job"): id -> (b_ts, e_ts).
+    let mut begins: std::collections::BTreeMap<i64, f64> = Default::default();
+    let mut windows: std::collections::BTreeMap<i64, (f64, f64)> = Default::default();
+    let mut task_children: Vec<(i64, f64)> = Vec::new(); // (job id, B ts)
+    for ev in rows {
+        let ph = ev.get("ph").and_then(|v| v.as_str()).expect("ph");
+        let name = ev.get("name").and_then(|v| v.as_str()).expect("name").to_string();
+        let cat = ev.get("cat").and_then(|v| v.as_str()).expect("cat");
+        let tid = ev.get("tid").and_then(|v| v.as_i64()).expect("tid");
+        let ts = num(ev.get("ts").expect("ts"));
+        assert!(ts.is_finite(), "non-finite ts on `{name}`");
+        match ph {
+            "B" => {
+                stacks.entry(tid).or_default().push(name.clone());
+                if cat == "task" {
+                    let job = ev
+                        .get("args")
+                        .and_then(|a| a.get("job"))
+                        .and_then(|v| v.as_i64())
+                        .expect("task span must carry its job id");
+                    task_children.push((job, ts));
+                }
+            }
+            "E" => {
+                let open = stacks.entry(tid).or_default().pop();
+                assert_eq!(
+                    open.as_deref(),
+                    Some(name.as_str()),
+                    "E `{name}` must close the innermost B on tid {tid}"
+                );
+            }
+            "b" if cat == "job" => {
+                let id = ev.get("id").and_then(|v| v.as_i64()).expect("async id");
+                begins.insert(id, ts);
+            }
+            "e" if cat == "job" => {
+                let id = ev.get("id").and_then(|v| v.as_i64()).expect("async id");
+                let t0 = begins.remove(&id).expect("job `e` without `b`");
+                windows.insert(id, (t0, ts));
+            }
+            _ => {}
+        }
+    }
+    for (tid, stack) in &stacks {
+        assert!(stack.is_empty(), "unclosed B span(s) {stack:?} on tid {tid}");
+    }
+    assert!(begins.is_empty(), "job span(s) never closed: {begins:?}");
+    assert_eq!(windows.len(), 32, "one async job span per flooded job");
+    assert!(!task_children.is_empty(), "flood must record task dispatch spans");
+    for (job, ts) in &task_children {
+        let (t0, t1) = windows
+            .get(job)
+            .unwrap_or_else(|| panic!("task span references unknown job {job}"));
+        assert!(
+            *ts >= *t0 && *ts <= *t1,
+            "task dispatch at {ts} outside job {job} window [{t0}, {t1}]"
+        );
+    }
+
+    let summary = obs::trace::summarize(&parsed).expect("summarize");
+    assert_eq!(summary.unbalanced, 0, "summarize must see a balanced trace");
+    assert_eq!(summary.jobs.len(), 32);
+    for (_, _, latency_ms, milestones) in &summary.jobs {
+        assert!(latency_ms.is_finite() && *latency_ms >= 0.0);
+        assert!(
+            milestones.iter().any(|m| m == "admit" || m == "queue"),
+            "every job passes an admission milestone, got {milestones:?}"
+        );
+    }
+}
+
+/// The `bombyx-metrics-v1` document: schema tag present, executor totals
+/// mirrored as counters, latency histogram finite with ordered
+/// percentiles — and it round-trips through `util::json`.
+#[test]
+fn flood_metrics_schema_is_stable() {
+    let _g = lock();
+    obs::reset_all();
+    let exp = WsServeExperiment::new().unwrap();
+    obs::set_metrics(true);
+    let report = exp.flood(4, 8, 1).unwrap();
+    obs::set_metrics(false);
+    let doc = obs::metrics::export_json();
+    obs::reset_all();
+    assert_eq!(report.verified, 8);
+
+    let text = doc.pretty();
+    let parsed = json::parse(&text).expect("metrics export must be valid JSON");
+    assert_eq!(
+        parsed.get("schema").and_then(|v| v.as_str()),
+        Some(obs::metrics::SCHEMA),
+        "schema tag must be stable"
+    );
+    let counters = parsed.get("counters").expect("counters object");
+    let counter = |name: &str| {
+        counters
+            .get(name)
+            .and_then(|v| v.as_i64())
+            .unwrap_or_else(|| panic!("missing counter `{name}`"))
+    };
+    assert_eq!(counter("ws.jobs_submitted"), 8);
+    assert_eq!(counter("ws.jobs_completed"), 8);
+    assert_eq!(counter("ws.jobs_failed"), 0);
+    assert_eq!(counter("ws.jobs_cancelled"), 0);
+    assert!(counter("ws.tasks_run") > 0);
+    // Totals published by `Executor::publish_metrics` match the stats
+    // struct the flood report carries.
+    assert_eq!(counter("ws.tasks_run") as u64, report.stats.tasks_run);
+    assert_eq!(counter("ws.instrs_retired") as u64, report.stats.instrs);
+
+    let hist = parsed
+        .get("histograms")
+        .and_then(|h| h.get("ws.job.latency_ms"))
+        .expect("job latency histogram");
+    assert_eq!(hist.get("count").and_then(|v| v.as_i64()), Some(8));
+    let p50 = num(hist.get("p50").expect("p50"));
+    let p95 = num(hist.get("p95").expect("p95"));
+    let p99 = num(hist.get("p99").expect("p99"));
+    for v in [p50, p95, p99] {
+        assert!(v.is_finite() && v >= 0.0, "percentiles must be finite, got {v}");
+    }
+    assert!(p50 <= p95 && p95 <= p99, "percentiles out of order: {p50} {p95} {p99}");
+}
+
+/// Satellite 2: terminal classification is exactly-once. A cancel after
+/// delivery must not double-count, and however a submit/drop race lands,
+/// every submitted job ends in exactly one terminal class.
+#[test]
+fn executor_totals_classify_every_job_once() {
+    let _g = lock();
+    obs::reset_all();
+    let exp = WsServeExperiment::new().unwrap();
+
+    // Cancel after completion: stays completed.
+    let executor = ws::Executor::new(ws::ExecutorConfig::default()).unwrap();
+    let handle = executor.submit(exp.job(0).unwrap()).unwrap();
+    handle.wait();
+    handle.cancel();
+    handle.cancel(); // idempotent
+    let stats = executor.stats();
+    drop(executor);
+    assert_eq!(stats.jobs_submitted, 1);
+    assert_eq!(stats.jobs_completed, 1);
+    assert_eq!(stats.jobs_cancelled, 0, "cancel after delivery must not reclassify");
+    assert_eq!(stats.jobs_failed, 0);
+
+    // Exercise the Drop path with a job possibly still in flight: the
+    // executor must classify leftovers through `fail_job` (not slip them
+    // past `complete`) and shut down cleanly either way.
+    let executor = ws::Executor::new(ws::ExecutorConfig::default()).unwrap();
+    let _in_flight = executor.submit(exp.job(1).unwrap()).unwrap();
+    drop(executor);
+
+    let executor = ws::Executor::new(ws::ExecutorConfig::default()).unwrap();
+    let h1 = executor.submit(exp.job(1).unwrap()).unwrap();
+    let h2 = executor.submit(exp.job(2).unwrap()).unwrap();
+    h1.wait();
+    h2.wait();
+    let stats = executor.stats();
+    drop(executor);
+    assert_eq!(
+        stats.jobs_completed + stats.jobs_failed + stats.jobs_cancelled,
+        stats.jobs_submitted,
+        "every job must land in exactly one terminal class"
+    );
+    obs::reset_all();
+}
+
+/// Telemetry fully disabled must record nothing — the overhead contract
+/// (`rust/src/obs/README.md`) starts with "off means off".
+#[test]
+fn disabled_obs_records_nothing() {
+    let _g = lock();
+    obs::reset_all();
+    let session =
+        CompileSession::new("obs_off", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let cfg = WsConfig { workers: 2, steal_tries: 4 };
+    let (v, _, _) = session
+        .run_ws(session.shared_memory(), "fib", &[Value::I64(12)], &cfg, Box::new(ws::NoXlaSink))
+        .unwrap();
+    assert_eq!(v.as_i64(), fib::fib_ref(12) as i64);
+    assert!(obs::trace::drain().is_empty(), "disabled tracing must record no events");
+    assert!(obs::profile::snapshot().is_empty(), "disabled profiler must record no hits");
+    let doc = obs::metrics::export_json();
+    match doc.get("counters") {
+        Some(Json::Object(map)) => {
+            assert!(map.is_empty(), "disabled metrics must record no counters: {}", doc.pretty())
+        }
+        other => panic!("counters must be an object, got {other:?}"),
+    }
+    obs::reset_all();
+}
+
+/// CI artifact gate: when the bench-smoke step exports
+/// `TRACE_smoke.json` / `METRICS_smoke.json`, point
+/// `BOMBYX_OBS_TRACE_FILE` / `BOMBYX_OBS_METRICS_FILE` here to
+/// schema-validate them. Without the env vars this test is a no-op.
+#[test]
+fn ci_artifacts_validate() {
+    if let Ok(path) = std::env::var("BOMBYX_OBS_TRACE_FILE") {
+        let text = std::fs::read_to_string(&path).expect("read trace artifact");
+        let doc = json::parse(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+        let summary = obs::trace::summarize(&doc).unwrap_or_else(|e| panic!("{path}: {e}"));
+        assert_eq!(summary.unbalanced, 0, "{path}: unbalanced spans");
+        assert!(!summary.jobs.is_empty(), "{path}: no job spans in the smoke trace");
+    }
+    if let Ok(path) = std::env::var("BOMBYX_OBS_METRICS_FILE") {
+        let text = std::fs::read_to_string(&path).expect("read metrics artifact");
+        let doc = json::parse(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+        assert_eq!(
+            doc.get("schema").and_then(|v| v.as_str()),
+            Some(obs::metrics::SCHEMA),
+            "{path}: wrong schema tag"
+        );
+        for section in ["counters", "gauges", "histograms"] {
+            assert!(doc.get(section).is_some(), "{path}: missing `{section}`");
+        }
+    }
+}
