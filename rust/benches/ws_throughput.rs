@@ -19,6 +19,10 @@
 //!    through one resident executor (`coordinator::WsServeExperiment`) —
 //!    jobs/s throughput plus p50/p95/p99 submission-to-completion
 //!    latency, every job verified against its reference.
+//! 5. **fault injection**: the same flood under the seeded chaos plan
+//!    (injected panics, transients, delays) with retry enabled — every
+//!    non-shed job must still verify; reports degraded throughput as a
+//!    fraction of the clean flood's.
 //!
 //! `BOMBYX_BENCH_SMOKE=1` switches to reduced iterations/sizes (the CI
 //! bench-smoke step) and arms the telemetry layer for the measured
@@ -508,6 +512,31 @@ fn main() {
         flood.p99.as_secs_f64() * 1e3
     );
 
+    // ---- section 5: fault injection ----------------------------------------
+    // Same load, fixed chaos seed: the executor must absorb injected
+    // panics, transients and delays (retrying transparently) and every
+    // job that was not shed must still verify against its reference —
+    // the throughput cost of containment is the measurement.
+    let chaos_seed = 42u64;
+    let chaos = serve.flood_chaos(flood_workers, flood_jobs, flood_repeat, chaos_seed).unwrap();
+    for (i, outcome) in chaos.outcomes.iter().enumerate() {
+        assert!(
+            outcome.is_none() || outcome.as_deref() == Some("shed"),
+            "chaos job {i}: every non-shed job must verify, got {outcome:?}"
+        );
+    }
+    let retained = chaos.jobs_per_s / flood.jobs_per_s.max(1e-12);
+    println!(
+        "fault injection (seed {chaos_seed}): {} of {} verified, {} retried, {} shed, \
+         {:.1} jobs/s ({:.0}% of clean)",
+        chaos.verified,
+        chaos.jobs,
+        chaos.stats.jobs_retried,
+        chaos.stats.jobs_shed,
+        chaos.jobs_per_s,
+        retained * 100.0
+    );
+
     // ---- machine-readable output -------------------------------------------
     let mut kvt = Json::object();
     let mut kvt_fib = Json::object();
@@ -568,6 +597,29 @@ fn main() {
         .set("tasks_run", flood.stats.tasks_run as i64)
         .set("steals", flood.stats.steals as i64);
 
+    let mut fi = Json::object();
+    fi.set("seed", chaos_seed as i64)
+        .set("workers", chaos.workers)
+        .set("jobs", chaos.jobs)
+        .set("verified", chaos.verified)
+        .set("failed", chaos.failed)
+        .set("jobs_retried", chaos.stats.jobs_retried as i64)
+        .set("jobs_shed", chaos.stats.jobs_shed as i64)
+        .set("workers_respawned", chaos.stats.workers_respawned as i64)
+        .set("jobs_per_s", chaos.jobs_per_s)
+        .set("p99_ms", chaos.p99.as_secs_f64() * 1e3)
+        .set("throughput_retained", retained);
+    let outcome_rows: Vec<Json> = chaos
+        .outcome_breakdown()
+        .into_iter()
+        .map(|(tag, n)| {
+            let mut row = Json::object();
+            row.set("outcome", tag).set("jobs", n);
+            row
+        })
+        .collect();
+    fi.set("outcomes", Json::Array(outcome_rows));
+
     let mut root = Json::object();
     root.set("bench", "ws_throughput")
         .set("mode", if cfg!(debug_assertions) { "debug" } else { "release" })
@@ -575,7 +627,8 @@ fn main() {
         .set("kernel_vs_tree", kvt)
         .set("ws_scaling", scale_json)
         .set("fused_dispatch", fd)
-        .set("multi_job", mj);
+        .set("multi_job", mj)
+        .set("fault_injection", fi);
     let path = "BENCH_ws.json";
     std::fs::write(path, root.pretty() + "\n").expect("write BENCH_ws.json");
     println!("wrote {path}");

@@ -273,7 +273,38 @@ pub struct FloodReport {
     pub p99: Duration,
     /// Jobs whose results matched the per-program expectation.
     pub verified: usize,
+    /// Jobs that terminated with an error or a result mismatch
+    /// (`verified + failed == jobs`).
+    pub failed: usize,
+    /// Per-job outcome in submission order: `None` for a verified job,
+    /// otherwise the [`ws::JobErrorKind`] tag (`"panicked"`,
+    /// `"transient"`, `"shed"`, …) or a `"mismatch: …"` description.
+    /// Stable across runs for a fixed corpus and chaos seed — the
+    /// chaos-determinism tests compare these vectors verbatim.
+    pub outcomes: Vec<Option<String>>,
     pub stats: ws::ExecutorStats,
+}
+
+impl FloodReport {
+    /// Terminal jobs bucketed by outcome tag (`"verified"` for clean
+    /// jobs), sorted by descending count — the `--stats`/flood-report
+    /// breakdown.
+    pub fn outcome_breakdown(&self) -> Vec<(String, usize)> {
+        let mut counts: Vec<(String, usize)> = Vec::new();
+        for outcome in &self.outcomes {
+            let tag = match outcome {
+                None => "verified",
+                Some(o) if o.starts_with("mismatch") => "mismatch",
+                Some(o) => o.as_str(),
+            };
+            match counts.iter_mut().find(|(t, _)| t == tag) {
+                Some((_, n)) => *n += 1,
+                None => counts.push((tag.to_string(), 1)),
+            }
+        }
+        counts.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        counts
+    }
 }
 
 /// The multi-job serving experiment: a heterogeneous corpus (fib at two
@@ -461,30 +492,107 @@ impl WsServeExperiment {
 
     /// Flood a resident executor: submit `jobs` interleaved mixed-corpus
     /// jobs per wave, `repeat` waves, verifying every result. Returns
-    /// throughput and per-job latency percentiles.
+    /// throughput and per-job latency percentiles. Strict: any job
+    /// failure (or mismatch) fails the flood — use [`Self::flood_chaos`]
+    /// for fault-tolerant runs.
     pub fn flood(&self, workers: usize, jobs: usize, repeat: usize) -> Result<FloodReport> {
         let config = ws::ExecutorConfig {
             ws: ws::WsConfig { workers: workers.max(1), steal_tries: 4 },
+            // A clean flood must stay clean even under an ambient
+            // BOMBYX_CHAOS environment (the CI chaos-smoke job).
+            fault: Some(ws::FaultPlan::disabled()),
             ..ws::ExecutorConfig::default()
         };
+        let report = self.flood_with_config(config, jobs, repeat)?;
+        if report.failed > 0 {
+            let first = report
+                .outcomes
+                .iter()
+                .flatten()
+                .next()
+                .cloned()
+                .unwrap_or_default();
+            bail!("{} of {} flood jobs failed (first: {first})", report.failed, report.jobs);
+        }
+        Ok(report)
+    }
+
+    /// Chaos flood: the same mixed-corpus flood under a seeded
+    /// [`ws::FaultPlan`] with a retry-friendly default spec (transients
+    /// and contained panics re-run with backoff). Job failures become
+    /// per-job outcomes instead of failing the flood — compare against a
+    /// clean [`Self::flood`] for the degraded-vs-clean throughput story.
+    pub fn flood_chaos(
+        &self,
+        workers: usize,
+        jobs: usize,
+        repeat: usize,
+        seed: u64,
+    ) -> Result<FloodReport> {
+        let config = ws::ExecutorConfig {
+            ws: ws::WsConfig { workers: workers.max(1), steal_tries: 4 },
+            fault: Some(ws::FaultPlan::chaos(seed)),
+            default_spec: ws::JobSpec {
+                retry: ws::RetryPolicy {
+                    // FaultPlan::chaos goes fault-free from attempt 4, so
+                    // 6 attempts always converge.
+                    max_attempts: 6,
+                    backoff: Duration::from_millis(2),
+                    retry_on_panic: true,
+                },
+                ..ws::JobSpec::default()
+            },
+            ..ws::ExecutorConfig::default()
+        };
+        self.flood_with_config(config, jobs, repeat)
+    }
+
+    /// The flood core, tolerant of per-job failures: sheds and job
+    /// errors land in `FloodReport::outcomes` (submission order) rather
+    /// than aborting the flood. Only infrastructure errors (corpus
+    /// compilation, executor construction) abort.
+    pub fn flood_with_config(
+        &self,
+        config: ws::ExecutorConfig,
+        jobs: usize,
+        repeat: usize,
+    ) -> Result<FloodReport> {
+        let workers = config.ws.workers;
         let executor = ws::Executor::new(config)?;
         let repeat = repeat.max(1);
-        let mut latencies: Vec<Duration> = Vec::with_capacity(jobs * repeat);
+        let total = jobs * repeat;
+        let mut latencies: Vec<Duration> = Vec::with_capacity(total);
+        let mut outcomes: Vec<Option<String>> = Vec::with_capacity(total);
         let mut verified = 0usize;
+        let mut failed = 0usize;
         let start = Instant::now();
         for _ in 0..repeat {
             let mut handles = Vec::with_capacity(jobs);
             for i in 0..jobs {
-                handles.push((i, executor.submit(self.job(i)?)?));
+                handles.push((i, executor.submit(self.job(i)?)));
             }
-            for (i, handle) in handles {
-                handle.wait();
-                if let Some(latency) = handle.latency() {
-                    latencies.push(latency);
+            for (i, submitted) in handles {
+                let outcome = match submitted {
+                    Err(e) => Some(e.kind().tag().to_string()),
+                    Ok(handle) => {
+                        handle.wait();
+                        if let Some(latency) = handle.latency() {
+                            latencies.push(latency);
+                        }
+                        match handle.join() {
+                            Err(e) => Some(e.kind().tag().to_string()),
+                            Ok((value, mem, _stats)) => match self.verify(i, &value, &mem) {
+                                Ok(()) => None,
+                                Err(e) => Some(format!("mismatch: {e}")),
+                            },
+                        }
+                    }
+                };
+                match outcome {
+                    None => verified += 1,
+                    Some(_) => failed += 1,
                 }
-                let (value, mem, _stats) = handle.join()?;
-                self.verify(i, &value, &mem)?;
-                verified += 1;
+                outcomes.push(outcome);
             }
         }
         let wall = start.elapsed();
@@ -497,18 +605,19 @@ impl WsServeExperiment {
         }
         crate::obs::metrics::gauge_set(
             "ws.flood.jobs_per_s",
-            (jobs * repeat) as f64 / wall.as_secs_f64().max(1e-9),
+            total as f64 / wall.as_secs_f64().max(1e-9),
         );
-        let total = jobs * repeat;
         Ok(FloodReport {
             jobs: total,
-            workers: workers.max(1),
+            workers,
             wall,
             jobs_per_s: total as f64 / wall.as_secs_f64().max(1e-9),
             p50: percentile(&latencies, 0.50),
             p95: percentile(&latencies, 0.95),
             p99: percentile(&latencies, 0.99),
             verified,
+            failed,
+            outcomes,
             stats,
         })
     }
@@ -558,9 +667,29 @@ mod tests {
         let report = exp.flood(2, exp.corpus_len(), 2).unwrap();
         assert_eq!(report.jobs, exp.corpus_len() * 2);
         assert_eq!(report.verified, report.jobs);
+        assert_eq!(report.failed, 0);
+        assert!(report.outcomes.iter().all(Option::is_none));
+        assert_eq!(report.outcome_breakdown(), vec![("verified".to_string(), report.jobs)]);
         assert_eq!(report.stats.jobs_completed, report.jobs as u64);
         assert_eq!(report.stats.jobs_failed, 0);
         assert!(report.jobs_per_s > 0.0);
         assert!(report.p50 <= report.p95 && report.p95 <= report.p99);
+    }
+
+    #[test]
+    fn ws_serve_chaos_flood_converges_and_is_seed_deterministic() {
+        let exp = WsServeExperiment::new().unwrap();
+        let n = exp.corpus_len() * 2;
+        let a = exp.flood_chaos(2, n, 1, 42).unwrap();
+        let b = exp.flood_chaos(2, n, 1, 42).unwrap();
+        assert_eq!(a.outcomes, b.outcomes, "same seed must give identical per-job outcomes");
+        assert_eq!(a.verified + a.failed, a.jobs);
+        // The chaos plan goes fault-free from attempt 4 and the chaos
+        // default spec allows 6, so every non-shed job converges.
+        for (i, outcome) in a.outcomes.iter().enumerate() {
+            if let Some(tag) = outcome {
+                assert_eq!(tag.as_str(), "shed", "job {i}: unexpected terminal outcome `{tag}`");
+            }
+        }
     }
 }

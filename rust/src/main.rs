@@ -6,7 +6,8 @@
 //! bombyx estimate <file.cilk> [--dae]
 //! bombyx kernels  <file.cilk> [--mode implicit|explicit] [--dump]
 //! bombyx run      <file.cilk> <entry> [args...] [--dae] [--engine E] [--workers N] [--stats]
-//! bombyx run      --engine ws --jobs N [--repeat K] [--workers N] [--stats]   # executor flood
+//!                 [--deadline-ms N] [--fuel N]                  # per-job budgets (ws engine)
+//! bombyx run      --engine ws --jobs N [--repeat K] [--workers N] [--chaos SEED] [--stats]
 //! bombyx sim      <file.cilk> <entry> [args...] [--dae] [--pes N] [--mem-latency N]
 //! bombyx bfs      [--depth D] [--branch B] [--pes N]     # paper §III experiment
 //! bombyx trace    summarize <trace.json> [--top N]       # aggregate a --trace file
@@ -251,8 +252,9 @@ fn print_usage() {
          bombyx codegen  <file.cilk> [--target rtl|hardcilk] [--dae|--no-dae] --out <dir> [--system <name>]\n  \
          bombyx estimate <file.cilk> [--dae|--no-dae]\n  \
          bombyx kernels  <file.cilk> [--mode implicit|explicit] [--dae|--no-dae] [--dump]\n  \
-         bombyx run      <file.cilk> <entry> [int args...] [--engine oracle|explicit|ws|sim] [--dae|--no-dae] [--workers N] [--stats]\n  \
-         bombyx run      --engine ws --jobs N [--repeat K] [--workers N] [--stats]   # flood the resident executor with mixed-corpus jobs\n  \
+         bombyx run      <file.cilk> <entry> [int args...] [--engine oracle|explicit|ws|sim] [--dae|--no-dae] [--workers N] [--stats]\n                  \
+         [--deadline-ms N] [--fuel N]   # per-job wall-clock / dispatch budgets (ws engine)\n  \
+         bombyx run      --engine ws --jobs N [--repeat K] [--workers N] [--chaos SEED] [--stats]   # flood the resident executor\n  \
          bombyx sim      <file.cilk> <entry> [int args...] [--dae|--no-dae] [--pes N] [--mem-latency N]\n  \
          bombyx bfs      [--depth D] [--branch B] [--pes N]\n  \
          bombyx trace    summarize <trace.json> [--top N]\n\n\
@@ -261,7 +263,10 @@ fn print_usage() {
          Observability (run / compile / compile-batch):\n  \
          --trace <file>          write a Chrome trace-event / Perfetto JSON trace\n  \
          --metrics-json <file>   write the bombyx-metrics-v1 counters/gauges/histograms\n\
-         `run --stats` also samples a per-kernel hotness profile (top-N dispatches)."
+         `run --stats` also samples a per-kernel hotness profile (top-N dispatches).\n\n\
+         Fault tolerance: `run --engine ws --jobs N --chaos SEED` replays the flood with\n\
+         deterministic fault injection (panics, transients, delays) and retry enabled;\n\
+         BOMBYX_CHAOS=<seed> arms the same plan on any resident-executor run."
     );
 }
 
@@ -584,7 +589,13 @@ fn print_role_fusion(prog: &bombyx::exec::KernelProgram) {
 /// executor with interleaved mixed-corpus jobs (every result verified
 /// against its reference) and report steady-state throughput plus
 /// per-job latency percentiles.
-fn run_flood(workers: usize, jobs: usize, repeat: usize, want_stats: bool) -> Result<()> {
+fn run_flood(
+    workers: usize,
+    jobs: usize,
+    repeat: usize,
+    want_stats: bool,
+    chaos: Option<u64>,
+) -> Result<()> {
     use bombyx::util::bench::fmt_duration;
     let exp = bombyx::coordinator::WsServeExperiment::new()?;
     println!(
@@ -606,21 +617,70 @@ fn run_flood(workers: usize, jobs: usize, repeat: usize, want_stats: bool) -> Re
         fmt_duration(report.p99)
     );
     if want_stats {
-        let s = &report.stats;
-        println!(
-            "executor: submitted {}  completed {}  failed {}  cancelled {}",
-            s.jobs_submitted, s.jobs_completed, s.jobs_failed, s.jobs_cancelled
-        );
-        println!(
-            "executor: tasks {}  steals {}  closures {}  xla batches {}  instrs {}",
-            commas(s.tasks_run),
-            commas(s.steals),
-            commas(s.closures_made),
-            commas(s.xla_batches),
-            commas(s.instrs)
-        );
+        print_flood_stats(&report);
+    }
+    let Some(seed) = chaos else { return Ok(()) };
+    // Degraded pass: same corpus and load, but with the standard chaos
+    // mix armed (injected panics, transient faults and delays) and a
+    // retry-friendly default spec — every non-shed job must still verify.
+    println!("chaos flood: re-running the same load with fault injection armed (seed {seed})");
+    let degraded = exp.flood_chaos(workers, jobs, repeat, seed)?;
+    let retained = if report.jobs_per_s > 0.0 {
+        degraded.jobs_per_s / report.jobs_per_s * 100.0
+    } else {
+        0.0
+    };
+    println!(
+        "chaos: {} of {} job(s) verified, {} failed   wall {}   throughput {:.1} jobs/s ({retained:.0}% of clean)",
+        degraded.verified,
+        degraded.jobs,
+        degraded.failed,
+        fmt_duration(degraded.wall),
+        degraded.jobs_per_s
+    );
+    let breakdown: Vec<String> = degraded
+        .outcome_breakdown()
+        .into_iter()
+        .map(|(tag, n)| format!("{tag} {n}"))
+        .collect();
+    println!("chaos outcomes: {}", breakdown.join("   "));
+    if want_stats {
+        print_flood_stats(&degraded);
     }
     Ok(())
+}
+
+/// The `--stats` executor-counter block shared by the clean and chaos
+/// flood reports, including the fault-tolerance counters and the
+/// terminal-outcome breakdown by [`bombyx::ws::JobErrorKind`] tag.
+fn print_flood_stats(report: &bombyx::coordinator::FloodReport) {
+    let s = &report.stats;
+    println!(
+        "executor: submitted {}  completed {}  failed {}  cancelled {}  retried {}  shed {}  workers respawned {}",
+        s.jobs_submitted,
+        s.jobs_completed,
+        s.jobs_failed,
+        s.jobs_cancelled,
+        s.jobs_retried,
+        s.jobs_shed,
+        s.workers_respawned
+    );
+    println!(
+        "executor: tasks {}  steals {}  closures {}  xla batches {}  instrs {}",
+        commas(s.tasks_run),
+        commas(s.steals),
+        commas(s.closures_made),
+        commas(s.xla_batches),
+        commas(s.instrs)
+    );
+    if s.jobs_failed > 0 || s.jobs_shed > 0 {
+        let breakdown: Vec<String> = report
+            .outcome_breakdown()
+            .into_iter()
+            .map(|(tag, n)| format!("{tag} {n}"))
+            .collect();
+        println!("executor: outcomes {}", breakdown.join("   "));
+    }
 }
 
 fn parse_task_args(flags: &Flags) -> Result<(String, Vec<Value>)> {
@@ -642,8 +702,10 @@ fn parse_task_args(flags: &Flags) -> Result<(String, Vec<Value>)> {
 /// `--jobs N` (ws engine only) no source file is read: the built-in
 /// mixed corpus floods the resident executor instead.
 fn cmd_run(args: &[String]) -> Result<()> {
-    let flags =
-        parse_flags(args, &["workers", "engine", "jobs", "repeat", "trace", "metrics-json"])?;
+    let flags = parse_flags(
+        args,
+        &["workers", "engine", "jobs", "repeat", "deadline-ms", "fuel", "chaos", "trace", "metrics-json"],
+    )?;
     let engine = flags
         .options
         .get("engine")
@@ -654,9 +716,30 @@ fn cmd_run(args: &[String]) -> Result<()> {
     // The hotness profiler rides on --stats (sampled at frame entry via
     // `Machine::on_dispatch` — never the retired fast path).
     let telemetry = Telemetry::arm(&flags, want_stats);
+    let deadline_ms = flags
+        .options
+        .get("deadline-ms")
+        .map(|v| v.parse::<u64>())
+        .transpose()
+        .map_err(|e| anyhow!("bad --deadline-ms value: {e}"))?;
+    let fuel = flags
+        .options
+        .get("fuel")
+        .map(|v| v.parse::<u64>())
+        .transpose()
+        .map_err(|e| anyhow!("bad --fuel value: {e}"))?;
+    let chaos = flags
+        .options
+        .get("chaos")
+        .map(|v| v.parse::<u64>())
+        .transpose()
+        .map_err(|e| anyhow!("bad --chaos value (expected a u64 seed): {e}"))?;
     if flags.options.contains_key("jobs") || flags.options.contains_key("repeat") {
         if engine != "ws" {
             bail!("--jobs/--repeat need the resident executor (use --engine ws)");
+        }
+        if deadline_ms.is_some() || fuel.is_some() {
+            bail!("--deadline-ms/--fuel apply to a single-job run, not a --jobs flood");
         }
         let jobs = flags
             .options
@@ -676,11 +759,17 @@ fn cmd_run(args: &[String]) -> Result<()> {
         }
         let workers =
             flags.options.get("workers").map(|w| w.parse::<usize>()).transpose()?.unwrap_or(4);
-        run_flood(workers, jobs, repeat, want_stats)?;
+        run_flood(workers, jobs, repeat, want_stats, chaos)?;
         if want_stats {
             print_profile(None, 10);
         }
         return telemetry.finish();
+    }
+    if chaos.is_some() {
+        bail!("--chaos drives the flood mode (add --jobs N); set BOMBYX_CHAOS=<seed> to arm single runs");
+    }
+    if (deadline_ms.is_some() || fuel.is_some()) && engine != "ws" {
+        bail!("--deadline-ms/--fuel need the resident executor (use --engine ws)");
     }
     let mut session = load_session(&flags)?;
     let (entry, task_args) = parse_task_args(&flags)?;
@@ -747,14 +836,35 @@ fn cmd_run(args: &[String]) -> Result<()> {
             (value, ex.stats.tasks_run, ex.stats.instrs)
         }
         "ws" => {
-            let cfg = WsConfig { workers, steal_tries: 4 };
-            let (value, _, stats) = session.run_ws(
-                session.shared_memory(),
-                &entry,
-                &task_args,
-                &cfg,
-                Box::new(ws::NoXlaSink),
-            )?;
+            let (value, stats) = if deadline_ms.is_some() || fuel.is_some() {
+                // Budgeted run: route through the resident executor so
+                // the JobSpec's deadline and fuel budget are enforced at
+                // dispatch boundaries.
+                let spec = ws::JobSpec {
+                    deadline: deadline_ms.map(std::time::Duration::from_millis),
+                    fuel_budget: fuel,
+                    ..ws::JobSpec::default()
+                };
+                let config = ws::ExecutorConfig {
+                    ws: WsConfig { workers, steal_tries: 4 },
+                    ..ws::ExecutorConfig::default()
+                };
+                let executor = ws::Executor::new(config)?;
+                let job = session.ws_job(&entry, &task_args)?.with_spec(spec);
+                let handle = executor.submit(job)?;
+                let (value, _, stats) = handle.join()?;
+                (value, stats)
+            } else {
+                let cfg = WsConfig { workers, steal_tries: 4 };
+                let (value, _, stats) = session.run_ws(
+                    session.shared_memory(),
+                    &entry,
+                    &task_args,
+                    &cfg,
+                    Box::new(ws::NoXlaSink),
+                )?;
+                (value, stats)
+            };
             println!(
                 "tasks: {}  closures: {}  workers: {workers}",
                 commas(stats.tasks_run),

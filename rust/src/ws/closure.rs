@@ -16,6 +16,7 @@
 //! bound. Global live/peak counters feed the runtime's closure-footprint
 //! stats without scanning.
 
+use std::fmt;
 use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -23,6 +24,31 @@ use crate::exec::ArgList;
 use crate::frontend::ast::Type;
 use crate::ir::cfg::FuncId;
 use crate::ir::expr::Value;
+
+use super::plock;
+
+/// A closure handle that no longer resolves: its closure fired (and the
+/// slot was possibly recycled) or the owning job's arena was swept. On
+/// the task path this is a contained, structured job failure
+/// ([`super::Trap::StaleClosure`] via [`Registry::lookup`]); `get` /
+/// `remove` keep the loud fail-stop panic for the fire path, where a
+/// stale handle means free-list corruption.
+#[derive(Clone, Copy, Debug)]
+pub struct StaleHandle(pub i64);
+
+impl fmt::Display for StaleHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // The "stale closure handle" needle is pinned by
+        // `JobError::classify` — never reword it.
+        write!(
+            f,
+            "stale closure handle {} resolved after firing (slot recycled or swept)",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for StaleHandle {}
 
 /// Continuation reference carried by every task instance.
 #[derive(Clone, Debug)]
@@ -104,9 +130,7 @@ impl SharedClosure {
     }
 
     pub fn take_cont(&self) -> Cont {
-        self.cont
-            .lock()
-            .unwrap()
+        plock(&self.cont)
             .take()
             .expect("closure fired twice (join-counter bug)")
     }
@@ -169,7 +193,7 @@ impl Registry {
     pub fn insert(&self, clos: Arc<SharedClosure>, shard_hint: usize) -> i64 {
         let shard = shard_hint & (self.shards.len() - 1);
         let (idx, gen) = {
-            let mut s = self.shards[shard].lock().unwrap();
+            let mut s = plock(&self.shards[shard]);
             match s.free.pop() {
                 Some(idx) => {
                     // Reuse bumps the generation so stale handles to the
@@ -200,13 +224,36 @@ impl Registry {
     /// join-counter or lowering bug, and must fail loudly.
     pub fn get(&self, handle: i64) -> Arc<SharedClosure> {
         let (shard, idx, gen) = self.decode(handle);
-        let s = self.shards[shard].lock().unwrap();
+        let s = plock(&self.shards[shard]);
         let (cur_gen, entry) = &s.entries[idx];
         assert_eq!(*cur_gen, gen, "closure handle resolved after firing (slot recycled)");
         entry
             .as_ref()
             .expect("closure handle resolved after firing")
             .clone()
+    }
+
+    /// Non-panicking handle resolution for the task path: a stale handle
+    /// (fired, swept, or out of range) becomes a [`StaleHandle`] error so
+    /// the executor fails the *job* with `Trap::StaleClosure` instead of
+    /// killing the process. Debug builds still assert — a stale handle
+    /// on the task path is a join-counter or lowering bug worth a loud
+    /// stop at a developer's desk, but not worth the whole resident pool
+    /// in production.
+    pub fn lookup(&self, handle: i64) -> Result<Arc<SharedClosure>, StaleHandle> {
+        let (shard, idx, gen) = self.decode(handle);
+        let s = plock(&self.shards[shard]);
+        let resolved = s
+            .entries
+            .get(idx)
+            .filter(|(cur_gen, _)| *cur_gen == gen)
+            .and_then(|(_, entry)| entry.as_ref())
+            .cloned();
+        debug_assert!(
+            resolved.is_some(),
+            "closure handle {handle} resolved after firing (slot recycled or swept)"
+        );
+        resolved.ok_or(StaleHandle(handle))
     }
 
     /// Drop the registry's reference once fired; the entry index returns
@@ -216,7 +263,7 @@ impl Registry {
     pub fn remove(&self, handle: i64) {
         let (shard, idx, gen) = self.decode(handle);
         {
-            let mut s = self.shards[shard].lock().unwrap();
+            let mut s = plock(&self.shards[shard]);
             assert_eq!(
                 s.entries[idx].0, gen,
                 "closure removed with a stale handle (fired twice?)"
@@ -235,7 +282,7 @@ impl Registry {
     pub fn clear(&self) -> usize {
         let mut dropped = 0usize;
         for shard in &self.shards {
-            let mut guard = shard.lock().unwrap();
+            let mut guard = plock(shard);
             let Shard { entries, free } = &mut *guard;
             for (idx, (_gen, entry)) in entries.iter_mut().enumerate() {
                 // Occupied entries are not on the free list yet; emptied
@@ -365,6 +412,27 @@ mod tests {
         assert_eq!(r.live(), 1);
         r.remove(h);
         assert_eq!(r.live(), 0);
+    }
+
+    #[test]
+    fn lookup_reports_stale_handles_without_panicking() {
+        // Release-mode contract (debug builds assert instead; these
+        // stale probes therefore only run with debug_assertions off).
+        let r = Registry::new(2);
+        let mk = || Arc::new(SharedClosure::new(FuncId::new(0), tys(&[]), Cont::Root));
+        let h1 = r.insert(mk(), 0);
+        assert!(r.lookup(h1).is_ok(), "live handle resolves");
+        if !cfg!(debug_assertions) {
+            r.remove(h1);
+            let err = r.lookup(h1).expect_err("fired handle is stale");
+            assert!(
+                err.to_string().contains("stale closure handle"),
+                "classify needle must survive: {err}"
+            );
+            let _h2 = r.insert(mk(), 0); // recycles h1's slot
+            assert!(r.lookup(h1).is_err(), "recycled slot stays stale");
+            assert!(r.lookup(1 << 40).is_err(), "out-of-range index is stale, not a panic");
+        }
     }
 
     #[test]

@@ -34,6 +34,8 @@ use std::mem::MaybeUninit;
 use std::sync::atomic::{fence, AtomicIsize, AtomicPtr, Ordering};
 use std::sync::Mutex;
 
+use super::plock;
+
 struct Buf<T> {
     mask: isize,
     slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
@@ -164,7 +166,7 @@ impl<T> Deque<T> {
     /// Number of outgrown buffers awaiting reclamation (monitoring and
     /// the executor's idle-reclaim path).
     pub fn retired_len(&self) -> usize {
-        self.retired.lock().unwrap().len()
+        plock(&self.retired).len()
     }
 
     /// Free the retired buffers without waiting for drop.
@@ -179,7 +181,7 @@ impl<T> Deque<T> {
     /// buffer retired before the quiescent point (modulo the formal
     /// stale-load caveat in the module docs, which this path shares).
     pub fn free_retired(&self) {
-        for p in self.retired.lock().unwrap().drain(..) {
+        for p in plock(&self.retired).drain(..) {
             unsafe { drop(Box::from_raw(p)) };
         }
     }
@@ -193,7 +195,7 @@ impl<T> Deque<T> {
             unsafe { (*new).write_raw(i, (*old).read_raw(i)) };
         }
         self.buf.store(new, Ordering::Release);
-        self.retired.lock().unwrap().push(old);
+        plock(&self.retired).push(old);
         new
     }
 }

@@ -18,12 +18,25 @@
 //!   Closure arenas are partitioned per job ([`Registry`] per
 //!   `JobState`), so cancelling a job reclaims *all* of its closures in
 //!   one sweep and a leaky job can never exhaust another job's arena.
-//! - **Fair admission.** At most `max_active_jobs` jobs run at once;
-//!   excess submissions park in a FIFO until a slot frees. Active jobs
-//!   feed roots (and spawn overflow past `max_inflight_per_job`) through
-//!   per-job *injection lanes* drained round-robin, and workers poll the
-//!   injector periodically even while their own deque is hot — so a
-//!   resident `fib(30)` cannot starve a freshly submitted small job.
+//! - **Fair admission, bounded.** At most `max_active_jobs` jobs run at
+//!   once; excess submissions park in a FIFO until a slot frees — and
+//!   the FIFO itself is bounded by `max_queued_jobs`: past it, `submit`
+//!   *sheds* the job (structured [`JobErrorKind::Shed`]) instead of
+//!   growing without bound. Active jobs feed roots (and spawn overflow
+//!   past `max_inflight_per_job`) through per-job *injection lanes*
+//!   drained round-robin, and workers poll the injector periodically
+//!   even while their own deque is hot — so a resident `fib(30)` cannot
+//!   starve a freshly submitted small job.
+//! - **Fault containment.** A panic inside a task is caught at the
+//!   dispatch boundary (see [`super::worker`]) and becomes a first-
+//!   error-wins [`fail_job`] for the owning job only; a worker thread
+//!   that dies anyway (a panic outside the catch) is respawned by the
+//!   supervisor thread, so the pool never silently shrinks. Per-job
+//!   [`JobSpec`] deadlines/budgets are enforced cooperatively at the
+//!   same `on_dispatch` seam cancellation uses, and retryable failures
+//!   ([`JobErrorKind::retryable`], plus panics when the policy opts in)
+//!   are re-run by the supervisor after a deterministic
+//!   exponential-backoff delay ([`RetryPolicy::delay_for`]).
 //! - **Cooperative cancellation.** [`JobHandle::cancel`] flips a flag
 //!   checked at every dispatch boundary through the kernel loop's
 //!   [`crate::exec::Machine::on_dispatch`] hook; queued tasks are
@@ -39,22 +52,122 @@
 //! construct an executor, submit one job, join it, tear down.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::exec::{ArgList, KernelProgram};
 use crate::ir::cfg::FuncId;
 use crate::ir::expr::Value;
 use crate::obs::{self, trace::ArgVal};
+use crate::util::rng::Rng;
 
 use super::closure::{Cont, Registry};
 use super::deque::Deque;
+use super::error::{JobError, JobErrorKind};
+use super::fault::{FaultPlan, InjectedFault, JobFaults};
 use super::shared_mem::SharedMemory;
 use super::worker::{self, WsTask};
-use super::{WsConfig, WsStats, XlaSink};
+use super::{plock, WsConfig, WsStats, XlaSink};
+
+/// Retry policy applied per job ([`JobSpec::retry`]): how many attempts
+/// a job gets, and how long to back off between them. Only kinds marked
+/// [`JobErrorKind::retryable`] are retried — plus [`JobErrorKind::Panicked`]
+/// when `retry_on_panic` opts in (chaos floods use this to converge).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts including the first; 1 = never retry.
+    pub max_attempts: u32,
+    /// Base backoff before attempt 2; doubles per further attempt.
+    pub backoff: Duration,
+    /// Treat a caught panic as retryable (off by default: panics are
+    /// usually deterministic bugs that would recur).
+    pub retry_on_panic: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_attempts: 1, backoff: Duration::from_millis(10), retry_on_panic: false }
+    }
+}
+
+const MAX_RETRY_ATTEMPTS: u32 = 64;
+const MAX_RETRY_BACKOFF: Duration = Duration::from_secs(60);
+
+impl RetryPolicy {
+    /// The delay before `attempt` (2-based: the first retry is attempt
+    /// 2). Exponential base doubling with deterministic jitter — a pure
+    /// function of `(job, attempt)`, so tests can recompute the exact
+    /// schedule and two same-seed chaos floods back off identically:
+    /// `base * 2^(attempt-2) * (1 + u*0.25)` with `u` drawn from an rng
+    /// seeded by the job id and attempt.
+    pub fn delay_for(&self, job: u64, attempt: u32) -> Duration {
+        let exp = attempt.saturating_sub(2).min(16);
+        let base = self.backoff.saturating_mul(1u32 << exp);
+        let mut rng = Rng::new(
+            0x1BAD_B002u64 ^ job.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ ((attempt as u64) << 32),
+        );
+        let jitter = base.mul_f64(rng.unit_f64() * 0.25);
+        base.saturating_add(jitter)
+    }
+}
+
+/// Per-job execution limits and retry policy. `Default` means
+/// "unlimited, no retry" — a job submitted with the default spec
+/// inherits [`ExecutorConfig::default_spec`] instead.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct JobSpec {
+    /// Wall-clock budget from submission, enforced cooperatively at
+    /// dispatch boundaries (a job between dispatches — e.g. inside one
+    /// long leaf frame — overruns until its next boundary). Retries do
+    /// *not* extend the deadline.
+    pub deadline: Option<Duration>,
+    /// Dispatch budget per attempt (frame entries through
+    /// `Machine::on_dispatch`), a deterministic stand-in for CPU time.
+    pub fuel_budget: Option<u64>,
+    /// Cap on simultaneously live closures in the job's arena.
+    pub max_live_closures: Option<usize>,
+    pub retry: RetryPolicy,
+}
+
+impl JobSpec {
+    pub fn validate(&self) -> Result<()> {
+        if let Some(d) = self.deadline {
+            if d.is_zero() {
+                bail!("job spec: deadline must be > 0");
+            }
+        }
+        if let Some(f) = self.fuel_budget {
+            if f == 0 {
+                bail!("job spec: fuel_budget must be >= 1 (got 0)");
+            }
+        }
+        if let Some(c) = self.max_live_closures {
+            if c == 0 {
+                bail!("job spec: max_live_closures must be >= 1 (got 0)");
+            }
+        }
+        if self.retry.max_attempts == 0 {
+            bail!("job spec: retry.max_attempts must be >= 1 (got 0)");
+        }
+        if self.retry.max_attempts > MAX_RETRY_ATTEMPTS {
+            bail!(
+                "job spec: retry.max_attempts = {} exceeds the supported maximum of {MAX_RETRY_ATTEMPTS}",
+                self.retry.max_attempts
+            );
+        }
+        if self.retry.backoff > MAX_RETRY_BACKOFF {
+            bail!(
+                "job spec: retry.backoff = {:?} exceeds the supported maximum of {MAX_RETRY_BACKOFF:?}",
+                self.retry.backoff
+            );
+        }
+        Ok(())
+    }
+}
 
 /// Executor-level configuration: the worker-pool knobs ([`WsConfig`])
 /// plus the job-lifecycle knobs layered on top.
@@ -70,6 +183,16 @@ pub struct ExecutorConfig {
     pub max_inflight_per_job: usize,
     /// Shards in each job's closure arena (rounded up to a power of two).
     pub arena_shards: usize,
+    /// Bound on the admission FIFO: submissions past it are shed with a
+    /// structured [`JobErrorKind::Shed`] error instead of queuing
+    /// unboundedly. 0 = shed as soon as the active set is full.
+    pub max_queued_jobs: usize,
+    /// Spec substituted for jobs submitted with `JobSpec::default()`.
+    pub default_spec: JobSpec,
+    /// Deterministic fault injection. `None` falls back to the
+    /// `BOMBYX_CHAOS=<seed>` environment variable at [`Executor::new`];
+    /// pin `Some(FaultPlan::disabled())` to stay clean regardless.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ExecutorConfig {
@@ -79,6 +202,9 @@ impl Default for ExecutorConfig {
             max_active_jobs: 64,
             max_inflight_per_job: 4096,
             arena_shards: 64,
+            max_queued_jobs: 4096,
+            default_spec: JobSpec::default(),
+            fault: None,
         }
     }
 }
@@ -88,6 +214,7 @@ impl Default for ExecutorConfig {
 const MAX_WORKERS: usize = 1024;
 const MAX_ARENA_SHARDS: usize = 1 << 16;
 const MAX_INFLIGHT: usize = 1 << 30;
+const MAX_QUEUED_JOBS: usize = 1 << 24;
 
 impl ExecutorConfig {
     /// Validate before any thread or arena is created.
@@ -122,6 +249,26 @@ impl ExecutorConfig {
                 self.max_inflight_per_job
             );
         }
+        if self.max_queued_jobs > MAX_QUEUED_JOBS {
+            bail!(
+                "executor config: max_queued_jobs = {} exceeds the supported maximum of {MAX_QUEUED_JOBS}",
+                self.max_queued_jobs
+            );
+        }
+        if let Err(e) = self.default_spec.validate() {
+            bail!("executor config: default_spec: {e}");
+        }
+        if let Some(f) = &self.fault {
+            f.validate()?;
+            if let Some((wid, _)) = f.kill_worker {
+                if wid >= self.ws.workers {
+                    bail!(
+                        "executor config: fault.kill_worker = {wid} out of range for {} workers",
+                        self.ws.workers
+                    );
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -138,17 +285,19 @@ impl std::fmt::Display for JobId {
 
 /// A unit of work for the executor: a compiled kernel program
 /// (session-cached `Arc` — many jobs can share one program), a memory
-/// image, and the root spawn.
+/// image, the root spawn, and the execution limits.
 pub struct Job {
     pub kernels: Arc<KernelProgram>,
     pub memory: SharedMemory,
     pub entry: String,
     pub args: Vec<Value>,
     pub xla_sink: Box<dyn XlaSink>,
+    pub spec: JobSpec,
 }
 
 impl Job {
-    /// A job with no xla sink (programs without `extern xla`).
+    /// A job with no xla sink (programs without `extern xla`) and the
+    /// executor's default spec.
     pub fn new(
         kernels: Arc<KernelProgram>,
         memory: SharedMemory,
@@ -161,7 +310,13 @@ impl Job {
             entry: entry.to_string(),
             args: args.to_vec(),
             xla_sink: Box::new(super::NoXlaSink),
+            spec: JobSpec::default(),
         }
+    }
+
+    pub fn with_spec(mut self, spec: JobSpec) -> Job {
+        self.spec = spec;
+        self
     }
 }
 
@@ -189,17 +344,50 @@ pub(crate) struct JobState {
     /// Per-job closure arena: cancellation sweeps it in one clear, and
     /// one job's closure footprint is invisible to every other job.
     pub(crate) registry: Registry,
+    pub(crate) spec: JobSpec,
+    /// Root task identity, kept so a retry can re-materialize the root
+    /// spawn. Retries re-run on the job's (possibly mutated) memory
+    /// image — corpus kernels overwrite their outputs, so this is
+    /// idempotent for them; jobs that fold into memory should not retry.
+    root_fid: FuncId,
+    root_args: Vec<Value>,
+    /// Absolute deadline, fixed at submission (retries don't extend it).
+    deadline_at: Option<Instant>,
     /// Tasks created but not yet finished; seeded at 1 for the root.
     /// Reaching zero completes the job (closures only count once fired).
     pub(crate) pending: AtomicU64,
-    /// Cooperative-cancellation flag, checked at dispatch boundaries.
-    pub(crate) cancelled: AtomicBool,
+    /// Dispatch-boundary abort flag: set by cancellation, job failure,
+    /// and retry arming; workers discard the job's queued tasks at pop
+    /// and unwind running ones at the next dispatch. Cleared when a
+    /// retry re-arms the job.
+    aborted: AtomicBool,
+    /// Sticky user-cancel flag ([`JobHandle::cancel`] only): unlike
+    /// `aborted` it survives retry re-arming, so a cancelled job can
+    /// never be resurrected by its retry policy.
+    user_cancelled: AtomicBool,
+    /// Current attempt, 1-based.
+    attempt: AtomicU32,
+    /// Armed by [`fail_job`] when a retryable error should re-run the
+    /// job; consumed by `complete` once the attempt's tasks drain.
+    retry_pending: AtomicBool,
+    /// Per-attempt dispatch count: the fuel meter and the fault clock.
+    dispatches: AtomicU64,
+    /// Fast gate for the metered dispatch path (deadline, fuel, or
+    /// armed faults) — one relaxed load per dispatch when clean.
+    metered: AtomicBool,
+    /// This attempt's injected fault: 0 none / 1 panic / 2 transient,
+    /// firing at fault-clock tick `fault_at`.
+    fault_kind: AtomicU8,
+    fault_at: AtomicU64,
+    /// Injected micro-delay: sleep `delay_us` every `delay_every` ticks.
+    delay_every: AtomicU64,
+    delay_us: AtomicU64,
     /// Instances of this job's `extern xla` tasks awaiting batch flush.
     pub(crate) xla_queue: Mutex<Vec<(FuncId, Vec<Value>, Cont)>>,
     pub(crate) xla_sink: Box<dyn XlaSink>,
     pub(crate) counters: JobCounters,
     pub(crate) result: Mutex<Option<Value>>,
-    pub(crate) error: Mutex<Option<anyhow::Error>>,
+    pub(crate) error: Mutex<Option<JobError>>,
     /// One-shot claim on the terminal-state classification
     /// (completed/failed/cancelled): the *first* of `fail_job`,
     /// `JobHandle::cancel`, or `complete` to flip this counts the job,
@@ -221,20 +409,73 @@ pub(crate) struct JobState {
 
 impl JobState {
     #[inline]
-    pub(crate) fn is_cancelled(&self) -> bool {
-        self.cancelled.load(Ordering::Relaxed)
+    pub(crate) fn is_aborted(&self) -> bool {
+        self.aborted.load(Ordering::Relaxed)
     }
 
-    /// Record the first error and abort the rest of the job (the
-    /// cancelled flag doubles as the abort signal; workers discard the
-    /// job's remaining tasks at dispatch boundaries).
-    pub(crate) fn fail(&self, err: anyhow::Error) {
-        let mut slot = self.error.lock().unwrap();
+    /// Record the first error and abort the rest of the job (workers
+    /// discard the job's remaining tasks at dispatch boundaries).
+    pub(crate) fn fail(&self, err: JobError) {
+        let mut slot = plock(&self.error);
         if slot.is_none() {
             *slot = Some(err);
         }
         drop(slot);
-        self.cancelled.store(true, Ordering::SeqCst);
+        self.aborted.store(true, Ordering::SeqCst);
+    }
+
+    /// Arm one attempt's fault schedule and reset its meters.
+    pub(crate) fn arm_faults(&self, faults: JobFaults) {
+        let (kind, at) = match faults.fault {
+            Some((InjectedFault::Panic, at)) => (1u8, at),
+            Some((InjectedFault::Transient, at)) => (2u8, at),
+            None => (0, 0),
+        };
+        self.fault_kind.store(kind, Ordering::SeqCst);
+        self.fault_at.store(at, Ordering::SeqCst);
+        let (every, us) = faults.delay.unwrap_or((0, 0));
+        self.delay_every.store(every, Ordering::SeqCst);
+        self.delay_us.store(us, Ordering::SeqCst);
+        self.dispatches.store(0, Ordering::SeqCst);
+        let metered =
+            self.deadline_at.is_some() || self.spec.fuel_budget.is_some() || faults.armed();
+        self.metered.store(metered, Ordering::SeqCst);
+    }
+
+    #[inline]
+    pub(crate) fn metered(&self) -> bool {
+        self.metered.load(Ordering::Relaxed)
+    }
+
+    /// Advance the per-attempt fault clock; returns the 1-based tick.
+    #[inline]
+    pub(crate) fn fault_tick(&self) -> u64 {
+        self.dispatches.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub(crate) fn injected_fault(&self, tick: u64) -> Option<InjectedFault> {
+        let at = self.fault_at.load(Ordering::Relaxed);
+        if at == 0 || tick != at {
+            return None;
+        }
+        match self.fault_kind.load(Ordering::Relaxed) {
+            1 => Some(InjectedFault::Panic),
+            2 => Some(InjectedFault::Transient),
+            _ => None,
+        }
+    }
+
+    pub(crate) fn injected_delay(&self, tick: u64) -> Option<u64> {
+        let every = self.delay_every.load(Ordering::Relaxed);
+        if every != 0 && tick % every == 0 {
+            Some(self.delay_us.load(Ordering::Relaxed))
+        } else {
+            None
+        }
+    }
+
+    pub(crate) fn deadline_at(&self) -> Option<Instant> {
+        self.deadline_at
     }
 
     fn snapshot_stats(&self) -> WsStats {
@@ -261,6 +502,13 @@ pub struct ExecutorStats {
     pub jobs_completed: u64,
     pub jobs_failed: u64,
     pub jobs_cancelled: u64,
+    /// Attempt re-runs scheduled by retry policies (a job retried twice
+    /// counts twice).
+    pub jobs_retried: u64,
+    /// Submissions rejected by the bounded admission queue.
+    pub jobs_shed: u64,
+    /// Worker threads the supervisor replaced after an uncaught death.
+    pub workers_respawned: u64,
     pub tasks_run: u64,
     pub steals: u64,
     pub closures_made: u64,
@@ -275,6 +523,9 @@ struct Totals {
     jobs_completed: AtomicU64,
     jobs_failed: AtomicU64,
     jobs_cancelled: AtomicU64,
+    jobs_retried: AtomicU64,
+    jobs_shed: AtomicU64,
+    workers_respawned: AtomicU64,
     tasks_run: AtomicU64,
     steals: AtomicU64,
     closures_made: AtomicU64,
@@ -352,6 +603,18 @@ struct Admission {
     queued: VecDeque<(Arc<JobState>, WsTask)>,
 }
 
+/// Shared fault-injection state derived from the configured
+/// [`FaultPlan`]: the one-shot worker-kill arm and its steal-attempt
+/// clock live here, everything per-job is armed into `JobState`.
+pub(crate) struct FaultState {
+    pub(crate) plan: FaultPlan,
+    /// One-shot: the first worker to satisfy `plan.kill_worker` claims
+    /// this, so the respawned worker does not die again.
+    pub(crate) kill_armed: AtomicBool,
+    /// Steal attempts observed by the kill-target worker.
+    pub(crate) steal_clock: AtomicU64,
+}
+
 /// State shared between the executor handle and its resident workers.
 pub(crate) struct ExecShared {
     pub(crate) config: ExecutorConfig,
@@ -374,6 +637,20 @@ pub(crate) struct ExecShared {
     /// stale buffer pointer only while its flag is up, which is what
     /// makes quiescent retired-buffer reclamation safe.
     pub(crate) in_steal: Vec<AtomicBool>,
+    /// Derived fault-injection state, when a plan is armed.
+    pub(crate) fault: Option<FaultState>,
+    /// Supervisor wakeup: worker deaths and newly scheduled retries
+    /// notify here; otherwise the supervisor ticks every 25ms.
+    sup_lock: Mutex<()>,
+    pub(crate) sup_cv: Condvar,
+    /// Worker ids whose threads died (uncaught panic); the supervisor
+    /// drains this and respawns each on its original deque index.
+    pub(crate) dead_workers: Mutex<Vec<usize>>,
+    /// Jobs awaiting a retry dispatch, with their due time.
+    retries: Mutex<Vec<(Instant, Arc<JobState>)>>,
+    /// Join handles indexed by worker id; `None` while being respawned
+    /// (the supervisor joins the dead handle outside this lock).
+    worker_handles: Mutex<Vec<Option<JoinHandle<()>>>>,
     totals: Totals,
 }
 
@@ -388,7 +665,7 @@ impl ExecShared {
     /// Enqueue into the task's per-job injector lane.
     pub(crate) fn inject(&self, task: WsTask) {
         {
-            let mut inj = self.injector.lock().unwrap();
+            let mut inj = plock(&self.injector);
             inj.push(task);
             self.injected.store(inj.total, Ordering::SeqCst);
         }
@@ -400,7 +677,7 @@ impl ExecShared {
         if self.injected.load(Ordering::SeqCst) == 0 {
             return None;
         }
-        let mut inj = self.injector.lock().unwrap();
+        let mut inj = plock(&self.injector);
         let task = inj.pop();
         self.injected.store(inj.total, Ordering::SeqCst);
         task
@@ -408,7 +685,7 @@ impl ExecShared {
 
     /// Snapshot of the active set (xla flush iterates it).
     pub(crate) fn active_jobs(&self) -> Vec<Arc<JobState>> {
-        self.admission.lock().unwrap().active.clone()
+        plock(&self.admission).active.clone()
     }
 
     /// Free retired deque buffers if the executor is fully quiescent: no
@@ -421,7 +698,7 @@ impl ExecShared {
     /// in [`super::deque`]: these are Relaxed/Acquire observations, not
     /// a proof against arbitrarily stale loads.)
     pub(crate) fn try_reclaim(&self) {
-        let adm = self.admission.lock().unwrap();
+        let adm = plock(&self.admission);
         if !adm.active.is_empty() || !adm.queued.is_empty() {
             return;
         }
@@ -447,6 +724,9 @@ impl ExecShared {
             jobs_completed: t.jobs_completed.load(Ordering::Relaxed),
             jobs_failed: t.jobs_failed.load(Ordering::Relaxed),
             jobs_cancelled: t.jobs_cancelled.load(Ordering::Relaxed),
+            jobs_retried: t.jobs_retried.load(Ordering::Relaxed),
+            jobs_shed: t.jobs_shed.load(Ordering::Relaxed),
+            workers_respawned: t.workers_respawned.load(Ordering::Relaxed),
             tasks_run: t.tasks_run.load(Ordering::Relaxed),
             steals: t.steals.load(Ordering::Relaxed),
             closures_made: t.closures_made.load(Ordering::Relaxed),
@@ -459,8 +739,8 @@ impl ExecShared {
 
 /// Decrement a job's outstanding-task count; the thread that takes it to
 /// zero completes the job. Every task accounted in `pending` must funnel
-/// through here exactly once — executed, discarded on cancellation,
-/// purged from the injector, or drained from the xla queue.
+/// through here exactly once — executed, discarded on abort, purged from
+/// the injector, or drained from the xla queue.
 pub(crate) fn finish_one(shared: &ExecShared, job: &Arc<JobState>) {
     if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
         complete(shared, job);
@@ -487,11 +767,46 @@ fn record_terminal(shared: &ExecShared, t: Terminal) {
     obs::metrics::counter_add(metric, 1);
 }
 
-/// Record the job's first error, abort the rest of it, and count it as
-/// failed *now* — not when (or if) its task graph finishes draining —
-/// so lifetime aggregates include jobs the pool never completed.
-pub(crate) fn fail_job(shared: &ExecShared, job: &JobState, err: anyhow::Error) {
+/// Record a job failure. If the error kind is retryable under the job's
+/// policy (and the job still has attempts, was not user-cancelled, and
+/// the executor is not shutting down), the failure arms a retry instead
+/// of becoming terminal: the current attempt is aborted, its tasks
+/// drain, and `complete` hands the job to the supervisor for a backed-
+/// off re-run. Otherwise the first error wins, the job is aborted, and
+/// it is counted failed *now* — not when (or if) its task graph finishes
+/// draining — so lifetime aggregates include jobs the pool never
+/// completed.
+pub(crate) fn fail_job(shared: &ExecShared, job: &JobState, err: JobError) {
+    let kind = err.kind();
+    let policy = &job.spec.retry;
+    let retryable =
+        kind.retryable() || (policy.retry_on_panic && kind == JobErrorKind::Panicked);
+    let retry = retryable
+        && job.attempt.load(Ordering::SeqCst) < policy.max_attempts
+        && !job.user_cancelled.load(Ordering::SeqCst)
+        && !shared.shutdown.load(Ordering::SeqCst);
+    if retry {
+        let armed = {
+            // A hard error recorded by another task outranks the retry.
+            let slot = plock(&job.error);
+            slot.is_none()
+        };
+        if armed {
+            job.retry_pending.store(true, Ordering::SeqCst);
+            job.aborted.store(true, Ordering::SeqCst);
+            if obs::trace_enabled() {
+                obs::trace::async_instant(
+                    "retry-armed",
+                    "job",
+                    job.id.0,
+                    vec![("kind", ArgVal::Str(kind.tag().to_string()))],
+                );
+            }
+            return;
+        }
+    }
     job.fail(err);
+    job.retry_pending.store(false, Ordering::SeqCst);
     if !job.classified.swap(true, Ordering::SeqCst) {
         record_terminal(shared, Terminal::Failed);
     }
@@ -508,14 +823,69 @@ fn roll_counters(shared: &ExecShared, s: &WsStats) {
     t.instrs.fetch_add(s.instrs, Ordering::Relaxed);
 }
 
-/// End of a job's lifecycle: sweep its closure arena, roll its counters
-/// into the executor totals, free its admission slot (admitting the next
-/// queued job), wake joiners, and try idle reclamation.
+/// Hand a drained, retry-armed job to the supervisor: re-arm its
+/// per-attempt state (fault schedule, meters, abort flag) and enqueue it
+/// with its deterministic backoff due-time.
+fn schedule_retry(shared: &ExecShared, job: &Arc<JobState>) {
+    let next = job.attempt.fetch_add(1, Ordering::SeqCst) + 1;
+    // Discard any partial root result of the failed attempt.
+    *plock(&job.result) = None;
+    let faults = shared
+        .fault
+        .as_ref()
+        .map(|f| f.plan.for_job(job.id.0, next))
+        .unwrap_or_default();
+    job.arm_faults(faults);
+    job.pending.store(1, Ordering::SeqCst);
+    job.aborted.store(false, Ordering::SeqCst);
+    let delay = job.spec.retry.delay_for(job.id.0, next);
+    shared.totals.jobs_retried.fetch_add(1, Ordering::Relaxed);
+    obs::metrics::counter_add("ws.jobs_retried", 1);
+    if obs::trace_enabled() {
+        obs::trace::async_instant(
+            "retry",
+            "job",
+            job.id.0,
+            vec![
+                ("attempt", ArgVal::I64(next as i64)),
+                ("delay_ms", ArgVal::F64(delay.as_secs_f64() * 1e3)),
+            ],
+        );
+    }
+    plock(&shared.retries).push((Instant::now() + delay, Arc::clone(job)));
+    shared.sup_cv.notify_all();
+}
+
+/// End of one attempt's task drain. Either the job retries (armed by
+/// [`fail_job`], not overtaken by a hard error, cancel, or shutdown) —
+/// or this is the end of the job's lifecycle: sweep its closure arena,
+/// roll its counters into the executor totals, free its admission slot
+/// (admitting the next queued job), wake joiners, and try idle
+/// reclamation.
 fn complete(shared: &ExecShared, job: &Arc<JobState>) {
-    // Reclaims every closure a cancelled job left unfired; a no-op for a
-    // cleanly drained graph. Runs strictly after the job's last task
-    // (pending just hit zero), so nothing can still resolve handles.
+    // Reclaims every closure an aborted attempt left unfired; a no-op
+    // for a cleanly drained graph. Runs strictly after the attempt's
+    // last task (pending just hit zero), so nothing can still resolve
+    // handles. A retry re-inserts from scratch.
     job.registry.clear();
+
+    if job.retry_pending.swap(false, Ordering::SeqCst) && plock(&job.error).is_none() {
+        if job.user_cancelled.load(Ordering::SeqCst) {
+            // Cancelled while the retry was pending: terminal after all
+            // (cancel() already classified the job as cancelled).
+            job.fail(JobError::cancelled(job.id));
+        } else if shared.shutdown.load(Ordering::SeqCst) {
+            job.fail(JobError::internal(format!(
+                "executor shut down before {} could retry",
+                job.id
+            )));
+        } else {
+            // Not terminal: the job keeps its admission slot and waits
+            // out its backoff on the supervisor's timer.
+            schedule_retry(shared, job);
+            return;
+        }
+    }
 
     if !job.counters_rolled.swap(true, Ordering::SeqCst) {
         roll_counters(shared, &job.snapshot_stats());
@@ -525,11 +895,11 @@ fn complete(shared: &ExecShared, job: &Arc<JobState>) {
     // cleanly (or was cancelled after delivering its result, which
     // counts as completed).
     if !job.classified.swap(true, Ordering::SeqCst) {
-        let failed = job.error.lock().unwrap().is_some();
-        let delivered = job.result.lock().unwrap().is_some();
+        let failed = plock(&job.error).is_some();
+        let delivered = plock(&job.result).is_some();
         let terminal = if failed {
             Terminal::Failed
-        } else if !delivered && job.cancelled.load(Ordering::SeqCst) {
+        } else if !delivered && job.aborted.load(Ordering::SeqCst) {
             Terminal::Cancelled
         } else {
             Terminal::Completed
@@ -537,7 +907,7 @@ fn complete(shared: &ExecShared, job: &Arc<JobState>) {
         record_terminal(shared, terminal);
     }
     let now = Instant::now();
-    *job.completed_at.lock().unwrap() = Some(now);
+    *plock(&job.completed_at) = Some(now);
     let latency = now.duration_since(job.submitted_at);
     obs::metrics::observe_ms("ws.job.latency_ms", latency);
     if obs::trace_enabled() {
@@ -551,7 +921,7 @@ fn complete(shared: &ExecShared, job: &Arc<JobState>) {
 
     // Free the admission slot; admit the longest-waiting queued job.
     let next_root = {
-        let mut adm = shared.admission.lock().unwrap();
+        let mut adm = plock(&shared.admission);
         adm.active.retain(|j| j.id != job.id);
         if adm.active.len() < shared.config.max_active_jobs {
             if let Some((next, root)) = adm.queued.pop_front() {
@@ -572,26 +942,154 @@ fn complete(shared: &ExecShared, job: &Arc<JobState>) {
     }
 
     {
-        let mut done = job.done.lock().unwrap();
+        let mut done = plock(&job.done);
         *done = true;
     }
     job.done_cv.notify_all();
     shared.try_reclaim();
 }
 
+/// Supervisor: respawns dead workers and dispatches due retries. Worker
+/// deaths and new retries notify `sup_cv`; the idle tick (25ms) bounds
+/// the latency of anything a notify raced past.
+fn supervisor_loop(shared: &Arc<ExecShared>) {
+    if obs::trace_enabled() {
+        obs::trace::set_thread_name("ws-supervisor");
+    }
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        respawn_dead_workers(shared);
+        let next_due = pump_retries(shared);
+        let wait = match next_due {
+            Some(due) => due
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_micros(100)),
+            None => Duration::from_millis(25),
+        };
+        let guard = plock(&shared.sup_lock);
+        let _ = shared
+            .sup_cv
+            .wait_timeout(guard, wait)
+            .unwrap_or_else(|p| p.into_inner());
+    }
+}
+
+/// Respawn every worker registered dead, on its original deque index.
+/// The old thread is joined first (outside the handle table's lock), so
+/// at most one thread ever owns a worker id; tasks left in the dead
+/// worker's deque stay stealable throughout and the respawned worker
+/// resumes draining them.
+fn respawn_dead_workers(shared: &Arc<ExecShared>) {
+    loop {
+        let wid = match plock(&shared.dead_workers).pop() {
+            Some(wid) => wid,
+            None => return,
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let old = plock(&shared.worker_handles)[wid].take();
+        if let Some(handle) = old {
+            let _ = handle.join();
+        }
+        shared.totals.workers_respawned.fetch_add(1, Ordering::Relaxed);
+        obs::metrics::counter_add("ws.workers_respawned", 1);
+        if obs::trace_enabled() {
+            obs::trace::instant(
+                "worker-respawn",
+                "ws",
+                vec![("wid", ArgVal::I64(wid as i64))],
+            );
+        }
+        let sh = Arc::clone(shared);
+        let spawned = std::thread::Builder::new()
+            .name(format!("bombyx-ws-{wid}"))
+            .spawn(move || worker::worker_loop(wid, sh));
+        if let Ok(handle) = spawned {
+            plock(&shared.worker_handles)[wid] = Some(handle);
+        }
+        // A failed respawn (resource exhaustion) leaves the slot empty;
+        // the pool runs degraded rather than panicking the supervisor.
+    }
+}
+
+/// Dispatch due retries (and finish off retries whose job was cancelled
+/// or the executor shut down while they waited). Returns the earliest
+/// still-pending due time.
+fn pump_retries(shared: &Arc<ExecShared>) -> Option<Instant> {
+    let now = Instant::now();
+    let mut due_jobs = Vec::new();
+    let mut next_due: Option<Instant> = None;
+    {
+        let mut retries = plock(&shared.retries);
+        let mut i = 0;
+        while i < retries.len() {
+            let (due, job) = &retries[i];
+            let take = *due <= now
+                || job.user_cancelled.load(Ordering::SeqCst)
+                || shared.shutdown.load(Ordering::SeqCst);
+            if take {
+                due_jobs.push(retries.swap_remove(i).1);
+            } else {
+                next_due = Some(next_due.map_or(*due, |d| d.min(*due)));
+                i += 1;
+            }
+        }
+    }
+    for job in due_jobs {
+        if job.user_cancelled.load(Ordering::SeqCst) {
+            job.fail(JobError::cancelled(job.id));
+            finish_one(shared, &job);
+        } else if shared.shutdown.load(Ordering::SeqCst) {
+            job.fail(JobError::internal(format!(
+                "executor shut down before {} could retry",
+                job.id
+            )));
+            finish_one(shared, &job);
+        } else {
+            if obs::trace_enabled() {
+                obs::trace::async_instant(
+                    "retry-dispatch",
+                    "job",
+                    job.id.0,
+                    vec![("attempt", ArgVal::I64(job.attempt.load(Ordering::SeqCst) as i64))],
+                );
+            }
+            let root = WsTask {
+                job: Arc::clone(&job),
+                task: job.root_fid,
+                args: ArgList::from_slice(&job.root_args),
+                cont: Cont::Root,
+            };
+            shared.inject(root);
+        }
+    }
+    next_due
+}
+
 /// The resident executor: a fixed pool of worker threads draining tasks
-/// from every submitted job. Dropping it shuts the pool down (in-flight
-/// jobs are failed so joiners cannot hang).
+/// from every submitted job, plus a supervisor thread for respawns and
+/// retries. Dropping it shuts the pool down (in-flight jobs are failed
+/// so joiners cannot hang).
 pub struct Executor {
     shared: Arc<ExecShared>,
-    threads: Vec<std::thread::JoinHandle<()>>,
+    supervisor: Option<JoinHandle<()>>,
     next_job: AtomicU64,
 }
 
 impl Executor {
-    /// Validate the configuration and spawn the resident worker pool.
+    /// Validate the configuration and spawn the resident worker pool and
+    /// its supervisor. When the config carries no fault plan, the
+    /// `BOMBYX_CHAOS=<seed>` environment variable arms the standard
+    /// chaos mix ([`FaultPlan::chaos`]).
     pub fn new(config: ExecutorConfig) -> Result<Executor> {
         config.validate()?;
+        let plan = match &config.fault {
+            Some(p) => Some(p.clone()),
+            None => FaultPlan::from_env()?,
+        };
         let workers = config.ws.workers;
         let shared = Arc::new(ExecShared {
             config,
@@ -605,49 +1103,103 @@ impl Executor {
             idle_cv: Condvar::new(),
             idle_workers: AtomicU64::new(0),
             in_steal: (0..workers).map(|_| AtomicBool::new(false)).collect(),
+            fault: plan.map(|plan| FaultState {
+                plan,
+                kill_armed: AtomicBool::new(true),
+                steal_clock: AtomicU64::new(0),
+            }),
+            sup_lock: Mutex::new(()),
+            sup_cv: Condvar::new(),
+            dead_workers: Mutex::new(Vec::new()),
+            retries: Mutex::new(Vec::new()),
+            worker_handles: Mutex::new((0..workers).map(|_| None).collect()),
             totals: Totals::default(),
         });
-        let mut threads = Vec::with_capacity(workers);
+        let teardown = |shared: &Arc<ExecShared>| {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.idle_cv.notify_all();
+            let handles: Vec<_> = plock(&shared.worker_handles)
+                .iter_mut()
+                .filter_map(Option::take)
+                .collect();
+            for t in handles {
+                let _ = t.join();
+            }
+        };
         for wid in 0..workers {
             let sh = Arc::clone(&shared);
             let spawned = std::thread::Builder::new()
                 .name(format!("bombyx-ws-{wid}"))
-                .spawn(move || worker::worker_loop(wid, &sh));
+                .spawn(move || worker::worker_loop(wid, sh));
             match spawned {
-                Ok(handle) => threads.push(handle),
+                Ok(handle) => plock(&shared.worker_handles)[wid] = Some(handle),
                 Err(e) => {
-                    shared.shutdown.store(true, Ordering::SeqCst);
-                    shared.idle_cv.notify_all();
-                    for t in threads {
-                        let _ = t.join();
-                    }
+                    teardown(&shared);
                     bail!("spawning ws worker {wid}: {e}");
                 }
             }
         }
-        Ok(Executor { shared, threads, next_job: AtomicU64::new(0) })
+        let sh = Arc::clone(&shared);
+        let supervisor = match std::thread::Builder::new()
+            .name("bombyx-ws-supervisor".to_string())
+            .spawn(move || supervisor_loop(&sh))
+        {
+            Ok(handle) => Some(handle),
+            Err(e) => {
+                teardown(&shared);
+                bail!("spawning ws supervisor: {e}");
+            }
+        };
+        Ok(Executor { shared, supervisor, next_job: AtomicU64::new(0) })
     }
 
     pub fn workers(&self) -> usize {
         self.shared.deques.len()
     }
 
-    /// Submit a job. Fails fast (before consuming an admission slot) if
-    /// the entry task does not exist in the job's kernel program.
-    pub fn submit(&self, job: Job) -> Result<JobHandle> {
-        let Job { kernels, memory, entry, args, xla_sink } = job;
+    /// Submit a job. Fails fast with a structured [`JobError`] — before
+    /// consuming an admission slot — if the entry task does not exist,
+    /// the (substituted) spec is invalid, or the bounded admission queue
+    /// is full ([`JobErrorKind::Shed`]).
+    pub fn submit(&self, job: Job) -> Result<JobHandle, JobError> {
+        let Job { kernels, memory, entry, args, xla_sink, spec } = job;
         let fid = kernels
             .func_by_name(&entry)
-            .ok_or_else(|| anyhow!("no task named `{entry}`"))?;
+            .ok_or_else(|| JobError::internal(format!("no task named `{entry}`")))?;
+        // A default spec inherits the executor-wide default (so chaos
+        // floods can set a pool-level retry policy without threading it
+        // through every submit site).
+        let spec = if spec == JobSpec::default() {
+            self.shared.config.default_spec.clone()
+        } else {
+            spec
+        };
+        if let Err(e) = spec.validate() {
+            return Err(JobError::internal(e.to_string()));
+        }
         let id = JobId(self.next_job.fetch_add(1, Ordering::Relaxed));
+        let deadline_at = spec.deadline.map(|d| Instant::now() + d);
         let state = Arc::new(JobState {
             id,
             entry,
             kernels,
             memory: Arc::new(memory),
             registry: Registry::new(self.shared.config.arena_shards),
+            spec,
+            root_fid: fid,
+            root_args: args.clone(),
+            deadline_at,
             pending: AtomicU64::new(1),
-            cancelled: AtomicBool::new(false),
+            aborted: AtomicBool::new(false),
+            user_cancelled: AtomicBool::new(false),
+            attempt: AtomicU32::new(1),
+            retry_pending: AtomicBool::new(false),
+            dispatches: AtomicU64::new(0),
+            metered: AtomicBool::new(false),
+            fault_kind: AtomicU8::new(0),
+            fault_at: AtomicU64::new(0),
+            delay_every: AtomicU64::new(0),
+            delay_us: AtomicU64::new(0),
             xla_queue: Mutex::new(Vec::new()),
             xla_sink,
             counters: JobCounters::default(),
@@ -661,12 +1213,45 @@ impl Executor {
             submitted_at: Instant::now(),
             completed_at: Mutex::new(None),
         });
-        let root = WsTask {
+        state.arm_faults(
+            self.shared
+                .fault
+                .as_ref()
+                .map(|f| f.plan.for_job(id.0, 1))
+                .unwrap_or_default(),
+        );
+        let mut root = Some(WsTask {
             job: Arc::clone(&state),
             task: fid,
             args: ArgList::from_slice(&args),
             cont: Cont::Root,
+        });
+        enum Adm {
+            Active,
+            Queued,
+            Shed(usize),
+        }
+        let decision = {
+            let mut adm = plock(&self.shared.admission);
+            if adm.active.len() < self.shared.config.max_active_jobs {
+                adm.active.push(Arc::clone(&state));
+                Adm::Active
+            } else if adm.queued.len() < self.shared.config.max_queued_jobs {
+                adm.queued
+                    .push_back((Arc::clone(&state), root.take().expect("root built above")));
+                Adm::Queued
+            } else {
+                Adm::Shed(adm.queued.len())
+            }
         };
+        if let Adm::Shed(queued) = decision {
+            self.shared.totals.jobs_shed.fetch_add(1, Ordering::Relaxed);
+            obs::metrics::counter_add("ws.jobs_shed", 1);
+            if obs::trace_enabled() {
+                obs::trace::instant("shed", "ws", vec![("job", ArgVal::I64(id.0 as i64))]);
+            }
+            return Err(JobError::shed(id, queued, self.shared.config.max_queued_jobs));
+        }
         self.shared.totals.jobs_submitted.fetch_add(1, Ordering::Relaxed);
         obs::metrics::counter_add("ws.jobs_submitted", 1);
         if obs::trace_enabled() {
@@ -679,21 +1264,12 @@ impl Executor {
                 vec![("job", ArgVal::I64(id.0 as i64))],
             );
         }
-        let mut admitted = Some(root);
-        {
-            let mut adm = self.shared.admission.lock().unwrap();
-            if adm.active.len() < self.shared.config.max_active_jobs {
-                adm.active.push(Arc::clone(&state));
-            } else {
-                adm.queued.push_back((Arc::clone(&state), admitted.take().unwrap()));
-            }
-        }
-        let went_in = admitted.is_some();
-        if let Some(root) = admitted {
+        let admitted = matches!(decision, Adm::Active);
+        if let Some(root) = root {
             self.shared.inject(root);
         }
         if obs::trace_enabled() {
-            let mark = if went_in { "admit" } else { "queue" };
+            let mark = if admitted { "admit" } else { "queue" };
             obs::trace::async_instant(mark, "job", id.0, Vec::new());
         }
         Ok(JobHandle { job: state, shared: Arc::clone(&self.shared) })
@@ -723,6 +1299,9 @@ impl Executor {
         obs::metrics::counter_set("ws.jobs_completed", s.jobs_completed);
         obs::metrics::counter_set("ws.jobs_failed", s.jobs_failed);
         obs::metrics::counter_set("ws.jobs_cancelled", s.jobs_cancelled);
+        obs::metrics::counter_set("ws.jobs_retried", s.jobs_retried);
+        obs::metrics::counter_set("ws.jobs_shed", s.jobs_shed);
+        obs::metrics::counter_set("ws.workers_respawned", s.workers_respawned);
         obs::metrics::counter_set("ws.tasks_run", s.tasks_run);
         obs::metrics::counter_set("ws.steals", s.steals);
         obs::metrics::counter_set("ws.closures_made", s.closures_made);
@@ -738,29 +1317,58 @@ impl Drop for Executor {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.idle_cv.notify_all();
-        for t in self.threads.drain(..) {
+        self.shared.sup_cv.notify_all();
+        // Supervisor first: after it joins, nothing respawns workers or
+        // dispatches retries concurrently with this teardown.
+        if let Some(sup) = self.supervisor.take() {
+            let _ = sup.join();
+        }
+        let handles: Vec<_> = plock(&self.shared.worker_handles)
+            .iter_mut()
+            .filter_map(Option::take)
+            .collect();
+        for t in handles {
             let _ = t.join();
+        }
+        // Jobs still waiting out a retry backoff: fail them (their
+        // pending count is the un-injected root) *before* draining the
+        // injector — their completion may admit a queued job's root.
+        let waiting: Vec<Arc<JobState>> =
+            plock(&self.shared.retries).drain(..).map(|(_, j)| j).collect();
+        for job in waiting {
+            job.fail(JobError::internal(format!(
+                "executor shut down before {} could retry",
+                job.id
+            )));
+            finish_one(&self.shared, &job);
         }
         // Workers are gone; fail whatever is still in flight so late
         // joiners see an error instead of hanging on the condvar.
         let orphans = {
-            let mut inj = self.shared.injector.lock().unwrap();
+            let mut inj = plock(&self.shared.injector);
             let tasks = inj.drain_all();
             self.shared.injected.store(0, Ordering::SeqCst);
             tasks
         };
         drop(orphans);
         let leftovers: Vec<Arc<JobState>> = {
-            let mut adm = self.shared.admission.lock().unwrap();
+            let mut adm = plock(&self.shared.admission);
             let mut jobs = std::mem::take(&mut adm.active);
             jobs.extend(adm.queued.drain(..).map(|(j, _)| j));
             jobs
         };
         for job in leftovers {
-            // `fail_job` (not a bare `fail`) so drop-orphaned jobs land
-            // in `jobs_failed`, and their counters roll in — lifetime
-            // aggregates must add up even for jobs complete() never saw.
-            fail_job(&self.shared, &job, anyhow!("executor shut down with {} in flight", job.id));
+            // `fail_job` semantics (classify as failed) so drop-orphaned
+            // jobs land in `jobs_failed`, and their counters roll in —
+            // lifetime aggregates must add up even for jobs complete()
+            // never saw.
+            job.fail(JobError::internal(format!(
+                "executor shut down with {} in flight",
+                job.id
+            )));
+            if !job.classified.swap(true, Ordering::SeqCst) {
+                record_terminal(&self.shared, Terminal::Failed);
+            }
             if !job.counters_rolled.swap(true, Ordering::SeqCst) {
                 roll_counters(&self.shared, &job.snapshot_stats());
             }
@@ -774,7 +1382,7 @@ impl Drop for Executor {
                 );
             }
             {
-                let mut done = job.done.lock().unwrap();
+                let mut done = plock(&job.done);
                 *done = true;
             }
             job.done_cv.notify_all();
@@ -794,15 +1402,19 @@ impl JobHandle {
     }
 
     pub fn is_finished(&self) -> bool {
-        *self.job.done.lock().unwrap()
+        *plock(&self.job.done)
     }
 
     /// Block until the job reaches the end of its lifecycle (result,
-    /// error, or cancellation drained).
+    /// error, or cancellation drained — across every retry attempt).
     pub fn wait(&self) {
-        let mut done = self.job.done.lock().unwrap();
+        let mut done = plock(&self.job.done);
         while !*done {
-            done = self.job.done_cv.wait(done).unwrap();
+            done = self
+                .job
+                .done_cv
+                .wait(done)
+                .unwrap_or_else(|p| p.into_inner());
         }
         drop(done);
         self.shared.try_reclaim();
@@ -811,35 +1423,50 @@ impl JobHandle {
     /// Wait and consume the handle: root result, final memory image, and
     /// this job's stats. The memory is the `Arc` shared with any tasks
     /// that ran it — sole ownership returns once the executor (or at
-    /// least this job's last task) is gone.
-    pub fn join(self) -> Result<(Value, Arc<SharedMemory>, WsStats)> {
+    /// least this job's last task) is gone. Failures are structured
+    /// [`JobError`]s; `?` into an `anyhow::Result` keeps working.
+    pub fn join(self) -> Result<(Value, Arc<SharedMemory>, WsStats), JobError> {
         self.wait();
         let stats = self.job.snapshot_stats();
-        if let Some(err) = self.job.error.lock().unwrap().take() {
+        if let Some(err) = plock(&self.job.error).take() {
             return Err(err);
         }
-        let result = self.job.result.lock().unwrap().take();
+        let result = plock(&self.job.result).take();
         match result {
             Some(value) => Ok((value, Arc::clone(&self.job.memory), stats)),
-            None if self.job.is_cancelled() => Err(anyhow!("{} cancelled", self.job.id)),
-            None => Err(anyhow!("task graph drained without a root result")),
+            None if self.job.is_aborted() => Err(JobError::cancelled(self.job.id)),
+            None => Err(JobError::internal("task graph drained without a root result")),
         }
+    }
+
+    /// The terminal error kind, if the job has failed (readable without
+    /// consuming the handle — the flood report's outcome breakdown).
+    pub fn error_kind(&self) -> Option<JobErrorKind> {
+        plock(&self.job.error).as_ref().map(|e| e.kind())
+    }
+
+    /// Attempts started so far (1 = never retried).
+    pub fn attempts(&self) -> u32 {
+        self.job.attempt.load(Ordering::SeqCst)
     }
 
     /// Cooperatively cancel the job. Queued-but-unstarted jobs complete
     /// immediately; in-flight jobs stop at the next dispatch boundary of
     /// each of their tasks, and the job's injector lane, xla queue, and
-    /// closure arena are reclaimed. A job may still complete normally if
-    /// its root result was already delivered.
+    /// closure arena are reclaimed. Cancellation is sticky across
+    /// retries: a job waiting out a retry backoff is finished off by the
+    /// supervisor instead of re-running. A job may still complete
+    /// normally if its root result was already delivered.
     pub fn cancel(&self) {
-        if self.job.cancelled.swap(true, Ordering::SeqCst) {
+        if self.job.user_cancelled.swap(true, Ordering::SeqCst) {
             return;
         }
+        self.job.aborted.store(true, Ordering::SeqCst);
         // Count the cancellation *now* (unless the root result was
         // already delivered — that job still completes normally), so
         // executor totals include jobs whose graphs take a while to
         // drain, or never do.
-        let delivered = self.job.result.lock().unwrap().is_some();
+        let delivered = plock(&self.job.result).is_some();
         if !delivered && !self.job.classified.swap(true, Ordering::SeqCst) {
             record_terminal(&self.shared, Terminal::Cancelled);
         }
@@ -849,7 +1476,7 @@ impl JobHandle {
         // Still parked in the admission queue? Its root never ran: drop
         // the parked task and retire the job's only pending count.
         let parked = {
-            let mut adm = self.shared.admission.lock().unwrap();
+            let mut adm = plock(&self.shared.admission);
             adm.queued
                 .iter()
                 .position(|(j, _)| j.id == self.job.id)
@@ -863,7 +1490,7 @@ impl JobHandle {
         // In flight: purge the injector lane and the xla queue — workers
         // discard everything else at dispatch boundaries.
         let purged = {
-            let mut inj = self.shared.injector.lock().unwrap();
+            let mut inj = plock(&self.shared.injector);
             let tasks = inj.purge(self.job.id);
             self.shared.injected.store(inj.total, Ordering::SeqCst);
             tasks
@@ -874,7 +1501,7 @@ impl JobHandle {
             finish_one(&self.shared, &job);
         }
         let drained: Vec<_> = {
-            let mut q = self.job.xla_queue.lock().unwrap();
+            let mut q = plock(&self.job.xla_queue);
             q.drain(..).collect()
         };
         if !drained.is_empty() {
@@ -886,6 +1513,9 @@ impl JobHandle {
             }
         }
         self.shared.idle_cv.notify_all();
+        // Wake the supervisor so a retry-parked job finishes without
+        // waiting out its backoff.
+        self.shared.sup_cv.notify_all();
     }
 
     /// Live closures in this job's arena (0 after completion or a
@@ -901,11 +1531,7 @@ impl JobHandle {
 
     /// Submission-to-completion latency, once finished.
     pub fn latency(&self) -> Option<Duration> {
-        self.job
-            .completed_at
-            .lock()
-            .unwrap()
-            .map(|t| t.duration_since(self.job.submitted_at))
+        plock(&self.job.completed_at).map(|t| t.duration_since(self.job.submitted_at))
     }
 }
 
@@ -930,7 +1556,32 @@ mod tests {
     }
 
     #[test]
+    fn retry_backoff_is_deterministic_and_exponential() {
+        let p = RetryPolicy {
+            max_attempts: 6,
+            backoff: Duration::from_millis(10),
+            retry_on_panic: false,
+        };
+        for attempt in 2..=6u32 {
+            // Pure function of (job, attempt).
+            assert_eq!(p.delay_for(7, attempt), p.delay_for(7, attempt));
+            // Doubling base, jitter within +25%.
+            let base = Duration::from_millis(10) * (1u32 << (attempt - 2));
+            let d = p.delay_for(7, attempt);
+            assert!(d >= base, "attempt {attempt}: {d:?} < base {base:?}");
+            assert!(d <= base.mul_f64(1.25), "attempt {attempt}: {d:?} over jitter cap");
+        }
+        // Different jobs jitter differently somewhere across a few ids.
+        assert!((0..16u64).any(|j| p.delay_for(j, 2) != p.delay_for(j + 16, 2)));
+    }
+
+    #[test]
     fn config_validation_rejects_bad_values() {
+        let spec_with = |f: fn(&mut JobSpec)| {
+            let mut s = JobSpec::default();
+            f(&mut s);
+            s
+        };
         let cases: Vec<(ExecutorConfig, &str)> = vec![
             (
                 ExecutorConfig {
@@ -955,6 +1606,66 @@ mod tests {
             (
                 ExecutorConfig { max_inflight_per_job: 0, ..ExecutorConfig::default() },
                 "max_inflight_per_job",
+            ),
+            (
+                ExecutorConfig {
+                    max_queued_jobs: MAX_QUEUED_JOBS + 1,
+                    ..ExecutorConfig::default()
+                },
+                "max_queued_jobs",
+            ),
+            (
+                ExecutorConfig {
+                    default_spec: spec_with(|s| s.deadline = Some(Duration::ZERO)),
+                    ..ExecutorConfig::default()
+                },
+                "deadline",
+            ),
+            (
+                ExecutorConfig {
+                    default_spec: spec_with(|s| s.fuel_budget = Some(0)),
+                    ..ExecutorConfig::default()
+                },
+                "fuel_budget",
+            ),
+            (
+                ExecutorConfig {
+                    default_spec: spec_with(|s| s.retry.max_attempts = 0),
+                    ..ExecutorConfig::default()
+                },
+                "max_attempts",
+            ),
+            (
+                ExecutorConfig {
+                    default_spec: spec_with(|s| s.retry.max_attempts = MAX_RETRY_ATTEMPTS + 1),
+                    ..ExecutorConfig::default()
+                },
+                "max_attempts",
+            ),
+            (
+                ExecutorConfig {
+                    default_spec: spec_with(|s| s.retry.backoff = Duration::from_secs(61)),
+                    ..ExecutorConfig::default()
+                },
+                "backoff",
+            ),
+            (
+                ExecutorConfig {
+                    fault: Some(FaultPlan { panic_rate: 1.5, ..FaultPlan::disabled() }),
+                    ..ExecutorConfig::default()
+                },
+                "panic_rate",
+            ),
+            (
+                ExecutorConfig {
+                    ws: WsConfig { workers: 2, steal_tries: 4 },
+                    fault: Some(FaultPlan {
+                        kill_worker: Some((2, 1)),
+                        ..FaultPlan::disabled()
+                    }),
+                    ..ExecutorConfig::default()
+                },
+                "kill_worker",
             ),
         ];
         for (cfg, needle) in cases {

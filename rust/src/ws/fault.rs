@@ -1,0 +1,297 @@
+//! Deterministic fault injection for the resident executor.
+//!
+//! A [`FaultPlan`] is a *seeded schedule* of faults, not a random one:
+//! the faults a job sees are a pure function of `(plan seed, job id,
+//! attempt)`, and the dispatch index at which a fault fires is matched
+//! against a per-attempt atomic fault clock whose ticks are the job's
+//! own dispatch sequence — program-deterministic for non-xla jobs. Two
+//! floods of the same corpus under the same seed therefore produce the
+//! same per-job [`super::JobError`] outcome, which is what makes chaos
+//! testing assertable in CI instead of flaky.
+//!
+//! Three injection seams (mirroring where real faults bite):
+//!
+//! - **dispatch** (`Machine::on_dispatch`): panics and transient
+//!   failures at an exact dispatch index, plus periodic micro-delays;
+//! - **steal** (the worker sourcing loop): timing-only delays, plus the
+//!   one-shot [`FaultPlan::kill_worker`] hook that panics a worker
+//!   *outside* the task catch — exercising the supervisor respawn path;
+//! - **xla flush** (`flush_job_xla`): the same per-job fault clock ticks
+//!   once per flushed batch (flush timing is scheduler-dependent, so
+//!   outcome determinism is only guaranteed for jobs without xla tasks).
+//!
+//! Armed via `ExecutorConfig::fault` or the `BOMBYX_CHAOS=<seed>`
+//! environment variable (applied by `Executor::new` when the config
+//! carries no plan — tests that must stay clean under an ambient chaos
+//! env pin `fault: Some(FaultPlan::disabled())`).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Environment variable carrying a chaos seed (`u64`).
+pub const ENV_CHAOS: &str = "BOMBYX_CHAOS";
+
+/// What an injected fault does when its trigger tick is reached.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum InjectedFault {
+    /// `panic!` on the executing worker — exercises `catch_unwind`
+    /// containment (or, via `kill_worker`, the supervisor respawn).
+    Panic,
+    /// Fail the job with a retryable [`super::JobErrorKind::Transient`].
+    Transient,
+}
+
+/// A fault pinned to one `(job, attempt)` — the test hook for exact
+/// containment/retry scenarios. Forced faults bypass the seeded rates.
+#[derive(Clone, Copy, Debug)]
+pub struct ForcedFault {
+    /// Job id (submission order within the executor).
+    pub job: u64,
+    /// 1-based attempt the fault fires on.
+    pub attempt: u32,
+    pub kind: InjectedFault,
+    /// 1-based fault-clock tick (dispatch index) at which to fire.
+    pub at: u64,
+}
+
+/// Seeded, deterministic fault schedule. See the module docs.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Probability that a given `(job, attempt)` gets an injected panic.
+    pub panic_rate: f64,
+    /// Probability of an injected transient failure (retryable). Rolled
+    /// from the same draw as `panic_rate`; the two must sum to <= 1.
+    pub transient_rate: f64,
+    /// Probability that a `(job, attempt)` gets periodic micro-delays at
+    /// dispatch boundaries (timing jitter, never an error).
+    pub delay_rate: f64,
+    /// Fault triggers are drawn uniformly from `[1, max_trigger]`
+    /// fault-clock ticks; jobs that finish earlier outrun their fault.
+    pub max_trigger: u64,
+    /// First fault-free attempt: attempts `>= fault_free_after` get no
+    /// seeded faults, so a retry policy with more attempts than this
+    /// always converges (chaos floods stay assertable). `0` disables
+    /// the cutoff. Forced faults ignore it.
+    pub fault_free_after: u32,
+    /// One-shot forced worker death: `(worker id, after N steal
+    /// attempts)`. Panics outside the task catch, so the thread dies and
+    /// the supervisor must respawn it.
+    pub kill_worker: Option<(usize, u64)>,
+    /// Exact-scenario overrides checked before the seeded rates.
+    pub force: Vec<ForcedFault>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing. Distinct from `config.fault = None`:
+    /// an explicit disabled plan also suppresses the `BOMBYX_CHAOS` env
+    /// fallback, which is how tests stay deterministic under the CI
+    /// chaos-smoke environment.
+    pub fn disabled() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            panic_rate: 0.0,
+            transient_rate: 0.0,
+            delay_rate: 0.0,
+            max_trigger: 1,
+            fault_free_after: 0,
+            kill_worker: None,
+            force: Vec::new(),
+        }
+    }
+
+    /// The standard chaos mix used by `--chaos <seed>` and the env
+    /// fallback: panics, transients, and delays at moderate rates, with
+    /// triggers early enough that small corpus jobs still reach them,
+    /// and a fault-free horizon so retries converge.
+    pub fn chaos(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            panic_rate: 0.10,
+            transient_rate: 0.25,
+            delay_rate: 0.20,
+            max_trigger: 200,
+            fault_free_after: 4,
+            kill_worker: None,
+            force: Vec::new(),
+        }
+    }
+
+    /// Read `BOMBYX_CHAOS` — `Ok(None)` when unset or empty, a
+    /// descriptive error when set but unparseable.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var(ENV_CHAOS) {
+            Ok(raw) if !raw.trim().is_empty() => {
+                let seed = raw.trim().parse::<u64>().map_err(|_| {
+                    anyhow!("{ENV_CHAOS}: expected a u64 chaos seed, got `{raw}`")
+                })?;
+                Ok(Some(FaultPlan::chaos(seed)))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Validate before any executor is built; errors name the offending
+    /// field like the rest of `ExecutorConfig::validate`.
+    pub fn validate(&self) -> Result<()> {
+        for (name, rate) in [
+            ("fault.panic_rate", self.panic_rate),
+            ("fault.transient_rate", self.transient_rate),
+            ("fault.delay_rate", self.delay_rate),
+        ] {
+            if !rate.is_finite() || !(0.0..=1.0).contains(&rate) {
+                bail!("executor config: {name} must be within [0, 1] (got {rate})");
+            }
+        }
+        if self.panic_rate + self.transient_rate > 1.0 {
+            bail!(
+                "executor config: fault.panic_rate + fault.transient_rate must be <= 1 (got {})",
+                self.panic_rate + self.transient_rate
+            );
+        }
+        if self.max_trigger == 0 {
+            bail!("executor config: fault.max_trigger must be >= 1 (got 0)");
+        }
+        Ok(())
+    }
+
+    /// The faults one `(job, attempt)` will see — a pure function of the
+    /// plan and its arguments (same inputs, same schedule, every run).
+    pub fn for_job(&self, job: u64, attempt: u32) -> JobFaults {
+        if let Some(f) = self.force.iter().find(|f| f.job == job && f.attempt == attempt) {
+            return JobFaults { fault: Some((f.kind, f.at.max(1))), delay: None };
+        }
+        let mut rng = Rng::new(
+            self.seed
+                ^ job.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (attempt as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+        );
+        let delay = if rng.chance(self.delay_rate) {
+            // Sleep 1..=50us every 1..=64 dispatches: enough jitter to
+            // shake out scheduling assumptions, cheap enough for floods.
+            Some((1 + rng.below(64), 1 + rng.below(50)))
+        } else {
+            None
+        };
+        let eligible = self.fault_free_after == 0 || attempt < self.fault_free_after;
+        let fault = if eligible {
+            let trigger = 1 + rng.below(self.max_trigger);
+            let roll = rng.unit_f64();
+            if roll < self.panic_rate {
+                Some((InjectedFault::Panic, trigger))
+            } else if roll < self.panic_rate + self.transient_rate {
+                Some((InjectedFault::Transient, trigger))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        JobFaults { fault, delay }
+    }
+}
+
+/// The derived per-attempt schedule, stored as atomics in `JobState`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JobFaults {
+    /// At most one fault per attempt: `(kind, 1-based trigger tick)`.
+    pub fault: Option<(InjectedFault, u64)>,
+    /// Periodic micro-delay: `(every N ticks, micros)`.
+    pub delay: Option<(u64, u64)>,
+}
+
+impl JobFaults {
+    pub fn armed(&self) -> bool {
+        self.fault.is_some() || self.delay.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_job_is_deterministic() {
+        let plan = FaultPlan::chaos(0xC0FFEE);
+        for job in 0..64u64 {
+            for attempt in 1..=4u32 {
+                let a = plan.for_job(job, attempt);
+                let b = plan.for_job(job, attempt);
+                assert_eq!(format!("{a:?}"), format!("{b:?}"), "job {job} attempt {attempt}");
+            }
+        }
+    }
+
+    #[test]
+    fn seeds_produce_different_schedules() {
+        // Not a tautology (a constant function would be "deterministic"):
+        // across 64 jobs, two seeds must disagree somewhere.
+        let a = FaultPlan::chaos(1);
+        let b = FaultPlan::chaos(2);
+        let differs = (0..64u64)
+            .any(|j| format!("{:?}", a.for_job(j, 1)) != format!("{:?}", b.for_job(j, 1)));
+        assert!(differs);
+    }
+
+    #[test]
+    fn chaos_rates_actually_inject() {
+        let plan = FaultPlan::chaos(7);
+        let armed = (0..256u64).filter(|&j| plan.for_job(j, 1).fault.is_some()).count();
+        // panic_rate + transient_rate = 0.35: expect ~90/256; a huge
+        // margin guards the assertion, not the exact binomial.
+        assert!(armed > 20, "only {armed}/256 attempts armed");
+    }
+
+    #[test]
+    fn fault_free_horizon_silences_late_attempts() {
+        let plan = FaultPlan::chaos(7);
+        for job in 0..256u64 {
+            assert!(plan.for_job(job, plan.fault_free_after).fault.is_none());
+            assert!(plan.for_job(job, plan.fault_free_after + 1).fault.is_none());
+        }
+    }
+
+    #[test]
+    fn forced_faults_override_rates_and_horizon() {
+        let mut plan = FaultPlan::disabled();
+        plan.force.push(ForcedFault {
+            job: 3,
+            attempt: 9,
+            kind: InjectedFault::Panic,
+            at: 17,
+        });
+        let f = plan.for_job(3, 9).fault.expect("forced fault must arm");
+        assert_eq!(f, (InjectedFault::Panic, 17));
+        assert!(plan.for_job(3, 1).fault.is_none());
+        assert!(plan.for_job(4, 9).fault.is_none());
+    }
+
+    #[test]
+    fn disabled_plan_injects_nothing() {
+        let plan = FaultPlan::disabled();
+        for job in 0..64u64 {
+            assert!(!plan.for_job(job, 1).armed());
+        }
+    }
+
+    #[test]
+    fn validate_names_offending_fields() {
+        let cases: Vec<(FaultPlan, &str)> = vec![
+            (FaultPlan { panic_rate: 1.5, ..FaultPlan::disabled() }, "panic_rate"),
+            (FaultPlan { transient_rate: -0.1, ..FaultPlan::disabled() }, "transient_rate"),
+            (FaultPlan { delay_rate: f64::NAN, ..FaultPlan::disabled() }, "delay_rate"),
+            (
+                FaultPlan { panic_rate: 0.6, transient_rate: 0.6, ..FaultPlan::disabled() },
+                "panic_rate + fault.transient_rate",
+            ),
+            (FaultPlan { max_trigger: 0, ..FaultPlan::disabled() }, "max_trigger"),
+        ];
+        for (plan, needle) in cases {
+            let err = plan.validate().expect_err("must be rejected");
+            assert!(err.to_string().contains(needle), "{err} should mention {needle}");
+        }
+        assert!(FaultPlan::disabled().validate().is_ok());
+        assert!(FaultPlan::chaos(42).validate().is_ok());
+    }
+}

@@ -30,11 +30,13 @@
 
 pub mod closure;
 pub mod deque;
+pub mod error;
 pub mod executor;
+pub mod fault;
 pub mod shared_mem;
 pub mod worker;
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use anyhow::{anyhow, Result};
 
@@ -42,9 +44,23 @@ use crate::exec::{KernelMode, KernelProgram};
 use crate::ir::cfg::Module;
 use crate::ir::expr::Value;
 
-pub use closure::{Cont, Registry};
-pub use executor::{Executor, ExecutorConfig, ExecutorStats, Job, JobHandle, JobId};
+pub use closure::{Cont, Registry, StaleHandle};
+pub use error::{JobError, JobErrorKind, Trap};
+pub use executor::{
+    Executor, ExecutorConfig, ExecutorStats, Job, JobHandle, JobId, JobSpec, RetryPolicy,
+};
+pub use fault::{FaultPlan, ForcedFault, InjectedFault};
 pub use shared_mem::SharedMemory;
+
+/// Poison-tolerant mutex lock, used for every mutex in this runtime.
+/// With task panics caught and contained ([`worker`]), a poisoned mutex
+/// only means "a panic unwound while holding this lock"; all ws lock
+/// scopes leave their data consistent at every await-free step (pushes
+/// complete, counters are atomics), so propagating the poison would turn
+/// one contained fault into a pool-wide cascade for no soundness gain.
+pub(crate) fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Batch execution sink for `extern xla` tasks.
 pub trait XlaSink: Send + Sync {
@@ -154,6 +170,7 @@ pub fn run_with_kernels(
         entry: name.to_string(),
         args: args.to_vec(),
         xla_sink,
+        spec: JobSpec::default(),
     })?;
     let (value, memory, stats) = handle.join()?;
     // Joining the workers releases every transient reference to the

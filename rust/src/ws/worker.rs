@@ -17,13 +17,25 @@
 //! timeout) so contended steals never spin hot and the push path pays a
 //! futex only when somebody actually sleeps.
 //!
-//! Cancellation is cooperative: a cancelled job's queued tasks are
+//! **Fault containment.** Every task body (and every xla batch flush)
+//! runs inside `std::panic::catch_unwind`: a panic — a kernel bug, a
+//! sink bug, or an injected chaos panic — fails the owning *job* with a
+//! structured [`JobError::panicked`] and the worker keeps serving every
+//! other job. A panic that escapes the catch anyway (e.g. the injected
+//! worker-kill in the sourcing loop) trips [`DeathWatch`], which
+//! registers the worker id for the supervisor to respawn — the pool
+//! never silently shrinks.
+//!
+//! Cancellation is cooperative: an aborted job's queued tasks are
 //! discarded at pop, and running tasks abort at the next dispatch
-//! boundary via the [`Machine::on_dispatch`] hook.
+//! boundary via the [`Machine::on_dispatch`] hook — the same metered
+//! seam that enforces [`super::JobSpec`] deadlines and fuel budgets and
+//! fires the deterministic fault plan.
 
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -34,7 +46,10 @@ use crate::ir::expr::Value;
 use crate::obs::{self, trace::ArgVal};
 
 use super::closure::{Cont, SharedClosure};
+use super::error::JobError;
 use super::executor::{fail_job, finish_one, ExecShared, JobState};
+use super::fault::InjectedFault;
+use super::plock;
 
 /// A runnable task instance, tagged with its owning job.
 #[derive(Clone)]
@@ -66,7 +81,33 @@ const MAX_PARK_SHIFT: u32 = 2;
 /// cadence does not phase-lock with power-of-two task-tree shapes.
 const INJECT_PERIOD: u32 = 61;
 
-pub(crate) fn worker_loop(wid: usize, shared: &ExecShared) {
+/// Registers this worker with the supervisor if its thread dies to a
+/// panic that escaped the task catch. Declared first in `worker_loop`,
+/// so it drops last during an unwind — after any other drop glue.
+struct DeathWatch {
+    wid: usize,
+    shared: Arc<ExecShared>,
+}
+
+impl Drop for DeathWatch {
+    fn drop(&mut self) {
+        if !std::thread::panicking() {
+            return;
+        }
+        // The dying thread can no longer be mid-steal: release the
+        // bracket so quiescent buffer reclamation is not wedged forever.
+        self.shared.in_steal[self.wid].store(false, Ordering::SeqCst);
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        plock(&self.shared.dead_workers).push(self.wid);
+        self.shared.sup_cv.notify_all();
+    }
+}
+
+pub(crate) fn worker_loop(wid: usize, shared: Arc<ExecShared>) {
+    let watch = DeathWatch { wid, shared };
+    let shared: &ExecShared = &watch.shared;
     if obs::trace_enabled() {
         obs::trace::set_thread_name(&format!("ws-worker-{wid}"));
     }
@@ -74,7 +115,8 @@ pub(crate) fn worker_loop(wid: usize, shared: &ExecShared) {
     let steal_tries = shared.config.ws.steal_tries.max(1);
     let mut rng = crate::util::rng::Rng::new(0x5EED ^ wid as u64);
     // Per-worker kernel frame stack, reused across tasks and jobs: task
-    // dispatch allocates nothing on the hot path.
+    // dispatch allocates nothing on the hot path. (`run_kernel` resets
+    // it at entry, so a frame left behind by a caught panic is benign.)
     let mut stack = KStack::new();
     let mut backoff: u32 = 0;
     let mut since_inject: u32 = 0;
@@ -111,6 +153,12 @@ pub(crate) fn worker_loop(wid: usize, shared: &ExecShared) {
             execute(wid, shared, task, &mut stack);
             continue;
         }
+        // Chaos steal-seam faults: the one-shot worker kill fires here —
+        // deliberately *outside* the task catch and *before* the
+        // `in_steal` bracket, so the thread actually dies (DeathWatch
+        // hands it to the supervisor) without wedging reclamation or
+        // losing a task.
+        steal_seam_faults(shared, wid, &mut rng);
         // 3. Steal (FIFO cold end of random victims, CAS only). The
         // in_steal flag brackets the window in which this thief may hold
         // a victim's buffer pointer — the executor's quiescent
@@ -166,12 +214,32 @@ pub(crate) fn worker_loop(wid: usize, shared: &ExecShared) {
         }
         backoff = backoff.saturating_add(1);
         shared.idle_workers.fetch_add(1, Ordering::SeqCst);
-        let guard = shared.idle_lock.lock().unwrap();
+        let guard = plock(&shared.idle_lock);
         let _ = shared
             .idle_cv
             .wait_timeout(guard, Duration::from_micros(park_us))
-            .unwrap();
+            .unwrap_or_else(|p| p.into_inner());
         shared.idle_workers.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Fault-plan hooks on the steal seam: the one-shot worker kill, plus
+/// timing-only jitter on the contended path.
+fn steal_seam_faults(shared: &ExecShared, wid: usize, rng: &mut crate::util::rng::Rng) {
+    let Some(fs) = &shared.fault else { return };
+    if let Some((kill_wid, after)) = fs.plan.kill_worker {
+        if kill_wid == wid {
+            let n = fs.steal_clock.fetch_add(1, Ordering::Relaxed) + 1;
+            if n >= after && fs.kill_armed.swap(false, Ordering::SeqCst) {
+                obs::metrics::counter_add("ws.workers_killed", 1);
+                panic!("chaos: injected death of worker {wid}");
+            }
+        }
+    }
+    // Sub-scale the dispatch delay rate: the steal seam runs far hotter
+    // than any single job's dispatch stream.
+    if fs.plan.delay_rate > 0.0 && rng.chance(fs.plan.delay_rate * 0.05) {
+        std::thread::sleep(Duration::from_micros(1 + rng.below(30)));
     }
 }
 
@@ -196,11 +264,12 @@ fn flush_xla(wid: usize, shared: &ExecShared) -> bool {
 /// the kernels.
 ///
 /// Accounting contract: every drained instance is `finish_one`d exactly
-/// once, whether it was delivered, skipped on cancellation, or orphaned
-/// by a sink error — per-job completion counters tolerate no leaks.
+/// once, whether it was delivered, skipped on abort, or orphaned by a
+/// sink error or caught panic — per-job completion counters tolerate no
+/// leaks (which is why the `finish_one` loop sits outside the catch).
 fn flush_job_xla(wid: usize, shared: &ExecShared, job: &Arc<JobState>) -> bool {
     let mut batch: Vec<(FuncId, Vec<Value>, Cont)> = {
-        let mut q = job.xla_queue.lock().unwrap();
+        let mut q = plock(&job.xla_queue);
         if q.is_empty() {
             return false;
         }
@@ -209,50 +278,27 @@ fn flush_job_xla(wid: usize, shared: &ExecShared, job: &Arc<JobState>) -> bool {
     };
     let drained = batch.len();
     shared.xla_pending.fetch_sub(drained as u64, Ordering::SeqCst);
-    if !job.is_cancelled() {
-        // Group by task id, preserving order within each group.
-        let mut groups: Vec<(FuncId, Vec<usize>)> = Vec::new();
-        for (i, (fid, _, _)) in batch.iter().enumerate() {
-            match groups.iter_mut().find(|(g, _)| g == fid) {
-                Some((_, idxs)) => idxs.push(i),
-                None => groups.push((*fid, vec![i])),
+    if !job.is_aborted() {
+        // UNWIND SAFETY: the closure mutates only `batch` (local, dropped
+        // below without further reads of moved-from entries) and per-job
+        // shared state whose invariants hold across a mid-flush unwind:
+        // counters are monotonic atomics, `deliver` completes each
+        // fill/release before returning, and the drained instances are
+        // finish_one'd outside the catch regardless.
+        let caught = panic::catch_unwind(AssertUnwindSafe(|| {
+            flush_groups(wid, shared, job, &mut batch)
+        }));
+        if let Err(payload) = caught {
+            let msg = panic_message(payload);
+            obs::metrics::counter_add("ws.panics_caught", 1);
+            if obs::trace_enabled() {
+                obs::trace::instant(
+                    "panic-caught",
+                    "ws",
+                    vec![("job", ArgVal::I64(job.id.0 as i64))],
+                );
             }
-        }
-        'groups: for (fid, idxs) in groups {
-            let name = &job.kernels.kernel(fid).name;
-            let args: Vec<Vec<Value>> = idxs
-                .iter()
-                .map(|&i| std::mem::take(&mut batch[i].1))
-                .collect();
-            job.counters.xla_batches.fetch_add(1, Ordering::Relaxed);
-            job.counters.xla_tasks.fetch_add(idxs.len() as u64, Ordering::Relaxed);
-            match job.xla_sink.exec_batch(name, &args, &job.memory) {
-                Ok(results) => {
-                    if results.len() != idxs.len() {
-                        fail_job(
-                            shared,
-                            job,
-                            anyhow!(
-                                "xla sink returned {} results for {} instances of `{name}`",
-                                results.len(),
-                                idxs.len()
-                            ),
-                        );
-                        break 'groups;
-                    }
-                    for (&i, value) in idxs.iter().zip(results) {
-                        let cont = std::mem::replace(&mut batch[i].2, Cont::Root);
-                        if let Err(e) = deliver(wid, shared, job, cont, value) {
-                            fail_job(shared, job, e);
-                            break 'groups;
-                        }
-                    }
-                }
-                Err(e) => {
-                    fail_job(shared, job, e);
-                    break 'groups;
-                }
-            }
+            fail_job(shared, job, JobError::panicked(job.id, &msg));
         }
     }
     drop(batch);
@@ -262,9 +308,98 @@ fn flush_job_xla(wid: usize, shared: &ExecShared, job: &Arc<JobState>) -> bool {
     true
 }
 
+/// The sink-facing half of an xla flush: group by task id (preserving
+/// order within each group), execute each group as one batch, deliver
+/// the results. Runs inside the flush catch.
+fn flush_groups(
+    wid: usize,
+    shared: &ExecShared,
+    job: &Arc<JobState>,
+    batch: &mut [(FuncId, Vec<Value>, Cont)],
+) {
+    // The per-job fault clock ticks once per flushed batch, so the xla
+    // seam participates in the deterministic plan (flush timing is
+    // scheduler-dependent — outcome determinism is only guaranteed for
+    // jobs without xla tasks).
+    if job.metered() {
+        let tick = job.fault_tick();
+        match job.injected_fault(tick) {
+            Some(InjectedFault::Panic) => {
+                panic!("chaos: injected panic in {} at xla flush (tick {tick})", job.id);
+            }
+            Some(InjectedFault::Transient) => {
+                fail_job(
+                    shared,
+                    job,
+                    JobError::transient(format!(
+                        "chaos: injected transient fault in {} at xla flush (tick {tick})",
+                        job.id
+                    )),
+                );
+                return;
+            }
+            None => {}
+        }
+        if let Some(us) = job.injected_delay(tick) {
+            std::thread::sleep(Duration::from_micros(us));
+        }
+    }
+    let mut groups: Vec<(FuncId, Vec<usize>)> = Vec::new();
+    for (i, (fid, _, _)) in batch.iter().enumerate() {
+        match groups.iter_mut().find(|(g, _)| g == fid) {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((*fid, vec![i])),
+        }
+    }
+    'groups: for (fid, idxs) in groups {
+        let name = &job.kernels.kernel(fid).name;
+        let args: Vec<Vec<Value>> = idxs.iter().map(|&i| std::mem::take(&mut batch[i].1)).collect();
+        job.counters.xla_batches.fetch_add(1, Ordering::Relaxed);
+        job.counters.xla_tasks.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+        match job.xla_sink.exec_batch(name, &args, &job.memory) {
+            Ok(results) => {
+                if results.len() != idxs.len() {
+                    fail_job(
+                        shared,
+                        job,
+                        JobError::internal(format!(
+                            "xla sink returned {} results for {} instances of `{name}`",
+                            results.len(),
+                            idxs.len()
+                        )),
+                    );
+                    break 'groups;
+                }
+                for (&i, value) in idxs.iter().zip(results) {
+                    let cont = std::mem::replace(&mut batch[i].2, Cont::Root);
+                    if let Err(e) = deliver(wid, shared, job, cont, value) {
+                        fail_job(shared, job, JobError::classify(&e));
+                        break 'groups;
+                    }
+                }
+            }
+            Err(e) => {
+                fail_job(shared, job, JobError::classify(&e));
+                break 'groups;
+            }
+        }
+    }
+}
+
+/// Render a `catch_unwind` payload for the structured error message.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 fn execute(wid: usize, shared: &ExecShared, task: WsTask, stack: &mut KStack) {
     let job = Arc::clone(&task.job);
-    if job.is_cancelled() {
+    if job.is_aborted() {
         // Discard without running; the task's continuation (and any
         // closures it holds) drops here, the arena sweep at completion
         // reclaims the rest.
@@ -298,17 +433,42 @@ fn execute(wid: usize, shared: &ExecShared, task: WsTask, stack: &mut KStack) {
         None
     };
     let retired_before = stack.retired();
-    let outcome = run_task(wid, shared, &job, task, stack);
+    // Panic isolation: contain a panicking task to its own job.
+    // UNWIND SAFETY (AssertUnwindSafe): the only state observable after
+    // an unwind here is (1) `stack` — `run_kernel` clears it at the next
+    // entry, so torn frames are unreachable; (2) the job's shared memory
+    // and counters — word-atomic / monotonic, no multi-word invariant to
+    // tear; (3) the job's closure registry — its mutexes are
+    // poison-tolerant (`plock`) and its per-entry invariants are updated
+    // before links are published, and the job is failed below so no new
+    // task of it will resolve half-built handles.
+    let caught = panic::catch_unwind(AssertUnwindSafe(|| run_task(wid, shared, &job, task, stack)));
     job.counters.instrs.fetch_add(stack.retired() - retired_before, Ordering::Relaxed);
     if let Some(name) = span_name {
         obs::trace::end(name, "task");
     }
-    if let Err(e) = outcome {
-        // A cancelled task's dispatch-boundary bail is expected noise;
-        // anything else is the job's first real error (counted failed at
-        // fail time, not at graph drain).
-        if !job.is_cancelled() {
-            fail_job(shared, &job, e);
+    match caught {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => {
+            // An aborted task's dispatch-boundary bail is expected noise;
+            // anything else is the job's first real error (counted failed
+            // at fail time, not at graph drain — unless its kind arms a
+            // retry).
+            if !job.is_aborted() {
+                fail_job(shared, &job, JobError::classify(&e));
+            }
+        }
+        Err(payload) => {
+            let msg = panic_message(payload);
+            obs::metrics::counter_add("ws.panics_caught", 1);
+            if obs::trace_enabled() {
+                obs::trace::instant(
+                    "panic-caught",
+                    "ws",
+                    vec![("job", ArgVal::I64(job.id.0 as i64))],
+                );
+            }
+            fail_job(shared, &job, JobError::panicked(job.id, &msg));
         }
     }
     finish_one(shared, &job);
@@ -336,7 +496,7 @@ fn deliver(
 ) -> Result<()> {
     match cont {
         Cont::Root => {
-            let mut slot = job.result.lock().unwrap();
+            let mut slot = plock(&job.result);
             if slot.is_some() {
                 bail!("root continuation received two results");
             }
@@ -373,7 +533,8 @@ fn fire(wid: usize, shared: &ExecShared, job: &Arc<JobState>, clos: &Arc<SharedC
 }
 
 /// The worker's [`Machine`]: per-job closure registry + shared memory
-/// effects, plus the cooperative-cancellation dispatch check.
+/// effects, plus the metered cooperative dispatch boundary
+/// (abort/cancel, deadline, fuel, fault injection).
 struct WsMachine<'a> {
     wid: usize,
     shared: &'a ExecShared,
@@ -418,6 +579,59 @@ fn run_task(
     Ok(())
 }
 
+impl<'a> WsMachine<'a> {
+    /// Resolve a closure handle through the non-panicking lookup: a
+    /// stale handle (fired, swept, or recycled slot) becomes a
+    /// structured `Trap::StaleClosure` job failure instead of killing
+    /// the process. (`Registry::get` keeps the loud panic for tests and
+    /// debug paths that want the old fail-stop behavior.)
+    fn resolve(&self, clos: Value) -> Result<Arc<SharedClosure>> {
+        self.job
+            .registry
+            .lookup(clos.as_i64())
+            .map_err(|stale| anyhow!("{stale}"))
+    }
+
+    /// The slow half of the dispatch boundary, entered only for metered
+    /// jobs (deadline, fuel budget, or an armed fault schedule): one
+    /// fault-clock tick, then injected fault → injected delay → fuel →
+    /// deadline, in that order — injection first keeps the fault
+    /// schedule independent of the budget settings.
+    #[cold]
+    fn meter_tick(&mut self) -> Result<()> {
+        let job = self.job;
+        let tick = job.fault_tick();
+        match job.injected_fault(tick) {
+            Some(InjectedFault::Panic) => {
+                panic!("chaos: injected panic in {} at dispatch {tick}", job.id);
+            }
+            Some(InjectedFault::Transient) => {
+                bail!("chaos: injected transient fault in {} at dispatch {tick}", job.id);
+            }
+            None => {}
+        }
+        if let Some(us) = job.injected_delay(tick) {
+            std::thread::sleep(Duration::from_micros(us));
+        }
+        if let Some(budget) = job.spec.fuel_budget {
+            if tick > budget {
+                return Err(JobError::fuel_budget(job.id, budget).into());
+            }
+        }
+        // The deadline clock syscall is amortized: checked on the first
+        // tick and every 64th after.
+        if tick == 1 || tick & 63 == 0 {
+            if let Some(deadline_at) = job.deadline_at() {
+                if Instant::now() >= deadline_at {
+                    let budget = job.spec.deadline.unwrap_or_default();
+                    return Err(JobError::deadline(job.id, budget).into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 impl<'a> Machine for WsMachine<'a> {
     fn load(&mut self, arr: GlobalId, index: i64) -> Result<Value> {
         self.job.memory.load(arr, index)
@@ -432,11 +646,17 @@ impl<'a> Machine for WsMachine<'a> {
     }
 
     fn on_dispatch(&mut self, fid: FuncId, _depth: usize) -> Result<()> {
-        // The cooperative-cancellation boundary: one relaxed load per
-        // frame entry, so a cancelled job's running tasks unwind at the
-        // next dispatch instead of draining their whole subtree.
-        if self.job.is_cancelled() {
+        // The cooperative abort boundary: one relaxed load per frame
+        // entry, so an aborted (cancelled/failed/retrying) job's running
+        // tasks unwind at the next dispatch instead of draining their
+        // whole subtree.
+        if self.job.is_aborted() {
             bail!("{} cancelled at dispatch boundary", self.job.id);
+        }
+        // Deadline/fuel/fault metering, gated to one relaxed load for
+        // unmetered jobs so the clean hot path stays unchanged.
+        if self.job.metered() {
+            self.meter_tick()?;
         }
         // Hotness profile: once per frame entry (never per retired
         // instruction), behind one relaxed load when disabled.
@@ -447,6 +667,11 @@ impl<'a> Machine for WsMachine<'a> {
     }
 
     fn make_closure(&mut self, task: FuncId) -> Result<Value> {
+        if let Some(budget) = self.job.spec.max_live_closures {
+            if self.job.registry.live() >= budget {
+                return Err(JobError::closure_budget(self.job.id, budget).into());
+            }
+        }
         self.job.counters.closures_made.fetch_add(1, Ordering::Relaxed);
         let slot_tys = Arc::clone(&self.job.kernels.kernel(task).param_tys);
         let clos = Arc::new(SharedClosure::new(task, slot_tys, self.cont.clone()));
@@ -456,19 +681,19 @@ impl<'a> Machine for WsMachine<'a> {
     }
 
     fn closure_store(&mut self, clos: Value, field: u32, value: Value) -> Result<()> {
-        self.job.registry.get(clos.as_i64()).fill(field, value);
+        self.resolve(clos)?.fill(field, value);
         Ok(())
     }
 
     fn spawn_child(&mut self, callee: FuncId, args: &[Value], ret: KontRef) -> Result<()> {
         let cont = match ret {
             KontRef::Slot { clos, field } => {
-                let c = self.job.registry.get(clos.as_i64());
+                let c = self.resolve(clos)?;
                 c.hold();
                 Cont::Slot { clos: c, slot: field }
             }
             KontRef::Counter { clos } => {
-                let c = self.job.registry.get(clos.as_i64());
+                let c = self.resolve(clos)?;
                 c.hold();
                 Cont::Counter { clos: c }
             }
@@ -482,7 +707,7 @@ impl<'a> Machine for WsMachine<'a> {
             // is built before taking the queue lock so the allocation
             // never sits inside the shared critical section.
             let row = args.to_vec();
-            self.job.xla_queue.lock().unwrap().push((callee, row, cont));
+            plock(&self.job.xla_queue).push((callee, row, cont));
             self.shared.xla_pending.fetch_add(1, Ordering::SeqCst);
             // Same idle gate as push_task: pay the futex only when a
             // worker actually sleeps.
@@ -503,7 +728,7 @@ impl<'a> Machine for WsMachine<'a> {
     }
 
     fn close_spawns(&mut self, clos: Value) -> Result<()> {
-        let c = self.job.registry.get(clos.as_i64());
+        let c = self.resolve(clos)?;
         if c.release() {
             fire(self.wid, self.shared, self.job, &c);
         }

@@ -1,0 +1,263 @@
+//! Fault-containment integration tests for the resident executor:
+//! panic isolation, supervisor respawn, per-job deadlines, retry with
+//! deterministic backoff, bounded-admission shedding, and same-seed
+//! chaos determinism.
+//!
+//! Every test pins an explicit `FaultPlan` (often `disabled()` plus
+//! forced faults), so the suite is deterministic even under the CI
+//! chaos-smoke environment — except `env_chaos_smoke_converges`, which
+//! exists precisely to exercise the `BOMBYX_CHAOS` env fallback and
+//! no-ops when the variable is unset.
+
+use std::time::Duration;
+
+use bombyx::coordinator::WsServeExperiment;
+use bombyx::ir::Value;
+use bombyx::lower::{CompileOptions, CompileSession};
+use bombyx::workloads::fib;
+use bombyx::ws::{
+    self, Executor, ExecutorConfig, FaultPlan, ForcedFault, InjectedFault, JobErrorKind, JobSpec,
+    RetryPolicy, Trap, WsConfig,
+};
+
+fn fib_session() -> CompileSession {
+    CompileSession::new("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap()
+}
+
+/// A forced panic at the first dispatch of one job out of 32 must fail
+/// exactly that job (`Panicked`, caught — no worker dies) and leave the
+/// other 31 byte-identical to their clean one-shot references.
+#[test]
+fn forced_panic_is_contained_to_its_job() {
+    let exp = WsServeExperiment::new().unwrap();
+    const JOBS: usize = 32;
+    const POISONED: usize = 7;
+    let mut reference = Vec::with_capacity(JOBS);
+    for i in 0..JOBS {
+        let (value, mem, _) = exp.one_shot(i, 1).unwrap();
+        reference.push((value, exp.memory_image(i, &mem)));
+    }
+    let config = ExecutorConfig {
+        ws: WsConfig { workers: 4, steal_tries: 4 },
+        fault: Some(FaultPlan {
+            force: vec![ForcedFault {
+                job: POISONED as u64,
+                attempt: 1,
+                kind: InjectedFault::Panic,
+                at: 1,
+            }],
+            ..FaultPlan::disabled()
+        }),
+        ..ExecutorConfig::default()
+    };
+    let executor = Executor::new(config).unwrap();
+    let handles: Vec<_> =
+        (0..JOBS).map(|i| executor.submit(exp.job(i).unwrap()).unwrap()).collect();
+    for (i, handle) in handles.into_iter().enumerate() {
+        if i == POISONED {
+            let err = handle.join().unwrap_err();
+            assert_eq!(err.kind(), JobErrorKind::Panicked, "{err}");
+            assert!(err.to_string().contains("injected panic"), "{err}");
+        } else {
+            let (value, mem, _) = handle.join().unwrap();
+            assert_eq!(value, reference[i].0, "job {i} root result next to a panicked job");
+            assert_eq!(
+                exp.memory_image(i, &mem),
+                reference[i].1,
+                "job {i} final memory next to a panicked job"
+            );
+        }
+    }
+    let stats = executor.stats();
+    assert_eq!(stats.jobs_completed, (JOBS - 1) as u64);
+    assert_eq!(stats.jobs_failed, 1, "the panic must be charged exactly once");
+    assert_eq!(stats.jobs_retried, 0, "panics are not retryable by default");
+    assert_eq!(stats.workers_respawned, 0, "a caught panic must not kill the worker");
+}
+
+/// A one-shot worker death outside the task catch must be repaired by
+/// the supervisor — the flood still verifies end to end and the respawn
+/// is counted exactly once.
+#[test]
+fn supervisor_respawns_a_killed_worker() {
+    let exp = WsServeExperiment::new().unwrap();
+    const JOBS: usize = 32;
+    let config = ExecutorConfig {
+        ws: WsConfig { workers: 4, steal_tries: 4 },
+        fault: Some(FaultPlan { kill_worker: Some((2, 1)), ..FaultPlan::disabled() }),
+        ..ExecutorConfig::default()
+    };
+    let executor = Executor::new(config).unwrap();
+    let handles: Vec<_> =
+        (0..JOBS).map(|i| executor.submit(exp.job(i).unwrap()).unwrap()).collect();
+    for (i, handle) in handles.into_iter().enumerate() {
+        let (value, mem, _) = handle.join().unwrap();
+        exp.verify(i, &value, &mem).unwrap();
+    }
+    let stats = executor.stats();
+    assert_eq!(stats.jobs_completed, JOBS as u64);
+    assert_eq!(stats.jobs_failed, 0, "a worker death must not fail any job");
+    assert_eq!(stats.workers_respawned, 1, "exactly one respawn for the one-shot kill");
+}
+
+/// A cooperative deadline fires at a dispatch boundary of a resident
+/// fib(30) long before the job could finish; the join returns a
+/// structured `DeadlineExceeded` instead of hanging.
+#[test]
+fn deadline_fails_a_long_job_at_a_dispatch_boundary() {
+    let session = fib_session();
+    let config = ExecutorConfig {
+        ws: WsConfig { workers: 2, steal_tries: 4 },
+        fault: Some(FaultPlan::disabled()),
+        ..ExecutorConfig::default()
+    };
+    let executor = Executor::new(config).unwrap();
+    let spec = JobSpec { deadline: Some(Duration::from_millis(30)), ..JobSpec::default() };
+    let job = session.ws_job("fib", &[Value::I64(30)]).unwrap().with_spec(spec);
+    let handle = executor.submit(job).unwrap();
+    handle.wait();
+    assert_eq!(handle.live_closures(), 0, "a deadlined job must sweep its closure arena");
+    let err = handle.join().unwrap_err();
+    assert_eq!(err.kind(), JobErrorKind::DeadlineExceeded, "{err}");
+    assert!(err.to_string().contains("deadline"), "{err}");
+    assert_eq!(executor.stats().jobs_failed, 1);
+    assert_eq!(executor.stats().jobs_retried, 0, "deadlines are not retryable");
+}
+
+/// A fuel budget far below fib(20)'s dispatch count trips the
+/// deterministic `Trap::Fuel` path.
+#[test]
+fn fuel_budget_traps_deterministically() {
+    let session = fib_session();
+    let config = ExecutorConfig {
+        ws: WsConfig { workers: 1, steal_tries: 4 },
+        fault: Some(FaultPlan::disabled()),
+        ..ExecutorConfig::default()
+    };
+    let executor = Executor::new(config).unwrap();
+    let spec = JobSpec { fuel_budget: Some(50), ..JobSpec::default() };
+    let job = session.ws_job("fib", &[Value::I64(20)]).unwrap().with_spec(spec);
+    let err = executor.submit(job).unwrap().join().unwrap_err();
+    assert_eq!(err.kind(), JobErrorKind::Trap(Trap::Fuel), "{err}");
+    assert!(err.to_string().contains("fuel budget"), "{err}");
+}
+
+/// Two forced transients (attempts 1 and 2) with a 4-attempt retry
+/// policy: the job converges on attempt 3, retries are counted, and the
+/// job's latency covers the exact deterministic backoff schedule.
+#[test]
+fn transient_faults_retry_with_deterministic_backoff() {
+    let session = fib_session();
+    let policy =
+        RetryPolicy { max_attempts: 4, backoff: Duration::from_millis(5), retry_on_panic: false };
+    let force = [1u32, 2]
+        .iter()
+        .map(|&attempt| ForcedFault { job: 0, attempt, kind: InjectedFault::Transient, at: 3 })
+        .collect();
+    let config = ExecutorConfig {
+        ws: WsConfig { workers: 2, steal_tries: 4 },
+        fault: Some(FaultPlan { force, ..FaultPlan::disabled() }),
+        ..ExecutorConfig::default()
+    };
+    let executor = Executor::new(config).unwrap();
+    let spec = JobSpec { retry: policy.clone(), ..JobSpec::default() };
+    let job = session.ws_job("fib", &[Value::I64(18)]).unwrap().with_spec(spec);
+    let handle = executor.submit(job).unwrap();
+    handle.wait();
+    let attempts = handle.attempts();
+    let latency = handle.latency().expect("job finished");
+    let (value, _, _) = handle.join().unwrap();
+    assert_eq!(value.as_i64(), fib::fib_ref(18) as i64, "the surviving attempt must verify");
+    assert_eq!(attempts, 3, "two transients then success");
+    let stats = executor.stats();
+    assert_eq!(stats.jobs_retried, 2);
+    assert_eq!(stats.jobs_completed, 1);
+    assert_eq!(stats.jobs_failed, 0, "a retried-then-converged job is not a failure");
+    // The backoff schedule is a pure function of (job, attempt); the
+    // job's end-to-end latency must cover both waits.
+    let scheduled = policy.delay_for(0, 2) + policy.delay_for(0, 3);
+    assert!(
+        latency >= scheduled,
+        "latency {latency:?} must cover the deterministic backoff {scheduled:?}"
+    );
+}
+
+/// With one active slot and one queue slot, a third concurrent
+/// submission is shed with a structured error instead of queueing
+/// unboundedly.
+#[test]
+fn full_admission_queue_sheds_submissions() {
+    let session = fib_session();
+    let config = ExecutorConfig {
+        ws: WsConfig { workers: 1, steal_tries: 4 },
+        max_active_jobs: 1,
+        max_queued_jobs: 1,
+        fault: Some(FaultPlan::disabled()),
+        ..ExecutorConfig::default()
+    };
+    let executor = Executor::new(config).unwrap();
+    let big = executor.submit(session.ws_job("fib", &[Value::I64(28)]).unwrap()).unwrap();
+    let queued = executor.submit(session.ws_job("fib", &[Value::I64(20)]).unwrap()).unwrap();
+    let err = executor.submit(session.ws_job("fib", &[Value::I64(10)]).unwrap()).unwrap_err();
+    assert_eq!(err.kind(), JobErrorKind::Shed, "{err}");
+    assert!(err.to_string().contains("shed"), "{err}");
+    assert_eq!(executor.stats().jobs_shed, 1);
+    queued.cancel();
+    queued.wait();
+    big.cancel();
+    big.wait();
+    assert_eq!(executor.stats().jobs_shed, 1, "cancellations must not recount sheds");
+}
+
+/// Two chaos floods under the same seed produce identical per-job
+/// outcome sequences, and every non-shed job converges (the retry
+/// horizon outlasts the fault-free cutoff).
+#[test]
+fn same_seed_chaos_floods_have_identical_outcomes() {
+    let exp = WsServeExperiment::new().unwrap();
+    let jobs = 2 * exp.corpus_len();
+    let a = exp.flood_chaos(2, jobs, 1, 7).unwrap();
+    let b = exp.flood_chaos(2, jobs, 1, 7).unwrap();
+    assert_eq!(a.outcomes, b.outcomes, "same seed, same per-job outcomes");
+    assert_eq!(a.verified + a.failed, jobs);
+    for (i, outcome) in a.outcomes.iter().enumerate() {
+        assert!(
+            outcome.is_none() || outcome.as_deref() == Some("shed"),
+            "job {i}: non-shed chaos job must converge, got {outcome:?}"
+        );
+    }
+}
+
+/// The `BOMBYX_CHAOS` env fallback, exercised by the CI chaos-smoke job
+/// (two fixed seeds). No-op when the variable is unset — every other
+/// test in this suite pins an explicit plan instead.
+#[test]
+fn env_chaos_smoke_converges() {
+    let armed = std::env::var(ws::fault::ENV_CHAOS).map(|v| !v.trim().is_empty()).unwrap_or(false);
+    if !armed {
+        return;
+    }
+    let exp = WsServeExperiment::new().unwrap();
+    let config = ExecutorConfig {
+        ws: WsConfig { workers: 2, steal_tries: 4 },
+        default_spec: JobSpec {
+            retry: RetryPolicy {
+                max_attempts: 6,
+                backoff: Duration::from_millis(2),
+                retry_on_panic: true,
+            },
+            ..JobSpec::default()
+        },
+        // `fault: None` is the point: Executor::new must pick the plan
+        // up from the environment.
+        fault: None,
+        ..ExecutorConfig::default()
+    };
+    let report = exp.flood_with_config(config, 2 * exp.corpus_len(), 1).unwrap();
+    for (i, outcome) in report.outcomes.iter().enumerate() {
+        assert!(
+            outcome.is_none() || outcome.as_deref() == Some("shed"),
+            "job {i}: non-shed job must converge under env chaos, got {outcome:?}"
+        );
+    }
+}
