@@ -1,13 +1,14 @@
 //! A-ws ablation: the software execution stack after the kernel rework.
 //!
-//! Four sections, emitted to `BENCH_ws.json` (machine-readable, same
+//! Six sections, emitted to `BENCH_ws.json` (machine-readable, same
 //! convention as `BENCH_compile.json` — the committed file is pinned by
 //! one run in a toolchain environment):
 //!
 //! 1. **kernel-vs-tree**: single-worker explicit execution on the
 //!    compiled register bytecode vs a frozen copy of the pre-kernel
 //!    tree-walking executor (kept below), on fib and N-Queens — the
-//!    headline speedup of the kernel layer.
+//!    headline speedup of the kernel layer. Pinned to the interpreter
+//!    tier (the jit gets its own section).
 //! 2. **ws scaling**: work-stealing throughput and efficiency at 1/2/4
 //!    workers on fib (lock-free deques + backoff); steal counts and
 //!    live-closure peaks.
@@ -23,6 +24,12 @@
 //!    (injected panics, transients, delays) with retry enabled — every
 //!    non-shed job must still verify; reports degraded throughput as a
 //!    fraction of the clean flood's.
+//! 6. **jit**: the native tier (forced, threshold 0) vs the pinned
+//!    interpreter on fib and N-Queens — wall-clock and retired-dispatch
+//!    throughput speedups plus per-kernel compile time and code size.
+//!    Asserts the jit retires fib dispatches at ≥2x the interpreter's
+//!    rate wherever native codegen is available; on other targets the
+//!    section records `available: false` and the disabled reason.
 //!
 //! `BOMBYX_BENCH_SMOKE=1` switches to reduced iterations/sizes (the CI
 //! bench-smoke step) and arms the telemetry layer for the measured
@@ -33,6 +40,7 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 
 use bombyx::coordinator::WsServeExperiment;
+use bombyx::exec::jit::{self, JitConfig};
 use bombyx::exec::{compile_module_with, KernelMode};
 use bombyx::interp::explicit_exec::ExplicitExec;
 use bombyx::interp::{Memory, NoXla};
@@ -348,6 +356,7 @@ fn main() {
             NoXla,
             std::sync::Arc::clone(&fib_kernels),
         );
+        ex.set_jit(JitConfig::disabled()); // this section measures the interpreter tier
         let v = ex.run("fib", &[Value::I64(fib_n)]).unwrap();
         assert_eq!(v.as_i64(), fib_expect);
         kernel_tasks = ex.stats.tasks_run;
@@ -373,6 +382,7 @@ fn main() {
             NoXla,
             std::sync::Arc::clone(&nq_kernels),
         );
+        ex.set_jit(JitConfig::disabled());
         ex.run("place", &nq_args).unwrap();
         let sols = ex.memory.dump_i64(sq.explicit().global_by_name("solutions").unwrap())[0];
         assert_eq!(sols, nq_expect);
@@ -440,6 +450,9 @@ fn main() {
             NoXla,
             Arc::clone(&fused_prog),
         );
+        // `stats.instrs` counts interpreter-retired dispatches, so both
+        // sides of this differential must stay on the cold tier.
+        ex.set_jit(JitConfig::disabled());
         let v = ex.run("fib", &[Value::I64(fd_n)]).unwrap();
         assert_eq!(v.as_i64(), fd_expect);
         fused_retired = ex.stats.instrs;
@@ -453,6 +466,7 @@ fn main() {
             NoXla,
             Arc::clone(&unfused_prog),
         );
+        ex.set_jit(JitConfig::disabled());
         let v = ex.run("fib", &[Value::I64(fd_n)]).unwrap();
         assert_eq!(v.as_i64(), fd_expect);
         unfused_retired = ex.stats.instrs;
@@ -536,6 +550,132 @@ fn main() {
         chaos.jobs_per_s,
         retained * 100.0
     );
+
+    // ---- section 6: native jit tier ----------------------------------------
+    // Forced tier (threshold 0, native from the first dispatch) vs the
+    // pinned interpreter on the same kernel programs. Retired-dispatch
+    // throughput divides the interpreter run's dispatch count by each
+    // tier's wall time: the task graph is identical on both sides, the
+    // jit just retires the same dispatches as native code.
+    let mut jd = Json::object();
+    match jit::available() {
+        Err(reason) => {
+            println!("jit: native codegen unavailable here ({reason}); section skipped");
+            jd.set("available", false).set("disabled_reason", reason);
+        }
+        Ok(()) => {
+            jd.set("available", true);
+            let jn: i64 = if smoke { 18 } else { 22 };
+            let jn_expect = fib::fib_ref(jn as u64) as i64;
+            // Hold tiers over both programs so the per-kernel compile
+            // stats survive the short-lived engines below.
+            let _pin_f = jit::tier_with(&fib_kernels, JitConfig::forced(0));
+            let _pin_q = jit::tier_with(&nq_kernels, JitConfig::forced(0));
+
+            let mut interp_retired = 0u64;
+            let interp_fib = bench(&format!("interp fib({jn}) 1-thread"), samples, || {
+                let mut ex = ExplicitExec::with_kernels(
+                    sf.explicit(),
+                    sf.memory(),
+                    NoXla,
+                    Arc::clone(&fib_kernels),
+                );
+                ex.set_jit(JitConfig::disabled());
+                let v = ex.run("fib", &[Value::I64(jn)]).unwrap();
+                assert_eq!(v.as_i64(), jn_expect);
+                interp_retired = ex.stats.instrs;
+                ex.stats.instrs
+            });
+            let jit_fib = bench(&format!("jit    fib({jn}) 1-thread"), samples, || {
+                let mut ex = ExplicitExec::with_kernels(
+                    sf.explicit(),
+                    sf.memory(),
+                    NoXla,
+                    Arc::clone(&fib_kernels),
+                );
+                ex.set_jit(JitConfig::forced(0));
+                let v = ex.run("fib", &[Value::I64(jn)]).unwrap();
+                assert_eq!(v.as_i64(), jn_expect);
+                ex.stats.tasks_run
+            });
+            let interp_s = interp_fib.median.as_secs_f64().max(1e-12);
+            let jit_s = jit_fib.median.as_secs_f64().max(1e-12);
+            let jit_fib_speedup = interp_s / jit_s;
+            let interp_tput = interp_retired as f64 / interp_s;
+            let jit_tput = interp_retired as f64 / jit_s;
+            println!(
+                "jit-vs-interp on fib({jn}): {jit_fib_speedup:.2}x \
+                 ({:.2} vs {:.2} Mdispatch/s over {} retired)",
+                jit_tput / 1e6,
+                interp_tput / 1e6,
+                interp_retired
+            );
+            assert!(
+                jit_tput >= 2.0 * interp_tput,
+                "jit must retire fib dispatches at >=2x the interpreter: \
+                 {jit_tput:.0}/s vs {interp_tput:.0}/s"
+            );
+
+            let jit_nq = bench(&format!("jit    nqueens({nq_n}) 1-thread"), samples, || {
+                let mut ex = ExplicitExec::with_kernels(
+                    sq.explicit(),
+                    sq.memory(),
+                    NoXla,
+                    Arc::clone(&nq_kernels),
+                );
+                ex.set_jit(JitConfig::forced(0));
+                ex.run("place", &nq_args).unwrap();
+                let sols =
+                    ex.memory.dump_i64(sq.explicit().global_by_name("solutions").unwrap())[0];
+                assert_eq!(sols, nq_expect);
+                ex.stats.tasks_run
+            });
+            // Section 1's pinned kernel run is the interpreter baseline.
+            let jit_nq_speedup =
+                kernel_nq.median.as_secs_f64() / jit_nq.median.as_secs_f64().max(1e-12);
+            println!("jit-vs-interp on nqueens({nq_n}): {jit_nq_speedup:.2}x");
+
+            let mut kernel_rows = Vec::new();
+            for (prog, kernels) in [("fib", &fib_kernels), ("nqueens", &nq_kernels)] {
+                for s in jit::stats_for(kernels) {
+                    if s.code_bytes == 0 && s.uncompilable.is_none() {
+                        continue; // never promoted (e.g. dead kernels)
+                    }
+                    println!(
+                        "jit kernel {prog}/{}: compile {:.3} ms, {} bytes, \
+                         {} entries, {} bails",
+                        s.name, s.compile_ms, s.code_bytes, s.entries, s.bails
+                    );
+                    let mut row = Json::object();
+                    row.set("program", prog)
+                        .set("kernel", s.name.as_str())
+                        .set("compile_ms", s.compile_ms)
+                        .set("code_bytes", s.code_bytes)
+                        .set("entries", s.entries as i64)
+                        .set("bails", s.bails as i64);
+                    if let Some(u) = s.uncompilable {
+                        row.set("uncompilable", u);
+                    }
+                    kernel_rows.push(row);
+                }
+            }
+
+            let mut jfib = Json::object();
+            jfib.set("n", jn)
+                .set("interp_ms", interp_s * 1e3)
+                .set("jit_ms", jit_s * 1e3)
+                .set("retired_dispatches", interp_retired as i64)
+                .set("interp_dispatch_per_s", interp_tput)
+                .set("jit_dispatch_per_s", jit_tput)
+                .set("speedup", jit_fib_speedup);
+            let mut jnq = Json::object();
+            jnq.set("n", nq_n)
+                .set("interp_ms", kernel_nq.median.as_secs_f64() * 1e3)
+                .set("jit_ms", jit_nq.median.as_secs_f64() * 1e3)
+                .set("speedup", jit_nq_speedup);
+            jd.set("fib", jfib).set("nqueens", jnq).set("kernels", Json::Array(kernel_rows));
+        }
+    }
 
     // ---- machine-readable output -------------------------------------------
     let mut kvt = Json::object();
@@ -628,7 +768,8 @@ fn main() {
         .set("ws_scaling", scale_json)
         .set("fused_dispatch", fd)
         .set("multi_job", mj)
-        .set("fault_injection", fi);
+        .set("fault_injection", fi)
+        .set("jit", jd);
     let path = "BENCH_ws.json";
     std::fs::write(path, root.pretty() + "\n").expect("write BENCH_ws.json");
     println!("wrote {path}");

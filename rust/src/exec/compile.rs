@@ -22,22 +22,27 @@
 //! # Superinstruction fusion
 //!
 //! After straight-line emission (and branch-target fixup) a peephole
-//! stage ([`fuse_code`]) collapses hot adjacent pairs into one fused
-//! dispatch: compare+branch on the just-written slot
-//! ([`KOp::CmpBranch`]), load/bin feeding a plain `Mov` of the same slot
-//! ([`KOp::LoadMov`]/[`KOp::BinMov`]), a bin whose result is the next
-//! `Store`'s value ([`KOp::StoreBin`]) and bin+return
-//! ([`KOp::ReturnBin`]). Fused handlers replay both component ops
-//! verbatim (every frame write included), and [`KCost`] entries merge
-//! only under rules that keep the simulator's timed traces
-//! byte-for-byte unchanged:
+//! stage ([`fuse_code`]) collapses hot adjacent windows into one fused
+//! dispatch — widest first. Triples: a load feeding a bin feeding the
+//! next store ([`KOp::LoadBinStore`]). Pairs: compare+branch on the
+//! just-written slot ([`KOp::CmpBranch`]), load/bin feeding a plain
+//! `Mov` of the same slot ([`KOp::LoadMov`]/[`KOp::BinMov`]), a bin
+//! whose result is the next `Store`'s / `AtomicAdd`'s value
+//! ([`KOp::StoreBin`]/[`KOp::BinAtomicAdd`]), bin+return
+//! ([`KOp::ReturnBin`]) and bin+send ([`KOp::SendBin`]). Fused handlers
+//! replay every component op verbatim (every frame write included), and
+//! [`KCost`] entries merge only under rules that keep the simulator's
+//! timed traces byte-for-byte unchanged:
 //!
 //! - pure-compute pairs concatenate their expr counts (the unfused
 //!   charges were adjacent `Compute` segments the trace merged anyway);
 //! - a pair whose first op emits a trace element between the charges
 //!   (`LoadMov`'s `Seg::Load`) fuses only when the second op's cost is
-//!   provably zero for every schedule model;
-//! - a branch target landing on the *second* instruction of a pair
+//!   provably zero for every schedule model; the load+bin+store triple
+//!   instead carries a *second* cost id (`cost2`) charged after the load,
+//!   so the `Seg::Load` still lands between the load's charge and the
+//!   merged bin+store charge;
+//! - a branch target landing on a *non-first* instruction of a window
 //!   suppresses fusion (defensive — the block emitter always puts a
 //!   terminator before a block start, but hand-built or future bytecode
 //!   may not).
@@ -121,7 +126,8 @@ fn compile_module_unvalidated_with(
         }
         funcs.push(k);
     }
-    Ok(KernelProgram { mode, funcs })
+    let global_tys = module.globals.iter().map(|(_, g)| g.elem).collect();
+    Ok(KernelProgram { mode, funcs, global_tys })
 }
 
 fn role_of(f: &Func) -> &'static str {
@@ -223,19 +229,21 @@ fn compile_func(module: &Module, f: &Func, mode: KernelMode) -> Result<FuncKerne
 // ---------------------------------------------------------------------------
 // Superinstruction fusion (see module docs)
 
-/// Peephole-fuse hot adjacent pairs of `code` in place, remapping branch
-/// targets over the removed instructions. Returns the number of pairs
-/// fused. `costs` gains merged entries where both components carried one
-/// (stale entries of consumed instructions stay — the table is
-/// index-addressed, never iterated for timing).
+/// Peephole-fuse hot adjacent windows of `code` in place — triples first
+/// (load+bin+store), then pairs — remapping branch targets over the
+/// removed instructions. Returns the number of instructions *eliminated*
+/// (1 per fused pair, 2 per fused triple). `costs` gains merged entries
+/// where both components carried one (stale entries of consumed
+/// instructions stay — the table is index-addressed, never iterated for
+/// timing).
 fn fuse_code(code: &mut Vec<KInstr>, costs: &mut Vec<KCost>) -> u32 {
     let n = code.len();
     if n < 2 {
         return 0;
     }
-    // A branch target landing on the second instruction of a pair must
-    // suppress fusion: the fused instruction replays the first component
-    // too, which a jump to the second must skip.
+    // A branch target landing on a non-first instruction of a window must
+    // suppress fusion: the fused instruction replays the earlier
+    // components too, which a jump into the middle must skip.
     let mut is_target = vec![false; n + 1];
     for instr in code.iter() {
         match &instr.op {
@@ -253,6 +261,24 @@ fn fuse_code(code: &mut Vec<KInstr>, costs: &mut Vec<KCost>) -> u32 {
     let mut i = 0usize;
     while i < n {
         new_pc[i] = code.len() as u32;
+        // Widest window first: a load whose value feeds a bin feeding the
+        // next store beats the narrower pairs it overlaps.
+        let triple = if i + 2 < n && !is_target[i + 1] && !is_target[i + 2] {
+            try_fuse3(&old[i], &old[i + 1], &old[i + 2], costs)
+        } else {
+            None
+        };
+        if let Some(instr) = triple {
+            // Consumed slots map to the fused instruction; nothing
+            // targets them (suppressed above), the mapping just keeps
+            // the table total.
+            new_pc[i + 1] = code.len() as u32;
+            new_pc[i + 2] = code.len() as u32;
+            code.push(instr);
+            fused += 2;
+            i += 3;
+            continue;
+        }
         let pair = if i + 1 < n && !is_target[i + 1] {
             try_fuse(&old[i], &old[i + 1], costs)
         } else {
@@ -260,9 +286,6 @@ fn fuse_code(code: &mut Vec<KInstr>, costs: &mut Vec<KCost>) -> u32 {
         };
         match pair {
             Some(instr) => {
-                // The consumed slot maps to the fused instruction; nothing
-                // targets it (suppressed above), the mapping just keeps
-                // the table total.
                 new_pc[i + 1] = code.len() as u32;
                 code.push(instr);
                 fused += 1;
@@ -407,6 +430,77 @@ fn try_fuse(a: &KInstr, b: &KInstr, costs: &mut Vec<KCost>) -> Option<KInstr> {
             Some(KInstr::new(
                 KOp::ReturnBin { op: *op, bdst: *dst, lhs: *lhs, rhs: *rhs, bty: *bty },
                 cost,
+            ))
+        }
+        // Bin feeding the following atomic-add's value operand.
+        // (`atomic_add` emits no trace element, so cost merging follows
+        // the compute rule, exactly like `StoreBin`.)
+        (
+            KOp::Bin { op, dst, lhs, rhs, ty: bty },
+            KOp::AtomicAdd { arr, index, value: Operand::Slot(s) },
+        ) if *s == *dst => {
+            let cost = merge_compute_costs(a.cost, b.cost, costs)?;
+            Some(KInstr::new(
+                KOp::BinAtomicAdd {
+                    op: *op,
+                    bdst: *dst,
+                    lhs: *lhs,
+                    rhs: *rhs,
+                    bty: *bty,
+                    arr: *arr,
+                    index: *index,
+                },
+                cost,
+            ))
+        }
+        // Bin feeding the outgoing argument send. `send_argument` pushes
+        // its `Seg::Effect` *after* both unfused charges, so the charges
+        // were adjacent computes and the compute merge rule applies.
+        (
+            KOp::Bin { op, dst, lhs, rhs, ty: bty },
+            KOp::SendArgument { value: Some(Operand::Slot(s)) },
+        ) if *s == *dst => {
+            let cost = merge_compute_costs(a.cost, b.cost, costs)?;
+            Some(KInstr::new(
+                KOp::SendBin { op: *op, bdst: *dst, lhs: *lhs, rhs: *rhs, bty: *bty },
+                cost,
+            ))
+        }
+        _ => None,
+    }
+}
+
+/// Try to fuse the adjacent triple `(a, b, c)` — a load whose value feeds
+/// a bin whose result is the next store's value — into one
+/// [`KOp::LoadBinStore`]. The load's own cost stays the up-front
+/// `instr.cost` (its `Seg::Load` interposes before the bin/store
+/// charges); the bin+store costs merge under the compute rule into the
+/// second charge (`cost2`), which the handler applies after the load.
+fn try_fuse3(a: &KInstr, b: &KInstr, c: &KInstr, costs: &mut Vec<KCost>) -> Option<KInstr> {
+    match (&a.op, &b.op, &c.op) {
+        (
+            KOp::Load { dst: ldst, arr, index },
+            KOp::Bin { op, dst: bdst, lhs, rhs, ty: bty },
+            KOp::Store { arr: sarr, index: sindex, value: Operand::Slot(s) },
+        ) if *s == *bdst
+            && (*lhs == Operand::Slot(*ldst) || *rhs == Operand::Slot(*ldst)) =>
+        {
+            let cost2 = merge_compute_costs(b.cost, c.cost, costs)?;
+            Some(KInstr::new(
+                KOp::LoadBinStore {
+                    ldst: *ldst,
+                    arr: *arr,
+                    index: *index,
+                    cost2,
+                    op: *op,
+                    bdst: *bdst,
+                    lhs: *lhs,
+                    rhs: *rhs,
+                    bty: *bty,
+                    sarr: *sarr,
+                    sindex: *sindex,
+                },
+                a.cost,
             ))
         }
         _ => None,
@@ -909,6 +1003,9 @@ mod tests {
                         | KOp::BinMov { .. }
                         | KOp::StoreBin { .. }
                         | KOp::ReturnBin { .. }
+                        | KOp::LoadBinStore { .. }
+                        | KOp::BinAtomicAdd { .. }
+                        | KOp::SendBin { .. }
                 )
             })
         })
@@ -1014,5 +1111,119 @@ mod tests {
         assert!(fuse_from(Some("1")));
         assert!(fuse_from(Some("")));
         assert!(!fuse_from(Some("0")));
+    }
+
+    #[test]
+    fn triple_and_anchored_pair_windows_fuse() {
+        use crate::frontend::ast::BinOp;
+        let g = GlobalId::new(0);
+        // Load → bin over the loaded slot → store of the bin result:
+        // one LoadBinStore, two instructions eliminated.
+        let mut costs = Vec::new();
+        let mut code = vec![
+            KInstr::new(KOp::Load { dst: 1, arr: g, index: Operand::Slot(0) }, NO_COST),
+            KInstr::new(
+                KOp::Bin {
+                    op: BinOp::Add,
+                    dst: 2,
+                    lhs: Operand::Slot(1),
+                    rhs: Operand::Imm(Value::I64(1)),
+                    ty: None,
+                },
+                NO_COST,
+            ),
+            KInstr::new(
+                KOp::Store { arr: g, index: Operand::Slot(0), value: Operand::Slot(2) },
+                NO_COST,
+            ),
+            KInstr::new(KOp::Return { value: None }, NO_COST),
+        ];
+        assert_eq!(fuse_code(&mut code, &mut costs), 2);
+        assert_eq!(code.len(), 2);
+        assert!(matches!(code[0].op, KOp::LoadBinStore { .. }), "{:?}", code[0].op);
+
+        // Bin feeding the next atomic_add's value operand.
+        let mut code = vec![
+            KInstr::new(
+                KOp::Bin {
+                    op: BinOp::Mul,
+                    dst: 1,
+                    lhs: Operand::Slot(0),
+                    rhs: Operand::Imm(Value::I64(2)),
+                    ty: None,
+                },
+                NO_COST,
+            ),
+            KInstr::new(
+                KOp::AtomicAdd {
+                    arr: g,
+                    index: Operand::Imm(Value::I64(0)),
+                    value: Operand::Slot(1),
+                },
+                NO_COST,
+            ),
+            KInstr::new(KOp::Return { value: None }, NO_COST),
+        ];
+        assert_eq!(fuse_code(&mut code, &mut costs), 1);
+        assert!(matches!(code[0].op, KOp::BinAtomicAdd { .. }), "{:?}", code[0].op);
+
+        // Bin feeding the outgoing argument send.
+        let mut code = vec![
+            KInstr::new(
+                KOp::Bin {
+                    op: BinOp::Add,
+                    dst: 1,
+                    lhs: Operand::Slot(0),
+                    rhs: Operand::Slot(0),
+                    ty: None,
+                },
+                NO_COST,
+            ),
+            KInstr::new(KOp::SendArgument { value: Some(Operand::Slot(1)) }, NO_COST),
+            KInstr::new(KOp::Halt, NO_COST),
+        ];
+        assert_eq!(fuse_code(&mut code, &mut costs), 1);
+        assert!(matches!(code[0].op, KOp::SendBin { .. }), "{:?}", code[0].op);
+    }
+
+    #[test]
+    fn fused_rmw_shapes_compute_the_same_values() {
+        use crate::workloads::rmw;
+        let r = compile("t", rmw::RMW_SRC, &CompileOptions::no_dae()).unwrap();
+        let fused = compile_module_with(&r.implicit, KernelMode::Implicit, true).unwrap();
+        // The widened windows must actually fire on the source shapes.
+        assert!(
+            fused.funcs.iter().any(|k| k.code.iter().any(|i| matches!(
+                i.op,
+                KOp::LoadBinStore { .. } | KOp::BinAtomicAdd { .. } | KOp::SendBin { .. }
+            ))),
+            "no widened fused op in rmw:\n{}",
+            fused.disasm()
+        );
+        let mut results = Vec::new();
+        for fuse in [true, false] {
+            let prog = compile_module_with(&r.implicit, KernelMode::Implicit, fuse).unwrap();
+            let fid = prog.func_by_name("bump").unwrap();
+            let mut m = SerialMachine { mem: Memory::new(&r.implicit) };
+            rmw::init_memory(&r.implicit, &mut m.mem).unwrap();
+            let mut stack = KStack::new();
+            let v = run_kernel(
+                &prog,
+                fid,
+                &[Value::I64(0), Value::I64(rmw::N as i64)],
+                &mut stack,
+                &mut m,
+                1_000_000,
+            )
+            .unwrap();
+            results.push((v, m.mem.dump_i64(GlobalId::new(0)), m.mem.dump_i64(GlobalId::new(1))));
+        }
+        assert_eq!(results[0], results[1], "fusion changed observable behavior");
+        // And both match the Rust reference.
+        let mut data = rmw::input();
+        let (ret, acc) = rmw::rmw_ref(&mut data, 0, rmw::N as i64);
+        assert_eq!(results[0].0, Value::I64(ret));
+        assert_eq!(results[0].1, data);
+        assert_eq!(results[0].2[0], acc);
     }
 }

@@ -1,0 +1,580 @@
+//! Static analysis over the flat `KOp` stream, run once per kernel
+//! before codegen.
+//!
+//! The JIT executes frame slots as raw `i64` bits, so it must know —
+//! statically — what each slot's bits *mean*. A flow-insensitive
+//! fixpoint assigns every slot a [`Tag`]:
+//!
+//! - `Int` / `Bool`: the slot always holds `Value::I64` / `Value::Bool`
+//!   at every program point native code can observe it; its bits live in
+//!   the JIT slot arena (`as_i64` image — for `Bool` always 0/1).
+//! - `Unknown`: the slot is never written by a natively-executed
+//!   instruction (every write that would produce `Unknown` bails), so
+//!   the interpreter `Value` in `KStack::slots` stays authoritative;
+//!   native reads see `as_i64` of the entry value (always `Unit` ⇒ 0,
+//!   which is exactly what the interpreter's `as_*` accessors compute).
+//! - `Poison`: the slot may hold `F32`. Same invariant as `Unknown`
+//!   (never written natively — such writes bail), so runtime helpers can
+//!   still materialize its true value from `KStack::slots`; only
+//!   *inline* native reads are forbidden.
+//!
+//! On the same fixpoint, every instruction is classified into a
+//! [`Kind`]: `Inline` (pure int compute / control flow, emitted as
+//! native code), `Helper` (anything touching the [`Machine`] or slow
+//! arithmetic — one out-call to the universal `exec_op` helper, which
+//! replays the interpreter handler bit-for-bit), or `Bail` (terminal
+//! for the native activation; the interpreter resumes at that pc).
+//! Because a bail is terminal, a `Bail` instruction's frame writes are
+//! unobservable by native code — they are still joined into the slot
+//! tags, which only costs precision, never soundness.
+//!
+//! Finally a linear scan over slot use weights picks up to four hot
+//! `Int`/`Bool` slots to pin in callee-saved registers for the whole
+//! function body (intervals conservatively widened to the full range —
+//! kernel frames are tiny, and whole-range pins need no boundary
+//! loads/flushes anywhere except helper calls and bails).
+//!
+//! [`Machine`]: crate::exec::kernel::Machine
+
+use crate::frontend::ast::{BinOp, Type, UnOp};
+use crate::ir::expr::Value;
+
+use super::super::kernel::{is_cmp_op, FuncKernel, KOp, KRet, Operand};
+use super::asm::{Reg, R12, R15, RBP, RBX};
+
+/// What a slot's raw bits mean to native code. Lattice order:
+/// `Unknown < Int, Bool < Poison` (join goes toward `Poison`; `Int` and
+/// `Bool` join to `Int`, which is sound because `Bool` bits are always a
+/// valid 0/1 `i64` image and every consumer of an `Int`-tagged slot uses
+/// `as_i64` semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Tag {
+    Unknown,
+    Int,
+    Bool,
+    Poison,
+}
+
+impl Tag {
+    pub fn join(self, other: Tag) -> Tag {
+        use Tag::*;
+        match (self, other) {
+            (Unknown, t) | (t, Unknown) => t,
+            (Poison, _) | (_, Poison) => Poison,
+            (Int, _) | (_, Int) => Int,
+            (Bool, Bool) => Bool,
+        }
+    }
+}
+
+pub(crate) fn tag_of_type(ty: Type) -> Tag {
+    match ty {
+        Type::Int => Tag::Int,
+        Type::Bool => Tag::Bool,
+        Type::Float => Tag::Poison,
+        Type::Void => Tag::Unknown,
+    }
+}
+
+fn tag_of_value(v: Value) -> Tag {
+    match v {
+        Value::I64(_) => Tag::Int,
+        Value::Bool(_) => Tag::Bool,
+        Value::F32(_) => Tag::Poison,
+        Value::Unit => Tag::Unknown,
+    }
+}
+
+pub(crate) fn operand_tag(op: Operand, tags: &[Tag]) -> Tag {
+    match op {
+        Operand::Slot(s) => tags[s as usize],
+        Operand::Imm(v) => tag_of_value(v),
+    }
+}
+
+/// Tag of a value after the optional `coerce(ty)` every compute op
+/// applies to its result.
+fn apply_ty(raw: Tag, ty: Option<Type>) -> Tag {
+    match ty {
+        Some(t) => tag_of_type(t),
+        None => raw,
+    }
+}
+
+/// Result tag of `bin_value` given operand tags (mirrors its
+/// float-promotion rule: only `Add|Sub|Mul|Div` promote, comparisons and
+/// logic produce `Bool`, everything else goes through `as_i64`).
+fn bin_tag(op: BinOp, a: Tag, b: Tag) -> Tag {
+    use BinOp::*;
+    match op {
+        Lt | Le | Gt | Ge | Eq | Ne | And | Or => Tag::Bool,
+        Add | Sub | Mul | Div => {
+            if a == Tag::Poison || b == Tag::Poison {
+                Tag::Poison
+            } else {
+                Tag::Int
+            }
+        }
+        Rem | Shl | Shr | BitAnd | BitOr | BitXor => Tag::Int,
+    }
+}
+
+fn un_tag(op: UnOp, v: Tag) -> Tag {
+    match op {
+        UnOp::Neg => {
+            if v == Tag::Poison {
+                Tag::Poison
+            } else {
+                Tag::Int
+            }
+        }
+        UnOp::Not => Tag::Bool,
+    }
+}
+
+/// `builtin1_value`/`builtin2_value` float-promote when any operand is
+/// `F32`, otherwise stay `I64`.
+fn builtin_tag(tags: &[Tag]) -> Tag {
+    if tags.contains(&Tag::Poison) {
+        Tag::Poison
+    } else {
+        Tag::Int
+    }
+}
+
+/// Is `op` in the natively-inlined `bin_value` subset? `Div`/`Rem` trap
+/// on hardware where the interpreter defines them (zero divisor,
+/// `MIN/-1`), and `And`/`Or` produce `Bool` from `as_bool` semantics —
+/// all four go through the helper instead.
+pub(crate) fn bin_is_fast(op: BinOp) -> bool {
+    use BinOp::*;
+    matches!(op, Add | Sub | Mul | Shl | Shr | BitAnd | BitOr | BitXor) || is_cmp_op(op)
+}
+
+/// How one instruction executes inside a compiled kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Kind {
+    /// Pure int compute / control flow, emitted as native code.
+    Inline,
+    /// One out-call to the universal `exec_op` runtime helper.
+    Helper,
+    /// Terminal: flush state, hand the frame back to the interpreter at
+    /// this pc.
+    Bail,
+}
+
+/// The per-kernel compilation plan.
+pub(crate) struct Plan {
+    pub tags: Vec<Tag>,
+    pub kinds: Vec<Kind>,
+    /// Hot `Int`/`Bool` slots pinned in callee-saved registers for the
+    /// whole body, hottest first.
+    pub pins: Vec<(u32, Reg)>,
+}
+
+fn for_each_read(op: &KOp, f: &mut impl FnMut(Operand)) {
+    let mut args = |args_at: u32, nargs: u32| {
+        for i in 0..nargs {
+            f(Operand::Slot(args_at + i));
+        }
+    };
+    match op {
+        KOp::Mov { src, .. } => f(*src),
+        KOp::Bin { lhs, rhs, .. }
+        | KOp::Builtin2 { lhs, rhs, .. }
+        | KOp::BinMov { lhs, rhs, .. }
+        | KOp::ReturnBin { lhs, rhs, .. } => {
+            f(*lhs);
+            f(*rhs);
+        }
+        KOp::Un { src, .. } | KOp::Builtin1 { src, .. } | KOp::IntToFloat { src, .. } => f(*src),
+        KOp::Load { index, .. } => f(*index),
+        KOp::Store { index, value, .. } | KOp::AtomicAdd { index, value, .. } => {
+            f(*index);
+            f(*value);
+        }
+        KOp::Call { args_at, nargs, .. } | KOp::SpawnSeq { args_at, nargs, .. } => {
+            args(*args_at, *nargs)
+        }
+        KOp::MakeClosure { .. } | KOp::Halt | KOp::Jump { .. } => {}
+        KOp::ClosureStore { clos, value, .. } => {
+            f(Operand::Slot(*clos));
+            f(*value);
+        }
+        KOp::SpawnChild { args_at, nargs, ret, .. } => {
+            args(*args_at, *nargs);
+            match ret {
+                KRet::Slot { clos, .. } | KRet::Counter { clos } => f(Operand::Slot(*clos)),
+                KRet::Forward => {}
+            }
+        }
+        KOp::CloseSpawns { clos } => f(Operand::Slot(*clos)),
+        KOp::SendArgument { value } => {
+            if let Some(o) = value {
+                f(*o);
+            }
+        }
+        KOp::Branch { cond, .. } => f(*cond),
+        KOp::Return { value } => {
+            if let Some(o) = value {
+                f(*o);
+            }
+        }
+        KOp::CmpBranch { lhs, rhs, .. } => {
+            f(*lhs);
+            f(*rhs);
+        }
+        KOp::LoadMov { index, .. } => f(*index),
+        KOp::StoreBin { lhs, rhs, index, .. } => {
+            f(*lhs);
+            f(*rhs);
+            f(*index);
+        }
+        KOp::LoadBinStore { index, lhs, rhs, sindex, .. } => {
+            f(*index);
+            f(*lhs);
+            f(*rhs);
+            f(*sindex);
+        }
+        KOp::BinAtomicAdd { lhs, rhs, index, .. } => {
+            f(*lhs);
+            f(*rhs);
+            f(*index);
+        }
+        KOp::SendBin { lhs, rhs, .. } => {
+            f(*lhs);
+            f(*rhs);
+        }
+    }
+}
+
+/// Frame writes of `op` with the tag each would carry under the current
+/// slot tags.
+fn for_each_write(op: &KOp, tags: &[Tag], globals: &[Tag], f: &mut impl FnMut(u32, Tag)) {
+    let ot = |o: &Operand| operand_tag(*o, tags);
+    let gt = |g: &crate::ir::cfg::GlobalId| globals.get(g.index()).copied().unwrap_or(Tag::Poison);
+    match op {
+        KOp::Mov { dst, src, ty } => f(*dst, apply_ty(ot(src), *ty)),
+        KOp::Bin { op, dst, lhs, rhs, ty } => {
+            f(*dst, apply_ty(bin_tag(*op, ot(lhs), ot(rhs)), *ty))
+        }
+        KOp::Un { op, dst, src, ty } => f(*dst, apply_ty(un_tag(*op, ot(src)), *ty)),
+        KOp::Builtin2 { dst, lhs, rhs, ty, .. } => {
+            f(*dst, apply_ty(builtin_tag(&[ot(lhs), ot(rhs)]), *ty))
+        }
+        KOp::Builtin1 { dst, src, ty, .. } => f(*dst, apply_ty(builtin_tag(&[ot(src)]), *ty)),
+        KOp::IntToFloat { dst, ty, .. } => f(*dst, apply_ty(Tag::Poison, *ty)),
+        KOp::Load { dst, arr, .. } => f(*dst, gt(arr)),
+        KOp::Call { dst, .. } | KOp::SpawnSeq { dst, .. } => {
+            if let Some((d, t)) = dst {
+                f(*d, tag_of_type(*t));
+            }
+        }
+        KOp::MakeClosure { dst, .. } => f(*dst, Tag::Int),
+        KOp::CmpBranch { dst, ty, .. } => f(*dst, apply_ty(Tag::Bool, *ty)),
+        KOp::LoadMov { ldst, arr, dst, ty, .. } => {
+            let g = gt(arr);
+            f(*ldst, g);
+            f(*dst, apply_ty(g, *ty));
+        }
+        KOp::BinMov { op, bdst, lhs, rhs, bty, dst, ty } => {
+            let b = apply_ty(bin_tag(*op, ot(lhs), ot(rhs)), *bty);
+            f(*bdst, b);
+            f(*dst, apply_ty(b, *ty));
+        }
+        KOp::StoreBin { op, bdst, lhs, rhs, bty, .. }
+        | KOp::ReturnBin { op, bdst, lhs, rhs, bty }
+        | KOp::BinAtomicAdd { op, bdst, lhs, rhs, bty, .. }
+        | KOp::SendBin { op, bdst, lhs, rhs, bty } => {
+            f(*bdst, apply_ty(bin_tag(*op, ot(lhs), ot(rhs)), *bty));
+        }
+        KOp::LoadBinStore { ldst, arr, op, bdst, lhs, rhs, bty, .. } => {
+            f(*ldst, gt(arr));
+            f(*bdst, apply_ty(bin_tag(*op, ot(lhs), ot(rhs)), *bty));
+        }
+        KOp::Store { .. }
+        | KOp::AtomicAdd { .. }
+        | KOp::ClosureStore { .. }
+        | KOp::SpawnChild { .. }
+        | KOp::CloseSpawns { .. }
+        | KOp::SendArgument { .. }
+        | KOp::Jump { .. }
+        | KOp::Branch { .. }
+        | KOp::Return { .. }
+        | KOp::Halt => {}
+    }
+}
+
+/// Base execution kind by opcode alone (before tag-driven demotion).
+fn base_kind(op: &KOp) -> Kind {
+    match op {
+        KOp::Mov { .. }
+        | KOp::Un { .. }
+        | KOp::Jump { .. }
+        | KOp::Branch { .. }
+        | KOp::Return { .. }
+        | KOp::Halt
+        | KOp::CmpBranch { .. } => Kind::Inline,
+        KOp::Bin { op, .. } | KOp::BinMov { op, .. } => {
+            if bin_is_fast(*op) {
+                Kind::Inline
+            } else {
+                Kind::Helper
+            }
+        }
+        KOp::ReturnBin { op, .. } => {
+            // The slow-group result would have to thread through the
+            // helper's return protocol; rare enough to hand back.
+            if bin_is_fast(*op) {
+                Kind::Inline
+            } else {
+                Kind::Bail
+            }
+        }
+        // Rounds through f32 — unrepresentable in the int value model.
+        KOp::IntToFloat { .. } => Kind::Bail,
+        KOp::Builtin2 { .. }
+        | KOp::Builtin1 { .. }
+        | KOp::Load { .. }
+        | KOp::Store { .. }
+        | KOp::AtomicAdd { .. }
+        | KOp::Call { .. }
+        | KOp::SpawnSeq { .. }
+        | KOp::MakeClosure { .. }
+        | KOp::ClosureStore { .. }
+        | KOp::SpawnChild { .. }
+        | KOp::CloseSpawns { .. }
+        | KOp::SendArgument { .. }
+        | KOp::LoadMov { .. }
+        | KOp::StoreBin { .. }
+        | KOp::LoadBinStore { .. }
+        | KOp::BinAtomicAdd { .. }
+        | KOp::SendBin { .. } => Kind::Helper,
+    }
+}
+
+fn classify(op: &KOp, tags: &[Tag], globals: &[Tag]) -> Kind {
+    let kind = base_kind(op);
+    if kind == Kind::Bail {
+        return Kind::Bail;
+    }
+    // Inline code reads raw bits — a possibly-F32 operand sinks it.
+    // Helpers materialize true `Value`s (Poison/Unknown slots read from
+    // `KStack::slots`, which stays authoritative), so they keep going.
+    if kind == Kind::Inline {
+        let mut poisoned = false;
+        for_each_read(op, &mut |o| poisoned |= operand_tag(o, tags) == Tag::Poison);
+        if poisoned {
+            return Kind::Bail;
+        }
+    }
+    // No write may produce bits the arena can't represent (`Poison`) or
+    // clobber a slot whose `KStack::slots` image must stay authoritative
+    // (`Unknown`).
+    let mut bad_write = false;
+    for_each_write(op, tags, globals, &mut |_, t| {
+        bad_write |= matches!(t, Tag::Poison | Tag::Unknown)
+    });
+    if bad_write {
+        return Kind::Bail;
+    }
+    kind
+}
+
+/// Registers available for whole-body slot pins — callee-saved, so
+/// runtime helpers preserve them for free.
+const PIN_REGS: [Reg; 4] = [RBX, R12, R15, RBP];
+
+/// Minimum inline-use weight for a pin to pay for its prologue load and
+/// per-helper flush/reload traffic.
+const PIN_MIN_WEIGHT: u32 = 3;
+
+pub(crate) fn analyze(kernel: &FuncKernel, global_tags: &[Tag]) -> Plan {
+    let nslots = kernel.frame.len();
+    let mut tags: Vec<Tag> = kernel.frame.iter().map(|v| tag_of_value(*v)).collect();
+    // Entry coerces every argument to its declared parameter type, so
+    // param slots are typed by `param_tys` no matter what the caller
+    // staged.
+    for (i, ty) in kernel.param_tys.iter().enumerate().take(nslots) {
+        tags[i] = tag_of_type(*ty);
+    }
+
+    // Flow-insensitive fixpoint: join every instruction's write tags
+    // until stable. Monotone over a 4-point lattice, so it terminates
+    // quickly; the iteration cap is a defensive backstop.
+    for _ in 0..(2 * nslots + 4) {
+        let mut changed = false;
+        for instr in &kernel.code {
+            for_each_write(&instr.op, &tags, global_tags, &mut |s, t| {
+                let s = s as usize;
+                let j = tags[s].join(t);
+                if j != tags[s] {
+                    tags[s] = j;
+                    changed = true;
+                }
+            });
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    let kinds: Vec<Kind> =
+        kernel.code.iter().map(|i| classify(&i.op, &tags, global_tags)).collect();
+
+    // Linear scan over use weights: pin the hottest pinnable slots.
+    // Only `Inline` occurrences count — helper reads/writes go through
+    // the arena memory either way.
+    let mut weight = vec![0u32; nslots];
+    for (instr, kind) in kernel.code.iter().zip(&kinds) {
+        if *kind != Kind::Inline {
+            continue;
+        }
+        for_each_read(&instr.op, &mut |o| {
+            if let Operand::Slot(s) = o {
+                weight[s as usize] += 1;
+            }
+        });
+        for_each_write(&instr.op, &tags, global_tags, &mut |s, _| weight[s as usize] += 1);
+    }
+    let mut candidates: Vec<u32> = (0..nslots as u32)
+        .filter(|&s| {
+            matches!(tags[s as usize], Tag::Int | Tag::Bool)
+                && weight[s as usize] >= PIN_MIN_WEIGHT
+        })
+        .collect();
+    candidates.sort_by_key(|&s| (std::cmp::Reverse(weight[s as usize]), s));
+    let pins = candidates.into_iter().zip(PIN_REGS).collect();
+
+    Plan { tags, kinds, pins }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::kernel::{KInstr, NO_COST};
+    use crate::ir::cfg::FuncKind;
+    use std::sync::Arc;
+
+    fn kernel(frame: Vec<Value>, params: Vec<Type>, code: Vec<KOp>) -> FuncKernel {
+        let n = code.len() as u32;
+        FuncKernel {
+            name: "t".into(),
+            kind: FuncKind::Task,
+            role: "task",
+            params: params.len(),
+            param_tys: Arc::from(params.as_slice()),
+            ret: Type::Int,
+            frame,
+            code: code.into_iter().map(|op| KInstr::new(op, NO_COST)).collect(),
+            costs: Vec::new(),
+            fused: 0,
+            unfused_len: n,
+        }
+    }
+
+    #[test]
+    fn join_is_commutative_and_absorbing() {
+        use Tag::*;
+        for a in [Unknown, Int, Bool, Poison] {
+            for b in [Unknown, Int, Bool, Poison] {
+                assert_eq!(a.join(b), b.join(a));
+                assert_eq!(a.join(Poison), Poison);
+                assert_eq!(a.join(a), a);
+            }
+        }
+        assert_eq!(Int.join(Bool), Int);
+        assert_eq!(Unknown.join(Bool), Bool);
+    }
+
+    #[test]
+    fn int_kernel_is_fully_inline_and_pins_hot_slots() {
+        // param p0; t1 = p0 + p0 (x3 uses); return t1
+        let k = kernel(
+            vec![Value::I64(0), Value::Unit],
+            vec![Type::Int],
+            vec![
+                KOp::Bin {
+                    op: BinOp::Add,
+                    dst: 1,
+                    lhs: Operand::Slot(0),
+                    rhs: Operand::Slot(0),
+                    ty: None,
+                },
+                KOp::Bin {
+                    op: BinOp::Add,
+                    dst: 1,
+                    lhs: Operand::Slot(1),
+                    rhs: Operand::Slot(0),
+                    ty: None,
+                },
+                KOp::Return { value: Some(Operand::Slot(1)) },
+            ],
+        );
+        let plan = analyze(&k, &[]);
+        assert_eq!(plan.tags, vec![Tag::Int, Tag::Int]);
+        assert!(plan.kinds.iter().all(|k| *k == Kind::Inline));
+        // Both slots have weight >= 3; slot 0 (weight 3) and slot 1
+        // (weight 3+1 reads/writes) are pinned, hottest first.
+        assert_eq!(plan.pins.len(), 2);
+    }
+
+    #[test]
+    fn float_flow_poisons_and_bails() {
+        // p0: float. mov t1 = p0 would carry F32 bits -> Bail; a store
+        // of p0 only needs the helper -> Helper.
+        let k = kernel(
+            vec![Value::F32(0.0), Value::Unit],
+            vec![Type::Float],
+            vec![
+                KOp::Mov { dst: 1, src: Operand::Slot(0), ty: None },
+                KOp::Store {
+                    arr: crate::util::idvec::Id::new(0),
+                    index: Operand::Imm(Value::I64(0)),
+                    value: Operand::Slot(0),
+                },
+                KOp::Return { value: None },
+            ],
+        );
+        let plan = analyze(&k, &[Tag::Poison]);
+        assert_eq!(plan.tags[0], Tag::Poison);
+        assert_eq!(plan.kinds[0], Kind::Bail);
+        assert_eq!(plan.kinds[1], Kind::Helper);
+        assert_eq!(plan.kinds[2], Kind::Inline);
+        assert!(plan.pins.is_empty());
+    }
+
+    #[test]
+    fn slow_bins_take_the_helper_and_div_by_float_bails() {
+        let k = kernel(
+            vec![Value::I64(0), Value::Unit],
+            vec![Type::Int],
+            vec![
+                KOp::Bin {
+                    op: BinOp::Div,
+                    dst: 1,
+                    lhs: Operand::Slot(0),
+                    rhs: Operand::Imm(Value::I64(3)),
+                    ty: None,
+                },
+                KOp::Bin {
+                    op: BinOp::Div,
+                    dst: 1,
+                    lhs: Operand::Slot(0),
+                    rhs: Operand::Imm(Value::F32(2.0)),
+                    ty: None,
+                },
+                KOp::Return { value: Some(Operand::Slot(1)) },
+            ],
+        );
+        let plan = analyze(&k, &[]);
+        assert_eq!(plan.kinds[0], Kind::Helper);
+        // Float divisor promotes the result to F32: the write poisons,
+        // the instruction bails, and slot 1 is poisoned for everyone.
+        assert_eq!(plan.kinds[1], Kind::Bail);
+        assert_eq!(plan.tags[1], Tag::Poison);
+        // ...which also sinks the first Div (its write now computes
+        // Poison via the join) and the Return read.
+        assert_eq!(plan.kinds[2], Kind::Bail);
+    }
+}

@@ -1,0 +1,419 @@
+//! Minimal x86-64 instruction encoder for the JIT tier.
+//!
+//! Emits exactly the subset the kernel compiler needs — 64-bit
+//! register/memory moves, the inlineable ALU group, `setcc`/`movzx`
+//! flag materialization, variable shifts by `cl`, indirect calls through
+//! the environment pointer, and rel32 control flow — into a flat byte
+//! buffer. Branch targets are recorded symbolically (either a bytecode
+//! `pc`, resolved against the per-instruction offset table, or an
+//! internal [`Label`]) and patched in one pass by [`Asm::finalize`].
+//!
+//! Encoding notes: every integer op is emitted with `REX.W` (the kernel
+//! value model is uniformly 64-bit), memory operands always use the
+//! `mod=10` disp32 form (no compaction — compile time is off the hot
+//! path and uniform encoding keeps this file small), and an SIB byte is
+//! inserted only where the base register's low bits collide with the
+//! SIB escape (`rsp`/`r12`).
+
+/// A general-purpose register by hardware encoding number.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct Reg(pub u8);
+
+pub(crate) const RAX: Reg = Reg(0);
+pub(crate) const RCX: Reg = Reg(1);
+#[allow(dead_code)]
+pub(crate) const RDX: Reg = Reg(2);
+pub(crate) const RBX: Reg = Reg(3);
+pub(crate) const RSP: Reg = Reg(4);
+pub(crate) const RBP: Reg = Reg(5);
+pub(crate) const RSI: Reg = Reg(6);
+pub(crate) const RDI: Reg = Reg(7);
+#[allow(dead_code)]
+pub(crate) const R8: Reg = Reg(8);
+pub(crate) const R12: Reg = Reg(12);
+pub(crate) const R13: Reg = Reg(13);
+pub(crate) const R14: Reg = Reg(14);
+pub(crate) const R15: Reg = Reg(15);
+
+/// Condition codes (the low nibble of `setcc` / `jcc` opcodes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct Cc(pub u8);
+pub(crate) const CC_E: Cc = Cc(0x4);
+pub(crate) const CC_NE: Cc = Cc(0x5);
+/// Unsigned above (used for the u64 step-budget compare).
+pub(crate) const CC_A: Cc = Cc(0x7);
+pub(crate) const CC_L: Cc = Cc(0xC);
+pub(crate) const CC_GE: Cc = Cc(0xD);
+pub(crate) const CC_LE: Cc = Cc(0xE);
+pub(crate) const CC_G: Cc = Cc(0xF);
+
+/// Internal jump target, bound at most once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct Label(usize);
+
+pub(crate) struct Asm {
+    pub code: Vec<u8>,
+    /// `(offset of a rel32 field, bytecode pc it targets)`.
+    pc_refs: Vec<(usize, usize)>,
+    /// `(offset of a rel32 field, label id it targets)`.
+    label_refs: Vec<(usize, usize)>,
+    label_offs: Vec<Option<usize>>,
+}
+
+impl Asm {
+    pub fn new() -> Asm {
+        Asm { code: Vec::with_capacity(1024), pc_refs: Vec::new(), label_refs: Vec::new(), label_offs: Vec::new() }
+    }
+
+    pub fn new_label(&mut self) -> Label {
+        self.label_offs.push(None);
+        Label(self.label_offs.len() - 1)
+    }
+
+    pub fn bind(&mut self, l: Label) {
+        debug_assert!(self.label_offs[l.0].is_none(), "label bound twice");
+        self.label_offs[l.0] = Some(self.code.len());
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.code.push(b);
+    }
+
+    fn i32le(&mut self, v: i32) {
+        self.code.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `REX.W` prefix for a 64-bit op with `reg` in the ModRM reg field
+    /// and `rm` as the base/rm register.
+    fn rex_w(&mut self, reg: Reg, rm: Reg) {
+        self.byte(0x48 | ((reg.0 >> 3) << 2) | (rm.0 >> 3));
+    }
+
+    /// Optional `REX` (no W) — only when an extended register forces it.
+    fn rex_opt(&mut self, reg: Reg, rm: Reg) {
+        let b = 0x40 | ((reg.0 >> 3) << 2) | (rm.0 >> 3);
+        if b != 0x40 {
+            self.byte(b);
+        }
+    }
+
+    fn modrm(&mut self, md: u8, reg: Reg, rm: Reg) {
+        self.byte((md << 6) | ((reg.0 & 7) << 3) | (rm.0 & 7));
+    }
+
+    /// `[base + disp32]` memory operand (mod=10), with the SIB escape
+    /// for `rsp`/`r12` bases.
+    fn mem(&mut self, reg: Reg, base: Reg, disp: i32) {
+        self.modrm(0b10, reg, base);
+        if base.0 & 7 == 4 {
+            self.byte(0x24); // SIB: scale=1, no index, base
+        }
+        self.i32le(disp);
+    }
+
+    // -- moves ------------------------------------------------------------
+
+    /// `mov dst, src` (64-bit).
+    pub fn mov_rr(&mut self, dst: Reg, src: Reg) {
+        self.rex_w(src, dst);
+        self.byte(0x89);
+        self.modrm(0b11, src, dst);
+    }
+
+    /// `mov dst, [base + disp]`.
+    pub fn mov_rm(&mut self, dst: Reg, base: Reg, disp: i32) {
+        self.rex_w(dst, base);
+        self.byte(0x8B);
+        self.mem(dst, base, disp);
+    }
+
+    /// `mov [base + disp], src`.
+    pub fn mov_mr(&mut self, base: Reg, disp: i32, src: Reg) {
+        self.rex_w(src, base);
+        self.byte(0x89);
+        self.mem(src, base, disp);
+    }
+
+    /// `mov dst, imm` (sign-extended imm32 form when it fits, imm64
+    /// otherwise).
+    pub fn mov_ri(&mut self, dst: Reg, imm: i64) {
+        if imm >= i32::MIN as i64 && imm <= i32::MAX as i64 {
+            self.rex_w(Reg(0), dst);
+            self.byte(0xC7);
+            self.modrm(0b11, Reg(0), dst);
+            self.i32le(imm as i32);
+        } else {
+            self.byte(0x48 | (dst.0 >> 3));
+            self.byte(0xB8 + (dst.0 & 7));
+            self.code.extend_from_slice(&imm.to_le_bytes());
+        }
+    }
+
+    /// `mov eax, imm32` — zero-extends; used for the return status.
+    pub fn mov_eax_imm(&mut self, imm: u32) {
+        self.byte(0xB8);
+        self.code.extend_from_slice(&imm.to_le_bytes());
+    }
+
+    // -- ALU --------------------------------------------------------------
+
+    fn alu_rr(&mut self, opc: u8, dst: Reg, src: Reg) {
+        self.rex_w(src, dst);
+        self.byte(opc);
+        self.modrm(0b11, src, dst);
+    }
+
+    pub fn add_rr(&mut self, dst: Reg, src: Reg) {
+        self.alu_rr(0x01, dst, src);
+    }
+
+    pub fn sub_rr(&mut self, dst: Reg, src: Reg) {
+        self.alu_rr(0x29, dst, src);
+    }
+
+    pub fn and_rr(&mut self, dst: Reg, src: Reg) {
+        self.alu_rr(0x21, dst, src);
+    }
+
+    pub fn or_rr(&mut self, dst: Reg, src: Reg) {
+        self.alu_rr(0x09, dst, src);
+    }
+
+    pub fn xor_rr(&mut self, dst: Reg, src: Reg) {
+        self.alu_rr(0x31, dst, src);
+    }
+
+    pub fn cmp_rr(&mut self, a: Reg, b: Reg) {
+        self.alu_rr(0x39, a, b);
+    }
+
+    /// `imul dst, src` (dst = dst * src, wrapping).
+    pub fn imul_rr(&mut self, dst: Reg, src: Reg) {
+        self.rex_w(dst, src);
+        self.byte(0x0F);
+        self.byte(0xAF);
+        self.modrm(0b11, dst, src);
+    }
+
+    /// `neg r` (two's-complement, wrapping).
+    pub fn neg(&mut self, r: Reg) {
+        self.rex_w(Reg(3), r);
+        self.byte(0xF7);
+        self.modrm(0b11, Reg(3), r);
+    }
+
+    /// `test a, a` / `test a, b`.
+    pub fn test_rr(&mut self, a: Reg, b: Reg) {
+        self.rex_w(b, a);
+        self.byte(0x85);
+        self.modrm(0b11, b, a);
+    }
+
+    /// `add r, imm8` (sign-extended).
+    pub fn add_ri8(&mut self, r: Reg, imm: i8) {
+        self.rex_w(Reg(0), r);
+        self.byte(0x83);
+        self.modrm(0b11, Reg(0), r);
+        self.byte(imm as u8);
+    }
+
+    /// `sub r, imm8` (sign-extended).
+    pub fn sub_ri8(&mut self, r: Reg, imm: i8) {
+        self.rex_w(Reg(5), r);
+        self.byte(0x83);
+        self.modrm(0b11, Reg(5), r);
+        self.byte(imm as u8);
+    }
+
+    /// `cmp reg, [base + disp]`.
+    pub fn cmp_rm(&mut self, reg: Reg, base: Reg, disp: i32) {
+        self.rex_w(reg, base);
+        self.byte(0x3B);
+        self.mem(reg, base, disp);
+    }
+
+    /// `shl r, cl` (count masked to 63 by hardware — exactly
+    /// `wrapping_shl`'s `& 63`).
+    pub fn shl_cl(&mut self, r: Reg) {
+        self.rex_w(Reg(4), r);
+        self.byte(0xD3);
+        self.modrm(0b11, Reg(4), r);
+    }
+
+    /// `sar r, cl` (arithmetic — `i64::wrapping_shr`).
+    pub fn sar_cl(&mut self, r: Reg) {
+        self.rex_w(Reg(7), r);
+        self.byte(0xD3);
+        self.modrm(0b11, Reg(7), r);
+    }
+
+    /// `setcc al ; movzx rax, al` — materialize the last compare's flag
+    /// as 0/1 in `rax`.
+    pub fn setcc_rax(&mut self, cc: Cc) {
+        self.byte(0x0F);
+        self.byte(0x90 + cc.0);
+        self.byte(0xC0); // ModRM: /0, al
+        self.byte(0x48);
+        self.byte(0x0F);
+        self.byte(0xB6);
+        self.byte(0xC0); // movzx rax, al
+    }
+
+    /// Normalize `rax` to 0/1 (`test rax, rax ; setne al ; movzx`).
+    pub fn bool_normalize_rax(&mut self) {
+        self.test_rr(RAX, RAX);
+        self.setcc_rax(CC_NE);
+    }
+
+    // -- calls and control flow -------------------------------------------
+
+    /// `call qword [base + disp]`.
+    pub fn call_mem(&mut self, base: Reg, disp: i32) {
+        self.rex_opt(Reg(0), base);
+        self.byte(0xFF);
+        self.mem(Reg(2), base, disp);
+    }
+
+    pub fn push(&mut self, r: Reg) {
+        if r.0 >= 8 {
+            self.byte(0x41);
+        }
+        self.byte(0x50 + (r.0 & 7));
+    }
+
+    pub fn pop(&mut self, r: Reg) {
+        if r.0 >= 8 {
+            self.byte(0x41);
+        }
+        self.byte(0x58 + (r.0 & 7));
+    }
+
+    pub fn ret(&mut self) {
+        self.byte(0xC3);
+    }
+
+    /// `jmp rel32` to a bytecode pc (patched by [`Asm::finalize`]).
+    pub fn jmp_pc(&mut self, pc: usize) {
+        self.byte(0xE9);
+        self.pc_refs.push((self.code.len(), pc));
+        self.i32le(0);
+    }
+
+    /// `jcc rel32` to a bytecode pc.
+    pub fn jcc_pc(&mut self, cc: Cc, pc: usize) {
+        self.byte(0x0F);
+        self.byte(0x80 + cc.0);
+        self.pc_refs.push((self.code.len(), pc));
+        self.i32le(0);
+    }
+
+    /// `jmp rel32` to an internal label.
+    pub fn jmp_label(&mut self, l: Label) {
+        self.byte(0xE9);
+        self.label_refs.push((self.code.len(), l.0));
+        self.i32le(0);
+    }
+
+    /// `jcc rel32` to an internal label.
+    pub fn jcc_label(&mut self, cc: Cc, l: Label) {
+        self.byte(0x0F);
+        self.byte(0x80 + cc.0);
+        self.label_refs.push((self.code.len(), l.0));
+        self.i32le(0);
+    }
+
+    /// Patch every recorded rel32 against the per-pc offset table and
+    /// the bound labels. Returns the finished machine code.
+    pub fn finalize(mut self, pc_offs: &[usize]) -> Vec<u8> {
+        let patch = |code: &mut Vec<u8>, at: usize, target: usize| {
+            let rel = target as i64 - (at as i64 + 4);
+            debug_assert!(rel >= i32::MIN as i64 && rel <= i32::MAX as i64);
+            code[at..at + 4].copy_from_slice(&(rel as i32).to_le_bytes());
+        };
+        let pc_refs = std::mem::take(&mut self.pc_refs);
+        for (at, pc) in pc_refs {
+            patch(&mut self.code, at, pc_offs[pc]);
+        }
+        let label_refs = std::mem::take(&mut self.label_refs);
+        for (at, l) in label_refs {
+            let target = self.label_offs[l].expect("unbound jit label");
+            patch(&mut self.code, at, target);
+        }
+        self.code
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Byte-level pins for the trickiest encodings, checked against a
+    // reference assembler's output.
+    #[test]
+    fn encodings_match_reference_bytes() {
+        let mut a = Asm::new();
+        a.mov_rr(R13, RDI); // mov r13, rdi -> 49 89 FD
+        assert_eq!(a.code, [0x49, 0x89, 0xFD]);
+
+        let mut a = Asm::new();
+        a.mov_rm(R14, R13, 0); // mov r14, [r13+0] -> 4D 8B B5 00000000
+        assert_eq!(a.code, [0x4D, 0x8B, 0xB5, 0, 0, 0, 0]);
+
+        let mut a = Asm::new();
+        a.mov_mr(R14, 8, RAX); // mov [r14+8], rax -> 49 89 86 08000000
+        assert_eq!(a.code, [0x49, 0x89, 0x86, 0x08, 0, 0, 0, 0]);
+
+        let mut a = Asm::new();
+        a.mov_ri(RCX, 1); // mov rcx, 1 -> 48 C7 C1 01000000
+        assert_eq!(a.code, [0x48, 0xC7, 0xC1, 1, 0, 0, 0]);
+
+        let mut a = Asm::new();
+        a.mov_ri(RAX, i64::MAX); // movabs
+        assert_eq!(a.code[..2], [0x48, 0xB8]);
+        assert_eq!(a.code.len(), 10);
+
+        let mut a = Asm::new();
+        a.call_mem(R13, 0x30); // call [r13+0x30] -> 41 FF 95 30000000
+        assert_eq!(a.code, [0x41, 0xFF, 0x95, 0x30, 0, 0, 0, 0]);
+
+        let mut a = Asm::new();
+        a.imul_rr(RAX, RCX); // 48 0F AF C1
+        assert_eq!(a.code, [0x48, 0x0F, 0xAF, 0xC1]);
+
+        let mut a = Asm::new();
+        a.setcc_rax(CC_L); // setl al; movzx rax, al
+        assert_eq!(a.code, [0x0F, 0x9C, 0xC0, 0x48, 0x0F, 0xB6, 0xC0]);
+
+        let mut a = Asm::new();
+        a.push(R12);
+        a.pop(RBX); // 41 54, 5B
+        assert_eq!(a.code, [0x41, 0x54, 0x5B]);
+
+        // rsp/r12 bases force an SIB byte.
+        let mut a = Asm::new();
+        a.mov_rm(RAX, RSP, 16); // mov rax, [rsp+16] -> 48 8B 84 24 10000000
+        assert_eq!(a.code, [0x48, 0x8B, 0x84, 0x24, 0x10, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn rel32_patching_is_end_relative() {
+        let mut a = Asm::new();
+        let l = a.new_label();
+        a.jmp_label(l); // 5 bytes
+        a.ret(); // offset 5
+        a.bind(l); // label at offset 6
+        a.ret();
+        let code = a.finalize(&[]);
+        // rel32 = 6 - (1 + 4) = 1
+        assert_eq!(&code[1..5], &1i32.to_le_bytes());
+    }
+
+    #[test]
+    fn pc_refs_resolve_through_the_offset_table() {
+        let mut a = Asm::new();
+        a.jmp_pc(1); // 5 bytes at 0
+        a.ret();
+        let code = a.finalize(&[0, 6]);
+        assert_eq!(&code[1..5], &1i32.to_le_bytes());
+    }
+}

@@ -1,0 +1,361 @@
+//! Kernel bytecode → x86-64 lowering.
+//!
+//! One pass over the flat instruction stream, driven by the
+//! [`analysis::Plan`]:
+//!
+//! - `Inline` ops become straight-line native code over the `i64` slot
+//!   arena (`env.jslots`), with up to four hot slots pinned in
+//!   callee-saved registers for the whole body.
+//! - `Helper` ops compile to one out-call through the universal
+//!   `exec_op` function pointer stored in the [`JitEnv`]: pins are
+//!   flushed, `(env, pc)` is passed, and a nonzero status forwards
+//!   straight to the epilogue (the runtime raises the stored error).
+//! - `Bail` ops flush pins, record their pc in `env.bail_pc`, and
+//!   return status 1 — the interpreter resumes the *same* frame
+//!   activation at that pc with the step budget it left off at.
+//!
+//! Step budgeting matches the interpreter exactly: every `Jump` /
+//! `Branch` / `CmpBranch` bumps `env.steps` against `env.limit` before
+//! redirecting; on overflow the instruction bails *without* storing the
+//! bumped count, so the interpreter re-executes it and raises the
+//! step-limit error itself, bit-for-bit.
+//!
+//! Register conventions inside compiled code:
+//!
+//! | reg           | role                                    |
+//! |---------------|-----------------------------------------|
+//! | `r13`         | `*mut JitEnv`                           |
+//! | `r14`         | `env.jslots` (this frame's slot arena)  |
+//! | `rbx r12 r15 rbp` | pinned slots (callee-saved)         |
+//! | `rax rcx rsi` | scratch                                 |
+//!
+//! The entry is `extern "sysv64" fn(*mut JitEnv) -> u64` with status
+//! 0 = returned (`ret_bits`/`ret_kind` set), 1 = bailed (`bail_pc`),
+//! 2 = helper error (stored in the runtime context).
+//!
+//! [`JitEnv`]: super::runtime::JitEnv
+
+use crate::frontend::ast::{BinOp, Type, UnOp};
+use crate::ir::cfg::FuncKind;
+use crate::ir::expr::Value;
+
+use super::super::kernel::{FuncKernel, KOp, Operand};
+use super::analysis::{self, analyze, Kind, Plan, Tag};
+use super::asm::{
+    Asm, Cc, Label, Reg, CC_A, CC_E, CC_G, CC_GE, CC_L, CC_LE, CC_NE, R13, R14, RAX, RCX, RDI, RSI,
+};
+use super::buffer::ExecBuf;
+use super::runtime::{
+    OFF_BAIL_PC, OFF_HELPER, OFF_JSLOTS, OFF_LIMIT, OFF_RET_BITS, OFF_RET_KIND, OFF_STEPS,
+};
+
+/// Frames larger than this are not jitted (keeps every slot reachable
+/// with an 8-bit-scaled disp32 and bounds arena carves).
+pub(crate) const MAX_FRAME_SLOTS: usize = 4096;
+
+/// A kernel compiled to native code, shared read-only across jobs.
+pub(crate) struct CompiledKernel {
+    pub buf: ExecBuf,
+    /// Per-slot value tags — the runtime marshals/materializes with
+    /// these.
+    pub tags: Vec<Tag>,
+    /// Machine-code size in bytes (stats only).
+    pub code_bytes: usize,
+}
+
+fn cc_of(op: BinOp) -> Cc {
+    match op {
+        BinOp::Lt => CC_L,
+        BinOp::Le => CC_LE,
+        BinOp::Gt => CC_G,
+        BinOp::Ge => CC_GE,
+        BinOp::Eq => CC_E,
+        BinOp::Ne => CC_NE,
+        _ => unreachable!("cc_of on non-comparison"),
+    }
+}
+
+struct Gen<'k> {
+    a: Asm,
+    plan: &'k Plan,
+    epi: Label,
+}
+
+impl Gen<'_> {
+    fn pin_of(&self, slot: u32) -> Option<Reg> {
+        self.plan.pins.iter().find(|(s, _)| *s == slot).map(|(_, r)| *r)
+    }
+
+    fn load_slot(&mut self, dst: Reg, slot: u32) {
+        match self.pin_of(slot) {
+            Some(r) => self.a.mov_rr(dst, r),
+            None => self.a.mov_rm(dst, R14, 8 * slot as i32),
+        }
+    }
+
+    fn store_slot(&mut self, slot: u32, src: Reg) {
+        match self.pin_of(slot) {
+            Some(r) => self.a.mov_rr(r, src),
+            None => self.a.mov_mr(R14, 8 * slot as i32, src),
+        }
+    }
+
+    fn load_operand(&mut self, dst: Reg, o: Operand) {
+        match o {
+            Operand::Slot(s) => self.load_slot(dst, s),
+            Operand::Imm(v) => {
+                debug_assert!(!matches!(v, Value::F32(_)), "poison imm reached inline codegen");
+                self.a.mov_ri(dst, v.as_i64());
+            }
+        }
+    }
+
+    fn flush_pins(&mut self) {
+        for &(slot, reg) in &self.plan.pins {
+            self.a.mov_mr(R14, 8 * slot as i32, reg);
+        }
+    }
+
+    fn reload_pins(&mut self) {
+        for &(slot, reg) in &self.plan.pins {
+            self.a.mov_rm(reg, R14, 8 * slot as i32);
+        }
+    }
+
+    /// Flush, record `pc`, return status 1.
+    fn emit_bail(&mut self, pc: usize) {
+        self.flush_pins();
+        self.a.mov_ri(RAX, pc as i64);
+        self.a.mov_mr(R13, OFF_BAIL_PC, RAX);
+        self.a.mov_eax_imm(1);
+        let epi = self.epi;
+        self.a.jmp_label(epi);
+    }
+
+    /// `steps+1 > limit`? then bail (without storing — the interpreter
+    /// re-executes this instruction and raises the error); else commit
+    /// the bumped count. Leaves the bail label for the caller to bind
+    /// after its terminal jumps.
+    fn emit_budget(&mut self) -> Label {
+        let lbail = self.a.new_label();
+        self.a.mov_rm(RAX, R13, OFF_STEPS);
+        self.a.add_ri8(RAX, 1);
+        self.a.cmp_rm(RAX, R13, OFF_LIMIT);
+        self.a.jcc_label(CC_A, lbail);
+        self.a.mov_mr(R13, OFF_STEPS, RAX);
+        lbail
+    }
+
+    /// One `exec_op` out-call for instruction `pc`.
+    fn emit_helper_call(&mut self, pc: usize) {
+        self.flush_pins();
+        self.a.mov_rr(RDI, R13);
+        self.a.mov_ri(RSI, pc as i64);
+        self.a.call_mem(R13, OFF_HELPER);
+        self.a.test_rr(RAX, RAX);
+        let epi = self.epi;
+        // Nonzero status (error) forwards as-is; pins reload only on
+        // the success path (the helper may have rewritten their slots).
+        self.a.jcc_label(CC_NE, epi);
+        self.reload_pins();
+    }
+
+    /// Compute a fast `Bin` into `rax` from `lhs`/`rhs`, with the
+    /// optional result coercion `ty` applied. `Bool` results are always
+    /// canonical 0/1.
+    fn emit_bin_fast(&mut self, op: BinOp, lhs: Operand, rhs: Operand, ty: Option<Type>) {
+        self.load_operand(RAX, lhs);
+        self.load_operand(RCX, rhs);
+        if super::super::kernel::is_cmp_op(op) {
+            self.a.cmp_rr(RAX, RCX);
+            self.a.setcc_rax(cc_of(op));
+            // coerce(Int)/coerce(Bool) are both bit-identity on 0/1.
+            return;
+        }
+        match op {
+            BinOp::Add => self.a.add_rr(RAX, RCX),
+            BinOp::Sub => self.a.sub_rr(RAX, RCX),
+            BinOp::Mul => self.a.imul_rr(RAX, RCX),
+            BinOp::BitAnd => self.a.and_rr(RAX, RCX),
+            BinOp::BitOr => self.a.or_rr(RAX, RCX),
+            BinOp::BitXor => self.a.xor_rr(RAX, RCX),
+            // Hardware masks the count to 63 — exactly the
+            // interpreter's `wrapping_shl/shr(.. & 63)`.
+            BinOp::Shl => self.a.shl_cl(RAX),
+            BinOp::Shr => self.a.sar_cl(RAX),
+            _ => unreachable!("slow bin reached inline codegen"),
+        }
+        if ty == Some(Type::Bool) {
+            self.a.bool_normalize_rax();
+        }
+    }
+
+    /// Coerce the `Int`-or-`Bool` value in `rax` (current tag `from`)
+    /// to `ty`'s representation. Only `Bool` targets ever change bits.
+    fn emit_coerce_rax(&mut self, from: Tag, ty: Option<Type>) {
+        if ty == Some(Type::Bool) && from != Tag::Bool {
+            self.a.bool_normalize_rax();
+        }
+    }
+}
+
+/// Compile one kernel, or say why it can't be.
+pub(crate) fn compile_kernel(
+    kernel: &FuncKernel,
+    global_tags: &[Tag],
+) -> Result<CompiledKernel, &'static str> {
+    if kernel.kind == FuncKind::Xla {
+        return Err("xla kernels have no body");
+    }
+    if kernel.code.is_empty() {
+        return Err("empty kernel body");
+    }
+    if kernel.frame.len() > MAX_FRAME_SLOTS {
+        return Err("frame too large");
+    }
+    let plan = analyze(kernel, global_tags);
+    if plan.kinds[0] == Kind::Bail {
+        return Err("entry instruction unsupported");
+    }
+
+    let n = kernel.code.len();
+    let mut a = Asm::new();
+    let epi = a.new_label();
+    let mut g = Gen { a, plan: &plan, epi };
+
+    // Prologue: save callee-saved state, align, load env/arena/pins.
+    // 6 pushes + the return address leave rsp ≡ 0 (mod 16) after the
+    // `sub`, so every helper call sees a standard-aligned stack.
+    for r in [super::asm::RBP, super::asm::RBX, super::asm::R12, R13, R14, super::asm::R15] {
+        g.a.push(r);
+    }
+    g.a.sub_ri8(super::asm::RSP, 8);
+    g.a.mov_rr(R13, RDI);
+    g.a.mov_rm(R14, R13, OFF_JSLOTS);
+    g.reload_pins();
+
+    let mut pc_offs = vec![0usize; n + 1];
+    for (pc, instr) in kernel.code.iter().enumerate() {
+        pc_offs[pc] = g.a.code.len();
+        match plan.kinds[pc] {
+            Kind::Bail => g.emit_bail(pc),
+            Kind::Helper => g.emit_helper_call(pc),
+            Kind::Inline => emit_inline(&mut g, pc, &instr.op, &plan),
+        }
+    }
+    // Defensive: falling off the end re-enters the interpreter at
+    // `pc == n`, which fails exactly like the interpreter would.
+    pc_offs[n] = g.a.code.len();
+    g.emit_bail(n);
+
+    let epi = g.epi;
+    g.a.bind(epi);
+    g.a.add_ri8(super::asm::RSP, 8);
+    for r in [super::asm::R15, R14, R13, super::asm::R12, super::asm::RBX, super::asm::RBP] {
+        g.a.pop(r);
+    }
+    g.a.ret();
+
+    let code = g.a.finalize(&pc_offs);
+    let code_bytes = code.len();
+    let buf = ExecBuf::publish(&code)?;
+    Ok(CompiledKernel { buf, tags: plan.tags, code_bytes })
+}
+
+fn emit_inline(g: &mut Gen<'_>, pc: usize, op: &KOp, plan: &Plan) {
+    let epi = g.epi;
+    match op {
+        KOp::Mov { dst, src, ty } => {
+            g.load_operand(RAX, *src);
+            g.emit_coerce_rax(analysis::operand_tag(*src, &plan.tags), *ty);
+            g.store_slot(*dst, RAX);
+        }
+        KOp::Un { op, dst, src, ty } => {
+            g.load_operand(RAX, *src);
+            match op {
+                UnOp::Neg => {
+                    g.a.neg(RAX);
+                    g.emit_coerce_rax(Tag::Int, *ty);
+                }
+                UnOp::Not => {
+                    // `Bool(!as_bool(v))` — true iff the bits are zero.
+                    g.a.test_rr(RAX, RAX);
+                    g.a.setcc_rax(CC_E);
+                }
+            }
+            g.store_slot(*dst, RAX);
+        }
+        KOp::Bin { op, dst, lhs, rhs, ty } => {
+            g.emit_bin_fast(*op, *lhs, *rhs, *ty);
+            g.store_slot(*dst, RAX);
+        }
+        KOp::BinMov { op, bdst, lhs, rhs, bty, dst, ty } => {
+            g.emit_bin_fast(*op, *lhs, *rhs, *bty);
+            g.store_slot(*bdst, RAX);
+            let btag = if super::super::kernel::is_cmp_op(*op) || *bty == Some(Type::Bool) {
+                Tag::Bool
+            } else {
+                Tag::Int
+            };
+            g.emit_coerce_rax(btag, *ty);
+            g.store_slot(*dst, RAX);
+        }
+        KOp::Jump { target } => {
+            let lbail = g.emit_budget();
+            g.a.jmp_pc(*target as usize);
+            g.a.bind(lbail);
+            g.emit_bail(pc);
+        }
+        KOp::Branch { cond, then_, else_ } => {
+            let lbail = g.emit_budget();
+            g.load_operand(RAX, *cond);
+            g.a.test_rr(RAX, RAX);
+            g.a.jcc_pc(CC_NE, *then_ as usize);
+            g.a.jmp_pc(*else_ as usize);
+            g.a.bind(lbail);
+            g.emit_bail(pc);
+        }
+        KOp::CmpBranch { op, dst, lhs, rhs, ty: _, then_, else_ } => {
+            // Budget first: a budget bail then replays the *whole*
+            // instruction in the interpreter from untouched state (which
+            // writes `dst` and raises the step-limit error, exactly the
+            // unjitted order). The bump itself is unobservable.
+            let lbail = g.emit_budget();
+            g.load_operand(RAX, *lhs);
+            g.load_operand(RCX, *rhs);
+            g.a.cmp_rr(RAX, RCX);
+            g.a.setcc_rax(cc_of(*op));
+            g.store_slot(*dst, RAX);
+            g.a.test_rr(RAX, RAX);
+            g.a.jcc_pc(CC_NE, *then_ as usize);
+            g.a.jmp_pc(*else_ as usize);
+            g.a.bind(lbail);
+            g.emit_bail(pc);
+        }
+        KOp::Return { value } => {
+            if let Some(o) = value {
+                g.load_operand(RAX, *o);
+                g.a.mov_mr(R13, OFF_RET_BITS, RAX);
+                g.a.mov_ri(RCX, 1);
+                g.a.mov_mr(R13, OFF_RET_KIND, RCX);
+            }
+            g.a.mov_eax_imm(0);
+            g.a.jmp_label(epi);
+        }
+        KOp::ReturnBin { op, bdst, lhs, rhs, bty } => {
+            g.emit_bin_fast(*op, *lhs, *rhs, *bty);
+            g.store_slot(*bdst, RAX);
+            g.a.mov_mr(R13, OFF_RET_BITS, RAX);
+            g.a.mov_ri(RCX, 1);
+            g.a.mov_mr(R13, OFF_RET_KIND, RCX);
+            g.a.mov_eax_imm(0);
+            g.a.jmp_label(epi);
+        }
+        KOp::Halt => {
+            // ret_kind stays 0 (preset by the runtime) -> Unit.
+            g.a.mov_eax_imm(0);
+            g.a.jmp_label(epi);
+        }
+        _ => unreachable!("non-inline op {op:?} reached emit_inline"),
+    }
+}

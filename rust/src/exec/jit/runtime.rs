@@ -1,0 +1,559 @@
+//! The native⇄interpreter boundary: frame entry, the universal runtime
+//! helper, and bailout.
+//!
+//! Compiled code runs over a flat `i64` slot arena carved out of
+//! [`KStack::jslots`] (one lazily-allocated, never-reallocated block, so
+//! parent-frame pointers stay valid across nested activations). All
+//! communication goes through one `#[repr(C)]` [`JitEnv`] whose field
+//! offsets are fixed constants shared with the code generator (pinned by
+//! a layout test below).
+//!
+//! Everything effectful — memory, closures, spawns, sends, nested calls,
+//! slow arithmetic — funnels through a single helper entry point,
+//! [`exec_op_shim`], monomorphized per [`Machine`]. The helper decodes
+//! the instruction at the pc the native code passes and replays the
+//! interpreter handler's semantics bit-for-bit, materializing true
+//! [`Value`]s from the arena bits (or from `KStack::slots` for
+//! `Unknown`/`Poison` slots, which native code never writes). Panics
+//! unwinding out of machine callbacks are caught at the FFI boundary,
+//! stashed, and resumed on the Rust side of the native call.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::exec::kernel::{
+    bin_value, builtin1_value, builtin2_value, exec_frame, un_value, FuncKernel, KOp, KRet,
+    KStack, KernelProgram, KontRef, Machine, Operand, MAX_DEPTH, NO_COST,
+};
+use crate::frontend::ast::Type;
+use crate::ir::cfg::{FuncId, FuncKind};
+use crate::ir::expr::Value;
+
+use super::analysis::Tag;
+use super::{JitTier, Outcome};
+
+// Field offsets of `JitEnv`, shared with the code generator. Pinned by
+// `jit_env_layout_is_the_codegen_contract`.
+pub(crate) const OFF_JSLOTS: i32 = 0x00;
+pub(crate) const OFF_STEPS: i32 = 0x08;
+pub(crate) const OFF_LIMIT: i32 = 0x10;
+pub(crate) const OFF_BAIL_PC: i32 = 0x18;
+pub(crate) const OFF_RET_BITS: i32 = 0x20;
+pub(crate) const OFF_RET_KIND: i32 = 0x28;
+pub(crate) const OFF_HELPER: i32 = 0x30;
+pub(crate) const OFF_CTX: i32 = 0x38;
+
+/// The slot arena's fixed capacity (in slots). Allocated once per
+/// `KStack` on first native entry and never grown — growth would move
+/// the block under live parent-frame pointers.
+const JSLOTS_CAP: usize = 1 << 16;
+
+/// Per-activation environment handed to compiled code in `r13`.
+#[repr(C)]
+pub(crate) struct JitEnv {
+    /// This activation's slot arena (`&stack.jslots[jbase]`).
+    pub jslots: *mut i64,
+    /// Step budget consumed (branches/jumps), mirrors `Ctx::steps`.
+    pub steps: u64,
+    /// `KStack::limit`.
+    pub limit: u64,
+    /// Set on status 1: the pc the interpreter resumes at.
+    pub bail_pc: u64,
+    /// Set on status 0 with `ret_kind == 1`: `as_i64` image of the
+    /// return operand.
+    pub ret_bits: u64,
+    /// 0 = `Unit` return (`Halt` / bare `Return` — preset by the
+    /// runtime), 1 = `ret_bits` carries a value.
+    pub ret_kind: u64,
+    /// The monomorphized `exec_op_shim::<M>`.
+    pub helper: unsafe extern "sysv64" fn(*mut JitEnv, u64) -> u64,
+    /// Type-erased `*mut HelperCtx<M>`.
+    pub ctx: *mut (),
+}
+
+/// The Rust-side context the helper works against. `stack`/`machine`
+/// are raw because the native activation logically holds the `&mut`s
+/// for its whole duration; the helper reborrows them only while native
+/// code is parked in the out-call.
+struct HelperCtx<'a, M: Machine> {
+    prog: &'a KernelProgram,
+    kernel: &'a FuncKernel,
+    tags: &'a [Tag],
+    base: usize,
+    jbase: usize,
+    stack: *mut KStack,
+    machine: *mut M,
+    error: Option<anyhow::Error>,
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+/// Slot accessors for one native frame: arena bits for `Int`/`Bool`
+/// slots, authoritative `KStack::slots` values for the rest.
+#[derive(Clone, Copy)]
+struct Fr<'h> {
+    tags: &'h [Tag],
+    base: usize,
+    jbase: usize,
+}
+
+impl Fr<'_> {
+    /// Materialize the true `Value` of a slot.
+    fn get(&self, stack: &KStack, s: u32) -> Value {
+        let s = s as usize;
+        match self.tags[s] {
+            Tag::Int => Value::I64(stack.jslots[self.jbase + s]),
+            Tag::Bool => Value::Bool(stack.jslots[self.jbase + s] != 0),
+            Tag::Unknown | Tag::Poison => stack.slots[self.base + s],
+        }
+    }
+
+    fn rd(&self, stack: &KStack, o: Operand) -> Value {
+        match o {
+            Operand::Slot(s) => self.get(stack, s),
+            Operand::Imm(v) => v,
+        }
+    }
+
+    /// Write a slot the way the interpreter handler would, keeping the
+    /// representation its tag promises: `Int`/`Bool` slots live in the
+    /// arena as their `as_i64`/0-1 image; `Poison` slots keep
+    /// `KStack::slots` authoritative (helpers may compute an `I64` into
+    /// a slot that elsewhere holds `F32`). `Unknown` slots are never
+    /// written (such writes bail), but fall through to the same
+    /// authoritative store.
+    fn wr(&self, stack: &mut KStack, s: u32, v: Value) {
+        let s = s as usize;
+        match self.tags[s] {
+            Tag::Int => stack.jslots[self.jbase + s] = v.as_i64(),
+            Tag::Bool => stack.jslots[self.jbase + s] = v.as_bool() as i64,
+            Tag::Unknown | Tag::Poison => stack.slots[self.base + s] = v,
+        }
+    }
+}
+
+/// FFI entry of the runtime helper: decode `kernel.code[pc]`, replay it,
+/// report status (0 = ok, 2 = error/panic stored in the context). Panics
+/// must not unwind into native frames, so the body runs under
+/// `catch_unwind` and the runtime re-raises after native code exits.
+unsafe extern "sysv64" fn exec_op_shim<M: Machine>(env: *mut JitEnv, pc: u64) -> u64 {
+    let ctx = (*env).ctx as *mut HelperCtx<'_, M>;
+    let r = catch_unwind(AssertUnwindSafe(|| exec_op(&mut *ctx, pc as usize)));
+    match r {
+        Ok(Ok(())) => 0,
+        Ok(Err(e)) => {
+            (*ctx).error = Some(e);
+            2
+        }
+        Err(p) => {
+            (*ctx).panic = Some(p);
+            2
+        }
+    }
+}
+
+/// Replay one instruction with interpreter semantics. Covers every op a
+/// `Helper` classification can produce (and the pure ops for
+/// defensiveness); control flow can never be an out-call.
+fn exec_op<M: Machine>(hctx: &mut HelperCtx<'_, M>, pc: usize) -> Result<()> {
+    let stack: &mut KStack = unsafe { &mut *hctx.stack };
+    let machine: &mut M = unsafe { &mut *hctx.machine };
+    let kernel = hctx.kernel;
+    let fr = Fr { tags: hctx.tags, base: hctx.base, jbase: hctx.jbase };
+    let instr = &kernel.code[pc];
+    // Same charge the dispatch loop would have made (a no-op for every
+    // machine that jits, but kept for faithfulness).
+    if instr.cost != NO_COST {
+        machine.charge(&kernel.costs[instr.cost as usize]);
+    }
+    match &instr.op {
+        // -- pure compute (reachable when slow arithmetic or a
+        // possibly-F32 flow forces the helper) --
+        KOp::Mov { dst, src, ty } => {
+            let mut v = fr.rd(stack, *src);
+            if let Some(t) = ty {
+                v = v.coerce(*t);
+            }
+            fr.wr(stack, *dst, v);
+        }
+        KOp::Bin { op, dst, lhs, rhs, ty } => {
+            let (va, vb) = (fr.rd(stack, *lhs), fr.rd(stack, *rhs));
+            let mut v = bin_value(*op, va, vb);
+            if let Some(t) = ty {
+                v = v.coerce(*t);
+            }
+            fr.wr(stack, *dst, v);
+        }
+        KOp::Un { op, dst, src, ty } => {
+            let mut v = un_value(*op, fr.rd(stack, *src));
+            if let Some(t) = ty {
+                v = v.coerce(*t);
+            }
+            fr.wr(stack, *dst, v);
+        }
+        KOp::Builtin2 { b, dst, lhs, rhs, ty } => {
+            let (va, vb) = (fr.rd(stack, *lhs), fr.rd(stack, *rhs));
+            let mut v = builtin2_value(*b, va, vb);
+            if let Some(t) = ty {
+                v = v.coerce(*t);
+            }
+            fr.wr(stack, *dst, v);
+        }
+        KOp::Builtin1 { b, dst, src, ty } => {
+            let mut v = builtin1_value(*b, fr.rd(stack, *src));
+            if let Some(t) = ty {
+                v = v.coerce(*t);
+            }
+            fr.wr(stack, *dst, v);
+        }
+        KOp::IntToFloat { dst, src, ty } => {
+            let mut v = Value::F32(fr.rd(stack, *src).as_f32());
+            if let Some(t) = ty {
+                v = v.coerce(*t);
+            }
+            fr.wr(stack, *dst, v);
+        }
+
+        // -- machine effects --
+        KOp::Load { dst, arr, index } => {
+            let idx = fr.rd(stack, *index).as_i64();
+            let v = machine.load(*arr, idx)?;
+            fr.wr(stack, *dst, v);
+        }
+        KOp::Store { arr, index, value } => {
+            let idx = fr.rd(stack, *index).as_i64();
+            let v = fr.rd(stack, *value);
+            machine.store(*arr, idx, v)?;
+        }
+        KOp::AtomicAdd { arr, index, value } => {
+            let idx = fr.rd(stack, *index).as_i64();
+            let v = fr.rd(stack, *value);
+            machine.atomic_add(*arr, idx, v)?;
+        }
+        KOp::Call { dst, callee, args_at, nargs } => {
+            jit_seq_call(hctx.prog, fr, stack, machine, *callee, *args_at, *nargs, *dst)?;
+        }
+        KOp::SpawnSeq { dst, callee, args_at, nargs } => {
+            machine.on_spawn_seq();
+            jit_seq_call(hctx.prog, fr, stack, machine, *callee, *args_at, *nargs, *dst)?;
+        }
+        KOp::MakeClosure { dst, task } => {
+            let handle = machine.make_closure(*task)?;
+            fr.wr(stack, *dst, handle);
+        }
+        KOp::ClosureStore { clos, field, value } => {
+            let h = fr.get(stack, *clos);
+            let v = fr.rd(stack, *value);
+            machine.closure_store(h, *field, v)?;
+        }
+        KOp::SpawnChild { callee, args_at, nargs, ret } => {
+            let kont = match ret {
+                KRet::Slot { clos, field } => {
+                    KontRef::Slot { clos: fr.get(stack, *clos), field: *field }
+                }
+                KRet::Counter { clos } => KontRef::Counter { clos: fr.get(stack, *clos) },
+                KRet::Forward => KontRef::Forward,
+            };
+            with_args(fr, stack, *args_at, *nargs, |_stack, args| {
+                machine.spawn_child(*callee, args, kont)
+            })?;
+        }
+        KOp::CloseSpawns { clos } => {
+            let h = fr.get(stack, *clos);
+            machine.close_spawns(h)?;
+        }
+        KOp::SendArgument { value } => {
+            let v = match value {
+                Some(o) => fr.rd(stack, *o).coerce(kernel.ret),
+                None => Value::Unit,
+            };
+            machine.send_argument(v)?;
+        }
+
+        // -- fused superinstructions: replay the components in handler
+        // order, including every frame write --
+        KOp::LoadMov { ldst, arr, index, dst, ty } => {
+            let idx = fr.rd(stack, *index).as_i64();
+            let v = machine.load(*arr, idx)?;
+            fr.wr(stack, *ldst, v);
+            let mut mv = v;
+            if let Some(t) = ty {
+                mv = mv.coerce(*t);
+            }
+            fr.wr(stack, *dst, mv);
+        }
+        KOp::StoreBin { op, bdst, lhs, rhs, bty, arr, index } => {
+            let (va, vb) = (fr.rd(stack, *lhs), fr.rd(stack, *rhs));
+            let mut v = bin_value(*op, va, vb);
+            if let Some(t) = bty {
+                v = v.coerce(*t);
+            }
+            fr.wr(stack, *bdst, v);
+            // Index after the value write, like the unfused sequence.
+            let idx = fr.rd(stack, *index).as_i64();
+            let val = fr.get(stack, *bdst);
+            machine.store(*arr, idx, val)?;
+        }
+        KOp::LoadBinStore { ldst, arr, index, cost2, op, bdst, lhs, rhs, bty, sarr, sindex } => {
+            let idx = fr.rd(stack, *index).as_i64();
+            let v = machine.load(*arr, idx)?;
+            fr.wr(stack, *ldst, v);
+            // The bin+store charge lands after the load (a `Seg::Load`
+            // trace element interposes, so it can't merge up front).
+            if *cost2 != NO_COST {
+                machine.charge(&kernel.costs[*cost2 as usize]);
+            }
+            let (va, vb) = (fr.rd(stack, *lhs), fr.rd(stack, *rhs));
+            let mut bv = bin_value(*op, va, vb);
+            if let Some(t) = bty {
+                bv = bv.coerce(*t);
+            }
+            fr.wr(stack, *bdst, bv);
+            let sidx = fr.rd(stack, *sindex).as_i64();
+            let val = fr.get(stack, *bdst);
+            machine.store(*sarr, sidx, val)?;
+        }
+        KOp::BinAtomicAdd { op, bdst, lhs, rhs, bty, arr, index } => {
+            let (va, vb) = (fr.rd(stack, *lhs), fr.rd(stack, *rhs));
+            let mut v = bin_value(*op, va, vb);
+            if let Some(t) = bty {
+                v = v.coerce(*t);
+            }
+            fr.wr(stack, *bdst, v);
+            let idx = fr.rd(stack, *index).as_i64();
+            let val = fr.get(stack, *bdst);
+            machine.atomic_add(*arr, idx, val)?;
+        }
+        KOp::SendBin { op, bdst, lhs, rhs, bty } => {
+            let (va, vb) = (fr.rd(stack, *lhs), fr.rd(stack, *rhs));
+            let mut v = bin_value(*op, va, vb);
+            if let Some(t) = bty {
+                v = v.coerce(*t);
+            }
+            fr.wr(stack, *bdst, v);
+            machine.send_argument(fr.get(stack, *bdst).coerce(kernel.ret))?;
+        }
+
+        KOp::Jump { .. }
+        | KOp::Branch { .. }
+        | KOp::Return { .. }
+        | KOp::Halt
+        | KOp::CmpBranch { .. }
+        | KOp::ReturnBin { .. } => {
+            bail!("jit: control-flow op reached the runtime helper (classification bug)")
+        }
+    }
+    Ok(())
+}
+
+/// Materialize `nargs` staged argument slots into a buffer (stack for
+/// the common small arities) and run `f` on the slice.
+fn with_args<R>(
+    fr: Fr<'_>,
+    stack: &mut KStack,
+    args_at: u32,
+    nargs: u32,
+    f: impl FnOnce(&mut KStack, &[Value]) -> R,
+) -> R {
+    let n = nargs as usize;
+    let mut buf = [Value::Unit; 8];
+    if n <= buf.len() {
+        for (i, b) in buf[..n].iter_mut().enumerate() {
+            *b = fr.get(stack, args_at + i as u32);
+        }
+        f(stack, &buf[..n])
+    } else {
+        let heap: Vec<Value> = (0..n).map(|i| fr.get(stack, args_at + i as u32)).collect();
+        f(stack, &heap)
+    }
+}
+
+/// `Call`/`SpawnSeq` replay: xla-or-nested-kernel execution plus the
+/// optional coerced dst write ([`seq_call`]'s exact semantics, with the
+/// staged arguments materialized out of the native frame).
+///
+/// [`seq_call`]: crate::exec::kernel
+#[allow(clippy::too_many_arguments)]
+fn jit_seq_call<M: Machine>(
+    prog: &KernelProgram,
+    fr: Fr<'_>,
+    stack: &mut KStack,
+    machine: &mut M,
+    callee: FuncId,
+    args_at: u32,
+    nargs: u32,
+    dst: Option<(u32, Type)>,
+) -> Result<()> {
+    let v = with_args(fr, stack, args_at, nargs, |stack, args| {
+        if prog.kernel(callee).kind == FuncKind::Xla {
+            machine.xla_call(callee, args)
+        } else {
+            jit_call_nested(prog, callee, args, stack, machine)
+        }
+    })?;
+    if let Some((d, t)) = dst {
+        fr.wr(stack, d, v.coerce(t));
+    }
+    Ok(())
+}
+
+/// `call_nested` with by-value arguments: push the callee frame, run it
+/// through the tiered `exec_frame` (the callee gets its own promotion
+/// decision), pop. Error strings match `call_nested` exactly.
+fn jit_call_nested<M: Machine>(
+    prog: &KernelProgram,
+    callee: FuncId,
+    args: &[Value],
+    stack: &mut KStack,
+    machine: &mut M,
+) -> Result<Value> {
+    let kernel = prog.kernel(callee);
+    if args.len() != kernel.params {
+        bail!("`{}` expects {} args, got {}", kernel.name, kernel.params, args.len());
+    }
+    stack.depth += 1;
+    if stack.depth > MAX_DEPTH {
+        bail!("kernel recursion limit exceeded in `{}`", kernel.name);
+    }
+    let base = stack.slots.len();
+    stack.slots.extend_from_slice(&kernel.frame);
+    for (i, a) in args.iter().enumerate() {
+        stack.slots[base + i] = a.coerce(kernel.param_tys[i]);
+    }
+    let r = exec_frame(prog, callee, base, stack, machine);
+    stack.slots.truncate(base);
+    stack.depth -= 1;
+    r
+}
+
+/// Tiered entry for one frame activation. `Ok(None)` = stay in the
+/// interpreter (cold, uncompilable, arena exhausted, or jit disabled);
+/// `Ok(Some(..))` = native code ran to a return or a bail.
+///
+/// Called from `exec_frame` *after* `Machine::on_dispatch`, so every
+/// engine's dispatch accounting (and the obs hotness profile) sees
+/// jitted frames exactly like interpreted ones.
+pub(crate) fn try_enter<M: Machine>(
+    tier: &JitTier,
+    prog: &KernelProgram,
+    fid: FuncId,
+    base: usize,
+    stack: &mut KStack,
+    machine: &mut M,
+) -> Result<Option<Outcome>> {
+    debug_assert!(
+        std::ptr::eq(&*tier.program.kernels, prog),
+        "jit tier bound to a different kernel program"
+    );
+    let fi = fid.index();
+    // Hotness: the first `threshold` dispatches stay interpreted.
+    if tier.hot[fi].fetch_add(1, std::sync::atomic::Ordering::Relaxed) < tier.threshold {
+        return Ok(None);
+    }
+    let Some(ck) = tier.program.compiled(fi) else { return Ok(None) };
+    let kernel = prog.kernel(fid);
+    let nslots = kernel.frame.len();
+
+    // Carve this activation's arena slice.
+    if stack.jslots.is_empty() {
+        stack.jslots = vec![0; JSLOTS_CAP];
+    }
+    let jbase = stack.jtop;
+    if jbase + nslots > JSLOTS_CAP {
+        return Ok(None);
+    }
+    stack.jtop = jbase + nslots;
+
+    // Entry marshal: `as_i64` image of every non-`Poison` slot (the
+    // entry value of an `Unknown` slot is always `Unit` ⇒ 0). `Poison`
+    // slots stay authoritative in `stack.slots`.
+    for i in 0..nslots {
+        stack.jslots[jbase + i] = match ck.tags[i] {
+            Tag::Poison => 0,
+            _ => stack.slots[base + i].as_i64(),
+        };
+    }
+
+    let mut hctx = HelperCtx::<M> {
+        prog,
+        kernel,
+        tags: &ck.tags,
+        base,
+        jbase,
+        stack: stack as *mut KStack,
+        machine: machine as *mut M,
+        error: None,
+        panic: None,
+    };
+    let mut env = JitEnv {
+        jslots: unsafe { stack.jslots.as_mut_ptr().add(jbase) },
+        steps: 0,
+        limit: stack.limit,
+        bail_pc: 0,
+        ret_bits: 0,
+        ret_kind: 0,
+        helper: exec_op_shim::<M>,
+        ctx: &mut hctx as *mut HelperCtx<'_, M> as *mut (),
+    };
+
+    tier.program.funcs[fi].entries.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let entry: unsafe extern "sysv64" fn(*mut JitEnv) -> u64 =
+        unsafe { std::mem::transmute(ck.buf.entry()) };
+    let status = unsafe { entry(&mut env) };
+    stack.jtop = jbase;
+
+    if let Some(p) = hctx.panic.take() {
+        resume_unwind(p);
+    }
+    match status {
+        0 => {
+            let v = if env.ret_kind == 0 {
+                Value::Unit
+            } else {
+                Value::I64(env.ret_bits as i64).coerce(kernel.ret)
+            };
+            Ok(Some(Outcome::Done(v)))
+        }
+        1 => {
+            tier.program.funcs[fi].bails.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            // Hand the frame image back: `Int`/`Bool` slots materialize
+            // from the arena; `Unknown`/`Poison` were never written
+            // natively, so `stack.slots` is already current.
+            for i in 0..nslots {
+                match ck.tags[i] {
+                    Tag::Int => stack.slots[base + i] = Value::I64(stack.jslots[jbase + i]),
+                    Tag::Bool => {
+                        stack.slots[base + i] = Value::Bool(stack.jslots[jbase + i] != 0)
+                    }
+                    Tag::Unknown | Tag::Poison => {}
+                }
+            }
+            Ok(Some(Outcome::Bail { pc: env.bail_pc as usize, steps: env.steps }))
+        }
+        2 => Err(hctx
+            .error
+            .take()
+            .unwrap_or_else(|| anyhow!("jit: helper reported an error without recording one"))),
+        s => Err(anyhow!("jit: compiled code returned unknown status {s}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jit_env_layout_is_the_codegen_contract() {
+        use std::mem::offset_of;
+        assert_eq!(offset_of!(JitEnv, jslots), OFF_JSLOTS as usize);
+        assert_eq!(offset_of!(JitEnv, steps), OFF_STEPS as usize);
+        assert_eq!(offset_of!(JitEnv, limit), OFF_LIMIT as usize);
+        assert_eq!(offset_of!(JitEnv, bail_pc), OFF_BAIL_PC as usize);
+        assert_eq!(offset_of!(JitEnv, ret_bits), OFF_RET_BITS as usize);
+        assert_eq!(offset_of!(JitEnv, ret_kind), OFF_RET_KIND as usize);
+        assert_eq!(offset_of!(JitEnv, helper), OFF_HELPER as usize);
+        assert_eq!(offset_of!(JitEnv, ctx), OFF_CTX as usize);
+        assert_eq!(std::mem::size_of::<JitEnv>(), 0x40);
+    }
+}

@@ -170,6 +170,35 @@ pub enum KOp {
     },
     /// `Bin ; Return` of the just-written slot.
     ReturnBin { op: BinOp, bdst: u32, lhs: Operand, rhs: Operand, bty: Option<Type> },
+    /// `Load ; Bin ; Store` — the 3-op read-modify-write chain. The
+    /// anchor cost is the load's; `cost2` carries the merged bin+store
+    /// charge, applied *after* the load (a `Seg::Load` trace element
+    /// interposes, so the charges can't merge up front).
+    LoadBinStore {
+        ldst: u32,
+        arr: GlobalId,
+        index: Operand,
+        cost2: u32,
+        op: BinOp,
+        bdst: u32,
+        lhs: Operand,
+        rhs: Operand,
+        bty: Option<Type>,
+        sarr: GlobalId,
+        sindex: Operand,
+    },
+    /// `Bin ; AtomicAdd` whose added value is the just-written slot.
+    BinAtomicAdd {
+        op: BinOp,
+        bdst: u32,
+        lhs: Operand,
+        rhs: Operand,
+        bty: Option<Type>,
+        arr: GlobalId,
+        index: Operand,
+    },
+    /// `Bin ; SendArgument` of the just-written slot.
+    SendBin { op: BinOp, bdst: u32, lhs: Operand, rhs: Operand, bty: Option<Type> },
 }
 
 /// Dispatch-handler indices, one per [`KOp`] variant. The handler table
@@ -201,8 +230,11 @@ pub mod opcode {
     pub const BIN_MOV: u8 = 22;
     pub const STORE_BIN: u8 = 23;
     pub const RETURN_BIN: u8 = 24;
+    pub const LOAD_BIN_STORE: u8 = 25;
+    pub const BIN_ATOMIC_ADD: u8 = 26;
+    pub const SEND_BIN: u8 = 27;
     /// Number of opcodes (handler-table length).
-    pub const N: usize = 25;
+    pub const N: usize = 28;
 }
 
 /// The dispatch-handler index of an op — resolved once at kernel-compile
@@ -234,6 +266,9 @@ pub fn opcode_of(op: &KOp) -> u8 {
         KOp::BinMov { .. } => opcode::BIN_MOV,
         KOp::StoreBin { .. } => opcode::STORE_BIN,
         KOp::ReturnBin { .. } => opcode::RETURN_BIN,
+        KOp::LoadBinStore { .. } => opcode::LOAD_BIN_STORE,
+        KOp::BinAtomicAdd { .. } => opcode::BIN_ATOMIC_ADD,
+        KOp::SendBin { .. } => opcode::SEND_BIN,
     }
 }
 
@@ -303,8 +338,8 @@ pub struct FuncKernel {
     /// Empty for `extern xla` declarations (no body).
     pub code: Vec<KInstr>,
     pub costs: Vec<KCost>,
-    /// Superinstruction pairs collapsed by the fusion stage (0 when
-    /// fusion is disabled).
+    /// Instructions eliminated by the fusion stage — 1 per fused pair,
+    /// 2 per fused triple (0 when fusion is disabled).
     pub fused: u32,
     /// Instruction count before fusion (== `code.len()` when nothing
     /// fused).
@@ -316,6 +351,10 @@ pub struct FuncKernel {
 pub struct KernelProgram {
     pub mode: KernelMode,
     pub funcs: Vec<FuncKernel>,
+    /// Element type of each global array, indexed by
+    /// [`GlobalId`]. The JIT's slot-tag analysis types `Load` results
+    /// with this.
+    pub global_tys: Vec<Type>,
 }
 
 impl KernelProgram {
@@ -335,15 +374,19 @@ impl KernelProgram {
         self.funcs.iter().map(|k| k.code.len()).sum()
     }
 
-    /// Aggregate fusion stats: `(fused pairs, instructions before fusion)`.
+    /// Aggregate fusion stats: `(instructions eliminated, instructions
+    /// before fusion)`.
     pub fn fusion(&self) -> (u64, u64) {
         let pairs = self.funcs.iter().map(|k| k.fused as u64).sum();
         let before = self.funcs.iter().map(|k| k.unfused_len as u64).sum();
         (pairs, before)
     }
 
-    /// Fraction of pre-fusion instructions covered by fused pairs
-    /// (`2 * pairs / pre-fusion count`; 0.0 when fusion is off).
+    /// Fraction of pre-fusion instructions covered by fusion
+    /// (`2 * eliminated / pre-fusion count`; 0.0 when fusion is off).
+    /// With pairs only this is exact coverage; a fused triple covers 3
+    /// pre-fusion instructions but counts as 4 here, so the figure is
+    /// slightly optimistic on triple-heavy code.
     pub fn fused_ratio(&self) -> f64 {
         let (pairs, before) = self.fusion();
         if before == 0 {
@@ -353,8 +396,8 @@ impl KernelProgram {
         }
     }
 
-    /// Fusion stats broken down by task role: `(role, fused pairs,
-    /// instructions before fusion)` in first-appearance order. Shapes
+    /// Fusion stats broken down by task role: `(role, instructions
+    /// eliminated, instructions before fusion)` in first-appearance order. Shapes
     /// that resist fusion (e.g. `join` continuations full of closure
     /// traffic) show up as low per-role ratios that the global
     /// [`KernelProgram::fused_ratio`] averages away.
@@ -498,6 +541,23 @@ impl KernelProgram {
                     KOp::ReturnBin { bdst, lhs, rhs, .. } => {
                         bad = !slot_ok(*bdst) || !opnd_ok(lhs) || !opnd_ok(rhs);
                     }
+                    KOp::LoadBinStore { ldst, index, cost2, bdst, lhs, rhs, sindex, .. } => {
+                        bad = !slot_ok(*ldst)
+                            || !slot_ok(*bdst)
+                            || !opnd_ok(index)
+                            || !opnd_ok(lhs)
+                            || !opnd_ok(rhs)
+                            || !opnd_ok(sindex);
+                        if *cost2 != NO_COST && *cost2 as usize >= k.costs.len() {
+                            errors.push(ctx(format!("pc {pc}: cost2 index out of range")));
+                        }
+                    }
+                    KOp::BinAtomicAdd { bdst, lhs, rhs, index, .. } => {
+                        bad = !slot_ok(*bdst) || !opnd_ok(lhs) || !opnd_ok(rhs) || !opnd_ok(index);
+                    }
+                    KOp::SendBin { bdst, lhs, rhs, .. } => {
+                        bad = !slot_ok(*bdst) || !opnd_ok(lhs) || !opnd_ok(rhs);
+                    }
                 }
                 if self.mode == KernelMode::Implicit
                     && matches!(
@@ -507,6 +567,7 @@ impl KernelProgram {
                             | KOp::SpawnChild { .. }
                             | KOp::CloseSpawns { .. }
                             | KOp::SendArgument { .. }
+                            | KOp::SendBin { .. }
                     )
                 {
                     errors.push(ctx(format!("pc {pc}: explicit-only op in implicit kernel")));
@@ -689,6 +750,35 @@ fn fmt_op(op: &KOp, prog: &KernelProgram) -> String {
         ),
         KOp::ReturnBin { op, bdst, lhs, rhs, bty } => format!(
             "{} = {:?} {}, {} ; return r{bdst}",
+            fmt_dst(*bdst, bty),
+            op,
+            fmt_operand(lhs),
+            fmt_operand(rhs)
+        ),
+        KOp::LoadBinStore { ldst, arr, index, op, bdst, lhs, rhs, bty, sarr, sindex, .. } => {
+            format!(
+                "r{ldst} = load g{}[{}] ; {} = {:?} {}, {} ; store g{}[{}] = r{bdst}",
+                arr.index(),
+                fmt_operand(index),
+                fmt_dst(*bdst, bty),
+                op,
+                fmt_operand(lhs),
+                fmt_operand(rhs),
+                sarr.index(),
+                fmt_operand(sindex)
+            )
+        }
+        KOp::BinAtomicAdd { op, bdst, lhs, rhs, bty, arr, index } => format!(
+            "{} = {:?} {}, {} ; atomic_add g{}[{}], r{bdst}",
+            fmt_dst(*bdst, bty),
+            op,
+            fmt_operand(lhs),
+            fmt_operand(rhs),
+            arr.index(),
+            fmt_operand(index)
+        ),
+        KOp::SendBin { op, bdst, lhs, rhs, bty } => format!(
+            "{} = {:?} {}, {} ; send_argument r{bdst}",
             fmt_dst(*bdst, bty),
             op,
             fmt_operand(lhs),
@@ -917,6 +1007,16 @@ pub trait Machine {
     #[inline]
     fn on_spawn_seq(&mut self) {}
 
+    /// The native tier this machine's frames may promote into, or
+    /// `None` to stay interpreted (the default — and mandatory for the
+    /// simulator, whose `KCost` timing is defined in interpreter
+    /// dispatch units). Returns an owned handle so the tier can call
+    /// back into `&mut self` while executing.
+    #[inline]
+    fn jit(&mut self) -> Option<std::sync::Arc<crate::exec::jit::JitTier>> {
+        None
+    }
+
     fn load(&mut self, arr: GlobalId, index: i64) -> Result<Value>;
     fn store(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()>;
     fn atomic_add(&mut self, arr: GlobalId, index: i64, value: Value) -> Result<()>;
@@ -965,14 +1065,21 @@ pub fn memo_kernels(
 /// dispatch allocates nothing after warmup.
 #[derive(Debug)]
 pub struct KStack {
-    slots: Vec<Value>,
-    depth: usize,
+    pub(crate) slots: Vec<Value>,
+    pub(crate) depth: usize,
     /// Per-frame-activation step budget (see [`run_kernel`]).
-    limit: u64,
+    pub(crate) limit: u64,
     /// Instructions retired over this stack's lifetime (cumulative across
     /// runs — a fused pair retires as one dispatch). Engines surface this
     /// through their stats for `bombyx run --stats`.
     retired: u64,
+    /// The JIT tier's `i64` slot arena: allocated at fixed capacity on
+    /// first native entry and never grown (parent native frames hold
+    /// pointers into it). Empty until then.
+    pub(crate) jslots: Vec<i64>,
+    /// Arena high-water mark — native activations carve
+    /// `jtop..jtop+frame` and restore on exit.
+    pub(crate) jtop: usize,
 }
 
 impl Default for KStack {
@@ -983,7 +1090,14 @@ impl Default for KStack {
 
 impl KStack {
     pub fn new() -> KStack {
-        KStack { slots: Vec::with_capacity(256), depth: 0, limit: 0, retired: 0 }
+        KStack {
+            slots: Vec::with_capacity(256),
+            depth: 0,
+            limit: 0,
+            retired: 0,
+            jslots: Vec::new(),
+            jtop: 0,
+        }
     }
 
     /// Cumulative dispatches retired through this stack.
@@ -994,7 +1108,7 @@ impl KStack {
 
 /// Hard recursion backstop (the oracle applies its configurable limit
 /// first via [`Machine::on_dispatch`]).
-const MAX_DEPTH: usize = 1_000_000;
+pub(crate) const MAX_DEPTH: usize = 1_000_000;
 
 #[inline]
 fn rd(slots: &[Value], base: usize, op: Operand) -> Value {
@@ -1021,6 +1135,7 @@ pub fn run_kernel<M: Machine>(
     stack.slots.clear();
     stack.limit = step_limit;
     stack.depth = 0;
+    stack.jtop = 0;
     let kernel = prog.kernel(fid);
     if kernel.kind == FuncKind::Xla {
         bail!("xla task `{}` has no kernel body (dispatch it to the XLA handler)", kernel.name);
@@ -1415,6 +1530,67 @@ fn h_return_bin<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
     Ok(Step::Return(v.coerce(ctx.kernel.ret)))
 }
 
+fn h_load_bin_store<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::LoadBinStore { ldst, arr, index, cost2, op, bdst, lhs, rhs, bty, sarr, sindex } = op
+    else {
+        return op_mismatch(op);
+    };
+    let idx = rd(&ctx.stack.slots, ctx.base, *index).as_i64();
+    let lv = ctx.machine.load(*arr, idx)?;
+    ctx.stack.slots[ctx.base + *ldst as usize] = lv;
+    // The load's trace element (`Seg::Load`) interposes between the two
+    // merged compute costs, so the bin+store cost is charged here — after
+    // the load — not folded into the up-front `instr.cost`.
+    if *cost2 != NO_COST {
+        ctx.machine.charge(&ctx.kernel.costs[*cost2 as usize]);
+    }
+    let va = rd(&ctx.stack.slots, ctx.base, *lhs);
+    let vb = rd(&ctx.stack.slots, ctx.base, *rhs);
+    let mut v = bin_value(*op, va, vb);
+    if let Some(t) = bty {
+        v = v.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *bdst as usize] = v;
+    // Store index is read after the bin write, like the unfused sequence.
+    let sidx = rd(&ctx.stack.slots, ctx.base, *sindex).as_i64();
+    let val = ctx.stack.slots[ctx.base + *bdst as usize];
+    ctx.machine.store(*sarr, sidx, val)?;
+    Ok(Step::Next)
+}
+
+fn h_bin_atomic_add<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::BinAtomicAdd { op, bdst, lhs, rhs, bty, arr, index } = op else {
+        return op_mismatch(op);
+    };
+    let va = rd(&ctx.stack.slots, ctx.base, *lhs);
+    let vb = rd(&ctx.stack.slots, ctx.base, *rhs);
+    let mut v = bin_value(*op, va, vb);
+    if let Some(t) = bty {
+        v = v.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *bdst as usize] = v;
+    // Index is read after the value write, exactly like the unfused
+    // sequence (it may name the just-written slot).
+    let idx = rd(&ctx.stack.slots, ctx.base, *index).as_i64();
+    let val = ctx.stack.slots[ctx.base + *bdst as usize];
+    ctx.machine.atomic_add(*arr, idx, val)?;
+    Ok(Step::Next)
+}
+
+fn h_send_bin<M: Machine>(ctx: &mut Ctx<'_, M>, op: &KOp) -> Result<Step> {
+    let KOp::SendBin { op, bdst, lhs, rhs, bty } = op else { return op_mismatch(op) };
+    let va = rd(&ctx.stack.slots, ctx.base, *lhs);
+    let vb = rd(&ctx.stack.slots, ctx.base, *rhs);
+    let mut v = bin_value(*op, va, vb);
+    if let Some(t) = bty {
+        v = v.coerce(*t);
+    }
+    ctx.stack.slots[ctx.base + *bdst as usize] = v;
+    let sent = ctx.stack.slots[ctx.base + *bdst as usize].coerce(ctx.kernel.ret);
+    ctx.machine.send_argument(sent)?;
+    Ok(Step::Next)
+}
+
 /// The per-machine handler table. Order must match [`opcode`]'s indices
 /// (enforced by a unit test over every variant and by the validator's
 /// per-instruction `h == opcode_of(op)` check).
@@ -1448,10 +1624,13 @@ impl<M: Machine> Handlers<M> {
         h_bin_mov::<M>,
         h_store_bin::<M>,
         h_return_bin::<M>,
+        h_load_bin_store::<M>,
+        h_bin_atomic_add::<M>,
+        h_send_bin::<M>,
     ];
 }
 
-fn exec_frame<M: Machine>(
+pub(crate) fn exec_frame<M: Machine>(
     prog: &KernelProgram,
     fid: FuncId,
     base: usize,
@@ -1459,8 +1638,37 @@ fn exec_frame<M: Machine>(
     machine: &mut M,
 ) -> Result<Value> {
     machine.on_dispatch(fid, stack.depth)?;
+    // Native-tier gate: machines that opt in hand back a tier handle and
+    // hot kernels run as compiled x86-64 with runtime-helper out-calls. A
+    // bailout resumes the interpreter at the exact pc/step the native
+    // code left off; `None` (cold, uncompilable, unavailable) falls
+    // through to the interpreter unchanged.
+    if let Some(tier) = machine.jit() {
+        match crate::exec::jit::try_enter(&tier, prog, fid, base, stack, machine)? {
+            Some(crate::exec::jit::Outcome::Done(v)) => return Ok(v),
+            Some(crate::exec::jit::Outcome::Bail { pc, steps }) => {
+                return interp_frame(prog, fid, base, stack, machine, pc, steps);
+            }
+            None => {}
+        }
+    }
+    interp_frame(prog, fid, base, stack, machine, 0, 0)
+}
+
+/// The retired interpreter loop: the cold tier, the bailout target, and
+/// the differential oracle for the native tier. `start_pc`/`start_steps`
+/// are nonzero only when resuming after a JIT bailout.
+pub(crate) fn interp_frame<M: Machine>(
+    prog: &KernelProgram,
+    fid: FuncId,
+    base: usize,
+    stack: &mut KStack,
+    machine: &mut M,
+    start_pc: usize,
+    start_steps: u64,
+) -> Result<Value> {
     let kernel = prog.kernel(fid);
-    let mut ctx = Ctx { prog, kernel, base, pc: 0, steps: 0, stack, machine };
+    let mut ctx = Ctx { prog, kernel, base, pc: start_pc, steps: start_steps, stack, machine };
     let table: &[Handler<M>; opcode::N] = &Handlers::<M>::TABLE;
     // Direct-threaded inner loop: fetch, charge, indirect-call the
     // pre-resolved handler. No opcode match on the retired path.
@@ -1506,6 +1714,7 @@ mod tests {
         let prog = KernelProgram {
             mode: KernelMode::Explicit,
             funcs: vec![mk("entry", 3, 10), mk("join", 0, 6), mk("entry", 1, 4)],
+            global_tys: Vec::new(),
         };
         let rows = prog.fusion_by_role();
         assert_eq!(rows, vec![("entry", 4, 14), ("join", 0, 6)]);
@@ -1615,6 +1824,35 @@ mod tests {
                 index: Operand::Slot(0),
             },
             KOp::ReturnBin {
+                op: BinOp::Add,
+                bdst: 0,
+                lhs: Operand::Slot(0),
+                rhs: Operand::Slot(0),
+                bty: None,
+            },
+            KOp::LoadBinStore {
+                ldst: 0,
+                arr: GlobalId::new(0),
+                index: Operand::Slot(0),
+                cost2: NO_COST,
+                op: BinOp::Add,
+                bdst: 0,
+                lhs: Operand::Slot(0),
+                rhs: Operand::Slot(0),
+                bty: None,
+                sarr: GlobalId::new(0),
+                sindex: Operand::Slot(0),
+            },
+            KOp::BinAtomicAdd {
+                op: BinOp::Add,
+                bdst: 0,
+                lhs: Operand::Slot(0),
+                rhs: Operand::Slot(0),
+                bty: None,
+                arr: GlobalId::new(0),
+                index: Operand::Slot(0),
+            },
+            KOp::SendBin {
                 op: BinOp::Add,
                 bdst: 0,
                 lhs: Operand::Slot(0),

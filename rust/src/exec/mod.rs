@@ -37,11 +37,18 @@
 //!   through a per-machine monomorphized handler table instead of
 //!   matching on the opcode per retired instruction (see [`kernel`]).
 //!
+//! Above the interpreter sits an optional **native tier** ([`jit`]):
+//! engines that opt in promote hot kernels to runtime-generated x86-64,
+//! with the interpreter as the permanent cold tier, bailout target, and
+//! differential oracle. The simulator never uses it — `KCost` timing is
+//! defined in interpreter dispatch units.
+//!
 //! Compiled programs are cached per `CompileSession`
 //! ([`crate::lower::CompileSession::explicit_kernels`]) behind `Arc`, the
 //! same memoized-artifact pattern as `rtl_system`.
 
 pub mod compile;
+pub mod jit;
 pub mod kernel;
 
 pub use compile::{compile_module, compile_module_with, fuse_enabled};

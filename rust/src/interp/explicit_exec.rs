@@ -93,6 +93,10 @@ pub struct ExplicitExec<'m, X: XlaHandler> {
     /// Continuation of the task instance currently executing (what
     /// `send_argument` / forwarded spawns target).
     cur_cont: Cont,
+    /// Explicit JIT selection (`None` = process-environment default).
+    jit_cfg: Option<exec::jit::JitConfig>,
+    /// Native-tier handle, resolved once kernels exist.
+    jit: Option<Arc<exec::jit::JitTier>>,
 }
 
 impl<'m, X: XlaHandler> ExplicitExec<'m, X> {
@@ -111,7 +115,25 @@ impl<'m, X: XlaHandler> ExplicitExec<'m, X> {
             live_closures: 0,
             stack: KStack::new(),
             cur_cont: Cont::Root,
+            jit_cfg: None,
+            jit: None,
         }
+    }
+
+    /// Select the JIT configuration explicitly (overriding the
+    /// `BOMBYX_JIT` environment default) — e.g.
+    /// [`exec::jit::JitConfig::disabled`] pins a test to the interpreter.
+    pub fn set_jit(&mut self, cfg: exec::jit::JitConfig) {
+        self.jit_cfg = Some(cfg);
+        self.resolve_jit();
+    }
+
+    fn resolve_jit(&mut self) {
+        self.jit = match (&self.kernels, self.jit_cfg) {
+            (Some(k), Some(cfg)) => exec::jit::tier_with(k, cfg),
+            (Some(k), None) => exec::jit::tier_for(k),
+            (None, _) => None,
+        };
     }
 
     /// Reuse a session-cached kernel program instead of compiling on the
@@ -124,6 +146,7 @@ impl<'m, X: XlaHandler> ExplicitExec<'m, X> {
     ) -> Self {
         let mut ex = ExplicitExec::new(module, memory, xla);
         ex.kernels = Some(kernels);
+        ex.resolve_jit();
         ex
     }
 
@@ -131,6 +154,7 @@ impl<'m, X: XlaHandler> ExplicitExec<'m, X> {
         if self.kernels.is_none() {
             self.kernels =
                 Some(Arc::new(exec::compile_module(self.module, KernelMode::Explicit)?));
+            self.resolve_jit();
         }
         Ok(())
     }
@@ -287,6 +311,10 @@ impl<'m, X: XlaHandler> Machine for ExplicitExec<'m, X> {
             }
         }
         Ok(())
+    }
+
+    fn jit(&mut self) -> Option<Arc<exec::jit::JitTier>> {
+        self.jit.clone()
     }
 
     fn load(&mut self, arr: GlobalId, index: i64) -> Result<Value> {

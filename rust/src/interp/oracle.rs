@@ -44,6 +44,10 @@ pub struct Oracle<'m, X: XlaHandler> {
     pub max_depth_limit: u64,
     kernels: Option<Arc<KernelProgram>>,
     stack: KStack,
+    /// Explicit JIT selection (`None` = process-environment default).
+    jit_cfg: Option<exec::jit::JitConfig>,
+    /// Native-tier handle, resolved once kernels exist.
+    jit: Option<Arc<exec::jit::JitTier>>,
 }
 
 impl<'m, X: XlaHandler> Oracle<'m, X> {
@@ -56,7 +60,25 @@ impl<'m, X: XlaHandler> Oracle<'m, X> {
             max_depth_limit: 1_000_000,
             kernels: None,
             stack: KStack::new(),
+            jit_cfg: None,
+            jit: None,
         }
+    }
+
+    /// Select the JIT configuration explicitly (overriding the
+    /// `BOMBYX_JIT` environment default) — e.g.
+    /// [`exec::jit::JitConfig::disabled`] pins a test to the interpreter.
+    pub fn set_jit(&mut self, cfg: exec::jit::JitConfig) {
+        self.jit_cfg = Some(cfg);
+        self.resolve_jit();
+    }
+
+    fn resolve_jit(&mut self) {
+        self.jit = match (&self.kernels, self.jit_cfg) {
+            (Some(k), Some(cfg)) => exec::jit::tier_with(k, cfg),
+            (Some(k), None) => exec::jit::tier_for(k),
+            (None, _) => None,
+        };
     }
 
     /// Reuse an already-compiled kernel program (the session-cached
@@ -69,6 +91,7 @@ impl<'m, X: XlaHandler> Oracle<'m, X> {
     ) -> Self {
         let mut o = Oracle::new(module, memory, xla);
         o.kernels = Some(kernels);
+        o.resolve_jit();
         o
     }
 
@@ -76,6 +99,7 @@ impl<'m, X: XlaHandler> Oracle<'m, X> {
         if self.kernels.is_none() {
             self.kernels =
                 Some(Arc::new(exec::compile_module(self.module, KernelMode::Implicit)?));
+            self.resolve_jit();
         }
         Ok(Arc::clone(self.kernels.as_ref().expect("kernels just compiled")))
     }
@@ -121,6 +145,10 @@ impl<'m, X: XlaHandler> Machine for Oracle<'m, X> {
 
     fn on_spawn_seq(&mut self) {
         self.stats.spawns += 1;
+    }
+
+    fn jit(&mut self) -> Option<Arc<exec::jit::JitTier>> {
+        self.jit.clone()
     }
 
     fn load(&mut self, arr: GlobalId, index: i64) -> Result<Value> {

@@ -519,4 +519,16 @@ impl CompileSession {
             args,
         ))
     }
+
+    /// Per-kernel native-tier (JIT) statistics for this session's cached
+    /// explicit kernel program: dispatch/entry/bail counts, compile time
+    /// and code size per kernel. Empty when no tier has been created for
+    /// the program (JIT disabled or unavailable) or the kernels haven't
+    /// been compiled yet.
+    pub fn jit_stats(&self) -> Vec<crate::exec::jit::JitKernelStats> {
+        match self.kernels_explicit.get() {
+            Some(k) => crate::exec::jit::stats_for(k),
+            None => Vec::new(),
+        }
+    }
 }

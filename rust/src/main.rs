@@ -7,6 +7,7 @@
 //! bombyx kernels  <file.cilk> [--mode implicit|explicit] [--dump]
 //! bombyx run      <file.cilk> <entry> [args...] [--dae] [--engine E] [--workers N] [--stats]
 //!                 [--deadline-ms N] [--fuel N]                  # per-job budgets (ws engine)
+//!                 [--jit-threshold N] [--profile-sample N]      # native tier / profiler knobs
 //! bombyx run      --engine ws --jobs N [--repeat K] [--workers N] [--chaos SEED] [--stats]
 //! bombyx sim      <file.cilk> <entry> [args...] [--dae] [--pes N] [--mem-latency N]
 //! bombyx bfs      [--depth D] [--branch B] [--pes N]     # paper §III experiment
@@ -704,7 +705,7 @@ fn parse_task_args(flags: &Flags) -> Result<(String, Vec<Value>)> {
 fn cmd_run(args: &[String]) -> Result<()> {
     let flags = parse_flags(
         args,
-        &["workers", "engine", "jobs", "repeat", "deadline-ms", "fuel", "chaos", "trace", "metrics-json"],
+        &["workers", "engine", "jobs", "repeat", "deadline-ms", "fuel", "chaos", "trace", "metrics-json", "jit-threshold", "profile-sample"],
     )?;
     let engine = flags
         .options
@@ -713,6 +714,14 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .unwrap_or("ws")
         .to_string();
     let want_stats = flags.switches.contains("stats");
+    if let Some(t) = flags.options.get("jit-threshold") {
+        let t = t.parse::<u64>().map_err(|e| anyhow!("bad --jit-threshold value: {e}"))?;
+        bombyx::exec::jit::set_threshold_override(t);
+    }
+    if let Some(n) = flags.options.get("profile-sample") {
+        let n = n.parse::<u64>().map_err(|e| anyhow!("bad --profile-sample value: {e}"))?;
+        bombyx::obs::profile::set_sample_every(n);
+    }
     // The hotness profiler rides on --stats (sampled at frame entry via
     // `Machine::on_dispatch` — never the retired fast path).
     let telemetry = Telemetry::arm(&flags, want_stats);
@@ -790,6 +799,20 @@ fn cmd_run(args: &[String]) -> Result<()> {
         session.kernels_timed()?;
     }
     let kernel_time = t0.elapsed();
+
+    // The engines drop their tiers before the --stats block below reads
+    // the tier table, and the interned JitProgram (with its counters)
+    // only lives as long as some tier over it — hold one across the run.
+    let _jit_pin = if want_stats {
+        let kernels = if engine == "oracle" {
+            session.implicit_kernels()?
+        } else {
+            session.explicit_kernels()?
+        };
+        bombyx::exec::jit::tier_for(&kernels)
+    } else {
+        None
+    };
 
     let wall = std::time::Instant::now();
     let (value, tasks, retired) = match engine.as_str() {
@@ -926,9 +949,44 @@ fn cmd_run(args: &[String]) -> Result<()> {
             if bombyx::exec::fuse_enabled() { "" } else { "  [BOMBYX_KERNEL_FUSE=0]" }
         );
         print_role_fusion(&kernels);
+        print_jit_tiers(&kernels);
         print_profile(Some(kernels.as_ref()), 10);
     }
     telemetry.finish()
+}
+
+/// Print the native-tier (JIT) table for `run --stats`: per-kernel tier
+/// activity from the process-wide intern table. Silent when no tier was
+/// ever created for the program (JIT disabled via `BOMBYX_JIT=0`, or
+/// this engine doesn't tier); one line when the platform probe failed.
+fn print_jit_tiers(kernels: &std::sync::Arc<bombyx::exec::KernelProgram>) {
+    if let Some(reason) = bombyx::exec::jit::disabled_reason() {
+        println!("jit: unavailable ({reason})");
+        return;
+    }
+    let stats = bombyx::exec::jit::stats_for(kernels);
+    if stats.is_empty() || stats.iter().all(|s| s.dispatches == 0) {
+        return;
+    }
+    println!("execution tiers (threshold {} dispatches):", bombyx::exec::jit::JitConfig::from_env().threshold);
+    let mut table = Table::new(["kernel", "dispatches", "jit entries", "bails", "compile", "code"]);
+    for s in &stats {
+        let compile = match s.uncompilable {
+            Some(reason) => reason.to_string(),
+            None if s.entries > 0 => format!("{:.2} ms", s.compile_ms),
+            None => "-".to_string(),
+        };
+        let code = if s.code_bytes > 0 { format!("{} B", commas(s.code_bytes as u64)) } else { "-".to_string() };
+        table.row([
+            s.name.clone(),
+            commas(s.dispatches),
+            commas(s.entries),
+            commas(s.bails),
+            compile,
+            code,
+        ]);
+    }
+    print!("{}", table.render());
 }
 
 fn cmd_sim(args: &[String]) -> Result<()> {

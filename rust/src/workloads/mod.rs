@@ -8,3 +8,4 @@ pub mod graphgen;
 pub mod nqueens;
 pub mod qsort;
 pub mod relax;
+pub mod rmw;

@@ -193,6 +193,12 @@ pub struct ExecutorConfig {
     /// `BOMBYX_CHAOS=<seed>` environment variable at [`Executor::new`];
     /// pin `Some(FaultPlan::disabled())` to stay clean regardless.
     pub fault: Option<FaultPlan>,
+    /// Native-tier (JIT) selection for this executor's jobs. `None`
+    /// falls back to the `BOMBYX_JIT` / `BOMBYX_JIT_THRESHOLD`
+    /// environment defaults; pin
+    /// `Some(crate::exec::jit::JitConfig::disabled())` to stay on the
+    /// interpreter regardless.
+    pub jit: Option<crate::exec::jit::JitConfig>,
 }
 
 impl Default for ExecutorConfig {
@@ -205,6 +211,7 @@ impl Default for ExecutorConfig {
             max_queued_jobs: 4096,
             default_spec: JobSpec::default(),
             fault: None,
+            jit: None,
         }
     }
 }
@@ -340,6 +347,11 @@ pub(crate) struct JobState {
     /// Root entry task name — the job's display name in traces/metrics.
     pub(crate) entry: String,
     pub(crate) kernels: Arc<KernelProgram>,
+    /// Native-tier handle shared by every worker running this job
+    /// (`None` when the JIT is disabled or unavailable). Resolved once at
+    /// submission; the underlying compiled code is interned per kernel
+    /// program, so jobs sharing a program share compiled artifacts.
+    pub(crate) jit: Option<Arc<crate::exec::jit::JitTier>>,
     pub(crate) memory: Arc<SharedMemory>,
     /// Per-job closure arena: cancellation sweeps it in one clear, and
     /// one job's closure footprint is invisible to every other job.
@@ -1179,10 +1191,15 @@ impl Executor {
         }
         let id = JobId(self.next_job.fetch_add(1, Ordering::Relaxed));
         let deadline_at = spec.deadline.map(|d| Instant::now() + d);
+        let jit = match self.shared.config.jit {
+            Some(cfg) => crate::exec::jit::tier_with(&kernels, cfg),
+            None => crate::exec::jit::tier_for(&kernels),
+        };
         let state = Arc::new(JobState {
             id,
             entry,
             kernels,
+            jit,
             memory: Arc::new(memory),
             registry: Registry::new(self.shared.config.arena_shards),
             spec,

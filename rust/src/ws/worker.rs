@@ -633,6 +633,10 @@ impl<'a> WsMachine<'a> {
 }
 
 impl<'a> Machine for WsMachine<'a> {
+    fn jit(&mut self) -> Option<Arc<crate::exec::jit::JitTier>> {
+        self.job.jit.clone()
+    }
+
     fn load(&mut self, arr: GlobalId, index: i64) -> Result<Value> {
         self.job.memory.load(arr, index)
     }

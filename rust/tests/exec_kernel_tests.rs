@@ -4,7 +4,7 @@
 //! (`bombyx::exec`). The independent baseline here is a *tree-walking*
 //! reference oracle kept inside this test (recursive serial elision over
 //! the implicit IR via `ir::expr::eval` — the pre-kernel executor
-//! semantics, frozen). For all six corpus workloads, under both DAE
+//! semantics, frozen). For all seven corpus workloads, under both DAE
 //! variants, every kernel engine must produce the reference's result and
 //! memory image, and the deterministic task/closure counters must agree
 //! across the explicit machine, the WS runtime (1 and 4 workers) and the
@@ -24,7 +24,7 @@ use bombyx::lower::{compile, CompileOptions, CompileResult};
 use bombyx::sim::exec::{trace_task, Effect, FnState, SCont, STask, Seg};
 use bombyx::sim::{simulate, simulate_with_kernels, NoSimXla, SimConfig, SimXla};
 use bombyx::util::golden::check_golden;
-use bombyx::workloads::{bfs, fib, graphgen, nqueens, qsort, relax};
+use bombyx::workloads::{bfs, fib, graphgen, nqueens, qsort, relax, rmw};
 use bombyx::ws::{self, NoXlaSink, ScalarSink, SharedMemory, WsConfig};
 
 // ---------------------------------------------------------------------------
@@ -227,6 +227,16 @@ fn corpus() -> Vec<Workload> {
                 relax::init_memory(m, mem, &relax_graph, RELAX_SEED).unwrap()
             }),
             uses_xla: true,
+        },
+        // Exercises the widened fusion peepholes (load→bin→store
+        // triples, bin→atomic_add, bin→send_argument).
+        Workload {
+            name: "rmw",
+            src: rmw::RMW_SRC,
+            entry: "bump",
+            args: vec![Value::I64(0), Value::I64(rmw::N as i64)],
+            init: Box::new(|m, mem| rmw::init_memory(m, mem).unwrap()),
+            uses_xla: false,
         },
     ]
 }
@@ -749,6 +759,10 @@ fn fused_programs_cut_dispatches_on_fib() {
     let retired = |prog: &Arc<KernelProgram>| {
         let mut ex =
             ExplicitExec::with_kernels(&r.explicit, Memory::new(&r.explicit), NoXla, Arc::clone(prog));
+        // `instrs` counts interpreter-retired dispatches; pin the
+        // interpreter tier so a JIT-forcing environment (CI runs the
+        // suite under BOMBYX_JIT_THRESHOLD=0) can't drain the counter.
+        ex.set_jit(bombyx::exec::jit::JitConfig::disabled());
         ex.run("fib", &[Value::I64(12)]).unwrap();
         (ex.stats.tasks_run, ex.stats.instrs)
     };

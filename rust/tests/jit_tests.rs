@@ -1,0 +1,416 @@
+//! Differential tests for the native JIT tier.
+//!
+//! The interpreter is the oracle: for every corpus workload, under both
+//! DAE variants, a forced-JIT run (threshold 0 — native from the first
+//! dispatch) must produce the same value, the same memory image and the
+//! same deterministic task/closure counters as a JIT-disabled run of the
+//! same engine — on the kernel oracle, the explicit machine and the WS
+//! runtime at 1 and 4 workers. On targets where native codegen is
+//! unavailable the forced tier silently stays interpreted and the
+//! differential is vacuous (still green); the tests that assert native
+//! entries happened guard on [`jit::available`].
+
+use std::sync::Arc;
+
+use bombyx::backend::emu;
+use bombyx::exec::jit::{self, JitConfig};
+use bombyx::exec::{compile_module, KernelMode, KernelProgram};
+use bombyx::interp::explicit_exec::ExplicitExec;
+use bombyx::interp::{FnXla, Memory, NoXla};
+use bombyx::ir::cfg::Module;
+use bombyx::ir::expr::Value;
+use bombyx::lower::{compile, CompileOptions, CompileResult};
+use bombyx::workloads::{bfs, fib, graphgen, nqueens, qsort, relax, rmw};
+use bombyx::ws::{Executor, ExecutorConfig, Job, ScalarSink, SharedMemory, WsConfig};
+
+const RELAX_SEED: u64 = 5;
+
+struct Workload {
+    name: &'static str,
+    src: &'static str,
+    entry: &'static str,
+    args: Vec<Value>,
+    init: Box<dyn Fn(&Module, &mut Memory)>,
+    uses_xla: bool,
+}
+
+fn corpus() -> Vec<Workload> {
+    let bfs_graph = graphgen::tree(3, 4); // 121 nodes
+    let bfs_graph2 = graphgen::tree(3, 4);
+    let relax_graph = graphgen::tree(3, 3); // 40 nodes
+    let qsort_input: Vec<i64> = (0..48).map(|i| ((i * 37 + 11) % 100) - 50).collect();
+    vec![
+        Workload {
+            name: "fib",
+            src: fib::FIB_SRC,
+            entry: "fib",
+            args: vec![Value::I64(12)],
+            init: Box::new(|_, _| {}),
+            uses_xla: false,
+        },
+        Workload {
+            name: "bfs",
+            src: bfs::BFS_SRC,
+            entry: "visit",
+            args: vec![Value::I64(0)],
+            init: Box::new(move |m, mem| bfs::init_memory(m, mem, &bfs_graph).unwrap()),
+            uses_xla: false,
+        },
+        Workload {
+            name: "bfs_dae",
+            src: bfs::BFS_DAE_SRC,
+            entry: "visit",
+            args: vec![Value::I64(0)],
+            init: Box::new(move |m, mem| bfs::init_memory(m, mem, &bfs_graph2).unwrap()),
+            uses_xla: false,
+        },
+        Workload {
+            name: "nqueens",
+            src: nqueens::NQUEENS_SRC,
+            entry: "place",
+            args: [6i64, 0, 0, 0, 0].iter().map(|&v| Value::I64(v)).collect(),
+            init: Box::new(|_, _| {}),
+            uses_xla: false,
+        },
+        Workload {
+            name: "qsort",
+            src: qsort::QSORT_SRC,
+            entry: "qsort_",
+            args: vec![Value::I64(0), Value::I64(47)],
+            init: Box::new(move |m, mem| {
+                mem.fill_i64(m.global_by_name("data").unwrap(), &qsort_input);
+            }),
+            uses_xla: false,
+        },
+        Workload {
+            name: "relax",
+            src: relax::RELAX_SRC,
+            entry: "expand",
+            args: vec![Value::I64(0)],
+            init: Box::new(move |m, mem| {
+                relax::init_memory(m, mem, &relax_graph, RELAX_SEED).unwrap()
+            }),
+            uses_xla: true,
+        },
+        // Fused-superinstruction shapes (load→bin→store triples,
+        // bin→atomic_add, bin→send_argument) under the helper replay.
+        Workload {
+            name: "rmw",
+            src: rmw::RMW_SRC,
+            entry: "bump",
+            args: vec![Value::I64(0), Value::I64(rmw::N as i64)],
+            init: Box::new(|m, mem| rmw::init_memory(m, mem).unwrap()),
+            uses_xla: false,
+        },
+    ]
+}
+
+type Image = Vec<(String, Vec<i64>, Vec<u32>)>;
+
+fn memory_image(module: &Module, mem: &Memory) -> Image {
+    module
+        .globals
+        .iter()
+        .map(|(gid, g)| {
+            let ints = mem.dump_i64(gid);
+            let floats = mem.dump_f32(gid).iter().map(|f| f.to_bits()).collect();
+            (g.name.clone(), ints, floats)
+        })
+        .collect()
+}
+
+fn shared_memory_image(module: &Module, mem: &SharedMemory) -> Image {
+    module
+        .globals
+        .iter()
+        .map(|(gid, g)| {
+            let ints = mem.dump_i64(gid);
+            let floats = mem.dump_f32(gid).iter().map(|f| f.to_bits()).collect();
+            (g.name.clone(), ints, floats)
+        })
+        .collect()
+}
+
+fn relax_row(
+    n: usize,
+    read: &mut dyn FnMut(i64) -> anyhow::Result<Value>,
+    write: &mut dyn FnMut(i64, Value) -> anyhow::Result<()>,
+    w: &[f32],
+    b: &[f32],
+) -> anyhow::Result<Value> {
+    let f = relax::F;
+    let x: Vec<f32> = (0..f)
+        .map(|j| read((n * f + j) as i64).map(|v| v.as_f32()))
+        .collect::<anyhow::Result<_>>()?;
+    let (y, score) = relax::relax_ref(&x, w, b);
+    for (j, &v) in y.iter().enumerate() {
+        write((n * f + j) as i64, Value::F32(v))?;
+    }
+    Ok(Value::I64((score * 1000.0) as i64))
+}
+
+fn fn_xla_for(module: &Module) -> FnXla {
+    let mut handler = FnXla::default();
+    let feat = module.global_by_name("feat").expect("relax module has feat");
+    let (w, b) = relax::weights(RELAX_SEED);
+    handler.register("relax", move |args: &[Value], mem: &mut Memory| {
+        let n = args[0].as_i64() as usize;
+        relax_row(n, &mut |i| mem.load(feat, i), &mut |i, v| mem.store(feat, i, v), &w, &b)
+    });
+    handler
+}
+
+// ---------------------------------------------------------------------------
+// Per-engine runners, parameterized over the tier config
+
+fn run_oracle(w: &Workload, r: &CompileResult, cfg: JitConfig) -> (i64, Image, u64, u64, u64, u64) {
+    let m = &r.implicit;
+    let mut mem = Memory::new(m);
+    (w.init)(m, &mut mem);
+    let xla = if w.uses_xla { fn_xla_for(m) } else { FnXla::default() };
+    let mut o = bombyx::interp::oracle::Oracle::new(m, mem, xla);
+    o.set_jit(cfg);
+    let v = o.run(w.entry, &w.args).expect("oracle");
+    (
+        v.as_i64(),
+        memory_image(m, &o.memory),
+        o.stats.calls,
+        o.stats.spawns,
+        o.stats.loads,
+        o.stats.stores,
+    )
+}
+
+fn run_explicit(w: &Workload, r: &CompileResult, cfg: JitConfig) -> (i64, Image, u64, u64, u64) {
+    let m = &r.explicit;
+    let mut mem = Memory::new(m);
+    (w.init)(m, &mut mem);
+    let xla = if w.uses_xla { fn_xla_for(m) } else { FnXla::default() };
+    let mut ex = ExplicitExec::new(m, mem, xla);
+    ex.set_jit(cfg);
+    let v = ex.run(w.entry, &w.args).expect("explicit");
+    assert_eq!(ex.live_closures(), 0, "{}: explicit closure leak", w.name);
+    (
+        v.as_i64(),
+        memory_image(m, &ex.memory),
+        ex.stats.tasks_run,
+        ex.stats.closures_made,
+        ex.stats.sends,
+    )
+}
+
+/// One job through the resident executor, with the tier pinned per-job
+/// via `ExecutorConfig::jit` (the seam the WS runtime resolves tiers
+/// through at submission).
+fn run_ws(
+    w: &Workload,
+    r: &CompileResult,
+    kernels: &Arc<KernelProgram>,
+    cfg: JitConfig,
+    workers: usize,
+) -> (i64, Image, u64, u64) {
+    let m = &r.explicit;
+    let mut seed = Memory::new(m);
+    (w.init)(m, &mut seed);
+    let mem = emu::shared_from(m, &seed);
+    let mut job = Job::new(Arc::clone(kernels), mem, w.entry, &w.args);
+    if w.uses_xla {
+        let (w2, b2) = relax::weights(RELAX_SEED);
+        let feat = m.global_by_name("feat");
+        job.xla_sink = Box::new(ScalarSink(move |_n: &str, args: &[Value], mem: &SharedMemory| {
+            let n = args[0].as_i64() as usize;
+            let feat = feat.expect("feat");
+            relax_row(n, &mut |i| mem.load(feat, i), &mut |i, v| mem.store(feat, i, v), &w2, &b2)
+        }));
+    }
+    let executor = Executor::new(ExecutorConfig {
+        ws: WsConfig { workers, steal_tries: 4 },
+        jit: Some(cfg),
+        ..ExecutorConfig::default()
+    })
+    .unwrap();
+    let handle = executor.submit(job).unwrap();
+    let (v, mem, stats) = handle.join().expect("ws job");
+    (v.as_i64(), shared_memory_image(m, &mem), stats.tasks_run, stats.closures_made)
+}
+
+fn check_jit_differential(w: &Workload, opts: &CompileOptions) {
+    let r = compile(w.name, w.src, opts).unwrap();
+    let label = format!("{} ({:?})", w.name, opts.dae);
+
+    assert_eq!(
+        run_oracle(w, &r, JitConfig::forced(0)),
+        run_oracle(w, &r, JitConfig::disabled()),
+        "{label}: oracle jit-vs-interpreter"
+    );
+    assert_eq!(
+        run_explicit(w, &r, JitConfig::forced(0)),
+        run_explicit(w, &r, JitConfig::disabled()),
+        "{label}: explicit jit-vs-interpreter"
+    );
+
+    let kernels = Arc::new(compile_module(&r.explicit, KernelMode::Explicit).unwrap());
+    for workers in [1usize, 4] {
+        assert_eq!(
+            run_ws(w, &r, &kernels, JitConfig::forced(0), workers),
+            run_ws(w, &r, &kernels, JitConfig::disabled(), workers),
+            "{label}: ws jit-vs-interpreter (workers={workers})"
+        );
+    }
+}
+
+#[test]
+fn jit_vs_interpreter_differential_no_dae() {
+    let opts = CompileOptions::no_dae();
+    for w in corpus() {
+        check_jit_differential(&w, &opts);
+    }
+}
+
+#[test]
+fn jit_vs_interpreter_differential_dae() {
+    let opts = CompileOptions::standard();
+    for w in corpus() {
+        check_jit_differential(&w, &opts);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bailout: mixed int/float frames hand back to the interpreter mid-frame
+
+/// Fib-shaped traversal whose leaves touch a float global: the leaf
+/// branch's float load/store can't live in the int slot arena, so a
+/// natively-entered leaf activation must bail and resume interpreted —
+/// while the recursive branch keeps running natively.
+const MIX_SRC: &str = "\
+global float acc[4];
+
+int mix(int n) {
+    if (n < 2) {
+        float t = acc[0];
+        acc[0] = t + 0.5;
+        return n;
+    }
+    int x = cilk_spawn mix(n - 1);
+    int y = cilk_spawn mix(n - 2);
+    cilk_sync;
+    return x + y;
+}
+";
+
+#[test]
+fn bailout_hands_mixed_float_frames_back_to_the_interpreter() {
+    for opts in [CompileOptions::no_dae(), CompileOptions::standard()] {
+        let r = compile("mix", MIX_SRC, &opts).unwrap();
+        let m = &r.explicit;
+        let kernels = Arc::new(compile_module(m, KernelMode::Explicit).unwrap());
+        // The interned JitProgram (and its entry/bail counters) lives as
+        // long as some tier over it does — hold one across the runs so
+        // stats_for still sees the counters after the engines drop.
+        let _pin = jit::tier_with(&kernels, JitConfig::forced(0));
+        let run = |cfg: JitConfig| {
+            let mut ex = ExplicitExec::with_kernels(m, Memory::new(m), NoXla, Arc::clone(&kernels));
+            ex.set_jit(cfg);
+            let v = ex.run("mix", &[Value::I64(10)]).unwrap();
+            (v.as_i64(), memory_image(m, &ex.memory), ex.stats.tasks_run, ex.stats.closures_made)
+        };
+        let jit = run(JitConfig::forced(0));
+        let interp = run(JitConfig::disabled());
+        assert_eq!(jit, interp, "mix ({:?}): bailing runs must match the interpreter", opts.dae);
+        assert_eq!(jit.0, 55, "mix(10) returns fib(10)");
+
+        if jit::available().is_ok() {
+            let stats = jit::stats_for(&kernels);
+            let entries: u64 = stats.iter().map(|s| s.entries).sum();
+            let bails: u64 = stats.iter().map(|s| s.bails).sum();
+            assert!(entries > 0, "mix ({:?}): forced tier must enter native code", opts.dae);
+            assert!(bails > 0, "mix ({:?}): float leaves must bail", opts.dae);
+            assert!(bails <= entries, "mix ({:?}): bails are a subset of entries", opts.dae);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tier promotion determinism
+
+#[test]
+fn tier_promotion_is_deterministic_across_worker_counts() {
+    // Whether a dispatch runs interpreted (below threshold) or natively
+    // must never change results or the deterministic counters — at any
+    // threshold, any worker count.
+    let w = Workload {
+        name: "fib",
+        src: fib::FIB_SRC,
+        entry: "fib",
+        args: vec![Value::I64(16)],
+        init: Box::new(|_, _| {}),
+        uses_xla: false,
+    };
+    let r = compile(w.name, w.src, &CompileOptions::no_dae()).unwrap();
+    let kernels = Arc::new(compile_module(&r.explicit, KernelMode::Explicit).unwrap());
+    let baseline = run_ws(&w, &r, &kernels, JitConfig::disabled(), 1);
+    assert_eq!(baseline.0, fib::fib_ref(16) as i64);
+    for workers in [1usize, 4] {
+        for threshold in [0u64, 32] {
+            assert_eq!(
+                run_ws(&w, &r, &kernels, JitConfig::forced(threshold), workers),
+                baseline,
+                "fib: promotion at threshold {threshold} (workers={workers})"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native entry smoke + availability probe
+
+#[test]
+fn forced_tier_actually_enters_native_code_on_fib() {
+    if jit::available().is_err() {
+        return; // covered by the availability test below
+    }
+    let r = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let kernels = Arc::new(compile_module(&r.explicit, KernelMode::Explicit).unwrap());
+    // Keep the interned JitProgram alive past the engine so its flushed
+    // counters are still readable below.
+    let _pin = jit::tier_with(&kernels, JitConfig::forced(0));
+    let mut ex =
+        ExplicitExec::with_kernels(&r.explicit, Memory::new(&r.explicit), NoXla, Arc::clone(&kernels));
+    ex.set_jit(JitConfig::forced(0));
+    let v = ex.run("fib", &[Value::I64(12)]).unwrap();
+    assert_eq!(v.as_i64(), 144);
+    drop(ex); // flush the tier's dispatch counters
+    let stats = jit::stats_for(&kernels);
+    let entries: u64 = stats.iter().map(|s| s.entries).sum();
+    let dispatches: u64 = stats.iter().map(|s| s.dispatches).sum();
+    assert!(entries > 0, "forced tier must enter native code");
+    assert!(dispatches >= entries, "every native entry was a dispatch");
+    assert!(
+        stats.iter().any(|s| s.code_bytes > 0),
+        "at least one kernel must have compiled machine code"
+    );
+}
+
+#[test]
+fn availability_probe_never_panics_and_disabled_config_stays_interpreted() {
+    // The probe must resolve to a stable Ok or a reasoned error — never
+    // a panic — and a disabled config must never hand out a tier even
+    // where native codegen works.
+    match jit::available() {
+        Ok(()) => assert!(jit::disabled_reason().is_none()),
+        Err(reason) => {
+            assert!(reason.starts_with("jit:"), "disabled reason must be prefixed: {reason}");
+            assert_eq!(jit::disabled_reason(), Some(reason));
+        }
+    }
+    let r = compile("fib", fib::FIB_SRC, &CompileOptions::no_dae()).unwrap();
+    let kernels = Arc::new(compile_module(&r.explicit, KernelMode::Explicit).unwrap());
+    assert!(
+        jit::tier_with(&kernels, JitConfig::disabled()).is_none(),
+        "disabled config must stay interpreted"
+    );
+    assert!(
+        jit::tier_with(&kernels, JitConfig::forced(0)).is_some() == jit::available().is_ok(),
+        "forced config hands out a tier exactly when native codegen is available"
+    );
+}
