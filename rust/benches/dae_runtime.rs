@@ -2,10 +2,16 @@
 //! synthetic trees B=4, D∈{7,9}, one PE per task type. Paper: 26.5 %
 //! overall reduction. Both program variants are compiled once (one
 //! `CompileSession` each, inside `BfsExperiment`) and reused per graph.
+//!
+//! Emits `BENCH_dae_runtime.json`: a `bombyx-metrics-v1` registry
+//! document (same schema as `--metrics-json`), so the perf-trajectory
+//! tooling reads every bench artifact the same way.
 
 use bombyx::coordinator::BfsExperiment;
+use bombyx::obs::metrics::Registry;
 use bombyx::sim::SimConfig;
 use bombyx::util::bench::{banner, timing_table};
+use bombyx::util::json::Json;
 use bombyx::util::table::{commas, Table};
 use bombyx::workloads::graphgen;
 
@@ -20,6 +26,7 @@ fn main() {
     println!("{}", timing_table(exp.dae.timings()));
 
     let cfg = SimConfig::paper();
+    let mut reg = Registry::new();
     let mut table =
         Table::new(["graph", "nodes", "non-DAE cycles", "DAE cycles", "reduction", "paper"]);
     let mut reductions = Vec::new();
@@ -27,6 +34,13 @@ fn main() {
         let graph = graphgen::tree(4, depth);
         let cmp = exp.run(&graph, &cfg).expect("simulation");
         reductions.push(cmp.reduction());
+        reg.counter_add("dae_runtime.graphs", 1);
+        let key = format!("dae_runtime.tree_b4_d{depth}");
+        reg.counter_set(&format!("{key}.nodes"), graph.nodes() as u64);
+        reg.counter_set(&format!("{key}.plain_cycles"), cmp.plain_cycles);
+        reg.counter_set(&format!("{key}.dae_cycles"), cmp.dae_cycles);
+        reg.gauge_set(&format!("{key}.reduction"), cmp.reduction());
+        reg.observe("dae_runtime.reduction", cmp.reduction());
         table.row([
             format!("tree B=4 D={depth}"),
             commas(graph.nodes() as u64),
@@ -39,6 +53,17 @@ fn main() {
     print!("{}", table.render());
     let overall = reductions.iter().sum::<f64>() / reductions.len() as f64;
     println!("\noverall runtime reduction: {:.1}% (paper: 26.5%)", overall * 100.0);
+    reg.gauge_set("dae_runtime.overall_reduction", overall);
+    reg.gauge_set("dae_runtime.paper_reduction", 0.265);
+
+    let mut root = Json::object();
+    root.set("bench", "dae_runtime")
+        .set("mode", if cfg!(debug_assertions) { "debug" } else { "release" })
+        .set("metrics", reg.to_json());
+    let path = "BENCH_dae_runtime.json";
+    std::fs::write(path, root.pretty() + "\n").expect("write BENCH_dae_runtime.json");
+    println!("wrote {path}");
+
     assert!(
         (0.15..0.40).contains(&overall),
         "reproduction drifted out of band: {overall}"

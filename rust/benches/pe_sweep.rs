@@ -4,10 +4,16 @@
 //! grid points are sharded across OS threads (`BfsExperiment::run_grid`),
 //! so the bench scales with cores — only the simulator runs per
 //! configuration.
+//!
+//! Emits `BENCH_pe_sweep.json`: a `bombyx-metrics-v1` registry document
+//! (same schema as `--metrics-json`), so the perf-trajectory tooling
+//! reads every bench artifact the same way.
 
 use bombyx::coordinator::BfsExperiment;
+use bombyx::obs::metrics::Registry;
 use bombyx::sim::SimConfig;
 use bombyx::util::bench::banner;
+use bombyx::util::json::Json;
 use bombyx::util::table::{commas, Table};
 use bombyx::workloads::graphgen;
 
@@ -26,6 +32,7 @@ fn main() {
     let t0 = std::time::Instant::now();
     let results = exp.run_grid(&graph, &configs).expect("simulation");
     let elapsed = t0.elapsed();
+    let mut reg = Registry::new();
     let mut table = Table::new([
         "PEs/type",
         "non-DAE cycles",
@@ -35,20 +42,40 @@ fn main() {
     ]);
     let base_dae = results[0].dae_cycles;
     for (pes, cmp) in pe_counts.iter().zip(&results) {
+        let speedup = base_dae as f64 / cmp.dae_cycles as f64;
+        reg.counter_add("pe_sweep.grid_points", 1);
+        let key = format!("pe_sweep.pes_{pes}");
+        reg.counter_set(&format!("{key}.plain_cycles"), cmp.plain_cycles);
+        reg.counter_set(&format!("{key}.dae_cycles"), cmp.dae_cycles);
+        reg.gauge_set(&format!("{key}.reduction"), cmp.reduction());
+        reg.gauge_set(&format!("{key}.dae_speedup_vs_1pe"), speedup);
+        reg.observe("pe_sweep.reduction", cmp.reduction());
         table.row([
             pes.to_string(),
             commas(cmp.plain_cycles),
             commas(cmp.dae_cycles),
             format!("{:.1}%", cmp.reduction() * 100.0),
-            format!("{:.2}x", base_dae as f64 / cmp.dae_cycles as f64),
+            format!("{speedup:.2}x"),
         ]);
     }
     print!("{}", table.render());
+    let workers = BfsExperiment::grid_workers(configs.len());
     println!(
         "\n({} grid points simulated in {:.2}s across {} worker threads.)",
         configs.len(),
         elapsed.as_secs_f64(),
-        BfsExperiment::grid_workers(configs.len())
+        workers
     );
     println!("(The paper evaluates only the 1-PE configurations; the sweep probes the\n design point where the memory channel rather than the PE count saturates.)");
+    reg.counter_set("pe_sweep.nodes", graph.nodes() as u64);
+    reg.counter_set("pe_sweep.grid_workers", workers as u64);
+    reg.gauge_set("pe_sweep.grid_wall_s", elapsed.as_secs_f64());
+
+    let mut root = Json::object();
+    root.set("bench", "pe_sweep")
+        .set("mode", if cfg!(debug_assertions) { "debug" } else { "release" })
+        .set("metrics", reg.to_json());
+    let path = "BENCH_pe_sweep.json";
+    std::fs::write(path, root.pretty() + "\n").expect("write BENCH_pe_sweep.json");
+    println!("wrote {path}");
 }

@@ -1,0 +1,256 @@
+//! Compile-service throughput and latency: an in-process `bombyx serve`
+//! daemon on a temp socket, driven over the real unix-socket protocol.
+//!
+//! Sections: (1) cold vs warm single-edit recompile latency (the warm
+//! path must land at <= 0.5x cold p50), (2) sustained compiles/sec,
+//! serial requests vs one batched `--jobs 4` request (>= 2x where >= 4
+//! cores are available), (3) identical-template dedup (the daemon must
+//! record dedup hits and serve them faster than cold).
+//!
+//! Emits `BENCH_serve.json`. `BOMBYX_BENCH_SMOKE=1` reduces iterations
+//! and additionally arms obs to dump `SERVE_TRACE_smoke.json` /
+//! `SERVE_METRICS_smoke.json` for CI artifact validation
+//! (`serve_tests::ci_serve_artifacts_validate`).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use bombyx::obs;
+use bombyx::serve::{Client, ServeConfig, Server};
+use bombyx::util::bench::banner;
+use bombyx::util::json::Json;
+
+/// A compile unit big enough that lowering dominates protocol overhead:
+/// `leaves` leaf functions plus a spawning task pair, all names
+/// suffixed by `tag` so distinct tags are structurally unrelated
+/// (defeating both dedup tiers — genuinely cold compiles).
+fn program(tag: &str, leaves: usize) -> String {
+    assert!(leaves >= 3);
+    let mut src = String::new();
+    for i in 0..leaves {
+        src.push_str(&format!("int leaf_{tag}_{i}(int a) {{ return a * {} + {i}; }}\n", i + 3));
+    }
+    src.push_str(&format!(
+        "int work_{tag}(int n) {{\n\
+         \x20   if (n < 2) {{ int t = leaf_{tag}_0(n); return t; }}\n\
+         \x20   int x = cilk_spawn work_{tag}(n - 1);\n\
+         \x20   int y = cilk_spawn work_{tag}(n - 2);\n\
+         \x20   cilk_sync;\n\
+         \x20   int r = leaf_{tag}_1(x + y);\n\
+         \x20   return r;\n}}\n"
+    ));
+    src.push_str(&format!(
+        "void top_{tag}(int n) {{\n\
+         \x20   int r = cilk_spawn work_{tag}(n);\n\
+         \x20   cilk_sync;\n\
+         \x20   int u = leaf_{tag}_2(r);\n\
+         \x20   return;\n}}\n"
+    ));
+    src
+}
+
+fn p50(samples_ms: &mut Vec<f64>) -> f64 {
+    samples_ms.sort_by(f64::total_cmp);
+    if samples_ms.is_empty() {
+        0.0
+    } else {
+        samples_ms[samples_ms.len() / 2]
+    }
+}
+
+fn expect_mode(resp: &Json, want: &str, what: &str) {
+    assert_eq!(
+        resp.get("ok"),
+        Some(&Json::Bool(true)),
+        "{what} failed: {}",
+        resp.compact()
+    );
+    assert_eq!(
+        resp.get("mode").and_then(Json::as_str),
+        Some(want),
+        "{what}: unexpected mode in {}",
+        resp.compact()
+    );
+}
+
+fn main() {
+    let smoke = std::env::var("BOMBYX_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let lat_samples = if smoke { 5 } else { 60 };
+    let rounds = if smoke { 2 } else { 8 };
+    let fleet = if smoke { 8 } else { 24 };
+    let template_ids = if smoke { 6 } else { 16 };
+    let leaves = 16;
+    banner("serve_bench", "Compile-service daemon: latency, throughput and dedup.");
+    if smoke {
+        println!("(smoke mode: reduced iterations, obs armed for artifact dump)");
+        obs::set_trace(true);
+        obs::set_metrics(true);
+    }
+
+    let socket: PathBuf =
+        std::env::temp_dir().join(format!("bx-bench-{}.sock", std::process::id()));
+    let mut config = ServeConfig::new(&socket);
+    // Small enough to exercise the LRU under the cold fleets below,
+    // large enough that the warm/dedup sections never lose their donor.
+    config.capacity = 32;
+    let server = Server::start(config).expect("server starts");
+    let mut client = Client::connect(&socket).expect("connect");
+    let mut uniq = 0usize;
+    let mut fresh = |prefix: &str| {
+        uniq += 1;
+        format!("{prefix}{uniq}")
+    };
+
+    // ---- section 1: cold vs warm single-edit latency -----------------------
+    let mut cold_ms: Vec<f64> = Vec::with_capacity(lat_samples);
+    for _ in 0..lat_samples {
+        let tag = fresh("c");
+        let src = program(&tag, leaves);
+        let t0 = Instant::now();
+        let resp = client.compile(&tag, &src).expect("cold compile");
+        cold_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        expect_mode(&resp, "cold", "cold compile");
+    }
+    let cold_p50 = p50(&mut cold_ms);
+
+    // Alternate a one-leaf edit against one resident session: every
+    // request is a warm single-edit recompile.
+    let warm_tag = fresh("w");
+    let base = program(&warm_tag, leaves);
+    let edited = base.replace("a * 3 + 0", "a * 91 + 0");
+    assert_ne!(base, edited, "warm edit must apply");
+    let resp = client.compile(&warm_tag, &base).expect("warm seed");
+    expect_mode(&resp, "cold", "warm seed");
+    let mut warm_ms: Vec<f64> = Vec::with_capacity(lat_samples);
+    let mut flip = false;
+    for _ in 0..lat_samples {
+        flip = !flip;
+        let src: &str = if flip { &edited } else { &base };
+        let t0 = Instant::now();
+        let resp = client.recompile(&warm_tag, src).expect("warm recompile");
+        warm_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        expect_mode(&resp, "incremental", "warm recompile");
+        assert_eq!(resp.get("warm"), Some(&Json::Bool(true)));
+    }
+    let warm_p50 = p50(&mut warm_ms);
+    let warm_speedup = cold_p50 / warm_p50.max(1e-9);
+    println!(
+        "latency p50: cold {cold_p50:.3} ms, warm single-edit {warm_p50:.3} ms ({warm_speedup:.2}x)"
+    );
+    assert!(
+        warm_p50 <= 0.5 * cold_p50,
+        "warm single-edit recompile p50 ({warm_p50:.3} ms) must be <= 0.5x cold p50 ({cold_p50:.3} ms)"
+    );
+
+    // ---- section 2: sustained throughput, serial vs batch --jobs 4 ---------
+    let jobs = 4usize;
+    let mut serial_cps_rounds: Vec<f64> = Vec::new();
+    let mut batch_cps_rounds: Vec<f64> = Vec::new();
+    for _ in 0..rounds {
+        let tags: Vec<String> = (0..fleet).map(|_| fresh("s")).collect();
+        let sources: Vec<String> = tags.iter().map(|t| program(t, leaves)).collect();
+        let t0 = Instant::now();
+        for (tag, src) in tags.iter().zip(&sources) {
+            let resp = client.compile(tag, src).expect("serial compile");
+            expect_mode(&resp, "cold", "serial compile");
+        }
+        serial_cps_rounds.push(fleet as f64 / t0.elapsed().as_secs_f64().max(1e-9));
+
+        let tags: Vec<String> = (0..fleet).map(|_| fresh("p")).collect();
+        let sources: Vec<String> = tags.iter().map(|t| program(t, leaves)).collect();
+        let items: Vec<(&str, &str)> =
+            tags.iter().zip(&sources).map(|(t, s)| (t.as_str(), s.as_str())).collect();
+        let t0 = Instant::now();
+        let resp = client.batch(&items, jobs).expect("batch compile");
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{}", resp.compact());
+        let results = resp.get("results").and_then(Json::as_array).expect("results");
+        assert_eq!(results.len(), fleet);
+        for r in results {
+            expect_mode(r, "cold", "batch item");
+        }
+        batch_cps_rounds.push(fleet as f64 / secs);
+    }
+    let serial_cps = p50(&mut serial_cps_rounds);
+    let batch_cps = p50(&mut batch_cps_rounds);
+    let batch_speedup = batch_cps / serial_cps.max(1e-9);
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!(
+        "throughput: serial {serial_cps:.1} compiles/s, batch --jobs {jobs} {batch_cps:.1} compiles/s \
+         ({batch_speedup:.2}x on {cores} core(s))"
+    );
+    if cores >= jobs {
+        assert!(
+            batch_speedup >= 2.0,
+            "batched --jobs {jobs} throughput ({batch_cps:.1}/s) must be >= 2x serial \
+             ({serial_cps:.1}/s) on {cores} cores"
+        );
+    } else {
+        println!("(skipping the >=2x batch assertion: only {cores} core(s) available)");
+    }
+
+    // ---- section 3: identical-template dedup -------------------------------
+    let template = program(&fresh("t"), leaves);
+    let first = client.compile(&fresh("tpl_"), &template).expect("template seed");
+    expect_mode(&first, "cold", "template seed");
+    let mut dedup_ms: Vec<f64> = Vec::with_capacity(template_ids);
+    for _ in 0..template_ids {
+        let id = fresh("tpl_");
+        let t0 = Instant::now();
+        let resp = client.compile(&id, &template).expect("template compile");
+        dedup_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        expect_mode(&resp, "identical", "template compile");
+    }
+    let dedup_p50 = p50(&mut dedup_ms);
+    println!(
+        "dedup: {template_ids} identical-template ids served at p50 {dedup_p50:.3} ms \
+         (cold p50 {cold_p50:.3} ms)"
+    );
+
+    client.shutdown().expect("shutdown");
+    let snap = server.join().expect("join");
+    println!(
+        "daemon lifetime: {} requests, {} compiles, {} warm hits, {} dedup hits, {} evictions",
+        snap.requests, snap.compiles, snap.cache_hits, snap.dedup_hits, snap.evictions
+    );
+    assert!(snap.dedup_hits > 0, "template workload must record dedup hits");
+    assert_eq!(snap.errors, 0, "bench workload must not error");
+
+    // ---- machine-readable output -------------------------------------------
+    let mut root = Json::object();
+    root.set("bench", "serve")
+        .set("mode", if cfg!(debug_assertions) { "debug" } else { "release" })
+        .set("smoke", smoke)
+        .set("available_cores", cores)
+        .set("program_funcs", leaves + 2)
+        .set("cold_ms_p50", cold_p50)
+        .set("warm_ms_p50", warm_p50)
+        .set("warm_speedup", warm_speedup)
+        .set("serial_cps", serial_cps)
+        .set("batch_cps", batch_cps)
+        .set("batch_speedup", batch_speedup)
+        .set("batch_jobs", jobs)
+        .set("fleet", fleet)
+        .set("dedup_ms_p50", dedup_p50)
+        .set("dedup_hits", snap.dedup_hits as i64)
+        .set("requests", snap.requests as i64)
+        .set("compiles", snap.compiles as i64)
+        .set("cache_hits", snap.cache_hits as i64)
+        .set("evictions", snap.evictions as i64);
+    let path = "BENCH_serve.json";
+    std::fs::write(path, root.pretty() + "\n").expect("write BENCH_serve.json");
+    println!("wrote {path}");
+
+    if smoke {
+        obs::set_trace(false);
+        obs::set_metrics(false);
+        let trace = obs::trace::export_current();
+        std::fs::write("SERVE_TRACE_smoke.json", trace.pretty() + "\n")
+            .expect("write SERVE_TRACE_smoke.json");
+        let metrics = obs::metrics::export_json();
+        std::fs::write("SERVE_METRICS_smoke.json", metrics.pretty() + "\n")
+            .expect("write SERVE_METRICS_smoke.json");
+        println!("wrote SERVE_TRACE_smoke.json and SERVE_METRICS_smoke.json");
+        obs::reset_all();
+    }
+}

@@ -32,6 +32,7 @@ pub mod ir;
 pub mod lower;
 pub mod obs;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod workloads;

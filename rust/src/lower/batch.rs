@@ -14,11 +14,14 @@
 //!   and an edit re-runs the pipeline only for functions whose
 //!   fingerprint changed — each pass executed function-at-a-time
 //!   ([`super::pass::Pass::run_on_function`]) and spliced into the cached per-stage
-//!   modules. Structural edits (changed signatures, globals, the DAE
-//!   access-function set, or a shifted explicit-task layout) fall back to
-//!   a full pipeline run, so the result is byte-for-byte the module a
-//!   cold compile of the edited source produces — which the test suite
-//!   asserts via printed IR.
+//!   modules. An edit that changes the needed DAE access-function set is
+//!   still spliced — clean functions keep their cached post-DAE bodies
+//!   with access callee ids remapped to the cold assignment. Structural
+//!   edits (changed signatures or globals) fall back to a full pipeline
+//!   run, and a shifted explicit-task layout re-runs explicitize only;
+//!   either way the result is byte-for-byte the module a cold compile of
+//!   the edited source produces — which the test suite asserts via
+//!   printed IR.
 //!
 //! Both are possible because the Fig. 3 pipeline is per-function at every
 //! stage: batching parallelizes across modules, incrementality memoizes
@@ -33,7 +36,7 @@ use anyhow::{bail, Result};
 use crate::frontend::ast::{
     self, Block, Call, Expr, ExprKind, FuncDef, Initializer, Program, Stmt, StmtKind,
 };
-use crate::ir::cfg::FuncKind;
+use crate::ir::cfg::{FuncKind, Op};
 use crate::ir::verify::{verify_module, Stage};
 use crate::ir::{FuncId, GlobalId, Module};
 use crate::util::parallel;
@@ -408,6 +411,16 @@ pub(crate) struct IncrState {
     partitions: Option<HashMap<FuncId, Paths>>,
 }
 
+impl IncrState {
+    /// Structure fingerprint of the program this state was built from
+    /// (globals + extern/function signatures). Exposed so session callers
+    /// — e.g. the serve daemon's stats — can report compilation identity
+    /// without re-parsing.
+    pub(crate) fn structure_fp(&self) -> u64 {
+        self.structure_fp
+    }
+}
+
 pub(crate) fn build_incr_state(program: &Program, _result: &CompileResult) -> IncrState {
     IncrState {
         structure_fp: structure_fingerprint(program),
@@ -475,10 +488,15 @@ pub(crate) fn recompile(
     // ---- stage B: dae + simplify_post_dae, dirty functions only -----------
     let implicit_dae: Arc<Module>;
     let implicit: Arc<Module>;
+    // Set when the edit changed the *set* of DAE access functions the
+    // module needs, so every cached id at or above `n_source` refers to
+    // an access function that moved or no longer exists.
+    let mut access_remapped = false;
     if opts.dae {
-        // Splicing is only id-compatible if the edited module needs
-        // exactly the access functions the cached module already has, in
-        // the same creation order.
+        // The cached access functions, in creation order, recognized by
+        // shape. An unrecognizable trailing function means the cached
+        // module was not produced by the DAE pass we know — never splice
+        // on a guess.
         let mut cached_access: Vec<GlobalId> = Vec::new();
         let mut recognizable = true;
         for (id, f) in cached.implicit_dae.funcs.iter() {
@@ -494,16 +512,18 @@ pub(crate) fn recompile(
             }
         }
         let new_needed = dae::module_dae_globals(&module_a);
-        if !recognizable || cached_access != new_needed {
+        if !recognizable {
             return full_recompile(program, opts);
         }
+        access_remapped = cached_access != new_needed;
         implicit = Arc::new(module_a);
         if new_needed.is_empty() {
-            // No annotated loads anywhere (the common no-pragma source
-            // under standard options): the post-DAE module IS the pre-DAE
-            // module — cold compiles share one Arc here, and so do we,
-            // instead of deep-copying the cached module for a guaranteed
-            // no-op segment. The report still mirrors the cold shape.
+            // No annotated loads anywhere — either the common no-pragma
+            // source under standard options, or the edit removed the
+            // last DAE load: the post-DAE module IS the pre-DAE module —
+            // cold compiles share one Arc here, and so do we, instead of
+            // deep-copying the cached module for a guaranteed no-op
+            // segment. The report still mirrors the cold shape.
             implicit_dae = Arc::clone(&implicit);
             report.timings.push(PassTiming {
                 pass: "dae",
@@ -518,7 +538,10 @@ pub(crate) fn recompile(
                 ran: spd_ran,
                 funcs: if spd_ran { dirty_ids.len() } else { 0 },
             });
-        } else {
+        } else if !access_remapped {
+            // The edited module needs exactly the access functions the
+            // cached module already has, in the same creation order:
+            // ids line up, splice dirty bodies straight in.
             let mut module_b = (*cached.implicit_dae).clone();
             for &fid in &dirty_ids {
                 module_b.funcs[fid] = implicit.funcs[fid].clone();
@@ -527,6 +550,81 @@ pub(crate) fn recompile(
             let dae_report = PassManager::incremental_dae().run_on_functions(
                 &mut ctx,
                 &dirty_ids,
+                PipelineStage::Implicit,
+                opts,
+            )?;
+            report.timings.extend(dae_report.timings);
+            implicit_dae = Arc::new(module_b);
+        } else {
+            // The needed set changed — a dirty edit added the first DAE
+            // load of a new global and/or dropped the last load of an
+            // old one — so cached access-function ids no longer line up
+            // with what a cold compile would assign. Rebuild the
+            // post-DAE module in cold creation order: dirty functions
+            // start from their freshly re-lowered pre-DAE bodies, clean
+            // functions keep their cached post-DAE bodies with
+            // access-spawn callees remapped old-id → new-id, and the
+            // access functions themselves are regenerated per
+            // `new_needed` (the order a cold DAE pass creates them in).
+            let mut remap: HashMap<FuncId, FuncId> = HashMap::new();
+            for (old_pos, g) in cached_access.iter().enumerate() {
+                if let Some(new_pos) = new_needed.iter().position(|n| n == g) {
+                    remap.insert(
+                        FuncId::new(state.n_source + old_pos),
+                        FuncId::new(state.n_source + new_pos),
+                    );
+                }
+            }
+            // `implicit` has exactly the source+extern functions — the
+            // clone drops the stale access functions for free.
+            let mut module_b = (*implicit).clone();
+            for i in 0..state.n_source {
+                let fid = FuncId::new(i);
+                if dirty_ids.contains(&fid) {
+                    continue;
+                }
+                let mut func = cached.implicit_dae.funcs[fid].clone();
+                if let Some(cfg) = func.body.as_mut() {
+                    for (_, block) in cfg.blocks.iter_mut() {
+                        for op in &mut block.ops {
+                            let callee = match op {
+                                Op::Call { callee, .. } | Op::Spawn { callee, .. } => callee,
+                                _ => continue,
+                            };
+                            if callee.index() >= state.n_source {
+                                match remap.get(callee) {
+                                    Some(&nid) => *callee = nid,
+                                    // A clean function spawning an access
+                                    // function whose global left the
+                                    // needed set cannot happen (its
+                                    // annotated loads are in `module_a`),
+                                    // but never splice on a guess.
+                                    None => return full_recompile(program, opts),
+                                }
+                            }
+                        }
+                    }
+                }
+                module_b.funcs[fid] = func;
+            }
+            // Append the new access functions, then run the DAE segment
+            // over dirty + access functions: `apply_dae_func` rewrites
+            // the dirty bodies against the rebuilt set (a no-op on the
+            // access functions themselves), and `simplify_post_dae`
+            // touches the fresh access functions exactly as a cold
+            // module-wide run would.
+            let mut run_ids = dirty_ids.clone();
+            for &arr in &new_needed {
+                let (gname, elem) = {
+                    let g = &module_b.globals[arr];
+                    (g.name.clone(), g.elem)
+                };
+                run_ids.push(module_b.funcs.push(dae::make_access_func(&gname, elem, arr)));
+            }
+            let mut ctx = FuncCtx { program, module: &mut module_b };
+            let dae_report = PassManager::incremental_dae().run_on_functions(
+                &mut ctx,
+                &run_ids,
                 PipelineStage::Implicit,
                 opts,
             )?;
@@ -556,6 +654,20 @@ pub(crate) fn recompile(
         // unchanged); later recompiles reuse the cache built here.
         None => explicitize::compute_partitions(&cached.implicit_dae),
     };
+    if access_remapped {
+        // The access-function id space shifted: every cached partition
+        // entry at or above `n_source` describes an old access function
+        // (possibly one that no longer exists). Rebuild that tail from
+        // the freshly assembled post-DAE module; source-function entries
+        // stay valid (clean CFG structure is untouched — only callee ids
+        // inside ops moved, which path partitioning never looks at).
+        partitions.retain(|fid, _| fid.index() < state.n_source);
+        for (fid, f) in implicit_dae.funcs.iter() {
+            if fid.index() >= state.n_source && f.kind == FuncKind::Task && f.body.is_some() {
+                partitions.insert(fid, partition_paths(f.cfg()));
+            }
+        }
+    }
     for &fid in &dirty_ids {
         let f = &implicit_dae.funcs[fid];
         if f.kind == FuncKind::Task && f.body.is_some() {

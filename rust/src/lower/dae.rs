@@ -161,8 +161,10 @@ pub fn apply_dae_func(module: &mut Module, fid: crate::ir::FuncId) -> Result<usi
 }
 
 /// `int <name>_access(int idx) { return <name>[idx]; }` — a *task* (it is
-/// spawned; in hardware it becomes the access PE).
-fn make_access_func(global_name: &str, elem: Type, arr: GlobalId) -> Func {
+/// spawned; in hardware it becomes the access PE). `pub(crate)` so the
+/// incremental engine can append the same access functions when a dirty
+/// edit changes the needed set (`lower/batch.rs` remap splice).
+pub(crate) fn make_access_func(global_name: &str, elem: Type, arr: GlobalId) -> Func {
     let mut vars = IdVec::new();
     let idx = vars.push(Var { name: "idx".into(), ty: Type::Int, is_param: true, is_temp: false });
     let tmp = vars.push(Var { name: "t0".into(), ty: elem, is_param: false, is_temp: true });

@@ -69,8 +69,10 @@ pub use pass::{
     PipelineStage,
 };
 
-/// Options controlling the pipeline.
-#[derive(Clone, Debug, Default)]
+/// Options controlling the pipeline. `PartialEq` so callers that share
+/// artifacts across sessions (the serve daemon's dedup map) can require
+/// option-identical donors.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CompileOptions {
     /// Apply `#pragma bombyx dae` transformations (when false, pragmas are
     /// ignored — the paper's non-DAE baseline).
@@ -173,6 +175,21 @@ pub struct RecompileOutcome {
     pub timings: Vec<PassTiming>,
 }
 
+/// How [`CompileSession::new_seeded`] produced its session.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SessionSeed {
+    /// No donor (or an unusable one — different options, no fingerprint
+    /// state, or a structural mismatch): full cold pipeline.
+    Cold,
+    /// The donor's compilation was reused wholesale — the new source is
+    /// fingerprint-identical, so every stage module is shared by `Arc`
+    /// with zero pass work.
+    Identical,
+    /// Only the named functions were re-lowered; everything else was
+    /// spliced from the donor's cached stage modules.
+    Spliced { dirty: Vec<String> },
+}
+
 /// One compilation, many targets: lowers the source once and hands the
 /// cached modules to every backend/runtime (see module docs).
 #[derive(Debug)]
@@ -205,6 +222,80 @@ impl CompileSession {
         let mut session = CompileSession::from_result(name, opts.clone(), result);
         session.incr = Some(incr);
         Ok(session)
+    }
+
+    /// Like [`CompileSession::new`], but seeded from a *donor* session
+    /// compiled with the same options. The donor's per-function
+    /// fingerprints decide how much work the new source actually needs:
+    /// an identical source shares every stage module by `Arc`
+    /// ([`SessionSeed::Identical`]), a near-identical template source
+    /// re-lowers only the differing functions and splices the rest
+    /// ([`SessionSeed::Spliced`]), and anything structurally different
+    /// falls back to a cold pipeline. The donor is never mutated; the
+    /// produced modules are byte-for-byte what a cold compile of
+    /// `source` yields. This is the dedup primitive behind the serve
+    /// daemon's content-fingerprint map.
+    pub fn new_seeded(
+        name: &str,
+        source: &str,
+        opts: &CompileOptions,
+        donor: Option<&CompileSession>,
+    ) -> Result<(CompileSession, SessionSeed)> {
+        let _span = obs::Span::enter(format!("compile {name}"), "session");
+        obs::metrics::counter_add("compile.sessions", 1);
+        let (program, _src) = frontend::parse_and_check(name, source)?;
+        if let Some(d) = donor {
+            if d.options == *opts {
+                if let Some(state) = d.incr.as_ref() {
+                    match batch::recompile(&program, opts, &d.result, state)? {
+                        batch::Recompiled::Unchanged => {
+                            return Ok((d.clone_shared(name), SessionSeed::Identical));
+                        }
+                        batch::Recompiled::Incremental { result, state, dirty } => {
+                            let mut s =
+                                CompileSession::from_result(name, opts.clone(), result);
+                            s.incr = Some(state);
+                            return Ok((s, SessionSeed::Spliced { dirty }));
+                        }
+                        batch::Recompiled::Full { result, state } => {
+                            let mut s =
+                                CompileSession::from_result(name, opts.clone(), result);
+                            s.incr = Some(state);
+                            return Ok((s, SessionSeed::Cold));
+                        }
+                    }
+                }
+            }
+        }
+        let result = compile_ast(&program, opts)?;
+        let incr = batch::build_incr_state(&program, &result);
+        let mut session = CompileSession::from_result(name, opts.clone(), result);
+        session.incr = Some(incr);
+        Ok((session, SessionSeed::Cold))
+    }
+
+    /// A new session over the *same* compilation: stage modules, kernel
+    /// programs and fingerprint state are shared (`Arc` bumps / clones),
+    /// per-name backend artifacts start empty. Cheap — no IR is copied.
+    pub fn clone_shared(&self, name: &str) -> CompileSession {
+        let session = CompileSession {
+            name: name.to_string(),
+            options: self.options.clone(),
+            result: self.result.clone(),
+            emu: None,
+            hardcilk: Vec::new(),
+            rtl: Vec::new(),
+            kernels_explicit: OnceLock::new(),
+            kernels_implicit: OnceLock::new(),
+            incr: self.incr.clone(),
+        };
+        if let Some(k) = self.kernels_explicit.get() {
+            let _ = session.kernels_explicit.set(Arc::clone(k));
+        }
+        if let Some(k) = self.kernels_implicit.get() {
+            let _ = session.kernels_implicit.set(Arc::clone(k));
+        }
+        session
     }
 
     /// Wrap an existing compilation (e.g. from [`compile_ast`]).
@@ -327,6 +418,40 @@ impl CompileSession {
         self.rtl.clear();
         self.kernels_explicit = OnceLock::new();
         self.kernels_implicit = OnceLock::new();
+    }
+
+    /// Structure fingerprint (globals + extern/function signatures) of
+    /// the compiled program — `None` for sessions wrapped around a bare
+    /// [`CompileResult`] with no fingerprint state.
+    pub fn structure_fp(&self) -> Option<u64> {
+        self.incr.as_ref().map(|s| s.structure_fp())
+    }
+
+    /// Rough resident-size estimate of this session's IR artifacts, for
+    /// byte-budget accounting (the serve LRU). Structural, not measured:
+    /// weighted op/block/var/function counts per module, counting each
+    /// distinct module once (DAE-off sessions share one `Arc` between
+    /// the two implicit stages).
+    pub fn approx_bytes(&self) -> usize {
+        fn module_bytes(m: &Module) -> usize {
+            let mut bytes = 128 * m.funcs.len() + 64 * m.globals.len();
+            for (_, f) in m.funcs.iter() {
+                bytes += 48 * f.vars.len();
+                if let Some(cfg) = &f.body {
+                    bytes += 64 * cfg.blocks.len();
+                    for (_, b) in cfg.blocks.iter() {
+                        bytes += 96 * b.ops.len();
+                    }
+                }
+            }
+            bytes
+        }
+        let r = &self.result;
+        let mut total = module_bytes(&r.explicit) + module_bytes(&r.implicit);
+        if !Arc::ptr_eq(&r.implicit, &r.implicit_dae) {
+            total += module_bytes(&r.implicit_dae);
+        }
+        total
     }
 
     /// A fresh memory image over the cached explicit module.

@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! bombyx compile  <file.cilk> [--dae] [--dump implicit|explicit|cilk1] [--trace-stages]
+//! bombyx serve    --socket <path> [--capacity N] [--bytes N] [--log]   # resident compile daemon
+//! bombyx client   --socket <path> <op> [file.cilk] [--id ID] [--target T]
 //! bombyx codegen  <file.cilk> [--dae] --out <dir> [--system <name>]
 //! bombyx estimate <file.cilk> [--dae]
 //! bombyx kernels  <file.cilk> [--mode implicit|explicit] [--dump]
@@ -220,6 +222,109 @@ fn cmd_trace(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `bombyx serve --socket <path>` — run the resident compile daemon
+/// until a client sends `shutdown` (see `rust/src/serve/`).
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &["socket", "capacity", "bytes", "trace", "metrics-json"])?;
+    let socket = flags
+        .options
+        .get("socket")
+        .ok_or_else(|| anyhow!("serve requires --socket <path>"))?;
+    let telemetry = Telemetry::arm(&flags, false);
+    let mut config = bombyx::serve::ServeConfig::new(socket);
+    if let Some(v) = flags.options.get("capacity") {
+        config.capacity = v.parse().context("--capacity must be an integer")?;
+    }
+    if let Some(v) = flags.options.get("bytes") {
+        config.byte_budget = v.parse().context("--bytes must be an integer")?;
+    }
+    config.log = flags.switches.contains("log");
+    let server = bombyx::serve::Server::start(config)?;
+    println!("bombyx serve: listening on {}", server.socket().display());
+    let stats = server.join()?;
+    println!(
+        "bombyx serve: shut down after {} request(s) ({} compile(s), {} warm hit(s), \
+         {} dedup hit(s), {} eviction(s), {} error(s))",
+        stats.requests,
+        stats.compiles,
+        stats.cache_hits,
+        stats.dedup_hits + stats.dedup_spliced,
+        stats.evictions,
+        stats.errors
+    );
+    telemetry.finish()
+}
+
+/// `bombyx client --socket <path> <op> [...]` — one scripted request
+/// against a running daemon; prints the response JSON.
+fn cmd_client(args: &[String]) -> Result<()> {
+    let flags = parse_flags(args, &["socket", "id", "target", "system", "jobs"])?;
+    let socket = flags
+        .options
+        .get("socket")
+        .ok_or_else(|| anyhow!("client requires --socket <path>"))?;
+    let op = flags
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("client requires an op: compile|recompile|codegen|stats|shutdown"))?;
+    let mut client = bombyx::serve::Client::connect(socket)?;
+    let read_source = |idx: usize| -> Result<(String, String)> {
+        let path = flags
+            .positional
+            .get(idx)
+            .ok_or_else(|| anyhow!("`{op}` needs a .cilk source file argument"))?;
+        let source =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let id = flags.options.get("id").cloned().unwrap_or_else(|| path.clone());
+        Ok((id, source))
+    };
+    let extend = |msg: &mut bombyx::util::json::Json| {
+        if flags.switches.contains("no-dae") {
+            msg.set("no_dae", true);
+        }
+        if flags.switches.contains("dae") {
+            msg.set("dae", true);
+        }
+        if flags.switches.contains("echo") {
+            msg.set("echo", true);
+        }
+    };
+    let resp = match op {
+        "compile" => {
+            let (id, source) = read_source(1)?;
+            client.compile_with(&id, &source, extend)?
+        }
+        "recompile" => {
+            let (id, source) = read_source(1)?;
+            client.recompile_with(&id, &source, extend)?
+        }
+        "codegen" => {
+            let target = flags.options.get("target").map(String::as_str).unwrap_or("emu");
+            let (id, source) = match read_source(1) {
+                Ok((id, source)) => (id, Some(source)),
+                Err(_) => {
+                    let id = flags
+                        .options
+                        .get("id")
+                        .cloned()
+                        .ok_or_else(|| anyhow!("codegen needs a source file or --id"))?;
+                    (id, None)
+                }
+            };
+            client.codegen(&id, target, source.as_deref())?
+        }
+        "stats" => client.stats()?,
+        "shutdown" => client.shutdown()?,
+        other => bail!("unknown client op `{other}` (compile|recompile|codegen|stats|shutdown)"),
+    };
+    println!("{}", resp.pretty());
+    if resp.get("ok") != Some(&bombyx::util::json::Json::Bool(true)) {
+        bail!("request failed");
+    }
+    Ok(())
+}
+
 fn run(args: Vec<String>) -> Result<()> {
     let Some(cmd) = args.first() else {
         print_usage();
@@ -230,6 +335,8 @@ fn run(args: Vec<String>) -> Result<()> {
         "compile" => cmd_compile(rest),
         "compile-batch" => cmd_compile_batch(rest),
         "codegen" => cmd_codegen(rest),
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
         "estimate" => cmd_estimate(rest),
         "kernels" => cmd_kernels(rest),
         "run" => cmd_run(rest),
@@ -250,6 +357,8 @@ fn print_usage() {
          USAGE:\n  \
          bombyx compile  <file.cilk> [--target rtl|hardcilk] [--dae|--no-dae] [--dump implicit|explicit|cilk1] [--trace-stages] [--timings]\n  \
          bombyx compile-batch [files|dirs...] [--jobs N] [--no-dae] [--timings]   # default corpus: examples/cilk\n  \
+         bombyx serve    --socket <path> [--capacity N] [--bytes N] [--log]   # resident compile daemon (LRU session cache)\n  \
+         bombyx client   --socket <path> compile|recompile|codegen|stats|shutdown [file.cilk] [--id ID] [--target emu|hardcilk|rtl] [--echo]\n  \
          bombyx codegen  <file.cilk> [--target rtl|hardcilk] [--dae|--no-dae] --out <dir> [--system <name>]\n  \
          bombyx estimate <file.cilk> [--dae|--no-dae]\n  \
          bombyx kernels  <file.cilk> [--mode implicit|explicit] [--dae|--no-dae] [--dump]\n  \

@@ -1,0 +1,233 @@
+//! The daemon's hot-session store: an LRU keyed by source id with an
+//! entry capacity, an approximate byte budget, and the donor lookups
+//! behind cross-source dedup.
+
+use crate::lower::{CompileOptions, CompileSession};
+
+/// One resident session.
+pub struct CacheEntry {
+    pub id: String,
+    pub session: CompileSession,
+    /// FNV-1a of the exact source text — the identical-content dedup key.
+    pub content_fp: u64,
+    /// [`CompileSession::approx_bytes`] at insert time.
+    pub bytes: usize,
+    /// LRU clock stamp (larger = more recently used).
+    last_used: u64,
+}
+
+/// LRU over [`CacheEntry`]s. Not thread-safe by itself — the server
+/// holds it behind a mutex and keeps compile work *outside* the lock.
+pub struct SessionCache {
+    entries: Vec<CacheEntry>,
+    capacity: usize,
+    byte_budget: usize,
+    clock: u64,
+    evictions: u64,
+}
+
+/// Content fingerprint of a source text (FNV-1a, same constants as the
+/// AST fingerprints in `lower/batch.rs` but over raw bytes — this keys
+/// *textual* identity, pre-parse).
+pub fn content_fp(source: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in source.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl SessionCache {
+    pub fn new(capacity: usize, byte_budget: usize) -> SessionCache {
+        SessionCache {
+            entries: Vec::new(),
+            capacity: capacity.max(1),
+            byte_budget,
+            clock: 0,
+            evictions: 0,
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Remove and return the entry for `id` compiled under `opts`. An id
+    /// cached under *different* options is left alone (it is not a warm
+    /// hit — the caller recompiles cold and the insert may then evict
+    /// it). Taking (rather than borrowing) lets the server recompile
+    /// outside the cache lock.
+    pub fn take(&mut self, id: &str, opts: &CompileOptions) -> Option<CacheEntry> {
+        let i = self
+            .entries
+            .iter()
+            .position(|e| e.id == id && e.session.options() == opts)?;
+        Some(self.entries.swap_remove(i))
+    }
+
+    /// Remove and return the entry for `id` under *any* options
+    /// (codegen serves whatever compilation the id currently holds).
+    pub fn take_any(&mut self, id: &str) -> Option<CacheEntry> {
+        let i = self.entries.iter().position(|e| e.id == id)?;
+        Some(self.entries.swap_remove(i))
+    }
+
+    /// Drop any entry for `id` regardless of options (an id being
+    /// re-registered under new options must not leave a stale twin).
+    pub fn remove(&mut self, id: &str) {
+        self.entries.retain(|e| e.id != id);
+    }
+
+    /// Donor session for seeding a *new* id compiled under `opts`:
+    /// an identical-content entry if one exists (first preference — the
+    /// seed is then a whole-compilation share), otherwise the most
+    /// recently used entry with the same options (template variants are
+    /// usually edits of whatever was just compiled). Returns
+    /// `(session, identical_content)`.
+    pub fn donor(&self, fp: u64, opts: &CompileOptions) -> Option<(&CompileSession, bool)> {
+        if let Some(e) = self
+            .entries
+            .iter()
+            .filter(|e| e.content_fp == fp && e.session.options() == opts)
+            .max_by_key(|e| e.last_used)
+        {
+            return Some((&e.session, true));
+        }
+        self.entries
+            .iter()
+            .filter(|e| e.session.options() == opts)
+            .max_by_key(|e| e.last_used)
+            .map(|e| (&e.session, false))
+    }
+
+    /// Insert (or re-admit) an entry as most-recently-used, then evict
+    /// least-recently-used entries until both the capacity and the byte
+    /// budget hold. The newest entry is never evicted, so one
+    /// over-budget session still caches. Returns how many entries were
+    /// evicted by this insert.
+    pub fn insert(&mut self, mut entry: CacheEntry) -> usize {
+        self.remove(&entry.id);
+        entry.last_used = self.tick();
+        self.entries.push(entry);
+        let mut evicted = 0usize;
+        while self.entries.len() > 1
+            && (self.entries.len() > self.capacity || self.total_bytes() > self.byte_budget)
+        {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("len > 1");
+            self.entries.swap_remove(lru);
+            evicted += 1;
+        }
+        self.evictions += evicted as u64;
+        evicted
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Total LRU evictions over the cache's lifetime.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.entries.iter().any(|e| e.id == id)
+    }
+
+    /// Entries in no particular order (for `stats`).
+    pub fn iter(&self) -> impl Iterator<Item = &CacheEntry> {
+        self.entries.iter()
+    }
+}
+
+/// Build a cache entry around a session (stamps bytes + content fp).
+pub fn entry_for(id: &str, source: &str, session: CompileSession) -> CacheEntry {
+    CacheEntry {
+        id: id.to_string(),
+        bytes: session.approx_bytes(),
+        content_fp: content_fp(source),
+        session,
+        last_used: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn session(name: &str, src: &str) -> CompileSession {
+        CompileSession::new(name, src, &CompileOptions::standard()).unwrap()
+    }
+
+    const A: &str = "int f(int n) { return n + 1; }";
+    const B: &str = "int g(int n) { return n + 2; }";
+    const C: &str = "int h(int n) { return n + 3; }";
+
+    #[test]
+    fn lru_evicts_oldest_and_counts() {
+        let mut cache = SessionCache::new(2, usize::MAX);
+        assert_eq!(cache.insert(entry_for("a", A, session("a", A))), 0);
+        assert_eq!(cache.insert(entry_for("b", B, session("b", B))), 0);
+        // Touch "a" so "b" becomes LRU.
+        let opts = CompileOptions::standard();
+        let a = cache.take("a", &opts).unwrap();
+        cache.insert(a);
+        assert_eq!(cache.insert(entry_for("c", C, session("c", C))), 1);
+        assert!(cache.contains("a") && cache.contains("c") && !cache.contains("b"));
+        assert_eq!(cache.evictions(), 1);
+    }
+
+    #[test]
+    fn byte_budget_keeps_newest() {
+        // Budget of one byte: every insert over-runs it, but the newest
+        // entry always stays resident.
+        let mut cache = SessionCache::new(8, 1);
+        cache.insert(entry_for("a", A, session("a", A)));
+        assert_eq!(cache.len(), 1);
+        cache.insert(entry_for("b", B, session("b", B)));
+        assert_eq!(cache.len(), 1);
+        assert!(cache.contains("b"));
+        assert_eq!(cache.evictions(), 1);
+    }
+
+    #[test]
+    fn take_respects_options() {
+        let mut cache = SessionCache::new(4, usize::MAX);
+        cache.insert(entry_for("a", A, session("a", A)));
+        assert!(cache.take("a", &CompileOptions::no_dae()).is_none());
+        assert!(cache.take("a", &CompileOptions::standard()).is_some());
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn donor_prefers_identical_content() {
+        let mut cache = SessionCache::new(4, usize::MAX);
+        cache.insert(entry_for("a", A, session("a", A)));
+        cache.insert(entry_for("b", B, session("b", B)));
+        let opts = CompileOptions::standard();
+        let (donor, identical) = cache.donor(content_fp(A), &opts).unwrap();
+        assert!(identical);
+        assert_eq!(donor.name(), "a");
+        // Unknown content: falls back to the MRU entry.
+        let (donor, identical) = cache.donor(content_fp(C), &opts).unwrap();
+        assert!(!identical);
+        assert_eq!(donor.name(), "b");
+        assert!(cache.donor(content_fp(A), &CompileOptions::no_dae()).is_none());
+    }
+}

@@ -1,0 +1,129 @@
+//! Client side of the serve protocol: a thin blocking wrapper used by
+//! `bombyx client`, the integration tests and `serve_bench`.
+
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::proto;
+
+/// One connection to a running daemon. Requests are synchronous:
+/// write a frame, read the matching response frame.
+pub struct Client {
+    stream: UnixStream,
+}
+
+impl Client {
+    pub fn connect(socket: impl AsRef<Path>) -> Result<Client> {
+        let socket = socket.as_ref();
+        let stream = UnixStream::connect(socket)
+            .with_context(|| format!("connecting to {}", socket.display()))?;
+        Ok(Client { stream })
+    }
+
+    /// Send a raw request object and wait for the response.
+    pub fn request(&mut self, msg: &Json) -> Result<Json> {
+        proto::write_frame(&mut self.stream, msg)?;
+        proto::read_frame(&mut self.stream)?
+            .ok_or_else(|| anyhow!("server closed the connection before responding"))
+    }
+
+    /// `compile`: register (or update) source `id`. Extra knobs ride on
+    /// `extend` — e.g. `{"echo": true}` or `{"no_dae": true}`.
+    pub fn compile(&mut self, id: &str, source: &str) -> Result<Json> {
+        self.compile_with(id, source, |_| {})
+    }
+
+    pub fn compile_with(
+        &mut self,
+        id: &str,
+        source: &str,
+        extend: impl FnOnce(&mut Json),
+    ) -> Result<Json> {
+        let mut msg = Json::object();
+        msg.set("op", "compile");
+        msg.set("id", id);
+        msg.set("source", source);
+        extend(&mut msg);
+        self.request(&msg)
+    }
+
+    /// `recompile`: an edit to a (hopefully cached) id.
+    pub fn recompile(&mut self, id: &str, source: &str) -> Result<Json> {
+        self.recompile_with(id, source, |_| {})
+    }
+
+    pub fn recompile_with(
+        &mut self,
+        id: &str,
+        source: &str,
+        extend: impl FnOnce(&mut Json),
+    ) -> Result<Json> {
+        let mut msg = Json::object();
+        msg.set("op", "recompile");
+        msg.set("id", id);
+        msg.set("source", source);
+        extend(&mut msg);
+        self.request(&msg)
+    }
+
+    /// `batch`: compile many `(id, source)` units server-side, sharded
+    /// over `jobs` workers (0 = server default).
+    pub fn batch(&mut self, items: &[(&str, &str)], jobs: usize) -> Result<Json> {
+        let rendered: Vec<Json> = items
+            .iter()
+            .map(|(id, source)| {
+                let mut item = Json::object();
+                item.set("id", *id);
+                item.set("source", *source);
+                item
+            })
+            .collect();
+        let mut msg = Json::object();
+        msg.set("op", "batch");
+        msg.set("items", Json::Array(rendered));
+        msg.set("jobs", jobs);
+        self.request(&msg)
+    }
+
+    /// `codegen` for a cached id (`source: None`) or with an inline
+    /// source to compile on miss.
+    pub fn codegen(&mut self, id: &str, target: &str, source: Option<&str>) -> Result<Json> {
+        let mut msg = Json::object();
+        msg.set("op", "codegen");
+        msg.set("id", id);
+        msg.set("target", target);
+        if let Some(source) = source {
+            msg.set("source", source);
+        }
+        self.request(&msg)
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        let mut msg = Json::object();
+        msg.set("op", "stats");
+        self.request(&msg)
+    }
+
+    /// Ask the daemon to shut down (the response arrives before the
+    /// listener stops accepting).
+    pub fn shutdown(&mut self) -> Result<Json> {
+        let mut msg = Json::object();
+        msg.set("op", "shutdown");
+        self.request(&msg)
+    }
+}
+
+/// Fail with the server-rendered error unless `resp.ok == true`.
+pub fn expect_ok(resp: &Json) -> Result<&Json> {
+    if resp.get("ok") == Some(&Json::Bool(true)) {
+        return Ok(resp);
+    }
+    match resp.get("error").and_then(Json::as_str) {
+        Some(e) => bail!("server error: {e}"),
+        None => bail!("server error: {}", resp.compact()),
+    }
+}

@@ -1,0 +1,67 @@
+//! Compile-as-a-service: the resident `bombyx serve` daemon.
+//!
+//! Every CLI invocation pays cold parse/sema/lowering; the daemon doesn't.
+//! It holds hot [`CompileSession`]s keyed by client-chosen source id in an
+//! LRU ([`cache::SessionCache`] — configurable entry capacity and byte
+//! budget, evictions counted), and serves concurrent clients over a
+//! unix-domain socket with a 4-byte big-endian length-prefixed JSON
+//! protocol ([`proto`]). Warm paths stack:
+//!
+//! - an **edit to a cached id** routes to [`CompileSession::recompile`] —
+//!   function-granular incremental splicing, full pipeline only on
+//!   structural change;
+//! - a **new id with known content** (identical template source) shares
+//!   the donor's compilation wholesale via
+//!   [`CompileSession::new_seeded`] (`Arc` bumps, zero pass work);
+//! - a **new id near a cached source** (template variant, same options)
+//!   re-lowers only the differing functions against the most recently
+//!   used donor;
+//! - **batched requests** shard over [`crate::util::parallel::shard_map`].
+//!
+//! Requests: `compile`, `recompile`, `codegen` (`--target
+//! emu|hardcilk|rtl`), `batch`, `stats`, `shutdown`. Every request gets a
+//! `serve`-category span, `serve.*` counters/histograms through
+//! [`crate::obs`], and (with logging on) a one-line compact-JSON record —
+//! see `rust/src/obs/README.md` for the schema. Shutdown drains in-flight
+//! requests before the listener thread exits.
+//!
+//! [`CompileSession`]: crate::lower::CompileSession
+//! [`CompileSession::recompile`]: crate::lower::CompileSession::recompile
+//! [`CompileSession::new_seeded`]: crate::lower::CompileSession::new_seeded
+
+pub mod cache;
+pub mod client;
+pub mod proto;
+pub mod server;
+
+use std::path::PathBuf;
+
+pub use cache::SessionCache;
+pub use client::{expect_ok, Client};
+pub use server::{Server, ServeStatsSnapshot};
+
+/// Daemon configuration (the CLI's `serve` flags map 1:1 onto this).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Unix-domain socket path. A stale file at this path is replaced.
+    pub socket: PathBuf,
+    /// Max resident sessions before LRU eviction.
+    pub capacity: usize,
+    /// Approximate byte budget across resident sessions
+    /// ([`crate::lower::CompileSession::approx_bytes`]); the LRU evicts
+    /// past it, but always keeps at least the most recent entry.
+    pub byte_budget: usize,
+    /// Emit a one-line compact-JSON record per request on stdout.
+    pub log: bool,
+}
+
+impl ServeConfig {
+    pub fn new(socket: impl Into<PathBuf>) -> ServeConfig {
+        ServeConfig {
+            socket: socket.into(),
+            capacity: 64,
+            byte_budget: 64 * 1024 * 1024,
+            log: false,
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Length-prefixed JSON framing over a byte stream.
+//!
+//! One frame = a 4-byte big-endian payload length followed by that many
+//! bytes of compact (single-line) JSON. Both sides of the socket speak
+//! the same frames; requests and responses are plain [`Json`] objects.
+
+use std::io::{ErrorKind, Read, Write};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Upper bound on one frame (16 MiB) — a corrupt length prefix must not
+/// allocate unbounded memory.
+pub const MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+/// Write one frame.
+pub fn write_frame(stream: &mut impl Write, msg: &Json) -> Result<()> {
+    let payload = msg.compact();
+    let bytes = payload.as_bytes();
+    if bytes.len() as u64 > MAX_FRAME as u64 {
+        bail!("frame too large: {} bytes (cap {MAX_FRAME})", bytes.len());
+    }
+    stream.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    stream.write_all(bytes)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one frame, blocking until it arrives. `Ok(None)` on a clean EOF
+/// before the first length byte (the peer closed between frames).
+pub fn read_frame(stream: &mut impl Read) -> Result<Option<Json>> {
+    read_frame_poll(stream, || true)
+}
+
+/// Read one frame from a stream that may have a read timeout armed.
+///
+/// Idle timeouts *between* frames consult `keep_waiting`: while it
+/// returns true the read retries, otherwise `Ok(None)`. This is how the
+/// daemon's connection handlers notice a shutdown without dropping a
+/// request that is mid-frame — once the first byte of a frame has
+/// arrived, timeouts always retry, so an in-flight request is fully
+/// drained before the handler exits.
+pub fn read_frame_poll(
+    stream: &mut impl Read,
+    mut keep_waiting: impl FnMut() -> bool,
+) -> Result<Option<Json>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match stream.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                bail!("connection closed mid-frame ({got} of 4 length bytes)");
+            }
+            Ok(n) => got += n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if got == 0 && !keep_waiting() {
+                    return Ok(None);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_be_bytes(len_buf);
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds the {MAX_FRAME}-byte cap");
+    }
+    let mut payload = vec![0u8; len as usize];
+    let mut got = 0usize;
+    while got < payload.len() {
+        match stream.read(&mut payload[got..]) {
+            Ok(0) => bail!("connection closed mid-frame ({got} of {len} payload bytes)"),
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let text = String::from_utf8(payload).context("frame payload is not UTF-8")?;
+    let msg = json::parse(&text).map_err(|e| anyhow!("bad frame JSON: {e}"))?;
+    Ok(Some(msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut req = Json::object();
+        req.set("op", "compile");
+        req.set("id", "fib");
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &req).unwrap();
+        // 4-byte BE length prefix over the compact payload.
+        let len = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+        assert_eq!(len, buf.len() - 4);
+        let mut cursor = std::io::Cursor::new(buf);
+        let back = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(back, req);
+        // A second read hits clean EOF.
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected() {
+        let mut buf = (MAX_FRAME + 1).to_be_bytes().to_vec();
+        buf.extend_from_slice(b"xxxx");
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &Json::Str("hello".into())).unwrap();
+        buf.truncate(buf.len() - 2);
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+}

@@ -1,0 +1,590 @@
+//! The daemon: accept loop, per-connection handlers, request dispatch.
+//!
+//! Locking discipline: the session cache mutex is held only for lookups
+//! and inserts — all parse/lower/recompile work runs outside it, so
+//! concurrent clients compile in parallel and only serialize on the
+//! (cheap) cache bookkeeping.
+
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ir::explicit::explicit_tasks;
+use crate::ir::print::print_module;
+use crate::lower::{CompileOptions, CompileSession, RecompileMode, SessionSeed};
+use crate::obs;
+use crate::util::json::Json;
+use crate::util::parallel;
+
+use super::cache::{self, CacheEntry, SessionCache};
+use super::{proto, ServeConfig};
+
+/// How often an idle connection handler re-checks the shutdown flag.
+const POLL_INTERVAL: Duration = Duration::from_millis(100);
+
+#[derive(Default)]
+struct Stats {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    compiles: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    dedup_hits: AtomicU64,
+    dedup_spliced: AtomicU64,
+}
+
+/// Point-in-time copy of the daemon's counters (the `stats` op renders
+/// the same numbers over the wire).
+#[derive(Clone, Debug, Default)]
+pub struct ServeStatsSnapshot {
+    pub requests: u64,
+    pub errors: u64,
+    /// Compile units processed (single requests + batch items).
+    pub compiles: u64,
+    /// Warm hits: an edit routed to a cached session's `recompile`.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Identical-content misses served by sharing a donor compilation.
+    pub dedup_hits: u64,
+    /// Near-identical misses served by splicing against a donor.
+    pub dedup_spliced: u64,
+    /// LRU evictions over the daemon's lifetime.
+    pub evictions: u64,
+    pub sessions: usize,
+    pub bytes: usize,
+}
+
+struct Inner {
+    config: ServeConfig,
+    listener: UnixListener,
+    shutting_down: AtomicBool,
+    cache: Mutex<SessionCache>,
+    stats: Stats,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Inner {
+    fn begin_shutdown(&self) {
+        if self.shutting_down.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // The accept loop is blocked in `incoming()`; a throwaway
+        // connection wakes it so it can observe the flag.
+        let _ = UnixStream::connect(&self.config.socket);
+    }
+
+    fn snapshot(&self) -> ServeStatsSnapshot {
+        let cache = self.cache.lock().expect("cache mutex");
+        ServeStatsSnapshot {
+            requests: self.stats.requests.load(Ordering::Relaxed),
+            errors: self.stats.errors.load(Ordering::Relaxed),
+            compiles: self.stats.compiles.load(Ordering::Relaxed),
+            cache_hits: self.stats.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.stats.cache_misses.load(Ordering::Relaxed),
+            dedup_hits: self.stats.dedup_hits.load(Ordering::Relaxed),
+            dedup_spliced: self.stats.dedup_spliced.load(Ordering::Relaxed),
+            evictions: cache.evictions(),
+            sessions: cache.len(),
+            bytes: cache.total_bytes(),
+        }
+    }
+}
+
+/// A running daemon. Dropping the handle does NOT stop it — call
+/// [`Server::shutdown`] (or send the `shutdown` op) and then
+/// [`Server::join`].
+pub struct Server {
+    inner: Arc<Inner>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind the socket (replacing a stale file) and start serving.
+    pub fn start(config: ServeConfig) -> Result<Server> {
+        if config.socket.exists() {
+            std::fs::remove_file(&config.socket)
+                .with_context(|| format!("removing stale socket {}", config.socket.display()))?;
+        }
+        let listener = UnixListener::bind(&config.socket)
+            .with_context(|| format!("binding {}", config.socket.display()))?;
+        let cache = SessionCache::new(config.capacity, config.byte_budget);
+        let inner = Arc::new(Inner {
+            config,
+            listener,
+            shutting_down: AtomicBool::new(false),
+            cache: Mutex::new(cache),
+            stats: Stats::default(),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept_inner = Arc::clone(&inner);
+        let accept = thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || accept_loop(accept_inner))
+            .context("spawning the accept thread")?;
+        Ok(Server { inner, accept: Some(accept) })
+    }
+
+    pub fn socket(&self) -> &Path {
+        &self.inner.config.socket
+    }
+
+    /// In-process stats (benches read these without a socket roundtrip).
+    pub fn stats(&self) -> ServeStatsSnapshot {
+        self.inner.snapshot()
+    }
+
+    /// Trigger shutdown locally (equivalent to a client `shutdown` op).
+    pub fn shutdown(&self) {
+        self.inner.begin_shutdown();
+    }
+
+    /// Block until shutdown is triggered, drain every connection handler
+    /// (in-flight requests complete and get their responses), then
+    /// remove the socket file.
+    pub fn join(mut self) -> Result<ServeStatsSnapshot> {
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| anyhow!("the accept thread panicked"))?;
+        }
+        let handles = std::mem::take(&mut *self.inner.conns.lock().expect("conns mutex"));
+        for h in handles {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(&self.inner.config.socket);
+        Ok(self.inner.snapshot())
+    }
+}
+
+fn accept_loop(inner: Arc<Inner>) {
+    for stream in inner.listener.incoming() {
+        if inner.shutting_down.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
+        let conn_inner = Arc::clone(&inner);
+        let spawned = thread::Builder::new()
+            .name("serve-conn".into())
+            .spawn(move || handle_conn(conn_inner, stream));
+        if let Ok(handle) = spawned {
+            let mut conns = inner.conns.lock().expect("conns mutex");
+            conns.retain(|h| !h.is_finished());
+            conns.push(handle);
+        }
+    }
+}
+
+fn handle_conn(inner: Arc<Inner>, mut stream: UnixStream) {
+    loop {
+        let req = match proto::read_frame_poll(&mut stream, || {
+            !inner.shutting_down.load(Ordering::SeqCst)
+        }) {
+            Ok(Some(req)) => req,
+            // Clean EOF, or shutdown observed while idle between frames.
+            Ok(None) => break,
+            // Protocol corruption is per-connection: drop it, the daemon
+            // (and every other client) keeps running.
+            Err(_) => break,
+        };
+        let (resp, shutdown) = dispatch(&inner, &req);
+        if proto::write_frame(&mut stream, &resp).is_err() {
+            break;
+        }
+        if shutdown {
+            inner.begin_shutdown();
+            break;
+        }
+    }
+}
+
+fn str_field<'a>(msg: &'a Json, key: &str) -> Result<&'a str> {
+    msg.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("request is missing string field `{key}`"))
+}
+
+fn truthy(msg: &Json, key: &str) -> bool {
+    matches!(msg.get(key), Some(Json::Bool(true)))
+}
+
+/// Same option resolution as the CLI's `load_session`: DAE on via the
+/// `dae` flag or a `#pragma bombyx dae` in the source; `no_dae` wins.
+fn options_for(msg: &Json, source: &str) -> CompileOptions {
+    let has_pragma = source
+        .lines()
+        .any(|l| l.split("//").next().unwrap_or("").contains("#pragma bombyx dae"));
+    let dae = !truthy(msg, "no_dae") && (truthy(msg, "dae") || has_pragma);
+    if dae {
+        CompileOptions::standard()
+    } else {
+        CompileOptions::no_dae()
+    }
+}
+
+fn dispatch(inner: &Inner, req: &Json) -> (Json, bool) {
+    let t0 = Instant::now();
+    let op = req.get("op").and_then(Json::as_str).unwrap_or("").to_string();
+    let id = req.get("id").and_then(Json::as_str).unwrap_or("-").to_string();
+    let _span = obs::Span::enter(format!("serve {op} {id}"), "serve");
+    inner.stats.requests.fetch_add(1, Ordering::Relaxed);
+    obs::metrics::counter_add("serve.requests", 1);
+    let op_key = if op.is_empty() { "unknown" } else { op.as_str() };
+    obs::metrics::counter_add(&format!("serve.requests.{op_key}"), 1);
+    let result: Result<(Json, bool)> = match op.as_str() {
+        "compile" | "recompile" => op_compile(inner, &op, req).map(|r| (r, false)),
+        "batch" => op_batch(inner, req).map(|r| (r, false)),
+        "codegen" => op_codegen(inner, req).map(|r| (r, false)),
+        "stats" => op_stats(inner).map(|r| (r, false)),
+        "shutdown" => {
+            let mut resp = Json::object();
+            resp.set("ok", true);
+            Ok((resp, true))
+        }
+        other => Err(anyhow!("unknown op `{other}`")),
+    };
+    let (mut resp, shutdown) = match result {
+        Ok(v) => v,
+        Err(e) => {
+            inner.stats.errors.fetch_add(1, Ordering::Relaxed);
+            obs::metrics::counter_add("serve.errors", 1);
+            let mut r = Json::object();
+            r.set("ok", false);
+            r.set("error", format!("{e:#}"));
+            (r, false)
+        }
+    };
+    let elapsed = t0.elapsed();
+    obs::metrics::observe_ms("serve.request_ms", elapsed);
+    obs::metrics::observe_ms(&format!("serve.request_ms.{op_key}"), elapsed);
+    resp.set("ms", elapsed.as_secs_f64() * 1e3);
+    // Compile-shaped ops log per compile unit (in `compile_prepared`);
+    // everything else gets its line here.
+    if !matches!(op.as_str(), "compile" | "recompile" | "batch") {
+        let ok = resp.get("ok") == Some(&Json::Bool(true));
+        log_record(inner, op_key, &id, ok, "-", elapsed);
+    }
+    (resp, shutdown)
+}
+
+fn log_record(inner: &Inner, op: &str, id: &str, ok: bool, mode: &str, d: Duration) {
+    if !inner.config.log {
+        return;
+    }
+    let mut rec = Json::object();
+    rec.set("event", "serve.request");
+    rec.set("op", op);
+    rec.set("id", id);
+    rec.set("ok", ok);
+    rec.set("mode", mode);
+    rec.set("ms", d.as_secs_f64() * 1e3);
+    println!("{}", rec.compact());
+}
+
+/// A compile unit with its cache context resolved (under one short
+/// lock), ready to run lock-free.
+struct Prepared {
+    op: String,
+    id: String,
+    source: String,
+    opts: CompileOptions,
+    echo: bool,
+    /// The id's resident session, removed from the cache for the warm
+    /// `recompile` path.
+    cached: Option<CacheEntry>,
+    /// Dedup donor for the miss path (a cheap shared clone; the
+    /// original stays resident).
+    donor: Option<CompileSession>,
+}
+
+fn prepare(inner: &Inner, op: &str, msg: &Json, id: &str, source: &str) -> Prepared {
+    let opts = options_for(msg, source);
+    let mut cache = inner.cache.lock().expect("cache mutex");
+    let cached = cache.take(id, &opts);
+    let donor = if cached.is_none() {
+        cache
+            .donor(cache::content_fp(source), &opts)
+            .map(|(donor, _identical)| donor.clone_shared(id))
+    } else {
+        None
+    };
+    Prepared {
+        op: op.to_string(),
+        id: id.to_string(),
+        source: source.to_string(),
+        opts,
+        echo: truthy(msg, "echo"),
+        cached,
+        donor,
+    }
+}
+
+/// Run one compile unit. Returns the entry to (re)insert — `None` only
+/// when there is nothing valid to cache — plus the response object.
+fn compile_prepared(inner: &Inner, mut p: Prepared) -> (Option<CacheEntry>, Json) {
+    let t0 = Instant::now();
+    inner.stats.compiles.fetch_add(1, Ordering::Relaxed);
+    obs::metrics::counter_add("serve.compiles", 1);
+    let mut resp = Json::object();
+    resp.set("id", p.id.as_str());
+
+    let outcome: Result<(CacheEntry, &'static str, Vec<String>, bool)> =
+        if let Some(mut entry) = p.cached.take() {
+            match entry.session.recompile(&p.source) {
+                Ok(out) => {
+                    let mode = match out.mode {
+                        RecompileMode::Unchanged => "unchanged",
+                        RecompileMode::Incremental => "incremental",
+                        RecompileMode::Full => "full",
+                    };
+                    entry.content_fp = cache::content_fp(&p.source);
+                    entry.bytes = entry.session.approx_bytes();
+                    Ok((entry, mode, out.dirty, true))
+                }
+                Err(e) => {
+                    // `recompile` fails before installing anything, so
+                    // the cached compilation is still the last good one
+                    // — keep it warm instead of punishing the id.
+                    p.cached = Some(entry);
+                    Err(e)
+                }
+            }
+        } else {
+            match CompileSession::new_seeded(&p.id, &p.source, &p.opts, p.donor.as_ref()) {
+                Ok((session, seed)) => {
+                    let (mode, dirty) = match seed {
+                        SessionSeed::Identical => ("identical", Vec::new()),
+                        SessionSeed::Spliced { dirty } => ("spliced", dirty),
+                        SessionSeed::Cold => ("cold", Vec::new()),
+                    };
+                    Ok((cache::entry_for(&p.id, &p.source, session), mode, dirty, false))
+                }
+                Err(e) => Err(e),
+            }
+        };
+
+    match outcome {
+        Ok((entry, mode, dirty, warm)) => {
+            if warm {
+                inner.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                obs::metrics::counter_add("serve.cache_hits", 1);
+            } else {
+                inner.stats.cache_misses.fetch_add(1, Ordering::Relaxed);
+                obs::metrics::counter_add("serve.cache_misses", 1);
+                match mode {
+                    "identical" => {
+                        inner.stats.dedup_hits.fetch_add(1, Ordering::Relaxed);
+                        obs::metrics::counter_add("serve.dedup_hits", 1);
+                    }
+                    "spliced" => {
+                        inner.stats.dedup_spliced.fetch_add(1, Ordering::Relaxed);
+                        obs::metrics::counter_add("serve.dedup_spliced", 1);
+                    }
+                    _ => {}
+                }
+            }
+            resp.set("ok", true);
+            resp.set("mode", mode);
+            resp.set("warm", warm);
+            resp.set(
+                "dirty",
+                Json::Array(dirty.iter().map(|d| Json::from(d.as_str())).collect()),
+            );
+            resp.set("tasks", explicit_tasks(entry.session.explicit()).len());
+            if p.echo {
+                resp.set("ir", print_module(entry.session.explicit()));
+            }
+            let elapsed = t0.elapsed();
+            obs::metrics::observe_ms("serve.compile_ms", elapsed);
+            resp.set("compile_ms", elapsed.as_secs_f64() * 1e3);
+            log_record(inner, &p.op, &p.id, true, mode, elapsed);
+            (Some(entry), resp)
+        }
+        Err(e) => {
+            inner.stats.errors.fetch_add(1, Ordering::Relaxed);
+            obs::metrics::counter_add("serve.errors", 1);
+            resp.set("ok", false);
+            resp.set("error", format!("{e:#}"));
+            log_record(inner, &p.op, &p.id, false, "error", t0.elapsed());
+            (p.cached, resp)
+        }
+    }
+}
+
+fn op_compile(inner: &Inner, op: &str, req: &Json) -> Result<Json> {
+    let id = str_field(req, "id")?;
+    let source = str_field(req, "source")?;
+    let p = prepare(inner, op, req, id, source);
+    let (entry, mut resp) = compile_prepared(inner, p);
+    let evicted = match entry {
+        Some(entry) => inner.cache.lock().expect("cache mutex").insert(entry),
+        None => 0,
+    };
+    obs::metrics::counter_add("serve.evictions", evicted as u64);
+    resp.set("evicted", evicted);
+    Ok(resp)
+}
+
+fn op_batch(inner: &Inner, req: &Json) -> Result<Json> {
+    let items = req
+        .get("items")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("batch request needs an `items` array"))?;
+    if items.is_empty() {
+        let mut resp = Json::object();
+        resp.set("ok", true);
+        resp.set("results", Json::Array(Vec::new()));
+        resp.set("jobs", 0usize);
+        return Ok(resp);
+    }
+    let jobs = req.get("jobs").and_then(Json::as_i64).unwrap_or(0).max(0) as usize;
+    // Resolve cache context sequentially (short locks), then shard the
+    // actual compile work. Each slot is consumed exactly once.
+    let mut prepared: Vec<Mutex<Option<Prepared>>> = Vec::with_capacity(items.len());
+    for item in items {
+        let id = str_field(item, "id")?;
+        let source = str_field(item, "source")?;
+        prepared.push(Mutex::new(Some(prepare(inner, "batch", item, id, source))));
+    }
+    let workers = if jobs == 0 {
+        parallel::default_workers(prepared.len())
+    } else {
+        jobs.min(prepared.len().max(1))
+    };
+    let results = parallel::shard_map(&prepared, workers, |slot| {
+        let p = slot.lock().expect("slot mutex").take().expect("each slot taken once");
+        compile_prepared(inner, p)
+    });
+    let mut evicted = 0usize;
+    let mut rendered = Vec::with_capacity(results.len());
+    {
+        let mut cache = inner.cache.lock().expect("cache mutex");
+        for (entry, item_resp) in results {
+            if let Some(entry) = entry {
+                evicted += cache.insert(entry);
+            }
+            rendered.push(item_resp);
+        }
+    }
+    obs::metrics::counter_add("serve.evictions", evicted as u64);
+    let mut resp = Json::object();
+    resp.set("ok", true);
+    resp.set("results", Json::Array(rendered));
+    resp.set("jobs", workers);
+    resp.set("evicted", evicted);
+    Ok(resp)
+}
+
+fn op_codegen(inner: &Inner, req: &Json) -> Result<Json> {
+    let id = str_field(req, "id")?;
+    let target = req.get("target").and_then(Json::as_str).unwrap_or("emu");
+    let system = req.get("system").and_then(Json::as_str).unwrap_or("bombyx_system");
+    let dump = truthy(req, "dump");
+    let cached = inner.cache.lock().expect("cache mutex").take_any(id);
+    let mut entry = match cached {
+        Some(entry) => {
+            inner.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            obs::metrics::counter_add("serve.cache_hits", 1);
+            entry
+        }
+        None => {
+            let source = str_field(req, "source")
+                .context("codegen for an uncached id needs `source`")?;
+            let p = prepare(inner, "codegen", req, id, source);
+            let (entry, resp) = compile_prepared(inner, p);
+            match entry {
+                Some(entry) => entry,
+                // Compile failed; the structured error is in `resp`.
+                None => return Ok(resp),
+            }
+        }
+    };
+    let rendered = render_codegen(&mut entry.session, id, target, system, dump);
+    // Reinsert before surfacing any codegen error: a bad target name
+    // must not evict a perfectly good session.
+    entry.bytes = entry.session.approx_bytes();
+    let evicted = inner.cache.lock().expect("cache mutex").insert(entry);
+    obs::metrics::counter_add("serve.evictions", evicted as u64);
+    rendered
+}
+
+fn render_codegen(
+    session: &mut CompileSession,
+    id: &str,
+    target: &str,
+    system: &str,
+    dump: bool,
+) -> Result<Json> {
+    let mut resp = Json::object();
+    resp.set("ok", true);
+    resp.set("id", id);
+    resp.set("target", target);
+    match target {
+        "emu" => {
+            let prog = session.emu_program();
+            resp.set(
+                "entries",
+                Json::Array(prog.entries.iter().map(|e| Json::from(e.as_str())).collect()),
+            );
+        }
+        "hardcilk" => {
+            let sys = session.hardcilk_system(system)?;
+            resp.set("pes", sys.pes.len());
+            resp.set("loc", sys.total_loc());
+            if dump {
+                resp.set("descriptor", sys.descriptor.clone());
+            }
+        }
+        "rtl" => {
+            let sys = session.rtl_system(system)?;
+            resp.set("pes", sys.pes.len());
+            resp.set("loc", sys.total_loc());
+            if dump {
+                resp.set("verilog", sys.concatenated());
+            }
+        }
+        other => bail!("unknown codegen target `{other}` (expected emu|hardcilk|rtl)"),
+    }
+    Ok(resp)
+}
+
+fn op_stats(inner: &Inner) -> Result<Json> {
+    let snap = inner.snapshot();
+    let mut resp = Json::object();
+    resp.set("ok", true);
+    resp.set("sessions", snap.sessions);
+    resp.set("bytes", snap.bytes);
+    resp.set("capacity", inner.config.capacity);
+    resp.set("byte_budget", inner.config.byte_budget);
+    resp.set("requests", snap.requests as i64);
+    resp.set("compiles", snap.compiles as i64);
+    resp.set("errors", snap.errors as i64);
+    resp.set("cache_hits", snap.cache_hits as i64);
+    resp.set("cache_misses", snap.cache_misses as i64);
+    resp.set("dedup_hits", snap.dedup_hits as i64);
+    resp.set("dedup_spliced", snap.dedup_spliced as i64);
+    resp.set("evictions", snap.evictions as i64);
+    let entries: Vec<Json> = {
+        let cache = inner.cache.lock().expect("cache mutex");
+        cache
+            .iter()
+            .map(|e| {
+                let mut row = Json::object();
+                row.set("id", e.id.as_str());
+                row.set("bytes", e.bytes);
+                if let Some(fp) = e.session.structure_fp() {
+                    row.set("structure_fp", format!("{fp:016x}"));
+                }
+                row
+            })
+            .collect()
+    };
+    resp.set("entries", Json::Array(entries));
+    Ok(resp)
+}

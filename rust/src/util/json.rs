@@ -73,6 +73,44 @@ impl Json {
         out
     }
 
+    /// Single-line serialization with no whitespace — for wire protocols
+    /// and one-record-per-line logs (the serve daemon's framing and
+    /// request log). Parses back to the same value as [`Json::pretty`].
+    pub fn compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Array(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Object(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+            // Scalars serialize identically in both modes.
+            other => other.write(out, 0),
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -374,6 +412,19 @@ mod tests {
         let text = doc.pretty();
         let back = parse(&text).unwrap();
         assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn compact_is_one_line_and_roundtrips() {
+        let mut doc = Json::object();
+        doc.set("a", Json::Array(vec![Json::Int(1), Json::Str("x\ny".into())]));
+        doc.set("b", true);
+        doc.set("empty", Json::object());
+        let text = doc.compact();
+        assert!(!text.contains('\n'), "compact output must be one line: {text}");
+        assert!(!text.contains(": "), "no pretty separators: {text}");
+        assert_eq!(parse(&text).unwrap(), doc);
+        assert_eq!(parse(&doc.pretty()).unwrap(), parse(&text).unwrap());
     }
 
     #[test]

@@ -155,6 +155,96 @@ fn incremental_splice_matches_cold_compile_for_dae_program() {
     assert_matches_cold(&session, "bfs_dae", &edited, &opts);
 }
 
+/// Two spawning tasks over two pre-declared globals. The tests insert
+/// `#pragma bombyx dae` lines with [`with_dae`], so the set of access
+/// functions the module needs changes between revisions while the
+/// structural fingerprint (globals + signatures) stays put.
+const TWO_GLOBALS: &str = "\
+global int xs[];
+global int ys[];
+
+void scan_x(int n) {
+    int v = xs[n];
+    if (v > 0) {
+        cilk_spawn scan_x(n - 1);
+    }
+    cilk_sync;
+}
+void scan_y(int n) {
+    int v = ys[n];
+    if (v > 0) {
+        cilk_spawn scan_y(n - 1);
+    }
+    cilk_sync;
+}
+void run(int n) {
+    cilk_spawn scan_x(n);
+    cilk_spawn scan_y(n);
+    cilk_sync;
+}
+";
+
+/// Annotate the (unique) statement `load` with the DAE pragma.
+fn with_dae(src: &str, load: &str) -> String {
+    let out = src.replace(load, &format!("#pragma bombyx dae\n    {load}"));
+    assert_ne!(out, src, "load statement `{load}` not found");
+    out
+}
+
+#[test]
+fn edit_adding_first_dae_load_of_new_global_splices_incrementally() {
+    // The edit makes dirty `scan_y` carry the module's first DAE load of
+    // `ys`: a cold compile appends a brand-new `ys_access` function, so
+    // the access-func id space grows. This used to force a full
+    // recompile; the id-remapping splice must keep it incremental.
+    let opts = CompileOptions::standard();
+    let base = with_dae(TWO_GLOBALS, "int v = xs[n];");
+    let mut session = CompileSession::new("two_globals", &base, &opts).unwrap();
+    let edited = with_dae(&base, "int v = ys[n];");
+    let cold_work = pass_work(CompileSession::new("two_globals", &edited, &opts).unwrap().timings());
+    let outcome = session.recompile(&edited).unwrap();
+    assert_eq!(outcome.mode, RecompileMode::Incremental);
+    assert_eq!(outcome.dirty, vec!["scan_y".to_string()]);
+    let incr_work = pass_work(&outcome.timings);
+    assert!(
+        incr_work < cold_work,
+        "incremental work {incr_work} must be below cold work {cold_work}"
+    );
+    assert_matches_cold(&session, "two_globals", &edited, &opts);
+}
+
+#[test]
+fn edit_removing_last_dae_load_splices_incrementally() {
+    // Dropping the only pragma empties the needed access-func set: the
+    // cached post-DAE module has an access function a cold compile of
+    // the edited source would not, so the stale id (and its partition
+    // entry) must disappear without a full recompile.
+    let opts = CompileOptions::standard();
+    let base = with_dae(TWO_GLOBALS, "int v = xs[n];");
+    let mut session = CompileSession::new("two_globals", &base, &opts).unwrap();
+    let outcome = session.recompile(TWO_GLOBALS).unwrap();
+    assert_eq!(outcome.mode, RecompileMode::Incremental);
+    assert_eq!(outcome.dirty, vec!["scan_x".to_string()]);
+    assert_matches_cold(&session, "two_globals", TWO_GLOBALS, &opts);
+}
+
+#[test]
+fn clean_function_access_calls_are_remapped_when_ids_shift() {
+    // Base has DAE only on `ys`, so `ys_access` sits at the first
+    // post-source id. The edit adds a DAE load of `xs` in `scan_x`;
+    // cold creation order puts `xs_access` first, shifting `ys_access`
+    // up by one — and *clean* `scan_y` still spawns it, so its call
+    // sites must be remapped to the new id.
+    let opts = CompileOptions::standard();
+    let base = with_dae(TWO_GLOBALS, "int v = ys[n];");
+    let mut session = CompileSession::new("two_globals", &base, &opts).unwrap();
+    let edited = with_dae(&base, "int v = xs[n];");
+    let outcome = session.recompile(&edited).unwrap();
+    assert_eq!(outcome.mode, RecompileMode::Incremental);
+    assert_eq!(outcome.dirty, vec!["scan_x".to_string()]);
+    assert_matches_cold(&session, "two_globals", &edited, &opts);
+}
+
 #[test]
 fn task_structure_edit_still_matches_cold_compile() {
     // Adding a sync changes `work`'s path partition (more continuation

@@ -36,7 +36,7 @@ fn num(v: &Json) -> f64 {
 /// `exec_frame` by text so an instrumented hot loop fails CI.
 #[test]
 fn retired_fast_path_has_no_telemetry() {
-    let src = concat!(env!("CARGO_MANIFEST_DIR"), "/src/exec/kernel.rs");
+    let src = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/src/exec/kernel.rs");
     let text = std::fs::read_to_string(src).expect("read kernel.rs");
     let begin = text
         .find("RETIRED_FAST_PATH_BEGIN")

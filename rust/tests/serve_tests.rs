@@ -1,0 +1,371 @@
+//! Integration tests for the `bombyx serve` daemon: concurrent clients
+//! over the unix-socket protocol, LRU eviction + cold re-admission,
+//! per-request error isolation, clean shutdown with connection drain,
+//! cross-source dedup, and telemetry (serve spans + `serve.*` metrics).
+//!
+//! Every test runs its own in-process [`Server`] on a unique socket
+//! under the temp dir, so tests parallelize freely; only the telemetry
+//! test touches the process-global obs state (serialized on
+//! [`OBS_LOCK`], same discipline as `obs_tests.rs`).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::thread;
+
+use bombyx::ir::print::print_module;
+use bombyx::lower::{CompileOptions, CompileSession};
+use bombyx::obs;
+use bombyx::serve::{Client, ServeConfig, Server};
+use bombyx::util::json::{self, Json};
+use bombyx::workloads::{bfs, fib, nqueens, qsort};
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+static SOCK_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Unique socket path per test (unix socket paths are length-limited,
+/// so keep it short and under the temp dir).
+fn sock(tag: &str) -> PathBuf {
+    let seq = SOCK_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("bx-{}-{seq}-{tag}.sock", std::process::id()))
+}
+
+fn start(tag: &str, tweak: impl FnOnce(&mut ServeConfig)) -> Server {
+    let mut config = ServeConfig::new(sock(tag));
+    tweak(&mut config);
+    Server::start(config).expect("server starts")
+}
+
+fn is_ok(resp: &Json) -> bool {
+    resp.get("ok") == Some(&Json::Bool(true))
+}
+
+/// The explicit IR a cold CLI compile of `source` would print, under the
+/// same option resolution the daemon applies (DAE iff the source carries
+/// the pragma — none of these tests pass `dae`/`no_dae` flags).
+fn cold_ir(name: &str, source: &str) -> String {
+    let opts = if source.contains("#pragma bombyx dae") {
+        CompileOptions::standard()
+    } else {
+        CompileOptions::no_dae()
+    };
+    let session = CompileSession::new(name, source, &opts).expect("cold compile");
+    print_module(session.explicit())
+}
+
+/// A structurally unique little program per tag (distinct function
+/// names defeat both dedup tiers, forcing genuinely cold compiles).
+fn leaf_src(tag: &str) -> String {
+    format!("int f_{tag}(int n) {{ return n + {}; }}\n", tag.len())
+}
+
+// ---------------------------------------------------------------------------
+// Concurrency
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_clients_compile_mixed_sources() {
+    let server = start("conc", |_| {});
+    let socket = server.socket().to_path_buf();
+    let corpus: Vec<(&str, &str)> = vec![
+        ("fib", fib::FIB_SRC),
+        ("bfs_dae", bfs::BFS_DAE_SRC),
+        ("nqueens", nqueens::NQUEENS_SRC),
+        ("qsort", qsort::QSORT_SRC),
+    ];
+    let mut threads = Vec::new();
+    for (name, src) in corpus {
+        let socket = socket.clone();
+        threads.push(thread::spawn(move || {
+            let mut client = Client::connect(&socket).expect("connect");
+            // Cold compile with IR echo: must match a cold CLI compile.
+            let resp = client
+                .compile_with(name, src, |m| {
+                    m.set("echo", true);
+                })
+                .expect("compile");
+            assert!(is_ok(&resp), "{name}: {}", resp.compact());
+            assert_eq!(resp.get("warm"), Some(&Json::Bool(false)), "{name}");
+            assert_eq!(
+                resp.get("ir").and_then(Json::as_str),
+                Some(cold_ir(name, src).as_str()),
+                "{name}: daemon IR diverged from cold compile"
+            );
+            // A content-only touch routes to the warm session.
+            let touched = format!("{src}\n// touched\n");
+            let resp = client.recompile(name, &touched).expect("recompile");
+            assert!(is_ok(&resp), "{name}: {}", resp.compact());
+            assert_eq!(resp.get("warm"), Some(&Json::Bool(true)), "{name}");
+            assert_eq!(resp.get("mode").and_then(Json::as_str), Some("unchanged"), "{name}");
+        }));
+    }
+    for t in threads {
+        t.join().expect("client thread");
+    }
+    let snap = server.stats();
+    assert_eq!(snap.requests, 8);
+    assert_eq!(snap.cache_hits, 4);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.sessions, 4);
+    server.shutdown();
+    server.join().expect("join");
+}
+
+#[test]
+fn batch_shards_and_preserves_item_order() {
+    let server = start("batch", |_| {});
+    let mut client = Client::connect(server.socket()).expect("connect");
+    let sources: Vec<(String, String)> =
+        (0..6).map(|i| (format!("b{i}"), leaf_src(&format!("b{i}x{i}")))).collect();
+    let items: Vec<(&str, &str)> =
+        sources.iter().map(|(id, src)| (id.as_str(), src.as_str())).collect();
+    let resp = client.batch(&items, 3).expect("batch");
+    assert!(is_ok(&resp), "{}", resp.compact());
+    let results = resp.get("results").and_then(Json::as_array).expect("results");
+    assert_eq!(results.len(), 6);
+    for (i, r) in results.iter().enumerate() {
+        assert!(is_ok(r), "item {i}: {}", r.compact());
+        assert_eq!(r.get("id").and_then(Json::as_str), Some(format!("b{i}").as_str()));
+    }
+    let snap = server.stats();
+    assert_eq!(snap.compiles, 6);
+    assert_eq!(snap.sessions, 6);
+    server.shutdown();
+    server.join().expect("join");
+}
+
+// ---------------------------------------------------------------------------
+// LRU + dedup
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lru_evicts_and_readmits_cold_with_identical_output() {
+    let server = start("lru", |c| c.capacity = 2);
+    let mut client = Client::connect(server.socket()).expect("connect");
+    let (a_src, b_src, c_src) = (leaf_src("alpha"), leaf_src("bravo"), leaf_src("charlie"));
+    assert!(is_ok(&client.compile("a", &a_src).unwrap()));
+    assert!(is_ok(&client.compile("b", &b_src).unwrap()));
+    // Third insert overflows capacity 2: "a" is LRU and must go.
+    let resp = client.compile("c", &c_src).unwrap();
+    assert!(is_ok(&resp));
+    assert_eq!(resp.get("evicted").and_then(Json::as_i64), Some(1));
+    assert_eq!(server.stats().evictions, 1);
+
+    // Re-admission of the evicted id is a cache miss that recompiles
+    // cold (the resident donors are structurally unrelated), and the
+    // result is byte-identical to a cold CLI compile.
+    let resp = client
+        .compile_with("a", &a_src, |m| {
+            m.set("echo", true);
+        })
+        .unwrap();
+    assert!(is_ok(&resp));
+    assert_eq!(resp.get("warm"), Some(&Json::Bool(false)));
+    assert_eq!(resp.get("mode").and_then(Json::as_str), Some("cold"));
+    assert_eq!(
+        resp.get("ir").and_then(Json::as_str),
+        Some(cold_ir("a", &a_src).as_str()),
+        "re-admitted compile diverged from cold"
+    );
+    // The re-admission evicted the next LRU ("b"); "c" stayed warm.
+    let resp = client.recompile("c", &c_src).unwrap();
+    assert!(is_ok(&resp));
+    assert_eq!(resp.get("warm"), Some(&Json::Bool(true)));
+    server.shutdown();
+    server.join().expect("join");
+}
+
+#[test]
+fn identical_template_sources_share_one_compilation() {
+    let server = start("dedup", |_| {});
+    let mut client = Client::connect(server.socket()).expect("connect");
+    // A template workload: many ids, one source text.
+    for i in 0..4 {
+        let resp = client
+            .compile_with(&format!("t{i}"), fib::FIB_SRC, |m| {
+                m.set("echo", true);
+            })
+            .unwrap();
+        assert!(is_ok(&resp), "t{i}: {}", resp.compact());
+        let want_mode = if i == 0 { "cold" } else { "identical" };
+        assert_eq!(resp.get("mode").and_then(Json::as_str), Some(want_mode), "t{i}");
+        assert_eq!(
+            resp.get("ir").and_then(Json::as_str),
+            Some(cold_ir("t", fib::FIB_SRC).as_str()),
+            "t{i}: shared compilation diverged from cold"
+        );
+    }
+    let snap = server.stats();
+    assert_eq!(snap.dedup_hits, 3, "identical-content misses must share the donor");
+    assert_eq!(snap.sessions, 4);
+    server.shutdown();
+    server.join().expect("join");
+}
+
+// ---------------------------------------------------------------------------
+// Error isolation + shutdown
+// ---------------------------------------------------------------------------
+
+#[test]
+fn request_errors_are_isolated_per_request() {
+    let server = start("iso", |_| {});
+    let mut client = Client::connect(server.socket()).expect("connect");
+    let good = leaf_src("iso");
+    assert!(is_ok(&client.compile("iso", &good).unwrap()));
+
+    // A bad edit reports an error but must not poison the warm session.
+    let resp = client.recompile("iso", "int nope(").unwrap();
+    assert!(!is_ok(&resp));
+    assert!(resp.get("error").and_then(Json::as_str).is_some());
+    let resp = client.recompile("iso", &good).unwrap();
+    assert!(is_ok(&resp), "{}", resp.compact());
+    assert_eq!(resp.get("warm"), Some(&Json::Bool(true)), "bad edit evicted the warm session");
+
+    // A bad brand-new source fails without registering anything, and the
+    // same connection keeps serving.
+    let resp = client.compile("junk", "void broken {").unwrap();
+    assert!(!is_ok(&resp));
+    let resp = client.codegen("junk", "rtl", None).unwrap();
+    assert!(!is_ok(&resp), "uncached id without source must error");
+    assert!(is_ok(&client.stats().unwrap()));
+
+    // An unknown codegen target errors but keeps the session resident.
+    let resp = client.codegen("iso", "vhdl", None).unwrap();
+    assert!(!is_ok(&resp));
+    let resp = client.codegen("iso", "emu", None).unwrap();
+    assert!(is_ok(&resp), "{}", resp.compact());
+
+    // Four failed requests (bad edit, bad new source, codegen without a
+    // source, unknown target) — and exactly one healthy session left.
+    let snap = server.stats();
+    assert_eq!(snap.errors, 4);
+    assert_eq!(snap.sessions, 1);
+    server.shutdown();
+    server.join().expect("join");
+}
+
+#[test]
+fn shutdown_drains_connections_and_removes_socket() {
+    let server = start("down", |_| {});
+    let socket = server.socket().to_path_buf();
+    // A second, idle connection: its handler must drain on shutdown
+    // rather than wedge `join`.
+    let _idle = Client::connect(&socket).expect("connect idle");
+    let mut client = Client::connect(&socket).expect("connect");
+    assert!(is_ok(&client.compile("d", &leaf_src("down")).unwrap()));
+    // The shutdown response itself arrives before the daemon stops.
+    let resp = client.shutdown().expect("shutdown response");
+    assert!(is_ok(&resp));
+    let snap = server.join().expect("join");
+    assert_eq!(snap.requests, 2);
+    assert!(!socket.exists(), "socket file must be removed on shutdown");
+    assert!(Client::connect(&socket).is_err(), "daemon must be gone");
+}
+
+// ---------------------------------------------------------------------------
+// Telemetry
+// ---------------------------------------------------------------------------
+
+#[test]
+fn requests_emit_serve_spans_and_metrics() {
+    let _guard = OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    obs::reset_all();
+    obs::set_trace(true);
+    obs::set_metrics(true);
+
+    let server = start("tele", |_| {});
+    let mut client = Client::connect(server.socket()).expect("connect");
+    assert!(is_ok(&client.compile("tele_probe", &leaf_src("tele")).unwrap()));
+    assert!(is_ok(&client.stats().unwrap()));
+    client.shutdown().expect("shutdown");
+    server.join().expect("join");
+
+    obs::set_trace(false);
+    obs::set_metrics(false);
+
+    // Request spans: every op opened a `serve`-category span named
+    // `serve <op> <id>`; B/E must both be present for our probe.
+    let events = obs::trace::drain();
+    let probe: Vec<&str> = events
+        .iter()
+        .filter(|e| e.cat == "serve" && e.name.contains("tele_probe"))
+        .map(|e| e.ph)
+        .collect();
+    assert_eq!(probe, vec!["B", "E"], "expected one balanced serve span for the probe request");
+    assert!(
+        events.iter().any(|e| e.cat == "serve" && e.name.contains("serve stats")),
+        "stats op must get a serve span too"
+    );
+
+    // Metrics: counters and the request-latency histogram are in the
+    // standard registry export. Parallel serve tests may add to the
+    // totals while metrics are armed, so bound from below only.
+    let doc = obs::metrics::export_json();
+    assert_eq!(doc.get("schema").and_then(Json::as_str), Some(obs::metrics::SCHEMA));
+    assert!(obs::metrics::counter("serve.requests") >= 3);
+    assert!(obs::metrics::counter("serve.requests.compile") >= 1);
+    assert!(obs::metrics::counter("serve.compiles") >= 1);
+    let hists = doc.get("histograms").expect("histograms section");
+    assert!(hists.get("serve.request_ms").is_some(), "{}", doc.pretty());
+    assert!(hists.get("serve.compile_ms").is_some(), "{}", doc.pretty());
+    obs::reset_all();
+}
+
+// ---------------------------------------------------------------------------
+// CI artifact validation (no-op without the env vars)
+// ---------------------------------------------------------------------------
+
+/// The CI serve smoke step runs `serve_bench` with `BOMBYX_BENCH_SMOKE=1`
+/// (which also arms obs and dumps trace/metrics artifacts), then points
+/// the env vars below at the emitted files so this test schema-validates
+/// them in a fresh process.
+#[test]
+fn ci_serve_artifacts_validate() {
+    if let Ok(path) = std::env::var("BOMBYX_SERVE_BENCH_FILE") {
+        let text = std::fs::read_to_string(&path).expect("read serve bench artifact");
+        let doc = json::parse(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("serve"), "{path}");
+        for field in [
+            "cold_ms_p50",
+            "warm_ms_p50",
+            "warm_speedup",
+            "serial_cps",
+            "batch_cps",
+            "batch_speedup",
+            "dedup_hits",
+            "requests",
+        ] {
+            assert!(doc.get(field).is_some(), "{path}: missing `{field}`");
+        }
+        assert!(
+            doc.get("dedup_hits").and_then(Json::as_i64).unwrap_or(0) > 0,
+            "{path}: template workload recorded no dedup hits"
+        );
+    }
+    if let Ok(path) = std::env::var("BOMBYX_SERVE_METRICS_FILE") {
+        let text = std::fs::read_to_string(&path).expect("read serve metrics artifact");
+        let doc = json::parse(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+        assert_eq!(
+            doc.get("schema").and_then(Json::as_str),
+            Some(obs::metrics::SCHEMA),
+            "{path}: wrong schema tag"
+        );
+        let counters = doc.get("counters").expect("counters section");
+        assert!(
+            counters.get("serve.requests").and_then(Json::as_i64).unwrap_or(0) > 0,
+            "{path}: no serve.requests counted"
+        );
+    }
+    if let Ok(path) = std::env::var("BOMBYX_SERVE_TRACE_FILE") {
+        let text = std::fs::read_to_string(&path).expect("read serve trace artifact");
+        let doc = json::parse(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+        let rows = doc
+            .get("traceEvents")
+            .and_then(Json::as_array)
+            .unwrap_or_else(|| panic!("{path}: missing traceEvents"));
+        assert!(
+            rows.iter().any(|e| e.get("cat").and_then(Json::as_str) == Some("serve")),
+            "{path}: no serve-category request spans in the smoke trace"
+        );
+    }
+}
